@@ -1,0 +1,101 @@
+//! End-to-end serving driver (the DESIGN.md validation run): start the full
+//! stack — PJRT runtime over AOT artifacts, dynamic batcher, TCP server —
+//! then act as a client workload: submit batched generation requests across
+//! solvers and report latency/throughput plus sample quality.
+//!
+//!     make artifacts && cargo run --release --example text_serving
+//!
+//! Everything on the request path is rust; the artifacts were compiled from
+//! JAX/Pallas once at build time.
+
+use std::time::Instant;
+
+use fastdds::coordinator::{BatchPolicy, Coordinator, GenerateRequest};
+use fastdds::eval::perplexity::batch_perplexity;
+use fastdds::runtime::{Registry, RuntimeHandle};
+use fastdds::score::markov::MarkovChain;
+use fastdds::server::{client::Client, Server};
+use fastdds::solvers::Solver;
+
+fn main() -> anyhow::Result<()> {
+    if !fastdds::runtime::artifacts_available("artifacts") {
+        eprintln!("artifacts missing: run `make artifacts` first");
+        std::process::exit(2);
+    }
+    // ---- bring the stack up -------------------------------------------
+    let runtime = RuntimeHandle::spawn("artifacts")?;
+    let registry = Registry::load("artifacts")?;
+    let names: Vec<String> = registry
+        .by_family("markov")
+        .iter()
+        .map(|a| a.name.clone())
+        .collect();
+    println!("compiling {} markov artifacts ...", names.len());
+    runtime.preload(&names.iter().map(|s| s.as_str()).collect::<Vec<_>>())?;
+    let coordinator = Coordinator::start(
+        runtime,
+        registry,
+        BatchPolicy::Timeout(std::time::Duration::from_millis(5)),
+    );
+    let server = Server::start("127.0.0.1:0", coordinator.clone())?;
+    println!("serving on {}", server.addr);
+
+    // ---- client workload over TCP --------------------------------------
+    let chain = MarkovChain::from_artifact("artifacts/markov_model.json")?;
+    let mut client = Client::connect(&server.addr.to_string())?;
+    let started = Instant::now();
+    let mut total_samples = 0usize;
+    for (solver, nfe) in [
+        ("tau", 32),
+        ("trapezoidal:0.5", 32),
+        ("trapezoidal:0.5", 64),
+        ("rk2:0.3333", 32),
+        ("euler", 32),
+        ("parallel", 8),
+    ] {
+        let resp = client.generate(solver, nfe, 8, 1234, "markov")?;
+        let ppl = batch_perplexity(&chain, &resp.sequences);
+        total_samples += resp.sequences.len();
+        println!(
+            "{:18} nfe={:4} -> {} samples, nfe_used={:4}, latency {:7.1} ms, ppl {:.3}",
+            solver,
+            nfe,
+            resp.sequences.len(),
+            resp.nfe_used,
+            resp.latency_ms,
+            ppl
+        );
+    }
+    let wall = started.elapsed().as_secs_f64();
+    println!(
+        "\n{total_samples} samples in {wall:.2}s ({:.1} samples/s over TCP)",
+        total_samples as f64 / wall
+    );
+    println!("server metrics: {}", client.metrics()?);
+
+    // ---- direct-coordinator batch (no TCP) for peak throughput ---------
+    let started = Instant::now();
+    let rxs: Vec<_> = (0..16)
+        .map(|i| {
+            coordinator.submit(GenerateRequest {
+                id: 1000 + i,
+                family: "markov".into(),
+                solver: Solver::Trapezoidal { theta: 0.5 },
+                nfe: 32,
+                n_samples: 4,
+                seed: i,
+            })
+        })
+        .collect();
+    let mut n = 0;
+    for rx in rxs {
+        n += rx.recv()??.sequences.len();
+    }
+    let wall = started.elapsed().as_secs_f64();
+    println!(
+        "direct coordinator: {n} samples in {wall:.2}s ({:.1} samples/s)",
+        n as f64 / wall
+    );
+    server.stop();
+    Ok(())
+}

@@ -1,0 +1,252 @@
+"""AOT export: lower every step graph / score model to HLO text artifacts.
+
+Run once at build time (`make artifacts`); the rust coordinator loads the
+results via `artifacts/manifest.json` and never imports python again.
+
+Interchange format is HLO TEXT, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly.  Functions are lowered with
+return_tuple=True and unwrapped with to_tuple1() on the rust side.
+
+Model parameters (transformer weights, Markov matrix powers, toy p_0) are
+baked into the HLO as constants; the same parameters are ALSO written to
+JSON side files so the pure-rust oracle implementations are bit-comparable.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import markov, model, steps
+from .kernels import attention
+
+EPS = 1e-3
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is REQUIRED: the default printer elides
+    # big constants as `constant({...})`, which xla_extension 0.5.1's text
+    # parser accepts silently and materialises as garbage — baked model
+    # weights would be destroyed in the round trip.
+    return comp.as_hlo_text(True)
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _iospec(shape, dtype, name):
+    return {"name": name, "dtype": str(np.dtype(dtype).name), "shape": list(shape)}
+
+
+class Exporter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.entries = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def export(self, name, fn, in_specs, out_specs, family, config, nfe_per_step):
+        # keep_unused=True: the rust runtime feeds every declared input
+        # positionally; letting jit drop unused params (e.g. the oracle
+        # score ignores t) would silently shift the calling convention.
+        lowered = jax.jit(fn, keep_unused=True).lower(
+            *[_spec(s, d) for s, d, _ in in_specs])
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        self.entries.append({
+            "name": name,
+            "file": fname,
+            "family": family,
+            "inputs": [_iospec(s, d, n) for s, d, n in in_specs],
+            "outputs": [_iospec(s, d, n) for s, d, n in out_specs],
+            "config": config,
+            "nfe_per_step": nfe_per_step,
+        })
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    def finish(self, extra):
+        manifest = {"version": 1, "artifacts": self.entries, **extra}
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        print(f"manifest: {len(self.entries)} artifacts")
+
+
+# --------------------------------------------------------------------------
+# Families
+# --------------------------------------------------------------------------
+
+def export_markov(ex: Exporter, cfg: markov.MarkovConfig, batch: int):
+    a, pi = markov.make_chain(cfg)
+    powers = markov.power_stack(a, cfg.seq_len)
+    with open(os.path.join(ex.out_dir, "markov_model.json"), "w") as f:
+        json.dump({
+            "vocab": cfg.vocab, "seq_len": cfg.seq_len, "seed": cfg.seed,
+            "mask_id": cfg.mask_id, "batch": batch,
+            "transition": a.tolist(), "stationary": pi.tolist(),
+        }, f)
+
+    score = functools.partial(markov.markov_score, powers, pi, cfg)
+    b, l, v = batch, cfg.seq_len, cfg.vocab
+    config = {"batch": b, "seq_len": l, "vocab": v, "mask_id": cfg.mask_id,
+              "eps": EPS}
+    tok = ((b, l), jnp.int32, "tokens")
+    t_in = ((), jnp.float32, "t")
+    tn_in = ((), jnp.float32, "t_next")
+    th_in = ((), jnp.float32, "theta")
+    u1 = ((1, 2, b, l), jnp.float32, "uniforms")
+    u2 = ((2, 2, b, l), jnp.float32, "uniforms")
+    out = [((b, l), jnp.int32, "tokens_next")]
+
+    one_stage = {
+        "markov_step_tau": steps.step_tau,
+        "markov_step_euler": steps.step_euler,
+        "markov_step_tweedie": steps.step_tweedie,
+    }
+    for name, fn in one_stage.items():
+        ex.export(
+            name,
+            lambda tokens, t, t_next, u, fn=fn: fn(
+                score, cfg.mask_id, EPS, tokens, t, t_next, u),
+            [tok, t_in, tn_in, u1], out, "markov", config, 1)
+
+    for name, fn in [("markov_step_trapezoidal", steps.step_trapezoidal),
+                     ("markov_step_rk2", steps.step_rk2)]:
+        ex.export(
+            name,
+            lambda tokens, t, t_next, theta, u, fn=fn: fn(
+                score, cfg.mask_id, EPS, tokens, t, t_next, theta, u),
+            [tok, t_in, tn_in, th_in, u2], out, "markov", config, 2)
+
+    ex.export(
+        "markov_step_parallel",
+        lambda tokens, t, k, u: steps.step_parallel_decode(
+            score, cfg.mask_id, k, tokens, t, u),
+        [tok, t_in, ((), jnp.int32, "k_unmask"), u1], out, "markov", config, 1)
+
+    ex.export(
+        "markov_score",
+        lambda tokens, t: score(tokens, t),
+        [tok, t_in], [((b, l, v), jnp.float32, "probs")], "markov", config, 1)
+
+
+def export_transformer(ex: Exporter, cfg: model.TransformerConfig, batch: int):
+    params = model.init_params(cfg)
+    score = functools.partial(model.transformer_score, params, cfg)
+    b, l, v = batch, cfg.seq_len, cfg.vocab
+    config = {"batch": b, "seq_len": l, "vocab": v, "mask_id": cfg.mask_id,
+              "eps": EPS, "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+              "n_heads": cfg.n_heads}
+    tok = ((b, l), jnp.int32, "tokens")
+    t_in = ((), jnp.float32, "t")
+    tn_in = ((), jnp.float32, "t_next")
+    th_in = ((), jnp.float32, "theta")
+    u1 = ((1, 2, b, l), jnp.float32, "uniforms")
+    u2 = ((2, 2, b, l), jnp.float32, "uniforms")
+    out = [((b, l), jnp.int32, "tokens_next")]
+
+    ex.export(
+        "transformer_score",
+        lambda tokens, t: score(tokens, t),
+        [tok, t_in], [((b, l, v), jnp.float32, "probs")],
+        "transformer", config, 1)
+
+    ex.export(
+        "transformer_step_tau",
+        lambda tokens, t, t_next, u: steps.step_tau(
+            score, cfg.mask_id, EPS, tokens, t, t_next, u),
+        [tok, t_in, tn_in, u1], out, "transformer", config, 1)
+
+    ex.export(
+        "transformer_step_trapezoidal",
+        lambda tokens, t, t_next, theta, u: steps.step_trapezoidal(
+            score, cfg.mask_id, EPS, tokens, t, t_next, theta, u),
+        [tok, t_in, tn_in, th_in, u2], out, "transformer", config, 2)
+
+
+def export_toy(ex: Exporter, cfg: model.ToyConfig, batch: int):
+    p0 = model.toy_p0(cfg)
+    with open(os.path.join(ex.out_dir, "toy_model.json"), "w") as f:
+        json.dump({"n_states": cfg.n_states, "seed": cfg.seed,
+                   "horizon": cfg.horizon, "batch": batch,
+                   "p0": p0.tolist()}, f)
+
+    intens = functools.partial(model.toy_reverse_intensities, p0)
+    b, s = batch, cfg.n_states
+    config = {"batch": b, "n_states": s, "horizon": cfg.horizon}
+    x_in = ((b,), jnp.int32, "x")
+    t_in = ((), jnp.float32, "t")
+    tn_in = ((), jnp.float32, "t_next")
+    th_in = ((), jnp.float32, "theta")
+    u1 = ((1, 2, b), jnp.float32, "uniforms")
+    u2 = ((2, 2, b), jnp.float32, "uniforms")
+    out = [((b,), jnp.int32, "x_next")]
+
+    ex.export("toy_step_tau",
+              lambda x, t, tn, u: steps.toy_step_tau(intens, s, x, t, tn, u),
+              [x_in, t_in, tn_in, u1], out, "toy", config, 1)
+    ex.export("toy_step_euler",
+              lambda x, t, tn, u: steps.toy_step_euler(intens, s, x, t, tn, u),
+              [x_in, t_in, tn_in, u1], out, "toy", config, 1)
+    ex.export("toy_step_trapezoidal",
+              lambda x, t, tn, th, u: steps.toy_step_trapezoidal(
+                  intens, s, x, t, tn, th, u),
+              [x_in, t_in, tn_in, th_in, u2], out, "toy", config, 2)
+    ex.export("toy_step_rk2",
+              lambda x, t, tn, th, u: steps.toy_step_rk2(
+                  intens, s, x, t, tn, th, u),
+              [x_in, t_in, tn_in, th_in, u2], out, "toy", config, 2)
+
+
+def export_kernel_micro(ex: Exporter):
+    """Micro artifacts for rust runtime unit tests (kernel-level round trip)."""
+    b, l, v = 2, 16, 8
+    config = {"batch": b, "seq_len": l, "vocab": v}
+    ex.export(
+        "kernel_attention",
+        lambda q, k, v_: attention(q, k, v_),
+        [((32, 16), jnp.float32, "q"), ((32, 16), jnp.float32, "k"),
+         ((32, 16), jnp.float32, "v")],
+        [((32, 16), jnp.float32, "out")], "kernel", {"l": 32, "d": 16}, 0)
+
+
+def main():
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--out", default="../artifacts")
+    parser.add_argument("--skip-transformer", action="store_true",
+                        help="faster artifact build for CI-style runs")
+    args = parser.parse_args()
+
+    ex = Exporter(args.out)
+    mcfg = markov.MarkovConfig(vocab=16, seq_len=32)
+    export_markov(ex, mcfg, batch=8)
+    tcfg = model.TransformerConfig()
+    if not args.skip_transformer:
+        export_transformer(ex, tcfg, batch=4)
+    ycfg = model.ToyConfig()
+    export_toy(ex, ycfg, batch=1024)
+    export_kernel_micro(ex)
+    ex.finish({
+        "markov": dataclasses.asdict(mcfg),
+        "transformer": dataclasses.asdict(tcfg),
+        "toy": dataclasses.asdict(ycfg),
+    })
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Pallas L1 kernels for fastdds + their pure-jnp oracles (ref.py)."""
+
+from .intensity import intensity
+from .combine import combine_trap, combine_rk2, trap_coefficients
+from .jump import jump_apply
+from .attention import attention, attention_batched, vmem_footprint_bytes
+from . import ref
+
+__all__ = [
+    "intensity", "combine_trap", "combine_rk2", "trap_coefficients",
+    "jump_apply", "attention", "attention_batched", "vmem_footprint_bytes",
+    "ref",
+]

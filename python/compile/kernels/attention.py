@@ -1,0 +1,76 @@
+"""L1 Pallas kernel: fused single-head attention for the score transformer.
+
+This is the MXU-shaped hot spot of a score-model evaluation (one NFE).  The
+paper ran RADD/MaskGIT on A100s; the TPU rethink (DESIGN.md
+Hardware-Adaptation) is:
+
+  - CUDA threadblock tiling over (query block x key block) becomes a Pallas
+    grid over query tiles with K/V kept VMEM-resident per tile (our L <= 256
+    and D <= 128 keeps K, V, and the score tile comfortably inside ~4 MiB of
+    VMEM; BlockSpec expresses the HBM->VMEM schedule),
+  - WMMA fragments become MXU matmuls: both Q K^T and P V are
+    jnp.dot calls on (TL, D) x (D, L) and (TL, L) x (L, D) tiles,
+  - the softmax runs on the VPU between the two MXU calls, fused in-kernel
+    so the (TL, L) score tile never round-trips to HBM.
+
+interpret=True on this image (CPU PJRT cannot run Mosaic custom-calls);
+structure, not wallclock, is what carries to real TPUs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_Q = 32
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, scale):
+    q = q_ref[...]                       # (TQ, D)
+    k = k_ref[...]                       # (L, D)
+    v = v_ref[...]                       # (L, D)
+    scores = jnp.dot(q, k.T) * scale     # MXU: (TQ, L)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)              # VPU, numerically safe softmax
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(p, v)           # MXU: (TQ, D)
+
+
+def attention(q, k, v, tile_q: int = DEFAULT_TILE_Q):
+    """Fused attention over (L, D) inputs; grid over query tiles."""
+    l, d = q.shape
+    if l % tile_q != 0:
+        tile_q = l
+    grid = (l // tile_q,)
+    scale = 1.0 / float(d) ** 0.5
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((l, d), lambda i: (0, 0)),
+            pl.BlockSpec((l, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_q, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, d), jnp.float32),
+        interpret=True,
+    )(q, k, v)
+
+
+def attention_batched(q, k, v, tile_q: int = DEFAULT_TILE_Q):
+    """vmap of the fused kernel over (B, H) leading axes: (B, H, L, D)."""
+    fn = functools.partial(attention, tile_q=tile_q)
+    return jax.vmap(jax.vmap(fn))(q, k, v)
+
+
+def vmem_footprint_bytes(l: int, d: int, tile_q: int = DEFAULT_TILE_Q) -> int:
+    """Static VMEM estimate per grid step (f32): q tile + K + V + score tile.
+
+    Used by DESIGN.md/EXPERIMENTS.md Perf to report the structural budget
+    in place of TPU wallclock (interpret=True gives numpy timings only).
+    """
+    tq = tile_q if l % tile_q == 0 else l
+    return 4 * (tq * d + 2 * l * d + tq * l + tq * d)

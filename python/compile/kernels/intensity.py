@@ -1,0 +1,51 @@
+"""L1 Pallas kernel: score-model output -> reverse-process intensities.
+
+For the masked (absorbing-state) diffusion the reverse rate out of the mask
+state at position l toward token v is
+
+    mu[b, l, v] = mu_tot(t) * p_theta(v | context) * 1{x_l = M}
+
+(Sec. 2.2 / Eq. 6 of the paper specialised to the absorbing case with the
+RADD score parametrisation, Eq. 33).  This is pure VPU work tiled over the
+sequence so it fuses into the same HLO module as the score matmuls.
+
+TPU mapping: one grid step per (batch row, sequence tile); a (TL, V) block of
+probs plus a (TL,) slice of the mask indicator live in VMEM; `mu_tot` rides
+in as a (1, 1) scalar block.  interpret=True on this image (CPU PJRT).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_L = 16
+
+
+def _kernel(probs_ref, masked_ref, mu_tot_ref, out_ref):
+    probs = probs_ref[...]          # (TL, V)
+    masked = masked_ref[...]        # (TL,)
+    mu_tot = mu_tot_ref[0, 0]
+    out_ref[...] = probs * masked[:, None] * mu_tot
+
+
+def intensity(probs, masked, mu_tot, tile_l: int = DEFAULT_TILE_L):
+    """Pallas intensity kernel.  Shapes as in `ref.intensity_ref`."""
+    b, l, v = probs.shape
+    if l % tile_l != 0:
+        tile_l = l  # degenerate tiling for odd lengths
+    grid = (b, l // tile_l)
+    mu_tot_arr = jnp.asarray(mu_tot, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, tile_l, v), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, tile_l), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, tile_l, v), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, l, v), jnp.float32),
+        interpret=True,
+    )(probs, masked, mu_tot_arr)

@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: apply one leaping sub-step (the Poisson jump update).
+
+Every solver in the paper reduces per sub-step to the same per-dimension
+update once the gate probability is known:
+
+  - tau-leaping (Alg. 3):     p_jump = 1 - exp(-mu_tot * dt)
+  - Euler:                    p_jump = clip(mu_tot * dt, 0, 1)
+  - Tweedie tau-leaping:      p_jump = exact posterior mass (schedule.py)
+  - trap / RK-2 sub-steps:    same forms with the combined intensities
+
+The kernel consumes externally supplied uniforms (the rust coordinator owns
+all RNG on the request path, so generation is bit-reproducible end-to-end):
+`u_gate` decides whether a masked dimension fires, `u_cat` performs the
+inverse-CDF categorical draw over the destination intensities.
+
+TPU mapping: grid over (batch, sequence tile); cumulative sum over the vocab
+axis runs in-register on a (TL, V) VMEM block; the argmax-over-threshold is
+a VPU reduction.  interpret=True on this image.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_L = 16
+
+
+def _kernel(tokens_ref, p_jump_ref, dest_ref, u_gate_ref, u_cat_ref,
+            mask_id_ref, out_ref):
+    tokens = tokens_ref[...]            # (TL,) int32
+    p_jump = p_jump_ref[...]            # (TL,)
+    dest = dest_ref[...]                # (TL, V)
+    u_gate = u_gate_ref[...]            # (TL,)
+    u_cat = u_cat_ref[...]              # (TL,)
+    mask_id = mask_id_ref[0, 0]
+
+    tot = jnp.sum(dest, axis=-1)                     # (TL,)
+    cdf = jnp.cumsum(dest, axis=-1)                  # (TL, V)
+    thresh = (u_cat * tot)[:, None]
+    chosen = jnp.argmax(cdf > thresh, axis=-1).astype(jnp.int32)
+    is_masked = tokens == mask_id
+    fires = (u_gate < p_jump) & is_masked & (tot > 0.0)
+    out_ref[...] = jnp.where(fires, chosen, tokens)
+
+
+def jump_apply(tokens, p_jump, dest_probs, u_gate, u_cat, mask_id,
+               tile_l: int = DEFAULT_TILE_L):
+    """Pallas jump kernel.  Shapes as in `ref.jump_apply_ref`."""
+    b, l = tokens.shape
+    v = dest_probs.shape[-1]
+    if l % tile_l != 0:
+        tile_l = l
+    grid = (b, l // tile_l)
+    mask_arr = jnp.asarray(mask_id, jnp.int32).reshape(1, 1)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, tile_l), lambda i, j: (i, j)),
+            pl.BlockSpec((None, tile_l), lambda i, j: (i, j)),
+            pl.BlockSpec((None, tile_l, v), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, tile_l), lambda i, j: (i, j)),
+            pl.BlockSpec((None, tile_l), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, tile_l), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, l), jnp.int32),
+        interpret=True,
+    )(tokens, p_jump, dest_probs, u_gate, u_cat, mask_arr)

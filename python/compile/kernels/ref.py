@@ -1,0 +1,63 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the CORE correctness signal: each kernel in `intensity.py`,
+`combine.py`, `jump.py`, `attention.py` must agree with its oracle here to
+float32 tolerance under the hypothesis sweeps in `python/tests/test_kernels.py`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def intensity_ref(probs, masked, mu_tot):
+    """Reverse-process intensities mu(nu) for the masked case.
+
+    probs:  (B, L, V) score-model conditional distribution over real tokens.
+    masked: (B, L)    1.0 where the position is currently masked else 0.0.
+    mu_tot: ()        total unmask intensity at the current time (1/t for
+                      the log-linear schedule).
+    Returns (B, L, V) intensities: mu[b, l, v] = mu_tot * probs * masked.
+    """
+    return probs * masked[..., None] * mu_tot
+
+
+def combine_trap_ref(mu_star, mu, alpha1, alpha2):
+    """Theta-trapezoidal extrapolated intensity (Eq. 16): (a1 mu* - a2 mu)+."""
+    return jnp.maximum(alpha1 * mu_star - alpha2 * mu, 0.0)
+
+
+def combine_rk2_ref(mu_star, mu, theta):
+    """Practical theta-RK-2 intensity (Alg. 4): ((1-1/2θ) mu + (1/2θ) mu*)+."""
+    w = 1.0 / (2.0 * theta)
+    return jnp.maximum((1.0 - w) * mu + w * mu_star, 0.0)
+
+
+def jump_apply_ref(tokens, p_jump, dest_probs, u_gate, u_cat, mask_id):
+    """Apply one leaping sub-step to every dimension.
+
+    tokens:     (B, L) int32 current tokens (mask_id == masked).
+    p_jump:     (B, L) probability that a masked dim unmasks this sub-step.
+    dest_probs: (B, L, V) destination distribution (need not be normalized;
+                zero rows fall back to "stay masked").
+    u_gate/u_cat: (B, L) iid U(0,1) supplied by the caller (rust owns RNG).
+    Returns (B, L) int32 next tokens.  Unmasked dims never change (the
+    absorbing reverse process has zero intensity off the mask state).
+    """
+    tot = jnp.sum(dest_probs, axis=-1)
+    cdf = jnp.cumsum(dest_probs, axis=-1)
+    # Inverse-CDF draw; threshold strictly inside the support.
+    thresh = (u_cat * tot)[..., None]
+    dest = jnp.argmax(cdf > thresh, axis=-1).astype(jnp.int32)
+    is_masked = tokens == mask_id
+    fires = (u_gate < p_jump) & is_masked & (tot > 0.0)
+    return jnp.where(fires, dest, tokens)
+
+
+def attention_ref(q, k, v):
+    """Single-head scaled-dot-product attention, (L, D) inputs."""
+    d = q.shape[-1]
+    scores = (q @ k.T) / jnp.sqrt(jnp.float32(d))
+    w = jax.nn.softmax(scores, axis=-1)
+    return w @ v

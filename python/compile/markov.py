@@ -1,0 +1,136 @@
+"""L2: exact oracle score for a first-order Markov "language".
+
+The paper benchmarks samplers against a GPT-2-level pretrained score (RADD).
+We have no checkpoints in this image, so the substitution (DESIGN.md) is a
+synthetic data law whose *exact* conditional distributions are computable:
+a stationary first-order Markov chain over `vocab` tokens with transition
+matrix A and stationary law pi.
+
+For the absorbing-state diffusion, the time-t score only requires the
+conditional law of the data at a masked position given the currently
+unmasked positions (RADD's key observation: the conditional is
+time-agnostic).  For a Markov chain that conditional is closed-form from the
+nearest observed neighbours:
+
+    p(x_i = v | left obs a at distance dl, right obs b at distance dr)
+        ∝ A^dl[a, v] * A^dr[v, b]
+
+with pi(v) replacing the left factor when no left neighbour exists and the
+right factor dropped when no right neighbour exists.  The matrix-power stack
+A^0..A^L is baked into the lowered HLO as constants; the rust oracle
+(rust/src/score/markov.rs) computes the same quantity from artifacts JSON.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class MarkovConfig:
+    vocab: int = 32
+    seq_len: int = 64
+    seed: int = 42
+    concentration: float = 0.5  # Dirichlet concentration of the rows
+
+    @property
+    def mask_id(self) -> int:
+        return self.vocab
+
+
+def make_chain(cfg: MarkovConfig):
+    """Deterministic (A, pi): row-stochastic A, stationary pi via power iter."""
+    rng = np.random.default_rng(cfg.seed)
+    a = rng.dirichlet(np.full(cfg.vocab, cfg.concentration), size=cfg.vocab)
+    a = a.astype(np.float64)
+    pi = np.full(cfg.vocab, 1.0 / cfg.vocab)
+    for _ in range(512):
+        pi = pi @ a
+    pi /= pi.sum()
+    return a.astype(np.float32), pi.astype(np.float32)
+
+
+def power_stack(a: np.ndarray, max_pow: int) -> np.ndarray:
+    """[A^0, A^1, ..., A^max_pow] as one (max_pow+1, V, V) f64->f32 stack."""
+    v = a.shape[0]
+    out = np.empty((max_pow + 1, v, v), np.float64)
+    out[0] = np.eye(v)
+    a64 = a.astype(np.float64)
+    for d in range(1, max_pow + 1):
+        out[d] = out[d - 1] @ a64
+    return out.astype(np.float32)
+
+
+def _neighbour_scan(tokens, mask_id, seq_len):
+    """Nearest unmasked neighbour (distance, token) on both sides, per position.
+
+    Returns (dl, left_tok, dr, right_tok), each (B, L) int32; distance is
+    seq_len when no neighbour exists on that side (token then 0, unused).
+    """
+
+    def step_left(carry, tok):
+        dist, last = carry
+        is_obs = tok != mask_id
+        dist_here = jnp.where(is_obs, 0, dist + 1)
+        tok_here = jnp.where(is_obs, tok, last)
+        return (dist_here, tok_here), (dist + 1, last)
+
+    def scan_side(tokens_lr):
+        # tokens_lr: (L, B); emit for each position the distance/token of the
+        # nearest observed strictly-before position.
+        init = (jnp.full(tokens_lr.shape[1], seq_len, jnp.int32),
+                jnp.zeros(tokens_lr.shape[1], jnp.int32))
+        _, (dists, toks) = jax.lax.scan(step_left, init, tokens_lr)
+        return dists, toks
+
+    t_lb = tokens.T.astype(jnp.int32)                      # (L, B)
+    dl, lt = scan_side(t_lb)
+    dr_rev, rt_rev = scan_side(t_lb[::-1])
+    dr, rt = dr_rev[::-1], rt_rev[::-1]
+    clamp = lambda d: jnp.minimum(d, seq_len)
+    return clamp(dl).T, lt.T, clamp(dr).T, rt.T
+
+
+def markov_score(powers, pi, cfg: MarkovConfig, tokens, t=None):
+    """Exact conditional distribution over real tokens at every position.
+
+    powers: (L+1, V, V) matrix-power stack; pi: (V,).
+    tokens: (B, L) int32 with mask_id for masked positions.
+    t is accepted (and ignored) so the signature matches transformer_score —
+    the absorbing-case conditional is time-agnostic.
+    Returns probs (B, L, V) f32.
+    """
+    del t
+    powers = jnp.asarray(powers)
+    pi = jnp.asarray(pi)
+    dl, lt, dr, rt = _neighbour_scan(tokens, cfg.mask_id, cfg.seq_len)
+
+    # Left factor: A^dl[left_tok, v]  (or pi when dl == seq_len).
+    left_mat = powers[dl]                                  # (B, L, V, V)
+    left = jnp.take_along_axis(
+        left_mat, lt[..., None, None].astype(jnp.int32), axis=2
+    )[..., 0, :]                                           # (B, L, V)
+    left = jnp.where((dl == cfg.seq_len)[..., None], pi[None, None, :], left)
+
+    # Right factor: A^dr[v, right_tok]  (or ones when dr == seq_len).
+    right_mat = powers[dr]                                 # (B, L, V, V)
+    right = jnp.take_along_axis(
+        right_mat, rt[..., None, None].astype(jnp.int32), axis=3
+    )[..., 0]                                              # (B, L, V)
+    right = jnp.where((dr == cfg.seq_len)[..., None], 1.0, right)
+
+    un = left * right
+    z = jnp.sum(un, axis=-1, keepdims=True)
+    return un / jnp.maximum(z, 1e-30)
+
+
+def sequence_log_prob(a, pi, seq):
+    """Exact log-probability of a full sequence under the chain (numpy)."""
+    lp = float(np.log(pi[seq[0]]))
+    for i in range(1, len(seq)):
+        lp += float(np.log(a[seq[i - 1], seq[i]]))
+    return lp

@@ -1,0 +1,176 @@
+"""L2: score models for masked discrete diffusion (RADD-style) + the toy model.
+
+Two score families are exported:
+
+  * `transformer_score` — a small masked-diffusion transformer in the spirit of
+    RADD (Ou et al., 2024): given a partially masked token sequence and the
+    diffusion time, it outputs the conditional distribution over real tokens
+    at every position.  Attention runs through the L1 Pallas kernel.  Weights
+    are deterministically initialised (seed 0) and baked into the lowered HLO
+    as constants, so the rust request path feeds only (tokens, t, uniforms).
+
+  * `toy_score` — the paper's Sec. 6.1 15-state toy model with the analytic
+    score s_t(x, y) = p_t(y) / p_t(x), where
+    p_t = (1 - e^-t)/S + e^-t p_0 for the uniform rate matrix Q = E/S - I.
+
+The same p_0 / Markov parameters are written to artifacts/*.json by aot.py so
+the rust implementation is bit-for-bit comparable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import attention_batched
+
+
+# --------------------------------------------------------------------------
+# Transformer score model
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    vocab: int = 64           # real tokens 0..vocab-1; mask id == vocab
+    seq_len: int = 32
+    d_model: int = 64
+    n_heads: int = 2
+    n_layers: int = 2
+    d_ff: int = 128
+    seed: int = 0
+
+    @property
+    def mask_id(self) -> int:
+        return self.vocab
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def init_params(cfg: TransformerConfig):
+    """Deterministic parameter pytree (numpy, so it bakes into HLO text)."""
+    rng = np.random.default_rng(cfg.seed)
+
+    def dense(n_in, n_out):
+        w = rng.standard_normal((n_in, n_out)).astype(np.float32)
+        return w * np.float32(1.0 / math.sqrt(n_in))
+
+    params = {
+        # +1 embedding row for the mask token.
+        "tok_emb": rng.standard_normal((cfg.vocab + 1, cfg.d_model)).astype(np.float32) * 0.02,
+        "pos_emb": rng.standard_normal((cfg.seq_len, cfg.d_model)).astype(np.float32) * 0.02,
+        "time_w": dense(2, cfg.d_model),
+        "layers": [],
+        "out_w": dense(cfg.d_model, cfg.vocab),
+        "out_b": np.zeros((cfg.vocab,), np.float32),
+    }
+    for _ in range(cfg.n_layers):
+        params["layers"].append({
+            "ln1_g": np.ones((cfg.d_model,), np.float32),
+            "ln1_b": np.zeros((cfg.d_model,), np.float32),
+            "wq": dense(cfg.d_model, cfg.d_model),
+            "wk": dense(cfg.d_model, cfg.d_model),
+            "wv": dense(cfg.d_model, cfg.d_model),
+            "wo": dense(cfg.d_model, cfg.d_model),
+            "ln2_g": np.ones((cfg.d_model,), np.float32),
+            "ln2_b": np.zeros((cfg.d_model,), np.float32),
+            "w1": dense(cfg.d_model, cfg.d_ff),
+            "b1": np.zeros((cfg.d_ff,), np.float32),
+            "w2": dense(cfg.d_ff, cfg.d_model),
+            "b2": np.zeros((cfg.d_model,), np.float32),
+        })
+    return params
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def transformer_score(params, cfg: TransformerConfig, tokens, t):
+    """Conditional distribution over real tokens at every position.
+
+    tokens: (B, L) int32 with mask_id marking masked positions.
+    t:      () f32 diffusion (forward) time in (0, 1].
+    Returns probs (B, L, vocab) f32, rows summing to 1.
+    """
+    b, l = tokens.shape
+    x = jnp.take(jnp.asarray(params["tok_emb"]), tokens, axis=0)
+    x = x + jnp.asarray(params["pos_emb"])[None, :, :]
+    tfeat = jnp.stack([jnp.sin(2.0 * jnp.pi * t), jnp.cos(2.0 * jnp.pi * t)])
+    x = x + (tfeat @ jnp.asarray(params["time_w"]))[None, None, :]
+
+    for lp in params["layers"]:
+        h = _layer_norm(x, jnp.asarray(lp["ln1_g"]), jnp.asarray(lp["ln1_b"]))
+        q = h @ jnp.asarray(lp["wq"])
+        k = h @ jnp.asarray(lp["wk"])
+        v = h @ jnp.asarray(lp["wv"])
+
+        def split(y):  # (B, L, D) -> (B, H, L, Dh)
+            return y.reshape(b, l, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+        o = attention_batched(split(q), split(k), split(v))   # L1 Pallas kernel
+        o = o.transpose(0, 2, 1, 3).reshape(b, l, cfg.d_model)
+        x = x + o @ jnp.asarray(lp["wo"])
+
+        h = _layer_norm(x, jnp.asarray(lp["ln2_g"]), jnp.asarray(lp["ln2_b"]))
+        h = jax.nn.gelu(h @ jnp.asarray(lp["w1"]) + jnp.asarray(lp["b1"]))
+        x = x + h @ jnp.asarray(lp["w2"]) + jnp.asarray(lp["b2"])
+
+    x = _layer_norm(x, jnp.ones((cfg.d_model,)), jnp.zeros((cfg.d_model,)))
+    logits = x @ jnp.asarray(params["out_w"]) + jnp.asarray(params["out_b"])
+    return jax.nn.softmax(logits, axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Toy model (Sec. 6.1): S-state uniform CTMC with analytic score
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ToyConfig:
+    n_states: int = 15
+    seed: int = 7
+    horizon: float = 12.0  # paper: T = 12, truncation error ~1e-12
+
+
+def toy_p0(cfg: ToyConfig) -> np.ndarray:
+    """Target distribution, 'uniformly generated from the simplex' (Dirichlet(1))."""
+    rng = np.random.default_rng(cfg.seed)
+    p0 = rng.dirichlet(np.ones(cfg.n_states)).astype(np.float64)
+    return p0.astype(np.float32)
+
+
+def toy_marginal(p0, t):
+    """p_t = e^{tQ} p_0 = (1 - e^-t)/S + e^-t p_0 for Q = E/S - I."""
+    s = p0.shape[-1]
+    decay = jnp.exp(-t)
+    return (1.0 - decay) / s + decay * p0
+
+
+def toy_reverse_intensities(p0, x, t):
+    """Reverse rates indexed by JUMP SIZE nu (mod S), state x (B,).
+
+    The paper's stochastic-integral formulation indexes intensities by the
+    jump nu in the difference set D (Sec. 2.2); for the uniform CTMC we
+    parametrise jumps as y = (x + nu) mod S with nu in 1..S-1, a bijection
+    onto all y != x.  Q is symmetric with off-diagonal 1/S, so
+
+        mu(nu, x) = (1/S) * p_t((x + nu) mod S) / p_t(x).
+
+    Returns (B, S) with entry nu = 0 zeroed (no self-jump).  Keeping the nu
+    indexing (rather than destination indexing) is what lets the high-order
+    combinations pair intensities evaluated at *different* states, exactly
+    as Eqs. 13 and 16 require.
+    """
+    s = p0.shape[-1]
+    pt = toy_marginal(jnp.asarray(p0), t)              # (S,)
+    px = jnp.take(pt, x)                               # (B,)
+    dest = (x[:, None] + jnp.arange(s)[None, :]) % s   # (B, S)
+    mu = jnp.take(pt, dest) / px[:, None] / s          # (B, S)
+    return mu.at[:, 0].set(0.0)

@@ -1,0 +1,55 @@
+"""Noise schedules for masked (absorbing-state) discrete diffusion.
+
+The paper (App. D.3, Eq. 32) uses the log-linear schedule
+
+    sigma(t)    = (1 - eps) / (1 - (1 - eps) t)
+    sigma_bar(t) = -log(1 - (1 - eps) t)
+
+so that the probability of a dimension being *unmasked* at forward time t is
+``exp(-sigma_bar(t)) = 1 - (1 - eps) t``.  Inference integrates the backward
+process, i.e. forward time t runs 1 -> delta.
+
+All functions are pure jnp and usable inside jitted/lowered step graphs.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+EPS_DEFAULT = 1e-3
+
+
+def sigma(t, eps=EPS_DEFAULT):
+    """Instantaneous masking rate sigma(t) of the log-linear schedule."""
+    return (1.0 - eps) / (1.0 - (1.0 - eps) * t)
+
+
+def sigma_bar(t, eps=EPS_DEFAULT):
+    """Integrated rate sigma_bar(t) = int_0^t sigma(s) ds."""
+    return -jnp.log1p(-(1.0 - eps) * t)
+
+
+def alpha(t, eps=EPS_DEFAULT):
+    """P(dimension still unmasked at forward time t) = exp(-sigma_bar(t))."""
+    return 1.0 - (1.0 - eps) * t
+
+
+def unmask_intensity(t, eps=EPS_DEFAULT):
+    """Total reverse-time unmask intensity mu_tot(t) for one masked dimension.
+
+    mu_tot(t) = sigma(t) * exp(-sigma_bar(t)) / (1 - exp(-sigma_bar(t))),
+    which simplifies to 1/t for the log-linear schedule.  We keep the general
+    form so alternative schedules slot in unchanged.
+    """
+    a = alpha(t, eps)
+    return sigma(t, eps) * a / (1.0 - a)
+
+
+def tweedie_unmask_prob(t, t_next, eps=EPS_DEFAULT):
+    """Exact per-dimension unmask probability over a backward step t -> t_next.
+
+    P(x_{t'} != M | x_t = M) = (alpha(t') - alpha(t)) / (1 - alpha(t)).
+    For the log-linear schedule this equals (t - t') / t.
+    """
+    at, an = alpha(t, eps), alpha(t_next, eps)
+    return (an - at) / (1.0 - at)

@@ -1,0 +1,210 @@
+"""L2: whole sampler *step graphs*, one HLO module per (solver, config).
+
+Each function advances a batch of sequences across one grid interval
+[t_next, t] of the backward process (forward time decreasing).  The rust
+coordinator drives the loop; a step graph is one PJRT dispatch.
+
+RNG contract: rust supplies iid U(0,1) arrays, shape (stages, 2, B, L) —
+one (gate, categorical) pair per leaping sub-step — so results are
+bit-reproducible and python never owns request-path randomness.
+
+NFE accounting matches the paper: euler/tau/tweedie = 1 score eval per step,
+trapezoidal/RK-2 = 2 per step (the two-stage structure is fused into a
+single HLO module = a single dispatch, but counts as 2 NFE).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import schedule
+from .kernels import combine_rk2, combine_trap, intensity, jump_apply
+
+
+def _masked_flag(tokens, mask_id):
+    return (tokens == mask_id).astype(jnp.float32)
+
+
+def _mu(score_fn, tokens, t, mask_id, eps):
+    """Score eval + L1 intensity kernel: one NFE."""
+    probs = score_fn(tokens, t)
+    mu_tot = schedule.unmask_intensity(t, eps)
+    return intensity(probs, _masked_flag(tokens, mask_id), mu_tot)
+
+
+def _sub_step(tokens, mu, dt, u, mask_id, gate: str):
+    """One leaping sub-step with intensities mu over duration dt."""
+    mu_tot = jnp.sum(mu, axis=-1)
+    if gate == "poisson":          # tau-leaping: P(>=1 jump)
+        p_jump = 1.0 - jnp.exp(-mu_tot * dt)
+    elif gate == "linear":         # Euler linearisation
+        p_jump = jnp.clip(mu_tot * dt, 0.0, 1.0)
+    else:
+        raise ValueError(gate)
+    return jump_apply(tokens, p_jump, mu, u[0], u[1], mask_id)
+
+
+def step_tau(score_fn, mask_id, eps, tokens, t, t_next, u):
+    """tau-leaping (Alg. 3): freeze mu at t, leap the whole interval."""
+    mu = _mu(score_fn, tokens, t, mask_id, eps)
+    return _sub_step(tokens, mu, t - t_next, u[0], mask_id, "poisson")
+
+
+def step_euler(score_fn, mask_id, eps, tokens, t, t_next, u):
+    """Euler: linearised gate probability, same destination law."""
+    mu = _mu(score_fn, tokens, t, mask_id, eps)
+    return _sub_step(tokens, mu, t - t_next, u[0], mask_id, "linear")
+
+
+def step_tweedie(score_fn, mask_id, eps, tokens, t, t_next, u):
+    """Tweedie tau-leaping: exact per-dimension posterior gate mass."""
+    probs = score_fn(tokens, t)
+    masked = _masked_flag(tokens, mask_id)
+    p_exact = schedule.tweedie_unmask_prob(t, t_next, eps)
+    p_jump = jnp.broadcast_to(p_exact, tokens.shape) * masked
+    return jump_apply(tokens, p_jump, probs * masked[..., None],
+                      u[0][0], u[0][1], mask_id)
+
+
+def step_trapezoidal(score_fn, mask_id, eps, tokens, t, t_next, theta, u):
+    """theta-trapezoidal (Alg. 2), one full interval = 2 NFE.
+
+    Stage 1: tau-leap theta*dt from t with mu_t -> intermediate y*.
+    Stage 2: from y*, leap (1-theta)*dt with (a1 mu*_rho - a2 mu_t)+ where
+             mu*_rho re-evaluates the score at the theta-section point rho
+             on y* (the second NFE).
+    """
+    dt = t - t_next
+    rho = t - theta * dt
+
+    mu_t = _mu(score_fn, tokens, t, mask_id, eps)
+    y_star = _sub_step(tokens, mu_t, theta * dt, u[0], mask_id, "poisson")
+
+    mu_star = _mu(score_fn, y_star, rho, mask_id, eps)
+    # mu_t rows of dims unmasked during stage 1 are stale, but those dims are
+    # no longer masked in y_star so the jump kernel ignores them (Alg. 2
+    # line 3 starts from y*).
+    mu_comb = combine_trap(mu_star, mu_t, theta)
+    return _sub_step(y_star, mu_comb, (1.0 - theta) * dt, u[1], mask_id,
+                     "poisson")
+
+
+def step_rk2(score_fn, mask_id, eps, tokens, t, t_next, theta, u):
+    """Practical theta-RK-2 (Alg. 4), one full interval = 2 NFE.
+
+    Stage 1 as in the trapezoidal method; stage 2 restarts from the ORIGINAL
+    state y_{s_n} and leaps the full dt with ((1-1/2θ) mu_t + (1/2θ) mu*)+.
+    """
+    dt = t - t_next
+    rho = t - theta * dt
+
+    mu_t = _mu(score_fn, tokens, t, mask_id, eps)
+    y_star = _sub_step(tokens, mu_t, theta * dt, u[0], mask_id, "poisson")
+
+    mu_star = _mu(score_fn, y_star, rho, mask_id, eps)
+    mu_comb = combine_rk2(mu_star, mu_t, theta)
+    return _sub_step(tokens, mu_comb, dt, u[1], mask_id, "poisson")
+
+
+def step_parallel_decode(score_fn, mask_id, k_unmask, tokens, t, u):
+    """MaskGIT-style parallel decoding step (Chang et al., 2022).
+
+    Samples every masked position from the score distribution, keeps the
+    k_unmask most confident draws (confidence = prob of the sampled token
+    plus Gumbel noise scaled by the remaining time — the 'linear
+    randomisation' of App. D.4), re-masks the rest.  k_unmask is a traced
+    i32 scalar so one artifact serves the whole arccos schedule.
+    """
+    b, l = tokens.shape
+    probs = score_fn(tokens, t)
+    is_masked = tokens == mask_id
+
+    # Inverse-CDF categorical from u[0][1].
+    cdf = jnp.cumsum(probs, axis=-1)
+    draw = jnp.argmax(cdf > u[0][1][..., None], axis=-1).astype(jnp.int32)
+    conf = jnp.take_along_axis(probs, draw[..., None], axis=-1)[..., 0]
+    gumbel = -jnp.log(-jnp.log(jnp.clip(u[0][0], 1e-9, 1.0 - 1e-9)))
+    conf = jnp.log(jnp.maximum(conf, 1e-30)) + t * gumbel
+    conf = jnp.where(is_masked, conf, -jnp.inf)
+
+    # Keep the k most confident masked draws.
+    order = jnp.argsort(-conf, axis=-1)
+    rank = jnp.argsort(order, axis=-1)
+    keep = (rank < k_unmask) & is_masked
+    return jnp.where(keep, draw, tokens)
+
+
+# --------------------------------------------------------------------------
+# Toy model steps (Sec. 6.1): single categorical variable, uniform CTMC
+# --------------------------------------------------------------------------
+
+def _toy_sub_step(x, mu, dt, u_gate, u_cat, n_states, gate: str):
+    """x: (B,) states; mu: (B, S) intensities indexed by jump size nu.
+
+    A jump of size nu moves x -> (x + nu) mod S; multiple jumps within one
+    leap window compose additively mod S, but (as in Alg. 3) we draw the
+    event count gate once and apply a single nu — the O(dt^2) multi-jump
+    correction is exactly the discretisation error the schemes trade in.
+    """
+    mu_tot = jnp.sum(mu, axis=-1)
+    if gate == "poisson":
+        p_jump = 1.0 - jnp.exp(-mu_tot * dt)
+    else:
+        p_jump = jnp.clip(mu_tot * dt, 0.0, 1.0)
+    cdf = jnp.cumsum(mu, axis=-1)
+    thresh = (u_cat * mu_tot)[:, None]
+    nu = jnp.argmax(cdf > thresh, axis=-1).astype(jnp.int32)
+    fires = (u_gate < p_jump) & (mu_tot > 0.0)
+    return jnp.where(fires, (x + nu) % n_states, x)
+
+
+def toy_step_trapezoidal(intens_fn, n_states, x, t, t_next, theta, u):
+    """theta-trapezoidal step (Alg. 2) for the toy CTMC.
+
+    intens_fn(x, t) -> (B, S) nu-indexed intensities.  Stage 2 combines
+    mu*_rho evaluated on the intermediate state y* with mu_t evaluated on
+    the ORIGINAL state x (Eq. 16), and leaps from y*.
+    """
+    dt = t - t_next
+    rho = t - theta * dt
+    a1 = 1.0 / (2.0 * theta * (1.0 - theta))
+    a2 = a1 - 1.0
+
+    mu_t = intens_fn(x, t)
+    y_star = _toy_sub_step(x, mu_t, theta * dt, u[0][0], u[0][1], n_states,
+                           "poisson")
+    mu_star = intens_fn(y_star, rho)
+    mu_comb = jnp.maximum(a1 * mu_star - a2 * mu_t, 0.0)
+    return _toy_sub_step(y_star, mu_comb, (1.0 - theta) * dt, u[1][0],
+                         u[1][1], n_states, "poisson")
+
+
+def toy_step_rk2(intens_fn, n_states, x, t, t_next, theta, u):
+    """Practical theta-RK-2 step (Alg. 4) for the toy CTMC.
+
+    Stage 2 restarts from x with ((1-1/2θ) mu_t(x) + (1/2θ) mu*_rho(y*))+
+    over the full dt (Eq. 13 with the positive-part clamp of Alg. 4).
+    """
+    dt = t - t_next
+    rho = t - theta * dt
+    w = 1.0 / (2.0 * theta)
+
+    mu_t = intens_fn(x, t)
+    y_star = _toy_sub_step(x, mu_t, theta * dt, u[0][0], u[0][1], n_states,
+                           "poisson")
+    mu_star = intens_fn(y_star, rho)
+    mu_comb = jnp.maximum((1.0 - w) * mu_t + w * mu_star, 0.0)
+    return _toy_sub_step(x, mu_comb, dt, u[1][0], u[1][1], n_states,
+                         "poisson")
+
+
+def toy_step_tau(intens_fn, n_states, x, t, t_next, u):
+    mu = intens_fn(x, t)
+    return _toy_sub_step(x, mu, t - t_next, u[0][0], u[0][1], n_states,
+                         "poisson")
+
+
+def toy_step_euler(intens_fn, n_states, x, t, t_next, u):
+    mu = intens_fn(x, t)
+    return _toy_sub_step(x, mu, t - t_next, u[0][0], u[0][1], n_states,
+                         "linear")

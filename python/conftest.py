@@ -1,0 +1,6 @@
+"""Allow `pytest python/tests/` from the repo root: the tests import the
+`compile` package relative to the python/ directory."""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,0 +1,73 @@
+"""Artifact/manifest consistency: every exported file exists, every manifest
+entry is well-formed, and side-files carry the parameters rust mirrors."""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_every_artifact_file_exists(manifest):
+    for e in manifest["artifacts"]:
+        path = os.path.join(ART, e["file"])
+        assert os.path.exists(path), e["file"]
+        with open(path) as f:
+            head = f.read(200)
+        assert "HloModule" in head, f"{e['file']} is not HLO text"
+
+
+def test_manifest_schema(manifest):
+    assert manifest["version"] == 1
+    names = [e["name"] for e in manifest["artifacts"]]
+    assert len(names) == len(set(names)), "duplicate artifact names"
+    for e in manifest["artifacts"]:
+        assert e["family"] in {"markov", "transformer", "toy", "kernel"}
+        assert e["nfe_per_step"] in {0, 1, 2}
+        for io in e["inputs"] + e["outputs"]:
+            assert io["dtype"] in {"float32", "int32"}
+            assert all(isinstance(d, int) and d > 0 for d in io["shape"]) or io["shape"] == []
+
+
+def test_expected_solver_coverage(manifest):
+    names = {e["name"] for e in manifest["artifacts"]}
+    for fam, solvers in [
+        ("markov", ["tau", "euler", "tweedie", "trapezoidal", "rk2", "parallel"]),
+        ("toy", ["tau", "euler", "trapezoidal", "rk2"]),
+    ]:
+        for s in solvers:
+            assert f"{fam}_step_{s}" in names, f"missing {fam}_step_{s}"
+    assert "transformer_score" in names
+    assert "transformer_step_trapezoidal" in names
+
+
+def test_two_stage_steps_declare_two_nfe(manifest):
+    for e in manifest["artifacts"]:
+        if "trapezoidal" in e["name"] or "rk2" in e["name"]:
+            assert e["nfe_per_step"] == 2
+        elif "step" in e["name"]:
+            assert e["nfe_per_step"] == 1
+
+
+def test_side_files_consistent(manifest):
+    with open(os.path.join(ART, "markov_model.json")) as f:
+        mk = json.load(f)
+    assert len(mk["transition"]) == mk["vocab"]
+    assert abs(sum(mk["stationary"]) - 1.0) < 1e-4
+    for row in mk["transition"]:
+        assert abs(sum(row) - 1.0) < 1e-4
+
+    with open(os.path.join(ART, "toy_model.json")) as f:
+        toy = json.load(f)
+    assert len(toy["p0"]) == toy["n_states"] == 15
+    assert abs(sum(toy["p0"]) - 1.0) < 1e-4

@@ -1,0 +1,124 @@
+"""Hypothesis sweeps: every Pallas kernel vs its pure-jnp oracle (ref.py).
+
+This is the L1 correctness gate required by DESIGN.md: shapes, dtypes and
+values are fuzzed; kernels must match the references to f32 tolerance.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _probs(rng, b, l, v):
+    return jnp.asarray(rng.dirichlet(np.ones(v), size=(b, l)).astype(np.float32))
+
+
+shapes = st.tuples(
+    st.integers(1, 4),            # batch
+    st.sampled_from([4, 8, 16, 32, 48]),  # seq len (both tiled and odd)
+    st.integers(2, 24),           # vocab
+)
+
+
+@given(shape=shapes, mu_tot=st.floats(0.0, 50.0), seed=st.integers(0, 2**31))
+def test_intensity_matches_ref(shape, mu_tot, seed):
+    b, l, v = shape
+    rng = np.random.default_rng(seed)
+    probs = _probs(rng, b, l, v)
+    masked = jnp.asarray((rng.random((b, l)) < 0.5).astype(np.float32))
+    got = kernels.intensity(probs, masked, mu_tot)
+    want = ref.intensity_ref(probs, masked, mu_tot)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@given(shape=shapes, theta=st.floats(0.05, 0.95), seed=st.integers(0, 2**31))
+def test_combine_trap_matches_ref(shape, theta, seed):
+    b, l, v = shape
+    rng = np.random.default_rng(seed)
+    mu = jnp.asarray(rng.random((b, l, v)).astype(np.float32))
+    mu_star = jnp.asarray(rng.random((b, l, v)).astype(np.float32))
+    a1 = 1.0 / (2.0 * theta * (1.0 - theta))
+    got = kernels.combine_trap(mu_star, mu, theta)
+    want = ref.combine_trap_ref(mu_star, mu, a1, a1 - 1.0)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+
+@given(shape=shapes, theta=st.floats(0.05, 1.0), seed=st.integers(0, 2**31))
+def test_combine_rk2_matches_ref(shape, theta, seed):
+    b, l, v = shape
+    rng = np.random.default_rng(seed)
+    mu = jnp.asarray(rng.random((b, l, v)).astype(np.float32))
+    mu_star = jnp.asarray(rng.random((b, l, v)).astype(np.float32))
+    got = kernels.combine_rk2(mu_star, mu, theta)
+    want = ref.combine_rk2_ref(mu_star, mu, theta)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+
+@given(shape=shapes, seed=st.integers(0, 2**31))
+def test_jump_apply_matches_ref(shape, seed):
+    b, l, v = shape
+    rng = np.random.default_rng(seed)
+    tokens = jnp.asarray(rng.integers(0, v + 1, size=(b, l)), jnp.int32)
+    p_jump = jnp.asarray(rng.random((b, l)).astype(np.float32))
+    dest = _probs(rng, b, l, v)
+    # Zero some rows to exercise the tot == 0 fallback.
+    zero = rng.random((b, l)) < 0.1
+    dest = dest * jnp.asarray(~zero[..., None], jnp.float32)
+    ug = jnp.asarray(rng.random((b, l)).astype(np.float32))
+    uc = jnp.asarray(rng.random((b, l)).astype(np.float32))
+    got = kernels.jump_apply(tokens, p_jump, dest, ug, uc, v)
+    want = ref.jump_apply_ref(tokens, p_jump, dest, ug, uc, v)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(l=st.sampled_from([8, 16, 32, 64]), d=st.sampled_from([4, 16, 32, 64]),
+       seed=st.integers(0, 2**31))
+def test_attention_matches_ref(l, d, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = (jnp.asarray(rng.standard_normal((l, d)).astype(np.float32))
+               for _ in range(3))
+    got = kernels.attention(q, k, v)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_attention_batched_matches_vmapped_ref():
+    rng = np.random.default_rng(0)
+    q, k, v = (jnp.asarray(rng.standard_normal((2, 3, 32, 16)).astype(np.float32))
+               for _ in range(3))
+    got = kernels.attention_batched(q, k, v)
+    want = np.stack([
+        np.stack([ref.attention_ref(q[b, h], k[b, h], v[b, h])
+                  for h in range(3)]) for b in range(2)])
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_jump_apply_never_touches_unmasked():
+    rng = np.random.default_rng(1)
+    b, l, v = 3, 16, 8
+    tokens = jnp.asarray(rng.integers(0, v, size=(b, l)), jnp.int32)  # none masked
+    dest = _probs(rng, b, l, v)
+    ones = jnp.ones((b, l), jnp.float32)
+    out = kernels.jump_apply(tokens, ones, dest, ones * 0.0, ones * 0.5, v)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(tokens))
+
+
+def test_combine_trap_nonnegative_and_identity_split():
+    # alpha1 - alpha2 == 1 means mu* == mu reproduces mu exactly.
+    rng = np.random.default_rng(2)
+    mu = jnp.asarray(rng.random((1, 8, 5)).astype(np.float32))
+    out = kernels.combine_trap(mu, mu, 0.37)
+    np.testing.assert_allclose(out, mu, rtol=2e-4, atol=1e-6)
+    assert float(jnp.min(kernels.combine_trap(mu * 0.1, mu, 0.37))) >= 0.0
+
+
+def test_vmem_footprint_small_config():
+    # Structural perf gate from DESIGN.md: <= 4 MiB at (seq 256, d 128).
+    assert kernels.vmem_footprint_bytes(256, 128) <= 4 * 1024 * 1024

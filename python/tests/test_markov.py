@@ -1,0 +1,92 @@
+"""Markov oracle score vs brute-force enumeration on tiny chains."""
+
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import markov
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def brute_force_conditional(a, pi, observed, pos, vocab):
+    """P(x_pos = v | observed) by enumerating all completions."""
+    l = len(observed)
+    free = [i for i in range(l) if observed[i] is None]
+    probs = np.zeros(vocab)
+    for assign in itertools.product(range(vocab), repeat=len(free)):
+        seq = list(observed)
+        for i, v in zip(free, assign):
+            seq[i] = v
+        p = pi[seq[0]]
+        for i in range(1, l):
+            p *= a[seq[i - 1], seq[i]]
+        probs[seq[pos]] += p
+    return probs / probs.sum()
+
+
+@given(seed=st.integers(0, 10_000), mask_frac=st.floats(0.2, 0.9))
+def test_oracle_matches_enumeration(seed, mask_frac):
+    vocab, seq_len = 3, 6
+    cfg = markov.MarkovConfig(vocab=vocab, seq_len=seq_len, seed=11)
+    a, pi = markov.make_chain(cfg)
+    powers = markov.power_stack(a, seq_len)
+    rng = np.random.default_rng(seed)
+    tokens = rng.integers(0, vocab, size=seq_len)
+    masked = rng.random(seq_len) < mask_frac
+    observed = [None if masked[i] else int(tokens[i]) for i in range(seq_len)]
+    tok_in = np.where(masked, cfg.mask_id, tokens).astype(np.int32)
+
+    probs = np.asarray(markov.markov_score(
+        powers, pi, cfg, jnp.asarray(tok_in)[None, :]))[0]
+
+    a64, pi64 = a.astype(np.float64), pi.astype(np.float64)
+    for pos in range(seq_len):
+        if not masked[pos]:
+            continue
+        want = brute_force_conditional(a64, pi64, observed, pos, vocab)
+        np.testing.assert_allclose(probs[pos], want, rtol=5e-3, atol=1e-5)
+
+
+def test_oracle_rows_are_distributions():
+    cfg = markov.MarkovConfig(vocab=8, seq_len=16, seed=3)
+    a, pi = markov.make_chain(cfg)
+    powers = markov.power_stack(a, cfg.seq_len)
+    rng = np.random.default_rng(0)
+    tok = rng.integers(0, cfg.vocab + 1, size=(4, cfg.seq_len)).astype(np.int32)
+    probs = np.asarray(markov.markov_score(powers, pi, cfg, jnp.asarray(tok)))
+    np.testing.assert_allclose(probs.sum(-1), 1.0, rtol=1e-5)
+    assert (probs >= 0).all()
+
+
+def test_all_masked_gives_marginals():
+    """With nothing observed, position 0 must equal pi exactly."""
+    cfg = markov.MarkovConfig(vocab=5, seq_len=8, seed=9)
+    a, pi = markov.make_chain(cfg)
+    powers = markov.power_stack(a, cfg.seq_len)
+    tok = np.full((1, cfg.seq_len), cfg.mask_id, np.int32)
+    probs = np.asarray(markov.markov_score(powers, pi, cfg, jnp.asarray(tok)))
+    np.testing.assert_allclose(probs[0, 0], pi, rtol=1e-4, atol=1e-6)
+    # pi is stationary, so every position's marginal is pi too.
+    for i in range(cfg.seq_len):
+        np.testing.assert_allclose(probs[0, i], pi, rtol=1e-3, atol=1e-5)
+
+
+def test_stationarity_of_make_chain():
+    cfg = markov.MarkovConfig(vocab=12, seq_len=4, seed=1)
+    a, pi = markov.make_chain(cfg)
+    np.testing.assert_allclose(pi @ a, pi, rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(a.sum(-1), 1.0, rtol=1e-5)
+
+
+def test_sequence_log_prob_matches_manual():
+    cfg = markov.MarkovConfig(vocab=4, seq_len=4, seed=2)
+    a, pi = markov.make_chain(cfg)
+    seq = [0, 1, 2, 3]
+    want = np.log(pi[0]) + np.log(a[0, 1]) + np.log(a[1, 2]) + np.log(a[2, 3])
+    np.testing.assert_allclose(markov.sequence_log_prob(a, pi, seq), want,
+                               rtol=1e-6)

@@ -1,0 +1,44 @@
+"""Schedule identities for the log-linear noise schedule (App. D.3)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import schedule
+
+settings.register_profile("ci", max_examples=50, deadline=None)
+settings.load_profile("ci")
+
+ts = st.floats(1e-3, 1.0 - 1e-6)
+
+
+@given(t=ts)
+def test_alpha_is_exp_neg_sigma_bar(t):
+    # f32 log1p/exp round-trip: absolute tolerance dominates near t -> 1
+    # where alpha(t) ~ eps.
+    np.testing.assert_allclose(
+        schedule.alpha(t), float(jnp.exp(-schedule.sigma_bar(t))),
+        rtol=1e-4, atol=1e-7)
+
+
+@given(t=ts)
+def test_unmask_intensity_is_one_over_t(t):
+    # The defining simplification of the log-linear schedule used throughout
+    # the rust solvers: mu_tot(t) = 1/t.
+    np.testing.assert_allclose(
+        float(schedule.unmask_intensity(t)), 1.0 / t, rtol=1e-4)
+
+
+@given(t=ts, frac=st.floats(0.01, 0.99))
+def test_tweedie_prob_is_dt_over_t(t, frac):
+    t_next = t * (1.0 - frac)
+    p = float(schedule.tweedie_unmask_prob(t, t_next))
+    np.testing.assert_allclose(p, (t - t_next) / t, rtol=1e-4)
+    assert 0.0 <= p <= 1.0
+
+
+@given(t=ts)
+def test_sigma_positive_and_increasing_near_one(t):
+    assert float(schedule.sigma(t)) > 0.0
+    assert float(schedule.sigma(min(t + 1e-4, 1.0 - 1e-7))) >= float(
+        schedule.sigma(t)) - 1e-6

@@ -1,0 +1,193 @@
+"""Sampler step-graph semantics: fixed points, masking invariants, and the
+statistical agreement of one-step transitions with their analytic laws."""
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import markov, model, schedule, steps
+
+EPS = 1e-3
+
+
+@pytest.fixture(scope="module")
+def markov_setup():
+    cfg = markov.MarkovConfig(vocab=6, seq_len=8, seed=5)
+    a, pi = markov.make_chain(cfg)
+    powers = markov.power_stack(a, cfg.seq_len)
+    score = functools.partial(markov.markov_score, powers, pi, cfg)
+    return cfg, score
+
+
+def _uniforms(rng, stages, b, l):
+    return jnp.asarray(rng.random((stages, 2, b, l)).astype(np.float32))
+
+
+@pytest.mark.parametrize("step_name", ["tau", "euler", "tweedie"])
+def test_one_stage_steps_fixed_point_when_unmasked(markov_setup, step_name):
+    """A fully unmasked sequence is a fixed point of every solver."""
+    cfg, score = markov_setup
+    rng = np.random.default_rng(0)
+    tok = jnp.asarray(rng.integers(0, cfg.vocab, size=(2, cfg.seq_len)),
+                      jnp.int32)
+    u = _uniforms(rng, 1, 2, cfg.seq_len)
+    fn = {"tau": steps.step_tau, "euler": steps.step_euler,
+          "tweedie": steps.step_tweedie}[step_name]
+    out = fn(score, cfg.mask_id, EPS, tok, jnp.float32(0.8), jnp.float32(0.7), u)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(tok))
+
+
+@pytest.mark.parametrize("step_name", ["trapezoidal", "rk2"])
+def test_two_stage_steps_fixed_point_when_unmasked(markov_setup, step_name):
+    cfg, score = markov_setup
+    rng = np.random.default_rng(1)
+    tok = jnp.asarray(rng.integers(0, cfg.vocab, size=(2, cfg.seq_len)),
+                      jnp.int32)
+    u = _uniforms(rng, 2, 2, cfg.seq_len)
+    fn = {"trapezoidal": steps.step_trapezoidal, "rk2": steps.step_rk2}[step_name]
+    out = fn(score, cfg.mask_id, EPS, tok, jnp.float32(0.8), jnp.float32(0.7),
+             jnp.float32(0.5), u)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(tok))
+
+
+def test_steps_only_unmask_never_remask(markov_setup):
+    """Monotone unmasking: the absorbing reverse process never re-masks."""
+    cfg, score = markov_setup
+    rng = np.random.default_rng(2)
+    tok = np.full((4, cfg.seq_len), cfg.mask_id, np.int32)
+    # Reveal a few positions.
+    tok[:, 0] = 1
+    tok[:, 4] = 3
+    tok = jnp.asarray(tok)
+    u = _uniforms(rng, 2, 4, cfg.seq_len)
+    out = steps.step_trapezoidal(score, cfg.mask_id, EPS, tok,
+                                 jnp.float32(0.9), jnp.float32(0.5),
+                                 jnp.float32(0.4), u)
+    out = np.asarray(out)
+    was_unmasked = np.asarray(tok) != cfg.mask_id
+    np.testing.assert_array_equal(out[was_unmasked], np.asarray(tok)[was_unmasked])
+    assert ((out == cfg.mask_id) <= (np.asarray(tok) == cfg.mask_id)).all()
+
+
+def test_tweedie_single_big_step_samples_exact_joint_marginal(markov_setup):
+    """One Tweedie step over the whole horizon unmasks every dim with the
+    exact conditional — position-0 marginal must then equal pi."""
+    cfg, score = markov_setup
+    a, pi = markov.make_chain(cfg)
+    rng = np.random.default_rng(3)
+    n = 4000
+    tok = jnp.full((n, cfg.seq_len), cfg.mask_id, jnp.int32)
+    u = _uniforms(rng, 1, n, cfg.seq_len)
+    out = np.asarray(steps.step_tweedie(score, cfg.mask_id, EPS, tok,
+                                        jnp.float32(1.0), jnp.float32(0.0), u))
+    assert (out != cfg.mask_id).all()
+    freq = np.bincount(out[:, 0], minlength=cfg.vocab) / n
+    np.testing.assert_allclose(freq, pi, atol=4.0 / np.sqrt(n))
+
+
+def test_tau_gate_probability_statistics(markov_setup):
+    """Empirical unmask fraction of one tau-leap step ~= 1 - exp(-dt/t)."""
+    cfg, score = markov_setup
+    rng = np.random.default_rng(4)
+    n, t, dt = 3000, 0.8, 0.3
+    tok = jnp.full((n, cfg.seq_len), cfg.mask_id, jnp.int32)
+    u = _uniforms(rng, 1, n, cfg.seq_len)
+    out = np.asarray(steps.step_tau(score, cfg.mask_id, EPS, tok,
+                                    jnp.float32(t), jnp.float32(t - dt), u))
+    frac = (out != cfg.mask_id).mean()
+    want = 1.0 - np.exp(-dt / t / (1.0 - EPS) * (1.0 - EPS))  # = 1-exp(-mu dt)
+    mu_tot = float(schedule.unmask_intensity(t))
+    want = 1.0 - np.exp(-mu_tot * dt)
+    np.testing.assert_allclose(frac, want, atol=0.02)
+
+
+def test_parallel_decode_unmasks_exactly_k(markov_setup):
+    cfg, score = markov_setup
+    rng = np.random.default_rng(5)
+    b = 3
+    tok = jnp.full((b, cfg.seq_len), cfg.mask_id, jnp.int32)
+    u = _uniforms(rng, 1, b, cfg.seq_len)
+    k = 3
+    out = np.asarray(steps.step_parallel_decode(score, cfg.mask_id,
+                                                jnp.int32(k), tok,
+                                                jnp.float32(0.9), u))
+    assert ((out != cfg.mask_id).sum(axis=1) == k).all()
+
+
+def test_trap_theta_half_stage1_is_tau_with_half_step(markov_setup):
+    """With identical uniforms, trap stage 1 at theta=1/2 equals a tau-leap
+    of dt/2 (the algorithms share the first stage by construction)."""
+    cfg, score = markov_setup
+    rng = np.random.default_rng(6)
+    tok = jnp.full((2, cfg.seq_len), cfg.mask_id, jnp.int32)
+    u2 = _uniforms(rng, 2, 2, cfg.seq_len)
+    # Disable stage 2 by forcing its gate uniforms to 1 (never fires).
+    u2 = u2.at[1, 0].set(1.0)
+    t, tn = 0.9, 0.5
+    got = steps.step_trapezoidal(score, cfg.mask_id, EPS, tok,
+                                 jnp.float32(t), jnp.float32(tn),
+                                 jnp.float32(0.5), u2)
+    want = steps.step_tau(score, cfg.mask_id, EPS, tok, jnp.float32(t),
+                          jnp.float32(t - 0.5 * (t - tn)), u2[:1])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# Toy steps
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def toy_setup():
+    cfg = model.ToyConfig()
+    p0 = model.toy_p0(cfg)
+    intens = functools.partial(model.toy_reverse_intensities, p0)
+    return cfg, p0, intens
+
+
+def _toy_uniforms(rng, stages, b):
+    return jnp.asarray(rng.random((stages, 2, b)).astype(np.float32))
+
+
+def test_toy_tau_step_marginal_statistics(toy_setup):
+    """One small tau step from p_T-ish states keeps a valid distribution and
+    moves mass toward p_{t_next}: chi-square sanity on 40k samples."""
+    cfg, p0, intens = toy_setup
+    rng = np.random.default_rng(7)
+    n = 40_000
+    # Start from the uniform stationary law at T = 12.
+    x = jnp.asarray(rng.integers(0, cfg.n_states, size=n), jnp.int32)
+    u = _toy_uniforms(rng, 1, n)
+    out = np.asarray(steps.toy_step_tau(intens, cfg.n_states, x,
+                                        jnp.float32(12.0), jnp.float32(11.5), u))
+    assert out.min() >= 0 and out.max() < cfg.n_states
+    freq = np.bincount(out, minlength=cfg.n_states) / n
+    # At t = 12 the marginal is uniform to ~1e-5; one 0.5-step keeps it close.
+    np.testing.assert_allclose(freq, 1.0 / cfg.n_states, atol=0.01)
+
+
+def test_toy_trap_reduces_to_no_op_without_fires(toy_setup):
+    cfg, p0, intens = toy_setup
+    x = jnp.asarray([0, 7, 14], jnp.int32)
+    u = jnp.ones((2, 2, 3), jnp.float32)  # gates never fire
+    out = steps.toy_step_trapezoidal(intens, cfg.n_states, x,
+                                     jnp.float32(2.0), jnp.float32(1.5),
+                                     jnp.float32(0.5), u)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+def test_toy_rk2_matches_tau_when_mu_star_equals_mu(toy_setup):
+    """At theta=1/2 with no stage-1 fire, mu* ~= mu (same state, slightly
+    different time); the rk2 combination then equals a plain tau-leap gate up
+    to the time difference — exercised as a smoke determinism test."""
+    cfg, p0, intens = toy_setup
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.integers(0, cfg.n_states, size=16), jnp.int32)
+    u = _toy_uniforms(rng, 2, 16)
+    u = u.at[0, 0].set(1.0)  # stage 1 never fires -> y* == x
+    a = steps.toy_step_rk2(intens, cfg.n_states, x, jnp.float32(3.0),
+                           jnp.float32(2.0), jnp.float32(0.5), u)
+    b = steps.toy_step_rk2(intens, cfg.n_states, x, jnp.float32(3.0),
+                           jnp.float32(2.0), jnp.float32(0.5), u)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,118 @@
+//! Coordinator/serving benchmarks (`cargo bench`): batching policies under
+//! a workload trace, coordinator overhead vs raw runtime dispatch, and
+//! end-to-end samples/s — the L3 §Perf numbers in EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use fastdds::bench::{bench, black_box};
+use fastdds::coordinator::{BatchPolicy, Coordinator, GenerateRequest};
+use fastdds::runtime::{Registry, RuntimeHandle, Value};
+use fastdds::solvers::Solver;
+use fastdds::util::rng::{Rng, Xoshiro256};
+
+fn main() {
+    println!("== fastdds benches: coordinator ==");
+    if !fastdds::runtime::artifacts_available("artifacts") {
+        println!("(skipped: run `make artifacts`)");
+        return;
+    }
+    let runtime = RuntimeHandle::spawn("artifacts").unwrap();
+    runtime
+        .preload(&["markov_step_trapezoidal", "markov_step_tau", "markov_step_tweedie"])
+        .unwrap();
+
+    // --- raw runtime dispatch baseline ----------------------------------
+    let (b, l) = (8usize, 32usize);
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let mut u = vec![0.0f32; 2 * 2 * b * l];
+    let raw = bench("raw pjrt trapezoidal step (batch 8)", 3, 40, || {
+        rng.fill_f32(&mut u);
+        black_box(
+            runtime
+                .execute(
+                    "markov_step_trapezoidal",
+                    vec![
+                        Value::i32(vec![16; b * l], vec![b, l]),
+                        Value::scalar_f32(0.9),
+                        Value::scalar_f32(0.8),
+                        Value::scalar_f32(0.5),
+                        Value::f32(u.clone(), vec![2, 2, b, l]),
+                    ],
+                )
+                .unwrap(),
+        );
+    });
+    println!("{}", raw.report());
+
+    // --- full coordinator request (16 steps -> 17 dispatches) -----------
+    let registry = Registry::load("artifacts").unwrap();
+    for (pname, policy) in [
+        ("greedy", BatchPolicy::Greedy),
+        ("timeout-5ms", BatchPolicy::Timeout(std::time::Duration::from_millis(5))),
+    ] {
+        let coord = Coordinator::start(runtime.clone(), registry.clone(), policy);
+        let mut id = 0u64;
+        let r = bench(
+            &format!("coordinator request nfe=32 n=8 ({pname})"),
+            2,
+            15,
+            || {
+                id += 1;
+                black_box(
+                    coord
+                        .generate(GenerateRequest {
+                            id,
+                            family: "markov".into(),
+                            solver: Solver::Trapezoidal { theta: 0.5 },
+                            nfe: 32,
+                            n_samples: 8,
+                            seed: id,
+                        })
+                        .unwrap(),
+                );
+            },
+        );
+        println!("{}  ({:.1} samples/s)", r.report(), r.items_per_sec(8.0));
+        // Coordinator overhead vs raw dispatches: nfe=32 trap = 16 steps
+        // (+1 possible finalize) => ~17 dispatches of the raw cost.
+        let dispatch_cost = raw.mean_ns * 17.0;
+        println!(
+            "    overhead vs {:.0} ns of raw dispatches: {:.1}%",
+            dispatch_cost,
+            (r.mean_ns - dispatch_cost) / dispatch_cost * 100.0
+        );
+        coord.shutdown();
+    }
+
+    // --- concurrent-load throughput --------------------------------------
+    let coord = Coordinator::start(
+        runtime.clone(),
+        registry.clone(),
+        BatchPolicy::Timeout(std::time::Duration::from_millis(2)),
+    );
+    let started = Instant::now();
+    let rxs: Vec<_> = (0..32)
+        .map(|i| {
+            coord.submit(GenerateRequest {
+                id: 10_000 + i,
+                family: "markov".into(),
+                solver: Solver::TauLeaping,
+                nfe: 32,
+                n_samples: 4,
+                seed: i,
+            })
+        })
+        .collect();
+    let mut n = 0usize;
+    for rx in rxs {
+        n += rx.recv().unwrap().unwrap().sequences.len();
+    }
+    let wall = started.elapsed().as_secs_f64();
+    let m = coord.metrics();
+    println!(
+        "concurrent load: {n} samples in {wall:.2}s = {:.1} samples/s; {}",
+        n as f64 / wall,
+        m.report()
+    );
+    coord.shutdown();
+}

@@ -1,0 +1,98 @@
+//! Solver micro/meso benchmarks (`cargo bench`): per-step cost of every
+//! scheme on the oracle path, the end-to-end per-sample cost at the paper's
+//! NFE budgets, and the PJRT artifact dispatch cost when artifacts exist.
+//! One bench block per paper table/figure workload (DESIGN.md §Perf).
+
+use fastdds::bench::{bench, black_box};
+use fastdds::ctmc::ToyModel;
+use fastdds::score::markov::{MarkovChain, MarkovOracle};
+use fastdds::score::ScoreSource;
+use fastdds::solvers::{grid, masked, toy, Solver};
+use fastdds::util::rng::Xoshiro256;
+
+fn main() {
+    println!("== fastdds benches: solver steps ==");
+    let mut rng = Xoshiro256::seed_from_u64(1);
+
+    // --- oracle score evaluation (the per-NFE cost unit, Tab. 1/2 work) --
+    let chain = MarkovChain::generate(&mut rng, 32, 0.3);
+    let oracle = MarkovOracle::new(chain.clone(), 256);
+    let tokens = fastdds::score::all_masked(256, oracle.mask_id());
+    let mut out = vec![0.0; 256 * 32];
+    let r = bench("markov_oracle_probs L=256 V=32", 3, 50, || {
+        oracle.probs_into(black_box(&tokens), 0.5, &mut out);
+    });
+    println!("{}", r.report());
+
+    // --- one full generation per solver at NFE=64 (Tab. 2 row cost) -----
+    for solver in [
+        Solver::Euler,
+        Solver::TauLeaping,
+        Solver::Tweedie,
+        Solver::Rk2 { theta: 0.3333 },
+        Solver::Trapezoidal { theta: 0.5 },
+        Solver::ParallelDecoding,
+    ] {
+        let g = grid::masked_uniform(solver.steps_for_nfe(64), 1e-3);
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let r = bench(
+            &format!("generate NFE=64 {:22}", solver.name()),
+            2,
+            20,
+            || {
+                black_box(masked::generate(&oracle, solver, &g, &mut rng));
+            },
+        );
+        println!("{}  ({:.1} samples/s)", r.report(), r.items_per_sec(1.0));
+    }
+
+    // --- toy model step (Fig. 2 inner loop) ------------------------------
+    let mut rng = Xoshiro256::seed_from_u64(3);
+    let model = ToyModel::paper_default(&mut rng);
+    let g = grid::toy_uniform(32, model.horizon, 1e-3);
+    for solver in [Solver::TauLeaping, Solver::Trapezoidal { theta: 0.5 }] {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let r = bench(
+            &format!("toy generate 32 steps {:18}", solver.name()),
+            10,
+            200,
+            || {
+                black_box(toy::generate(&model, solver, &g, &mut rng));
+            },
+        );
+        println!("{}", r.report());
+    }
+
+    // --- PJRT artifact dispatch (runtime hot path) -----------------------
+    if fastdds::runtime::artifacts_available("artifacts") {
+        use fastdds::runtime::{RuntimeHandle, Value};
+        use fastdds::util::rng::Rng;
+        let h = RuntimeHandle::spawn("artifacts").unwrap();
+        h.preload(&["markov_step_trapezoidal", "markov_step_tau"]).unwrap();
+        let (b, l) = (8usize, 32usize);
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        for (name, stages) in [("markov_step_tau", 1usize), ("markov_step_trapezoidal", 2)] {
+            let mut u = vec![0.0f32; stages * 2 * b * l];
+            let r = bench(&format!("pjrt dispatch {name:28}"), 3, 30, || {
+                rng.fill_f32(&mut u);
+                let mut inputs = vec![
+                    Value::i32(vec![16; b * l], vec![b, l]),
+                    Value::scalar_f32(0.9),
+                    Value::scalar_f32(0.8),
+                ];
+                if stages == 2 {
+                    inputs.push(Value::scalar_f32(0.5));
+                }
+                inputs.push(Value::f32(u.clone(), vec![stages, 2, b, l]));
+                black_box(h.execute(name, inputs).unwrap());
+            });
+            println!(
+                "{}  ({:.1} lanes/s)",
+                r.report(),
+                r.items_per_sec(b as f64)
+            );
+        }
+    } else {
+        println!("(artifact benches skipped: run `make artifacts`)");
+    }
+}

@@ -1,0 +1,79 @@
+//! Micro-benchmark harness (criterion is not vendored in this image):
+//! warm-up + timed iterations with mean/stddev/percentiles, plus a
+//! before/after comparison record for EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+use crate::util::stats::{mean, quantile, std_dev};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:40} {:>10.1} ns/iter (p50 {:>10.1}, p95 {:>10.1}, sd {:>8.1}, n={})",
+            self.name, self.mean_ns, self.p50_ns, self.p95_ns, self.std_ns, self.iters
+        )
+    }
+
+    /// Throughput given items processed per iteration.
+    pub fn items_per_sec(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns * 1e-9)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured ones.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    assert!(iters >= 1);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean(&samples),
+        std_ns: std_dev(&samples),
+        p50_ns: quantile(&samples, 0.5),
+        p95_ns: quantile(&samples, 0.95),
+    }
+}
+
+/// Prevent the optimiser from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-loop", 2, 20, || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p95_ns >= r.p50_ns);
+        assert!(r.report().contains("noop-loop"));
+        assert!(r.items_per_sec(1000.0) > 0.0);
+    }
+}

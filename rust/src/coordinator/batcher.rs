@@ -1,0 +1,250 @@
+//! Dynamic batcher: packs sample lanes from compatible requests into
+//! fixed-shape artifact batches.
+//!
+//! Compatibility key = (family, solver, NFE): every lane of a batch must run
+//! the same step graph over the same time grid.  Two policies (ablated in
+//! `exp::ablations`):
+//!   - `Greedy`: dispatch as soon as any lane is available (min latency);
+//!   - `Timeout(ms)`: hold partially full batches up to a deadline to
+//!     improve occupancy (min cost per sample).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::request::GenerateRequest;
+use crate::solvers::Solver;
+
+/// One sample lane of a request.
+#[derive(Clone, Debug)]
+pub struct Lane {
+    pub request_id: u64,
+    pub sample_idx: usize,
+    pub seed: u64,
+    pub enqueued: Instant,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct BatchKey {
+    pub family_hash: u64,
+    pub solver_kind: u8,
+    /// theta bits (exact f64) for the two-stage solvers, 0 otherwise.
+    pub theta_bits: u64,
+    pub nfe: usize,
+}
+
+impl BatchKey {
+    pub fn of(req: &GenerateRequest) -> BatchKey {
+        let (kind, theta) = match req.solver {
+            Solver::Euler => (0u8, 0.0),
+            Solver::TauLeaping => (1, 0.0),
+            Solver::Tweedie => (2, 0.0),
+            Solver::Trapezoidal { theta } => (3, theta),
+            Solver::Rk2 { theta } => (4, theta),
+            Solver::ParallelDecoding => (5, 0.0),
+        };
+        BatchKey {
+            family_hash: crate::testkit::fnv1a(&req.family),
+            solver_kind: kind,
+            theta_bits: theta.to_bits(),
+            nfe: req.nfe,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BatchPolicy {
+    Greedy,
+    Timeout(Duration),
+}
+
+pub struct DynamicBatcher {
+    pub policy: BatchPolicy,
+    /// Artifact batch size (lanes per dispatch).
+    pub max_lanes: usize,
+    queues: BTreeMap<BatchKey, VecDeque<(Lane, GenerateRequest)>>,
+    pub enqueued_lanes: usize,
+}
+
+impl DynamicBatcher {
+    pub fn new(policy: BatchPolicy, max_lanes: usize) -> Self {
+        assert!(max_lanes >= 1);
+        Self { policy, max_lanes, queues: BTreeMap::new(), enqueued_lanes: 0 }
+    }
+
+    /// Split a request into lanes and enqueue them.
+    pub fn enqueue(&mut self, req: GenerateRequest) {
+        let key = BatchKey::of(&req);
+        let q = self.queues.entry(key).or_default();
+        for sample_idx in 0..req.n_samples {
+            let lane = Lane {
+                request_id: req.id,
+                sample_idx,
+                // Per-lane stream: request seed + lane index spread.
+                seed: req
+                    .seed
+                    .wrapping_add((sample_idx as u64).wrapping_mul(0x9E3779B97F4A7C15)),
+                enqueued: Instant::now(),
+            };
+            q.push_back((lane, req.clone()));
+            self.enqueued_lanes += 1;
+        }
+    }
+
+    /// Pop the next dispatchable batch under the policy, if any.
+    pub fn next_batch(&mut self, now: Instant) -> Option<(BatchKey, GenerateRequest, Vec<Lane>)> {
+        let key = {
+            let mut chosen: Option<BatchKey> = None;
+            for (key, q) in self.queues.iter() {
+                if q.is_empty() {
+                    continue;
+                }
+                let full = q.len() >= self.max_lanes;
+                let due = match self.policy {
+                    BatchPolicy::Greedy => true,
+                    BatchPolicy::Timeout(d) => {
+                        full || now.duration_since(q.front().unwrap().0.enqueued) >= d
+                    }
+                };
+                if due {
+                    chosen = Some(*key);
+                    break;
+                }
+            }
+            chosen?
+        };
+        let q = self.queues.get_mut(&key).unwrap();
+        let take = q.len().min(self.max_lanes);
+        let mut lanes = Vec::with_capacity(take);
+        let mut proto = None;
+        for _ in 0..take {
+            let (lane, req) = q.pop_front().unwrap();
+            proto.get_or_insert(req);
+            lanes.push(lane);
+            self.enqueued_lanes -= 1;
+        }
+        Some((key, proto.unwrap(), lanes))
+    }
+
+    pub fn pending(&self) -> usize {
+        self.enqueued_lanes
+    }
+
+    /// Mean occupancy a dispatch would get right now (metrics).
+    pub fn occupancy_if_dispatched(&self) -> f64 {
+        let ready: Vec<usize> = self
+            .queues
+            .values()
+            .filter(|q| !q.is_empty())
+            .map(|q| q.len().min(self.max_lanes))
+            .collect();
+        if ready.is_empty() {
+            return 0.0;
+        }
+        ready.iter().sum::<usize>() as f64 / (ready.len() * self.max_lanes) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, solver: Solver, nfe: usize, n: usize) -> GenerateRequest {
+        GenerateRequest {
+            id,
+            family: "markov".into(),
+            solver,
+            nfe,
+            n_samples: n,
+            seed: id * 100,
+        }
+    }
+
+    #[test]
+    fn greedy_dispatches_immediately() {
+        let mut b = DynamicBatcher::new(BatchPolicy::Greedy, 8);
+        b.enqueue(req(1, Solver::TauLeaping, 32, 3));
+        let (_, proto, lanes) = b.next_batch(Instant::now()).unwrap();
+        assert_eq!(lanes.len(), 3);
+        assert_eq!(proto.id, 1);
+        assert!(b.next_batch(Instant::now()).is_none());
+    }
+
+    #[test]
+    fn batches_group_by_key_only() {
+        let mut b = DynamicBatcher::new(BatchPolicy::Greedy, 8);
+        b.enqueue(req(1, Solver::TauLeaping, 32, 2));
+        b.enqueue(req(2, Solver::TauLeaping, 32, 2));
+        b.enqueue(req(3, Solver::Euler, 32, 2));
+        // Two batches total (key order is unspecified): tau lanes from
+        // requests 1 and 2 co-batch; euler stays separate.
+        let mut batches = Vec::new();
+        while let Some((_, proto, lanes)) = b.next_batch(Instant::now()) {
+            batches.push((proto.solver, lanes));
+        }
+        assert_eq!(batches.len(), 2);
+        let tau = batches
+            .iter()
+            .find(|(s, _)| *s == Solver::TauLeaping)
+            .unwrap();
+        assert_eq!(tau.1.len(), 4);
+        let ids: Vec<u64> = tau.1.iter().map(|l| l.request_id).collect();
+        assert!(ids.contains(&1) && ids.contains(&2) && !ids.contains(&3));
+        let euler = batches.iter().find(|(s, _)| *s == Solver::Euler).unwrap();
+        assert_eq!(euler.1.len(), 2);
+    }
+
+    #[test]
+    fn theta_distinguishes_keys() {
+        let a = BatchKey::of(&req(1, Solver::Trapezoidal { theta: 0.5 }, 32, 1));
+        let b = BatchKey::of(&req(2, Solver::Trapezoidal { theta: 0.3 }, 32, 1));
+        let c = BatchKey::of(&req(3, Solver::Trapezoidal { theta: 0.5 }, 32, 1));
+        assert_ne!(a, b);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn max_lanes_splits_large_requests() {
+        let mut b = DynamicBatcher::new(BatchPolicy::Greedy, 4);
+        b.enqueue(req(1, Solver::TauLeaping, 16, 10));
+        let (_, _, l1) = b.next_batch(Instant::now()).unwrap();
+        let (_, _, l2) = b.next_batch(Instant::now()).unwrap();
+        let (_, _, l3) = b.next_batch(Instant::now()).unwrap();
+        assert_eq!((l1.len(), l2.len(), l3.len()), (4, 4, 2));
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn timeout_policy_waits_then_fires() {
+        let mut b = DynamicBatcher::new(
+            BatchPolicy::Timeout(Duration::from_millis(50)),
+            8,
+        );
+        b.enqueue(req(1, Solver::TauLeaping, 16, 2));
+        let now = Instant::now();
+        assert!(b.next_batch(now).is_none(), "should hold under-full batch");
+        let later = now + Duration::from_millis(60);
+        let got = b.next_batch(later);
+        assert!(got.is_some(), "deadline passed, must dispatch");
+    }
+
+    #[test]
+    fn timeout_policy_fires_immediately_when_full() {
+        let mut b = DynamicBatcher::new(
+            BatchPolicy::Timeout(Duration::from_secs(100)),
+            4,
+        );
+        b.enqueue(req(1, Solver::TauLeaping, 16, 4));
+        assert!(b.next_batch(Instant::now()).is_some());
+    }
+
+    #[test]
+    fn lane_seeds_distinct() {
+        let mut b = DynamicBatcher::new(BatchPolicy::Greedy, 8);
+        b.enqueue(req(1, Solver::TauLeaping, 16, 5));
+        let (_, _, lanes) = b.next_batch(Instant::now()).unwrap();
+        let mut seeds: Vec<u64> = lanes.iter().map(|l| l.seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 5);
+    }
+}

@@ -1,0 +1,76 @@
+//! Serving metrics: request/lane/dispatch counters, latency distribution,
+//! NFE accounting and batch occupancy.
+
+use crate::util::stats::Online;
+
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub requests: u64,
+    pub lanes: u64,
+    pub dispatches: u64,
+    pub nfe_total: u64,
+    pub latency_ms: Online,
+    pub occupancy: Online,
+    pub queue_wait_ms: Online,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self {
+            latency_ms: Online::new(),
+            occupancy: Online::new(),
+            queue_wait_ms: Online::new(),
+            ..Default::default()
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} lanes={} dispatches={} nfe={} \
+             latency_ms[p_mean={:.2} max={:.2}] occupancy_mean={:.2} \
+             queue_wait_ms_mean={:.2}",
+            self.requests,
+            self.lanes,
+            self.dispatches,
+            self.nfe_total,
+            self.latency_ms.mean(),
+            if self.latency_ms.n > 0 { self.latency_ms.max } else { 0.0 },
+            self.occupancy.mean(),
+            self.queue_wait_ms.mean(),
+        )
+    }
+
+    /// Samples per second over a wall-clock window.
+    pub fn throughput(&self, window_secs: f64) -> f64 {
+        if window_secs <= 0.0 {
+            return 0.0;
+        }
+        self.lanes as f64 / window_secs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let mut m = Metrics::new();
+        m.requests += 1;
+        m.lanes += 4;
+        m.latency_ms.push(10.0);
+        m.latency_ms.push(20.0);
+        m.occupancy.push(0.5);
+        assert_eq!(m.requests, 1);
+        assert!((m.latency_ms.mean() - 15.0).abs() < 1e-12);
+        assert!(m.report().contains("lanes=4"));
+        assert!((m.throughput(2.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_report_safe() {
+        let m = Metrics::new();
+        assert!(m.report().contains("requests=0"));
+        assert_eq!(m.throughput(0.0), 0.0);
+    }
+}

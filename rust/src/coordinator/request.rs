@@ -1,0 +1,158 @@
+//! Request/response types of the serving layer.
+
+use crate::score::Tok;
+use crate::solvers::Solver;
+use crate::util::json::Json;
+use anyhow::Result;
+
+#[derive(Clone, Debug)]
+pub struct GenerateRequest {
+    pub id: u64,
+    /// Artifact family: "markov" (oracle score) or "transformer".
+    pub family: String,
+    pub solver: Solver,
+    /// Total score-evaluation budget per sample (the paper's NFE axis).
+    pub nfe: usize,
+    pub n_samples: usize,
+    pub seed: u64,
+}
+
+impl GenerateRequest {
+    pub fn from_json(j: &Json, id: u64) -> Result<GenerateRequest> {
+        let solver = Solver::parse(j.get("solver")?.as_str()?)?;
+        Ok(GenerateRequest {
+            id,
+            family: j
+                .opt("family")
+                .map(|f| f.as_str().map(str::to_string))
+                .transpose()?
+                .unwrap_or_else(|| "markov".to_string()),
+            solver,
+            nfe: j.get("nfe")?.as_usize()?,
+            n_samples: j.opt("n_samples").map(|v| v.as_usize()).transpose()?.unwrap_or(1),
+            seed: j.opt("seed").map(|v| v.as_f64()).transpose()?.unwrap_or(0.0) as u64,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("family", Json::from(self.family.as_str())),
+            ("solver", Json::from(solver_string(self.solver).as_str())),
+            ("nfe", Json::from(self.nfe)),
+            ("n_samples", Json::from(self.n_samples)),
+            ("seed", Json::from(self.seed as f64)),
+        ])
+    }
+}
+
+pub fn solver_string(s: Solver) -> String {
+    match s {
+        Solver::Euler => "euler".into(),
+        Solver::TauLeaping => "tau".into(),
+        Solver::Tweedie => "tweedie".into(),
+        Solver::Trapezoidal { theta } => format!("trapezoidal:{theta}"),
+        Solver::Rk2 { theta } => format!("rk2:{theta}"),
+        Solver::ParallelDecoding => "parallel".into(),
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct GenerateResponse {
+    pub id: u64,
+    pub sequences: Vec<Vec<Tok>>,
+    /// Score evaluations actually spent per sample.
+    pub nfe_used: usize,
+    pub latency_ms: f64,
+}
+
+impl GenerateResponse {
+    pub fn to_json(&self) -> Json {
+        let seqs: Vec<Json> = self
+            .sequences
+            .iter()
+            .map(|s| Json::Arr(s.iter().map(|&t| Json::Num(t as f64)).collect()))
+            .collect();
+        Json::obj(vec![
+            ("id", Json::from(self.id as f64)),
+            ("sequences", Json::Arr(seqs)),
+            ("nfe_used", Json::from(self.nfe_used)),
+            ("latency_ms", Json::from(self.latency_ms)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<GenerateResponse> {
+        let sequences = j
+            .get("sequences")?
+            .as_arr()?
+            .iter()
+            .map(|s| {
+                s.as_arr()?
+                    .iter()
+                    .map(|t| Ok(t.as_f64()? as Tok))
+                    .collect::<Result<Vec<Tok>>>()
+            })
+            .collect::<Result<_>>()?;
+        Ok(GenerateResponse {
+            id: j.get("id")?.as_f64()? as u64,
+            sequences,
+            nfe_used: j.get("nfe_used")?.as_usize()?,
+            latency_ms: j.get("latency_ms")?.as_f64()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_json_roundtrip() {
+        let r = GenerateRequest {
+            id: 7,
+            family: "markov".into(),
+            solver: Solver::Trapezoidal { theta: 0.5 },
+            nfe: 64,
+            n_samples: 3,
+            seed: 42,
+        };
+        let j = r.to_json();
+        let back = GenerateRequest::from_json(&j, 7).unwrap();
+        assert_eq!(back.solver, r.solver);
+        assert_eq!(back.nfe, 64);
+        assert_eq!(back.n_samples, 3);
+        assert_eq!(back.seed, 42);
+    }
+
+    #[test]
+    fn response_json_roundtrip() {
+        let r = GenerateResponse {
+            id: 3,
+            sequences: vec![vec![1, 2, 3], vec![4, 5, 6]],
+            nfe_used: 32,
+            latency_ms: 12.5,
+        };
+        let back = GenerateResponse::from_json(&r.to_json()).unwrap();
+        assert_eq!(back.sequences, r.sequences);
+        assert_eq!(back.nfe_used, 32);
+    }
+
+    #[test]
+    fn request_defaults() {
+        let j = Json::parse(r#"{"solver": "tau", "nfe": 16}"#).unwrap();
+        let r = GenerateRequest::from_json(&j, 1).unwrap();
+        assert_eq!(r.family, "markov");
+        assert_eq!(r.n_samples, 1);
+        assert_eq!(r.solver, Solver::TauLeaping);
+    }
+
+    #[test]
+    fn solver_string_roundtrip() {
+        for s in [
+            Solver::Euler,
+            Solver::Trapezoidal { theta: 0.3 },
+            Solver::Rk2 { theta: 0.25 },
+        ] {
+            assert_eq!(Solver::parse(&solver_string(s)).unwrap(), s);
+        }
+    }
+}

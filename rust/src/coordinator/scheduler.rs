@@ -1,0 +1,241 @@
+//! Step scheduler: drives one packed batch through its whole backward pass
+//! on the PJRT runtime.
+//!
+//! One dispatch per grid step (the two-stage solvers are FUSED into a single
+//! step graph by L2, so a trapezoidal step is still one dispatch but counts
+//! 2 NFE).  Lanes shorter than the artifact batch are padded with dummy
+//! lanes; each real lane draws its uniforms from its own seeded stream, so a
+//! sample depends only on (request seed, sample index) — not on co-batching.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::batcher::Lane;
+use crate::coordinator::request::GenerateRequest;
+use crate::runtime::{ArtifactSpec, Registry, RuntimeHandle, Value};
+use crate::score::Tok;
+use crate::solvers::{grid, Solver};
+use crate::util::rng::{Rng, Xoshiro256};
+
+pub const DELTA: f64 = 1e-3;
+
+/// Result of one batch pass: per-lane token sequences + NFE per lane.
+pub struct BatchResult {
+    pub tokens: Vec<Vec<Tok>>,
+    pub nfe_per_lane: usize,
+}
+
+/// Which artifact implements a solver step for a family.
+pub fn artifact_name(family: &str, solver: Solver) -> String {
+    let s = match solver {
+        Solver::Euler => "euler",
+        Solver::TauLeaping => "tau",
+        Solver::Tweedie => "tweedie",
+        Solver::Trapezoidal { .. } => "trapezoidal",
+        Solver::Rk2 { .. } => "rk2",
+        Solver::ParallelDecoding => "parallel",
+    };
+    format!("{family}_step_{s}")
+}
+
+pub struct StepPlan {
+    pub artifact: String,
+    pub spec: ArtifactSpec,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub stages: usize,
+    pub steps: usize,
+}
+
+impl StepPlan {
+    pub fn build(registry: &Registry, req: &GenerateRequest) -> Result<StepPlan> {
+        let artifact = artifact_name(&req.family, req.solver);
+        let spec = registry.get(&artifact)?.clone();
+        let batch = spec.batch()?;
+        let seq_len = spec
+            .seq_len()
+            .ok_or_else(|| anyhow::anyhow!("{artifact} has no seq_len"))?;
+        let vocab = spec
+            .vocab()
+            .ok_or_else(|| anyhow::anyhow!("{artifact} has no vocab"))?;
+        let stages = if spec.nfe_per_step == 2 { 2 } else { 1 };
+        if req.nfe < spec.nfe_per_step {
+            bail!("nfe budget {} below one step ({})", req.nfe, spec.nfe_per_step);
+        }
+        Ok(StepPlan {
+            artifact,
+            spec: spec.clone(),
+            batch,
+            seq_len,
+            vocab,
+            stages,
+            steps: req.solver.steps_for_nfe(req.nfe),
+        })
+    }
+}
+
+/// Run the whole backward pass for one packed batch.
+pub fn run_batch(
+    runtime: &RuntimeHandle,
+    plan: &StepPlan,
+    solver: Solver,
+    lanes: &[Lane],
+) -> Result<BatchResult> {
+    assert!(lanes.len() <= plan.batch);
+    let (b, l, v) = (plan.batch, plan.seq_len, plan.vocab);
+    let mask = v as i32;
+    let mut tokens = vec![mask; b * l];
+    let mut rngs: Vec<Xoshiro256> = lanes
+        .iter()
+        .map(|lane| Xoshiro256::seed_from_u64(lane.seed))
+        .collect();
+    // Padding lanes reuse a throwaway stream so shapes stay fixed.
+    let mut pad_rng = Xoshiro256::seed_from_u64(0xDEAD_BEEF);
+
+    let grid_ts = grid::masked_uniform(plan.steps, DELTA);
+    let mut nfe = 0usize;
+
+    let theta = match solver {
+        Solver::Trapezoidal { theta } | Solver::Rk2 { theta } => theta as f32,
+        _ => 0.0,
+    };
+
+    for (step_idx, w) in grid_ts.windows(2).enumerate() {
+        let uniforms = fill_uniforms(plan.stages, b, l, &mut rngs, &mut pad_rng);
+        let mut inputs = vec![
+            Value::i32(tokens.clone(), vec![b, l]),
+            Value::scalar_f32(w[0] as f32),
+        ];
+        match solver {
+            Solver::ParallelDecoding => {
+                // arccos schedule (App. D.4): k tokens to reveal this step.
+                let n_steps = plan.steps;
+                let frac = (step_idx + 1) as f64 / n_steps as f64;
+                let target = if step_idx + 1 == n_steps {
+                    0
+                } else {
+                    ((std::f64::consts::FRAC_PI_2 * frac).cos() * l as f64).ceil()
+                        as usize
+                };
+                let masked_now = tokens.iter().filter(|&&x| x == mask).count() / b.max(1);
+                let k = masked_now.saturating_sub(target) as i32;
+                inputs.push(Value::scalar_i32(k.max(0)));
+            }
+            Solver::Trapezoidal { .. } | Solver::Rk2 { .. } => {
+                inputs.push(Value::scalar_f32(w[1] as f32));
+                inputs.push(Value::scalar_f32(theta));
+            }
+            _ => inputs.push(Value::scalar_f32(w[1] as f32)),
+        }
+        inputs.push(Value::f32(uniforms, vec![plan.stages, 2, b, l]));
+        let out = runtime.execute(&plan.artifact, inputs)?;
+        tokens = out[0].as_i32()?.to_vec();
+        nfe += plan.spec.nfe_per_step;
+    }
+
+    // Terminal denoise of any still-masked dims: one exact (Tweedie) step
+    // from DELTA to ~0 — gate probability ~1, destinations from the score.
+    if tokens.iter().any(|&x| x == mask) {
+        let tw = format!(
+            "{}_step_tweedie",
+            plan.artifact.split("_step_").next().unwrap()
+        );
+        let uniforms = fill_uniforms(1, b, l, &mut rngs, &mut pad_rng);
+        let out = runtime.execute(
+            &tw,
+            vec![
+                Value::i32(tokens.clone(), vec![b, l]),
+                Value::scalar_f32(DELTA as f32),
+                Value::scalar_f32((DELTA * 1e-6) as f32),
+                Value::f32(uniforms, vec![1, 2, b, l]),
+            ],
+        )?;
+        tokens = out[0].as_i32()?.to_vec();
+        nfe += 1;
+    }
+
+    let out_tokens = lanes
+        .iter()
+        .enumerate()
+        .map(|(i, _)| {
+            tokens[i * l..(i + 1) * l]
+                .iter()
+                .map(|&x| x as Tok)
+                .collect()
+        })
+        .collect();
+    Ok(BatchResult { tokens: out_tokens, nfe_per_lane: nfe })
+}
+
+/// Uniforms layout (stages, 2, B, L): lane b owns [.., .., b, ..] across all
+/// stages/gates, drawn from its own stream.
+fn fill_uniforms(
+    stages: usize,
+    b: usize,
+    l: usize,
+    rngs: &mut [Xoshiro256],
+    pad_rng: &mut Xoshiro256,
+) -> Vec<f32> {
+    let mut u = vec![0.0f32; stages * 2 * b * l];
+    for lane in 0..b {
+        let rng: &mut Xoshiro256 = if lane < rngs.len() {
+            &mut rngs[lane]
+        } else {
+            pad_rng
+        };
+        for s in 0..stages {
+            for g in 0..2 {
+                let base = ((s * 2 + g) * b + lane) * l;
+                rng.fill_f32(&mut u[base..base + l]);
+            }
+        }
+    }
+    u
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_names() {
+        assert_eq!(
+            artifact_name("markov", Solver::Trapezoidal { theta: 0.5 }),
+            "markov_step_trapezoidal"
+        );
+        assert_eq!(artifact_name("toy", Solver::TauLeaping), "toy_step_tau");
+        assert_eq!(
+            artifact_name("transformer", Solver::ParallelDecoding),
+            "transformer_step_parallel"
+        );
+    }
+
+    #[test]
+    fn fill_uniforms_lane_isolation() {
+        // Lane 0's stream must be identical regardless of other lanes.
+        let mut r1 = vec![Xoshiro256::seed_from_u64(7)];
+        let mut pad = Xoshiro256::seed_from_u64(1);
+        let a = fill_uniforms(2, 4, 8, &mut r1, &mut pad);
+        let mut r2 = vec![
+            Xoshiro256::seed_from_u64(7),
+            Xoshiro256::seed_from_u64(8),
+        ];
+        let mut pad = Xoshiro256::seed_from_u64(2);
+        let b = fill_uniforms(2, 4, 8, &mut r2, &mut pad);
+        for s in 0..2 {
+            for g in 0..2 {
+                let base = ((s * 2 + g) * 4) * 8;
+                assert_eq!(&a[base..base + 8], &b[base..base + 8], "stage {s} gate {g}");
+            }
+        }
+    }
+
+    #[test]
+    fn fill_uniforms_values_in_range() {
+        let mut rngs = vec![Xoshiro256::seed_from_u64(1)];
+        let mut pad = Xoshiro256::seed_from_u64(2);
+        let u = fill_uniforms(1, 2, 4, &mut rngs, &mut pad);
+        assert_eq!(u.len(), 1 * 2 * 2 * 4);
+        assert!(u.iter().all(|&x| x > 0.0 && x < 1.0));
+    }
+}

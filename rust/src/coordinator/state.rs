@@ -1,0 +1,112 @@
+//! In-flight request state: lanes complete out of order (different batches,
+//! splits across dispatches); the assembler reunites them into responses.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::request::GenerateResponse;
+use crate::score::Tok;
+
+struct Pending {
+    sequences: Vec<Option<Vec<Tok>>>,
+    remaining: usize,
+    nfe_used: usize,
+    started_ms: f64,
+}
+
+/// Collects per-lane results; yields a response when a request completes.
+#[derive(Default)]
+pub struct ResponseAssembler {
+    pending: BTreeMap<u64, Pending>,
+}
+
+impl ResponseAssembler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn register(&mut self, request_id: u64, n_samples: usize, started_ms: f64) {
+        self.pending.insert(
+            request_id,
+            Pending {
+                sequences: (0..n_samples).map(|_| None).collect(),
+                remaining: n_samples,
+                nfe_used: 0,
+                started_ms,
+            },
+        );
+    }
+
+    /// Record one completed lane; returns the response if that finished the
+    /// request.  `now_ms` stamps latency.
+    pub fn complete_lane(
+        &mut self,
+        request_id: u64,
+        sample_idx: usize,
+        tokens: Vec<Tok>,
+        nfe: usize,
+        now_ms: f64,
+    ) -> Option<GenerateResponse> {
+        let p = self
+            .pending
+            .get_mut(&request_id)
+            .unwrap_or_else(|| panic!("lane for unknown request {request_id}"));
+        assert!(
+            p.sequences[sample_idx].is_none(),
+            "duplicate lane {request_id}/{sample_idx}"
+        );
+        p.sequences[sample_idx] = Some(tokens);
+        p.remaining -= 1;
+        p.nfe_used = p.nfe_used.max(nfe);
+        if p.remaining > 0 {
+            return None;
+        }
+        let p = self.pending.remove(&request_id).unwrap();
+        Some(GenerateResponse {
+            id: request_id,
+            sequences: p.sequences.into_iter().map(Option::unwrap).collect(),
+            nfe_used: p.nfe_used,
+            latency_ms: now_ms - p.started_ms,
+        })
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assembles_out_of_order() {
+        let mut a = ResponseAssembler::new();
+        a.register(1, 3, 0.0);
+        assert!(a.complete_lane(1, 2, vec![2], 16, 5.0).is_none());
+        assert!(a.complete_lane(1, 0, vec![0], 16, 6.0).is_none());
+        let r = a.complete_lane(1, 1, vec![1], 17, 7.5).unwrap();
+        assert_eq!(r.sequences, vec![vec![0], vec![1], vec![2]]);
+        assert_eq!(r.nfe_used, 17);
+        assert!((r.latency_ms - 7.5).abs() < 1e-12);
+        assert_eq!(a.in_flight(), 0);
+    }
+
+    #[test]
+    fn multiple_requests_interleaved() {
+        let mut a = ResponseAssembler::new();
+        a.register(1, 1, 0.0);
+        a.register(2, 2, 0.0);
+        assert!(a.complete_lane(2, 0, vec![9], 8, 1.0).is_none());
+        assert!(a.complete_lane(1, 0, vec![7], 8, 1.0).is_some());
+        assert!(a.complete_lane(2, 1, vec![9], 8, 2.0).is_some());
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate lane")]
+    fn duplicate_lane_panics() {
+        let mut a = ResponseAssembler::new();
+        a.register(1, 2, 0.0);
+        a.complete_lane(1, 0, vec![1], 4, 1.0);
+        a.complete_lane(1, 0, vec![1], 4, 1.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! CTMC substrate: rate matrices, analytic marginals, and exact simulation.
+//!
+//! Discrete diffusion models are continuous-time Markov chains (Sec. 2.1 of
+//! the paper): dp_t/dt = Q_t p_t with a rate matrix Q_t.  This module holds
+//! the machinery the paper's experiments rest on — the Sec. 6.1 toy model
+//! with its closed-form marginals and scores ([`toy`]), and the exact
+//! simulation baselines of Sec. 3.1 ([`uniformization`]).
+
+pub mod toy;
+pub mod uniformization;
+
+pub use toy::ToyModel;

@@ -1,0 +1,248 @@
+//! The Sec. 6.1 toy model: S-state uniform CTMC with analytic score.
+//!
+//! State space X = {0..S-1}, rate matrix Q = E/S - I (off-diagonal 1/S,
+//! exit rate (S-1)/S), target p_0 drawn uniformly from the simplex.  The
+//! marginal has the closed form
+//!
+//! ```text
+//!     p_t = e^{tQ} p_0 = (1 - e^{-t})/S + e^{-t} p_0,
+//! ```
+//!
+//! which converges to uniform at rate e^{-t} (the paper runs T = 12 so the
+//! truncation error is ~1e-12).  Reverse intensities are indexed by JUMP
+//! SIZE nu (y = (x + nu) mod S), the convention that lets the high-order
+//! combinations pair intensities evaluated at different states exactly as
+//! Eqs. 13 / 16 require — see python/compile/model.py for the mirrored
+//! JAX implementation (same p_0 via artifacts/toy_model.json).
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+#[derive(Clone, Debug)]
+pub struct ToyModel {
+    pub p0: Vec<f64>,
+    pub horizon: f64,
+}
+
+impl ToyModel {
+    pub fn new(p0: Vec<f64>, horizon: f64) -> Self {
+        let tot: f64 = p0.iter().sum();
+        assert!((tot - 1.0).abs() < 1e-6, "p0 must be a distribution");
+        assert!(p0.iter().all(|&p| p > 0.0), "p0 must be strictly positive");
+        Self { p0, horizon }
+    }
+
+    /// The paper's configuration: 15 states, p0 ~ Dirichlet(1) with a fixed
+    /// seed.  When artifacts are built, prefer [`ToyModel::from_artifact`]
+    /// so rust and JAX share the exact same p0.
+    pub fn paper_default<R: Rng>(rng: &mut R) -> Self {
+        let n = 15;
+        let mut p0: Vec<f64> = (0..n).map(|_| -rng.gen_f64().ln()).collect();
+        let tot: f64 = p0.iter().sum();
+        for p in p0.iter_mut() {
+            *p /= tot;
+        }
+        Self::new(p0, 12.0)
+    }
+
+    /// Load the p0 exported by `python/compile/aot.py` (toy_model.json).
+    pub fn from_artifact(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text)?;
+        let p0 = j.get("p0")?.as_f64_vec()?;
+        let horizon = j.get("horizon")?.as_f64()?;
+        Ok(Self::new(p0, horizon))
+    }
+
+    pub fn n_states(&self) -> usize {
+        self.p0.len()
+    }
+
+    /// Forward marginal p_t(x).
+    #[inline]
+    pub fn marginal(&self, x: usize, t: f64) -> f64 {
+        let s = self.n_states() as f64;
+        let decay = (-t).exp();
+        (1.0 - decay) / s + decay * self.p0[x]
+    }
+
+    /// Full marginal vector p_t.
+    pub fn marginal_vec(&self, t: f64) -> Vec<f64> {
+        (0..self.n_states()).map(|x| self.marginal(x, t)).collect()
+    }
+
+    /// Score s_t(x, y) = p_t(y) / p_t(x).
+    #[inline]
+    pub fn score(&self, x: usize, y: usize, t: f64) -> f64 {
+        self.marginal(y, t) / self.marginal(x, t)
+    }
+
+    /// Reverse intensities indexed by jump size nu in 0..S (entry 0 is 0):
+    /// mu(nu, x) = (1/S) p_t((x + nu) mod S) / p_t(x).
+    pub fn reverse_intensities(&self, x: usize, t: f64, out: &mut [f64]) {
+        let s = self.n_states();
+        debug_assert_eq!(out.len(), s);
+        let px = self.marginal(x, t);
+        out[0] = 0.0;
+        for nu in 1..s {
+            out[nu] = self.marginal((x + nu) % s, t) / px / s as f64;
+        }
+    }
+
+    /// Total reverse intensity at (x, t): (1 - p_t(x)) / (S p_t(x)).
+    pub fn total_intensity(&self, x: usize, t: f64) -> f64 {
+        let px = self.marginal(x, t);
+        (1.0 - px) / (self.n_states() as f64 * px)
+    }
+
+    /// Upper bound on the total reverse intensity over states for a given
+    /// forward time (used by the uniformization dominating rate).
+    pub fn total_intensity_bound(&self, t: f64) -> f64 {
+        (0..self.n_states())
+            .map(|x| self.total_intensity(x, t))
+            .fold(0.0, f64::max)
+    }
+
+    /// Draw an exact sample from p_0 (for ground-truth comparisons).
+    pub fn sample_p0<R: Rng>(&self, rng: &mut R) -> usize {
+        crate::util::dist::categorical_f64(rng, &self.p0)
+    }
+
+    /// Draw from the uniform stationary law (the backward initialisation).
+    pub fn sample_stationary<R: Rng>(&self, rng: &mut R) -> usize {
+        rng.gen_usize(self.n_states())
+    }
+
+    /// KL(p0 || q) for an empirical distribution q (Fig. 2's metric).
+    pub fn kl_from_p0(&self, q: &[f64]) -> f64 {
+        assert_eq!(q.len(), self.n_states());
+        self.p0
+            .iter()
+            .zip(q)
+            .map(|(&p, &qi)| {
+                if p == 0.0 {
+                    0.0
+                } else {
+                    p * (p / qi.max(1e-300)).ln()
+                }
+            })
+            .sum()
+    }
+
+    /// KL(p_T || uniform): the truncation error of stopping at horizon T.
+    pub fn truncation_error(&self) -> f64 {
+        let t = self.horizon;
+        let s = self.n_states() as f64;
+        (0..self.n_states())
+            .map(|x| {
+                let p = self.marginal(x, t);
+                p * (p * s).ln()
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn model() -> ToyModel {
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        ToyModel::paper_default(&mut rng)
+    }
+
+    #[test]
+    fn marginal_is_distribution_at_all_times() {
+        let m = model();
+        for &t in &[0.0, 0.1, 1.0, 5.0, 12.0] {
+            let tot: f64 = m.marginal_vec(t).iter().sum();
+            assert!((tot - 1.0).abs() < 1e-12, "t={t} tot={tot}");
+        }
+    }
+
+    #[test]
+    fn marginal_limits() {
+        let m = model();
+        for x in 0..m.n_states() {
+            assert!((m.marginal(x, 0.0) - m.p0[x]).abs() < 1e-12);
+            assert!((m.marginal(x, 40.0) - 1.0 / 15.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn kolmogorov_forward_finite_difference() {
+        // dp/dt = Q p with Q = E/S - I: dp_t(x)/dt = 1/S - p_t(x).
+        let m = model();
+        let (t, h) = (0.7, 1e-7);
+        for x in 0..m.n_states() {
+            let lhs = (m.marginal(x, t + h) - m.marginal(x, t)) / h;
+            let rhs = 1.0 / 15.0 - m.marginal(x, t);
+            assert!((lhs - rhs).abs() < 1e-5, "x={x} lhs={lhs} rhs={rhs}");
+        }
+    }
+
+    #[test]
+    fn reverse_intensities_sum_matches_total() {
+        let m = model();
+        let mut mu = vec![0.0; 15];
+        for &t in &[0.05, 0.5, 3.0] {
+            for x in 0..15 {
+                m.reverse_intensities(x, t, &mut mu);
+                let tot: f64 = mu.iter().sum();
+                assert!(
+                    (tot - m.total_intensity(x, t)).abs() < 1e-12,
+                    "x={x} t={t}"
+                );
+                assert_eq!(mu[0], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn intensity_bound_dominates() {
+        let m = model();
+        for &t in &[0.01, 0.3, 2.0] {
+            let b = m.total_intensity_bound(t);
+            for x in 0..15 {
+                assert!(m.total_intensity(x, t) <= b + 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn truncation_error_tiny_at_horizon() {
+        let m = model();
+        assert!(m.truncation_error() < 1e-9, "{}", m.truncation_error());
+        assert!(m.truncation_error() >= 0.0);
+    }
+
+    #[test]
+    fn kl_zero_iff_equal() {
+        let m = model();
+        assert!(m.kl_from_p0(&m.p0.clone()).abs() < 1e-12);
+        let mut q = vec![1.0 / 15.0; 15];
+        q[0] += 0.0;
+        assert!(m.kl_from_p0(&q) > 0.0);
+    }
+
+    #[test]
+    fn sample_p0_frequencies() {
+        let m = model();
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let n = 200_000;
+        let mut counts = vec![0usize; 15];
+        for _ in 0..n {
+            counts[m.sample_p0(&mut rng)] += 1;
+        }
+        for x in 0..15 {
+            let got = counts[x] as f64 / n as f64;
+            assert!(
+                (got - m.p0[x]).abs() < 4.0 * (m.p0[x] / n as f64).sqrt() + 1e-3,
+                "x={x} got={got} want={}",
+                m.p0[x]
+            );
+        }
+    }
+}

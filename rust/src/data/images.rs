@@ -1,0 +1,183 @@
+//! Synthetic "tokenized images": H x W grids of VQ-style tokens generated
+//! row-major by the Markov data law (a simple MRF whose exact conditionals
+//! the oracle already knows).  Substitutes MaskGIT's VQ-GAN ImageNet tokens
+//! (DESIGN.md): the masked-diffusion sampler treats a grid exactly like a
+//! sequence of length H*W, and FID is computed over the feature map below.
+
+use crate::score::markov::MarkovChain;
+use crate::score::Tok;
+
+#[derive(Clone, Copy, Debug)]
+pub struct GridSpec {
+    pub h: usize,
+    pub w: usize,
+    pub vocab: usize,
+}
+
+impl GridSpec {
+    pub fn seq_len(&self) -> usize {
+        self.h * self.w
+    }
+}
+
+/// Feature map for FID: unigram histogram (V) + horizontal-neighbour
+/// co-occurrence histogram (V^2) + vertical-neighbour co-occurrence (V^2),
+/// all normalised.  These are sufficient statistics for the row-major
+/// Markov law, so any sampler-induced distribution error moves them.
+pub fn features(spec: &GridSpec, grid: &[Tok]) -> Vec<f64> {
+    let (h, w, v) = (spec.h, spec.w, spec.vocab);
+    assert_eq!(grid.len(), h * w);
+    let mut f = vec![0.0; v + 2 * v * v];
+    let uni_n = (h * w) as f64;
+    for &t in grid {
+        f[t as usize] += 1.0 / uni_n;
+    }
+    let hor_n = (h * (w - 1)) as f64;
+    for r in 0..h {
+        for c in 0..w - 1 {
+            let a = grid[r * w + c] as usize;
+            let b = grid[r * w + c + 1] as usize;
+            f[v + a * v + b] += 1.0 / hor_n;
+        }
+    }
+    let ver_n = ((h - 1) * w) as f64;
+    for r in 0..h - 1 {
+        for c in 0..w {
+            let a = grid[r * w + c] as usize;
+            let b = grid[(r + 1) * w + c] as usize;
+            f[v + v * v + a * v + b] += 1.0 / ver_n;
+        }
+    }
+    f
+}
+
+/// Project full features to a lower dimension with a fixed seeded random
+/// sign matrix (keeps the Jacobi eigendecompositions cheap at vocab 16+).
+pub fn project_features(f: &[f64], out_dim: usize, seed: u64) -> Vec<f64> {
+    use crate::util::rng::{Rng, Xoshiro256};
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let d = f.len();
+    let mut out = vec![0.0; out_dim];
+    // Column-major sign projection, one pass; scale by 1/sqrt(out_dim).
+    let scale = 1.0 / (out_dim as f64).sqrt();
+    for fi in f.iter().copied() {
+        if fi == 0.0 {
+            for _ in 0..out_dim {
+                rng.gen_u64();
+            }
+            continue;
+        }
+        for o in out.iter_mut() {
+            let sign = if rng.gen_u64() & 1 == 0 { 1.0 } else { -1.0 };
+            *o += sign * fi * scale;
+        }
+    }
+    debug_assert_eq!(d, f.len());
+    out
+}
+
+/// Reference feature set from the true data law.
+pub fn reference_features(
+    chain: &MarkovChain,
+    spec: &GridSpec,
+    n: usize,
+    seed: u64,
+) -> Vec<Vec<f64>> {
+    use crate::util::rng::Xoshiro256;
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    (0..n)
+        .map(|_| {
+            let grid = chain.sample(&mut rng, spec.seq_len());
+            features(spec, &grid)
+        })
+        .collect()
+}
+
+/// Render a grid as ASCII art (Fig. 7-style dumps).
+pub fn render_ascii(spec: &GridSpec, grid: &[Tok]) -> String {
+    const SHADES: &[u8] = b" .:-=+*#%@&$OXoxKKWWMM88BBQQRRNNHHUUAAVVYYTTLLJJCCZZSSEEFFPPGGDD";
+    let mut out = String::with_capacity((spec.w + 1) * spec.h);
+    for r in 0..spec.h {
+        for c in 0..spec.w {
+            let t = grid[r * spec.w + c] as usize;
+            out.push(SHADES[t.min(SHADES.len() - 1)] as char);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn setup() -> (MarkovChain, GridSpec) {
+        let mut rng = Xoshiro256::seed_from_u64(13);
+        let chain = MarkovChain::generate(&mut rng, 8, 0.5);
+        (chain, GridSpec { h: 8, w: 8, vocab: 8 })
+    }
+
+    #[test]
+    fn features_normalised_blocks() {
+        let (chain, spec) = setup();
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let grid = chain.sample(&mut rng, spec.seq_len());
+        let f = features(&spec, &grid);
+        let v = spec.vocab;
+        assert_eq!(f.len(), v + 2 * v * v);
+        let uni: f64 = f[..v].iter().sum();
+        let hor: f64 = f[v..v + v * v].iter().sum();
+        let ver: f64 = f[v + v * v..].iter().sum();
+        assert!((uni - 1.0).abs() < 1e-9);
+        assert!((hor - 1.0).abs() < 1e-9);
+        assert!((ver - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reference_fid_self_consistency() {
+        // Two disjoint reference sets should have tiny FID.
+        let (chain, spec) = setup();
+        let a = reference_features(&chain, &spec, 600, 1);
+        let b = reference_features(&chain, &spec, 600, 2);
+        // Project to keep the test fast.
+        let pa: Vec<Vec<f64>> = a.iter().map(|f| project_features(f, 24, 7)).collect();
+        let pb: Vec<Vec<f64>> = b.iter().map(|f| project_features(f, 24, 7)).collect();
+        let d = crate::eval::fid::fid(&pa, &pb);
+        let noise: Vec<Vec<f64>> = {
+            let mut rng = Xoshiro256::seed_from_u64(3);
+            (0..600)
+                .map(|_| {
+                    let grid: Vec<Tok> = (0..spec.seq_len())
+                        .map(|_| crate::util::rng::Rng::gen_usize(&mut rng, 8) as Tok)
+                        .collect();
+                    project_features(&features(&spec, &grid), 24, 7)
+                })
+                .collect()
+        };
+        let d_noise = crate::eval::fid::fid(&pa, &noise);
+        assert!(d < d_noise, "self={d} noise={d_noise}");
+    }
+
+    #[test]
+    fn projection_is_deterministic_and_linearish() {
+        let f = vec![0.5, 0.25, 0.25, 0.0];
+        let a = project_features(&f, 8, 1);
+        let b = project_features(&f, 8, 1);
+        assert_eq!(a, b);
+        let scaled = project_features(&f.iter().map(|x| x * 2.0).collect::<Vec<_>>(), 8, 1);
+        for i in 0..8 {
+            assert!((scaled[i] - 2.0 * a[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn ascii_render_shape() {
+        let (chain, spec) = setup();
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let grid = chain.sample(&mut rng, spec.seq_len());
+        let art = render_ascii(&spec, &grid);
+        assert_eq!(art.lines().count(), 8);
+        assert!(art.lines().all(|l| l.chars().count() == 8));
+    }
+}

@@ -1,0 +1,7 @@
+//! Synthetic data substrates (DESIGN.md substitutions for OpenWebText /
+//! ImageNet): Markov "language" corpora ([`corpus`]), token-grid "images"
+//! ([`images`]) and serving workload traces ([`workload`]).
+
+pub mod corpus;
+pub mod images;
+pub mod workload;

@@ -1,0 +1,113 @@
+//! Serving workload traces: Poisson request arrivals with a solver mix —
+//! input to the coordinator benchmarks and the batching-policy ablation.
+
+use crate::solvers::Solver;
+use crate::util::dist::exponential;
+use crate::util::rng::{Rng, Xoshiro256};
+
+#[derive(Clone, Debug)]
+pub struct TraceRequest {
+    /// Arrival time in seconds from trace start.
+    pub arrival: f64,
+    pub solver: Solver,
+    pub nfe: usize,
+    pub n_samples: usize,
+    pub seed: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub requests: Vec<TraceRequest>,
+}
+
+#[derive(Clone, Debug)]
+pub struct TraceSpec {
+    /// Mean arrival rate (requests/second).
+    pub rate: f64,
+    pub n_requests: usize,
+    /// (solver, weight) mix.
+    pub mix: Vec<(Solver, f64)>,
+    pub nfe_choices: Vec<usize>,
+    pub max_samples: usize,
+}
+
+impl Default for TraceSpec {
+    fn default() -> Self {
+        Self {
+            rate: 20.0,
+            n_requests: 100,
+            mix: vec![
+                (Solver::TauLeaping, 0.3),
+                (Solver::Trapezoidal { theta: 0.5 }, 0.5),
+                (Solver::Euler, 0.2),
+            ],
+            nfe_choices: vec![16, 32, 64],
+            max_samples: 8,
+        }
+    }
+}
+
+pub fn generate_trace(spec: &TraceSpec, seed: u64) -> Trace {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let weights: Vec<f64> = spec.mix.iter().map(|&(_, w)| w).collect();
+    let mut t = 0.0;
+    let mut requests = Vec::with_capacity(spec.n_requests);
+    for i in 0..spec.n_requests {
+        t += exponential(&mut rng, spec.rate);
+        let solver = spec.mix[crate::util::dist::categorical_f64(&mut rng, &weights)].0;
+        let nfe = spec.nfe_choices[rng.gen_usize(spec.nfe_choices.len())];
+        requests.push(TraceRequest {
+            arrival: t,
+            solver,
+            nfe,
+            n_samples: 1 + rng.gen_usize(spec.max_samples),
+            seed: seed.wrapping_add(i as u64),
+        });
+    }
+    Trace { requests }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_sorted_and_sized() {
+        let t = generate_trace(&TraceSpec::default(), 1);
+        assert_eq!(t.requests.len(), 100);
+        for w in t.requests.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+    }
+
+    #[test]
+    fn arrival_rate_approximate() {
+        let spec = TraceSpec { rate: 50.0, n_requests: 5000, ..Default::default() };
+        let t = generate_trace(&spec, 2);
+        let span = t.requests.last().unwrap().arrival;
+        let rate = 5000.0 / span;
+        assert!((rate - 50.0).abs() < 5.0, "rate={rate}");
+    }
+
+    #[test]
+    fn solver_mix_respected() {
+        let t = generate_trace(&TraceSpec::default(), 3);
+        let trap = t
+            .requests
+            .iter()
+            .filter(|r| matches!(r.solver, Solver::Trapezoidal { .. }))
+            .count();
+        assert!(trap > 30 && trap < 70, "trap count {trap}");
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = generate_trace(&TraceSpec::default(), 9);
+        let b = generate_trace(&TraceSpec::default(), 9);
+        assert_eq!(a.requests.len(), b.requests.len());
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.nfe, y.nfe);
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Empirical KL divergence with bootstrap confidence intervals — the Fig. 2
+//! metric, following App. D.2 exactly: generate samples, `bincount` them,
+//! compute KL(p0 || q_hat), and bootstrap the samples 1000 times for a 95%
+//! interval.
+
+use crate::util::rng::{Rng, Xoshiro256};
+use crate::util::stats::quantile_sorted;
+
+/// KL(p || q) for discrete distributions (natural log).  q entries are
+/// floored to avoid infinite divergence from empty empirical bins.
+pub fn kl_divergence(p: &[f64], q: &[f64]) -> f64 {
+    assert_eq!(p.len(), q.len());
+    p.iter()
+        .zip(q)
+        .map(|(&pi, &qi)| {
+            if pi <= 0.0 {
+                0.0
+            } else {
+                pi * (pi / qi.max(1e-12)).ln()
+            }
+        })
+        .sum()
+}
+
+/// Result of the Fig. 2 estimator on one configuration.
+#[derive(Clone, Debug)]
+pub struct KlEstimate {
+    pub kl: f64,
+    pub ci_lo: f64,
+    pub ci_hi: f64,
+}
+
+/// KL(p0 || empirical) with a bootstrap CI over categorical samples.
+///
+/// `counts[x]` are the sample counts per category. Resampling uses the
+/// multinomial bootstrap (equivalent to resampling the raw samples but
+/// O(categories) per replicate instead of O(n)).
+pub fn kl_with_bootstrap(
+    p0: &[f64],
+    counts: &[u64],
+    n_boot: usize,
+    level: f64,
+    seed: u64,
+) -> KlEstimate {
+    let n: u64 = counts.iter().sum();
+    assert!(n > 0);
+    let q: Vec<f64> = counts.iter().map(|&c| c as f64 / n as f64).collect();
+    let kl = kl_divergence(p0, &q);
+
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut vals = Vec::with_capacity(n_boot);
+    let mut resampled = vec![0u64; counts.len()];
+    for _ in 0..n_boot {
+        multinomial_resample(&mut rng, &q, n, &mut resampled);
+        let qb: Vec<f64> = resampled.iter().map(|&c| c as f64 / n as f64).collect();
+        vals.push(kl_divergence(p0, &qb));
+    }
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let alpha = (1.0 - level) / 2.0;
+    KlEstimate {
+        kl,
+        ci_lo: quantile_sorted(&vals, alpha),
+        ci_hi: quantile_sorted(&vals, 1.0 - alpha),
+    }
+}
+
+/// Draw Multinomial(n, q) by sequential binomial splitting (exact).
+fn multinomial_resample<R: Rng>(rng: &mut R, q: &[f64], n: u64, out: &mut [u64]) {
+    let mut remaining_n = n;
+    let mut remaining_p = 1.0;
+    for (i, &qi) in q.iter().enumerate() {
+        if remaining_n == 0 || remaining_p <= 0.0 {
+            out[i] = 0;
+            continue;
+        }
+        let p = (qi / remaining_p).clamp(0.0, 1.0);
+        let draw = if i + 1 == q.len() {
+            remaining_n
+        } else {
+            crate::util::dist::binomial(rng, remaining_n, p)
+        };
+        out[i] = draw;
+        remaining_n -= draw;
+        remaining_p -= qi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kl_properties() {
+        let p = [0.2, 0.3, 0.5];
+        assert!(kl_divergence(&p, &p).abs() < 1e-12);
+        let q = [0.4, 0.3, 0.3];
+        assert!(kl_divergence(&p, &q) > 0.0);
+    }
+
+    #[test]
+    fn kl_handles_empty_bins() {
+        let p = [0.5, 0.5, 0.0];
+        let q = [1.0, 0.0, 0.0];
+        let kl = kl_divergence(&p, &q);
+        assert!(kl.is_finite() && kl > 0.0);
+    }
+
+    #[test]
+    fn bootstrap_ci_brackets_point_estimate() {
+        let p0 = [0.1, 0.2, 0.3, 0.4];
+        let counts = [1100u64, 1900, 3100, 3900];
+        let e = kl_with_bootstrap(&p0, &counts, 500, 0.95, 7);
+        assert!(e.ci_lo <= e.kl + 1e-9, "{e:?}");
+        assert!(e.kl <= e.ci_hi + 1e-9, "{e:?}");
+        assert!(e.ci_hi - e.ci_lo < 0.05, "{e:?}");
+    }
+
+    #[test]
+    fn multinomial_resample_preserves_total() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let q = [0.25, 0.25, 0.25, 0.25];
+        let mut out = [0u64; 4];
+        for _ in 0..100 {
+            multinomial_resample(&mut rng, &q, 1000, &mut out);
+            assert_eq!(out.iter().sum::<u64>(), 1000);
+        }
+    }
+
+    #[test]
+    fn ci_shrinks_with_samples() {
+        let p0 = [0.3, 0.7];
+        let small = kl_with_bootstrap(&p0, &[30, 70], 400, 0.95, 2);
+        let large = kl_with_bootstrap(&p0, &[30_000, 70_000], 400, 0.95, 2);
+        assert!(
+            large.ci_hi - large.ci_lo < small.ci_hi - small.ci_lo,
+            "small={small:?} large={large:?}"
+        );
+    }
+}

@@ -1,0 +1,267 @@
+//! Dense symmetric linear algebra for the FID computation: matrix products,
+//! cyclic Jacobi eigendecomposition, and PSD matrix square roots.
+//! From scratch — no BLAS/LAPACK is available in this image.
+
+/// Row-major square matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub n: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(n: usize) -> Self {
+        Self { n, data: vec![0.0; n * n] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let n = rows.len();
+        let mut m = Self::zeros(n);
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(r.len(), n);
+            m.data[i * n..(i + 1) * n].copy_from_slice(r);
+        }
+        m
+    }
+
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.n, other.n);
+        let n = self.n;
+        let mut out = Mat::zeros(n);
+        for i in 0..n {
+            for k in 0..n {
+                let a = self.data[i * n + k];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[k * n..(k + 1) * n];
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let n = self.n;
+        let mut out = Mat::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    pub fn trace(&self) -> f64 {
+        (0..self.n).map(|i| self[(i, i)]).sum()
+    }
+
+    pub fn symmetrize(&mut self) {
+        let n = self.n;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let v = 0.5 * (self[(i, j)] + self[(j, i)]);
+                self[(i, j)] = v;
+                self[(j, i)] = v;
+            }
+        }
+    }
+
+    pub fn max_offdiag_abs(&self) -> f64 {
+        let mut m = 0.0f64;
+        for i in 0..self.n {
+            for j in 0..self.n {
+                if i != j {
+                    m = m.max(self[(i, j)].abs());
+                }
+            }
+        }
+        m
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.n + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.n + j]
+    }
+}
+
+/// Cyclic Jacobi eigendecomposition of a symmetric matrix.
+/// Returns (eigenvalues, eigenvectors-as-columns) with A = V diag(w) V^T.
+pub fn jacobi_eigen(a: &Mat, max_sweeps: usize, tol: f64) -> (Vec<f64>, Mat) {
+    let n = a.n;
+    let mut a = a.clone();
+    a.symmetrize();
+    let mut v = Mat::eye(n);
+    for _ in 0..max_sweeps {
+        if a.max_offdiag_abs() < tol {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = a[(p, q)];
+                if apq.abs() < tol * 1e-3 {
+                    continue;
+                }
+                let app = a[(p, p)];
+                let aqq = a[(q, q)];
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate rows/cols p, q of A.
+                for k in 0..n {
+                    let akp = a[(k, p)];
+                    let akq = a[(k, q)];
+                    a[(k, p)] = c * akp - s * akq;
+                    a[(k, q)] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = a[(p, k)];
+                    let aqk = a[(q, k)];
+                    a[(p, k)] = c * apk - s * aqk;
+                    a[(q, k)] = s * apk + c * aqk;
+                }
+                // Accumulate rotations.
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let w = (0..n).map(|i| a[(i, i)]).collect();
+    (w, v)
+}
+
+/// Symmetric PSD square root via eigendecomposition (negative eigenvalues
+/// from numerical noise are clamped to zero).
+pub fn sqrt_psd(a: &Mat) -> Mat {
+    let (w, v) = jacobi_eigen(a, 50, 1e-11);
+    let n = a.n;
+    let mut out = Mat::zeros(n);
+    for k in 0..n {
+        let s = w[k].max(0.0).sqrt();
+        if s == 0.0 {
+            continue;
+        }
+        for i in 0..n {
+            let vik = v[(i, k)] * s;
+            if vik == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                out[(i, j)] += vik * v[(j, k)];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Rng, Xoshiro256};
+
+    fn random_psd(n: usize, seed: u64) -> Mat {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut b = Mat::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                b[(i, j)] = rng.gen_f64() - 0.5;
+            }
+        }
+        // A = B B^T + small ridge: symmetric PSD.
+        let mut a = b.matmul(&b.transpose());
+        for i in 0..n {
+            a[(i, i)] += 0.01;
+        }
+        a
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = random_psd(6, 1);
+        let i6 = Mat::eye(6);
+        assert_eq!(a.matmul(&i6).data, a.data);
+    }
+
+    #[test]
+    fn jacobi_reconstructs_matrix() {
+        let a = random_psd(8, 2);
+        let (w, v) = jacobi_eigen(&a, 50, 1e-12);
+        // Reconstruct V diag(w) V^T.
+        let mut d = Mat::zeros(8);
+        for i in 0..8 {
+            d[(i, i)] = w[i];
+        }
+        let rec = v.matmul(&d).matmul(&v.transpose());
+        for i in 0..64 {
+            assert!(
+                (rec.data[i] - a.data[i]).abs() < 1e-8,
+                "entry {i}: {} vs {}",
+                rec.data[i],
+                a.data[i]
+            );
+        }
+    }
+
+    #[test]
+    fn jacobi_eigenvalues_of_diag() {
+        let mut a = Mat::zeros(3);
+        a[(0, 0)] = 3.0;
+        a[(1, 1)] = 1.0;
+        a[(2, 2)] = 2.0;
+        let (mut w, _) = jacobi_eigen(&a, 10, 1e-14);
+        w.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert!((w[0] - 1.0).abs() < 1e-12);
+        assert!((w[1] - 2.0).abs() < 1e-12);
+        assert!((w[2] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sqrt_psd_squares_back() {
+        let a = random_psd(10, 3);
+        let r = sqrt_psd(&a);
+        let sq = r.matmul(&r);
+        for i in 0..100 {
+            assert!(
+                (sq.data[i] - a.data[i]).abs() < 1e-7,
+                "entry {i}: {} vs {}",
+                sq.data[i],
+                a.data[i]
+            );
+        }
+    }
+
+    #[test]
+    fn trace_and_transpose() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(a.trace(), 5.0);
+        let t = a.transpose();
+        assert_eq!(t[(0, 1)], 3.0);
+        assert_eq!(t[(1, 0)], 2.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Evaluation metrics for every experiment in the paper:
+//! KL divergence with bootstrap CIs (Fig. 2), generative perplexity
+//! (Tabs. 1/2, Fig. 1), Fréchet distance / FID (Figs. 3/4/6) and the
+//! dense linear algebra it needs ([`linalg`]).
+
+pub mod kl;
+pub mod perplexity;
+pub mod fid;
+pub mod linalg;

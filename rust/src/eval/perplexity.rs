@@ -1,0 +1,88 @@
+//! Generative perplexity under the exact synthetic data law.
+//!
+//! The paper scores text samples with a GPT-2 judge; our substitution
+//! (DESIGN.md) evaluates the *true* log-likelihood of each generated
+//! sequence under the Markov chain the oracle score was derived from —
+//! the same monotone functional of sample quality, exact instead of judged.
+
+use crate::score::markov::MarkovChain;
+use crate::score::Tok;
+
+/// Per-token perplexity of one sequence: exp(-log p(seq) / len).
+pub fn sequence_perplexity(chain: &MarkovChain, seq: &[Tok]) -> f64 {
+    assert!(!seq.is_empty());
+    (-chain.log_prob(seq) / seq.len() as f64).exp()
+}
+
+/// Mean per-token perplexity over a batch (the Tab. 1/2 statistic).
+pub fn batch_perplexity(chain: &MarkovChain, seqs: &[Vec<Tok>]) -> f64 {
+    assert!(!seqs.is_empty());
+    let tot: f64 = seqs.iter().map(|s| sequence_perplexity(chain, s)).sum();
+    tot / seqs.len() as f64
+}
+
+/// Perplexity of sequences drawn from the chain itself — the floor any
+/// sampler is compared against (an ideal sampler matches it in expectation).
+pub fn reference_perplexity<R: crate::util::rng::Rng>(
+    chain: &MarkovChain,
+    seq_len: usize,
+    n: usize,
+    rng: &mut R,
+) -> f64 {
+    let seqs: Vec<Vec<Tok>> = (0..n).map(|_| chain.sample(rng, seq_len)).collect();
+    batch_perplexity(chain, &seqs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Rng, Xoshiro256};
+
+    fn chain() -> MarkovChain {
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        MarkovChain::generate(&mut rng, 8, 0.4)
+    }
+
+    #[test]
+    fn perplexity_bounded_by_vocab() {
+        let c = chain();
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        for _ in 0..50 {
+            let seq = c.sample(&mut rng, 32);
+            let p = sequence_perplexity(&c, &seq);
+            assert!(p >= 1.0 && p.is_finite(), "ppl={p}");
+        }
+    }
+
+    #[test]
+    fn true_samples_beat_uniform_noise() {
+        let c = chain();
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let real = reference_perplexity(&c, 64, 200, &mut rng);
+        let noise: Vec<Vec<Tok>> = (0..200)
+            .map(|_| (0..64).map(|_| rng.gen_usize(8) as Tok).collect())
+            .collect();
+        let noisy = batch_perplexity(&c, &noise);
+        assert!(real < noisy, "real={real} noisy={noisy}");
+    }
+
+    #[test]
+    fn deterministic_sequence_matches_manual() {
+        let c = chain();
+        let seq = vec![0 as Tok, 1, 2];
+        let lp = c.pi[0].ln() + c.at(0, 1).ln() + c.at(1, 2).ln();
+        let want = (-lp / 3.0).exp();
+        assert!((sequence_perplexity(&c, &seq) - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch_is_mean_of_sequences() {
+        let c = chain();
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let seqs: Vec<Vec<Tok>> = (0..10).map(|_| c.sample(&mut rng, 16)).collect();
+        let batch = batch_perplexity(&c, &seqs);
+        let manual: f64 =
+            seqs.iter().map(|s| sequence_perplexity(&c, s)).sum::<f64>() / 10.0;
+        assert!((batch - manual).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,222 @@
+//! Ablations for the design choices DESIGN.md calls out:
+//!  1. positive-part clamp activity of Alg. 2/4 vs θ (Rmk. C.2 says the
+//!     clamp is an O(Δ³) perturbation — its activation rate should be small
+//!     and shrink with the step size);
+//!  2. time-grid placement: uniform vs log-spaced grids at equal NFE;
+//!  3. batcher policy: greedy vs timeout occupancy/latency on a trace.
+
+use std::time::Instant;
+
+use crate::coordinator::{BatchPolicy, Coordinator, GenerateRequest};
+use crate::data::workload::{generate_trace, TraceSpec};
+use crate::eval::perplexity::batch_perplexity;
+use crate::exp::{print_table, write_result, Scale};
+use crate::score::markov::{MarkovChain, MarkovOracle};
+use crate::score::ScoreSource;
+use crate::solvers::{grid, masked, Solver};
+use crate::util::json::Json;
+use crate::util::rng::{Rng, Xoshiro256};
+
+/// Ablation 1: how often does (α1 μ* − α2 μ) go negative?
+pub fn clamp_activity(scale: Scale) -> Json {
+    let mut rng = Xoshiro256::seed_from_u64(3);
+    let chain = MarkovChain::generate(&mut rng, 16, 0.4);
+    let oracle = MarkovOracle::new(chain, 64);
+    let n_steps_list = [8usize, 16, 32, 64];
+    let thetas = [0.2, 0.3333, 0.5, 0.7];
+    let samples = scale.pick(20, 100);
+    let mut rows = Vec::new();
+    let mut records = Vec::new();
+    for &theta in &thetas {
+        for &steps in &n_steps_list {
+            let g = grid::masked_uniform(steps, 1e-3);
+            let a1 = 1.0 / (2.0 * theta * (1.0 - theta));
+            let a2 = a1 - 1.0;
+            let mut neg = 0usize;
+            let mut tot = 0usize;
+            for s in 0..samples {
+                let mut rng = Xoshiro256::seed_from_u64(1000 + s as u64);
+                let mut toks = crate::score::all_masked(64, oracle.mask_id());
+                for w in g.windows(2) {
+                    let (t, tn) = (w[0], w[1]);
+                    let dt = t - tn;
+                    let rho = t - theta * dt;
+                    let probs_t = oracle.probs(&toks, t);
+                    // emulate stage 1
+                    let p1 = 1.0 - (-(theta * dt) / t).exp();
+                    let mut y = toks.clone();
+                    for i in 0..64 {
+                        if y[i] == oracle.mask_id() && rng.gen_f64() < p1 {
+                            let row = &probs_t[i * 16..(i + 1) * 16];
+                            if let Some(c) =
+                                crate::util::dist::categorical(&mut rng, row)
+                            {
+                                y[i] = c as u32;
+                            }
+                        }
+                    }
+                    let probs_star = oracle.probs(&y, rho);
+                    for i in 0..64 {
+                        if y[i] != oracle.mask_id() {
+                            continue;
+                        }
+                        for c in 0..16 {
+                            let comb = a1 * probs_star[i * 16 + c] / rho
+                                - a2 * probs_t[i * 16 + c] / t;
+                            tot += 1;
+                            if comb < 0.0 {
+                                neg += 1;
+                            }
+                        }
+                    }
+                    toks = y;
+                }
+            }
+            let frac = neg as f64 / tot.max(1) as f64;
+            rows.push(vec![
+                format!("{theta:.2}"),
+                steps.to_string(),
+                format!("{:.4}%", frac * 100.0),
+            ]);
+            records.push(Json::obj(vec![
+                ("theta", Json::Num(theta)),
+                ("steps", Json::from(steps)),
+                ("negative_fraction", Json::Num(frac)),
+            ]));
+        }
+    }
+    print_table(
+        "Ablation 1: positive-part clamp activation (Alg. 2)",
+        &["theta", "steps", "negative intensity fraction"],
+        &rows,
+    );
+    let out = Json::obj(vec![
+        ("experiment", Json::from("ablation_clamp")),
+        ("points", Json::Arr(records)),
+    ]);
+    let _ = write_result("ablation_clamp", &out);
+    out
+}
+
+/// Ablation 2: uniform vs log grid at equal NFE (text perplexity).
+pub fn grid_placement(scale: Scale) -> Json {
+    let mut rng = Xoshiro256::seed_from_u64(9);
+    let chain = MarkovChain::generate(&mut rng, 24, 0.3);
+    let oracle = MarkovOracle::new(chain.clone(), 128);
+    let n = scale.pick(128, 512);
+    let solver = Solver::Trapezoidal { theta: 0.5 };
+    let mut rows = Vec::new();
+    let mut records = Vec::new();
+    for &nfe in &[32usize, 64, 128] {
+        let steps = solver.steps_for_nfe(nfe);
+        for (gname, g) in [
+            ("uniform", grid::masked_uniform(steps, 1e-3)),
+            ("log", grid::masked_log(steps, 1e-3)),
+        ] {
+            let seqs: Vec<Vec<u32>> = (0..n)
+                .map(|i| {
+                    let mut rng = Xoshiro256::seed_from_u64(70 + i as u64);
+                    masked::generate(&oracle, solver, &g, &mut rng).0
+                })
+                .collect();
+            let ppl = batch_perplexity(&chain, &seqs);
+            rows.push(vec![nfe.to_string(), gname.into(), format!("{ppl:.3}")]);
+            records.push(Json::obj(vec![
+                ("nfe", Json::from(nfe)),
+                ("grid", Json::from(gname)),
+                ("perplexity", Json::Num(ppl)),
+            ]));
+        }
+    }
+    print_table(
+        "Ablation 2: grid placement (trapezoidal, theta=1/2)",
+        &["NFE", "grid", "perplexity"],
+        &rows,
+    );
+    let out = Json::obj(vec![
+        ("experiment", Json::from("ablation_grid")),
+        ("points", Json::Arr(records)),
+    ]);
+    let _ = write_result("ablation_grid", &out);
+    out
+}
+
+/// Ablation 3: batching policy on a workload trace (needs artifacts).
+pub fn batch_policy(scale: Scale) -> Option<Json> {
+    if !crate::runtime::artifacts_available("artifacts") {
+        println!("(ablation 3 skipped: run `make artifacts` first)");
+        return None;
+    }
+    let spec = TraceSpec {
+        n_requests: scale.pick(24, 100),
+        rate: 200.0,
+        ..Default::default()
+    };
+    let trace = generate_trace(&spec, 3);
+    let mut rows = Vec::new();
+    let mut records = Vec::new();
+    for (pname, policy) in [
+        ("greedy", BatchPolicy::Greedy),
+        (
+            "timeout-10ms",
+            BatchPolicy::Timeout(std::time::Duration::from_millis(10)),
+        ),
+    ] {
+        let runtime = crate::runtime::RuntimeHandle::spawn("artifacts").unwrap();
+        let registry = crate::runtime::Registry::load("artifacts").unwrap();
+        let coord = Coordinator::start(runtime, registry, policy);
+        let started = Instant::now();
+        let rxs: Vec<_> = trace
+            .requests
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                coord.submit(GenerateRequest {
+                    id: i as u64,
+                    family: "markov".into(),
+                    solver: r.solver,
+                    nfe: r.nfe,
+                    n_samples: r.n_samples,
+                    seed: r.seed,
+                })
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let wall = started.elapsed().as_secs_f64();
+        let m = coord.metrics();
+        rows.push(vec![
+            pname.to_string(),
+            format!("{:.2}", m.occupancy.mean()),
+            format!("{:.1}", m.latency_ms.mean()),
+            format!("{}", m.dispatches),
+            format!("{:.1}", m.throughput(wall)),
+        ]);
+        records.push(Json::obj(vec![
+            ("policy", Json::from(pname)),
+            ("occupancy", Json::Num(m.occupancy.mean())),
+            ("latency_ms", Json::Num(m.latency_ms.mean())),
+            ("dispatches", Json::from(m.dispatches as usize)),
+            ("throughput", Json::Num(m.throughput(wall))),
+        ]));
+        coord.shutdown();
+    }
+    print_table(
+        "Ablation 3: batching policy",
+        &["policy", "occupancy", "mean latency ms", "dispatches", "samples/s"],
+        &rows,
+    );
+    let out = Json::obj(vec![
+        ("experiment", Json::from("ablation_batching")),
+        ("points", Json::Arr(records)),
+    ]);
+    let _ = write_result("ablation_batching", &out);
+    Some(out)
+}
+
+pub fn run(scale: Scale) {
+    clamp_activity(scale);
+    grid_placement(scale);
+    batch_policy(scale);
+}

@@ -1,0 +1,134 @@
+//! Fig. 2 — toy model: empirical KL(p0 || q_hat) vs number of steps for the
+//! θ-trapezoidal and θ-RK-2 methods (θ = 1/2), with τ-leaping for context,
+//! bootstrap 95% CIs (App. D.2) and fitted log-log slopes.
+//!
+//! Expected shape (paper): both high-order methods converge super-linearly;
+//! the trapezoidal method has lower absolute error AND a steeper slope
+//! (≈ -2); RK-2 enters its asymptotic regime later.
+
+use crate::ctmc::ToyModel;
+use crate::eval::kl::kl_with_bootstrap;
+use crate::exp::{print_table, write_result, Scale};
+use crate::solvers::{grid, toy, Solver};
+use crate::util::json::Json;
+use crate::util::stats::loglog_slope;
+
+pub struct Fig2Config {
+    pub step_counts: Vec<usize>,
+    pub n_samples: usize,
+    pub n_boot: usize,
+    pub threads: usize,
+    pub seed: u64,
+}
+
+impl Fig2Config {
+    pub fn new(scale: Scale) -> Self {
+        Fig2Config {
+            step_counts: vec![4, 8, 16, 32, 64, 128],
+            // Paper: 1e6 samples, 1000 bootstrap resamples.
+            n_samples: scale.pick(200_000, 1_000_000),
+            n_boot: scale.pick(300, 1000),
+            threads: crate::util::threadpool::ThreadPool::default_size(),
+            seed: 2024,
+        }
+    }
+}
+
+pub fn run(model: &ToyModel, cfg: &Fig2Config) -> Json {
+    let solvers = [
+        ("theta-trapezoidal", Solver::Trapezoidal { theta: 0.5 }),
+        ("theta-rk2", Solver::Rk2 { theta: 0.5 }),
+        ("tau-leaping", Solver::TauLeaping),
+    ];
+    let mut rows = Vec::new();
+    let mut series = Vec::new();
+    for (name, solver) in solvers {
+        let mut kls = Vec::new();
+        for &steps in &cfg.step_counts {
+            let g = grid::toy_uniform(steps, model.horizon, 1e-3);
+            let q = toy::empirical_distribution(
+                model,
+                solver,
+                &g,
+                cfg.n_samples,
+                cfg.seed ^ steps as u64,
+                cfg.threads,
+            );
+            let counts: Vec<u64> = q
+                .iter()
+                .map(|&f| (f * cfg.n_samples as f64).round() as u64)
+                .collect();
+            let est = kl_with_bootstrap(&model.p0, &counts, cfg.n_boot, 0.95, cfg.seed);
+            rows.push(vec![
+                name.to_string(),
+                steps.to_string(),
+                format!("{:.3e}", est.kl),
+                format!("[{:.2e}, {:.2e}]", est.ci_lo, est.ci_hi),
+            ]);
+            kls.push(est);
+        }
+        let xs: Vec<f64> = cfg.step_counts.iter().map(|&s| s as f64).collect();
+        let ys: Vec<f64> = kls.iter().map(|e| e.kl.max(1e-12)).collect();
+        let (slope, r2) = loglog_slope(&xs, &ys);
+        rows.push(vec![
+            format!("{name} (fit)"),
+            "-".into(),
+            format!("slope={slope:.2}"),
+            format!("r2={r2:.3}"),
+        ]);
+        series.push(Json::obj(vec![
+            ("solver", Json::from(name)),
+            ("steps", Json::from(cfg.step_counts.clone())),
+            ("kl", Json::Arr(ys.iter().map(|&k| Json::Num(k)).collect())),
+            (
+                "ci",
+                Json::Arr(
+                    kls.iter()
+                        .map(|e| {
+                            Json::Arr(vec![Json::Num(e.ci_lo), Json::Num(e.ci_hi)])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("slope", Json::Num(slope)),
+            ("r2", Json::Num(r2)),
+        ]));
+    }
+    print_table(
+        "Fig. 2: toy-model KL vs steps (bootstrap 95% CI)",
+        &["solver", "steps", "KL(p0||q)", "95% CI"],
+        &rows,
+    );
+    let out = Json::obj(vec![
+        ("experiment", Json::from("fig2")),
+        ("n_samples", Json::from(cfg.n_samples)),
+        ("series", Json::Arr(series)),
+    ]);
+    let _ = write_result("fig2", &out);
+    out
+}
+
+/// The headline assertion used by integration tests: trap slope steeper
+/// than -1.5 and trap KL below rk2 KL at the largest step count.
+pub fn shape_holds(result: &Json) -> bool {
+    let series = result.get("series").and_then(|s| Ok(s.as_arr()?.to_vec()));
+    let Ok(series) = series else { return false };
+    let get = |name: &str| {
+        series.iter().find(|s| {
+            s.get("solver").and_then(|v| Ok(v.as_str()? == name)).unwrap_or(false)
+        })
+    };
+    let (Some(trap), Some(rk2)) = (get("theta-trapezoidal"), get("theta-rk2")) else {
+        return false;
+    };
+    let slope = trap.get("slope").and_then(|s| s.as_f64()).unwrap_or(0.0);
+    let trap_last = trap
+        .get("kl")
+        .and_then(|k| Ok(*k.as_f64_vec()?.last().unwrap()))
+        .unwrap_or(f64::MAX);
+    let rk2_last = rk2
+        .get("kl")
+        .and_then(|k| Ok(*k.as_f64_vec()?.last().unwrap()))
+        .unwrap_or(0.0);
+    slope < -1.5 && trap_last <= rk2_last * 1.5
+}

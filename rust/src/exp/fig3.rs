@@ -1,0 +1,154 @@
+//! Figs. 3 & 6 — image generation: FID vs NFE for the θ-trapezoidal method
+//! (θ ∈ {1/3, 1/2}), Euler, τ-leaping, θ-RK-2 (θ = 1/3) and parallel
+//! decoding, on token-grid "images" from the MRF data law.
+//!
+//! Expected shape (paper): trapezoidal (θ=1/3) best except at extremely low
+//! NFE where parallel decoding wins; parallel decoding saturates as NFE
+//! grows; θ=1/2 trapezoidal converges to the same quality at high NFE.
+
+use crate::data::images::{features, project_features, reference_features, GridSpec};
+use crate::eval::fid::fid;
+use crate::exp::{print_table, write_result, Scale};
+use crate::score::markov::{MarkovChain, MarkovOracle};
+use crate::solvers::{grid, masked, Solver};
+use crate::util::json::Json;
+use crate::util::rng::Xoshiro256;
+use crate::util::threadpool::par_map_indexed;
+
+pub struct Fig3Config {
+    pub spec: GridSpec,
+    pub nfe_values: Vec<usize>,
+    pub n_samples: usize,
+    pub n_reference: usize,
+    pub proj_dim: usize,
+    pub seed: u64,
+    pub threads: usize,
+}
+
+impl Fig3Config {
+    pub fn new(scale: Scale) -> Self {
+        Fig3Config {
+            // Paper: 256x256 images as 256 VQ tokens, 50k samples.
+            spec: GridSpec {
+                h: scale.pick(12, 16),
+                w: scale.pick(12, 16),
+                vocab: 16,
+            },
+            nfe_values: vec![4, 8, 16, 32, 64],
+            n_samples: scale.pick(600, 5000),
+            n_reference: scale.pick(1200, 10_000),
+            proj_dim: 96,
+            seed: 11,
+            threads: crate::util::threadpool::ThreadPool::default_size(),
+        }
+    }
+}
+
+pub fn run(cfg: &Fig3Config) -> Json {
+    let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
+    let chain = MarkovChain::generate(&mut rng, cfg.spec.vocab, 0.4);
+    let oracle = MarkovOracle::new(chain.clone(), cfg.spec.seq_len());
+
+    // Reference moments from the true law, projected once.
+    let ref_feats: Vec<Vec<f64>> =
+        reference_features(&chain, &cfg.spec, cfg.n_reference, cfg.seed ^ 1)
+            .iter()
+            .map(|f| project_features(f, cfg.proj_dim, 99))
+            .collect();
+
+    let solvers = [
+        ("euler", Solver::Euler),
+        ("tau-leaping", Solver::TauLeaping),
+        ("theta-rk2 (1/3)", Solver::Rk2 { theta: 1.0 / 3.0 }),
+        ("theta-trapezoidal (1/3)", Solver::Trapezoidal { theta: 1.0 / 3.0 }),
+        ("theta-trapezoidal (1/2)", Solver::Trapezoidal { theta: 0.5 }),
+        ("parallel-decoding", Solver::ParallelDecoding),
+    ];
+
+    let mut rows = Vec::new();
+    let mut series = Vec::new();
+    for (name, solver) in solvers {
+        let mut fids = Vec::new();
+        for &nfe in &cfg.nfe_values {
+            if solver.nfe_per_step() > nfe {
+                fids.push(f64::NAN);
+                continue;
+            }
+            let steps = solver.steps_for_nfe(nfe);
+            let g = grid::masked_uniform(steps, 1e-3);
+            let feats = par_map_indexed(cfg.n_samples, cfg.threads, |i| {
+                let mut rng = Xoshiro256::seed_from_u64(
+                    cfg.seed ^ nfe as u64 ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15),
+                );
+                let (toks, _) = masked::generate(&oracle, solver, &g, &mut rng);
+                project_features(&features(&cfg.spec, &toks), cfg.proj_dim, 99)
+            });
+            fids.push(fid(&feats, &ref_feats));
+        }
+        rows.push(
+            std::iter::once(name.to_string())
+                .chain(fids.iter().map(|f| {
+                    if f.is_nan() {
+                        "-".to_string()
+                    } else {
+                        format!("{f:.4}")
+                    }
+                }))
+                .collect(),
+        );
+        series.push(Json::obj(vec![
+            ("solver", Json::from(name)),
+            ("nfe", Json::from(cfg.nfe_values.clone())),
+            (
+                "fid",
+                Json::Arr(
+                    fids.iter()
+                        .map(|&f| if f.is_nan() { Json::Null } else { Json::Num(f) })
+                        .collect(),
+                ),
+            ),
+        ]));
+    }
+
+    let header: Vec<String> = std::iter::once("sampler".to_string())
+        .chain(cfg.nfe_values.iter().map(|n| format!("NFE={n}")))
+        .collect();
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    print_table("Figs. 3/6: FID vs NFE (lower is better)", &header_refs, &rows);
+    let out = Json::obj(vec![
+        ("experiment", Json::from("fig3")),
+        ("grid", Json::from(format!("{}x{}", cfg.spec.h, cfg.spec.w))),
+        ("vocab", Json::from(cfg.spec.vocab)),
+        ("n_samples", Json::from(cfg.n_samples)),
+        ("series", Json::Arr(series)),
+    ]);
+    let _ = write_result("fig3", &out);
+    out
+}
+
+/// Shape checks: trap(1/3) beats tau at the top NFE; parallel decoding's
+/// improvement saturates (last-step gain much smaller than its early gain).
+pub fn shape_holds(result: &Json) -> bool {
+    let series = |name: &str| -> Option<Vec<f64>> {
+        result
+            .get("series")
+            .ok()?
+            .as_arr()
+            .ok()?
+            .iter()
+            .find(|s| s.get("solver").map(|v| v.as_str().map(|x| x == name).unwrap_or(false)).unwrap_or(false))?
+            .get("fid")
+            .ok()?
+            .as_arr()
+            .ok()?
+            .iter()
+            .map(|v| v.as_f64().ok())
+            .collect()
+    };
+    let (Some(trap), Some(tau)) =
+        (series("theta-trapezoidal (1/3)"), series("tau-leaping"))
+    else {
+        return false;
+    };
+    *trap.last().unwrap() <= tau.last().unwrap() * 1.05
+}

@@ -1,0 +1,143 @@
+//! Fig. 4 — θ-sweep for the θ-trapezoidal method: image FID (upper) and
+//! text perplexity (lower) vs θ ∈ (0, 1) at fixed NFE.
+//!
+//! Expected shape (paper): a flat landscape around the optimum with
+//! competitive θ in [0.3, 0.5].
+
+use crate::data::images::{features, project_features, reference_features, GridSpec};
+use crate::eval::fid::fid;
+use crate::eval::perplexity::batch_perplexity;
+use crate::exp::{print_table, write_result, Scale};
+use crate::score::markov::{MarkovChain, MarkovOracle};
+use crate::solvers::{grid, masked, Solver};
+use crate::util::json::Json;
+use crate::util::rng::Xoshiro256;
+use crate::util::threadpool::par_map_indexed;
+
+pub struct Fig4Config {
+    pub thetas: Vec<f64>,
+    pub nfe_values: Vec<usize>,
+    pub text_vocab: usize,
+    pub text_len: usize,
+    pub spec: GridSpec,
+    pub n_samples: usize,
+    pub seed: u64,
+    pub threads: usize,
+}
+
+impl Fig4Config {
+    pub fn new(scale: Scale) -> Self {
+        Fig4Config {
+            thetas: vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9],
+            nfe_values: vec![32, 64],
+            text_vocab: scale.pick(24, 32),
+            text_len: scale.pick(128, 256),
+            spec: GridSpec { h: 12, w: 12, vocab: 16 },
+            n_samples: scale.pick(300, 2000),
+            seed: 13,
+            threads: crate::util::threadpool::ThreadPool::default_size(),
+        }
+    }
+}
+
+/// Generic θ sweep used by Fig. 4 (trapezoidal) and Fig. 5 (RK-2).
+pub fn sweep(
+    cfg: &Fig4Config,
+    make_solver: impl Fn(f64) -> Solver,
+    tag: &str,
+) -> Json {
+    let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
+    let text_chain = MarkovChain::generate(&mut rng, cfg.text_vocab, 0.3);
+    let text_oracle = MarkovOracle::new(text_chain.clone(), cfg.text_len);
+    let img_chain = MarkovChain::generate(&mut rng, cfg.spec.vocab, 0.4);
+    let img_oracle = MarkovOracle::new(img_chain.clone(), cfg.spec.seq_len());
+    let ref_feats: Vec<Vec<f64>> =
+        reference_features(&img_chain, &cfg.spec, cfg.n_samples * 2, cfg.seed ^ 1)
+            .iter()
+            .map(|f| project_features(f, 96, 99))
+            .collect();
+
+    let mut rows = Vec::new();
+    let mut series = Vec::new();
+    for &nfe in &cfg.nfe_values {
+        for &theta in &cfg.thetas {
+            let solver = make_solver(theta);
+            let steps = solver.steps_for_nfe(nfe);
+            let g = grid::masked_uniform(steps, 1e-3);
+
+            let texts = par_map_indexed(cfg.n_samples, cfg.threads, |i| {
+                let mut rng = Xoshiro256::seed_from_u64(
+                    cfg.seed ^ nfe as u64 ^ ((i as u64) << 20) ^ theta.to_bits(),
+                );
+                masked::generate(&text_oracle, solver, &g, &mut rng).0
+            });
+            let ppl = batch_perplexity(&text_chain, &texts);
+
+            let feats = par_map_indexed(cfg.n_samples, cfg.threads, |i| {
+                let mut rng = Xoshiro256::seed_from_u64(
+                    cfg.seed ^ 0x55 ^ nfe as u64 ^ ((i as u64) << 20) ^ theta.to_bits(),
+                );
+                let (toks, _) = masked::generate(&img_oracle, solver, &g, &mut rng);
+                project_features(&features(&cfg.spec, &toks), 96, 99)
+            });
+            let f = fid(&feats, &ref_feats);
+
+            rows.push(vec![
+                format!("{nfe}"),
+                format!("{theta:.1}"),
+                format!("{f:.4}"),
+                format!("{ppl:.3}"),
+            ]);
+            series.push(Json::obj(vec![
+                ("nfe", Json::from(nfe)),
+                ("theta", Json::Num(theta)),
+                ("fid", Json::Num(f)),
+                ("perplexity", Json::Num(ppl)),
+            ]));
+        }
+    }
+    print_table(
+        &format!("Fig. {tag}: theta sweep (upper: FID, lower: perplexity)"),
+        &["NFE", "theta", "FID", "perplexity"],
+        &rows,
+    );
+    let out = Json::obj(vec![
+        ("experiment", Json::from(tag)),
+        ("points", Json::Arr(series)),
+    ]);
+    let _ = write_result(tag, &out);
+    out
+}
+
+pub fn run(cfg: &Fig4Config) -> Json {
+    sweep(cfg, |theta| Solver::Trapezoidal { theta }, "fig4")
+}
+
+/// Flat-optimum check: the best θ lies in [0.2, 0.6] for the larger NFE and
+/// the landscape near it is flat (within 25% of the optimum for ±0.1).
+pub fn shape_holds(result: &Json) -> bool {
+    let Ok(points) = result.get("points").and_then(|p| Ok(p.as_arr()?.to_vec())) else {
+        return false;
+    };
+    let max_nfe = points
+        .iter()
+        .filter_map(|p| p.get("nfe").ok()?.as_f64().ok())
+        .fold(0.0f64, f64::max);
+    let pts: Vec<(f64, f64)> = points
+        .iter()
+        .filter(|p| p.get("nfe").map(|v| v.as_f64().map(|x| x == max_nfe).unwrap_or(false)).unwrap_or(false))
+        .filter_map(|p| {
+            Some((
+                p.get("theta").ok()?.as_f64().ok()?,
+                p.get("perplexity").ok()?.as_f64().ok()?,
+            ))
+        })
+        .collect();
+    let Some(&(best_theta, _)) = pts
+        .iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+    else {
+        return false;
+    };
+    (0.15..=0.65).contains(&best_theta)
+}

@@ -1,0 +1,40 @@
+//! Fig. 5 — θ-sweep for the practical θ-RK-2 method (Alg. 4).
+//!
+//! Expected shape (paper + Thm. 5.5): performance peaks in the
+//! extrapolation regime θ ∈ (0, 1/2]; quality degrades as θ grows past 1/2
+//! (interpolation regime, where the second-order guarantee fails).
+
+use crate::exp::fig4::{sweep, Fig4Config};
+use crate::exp::Scale;
+use crate::solvers::Solver;
+use crate::util::json::Json;
+
+pub fn run(scale: Scale) -> Json {
+    let cfg = Fig4Config::new(scale);
+    sweep(&cfg, |theta| Solver::Rk2 { theta }, "fig5")
+}
+
+/// Extrapolation-regime check: the best θ at the larger NFE is <= 0.6.
+pub fn shape_holds(result: &Json) -> bool {
+    let Ok(points) = result.get("points").and_then(|p| Ok(p.as_arr()?.to_vec())) else {
+        return false;
+    };
+    let max_nfe = points
+        .iter()
+        .filter_map(|p| p.get("nfe").ok()?.as_f64().ok())
+        .fold(0.0f64, f64::max);
+    let best = points
+        .iter()
+        .filter(|p| p.get("nfe").map(|v| v.as_f64().map(|x| x == max_nfe).unwrap_or(false)).unwrap_or(false))
+        .filter_map(|p| {
+            Some((
+                p.get("theta").ok()?.as_f64().ok()?,
+                p.get("fid").ok()?.as_f64().ok()?,
+            ))
+        })
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    match best {
+        Some((theta, _)) => theta <= 0.6,
+        None => false,
+    }
+}

@@ -1,0 +1,95 @@
+//! Experiment harnesses — one module per table/figure of the paper
+//! (DESIGN.md experiment index).  Each harness prints the paper's rows or
+//! series and writes a JSON record under `results/`.
+//!
+//! Absolute numbers are NOT expected to match the paper (the substrate is a
+//! synthetic oracle on CPU, DESIGN.md §Substitutions); the *shape* is the
+//! reproduction target: orderings, slopes, crossovers, saturation.
+
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig7;
+pub mod tab2;
+pub mod ablations;
+
+use crate::util::json::Json;
+
+/// Write a result record to results/<name>.json (creating the directory).
+pub fn write_result(name: &str, value: &Json) -> anyhow::Result<std::path::PathBuf> {
+    std::fs::create_dir_all("results")?;
+    let path = std::path::Path::new("results").join(format!("{name}.json"));
+    std::fs::write(&path, value.to_string())?;
+    Ok(path)
+}
+
+/// Render an aligned table to stdout.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!(
+        "{}",
+        fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    );
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+/// Common scale flags: `--full` runs paper-scale sizes; default is a
+/// minutes-scale configuration that preserves the qualitative shape.
+#[derive(Clone, Copy, Debug)]
+pub struct Scale {
+    pub full: bool,
+}
+
+impl Scale {
+    pub fn from_args(args: &crate::util::cli::Args) -> Scale {
+        Scale { full: args.flag("full") }
+    }
+
+    pub fn pick(&self, small: usize, full: usize) -> usize {
+        if self.full {
+            full
+        } else {
+            small
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_picks() {
+        let s = Scale { full: false };
+        assert_eq!(s.pick(10, 100), 10);
+        let s = Scale { full: true };
+        assert_eq!(s.pick(10, 100), 100);
+    }
+
+    #[test]
+    fn write_result_roundtrip() {
+        let j = Json::obj(vec![("x", Json::from(1.5))]);
+        let p = write_result("unit_test_tmp", &j).unwrap();
+        let back = Json::parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
+        assert_eq!(back, j);
+        let _ = std::fs::remove_file(p);
+    }
+}

@@ -1,0 +1,168 @@
+//! Tabs. 1 & 2 — text generation: generative perplexity vs NFE for Euler,
+//! Tweedie τ-leaping, τ-leaping, θ-RK-2 and θ-trapezoidal (θ = 1/2 as in
+//! App. D.3), on the Markov-oracle masked diffusion model.
+//!
+//! Expected shape (paper): trapezoidal best at every NFE; τ-leaping beats
+//! Euler/Tweedie; everything improves monotonically with NFE toward the
+//! reference perplexity of true data samples.
+
+use crate::eval::perplexity::{batch_perplexity, reference_perplexity};
+use crate::exp::{print_table, write_result, Scale};
+use crate::score::markov::{MarkovChain, MarkovOracle};
+use crate::solvers::{grid, masked, Solver};
+use crate::util::json::Json;
+use crate::util::rng::Xoshiro256;
+use crate::util::threadpool::par_map_indexed;
+
+pub struct Tab2Config {
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub nfe_values: Vec<usize>,
+    pub n_samples: usize,
+    pub theta: f64,
+    pub seed: u64,
+    pub threads: usize,
+}
+
+impl Tab2Config {
+    pub fn new(scale: Scale) -> Self {
+        Tab2Config {
+            // Paper: GPT-2 vocab 50k, L = 1024, 1024 samples, NFE to 1024.
+            vocab: scale.pick(24, 32),
+            seq_len: scale.pick(128, 256),
+            nfe_values: if scale.full {
+                vec![16, 32, 64, 128, 256, 512, 1024]
+            } else {
+                vec![16, 32, 64, 128, 256]
+            },
+            n_samples: scale.pick(192, 1024),
+            theta: 0.5,
+            seed: 7,
+            threads: crate::util::threadpool::ThreadPool::default_size(),
+        }
+    }
+}
+
+pub fn sample_batch(
+    oracle: &MarkovOracle,
+    solver: Solver,
+    nfe: usize,
+    n: usize,
+    seed: u64,
+    threads: usize,
+) -> (Vec<Vec<crate::score::Tok>>, f64) {
+    let steps = solver.steps_for_nfe(nfe);
+    let g = grid::masked_uniform(steps, 1e-3);
+    let mut nfe_used = 0.0;
+    let seqs = par_map_indexed(n, threads, |i| {
+        let mut rng = Xoshiro256::seed_from_u64(
+            seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15),
+        );
+        masked::generate(oracle, solver, &g, &mut rng)
+    });
+    let total_nfe: usize = seqs.iter().map(|(_, s)| s.nfe).sum();
+    nfe_used += total_nfe as f64 / n as f64;
+    (seqs.into_iter().map(|(t, _)| t).collect(), nfe_used)
+}
+
+pub fn run(cfg: &Tab2Config) -> Json {
+    let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
+    let chain = MarkovChain::generate(&mut rng, cfg.vocab, 0.3);
+    let oracle = MarkovOracle::new(chain.clone(), cfg.seq_len);
+    let reference = reference_perplexity(&chain, cfg.seq_len, 2000, &mut rng);
+
+    let solvers = [
+        ("euler", Solver::Euler),
+        ("tweedie-tau-leaping", Solver::Tweedie),
+        ("tau-leaping", Solver::TauLeaping),
+        ("theta-rk2", Solver::Rk2 { theta: cfg.theta }),
+        ("theta-trapezoidal", Solver::Trapezoidal { theta: cfg.theta }),
+    ];
+    let mut rows = Vec::new();
+    let mut series = Vec::new();
+    for (name, solver) in solvers {
+        let mut ppls = Vec::new();
+        for &nfe in &cfg.nfe_values {
+            let (seqs, nfe_used) = sample_batch(
+                &oracle,
+                solver,
+                nfe,
+                cfg.n_samples,
+                cfg.seed ^ nfe as u64,
+                cfg.threads,
+            );
+            let ppl = batch_perplexity(&chain, &seqs);
+            ppls.push((nfe, ppl, nfe_used));
+        }
+        rows.push(
+            std::iter::once(name.to_string())
+                .chain(ppls.iter().map(|&(_, p, _)| format!("{p:.3}")))
+                .collect(),
+        );
+        series.push(Json::obj(vec![
+            ("solver", Json::from(name)),
+            ("nfe", Json::from(cfg.nfe_values.clone())),
+            (
+                "perplexity",
+                Json::Arr(ppls.iter().map(|&(_, p, _)| Json::Num(p)).collect()),
+            ),
+            (
+                "nfe_used",
+                Json::Arr(ppls.iter().map(|&(_, _, u)| Json::Num(u)).collect()),
+            ),
+        ]));
+    }
+    rows.push(
+        std::iter::once("TRUE-DATA reference".to_string())
+            .chain(cfg.nfe_values.iter().map(|_| format!("{reference:.3}")))
+            .collect(),
+    );
+
+    let header: Vec<String> = std::iter::once("sampler".to_string())
+        .chain(cfg.nfe_values.iter().map(|n| format!("NFE={n}")))
+        .collect();
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    print_table(
+        "Tabs. 1/2: generative perplexity vs NFE (lower is better)",
+        &header_refs,
+        &rows,
+    );
+    let out = Json::obj(vec![
+        ("experiment", Json::from("tab2")),
+        ("vocab", Json::from(cfg.vocab)),
+        ("seq_len", Json::from(cfg.seq_len)),
+        ("n_samples", Json::from(cfg.n_samples)),
+        ("reference_perplexity", Json::Num(reference)),
+        ("series", Json::Arr(series)),
+    ]);
+    let _ = write_result("tab2", &out);
+    out
+}
+
+/// Shape check: at the largest NFE, trapezoidal <= tau-leaping <= max(Euler,
+/// Tweedie), within a small tolerance.
+pub fn shape_holds(result: &Json) -> bool {
+    let last = |name: &str| -> Option<f64> {
+        result
+            .get("series")
+            .ok()?
+            .as_arr()
+            .ok()?
+            .iter()
+            .find(|s| s.get("solver").map(|v| v.as_str().map(|x| x == name).unwrap_or(false)).unwrap_or(false))?
+            .get("perplexity")
+            .ok()?
+            .as_f64_vec()
+            .ok()?
+            .last()
+            .copied()
+    };
+    let (Some(trap), Some(tau), Some(euler)) = (
+        last("theta-trapezoidal"),
+        last("tau-leaping"),
+        last("euler"),
+    ) else {
+        return false;
+    };
+    trap <= tau * 1.02 && trap <= euler * 1.02
+}

@@ -1,0 +1,33 @@
+//! # fastdds — Fast solvers for discrete diffusion models, as a serving stack
+//!
+//! Rust implementation of the NeurIPS 2025 paper *"Fast Solvers for Discrete
+//! Diffusion Models: Theory and Applications of High-Order Algorithms"*:
+//! the θ-trapezoidal (Alg. 2) and θ-RK-2 (Alg. 1/4) high-order samplers, all
+//! baselines the paper evaluates (Euler, τ-leaping, Tweedie τ-leaping,
+//! parallel decoding, uniformization, first-hitting), and a production-style
+//! coordinator that serves generation requests over AOT-compiled JAX/Pallas
+//! artifacts through PJRT.  Python never runs on the request path.
+//!
+//! Layer map (see DESIGN.md):
+//! - L3 (this crate): [`coordinator`], [`server`], [`runtime`], [`solvers`],
+//!   [`ctmc`], [`score`], [`eval`], [`data`], [`exp`] + the from-scratch
+//!   substrates in [`util`] and [`testkit`].
+//! - L2/L1 (build-time python): `python/compile/` lowers score models and
+//!   whole sampler step graphs (with Pallas kernels inside) to
+//!   `artifacts/*.hlo.txt`.
+
+pub mod util;
+pub mod testkit;
+pub mod ctmc;
+pub mod score;
+pub mod solvers;
+pub mod eval;
+pub mod data;
+pub mod runtime;
+pub mod coordinator;
+pub mod server;
+pub mod bench;
+pub mod exp;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,163 @@
+//! `fastdds` CLI — the leader entrypoint.
+//!
+//! ```text
+//! fastdds exp <fig1|fig2|fig3|fig4|fig5|fig7|tab1|tab2|ablations|all> [--full]
+//! fastdds serve   [--addr 127.0.0.1:7878] [--policy greedy|timeout:<ms>]
+//! fastdds client  [--addr ...] --solver trapezoidal:0.5 --nfe 64 [--n 4] [--seed 1]
+//! fastdds info    [--artifacts artifacts]
+//! ```
+
+use anyhow::{bail, Result};
+use fastdds::coordinator::{BatchPolicy, Coordinator};
+use fastdds::ctmc::ToyModel;
+use fastdds::exp::{self, Scale};
+use fastdds::runtime::{Registry, RuntimeHandle};
+use fastdds::util::cli::Args;
+use fastdds::util::rng::Xoshiro256;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand() {
+        Some("exp") => cmd_exp(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("client") => cmd_client(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            println!(
+                "fastdds — fast high-order solvers for discrete diffusion models\n\
+                 usage: fastdds <exp|serve|client|info> [options]\n\
+                 see README.md"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn toy_model(args: &Args) -> ToyModel {
+    let path = args.get_str("artifacts", "artifacts") + "/toy_model.json";
+    ToyModel::from_artifact(&path).unwrap_or_else(|_| {
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        ToyModel::paper_default(&mut rng)
+    })
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let scale = Scale::from_args(args);
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let all = which == "all";
+    if all || which == "fig1" {
+        exp::fig1::run(&exp::fig1::Fig1Config::new(scale));
+    }
+    if all || which == "fig2" {
+        let model = toy_model(args);
+        exp::fig2::run(&model, &exp::fig2::Fig2Config::new(scale));
+    }
+    if all || which == "tab1" || which == "tab2" {
+        exp::tab2::run(&exp::tab2::Tab2Config::new(scale));
+    }
+    if all || which == "fig3" || which == "fig6" {
+        exp::fig3::run(&exp::fig3::Fig3Config::new(scale));
+    }
+    if all || which == "fig4" {
+        exp::fig4::run(&exp::fig4::Fig4Config::new(scale));
+    }
+    if all || which == "fig5" {
+        exp::fig5::run(scale);
+    }
+    if all || which == "fig7" {
+        exp::fig7::run(scale);
+    }
+    if all || which == "ablations" {
+        exp::ablations::run(scale);
+    }
+    if !all
+        && ![
+            "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "tab1", "tab2",
+            "ablations",
+        ]
+        .contains(&which)
+    {
+        bail!("unknown experiment {which:?}");
+    }
+    Ok(())
+}
+
+fn parse_policy(s: &str) -> Result<BatchPolicy> {
+    if s == "greedy" {
+        return Ok(BatchPolicy::Greedy);
+    }
+    if let Some(ms) = s.strip_prefix("timeout:") {
+        return Ok(BatchPolicy::Timeout(std::time::Duration::from_millis(
+            ms.parse()?,
+        )));
+    }
+    bail!("unknown policy {s:?} (greedy|timeout:<ms>)")
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = args.get_str("artifacts", "artifacts");
+    let addr = args.get_str("addr", "127.0.0.1:7878");
+    let policy = parse_policy(&args.get_str("policy", "greedy"))?;
+    let runtime = RuntimeHandle::spawn(&dir)?;
+    let registry = Registry::load(&dir)?;
+    // Warm-up: compile the markov step family before accepting traffic.
+    let names: Vec<String> = registry
+        .by_family("markov")
+        .iter()
+        .map(|a| a.name.clone())
+        .collect();
+    runtime.preload(&names.iter().map(|s| s.as_str()).collect::<Vec<_>>())?;
+    let coordinator = Coordinator::start(runtime, registry, policy);
+    let server = fastdds::server::Server::start(&addr, coordinator)?;
+    println!("fastdds serving on {} (policy {:?})", server.addr, policy);
+    println!("press ctrl-c to stop");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args.get_str("addr", "127.0.0.1:7878");
+    let mut client = fastdds::server::client::Client::connect(&addr)?;
+    let solver = args.get_str("solver", "trapezoidal:0.5");
+    let nfe = args.get_usize("nfe", 64)?;
+    let n = args.get_usize("n", 1)?;
+    let seed = args.get_u64("seed", 0)?;
+    let family = args.get_str("family", "markov");
+    let resp = client.generate(&solver, nfe, n, seed, &family)?;
+    println!(
+        "id={} nfe_used={} latency_ms={:.2}",
+        resp.id, resp.nfe_used, resp.latency_ms
+    );
+    for s in &resp.sequences {
+        println!("{}", fastdds::data::corpus::decode_pretty(s, 64));
+    }
+    println!("{}", client.metrics()?);
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.get_str("artifacts", "artifacts");
+    if !fastdds::runtime::artifacts_available(&dir) {
+        bail!("no artifacts at {dir:?}; run `make artifacts`");
+    }
+    let registry = Registry::load(&dir)?;
+    println!("artifacts in {dir:?}:");
+    for name in registry.names() {
+        let spec = registry.get(name)?;
+        println!(
+            "  {name:32} family={:12} nfe/step={} inputs={}",
+            spec.family,
+            spec.nfe_per_step,
+            spec.inputs.len()
+        );
+    }
+    Ok(())
+}

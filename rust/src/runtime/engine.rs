@@ -1,0 +1,71 @@
+//! The PJRT engine: owns the client and compiled executables.  NOT Send —
+//! use [`crate::runtime::handle::RuntimeHandle`] from other threads.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{Registry, Value};
+
+pub struct Engine {
+    pub registry: Registry,
+    client: xla::PjRtClient,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    /// Dispatch counters per artifact (perf accounting).
+    pub dispatch_counts: BTreeMap<String, u64>,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: &str) -> Result<Engine> {
+        let registry = Registry::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            registry,
+            client,
+            executables: BTreeMap::new(),
+            dispatch_counts: BTreeMap::new(),
+        })
+    }
+
+    /// Compile (and cache) an artifact.  HLO text -> proto -> executable.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.registry.get(name)?.clone();
+        let path = self.registry.hlo_path(&spec);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with host values; returns the host outputs.
+    /// Inputs are validated against the manifest spec before dispatch.
+    pub fn execute(&mut self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        self.load(name)?;
+        let spec = self.registry.get(name)?;
+        spec.validate_inputs(inputs)?;
+        let exe = self.executables.get(name).unwrap();
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|v| v.to_literal())
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the tuple.
+        let mut result = result;
+        let parts = result.decompose_tuple()?;
+        *self.dispatch_counts.entry(name.to_string()).or_insert(0) += 1;
+        parts.iter().map(Value::from_literal).collect()
+    }
+
+    pub fn loaded(&self) -> Vec<&str> {
+        self.executables.keys().map(|s| s.as_str()).collect()
+    }
+}

@@ -1,0 +1,123 @@
+//! Channel-based handle to the dedicated runtime thread.
+//!
+//! The `xla` crate's client/executable wrappers are not `Send`, so one
+//! thread owns the [`crate::runtime::engine::Engine`]; every other thread
+//! holds a cloneable [`RuntimeHandle`] and gets synchronous round-trips
+//! through mpsc channels.  Shutdown is automatic when the last handle drops.
+
+use std::sync::mpsc::{channel, Sender};
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::engine::Engine;
+use crate::runtime::Value;
+
+enum Request {
+    Execute {
+        name: String,
+        inputs: Vec<Value>,
+        reply: Sender<Result<Vec<Value>>>,
+    },
+    Preload {
+        names: Vec<String>,
+        reply: Sender<Result<()>>,
+    },
+    Stats {
+        reply: Sender<Vec<(String, u64)>>,
+    },
+}
+
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: Sender<Request>,
+}
+
+impl RuntimeHandle {
+    /// Spawn the runtime thread; fails fast if the manifest is unreadable.
+    pub fn spawn(artifacts_dir: &str) -> Result<RuntimeHandle> {
+        // Validate the manifest on the caller thread for an eager error.
+        crate::runtime::Registry::load(artifacts_dir)?;
+        let dir = artifacts_dir.to_string();
+        let (tx, rx) = channel::<Request>();
+        std::thread::Builder::new()
+            .name("pjrt-runtime".to_string())
+            .spawn(move || {
+                let mut engine = match Engine::new(&dir) {
+                    Ok(e) => e,
+                    Err(err) => {
+                        // Fail every request with the construction error.
+                        for req in rx {
+                            match req {
+                                Request::Execute { reply, .. } => {
+                                    let _ = reply.send(Err(anyhow!(
+                                        "runtime failed to start: {err:#}"
+                                    )));
+                                }
+                                Request::Preload { reply, .. } => {
+                                    let _ = reply.send(Err(anyhow!(
+                                        "runtime failed to start: {err:#}"
+                                    )));
+                                }
+                                Request::Stats { reply } => {
+                                    let _ = reply.send(Vec::new());
+                                }
+                            }
+                        }
+                        return;
+                    }
+                };
+                for req in rx {
+                    match req {
+                        Request::Execute { name, inputs, reply } => {
+                            let _ = reply.send(engine.execute(&name, &inputs));
+                        }
+                        Request::Preload { names, reply } => {
+                            let r: Result<()> =
+                                names.iter().try_for_each(|n| engine.load(n));
+                            let _ = reply.send(r);
+                        }
+                        Request::Stats { reply } => {
+                            let stats = engine
+                                .dispatch_counts
+                                .iter()
+                                .map(|(k, &v)| (k.clone(), v))
+                                .collect();
+                            let _ = reply.send(stats);
+                        }
+                    }
+                }
+            })
+            .expect("spawning runtime thread");
+        Ok(RuntimeHandle { tx })
+    }
+
+    /// Synchronous execute round-trip.
+    pub fn execute(&self, name: &str, inputs: Vec<Value>) -> Result<Vec<Value>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Execute { name: name.to_string(), inputs, reply })
+            .map_err(|_| anyhow!("runtime thread is gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime thread dropped reply"))?
+    }
+
+    /// Compile artifacts ahead of the first request (warm-up).
+    pub fn preload(&self, names: &[&str]) -> Result<()> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Preload {
+                names: names.iter().map(|s| s.to_string()).collect(),
+                reply,
+            })
+            .map_err(|_| anyhow!("runtime thread is gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime thread dropped reply"))?
+    }
+
+    /// (artifact, dispatch count) pairs.
+    pub fn dispatch_stats(&self) -> Vec<(String, u64)> {
+        let (reply, rx) = channel();
+        if self.tx.send(Request::Stats { reply }).is_err() {
+            return Vec::new();
+        }
+        rx.recv().unwrap_or_default()
+    }
+}

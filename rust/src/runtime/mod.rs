@@ -1,0 +1,27 @@
+//! PJRT runtime: load AOT artifacts (HLO text), compile once, execute from
+//! the request path.  Python never runs here — `make artifacts` produced
+//! everything this module consumes.
+//!
+//! Threading model: the `xla` crate's handles are not `Send`, so a single
+//! dedicated runtime thread owns the PJRT client and every compiled
+//! executable; the rest of the system talks to it through the cloneable
+//! channel-based [`handle::RuntimeHandle`].  On CPU-PJRT dispatches are
+//! serialized anyway (XLA uses its own intra-op thread pool), so the single
+//! dispatcher is not a throughput limiter — see EXPERIMENTS.md §Perf.
+
+pub mod registry;
+pub mod value;
+pub mod engine;
+pub mod handle;
+
+pub use handle::RuntimeHandle;
+pub use registry::{ArtifactSpec, IoSpec, Registry};
+pub use value::Value;
+
+/// Default artifacts directory (relative to the repo root).
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// True when artifacts have been built (manifest present).
+pub fn artifacts_available(dir: &str) -> bool {
+    std::path::Path::new(dir).join("manifest.json").exists()
+}

@@ -1,0 +1,210 @@
+//! Artifact registry: parse `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`) into typed specs the engine and coordinator use
+//! for shape checking and batch planning.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    fn parse(j: &Json) -> Result<IoSpec> {
+        Ok(IoSpec {
+            name: j.get("name")?.as_str()?.to_string(),
+            dtype: j.get("dtype")?.as_str()?.to_string(),
+            shape: j
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    pub fn n_elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub family: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub nfe_per_step: usize,
+    pub config: Json,
+}
+
+impl ArtifactSpec {
+    /// Batch size of the step graph (dimension 0 of the `tokens`/`x` input).
+    pub fn batch(&self) -> Result<usize> {
+        self.config.get("batch")?.as_usize()
+    }
+
+    pub fn seq_len(&self) -> Option<usize> {
+        self.config.opt("seq_len").and_then(|v| v.as_usize().ok())
+    }
+
+    pub fn vocab(&self) -> Option<usize> {
+        self.config.opt("vocab").and_then(|v| v.as_usize().ok())
+    }
+
+    /// Check a set of runtime inputs against the declared specs.
+    pub fn validate_inputs(&self, values: &[crate::runtime::Value]) -> Result<()> {
+        if values.len() != self.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.inputs.len(),
+                values.len()
+            );
+        }
+        for (spec, v) in self.inputs.iter().zip(values) {
+            if v.shape() != spec.shape.as_slice() {
+                bail!(
+                    "{} input {:?}: shape {:?} != spec {:?}",
+                    self.name,
+                    spec.name,
+                    v.shape(),
+                    spec.shape
+                );
+            }
+            if v.dtype() != spec.dtype {
+                bail!(
+                    "{} input {:?}: dtype {} != spec {}",
+                    self.name,
+                    spec.name,
+                    v.dtype(),
+                    spec.dtype
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Registry {
+    pub dir: String,
+    artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Registry {
+    pub fn load(dir: &str) -> Result<Registry> {
+        let path = std::path::Path::new(dir).join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`?)"))?;
+        let j = Json::parse(&text)?;
+        if j.get("version")?.as_usize()? != 1 {
+            bail!("unsupported manifest version");
+        }
+        let mut artifacts = BTreeMap::new();
+        for e in j.get("artifacts")?.as_arr()? {
+            let spec = ArtifactSpec {
+                name: e.get("name")?.as_str()?.to_string(),
+                file: e.get("file")?.as_str()?.to_string(),
+                family: e.get("family")?.as_str()?.to_string(),
+                inputs: e
+                    .get("inputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(IoSpec::parse)
+                    .collect::<Result<_>>()?,
+                outputs: e
+                    .get("outputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(IoSpec::parse)
+                    .collect::<Result<_>>()?,
+                nfe_per_step: e.get("nfe_per_step")?.as_usize()?,
+                config: e.get("config")?.clone(),
+            };
+            artifacts.insert(spec.name.clone(), spec);
+        }
+        Ok(Registry { dir: dir.to_string(), artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn by_family(&self, family: &str) -> Vec<&ArtifactSpec> {
+        self.artifacts
+            .values()
+            .filter(|a| a.family == family)
+            .collect()
+    }
+
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> std::path::PathBuf {
+        std::path::Path::new(&self.dir).join(&spec.file)
+    }
+
+    /// The step artifact for (family, solver-name), e.g. ("markov", "tau").
+    pub fn step_artifact(&self, family: &str, solver: &str) -> Result<&ArtifactSpec> {
+        self.get(&format!("{family}_step_{solver}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<String> {
+        let dir = "artifacts";
+        crate::runtime::artifacts_available(dir).then(|| dir.to_string())
+    }
+
+    #[test]
+    fn load_manifest_and_lookup() {
+        let Some(dir) = artifacts_dir() else { return };
+        let reg = Registry::load(&dir).unwrap();
+        assert!(reg.names().len() >= 10);
+        let tau = reg.step_artifact("markov", "tau").unwrap();
+        assert_eq!(tau.nfe_per_step, 1);
+        assert_eq!(tau.inputs[0].name, "tokens");
+        assert!(reg.hlo_path(tau).exists());
+        assert!(reg.get("nonexistent").is_err());
+    }
+
+    #[test]
+    fn validate_inputs_catches_mismatches() {
+        let Some(dir) = artifacts_dir() else { return };
+        let reg = Registry::load(&dir).unwrap();
+        let spec = reg.step_artifact("toy", "tau").unwrap();
+        let b = spec.batch().unwrap();
+        let good = vec![
+            crate::runtime::Value::i32(vec![0; b], vec![b]),
+            crate::runtime::Value::scalar_f32(1.0),
+            crate::runtime::Value::scalar_f32(0.5),
+            crate::runtime::Value::f32(vec![0.5; 2 * b], vec![1, 2, b]),
+        ];
+        spec.validate_inputs(&good).unwrap();
+        let bad = vec![crate::runtime::Value::scalar_f32(1.0)];
+        assert!(spec.validate_inputs(&bad).is_err());
+    }
+
+    #[test]
+    fn families_present() {
+        let Some(dir) = artifacts_dir() else { return };
+        let reg = Registry::load(&dir).unwrap();
+        for fam in ["markov", "toy", "transformer"] {
+            assert!(!reg.by_family(fam).is_empty(), "missing family {fam}");
+        }
+    }
+}

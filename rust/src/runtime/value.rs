@@ -1,0 +1,144 @@
+//! Typed host tensors crossing the rust <-> PJRT boundary.
+
+use anyhow::{bail, Result};
+
+/// A host-side tensor: row-major data plus shape ([] = scalar).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    F32 { data: Vec<f32>, shape: Vec<usize> },
+    I32 { data: Vec<i32>, shape: Vec<usize> },
+}
+
+impl Value {
+    pub fn scalar_f32(x: f32) -> Value {
+        Value::F32 { data: vec![x], shape: vec![] }
+    }
+
+    pub fn scalar_i32(x: i32) -> Value {
+        Value::I32 { data: vec![x], shape: vec![] }
+    }
+
+    pub fn f32(data: Vec<f32>, shape: Vec<usize>) -> Value {
+        assert_eq!(data.len(), shape.iter().product::<usize>().max(1));
+        Value::F32 { data, shape }
+    }
+
+    pub fn i32(data: Vec<i32>, shape: Vec<usize>) -> Value {
+        assert_eq!(data.len(), shape.iter().product::<usize>().max(1));
+        Value::I32 { data, shape }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32 { shape, .. } | Value::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Value::F32 { data, .. } => data.len(),
+            Value::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Value::F32 { .. } => "float32",
+            Value::I32 { .. } => "int32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Value::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 tensor, got {}", self.dtype()),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Value::I32 { data, .. } => Ok(data),
+            _ => bail!("expected i32 tensor, got {}", self.dtype()),
+        }
+    }
+
+    /// Convert to an XLA literal (scalar or reshaped rank-n array).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        Ok(match self {
+            Value::F32 { data, shape } => {
+                if shape.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    xla::Literal::vec1(data).reshape(&dims)?
+                }
+            }
+            Value::I32 { data, shape } => {
+                if shape.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    xla::Literal::vec1(data).reshape(&dims)?
+                }
+            }
+        })
+    }
+
+    /// Convert back from an XLA literal.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Value> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Value::F32 { data: lit.to_vec::<f32>()?, shape: dims }),
+            xla::ElementType::S32 => Ok(Value::I32 { data: lit.to_vec::<i32>()?, shape: dims }),
+            ty => bail!("unsupported element type {ty:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_len() {
+        let v = Value::f32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        assert_eq!(v.shape(), &[2, 2]);
+        assert_eq!(v.len(), 4);
+        assert_eq!(v.dtype(), "float32");
+    }
+
+    #[test]
+    fn accessors() {
+        let v = Value::i32(vec![7], vec![1]);
+        assert_eq!(v.as_i32().unwrap(), &[7]);
+        assert!(v.as_f32().is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Value::f32(vec![1.0; 3], vec![2, 2]);
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let v = Value::f32(vec![1.5, -2.0, 0.0, 9.25, 3.0, 4.0], vec![2, 3]);
+        let lit = v.to_literal().unwrap();
+        let back = Value::from_literal(&lit).unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32_and_scalar() {
+        let v = Value::i32(vec![1, -2, 3, 4], vec![4]);
+        let back = Value::from_literal(&v.to_literal().unwrap()).unwrap();
+        assert_eq!(v, back);
+        let s = Value::scalar_f32(0.5);
+        let back = Value::from_literal(&s.to_literal().unwrap()).unwrap();
+        assert_eq!(s, back);
+    }
+}

@@ -1,0 +1,296 @@
+//! Exact score oracle for the *uniform-state* diffusion over a Markov data
+//! law, via hidden-Markov forward-backward messages.
+//!
+//! Unlike the absorbing case, uniform-state noise corrupts tokens in place:
+//! per-dimension forward kernel q_t(x | z) = (1 - e^{-t})/V + e^{-t} 1{x=z}
+//! (rate matrix E/V - I per dimension).  The reverse intensity for changing
+//! position i from x_i to v is
+//!
+//! ```text
+//!     mu(i, v) = (1/V) * p_t(x^{i->v}) / p_t(x)
+//! ```
+//!
+//! (Sec. 2.1's backward rate with the symmetric Q).  With the data law a
+//! first-order Markov chain, p_t is the likelihood of an HMM whose hidden
+//! chain is the clean sequence and whose emissions are q_t; single-site
+//! ratios come from scaled forward/backward messages in O(1) each after an
+//! O(L V^2) pass.  This powers the Fig. 1 uniformization run, where the
+//! score singularity at t -> 0 drives the NFE blow-up the paper plots.
+
+use crate::ctmc::uniformization::JumpProcess;
+use crate::score::markov::MarkovChain;
+use crate::score::Tok;
+
+pub struct HmmUniformOracle {
+    pub chain: MarkovChain,
+    pub seq_len: usize,
+}
+
+impl HmmUniformOracle {
+    pub fn new(chain: MarkovChain, seq_len: usize) -> Self {
+        Self { chain, seq_len }
+    }
+
+    /// Emission parameters at forward time t: q_t(x|z) = a + b 1{x=z}.
+    #[inline]
+    fn emission(&self, t: f64) -> (f64, f64) {
+        let v = self.chain.vocab as f64;
+        let decay = (-t).exp();
+        ((1.0 - decay) / v, decay)
+    }
+
+    /// All single-site likelihood ratios r[i * V + v] = p_t(x^{i->v}) / p_t(x).
+    ///
+    /// Messages are per-position normalised (scaling constants cancel in the
+    /// ratio), so this is stable for any L.
+    pub fn ratios(&self, tokens: &[Tok], t: f64, out: &mut [f64]) {
+        let v = self.chain.vocab;
+        let l = self.seq_len;
+        debug_assert_eq!(tokens.len(), l);
+        debug_assert_eq!(out.len(), l * v);
+        let (a_t, b_t) = self.emission(t);
+
+        // alpha_bar[i][z] ∝ P(x_{0..i-1}, z_i = z): forward WITHOUT the
+        // emission at i.  beta[i][z] ∝ P(x_{i+1..} | z_i = z).
+        let mut alpha_bar = vec![0.0f64; l * v];
+        let mut beta = vec![0.0f64; l * v];
+
+        // Forward.
+        for z in 0..v {
+            alpha_bar[z] = self.chain.pi[z];
+        }
+        for i in 1..l {
+            let (prev_row, cur_row) = {
+                let (p, c) = alpha_bar.split_at_mut(i * v);
+                (&p[(i - 1) * v..], &mut c[..v])
+            };
+            // Multiply in emission i-1, then transfer.
+            let xi = tokens[i - 1] as usize;
+            let mut scaled = vec![0.0f64; v];
+            let mut norm = 0.0;
+            for z in 0..v {
+                let e = a_t + if z == xi { b_t } else { 0.0 };
+                scaled[z] = prev_row[z] * e;
+                norm += scaled[z];
+            }
+            for s in scaled.iter_mut() {
+                *s /= norm;
+            }
+            for c in cur_row.iter_mut() {
+                *c = 0.0;
+            }
+            for (z, &s) in scaled.iter().enumerate() {
+                if s == 0.0 {
+                    continue;
+                }
+                let row = &self.chain.a[z * v..(z + 1) * v];
+                for (zz, &az) in row.iter().enumerate() {
+                    cur_row[zz] += s * az;
+                }
+            }
+        }
+
+        // Backward.
+        for z in 0..v {
+            beta[(l - 1) * v + z] = 1.0;
+        }
+        for i in (0..l - 1).rev() {
+            let xi = tokens[i + 1] as usize;
+            let nxt: Vec<f64> = (0..v)
+                .map(|z| {
+                    let e = a_t + if z == xi { b_t } else { 0.0 };
+                    beta[(i + 1) * v + z] * e
+                })
+                .collect();
+            let norm: f64 = nxt.iter().sum();
+            let mut row = vec![0.0f64; v];
+            for z in 0..v {
+                let arow = &self.chain.a[z * v..(z + 1) * v];
+                let mut acc = 0.0;
+                for zz in 0..v {
+                    acc += arow[zz] * nxt[zz];
+                }
+                row[z] = acc / norm;
+            }
+            beta[i * v..(i + 1) * v].copy_from_slice(&row);
+        }
+
+        // Ratios: numerator(v) = a_t * S_i + b_t * g_i(v) where
+        // g_i(z) = alpha_bar[i][z] * beta[i][z], S_i = sum_z g_i(z).
+        for i in 0..l {
+            let xi = tokens[i] as usize;
+            let g = |z: usize| alpha_bar[i * v + z] * beta[i * v + z];
+            let s_i: f64 = (0..v).map(g).sum();
+            let denom = a_t * s_i + b_t * g(xi);
+            for tok in 0..v {
+                out[i * v + tok] = (a_t * s_i + b_t * g(tok)) / denom.max(1e-300);
+            }
+        }
+    }
+
+    /// Reverse intensities mu[(i, v)] = ratio / V (zero at v = x_i), plus
+    /// the total.
+    pub fn intensities(&self, tokens: &[Tok], t: f64, out: &mut [f64]) -> f64 {
+        let v = self.chain.vocab;
+        self.ratios(tokens, t, out);
+        let mut tot = 0.0;
+        for i in 0..self.seq_len {
+            let xi = tokens[i] as usize;
+            for tok in 0..v {
+                let idx = i * v + tok;
+                if tok == xi {
+                    out[idx] = 0.0;
+                } else {
+                    out[idx] /= v as f64;
+                    tot += out[idx];
+                }
+            }
+        }
+        tot
+    }
+}
+
+/// JumpProcess adapter: state = token sequence, jump index = i * V + v.
+pub struct UniformTextJump<'a> {
+    pub oracle: &'a HmmUniformOracle,
+    /// Thinning safety factor applied to the window bound (validated by a
+    /// debug assertion inside the simulator).
+    pub slack: f64,
+}
+
+impl JumpProcess for UniformTextJump<'_> {
+    type State = Vec<Tok>;
+
+    fn n_jumps(&self) -> usize {
+        self.oracle.seq_len * self.oracle.chain.vocab
+    }
+
+    fn intensities(&self, x: &Vec<Tok>, t: f64, out: &mut [f64]) {
+        self.oracle.intensities(x, t, out);
+    }
+
+    fn total_bound(&self, x: &Vec<Tok>, t_lo: f64, _t_hi: f64) -> f64 {
+        // Intensities increase as t decreases (score ratios sharpen toward
+        // the data law), so the window's small end dominates; `slack`
+        // covers the residual state dependence between jumps.
+        let mut buf = vec![0.0; self.n_jumps()];
+        let tot = self.oracle.intensities(x, t_lo, &mut buf);
+        tot * self.slack
+    }
+
+    fn apply(&self, x: &mut Vec<Tok>, nu: usize) {
+        let v = self.oracle.chain.vocab;
+        x[nu / v] = (nu % v) as Tok;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Rng, Xoshiro256};
+
+    fn oracle(vocab: usize, l: usize) -> HmmUniformOracle {
+        let mut rng = Xoshiro256::seed_from_u64(21);
+        HmmUniformOracle::new(MarkovChain::generate(&mut rng, vocab, 0.7), l)
+    }
+
+    /// Brute-force p_t(x) by enumerating all clean sequences.
+    fn brute_pt(o: &HmmUniformOracle, x: &[Tok], t: f64) -> f64 {
+        let v = o.chain.vocab;
+        let l = o.seq_len;
+        let (a_t, b_t) = {
+            let decay = (-t as f64).exp();
+            ((1.0 - decay) / v as f64, decay)
+        };
+        let mut total = 0.0;
+        let n_comb = v.pow(l as u32);
+        for code in 0..n_comb {
+            let mut z = Vec::with_capacity(l);
+            let mut c = code;
+            for _ in 0..l {
+                z.push(c % v);
+                c /= v;
+            }
+            let mut p = o.chain.pi[z[0]];
+            for w in z.windows(2) {
+                p *= o.chain.at(w[0], w[1]);
+            }
+            for i in 0..l {
+                p *= a_t + if z[i] == x[i] as usize { b_t } else { 0.0 };
+            }
+            total += p;
+        }
+        total
+    }
+
+    #[test]
+    fn ratios_match_brute_force() {
+        let o = oracle(3, 4);
+        let x = vec![0u32, 2, 1, 1];
+        let t = 0.6;
+        let mut r = vec![0.0; 4 * 3];
+        o.ratios(&x, t, &mut r);
+        let base = brute_pt(&o, &x, t);
+        for i in 0..4 {
+            for v in 0..3u32 {
+                let mut y = x.clone();
+                y[i] = v;
+                let want = brute_pt(&o, &y, t) / base;
+                let got = r[i * 3 + v as usize];
+                assert!(
+                    (got - want).abs() < 1e-9 * want.max(1.0),
+                    "i={i} v={v} got={got} want={want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ratio_at_own_token_is_one() {
+        let o = oracle(4, 6);
+        let x = vec![1u32, 0, 3, 2, 2, 1];
+        let mut r = vec![0.0; 6 * 4];
+        o.ratios(&x, 1.3, &mut r);
+        for i in 0..6 {
+            let got = r[i * 4 + x[i] as usize];
+            assert!((got - 1.0).abs() < 1e-12, "i={i} got={got}");
+        }
+    }
+
+    #[test]
+    fn intensities_blow_up_as_t_shrinks() {
+        // The score singularity driving Fig. 1: total intensity diverges as
+        // t -> 0 whenever x is not a data-typical sequence.
+        let o = oracle(4, 8);
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let x: Vec<Tok> = (0..8).map(|_| rng.gen_usize(4) as u32).collect();
+        let mut buf = vec![0.0; 8 * 4];
+        let t1 = o.intensities(&x, 1.0, &mut buf);
+        let t2 = o.intensities(&x, 0.05, &mut buf);
+        let t3 = o.intensities(&x, 0.005, &mut buf);
+        assert!(t2 > t1, "{t1} {t2} {t3}");
+        assert!(t3 > t2, "{t1} {t2} {t3}");
+    }
+
+    #[test]
+    fn intensities_zero_on_diagonal() {
+        let o = oracle(5, 5);
+        let x = vec![0u32, 1, 2, 3, 4];
+        let mut buf = vec![0.0; 25];
+        let tot = o.intensities(&x, 0.7, &mut buf);
+        for i in 0..5 {
+            assert_eq!(buf[i * 5 + x[i] as usize], 0.0);
+        }
+        let sum: f64 = buf.iter().sum();
+        assert!((sum - tot).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jump_apply_sets_token() {
+        let o = oracle(3, 4);
+        let j = UniformTextJump { oracle: &o, slack: 2.0 };
+        let mut x = vec![0u32, 0, 0, 0];
+        j.apply(&mut x, 2 * 3 + 1); // position 2 -> token 1
+        assert_eq!(x, vec![0, 0, 1, 0]);
+    }
+}

@@ -1,0 +1,410 @@
+//! Exact oracle score for a first-order Markov data law (mirrors
+//! `python/compile/markov.py`; parameters shared via artifacts JSON).
+//!
+//! For the absorbing-state diffusion the time-t conditional at a masked
+//! position equals the data-law conditional given the unmasked positions
+//! (RADD's time-agnostic observation).  For a stationary Markov chain that
+//! conditional comes from the nearest observed neighbours:
+//!
+//! ```text
+//!     p(x_i = v | a at distance dl left, b at distance dr right)
+//!         ∝ A^dl[a, v] * A^dr[v, b]
+//! ```
+//!
+//! with pi replacing the left factor at the boundary and the right factor
+//! dropped at the other.  A^0..A^L are precomputed once.
+
+use crate::score::{ScoreSource, Tok};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+#[derive(Clone, Debug)]
+pub struct MarkovChain {
+    pub vocab: usize,
+    /// Row-stochastic transition matrix, row-major vocab x vocab.
+    pub a: Vec<f64>,
+    /// Stationary distribution.
+    pub pi: Vec<f64>,
+}
+
+impl MarkovChain {
+    pub fn new(vocab: usize, a: Vec<f64>, pi: Vec<f64>) -> Self {
+        assert_eq!(a.len(), vocab * vocab);
+        assert_eq!(pi.len(), vocab);
+        Self { vocab, a, pi }
+    }
+
+    /// Deterministic chain from a seed: Dirichlet(concentration) rows, then
+    /// pi by power iteration.  (Used when artifacts are absent; the exported
+    /// chain in artifacts/markov_model.json comes from numpy with its own
+    /// seed, so prefer [`MarkovChain::from_artifact`] for cross-layer runs.)
+    pub fn generate<R: Rng>(rng: &mut R, vocab: usize, concentration: f64) -> Self {
+        let mut a = vec![0.0; vocab * vocab];
+        for r in 0..vocab {
+            // Dirichlet via normalised Gamma(c, 1) draws (Marsaglia-Tsang
+            // for c >= 1, boost trick below 1).
+            let mut tot = 0.0;
+            for c in 0..vocab {
+                let g = gamma_draw(rng, concentration);
+                a[r * vocab + c] = g;
+                tot += g;
+            }
+            for c in 0..vocab {
+                a[r * vocab + c] /= tot;
+            }
+        }
+        let mut pi = vec![1.0 / vocab as f64; vocab];
+        for _ in 0..512 {
+            let mut next = vec![0.0; vocab];
+            for r in 0..vocab {
+                for c in 0..vocab {
+                    next[c] += pi[r] * a[r * vocab + c];
+                }
+            }
+            let tot: f64 = next.iter().sum();
+            for x in next.iter_mut() {
+                *x /= tot;
+            }
+            pi = next;
+        }
+        Self::new(vocab, a, pi)
+    }
+
+    pub fn from_artifact(path: &str) -> Result<Self> {
+        let j = Json::parse(&std::fs::read_to_string(path)?)?;
+        let vocab = j.get("vocab")?.as_usize()?;
+        let a_mat = j.get("transition")?.as_f64_mat()?;
+        let pi = j.get("stationary")?.as_f64_vec()?;
+        let mut a = Vec::with_capacity(vocab * vocab);
+        for row in &a_mat {
+            a.extend_from_slice(row);
+        }
+        Ok(Self::new(vocab, a, pi))
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        self.a[r * self.vocab + c]
+    }
+
+    /// Sample a length-n sequence from the chain.
+    pub fn sample<R: Rng>(&self, rng: &mut R, n: usize) -> Vec<Tok> {
+        let mut out = Vec::with_capacity(n);
+        let mut prev = crate::util::dist::categorical_f64(rng, &self.pi);
+        out.push(prev as Tok);
+        for _ in 1..n {
+            let row = &self.a[prev * self.vocab..(prev + 1) * self.vocab];
+            prev = crate::util::dist::categorical_f64(rng, row);
+            out.push(prev as Tok);
+        }
+        out
+    }
+
+    /// Exact log-probability of a sequence (perplexity evaluation).
+    pub fn log_prob(&self, seq: &[Tok]) -> f64 {
+        assert!(!seq.is_empty());
+        let mut lp = self.pi[seq[0] as usize].max(1e-300).ln();
+        for w in seq.windows(2) {
+            lp += self.at(w[0] as usize, w[1] as usize).max(1e-300).ln();
+        }
+        lp
+    }
+}
+
+/// Gamma(shape, 1) sampler (Marsaglia & Tsang 2000 + shape<1 boost).
+fn gamma_draw<R: Rng>(rng: &mut R, shape: f64) -> f64 {
+    if shape < 1.0 {
+        let u = rng.gen_f64();
+        return gamma_draw(rng, shape + 1.0) * u.powf(1.0 / shape);
+    }
+    let d = shape - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        // Standard normal via Box-Muller.
+        let (u1, u2) = (rng.gen_f64(), rng.gen_f64());
+        let x = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        let v = 1.0 + c * x;
+        if v <= 0.0 {
+            continue;
+        }
+        let v3 = v * v * v;
+        let u = rng.gen_f64();
+        if u < 1.0 - 0.0331 * x * x * x * x
+            || u.ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln())
+        {
+            return d * v3;
+        }
+    }
+}
+
+/// The ScoreSource built from a chain + fixed sequence length.
+pub struct MarkovOracle {
+    pub chain: MarkovChain,
+    pub seq_len: usize,
+    /// powers[d] = A^d, row-major; d in 0..=seq_len.
+    powers: Vec<Vec<f64>>,
+    /// powers_t[d] = (A^d)^T, row-major — the right-neighbour factor reads
+    /// a COLUMN of A^d per position; the transposed copy makes that read
+    /// contiguous (perf: ~1.5x on probs_into, EXPERIMENTS.md §Perf).
+    powers_t: Vec<Vec<f64>>,
+}
+
+impl MarkovOracle {
+    pub fn new(chain: MarkovChain, seq_len: usize) -> Self {
+        let v = chain.vocab;
+        let mut powers = Vec::with_capacity(seq_len + 1);
+        let mut eye = vec![0.0; v * v];
+        for i in 0..v {
+            eye[i * v + i] = 1.0;
+        }
+        powers.push(eye);
+        for d in 1..=seq_len {
+            let prev = &powers[d - 1];
+            let mut next = vec![0.0; v * v];
+            for r in 0..v {
+                for k in 0..v {
+                    let p = prev[r * v + k];
+                    if p == 0.0 {
+                        continue;
+                    }
+                    let row = &chain.a[k * v..(k + 1) * v];
+                    for c in 0..v {
+                        next[r * v + c] += p * row[c];
+                    }
+                }
+            }
+            powers.push(next);
+        }
+        let powers_t = powers
+            .iter()
+            .map(|m| {
+                let mut t = vec![0.0; v * v];
+                for r in 0..v {
+                    for c in 0..v {
+                        t[c * v + r] = m[r * v + c];
+                    }
+                }
+                t
+            })
+            .collect();
+        Self { chain, seq_len, powers, powers_t }
+    }
+
+    #[inline]
+    fn pow(&self, d: usize) -> &[f64] {
+        &self.powers[d.min(self.seq_len)]
+    }
+
+    #[inline]
+    fn pow_t(&self, d: usize) -> &[f64] {
+        &self.powers_t[d.min(self.seq_len)]
+    }
+}
+
+impl ScoreSource for MarkovOracle {
+    fn vocab(&self) -> usize {
+        self.chain.vocab
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn probs_into(&self, tokens: &[Tok], _t: f64, out: &mut [f64]) {
+        let v = self.chain.vocab;
+        let l = self.seq_len;
+        debug_assert_eq!(tokens.len(), l);
+        debug_assert_eq!(out.len(), l * v);
+        let mask = self.mask_id();
+
+        // Nearest observed neighbour scan, both directions.
+        let mut left: Vec<Option<(usize, Tok)>> = vec![None; l]; // (distance, token)
+        let mut last: Option<(usize, Tok)> = None;
+        for i in 0..l {
+            left[i] = last.map(|(j, tok)| (i - j, tok));
+            if tokens[i] != mask {
+                last = Some((i, tokens[i]));
+            }
+        }
+        let mut right: Vec<Option<(usize, Tok)>> = vec![None; l];
+        let mut nxt: Option<(usize, Tok)> = None;
+        for i in (0..l).rev() {
+            right[i] = nxt.map(|(j, tok)| (j - i, tok));
+            if tokens[i] != mask {
+                nxt = Some((i, tokens[i]));
+            }
+        }
+
+        for i in 0..l {
+            let row = &mut out[i * v..(i + 1) * v];
+            if tokens[i] != mask {
+                // Observed: delta distribution (samplers ignore these rows,
+                // but keeping them well-formed simplifies evaluation code).
+                row.fill(0.0);
+                row[tokens[i] as usize] = 1.0;
+                continue;
+            }
+            match left[i] {
+                Some((dl, a)) => {
+                    let m = self.pow(dl);
+                    let base = a as usize * v;
+                    row.copy_from_slice(&m[base..base + v]);
+                }
+                None => row.copy_from_slice(&self.chain.pi),
+            }
+            if let Some((dr, b)) = right[i] {
+                // Contiguous read: column b of A^dr == row b of (A^dr)^T.
+                let m = &self.pow_t(dr)[b as usize * v..(b as usize + 1) * v];
+                for (rv, &f) in row.iter_mut().zip(m) {
+                    *rv *= f;
+                }
+            }
+            let tot: f64 = row.iter().sum();
+            if tot > 0.0 {
+                for rv in row.iter_mut() {
+                    *rv /= tot;
+                }
+            } else {
+                row.fill(1.0 / v as f64);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn oracle(vocab: usize, seq_len: usize) -> MarkovOracle {
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        MarkovOracle::new(MarkovChain::generate(&mut rng, vocab, 0.5), seq_len)
+    }
+
+    #[test]
+    fn chain_rows_stochastic_and_pi_stationary() {
+        let o = oracle(8, 4);
+        let v = o.chain.vocab;
+        for r in 0..v {
+            let s: f64 = (0..v).map(|c| o.chain.at(r, c)).sum();
+            assert!((s - 1.0).abs() < 1e-12, "row {r} sums to {s}");
+        }
+        for c in 0..v {
+            let got: f64 = (0..v).map(|r| o.chain.pi[r] * o.chain.at(r, c)).sum();
+            assert!((got - o.chain.pi[c]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn all_masked_positions_get_stationary_marginal() {
+        let o = oracle(6, 10);
+        let toks = crate::score::all_masked(10, o.mask_id());
+        let p = o.probs(&toks, 0.5);
+        for i in 0..10 {
+            for c in 0..6 {
+                assert!(
+                    (p[i * 6 + c] - o.chain.pi[c]).abs() < 1e-9,
+                    "pos {i} tok {c}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_left_neighbour_gives_transition_row() {
+        let o = oracle(5, 4);
+        let mask = o.mask_id();
+        let toks = vec![2u32, mask, mask, mask];
+        let p = o.probs(&toks, 0.1);
+        // Position 1: conditional = A[2, :].
+        for c in 0..5 {
+            assert!((p[5 + c] - o.chain.at(2, c)).abs() < 1e-9);
+        }
+        // Position 2: conditional = A^2[2, :].
+        let a2 = o.pow(2);
+        for c in 0..5 {
+            assert!((p[10 + c] - a2[2 * 5 + c]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn bridge_between_two_observations() {
+        // P(x_1 = v | x_0 = a, x_2 = b) ∝ A[a, v] A[v, b].
+        let o = oracle(4, 3);
+        let mask = o.mask_id();
+        let toks = vec![1u32, mask, 3u32];
+        let p = o.probs(&toks, 0.1);
+        let mut want: Vec<f64> = (0..4).map(|v| o.chain.at(1, v) * o.chain.at(v, 3)).collect();
+        let tot: f64 = want.iter().sum();
+        for w in want.iter_mut() {
+            *w /= tot;
+        }
+        for c in 0..4 {
+            assert!((p[4 + c] - want[c]).abs() < 1e-9, "c={c}");
+        }
+    }
+
+    #[test]
+    fn matches_exhaustive_enumeration() {
+        // Brute force over all completions of a 5-long sequence, vocab 3.
+        let o = oracle(3, 5);
+        let mask = o.mask_id();
+        let toks = vec![mask, 2u32, mask, mask, 0u32];
+        let p = o.probs(&toks, 0.1);
+        let v = 3usize;
+        // Enumerate all assignments to masked positions {0, 2, 3}.
+        let mut joint = vec![vec![0.0f64; v]; 5];
+        for x0 in 0..v {
+            for x2 in 0..v {
+                for x3 in 0..v {
+                    let seq = [x0, 2, x2, x3, 0];
+                    let mut pr = o.chain.pi[seq[0]];
+                    for w in seq.windows(2) {
+                        pr *= o.chain.at(w[0], w[1]);
+                    }
+                    joint[0][x0] += pr;
+                    joint[2][x2] += pr;
+                    joint[3][x3] += pr;
+                }
+            }
+        }
+        for &i in &[0usize, 2, 3] {
+            let tot: f64 = joint[i].iter().sum();
+            for c in 0..v {
+                let want = joint[i][c] / tot;
+                assert!(
+                    (p[i * v + c] - want).abs() < 1e-9,
+                    "pos {i} tok {c}: got {} want {want}",
+                    p[i * v + c]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn observed_rows_are_deltas() {
+        let o = oracle(4, 3);
+        let toks = vec![2u32, o.mask_id(), 1u32];
+        let p = o.probs(&toks, 0.1);
+        assert_eq!(p[0 * 4 + 2], 1.0);
+        assert_eq!(p[2 * 4 + 1], 1.0);
+    }
+
+    #[test]
+    fn sample_and_log_prob_consistent() {
+        let o = oracle(6, 4);
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let seq = o.chain.sample(&mut rng, 20);
+        assert_eq!(seq.len(), 20);
+        assert!(seq.iter().all(|&t| (t as usize) < 6));
+        let lp = o.chain.log_prob(&seq);
+        assert!(lp < 0.0);
+        // Manual recomputation.
+        let mut want = o.chain.pi[seq[0] as usize].ln();
+        for w in seq.windows(2) {
+            want += o.chain.at(w[0] as usize, w[1] as usize).ln();
+        }
+        assert!((lp - want).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,50 @@
+//! Score sources for masked (absorbing-state) discrete diffusion.
+//!
+//! A [`ScoreSource`] answers the only question a sampler asks: the
+//! conditional distribution over real tokens at every position of a
+//! partially masked sequence.  Implementations:
+//!
+//! - [`markov::MarkovOracle`]: exact conditionals of a first-order Markov
+//!   data law (the DESIGN.md substitution for the paper's RADD checkpoint);
+//! - [`hmm::HmmUniformOracle`]: exact score ratios for the *uniform-state*
+//!   diffusion over the same data law (powers Fig. 1's uniformization run);
+//! - `runtime::ArtifactScore` (in [`crate::runtime`]): the AOT transformer.
+
+pub mod markov;
+pub mod hmm;
+
+/// Token type used on the request path. Mask is represented as `vocab`.
+pub type Tok = u32;
+
+/// Conditional token distributions for masked sequences.
+pub trait ScoreSource: Send + Sync {
+    fn vocab(&self) -> usize;
+    fn seq_len(&self) -> usize;
+
+    fn mask_id(&self) -> Tok {
+        self.vocab() as Tok
+    }
+
+    /// Write p(x_i = v | unmasked positions) into `out[i * vocab + v]`
+    /// for every position i (rows at unmasked positions may be arbitrary —
+    /// samplers must not read them).  `t` is the forward diffusion time;
+    /// oracles for the absorbing case are time-agnostic and ignore it.
+    fn probs_into(&self, tokens: &[Tok], t: f64, out: &mut [f64]);
+
+    /// Convenience allocating wrapper.
+    fn probs(&self, tokens: &[Tok], t: f64) -> Vec<f64> {
+        let mut out = vec![0.0; self.seq_len() * self.vocab()];
+        self.probs_into(tokens, t, &mut out);
+        out
+    }
+}
+
+/// Count of masked positions.
+pub fn n_masked(tokens: &[Tok], mask_id: Tok) -> usize {
+    tokens.iter().filter(|&&t| t == mask_id).count()
+}
+
+/// A fully masked sequence.
+pub fn all_masked(seq_len: usize, mask_id: Tok) -> Vec<Tok> {
+    vec![mask_id; seq_len]
+}

@@ -1,0 +1,75 @@
+//! Minimal client for the JSON-lines protocol (used by examples and tests).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::GenerateResponse;
+use crate::util::json::Json;
+
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { reader, writer: stream })
+    }
+
+    /// Send one raw line, get one parsed reply.
+    pub fn raw(&mut self, line: &str) -> Result<Json> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut reply = String::new();
+        if self.reader.read_line(&mut reply)? == 0 {
+            bail!("server closed the connection");
+        }
+        Json::parse(reply.trim())
+    }
+
+    pub fn ping(&mut self) -> Result<bool> {
+        let r = self.raw(r#"{"cmd": "ping"}"#)?;
+        r.get("ok")?.as_bool()
+    }
+
+    pub fn metrics(&mut self) -> Result<String> {
+        let r = self.raw(r#"{"cmd": "metrics"}"#)?;
+        if !r.get("ok")?.as_bool()? {
+            bail!("metrics failed: {:?}", r.opt("error"));
+        }
+        Ok(r.get("report")?.as_str()?.to_string())
+    }
+
+    pub fn generate(
+        &mut self,
+        solver: &str,
+        nfe: usize,
+        n_samples: usize,
+        seed: u64,
+        family: &str,
+    ) -> Result<GenerateResponse> {
+        let req = Json::obj(vec![
+            ("cmd", Json::from("generate")),
+            ("solver", Json::from(solver)),
+            ("nfe", Json::from(nfe)),
+            ("n_samples", Json::from(n_samples)),
+            ("seed", Json::from(seed as f64)),
+            ("family", Json::from(family)),
+        ]);
+        let r = self.raw(&req.to_string())?;
+        if !r.get("ok")?.as_bool()? {
+            bail!(
+                "generate failed: {}",
+                r.opt("error")
+                    .and_then(|e| e.as_str().ok())
+                    .unwrap_or("unknown")
+            );
+        }
+        GenerateResponse::from_json(&r)
+    }
+}

@@ -1,0 +1,193 @@
+//! JSON-lines-over-TCP serving front end.
+//!
+//! Protocol: one JSON object per line.
+//!   -> {"cmd": "generate", "solver": "trapezoidal:0.5", "nfe": 64,
+//!       "n_samples": 2, "seed": 7, "family": "markov"}
+//!   <- {"ok": true, "id": 1, "sequences": [[...], [...]],
+//!       "nfe_used": 65, "latency_ms": 12.3}
+//!   -> {"cmd": "metrics"}        <- {"ok": true, "report": "..."}
+//!   -> {"cmd": "ping"}           <- {"ok": true}
+//! Errors: {"ok": false, "error": "..."}.  One thread per connection.
+
+pub mod client;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::{Coordinator, GenerateRequest};
+use crate::util::json::Json;
+
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and serve on a background thread. `addr` like "127.0.0.1:0".
+    pub fn start(addr: &str, coordinator: Coordinator) -> Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let next_id = Arc::new(AtomicU64::new(1));
+        let handle = std::thread::Builder::new()
+            .name("fastdds-server".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let coord = coordinator.clone();
+                            let ids = Arc::clone(&next_id);
+                            std::thread::spawn(move || {
+                                let _ = handle_conn(stream, coord, ids);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(Server { addr: local, stop, handle: Some(handle) })
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    coordinator: Coordinator,
+    next_id: Arc<AtomicU64>,
+) -> Result<()> {
+    let peer = stream.try_clone()?;
+    let mut reader = BufReader::new(peer);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client hung up
+        }
+        let reply = match handle_line(&line, &coordinator, &next_id) {
+            Ok(j) => j,
+            Err(e) => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::from(format!("{e:#}"))),
+            ]),
+        };
+        writer.write_all(reply.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+}
+
+fn handle_line(
+    line: &str,
+    coordinator: &Coordinator,
+    next_id: &AtomicU64,
+) -> Result<Json> {
+    let j = Json::parse(line.trim())?;
+    match j.get("cmd")?.as_str()? {
+        "ping" => Ok(Json::obj(vec![("ok", Json::Bool(true))])),
+        "metrics" => {
+            let m = coordinator.metrics();
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("report", Json::from(m.report())),
+                ("requests", Json::from(m.requests as f64)),
+                ("lanes", Json::from(m.lanes as f64)),
+                ("dispatches", Json::from(m.dispatches as f64)),
+                ("nfe_total", Json::from(m.nfe_total as f64)),
+            ]))
+        }
+        "generate" => {
+            let id = next_id.fetch_add(1, Ordering::Relaxed);
+            let req = GenerateRequest::from_json(&j, id)?;
+            let resp = coordinator.generate(req)?;
+            let mut out = resp.to_json();
+            if let Json::Obj(m) = &mut out {
+                m.insert("ok".into(), Json::Bool(true));
+            }
+            Ok(out)
+        }
+        cmd => anyhow::bail!("unknown cmd {cmd:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::BatchPolicy;
+    use crate::runtime::{Registry, RuntimeHandle};
+    use crate::server::client::Client;
+
+    fn server() -> Option<Server> {
+        if !crate::runtime::artifacts_available("artifacts") {
+            return None;
+        }
+        let runtime = RuntimeHandle::spawn("artifacts").unwrap();
+        let registry = Registry::load("artifacts").unwrap();
+        let coord = Coordinator::start(runtime, registry, BatchPolicy::Greedy);
+        Some(Server::start("127.0.0.1:0", coord).unwrap())
+    }
+
+    #[test]
+    fn ping_and_generate_over_tcp() {
+        let Some(srv) = server() else { return };
+        let mut c = Client::connect(&srv.addr.to_string()).unwrap();
+        assert!(c.ping().unwrap());
+        let resp = c.generate("trapezoidal:0.5", 16, 2, 5, "markov").unwrap();
+        assert_eq!(resp.sequences.len(), 2);
+        assert!(resp.sequences[0].iter().all(|&t| t < 16));
+        let metrics = c.metrics().unwrap();
+        assert!(metrics.contains("requests=1"), "{metrics}");
+        srv.stop();
+    }
+
+    #[test]
+    fn malformed_requests_get_errors() {
+        let Some(srv) = server() else { return };
+        let mut c = Client::connect(&srv.addr.to_string()).unwrap();
+        let r = c.raw(r#"{"cmd": "generate"}"#).unwrap();
+        assert_eq!(r.get("ok").unwrap().as_bool().unwrap(), false);
+        let r = c.raw("this is not json").unwrap();
+        assert_eq!(r.get("ok").unwrap().as_bool().unwrap(), false);
+        let r = c.raw(r#"{"cmd": "nope"}"#).unwrap();
+        assert_eq!(r.get("ok").unwrap().as_bool().unwrap(), false);
+        // Connection still alive afterwards.
+        assert!(c.ping().unwrap());
+        srv.stop();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let Some(srv) = server() else { return };
+        let addr = srv.addr.to_string();
+        let handles: Vec<_> = (0..3)
+            .map(|i| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let mut c = Client::connect(&addr).unwrap();
+                    c.generate("tau", 16, 1, i, "markov").unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            let resp = h.join().unwrap();
+            assert_eq!(resp.sequences.len(), 1);
+        }
+        srv.stop();
+    }
+}

@@ -1,0 +1,97 @@
+//! Time discretisations.
+//!
+//! The paper uses a uniform discretisation of (δ, 1] for the masked text and
+//! image experiments (App. D.3/D.4) and an arithmetic sequence on [0, T - δ]
+//! for the toy model (App. D.2).  Grids here are vectors of *forward* times,
+//! strictly decreasing — the backward process consumes them left to right.
+//! θ-section points ρ_n = t_n - θ Δ_n are computed inside the steps.
+
+/// Uniform grid on (δ, 1] for the masked process: n_steps + 1 forward times
+/// from 1.0 down to δ.
+pub fn masked_uniform(n_steps: usize, delta: f64) -> Vec<f64> {
+    assert!(n_steps >= 1);
+    assert!((0.0..1.0).contains(&delta));
+    let h = (1.0 - delta) / n_steps as f64;
+    let mut ts: Vec<f64> = (0..=n_steps).map(|i| 1.0 - h * i as f64).collect();
+    *ts.last_mut().unwrap() = delta;
+    ts
+}
+
+/// Arithmetic grid for the toy model: forward times from T down to δ.
+pub fn toy_uniform(n_steps: usize, horizon: f64, delta: f64) -> Vec<f64> {
+    assert!(n_steps >= 1);
+    assert!(delta < horizon);
+    let h = (horizon - delta) / n_steps as f64;
+    let mut ts: Vec<f64> = (0..=n_steps).map(|i| horizon - h * i as f64).collect();
+    *ts.last_mut().unwrap() = delta;
+    ts
+}
+
+/// Log-spaced grid on (δ, 1] (geometric in t): the App. D-style alternative
+/// used by the grid-placement ablation in DESIGN.md.
+pub fn masked_log(n_steps: usize, delta: f64) -> Vec<f64> {
+    assert!(n_steps >= 1);
+    assert!(delta > 0.0 && delta < 1.0);
+    let r = (delta.ln() / n_steps as f64).exp();
+    let mut ts = Vec::with_capacity(n_steps + 1);
+    let mut t = 1.0;
+    for _ in 0..=n_steps {
+        ts.push(t);
+        t *= r;
+    }
+    *ts.last_mut().unwrap() = delta;
+    ts
+}
+
+/// Validity check used by property tests and the coordinator.
+pub fn is_valid_grid(ts: &[f64]) -> bool {
+    ts.len() >= 2 && ts.windows(2).all(|w| w[0] > w[1]) && *ts.last().unwrap() > 0.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masked_uniform_endpoints_and_monotone() {
+        let g = masked_uniform(10, 1e-3);
+        assert_eq!(g.len(), 11);
+        assert_eq!(g[0], 1.0);
+        assert_eq!(*g.last().unwrap(), 1e-3);
+        assert!(is_valid_grid(&g));
+    }
+
+    #[test]
+    fn masked_uniform_equal_spacing() {
+        let g = masked_uniform(4, 0.2);
+        for w in g.windows(2) {
+            assert!((w[0] - w[1] - 0.2).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn toy_uniform_endpoints() {
+        let g = toy_uniform(16, 12.0, 1e-3);
+        assert_eq!(g[0], 12.0);
+        assert_eq!(*g.last().unwrap(), 1e-3);
+        assert!(is_valid_grid(&g));
+    }
+
+    #[test]
+    fn masked_log_is_geometric() {
+        let g = masked_log(8, 1e-2);
+        assert_eq!(g[0], 1.0);
+        assert!((g.last().unwrap() - 1e-2).abs() < 1e-12);
+        assert!(is_valid_grid(&g));
+        let r0 = g[1] / g[0];
+        for w in g.windows(2).take(7) {
+            assert!((w[1] / w[0] - r0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn single_step_grids() {
+        assert_eq!(masked_uniform(1, 0.5), vec![1.0, 0.5]);
+        assert!(is_valid_grid(&toy_uniform(1, 12.0, 0.1)));
+    }
+}

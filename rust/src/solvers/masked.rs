@@ -1,0 +1,563 @@
+//! Samplers for masked (absorbing-state) discrete diffusion sequences.
+//!
+//! Under the log-linear schedule (App. D.3) the per-dimension total unmask
+//! intensity is exactly mu_tot(t) = 1/t, and over a backward step t -> t'
+//! the schemes differ only in the gate probability and in how stage-2
+//! information enters the destination law:
+//!
+//! | scheme            | gate for a masked dim                 | NFE/step |
+//! |-------------------|----------------------------------------|----------|
+//! | Euler             | clip(Δ/t, 1)                           | 1        |
+//! | τ-leaping         | 1 - exp(-Δ/t)                          | 1        |
+//! | Tweedie           | Δ/t (exact posterior mass)             | 1        |
+//! | θ-trapezoidal     | two-stage, Alg. 2 (extrapolated rates) | 2        |
+//! | θ-RK-2 (Alg. 4)   | two-stage, restart from y_{s_n}        | 2        |
+//!
+//! All solvers end with a shared `finalize` denoise of any still-masked
+//! dimensions (sampling each from its conditional at the early-stop time),
+//! charged as one extra NFE when it fires — without it, perplexity of a
+//! partially masked sequence is undefined.  The same convention is applied
+//! to every scheme so comparisons at equal NFE stay fair.
+
+use crate::score::{ScoreSource, Tok};
+use crate::solvers::{GenStats, Solver};
+use crate::util::dist::categorical;
+use crate::util::rng::Rng;
+
+/// Scratch buffers reused across steps (no allocation on the hot path).
+struct Scratch {
+    probs: Vec<f64>,
+    probs_star: Vec<f64>,
+    comb: Vec<f64>,
+}
+
+impl Scratch {
+    fn new(l: usize, v: usize) -> Self {
+        Self {
+            probs: vec![0.0; l * v],
+            probs_star: vec![0.0; l * v],
+            comb: vec![0.0; v],
+        }
+    }
+}
+
+/// Generate one sequence with the given solver over the forward-time grid
+/// (strictly decreasing, ending at the early-stop time δ).
+pub fn generate<S: ScoreSource + ?Sized, R: Rng>(
+    score: &S,
+    solver: Solver,
+    grid: &[f64],
+    rng: &mut R,
+) -> (Vec<Tok>, GenStats) {
+    assert!(crate::solvers::grid::is_valid_grid(grid), "invalid time grid");
+    let l = score.seq_len();
+    let v = score.vocab();
+    let mask = score.mask_id();
+    let mut tokens = vec![mask; l];
+    let mut stats = GenStats::default();
+    let mut sc = Scratch::new(l, v);
+
+    match solver {
+        Solver::ParallelDecoding => {
+            parallel_decode(score, grid.len() - 1, &mut tokens, &mut stats, &mut sc, rng);
+        }
+        _ => {
+            for w in grid.windows(2) {
+                let (t, t_next) = (w[0], w[1]);
+                match solver {
+                    Solver::Euler => {
+                        one_stage(score, Gate::Linear, t, t_next, &mut tokens, &mut stats, &mut sc, rng)
+                    }
+                    Solver::TauLeaping => {
+                        one_stage(score, Gate::Poisson, t, t_next, &mut tokens, &mut stats, &mut sc, rng)
+                    }
+                    Solver::Tweedie => {
+                        one_stage(score, Gate::Exact, t, t_next, &mut tokens, &mut stats, &mut sc, rng)
+                    }
+                    Solver::Trapezoidal { theta } => {
+                        trapezoidal_step(score, theta, t, t_next, &mut tokens, &mut stats, &mut sc, rng)
+                    }
+                    Solver::Rk2 { theta } => {
+                        rk2_step(score, theta, t, t_next, &mut tokens, &mut stats, &mut sc, rng)
+                    }
+                    Solver::ParallelDecoding => unreachable!(),
+                }
+                stats.steps += 1;
+            }
+        }
+    }
+
+    finalize(score, *grid.last().unwrap(), &mut tokens, &mut stats, &mut sc, rng);
+    (tokens, stats)
+}
+
+#[derive(Clone, Copy)]
+enum Gate {
+    Linear,
+    Poisson,
+    Exact,
+}
+
+impl Gate {
+    /// Unmask probability for a masked dim over [t', t] with mu_tot = 1/t.
+    #[inline]
+    fn prob(self, t: f64, t_next: f64) -> f64 {
+        let dt = t - t_next;
+        match self {
+            Gate::Linear => (dt / t).min(1.0),
+            Gate::Poisson => 1.0 - (-dt / t).exp(),
+            Gate::Exact => dt / t,
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn one_stage<S: ScoreSource + ?Sized, R: Rng>(
+    score: &S,
+    gate: Gate,
+    t: f64,
+    t_next: f64,
+    tokens: &mut [Tok],
+    stats: &mut GenStats,
+    sc: &mut Scratch,
+    rng: &mut R,
+) {
+    let v = score.vocab();
+    let mask = score.mask_id();
+    score.probs_into(tokens, t, &mut sc.probs);
+    stats.nfe += 1;
+    let p_gate = gate.prob(t, t_next);
+    for i in 0..tokens.len() {
+        if tokens[i] != mask {
+            continue;
+        }
+        if rng.gen_f64() < p_gate {
+            let row = &sc.probs[i * v..(i + 1) * v];
+            if let Some(tok) = categorical(rng, row) {
+                tokens[i] = tok as Tok;
+            }
+        }
+    }
+}
+
+/// θ-trapezoidal (Alg. 2): stage 1 τ-leaps θΔ; stage 2 starts from the
+/// intermediate state and leaps (1-θ)Δ with (α1 μ*_ρ - α2 μ_t)+.
+#[allow(clippy::too_many_arguments)]
+fn trapezoidal_step<S: ScoreSource + ?Sized, R: Rng>(
+    score: &S,
+    theta: f64,
+    t: f64,
+    t_next: f64,
+    tokens: &mut [Tok],
+    stats: &mut GenStats,
+    sc: &mut Scratch,
+    rng: &mut R,
+) {
+    assert!(theta > 0.0 && theta < 1.0, "trapezoidal needs theta in (0,1)");
+    let v = score.vocab();
+    let mask = score.mask_id();
+    let dt = t - t_next;
+    let rho = t - theta * dt;
+    let a1 = 1.0 / (2.0 * theta * (1.0 - theta));
+    let a2 = a1 - 1.0;
+
+    // Stage 1: mu_t = probs / t on masked dims; τ-leap for θΔ.
+    score.probs_into(tokens, t, &mut sc.probs);
+    stats.nfe += 1;
+    let was_masked: Vec<bool> = tokens.iter().map(|&x| x == mask).collect();
+    let p1 = 1.0 - (-(theta * dt) / t).exp();
+    for i in 0..tokens.len() {
+        if !was_masked[i] {
+            continue;
+        }
+        if rng.gen_f64() < p1 {
+            let row = &sc.probs[i * v..(i + 1) * v];
+            if let Some(tok) = categorical(rng, row) {
+                tokens[i] = tok as Tok;
+            }
+        }
+    }
+
+    // Stage 2: second NFE on the intermediate state at the θ-section point.
+    score.probs_into(tokens, rho, &mut sc.probs_star);
+    stats.nfe += 1;
+    let tail = (1.0 - theta) * dt;
+    for i in 0..tokens.len() {
+        if tokens[i] != mask {
+            continue; // unmasked in stage 1 (or before): zero intensity
+        }
+        // Combined per-token intensity; mu rows use the SAME dim from the
+        // original state (was_masked[i] is true here by construction).
+        let mut tot = 0.0;
+        for c in 0..v {
+            let mu_star = sc.probs_star[i * v + c] / rho;
+            let mu_t = sc.probs[i * v + c] / t;
+            let m = (a1 * mu_star - a2 * mu_t).max(0.0);
+            sc.comb[c] = m;
+            tot += m;
+        }
+        let p2 = 1.0 - (-tot * tail).exp();
+        if rng.gen_f64() < p2 {
+            if let Some(tok) = categorical(rng, &sc.comb) {
+                tokens[i] = tok as Tok;
+            }
+        }
+    }
+}
+
+/// Practical θ-RK-2 (Alg. 4): stage 1 as above, but stage 2 restarts from
+/// the ORIGINAL state and leaps the full Δ with ((1-1/2θ) μ_t + (1/2θ) μ*)+.
+/// Stage-1 unmaskings are discarded except through μ* — for θ <= 1/2 a dim
+/// revealed in stage 1 has zero combined intensity and ends the step masked,
+/// which is exactly the conservatism that makes RK-2 trail the trapezoidal
+/// method empirically (Sec. 6).
+#[allow(clippy::too_many_arguments)]
+fn rk2_step<S: ScoreSource + ?Sized, R: Rng>(
+    score: &S,
+    theta: f64,
+    t: f64,
+    t_next: f64,
+    tokens: &mut [Tok],
+    stats: &mut GenStats,
+    sc: &mut Scratch,
+    rng: &mut R,
+) {
+    assert!(theta > 0.0 && theta <= 1.0, "rk2 needs theta in (0,1]");
+    let v = score.vocab();
+    let mask = score.mask_id();
+    let dt = t - t_next;
+    let rho = t - theta * dt;
+    let w = 1.0 / (2.0 * theta);
+
+    score.probs_into(tokens, t, &mut sc.probs);
+    stats.nfe += 1;
+    let original = tokens.to_vec();
+    let p1 = 1.0 - (-(theta * dt) / t).exp();
+    for i in 0..tokens.len() {
+        if original[i] != mask {
+            continue;
+        }
+        if rng.gen_f64() < p1 {
+            let row = &sc.probs[i * v..(i + 1) * v];
+            if let Some(tok) = categorical(rng, row) {
+                tokens[i] = tok as Tok;
+            }
+        }
+    }
+
+    score.probs_into(tokens, rho, &mut sc.probs_star);
+    stats.nfe += 1;
+    let y_star = tokens.to_vec();
+    tokens.copy_from_slice(&original); // Alg. 4 restarts from y_{s_n}
+    for i in 0..tokens.len() {
+        if original[i] != mask {
+            continue;
+        }
+        let star_masked = y_star[i] == mask;
+        let mut tot = 0.0;
+        for c in 0..v {
+            let mu_t = sc.probs[i * v + c] / t;
+            let mu_star = if star_masked {
+                sc.probs_star[i * v + c] / rho
+            } else {
+                0.0
+            };
+            let m = ((1.0 - w) * mu_t + w * mu_star).max(0.0);
+            sc.comb[c] = m;
+            tot += m;
+        }
+        let p2 = 1.0 - (-tot * dt).exp();
+        if rng.gen_f64() < p2 {
+            if let Some(tok) = categorical(rng, &sc.comb) {
+                tokens[i] = tok as Tok;
+            }
+        }
+    }
+}
+
+/// MaskGIT parallel decoding (App. D.4): arccos masking schedule, linear
+/// randomisation (Gumbel noise scaled by the remaining time fraction).
+fn parallel_decode<S: ScoreSource + ?Sized, R: Rng>(
+    score: &S,
+    n_steps: usize,
+    tokens: &mut [Tok],
+    stats: &mut GenStats,
+    sc: &mut Scratch,
+    rng: &mut R,
+) {
+    let l = tokens.len();
+    let v = score.vocab();
+    let mask = score.mask_id();
+    for n in 0..n_steps {
+        let frac = (n + 1) as f64 / n_steps as f64;
+        let target = if n + 1 == n_steps {
+            0
+        } else {
+            ((std::f64::consts::FRAC_PI_2 * frac).cos() * l as f64).ceil() as usize
+        };
+        let t = 1.0 - n as f64 / n_steps as f64; // remaining-time temperature
+        let masked: Vec<usize> =
+            (0..l).filter(|&i| tokens[i] == mask).collect();
+        if masked.is_empty() {
+            break;
+        }
+        let k = masked.len().saturating_sub(target);
+        if k == 0 {
+            continue;
+        }
+        score.probs_into(tokens, t, &mut sc.probs);
+        stats.nfe += 1;
+        stats.steps += 1;
+        // Sample every masked position, score by randomised confidence.
+        let mut scored: Vec<(f64, usize, Tok)> = masked
+            .iter()
+            .map(|&i| {
+                let row = &sc.probs[i * v..(i + 1) * v];
+                let tok = categorical(rng, row).unwrap_or(0);
+                let conf = row[tok].max(1e-30).ln()
+                    + t * crate::util::dist::gumbel(rng, 1e-9);
+                (conf, i, tok as Tok)
+            })
+            .collect();
+        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        for &(_, i, tok) in scored.iter().take(k) {
+            tokens[i] = tok;
+        }
+    }
+}
+
+/// Shared terminal denoise: sample any still-masked dim from its conditional
+/// at the early-stop time.  One NFE when it fires.
+fn finalize<S: ScoreSource + ?Sized, R: Rng>(
+    score: &S,
+    delta: f64,
+    tokens: &mut [Tok],
+    stats: &mut GenStats,
+    sc: &mut Scratch,
+    rng: &mut R,
+) {
+    let mask = score.mask_id();
+    if tokens.iter().all(|&x| x != mask) {
+        return;
+    }
+    let v = score.vocab();
+    score.probs_into(tokens, delta, &mut sc.probs);
+    stats.nfe += 1;
+    for i in 0..tokens.len() {
+        if tokens[i] != mask {
+            continue;
+        }
+        let row = &sc.probs[i * v..(i + 1) * v];
+        if let Some(tok) = categorical(rng, row) {
+            tokens[i] = tok as Tok;
+        } else {
+            tokens[i] = rng.gen_usize(v) as Tok;
+        }
+    }
+}
+
+/// First-Hitting Sampler (Zheng et al. 2024) — exact simulation for the
+/// absorbing case (Sec. 3.1).  With m masked dims at forward time t the next
+/// unmask time satisfies P(no event until s) = (s/t)^m, so s = t u^{1/m};
+/// one uniformly chosen dim is then revealed from its exact conditional.
+/// NFE equals the number of unmask events (= seq_len without early stop).
+pub fn fhs_generate<S: ScoreSource + ?Sized, R: Rng>(
+    score: &S,
+    delta: f64,
+    rng: &mut R,
+) -> (Vec<Tok>, GenStats, Vec<f64>) {
+    let l = score.seq_len();
+    let v = score.vocab();
+    let mask = score.mask_id();
+    let mut tokens = vec![mask; l];
+    let mut stats = GenStats::default();
+    let mut jump_times = Vec::with_capacity(l);
+    let mut sc = Scratch::new(l, v);
+
+    let mut t = 1.0;
+    loop {
+        let masked: Vec<usize> = (0..l).filter(|&i| tokens[i] == mask).collect();
+        if masked.is_empty() {
+            break;
+        }
+        let m = masked.len() as f64;
+        t *= rng.gen_f64().powf(1.0 / m);
+        if t <= delta {
+            break;
+        }
+        let &i = &masked[rng.gen_usize(masked.len())];
+        score.probs_into(&tokens, t, &mut sc.probs);
+        stats.nfe += 1;
+        stats.steps += 1;
+        let row = &sc.probs[i * v..(i + 1) * v];
+        if let Some(tok) = categorical(rng, row) {
+            tokens[i] = tok as Tok;
+        }
+        jump_times.push(t);
+    }
+    finalize(score, delta, &mut tokens, &mut stats, &mut sc, rng);
+    (tokens, stats, jump_times)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::score::markov::{MarkovChain, MarkovOracle};
+    use crate::solvers::grid::masked_uniform;
+    use crate::util::rng::Xoshiro256;
+
+    fn oracle() -> MarkovOracle {
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        MarkovOracle::new(MarkovChain::generate(&mut rng, 6, 0.5), 16)
+    }
+
+    fn all_solvers() -> Vec<Solver> {
+        vec![
+            Solver::Euler,
+            Solver::TauLeaping,
+            Solver::Tweedie,
+            Solver::Trapezoidal { theta: 0.5 },
+            Solver::Rk2 { theta: 0.3 },
+            Solver::ParallelDecoding,
+        ]
+    }
+
+    #[test]
+    fn every_solver_fully_unmasks() {
+        let o = oracle();
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let grid = masked_uniform(16, 1e-3);
+        for s in all_solvers() {
+            let (toks, stats) = generate(&o, s, &grid, &mut rng);
+            assert_eq!(toks.len(), 16);
+            assert!(
+                toks.iter().all(|&t| (t as usize) < 6),
+                "{} left masks: {toks:?}",
+                s.name()
+            );
+            assert!(stats.nfe >= 1, "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn nfe_matches_accounting_modulo_finalize() {
+        let o = oracle();
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let grid = masked_uniform(20, 1e-3);
+        for s in [
+            Solver::Euler,
+            Solver::TauLeaping,
+            Solver::Tweedie,
+            Solver::Trapezoidal { theta: 0.5 },
+            Solver::Rk2 { theta: 0.3 },
+        ] {
+            let (_, stats) = generate(&o, s, &grid, &mut rng);
+            let base = 20 * s.nfe_per_step();
+            assert!(
+                stats.nfe == base || stats.nfe == base + 1,
+                "{}: nfe={} base={base}",
+                s.name(),
+                stats.nfe
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let o = oracle();
+        let grid = masked_uniform(12, 1e-3);
+        for s in all_solvers() {
+            let mut r1 = Xoshiro256::seed_from_u64(99);
+            let mut r2 = Xoshiro256::seed_from_u64(99);
+            let (a, _) = generate(&o, s, &grid, &mut r1);
+            let (b, _) = generate(&o, s, &grid, &mut r2);
+            assert_eq!(a, b, "{} not reproducible", s.name());
+        }
+    }
+
+    #[test]
+    fn tweedie_one_step_marginal_is_stationary() {
+        // Single Tweedie step over the whole horizon = exact conditional
+        // cascade; position-0 frequencies must approach pi.
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let chain = MarkovChain::generate(&mut rng, 5, 0.6);
+        let pi = chain.pi.clone();
+        let o = MarkovOracle::new(chain, 8);
+        let grid = vec![1.0, 1e-9];
+        let n = 6000;
+        let mut counts = vec![0usize; 5];
+        for _ in 0..n {
+            let (toks, _) = generate(&o, Solver::Tweedie, &grid, &mut rng);
+            counts[toks[0] as usize] += 1;
+        }
+        for c in 0..5 {
+            let got = counts[c] as f64 / n as f64;
+            assert!(
+                (got - pi[c]).abs() < 0.035,
+                "tok {c}: got {got} want {}",
+                pi[c]
+            );
+        }
+    }
+
+    #[test]
+    fn fhs_exact_and_jump_times_decreasing() {
+        let o = oracle();
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let (toks, stats, times) = fhs_generate(&o, 1e-3, &mut rng);
+        assert!(toks.iter().all(|&t| (t as usize) < 6));
+        // NFE = unmask events <= L, plus at most one finalize eval.
+        assert!(stats.nfe <= 17, "nfe={}", stats.nfe);
+        for w in times.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+    }
+
+    #[test]
+    fn fhs_matches_tweedie_distribution() {
+        // Both are (near-)exact: unigram frequencies should agree.
+        let mut rng = Xoshiro256::seed_from_u64(8);
+        let chain = MarkovChain::generate(&mut rng, 4, 0.8);
+        let o = MarkovOracle::new(chain, 6);
+        let n = 4000;
+        let mut f_fhs = vec![0usize; 4];
+        let mut f_tw = vec![0usize; 4];
+        let grid = masked_uniform(64, 1e-3);
+        for _ in 0..n {
+            let (a, _, _) = fhs_generate(&o, 1e-3, &mut rng);
+            let (b, _) = generate(&o, Solver::Tweedie, &grid, &mut rng);
+            for &t in &a {
+                f_fhs[t as usize] += 1;
+            }
+            for &t in &b {
+                f_tw[t as usize] += 1;
+            }
+        }
+        let tot = (n * 6) as f64;
+        for c in 0..4 {
+            let d = (f_fhs[c] as f64 - f_tw[c] as f64).abs() / tot;
+            assert!(d < 0.02, "tok {c}: fhs={} tweedie={}", f_fhs[c], f_tw[c]);
+        }
+    }
+
+    #[test]
+    fn parallel_decoding_respects_budget() {
+        let o = oracle();
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let grid = masked_uniform(8, 1e-3);
+        let (toks, stats) = generate(&o, Solver::ParallelDecoding, &grid, &mut rng);
+        assert!(toks.iter().all(|&t| (t as usize) < 6));
+        assert!(stats.nfe <= 9, "nfe={}", stats.nfe);
+    }
+
+    #[test]
+    fn trapezoidal_invalid_theta_panics() {
+        let o = oracle();
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let grid = masked_uniform(4, 1e-3);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            generate(&o, Solver::Trapezoidal { theta: 1.0 }, &grid, &mut rng)
+        }));
+        assert!(res.is_err());
+    }
+}

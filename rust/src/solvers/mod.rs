@@ -1,0 +1,111 @@
+//! Inference solvers for discrete diffusion models — the paper's subject.
+//!
+//! Approximate schemes (Sec. 3.2/4): Euler, τ-leaping (Alg. 3), Tweedie
+//! τ-leaping, **θ-trapezoidal (Alg. 2)** and **θ-RK-2 (practical Alg. 4)** —
+//! the paper's contributions — plus parallel decoding (Chang et al. 2022).
+//! Exact schemes (Sec. 3.1): the first-hitting sampler for the absorbing
+//! case ([`masked::fhs_generate`]) and uniformization
+//! ([`crate::ctmc::uniformization`]).
+//!
+//! Two state families:
+//! - [`masked`]: token sequences under absorbing-state diffusion with the
+//!   log-linear schedule (the text/image experiments, Secs. 6.2-6.4);
+//! - [`toy`]: the Sec. 6.1 single-variable uniform CTMC with analytic score.
+
+pub mod grid;
+pub mod masked;
+pub mod toy;
+
+/// Solver selection shared by the CLI, coordinator and experiment harnesses.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Solver {
+    Euler,
+    TauLeaping,
+    Tweedie,
+    /// θ-trapezoidal (Alg. 2); second-order for every θ in (0, 1) (Thm. 5.4).
+    Trapezoidal { theta: f64 },
+    /// Practical θ-RK-2 (Alg. 4); second-order for θ in (0, 1/2] (Thm. 5.5).
+    Rk2 { theta: f64 },
+    /// MaskGIT-style parallel decoding with the arccos schedule (App. D.4).
+    ParallelDecoding,
+}
+
+impl Solver {
+    /// Score evaluations per grid step (the paper's NFE accounting).
+    pub fn nfe_per_step(&self) -> usize {
+        match self {
+            Solver::Trapezoidal { .. } | Solver::Rk2 { .. } => 2,
+            _ => 1,
+        }
+    }
+
+    /// Steps affordable within an NFE budget.
+    pub fn steps_for_nfe(&self, nfe: usize) -> usize {
+        (nfe / self.nfe_per_step()).max(1)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Solver::Euler => "euler",
+            Solver::TauLeaping => "tau-leaping",
+            Solver::Tweedie => "tweedie",
+            Solver::Trapezoidal { .. } => "theta-trapezoidal",
+            Solver::Rk2 { .. } => "theta-rk2",
+            Solver::ParallelDecoding => "parallel-decoding",
+        }
+    }
+
+    /// Parse e.g. "trapezoidal:0.5", "rk2:0.3", "tau", "euler".
+    pub fn parse(s: &str) -> anyhow::Result<Solver> {
+        let (name, theta) = match s.split_once(':') {
+            Some((n, t)) => (n, Some(t.parse::<f64>()?)),
+            None => (s, None),
+        };
+        let th = theta.unwrap_or(0.5);
+        Ok(match name {
+            "euler" => Solver::Euler,
+            "tau" | "tau-leaping" => Solver::TauLeaping,
+            "tweedie" => Solver::Tweedie,
+            "trapezoidal" | "trap" => Solver::Trapezoidal { theta: th },
+            "rk2" => Solver::Rk2 { theta: th },
+            "parallel" | "parallel-decoding" => Solver::ParallelDecoding,
+            _ => anyhow::bail!("unknown solver {s:?}"),
+        })
+    }
+}
+
+/// Per-generation statistics.
+#[derive(Clone, Debug, Default)]
+pub struct GenStats {
+    /// Score-function evaluations actually performed.
+    pub nfe: usize,
+    /// Grid steps taken.
+    pub steps: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nfe_accounting() {
+        assert_eq!(Solver::Euler.nfe_per_step(), 1);
+        assert_eq!(Solver::Trapezoidal { theta: 0.5 }.nfe_per_step(), 2);
+        assert_eq!(Solver::Rk2 { theta: 0.3 }.nfe_per_step(), 2);
+        assert_eq!(Solver::Trapezoidal { theta: 0.5 }.steps_for_nfe(128), 64);
+        assert_eq!(Solver::TauLeaping.steps_for_nfe(128), 128);
+        assert_eq!(Solver::Tweedie.steps_for_nfe(1), 1);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(Solver::parse("euler").unwrap(), Solver::Euler);
+        assert_eq!(
+            Solver::parse("trapezoidal:0.4").unwrap(),
+            Solver::Trapezoidal { theta: 0.4 }
+        );
+        assert_eq!(Solver::parse("rk2:0.25").unwrap(), Solver::Rk2 { theta: 0.25 });
+        assert_eq!(Solver::parse("tau").unwrap(), Solver::TauLeaping);
+        assert!(Solver::parse("nope").is_err());
+    }
+}

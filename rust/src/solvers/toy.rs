@@ -1,0 +1,248 @@
+//! Solvers for the Sec. 6.1 toy model (single variable, uniform CTMC,
+//! analytic score) — mirrors `python/compile/steps.py` toy_step_* exactly.
+//!
+//! These drive Fig. 2 (empirical KL vs step count with bootstrap CIs) and
+//! the runtime cross-validation tests (rust vs AOT-artifact numerics).
+
+use crate::ctmc::ToyModel;
+use crate::solvers::Solver;
+use crate::util::dist::categorical_f64;
+use crate::util::rng::Rng;
+
+/// One leaping sub-step: nu-indexed intensities, single event gate.
+fn sub_step<R: Rng>(
+    model: &ToyModel,
+    x: usize,
+    mu: &[f64],
+    dt: f64,
+    poisson_gate: bool,
+    rng: &mut R,
+) -> usize {
+    let tot: f64 = mu.iter().sum();
+    if tot <= 0.0 {
+        return x;
+    }
+    let p = if poisson_gate {
+        1.0 - (-tot * dt).exp()
+    } else {
+        (tot * dt).min(1.0)
+    };
+    if rng.gen_f64() < p {
+        let nu = categorical_f64(rng, mu);
+        (x + nu) % model.n_states()
+    } else {
+        x
+    }
+}
+
+/// Advance one interval [t_next, t] (forward times, t > t_next).
+pub fn step<R: Rng>(
+    model: &ToyModel,
+    solver: Solver,
+    x: usize,
+    t: f64,
+    t_next: f64,
+    rng: &mut R,
+) -> usize {
+    let s = model.n_states();
+    let mut mu = vec![0.0; s];
+    let dt = t - t_next;
+    match solver {
+        Solver::Euler => {
+            model.reverse_intensities(x, t, &mut mu);
+            sub_step(model, x, &mu, dt, false, rng)
+        }
+        Solver::TauLeaping | Solver::Tweedie => {
+            // Tweedie has no separate meaning in the uniform-state toy (no
+            // closed-form posterior gate); the paper benchmarks only tau /
+            // trapezoidal / rk2 here.
+            model.reverse_intensities(x, t, &mut mu);
+            sub_step(model, x, &mu, dt, true, rng)
+        }
+        Solver::Trapezoidal { theta } => {
+            assert!(theta > 0.0 && theta < 1.0);
+            let rho = t - theta * dt;
+            let a1 = 1.0 / (2.0 * theta * (1.0 - theta));
+            let a2 = a1 - 1.0;
+            model.reverse_intensities(x, t, &mut mu);
+            let y_star = sub_step(model, x, &mu, theta * dt, true, rng);
+            let mut mu_star = vec![0.0; s];
+            model.reverse_intensities(y_star, rho, &mut mu_star);
+            // Eq. 16: mu* on the intermediate state, mu_t on the ORIGINAL
+            // state, both nu-indexed; jump applies from y*.
+            let mut comb = vec![0.0; s];
+            for nu in 0..s {
+                comb[nu] = (a1 * mu_star[nu] - a2 * mu[nu]).max(0.0);
+            }
+            sub_step(model, y_star, &comb, (1.0 - theta) * dt, true, rng)
+        }
+        Solver::Rk2 { theta } => {
+            assert!(theta > 0.0 && theta <= 1.0);
+            let rho = t - theta * dt;
+            let w = 1.0 / (2.0 * theta);
+            model.reverse_intensities(x, t, &mut mu);
+            let y_star = sub_step(model, x, &mu, theta * dt, true, rng);
+            let mut mu_star = vec![0.0; s];
+            model.reverse_intensities(y_star, rho, &mut mu_star);
+            let mut comb = vec![0.0; s];
+            for nu in 0..s {
+                comb[nu] = ((1.0 - w) * mu[nu] + w * mu_star[nu]).max(0.0);
+            }
+            // Alg. 4 restarts from the original state with the full step.
+            sub_step(model, x, &comb, dt, true, rng)
+        }
+        Solver::ParallelDecoding => {
+            panic!("parallel decoding is undefined for the toy model")
+        }
+    }
+}
+
+/// Run the full backward pass over a grid of forward times (descending).
+pub fn generate<R: Rng>(
+    model: &ToyModel,
+    solver: Solver,
+    grid: &[f64],
+    rng: &mut R,
+) -> usize {
+    assert!(crate::solvers::grid::is_valid_grid(grid));
+    let mut x = model.sample_stationary(rng);
+    for w in grid.windows(2) {
+        x = step(model, solver, x, w[0], w[1], rng);
+    }
+    x
+}
+
+/// Generate `n` samples and return the empirical distribution (the Fig. 2
+/// estimator, `np.bincount` style), parallelised over chunks with forked
+/// RNG streams for reproducibility.
+pub fn empirical_distribution(
+    model: &ToyModel,
+    solver: Solver,
+    grid: &[f64],
+    n: usize,
+    seed: u64,
+    threads: usize,
+) -> Vec<f64> {
+    use crate::util::threadpool::par_map_indexed;
+    let s = model.n_states();
+    // Chunk count is FIXED (not thread-derived) so the per-chunk RNG
+    // streams — and therefore the results — are identical for any thread
+    // count.
+    let chunks = 64.min(n.max(1));
+    let per = n.div_ceil(chunks);
+    let counts = par_map_indexed(chunks, threads, |c| {
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(
+            seed ^ (c as u64).wrapping_mul(0x9E3779B97F4A7C15),
+        );
+        let lo = c * per;
+        let hi = ((c + 1) * per).min(n);
+        let mut counts = vec![0u64; s];
+        for _ in lo..hi {
+            counts[generate(model, solver, grid, &mut rng)] += 1;
+        }
+        counts
+    });
+    let mut tot = vec![0u64; s];
+    for c in counts {
+        for (i, v) in c.into_iter().enumerate() {
+            tot[i] += v;
+        }
+    }
+    let n_tot: u64 = tot.iter().sum();
+    tot.into_iter().map(|c| c as f64 / n_tot.max(1) as f64).collect()
+}
+
+/// Exact sampler baseline for the toy model (uniformization, Sec. 3.1).
+pub fn exact_sample<R: Rng>(model: &ToyModel, delta: f64, rng: &mut R) -> usize {
+    use crate::ctmc::uniformization::{simulate_backward, ToyJump};
+    let x0 = model.sample_stationary(rng);
+    let (x, _) = simulate_backward(&ToyJump(model), x0, model.horizon, delta, 0.5, rng);
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::grid::toy_uniform;
+    use crate::util::rng::Xoshiro256;
+
+    fn model() -> ToyModel {
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        ToyModel::paper_default(&mut rng)
+    }
+
+    #[test]
+    fn all_toy_solvers_produce_valid_states() {
+        let m = model();
+        let grid = toy_uniform(32, m.horizon, 1e-3);
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for s in [
+            Solver::Euler,
+            Solver::TauLeaping,
+            Solver::Trapezoidal { theta: 0.5 },
+            Solver::Rk2 { theta: 0.5 },
+        ] {
+            for _ in 0..200 {
+                let x = generate(&m, s, &grid, &mut rng);
+                assert!(x < m.n_states());
+            }
+        }
+    }
+
+    #[test]
+    fn trapezoidal_converges_to_p0() {
+        // Coarse statistical check (the full Fig. 2 sweep lives in exp/).
+        let m = model();
+        let grid = toy_uniform(64, m.horizon, 1e-3);
+        let q = empirical_distribution(&m, Solver::Trapezoidal { theta: 0.5 }, &grid, 50_000, 42, 4);
+        let kl = m.kl_from_p0(&q);
+        assert!(kl < 0.02, "kl={kl}");
+    }
+
+    #[test]
+    fn trapezoidal_beats_tau_at_equal_steps() {
+        // The headline ordering at coarse discretisation, equal STEP count
+        // (trap uses 2 NFE/step; the NFE-matched comparison is in exp/).
+        let m = model();
+        let grid = toy_uniform(8, m.horizon, 1e-3);
+        let n = 200_000;
+        let q_trap =
+            empirical_distribution(&m, Solver::Trapezoidal { theta: 0.5 }, &grid, n, 1, 4);
+        let q_tau = empirical_distribution(&m, Solver::TauLeaping, &grid, n, 2, 4);
+        let (kl_trap, kl_tau) = (m.kl_from_p0(&q_trap), m.kl_from_p0(&q_tau));
+        assert!(
+            kl_trap < kl_tau,
+            "trap={kl_trap} tau={kl_tau} (expected trap < tau)"
+        );
+    }
+
+    #[test]
+    fn exact_sampler_recovers_p0() {
+        let m = model();
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let mut counts = vec![0usize; m.n_states()];
+        let n = 30_000;
+        for _ in 0..n {
+            counts[exact_sample(&m, 1e-3, &mut rng)] += 1;
+        }
+        let q: Vec<f64> = counts.iter().map(|&c| c as f64 / n as f64).collect();
+        assert!(m.kl_from_p0(&q) < 0.01, "kl={}", m.kl_from_p0(&q));
+    }
+
+    #[test]
+    fn empirical_distribution_reproducible() {
+        let m = model();
+        let grid = toy_uniform(16, m.horizon, 1e-3);
+        let a = empirical_distribution(&m, Solver::TauLeaping, &grid, 10_000, 9, 4);
+        let b = empirical_distribution(&m, Solver::TauLeaping, &grid, 10_000, 9, 2);
+        assert_eq!(a, b, "thread count must not change results");
+    }
+
+    #[test]
+    #[should_panic]
+    fn parallel_decoding_rejected() {
+        let m = model();
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        step(&m, Solver::ParallelDecoding, 0, 1.0, 0.5, &mut rng);
+    }
+}

@@ -1,0 +1,329 @@
+//! Sampling distributions built on [`crate::util::rng::Rng`].
+//!
+//! Everything the solvers need: exponential (exact-method waiting times),
+//! Poisson (τ-leap jump counts), Bernoulli/binomial, categorical (linear CDF
+//! and alias method), and Gumbel (parallel decoding confidence noise).
+
+use super::rng::Rng;
+
+/// Exp(rate) via inverse CDF.
+#[inline]
+pub fn exponential<R: Rng>(rng: &mut R, rate: f64) -> f64 {
+    debug_assert!(rate > 0.0);
+    -(rng.gen_f64().ln()) / rate
+}
+
+/// Poisson(mean). Knuth multiplication for small means, PA-normal
+/// (Atkinson-style) rejection for large.
+pub fn poisson<R: Rng>(rng: &mut R, mean: f64) -> u64 {
+    debug_assert!(mean >= 0.0);
+    if mean == 0.0 {
+        return 0;
+    }
+    if mean < 30.0 {
+        // Knuth: multiply uniforms until the product drops below e^-mean.
+        let l = (-mean).exp();
+        let mut k = 0u64;
+        let mut p = 1.0;
+        loop {
+            p *= rng.gen_f64();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    }
+    // Transformed rejection with squeeze (Hörmann's PTRS).
+    let b = 0.931 + 2.53 * mean.sqrt();
+    let a = -0.059 + 0.02483 * b;
+    let inv_alpha = 1.1239 + 1.1328 / (b - 3.4);
+    let v_r = 0.9277 - 3.6224 / (b - 2.0);
+    loop {
+        let u = rng.gen_f64() - 0.5;
+        let v = rng.gen_f64();
+        let us = 0.5 - u.abs();
+        let k = ((2.0 * a / us + b) * u + mean + 0.43).floor();
+        if us >= 0.07 && v <= v_r {
+            return k as u64;
+        }
+        if k < 0.0 || (us < 0.013 && v > us) {
+            continue;
+        }
+        let log_v = (v * inv_alpha / (a / (us * us) + b)).ln();
+        let rhs = k * mean.ln() - mean - ln_factorial(k as u64);
+        if log_v <= rhs {
+            return k as u64;
+        }
+    }
+}
+
+/// ln(k!) via Stirling series for k > 20, table otherwise.
+pub fn ln_factorial(k: u64) -> f64 {
+    const TABLE: [f64; 21] = [
+        0.0,
+        0.0,
+        0.6931471805599453,
+        1.791759469228055,
+        3.1780538303479458,
+        4.787491742782046,
+        6.579251212010101,
+        8.525161361065415,
+        10.60460290274525,
+        12.801827480081469,
+        15.104412573075516,
+        17.502307845873887,
+        19.987214495661885,
+        22.552163853123425,
+        25.19122118273868,
+        27.89927138384089,
+        30.671860106080672,
+        33.50507345013689,
+        36.39544520803305,
+        39.339884187199495,
+        42.335616460753485,
+    ];
+    if k <= 20 {
+        return TABLE[k as usize];
+    }
+    let x = (k + 1) as f64;
+    (x - 0.5) * x.ln() - x + 0.5 * (2.0 * std::f64::consts::PI).ln()
+        + 1.0 / (12.0 * x)
+        - 1.0 / (360.0 * x * x * x)
+}
+
+/// Binomial(n, p) by inversion for small n*p, sum of Bernoullis otherwise
+/// for small n, normal-free (exact) throughout.
+pub fn binomial<R: Rng>(rng: &mut R, n: u64, p: f64) -> u64 {
+    debug_assert!((0.0..=1.0).contains(&p));
+    if p == 0.0 || n == 0 {
+        return 0;
+    }
+    if p >= 1.0 {
+        return n;
+    }
+    if p > 0.5 {
+        return n - binomial(rng, n, 1.0 - p);
+    }
+    if n <= 64 {
+        let mut k = 0;
+        for _ in 0..n {
+            if rng.gen_f64() < p {
+                k += 1;
+            }
+        }
+        return k;
+    }
+    // Inversion by waiting times (geometric skips): O(np) expected.
+    let lq = (1.0 - p).ln();
+    let mut k: u64 = 0;
+    let mut i: u64 = 0;
+    loop {
+        let g = (rng.gen_f64().ln() / lq).floor() as u64 + 1;
+        i += g;
+        if i > n {
+            return k;
+        }
+        k += 1;
+    }
+}
+
+/// Categorical draw from unnormalised non-negative weights (linear CDF scan).
+/// Returns `None` when the total mass is zero.
+pub fn categorical<R: Rng>(rng: &mut R, weights: &[f64]) -> Option<usize> {
+    let tot: f64 = weights.iter().sum();
+    if !(tot > 0.0) {
+        return None;
+    }
+    let mut thresh = rng.gen_f64() * tot;
+    for (i, &w) in weights.iter().enumerate() {
+        thresh -= w;
+        if thresh < 0.0 {
+            return Some(i);
+        }
+    }
+    // Floating-point slack: return the last positive-weight index.
+    weights.iter().rposition(|&w| w > 0.0)
+}
+
+/// Categorical draw from weights with known-positive total mass.
+#[inline]
+pub fn categorical_f64<R: Rng>(rng: &mut R, weights: &[f64]) -> usize {
+    categorical(rng, weights).expect("categorical_f64 requires positive mass")
+}
+
+/// Walker alias table for O(1) categorical sampling from a fixed law.
+#[derive(Clone, Debug)]
+pub struct AliasTable {
+    prob: Vec<f64>,
+    alias: Vec<usize>,
+}
+
+impl AliasTable {
+    pub fn new(weights: &[f64]) -> Self {
+        let n = weights.len();
+        let tot: f64 = weights.iter().sum();
+        assert!(tot > 0.0, "alias table needs positive total mass");
+        let mut prob: Vec<f64> = weights.iter().map(|w| w * n as f64 / tot).collect();
+        let mut alias = vec![0usize; n];
+        let mut small: Vec<usize> = (0..n).filter(|&i| prob[i] < 1.0).collect();
+        let mut large: Vec<usize> = (0..n).filter(|&i| prob[i] >= 1.0).collect();
+        while let (Some(s), Some(l)) = (small.pop(), large.pop()) {
+            alias[s] = l;
+            prob[l] = (prob[l] + prob[s]) - 1.0;
+            if prob[l] < 1.0 {
+                small.push(l);
+            } else {
+                large.push(l);
+            }
+        }
+        for i in small.into_iter().chain(large) {
+            prob[i] = 1.0;
+        }
+        Self { prob, alias }
+    }
+
+    #[inline]
+    pub fn sample<R: Rng>(&self, rng: &mut R) -> usize {
+        let n = self.prob.len();
+        let i = rng.gen_usize(n);
+        if rng.gen_f64() < self.prob[i] {
+            i
+        } else {
+            self.alias[i]
+        }
+    }
+}
+
+/// Standard Gumbel(0, 1) draw.
+#[inline]
+pub fn gumbel<R: Rng>(rng: &mut R, u_clip: f64) -> f64 {
+    let u = rng.gen_f64().clamp(u_clip, 1.0 - u_clip);
+    -(-u.ln()).ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn rng() -> Xoshiro256 {
+        Xoshiro256::seed_from_u64(12345)
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = rng();
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| exponential(&mut r, 2.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn poisson_small_mean_moments() {
+        let mut r = rng();
+        let lam = 3.7;
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| poisson(&mut r, lam) as f64).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!((mean - lam).abs() < 0.05, "mean={mean}");
+        assert!((var - lam).abs() < 0.15, "var={var}");
+    }
+
+    #[test]
+    fn poisson_large_mean_moments() {
+        let mut r = rng();
+        let lam = 250.0;
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| poisson(&mut r, lam) as f64).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!((mean - lam).abs() < 0.5, "mean={mean}");
+        assert!((var / lam - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn poisson_zero_mean() {
+        let mut r = rng();
+        assert_eq!(poisson(&mut r, 0.0), 0);
+    }
+
+    #[test]
+    fn ln_factorial_matches_direct() {
+        let mut acc = 0.0f64;
+        for k in 1..=30u64 {
+            acc += (k as f64).ln();
+            assert!(
+                (ln_factorial(k) - acc).abs() < 1e-8,
+                "k={k} got={} want={acc}",
+                ln_factorial(k)
+            );
+        }
+    }
+
+    #[test]
+    fn binomial_moments_small_and_large() {
+        let mut r = rng();
+        for (n_tr, p) in [(40u64, 0.3), (5000u64, 0.002), (300u64, 0.9)] {
+            let n = 30_000;
+            let xs: Vec<f64> = (0..n).map(|_| binomial(&mut r, n_tr, p) as f64).collect();
+            let mean = xs.iter().sum::<f64>() / n as f64;
+            let want = n_tr as f64 * p;
+            let sd = (n_tr as f64 * p * (1.0 - p)).sqrt();
+            assert!(
+                (mean - want).abs() < 4.0 * sd / (n as f64).sqrt() + 0.02,
+                "n={n_tr} p={p} mean={mean} want={want}"
+            );
+        }
+    }
+
+    #[test]
+    fn categorical_frequencies() {
+        let mut r = rng();
+        let w = [1.0, 2.0, 3.0, 4.0];
+        let n = 100_000;
+        let mut counts = [0usize; 4];
+        for _ in 0..n {
+            counts[categorical(&mut r, &w).unwrap()] += 1;
+        }
+        for i in 0..4 {
+            let got = counts[i] as f64 / n as f64;
+            let want = w[i] / 10.0;
+            assert!((got - want).abs() < 0.01, "i={i} got={got} want={want}");
+        }
+    }
+
+    #[test]
+    fn categorical_zero_mass() {
+        let mut r = rng();
+        assert_eq!(categorical(&mut r, &[0.0, 0.0]), None);
+    }
+
+    #[test]
+    fn alias_table_matches_linear() {
+        let mut r = rng();
+        let w = [0.5, 0.0, 2.5, 1.0, 6.0];
+        let table = AliasTable::new(&w);
+        let n = 200_000;
+        let mut counts = [0usize; 5];
+        for _ in 0..n {
+            counts[table.sample(&mut r)] += 1;
+        }
+        let tot: f64 = w.iter().sum();
+        for i in 0..5 {
+            let got = counts[i] as f64 / n as f64;
+            let want = w[i] / tot;
+            assert!((got - want).abs() < 0.01, "i={i} got={got} want={want}");
+        }
+        assert_eq!(counts[1], 0);
+    }
+
+    #[test]
+    fn gumbel_location() {
+        let mut r = rng();
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| gumbel(&mut r, 1e-12)).sum::<f64>() / n as f64;
+        // E[Gumbel] = Euler-Mascheroni.
+        assert!((mean - 0.5772).abs() < 0.02, "mean={mean}");
+    }
+}

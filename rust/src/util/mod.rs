@@ -1,0 +1,14 @@
+//! From-scratch substrates.
+//!
+//! This image vendors only the `xla` crate's dependency closure, so every
+//! support library a serving system normally pulls from crates.io is
+//! implemented here: PRNG ([`rng`]), sampling distributions ([`dist`]), JSON
+//! ([`json`]), CLI parsing ([`cli`]), a thread pool ([`threadpool`]) and
+//! statistics (mean/CI/bootstrap/regression, [`stats`]).
+
+pub mod rng;
+pub mod dist;
+pub mod json;
+pub mod cli;
+pub mod threadpool;
+pub mod stats;

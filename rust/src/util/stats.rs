@@ -1,0 +1,243 @@
+//! Statistics: summary moments, quantiles, histograms, bootstrap confidence
+//! intervals (used for Fig. 2's 95% CI exactly as App. D.2 prescribes), and
+//! least-squares regression (the log-log convergence-slope fits).
+
+use crate::util::rng::{Rng, Xoshiro256};
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased sample variance.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Linear-interpolated quantile, q in [0, 1]; input need not be sorted.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile_sorted(&v, q)
+}
+
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let pos = q.clamp(0.0, 1.0) * (n - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Counts of `xs` into `n_bins` equal bins over [lo, hi].
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, n_bins: usize) -> Vec<usize> {
+    assert!(hi > lo && n_bins > 0);
+    let mut bins = vec![0usize; n_bins];
+    let w = (hi - lo) / n_bins as f64;
+    for &x in xs {
+        if x < lo || x >= hi {
+            continue;
+        }
+        let i = (((x - lo) / w) as usize).min(n_bins - 1);
+        bins[i] += 1;
+    }
+    bins
+}
+
+/// Empirical distribution of categorical samples (np.bincount equivalent).
+pub fn bincount(xs: &[usize], n: usize) -> Vec<f64> {
+    let mut counts = vec![0usize; n];
+    for &x in xs {
+        assert!(x < n, "category {x} out of range {n}");
+        counts[x] += 1;
+    }
+    let tot = xs.len().max(1) as f64;
+    counts.into_iter().map(|c| c as f64 / tot).collect()
+}
+
+/// Bootstrap confidence interval for a statistic of iid samples.
+///
+/// `stat` maps a resample to a scalar; returns (lo, hi) at the given level
+/// (e.g. 0.95) from `n_boot` resamples.  Matches the paper's App. D.2
+/// procedure (1000 resamples, 95%).
+pub fn bootstrap_ci<F>(xs: &[f64], n_boot: usize, level: f64, seed: u64, stat: F) -> (f64, f64)
+where
+    F: Fn(&[f64]) -> f64,
+{
+    assert!(!xs.is_empty());
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut vals = Vec::with_capacity(n_boot);
+    let mut resample = vec![0.0; xs.len()];
+    for _ in 0..n_boot {
+        for r in resample.iter_mut() {
+            *r = xs[rng.gen_usize(xs.len())];
+        }
+        vals.push(stat(&resample));
+    }
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let alpha = (1.0 - level) / 2.0;
+    (
+        quantile_sorted(&vals, alpha),
+        quantile_sorted(&vals, 1.0 - alpha),
+    )
+}
+
+/// Ordinary least squares y = a + b x. Returns (intercept, slope, r^2).
+pub fn linreg(x: &[f64], y: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(x.len(), y.len());
+    assert!(x.len() >= 2);
+    let n = x.len() as f64;
+    let mx = mean(x);
+    let my = mean(y);
+    let sxy: f64 = x.iter().zip(y).map(|(a, b)| (a - mx) * (b - my)).sum();
+    let sxx: f64 = x.iter().map(|a| (a - mx) * (a - mx)).sum();
+    let syy: f64 = y.iter().map(|b| (b - my) * (b - my)).sum();
+    let slope = sxy / sxx;
+    let intercept = my - slope * mx;
+    let r2 = if syy == 0.0 { 1.0 } else { (sxy * sxy) / (sxx * syy) };
+    let _ = n;
+    (intercept, slope, r2)
+}
+
+/// Log-log regression: fits y ~ c * x^slope; returns (slope, r^2).
+/// The Fig. 2 convergence-order estimator.
+pub fn loglog_slope(x: &[f64], y: &[f64]) -> (f64, f64) {
+    let lx: Vec<f64> = x.iter().map(|v| v.ln()).collect();
+    let ly: Vec<f64> = y.iter().map(|v| v.max(1e-300).ln()).collect();
+    let (_, slope, r2) = linreg(&lx, &ly);
+    (slope, r2)
+}
+
+/// Welford online accumulator for streaming metrics.
+#[derive(Clone, Debug, Default)]
+pub struct Online {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Online {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moments() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(mean(&xs), 3.0);
+        assert!((variance(&xs) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 5.0);
+        assert_eq!(quantile(&xs, 0.5), 3.0);
+        assert!((quantile(&xs, 0.25) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let xs = [0.1, 0.2, 0.5, 0.9, 1.5, -0.3];
+        let h = histogram(&xs, 0.0, 1.0, 2);
+        // [0, .5): {0.1, 0.2}; [.5, 1): {0.5, 0.9}; 1.5 and -0.3 fall out.
+        assert_eq!(h, vec![2, 2]);
+    }
+
+    #[test]
+    fn bincount_normalises() {
+        let b = bincount(&[0, 0, 1, 2], 4);
+        assert_eq!(b, vec![0.5, 0.25, 0.25, 0.0]);
+    }
+
+    #[test]
+    fn bootstrap_contains_truth() {
+        // Mean of U(0,1) samples: CI should bracket 0.5 nearly always.
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let xs: Vec<f64> = (0..2000).map(|_| rng.gen_f64()).collect();
+        let (lo, hi) = bootstrap_ci(&xs, 500, 0.95, 1, mean);
+        assert!(lo < 0.5 && 0.5 < hi, "({lo}, {hi})");
+        assert!(hi - lo < 0.06);
+    }
+
+    #[test]
+    fn linreg_exact_line() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [3.0, 5.0, 7.0, 9.0];
+        let (a, b, r2) = linreg(&x, &y);
+        assert!((a - 1.0).abs() < 1e-12);
+        assert!((b - 2.0).abs() < 1e-12);
+        assert!((r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn loglog_recovers_power() {
+        let x: Vec<f64> = (1..20).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| 3.0 * v.powf(-2.0)).collect();
+        let (slope, r2) = loglog_slope(&x, &y);
+        assert!((slope + 2.0).abs() < 1e-9, "slope={slope}");
+        assert!(r2 > 0.999999);
+    }
+
+    #[test]
+    fn online_matches_batch() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut o = Online::new();
+        for &x in &xs {
+            o.push(x);
+        }
+        assert!((o.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((o.variance() - variance(&xs)).abs() < 1e-12);
+        assert_eq!(o.min, 2.0);
+        assert_eq!(o.max, 9.0);
+    }
+}

@@ -1,0 +1,108 @@
+//! Shape-level reproduction tests: tiny-scale versions of the paper's
+//! experiments must reproduce the qualitative claims (who wins, slopes,
+//! regime boundaries).  These are the acceptance tests of DESIGN.md's
+//! experiment index — absolute numbers are irrelevant, orderings are not.
+
+use fastdds::ctmc::ToyModel;
+use fastdds::exp::{fig2, tab2, Scale};
+use fastdds::util::rng::Xoshiro256;
+
+#[test]
+fn fig2_shape_trapezoidal_second_order() {
+    // Reduced Fig. 2: fewer samples, fewer grid points; the slope and the
+    // absolute ordering must still hold.
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    let model = ToyModel::paper_default(&mut rng);
+    let cfg = fig2::Fig2Config {
+        step_counts: vec![4, 8, 16, 32],
+        n_samples: 60_000,
+        n_boot: 100,
+        threads: 8,
+        seed: 99,
+    };
+    let result = fig2::run(&model, &cfg);
+    assert!(
+        fig2::shape_holds(&result),
+        "Fig. 2 shape failed: {}",
+        result.to_string()
+    );
+}
+
+#[test]
+fn tab2_shape_trapezoidal_wins_low_nfe() {
+    let scale = Scale { full: false };
+    let mut cfg = tab2::Tab2Config::new(scale);
+    cfg.vocab = 16;
+    cfg.seq_len = 64;
+    cfg.nfe_values = vec![16, 32, 64];
+    cfg.n_samples = 96;
+    let result = tab2::run(&cfg);
+    assert!(
+        tab2::shape_holds(&result),
+        "Tab. 2 shape failed: {}",
+        result.to_string()
+    );
+    // Low-NFE regime: the paper's emphasised margin — trapezoidal strictly
+    // below tau-leaping at NFE 16.
+    let series = result.get("series").unwrap().as_arr().unwrap();
+    let first = |name: &str| -> f64 {
+        series
+            .iter()
+            .find(|s| s.get("solver").unwrap().as_str().unwrap() == name)
+            .unwrap()
+            .get("perplexity")
+            .unwrap()
+            .as_f64_vec()
+            .unwrap()[0]
+    };
+    assert!(
+        first("theta-trapezoidal") < first("tau-leaping"),
+        "trap {} vs tau {} at NFE 16",
+        first("theta-trapezoidal"),
+        first("tau-leaping")
+    );
+}
+
+#[test]
+fn toy_trapezoidal_beats_rk2_at_equal_nfe() {
+    // NFE-matched comparison (both two-stage, so equal steps = equal NFE):
+    // the paper's Fig. 2 claim that trapezoidal dominates RK-2.
+    use fastdds::solvers::{grid, toy, Solver};
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    let model = ToyModel::paper_default(&mut rng);
+    let g = grid::toy_uniform(16, model.horizon, 1e-3);
+    let n = 150_000;
+    let trap = toy::empirical_distribution(
+        &model,
+        Solver::Trapezoidal { theta: 0.5 },
+        &g,
+        n,
+        1,
+        8,
+    );
+    let rk2 = toy::empirical_distribution(&model, Solver::Rk2 { theta: 0.5 }, &g, n, 2, 8);
+    let (kl_trap, kl_rk2) = (model.kl_from_p0(&trap), model.kl_from_p0(&rk2));
+    assert!(
+        kl_trap < kl_rk2,
+        "trap {kl_trap} must beat rk2 {kl_rk2} at equal NFE"
+    );
+}
+
+#[test]
+fn rk2_extrapolation_regime_beats_interpolation() {
+    // Thm. 5.5 / Fig. 5: RK-2 peaks deep in the extrapolation regime
+    // (paper: theta in [0.15, 0.4]); theta = 0.2 must beat theta = 0.5 on
+    // the toy model, where theta = 0.5 is merely an interpolation midpoint.
+    use fastdds::solvers::{grid, toy, Solver};
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    let model = ToyModel::paper_default(&mut rng);
+    let g = grid::toy_uniform(32, model.horizon, 1e-3);
+    let n = 300_000;
+    let lo = toy::empirical_distribution(&model, Solver::Rk2 { theta: 0.2 }, &g, n, 3, 8);
+    let hi = toy::empirical_distribution(&model, Solver::Rk2 { theta: 0.5 }, &g, n, 4, 8);
+    let (kl_lo, kl_hi) = (model.kl_from_p0(&lo), model.kl_from_p0(&hi));
+    assert!(
+        kl_lo < kl_hi,
+        "rk2 theta=0.2 ({kl_lo}) must beat theta=0.5 ({kl_hi})"
+    );
+}

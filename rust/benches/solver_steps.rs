@@ -2,48 +2,153 @@
 //! scheme on the oracle path, the end-to-end per-sample cost at the paper's
 //! NFE budgets, and the PJRT artifact dispatch cost when artifacts exist.
 //! One bench block per paper table/figure workload (DESIGN.md §Perf).
+//!
+//! Results are also written to `BENCH_solvers.json` (name, ns/iter,
+//! samples/s) so the perf trajectory is tracked across PRs; pass `--quick`
+//! for a smoke run (same rows, few iterations — tier1.sh uses it).
+//!
+//! Rows of interest for the sparse/batched pipeline:
+//! - `markov_oracle_probs*`: dense vs masked-sparse score evaluation;
+//! - `generate NFE=64 ...`: single-lane end-to-end (row names stable since
+//!   the seed bench — compare across PRs);
+//! - `generate_batch B=8 ...`: batched lane-parallel path vs single lanes.
 
-use fastdds::bench::{bench, black_box};
+use fastdds::bench::{bench, black_box, BenchResult};
 use fastdds::ctmc::ToyModel;
 use fastdds::score::markov::{MarkovChain, MarkovOracle};
 use fastdds::score::ScoreSource;
 use fastdds::solvers::{grid, masked, toy, Solver};
+use fastdds::util::json::Json;
 use fastdds::util::rng::Xoshiro256;
 
+struct Report {
+    rows: Vec<Json>,
+}
+
+impl Report {
+    fn push(&mut self, r: &BenchResult, items_per_iter: f64) {
+        println!(
+            "{}  ({:.1} samples/s)",
+            r.report(),
+            r.items_per_sec(items_per_iter)
+        );
+        self.rows.push(Json::obj(vec![
+            ("name", Json::from(r.name.trim())),
+            ("ns_per_iter", Json::Num(r.mean_ns)),
+            ("p50_ns", Json::Num(r.p50_ns)),
+            ("samples_per_s", Json::Num(r.items_per_sec(items_per_iter))),
+        ]));
+    }
+
+    fn write(&self, quick: bool) {
+        let doc = Json::obj(vec![
+            ("bench", Json::from("solver_steps")),
+            ("quick", Json::from(quick)),
+            ("rows", Json::Arr(self.rows.clone())),
+        ]);
+        // cargo bench runs with the package dir (rust/) as cwd; put the
+        // record at the repo root (next to ROADMAP.md) when we can find it.
+        let path = if std::path::Path::new("ROADMAP.md").exists() {
+            "BENCH_solvers.json"
+        } else if std::path::Path::new("../ROADMAP.md").exists() {
+            "../BENCH_solvers.json"
+        } else {
+            "BENCH_solvers.json"
+        };
+        match std::fs::write(path, doc.to_string()) {
+            Ok(()) => println!("wrote {path} ({} rows)", self.rows.len()),
+            Err(e) => println!("could not write {path}: {e}"),
+        }
+    }
+}
+
 fn main() {
-    println!("== fastdds benches: solver steps ==");
+    let quick = std::env::args().any(|a| a == "--quick");
+    // (warmup, iters) pairs for the heavy and light blocks.
+    let (warm_g, it_g) = if quick { (1, 3) } else { (2, 20) };
+    let (warm_p, it_p) = if quick { (1, 5) } else { (3, 50) };
+    println!(
+        "== fastdds benches: solver steps{} ==",
+        if quick { " (--quick)" } else { "" }
+    );
+    let mut report = Report { rows: Vec::new() };
     let mut rng = Xoshiro256::seed_from_u64(1);
 
     // --- oracle score evaluation (the per-NFE cost unit, Tab. 1/2 work) --
-    let chain = MarkovChain::generate(&mut rng, 32, 0.3);
-    let oracle = MarkovOracle::new(chain.clone(), 256);
-    let tokens = fastdds::score::all_masked(256, oracle.mask_id());
-    let mut out = vec![0.0; 256 * 32];
-    let r = bench("markov_oracle_probs L=256 V=32", 3, 50, || {
+    let (l, v) = (256usize, 32usize);
+    let chain = MarkovChain::generate(&mut rng, v, 0.3);
+    let oracle = MarkovOracle::new(chain.clone(), l);
+    let tokens = fastdds::score::all_masked(l, oracle.mask_id());
+    let mut out = vec![0.0; l * v];
+    let r = bench("markov_oracle_probs L=256 V=32", warm_p, it_p, || {
         oracle.probs_into(black_box(&tokens), 0.5, &mut out);
     });
-    println!("{}", r.report());
+    report.push(&r, 1.0);
+
+    // Sparse evaluation: full occupancy (parity check) and a late-step
+    // occupancy (1/8 of dims still masked) where the sparse path wins.
+    let idx_all: Vec<usize> = (0..l).collect();
+    let r = bench("markov_oracle_probs_masked m=256", warm_p, it_p, || {
+        oracle.probs_masked_into(black_box(&tokens), &idx_all, 0.5, &mut out);
+    });
+    report.push(&r, 1.0);
+    let mut late = chain.sample(&mut rng, l);
+    let idx_late: Vec<usize> = (0..l).step_by(8).collect();
+    for &i in &idx_late {
+        late[i] = oracle.mask_id();
+    }
+    let mut out_late = vec![0.0; idx_late.len() * v];
+    let r = bench("markov_oracle_probs_masked m=32", warm_p, it_p, || {
+        oracle.probs_masked_into(black_box(&late), &idx_late, 0.5, &mut out_late);
+    });
+    report.push(&r, 1.0);
 
     // --- one full generation per solver at NFE=64 (Tab. 2 row cost) -----
-    for solver in [
+    let solvers = [
         Solver::Euler,
         Solver::TauLeaping,
         Solver::Tweedie,
         Solver::Rk2 { theta: 0.3333 },
         Solver::Trapezoidal { theta: 0.5 },
         Solver::ParallelDecoding,
-    ] {
+    ];
+    for solver in solvers {
         let g = grid::masked_uniform(solver.steps_for_nfe(64), 1e-3);
         let mut rng = Xoshiro256::seed_from_u64(2);
         let r = bench(
             &format!("generate NFE=64 {:22}", solver.name()),
-            2,
-            20,
+            warm_g,
+            it_g,
             || {
                 black_box(masked::generate(&oracle, solver, &g, &mut rng));
             },
         );
-        println!("{}  ({:.1} samples/s)", r.report(), r.items_per_sec(1.0));
+        report.push(&r, 1.0);
+    }
+
+    // --- batched lane-parallel generation (B lanes per iteration) -------
+    let b = 8usize;
+    let seeds: Vec<u64> = (0..b as u64).map(|i| 1000 + i * 7919).collect();
+    for solver in solvers {
+        let g = grid::masked_uniform(solver.steps_for_nfe(64), 1e-3);
+        let r = bench(
+            &format!("generate_batch B=8 NFE=64 {:15}", solver.name()),
+            warm_g,
+            it_g,
+            || {
+                black_box(masked::generate_batch(&oracle, solver, &g, &seeds));
+            },
+        );
+        report.push(&r, b as f64);
+    }
+
+    // --- first-hitting sampler (single-row evals, the sparse extreme) ---
+    {
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let r = bench("fhs_generate L=256", warm_g, it_g, || {
+            black_box(masked::fhs_generate(&oracle, 1e-3, &mut rng));
+        });
+        report.push(&r, 1.0);
     }
 
     // --- toy model step (Fig. 2 inner loop) ------------------------------
@@ -54,13 +159,13 @@ fn main() {
         let mut rng = Xoshiro256::seed_from_u64(4);
         let r = bench(
             &format!("toy generate 32 steps {:18}", solver.name()),
-            10,
-            200,
+            if quick { 2 } else { 10 },
+            if quick { 10 } else { 200 },
             || {
                 black_box(toy::generate(&model, solver, &g, &mut rng));
             },
         );
-        println!("{}", r.report());
+        report.push(&r, 1.0);
     }
 
     // --- PJRT artifact dispatch (runtime hot path) -----------------------
@@ -73,7 +178,7 @@ fn main() {
         let mut rng = Xoshiro256::seed_from_u64(5);
         for (name, stages) in [("markov_step_tau", 1usize), ("markov_step_trapezoidal", 2)] {
             let mut u = vec![0.0f32; stages * 2 * b * l];
-            let r = bench(&format!("pjrt dispatch {name:28}"), 3, 30, || {
+            let r = bench(&format!("pjrt dispatch {name:28}"), warm_g, it_g, || {
                 rng.fill_f32(&mut u);
                 let mut inputs = vec![
                     Value::i32(vec![16; b * l], vec![b, l]),
@@ -86,13 +191,11 @@ fn main() {
                 inputs.push(Value::f32(u.clone(), vec![stages, 2, b, l]));
                 black_box(h.execute(name, inputs).unwrap());
             });
-            println!(
-                "{}  ({:.1} lanes/s)",
-                r.report(),
-                r.items_per_sec(b as f64)
-            );
+            report.push(&r, b as f64);
         }
     } else {
         println!("(artifact benches skipped: run `make artifacts`)");
     }
+
+    report.write(quick);
 }

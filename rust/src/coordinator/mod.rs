@@ -6,10 +6,20 @@
 //! ```text
 //!   submit() ──channel──▶ coordinator thread
 //!                           │  DynamicBatcher (group lanes by key)
-//!                           │  StepPlan + run_batch  ──▶ RuntimeHandle ──▶ PJRT
+//!                           │  run_batch_scored ──▶ generate_batch ──▶ ScoreSource
+//!                           │    (score artifact over PJRT, or local oracle;
+//!                           │     legacy fused step graphs as fallback)
 //!                           │  ResponseAssembler (reunite lanes)
 //!                           └──▶ per-request reply channels
 //! ```
+//!
+//! Batching pays off *below* the request layer: every batch the
+//! `DynamicBatcher` emits is executed by `solvers::masked::generate_batch`,
+//! which makes one masked-sparse score call per solver stage for all lanes
+//! together.  With artifacts present that call is a single PJRT dispatch of
+//! the `{family}_score` graph; with a local oracle it fans across the
+//! threadpool.  The legacy per-step fused graphs remain as a fallback for
+//! families that ship step artifacts but no score artifact.
 
 pub mod request;
 pub mod batcher;
@@ -19,21 +29,38 @@ pub mod metrics;
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 pub use batcher::{BatchPolicy, DynamicBatcher};
 pub use metrics::Metrics;
 pub use request::{GenerateRequest, GenerateResponse};
 
-use crate::runtime::{Registry, RuntimeHandle};
+use crate::runtime::{ArtifactScore, Registry, RuntimeHandle};
+use crate::score::ScoreSource;
 use state::ResponseAssembler;
 
 enum Msg {
     Submit(GenerateRequest, Sender<Result<GenerateResponse>>),
     Metrics(Sender<Metrics>),
     Shutdown,
+}
+
+/// Where batches execute.
+enum Backend {
+    /// PJRT runtime: prefer the `{family}_score` artifact through
+    /// `generate_batch`; fall back to the legacy fused step graphs.
+    Pjrt {
+        runtime: RuntimeHandle,
+        registry: Registry,
+        /// Lazily built, cached per family.
+        scores: BTreeMap<String, Arc<ArtifactScore>>,
+    },
+    /// A local in-process score source (analytic oracle): no artifacts
+    /// needed, everything runs through `generate_batch`.
+    Local { score: Arc<dyn ScoreSource> },
 }
 
 /// Handle to the coordinator thread.
@@ -48,10 +75,33 @@ impl Coordinator {
         registry: Registry,
         policy: BatchPolicy,
     ) -> Coordinator {
+        // Batch capacity = the max artifact batch across families.
+        let max_lanes = registry
+            .by_family("markov")
+            .iter()
+            .filter_map(|a| a.batch().ok())
+            .max()
+            .unwrap_or(8);
+        let backend = Backend::Pjrt { runtime, registry, scores: BTreeMap::new() };
+        Coordinator::spawn(backend, policy, max_lanes)
+    }
+
+    /// Serve straight from an in-process score source (no artifacts, no
+    /// PJRT): the dynamic batcher still groups lanes and every batch runs
+    /// through `generate_batch`.
+    pub fn start_local(
+        score: Arc<dyn ScoreSource>,
+        policy: BatchPolicy,
+        max_lanes: usize,
+    ) -> Coordinator {
+        Coordinator::spawn(Backend::Local { score }, policy, max_lanes.max(1))
+    }
+
+    fn spawn(backend: Backend, policy: BatchPolicy, max_lanes: usize) -> Coordinator {
         let (tx, rx) = channel::<Msg>();
         std::thread::Builder::new()
             .name("coordinator".into())
-            .spawn(move || coordinator_loop(runtime, registry, policy, rx))
+            .spawn(move || coordinator_loop(backend, policy, max_lanes, rx))
             .expect("spawning coordinator");
         Coordinator { tx }
     }
@@ -85,20 +135,58 @@ impl Coordinator {
     }
 }
 
+/// Execute one packed batch on the backend.
+fn execute_batch(
+    backend: &mut Backend,
+    proto: &GenerateRequest,
+    lanes: &[batcher::Lane],
+) -> Result<scheduler::BatchResult> {
+    match backend {
+        Backend::Local { score } => {
+            scheduler::run_batch_scored(score.as_ref(), proto.solver, proto.nfe, lanes)
+        }
+        Backend::Pjrt { runtime, registry, scores } => {
+            let score_name = format!("{}_score", proto.family);
+            if registry.get(&score_name).is_ok() {
+                let score = match scores.get(&proto.family) {
+                    Some(s) => Arc::clone(s),
+                    None => {
+                        let s = Arc::new(ArtifactScore::new(
+                            runtime.clone(),
+                            registry,
+                            &proto.family,
+                        )?);
+                        scores.insert(proto.family.clone(), Arc::clone(&s));
+                        s
+                    }
+                };
+                let result = scheduler::run_batch_scored(
+                    score.as_ref(),
+                    proto.solver,
+                    proto.nfe,
+                    lanes,
+                )?;
+                // Score dispatch failures poison the source instead of
+                // surfacing through the trait; convert them to a batch error.
+                if let Some(err) = score.take_error() {
+                    return Err(anyhow!("score artifact dispatch failed: {err}"));
+                }
+                Ok(result)
+            } else {
+                // Legacy path: fused per-step graphs.
+                let plan = scheduler::StepPlan::build(registry, proto)?;
+                scheduler::run_batch(runtime, &plan, proto.solver, lanes)
+            }
+        }
+    }
+}
+
 fn coordinator_loop(
-    runtime: RuntimeHandle,
-    registry: Registry,
+    mut backend: Backend,
     policy: BatchPolicy,
+    max_lanes: usize,
     rx: Receiver<Msg>,
 ) {
-    // Batch capacity = the max artifact batch across families (lanes are
-    // split per-key anyway; run_batch asserts against the plan's batch).
-    let max_lanes = registry
-        .by_family("markov")
-        .iter()
-        .filter_map(|a| a.batch().ok())
-        .max()
-        .unwrap_or(8);
     let mut batcher = DynamicBatcher::new(policy, max_lanes);
     let mut assembler = ResponseAssembler::new();
     let mut replies: BTreeMap<u64, Sender<Result<GenerateResponse>>> = BTreeMap::new();
@@ -152,20 +240,18 @@ fn coordinator_loop(
                     .queue_wait_ms
                     .push(lane.enqueued.elapsed().as_secs_f64() * 1e3);
             }
-            let outcome = scheduler::StepPlan::build(&registry, &proto)
-                .and_then(|plan| {
-                    scheduler::run_batch(&runtime, &plan, proto.solver, &lanes)
-                });
+            let outcome = execute_batch(&mut backend, &proto, &lanes);
             match outcome {
                 Ok(result) => {
-                    metrics.nfe_total +=
-                        (result.nfe_per_lane * lanes.len()) as u64;
-                    for (lane, toks) in lanes.iter().zip(result.tokens) {
+                    metrics.nfe_total += result.nfe.iter().sum::<usize>() as u64;
+                    for ((lane, toks), &nfe) in
+                        lanes.iter().zip(result.tokens).zip(&result.nfe)
+                    {
                         if let Some(resp) = assembler.complete_lane(
                             lane.request_id,
                             lane.sample_idx,
                             toks,
-                            result.nfe_per_lane,
+                            nfe,
                             now_ms(started),
                         ) {
                             metrics.latency_ms.push(resp.latency_ms);
@@ -197,7 +283,9 @@ fn coordinator_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::solvers::Solver;
+    use crate::score::markov::{MarkovChain, MarkovOracle};
+    use crate::solvers::{grid, masked, Solver};
+    use crate::util::rng::Xoshiro256;
 
     fn coordinator(policy: BatchPolicy) -> Option<Coordinator> {
         if !crate::runtime::artifacts_available("artifacts") {
@@ -206,6 +294,14 @@ mod tests {
         let runtime = RuntimeHandle::spawn("artifacts").unwrap();
         let registry = Registry::load("artifacts").unwrap();
         Some(Coordinator::start(runtime, registry, policy))
+    }
+
+    fn local_oracle(vocab: usize, seq_len: usize) -> Arc<MarkovOracle> {
+        let mut rng = Xoshiro256::seed_from_u64(23);
+        Arc::new(MarkovOracle::new(
+            MarkovChain::generate(&mut rng, vocab, 0.5),
+            seq_len,
+        ))
     }
 
     fn req(id: u64, solver: Solver, nfe: usize, n: usize, seed: u64) -> GenerateRequest {
@@ -223,10 +319,69 @@ mod tests {
             assert_eq!(s.len(), 32);
             assert!(s.iter().all(|&t| t < 16), "masks left: {s:?}");
         }
-        assert!(resp.nfe_used >= 32 && resp.nfe_used <= 34);
+        // Sparse skipping lets a lane finish under budget; finalize adds at
+        // most one evaluation on top.
+        assert!(resp.nfe_used >= 1 && resp.nfe_used <= 34, "nfe={}", resp.nfe_used);
         let m = c.metrics();
         assert_eq!(m.requests, 1);
         assert_eq!(m.lanes, 3);
+        c.shutdown();
+    }
+
+    #[test]
+    fn local_backend_serves_without_artifacts() {
+        let oracle = local_oracle(6, 24);
+        let c = Coordinator::start_local(oracle, BatchPolicy::Greedy, 8);
+        let resp = c
+            .generate(req(1, Solver::Trapezoidal { theta: 0.5 }, 32, 3, 7))
+            .unwrap();
+        assert_eq!(resp.sequences.len(), 3);
+        for s in &resp.sequences {
+            assert_eq!(s.len(), 24);
+            assert!(s.iter().all(|&t| t < 6), "masks left: {s:?}");
+        }
+        assert!(resp.nfe_used >= 1 && resp.nfe_used <= 33);
+        let m = c.metrics();
+        assert_eq!(m.requests, 1);
+        assert_eq!(m.lanes, 3);
+        assert_eq!(m.dispatches, 1, "3 lanes must co-batch in one dispatch");
+        c.shutdown();
+    }
+
+    #[test]
+    fn local_backend_batches_are_lane_reproducible() {
+        // The whole stack — batcher lane seeding, run_batch_scored,
+        // generate_batch — must produce exactly what a single-lane
+        // masked::generate with the derived lane seed produces.
+        let oracle = local_oracle(5, 16);
+        let c = Coordinator::start_local(oracle.clone(), BatchPolicy::Greedy, 8);
+        let solver = Solver::TauLeaping;
+        let (nfe, n, seed) = (16usize, 4usize, 99u64);
+        let resp = c.generate(req(1, solver, nfe, n, seed)).unwrap();
+        assert_eq!(resp.sequences.len(), n);
+        let grid_ts = grid::masked_uniform(solver.steps_for_nfe(nfe), scheduler::DELTA);
+        for (idx, seq) in resp.sequences.iter().enumerate() {
+            let lane_seed =
+                seed.wrapping_add((idx as u64).wrapping_mul(0x9E3779B97F4A7C15));
+            let mut rng = Xoshiro256::seed_from_u64(lane_seed);
+            let (want, _) = masked::generate(oracle.as_ref(), solver, &grid_ts, &mut rng);
+            assert_eq!(seq, &want, "lane {idx}");
+        }
+        // Same request again: identical samples even with different
+        // co-batching partners in flight.
+        let again = c.generate(req(2, solver, nfe, n, seed)).unwrap();
+        assert_eq!(again.sequences, resp.sequences);
+        c.shutdown();
+    }
+
+    #[test]
+    fn local_backend_rejects_absurd_budget() {
+        let oracle = local_oracle(4, 8);
+        let c = Coordinator::start_local(oracle, BatchPolicy::Greedy, 4);
+        let err = c
+            .generate(req(1, Solver::Trapezoidal { theta: 0.5 }, 1, 1, 0))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("below one step"), "{err:#}");
         c.shutdown();
     }
 

@@ -1,10 +1,17 @@
-//! Step scheduler: drives one packed batch through its whole backward pass
-//! on the PJRT runtime.
+//! Step scheduler: drives one packed batch through its whole backward pass.
 //!
-//! One dispatch per grid step (the two-stage solvers are FUSED into a single
-//! step graph by L2, so a trapezoidal step is still one dispatch but counts
-//! 2 NFE).  Lanes shorter than the artifact batch are padded with dummy
-//! lanes; each real lane draws its uniforms from its own seeded stream, so a
+//! Two execution paths:
+//!
+//! - [`run_batch_scored`] — the preferred path: a [`ScoreSource`] (analytic
+//!   oracle or the `{family}_score` artifact) plus the pure-rust solver
+//!   loop `solvers::masked::generate_batch`, which steps every lane in
+//!   lock-step with one batched, masked-sparse score call per stage.
+//! - [`run_batch`] — the legacy fused-step-graph path: one PJRT dispatch
+//!   per grid step (two-stage solvers are FUSED into a single step graph by
+//!   L2, so a trapezoidal step is still one dispatch but counts 2 NFE).
+//!   Lanes shorter than the artifact batch are padded with dummy lanes.
+//!
+//! In both paths each real lane draws from its own seeded stream, so a
 //! sample depends only on (request seed, sample index) — not on co-batching.
 
 use anyhow::{bail, Result};
@@ -12,16 +19,55 @@ use anyhow::{bail, Result};
 use crate::coordinator::batcher::Lane;
 use crate::coordinator::request::GenerateRequest;
 use crate::runtime::{ArtifactSpec, Registry, RuntimeHandle, Value};
-use crate::score::Tok;
-use crate::solvers::{grid, Solver};
+use crate::score::{ScoreSource, Tok};
+use crate::solvers::{grid, masked, Solver};
 use crate::util::rng::{Rng, Xoshiro256};
 
 pub const DELTA: f64 = 1e-3;
 
-/// Result of one batch pass: per-lane token sequences + NFE per lane.
+/// Result of one batch pass: per-lane token sequences + NFE actually spent
+/// per lane (lanes can differ once the sparse path skips empty steps).
 pub struct BatchResult {
     pub tokens: Vec<Vec<Tok>>,
-    pub nfe_per_lane: usize,
+    pub nfe: Vec<usize>,
+}
+
+/// Run one packed batch through `generate_batch` on a score source: one
+/// batched masked-sparse score call per stage, per-lane seeded RNG streams
+/// (bit-identical to serving each lane alone).
+pub fn run_batch_scored(
+    score: &dyn ScoreSource,
+    solver: Solver,
+    nfe_budget: usize,
+    lanes: &[Lane],
+) -> Result<BatchResult> {
+    if nfe_budget < solver.nfe_per_step() {
+        bail!(
+            "nfe budget {} below one step ({})",
+            nfe_budget,
+            solver.nfe_per_step()
+        );
+    }
+    // Client-controlled parameters must be rejected with an error, never
+    // allowed to reach the solver asserts (a panic here would kill the
+    // long-lived coordinator thread).
+    match solver {
+        Solver::Trapezoidal { theta } if !(theta > 0.0 && theta < 1.0) => {
+            bail!("trapezoidal theta {theta} outside (0,1)");
+        }
+        Solver::Rk2 { theta } if !(theta > 0.0 && theta <= 1.0) => {
+            bail!("rk2 theta {theta} outside (0,1]");
+        }
+        _ => {}
+    }
+    let steps = solver.steps_for_nfe(nfe_budget);
+    let grid_ts = grid::masked_uniform(steps, DELTA);
+    let seeds: Vec<u64> = lanes.iter().map(|l| l.seed).collect();
+    let results = masked::generate_batch(score, solver, &grid_ts, &seeds);
+    Ok(BatchResult {
+        nfe: results.iter().map(|(_, s)| s.nfe).collect(),
+        tokens: results.into_iter().map(|(t, _)| t).collect(),
+    })
 }
 
 /// Which artifact implements a solver step for a family.
@@ -164,7 +210,7 @@ pub fn run_batch(
                 .collect()
         })
         .collect();
-    Ok(BatchResult { tokens: out_tokens, nfe_per_lane: nfe })
+    Ok(BatchResult { tokens: out_tokens, nfe: vec![nfe; lanes.len()] })
 }
 
 /// Uniforms layout (stages, 2, B, L): lane b owns [.., .., b, ..] across all
@@ -208,6 +254,56 @@ mod tests {
             artifact_name("transformer", Solver::ParallelDecoding),
             "transformer_step_parallel"
         );
+    }
+
+    #[test]
+    fn run_batch_scored_matches_single_lane_generation() {
+        use crate::score::markov::{MarkovChain, MarkovOracle};
+        use std::time::Instant;
+        let mut rng = Xoshiro256::seed_from_u64(13);
+        let oracle = MarkovOracle::new(MarkovChain::generate(&mut rng, 5, 0.5), 12);
+        let lanes: Vec<Lane> = (0..3)
+            .map(|i| Lane {
+                request_id: 1,
+                sample_idx: i,
+                seed: 1000 + i as u64 * 17,
+                enqueued: Instant::now(),
+            })
+            .collect();
+        let solver = Solver::Trapezoidal { theta: 0.5 };
+        let result = run_batch_scored(&oracle, solver, 16, &lanes).unwrap();
+        assert_eq!(result.tokens.len(), 3);
+        assert_eq!(result.nfe.len(), 3);
+        let grid_ts = grid::masked_uniform(solver.steps_for_nfe(16), DELTA);
+        for (k, lane) in lanes.iter().enumerate() {
+            let mut r = Xoshiro256::seed_from_u64(lane.seed);
+            let (toks, stats) =
+                crate::solvers::masked::generate(&oracle, solver, &grid_ts, &mut r);
+            assert_eq!(result.tokens[k], toks, "lane {k}");
+            assert_eq!(result.nfe[k], stats.nfe, "lane {k}");
+        }
+    }
+
+    #[test]
+    fn run_batch_scored_rejects_absurd_budget() {
+        use crate::score::markov::{MarkovChain, MarkovOracle};
+        let mut rng = Xoshiro256::seed_from_u64(13);
+        let oracle = MarkovOracle::new(MarkovChain::generate(&mut rng, 4, 0.5), 8);
+        let err = run_batch_scored(&oracle, Solver::Trapezoidal { theta: 0.5 }, 1, &[])
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("below one step"), "{err:#}");
+        // Malformed client-supplied theta must error, never panic (a panic
+        // would kill the coordinator thread).
+        for bad in [
+            Solver::Trapezoidal { theta: 0.0 },
+            Solver::Trapezoidal { theta: 1.0 },
+            Solver::Trapezoidal { theta: f64::NAN },
+            Solver::Rk2 { theta: 1.5 },
+            Solver::Rk2 { theta: 0.0 },
+        ] {
+            let err = run_batch_scored(&oracle, bad, 16, &[]).unwrap_err();
+            assert!(format!("{err:#}").contains("theta"), "{err:#}");
+        }
     }
 
     #[test]

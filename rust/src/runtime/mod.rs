@@ -13,9 +13,11 @@ pub mod registry;
 pub mod value;
 pub mod engine;
 pub mod handle;
+pub mod score;
 
 pub use handle::RuntimeHandle;
 pub use registry::{ArtifactSpec, IoSpec, Registry};
+pub use score::ArtifactScore;
 pub use value::Value;
 
 /// Default artifacts directory (relative to the repo root).

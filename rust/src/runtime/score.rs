@@ -1,0 +1,188 @@
+//! [`ArtifactScore`]: the AOT-compiled score artifact as a [`ScoreSource`].
+//!
+//! The `{family}_score` artifact (lowered by `python/compile/aot.py`) maps
+//! an i32 token batch `(B, L)` plus the forward time to a probability
+//! tensor `(B, L, V)`.  Wrapping it in the `ScoreSource` trait lets the
+//! pure-rust solver loop in `solvers::masked` — including the sparse
+//! active-index bookkeeping and `generate_batch` — drive transformer-class
+//! scores exactly like the analytic oracles:
+//!
+//! - `probs_masked_into` still pays one fixed-shape dispatch (the graph's
+//!   cost is shape-bound), but only gathers and converts the requested
+//!   rows, and the *solvers* above it stop scanning unmasked positions;
+//! - `probs_masked_batch` is the real win: up to `B` request lanes share a
+//!   single dispatch instead of one dispatch per lane.
+//!
+//! Error handling: `ScoreSource` evaluation is infallible by signature, so
+//! a failed dispatch poisons the source (uniform rows are returned to keep
+//! the solver numerically safe) and [`ArtifactScore::take_error`] surfaces
+//! the failure to the caller — `coordinator::scheduler::run_batch_scored`
+//! checks it after every batch and fails the affected requests.
+
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{Registry, RuntimeHandle, Value};
+use crate::score::{ScoreSource, Tok};
+
+pub struct ArtifactScore {
+    /// `RuntimeHandle` is `Send` but not `Sync` (mpsc sender); the mutex
+    /// makes the source shareable.  Dispatches are serialized by the single
+    /// runtime thread anyway, so this costs nothing at steady state.
+    handle: Mutex<RuntimeHandle>,
+    artifact: String,
+    batch: usize,
+    seq_len: usize,
+    vocab: usize,
+    error: Mutex<Option<String>>,
+}
+
+impl ArtifactScore {
+    /// Wrap the `{family}_score` artifact from the registry.
+    pub fn new(handle: RuntimeHandle, registry: &Registry, family: &str) -> Result<ArtifactScore> {
+        let name = format!("{family}_score");
+        let spec = registry.get(&name)?;
+        let batch = spec.batch()?;
+        let seq_len = spec
+            .seq_len()
+            .ok_or_else(|| anyhow!("{name} has no seq_len"))?;
+        let vocab = spec.vocab().ok_or_else(|| anyhow!("{name} has no vocab"))?;
+        Ok(ArtifactScore {
+            handle: Mutex::new(handle),
+            artifact: name,
+            batch,
+            seq_len,
+            vocab,
+            error: Mutex::new(None),
+        })
+    }
+
+    /// Lanes one dispatch can carry.
+    pub fn max_lanes(&self) -> usize {
+        self.batch
+    }
+
+    /// Take (and clear) the first dispatch error since the last check.
+    pub fn take_error(&self) -> Option<String> {
+        self.error.lock().unwrap().take()
+    }
+
+    fn record_error(&self, err: &anyhow::Error) {
+        let mut slot = self.error.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(format!("{err:#}"));
+        }
+    }
+
+    /// One dispatch for up to `batch` sequences; returns the flat
+    /// `(B, L, V)` f32 probabilities, or None after recording the error.
+    fn dispatch(&self, seqs: &[&[Tok]], t: f64) -> Option<Vec<f32>> {
+        debug_assert!(!seqs.is_empty() && seqs.len() <= self.batch);
+        let (b, l) = (self.batch, self.seq_len);
+        let mask = self.vocab as i32;
+        let mut tokens = vec![mask; b * l];
+        for (lane, seq) in seqs.iter().enumerate() {
+            debug_assert_eq!(seq.len(), l);
+            for (j, &x) in seq.iter().enumerate() {
+                tokens[lane * l + j] = x as i32;
+            }
+        }
+        let out = self
+            .handle
+            .lock()
+            .unwrap()
+            .execute(
+                &self.artifact,
+                vec![Value::i32(tokens, vec![b, l]), Value::scalar_f32(t as f32)],
+            )
+            .and_then(|vals| {
+                let probs = vals
+                    .first()
+                    .ok_or_else(|| anyhow!("{} returned no outputs", self.artifact))?
+                    .as_f32()?
+                    .to_vec();
+                if probs.len() != b * l * self.vocab {
+                    anyhow::bail!(
+                        "{}: output len {} != {}x{}x{}",
+                        self.artifact,
+                        probs.len(),
+                        b,
+                        l,
+                        self.vocab
+                    );
+                }
+                Ok(probs)
+            });
+        match out {
+            Ok(probs) => Some(probs),
+            Err(err) => {
+                self.record_error(&err);
+                None
+            }
+        }
+    }
+
+    /// Copy lane `lane`'s rows listed in `idx` from a dispatch result into
+    /// a compact f64 block.
+    fn gather_rows(&self, probs: &[f32], lane: usize, idx: &[usize], out: &mut [f64]) {
+        let (l, v) = (self.seq_len, self.vocab);
+        for (k, &i) in idx.iter().enumerate() {
+            let src = &probs[(lane * l + i) * v..(lane * l + i + 1) * v];
+            for (dst, &x) in out[k * v..(k + 1) * v].iter_mut().zip(src) {
+                *dst = x as f64;
+            }
+        }
+    }
+
+    fn fill_uniform(&self, out: &mut [f64]) {
+        out.fill(1.0 / self.vocab as f64);
+    }
+}
+
+impl ScoreSource for ArtifactScore {
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn probs_into(&self, tokens: &[Tok], t: f64, out: &mut [f64]) {
+        let idx: Vec<usize> = (0..self.seq_len).collect();
+        self.probs_masked_into(tokens, &idx, t, out);
+    }
+
+    fn probs_masked_into(&self, tokens: &[Tok], masked_idx: &[usize], t: f64, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), masked_idx.len() * self.vocab);
+        match self.dispatch(&[tokens], t) {
+            Some(probs) => self.gather_rows(&probs, 0, masked_idx, out),
+            None => self.fill_uniform(out),
+        }
+    }
+
+    /// Pack lanes into as few fixed-shape dispatches as possible: ceil(n/B)
+    /// dispatches instead of n.
+    fn probs_masked_batch(&self, reqs: &[(&[Tok], &[usize])], t: f64, outs: &mut [&mut [f64]]) {
+        assert_eq!(reqs.len(), outs.len(), "probs_masked_batch arity mismatch");
+        let mut start = 0usize;
+        while start < reqs.len() {
+            let end = (start + self.batch).min(reqs.len());
+            let seqs: Vec<&[Tok]> = reqs[start..end].iter().map(|&(toks, _)| toks).collect();
+            match self.dispatch(&seqs, t) {
+                Some(probs) => {
+                    for (lane, k) in (start..end).enumerate() {
+                        self.gather_rows(&probs, lane, reqs[k].1, outs[k]);
+                    }
+                }
+                None => {
+                    for k in start..end {
+                        self.fill_uniform(outs[k]);
+                    }
+                }
+            }
+            start = end;
+        }
+    }
+}

@@ -19,7 +19,7 @@
 
 use crate::ctmc::uniformization::JumpProcess;
 use crate::score::markov::MarkovChain;
-use crate::score::Tok;
+use crate::score::{ScoreSource, Tok};
 
 pub struct HmmUniformOracle {
     pub chain: MarkovChain,
@@ -39,19 +39,21 @@ impl HmmUniformOracle {
         ((1.0 - decay) / v, decay)
     }
 
-    /// All single-site likelihood ratios r[i * V + v] = p_t(x^{i->v}) / p_t(x).
+    /// Scaled forward/backward messages at forward time `t`.
     ///
-    /// Messages are per-position normalised (scaling constants cancel in the
-    /// ratio), so this is stable for any L.
-    pub fn ratios(&self, tokens: &[Tok], t: f64, out: &mut [f64]) {
+    /// `alpha_bar[i][z] ∝ P(x_{0..i-1}, z_i = z)` — forward WITHOUT the
+    /// emission at i; `beta[i][z] ∝ P(x_{i+1..} | z_i = z)`.  Messages are
+    /// per-position normalised (scaling constants cancel in every ratio and
+    /// posterior), so this is stable for any L.  Positions holding the mask
+    /// token (id = V) contribute a constant emission — i.e. no evidence —
+    /// which makes the same pass serve both the uniform-state ratios and the
+    /// masked [`ScoreSource`] view below.
+    fn messages(&self, tokens: &[Tok], t: f64) -> (Vec<f64>, Vec<f64>) {
         let v = self.chain.vocab;
         let l = self.seq_len;
         debug_assert_eq!(tokens.len(), l);
-        debug_assert_eq!(out.len(), l * v);
         let (a_t, b_t) = self.emission(t);
 
-        // alpha_bar[i][z] ∝ P(x_{0..i-1}, z_i = z): forward WITHOUT the
-        // emission at i.  beta[i][z] ∝ P(x_{i+1..} | z_i = z).
         let mut alpha_bar = vec![0.0f64; l * v];
         let mut beta = vec![0.0f64; l * v];
 
@@ -115,6 +117,25 @@ impl HmmUniformOracle {
             beta[i * v..(i + 1) * v].copy_from_slice(&row);
         }
 
+        (alpha_bar, beta)
+    }
+
+    /// All single-site likelihood ratios r[i * V + v] = p_t(x^{i->v}) / p_t(x).
+    ///
+    /// Only meaningful for mask-free sequences (the uniform-state process
+    /// corrupts in place; there is no absorbing token here).
+    pub fn ratios(&self, tokens: &[Tok], t: f64, out: &mut [f64]) {
+        let v = self.chain.vocab;
+        let l = self.seq_len;
+        debug_assert_eq!(tokens.len(), l);
+        debug_assert_eq!(out.len(), l * v);
+        debug_assert!(
+            tokens.iter().all(|&x| (x as usize) < v),
+            "ratios expects a mask-free sequence"
+        );
+        let (a_t, b_t) = self.emission(t);
+        let (alpha_bar, beta) = self.messages(tokens, t);
+
         // Ratios: numerator(v) = a_t * S_i + b_t * g_i(v) where
         // g_i(z) = alpha_bar[i][z] * beta[i][z], S_i = sum_z g_i(z).
         for i in 0..l {
@@ -147,6 +168,89 @@ impl HmmUniformOracle {
             }
         }
         tot
+    }
+}
+
+/// Masked-score view of the HMM oracle: the posterior over the clean token
+/// at each requested position given the (possibly noisy, possibly masked)
+/// context.  Mask tokens (id = V) contribute no evidence; as t -> 0 the
+/// emissions sharpen to deltas and the rows converge to the
+/// `MarkovOracle` conditionals.  This lets the uniform-state oracle drive
+/// the same sparse/batched solver pipeline as the absorbing-state sources.
+impl ScoreSource for HmmUniformOracle {
+    fn vocab(&self) -> usize {
+        self.chain.vocab
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn probs_into(&self, tokens: &[Tok], t: f64, out: &mut [f64]) {
+        let v = self.chain.vocab;
+        let l = self.seq_len;
+        debug_assert_eq!(out.len(), l * v);
+        let (a_t, b_t) = self.emission(t);
+        let (alpha_bar, beta) = self.messages(tokens, t);
+        for i in 0..l {
+            posterior_row(
+                &alpha_bar[i * v..(i + 1) * v],
+                &beta[i * v..(i + 1) * v],
+                tokens[i],
+                a_t,
+                b_t,
+                &mut out[i * v..(i + 1) * v],
+            );
+        }
+    }
+
+    /// Native sparse evaluation: one O(L V^2) message pass (irreducible for
+    /// an HMM), then only `masked_idx.len()` posterior rows are formed and
+    /// normalised — no dense `L x V` output buffer.
+    fn probs_masked_into(&self, tokens: &[Tok], masked_idx: &[usize], t: f64, out: &mut [f64]) {
+        let v = self.chain.vocab;
+        debug_assert_eq!(out.len(), masked_idx.len() * v);
+        let (a_t, b_t) = self.emission(t);
+        let (alpha_bar, beta) = self.messages(tokens, t);
+        for (k, &i) in masked_idx.iter().enumerate() {
+            posterior_row(
+                &alpha_bar[i * v..(i + 1) * v],
+                &beta[i * v..(i + 1) * v],
+                tokens[i],
+                a_t,
+                b_t,
+                &mut out[k * v..(k + 1) * v],
+            );
+        }
+    }
+}
+
+/// Normalised posterior over the clean token at one position:
+/// row(z) ∝ alpha_bar(z) * e(z) * beta(z) with e(z) = a_t + b_t 1{z = x_i}.
+/// For a masked x_i (id = V) the emission is the constant a_t, which
+/// cancels under normalisation — exactly "no evidence at this site".
+fn posterior_row(
+    alpha_bar: &[f64],
+    beta: &[f64],
+    token: Tok,
+    a_t: f64,
+    b_t: f64,
+    out: &mut [f64],
+) {
+    let v = out.len();
+    let mut tot = 0.0;
+    for z in 0..v {
+        let e = a_t + if z == token as usize { b_t } else { 0.0 };
+        let w = alpha_bar[z] * e * beta[z];
+        out[z] = w;
+        tot += w;
+    }
+    if tot > 0.0 {
+        for w in out.iter_mut() {
+            *w /= tot;
+        }
+    } else {
+        out.fill(1.0 / v as f64);
     }
 }
 
@@ -283,6 +387,65 @@ mod tests {
         }
         let sum: f64 = buf.iter().sum();
         assert!((sum - tot).abs() < 1e-12);
+    }
+
+    #[test]
+    fn score_source_all_masked_rows_are_stationary() {
+        let o = oracle(4, 5);
+        let mask = o.mask_id();
+        let tokens = crate::score::all_masked(5, mask);
+        let p = o.probs(&tokens, 0.8);
+        for i in 0..5 {
+            for c in 0..4 {
+                assert!(
+                    (p[i * 4 + c] - o.chain.pi[c]).abs() < 1e-9,
+                    "pos {i} tok {c}: got {} want {}",
+                    p[i * 4 + c],
+                    o.chain.pi[c]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn score_source_converges_to_markov_conditional_at_small_t() {
+        use crate::score::markov::MarkovOracle;
+        let o = oracle(4, 6);
+        let markov = MarkovOracle::new(o.chain.clone(), 6);
+        let mask = o.mask_id();
+        let tokens = vec![2u32, mask, mask, 1, mask, 0];
+        // At t = 1e-6 the emission is essentially a delta: the HMM posterior
+        // must match the exact data-law conditional to high accuracy.
+        let hm = o.probs(&tokens, 1e-6);
+        let mk = markov.probs(&tokens, 1e-6);
+        for &i in &[1usize, 2, 4] {
+            for c in 0..4 {
+                assert!(
+                    (hm[i * 4 + c] - mk[i * 4 + c]).abs() < 1e-4,
+                    "pos {i} tok {c}: hmm {} markov {}",
+                    hm[i * 4 + c],
+                    mk[i * 4 + c]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn score_source_sparse_matches_dense() {
+        let o = oracle(5, 8);
+        let mask = o.mask_id();
+        let tokens = vec![mask, 3u32, mask, mask, 0, mask, 4, mask];
+        let idx = crate::score::masked_indices(&tokens, mask);
+        let dense = o.probs(&tokens, 0.45);
+        let mut compact = vec![0.0; idx.len() * 5];
+        o.probs_masked_into(&tokens, &idx, 0.45, &mut compact);
+        for (k, &i) in idx.iter().enumerate() {
+            assert_eq!(
+                &compact[k * 5..(k + 1) * 5],
+                &dense[i * 5..(i + 1) * 5],
+                "row {k} (position {i})"
+            );
+        }
     }
 
     #[test]

@@ -270,6 +270,74 @@ impl ScoreSource for MarkovOracle {
             }
         }
     }
+
+    /// Native sparse evaluation: two O(L) pointer scans find the nearest
+    /// observed neighbours of exactly the requested positions, and only
+    /// `masked_idx.len()` rows of O(V) work are done — no dense `L x V`
+    /// buffer, no per-call allocation.  Row arithmetic is identical to
+    /// [`Self::probs_into`] (same ops in the same order), so the compact
+    /// rows are bitwise equal to the dense ones.
+    fn probs_masked_into(&self, tokens: &[Tok], masked_idx: &[usize], _t: f64, out: &mut [f64]) {
+        let v = self.chain.vocab;
+        let l = self.seq_len;
+        debug_assert_eq!(tokens.len(), l);
+        debug_assert_eq!(out.len(), masked_idx.len() * v);
+        debug_assert!(masked_idx.windows(2).all(|w| w[0] < w[1]));
+        let mask = self.mask_id();
+
+        // Left pass: nearest observed neighbour strictly before each
+        // requested position seeds the row with A^dl[a, :] (pi at the
+        // boundary).
+        let mut k = 0usize;
+        let mut last: Option<(usize, Tok)> = None;
+        for i in 0..l {
+            if k < masked_idx.len() && masked_idx[k] == i {
+                debug_assert_eq!(tokens[i], mask, "masked_idx entry {i} is not masked");
+                let row = &mut out[k * v..(k + 1) * v];
+                match last {
+                    Some((j, a)) => {
+                        let m = self.pow(i - j);
+                        let base = a as usize * v;
+                        row.copy_from_slice(&m[base..base + v]);
+                    }
+                    None => row.copy_from_slice(&self.chain.pi),
+                }
+                k += 1;
+            }
+            if tokens[i] != mask {
+                last = Some((i, tokens[i]));
+            }
+        }
+
+        // Right pass: multiply in the nearest observed neighbour strictly
+        // after each requested position, then normalise.
+        let mut k = masked_idx.len();
+        let mut nxt: Option<(usize, Tok)> = None;
+        for i in (0..l).rev() {
+            if k > 0 && masked_idx[k - 1] == i {
+                k -= 1;
+                let row = &mut out[k * v..(k + 1) * v];
+                if let Some((j, b)) = nxt {
+                    // Contiguous read: column b of A^dr == row b of (A^dr)^T.
+                    let m = &self.pow_t(j - i)[b as usize * v..(b as usize + 1) * v];
+                    for (rv, &f) in row.iter_mut().zip(m) {
+                        *rv *= f;
+                    }
+                }
+                let tot: f64 = row.iter().sum();
+                if tot > 0.0 {
+                    for rv in row.iter_mut() {
+                        *rv /= tot;
+                    }
+                } else {
+                    row.fill(1.0 / v as f64);
+                }
+            }
+            if tokens[i] != mask {
+                nxt = Some((i, tokens[i]));
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -389,6 +457,55 @@ mod tests {
         let p = o.probs(&toks, 0.1);
         assert_eq!(p[0 * 4 + 2], 1.0);
         assert_eq!(p[2 * 4 + 1], 1.0);
+    }
+
+    #[test]
+    fn sparse_rows_bitwise_match_dense() {
+        use crate::util::rng::Rng;
+        let o = oracle(7, 20);
+        let mask = o.mask_id();
+        let mut rng = Xoshiro256::seed_from_u64(31);
+        for case in 0..25 {
+            let tokens: Vec<u32> = (0..20)
+                .map(|_| {
+                    if rng.gen_bool(0.6) {
+                        mask
+                    } else {
+                        rng.gen_usize(7) as u32
+                    }
+                })
+                .collect();
+            let idx = crate::score::masked_indices(&tokens, mask);
+            let dense = o.probs(&tokens, 0.5);
+            let mut compact = vec![0.0; idx.len() * 7];
+            o.probs_masked_into(&tokens, &idx, 0.5, &mut compact);
+            for (k, &i) in idx.iter().enumerate() {
+                assert_eq!(
+                    &compact[k * 7..(k + 1) * 7],
+                    &dense[i * 7..(i + 1) * 7],
+                    "case {case} row {k} (position {i})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_handles_empty_and_all_masked() {
+        let o = oracle(4, 6);
+        let mask = o.mask_id();
+        // Empty request: no-op.
+        let tokens = vec![0u32, 1, 2, 3, 0, 1];
+        o.probs_masked_into(&tokens, &[], 0.5, &mut []);
+        // Fully masked: every row is pi.
+        let all = crate::score::all_masked(6, mask);
+        let idx: Vec<usize> = (0..6).collect();
+        let mut compact = vec![0.0; 6 * 4];
+        o.probs_masked_into(&all, &idx, 0.5, &mut compact);
+        for k in 0..6 {
+            for c in 0..4 {
+                assert!((compact[k * 4 + c] - o.chain.pi[c]).abs() < 1e-12);
+            }
+        }
     }
 
     #[test]

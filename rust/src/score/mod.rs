@@ -7,8 +7,24 @@
 //! - [`markov::MarkovOracle`]: exact conditionals of a first-order Markov
 //!   data law (the DESIGN.md substitution for the paper's RADD checkpoint);
 //! - [`hmm::HmmUniformOracle`]: exact score ratios for the *uniform-state*
-//!   diffusion over the same data law (powers Fig. 1's uniformization run);
-//! - `runtime::ArtifactScore` (in [`crate::runtime`]): the AOT transformer.
+//!   diffusion over the same data law (powers Fig. 1's uniformization run),
+//!   doubling as a noisy-context masked score source;
+//! - [`crate::runtime::ArtifactScore`]: the AOT-compiled score artifact
+//!   dispatched over PJRT.
+//!
+//! ## Sparse and batched evaluation
+//!
+//! The paper's NFE accounting treats one score evaluation as the unit of
+//! inference cost, but a dense `seq_len x vocab` evaluation does the same
+//! work at step 1 (everything masked) and at the last step (almost nothing
+//! masked).  [`ScoreSource::probs_masked_into`] is the sparse entry point:
+//! callers pass the sorted list of still-masked positions and receive a
+//! compact `|masked| x vocab` block, so late-step cost is proportional to
+//! the number of masked dimensions.  [`ScoreSource::probs_masked_batch`]
+//! evaluates many sequences at one forward time in a single call — the
+//! hook `solvers::masked::generate_batch` uses to amortise evaluation
+//! across request lanes (oracles fan out across threads, the artifact
+//! score packs lanes into one PJRT dispatch).
 
 pub mod markov;
 pub mod hmm;
@@ -31,6 +47,45 @@ pub trait ScoreSource: Send + Sync {
     /// oracles for the absorbing case are time-agnostic and ignore it.
     fn probs_into(&self, tokens: &[Tok], t: f64, out: &mut [f64]);
 
+    /// Sparse evaluation: write p(x_i = v | unmasked positions) into
+    /// `out[k * vocab + v]` for the k-th entry i = `masked_idx[k]` only.
+    ///
+    /// Contract: `masked_idx` is strictly increasing and every listed
+    /// position is currently masked; `out.len() == masked_idx.len() *
+    /// vocab`.  Rows must match the corresponding rows of [`probs_into`]
+    /// exactly (the solvers rely on this for batch/single equivalence).
+    ///
+    /// The default falls back to a dense evaluation and gathers the
+    /// requested rows; native implementations skip the dense work so the
+    /// cost is proportional to `masked_idx.len()`.
+    fn probs_masked_into(&self, tokens: &[Tok], masked_idx: &[usize], t: f64, out: &mut [f64]) {
+        let v = self.vocab();
+        debug_assert_eq!(out.len(), masked_idx.len() * v);
+        let mut dense = vec![0.0; self.seq_len() * v];
+        self.probs_into(tokens, t, &mut dense);
+        for (k, &i) in masked_idx.iter().enumerate() {
+            out[k * v..(k + 1) * v].copy_from_slice(&dense[i * v..(i + 1) * v]);
+        }
+    }
+
+    /// Batched sparse evaluation: one call evaluates `reqs.len()` sequences
+    /// at the same forward time `t`; request k is a `(tokens, masked_idx)`
+    /// pair whose compact rows are written into `outs[k]` (same layout and
+    /// contract as [`probs_masked_into`]).
+    ///
+    /// The default fans the independent per-sequence evaluations across
+    /// scoped threads (deterministic chunking — results are bitwise
+    /// identical to the sequential loop).  Implementations backed by
+    /// fixed-shape accelerator graphs override this to pack lanes into as
+    /// few dispatches as possible.
+    fn probs_masked_batch(&self, reqs: &[(&[Tok], &[usize])], t: f64, outs: &mut [&mut [f64]]) {
+        assert_eq!(reqs.len(), outs.len(), "probs_masked_batch arity mismatch");
+        let threads = crate::util::threadpool::ThreadPool::default_size();
+        crate::util::threadpool::par_zip_mut(outs, reqs, threads, |_, out, &(tokens, idx)| {
+            self.probs_masked_into(tokens, idx, t, *out);
+        });
+    }
+
     /// Convenience allocating wrapper.
     fn probs(&self, tokens: &[Tok], t: f64) -> Vec<f64> {
         let mut out = vec![0.0; self.seq_len() * self.vocab()];
@@ -44,7 +99,95 @@ pub fn n_masked(tokens: &[Tok], mask_id: Tok) -> usize {
     tokens.iter().filter(|&&t| t == mask_id).count()
 }
 
+/// Sorted indices of masked positions.
+pub fn masked_indices(tokens: &[Tok], mask_id: Tok) -> Vec<usize> {
+    (0..tokens.len()).filter(|&i| tokens[i] == mask_id).collect()
+}
+
 /// A fully masked sequence.
 pub fn all_masked(seq_len: usize, mask_id: Tok) -> Vec<Tok> {
     vec![mask_id; seq_len]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::score::markov::{MarkovChain, MarkovOracle};
+    use crate::util::rng::Xoshiro256;
+
+    /// A score source that only provides the dense entry point, to pin the
+    /// default sparse/batch fallbacks.
+    struct DenseOnly(MarkovOracle);
+
+    impl ScoreSource for DenseOnly {
+        fn vocab(&self) -> usize {
+            self.0.vocab()
+        }
+        fn seq_len(&self) -> usize {
+            self.0.seq_len()
+        }
+        fn probs_into(&self, tokens: &[Tok], t: f64, out: &mut [f64]) {
+            self.0.probs_into(tokens, t, out)
+        }
+    }
+
+    fn fixture() -> (DenseOnly, Vec<Tok>, Vec<usize>) {
+        let mut rng = Xoshiro256::seed_from_u64(77);
+        let oracle = MarkovOracle::new(MarkovChain::generate(&mut rng, 5, 0.5), 12);
+        let mask = oracle.mask_id();
+        let tokens: Vec<Tok> =
+            vec![mask, 2, mask, mask, 0, mask, 1, mask, mask, mask, 3, mask];
+        let idx = masked_indices(&tokens, mask);
+        (DenseOnly(oracle), tokens, idx)
+    }
+
+    #[test]
+    fn default_sparse_matches_dense_rows() {
+        let (s, tokens, idx) = fixture();
+        let v = s.vocab();
+        let dense = s.probs(&tokens, 0.4);
+        let mut compact = vec![0.0; idx.len() * v];
+        s.probs_masked_into(&tokens, &idx, 0.4, &mut compact);
+        for (k, &i) in idx.iter().enumerate() {
+            assert_eq!(
+                &compact[k * v..(k + 1) * v],
+                &dense[i * v..(i + 1) * v],
+                "row {k} (position {i})"
+            );
+        }
+    }
+
+    #[test]
+    fn default_batch_matches_per_sequence() {
+        let (s, tokens, idx) = fixture();
+        let v = s.vocab();
+        let mask = s.mask_id();
+        let tokens2: Vec<Tok> = vec![mask; 12];
+        let idx2 = masked_indices(&tokens2, mask);
+        let mut single1 = vec![0.0; idx.len() * v];
+        let mut single2 = vec![0.0; idx2.len() * v];
+        s.probs_masked_into(&tokens, &idx, 0.7, &mut single1);
+        s.probs_masked_into(&tokens2, &idx2, 0.7, &mut single2);
+
+        let mut b1 = vec![1.0; idx.len() * v];
+        let mut b2 = vec![1.0; idx2.len() * v];
+        {
+            let reqs: Vec<(&[Tok], &[usize])> = vec![
+                (tokens.as_slice(), idx.as_slice()),
+                (tokens2.as_slice(), idx2.as_slice()),
+            ];
+            let mut outs: Vec<&mut [f64]> = vec![&mut b1, &mut b2];
+            s.probs_masked_batch(&reqs, 0.7, &mut outs);
+        }
+        assert_eq!(b1, single1);
+        assert_eq!(b2, single2);
+    }
+
+    #[test]
+    fn masked_indices_sorted_and_complete() {
+        let (s, tokens, idx) = fixture();
+        assert_eq!(idx.len(), n_masked(&tokens, s.mask_id()));
+        assert!(idx.windows(2).all(|w| w[0] < w[1]));
+        assert!(idx.iter().all(|&i| tokens[i] == s.mask_id()));
+    }
 }

@@ -5,13 +5,36 @@
 //! the schemes differ only in the gate probability and in how stage-2
 //! information enters the destination law:
 //!
-//! | scheme            | gate for a masked dim                 | NFE/step |
-//! |-------------------|----------------------------------------|----------|
-//! | Euler             | clip(Δ/t, 1)                           | 1        |
-//! | τ-leaping         | 1 - exp(-Δ/t)                          | 1        |
-//! | Tweedie           | Δ/t (exact posterior mass)             | 1        |
-//! | θ-trapezoidal     | two-stage, Alg. 2 (extrapolated rates) | 2        |
-//! | θ-RK-2 (Alg. 4)   | two-stage, restart from y_{s_n}        | 2        |
+//! | scheme            | gate for a masked dim                  | NFE/step | eval set / step        |
+//! |-------------------|----------------------------------------|----------|------------------------|
+//! | Euler             | clip(Δ/t, 1)                           | ≤ 1      | active dims            |
+//! | τ-leaping         | 1 - exp(-Δ/t)                          | ≤ 1      | active dims            |
+//! | Tweedie           | Δ/t (exact posterior mass)             | ≤ 1      | active dims            |
+//! | θ-trapezoidal     | two-stage, Alg. 2 (extrapolated rates) | ≤ 2      | active, then stage-2 survivors |
+//! | θ-RK-2 (Alg. 4)   | two-stage, restart from y_{s_n}        | ≤ 2      | active, then y*-masked survivors |
+//! | parallel decoding | arccos schedule, top-k by confidence   | ≤ 1      | active dims            |
+//!
+//! ## Masked-sparse evaluation
+//!
+//! Every solver maintains a sorted, incrementally shrinking **active list**
+//! of still-masked positions and asks the score source only for those rows
+//! ([`ScoreSource::probs_masked_into`]), so per-step cost is proportional
+//! to the number of masked dimensions instead of `seq_len`.  Steps whose
+//! eval set is empty are skipped entirely (hence "≤" in the NFE column:
+//! `GenStats::nfe` counts evaluations actually performed, which can fall
+//! below the scheme's nominal budget once a lane fully unmasks).  The
+//! first-hitting sampler reveals one dimension per event and accordingly
+//! evaluates a single row per NFE.
+//!
+//! ## Batched lane-parallel generation
+//!
+//! [`generate_batch`] steps B lanes in lock-step: each stage issues **one**
+//! batched score call ([`ScoreSource::probs_masked_batch`]) covering every
+//! lane that needs it, then applies the per-lane sampling updates across
+//! the `util::threadpool` scoped workers.  Each lane draws from its own
+//! seeded RNG stream, so outputs are bit-identical to B independent
+//! [`generate`] calls with `Xoshiro256::seed_from_u64(seed)` — co-batching
+//! never changes samples (the property tests pin this).
 //!
 //! All solvers end with a shared `finalize` denoise of any still-masked
 //! dimensions (sampling each from its conditional at the early-stop time),
@@ -22,13 +45,15 @@
 use crate::score::{ScoreSource, Tok};
 use crate::solvers::{GenStats, Solver};
 use crate::util::dist::categorical;
-use crate::util::rng::Rng;
+use crate::util::rng::{Rng, Xoshiro256};
+use crate::util::threadpool::{par_zip_mut2, ThreadPool};
 
-/// Scratch buffers reused across steps (no allocation on the hot path).
+/// Compact score-evaluation buffers reused across steps (no allocation on
+/// the hot path).  Row k of `probs`/`probs_star` corresponds to the k-th
+/// entry of the index list passed to the score source, not to position k.
 struct Scratch {
     probs: Vec<f64>,
     probs_star: Vec<f64>,
-    comb: Vec<f64>,
 }
 
 impl Scratch {
@@ -36,8 +61,50 @@ impl Scratch {
         Self {
             probs: vec![0.0; l * v],
             probs_star: vec![0.0; l * v],
-            comb: vec![0.0; v],
         }
+    }
+}
+
+/// Per-lane sampler state: the token buffer, the shrinking active list and
+/// the per-scheme staging buffers — everything the apply phases mutate.
+struct LaneState {
+    tokens: Vec<Tok>,
+    /// Sorted positions still masked at the start of the current stage.
+    active: Vec<usize>,
+    /// Stage-2 evaluation subset (two-stage schemes), rebuilt every step.
+    sub: Vec<usize>,
+    /// Combined-intensity row scratch (two-stage schemes).
+    comb: Vec<f64>,
+    /// (confidence, position, token) scratch for parallel decoding.
+    scored: Vec<(f64, usize, Tok)>,
+    stats: GenStats,
+}
+
+impl LaneState {
+    fn new(l: usize, v: usize, mask: Tok) -> Self {
+        Self {
+            tokens: vec![mask; l],
+            active: (0..l).collect(),
+            sub: Vec::with_capacity(l),
+            comb: vec![0.0; v],
+            scored: Vec::with_capacity(l),
+            stats: GenStats::default(),
+        }
+    }
+}
+
+fn validate_solver(solver: Solver) {
+    match solver {
+        Solver::Trapezoidal { theta } => {
+            assert!(
+                theta > 0.0 && theta < 1.0,
+                "trapezoidal needs theta in (0,1)"
+            );
+        }
+        Solver::Rk2 { theta } => {
+            assert!(theta > 0.0 && theta <= 1.0, "rk2 needs theta in (0,1]");
+        }
+        _ => {}
     }
 }
 
@@ -50,45 +117,220 @@ pub fn generate<S: ScoreSource + ?Sized, R: Rng>(
     rng: &mut R,
 ) -> (Vec<Tok>, GenStats) {
     assert!(crate::solvers::grid::is_valid_grid(grid), "invalid time grid");
+    validate_solver(solver);
     let l = score.seq_len();
     let v = score.vocab();
     let mask = score.mask_id();
-    let mut tokens = vec![mask; l];
-    let mut stats = GenStats::default();
+    let mut st = LaneState::new(l, v, mask);
     let mut sc = Scratch::new(l, v);
 
     match solver {
         Solver::ParallelDecoding => {
-            parallel_decode(score, grid.len() - 1, &mut tokens, &mut stats, &mut sc, rng);
+            let n_steps = grid.len() - 1;
+            for n in 0..n_steps {
+                if st.active.is_empty() {
+                    break;
+                }
+                let (k_reveal, t) = pd_schedule(l, st.active.len(), n, n_steps);
+                if k_reveal == 0 {
+                    continue;
+                }
+                let m = st.active.len();
+                score.probs_masked_into(&st.tokens, &st.active, t, &mut sc.probs[..m * v]);
+                st.stats.nfe += 1;
+                st.stats.steps += 1;
+                pd_apply(v, mask, t, k_reveal, &sc.probs, &mut st, rng);
+            }
         }
         _ => {
             for w in grid.windows(2) {
                 let (t, t_next) = (w[0], w[1]);
-                match solver {
-                    Solver::Euler => {
-                        one_stage(score, Gate::Linear, t, t_next, &mut tokens, &mut stats, &mut sc, rng)
+                let m = st.active.len();
+                if m > 0 {
+                    score.probs_masked_into(&st.tokens, &st.active, t, &mut sc.probs[..m * v]);
+                    apply_stage1(solver, v, t, t_next, &mut st, &mut sc, rng);
+                    if solver.nfe_per_step() == 2 {
+                        if !st.sub.is_empty() {
+                            let rho = stage2_time(solver, t, t_next);
+                            let m2 = st.sub.len();
+                            score.probs_masked_into(
+                                &st.tokens,
+                                &st.sub,
+                                rho,
+                                &mut sc.probs_star[..m2 * v],
+                            );
+                        }
+                        apply_stage2(solver, v, mask, t, t_next, &mut st, &mut sc, rng);
                     }
-                    Solver::TauLeaping => {
-                        one_stage(score, Gate::Poisson, t, t_next, &mut tokens, &mut stats, &mut sc, rng)
-                    }
-                    Solver::Tweedie => {
-                        one_stage(score, Gate::Exact, t, t_next, &mut tokens, &mut stats, &mut sc, rng)
-                    }
-                    Solver::Trapezoidal { theta } => {
-                        trapezoidal_step(score, theta, t, t_next, &mut tokens, &mut stats, &mut sc, rng)
-                    }
-                    Solver::Rk2 { theta } => {
-                        rk2_step(score, theta, t, t_next, &mut tokens, &mut stats, &mut sc, rng)
-                    }
-                    Solver::ParallelDecoding => unreachable!(),
                 }
-                stats.steps += 1;
+                st.stats.steps += 1;
             }
         }
     }
 
-    finalize(score, *grid.last().unwrap(), &mut tokens, &mut stats, &mut sc, rng);
-    (tokens, stats)
+    finalize(score, *grid.last().unwrap(), &mut st, &mut sc.probs, rng);
+    (st.tokens, st.stats)
+}
+
+/// Generate B sequences in lock-step, one batched score call per stage.
+///
+/// Lane b is seeded with `Xoshiro256::seed_from_u64(seeds[b])` and its
+/// output is bit-identical to `generate(score, solver, grid, &mut that_rng)`
+/// — batching is a pure throughput optimisation.  Score evaluation is
+/// amortised through [`ScoreSource::probs_masked_batch`] (one PJRT dispatch
+/// per stage for artifact scores, threaded fan-out for oracles) and the
+/// sampling applies run across the threadpool's scoped workers with
+/// deterministic lane chunking.
+pub fn generate_batch<S: ScoreSource + ?Sized>(
+    score: &S,
+    solver: Solver,
+    grid: &[f64],
+    seeds: &[u64],
+) -> Vec<(Vec<Tok>, GenStats)> {
+    assert!(crate::solvers::grid::is_valid_grid(grid), "invalid time grid");
+    validate_solver(solver);
+    if seeds.is_empty() {
+        return Vec::new();
+    }
+    let l = score.seq_len();
+    let v = score.vocab();
+    let mask = score.mask_id();
+    let threads = ThreadPool::default_size().min(seeds.len());
+
+    struct BatchLane {
+        state: LaneState,
+        rng: Xoshiro256,
+    }
+    let mut lanes: Vec<BatchLane> = seeds
+        .iter()
+        .map(|&s| BatchLane {
+            state: LaneState::new(l, v, mask),
+            rng: Xoshiro256::seed_from_u64(s),
+        })
+        .collect();
+    let mut bufs: Vec<Scratch> = seeds.iter().map(|_| Scratch::new(l, v)).collect();
+
+    /// Which index list a stage evaluates.
+    enum Sel {
+        Active,
+        Sub,
+        Pd { n: usize, n_steps: usize },
+    }
+
+    fn selected<'a>(sel: &Sel, st: &'a LaneState) -> Option<&'a [usize]> {
+        match sel {
+            Sel::Active => (!st.active.is_empty()).then(|| st.active.as_slice()),
+            Sel::Sub => (!st.sub.is_empty()).then(|| st.sub.as_slice()),
+            Sel::Pd { n, n_steps } => {
+                if st.active.is_empty() {
+                    return None;
+                }
+                let (k, _) = pd_schedule(st.tokens.len(), st.active.len(), *n, *n_steps);
+                (k > 0).then(|| st.active.as_slice())
+            }
+        }
+    }
+
+    /// One batched score call covering every lane the selector picks.
+    fn eval_stage<S: ScoreSource + ?Sized>(
+        score: &S,
+        lanes: &[BatchLane],
+        bufs: &mut [Scratch],
+        t: f64,
+        sel: &Sel,
+        star: bool,
+    ) {
+        let v = score.vocab();
+        let mut reqs: Vec<(&[Tok], &[usize])> = Vec::new();
+        let mut outs: Vec<&mut [f64]> = Vec::new();
+        for (lane, sc) in lanes.iter().zip(bufs.iter_mut()) {
+            let Some(idx) = selected(sel, &lane.state) else {
+                continue;
+            };
+            let buf = if star { &mut sc.probs_star } else { &mut sc.probs };
+            reqs.push((lane.state.tokens.as_slice(), idx));
+            outs.push(&mut buf[..idx.len() * v]);
+        }
+        if !reqs.is_empty() {
+            score.probs_masked_batch(&reqs, t, &mut outs);
+        }
+    }
+
+    match solver {
+        Solver::ParallelDecoding => {
+            let n_steps = grid.len() - 1;
+            for n in 0..n_steps {
+                let t = pd_time(n, n_steps);
+                eval_stage(score, &lanes, &mut bufs, t, &Sel::Pd { n, n_steps }, false);
+                par_zip_mut2(&mut lanes, &mut bufs, threads, |_, lane, sc| {
+                    let st = &mut lane.state;
+                    if st.active.is_empty() {
+                        return;
+                    }
+                    let (k_reveal, t) = pd_schedule(l, st.active.len(), n, n_steps);
+                    if k_reveal == 0 {
+                        return;
+                    }
+                    st.stats.nfe += 1;
+                    st.stats.steps += 1;
+                    pd_apply(v, mask, t, k_reveal, &sc.probs, st, &mut lane.rng);
+                });
+            }
+        }
+        _ => {
+            for w in grid.windows(2) {
+                let (t, t_next) = (w[0], w[1]);
+                eval_stage(score, &lanes, &mut bufs, t, &Sel::Active, false);
+                par_zip_mut2(&mut lanes, &mut bufs, threads, |_, lane, sc| {
+                    if !lane.state.active.is_empty() {
+                        apply_stage1(solver, v, t, t_next, &mut lane.state, sc, &mut lane.rng);
+                    }
+                });
+                if solver.nfe_per_step() == 2 {
+                    let rho = stage2_time(solver, t, t_next);
+                    eval_stage(score, &lanes, &mut bufs, rho, &Sel::Sub, true);
+                    par_zip_mut2(&mut lanes, &mut bufs, threads, |_, lane, sc| {
+                        // Stage 2 runs wherever stage 1 ran this window.
+                        // Two-stage schemes never shrink `active` during
+                        // stage 1, so non-empty `active` is exactly that
+                        // condition — and the RK-2 combine must run even
+                        // with an empty stage-2 subset (mu* = 0 everywhere).
+                        if !lane.state.active.is_empty() {
+                            apply_stage2(
+                                solver,
+                                v,
+                                mask,
+                                t,
+                                t_next,
+                                &mut lane.state,
+                                sc,
+                                &mut lane.rng,
+                            );
+                        }
+                    });
+                }
+                for lane in &mut lanes {
+                    lane.state.stats.steps += 1;
+                }
+            }
+        }
+    }
+
+    let delta = *grid.last().unwrap();
+    eval_stage(score, &lanes, &mut bufs, delta, &Sel::Active, false);
+    par_zip_mut2(&mut lanes, &mut bufs, threads, |_, lane, sc| {
+        let st = &mut lane.state;
+        if st.active.is_empty() {
+            return;
+        }
+        st.stats.nfe += 1;
+        finalize_apply(v, &sc.probs, st, &mut lane.rng);
+    });
+
+    lanes
+        .into_iter()
+        .map(|lane| (lane.state.tokens, lane.state.stats))
+        .collect()
 }
 
 #[derive(Clone, Copy)]
@@ -111,219 +353,269 @@ impl Gate {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn one_stage<S: ScoreSource + ?Sized, R: Rng>(
-    score: &S,
-    gate: Gate,
-    t: f64,
-    t_next: f64,
-    tokens: &mut [Tok],
-    stats: &mut GenStats,
-    sc: &mut Scratch,
-    rng: &mut R,
-) {
-    let v = score.vocab();
-    let mask = score.mask_id();
-    score.probs_into(tokens, t, &mut sc.probs);
-    stats.nfe += 1;
-    let p_gate = gate.prob(t, t_next);
-    for i in 0..tokens.len() {
-        if tokens[i] != mask {
-            continue;
-        }
-        if rng.gen_f64() < p_gate {
-            let row = &sc.probs[i * v..(i + 1) * v];
-            if let Some(tok) = categorical(rng, row) {
-                tokens[i] = tok as Tok;
-            }
-        }
+/// θ-section point of the two-stage schemes: ρ = t - θΔ.
+fn stage2_time(solver: Solver, t: f64, t_next: f64) -> f64 {
+    match solver {
+        Solver::Trapezoidal { theta } | Solver::Rk2 { theta } => t - theta * (t - t_next),
+        _ => unreachable!("stage2_time on a one-stage solver"),
     }
 }
 
-/// θ-trapezoidal (Alg. 2): stage 1 τ-leaps θΔ; stage 2 starts from the
-/// intermediate state and leaps (1-θ)Δ with (α1 μ*_ρ - α2 μ_t)+.
+/// Apply the stage-1 sampling update for one lane.  Precondition: the lane's
+/// active set is non-empty and `sc.probs[..active.len() * v]` holds its
+/// compact rows at time t (that evaluation is charged here).  Two-stage
+/// schemes leave their stage-2 eval subset in `st.sub`; `st.sub` is cleared
+/// for one-stage schemes.
 #[allow(clippy::too_many_arguments)]
-fn trapezoidal_step<S: ScoreSource + ?Sized, R: Rng>(
-    score: &S,
-    theta: f64,
+fn apply_stage1<R: Rng>(
+    solver: Solver,
+    v: usize,
     t: f64,
     t_next: f64,
-    tokens: &mut [Tok],
-    stats: &mut GenStats,
+    st: &mut LaneState,
     sc: &mut Scratch,
     rng: &mut R,
 ) {
-    assert!(theta > 0.0 && theta < 1.0, "trapezoidal needs theta in (0,1)");
-    let v = score.vocab();
-    let mask = score.mask_id();
+    debug_assert!(!st.active.is_empty());
+    st.stats.nfe += 1;
     let dt = t - t_next;
-    let rho = t - theta * dt;
-    let a1 = 1.0 / (2.0 * theta * (1.0 - theta));
-    let a2 = a1 - 1.0;
-
-    // Stage 1: mu_t = probs / t on masked dims; τ-leap for θΔ.
-    score.probs_into(tokens, t, &mut sc.probs);
-    stats.nfe += 1;
-    let was_masked: Vec<bool> = tokens.iter().map(|&x| x == mask).collect();
-    let p1 = 1.0 - (-(theta * dt) / t).exp();
-    for i in 0..tokens.len() {
-        if !was_masked[i] {
-            continue;
-        }
-        if rng.gen_f64() < p1 {
-            let row = &sc.probs[i * v..(i + 1) * v];
-            if let Some(tok) = categorical(rng, row) {
-                tokens[i] = tok as Tok;
-            }
-        }
-    }
-
-    // Stage 2: second NFE on the intermediate state at the θ-section point.
-    score.probs_into(tokens, rho, &mut sc.probs_star);
-    stats.nfe += 1;
-    let tail = (1.0 - theta) * dt;
-    for i in 0..tokens.len() {
-        if tokens[i] != mask {
-            continue; // unmasked in stage 1 (or before): zero intensity
-        }
-        // Combined per-token intensity; mu rows use the SAME dim from the
-        // original state (was_masked[i] is true here by construction).
-        let mut tot = 0.0;
-        for c in 0..v {
-            let mu_star = sc.probs_star[i * v + c] / rho;
-            let mu_t = sc.probs[i * v + c] / t;
-            let m = (a1 * mu_star - a2 * mu_t).max(0.0);
-            sc.comb[c] = m;
-            tot += m;
-        }
-        let p2 = 1.0 - (-tot * tail).exp();
-        if rng.gen_f64() < p2 {
-            if let Some(tok) = categorical(rng, &sc.comb) {
-                tokens[i] = tok as Tok;
-            }
-        }
-    }
-}
-
-/// Practical θ-RK-2 (Alg. 4): stage 1 as above, but stage 2 restarts from
-/// the ORIGINAL state and leaps the full Δ with ((1-1/2θ) μ_t + (1/2θ) μ*)+.
-/// Stage-1 unmaskings are discarded except through μ* — for θ <= 1/2 a dim
-/// revealed in stage 1 has zero combined intensity and ends the step masked,
-/// which is exactly the conservatism that makes RK-2 trail the trapezoidal
-/// method empirically (Sec. 6).
-#[allow(clippy::too_many_arguments)]
-fn rk2_step<S: ScoreSource + ?Sized, R: Rng>(
-    score: &S,
-    theta: f64,
-    t: f64,
-    t_next: f64,
-    tokens: &mut [Tok],
-    stats: &mut GenStats,
-    sc: &mut Scratch,
-    rng: &mut R,
-) {
-    assert!(theta > 0.0 && theta <= 1.0, "rk2 needs theta in (0,1]");
-    let v = score.vocab();
-    let mask = score.mask_id();
-    let dt = t - t_next;
-    let rho = t - theta * dt;
-    let w = 1.0 / (2.0 * theta);
-
-    score.probs_into(tokens, t, &mut sc.probs);
-    stats.nfe += 1;
-    let original = tokens.to_vec();
-    let p1 = 1.0 - (-(theta * dt) / t).exp();
-    for i in 0..tokens.len() {
-        if original[i] != mask {
-            continue;
-        }
-        if rng.gen_f64() < p1 {
-            let row = &sc.probs[i * v..(i + 1) * v];
-            if let Some(tok) = categorical(rng, row) {
-                tokens[i] = tok as Tok;
-            }
-        }
-    }
-
-    score.probs_into(tokens, rho, &mut sc.probs_star);
-    stats.nfe += 1;
-    let y_star = tokens.to_vec();
-    tokens.copy_from_slice(&original); // Alg. 4 restarts from y_{s_n}
-    for i in 0..tokens.len() {
-        if original[i] != mask {
-            continue;
-        }
-        let star_masked = y_star[i] == mask;
-        let mut tot = 0.0;
-        for c in 0..v {
-            let mu_t = sc.probs[i * v + c] / t;
-            let mu_star = if star_masked {
-                sc.probs_star[i * v + c] / rho
-            } else {
-                0.0
+    match solver {
+        Solver::Euler | Solver::TauLeaping | Solver::Tweedie => {
+            st.sub.clear();
+            let gate = match solver {
+                Solver::Euler => Gate::Linear,
+                Solver::TauLeaping => Gate::Poisson,
+                _ => Gate::Exact,
             };
-            let m = ((1.0 - w) * mu_t + w * mu_star).max(0.0);
-            sc.comb[c] = m;
-            tot += m;
+            one_stage_apply(v, gate.prob(t, t_next), &sc.probs, &mut st.tokens, &mut st.active, rng);
         }
-        let p2 = 1.0 - (-tot * dt).exp();
-        if rng.gen_f64() < p2 {
-            if let Some(tok) = categorical(rng, &sc.comb) {
-                tokens[i] = tok as Tok;
+        Solver::Trapezoidal { theta } => {
+            // Stage 1 of Alg. 2: τ-leap for θΔ with mu_t = probs / t; rows
+            // of survivors are compacted in place so stage 2 indexes them
+            // by their position in `sub`.
+            let p1 = 1.0 - (-(theta * dt) / t).exp();
+            st.sub.clear();
+            for k in 0..st.active.len() {
+                let i = st.active[k];
+                let mut still_masked = true;
+                if rng.gen_f64() < p1 {
+                    if let Some(tok) = categorical(rng, &sc.probs[k * v..(k + 1) * v]) {
+                        st.tokens[i] = tok as Tok;
+                        still_masked = false;
+                    }
+                }
+                if still_masked {
+                    let w = st.sub.len();
+                    if w != k {
+                        sc.probs.copy_within(k * v..(k + 1) * v, w * v);
+                    }
+                    st.sub.push(i);
+                }
             }
         }
+        Solver::Rk2 { theta } => {
+            // Stage 1 of Alg. 4: τ-leap for θΔ building y* in place.  All
+            // stage-1 rows stay aligned with `active` (stage 2 needs every
+            // mu_t row); `sub` collects the dims still masked in y*.
+            let p1 = 1.0 - (-(theta * dt) / t).exp();
+            st.sub.clear();
+            for (k, &i) in st.active.iter().enumerate() {
+                let mut still_masked = true;
+                if rng.gen_f64() < p1 {
+                    if let Some(tok) = categorical(rng, &sc.probs[k * v..(k + 1) * v]) {
+                        st.tokens[i] = tok as Tok;
+                        still_masked = false;
+                    }
+                }
+                if still_masked {
+                    st.sub.push(i);
+                }
+            }
+        }
+        Solver::ParallelDecoding => unreachable!("parallel decoding has its own loop"),
     }
 }
 
-/// MaskGIT parallel decoding (App. D.4): arccos masking schedule, linear
-/// randomisation (Gumbel noise scaled by the remaining time fraction).
-fn parallel_decode<S: ScoreSource + ?Sized, R: Rng>(
-    score: &S,
-    n_steps: usize,
-    tokens: &mut [Tok],
-    stats: &mut GenStats,
+/// Apply the stage-2 update for a two-stage lane.  Precondition: stage 1
+/// ran this step; when `st.sub` is non-empty, `sc.probs_star[..sub.len()*v]`
+/// holds its compact rows at ρ (that evaluation is charged here).
+#[allow(clippy::too_many_arguments)]
+fn apply_stage2<R: Rng>(
+    solver: Solver,
+    v: usize,
+    mask: Tok,
+    t: f64,
+    t_next: f64,
+    st: &mut LaneState,
     sc: &mut Scratch,
     rng: &mut R,
 ) {
-    let l = tokens.len();
-    let v = score.vocab();
-    let mask = score.mask_id();
-    for n in 0..n_steps {
-        let frac = (n + 1) as f64 / n_steps as f64;
-        let target = if n + 1 == n_steps {
-            0
-        } else {
-            ((std::f64::consts::FRAC_PI_2 * frac).cos() * l as f64).ceil() as usize
-        };
-        let t = 1.0 - n as f64 / n_steps as f64; // remaining-time temperature
-        let masked: Vec<usize> =
-            (0..l).filter(|&i| tokens[i] == mask).collect();
-        if masked.is_empty() {
-            break;
+    let dt = t - t_next;
+    let rho = stage2_time(solver, t, t_next);
+    match solver {
+        Solver::Trapezoidal { theta } => {
+            if st.sub.is_empty() {
+                // Everything unmasked in stage 1: no survivor has positive
+                // intensity, the step is done.
+                st.active.clear();
+                return;
+            }
+            st.stats.nfe += 1; // the ρ evaluation over `sub`
+            let a1 = 1.0 / (2.0 * theta * (1.0 - theta));
+            let a2 = a1 - 1.0;
+            let tail = (1.0 - theta) * dt;
+            st.active.clear();
+            for (j, &i) in st.sub.iter().enumerate() {
+                // Combined per-token intensity (α1 μ*_ρ - α2 μ_t)+; the μ_t
+                // row was compacted to slot j in stage 1.
+                let mut tot = 0.0;
+                for c in 0..v {
+                    let mu_star = sc.probs_star[j * v + c] / rho;
+                    let mu_t = sc.probs[j * v + c] / t;
+                    let m = (a1 * mu_star - a2 * mu_t).max(0.0);
+                    st.comb[c] = m;
+                    tot += m;
+                }
+                let p2 = 1.0 - (-tot * tail).exp();
+                let mut still_masked = true;
+                if rng.gen_f64() < p2 {
+                    if let Some(tok) = categorical(rng, &st.comb) {
+                        st.tokens[i] = tok as Tok;
+                        still_masked = false;
+                    }
+                }
+                if still_masked {
+                    st.active.push(i);
+                }
+            }
+            // `sub` is consumed: clear it so a finished lane can never be
+            // re-selected for a stage-2 eval by the batch driver.
+            st.sub.clear();
         }
-        let k = masked.len().saturating_sub(target);
-        if k == 0 {
-            continue;
+        Solver::Rk2 { theta } => {
+            if !st.sub.is_empty() {
+                st.stats.nfe += 1;
+            }
+            let w_coef = 1.0 / (2.0 * theta);
+            // Alg. 4 restarts from y_{s_n}: re-mask every originally
+            // masked dim (stage-1 reveals only enter through μ*).
+            for &i in st.active.iter() {
+                st.tokens[i] = mask;
+            }
+            let m = st.active.len();
+            let mut j = 0usize; // pointer into sub (dims masked in y*)
+            let mut w = 0usize; // in-place retain cursor
+            for k in 0..m {
+                let i = st.active[k];
+                let star = j < st.sub.len() && st.sub[j] == i;
+                let mut tot = 0.0;
+                for c in 0..v {
+                    let mu_t = sc.probs[k * v + c] / t;
+                    let mu_star = if star {
+                        sc.probs_star[j * v + c] / rho
+                    } else {
+                        0.0
+                    };
+                    let mc = ((1.0 - w_coef) * mu_t + w_coef * mu_star).max(0.0);
+                    st.comb[c] = mc;
+                    tot += mc;
+                }
+                if star {
+                    j += 1;
+                }
+                let p2 = 1.0 - (-tot * dt).exp();
+                let mut still_masked = true;
+                if rng.gen_f64() < p2 {
+                    if let Some(tok) = categorical(rng, &st.comb) {
+                        st.tokens[i] = tok as Tok;
+                        still_masked = false;
+                    }
+                }
+                if still_masked {
+                    st.active[w] = i;
+                    w += 1;
+                }
+            }
+            st.active.truncate(w);
+            st.sub.clear();
         }
-        score.probs_into(tokens, t, &mut sc.probs);
-        stats.nfe += 1;
-        stats.steps += 1;
-        // Sample every masked position, score by randomised confidence.
-        let mut scored: Vec<(f64, usize, Tok)> = masked
-            .iter()
-            .map(|&i| {
-                let row = &sc.probs[i * v..(i + 1) * v];
-                let tok = categorical(rng, row).unwrap_or(0);
-                let conf = row[tok].max(1e-30).ln()
-                    + t * crate::util::dist::gumbel(rng, 1e-9);
-                (conf, i, tok as Tok)
-            })
-            .collect();
-        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-        for &(_, i, tok) in scored.iter().take(k) {
-            tokens[i] = tok;
+        _ => unreachable!("apply_stage2 on a one-stage solver"),
+    }
+}
+
+/// One-stage gate-and-sample over the active list, shrinking it in place.
+fn one_stage_apply<R: Rng>(
+    v: usize,
+    p_gate: f64,
+    probs: &[f64],
+    tokens: &mut [Tok],
+    active: &mut Vec<usize>,
+    rng: &mut R,
+) {
+    let m = active.len();
+    let mut w = 0usize;
+    for k in 0..m {
+        let i = active[k];
+        let mut still_masked = true;
+        if rng.gen_f64() < p_gate {
+            if let Some(tok) = categorical(rng, &probs[k * v..(k + 1) * v]) {
+                tokens[i] = tok as Tok;
+                still_masked = false;
+            }
+        }
+        if still_masked {
+            active[w] = i;
+            w += 1;
         }
     }
+    active.truncate(w);
+}
+
+/// MaskGIT parallel-decoding schedule (App. D.4): how many dims to reveal
+/// at step n of n_steps given m currently masked, plus the
+/// remaining-time temperature used for both the eval and the Gumbel noise.
+fn pd_schedule(l: usize, m: usize, n: usize, n_steps: usize) -> (usize, f64) {
+    let frac = (n + 1) as f64 / n_steps as f64;
+    let target = if n + 1 == n_steps {
+        0
+    } else {
+        ((std::f64::consts::FRAC_PI_2 * frac).cos() * l as f64).ceil() as usize
+    };
+    (m.saturating_sub(target), pd_time(n, n_steps))
+}
+
+/// Remaining-time temperature of parallel-decoding step n — the single
+/// definition shared by the per-lane schedule and the batch eval driver.
+fn pd_time(n: usize, n_steps: usize) -> f64 {
+    1.0 - n as f64 / n_steps as f64
+}
+
+/// Sample every active position, score by randomised confidence, commit the
+/// top `k_reveal`, and shrink the active list (order preserved).
+#[allow(clippy::too_many_arguments)]
+fn pd_apply<R: Rng>(
+    v: usize,
+    mask: Tok,
+    t: f64,
+    k_reveal: usize,
+    probs: &[f64],
+    st: &mut LaneState,
+    rng: &mut R,
+) {
+    st.scored.clear();
+    for (k, &i) in st.active.iter().enumerate() {
+        let row = &probs[k * v..(k + 1) * v];
+        let tok = categorical(rng, row).unwrap_or(0);
+        let conf = row[tok].max(1e-30).ln() + t * crate::util::dist::gumbel(rng, 1e-9);
+        st.scored.push((conf, i, tok as Tok));
+    }
+    st.scored
+        .sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    for &(_, i, tok) in st.scored.iter().take(k_reveal) {
+        st.tokens[i] = tok;
+    }
+    let tokens = &st.tokens;
+    st.active.retain(|&i| tokens[i] == mask);
 }
 
 /// Shared terminal denoise: sample any still-masked dim from its conditional
@@ -331,36 +623,43 @@ fn parallel_decode<S: ScoreSource + ?Sized, R: Rng>(
 fn finalize<S: ScoreSource + ?Sized, R: Rng>(
     score: &S,
     delta: f64,
-    tokens: &mut [Tok],
-    stats: &mut GenStats,
-    sc: &mut Scratch,
+    st: &mut LaneState,
+    probs: &mut Vec<f64>,
     rng: &mut R,
 ) {
-    let mask = score.mask_id();
-    if tokens.iter().all(|&x| x != mask) {
+    if st.active.is_empty() {
         return;
     }
     let v = score.vocab();
-    score.probs_into(tokens, delta, &mut sc.probs);
-    stats.nfe += 1;
-    for i in 0..tokens.len() {
-        if tokens[i] != mask {
-            continue;
-        }
-        let row = &sc.probs[i * v..(i + 1) * v];
+    let m = st.active.len();
+    if probs.len() < m * v {
+        probs.resize(m * v, 0.0);
+    }
+    score.probs_masked_into(&st.tokens, &st.active, delta, &mut probs[..m * v]);
+    st.stats.nfe += 1;
+    finalize_apply(v, probs, st, rng);
+}
+
+fn finalize_apply<R: Rng>(v: usize, probs: &[f64], st: &mut LaneState, rng: &mut R) {
+    for (k, &i) in st.active.iter().enumerate() {
+        let row = &probs[k * v..(k + 1) * v];
         if let Some(tok) = categorical(rng, row) {
-            tokens[i] = tok as Tok;
+            st.tokens[i] = tok as Tok;
         } else {
-            tokens[i] = rng.gen_usize(v) as Tok;
+            st.tokens[i] = rng.gen_usize(v) as Tok;
         }
     }
+    st.active.clear();
 }
 
 /// First-Hitting Sampler (Zheng et al. 2024) — exact simulation for the
 /// absorbing case (Sec. 3.1).  With m masked dims at forward time t the next
 /// unmask time satisfies P(no event until s) = (s/t)^m, so s = t u^{1/m};
 /// one uniformly chosen dim is then revealed from its exact conditional.
-/// NFE equals the number of unmask events (= seq_len without early stop).
+/// NFE equals the number of unmask events (= seq_len without early stop),
+/// and each evaluation asks the score source for a single row — the
+/// largest single win of the sparse path (O(V) instead of O(L·V) row work
+/// per event).
 pub fn fhs_generate<S: ScoreSource + ?Sized, R: Rng>(
     score: &S,
     delta: f64,
@@ -369,39 +668,39 @@ pub fn fhs_generate<S: ScoreSource + ?Sized, R: Rng>(
     let l = score.seq_len();
     let v = score.vocab();
     let mask = score.mask_id();
-    let mut tokens = vec![mask; l];
-    let mut stats = GenStats::default();
+    let mut st = LaneState::new(l, v, mask);
     let mut jump_times = Vec::with_capacity(l);
-    let mut sc = Scratch::new(l, v);
+    let mut row = vec![0.0; v];
 
     let mut t = 1.0;
     loop {
-        let masked: Vec<usize> = (0..l).filter(|&i| tokens[i] == mask).collect();
-        if masked.is_empty() {
+        if st.active.is_empty() {
             break;
         }
-        let m = masked.len() as f64;
+        let m = st.active.len() as f64;
         t *= rng.gen_f64().powf(1.0 / m);
         if t <= delta {
             break;
         }
-        let &i = &masked[rng.gen_usize(masked.len())];
-        score.probs_into(&tokens, t, &mut sc.probs);
-        stats.nfe += 1;
-        stats.steps += 1;
-        let row = &sc.probs[i * v..(i + 1) * v];
-        if let Some(tok) = categorical(rng, row) {
-            tokens[i] = tok as Tok;
+        let pos = rng.gen_usize(st.active.len());
+        let i = st.active[pos];
+        score.probs_masked_into(&st.tokens, &st.active[pos..pos + 1], t, &mut row);
+        st.stats.nfe += 1;
+        st.stats.steps += 1;
+        if let Some(tok) = categorical(rng, &row) {
+            st.tokens[i] = tok as Tok;
+            st.active.remove(pos);
         }
         jump_times.push(t);
     }
-    finalize(score, delta, &mut tokens, &mut stats, &mut sc, rng);
-    (tokens, stats, jump_times)
+    finalize(score, delta, &mut st, &mut row, rng);
+    (st.tokens, st.stats, jump_times)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::score::hmm::HmmUniformOracle;
     use crate::score::markov::{MarkovChain, MarkovOracle};
     use crate::solvers::grid::masked_uniform;
     use crate::util::rng::Xoshiro256;
@@ -440,7 +739,11 @@ mod tests {
     }
 
     #[test]
-    fn nfe_matches_accounting_modulo_finalize() {
+    fn nfe_counts_only_performed_evaluations() {
+        // Sparse skipping means NFE can fall below the nominal
+        // steps * nfe_per_step budget once a lane fully unmasks (or a
+        // trapezoidal stage 1 unmasks everything); it can never exceed the
+        // budget plus the single finalize evaluation.
         let o = oracle();
         let mut rng = Xoshiro256::seed_from_u64(1);
         let grid = masked_uniform(20, 1e-3);
@@ -451,14 +754,16 @@ mod tests {
             Solver::Trapezoidal { theta: 0.5 },
             Solver::Rk2 { theta: 0.3 },
         ] {
-            let (_, stats) = generate(&o, s, &grid, &mut rng);
-            let base = 20 * s.nfe_per_step();
+            let (toks, stats) = generate(&o, s, &grid, &mut rng);
+            let bound = 20 * s.nfe_per_step() + 1;
             assert!(
-                stats.nfe == base || stats.nfe == base + 1,
-                "{}: nfe={} base={base}",
+                stats.nfe >= 1 && stats.nfe <= bound,
+                "{}: nfe={} bound={bound}",
                 s.name(),
                 stats.nfe
             );
+            assert_eq!(stats.steps, 20, "{}", s.name());
+            assert!(toks.iter().all(|&t| (t as usize) < 6), "{}", s.name());
         }
     }
 
@@ -472,6 +777,54 @@ mod tests {
             let (a, _) = generate(&o, s, &grid, &mut r1);
             let (b, _) = generate(&o, s, &grid, &mut r2);
             assert_eq!(a, b, "{} not reproducible", s.name());
+        }
+    }
+
+    #[test]
+    fn batch_bit_identical_to_independent_lanes() {
+        let o = oracle();
+        let grid = masked_uniform(10, 1e-3);
+        let seeds = [3u64, 141, 59, 2653, 0];
+        for s in all_solvers() {
+            let batch = generate_batch(&o, s, &grid, &seeds);
+            assert_eq!(batch.len(), seeds.len(), "{}", s.name());
+            for (lane, &seed) in batch.iter().zip(&seeds) {
+                let mut rng = Xoshiro256::seed_from_u64(seed);
+                let (toks, stats) = generate(&o, s, &grid, &mut rng);
+                assert_eq!(lane.0, toks, "{} lane seed {seed}", s.name());
+                assert_eq!(lane.1.nfe, stats.nfe, "{} nfe seed {seed}", s.name());
+                assert_eq!(lane.1.steps, stats.steps, "{} steps seed {seed}", s.name());
+            }
+        }
+    }
+
+    #[test]
+    fn batch_of_one_and_empty() {
+        let o = oracle();
+        let grid = masked_uniform(6, 1e-3);
+        assert!(generate_batch(&o, Solver::Euler, &grid, &[]).is_empty());
+        let one = generate_batch(&o, Solver::Tweedie, &grid, &[7]);
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let (toks, _) = generate(&o, Solver::Tweedie, &grid, &mut rng);
+        assert_eq!(one[0].0, toks);
+    }
+
+    #[test]
+    fn hmm_score_source_drives_masked_solvers() {
+        // The uniform-state oracle's masked view is a valid (t-dependent)
+        // score source: solvers must fully unmask under it too.
+        let mut rng = Xoshiro256::seed_from_u64(17);
+        let chain = MarkovChain::generate(&mut rng, 5, 0.6);
+        let o = HmmUniformOracle::new(chain, 10);
+        let grid = masked_uniform(12, 1e-3);
+        for s in [Solver::Tweedie, Solver::Trapezoidal { theta: 0.5 }] {
+            let (toks, stats) = generate(&o, s, &grid, &mut rng);
+            assert!(
+                toks.iter().all(|&t| (t as usize) < 5),
+                "{} left masks: {toks:?}",
+                s.name()
+            );
+            assert!(stats.nfe >= 1);
         }
     }
 

@@ -63,6 +63,20 @@ impl Drop for ThreadPool {
     }
 }
 
+/// Split a mutable slice into contiguous chunks of (at most) `chunk`
+/// elements.  Uses `mem::take` so each chunk carries the full original
+/// lifetime (required to move chunks into scoped threads).
+fn chunks_mut<T>(mut rest: &mut [T], chunk: usize) -> Vec<&mut [T]> {
+    let mut v = Vec::new();
+    while !rest.is_empty() {
+        let take = chunk.min(rest.len());
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
+        v.push(head);
+        rest = tail;
+    }
+    v
+}
+
 /// Run `f(i)` for i in 0..n across up to `threads` scoped threads and return
 /// results in order.  Each thread handles a contiguous chunk (deterministic
 /// work assignment keeps seeded RNG streams reproducible).
@@ -77,17 +91,7 @@ where
     let threads = threads.max(1).min(n);
     let chunk = n.div_ceil(threads);
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    let slots: Vec<&mut [Option<T>]> = {
-        let mut rest: &mut [Option<T>] = &mut out;
-        let mut v = Vec::new();
-        while !rest.is_empty() {
-            let take = chunk.min(rest.len());
-            let (head, tail) = rest.split_at_mut(take);
-            v.push(head);
-            rest = tail;
-        }
-        v
-    };
+    let slots = chunks_mut(&mut out, chunk);
     std::thread::scope(|scope| {
         for (c, slot) in slots.into_iter().enumerate() {
             let f = &f;
@@ -99,6 +103,82 @@ where
         }
     });
     out.into_iter().map(|x| x.unwrap()).collect()
+}
+
+/// Run `f(i, &mut xs[i], &ys[i])` for all i, chunked contiguously across up
+/// to `threads` scoped threads.  Deterministic work assignment: the result
+/// is identical to the sequential loop whatever the thread count.  Used by
+/// the batched score-evaluation default to fan per-lane sparse evaluations
+/// out without giving up bit-reproducibility.
+pub fn par_zip_mut<A, B, F>(xs: &mut [A], ys: &[B], threads: usize, f: F)
+where
+    A: Send,
+    B: Sync,
+    F: Fn(usize, &mut A, &B) + Sync,
+{
+    let n = xs.len();
+    assert_eq!(n, ys.len(), "par_zip_mut slice length mismatch");
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        for (i, (x, y)) in xs.iter_mut().zip(ys).enumerate() {
+            f(i, x, y);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    let x_chunks = chunks_mut(xs, chunk);
+    std::thread::scope(|scope| {
+        for (c, xc) in x_chunks.into_iter().enumerate() {
+            let f = &f;
+            let base = c * chunk;
+            let yc = &ys[base..base + xc.len()];
+            scope.spawn(move || {
+                for (j, (x, y)) in xc.iter_mut().zip(yc).enumerate() {
+                    f(base + j, x, y);
+                }
+            });
+        }
+    });
+}
+
+/// As [`par_zip_mut`] but with both slices mutable: `f(i, &mut xs[i],
+/// &mut ys[i])`.  Used to step solver lane state and its scratch buffers
+/// together from worker threads.
+pub fn par_zip_mut2<A, B, F>(xs: &mut [A], ys: &mut [B], threads: usize, f: F)
+where
+    A: Send,
+    B: Send,
+    F: Fn(usize, &mut A, &mut B) + Sync,
+{
+    let n = xs.len();
+    assert_eq!(n, ys.len(), "par_zip_mut2 slice length mismatch");
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        for (i, (x, y)) in xs.iter_mut().zip(ys.iter_mut()).enumerate() {
+            f(i, x, y);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    let x_chunks = chunks_mut(xs, chunk);
+    let y_chunks = chunks_mut(ys, chunk);
+    std::thread::scope(|scope| {
+        for (c, (xc, yc)) in x_chunks.into_iter().zip(y_chunks).enumerate() {
+            let f = &f;
+            let base = c * chunk;
+            scope.spawn(move || {
+                for (j, (x, y)) in xc.iter_mut().zip(yc.iter_mut()).enumerate() {
+                    f(base + j, x, y);
+                }
+            });
+        }
+    });
 }
 
 /// Global atomic counter used by tests and metrics.
@@ -171,6 +251,44 @@ mod tests {
         assert_eq!(par_map_indexed(0, 4, |i| i), Vec::<usize>::new());
         assert_eq!(par_map_indexed(1, 4, |i| i + 1), vec![1]);
         assert_eq!(par_map_indexed(3, 100, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn par_zip_mut_matches_sequential() {
+        let ys: Vec<usize> = (0..257).collect();
+        for threads in [1, 3, 8] {
+            let mut xs = vec![0usize; 257];
+            par_zip_mut(&mut xs, &ys, threads, |i, x, y| *x = i * 10 + *y);
+            for (i, (&x, &y)) in xs.iter().zip(&ys).enumerate() {
+                assert_eq!(x, i * 10 + y, "threads={threads} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn par_zip_mut2_updates_both_sides() {
+        for threads in [1, 4, 100] {
+            let mut xs: Vec<usize> = (0..37).collect();
+            let mut ys = vec![0usize; 37];
+            par_zip_mut2(&mut xs, &mut ys, threads, |i, x, y| {
+                *x += 1;
+                *y = i + *x;
+            });
+            for i in 0..37 {
+                assert_eq!(xs[i], i + 1);
+                assert_eq!(ys[i], 2 * i + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn par_zip_empty_and_single() {
+        let mut xs: Vec<usize> = Vec::new();
+        par_zip_mut(&mut xs, &[], 4, |_, _, _: &usize| unreachable!());
+        let mut one = vec![5usize];
+        let ys = vec![7usize];
+        par_zip_mut(&mut one, &ys, 4, |i, x, y| *x = i + *x + *y);
+        assert_eq!(one, vec![12]);
     }
 
     #[test]

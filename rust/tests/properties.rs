@@ -6,8 +6,9 @@
 use fastdds::coordinator::batcher::{BatchKey, BatchPolicy, DynamicBatcher};
 use fastdds::coordinator::request::GenerateRequest;
 use fastdds::prop_assert;
+use fastdds::score::hmm::HmmUniformOracle;
 use fastdds::score::markov::{MarkovChain, MarkovOracle};
-use fastdds::score::ScoreSource;
+use fastdds::score::{masked_indices, ScoreSource, Tok};
 use fastdds::solvers::{grid, masked, Solver};
 use fastdds::testkit::{check, Gen};
 use fastdds::util::rng::Xoshiro256;
@@ -155,6 +156,83 @@ fn prop_masked_generation_invariants() {
             stats.nfe,
             solver.name()
         );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_generate_batch_bit_identical_to_lanes() {
+    // For any solver, lane count and seed set: generate_batch output is
+    // bitwise equal to B independent generate calls — co-batching never
+    // changes samples or stats.
+    let mut rng = Xoshiro256::seed_from_u64(6);
+    let chain = MarkovChain::generate(&mut rng, 5, 0.5);
+    let oracle = MarkovOracle::new(chain, 20);
+    check("generate_batch_equivalence", 25, |g| {
+        let solver = random_solver(g);
+        let steps = g.usize_in(2, 16);
+        let grid = grid::masked_uniform(steps, 1e-3);
+        let b = g.usize_in(1, 6);
+        let seeds: Vec<u64> = (0..b).map(|_| g.usize_in(0, 1_000_000) as u64).collect();
+        let batch = masked::generate_batch(&oracle, solver, &grid, &seeds);
+        prop_assert!(batch.len() == b, "wrong lane count");
+        for (lane, &seed) in batch.iter().zip(&seeds) {
+            let mut r = Xoshiro256::seed_from_u64(seed);
+            let (toks, stats) = masked::generate(&oracle, solver, &grid, &mut r);
+            prop_assert!(
+                lane.0 == toks,
+                "{} diverged for seed {seed}: {:?} vs {toks:?}",
+                solver.name(),
+                lane.0
+            );
+            prop_assert!(
+                lane.1.nfe == stats.nfe && lane.1.steps == stats.steps,
+                "{} stats diverged for seed {seed}: ({}, {}) vs ({}, {})",
+                solver.name(),
+                lane.1.nfe,
+                lane.1.steps,
+                stats.nfe,
+                stats.steps
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sparse_rows_match_dense_on_both_oracles() {
+    // probs_masked_into must agree with the dense probs_into rows on every
+    // score source, for any masking pattern and time.
+    let mut rng = Xoshiro256::seed_from_u64(12);
+    let chain = MarkovChain::generate(&mut rng, 7, 0.4);
+    let markov = MarkovOracle::new(chain.clone(), 14);
+    let hmm = HmmUniformOracle::new(chain, 14);
+    check("sparse_vs_dense_rows", 40, |g| {
+        let t = g.f64_in(1e-3, 1.0);
+        let sources: [&dyn ScoreSource; 2] = [&markov, &hmm];
+        for (si, s) in sources.iter().enumerate() {
+            let (l, v) = (s.seq_len(), s.vocab());
+            let mask = s.mask_id();
+            let tokens: Vec<Tok> = (0..l)
+                .map(|_| {
+                    if g.bool(0.5) {
+                        mask
+                    } else {
+                        g.usize_in(0, v - 1) as Tok
+                    }
+                })
+                .collect();
+            let idx = masked_indices(&tokens, mask);
+            let dense = s.probs(&tokens, t);
+            let mut compact = vec![0.0; idx.len() * v];
+            s.probs_masked_into(&tokens, &idx, t, &mut compact);
+            for (k, &i) in idx.iter().enumerate() {
+                prop_assert!(
+                    compact[k * v..(k + 1) * v] == dense[i * v..(i + 1) * v],
+                    "source {si}: sparse row {k} != dense row {i} at t={t}"
+                );
+            }
+        }
         Ok(())
     });
 }

@@ -229,6 +229,70 @@ fn markov_trapezoidal_artifact_runs_and_unmasks() {
 }
 
 #[test]
+fn artifact_score_sparse_and_batch_agree_with_dense() {
+    let Some(h) = handle() else { return };
+    let reg = Registry::load(DIR).unwrap();
+    if reg.get("markov_score").is_err() {
+        return;
+    }
+    use fastdds::score::{masked_indices, ScoreSource, Tok};
+    let score = fastdds::runtime::ArtifactScore::new(h, &reg, "markov").unwrap();
+    let (l, v) = (score.seq_len(), score.vocab());
+    let mask = score.mask_id();
+    let mut rng = Xoshiro256::seed_from_u64(9);
+    let mk_tokens = |rng: &mut Xoshiro256| -> Vec<Tok> {
+        (0..l)
+            .map(|_| {
+                if rng.gen_bool(0.5) {
+                    mask
+                } else {
+                    rng.gen_usize(v) as Tok
+                }
+            })
+            .collect()
+    };
+    let tokens = mk_tokens(&mut rng);
+    let idx = masked_indices(&tokens, mask);
+    assert!(!idx.is_empty());
+
+    // Sparse rows match the dense evaluation (same dispatch, sparse gather).
+    let dense = score.probs(&tokens, 0.5);
+    let mut compact = vec![0.0; idx.len() * v];
+    score.probs_masked_into(&tokens, &idx, 0.5, &mut compact);
+    assert!(score.take_error().is_none(), "dispatch failed");
+    for (k, &i) in idx.iter().enumerate() {
+        for c in 0..v {
+            let (a, b) = (compact[k * v + c], dense[i * v + c]);
+            assert!((a - b).abs() < 1e-6, "row {k} pos {i} tok {c}: {a} vs {b}");
+        }
+    }
+
+    // Batched evaluation (lanes packed into one dispatch) matches the
+    // per-sequence sparse path.
+    let tokens2 = mk_tokens(&mut rng);
+    let idx2 = masked_indices(&tokens2, mask);
+    let mut b1 = vec![0.0; idx.len() * v];
+    let mut b2 = vec![0.0; idx2.len() * v];
+    {
+        let reqs: Vec<(&[Tok], &[usize])> = vec![
+            (tokens.as_slice(), idx.as_slice()),
+            (tokens2.as_slice(), idx2.as_slice()),
+        ];
+        let mut outs: Vec<&mut [f64]> = vec![&mut b1, &mut b2];
+        score.probs_masked_batch(&reqs, 0.5, &mut outs);
+    }
+    assert!(score.take_error().is_none(), "batch dispatch failed");
+    let mut want2 = vec![0.0; idx2.len() * v];
+    score.probs_masked_into(&tokens2, &idx2, 0.5, &mut want2);
+    for (got, want) in b1.iter().zip(&compact) {
+        assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+    }
+    for (got, want) in b2.iter().zip(&want2) {
+        assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+    }
+}
+
+#[test]
 fn runtime_rejects_bad_shapes() {
     let Some(h) = handle() else { return };
     let err = h

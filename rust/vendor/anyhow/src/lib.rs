@@ -1,0 +1,231 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! crates.io is not reachable from this build image, so this vendored shim
+//! implements exactly the API subset fastdds uses: [`Error`], [`Result`],
+//! the [`anyhow!`] / [`bail!`] macros, the [`Context`] extension trait, and
+//! `{:#}` alternate formatting that prints the whole cause chain
+//! (`outer: inner: root`).  Semantics follow the real crate: `Error` does
+//! not implement `std::error::Error` itself (which is what makes the
+//! blanket `From` conversion possible), context wraps become the outermost
+//! message, and `{}` shows only the outermost message.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Result alias with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error carrying a message and an optional cause chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Error from a plain message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Error wrapping a concrete `std::error::Error`.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error { msg: error.to_string(), source: Some(Box::new(error)) }
+    }
+
+    /// Wrap `self` with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error {
+            msg: context.to_string(),
+            source: Some(Box::new(Chained(self))),
+        }
+    }
+
+    fn write_chain(&self, f: &mut fmt::Formatter<'_>, sep: &str) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur: Option<&(dyn StdError + 'static)> = self
+            .source
+            .as_ref()
+            .map(|b| b.as_ref() as &(dyn StdError + 'static));
+        while let Some(e) = cur {
+            write!(f, "{sep}{e}")?;
+            cur = e.source();
+        }
+        Ok(())
+    }
+}
+
+/// Private adapter so an [`Error`] can sit inside another error's cause
+/// chain (`Error` itself deliberately does not implement `StdError`).
+struct Chained(Error);
+
+impl fmt::Display for Chained {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0.msg)
+    }
+}
+
+impl fmt::Debug for Chained {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:?}", self.0)
+    }
+}
+
+impl StdError for Chained {
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.0
+            .source
+            .as_ref()
+            .map(|b| b.as_ref() as &(dyn StdError + 'static))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            self.write_chain(f, ": ")
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur: Option<&(dyn StdError + 'static)> = self
+            .source
+            .as_ref()
+            .map(|b| b.as_ref() as &(dyn StdError + 'static));
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {e}")?;
+            cur = e.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(...)`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T, Error> for std::result::Result<T, Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or a displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Early-return with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return Err($crate::anyhow!($($tt)*).into())
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e = Error::msg("top");
+        assert_eq!(format!("{e}"), "top");
+        assert_eq!(format!("{e:#}"), "top");
+    }
+
+    #[test]
+    fn context_chains_in_alternate_format() {
+        let e: Error = Error::new(io_err()).context("reading manifest");
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: missing file");
+        let e2 = e.context("loading registry");
+        assert_eq!(
+            format!("{e2:#}"),
+            "loading registry: reading manifest: missing file"
+        );
+    }
+
+    #[test]
+    fn result_context_helpers() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: missing file");
+
+        let r2: Result<()> = Err(Error::msg("inner"));
+        let e2 = r2.with_context(|| format!("step {}", 3)).unwrap_err();
+        assert_eq!(format!("{e2:#}"), "step 3: inner");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse() -> Result<i32> {
+            let n: i32 = "17".parse()?;
+            Ok(n)
+        }
+        assert_eq!(parse().unwrap(), 17);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: usize) -> Result<()> {
+            if x > 3 {
+                bail!("too big: {x}");
+            }
+            Err(anyhow!("always fails with {}", x))
+        }
+        assert_eq!(format!("{}", f(9).unwrap_err()), "too big: 9");
+        assert_eq!(format!("{}", f(1).unwrap_err()), "always fails with 1");
+    }
+
+    #[test]
+    fn debug_shows_cause_list() {
+        let e = Error::new(io_err()).context("ctx");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("ctx"), "{dbg}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+        assert!(dbg.contains("missing file"), "{dbg}");
+    }
+}

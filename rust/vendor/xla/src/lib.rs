@@ -1,0 +1,269 @@
+//! Offline stub of the `xla` (PJRT) bindings.
+//!
+//! The real bindings (and the PJRT CPU plugin they load) are not vendored
+//! in this image.  This stub mirrors the API surface `fastdds::runtime`
+//! uses so the crate builds and tests offline:
+//!
+//! - **Host-side literals are fully functional** (typed storage, reshape,
+//!   shape queries, round-trips) — `runtime::value` and its tests work
+//!   unchanged.
+//! - **Device entry points fail gracefully** ([`PjRtClient::cpu`],
+//!   compilation, execution): fastdds gates every dispatch behind
+//!   `runtime::artifacts_available(..)` and converts a failed client
+//!   construction into per-request errors, so artifact-backed paths report
+//!   "unavailable" while pure-rust oracle paths are unaffected.
+//!
+//! Swapping the real bindings back in is a one-line change in
+//! `rust/Cargo.toml` — the types and signatures below match.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type standing in for the binding layer's status codes.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: xla/PJRT bindings are not available in this build \
+         (vendored stub; see rust/vendor/xla)"
+    )))
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    /// Catch-all so shape decoding can report unsupported dtypes.
+    Unsupported,
+}
+
+/// Typed host buffer backing a [`Literal`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl LiteralData {
+    fn len(&self) -> usize {
+        match self {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+        }
+    }
+
+    fn ty(&self) -> ElementType {
+        match self {
+            LiteralData::F32(_) => ElementType::F32,
+            LiteralData::I32(_) => ElementType::S32,
+        }
+    }
+}
+
+/// Host-native element types accepted by [`Literal`] constructors.
+pub trait NativeType: Copy {
+    fn wrap(data: Vec<Self>) -> LiteralData
+    where
+        Self: Sized;
+    fn slice(data: &LiteralData) -> Option<&[Self]>
+    where
+        Self: Sized;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<f32>) -> LiteralData {
+        LiteralData::F32(data)
+    }
+    fn slice(data: &LiteralData) -> Option<&[f32]> {
+        match data {
+            LiteralData::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<i32>) -> LiteralData {
+        LiteralData::I32(data)
+    }
+    fn slice(data: &LiteralData) -> Option<&[i32]> {
+        match data {
+            LiteralData::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Array shape metadata (dims + element type).
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Host literal: typed data plus dims ([] = scalar).  Fully functional on
+/// the host; only device transfers are stubbed.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: LiteralData,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn scalar<T: NativeType>(value: T) -> Literal {
+        Literal { data: T::wrap(vec![value]), dims: Vec::new() }
+    }
+
+    pub fn vec1<T: NativeType>(values: &[T]) -> Literal {
+        Literal {
+            data: T::wrap(values.to_vec()),
+            dims: vec![values.len() as i64],
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n < 0 || n as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape: {} elements into dims {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        unavailable("Literal::decompose_tuple")
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone(), ty: self.data.ty() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match T::slice(&self.data) {
+            Some(s) => Ok(s.to_vec()),
+            None => Err(Error("to_vec: element type mismatch".to_string())),
+        }
+    }
+
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.clone())
+    }
+}
+
+/// Parsed HLO module proto (stub).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation wrapper (stub).
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device buffer returned by an executable (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable handle (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Mirrors the real signature: generic over host input kind, returns
+    /// per-device, per-output buffers.
+    pub fn execute<L>(&self, _inputs: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// PJRT client handle (stub).
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literals_work_on_host() {
+        let lit = Literal::vec1(&[1.5f32, -2.0, 3.0, 4.0]);
+        let shaped = lit.reshape(&[2, 2]).unwrap();
+        let shape = shaped.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 2]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(shaped.to_vec::<f32>().unwrap(), vec![1.5, -2.0, 3.0, 4.0]);
+        assert!(shaped.to_vec::<i32>().is_err());
+
+        let s = Literal::scalar(7i32);
+        assert!(s.array_shape().unwrap().dims().is_empty());
+        assert_eq!(s.to_vec::<i32>().unwrap(), vec![7]);
+        assert!(Literal::vec1(&[1i32, 2]).reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn device_entry_points_fail_gracefully() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("nope.hlo.txt").is_err());
+        let err = Literal::scalar(1.0f32).decompose_tuple().unwrap_err();
+        assert!(format!("{err}").contains("not available"), "{err}");
+    }
+}

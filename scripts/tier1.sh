@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Tier-1 verification in one command (see ROADMAP.md):
+#   build + full test suite + a bench smoke run that refreshes
+#   BENCH_solvers.json so the perf trajectory is tracked across PRs.
+#
+# Usage: scripts/tier1.sh [--no-bench]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo build --release
+cargo test -q
+
+if [[ "${1:-}" != "--no-bench" ]]; then
+    cargo bench --bench solver_steps -- --quick
+fi
+
+echo "tier-1 OK"

@@ -67,6 +67,7 @@ fn main() {
                             nfe: 32,
                             n_samples: 8,
                             seed: id,
+                            ..Default::default()
                         })
                         .unwrap(),
                 );
@@ -100,6 +101,7 @@ fn main() {
                 nfe: 32,
                 n_samples: 4,
                 seed: i,
+                ..Default::default()
             })
         })
         .collect();

@@ -1,0 +1,146 @@
+//! Schedule-quality bench (`cargo bench --bench schedules`): KL / NFE rows
+//! on the toy CTMC for fixed uniform grids vs the online adaptive
+//! controller vs offline-tuned grids, written to `BENCH_schedules.json`
+//! for cross-PR tracking (`--quick` = smoke sizes, used by tier1.sh).
+//!
+//! Headline row: the matched-KL comparison the ISSUE acceptance pins —
+//! for each adaptive run, the smallest uniform-grid NFE reaching the same
+//! KL is found and the NFE ratio recorded; `ratio <= 0.6` means the
+//! adaptive controller delivers the claimed quality-per-NFE win.
+
+use fastdds::ctmc::ToyModel;
+use fastdds::schedule::adaptive::{AdaptiveController, StepController};
+use fastdds::schedule::ScheduleTuner;
+use fastdds::solvers::{grid, toy, Solver};
+use fastdds::util::json::Json;
+use fastdds::util::rng::Xoshiro256;
+use fastdds::util::threadpool::ThreadPool;
+
+struct Row {
+    schedule: String,
+    nfe: f64,
+    kl: f64,
+}
+
+fn write_report(rows: &[Row], headline: Json, quick: bool) {
+    let json_rows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("schedule", Json::from(r.schedule.as_str())),
+                ("nfe", Json::Num(r.nfe)),
+                ("kl", Json::Num(r.kl)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::from("schedules")),
+        ("quick", Json::from(quick)),
+        ("rows", Json::Arr(json_rows)),
+        ("headline", headline),
+    ]);
+    let path = if std::path::Path::new("ROADMAP.md").exists() {
+        "BENCH_schedules.json"
+    } else if std::path::Path::new("../ROADMAP.md").exists() {
+        "../BENCH_schedules.json"
+    } else {
+        "BENCH_schedules.json"
+    };
+    match std::fs::write(path, doc.to_string()) {
+        Ok(()) => println!("wrote {path} ({} rows)", rows.len()),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n = if quick { 20_000 } else { 200_000 };
+    println!(
+        "== fastdds benches: schedules (toy CTMC, n={n}{}) ==",
+        if quick { ", --quick" } else { "" }
+    );
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    let model = ToyModel::paper_default(&mut rng);
+    let delta = 1e-3;
+    let solver = Solver::Trapezoidal { theta: 0.5 };
+    let threads = ThreadPool::default_size();
+    let mut rows: Vec<Row> = Vec::new();
+
+    // --- fixed uniform grids (the seed baseline) -------------------------
+    let fixed_steps: &[usize] = &[2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64, 96];
+    let mut uniform: Vec<(f64, f64)> = Vec::new(); // (nfe, kl)
+    for &steps in fixed_steps {
+        let g = grid::toy_uniform(steps, model.horizon, delta);
+        let q = toy::empirical_distribution(&model, solver, &g, n, 100 + steps as u64, threads);
+        let kl = model.kl_from_p0(&q);
+        let nfe = (2 * steps) as f64;
+        println!("uniform     steps={steps:3}  nfe={nfe:6.1}  kl={kl:.3e}");
+        uniform.push((nfe, kl));
+        rows.push(Row { schedule: format!("uniform:steps={steps}"), nfe, kl });
+    }
+
+    // --- online adaptive at a tolerance sweep ----------------------------
+    let mut adaptive: Vec<(f64, f64)> = Vec::new();
+    for &tol in &[1e-1, 3e-2, 1e-2, 3e-3, 1e-3] {
+        let cfg = AdaptiveController::for_span(tol, model.horizon, delta);
+        let ctl = StepController::new(cfg, model.horizon / 8.0);
+        let (q, mean_nfe) =
+            toy::empirical_distribution_adaptive(&model, solver, &ctl, delta, n, 500, threads);
+        let kl = model.kl_from_p0(&q);
+        println!("adaptive    tol={tol:<7.0e}  nfe={mean_nfe:6.1}  kl={kl:.3e}");
+        adaptive.push((mean_nfe, kl));
+        rows.push(Row { schedule: format!("adaptive:tol={tol}"), nfe: mean_nfe, kl });
+    }
+
+    // --- offline-tuned grids ---------------------------------------------
+    for &steps in &[4usize, 6, 8, 12, 16, 24] {
+        let tuned = ScheduleTuner::default().fit_toy(&model, solver, steps, delta);
+        let q =
+            toy::empirical_distribution(&model, solver, &tuned.grid, n, 900 + steps as u64, threads);
+        let kl = model.kl_from_p0(&q);
+        let nfe = (2 * steps) as f64;
+        println!("tuned       steps={steps:3}  nfe={nfe:6.1}  kl={kl:.3e}");
+        rows.push(Row { schedule: format!("tuned:steps={steps}"), nfe, kl });
+    }
+
+    // --- headline: adaptive vs uniform at matched KL ---------------------
+    // For each adaptive run, the cheapest uniform grid at least as good
+    // (KL <= adaptive KL) gives the NFE it would take the seed baseline to
+    // match; the best ratio across the sweep is the recorded headline.
+    let mut best: Option<(f64, f64, f64, f64)> = None; // (ratio, a_nfe, u_nfe, kl)
+    for &(a_nfe, a_kl) in &adaptive {
+        let matched = uniform
+            .iter()
+            .filter(|&&(_, u_kl)| u_kl <= a_kl)
+            .map(|&(u_nfe, _)| u_nfe)
+            .fold(f64::INFINITY, f64::min);
+        if matched.is_finite() {
+            let ratio = a_nfe / matched;
+            if best.map(|(r, ..)| ratio < r).unwrap_or(true) {
+                best = Some((ratio, a_nfe, matched, a_kl));
+            }
+        }
+    }
+    let headline = match best {
+        Some((ratio, a_nfe, u_nfe, kl)) => {
+            println!(
+                "headline: adaptive nfe {a_nfe:.1} vs uniform nfe {u_nfe:.1} at KL<={kl:.3e} \
+                 -> ratio {ratio:.3} ({})",
+                if ratio <= 0.6 { "PASS <= 0.6" } else { "above 0.6" }
+            );
+            Json::obj(vec![
+                ("metric", Json::from("adaptive_vs_uniform_nfe_at_matched_kl")),
+                ("adaptive_nfe", Json::Num(a_nfe)),
+                ("uniform_nfe", Json::Num(u_nfe)),
+                ("kl", Json::Num(kl)),
+                ("ratio", Json::Num(ratio)),
+                ("pass_0p6", Json::from(ratio <= 0.6)),
+            ])
+        }
+        None => {
+            println!("headline: no uniform grid matched any adaptive KL (sweep too coarse)");
+            Json::obj(vec![("metric", Json::from("unmatched"))])
+        }
+    };
+    write_report(&rows, headline, quick);
+}

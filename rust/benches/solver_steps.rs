@@ -103,6 +103,43 @@ fn main() {
     });
     report.push(&r, 1.0);
 
+    // --- categorical sampling: alias table vs linear CDF scan ------------
+    // One-shot rows (the solver finalize/Tweedie case) rebuild the table
+    // per draw, so the build must beat a single scan to earn its place on
+    // that path; the prebuilt rows show where the table DOES win (fixed
+    // laws drawn many times — `MarkovChain::sampler`, used by corpus
+    // generation).  These rows are the recorded evidence for keeping the
+    // linear scan in `finalize` and wiring `AliasTable` into bulk sampling.
+    {
+        use fastdds::util::dist::{categorical, AliasTable};
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let row: Vec<f64> =
+            (0..v).map(|i| 1.0 + (i as f64 * 0.37).sin().abs()).collect();
+        let r = bench("categorical linear one-shot V=32", warm_p, it_p, || {
+            black_box(categorical(&mut rng, black_box(&row)));
+        });
+        report.push(&r, 1.0);
+        let r = bench("alias build+draw one-shot V=32", warm_p, it_p, || {
+            let t = AliasTable::new(black_box(&row));
+            black_box(t.sample(&mut rng));
+        });
+        report.push(&r, 1.0);
+        let table = AliasTable::new(&row);
+        let r = bench("alias prebuilt draw V=32", warm_p, it_p, || {
+            black_box(table.sample(&mut rng));
+        });
+        report.push(&r, 1.0);
+        let r = bench("chain.sample linear L=256", warm_g, it_g, || {
+            black_box(chain.sample(&mut rng, l));
+        });
+        report.push(&r, l as f64);
+        let sampler = chain.sampler();
+        let r = bench("chain.sampler alias L=256", warm_g, it_g, || {
+            black_box(sampler.sample(&mut rng, l));
+        });
+        report.push(&r, l as f64);
+    }
+
     // --- one full generation per solver at NFE=64 (Tab. 2 row cost) -----
     let solvers = [
         Solver::Euler,

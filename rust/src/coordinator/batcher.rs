@@ -1,8 +1,10 @@
 //! Dynamic batcher: packs sample lanes from compatible requests into
 //! fixed-shape artifact batches.
 //!
-//! Compatibility key = (family, solver, NFE): every lane of a batch must run
-//! the same step graph over the same time grid.  Two policies (ablated in
+//! Compatibility key = (family, solver, NFE, schedule, NFE budget): every
+//! lane of a batch must run the same step graph over the same time grid —
+//! for adaptive schedules, lanes of one batch vote on a single shared dt,
+//! so the controller parameters must also match.  Two policies (ablated in
 //! `exp::ablations`):
 //!   - `Greedy`: dispatch as soon as any lane is available (min latency);
 //!   - `Timeout(ms)`: hold partially full batches up to a deadline to
@@ -30,6 +32,11 @@ pub struct BatchKey {
     /// theta bits (exact f64) for the two-stage solvers, 0 otherwise.
     pub theta_bits: u64,
     pub nfe: usize,
+    /// Schedule identity ([`crate::schedule::ScheduleSpec::key_bits`]).
+    pub schedule_kind: u8,
+    pub schedule_bits: u64,
+    /// Hard NFE budget + 1 (0 = unbudgeted).
+    pub budget_plus1: u64,
 }
 
 impl BatchKey {
@@ -42,11 +49,15 @@ impl BatchKey {
             Solver::Rk2 { theta } => (4, theta),
             Solver::ParallelDecoding => (5, 0.0),
         };
+        let (schedule_kind, schedule_bits) = req.schedule.key_bits();
         BatchKey {
             family_hash: crate::testkit::fnv1a(&req.family),
             solver_kind: kind,
             theta_bits: theta.to_bits(),
             nfe: req.nfe,
+            schedule_kind,
+            schedule_bits,
+            budget_plus1: req.nfe_budget.map(|b| b as u64 + 1).unwrap_or(0),
         }
     }
 }
@@ -156,7 +167,24 @@ mod tests {
             nfe,
             n_samples: n,
             seed: id * 100,
+            ..Default::default()
         }
+    }
+
+    #[test]
+    fn schedule_and_budget_split_keys() {
+        use crate::schedule::ScheduleSpec;
+        let base = req(1, Solver::Trapezoidal { theta: 0.5 }, 32, 1);
+        let mut adaptive = base.clone();
+        adaptive.schedule = ScheduleSpec::Adaptive { tol: 1e-3 };
+        let mut budgeted = base.clone();
+        budgeted.nfe_budget = Some(32);
+        assert_ne!(BatchKey::of(&base), BatchKey::of(&adaptive));
+        assert_ne!(BatchKey::of(&base), BatchKey::of(&budgeted));
+        assert_eq!(BatchKey::of(&base), BatchKey::of(&base.clone()));
+        let mut adaptive2 = adaptive.clone();
+        adaptive2.schedule = ScheduleSpec::Adaptive { tol: 2e-3 };
+        assert_ne!(BatchKey::of(&adaptive), BatchKey::of(&adaptive2));
     }
 
     #[test]

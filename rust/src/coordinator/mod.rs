@@ -39,6 +39,7 @@ pub use metrics::Metrics;
 pub use request::{GenerateRequest, GenerateResponse};
 
 use crate::runtime::{ArtifactScore, Registry, RuntimeHandle};
+use crate::schedule::{ScheduleCache, ScheduleSpec};
 use crate::score::ScoreSource;
 use state::ResponseAssembler;
 
@@ -57,10 +58,15 @@ enum Backend {
         registry: Registry,
         /// Lazily built, cached per family.
         scores: BTreeMap<String, Arc<ArtifactScore>>,
+        /// Tuned grids, memoised per (family, vocab, seq_len, solver, steps).
+        schedules: ScheduleCache,
     },
     /// A local in-process score source (analytic oracle): no artifacts
     /// needed, everything runs through `generate_batch`.
-    Local { score: Arc<dyn ScoreSource> },
+    Local {
+        score: Arc<dyn ScoreSource>,
+        schedules: ScheduleCache,
+    },
 }
 
 /// Handle to the coordinator thread.
@@ -82,7 +88,12 @@ impl Coordinator {
             .filter_map(|a| a.batch().ok())
             .max()
             .unwrap_or(8);
-        let backend = Backend::Pjrt { runtime, registry, scores: BTreeMap::new() };
+        let backend = Backend::Pjrt {
+            runtime,
+            registry,
+            scores: BTreeMap::new(),
+            schedules: ScheduleCache::new(),
+        };
         Coordinator::spawn(backend, policy, max_lanes)
     }
 
@@ -94,7 +105,11 @@ impl Coordinator {
         policy: BatchPolicy,
         max_lanes: usize,
     ) -> Coordinator {
-        Coordinator::spawn(Backend::Local { score }, policy, max_lanes.max(1))
+        Coordinator::spawn(
+            Backend::Local { score, schedules: ScheduleCache::new() },
+            policy,
+            max_lanes.max(1),
+        )
     }
 
     fn spawn(backend: Backend, policy: BatchPolicy, max_lanes: usize) -> Coordinator {
@@ -142,10 +157,10 @@ fn execute_batch(
     lanes: &[batcher::Lane],
 ) -> Result<scheduler::BatchResult> {
     match backend {
-        Backend::Local { score } => {
-            scheduler::run_batch_scored(score.as_ref(), proto.solver, proto.nfe, lanes)
+        Backend::Local { score, schedules } => {
+            scheduler::run_batch_scored(score.as_ref(), proto, lanes, schedules)
         }
-        Backend::Pjrt { runtime, registry, scores } => {
+        Backend::Pjrt { runtime, registry, scores, schedules } => {
             let score_name = format!("{}_score", proto.family);
             if registry.get(&score_name).is_ok() {
                 let score = match scores.get(&proto.family) {
@@ -160,12 +175,8 @@ fn execute_batch(
                         s
                     }
                 };
-                let result = scheduler::run_batch_scored(
-                    score.as_ref(),
-                    proto.solver,
-                    proto.nfe,
-                    lanes,
-                )?;
+                let result =
+                    scheduler::run_batch_scored(score.as_ref(), proto, lanes, schedules)?;
                 // Score dispatch failures poison the source instead of
                 // surfacing through the trait; convert them to a batch error.
                 if let Some(err) = score.take_error() {
@@ -173,7 +184,17 @@ fn execute_batch(
                 }
                 Ok(result)
             } else {
-                // Legacy path: fused per-step graphs.
+                // Legacy path: fused per-step graphs over the uniform grid
+                // only (non-uniform schedules need the score-artifact or
+                // local backend).
+                if proto.schedule != ScheduleSpec::Uniform || proto.nfe_budget.is_some() {
+                    return Err(anyhow!(
+                        "schedule {:?} requires a score artifact or local backend \
+                         (family {:?} ships only fused step graphs)",
+                        proto.schedule.to_string_spec(),
+                        proto.family
+                    ));
+                }
                 let plan = scheduler::StepPlan::build(registry, proto)?;
                 scheduler::run_batch(runtime, &plan, proto.solver, lanes)
             }
@@ -305,7 +326,52 @@ mod tests {
     }
 
     fn req(id: u64, solver: Solver, nfe: usize, n: usize, seed: u64) -> GenerateRequest {
-        GenerateRequest { id, family: "markov".into(), solver, nfe, n_samples: n, seed }
+        GenerateRequest {
+            id,
+            family: "markov".into(),
+            solver,
+            nfe,
+            n_samples: n,
+            seed,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn local_backend_serves_adaptive_and_tuned_schedules() {
+        let oracle = local_oracle(6, 20);
+        let c = Coordinator::start_local(oracle, BatchPolicy::Greedy, 8);
+        let solver = Solver::Trapezoidal { theta: 0.5 };
+
+        // Adaptive with a hard budget: all lanes finish, nobody overdraws.
+        let mut r = req(1, solver, 64, 3, 7);
+        r.schedule = ScheduleSpec::Adaptive { tol: 1e-3 };
+        r.nfe_budget = Some(24);
+        let resp = c.generate(r).unwrap();
+        assert_eq!(resp.sequences.len(), 3);
+        for s in &resp.sequences {
+            assert!(s.iter().all(|&t| t < 6), "masks left: {s:?}");
+        }
+        assert!(resp.nfe_used <= 24, "budget exceeded: {}", resp.nfe_used);
+
+        // Tuned: fit-on-first-use, then cache hit; deterministic replay.
+        let mut r = req(2, solver, 16, 2, 9);
+        r.schedule = ScheduleSpec::Tuned { steps: 8 };
+        let a = c.generate(r.clone()).unwrap();
+        r.id = 3;
+        let b = c.generate(r).unwrap();
+        assert_eq!(a.sequences, b.sequences, "tuned grid must be cached + reused");
+
+        // Adaptive with a one-stage solver is a clean error, not a panic.
+        let mut r = req(4, Solver::TauLeaping, 16, 1, 0);
+        r.schedule = ScheduleSpec::Adaptive { tol: 1e-3 };
+        assert!(c.generate(r).is_err());
+        // ... and the coordinator thread survived it.
+        let mut r = req(5, solver, 16, 1, 1);
+        r.schedule = ScheduleSpec::Log;
+        let resp = c.generate(r).unwrap();
+        assert!(resp.sequences[0].iter().all(|&t| t < 6));
+        c.shutdown();
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Request/response types of the serving layer.
 
+use crate::schedule::ScheduleSpec;
 use crate::score::Tok;
 use crate::solvers::Solver;
 use crate::util::json::Json;
@@ -12,14 +13,42 @@ pub struct GenerateRequest {
     pub family: String,
     pub solver: Solver,
     /// Total score-evaluation budget per sample (the paper's NFE axis).
+    /// For fixed schedules it sets the step count; for adaptive schedules
+    /// it only seeds the initial step size.
     pub nfe: usize,
     pub n_samples: usize,
     pub seed: u64,
+    /// Time-discretisation policy (`"schedule"` field; default uniform).
+    pub schedule: ScheduleSpec,
+    /// Optional HARD per-sample NFE cap (`"nfe_budget"` field): the run —
+    /// including the terminal denoise — never spends more.  Requires
+    /// `nfe_budget >= nfe_per_step + 1`.
+    pub nfe_budget: Option<usize>,
+}
+
+impl Default for GenerateRequest {
+    fn default() -> Self {
+        GenerateRequest {
+            id: 0,
+            family: "markov".into(),
+            solver: Solver::Tweedie,
+            nfe: 16,
+            n_samples: 1,
+            seed: 0,
+            schedule: ScheduleSpec::Uniform,
+            nfe_budget: None,
+        }
+    }
 }
 
 impl GenerateRequest {
     pub fn from_json(j: &Json, id: u64) -> Result<GenerateRequest> {
         let solver = Solver::parse(j.get("solver")?.as_str()?)?;
+        let schedule = j
+            .opt("schedule")
+            .map(|s| -> Result<ScheduleSpec> { ScheduleSpec::parse(s.as_str()?) })
+            .transpose()?
+            .unwrap_or_default();
         Ok(GenerateRequest {
             id,
             family: j
@@ -31,29 +60,29 @@ impl GenerateRequest {
             nfe: j.get("nfe")?.as_usize()?,
             n_samples: j.opt("n_samples").map(|v| v.as_usize()).transpose()?.unwrap_or(1),
             seed: j.opt("seed").map(|v| v.as_f64()).transpose()?.unwrap_or(0.0) as u64,
+            schedule,
+            nfe_budget: j.opt("nfe_budget").map(|v| v.as_usize()).transpose()?,
         })
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("family", Json::from(self.family.as_str())),
             ("solver", Json::from(solver_string(self.solver).as_str())),
             ("nfe", Json::from(self.nfe)),
             ("n_samples", Json::from(self.n_samples)),
             ("seed", Json::from(self.seed as f64)),
-        ])
+            ("schedule", Json::from(self.schedule.to_string_spec().as_str())),
+        ];
+        if let Some(b) = self.nfe_budget {
+            fields.push(("nfe_budget", Json::from(b)));
+        }
+        Json::obj(fields)
     }
 }
 
 pub fn solver_string(s: Solver) -> String {
-    match s {
-        Solver::Euler => "euler".into(),
-        Solver::TauLeaping => "tau".into(),
-        Solver::Tweedie => "tweedie".into(),
-        Solver::Trapezoidal { theta } => format!("trapezoidal:{theta}"),
-        Solver::Rk2 { theta } => format!("rk2:{theta}"),
-        Solver::ParallelDecoding => "parallel".into(),
-    }
+    s.spec_string()
 }
 
 #[derive(Clone, Debug)]
@@ -114,6 +143,8 @@ mod tests {
             nfe: 64,
             n_samples: 3,
             seed: 42,
+            schedule: ScheduleSpec::Adaptive { tol: 1e-3 },
+            nfe_budget: Some(48),
         };
         let j = r.to_json();
         let back = GenerateRequest::from_json(&j, 7).unwrap();
@@ -121,6 +152,32 @@ mod tests {
         assert_eq!(back.nfe, 64);
         assert_eq!(back.n_samples, 3);
         assert_eq!(back.seed, 42);
+        assert_eq!(back.schedule, ScheduleSpec::Adaptive { tol: 1e-3 });
+        assert_eq!(back.nfe_budget, Some(48));
+    }
+
+    #[test]
+    fn request_schedule_defaults_and_tuned_roundtrip() {
+        let j = Json::parse(r#"{"solver": "trapezoidal:0.5", "nfe": 32}"#).unwrap();
+        let r = GenerateRequest::from_json(&j, 1).unwrap();
+        assert_eq!(r.schedule, ScheduleSpec::Uniform);
+        assert_eq!(r.nfe_budget, None);
+        let j = Json::parse(
+            r#"{"solver": "trapezoidal:0.5", "nfe": 32,
+                "schedule": "tuned:steps=12", "nfe_budget": 24}"#,
+        )
+        .unwrap();
+        let r = GenerateRequest::from_json(&j, 2).unwrap();
+        assert_eq!(r.schedule, ScheduleSpec::Tuned { steps: 12 });
+        assert_eq!(r.nfe_budget, Some(24));
+        let back = GenerateRequest::from_json(&r.to_json(), 2).unwrap();
+        assert_eq!(back.schedule, r.schedule);
+        assert_eq!(back.nfe_budget, r.nfe_budget);
+        assert!(GenerateRequest::from_json(
+            &Json::parse(r#"{"solver": "tau", "nfe": 8, "schedule": "bogus"}"#).unwrap(),
+            3
+        )
+        .is_err());
     }
 
     #[test]

@@ -19,11 +19,17 @@ use anyhow::{bail, Result};
 use crate::coordinator::batcher::Lane;
 use crate::coordinator::request::GenerateRequest;
 use crate::runtime::{ArtifactSpec, Registry, RuntimeHandle, Value};
+use crate::schedule::adaptive::{AdaptiveController, NfeBudget, StepController};
+use crate::schedule::{ScheduleCache, ScheduleSpec, ScheduleTuner, TuneKey};
 use crate::score::{ScoreSource, Tok};
 use crate::solvers::{grid, masked, Solver};
 use crate::util::rng::{Rng, Xoshiro256};
 
 pub const DELTA: f64 = 1e-3;
+
+/// Upper bound on a client-requested tuned-grid step count (each distinct
+/// count triggers one offline tuner fit, so it must stay sane).
+pub const MAX_TUNED_STEPS: usize = 512;
 
 /// Result of one batch pass: per-lane token sequences + NFE actually spent
 /// per lane (lanes can differ once the sparse path skips empty steps).
@@ -32,26 +38,11 @@ pub struct BatchResult {
     pub nfe: Vec<usize>,
 }
 
-/// Run one packed batch through `generate_batch` on a score source: one
-/// batched masked-sparse score call per stage, per-lane seeded RNG streams
-/// (bit-identical to serving each lane alone).
-pub fn run_batch_scored(
-    score: &dyn ScoreSource,
-    solver: Solver,
-    nfe_budget: usize,
-    lanes: &[Lane],
-) -> Result<BatchResult> {
-    if nfe_budget < solver.nfe_per_step() {
-        bail!(
-            "nfe budget {} below one step ({})",
-            nfe_budget,
-            solver.nfe_per_step()
-        );
-    }
-    // Client-controlled parameters must be rejected with an error, never
-    // allowed to reach the solver asserts (a panic here would kill the
-    // long-lived coordinator thread).
-    match solver {
+/// Validate the client-controlled solver/budget parameters.  These must be
+/// rejected with an error, never allowed to reach the solver asserts (a
+/// panic here would kill the long-lived coordinator thread).
+fn validate_request(req: &GenerateRequest) -> Result<()> {
+    match req.solver {
         Solver::Trapezoidal { theta } if !(theta > 0.0 && theta < 1.0) => {
             bail!("trapezoidal theta {theta} outside (0,1)");
         }
@@ -60,10 +51,124 @@ pub fn run_batch_scored(
         }
         _ => {}
     }
-    let steps = solver.steps_for_nfe(nfe_budget);
-    let grid_ts = grid::masked_uniform(steps, DELTA);
+    if req.nfe < req.solver.nfe_per_step() {
+        bail!("nfe budget {} below one step ({})", req.nfe, req.solver.nfe_per_step());
+    }
+    if let Some(b) = req.nfe_budget {
+        // One full step plus the reserved terminal denoise must fit.
+        if b < req.solver.nfe_per_step() + 1 {
+            bail!(
+                "nfe_budget {b} below one step + terminal denoise ({})",
+                req.solver.nfe_per_step() + 1
+            );
+        }
+    }
+    if let ScheduleSpec::Tuned { steps } = req.schedule {
+        // Client-controlled fit size: each distinct step count is an
+        // offline tuner run; keep it bounded.
+        if steps > MAX_TUNED_STEPS {
+            bail!("tuned steps {steps} above the supported maximum {MAX_TUNED_STEPS}");
+        }
+        // The tuner's pilot runs are adaptive passes, which need the
+        // two-stage estimator — reaching the solver assert from a
+        // well-formed request would panic the coordinator thread.
+        if req.solver.nfe_per_step() != 2 {
+            bail!(
+                "tuned schedules are fitted with the two-stage estimator \
+                 (θ-trapezoidal or θ-RK-2), got {}",
+                req.solver.name()
+            );
+        }
+    }
+    if let ScheduleSpec::Adaptive { tol } = req.schedule {
+        if req.solver.nfe_per_step() != 2 {
+            bail!(
+                "adaptive schedules need the embedded two-stage estimator \
+                 (θ-trapezoidal or θ-RK-2), got {}",
+                req.solver.name()
+            );
+        }
+        if !(tol.is_finite() && tol >= 0.0) {
+            bail!("adaptive tol {tol} must be finite and >= 0");
+        }
+    }
+    Ok(())
+}
+
+/// Step count for the fixed schedules: the request NFE, additionally capped
+/// by the hard budget (one evaluation reserved for the terminal denoise so
+/// the cap can never be exceeded).
+fn fixed_steps(req: &GenerateRequest) -> usize {
+    let nfe = match req.nfe_budget {
+        Some(b) => req.nfe.min(b - 1),
+        None => req.nfe,
+    };
+    req.solver.steps_for_nfe(nfe)
+}
+
+/// Run one packed batch through the solvers on a score source: one batched
+/// masked-sparse score call per stage, per-lane seeded RNG streams.  The
+/// request's schedule decides the discretisation: fixed grids (uniform /
+/// log / tuned) run [`masked::generate_batch`] and stay bit-identical to
+/// serving each lane alone; adaptive runs
+/// [`masked::generate_batch_adaptive`], where lanes vote on a shared dt —
+/// the realized grid (and therefore the samples) can depend on which
+/// same-key lanes were co-batched, the documented trade-off of shared
+/// online control (pin the grid with "tuned" when exact replayability
+/// across batch compositions is required).  Tuned grids are fitted on
+/// first use (a few pilot runs, synchronous on the coordinator thread)
+/// and memoised in `cache`.
+pub fn run_batch_scored(
+    score: &dyn ScoreSource,
+    req: &GenerateRequest,
+    lanes: &[Lane],
+    cache: &mut ScheduleCache,
+) -> Result<BatchResult> {
+    validate_request(req)?;
+    let solver = req.solver;
     let seeds: Vec<u64> = lanes.iter().map(|l| l.seed).collect();
-    let results = masked::generate_batch(score, solver, &grid_ts, &seeds);
+
+    let results = match req.schedule {
+        ScheduleSpec::Uniform => {
+            let grid_ts = grid::masked_uniform(fixed_steps(req), DELTA);
+            masked::generate_batch(score, solver, &grid_ts, &seeds)
+        }
+        ScheduleSpec::Log => {
+            let grid_ts = grid::masked_log(fixed_steps(req), DELTA);
+            masked::generate_batch(score, solver, &grid_ts, &seeds)
+        }
+        ScheduleSpec::Tuned { steps } => {
+            let mut steps = if steps == 0 { fixed_steps(req) } else { steps };
+            if let Some(b) = req.nfe_budget {
+                // Hard cap also binds an explicit step count (one
+                // evaluation stays reserved for the terminal denoise).
+                steps = steps.min(solver.steps_for_nfe(b - 1));
+            }
+            let key = TuneKey::new(&req.family, score.vocab(), score.seq_len(), solver, steps);
+            let tuned = cache.get_or_fit(key, || {
+                // Serving-time fit: cheaper pilots than the offline-bench
+                // tuner — this runs inline on the coordinator thread.
+                ScheduleTuner { pilots: 2, tol: 1e-3, ..Default::default() }
+                    .fit_masked(score, solver, steps, DELTA, &req.family)
+            });
+            masked::generate_batch(score, solver, &tuned.grid, &seeds)
+        }
+        ScheduleSpec::Adaptive { tol } => {
+            let dt0 = (1.0 - DELTA) / solver.steps_for_nfe(req.nfe) as f64;
+            let mut ctl = StepController::new(
+                AdaptiveController::for_span(tol, 1.0, DELTA),
+                dt0,
+            );
+            if let Some(b) = req.nfe_budget {
+                ctl = ctl.with_budget(NfeBudget {
+                    total: b,
+                    nfe_per_step: solver.nfe_per_step(),
+                    reserve: 1,
+                });
+            }
+            masked::generate_batch_adaptive(score, solver, ctl, DELTA, &seeds).0
+        }
+    };
     Ok(BatchResult {
         nfe: results.iter().map(|(_, s)| s.nfe).collect(),
         tokens: results.into_iter().map(|(t, _)| t).collect(),
@@ -256,22 +361,32 @@ mod tests {
         );
     }
 
-    #[test]
-    fn run_batch_scored_matches_single_lane_generation() {
-        use crate::score::markov::{MarkovChain, MarkovOracle};
+    fn scored_req(solver: Solver, nfe: usize) -> GenerateRequest {
+        GenerateRequest { solver, nfe, ..Default::default() }
+    }
+
+    fn test_lanes(n: usize) -> Vec<Lane> {
         use std::time::Instant;
-        let mut rng = Xoshiro256::seed_from_u64(13);
-        let oracle = MarkovOracle::new(MarkovChain::generate(&mut rng, 5, 0.5), 12);
-        let lanes: Vec<Lane> = (0..3)
+        (0..n)
             .map(|i| Lane {
                 request_id: 1,
                 sample_idx: i,
                 seed: 1000 + i as u64 * 17,
                 enqueued: Instant::now(),
             })
-            .collect();
+            .collect()
+    }
+
+    #[test]
+    fn run_batch_scored_matches_single_lane_generation() {
+        use crate::score::markov::{MarkovChain, MarkovOracle};
+        let mut rng = Xoshiro256::seed_from_u64(13);
+        let oracle = MarkovOracle::new(MarkovChain::generate(&mut rng, 5, 0.5), 12);
+        let lanes = test_lanes(3);
         let solver = Solver::Trapezoidal { theta: 0.5 };
-        let result = run_batch_scored(&oracle, solver, 16, &lanes).unwrap();
+        let mut cache = ScheduleCache::new();
+        let result =
+            run_batch_scored(&oracle, &scored_req(solver, 16), &lanes, &mut cache).unwrap();
         assert_eq!(result.tokens.len(), 3);
         assert_eq!(result.nfe.len(), 3);
         let grid_ts = grid::masked_uniform(solver.steps_for_nfe(16), DELTA);
@@ -285,12 +400,60 @@ mod tests {
     }
 
     #[test]
+    fn run_batch_scored_adaptive_and_tuned_schedules() {
+        use crate::score::markov::{MarkovChain, MarkovOracle};
+        let mut rng = Xoshiro256::seed_from_u64(17);
+        let oracle = MarkovOracle::new(MarkovChain::generate(&mut rng, 5, 0.5), 10);
+        let solver = Solver::Trapezoidal { theta: 0.5 };
+        let mut cache = ScheduleCache::new();
+        let lanes = test_lanes(2);
+
+        let mut req = scored_req(solver, 32);
+        req.schedule = ScheduleSpec::Adaptive { tol: 1e-2 };
+        req.nfe_budget = Some(20);
+        let result = run_batch_scored(&oracle, &req, &lanes, &mut cache).unwrap();
+        for (k, &nfe) in result.nfe.iter().enumerate() {
+            assert!(nfe <= 20, "lane {k} overdrew: {nfe}");
+            assert!(result.tokens[k].iter().all(|&t| t < 5), "masks left");
+        }
+
+        let mut req = scored_req(solver, 16);
+        req.schedule = ScheduleSpec::Tuned { steps: 6 };
+        let result = run_batch_scored(&oracle, &req, &lanes, &mut cache).unwrap();
+        assert_eq!(cache.len(), 1, "tuned grid must be memoised");
+        assert!(result.tokens.iter().all(|t| t.iter().all(|&c| c < 5)));
+        // Second call hits the cache (still one entry).
+        let _ = run_batch_scored(&oracle, &req, &lanes, &mut cache).unwrap();
+        assert_eq!(cache.len(), 1);
+
+        // An explicit tuned step count is still bound by the hard budget.
+        let mut req = scored_req(solver, 16);
+        req.schedule = ScheduleSpec::Tuned { steps: 64 };
+        req.nfe_budget = Some(9);
+        let result = run_batch_scored(&oracle, &req, &lanes, &mut cache).unwrap();
+        for &nfe in &result.nfe {
+            assert!(nfe <= 9, "tuned+budget overdrew: {nfe}");
+        }
+        // ... and an absurd explicit step count is rejected outright.
+        let mut req = scored_req(solver, 16);
+        req.schedule = ScheduleSpec::Tuned { steps: MAX_TUNED_STEPS + 1 };
+        let err = run_batch_scored(&oracle, &req, &[], &mut cache).unwrap_err();
+        assert!(format!("{err:#}").contains("tuned steps"), "{err:#}");
+    }
+
+    #[test]
     fn run_batch_scored_rejects_absurd_budget() {
         use crate::score::markov::{MarkovChain, MarkovOracle};
         let mut rng = Xoshiro256::seed_from_u64(13);
         let oracle = MarkovOracle::new(MarkovChain::generate(&mut rng, 4, 0.5), 8);
-        let err = run_batch_scored(&oracle, Solver::Trapezoidal { theta: 0.5 }, 1, &[])
-            .unwrap_err();
+        let mut cache = ScheduleCache::new();
+        let err = run_batch_scored(
+            &oracle,
+            &scored_req(Solver::Trapezoidal { theta: 0.5 }, 1),
+            &[],
+            &mut cache,
+        )
+        .unwrap_err();
         assert!(format!("{err:#}").contains("below one step"), "{err:#}");
         // Malformed client-supplied theta must error, never panic (a panic
         // would kill the coordinator thread).
@@ -301,9 +464,25 @@ mod tests {
             Solver::Rk2 { theta: 1.5 },
             Solver::Rk2 { theta: 0.0 },
         ] {
-            let err = run_batch_scored(&oracle, bad, 16, &[]).unwrap_err();
+            let err =
+                run_batch_scored(&oracle, &scored_req(bad, 16), &[], &mut cache).unwrap_err();
             assert!(format!("{err:#}").contains("theta"), "{err:#}");
         }
+        // Adaptive with a one-stage solver and under-budgeted requests
+        // must error cleanly too.
+        let mut req = scored_req(Solver::TauLeaping, 16);
+        req.schedule = ScheduleSpec::Adaptive { tol: 1e-3 };
+        let err = run_batch_scored(&oracle, &req, &[], &mut cache).unwrap_err();
+        assert!(format!("{err:#}").contains("two-stage"), "{err:#}");
+        // Same for tuned (the pilot fits are adaptive passes).
+        let mut req = scored_req(Solver::Tweedie, 16);
+        req.schedule = ScheduleSpec::Tuned { steps: 0 };
+        let err = run_batch_scored(&oracle, &req, &[], &mut cache).unwrap_err();
+        assert!(format!("{err:#}").contains("two-stage"), "{err:#}");
+        let mut req = scored_req(Solver::Trapezoidal { theta: 0.5 }, 16);
+        req.nfe_budget = Some(2);
+        let err = run_batch_scored(&oracle, &req, &[], &mut cache).unwrap_err();
+        assert!(format!("{err:#}").contains("nfe_budget"), "{err:#}");
     }
 
     #[test]

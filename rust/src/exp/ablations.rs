@@ -98,8 +98,11 @@ pub fn clamp_activity(scale: Scale) -> Json {
     out
 }
 
-/// Ablation 2: uniform vs log grid at equal NFE (text perplexity).
+/// Ablation 2: uniform vs log vs offline-tuned grids vs the budget-pinned
+/// adaptive controller, at equal NFE (text perplexity + NFE spent).
 pub fn grid_placement(scale: Scale) -> Json {
+    use crate::schedule::adaptive::{AdaptiveController, NfeBudget, StepController};
+    use crate::schedule::ScheduleTuner;
     let mut rng = Xoshiro256::seed_from_u64(9);
     let chain = MarkovChain::generate(&mut rng, 24, 0.3);
     let oracle = MarkovOracle::new(chain.clone(), 128);
@@ -107,30 +110,66 @@ pub fn grid_placement(scale: Scale) -> Json {
     let solver = Solver::Trapezoidal { theta: 0.5 };
     let mut rows = Vec::new();
     let mut records = Vec::new();
+    let push = |nfe: usize, gname: &str, ppl: f64, spent: f64,
+                    rows: &mut Vec<Vec<String>>,
+                    records: &mut Vec<Json>| {
+        rows.push(vec![
+            nfe.to_string(),
+            gname.into(),
+            format!("{ppl:.3}"),
+            format!("{spent:.1}"),
+        ]);
+        records.push(Json::obj(vec![
+            ("nfe", Json::from(nfe)),
+            ("grid", Json::from(gname)),
+            ("perplexity", Json::Num(ppl)),
+            ("nfe_spent", Json::Num(spent)),
+        ]));
+    };
     for &nfe in &[32usize, 64, 128] {
         let steps = solver.steps_for_nfe(nfe);
+        let tuned = ScheduleTuner::default().fit_masked(&oracle, solver, steps, 1e-3, "markov");
         for (gname, g) in [
             ("uniform", grid::masked_uniform(steps, 1e-3)),
             ("log", grid::masked_log(steps, 1e-3)),
+            ("tuned", tuned.grid.clone()),
         ] {
+            let mut spent = 0usize;
             let seqs: Vec<Vec<u32>> = (0..n)
                 .map(|i| {
                     let mut rng = Xoshiro256::seed_from_u64(70 + i as u64);
-                    masked::generate(&oracle, solver, &g, &mut rng).0
+                    let (toks, stats) = masked::generate(&oracle, solver, &g, &mut rng);
+                    spent += stats.nfe;
+                    toks
                 })
                 .collect();
             let ppl = batch_perplexity(&chain, &seqs);
-            rows.push(vec![nfe.to_string(), gname.into(), format!("{ppl:.3}")]);
-            records.push(Json::obj(vec![
-                ("nfe", Json::from(nfe)),
-                ("grid", Json::from(gname)),
-                ("perplexity", Json::Num(ppl)),
-            ]));
+            push(nfe, gname, ppl, spent as f64 / n as f64, &mut rows, &mut records);
         }
+        // Budget-pinned adaptive: same hard NFE ceiling as the fixed rows.
+        let cfg = AdaptiveController::for_span(1e-4, 1.0, 1e-3);
+        let mut spent = 0usize;
+        let seqs: Vec<Vec<u32>> = (0..n)
+            .map(|i| {
+                let mut rng = Xoshiro256::seed_from_u64(70 + i as u64);
+                let ctl = StepController::new(cfg, (1.0 - 1e-3) / steps as f64)
+                    .with_budget(NfeBudget {
+                        total: nfe,
+                        nfe_per_step: solver.nfe_per_step(),
+                        reserve: 1,
+                    });
+                let (toks, stats, _) =
+                    masked::generate_adaptive(&oracle, solver, ctl, 1e-3, &mut rng);
+                spent += stats.nfe;
+                toks
+            })
+            .collect();
+        let ppl = batch_perplexity(&chain, &seqs);
+        push(nfe, "adaptive", ppl, spent as f64 / n as f64, &mut rows, &mut records);
     }
     print_table(
         "Ablation 2: grid placement (trapezoidal, theta=1/2)",
-        &["NFE", "grid", "perplexity"],
+        &["NFE", "grid", "perplexity", "mean NFE spent"],
         &rows,
     );
     let out = Json::obj(vec![
@@ -178,6 +217,7 @@ pub fn batch_policy(scale: Scale) -> Option<Json> {
                     nfe: r.nfe,
                     n_samples: r.n_samples,
                     seed: r.seed,
+                    ..Default::default()
                 })
             })
             .collect();

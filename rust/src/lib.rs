@@ -20,6 +20,7 @@ pub mod util;
 pub mod testkit;
 pub mod ctmc;
 pub mod score;
+pub mod schedule;
 pub mod solvers;
 pub mod eval;
 pub mod data;

@@ -3,9 +3,14 @@
 //! ```text
 //! fastdds exp <fig1|fig2|fig3|fig4|fig5|fig7|tab1|tab2|ablations|all> [--full]
 //! fastdds serve   [--addr 127.0.0.1:7878] [--policy greedy|timeout:<ms>]
+//!                 [--local] [--vocab 16] [--seq-len 32]
 //! fastdds client  [--addr ...] --solver trapezoidal:0.5 --nfe 64 [--n 4] [--seed 1]
+//!                 [--schedule adaptive:tol=1e-3] [--nfe-budget 48]
 //! fastdds info    [--artifacts artifacts]
 //! ```
+//!
+//! `serve --local` serves the exact Markov oracle in-process — every
+//! schedule variant works without PJRT or artifacts.
 
 use anyhow::{bail, Result};
 use fastdds::coordinator::{BatchPolicy, Coordinator};
@@ -105,16 +110,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let dir = args.get_str("artifacts", "artifacts");
     let addr = args.get_str("addr", "127.0.0.1:7878");
     let policy = parse_policy(&args.get_str("policy", "greedy"))?;
-    let runtime = RuntimeHandle::spawn(&dir)?;
-    let registry = Registry::load(&dir)?;
-    // Warm-up: compile the markov step family before accepting traffic.
-    let names: Vec<String> = registry
-        .by_family("markov")
-        .iter()
-        .map(|a| a.name.clone())
-        .collect();
-    runtime.preload(&names.iter().map(|s| s.as_str()).collect::<Vec<_>>())?;
-    let coordinator = Coordinator::start(runtime, registry, policy);
+    let coordinator = if args.flag("local") {
+        // Explicitly requested in-process oracle backend: no artifacts
+        // needed, all schedules (uniform/log/adaptive/tuned) available.
+        // (Never an implicit fallback — a missing artifacts dir must stay
+        // a hard startup error, not silently serve a synthetic oracle.)
+        let vocab = args.get_usize("vocab", 16)?;
+        let seq_len = args.get_usize("seq-len", 32)?;
+        let mut rng = Xoshiro256::seed_from_u64(args.get_u64("oracle-seed", 23)?);
+        let oracle = std::sync::Arc::new(fastdds::score::markov::MarkovOracle::new(
+            fastdds::score::markov::MarkovChain::generate(&mut rng, vocab, 0.5),
+            seq_len,
+        ));
+        println!("serving local markov oracle (vocab {vocab}, seq_len {seq_len})");
+        Coordinator::start_local(oracle, policy, args.get_usize("max-lanes", 8)?)
+    } else {
+        let runtime = RuntimeHandle::spawn(&dir)?;
+        let registry = Registry::load(&dir)?;
+        // Warm-up: compile the markov step family before accepting traffic.
+        let names: Vec<String> = registry
+            .by_family("markov")
+            .iter()
+            .map(|a| a.name.clone())
+            .collect();
+        runtime.preload(&names.iter().map(|s| s.as_str()).collect::<Vec<_>>())?;
+        Coordinator::start(runtime, registry, policy)
+    };
     let server = fastdds::server::Server::start(&addr, coordinator)?;
     println!("fastdds serving on {} (policy {:?})", server.addr, policy);
     println!("press ctrl-c to stop");
@@ -131,7 +152,19 @@ fn cmd_client(args: &Args) -> Result<()> {
     let n = args.get_usize("n", 1)?;
     let seed = args.get_u64("seed", 0)?;
     let family = args.get_str("family", "markov");
-    let resp = client.generate(&solver, nfe, n, seed, &family)?;
+    let nfe_budget = match args.str_opt("nfe-budget") {
+        Some(_) => Some(args.get_usize("nfe-budget", 0)?),
+        None => None,
+    };
+    let resp = client.generate_with(
+        &solver,
+        nfe,
+        n,
+        seed,
+        &family,
+        args.str_opt("schedule"),
+        nfe_budget,
+    )?;
     println!(
         "id={} nfe_used={} latency_ms={:.2}",
         resp.id, resp.nfe_used, resp.latency_ms

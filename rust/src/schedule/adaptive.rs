@@ -1,0 +1,363 @@
+//! Online error-controlled step sizing for the θ-solvers.
+//!
+//! ## Embedded error estimator
+//!
+//! Both θ-schemes evaluate the score twice per step (at t and at the
+//! θ-section point ρ = t - θΔ).  Those two evaluations embed a *free*
+//! first-order predictor: the one-stage Euler/τ-leap gate uses only the
+//! time-t rates, while the scheme's composite two-stage gate folds in the
+//! extrapolated rates.
+//! The per-dimension discrepancy between the two jump probabilities —
+//! [`trap_gate_discrepancy`] / [`rk2_gate_discrepancy`] — is an O(Δ²) local
+//! error proxy that costs **zero extra NFE** and draws **no randomness**
+//! (it reads the already-computed score rows, never the samples), so the
+//! adaptive drivers consume exactly the same RNG stream as the fixed-grid
+//! solver over the same realized grid.  That is what makes the
+//! "adaptive run ≡ fixed-grid run over the realized grid, bit for bit"
+//! property tests possible.
+//!
+//! ## PI controller
+//!
+//! [`StepController`] is a standard accept-always PI step controller:
+//! after each step with estimated error `e`,
+//!
+//! ```text
+//!     dt ← dt · clamp(safety · (tol/e)^k_i · (e_prev/e)^k_p, shrink, grow)
+//! ```
+//!
+//! clamped to `[min_dt, max_dt]` and to the remaining span.  Accept-always
+//! (no step rejection) keeps RNG consumption deterministic; the tolerance
+//! bounds the *next* step instead of retrying the last one, which for
+//! second-order schemes costs one step of lag and no NFE.
+//!
+//! ## NFE budget pinning
+//!
+//! With a hard per-request budget, [`StepController::propose_dt`] also
+//! enforces `dt ≥ remaining_span / affordable_steps` (reserving one
+//! evaluation for the terminal denoise), so a run can never overdraw: when
+//! the estimator wants many small steps the floor rises as the budget
+//! drains, concentrating the available NFE where the estimated error was
+//! largest and finishing with one long jump if necessary.
+
+/// Default tolerance for `"adaptive"` without an explicit `tol=`.
+pub const DEFAULT_TOL: f64 = 1e-3;
+
+/// Configuration of the PI step-size controller.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdaptiveController {
+    /// Target local error (jump-probability discrepancy) per step.
+    pub tol: f64,
+    /// Safety factor applied to every resize (< 1).
+    pub safety: f64,
+    /// Hard step-size bounds.
+    pub min_dt: f64,
+    pub max_dt: f64,
+    /// Per-step growth/shrink clamps on the resize factor.
+    pub grow: f64,
+    pub shrink: f64,
+    /// PI gains (integral / proportional).
+    pub k_i: f64,
+    pub k_p: f64,
+}
+
+impl AdaptiveController {
+    /// Sensible defaults for a backward pass over `[t_lo, t_hi]`: step
+    /// bounds relative to the span (at most 4096 steps, at least 2).
+    pub fn for_span(tol: f64, t_hi: f64, t_lo: f64) -> Self {
+        assert!(t_hi > t_lo && t_lo > 0.0, "need t_hi > t_lo > 0");
+        assert!(tol.is_finite() && tol >= 0.0, "tol must be finite and >= 0");
+        let span = t_hi - t_lo;
+        AdaptiveController {
+            tol,
+            safety: 0.9,
+            min_dt: span / 4096.0,
+            max_dt: span / 2.0,
+            grow: 4.0,
+            shrink: 0.2,
+            k_i: 0.3,
+            k_p: 0.1,
+        }
+    }
+
+    pub fn with_bounds(mut self, min_dt: f64, max_dt: f64) -> Self {
+        assert!(min_dt > 0.0 && min_dt <= max_dt);
+        self.min_dt = min_dt;
+        self.max_dt = max_dt;
+        self
+    }
+}
+
+/// Hard per-request NFE budget (property: never exceeded).
+#[derive(Clone, Copy, Debug)]
+pub struct NfeBudget {
+    /// Total score evaluations the run may spend, including the terminal
+    /// denoise.
+    pub total: usize,
+    /// Evaluations per solver step (2 for the θ-schemes).
+    pub nfe_per_step: usize,
+    /// Evaluations held back for the terminal denoise.
+    pub reserve: usize,
+}
+
+/// Runtime state of the accept-always PI controller.
+#[derive(Clone, Debug)]
+pub struct StepController {
+    pub cfg: AdaptiveController,
+    dt: f64,
+    prev_err: Option<f64>,
+    budget: Option<NfeBudget>,
+}
+
+impl StepController {
+    pub fn new(cfg: AdaptiveController, dt0: f64) -> Self {
+        let dt = dt0.clamp(cfg.min_dt, cfg.max_dt);
+        StepController { cfg, dt, prev_err: None, budget: None }
+    }
+
+    pub fn with_budget(mut self, budget: NfeBudget) -> Self {
+        assert!(budget.nfe_per_step >= 1);
+        self.budget = Some(budget);
+        self
+    }
+
+    pub fn budget(&self) -> Option<NfeBudget> {
+        self.budget
+    }
+
+    /// Step size for the next step from forward time `t` down to at most
+    /// `t_end`, given `spent` evaluations so far.  Returns `None` when the
+    /// pass is complete (`t <= t_end`).  Does not mutate the controller.
+    ///
+    /// Guarantees: the returned dt lands in `(0, t - t_end]`; under a
+    /// budget the remaining span is always coverable by the affordable
+    /// steps (so the budget can never be exceeded); a final sliver shorter
+    /// than half the minimum step is absorbed into the last step.
+    pub fn propose_dt(&self, t: f64, t_end: f64, spent: usize) -> Option<f64> {
+        let span = t - t_end;
+        if span <= 0.0 {
+            return None;
+        }
+        let mut dt = self.dt.clamp(self.cfg.min_dt, self.cfg.max_dt);
+        if let Some(b) = self.budget {
+            let left = b.total.saturating_sub(spent).saturating_sub(b.reserve);
+            let affordable = left / b.nfe_per_step;
+            if affordable <= 1 {
+                // Last affordable step: jump straight to the end.
+                return Some(span);
+            }
+            // Floor: never take a step so small that the remaining budget
+            // cannot reach t_end.
+            dt = dt.max(span / affordable as f64);
+        }
+        if dt >= span || span - dt < 0.5 * self.cfg.min_dt {
+            // Absorb the terminal sliver.
+            return Some(span);
+        }
+        Some(dt)
+    }
+
+    /// Record the estimated local error of the step just taken and resize.
+    pub fn observe(&mut self, err: f64) {
+        let cfg = self.cfg;
+        let e = if err.is_finite() { err.max(0.0) } else { f64::INFINITY };
+        let tiny = 1e-300;
+        // (tol/e)^k_i: tol = 0 forces maximal shrink; e = 0 maximal growth.
+        let ratio_i = if e <= tiny {
+            if cfg.tol <= tiny { 0.0 } else { f64::INFINITY }
+        } else {
+            cfg.tol / e
+        };
+        let ratio_p = match self.prev_err {
+            Some(pe) if e > tiny => (pe.max(tiny) / e).powf(cfg.k_p),
+            _ => 1.0,
+        };
+        let factor = (cfg.safety * ratio_i.powf(cfg.k_i) * ratio_p)
+            .clamp(cfg.shrink, cfg.grow);
+        self.dt = (self.dt * factor).clamp(cfg.min_dt, cfg.max_dt);
+        self.prev_err = Some(e);
+    }
+
+    /// Current (already clamped) step size — for traces and tests.
+    pub fn dt(&self) -> f64 {
+        self.dt
+    }
+}
+
+/// Jump-probability discrepancy of one θ-trapezoidal step (Alg. 2) against
+/// its embedded first-order predictor, for a dimension with total time-t
+/// intensity `tot_mu` and combined stage-2 intensity `tot_comb` (the
+/// (α₁μ*−α₂μ)₊ row sum).
+///
+/// The predictor is the one-stage first-order gate built from the time-t
+/// rates alone, in the same exponential (τ-leap) form as the scheme's own
+/// stages: p₁ₛₜ = 1 − e^{−μΔ}.  That choice isolates exactly the
+/// second-order correction: with time-constant rates (tot_comb == tot_mu)
+/// the composite gate collapses to the predictor and the discrepancy is
+/// identically zero, so the controller grows dt wherever the score is
+/// frozen and refines only where the extrapolated rates actually move —
+/// |p_trap − p₁ₛₜ| ≈ the predictor's own O(Δ²) local error, the standard
+/// embedded-pair estimate (control the low-order error, step with the
+/// high-order scheme).
+#[inline]
+pub fn trap_gate_discrepancy(theta: f64, dt: f64, tot_mu: f64, tot_comb: f64) -> f64 {
+    let p1 = 1.0 - (-tot_mu * theta * dt).exp();
+    let p2 = 1.0 - (-tot_comb * (1.0 - theta) * dt).exp();
+    let p_trap = 1.0 - (1.0 - p1) * (1.0 - p2);
+    let p_first = 1.0 - (-tot_mu * dt).exp();
+    (p_trap - p_first).abs()
+}
+
+/// Same for θ-RK-2 (Alg. 4), whose stage 2 restarts from y_s with the
+/// blended rates over the full step: |e^{−tot_mu·Δ} − e^{−tot_comb·Δ}|.
+#[inline]
+pub fn rk2_gate_discrepancy(dt: f64, tot_mu: f64, tot_comb: f64) -> f64 {
+    let p_rk2 = 1.0 - (-tot_comb * dt).exp();
+    let p_first = 1.0 - (-tot_mu * dt).exp();
+    (p_rk2 - p_first).abs()
+}
+
+/// Realized outcome of one adaptive pass: the grid the controller actually
+/// took plus the per-step error estimates (aligned with `grid.windows(2)`).
+/// The grid is a valid fixed grid — replaying the same solver over it
+/// reproduces the adaptive run bit for bit, and the tuner consumes the
+/// (time, error) pairs as its error-density evidence.
+#[derive(Clone, Debug, Default)]
+pub struct AdaptiveTrace {
+    pub grid: Vec<f64>,
+    pub errors: Vec<f64>,
+}
+
+impl AdaptiveTrace {
+    /// (forward time of the step start, error per unit time) samples for
+    /// [`crate::schedule::grid::from_error_density`].
+    pub fn density_samples(&self) -> Vec<(f64, f64)> {
+        self.grid
+            .windows(2)
+            .zip(&self.errors)
+            .map(|(w, &e)| (0.5 * (w[0] + w[1]), e / (w[0] - w[1]).max(1e-300)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(tol: f64) -> AdaptiveController {
+        AdaptiveController::for_span(tol, 1.0, 1e-3)
+    }
+
+    #[test]
+    fn zero_tol_pins_to_min_dt() {
+        let c = cfg(0.0).with_bounds(0.03125, 0.03125);
+        let mut s = StepController::new(c, 0.25);
+        // dt0 clamps straight to the fixed bound.
+        assert_eq!(s.propose_dt(1.0, 0.5, 0).unwrap(), 0.03125);
+        s.observe(1.0);
+        assert_eq!(s.dt(), 0.03125);
+        s.observe(0.0);
+        assert_eq!(s.dt(), 0.03125);
+    }
+
+    #[test]
+    fn small_error_grows_large_error_shrinks() {
+        let c = cfg(1e-2);
+        let mut s = StepController::new(c, 0.01);
+        let d0 = s.dt();
+        s.observe(1e-6);
+        assert!(s.dt() > d0, "tiny error must grow dt");
+        let d1 = s.dt();
+        s.observe(10.0);
+        assert!(s.dt() < d1, "huge error must shrink dt");
+    }
+
+    #[test]
+    fn growth_and_shrink_clamped() {
+        let c = cfg(1e-2);
+        let mut s = StepController::new(c, 0.01);
+        let d0 = s.dt();
+        s.observe(0.0); // infinite ratio
+        assert!(s.dt() <= d0 * c.grow + 1e-15);
+        let mut s = StepController::new(c, 0.01);
+        let d0 = s.dt();
+        s.observe(f64::INFINITY);
+        assert!(s.dt() >= d0 * c.shrink - 1e-15);
+    }
+
+    #[test]
+    fn proposals_cover_span_and_absorb_sliver() {
+        let c = cfg(1e-2).with_bounds(0.1, 0.4);
+        let s = StepController::new(c, 0.4);
+        // Sliver absorption: span barely above dt -> one final step.
+        assert_eq!(s.propose_dt(0.5, 0.09, 0).unwrap(), 0.5 - 0.09);
+        assert!(s.propose_dt(0.09, 0.09, 0).is_none());
+        let dt = s.propose_dt(1.0, 0.0011, 0).unwrap();
+        assert!(dt > 0.0 && dt <= 1.0 - 0.0011);
+    }
+
+    #[test]
+    fn budget_floor_prevents_overdraw() {
+        // 10 NFE total, 2/step, 1 reserved -> at most 4 steps whatever the
+        // controller wants.
+        let c = cfg(1e-9).with_bounds(1e-6, 1.0);
+        let mut s = StepController::new(c, 1e-6)
+            .with_budget(NfeBudget { total: 10, nfe_per_step: 2, reserve: 1 });
+        let (mut t, t_end) = (1.0, 0.001);
+        let mut spent = 0usize;
+        let mut steps = 0usize;
+        while let Some(dt) = s.propose_dt(t, t_end, spent) {
+            t -= dt;
+            spent += 2;
+            steps += 1;
+            s.observe(1.0); // always "too big": wants minimal steps
+            assert!(steps <= 4, "budget must cap steps");
+        }
+        assert!((t - t_end).abs() < 1e-12, "must land on t_end, got {t}");
+        assert!(spent + 1 <= 10);
+    }
+
+    #[test]
+    fn last_affordable_step_jumps_to_end() {
+        let c = cfg(1e-3);
+        let s = StepController::new(c, 0.001)
+            .with_budget(NfeBudget { total: 3, nfe_per_step: 2, reserve: 1 });
+        // 3 - 1 reserve = 2 left = 1 affordable step -> full span.
+        assert_eq!(s.propose_dt(0.8, 0.1, 0).unwrap(), 0.8 - 0.1);
+    }
+
+    #[test]
+    fn gate_discrepancy_zero_for_frozen_rates() {
+        // Time-constant rates: the composite gate IS the first-order gate,
+        // the proxy must read zero so dt can grow through dead zones.
+        for &(theta, mu, dt) in
+            &[(0.5, 1.3, 0.2), (0.3, 0.9, 1.5), (0.5, 0.05, 6.0)]
+        {
+            assert!(
+                trap_gate_discrepancy(theta, dt, mu, mu).abs() < 1e-15,
+                "theta={theta}"
+            );
+            assert_eq!(rk2_gate_discrepancy(dt, mu, mu), 0.0);
+        }
+    }
+
+    #[test]
+    fn gate_discrepancies_shrink_with_dt() {
+        let (theta, mu, comb) = (0.5, 1.3, 1.7);
+        let e1 = trap_gate_discrepancy(theta, 0.02, mu, comb);
+        let e2 = trap_gate_discrepancy(theta, 0.01, mu, comb);
+        assert!(e2 > 0.0 && e2 < e1, "e1={e1} e2={e2}");
+        let r1 = rk2_gate_discrepancy(0.02, mu, comb);
+        let r2 = rk2_gate_discrepancy(0.01, mu, comb);
+        assert!(r2 > 0.0 && r2 < r1, "r1={r1} r2={r2}");
+        assert!(trap_gate_discrepancy(theta, 0.0, mu, comb) == 0.0);
+    }
+
+    #[test]
+    fn trace_density_samples_align() {
+        let tr = AdaptiveTrace { grid: vec![1.0, 0.6, 0.1], errors: vec![1e-3, 4e-3] };
+        let s = tr.density_samples();
+        assert_eq!(s.len(), 2);
+        assert!((s[0].0 - 0.8).abs() < 1e-12);
+        assert!((s[0].1 - 1e-3 / 0.4).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,210 @@
+//! Fixed time discretisations (migrated from `solvers/grid.rs`).
+//!
+//! The paper uses a uniform discretisation of (δ, 1] for the masked text and
+//! image experiments (App. D.3/D.4) and an arithmetic sequence on [0, T - δ]
+//! for the toy model (App. D.2).  Grids here are vectors of *forward* times,
+//! strictly decreasing — the backward process consumes them left to right.
+//! θ-section points ρ_n = t_n - θ Δ_n are computed inside the steps.
+//!
+//! Non-uniform grids come from two places: online, the
+//! [`crate::schedule::adaptive`] controller realises one per run; offline,
+//! the [`crate::schedule::tuner`] fits a reusable grid from pilot error
+//! traces (see [`from_error_density`]).
+
+/// Uniform grid on (δ, 1] for the masked process: n_steps + 1 forward times
+/// from 1.0 down to δ.
+pub fn masked_uniform(n_steps: usize, delta: f64) -> Vec<f64> {
+    assert!(n_steps >= 1);
+    assert!((0.0..1.0).contains(&delta));
+    let h = (1.0 - delta) / n_steps as f64;
+    let mut ts: Vec<f64> = (0..=n_steps).map(|i| 1.0 - h * i as f64).collect();
+    *ts.last_mut().unwrap() = delta;
+    ts
+}
+
+/// Arithmetic grid for the toy model: forward times from T down to δ.
+pub fn toy_uniform(n_steps: usize, horizon: f64, delta: f64) -> Vec<f64> {
+    assert!(n_steps >= 1);
+    assert!(delta < horizon);
+    let h = (horizon - delta) / n_steps as f64;
+    let mut ts: Vec<f64> = (0..=n_steps).map(|i| horizon - h * i as f64).collect();
+    *ts.last_mut().unwrap() = delta;
+    ts
+}
+
+/// Log-spaced grid on (δ, 1] (geometric in t): the App. D-style alternative
+/// used by the grid-placement ablation in DESIGN.md.
+pub fn masked_log(n_steps: usize, delta: f64) -> Vec<f64> {
+    assert!(n_steps >= 1);
+    assert!(delta > 0.0 && delta < 1.0);
+    let r = (delta.ln() / n_steps as f64).exp();
+    let mut ts = Vec::with_capacity(n_steps + 1);
+    let mut t = 1.0;
+    for _ in 0..=n_steps {
+        ts.push(t);
+        t *= r;
+    }
+    *ts.last_mut().unwrap() = delta;
+    ts
+}
+
+/// Validity check used by property tests and the coordinator.
+pub fn is_valid_grid(ts: &[f64]) -> bool {
+    ts.len() >= 2 && ts.windows(2).all(|w| w[0] > w[1]) && *ts.last().unwrap() > 0.0
+}
+
+/// Fit an `n_steps`-step grid on [t_lo, t_hi] that equidistributes an
+/// empirical error density: `samples` are (forward time, local error per
+/// unit time) observations, e.g. from adaptive pilot runs.  Grid points are
+/// placed at equal quantiles of the cumulative error mass, so regions where
+/// the estimated error is large get proportionally more (smaller) steps.
+/// A uniform floor mixes in `floor_frac` of the total mass spread evenly,
+/// keeping the grid valid where the pilots saw no error at all.
+pub fn from_error_density(
+    samples: &[(f64, f64)],
+    n_steps: usize,
+    t_hi: f64,
+    t_lo: f64,
+    floor_frac: f64,
+) -> Vec<f64> {
+    assert!(n_steps >= 1);
+    assert!(t_hi > t_lo && t_lo > 0.0);
+    assert!((0.0..=1.0).contains(&floor_frac));
+    // Piecewise-constant density on a fine uniform lattice.
+    let n_bins = (4 * n_steps).max(64);
+    let w = (t_hi - t_lo) / n_bins as f64;
+    let mut mass = vec![0.0f64; n_bins];
+    for &(t, e) in samples {
+        if !(e.is_finite() && e > 0.0) || !t.is_finite() {
+            continue;
+        }
+        let b = (((t - t_lo) / w).floor() as isize).clamp(0, n_bins as isize - 1);
+        mass[b as usize] += e;
+    }
+    let tot: f64 = mass.iter().sum();
+    let floor = if tot > 0.0 {
+        tot * floor_frac / n_bins as f64
+    } else {
+        1.0 // no evidence: pure floor = uniform grid
+    };
+    for m in mass.iter_mut() {
+        *m += floor;
+    }
+    let tot: f64 = mass.iter().sum();
+
+    // Walk the cumulative mass from the t_hi end (the backward process
+    // consumes the grid left to right, i.e. decreasing t) and place an
+    // interior grid point every `per` units of mass.
+    let per = tot / n_steps as f64;
+    let mut ts = Vec::with_capacity(n_steps + 1);
+    ts.push(t_hi);
+    let mut acc = 0.0;
+    let mut next_cut = per;
+    for b in (0..n_bins).rev() {
+        let lo_edge = t_lo + b as f64 * w;
+        let mut cur_hi = lo_edge + w;
+        let mut seg_mass = mass[b];
+        while acc + seg_mass >= next_cut && ts.len() < n_steps {
+            // Linear interpolation inside the remaining [lo_edge, cur_hi]
+            // segment (constant density within a bin).
+            let need = next_cut - acc;
+            let cut = cur_hi - (cur_hi - lo_edge) * (need / seg_mass);
+            seg_mass -= need;
+            acc = next_cut;
+            next_cut += per;
+            cur_hi = cut;
+            let cut = cut.min(ts.last().unwrap() - 1e-12 * t_hi).max(t_lo);
+            if cut < *ts.last().unwrap() && cut > t_lo {
+                ts.push(cut);
+            }
+        }
+        acc += seg_mass;
+    }
+    ts.push(t_lo);
+    debug_assert!(is_valid_grid(&ts));
+    ts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masked_uniform_endpoints_and_monotone() {
+        let g = masked_uniform(10, 1e-3);
+        assert_eq!(g.len(), 11);
+        assert_eq!(g[0], 1.0);
+        assert_eq!(*g.last().unwrap(), 1e-3);
+        assert!(is_valid_grid(&g));
+    }
+
+    #[test]
+    fn masked_uniform_equal_spacing() {
+        let g = masked_uniform(4, 0.2);
+        for w in g.windows(2) {
+            assert!((w[0] - w[1] - 0.2).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn toy_uniform_endpoints() {
+        let g = toy_uniform(16, 12.0, 1e-3);
+        assert_eq!(g[0], 12.0);
+        assert_eq!(*g.last().unwrap(), 1e-3);
+        assert!(is_valid_grid(&g));
+    }
+
+    #[test]
+    fn masked_log_is_geometric() {
+        let g = masked_log(8, 1e-2);
+        assert_eq!(g[0], 1.0);
+        assert!((g.last().unwrap() - 1e-2).abs() < 1e-12);
+        assert!(is_valid_grid(&g));
+        let r0 = g[1] / g[0];
+        for w in g.windows(2).take(7) {
+            assert!((w[1] / w[0] - r0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn single_step_grids() {
+        assert_eq!(masked_uniform(1, 0.5), vec![1.0, 0.5]);
+        assert!(is_valid_grid(&toy_uniform(1, 12.0, 0.1)));
+    }
+
+    #[test]
+    fn error_density_uniform_when_flat() {
+        // Flat density -> (approximately) uniform grid.
+        let samples: Vec<(f64, f64)> =
+            (0..200).map(|i| (0.01 + i as f64 * 0.005, 1.0)).collect();
+        let g = from_error_density(&samples, 8, 1.0, 0.01, 0.0);
+        assert_eq!(g.len(), 9);
+        assert!(is_valid_grid(&g));
+        let h0 = g[0] - g[1];
+        for w in g.windows(2) {
+            assert!((w[0] - w[1] - h0).abs() < 0.05, "{g:?}");
+        }
+    }
+
+    #[test]
+    fn error_density_concentrates_steps() {
+        // All error mass near t_lo -> interior points crowd the low end.
+        let samples: Vec<(f64, f64)> =
+            (0..100).map(|i| (0.01 + i as f64 * 0.001, 5.0)).collect();
+        let g = from_error_density(&samples, 8, 1.0, 0.005, 0.05);
+        assert!(is_valid_grid(&g));
+        assert_eq!(g.len(), 9);
+        // More than half the interior points must sit below t = 0.3.
+        let low = g[1..g.len() - 1].iter().filter(|&&t| t < 0.3).count();
+        assert!(low >= 4, "{g:?}");
+    }
+
+    #[test]
+    fn error_density_no_samples_is_uniformish() {
+        let g = from_error_density(&[], 4, 1.0, 0.1, 0.1);
+        assert!(is_valid_grid(&g));
+        assert_eq!(g.len(), 5);
+        assert_eq!(g[0], 1.0);
+        assert_eq!(*g.last().unwrap(), 0.1);
+    }
+}

@@ -1,0 +1,185 @@
+//! Time-discretisation subsystem: the schedule is a first-class, controlled
+//! resource rather than a hardcoded input.
+//!
+//! The paper's headline claim is that the second-order θ-schemes "enable
+//! larger step sizes while reducing error" — which only pays off if step
+//! sizes are actually *chosen* somewhere.  This module owns that choice
+//! end-to-end:
+//!
+//! - [`grid`]: the fixed grids (uniform / log-spaced / arithmetic toy grid),
+//!   migrated here from `solvers/grid.rs` (the old path re-exports them);
+//! - [`adaptive`]: an embedded, RNG-free local error estimator (one
+//!   θ-trapezoidal stage against its first-order Euler predictor, compared
+//!   through per-dimension jump probabilities) driving a PI step-size
+//!   controller ([`adaptive::AdaptiveController`]) that grows/shrinks dt
+//!   online and can be pinned to a hard per-request NFE budget;
+//! - [`tuner`]: an offline [`tuner::ScheduleTuner`] that fits a reusable
+//!   non-uniform grid from the error traces of a few pilot runs,
+//!   serialises it to JSON, and a [`tuner::ScheduleCache`] the coordinator
+//!   uses to reuse tuned grids per (family, vocab, seq_len, solver).
+//!
+//! [`ScheduleSpec`] is the request-level selector the serving stack parses
+//! (`"uniform"`, `"log"`, `"adaptive:tol=1e-3"`, `"tuned"`, or
+//! `"tuned:steps=24"`); `solvers::masked::generate_adaptive` /
+//! `generate_batch_adaptive` and `solvers::toy::generate_adaptive` are the
+//! drivers that consume the controller.
+
+pub mod adaptive;
+pub mod grid;
+pub mod tuner;
+
+pub use adaptive::{AdaptiveController, StepController};
+pub use tuner::{ScheduleCache, ScheduleTuner, TuneKey, TunedSchedule};
+
+use anyhow::{bail, Result};
+
+/// Request-level schedule selection, shared by the CLI, the JSON-lines
+/// protocol, the coordinator and the experiment harnesses.
+///
+/// For the fixed variants the request's `nfe` decides the step count as
+/// before; for `Adaptive` the controller picks steps online (`nfe` seeds
+/// the initial dt, the optional `nfe_budget` pins a hard cap); `Tuned`
+/// resolves to a cached non-uniform grid fitted from pilot error traces.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ScheduleSpec {
+    /// Uniform grid on (δ, 1] (the paper's App. D.3 default).
+    Uniform,
+    /// Log-spaced (geometric) grid on (δ, 1].
+    Log,
+    /// Online error-controlled steps at the given tolerance.
+    Adaptive { tol: f64 },
+    /// Offline-tuned non-uniform grid; `steps = 0` means "derive the step
+    /// count from the request NFE" (same accounting as the fixed grids).
+    Tuned { steps: usize },
+}
+
+impl Default for ScheduleSpec {
+    fn default() -> Self {
+        ScheduleSpec::Uniform
+    }
+}
+
+impl ScheduleSpec {
+    /// Parse e.g. "uniform", "log", "adaptive:tol=1e-3", "adaptive",
+    /// "tuned", "tuned:steps=24".
+    pub fn parse(s: &str) -> Result<ScheduleSpec> {
+        let (name, arg) = match s.split_once(':') {
+            Some((n, a)) => (n, Some(a)),
+            None => (s, None),
+        };
+        let kv = |a: &str, key: &str| -> Result<f64> {
+            match a.split_once('=') {
+                Some((k, v)) if k == key => Ok(v.parse::<f64>()?),
+                _ => bail!("expected {key}=<value>, got {a:?}"),
+            }
+        };
+        Ok(match name {
+            "uniform" => {
+                if arg.is_some() {
+                    bail!("uniform takes no arguments");
+                }
+                ScheduleSpec::Uniform
+            }
+            "log" => {
+                if arg.is_some() {
+                    bail!("log takes no arguments");
+                }
+                ScheduleSpec::Log
+            }
+            "adaptive" => {
+                let tol = match arg {
+                    Some(a) => kv(a, "tol")?,
+                    None => adaptive::DEFAULT_TOL,
+                };
+                if !(tol.is_finite() && tol >= 0.0) {
+                    bail!("adaptive tol {tol} must be finite and >= 0");
+                }
+                ScheduleSpec::Adaptive { tol }
+            }
+            "tuned" => {
+                let steps = match arg {
+                    Some(a) => {
+                        let v = kv(a, "steps")?;
+                        if v < 1.0 || v.fract() != 0.0 {
+                            bail!("tuned steps must be a positive integer");
+                        }
+                        v as usize
+                    }
+                    None => 0,
+                };
+                ScheduleSpec::Tuned { steps }
+            }
+            _ => bail!("unknown schedule {s:?} (uniform|log|adaptive[:tol=..]|tuned[:steps=..])"),
+        })
+    }
+
+    /// Canonical string form (round-trips through [`ScheduleSpec::parse`]).
+    pub fn to_string_spec(&self) -> String {
+        match self {
+            ScheduleSpec::Uniform => "uniform".into(),
+            ScheduleSpec::Log => "log".into(),
+            ScheduleSpec::Adaptive { tol } => format!("adaptive:tol={tol}"),
+            ScheduleSpec::Tuned { steps: 0 } => "tuned".into(),
+            ScheduleSpec::Tuned { steps } => format!("tuned:steps={steps}"),
+        }
+    }
+
+    /// Stable 64-bit identity for batch-compatibility keys: two requests may
+    /// co-batch only when they run the same schedule.
+    pub fn key_bits(&self) -> (u8, u64) {
+        match self {
+            ScheduleSpec::Uniform => (0, 0),
+            ScheduleSpec::Log => (1, 0),
+            ScheduleSpec::Adaptive { tol } => (2, tol.to_bits()),
+            ScheduleSpec::Tuned { steps } => (3, *steps as u64),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parse_roundtrip() {
+        for s in [
+            ScheduleSpec::Uniform,
+            ScheduleSpec::Log,
+            ScheduleSpec::Adaptive { tol: 1e-3 },
+            ScheduleSpec::Adaptive { tol: 0.0 },
+            ScheduleSpec::Tuned { steps: 0 },
+            ScheduleSpec::Tuned { steps: 24 },
+        ] {
+            let text = s.to_string_spec();
+            assert_eq!(ScheduleSpec::parse(&text).unwrap(), s, "{text}");
+        }
+    }
+
+    #[test]
+    fn spec_parse_defaults_and_errors() {
+        assert_eq!(
+            ScheduleSpec::parse("adaptive").unwrap(),
+            ScheduleSpec::Adaptive { tol: adaptive::DEFAULT_TOL }
+        );
+        assert_eq!(ScheduleSpec::parse("tuned").unwrap(), ScheduleSpec::Tuned { steps: 0 });
+        assert!(ScheduleSpec::parse("nope").is_err());
+        assert!(ScheduleSpec::parse("adaptive:x=1").is_err());
+        assert!(ScheduleSpec::parse("adaptive:tol=-1").is_err());
+        assert!(ScheduleSpec::parse("adaptive:tol=nan").is_err());
+        assert!(ScheduleSpec::parse("tuned:steps=0").is_err());
+        assert!(ScheduleSpec::parse("uniform:x").is_err());
+    }
+
+    #[test]
+    fn key_bits_distinguish_specs() {
+        let a = ScheduleSpec::Adaptive { tol: 1e-3 }.key_bits();
+        let b = ScheduleSpec::Adaptive { tol: 2e-3 }.key_bits();
+        let u = ScheduleSpec::Uniform.key_bits();
+        assert_ne!(a, b);
+        assert_ne!(a, u);
+        assert_ne!(
+            ScheduleSpec::Tuned { steps: 8 }.key_bits(),
+            ScheduleSpec::Tuned { steps: 16 }.key_bits()
+        );
+    }
+}

@@ -1,0 +1,354 @@
+//! Offline schedule tuning: turn a few adaptive pilot runs into a
+//! reusable non-uniform grid.
+//!
+//! The online controller pays a one-step lag and re-estimates the error
+//! for every request.  When the workload is stationary — same score
+//! family, vocab, sequence length and solver — the error *profile* over
+//! time is stable, so a grid fitted once from pilot error traces captures
+//! most of the adaptive win at zero per-request overhead and with batch
+//! co-scheduling for free (a tuned grid is just a fixed grid).
+//!
+//! [`ScheduleTuner`] runs the pilots and equidistributes their error mass
+//! via [`grid::from_error_density`]; [`TunedSchedule`] serialises to JSON
+//! so tuned grids survive across processes; [`ScheduleCache`] is the
+//! coordinator-side memo keyed by (family, vocab, seq_len, solver, steps).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::ctmc::ToyModel;
+use crate::schedule::adaptive::{AdaptiveController, StepController};
+use crate::schedule::grid;
+use crate::score::ScoreSource;
+use crate::solvers::{masked, toy, Solver};
+use crate::util::json::Json;
+use crate::util::rng::Xoshiro256;
+
+/// Pilot-run configuration for fitting a tuned grid.
+#[derive(Clone, Copy, Debug)]
+pub struct ScheduleTuner {
+    /// Number of pilot runs to trace.
+    pub pilots: usize,
+    /// Tolerance the pilots run at (finer than production: the fit wants a
+    /// well-resolved error profile, not a fast run).
+    pub tol: f64,
+    /// Uniform mass floor mixed into the fitted density (keeps regions the
+    /// pilots never flagged from collapsing to zero-width steps).
+    pub floor_frac: f64,
+    pub seed: u64,
+}
+
+impl Default for ScheduleTuner {
+    fn default() -> Self {
+        ScheduleTuner { pilots: 4, tol: 1e-4, floor_frac: 0.1, seed: 0x5EED }
+    }
+}
+
+/// A fitted non-uniform grid plus the identity it was fitted for.
+#[derive(Clone, Debug)]
+pub struct TunedSchedule {
+    pub family: String,
+    pub vocab: usize,
+    pub seq_len: usize,
+    /// Canonical solver string ([`Solver::spec_string`]).
+    pub solver: String,
+    /// Strictly decreasing forward times (a valid fixed grid).
+    pub grid: Vec<f64>,
+    /// Mean NFE the pilots spent (diagnostic, not used at serve time).
+    pub pilot_nfe: f64,
+}
+
+impl TunedSchedule {
+    pub fn steps(&self) -> usize {
+        self.grid.len() - 1
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("family", Json::from(self.family.as_str())),
+            ("vocab", Json::from(self.vocab)),
+            ("seq_len", Json::from(self.seq_len)),
+            ("solver", Json::from(self.solver.as_str())),
+            (
+                "grid",
+                Json::Arr(self.grid.iter().map(|&t| Json::Num(t)).collect()),
+            ),
+            ("pilot_nfe", Json::Num(self.pilot_nfe)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<TunedSchedule> {
+        let ts = TunedSchedule {
+            family: j.get("family")?.as_str()?.to_string(),
+            vocab: j.get("vocab")?.as_usize()?,
+            seq_len: j.get("seq_len")?.as_usize()?,
+            solver: j.get("solver")?.as_str()?.to_string(),
+            grid: j.get("grid")?.as_f64_vec()?,
+            pilot_nfe: j.opt("pilot_nfe").map(|v| v.as_f64()).transpose()?.unwrap_or(0.0),
+        };
+        if !grid::is_valid_grid(&ts.grid) {
+            bail!("tuned schedule grid is not strictly decreasing/positive");
+        }
+        Solver::parse(&ts.solver)?;
+        Ok(ts)
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &str) -> Result<TunedSchedule> {
+        TunedSchedule::from_json(&Json::parse(&std::fs::read_to_string(path)?)?)
+    }
+}
+
+impl ScheduleTuner {
+    fn pilot_controller(&self, t_hi: f64, t_lo: f64) -> StepController {
+        let cfg = AdaptiveController::for_span(self.tol, t_hi, t_lo);
+        StepController::new(cfg, (t_hi - t_lo) / 32.0)
+    }
+
+    /// Fit an `n_steps` grid for a masked score source by tracing
+    /// `pilots` adaptive runs down to `delta`.
+    pub fn fit_masked<S: ScoreSource + ?Sized>(
+        &self,
+        score: &S,
+        solver: Solver,
+        n_steps: usize,
+        delta: f64,
+        family: &str,
+    ) -> TunedSchedule {
+        assert!(n_steps >= 1 && self.pilots >= 1);
+        let mut samples = Vec::new();
+        let mut nfe = 0usize;
+        for p in 0..self.pilots {
+            let mut rng = Xoshiro256::seed_from_u64(
+                self.seed ^ (p as u64).wrapping_mul(0x9E3779B97F4A7C15),
+            );
+            let ctl = self.pilot_controller(1.0, delta);
+            let (_, stats, trace) =
+                masked::generate_adaptive(score, solver, ctl, delta, &mut rng);
+            samples.extend(trace.density_samples());
+            nfe += stats.nfe;
+        }
+        TunedSchedule {
+            family: family.to_string(),
+            vocab: score.vocab(),
+            seq_len: score.seq_len(),
+            solver: solver.spec_string(),
+            grid: grid::from_error_density(&samples, n_steps, 1.0, delta, self.floor_frac),
+            pilot_nfe: nfe as f64 / self.pilots as f64,
+        }
+    }
+
+    /// Fit an `n_steps` grid for the toy CTMC (family "toy", seq_len 1).
+    pub fn fit_toy(
+        &self,
+        model: &ToyModel,
+        solver: Solver,
+        n_steps: usize,
+        delta: f64,
+    ) -> TunedSchedule {
+        assert!(n_steps >= 1 && self.pilots >= 1);
+        let mut samples = Vec::new();
+        let mut nfe = 0usize;
+        for p in 0..self.pilots {
+            let mut rng = Xoshiro256::seed_from_u64(
+                self.seed ^ (p as u64).wrapping_mul(0x9E3779B97F4A7C15),
+            );
+            let ctl = self.pilot_controller(model.horizon, delta);
+            let (_, stats, trace) =
+                toy::generate_adaptive(model, solver, ctl, delta, &mut rng);
+            samples.extend(trace.density_samples());
+            nfe += stats.nfe;
+        }
+        TunedSchedule {
+            family: "toy".to_string(),
+            vocab: model.n_states(),
+            seq_len: 1,
+            solver: solver.spec_string(),
+            grid: grid::from_error_density(
+                &samples,
+                n_steps,
+                model.horizon,
+                delta,
+                self.floor_frac,
+            ),
+            pilot_nfe: nfe as f64 / self.pilots as f64,
+        }
+    }
+}
+
+/// Identity a tuned grid is valid for.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct TuneKey {
+    pub family: String,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub solver: String,
+    pub steps: usize,
+}
+
+impl TuneKey {
+    pub fn new(family: &str, vocab: usize, seq_len: usize, solver: Solver, steps: usize) -> Self {
+        TuneKey {
+            family: family.to_string(),
+            vocab,
+            seq_len,
+            solver: solver.spec_string(),
+            steps,
+        }
+    }
+}
+
+/// Coordinator-side memo of tuned schedules: fit once per
+/// (family, vocab, seq_len, solver, steps), reuse for every request.
+/// Bounded: past [`ScheduleCache::MAX_ENTRIES`] distinct keys (solver θ
+/// and step count are client-controlled), new fits are served without
+/// being memoised instead of growing without bound.
+#[derive(Default)]
+pub struct ScheduleCache {
+    map: BTreeMap<TuneKey, Arc<TunedSchedule>>,
+}
+
+impl ScheduleCache {
+    pub const MAX_ENTRIES: usize = 256;
+
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn get(&self, key: &TuneKey) -> Option<Arc<TunedSchedule>> {
+        self.map.get(key).cloned()
+    }
+
+    pub fn insert(&mut self, key: TuneKey, sched: TunedSchedule) -> Arc<TunedSchedule> {
+        let arc = Arc::new(sched);
+        if self.map.len() < Self::MAX_ENTRIES {
+            self.map.insert(key, Arc::clone(&arc));
+        }
+        arc
+    }
+
+    /// Cached lookup; `fit` runs on miss and its result is memoised while
+    /// the cache has room.
+    pub fn get_or_fit(
+        &mut self,
+        key: TuneKey,
+        fit: impl FnOnce() -> TunedSchedule,
+    ) -> Arc<TunedSchedule> {
+        if let Some(hit) = self.get(&key) {
+            return hit;
+        }
+        self.insert(key, fit())
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::score::markov::{MarkovChain, MarkovOracle};
+
+    fn oracle() -> MarkovOracle {
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        MarkovOracle::new(MarkovChain::generate(&mut rng, 6, 0.5), 12)
+    }
+
+    #[test]
+    fn fit_masked_produces_valid_grid() {
+        let o = oracle();
+        let tuner = ScheduleTuner { pilots: 2, tol: 1e-3, ..Default::default() };
+        let ts = tuner.fit_masked(&o, Solver::Trapezoidal { theta: 0.5 }, 12, 1e-3, "markov");
+        assert_eq!(ts.steps(), 12);
+        assert!(grid::is_valid_grid(&ts.grid));
+        assert_eq!(ts.grid[0], 1.0);
+        assert_eq!(*ts.grid.last().unwrap(), 1e-3);
+        assert_eq!(ts.vocab, 6);
+        assert_eq!(ts.seq_len, 12);
+        assert!(ts.pilot_nfe > 0.0);
+    }
+
+    #[test]
+    fn fit_toy_produces_valid_grid() {
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let model = ToyModel::paper_default(&mut rng);
+        let tuner = ScheduleTuner { pilots: 3, ..Default::default() };
+        let ts = tuner.fit_toy(&model, Solver::Trapezoidal { theta: 0.5 }, 16, 1e-3);
+        assert_eq!(ts.steps(), 16);
+        assert!(grid::is_valid_grid(&ts.grid));
+        assert_eq!(ts.grid[0], model.horizon);
+        assert_eq!(ts.family, "toy");
+    }
+
+    #[test]
+    fn tuned_schedule_json_roundtrip() {
+        let o = oracle();
+        let tuner = ScheduleTuner { pilots: 1, ..Default::default() };
+        let ts = tuner.fit_masked(&o, Solver::Rk2 { theta: 0.5 }, 8, 1e-3, "markov");
+        let back = TunedSchedule::from_json(&ts.to_json()).unwrap();
+        assert_eq!(back.grid, ts.grid);
+        assert_eq!(back.solver, ts.solver);
+        assert_eq!(back.vocab, ts.vocab);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_grid() {
+        let j = Json::parse(
+            r#"{"family":"markov","vocab":4,"seq_len":8,
+                "solver":"trapezoidal:0.5","grid":[0.5, 0.5, 0.1]}"#,
+        )
+        .unwrap();
+        assert!(TunedSchedule::from_json(&j).is_err());
+        let j = Json::parse(
+            r#"{"family":"markov","vocab":4,"seq_len":8,
+                "solver":"nope","grid":[1.0, 0.1]}"#,
+        )
+        .unwrap();
+        assert!(TunedSchedule::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let o = oracle();
+        let tuner = ScheduleTuner { pilots: 1, ..Default::default() };
+        let ts = tuner.fit_masked(&o, Solver::Trapezoidal { theta: 0.5 }, 6, 1e-3, "markov");
+        let path = std::env::temp_dir().join("fastdds_tuned_schedule_test.json");
+        let path = path.to_str().unwrap().to_string();
+        ts.save(&path).unwrap();
+        let back = TunedSchedule::load(&path).unwrap();
+        assert_eq!(back.grid, ts.grid);
+        assert_eq!(back.family, "markov");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn cache_fits_once() {
+        let o = oracle();
+        let solver = Solver::Trapezoidal { theta: 0.5 };
+        let mut cache = ScheduleCache::new();
+        let key = TuneKey::new("markov", 6, 12, solver, 8);
+        let mut fits = 0usize;
+        for _ in 0..3 {
+            let _ = cache.get_or_fit(key.clone(), || {
+                fits += 1;
+                ScheduleTuner { pilots: 1, ..Default::default() }
+                    .fit_masked(&o, solver, 8, 1e-3, "markov")
+            });
+        }
+        assert_eq!(fits, 1);
+        assert_eq!(cache.len(), 1);
+        let other = TuneKey::new("markov", 6, 12, solver, 16);
+        assert!(cache.get(&other).is_none());
+    }
+}

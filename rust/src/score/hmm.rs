@@ -17,18 +17,74 @@
 //! O(L V^2) pass.  This powers the Fig. 1 uniformization run, where the
 //! score singularity at t -> 0 drives the NFE blow-up the paper plots.
 
+use std::sync::Mutex;
+
 use crate::ctmc::uniformization::JumpProcess;
 use crate::score::markov::MarkovChain;
 use crate::score::{ScoreSource, Tok};
 
+/// Scratch buffers for the O(L·V²) message pass, carried through a `&mut`
+/// workspace (same pattern as `solvers/masked.rs`'s `Scratch`) so the
+/// uniform-path hot loop — one message pass per NFE, one per
+/// uniformization candidate — performs no per-call allocations once warm.
+#[derive(Default)]
+pub struct HmmWorkspace {
+    /// alpha_bar[i*V + z] ∝ P(x_{0..i-1}, z_i = z), emission at i excluded.
+    alpha_bar: Vec<f64>,
+    /// beta[i*V + z] ∝ P(x_{i+1..} | z_i = z).
+    beta: Vec<f64>,
+    /// Per-position emission-scaled row.
+    tmp: Vec<f64>,
+    /// Per-position transfer accumulator.
+    tmp2: Vec<f64>,
+}
+
+impl HmmWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Size the buffers; contents need no reset — every pass fully
+    /// overwrites the rows it reads.
+    fn ensure(&mut self, l: usize, v: usize) {
+        if self.alpha_bar.len() != l * v {
+            self.alpha_bar.resize(l * v, 0.0);
+            self.beta.resize(l * v, 0.0);
+        }
+        if self.tmp.len() != v {
+            self.tmp.resize(v, 0.0);
+            self.tmp2.resize(v, 0.0);
+        }
+    }
+}
+
 pub struct HmmUniformOracle {
     pub chain: MarkovChain,
     pub seq_len: usize,
+    /// Warm workspaces, one per concurrently evaluating thread; the lock is
+    /// held only for the pop/push, never across a message pass.
+    pool: Mutex<Vec<HmmWorkspace>>,
 }
 
 impl HmmUniformOracle {
     pub fn new(chain: MarkovChain, seq_len: usize) -> Self {
-        Self { chain, seq_len }
+        Self { chain, seq_len, pool: Mutex::new(Vec::new()) }
+    }
+
+    /// Run `f` with a pooled workspace (allocating one only when every warm
+    /// workspace is in use by another thread).
+    fn with_workspace<R>(&self, f: impl FnOnce(&mut HmmWorkspace) -> R) -> R {
+        let mut ws = self
+            .pool
+            .lock()
+            .map(|mut p| p.pop())
+            .unwrap_or(None)
+            .unwrap_or_default();
+        let out = f(&mut ws);
+        if let Ok(mut p) = self.pool.lock() {
+            p.push(ws);
+        }
+        out
     }
 
     /// Emission parameters at forward time t: q_t(x|z) = a + b 1{x=z}.
@@ -39,7 +95,8 @@ impl HmmUniformOracle {
         ((1.0 - decay) / v, decay)
     }
 
-    /// Scaled forward/backward messages at forward time `t`.
+    /// Scaled forward/backward messages at forward time `t`, written into
+    /// the workspace.
     ///
     /// `alpha_bar[i][z] ∝ P(x_{0..i-1}, z_i = z)` — forward WITHOUT the
     /// emission at i; `beta[i][z] ∝ P(x_{i+1..} | z_i = z)`.  Messages are
@@ -48,76 +105,66 @@ impl HmmUniformOracle {
     /// token (id = V) contribute a constant emission — i.e. no evidence —
     /// which makes the same pass serve both the uniform-state ratios and the
     /// masked [`ScoreSource`] view below.
-    fn messages(&self, tokens: &[Tok], t: f64) -> (Vec<f64>, Vec<f64>) {
+    fn messages_into(&self, tokens: &[Tok], t: f64, ws: &mut HmmWorkspace) {
         let v = self.chain.vocab;
         let l = self.seq_len;
         debug_assert_eq!(tokens.len(), l);
         let (a_t, b_t) = self.emission(t);
-
-        let mut alpha_bar = vec![0.0f64; l * v];
-        let mut beta = vec![0.0f64; l * v];
+        ws.ensure(l, v);
 
         // Forward.
         for z in 0..v {
-            alpha_bar[z] = self.chain.pi[z];
+            ws.alpha_bar[z] = self.chain.pi[z];
         }
         for i in 1..l {
-            let (prev_row, cur_row) = {
-                let (p, c) = alpha_bar.split_at_mut(i * v);
-                (&p[(i - 1) * v..], &mut c[..v])
-            };
             // Multiply in emission i-1, then transfer.
             let xi = tokens[i - 1] as usize;
-            let mut scaled = vec![0.0f64; v];
             let mut norm = 0.0;
             for z in 0..v {
                 let e = a_t + if z == xi { b_t } else { 0.0 };
-                scaled[z] = prev_row[z] * e;
-                norm += scaled[z];
+                let s = ws.alpha_bar[(i - 1) * v + z] * e;
+                ws.tmp[z] = s;
+                norm += s;
             }
-            for s in scaled.iter_mut() {
+            for s in ws.tmp.iter_mut() {
                 *s /= norm;
             }
-            for c in cur_row.iter_mut() {
-                *c = 0.0;
-            }
-            for (z, &s) in scaled.iter().enumerate() {
+            ws.alpha_bar[i * v..(i + 1) * v].fill(0.0);
+            for z in 0..v {
+                let s = ws.tmp[z];
                 if s == 0.0 {
                     continue;
                 }
                 let row = &self.chain.a[z * v..(z + 1) * v];
                 for (zz, &az) in row.iter().enumerate() {
-                    cur_row[zz] += s * az;
+                    ws.alpha_bar[i * v + zz] += s * az;
                 }
             }
         }
 
         // Backward.
         for z in 0..v {
-            beta[(l - 1) * v + z] = 1.0;
+            ws.beta[(l - 1) * v + z] = 1.0;
         }
         for i in (0..l - 1).rev() {
             let xi = tokens[i + 1] as usize;
-            let nxt: Vec<f64> = (0..v)
-                .map(|z| {
-                    let e = a_t + if z == xi { b_t } else { 0.0 };
-                    beta[(i + 1) * v + z] * e
-                })
-                .collect();
-            let norm: f64 = nxt.iter().sum();
-            let mut row = vec![0.0f64; v];
+            let mut norm = 0.0;
+            for z in 0..v {
+                let e = a_t + if z == xi { b_t } else { 0.0 };
+                let val = ws.beta[(i + 1) * v + z] * e;
+                ws.tmp[z] = val;
+                norm += val;
+            }
             for z in 0..v {
                 let arow = &self.chain.a[z * v..(z + 1) * v];
                 let mut acc = 0.0;
                 for zz in 0..v {
-                    acc += arow[zz] * nxt[zz];
+                    acc += arow[zz] * ws.tmp[zz];
                 }
-                row[z] = acc / norm;
+                ws.tmp2[z] = acc / norm;
             }
-            beta[i * v..(i + 1) * v].copy_from_slice(&row);
+            ws.beta[i * v..(i + 1) * v].copy_from_slice(&ws.tmp2[..v]);
         }
-
-        (alpha_bar, beta)
     }
 
     /// All single-site likelihood ratios r[i * V + v] = p_t(x^{i->v}) / p_t(x).
@@ -134,19 +181,21 @@ impl HmmUniformOracle {
             "ratios expects a mask-free sequence"
         );
         let (a_t, b_t) = self.emission(t);
-        let (alpha_bar, beta) = self.messages(tokens, t);
+        self.with_workspace(|ws| {
+            self.messages_into(tokens, t, ws);
 
-        // Ratios: numerator(v) = a_t * S_i + b_t * g_i(v) where
-        // g_i(z) = alpha_bar[i][z] * beta[i][z], S_i = sum_z g_i(z).
-        for i in 0..l {
-            let xi = tokens[i] as usize;
-            let g = |z: usize| alpha_bar[i * v + z] * beta[i * v + z];
-            let s_i: f64 = (0..v).map(g).sum();
-            let denom = a_t * s_i + b_t * g(xi);
-            for tok in 0..v {
-                out[i * v + tok] = (a_t * s_i + b_t * g(tok)) / denom.max(1e-300);
+            // Ratios: numerator(v) = a_t * S_i + b_t * g_i(v) where
+            // g_i(z) = alpha_bar[i][z] * beta[i][z], S_i = sum_z g_i(z).
+            for i in 0..l {
+                let xi = tokens[i] as usize;
+                let g = |z: usize| ws.alpha_bar[i * v + z] * ws.beta[i * v + z];
+                let s_i: f64 = (0..v).map(g).sum();
+                let denom = a_t * s_i + b_t * g(xi);
+                for tok in 0..v {
+                    out[i * v + tok] = (a_t * s_i + b_t * g(tok)) / denom.max(1e-300);
+                }
             }
-        }
+        })
     }
 
     /// Reverse intensities mu[(i, v)] = ratio / V (zero at v = x_i), plus
@@ -191,37 +240,42 @@ impl ScoreSource for HmmUniformOracle {
         let l = self.seq_len;
         debug_assert_eq!(out.len(), l * v);
         let (a_t, b_t) = self.emission(t);
-        let (alpha_bar, beta) = self.messages(tokens, t);
-        for i in 0..l {
-            posterior_row(
-                &alpha_bar[i * v..(i + 1) * v],
-                &beta[i * v..(i + 1) * v],
-                tokens[i],
-                a_t,
-                b_t,
-                &mut out[i * v..(i + 1) * v],
-            );
-        }
+        self.with_workspace(|ws| {
+            self.messages_into(tokens, t, ws);
+            for i in 0..l {
+                posterior_row(
+                    &ws.alpha_bar[i * v..(i + 1) * v],
+                    &ws.beta[i * v..(i + 1) * v],
+                    tokens[i],
+                    a_t,
+                    b_t,
+                    &mut out[i * v..(i + 1) * v],
+                );
+            }
+        })
     }
 
     /// Native sparse evaluation: one O(L V^2) message pass (irreducible for
     /// an HMM), then only `masked_idx.len()` posterior rows are formed and
-    /// normalised — no dense `L x V` output buffer.
+    /// normalised — no dense `L x V` output buffer, no per-call allocation
+    /// (the pass runs in a pooled workspace).
     fn probs_masked_into(&self, tokens: &[Tok], masked_idx: &[usize], t: f64, out: &mut [f64]) {
         let v = self.chain.vocab;
         debug_assert_eq!(out.len(), masked_idx.len() * v);
         let (a_t, b_t) = self.emission(t);
-        let (alpha_bar, beta) = self.messages(tokens, t);
-        for (k, &i) in masked_idx.iter().enumerate() {
-            posterior_row(
-                &alpha_bar[i * v..(i + 1) * v],
-                &beta[i * v..(i + 1) * v],
-                tokens[i],
-                a_t,
-                b_t,
-                &mut out[k * v..(k + 1) * v],
-            );
-        }
+        self.with_workspace(|ws| {
+            self.messages_into(tokens, t, ws);
+            for (k, &i) in masked_idx.iter().enumerate() {
+                posterior_row(
+                    &ws.alpha_bar[i * v..(i + 1) * v],
+                    &ws.beta[i * v..(i + 1) * v],
+                    tokens[i],
+                    a_t,
+                    b_t,
+                    &mut out[k * v..(k + 1) * v],
+                );
+            }
+        })
     }
 }
 

@@ -14,7 +14,10 @@
 //! with pi replacing the left factor at the boundary and the right factor
 //! dropped at the other.  A^0..A^L are precomputed once.
 
+use std::sync::OnceLock;
+
 use crate::score::{ScoreSource, Tok};
+use crate::util::dist::AliasTable;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use anyhow::Result;
@@ -110,6 +113,51 @@ impl MarkovChain {
         }
         lp
     }
+
+    /// Prebuilt O(1)-per-draw sampler for bulk sequence generation.
+    pub fn sampler(&self) -> MarkovSampler<'_> {
+        MarkovSampler::new(self)
+    }
+}
+
+/// Bulk sampler over a fixed chain: Walker alias tables for π and every
+/// transition row, so each token costs O(1) instead of an O(V) CDF scan.
+/// The build is O(V²) — worth it exactly when the same rows are drawn from
+/// many times (corpus generation, reference-perplexity baselines), and NOT
+/// on the solver finalize/Tweedie path, where each categorical row is
+/// sampled once and the alias build would cost more than the scan it
+/// replaces (measured in `benches/solver_steps.rs`, `alias one-shot` row).
+pub struct MarkovSampler<'a> {
+    chain: &'a MarkovChain,
+    pi: AliasTable,
+    rows: Vec<AliasTable>,
+}
+
+impl<'a> MarkovSampler<'a> {
+    pub fn new(chain: &'a MarkovChain) -> Self {
+        let v = chain.vocab;
+        let rows = (0..v)
+            .map(|r| AliasTable::new(&chain.a[r * v..(r + 1) * v]))
+            .collect();
+        MarkovSampler { chain, pi: AliasTable::new(&chain.pi), rows }
+    }
+
+    /// Sample a length-n sequence (same law as [`MarkovChain::sample`],
+    /// different draws — the alias method consumes 2 uniforms per token).
+    pub fn sample<R: Rng>(&self, rng: &mut R, n: usize) -> Vec<Tok> {
+        let mut out = Vec::with_capacity(n);
+        let mut prev = self.pi.sample(rng);
+        out.push(prev as Tok);
+        for _ in 1..n {
+            prev = self.rows[prev].sample(rng);
+            out.push(prev as Tok);
+        }
+        out
+    }
+
+    pub fn chain(&self) -> &MarkovChain {
+        self.chain
+    }
 }
 
 /// Gamma(shape, 1) sampler (Marsaglia & Tsang 2000 + shape<1 boost).
@@ -142,63 +190,77 @@ fn gamma_draw<R: Rng>(rng: &mut R, shape: f64) -> f64 {
 pub struct MarkovOracle {
     pub chain: MarkovChain,
     pub seq_len: usize,
-    /// powers[d] = A^d, row-major; d in 0..=seq_len.
-    powers: Vec<Vec<f64>>,
-    /// powers_t[d] = (A^d)^T, row-major — the right-neighbour factor reads
-    /// a COLUMN of A^d per position; the transposed copy makes that read
-    /// contiguous (perf: ~1.5x on probs_into, EXPERIMENTS.md §Perf).
-    powers_t: Vec<Vec<f64>>,
+    /// powers[d] lazily holds (A^d, (A^d)^T), d in 0..=seq_len; A^0 is
+    /// seeded at construction, higher powers are filled on first use by
+    /// extending the longest already-computed prefix.  Construction is
+    /// therefore O(V²) instead of the old eager O(L·V³) — only the
+    /// neighbour distances a workload actually reaches pay for their
+    /// matrix products.  The transposed copy exists because the
+    /// right-neighbour factor reads a COLUMN of A^d per position; row-major
+    /// transposes make that read contiguous (perf: ~1.5x on probs_into,
+    /// EXPERIMENTS.md §Perf).
+    powers: Vec<OnceLock<(Vec<f64>, Vec<f64>)>>,
 }
 
 impl MarkovOracle {
     pub fn new(chain: MarkovChain, seq_len: usize) -> Self {
         let v = chain.vocab;
-        let mut powers = Vec::with_capacity(seq_len + 1);
+        let powers: Vec<OnceLock<(Vec<f64>, Vec<f64>)>> =
+            (0..=seq_len).map(|_| OnceLock::new()).collect();
         let mut eye = vec![0.0; v * v];
         for i in 0..v {
             eye[i * v + i] = 1.0;
         }
-        powers.push(eye);
-        for d in 1..=seq_len {
-            let prev = &powers[d - 1];
-            let mut next = vec![0.0; v * v];
-            for r in 0..v {
-                for k in 0..v {
-                    let p = prev[r * v + k];
-                    if p == 0.0 {
-                        continue;
-                    }
-                    let row = &chain.a[k * v..(k + 1) * v];
-                    for c in 0..v {
-                        next[r * v + c] += p * row[c];
+        let _ = powers[0].set((eye.clone(), eye));
+        Self { chain, seq_len, powers }
+    }
+
+    /// (A^d, (A^d)^T), computing and memoising any missing prefix.  Safe
+    /// under concurrent use: racing threads compute identical values and
+    /// the losing `set` is discarded.
+    fn pow_pair(&self, d: usize) -> &(Vec<f64>, Vec<f64>) {
+        let d = d.min(self.seq_len);
+        if self.powers[d].get().is_none() {
+            let v = self.chain.vocab;
+            let mut base = d;
+            while self.powers[base].get().is_none() {
+                base -= 1; // powers[0] is always seeded
+            }
+            for k in base + 1..=d {
+                let prev = &self.powers[k - 1].get().expect("prefix filled").0;
+                let mut next = vec![0.0; v * v];
+                for r in 0..v {
+                    for m in 0..v {
+                        let p = prev[r * v + m];
+                        if p == 0.0 {
+                            continue;
+                        }
+                        let row = &self.chain.a[m * v..(m + 1) * v];
+                        for c in 0..v {
+                            next[r * v + c] += p * row[c];
+                        }
                     }
                 }
-            }
-            powers.push(next);
-        }
-        let powers_t = powers
-            .iter()
-            .map(|m| {
-                let mut t = vec![0.0; v * v];
+                let mut next_t = vec![0.0; v * v];
                 for r in 0..v {
                     for c in 0..v {
-                        t[c * v + r] = m[r * v + c];
+                        next_t[c * v + r] = next[r * v + c];
                     }
                 }
-                t
-            })
-            .collect();
-        Self { chain, seq_len, powers, powers_t }
+                let _ = self.powers[k].set((next, next_t));
+            }
+        }
+        self.powers[d].get().expect("pow_pair initialised")
     }
 
     #[inline]
     fn pow(&self, d: usize) -> &[f64] {
-        &self.powers[d.min(self.seq_len)]
+        &self.pow_pair(d).0
     }
 
     #[inline]
     fn pow_t(&self, d: usize) -> &[f64] {
-        &self.powers_t[d.min(self.seq_len)]
+        &self.pow_pair(d).1
     }
 }
 
@@ -504,6 +566,88 @@ mod tests {
         for k in 0..6 {
             for c in 0..4 {
                 assert!((compact[k * 4 + c] - o.chain.pi[c]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn lazy_powers_match_direct_multiplication() {
+        let o = oracle(5, 9);
+        let v = 5usize;
+        // Reference: repeated dense multiplication.
+        let mut want = vec![0.0; v * v];
+        for i in 0..v {
+            want[i * v + i] = 1.0;
+        }
+        for d in 0..=9usize {
+            let got = o.pow(d);
+            let got_t = o.pow_t(d);
+            for r in 0..v {
+                for c in 0..v {
+                    assert!(
+                        (got[r * v + c] - want[r * v + c]).abs() < 1e-12,
+                        "d={d} ({r},{c})"
+                    );
+                    assert_eq!(got_t[c * v + r], got[r * v + c], "transpose d={d}");
+                }
+            }
+            // want <- want * A
+            let mut next = vec![0.0; v * v];
+            for r in 0..v {
+                for k in 0..v {
+                    for c in 0..v {
+                        next[r * v + c] += want[r * v + k] * o.chain.at(k, c);
+                    }
+                }
+            }
+            want = next;
+        }
+        // Out-of-range distances clamp to seq_len.
+        assert_eq!(o.pow(500), o.pow(9));
+    }
+
+    #[test]
+    fn lazy_powers_fill_out_of_order() {
+        // Jumping straight to a deep power must fill (and reuse) the prefix.
+        let o = oracle(4, 12);
+        let deep = o.pow(12).to_vec();
+        let shallow = o.pow(3).to_vec();
+        let o2 = oracle(4, 12);
+        let _ = o2.pow(3);
+        assert_eq!(o2.pow(12), deep.as_slice());
+        assert_eq!(o2.pow(3), shallow.as_slice());
+    }
+
+    #[test]
+    fn alias_sampler_matches_chain_statistics() {
+        let mut rng = Xoshiro256::seed_from_u64(40);
+        let chain = MarkovChain::generate(&mut rng, 5, 0.6);
+        let sampler = chain.sampler();
+        let n = 2000usize;
+        let len = 32usize;
+        let mut uni = vec![0usize; 5];
+        let mut bi = vec![0usize; 25];
+        let mut pairs = 0usize;
+        for _ in 0..n {
+            let s = sampler.sample(&mut rng, len);
+            assert_eq!(s.len(), len);
+            for &t in &s {
+                uni[t as usize] += 1;
+            }
+            for w in s.windows(2) {
+                bi[w[0] as usize * 5 + w[1] as usize] += 1;
+                pairs += 1;
+            }
+        }
+        for c in 0..5 {
+            let got = uni[c] as f64 / (n * len) as f64;
+            assert!((got - chain.pi[c]).abs() < 0.02, "tok {c}: {got} vs {}", chain.pi[c]);
+        }
+        for a in 0..5 {
+            for b in 0..5 {
+                let got = bi[a * 5 + b] as f64 / pairs as f64;
+                let want = chain.pi[a] * chain.at(a, b);
+                assert!((got - want).abs() < 0.02, "({a},{b}): {got} vs {want}");
             }
         }
     }

@@ -53,14 +53,37 @@ impl Client {
         seed: u64,
         family: &str,
     ) -> Result<GenerateResponse> {
-        let req = Json::obj(vec![
+        self.generate_with(solver, nfe, n_samples, seed, family, None, None)
+    }
+
+    /// Full request surface: optional schedule spec ("uniform", "log",
+    /// "adaptive:tol=1e-3", "tuned[:steps=..]") and hard NFE budget.
+    #[allow(clippy::too_many_arguments)]
+    pub fn generate_with(
+        &mut self,
+        solver: &str,
+        nfe: usize,
+        n_samples: usize,
+        seed: u64,
+        family: &str,
+        schedule: Option<&str>,
+        nfe_budget: Option<usize>,
+    ) -> Result<GenerateResponse> {
+        let mut fields = vec![
             ("cmd", Json::from("generate")),
             ("solver", Json::from(solver)),
             ("nfe", Json::from(nfe)),
             ("n_samples", Json::from(n_samples)),
             ("seed", Json::from(seed as f64)),
             ("family", Json::from(family)),
-        ]);
+        ];
+        if let Some(s) = schedule {
+            fields.push(("schedule", Json::from(s)));
+        }
+        if let Some(b) = nfe_budget {
+            fields.push(("nfe_budget", Json::from(b)));
+        }
+        let req = Json::obj(fields);
         let r = self.raw(&req.to_string())?;
         if !r.get("ok")?.as_bool()? {
             bail!(

@@ -2,9 +2,14 @@
 //!
 //! Protocol: one JSON object per line.
 //!   -> {"cmd": "generate", "solver": "trapezoidal:0.5", "nfe": 64,
-//!       "n_samples": 2, "seed": 7, "family": "markov"}
+//!       "n_samples": 2, "seed": 7, "family": "markov",
+//!       "schedule": "adaptive:tol=1e-3", "nfe_budget": 48}
 //!   <- {"ok": true, "id": 1, "sequences": [[...], [...]],
-//!       "nfe_used": 65, "latency_ms": 12.3}
+//!       "nfe_used": 42, "latency_ms": 12.3,
+//!       "schedule": "adaptive:tol=0.001", "nfe_budget": 48}
+//! `schedule` (optional, default "uniform": uniform|log|adaptive[:tol=..]|
+//! tuned[:steps=..]) selects the time discretisation; `nfe_budget`
+//! (optional) is a hard per-sample NFE cap.  Both are echoed back.
 //!   -> {"cmd": "metrics"}        <- {"ok": true, "report": "..."}
 //!   -> {"cmd": "ping"}           <- {"ok": true}
 //! Errors: {"ok": false, "error": "..."}.  One thread per connection.
@@ -115,10 +120,16 @@ fn handle_line(
         "generate" => {
             let id = next_id.fetch_add(1, Ordering::Relaxed);
             let req = GenerateRequest::from_json(&j, id)?;
+            let (schedule, budget) = (req.schedule, req.nfe_budget);
             let resp = coordinator.generate(req)?;
             let mut out = resp.to_json();
             if let Json::Obj(m) = &mut out {
                 m.insert("ok".into(), Json::Bool(true));
+                // Echo the schedule fields so clients can confirm what ran.
+                m.insert("schedule".into(), Json::from(schedule.to_string_spec().as_str()));
+                if let Some(b) = budget {
+                    m.insert("nfe_budget".into(), Json::from(b));
+                }
             }
             Ok(out)
         }
@@ -141,6 +152,53 @@ mod tests {
         let registry = Registry::load("artifacts").unwrap();
         let coord = Coordinator::start(runtime, registry, BatchPolicy::Greedy);
         Some(Server::start("127.0.0.1:0", coord).unwrap())
+    }
+
+    /// Server over the artifact-free local oracle backend: available in
+    /// every environment, so the schedule fields get end-to-end coverage.
+    fn local_server() -> Server {
+        use crate::score::markov::{MarkovChain, MarkovOracle};
+        use crate::util::rng::Xoshiro256;
+        use std::sync::Arc;
+        let mut rng = Xoshiro256::seed_from_u64(23);
+        let oracle = Arc::new(MarkovOracle::new(MarkovChain::generate(&mut rng, 6, 0.5), 16));
+        let coord = Coordinator::start_local(oracle, BatchPolicy::Greedy, 8);
+        Server::start("127.0.0.1:0", coord).unwrap()
+    }
+
+    #[test]
+    fn schedule_fields_roundtrip_over_tcp() {
+        let srv = local_server();
+        let mut c = Client::connect(&srv.addr.to_string()).unwrap();
+        let r = c
+            .raw(
+                r#"{"cmd": "generate", "solver": "trapezoidal:0.5", "nfe": 64,
+                    "schedule": "adaptive:tol=0.001", "nfe_budget": 24,
+                    "n_samples": 2, "seed": 5}"#,
+            )
+            .unwrap();
+        assert_eq!(r.get("ok").unwrap().as_bool().unwrap(), true, "{r:?}");
+        assert_eq!(r.get("schedule").unwrap().as_str().unwrap(), "adaptive:tol=0.001");
+        assert_eq!(r.get("nfe_budget").unwrap().as_usize().unwrap(), 24);
+        let nfe_used = r.get("nfe_used").unwrap().as_usize().unwrap();
+        assert!(nfe_used <= 24, "budget exceeded over the wire: {nfe_used}");
+        let seqs = r.get("sequences").unwrap().as_arr().unwrap().to_vec();
+        assert_eq!(seqs.len(), 2);
+
+        // Tuned + helper API path.
+        let resp = c
+            .generate_with("trapezoidal:0.5", 16, 1, 3, "markov", Some("tuned:steps=8"), None)
+            .unwrap();
+        assert_eq!(resp.sequences.len(), 1);
+        assert!(resp.sequences[0].iter().all(|&t| t < 6));
+
+        // Invalid schedule string: clean protocol error, connection alive.
+        let r = c
+            .raw(r#"{"cmd": "generate", "solver": "tau", "nfe": 8, "schedule": "warp"}"#)
+            .unwrap();
+        assert_eq!(r.get("ok").unwrap().as_bool().unwrap(), false);
+        assert!(c.ping().unwrap());
+        srv.stop();
     }
 
     #[test]

@@ -41,7 +41,21 @@
 //! charged as one extra NFE when it fires — without it, perplexity of a
 //! partially masked sequence is undefined.  The same convention is applied
 //! to every scheme so comparisons at equal NFE stay fair.
+//!
+//! ## Adaptive schedules
+//!
+//! The fixed-grid drivers take the discretisation as an input; the
+//! θ-schemes can instead pick it online.  [`generate_adaptive`] and
+//! [`generate_batch_adaptive`] drive a `schedule::adaptive` PI controller
+//! from the embedded first-order-vs-composite jump-probability estimator
+//! (zero extra NFE, RNG-free), optionally under a hard NFE budget; batched
+//! lanes vote on one shared dt so the lock-step batching above is
+//! preserved.  Replaying the realized grid through the fixed drivers
+//! reproduces every sample bit for bit.
 
+use crate::schedule::adaptive::{
+    rk2_gate_discrepancy, trap_gate_discrepancy, AdaptiveTrace, StepController,
+};
 use crate::score::{ScoreSource, Tok};
 use crate::solvers::{GenStats, Solver};
 use crate::util::dist::categorical;
@@ -172,6 +186,58 @@ pub fn generate<S: ScoreSource + ?Sized, R: Rng>(
     (st.tokens, st.stats)
 }
 
+/// One lane of a lock-step batch: sampler state plus its seeded stream.
+struct BatchLane {
+    state: LaneState,
+    rng: Xoshiro256,
+}
+
+/// Which index list a stage evaluates.
+enum Sel {
+    Active,
+    Sub,
+    Pd { n: usize, n_steps: usize },
+}
+
+fn selected<'a>(sel: &Sel, st: &'a LaneState) -> Option<&'a [usize]> {
+    match sel {
+        Sel::Active => (!st.active.is_empty()).then(|| st.active.as_slice()),
+        Sel::Sub => (!st.sub.is_empty()).then(|| st.sub.as_slice()),
+        Sel::Pd { n, n_steps } => {
+            if st.active.is_empty() {
+                return None;
+            }
+            let (k, _) = pd_schedule(st.tokens.len(), st.active.len(), *n, *n_steps);
+            (k > 0).then(|| st.active.as_slice())
+        }
+    }
+}
+
+/// One batched score call covering every lane the selector picks.
+fn eval_stage<S: ScoreSource + ?Sized>(
+    score: &S,
+    lanes: &[BatchLane],
+    bufs: &mut [Scratch],
+    t: f64,
+    sel: &Sel,
+    star: bool,
+) {
+    let v = score.vocab();
+    let mut reqs: Vec<(&[Tok], &[usize])> = Vec::new();
+    let mut outs: Vec<&mut [f64]> = Vec::new();
+    for (lane, sc) in lanes.iter().zip(bufs.iter_mut()) {
+        let Some(idx) = selected(sel, &lane.state) else {
+            continue;
+        };
+        let buf = if star { &mut sc.probs_star } else { &mut sc.probs };
+        reqs.push((lane.state.tokens.as_slice(), idx));
+        outs.push(&mut buf[..idx.len() * v]);
+    }
+    if !reqs.is_empty() {
+        score.probs_masked_batch(&reqs, t, &mut outs);
+    }
+}
+
 /// Generate B sequences in lock-step, one batched score call per stage.
 ///
 /// Lane b is seeded with `Xoshiro256::seed_from_u64(seeds[b])` and its
@@ -197,10 +263,6 @@ pub fn generate_batch<S: ScoreSource + ?Sized>(
     let mask = score.mask_id();
     let threads = ThreadPool::default_size().min(seeds.len());
 
-    struct BatchLane {
-        state: LaneState,
-        rng: Xoshiro256,
-    }
     let mut lanes: Vec<BatchLane> = seeds
         .iter()
         .map(|&s| BatchLane {
@@ -209,52 +271,6 @@ pub fn generate_batch<S: ScoreSource + ?Sized>(
         })
         .collect();
     let mut bufs: Vec<Scratch> = seeds.iter().map(|_| Scratch::new(l, v)).collect();
-
-    /// Which index list a stage evaluates.
-    enum Sel {
-        Active,
-        Sub,
-        Pd { n: usize, n_steps: usize },
-    }
-
-    fn selected<'a>(sel: &Sel, st: &'a LaneState) -> Option<&'a [usize]> {
-        match sel {
-            Sel::Active => (!st.active.is_empty()).then(|| st.active.as_slice()),
-            Sel::Sub => (!st.sub.is_empty()).then(|| st.sub.as_slice()),
-            Sel::Pd { n, n_steps } => {
-                if st.active.is_empty() {
-                    return None;
-                }
-                let (k, _) = pd_schedule(st.tokens.len(), st.active.len(), *n, *n_steps);
-                (k > 0).then(|| st.active.as_slice())
-            }
-        }
-    }
-
-    /// One batched score call covering every lane the selector picks.
-    fn eval_stage<S: ScoreSource + ?Sized>(
-        score: &S,
-        lanes: &[BatchLane],
-        bufs: &mut [Scratch],
-        t: f64,
-        sel: &Sel,
-        star: bool,
-    ) {
-        let v = score.vocab();
-        let mut reqs: Vec<(&[Tok], &[usize])> = Vec::new();
-        let mut outs: Vec<&mut [f64]> = Vec::new();
-        for (lane, sc) in lanes.iter().zip(bufs.iter_mut()) {
-            let Some(idx) = selected(sel, &lane.state) else {
-                continue;
-            };
-            let buf = if star { &mut sc.probs_star } else { &mut sc.probs };
-            reqs.push((lane.state.tokens.as_slice(), idx));
-            outs.push(&mut buf[..idx.len() * v]);
-        }
-        if !reqs.is_empty() {
-            score.probs_masked_batch(&reqs, t, &mut outs);
-        }
-    }
 
     match solver {
         Solver::ParallelDecoding => {
@@ -331,6 +347,222 @@ pub fn generate_batch<S: ScoreSource + ?Sized>(
         .into_iter()
         .map(|lane| (lane.state.tokens, lane.state.stats))
         .collect()
+}
+
+/// Per-step local error estimate for one lane of a θ-scheme: the maximum
+/// per-dimension jump-probability discrepancy between the scheme's
+/// composite two-stage gate and its first-order Euler predictor (see
+/// `schedule::adaptive`).  Read off the stage buffers after the stage-2
+/// evaluation and BEFORE `apply_stage2` (which consumes `sub`); draws no
+/// randomness, so adaptive and fixed-grid runs share RNG streams exactly.
+fn lane_step_error(
+    solver: Solver,
+    v: usize,
+    t: f64,
+    t_next: f64,
+    st: &LaneState,
+    sc: &Scratch,
+) -> f64 {
+    let dt = t - t_next;
+    let rho = stage2_time(solver, t, t_next);
+    let mu_tot = 1.0 / t; // per masked dim under the log-linear schedule
+    match solver {
+        Solver::Trapezoidal { theta } => {
+            let a1 = 1.0 / (2.0 * theta * (1.0 - theta));
+            let a2 = a1 - 1.0;
+            let mut err = 0.0f64;
+            for j in 0..st.sub.len() {
+                let mut tot = 0.0;
+                for c in 0..v {
+                    let mu_star = sc.probs_star[j * v + c] / rho;
+                    let mu_t = sc.probs[j * v + c] / t;
+                    tot += (a1 * mu_star - a2 * mu_t).max(0.0);
+                }
+                err = err.max(trap_gate_discrepancy(theta, dt, mu_tot, tot));
+            }
+            err
+        }
+        Solver::Rk2 { theta } => {
+            let w_coef = 1.0 / (2.0 * theta);
+            let mut err = 0.0f64;
+            let mut j = 0usize;
+            for (k, &i) in st.active.iter().enumerate() {
+                let star = j < st.sub.len() && st.sub[j] == i;
+                let mut tot = 0.0;
+                for c in 0..v {
+                    let mu_t = sc.probs[k * v + c] / t;
+                    let mu_star = if star {
+                        sc.probs_star[j * v + c] / rho
+                    } else {
+                        0.0
+                    };
+                    tot += ((1.0 - w_coef) * mu_t + w_coef * mu_star).max(0.0);
+                }
+                if star {
+                    j += 1;
+                }
+                err = err.max(rk2_gate_discrepancy(dt, mu_tot, tot));
+            }
+            err
+        }
+        _ => unreachable!("error estimator needs a two-stage solver"),
+    }
+}
+
+fn validate_adaptive(solver: Solver, delta: f64) {
+    validate_solver(solver);
+    assert!(
+        solver.nfe_per_step() == 2,
+        "adaptive schedules need the embedded two-stage estimator \
+         (θ-trapezoidal or θ-RK-2), got {}",
+        solver.name()
+    );
+    assert!((0.0..1.0).contains(&delta) && delta > 0.0, "delta must be in (0,1)");
+}
+
+/// Generate one sequence under online error control: the PI controller
+/// picks each step from the embedded estimator (zero extra NFE), optionally
+/// pinned to a hard NFE budget.  Returns the tokens, the stats, and the
+/// realized [`AdaptiveTrace`] — replaying [`generate`] over `trace.grid`
+/// with the same seed reproduces the output bit for bit (property-tested).
+pub fn generate_adaptive<S: ScoreSource + ?Sized, R: Rng>(
+    score: &S,
+    solver: Solver,
+    mut ctl: StepController,
+    delta: f64,
+    rng: &mut R,
+) -> (Vec<Tok>, GenStats, AdaptiveTrace) {
+    validate_adaptive(solver, delta);
+    let v = score.vocab();
+    let mask = score.mask_id();
+    let mut st = LaneState::new(score.seq_len(), v, mask);
+    let mut sc = Scratch::new(score.seq_len(), v);
+    let mut trace = AdaptiveTrace { grid: vec![1.0], errors: Vec::new() };
+    let mut t = 1.0f64;
+
+    while let Some(dt) = ctl.propose_dt(t, delta, st.stats.nfe) {
+        let t_next = if dt >= t - delta { delta } else { t - dt };
+        let m = st.active.len();
+        let mut err = 0.0;
+        if m > 0 {
+            score.probs_masked_into(&st.tokens, &st.active, t, &mut sc.probs[..m * v]);
+            apply_stage1(solver, v, t, t_next, &mut st, &mut sc, rng);
+            if !st.sub.is_empty() {
+                let rho = stage2_time(solver, t, t_next);
+                let m2 = st.sub.len();
+                score.probs_masked_into(
+                    &st.tokens,
+                    &st.sub,
+                    rho,
+                    &mut sc.probs_star[..m2 * v],
+                );
+            }
+            err = lane_step_error(solver, v, t, t_next, &st, &sc);
+            apply_stage2(solver, v, mask, t, t_next, &mut st, &mut sc, rng);
+        }
+        st.stats.steps += 1;
+        trace.grid.push(t_next);
+        trace.errors.push(err);
+        ctl.observe(err);
+        t = t_next;
+        if st.active.is_empty() {
+            break;
+        }
+    }
+
+    finalize(score, t, &mut st, &mut sc.probs, rng);
+    (st.tokens, st.stats, trace)
+}
+
+/// Batched adaptive generation: B lanes step in lock-step over ONE shared
+/// schedule.  Each stage is one batched score call exactly as in
+/// [`generate_batch`]; the lanes then *vote* on the shared dt — the
+/// controller observes the worst per-lane error estimate, so the schedule
+/// is as fine as the most demanding lane requires.  Replaying the realized
+/// `trace.grid` through per-lane [`generate`] reproduces every lane bit
+/// for bit (property-tested); with a single lane the realized schedule is
+/// identical to [`generate_adaptive`]'s.  Under an NFE budget the vote
+/// uses the maximum spend across lanes, so no lane can overdraw.
+pub fn generate_batch_adaptive<S: ScoreSource + ?Sized>(
+    score: &S,
+    solver: Solver,
+    mut ctl: StepController,
+    delta: f64,
+    seeds: &[u64],
+) -> (Vec<(Vec<Tok>, GenStats)>, AdaptiveTrace) {
+    validate_adaptive(solver, delta);
+    if seeds.is_empty() {
+        return (Vec::new(), AdaptiveTrace::default());
+    }
+    let l = score.seq_len();
+    let v = score.vocab();
+    let mask = score.mask_id();
+    let threads = ThreadPool::default_size().min(seeds.len());
+    let mut lanes: Vec<BatchLane> = seeds
+        .iter()
+        .map(|&s| BatchLane {
+            state: LaneState::new(l, v, mask),
+            rng: Xoshiro256::seed_from_u64(s),
+        })
+        .collect();
+    let mut bufs: Vec<Scratch> = seeds.iter().map(|_| Scratch::new(l, v)).collect();
+    let mut trace = AdaptiveTrace { grid: vec![1.0], errors: Vec::new() };
+    let mut t = 1.0f64;
+
+    loop {
+        let spent = lanes.iter().map(|l| l.state.stats.nfe).max().unwrap_or(0);
+        let Some(dt) = ctl.propose_dt(t, delta, spent) else { break };
+        let t_next = if dt >= t - delta { delta } else { t - dt };
+        eval_stage(score, &lanes, &mut bufs, t, &Sel::Active, false);
+        par_zip_mut2(&mut lanes, &mut bufs, threads, |_, lane, sc| {
+            if !lane.state.active.is_empty() {
+                apply_stage1(solver, v, t, t_next, &mut lane.state, sc, &mut lane.rng);
+            }
+        });
+        let rho = stage2_time(solver, t, t_next);
+        eval_stage(score, &lanes, &mut bufs, rho, &Sel::Sub, true);
+        // The dt vote: worst estimated error across lanes, read before
+        // apply_stage2 consumes the stage buffers.
+        let mut err = 0.0f64;
+        for (lane, sc) in lanes.iter().zip(&bufs) {
+            if !lane.state.active.is_empty() {
+                err = err.max(lane_step_error(solver, v, t, t_next, &lane.state, sc));
+            }
+        }
+        par_zip_mut2(&mut lanes, &mut bufs, threads, |_, lane, sc| {
+            if !lane.state.active.is_empty() {
+                apply_stage2(solver, v, mask, t, t_next, &mut lane.state, sc, &mut lane.rng);
+            }
+        });
+        for lane in &mut lanes {
+            lane.state.stats.steps += 1;
+        }
+        trace.grid.push(t_next);
+        trace.errors.push(err);
+        ctl.observe(err);
+        t = t_next;
+        if lanes.iter().all(|l| l.state.active.is_empty()) {
+            break;
+        }
+    }
+
+    eval_stage(score, &lanes, &mut bufs, t, &Sel::Active, false);
+    par_zip_mut2(&mut lanes, &mut bufs, threads, |_, lane, sc| {
+        let st = &mut lane.state;
+        if st.active.is_empty() {
+            return;
+        }
+        st.stats.nfe += 1;
+        finalize_apply(v, &sc.probs, st, &mut lane.rng);
+    });
+
+    (
+        lanes
+            .into_iter()
+            .map(|lane| (lane.state.tokens, lane.state.stats))
+            .collect(),
+        trace,
+    )
 }
 
 #[derive(Clone, Copy)]
@@ -901,6 +1133,35 @@ mod tests {
         let (toks, stats) = generate(&o, Solver::ParallelDecoding, &grid, &mut rng);
         assert!(toks.iter().all(|&t| (t as usize) < 6));
         assert!(stats.nfe <= 9, "nfe={}", stats.nfe);
+    }
+
+    #[test]
+    fn adaptive_full_unmask_and_trace_validity() {
+        use crate::schedule::adaptive::{AdaptiveController, StepController};
+        let o = oracle();
+        for solver in [Solver::Trapezoidal { theta: 0.5 }, Solver::Rk2 { theta: 0.4 }] {
+            let cfg = AdaptiveController::for_span(1e-3, 1.0, 1e-3);
+            let mut rng = Xoshiro256::seed_from_u64(2);
+            let (toks, stats, trace) =
+                generate_adaptive(&o, solver, StepController::new(cfg, 0.1), 1e-3, &mut rng);
+            assert!(toks.iter().all(|&t| (t as usize) < 6), "{}", solver.name());
+            assert!(stats.nfe >= 1);
+            assert!(crate::solvers::grid::is_valid_grid(&trace.grid));
+            assert_eq!(trace.errors.len(), trace.grid.len() - 1);
+            assert_eq!(stats.steps, trace.grid.len() - 1);
+        }
+    }
+
+    #[test]
+    fn adaptive_rejects_one_stage_solver() {
+        use crate::schedule::adaptive::{AdaptiveController, StepController};
+        let o = oracle();
+        let cfg = AdaptiveController::for_span(1e-3, 1.0, 1e-3);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Xoshiro256::seed_from_u64(1);
+            generate_adaptive(&o, Solver::Euler, StepController::new(cfg, 0.1), 1e-3, &mut rng)
+        }));
+        assert!(res.is_err());
     }
 
     #[test]

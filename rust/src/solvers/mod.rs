@@ -12,9 +12,12 @@
 //!   log-linear schedule (the text/image experiments, Secs. 6.2-6.4);
 //! - [`toy`]: the Sec. 6.1 single-variable uniform CTMC with analytic score.
 
-pub mod grid;
 pub mod masked;
 pub mod toy;
+
+/// Time discretisations now live in the [`crate::schedule`] subsystem;
+/// `solvers::grid` remains as a re-export for the existing call sites.
+pub use crate::schedule::grid;
 
 /// Solver selection shared by the CLI, coordinator and experiment harnesses.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -52,6 +55,19 @@ impl Solver {
             Solver::Trapezoidal { .. } => "theta-trapezoidal",
             Solver::Rk2 { .. } => "theta-rk2",
             Solver::ParallelDecoding => "parallel-decoding",
+        }
+    }
+
+    /// Canonical string form (round-trips through [`Solver::parse`]); used
+    /// by the request JSON layer and the tuned-schedule cache keys.
+    pub fn spec_string(&self) -> String {
+        match self {
+            Solver::Euler => "euler".into(),
+            Solver::TauLeaping => "tau".into(),
+            Solver::Tweedie => "tweedie".into(),
+            Solver::Trapezoidal { theta } => format!("trapezoidal:{theta}"),
+            Solver::Rk2 { theta } => format!("rk2:{theta}"),
+            Solver::ParallelDecoding => "parallel".into(),
         }
     }
 

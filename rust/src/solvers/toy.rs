@@ -5,7 +5,10 @@
 //! the runtime cross-validation tests (rust vs AOT-artifact numerics).
 
 use crate::ctmc::ToyModel;
-use crate::solvers::Solver;
+use crate::schedule::adaptive::{
+    rk2_gate_discrepancy, trap_gate_discrepancy, AdaptiveTrace, StepController,
+};
+use crate::solvers::{GenStats, Solver};
 use crate::util::dist::categorical_f64;
 use crate::util::rng::Rng;
 
@@ -59,6 +62,30 @@ pub fn step<R: Rng>(
             model.reverse_intensities(x, t, &mut mu);
             sub_step(model, x, &mu, dt, true, rng)
         }
+        Solver::Trapezoidal { .. } | Solver::Rk2 { .. } => {
+            two_stage_step(model, solver, x, t, t_next, rng).0
+        }
+        Solver::ParallelDecoding => {
+            panic!("parallel decoding is undefined for the toy model")
+        }
+    }
+}
+
+/// One θ-scheme step with the intermediate rate totals exposed: returns
+/// (new state, total time-t intensity at x, total combined stage-2
+/// intensity) — the last two feed the adaptive error estimator for free.
+fn two_stage_step<R: Rng>(
+    model: &ToyModel,
+    solver: Solver,
+    x: usize,
+    t: f64,
+    t_next: f64,
+    rng: &mut R,
+) -> (usize, f64, f64) {
+    let s = model.n_states();
+    let mut mu = vec![0.0; s];
+    let dt = t - t_next;
+    match solver {
         Solver::Trapezoidal { theta } => {
             assert!(theta > 0.0 && theta < 1.0);
             let rho = t - theta * dt;
@@ -74,7 +101,8 @@ pub fn step<R: Rng>(
             for nu in 0..s {
                 comb[nu] = (a1 * mu_star[nu] - a2 * mu[nu]).max(0.0);
             }
-            sub_step(model, y_star, &comb, (1.0 - theta) * dt, true, rng)
+            let y = sub_step(model, y_star, &comb, (1.0 - theta) * dt, true, rng);
+            (y, mu.iter().sum(), comb.iter().sum())
         }
         Solver::Rk2 { theta } => {
             assert!(theta > 0.0 && theta <= 1.0);
@@ -89,11 +117,10 @@ pub fn step<R: Rng>(
                 comb[nu] = ((1.0 - w) * mu[nu] + w * mu_star[nu]).max(0.0);
             }
             // Alg. 4 restarts from the original state with the full step.
-            sub_step(model, x, &comb, dt, true, rng)
+            let y = sub_step(model, x, &comb, dt, true, rng);
+            (y, mu.iter().sum(), comb.iter().sum())
         }
-        Solver::ParallelDecoding => {
-            panic!("parallel decoding is undefined for the toy model")
-        }
+        _ => unreachable!("two_stage_step needs a θ-scheme"),
     }
 }
 
@@ -110,6 +137,99 @@ pub fn generate<R: Rng>(
         x = step(model, solver, x, w[0], w[1], rng);
     }
     x
+}
+
+/// Error-controlled backward pass for the θ-schemes: the PI controller
+/// picks each step from the free two-stage estimator (|composite gate −
+/// Euler gate|), optionally pinned to an NFE budget (2 NFE per step, no
+/// terminal denoise in the toy family — use `reserve: 0`).  Replaying
+/// [`generate`]'s step loop over the realized `trace.grid` with the same
+/// RNG stream reproduces the sample bit for bit.
+pub fn generate_adaptive<R: Rng>(
+    model: &ToyModel,
+    solver: Solver,
+    mut ctl: StepController,
+    delta: f64,
+    rng: &mut R,
+) -> (usize, GenStats, AdaptiveTrace) {
+    assert!(
+        matches!(solver, Solver::Trapezoidal { .. } | Solver::Rk2 { .. }),
+        "adaptive toy schedules need a θ-scheme, got {}",
+        solver.name()
+    );
+    assert!(delta > 0.0 && delta < model.horizon);
+    let mut x = model.sample_stationary(rng);
+    let mut t = model.horizon;
+    let mut stats = GenStats::default();
+    let mut trace = AdaptiveTrace { grid: vec![t], errors: Vec::new() };
+    while let Some(dt) = ctl.propose_dt(t, delta, stats.nfe) {
+        let t_next = if dt >= t - delta { delta } else { t - dt };
+        let (nx, tot_mu, tot_comb) = two_stage_step(model, solver, x, t, t_next, rng);
+        x = nx;
+        stats.nfe += 2;
+        stats.steps += 1;
+        let err = match solver {
+            Solver::Trapezoidal { theta } => {
+                trap_gate_discrepancy(theta, t - t_next, tot_mu, tot_comb)
+            }
+            Solver::Rk2 { .. } => rk2_gate_discrepancy(t - t_next, tot_mu, tot_comb),
+            _ => unreachable!(),
+        };
+        trace.grid.push(t_next);
+        trace.errors.push(err);
+        ctl.observe(err);
+        t = t_next;
+    }
+    (x, stats, trace)
+}
+
+/// Adaptive counterpart of [`empirical_distribution`]: every sample runs
+/// its own error-controlled pass (same chunked seeding, so results are
+/// thread-count invariant).  Returns the empirical law and the mean NFE
+/// actually spent per sample — the quantity the schedule benches compare
+/// against fixed grids at matched KL.
+pub fn empirical_distribution_adaptive(
+    model: &ToyModel,
+    solver: Solver,
+    ctl: &StepController,
+    delta: f64,
+    n: usize,
+    seed: u64,
+    threads: usize,
+) -> (Vec<f64>, f64) {
+    use crate::util::threadpool::par_map_indexed;
+    let s = model.n_states();
+    let chunks = 64.min(n.max(1));
+    let per = n.div_ceil(chunks);
+    let results = par_map_indexed(chunks, threads, |c| {
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(
+            seed ^ (c as u64).wrapping_mul(0x9E3779B97F4A7C15),
+        );
+        let lo = c * per;
+        let hi = ((c + 1) * per).min(n);
+        let mut counts = vec![0u64; s];
+        let mut nfe = 0u64;
+        for _ in lo..hi {
+            let (x, stats, _) =
+                generate_adaptive(model, solver, ctl.clone(), delta, &mut rng);
+            counts[x] += 1;
+            nfe += stats.nfe as u64;
+        }
+        (counts, nfe)
+    });
+    let mut tot = vec![0u64; s];
+    let mut nfe_tot = 0u64;
+    for (c, nfe) in results {
+        for (i, v) in c.into_iter().enumerate() {
+            tot[i] += v;
+        }
+        nfe_tot += nfe;
+    }
+    let n_tot: u64 = tot.iter().sum();
+    (
+        tot.into_iter().map(|c| c as f64 / n_tot.max(1) as f64).collect(),
+        nfe_tot as f64 / n.max(1) as f64,
+    )
 }
 
 /// Generate `n` samples and return the empirical distribution (the Fig. 2

@@ -43,6 +43,7 @@ fn prop_batcher_conserves_lanes() {
                 nfe: *g.choose(&[16usize, 32, 64]),
                 n_samples,
                 seed: g.usize_in(0, 1000) as u64,
+                ..Default::default()
             });
         }
         let mut got = 0usize;
@@ -81,6 +82,7 @@ fn prop_batch_key_groups_iff_compatible() {
                 nfe,
                 n_samples: 1,
                 seed: 0,
+                ..Default::default()
             })
         };
         let theta = g.f64_in(0.05, 0.95);

@@ -1,0 +1,228 @@
+//! Property tests for the schedule/ subsystem (ISSUE 2 checklist):
+//!
+//! (a) the adaptive controller with tol → 0 and pinned step bounds
+//!     reproduces the fixed-grid θ-trapezoidal output bit for bit;
+//! (b) NFE-budgeted runs never exceed their budget;
+//! (c) `generate_batch` under a shared adaptive schedule stays
+//!     bit-identical to per-lane `generate` over the realized grid.
+
+use fastdds::ctmc::ToyModel;
+use fastdds::prop_assert;
+use fastdds::schedule::adaptive::{AdaptiveController, NfeBudget, StepController};
+use fastdds::schedule::grid;
+use fastdds::score::markov::{MarkovChain, MarkovOracle};
+use fastdds::solvers::{masked, toy, Solver};
+use fastdds::testkit::{check, Gen};
+use fastdds::util::rng::Xoshiro256;
+
+fn theta_solver(g: &mut Gen) -> Solver {
+    if g.bool(0.5) {
+        Solver::Trapezoidal { theta: g.f64_in(0.1, 0.9) }
+    } else {
+        Solver::Rk2 { theta: g.f64_in(0.1, 1.0) }
+    }
+}
+
+fn oracle(vocab: usize, seq_len: usize, seed: u64) -> MarkovOracle {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    MarkovOracle::new(MarkovChain::generate(&mut rng, vocab, 0.5), seq_len)
+}
+
+#[test]
+fn prop_zero_tol_pinned_bounds_is_fixed_uniform_grid_bitwise() {
+    // (a): tol = 0 forces maximal shrink, min_dt = max_dt = h pins every
+    // step to h, and h is an exact binary fraction so the realized times
+    // coincide bit for bit with grid::masked_uniform's 1 - h*i.
+    let o = oracle(6, 16, 11);
+    check("zero_tol_fixed_grid", 20, |g| {
+        let solver = theta_solver(g);
+        // h = 2^-k: steps = (1 - delta)/h with delta = 0.5 -> 2^(k-1) steps.
+        let k = g.usize_in(3, 5);
+        let h = (2.0f64).powi(-(k as i32));
+        let delta = 0.5;
+        let steps = ((1.0 - delta) / h).round() as usize;
+        let cfg = AdaptiveController::for_span(0.0, 1.0, delta).with_bounds(h, h);
+        let ctl = StepController::new(cfg, h);
+        let seed = g.usize_in(0, 1 << 20) as u64;
+
+        let mut ra = Xoshiro256::seed_from_u64(seed);
+        let (toks_a, stats_a, trace) =
+            masked::generate_adaptive(&o, solver, ctl, delta, &mut ra);
+        let fixed = grid::masked_uniform(steps, delta);
+        let mut rf = Xoshiro256::seed_from_u64(seed);
+        let (toks_f, stats_f) = masked::generate(&o, solver, &fixed, &mut rf);
+
+        prop_assert!(toks_a == toks_f, "tokens diverged for {}", solver.name());
+        prop_assert!(
+            stats_a.nfe == stats_f.nfe,
+            "nfe diverged: {} vs {}",
+            stats_a.nfe,
+            stats_f.nfe
+        );
+        // The realized grid is the uniform grid (prefix, if a lane finished
+        // early and the adaptive loop stopped stepping).
+        prop_assert!(trace.grid.len() <= fixed.len(), "too many steps");
+        for (i, (&a, &f)) in trace.grid.iter().zip(&fixed).enumerate() {
+            prop_assert!(a == f, "time {i} diverged: {a} vs {f}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_budgeted_runs_never_exceed_budget() {
+    // (b): whatever the tolerance, solver, and budget, spend <= budget —
+    // single lane, batch lanes, and the toy family.
+    let o = oracle(5, 14, 23);
+    let mut mrng = Xoshiro256::seed_from_u64(7);
+    let model = ToyModel::paper_default(&mut mrng);
+    check("nfe_budget_hard_cap", 30, |g| {
+        let solver = theta_solver(g);
+        let tol = *g.choose(&[0.0, 1e-4, 1e-2, 1.0]);
+        let budget = g.usize_in(3, 40);
+        let seed = g.usize_in(0, 1 << 20) as u64;
+
+        let cfg = AdaptiveController::for_span(tol, 1.0, 1e-3);
+        let ctl = StepController::new(cfg, 0.1).with_budget(NfeBudget {
+            total: budget,
+            nfe_per_step: solver.nfe_per_step(),
+            reserve: 1,
+        });
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let (toks, stats, _) =
+            masked::generate_adaptive(&o, solver, ctl.clone(), 1e-3, &mut rng);
+        prop_assert!(
+            stats.nfe <= budget,
+            "single lane overdrew: {} > {budget} ({})",
+            stats.nfe,
+            solver.name()
+        );
+        prop_assert!(toks.iter().all(|&t| t < 5), "masks left");
+
+        let seeds: Vec<u64> = (0..g.usize_in(1, 4)).map(|i| seed ^ (i as u64)).collect();
+        let (lanes, _) =
+            masked::generate_batch_adaptive(&o, solver, ctl.clone(), 1e-3, &seeds);
+        for (b, (toks, stats)) in lanes.iter().enumerate() {
+            prop_assert!(
+                stats.nfe <= budget,
+                "batch lane {b} overdrew: {} > {budget}",
+                stats.nfe
+            );
+            prop_assert!(toks.iter().all(|&t| t < 5), "batch lane {b} masks left");
+        }
+
+        // Toy family: no terminal denoise, reserve 0.
+        let toy_cfg = AdaptiveController::for_span(tol, model.horizon, 1e-3);
+        let toy_ctl = StepController::new(toy_cfg, 0.5).with_budget(NfeBudget {
+            total: budget,
+            nfe_per_step: 2,
+            reserve: 0,
+        });
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let (x, stats, _) = toy::generate_adaptive(&model, solver, toy_ctl, 1e-3, &mut rng);
+        prop_assert!(x < model.n_states(), "bad toy state");
+        prop_assert!(stats.nfe <= budget, "toy overdrew: {} > {budget}", stats.nfe);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batch_adaptive_bit_identical_to_per_lane_replay() {
+    // (c): lanes stepping a shared adaptive schedule in lock-step are
+    // bit-identical to independent per-lane generate calls over the
+    // realized grid, and a 1-lane batch realizes the single-lane schedule.
+    let o = oracle(5, 18, 31);
+    check("batch_adaptive_equivalence", 20, |g| {
+        let solver = theta_solver(g);
+        let tol = *g.choose(&[1e-4, 1e-3, 1e-2]);
+        let b = g.usize_in(1, 5);
+        let seeds: Vec<u64> = (0..b).map(|_| g.usize_in(0, 1 << 20) as u64).collect();
+        let cfg = AdaptiveController::for_span(tol, 1.0, 1e-3);
+        let dt0 = g.f64_in(0.01, 0.2);
+        let ctl = StepController::new(cfg, dt0);
+
+        let (lanes, trace) =
+            masked::generate_batch_adaptive(&o, solver, ctl.clone(), 1e-3, &seeds);
+        prop_assert!(lanes.len() == b, "lane count");
+        prop_assert!(grid::is_valid_grid(&trace.grid), "invalid realized grid");
+        for (i, ((toks, stats), &seed)) in lanes.iter().zip(&seeds).enumerate() {
+            let mut rng = Xoshiro256::seed_from_u64(seed);
+            let (want, wstats) = masked::generate(&o, solver, &trace.grid, &mut rng);
+            prop_assert!(toks == &want, "lane {i} tokens diverged ({})", solver.name());
+            prop_assert!(
+                stats.nfe == wstats.nfe && stats.steps == wstats.steps,
+                "lane {i} stats diverged: ({}, {}) vs ({}, {})",
+                stats.nfe,
+                stats.steps,
+                wstats.nfe,
+                wstats.steps
+            );
+        }
+
+        // Single lane: batch vote == single-lane controller, same schedule.
+        let mut rng = Xoshiro256::seed_from_u64(seeds[0]);
+        let (stoks, _, strace) =
+            masked::generate_adaptive(&o, solver, ctl.clone(), 1e-3, &mut rng);
+        if b == 1 {
+            prop_assert!(strace.grid == trace.grid, "1-lane schedule diverged");
+            prop_assert!(stoks == lanes[0].0, "1-lane tokens diverged");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_toy_adaptive_replay_is_bitwise() {
+    // Toy counterpart of (c): replaying toy::generate over the realized
+    // grid with the same stream reproduces the adaptive sample exactly.
+    let mut mrng = Xoshiro256::seed_from_u64(9);
+    let model = ToyModel::paper_default(&mut mrng);
+    check("toy_adaptive_replay", 30, |g| {
+        let solver = theta_solver(g);
+        let tol = *g.choose(&[1e-4, 1e-3, 1e-2]);
+        let seed = g.usize_in(0, 1 << 20) as u64;
+        let cfg = AdaptiveController::for_span(tol, model.horizon, 1e-3);
+        let ctl = StepController::new(cfg, g.f64_in(0.05, 2.0));
+        let mut ra = Xoshiro256::seed_from_u64(seed);
+        let (x, stats, trace) = toy::generate_adaptive(&model, solver, ctl, 1e-3, &mut ra);
+        prop_assert!(grid::is_valid_grid(&trace.grid), "invalid realized grid");
+        prop_assert!(stats.nfe == 2 * stats.steps, "toy NFE accounting");
+        prop_assert!(
+            stats.steps == trace.grid.len() - 1,
+            "trace length mismatch"
+        );
+        let mut rf = Xoshiro256::seed_from_u64(seed);
+        let want = toy::generate(&model, solver, &trace.grid, &mut rf);
+        prop_assert!(x == want, "toy replay diverged for {}", solver.name());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_adaptive_error_control_refines_where_needed() {
+    // Sanity on the controller semantics: a tighter tolerance never takes
+    // coarser schedules (more steps, monotone in tol) and realized grids
+    // are strictly decreasing.
+    let o = oracle(6, 16, 47);
+    check("tolerance_monotone", 10, |g| {
+        let solver = Solver::Trapezoidal { theta: 0.5 };
+        let seed = g.usize_in(0, 1 << 16) as u64;
+        let mut steps_prev = 0usize;
+        for &tol in &[1e-1, 1e-3, 1e-5] {
+            let cfg = AdaptiveController::for_span(tol, 1.0, 1e-3);
+            let ctl = StepController::new(cfg, 0.1);
+            let mut rng = Xoshiro256::seed_from_u64(seed);
+            let (_, stats, trace) =
+                masked::generate_adaptive(&o, solver, ctl, 1e-3, &mut rng);
+            prop_assert!(grid::is_valid_grid(&trace.grid), "invalid grid at {tol}");
+            prop_assert!(
+                stats.steps + 2 >= steps_prev,
+                "tighter tol took far fewer steps: {} after {}",
+                stats.steps,
+                steps_prev
+            );
+            steps_prev = stats.steps;
+        }
+        Ok(())
+    });
+}

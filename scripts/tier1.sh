@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
 # Tier-1 verification in one command (see ROADMAP.md):
-#   build + full test suite + a bench smoke run that refreshes
-#   BENCH_solvers.json so the perf trajectory is tracked across PRs.
+#   build + full test suite + bench smoke runs that refresh
+#   BENCH_solvers.json (per-step perf) and BENCH_schedules.json
+#   (KL/NFE for fixed vs adaptive vs tuned grids) so both trajectories
+#   are tracked across PRs.
 #
 # Usage: scripts/tier1.sh [--no-bench]
 set -euo pipefail
@@ -12,6 +14,7 @@ cargo test -q
 
 if [[ "${1:-}" != "--no-bench" ]]; then
     cargo bench --bench solver_steps -- --quick
+    cargo bench --bench schedules -- --quick
 fi
 
 echo "tier-1 OK"

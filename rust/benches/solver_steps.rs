@@ -163,6 +163,83 @@ fn main() {
         report.push(&r, 1.0);
     }
 
+    // --- kernel dispatch overhead: enum shim vs direct Driver::run ------
+    // The `generate NFE=64 ...` rows above go through the Solver-enum shim
+    // (one match + validation per call); these rows call the monomorphised
+    // driver with a concrete kernel directly.  Equal numbers (±2%) prove
+    // the kernel/driver trait factoring costs nothing on the hot path.
+    {
+        use fastdds::solvers::driver::{run_single, Schedule};
+        use fastdds::solvers::kernel::{
+            EulerKernel, MaskedFamily, PdKernel, Rk2Kernel, TauLeapingKernel,
+            TrapezoidalKernel, TweedieKernel,
+        };
+        // Deliberate (small) duplicate of the crate-private
+        // `kernel::dispatch_masked_kernel!`: benches are an external crate
+        // and the point here is selecting the kernel OUTSIDE the timed
+        // closure.  A scheme added to the crate macro should be added here
+        // too so its dispatch-overhead row keeps appearing.
+        macro_rules! with_kernel {
+            ($solver:expr, $k:ident => $body:expr) => {
+                match $solver {
+                    Solver::Euler => {
+                        let $k = EulerKernel;
+                        $body
+                    }
+                    Solver::TauLeaping => {
+                        let $k = TauLeapingKernel;
+                        $body
+                    }
+                    Solver::Tweedie => {
+                        let $k = TweedieKernel;
+                        $body
+                    }
+                    Solver::Trapezoidal { theta } => {
+                        let $k = TrapezoidalKernel::new(theta);
+                        $body
+                    }
+                    Solver::Rk2 { theta } => {
+                        let $k = Rk2Kernel::new(theta);
+                        $body
+                    }
+                    Solver::ParallelDecoding => {
+                        let $k = PdKernel;
+                        $body
+                    }
+                    Solver::Exact => unreachable!("exact is not a per-window kernel"),
+                }
+            };
+        }
+        for solver in solvers {
+            let g = grid::masked_uniform(solver.steps_for_nfe(64), 1e-3);
+            let mut rng = Xoshiro256::seed_from_u64(2);
+            let r = with_kernel!(solver, k => bench(
+                &format!("driver_direct NFE=64 {:15}", solver.name()),
+                warm_g,
+                it_g,
+                || {
+                    black_box(run_single::<MaskedFamily<MarkovOracle>, _, _>(
+                        &oracle,
+                        &k,
+                        Schedule::Fixed(&g),
+                        &mut rng,
+                    ));
+                },
+            ));
+            report.push(&r, 1.0);
+        }
+    }
+
+    // --- exact simulation through the shim (realized-NFE cost unit) -----
+    {
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let g = grid::masked_uniform(64, 1e-3);
+        let r = bench("generate exact (fhs) L=256", warm_g, it_g, || {
+            black_box(masked::generate(&oracle, Solver::Exact, &g, &mut rng));
+        });
+        report.push(&r, 1.0);
+    }
+
     // --- batched lane-parallel generation (B lanes per iteration) -------
     let b = 8usize;
     let seeds: Vec<u64> = (0..b as u64).map(|i| 1000 + i * 7919).collect();

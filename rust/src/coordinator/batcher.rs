@@ -48,6 +48,7 @@ impl BatchKey {
             Solver::Trapezoidal { theta } => (3, theta),
             Solver::Rk2 { theta } => (4, theta),
             Solver::ParallelDecoding => (5, 0.0),
+            Solver::Exact => (6, 0.0),
         };
         let (schedule_kind, schedule_bits) = req.schedule.key_bits();
         BatchKey {

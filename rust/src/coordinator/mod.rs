@@ -81,6 +81,18 @@ impl Coordinator {
         registry: Registry,
         policy: BatchPolicy,
     ) -> Coordinator {
+        Coordinator::start_with_schedule_dir(runtime, registry, policy, None)
+    }
+
+    /// As [`Coordinator::start`], with tuned schedules persisted under
+    /// `schedule_dir`: fits flush to disk on insert and reload on start, so
+    /// a restart never re-pays the pilot runs ([`ScheduleCache`]).
+    pub fn start_with_schedule_dir(
+        runtime: RuntimeHandle,
+        registry: Registry,
+        policy: BatchPolicy,
+        schedule_dir: Option<&str>,
+    ) -> Coordinator {
         // Batch capacity = the max artifact batch across families.
         let max_lanes = registry
             .by_family("markov")
@@ -92,7 +104,7 @@ impl Coordinator {
             runtime,
             registry,
             scores: BTreeMap::new(),
-            schedules: ScheduleCache::new(),
+            schedules: ScheduleCache::with_dir(schedule_dir),
         };
         Coordinator::spawn(backend, policy, max_lanes)
     }
@@ -105,8 +117,19 @@ impl Coordinator {
         policy: BatchPolicy,
         max_lanes: usize,
     ) -> Coordinator {
+        Coordinator::start_local_with_schedule_dir(score, policy, max_lanes, None)
+    }
+
+    /// As [`Coordinator::start_local`], with tuned schedules persisted
+    /// under `schedule_dir` across restarts.
+    pub fn start_local_with_schedule_dir(
+        score: Arc<dyn ScoreSource>,
+        policy: BatchPolicy,
+        max_lanes: usize,
+        schedule_dir: Option<&str>,
+    ) -> Coordinator {
         Coordinator::spawn(
-            Backend::Local { score, schedules: ScheduleCache::new() },
+            Backend::Local { score, schedules: ScheduleCache::with_dir(schedule_dir) },
             policy,
             max_lanes.max(1),
         )
@@ -372,6 +395,79 @@ mod tests {
         let resp = c.generate(r).unwrap();
         assert!(resp.sequences[0].iter().all(|&t| t < 6));
         c.shutdown();
+    }
+
+    #[test]
+    fn local_backend_serves_exact_solver() {
+        // Solver::Exact dispatches through batcher -> scheduler like any
+        // approximate scheme; nfe_used echoes the realized jump count.
+        let oracle = local_oracle(6, 20);
+        let c = Coordinator::start_local(oracle.clone(), BatchPolicy::Greedy, 8);
+        let resp = c.generate(req(1, Solver::Exact, 16, 3, 11)).unwrap();
+        assert_eq!(resp.sequences.len(), 3);
+        for s in &resp.sequences {
+            assert_eq!(s.len(), 20);
+            assert!(s.iter().all(|&t| t < 6), "masks left: {s:?}");
+        }
+        // Realized NFE: <= one eval per dim + one finalize, independent of
+        // the requested planning budget.
+        assert!(resp.nfe_used >= 1 && resp.nfe_used <= 21, "nfe={}", resp.nfe_used);
+
+        // Same seed -> identical samples (per-lane seeded fhs streams).
+        let again = c.generate(req(2, Solver::Exact, 16, 3, 11)).unwrap();
+        assert_eq!(again.sequences, resp.sequences);
+
+        // Exact + hard budget is a clean error and the thread survives.
+        let mut r = req(3, Solver::Exact, 16, 1, 0);
+        r.nfe_budget = Some(8);
+        assert!(c.generate(r).is_err());
+        let ok = c.generate(req(4, Solver::Exact, 16, 1, 5)).unwrap();
+        assert_eq!(ok.sequences.len(), 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn local_backend_persists_tuned_schedules_across_restart() {
+        let dir = std::env::temp_dir().join(format!(
+            "fastdds_coord_sched_{}",
+            std::process::id()
+        ));
+        let dir = dir.to_str().unwrap().to_string();
+        let _ = std::fs::remove_dir_all(&dir);
+        let solver = Solver::Trapezoidal { theta: 0.5 };
+
+        let mut r = req(1, solver, 16, 2, 9);
+        r.schedule = ScheduleSpec::Tuned { steps: 8 };
+        let first = {
+            let oracle = local_oracle(6, 20);
+            let c = Coordinator::start_local_with_schedule_dir(
+                oracle,
+                BatchPolicy::Greedy,
+                8,
+                Some(&dir),
+            );
+            let resp = c.generate(r.clone()).unwrap();
+            c.shutdown();
+            resp.sequences
+        };
+        // The fit must have been flushed to disk.
+        let files: Vec<_> = std::fs::read_dir(&dir).unwrap().flatten().collect();
+        assert!(!files.is_empty(), "tuned schedule not flushed to {dir:?}");
+
+        // Restarted coordinator (same oracle construction): the reloaded
+        // grid reproduces the samples exactly.
+        let oracle = local_oracle(6, 20);
+        let c = Coordinator::start_local_with_schedule_dir(
+            oracle,
+            BatchPolicy::Greedy,
+            8,
+            Some(&dir),
+        );
+        r.id = 2;
+        let resp = c.generate(r).unwrap();
+        assert_eq!(resp.sequences, first, "reloaded tuned grid must replay");
+        c.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -44,10 +44,19 @@ pub struct BatchResult {
 fn validate_request(req: &GenerateRequest) -> Result<()> {
     match req.solver {
         Solver::Trapezoidal { theta } if !(theta > 0.0 && theta < 1.0) => {
-            bail!("trapezoidal theta {theta} outside (0,1)");
+            bail!("trapezoidal theta {theta} outside (0, 1) — second-order range of Thm. 5.4");
         }
-        Solver::Rk2 { theta } if !(theta > 0.0 && theta <= 1.0) => {
-            bail!("rk2 theta {theta} outside (0,1]");
+        // Request surfaces enforce the second-order range of Thm. 5.5
+        // (experiment harnesses sweeping θ past 1/2 construct the enum
+        // directly and bypass the serving stack).
+        Solver::Rk2 { theta } if !(theta > 0.0 && theta <= 0.5) => {
+            bail!("rk2 theta {theta} outside (0, 1/2] — second-order range of Thm. 5.5");
+        }
+        Solver::Exact if req.nfe_budget.is_some() => {
+            bail!(
+                "exact simulation cannot honor a hard nfe_budget: its NFE is the \
+                 realized jump count (use an approximate scheme to cap spend)"
+            );
         }
         _ => {}
     }
@@ -107,7 +116,10 @@ fn fixed_steps(req: &GenerateRequest) -> usize {
 }
 
 /// Run one packed batch through the solvers on a score source: one batched
-/// masked-sparse score call per stage, per-lane seeded RNG streams.  The
+/// masked-sparse score call per stage, per-lane seeded RNG streams.
+/// [`Solver::Exact`] runs the per-lane first-hitting sampler (nothing to
+/// co-batch — jump times are data-dependent) and reports the realized
+/// event count as the lane's NFE.  The
 /// request's schedule decides the discretisation: fixed grids (uniform /
 /// log / tuned) run [`masked::generate_batch`] and stay bit-identical to
 /// serving each lane alone; adaptive runs
@@ -184,6 +196,10 @@ pub fn artifact_name(family: &str, solver: Solver) -> String {
         Solver::Trapezoidal { .. } => "trapezoidal",
         Solver::Rk2 { .. } => "rk2",
         Solver::ParallelDecoding => "parallel",
+        // Exact simulation has no fused step graph (its jump times are
+        // data-dependent); it is servable only through the score-source
+        // paths, so this name can never resolve — by design.
+        Solver::Exact => "exact",
     };
     format!("{family}_step_{s}")
 }
@@ -439,6 +455,56 @@ mod tests {
         req.schedule = ScheduleSpec::Tuned { steps: MAX_TUNED_STEPS + 1 };
         let err = run_batch_scored(&oracle, &req, &[], &mut cache).unwrap_err();
         assert!(format!("{err:#}").contains("tuned steps"), "{err:#}");
+    }
+
+    #[test]
+    fn run_batch_scored_exact_matches_per_lane_fhs() {
+        use crate::score::markov::{MarkovChain, MarkovOracle};
+        let mut rng = Xoshiro256::seed_from_u64(29);
+        let oracle = MarkovOracle::new(MarkovChain::generate(&mut rng, 5, 0.5), 12);
+        let lanes = test_lanes(3);
+        let mut cache = ScheduleCache::new();
+        let result =
+            run_batch_scored(&oracle, &scored_req(Solver::Exact, 16), &lanes, &mut cache)
+                .unwrap();
+        assert_eq!(result.tokens.len(), 3);
+        for (k, lane) in lanes.iter().enumerate() {
+            let mut r = Xoshiro256::seed_from_u64(lane.seed);
+            let (toks, stats, _) = crate::solvers::masked::fhs_generate(&oracle, DELTA, &mut r);
+            assert_eq!(result.tokens[k], toks, "lane {k}");
+            assert_eq!(result.nfe[k], stats.nfe, "lane {k} realized NFE");
+            // Realized NFE: one eval per unmask event + at most one finalize.
+            assert!(result.nfe[k] >= 1 && result.nfe[k] <= 13, "lane {k}");
+        }
+
+        // Exact cannot promise a hard budget: clean error, no panic.
+        let mut req = scored_req(Solver::Exact, 16);
+        req.nfe_budget = Some(10);
+        let err = run_batch_scored(&oracle, &req, &[], &mut cache).unwrap_err();
+        assert!(format!("{err:#}").contains("exact"), "{err:#}");
+        // ... and neither adaptive nor tuned schedules apply to it.
+        let mut req = scored_req(Solver::Exact, 16);
+        req.schedule = ScheduleSpec::Adaptive { tol: 1e-3 };
+        assert!(run_batch_scored(&oracle, &req, &[], &mut cache).is_err());
+    }
+
+    #[test]
+    fn run_batch_scored_rejects_rk2_theta_past_half() {
+        use crate::score::markov::{MarkovChain, MarkovOracle};
+        let mut rng = Xoshiro256::seed_from_u64(31);
+        let oracle = MarkovOracle::new(MarkovChain::generate(&mut rng, 4, 0.5), 8);
+        let mut cache = ScheduleCache::new();
+        let err = run_batch_scored(&oracle, &scored_req(Solver::Rk2 { theta: 0.7 }, 16), &[], &mut cache)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("1/2"), "{err:#}");
+        // The boundary value is fine.
+        assert!(run_batch_scored(
+            &oracle,
+            &scored_req(Solver::Rk2 { theta: 0.5 }, 8),
+            &test_lanes(1),
+            &mut cache
+        )
+        .is_ok());
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Exact simulation by uniformization/thinning (Sec. 3.1 baseline).
+//! Exact simulation by uniformization/thinning (Sec. 3.1 baseline) —
+//! [`crate::solvers::Solver::Exact`]'s engine for the toy family.
 //!
 //! The backward process has time- and state-dependent intensities, so plain
 //! uniformization (constant dominating rate) is hopeless near the data end
@@ -9,6 +10,24 @@
 //! probability mu_tot(x, t) / B_w (thinning).  Every candidate costs one
 //! intensity evaluation — the NFE blow-up of Fig. 1 is exactly the candidate
 //! count growing as the bound diverges for t -> 0.
+//!
+//! ## Split total/vector evaluation
+//!
+//! The thinning ACCEPT test needs only the scalar total mu_tot(x, t); the
+//! full per-jump vector is needed only ON acceptance, to pick the jump.
+//! [`JumpProcess::total_intensity`] makes that split explicit: processes
+//! with a cheap closed-form total (the toy model: O(1) instead of an O(S)
+//! fill) answer the per-candidate test without materialising the vector,
+//! and the simulator back-fills the vector only for the (much rarer)
+//! accepted candidates.  For the HMM text process the total is irreducibly
+//! the same message pass that produces the vector, so its override returns
+//! the filled vector and nothing is recomputed — for that process the jump
+//! streams are bit-identical to the naive always-fill loop (pinned by
+//! `tests/golden_parity.rs`).  For the toy process the closed-form total
+//! equals the vector sum only up to floating-point rounding (asserted to
+//! 1e-12 below), so a borderline accept decision could in principle differ
+//! from the pre-refactor loop for a fixed seed; the toy sampler's
+//! correctness is pinned distributionally, not bitwise.
 
 use crate::util::dist::{categorical_f64, exponential};
 use crate::util::rng::Rng;
@@ -23,9 +42,20 @@ pub trait JumpProcess {
     /// Fill `out` with the intensities mu(nu, x) at forward time t.
     fn intensities(&self, x: &Self::State, t: f64, out: &mut [f64]);
 
+    /// Total intensity at (x, t) for the thinning accept test.  Returns
+    /// `(total, filled)`: `filled` says whether `scratch` now holds the
+    /// full per-jump vector (the default evaluates it; processes with a
+    /// cheaper closed-form total return `false` and skip the fill).
+    fn total_intensity(&self, x: &Self::State, t: f64, scratch: &mut [f64]) -> (f64, bool) {
+        self.intensities(x, t, scratch);
+        (scratch.iter().sum(), true)
+    }
+
     /// An upper bound on the TOTAL intensity over all states reachable
     /// within the forward-time window [t_lo, t_hi] (t_lo < t_hi).
-    fn total_bound(&self, x: &Self::State, t_lo: f64, t_hi: f64) -> f64;
+    /// `scratch` (length [`JumpProcess::n_jumps`]) is reusable workspace so
+    /// per-window bounds never allocate.
+    fn total_bound(&self, x: &Self::State, t_lo: f64, t_hi: f64, scratch: &mut [f64]) -> f64;
 
     /// Apply jump nu to the state.
     fn apply(&self, x: &mut Self::State, nu: usize);
@@ -65,7 +95,7 @@ pub fn simulate_backward<P: JumpProcess, R: Rng>(
     let mut t_hi = t_start;
     while t_hi > t_end {
         let t_lo = (t_hi * window_ratio).max(t_end);
-        let bound = proc.total_bound(&x, t_lo, t_hi).max(1e-12);
+        let bound = proc.total_bound(&x, t_lo, t_hi, &mut mu).max(1e-12);
         // Candidate events: Poisson process at rate `bound` on [t_lo, t_hi],
         // walked downward in forward time (forward time decreases along the
         // backward process).
@@ -75,15 +105,19 @@ pub fn simulate_backward<P: JumpProcess, R: Rng>(
             if t <= t_lo {
                 break;
             }
-            proc.intensities(&x, t, &mut mu);
+            // Accept test needs only the total; the vector is back-filled
+            // on acceptance when the cheap path skipped it.
+            let (tot, filled) = proc.total_intensity(&x, t, &mut mu);
             stats.nfe += 1;
             stats.candidates.push(t);
-            let tot: f64 = mu.iter().sum();
             debug_assert!(
                 tot <= bound * (1.0 + 1e-9),
                 "thinning bound violated: tot={tot} bound={bound}"
             );
             if rng.gen_f64() * bound < tot {
+                if !filled {
+                    proc.intensities(&x, t, &mut mu);
+                }
                 let nu = categorical_f64(rng, &mu);
                 proc.apply(&mut x, nu);
                 stats.jumps.push((t, nu));
@@ -114,7 +148,13 @@ impl JumpProcess for ToyJump<'_> {
         self.0.reverse_intensities(*x, t, out);
     }
 
-    fn total_bound(&self, _x: &usize, t_lo: f64, _t_hi: f64) -> f64 {
+    fn total_intensity(&self, x: &usize, t: f64, _scratch: &mut [f64]) -> (f64, bool) {
+        // Closed form (1 - p_t(x)) / (S p_t(x)): O(1) per candidate instead
+        // of the O(S) vector fill — the thinning loop's hot path.
+        (self.0.total_intensity(*x, t), false)
+    }
+
+    fn total_bound(&self, _x: &usize, t_lo: f64, _t_hi: f64, _scratch: &mut [f64]) -> f64 {
         // Total intensity (1 - p_t(x)) / (S p_t(x)) is decreasing in p_t(x)
         // and p_t(x) >= min_y p_{t_lo}(y) for t >= t_lo (marginals move
         // monotonically toward uniform), so the bound at the window's small
@@ -176,6 +216,25 @@ mod tests {
         assert!(nfe[1] > nfe[0], "nfe={nfe:?}");
         // Saturation: the last decade adds < 30% more evaluations.
         assert!((nfe[2] as f64) < nfe[1] as f64 * 1.3, "nfe={nfe:?}");
+    }
+
+    #[test]
+    fn split_total_matches_full_fill() {
+        // The cheap total must equal the vector sum at every (x, t) — the
+        // invariant that keeps the split-eval thinning loop exact.
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let model = ToyModel::paper_default(&mut rng);
+        let proc = ToyJump(&model);
+        let mut buf = vec![0.0; proc.n_jumps()];
+        for &t in &[0.05, 0.4, 2.0, 9.0] {
+            for x in 0..model.n_states() {
+                let (tot, filled) = proc.total_intensity(&x, t, &mut buf);
+                assert!(!filled, "toy total must use the closed form");
+                proc.intensities(&x, t, &mut buf);
+                let want: f64 = buf.iter().sum();
+                assert!((tot - want).abs() < 1e-12, "x={x} t={t}: {tot} vs {want}");
+            }
+        }
     }
 
     #[test]

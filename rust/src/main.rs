@@ -4,13 +4,17 @@
 //! fastdds exp <fig1|fig2|fig3|fig4|fig5|fig7|tab1|tab2|ablations|all> [--full]
 //! fastdds serve   [--addr 127.0.0.1:7878] [--policy greedy|timeout:<ms>]
 //!                 [--local] [--vocab 16] [--seq-len 32]
+//!                 [--schedule-dir tuned_schedules]
 //! fastdds client  [--addr ...] --solver trapezoidal:0.5 --nfe 64 [--n 4] [--seed 1]
 //!                 [--schedule adaptive:tol=1e-3] [--nfe-budget 48]
 //! fastdds info    [--artifacts artifacts]
 //! ```
 //!
 //! `serve --local` serves the exact Markov oracle in-process — every
-//! schedule variant works without PJRT or artifacts.
+//! schedule variant works without PJRT or artifacts.  `--schedule-dir`
+//! persists tuned schedules to disk so restarts never re-pay the pilot
+//! fits.  `client --solver exact` runs first-hitting exact simulation; the
+//! response's `nfe_used` is the realized jump count.
 
 use anyhow::{bail, Result};
 use fastdds::coordinator::{BatchPolicy, Coordinator};
@@ -110,6 +114,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let dir = args.get_str("artifacts", "artifacts");
     let addr = args.get_str("addr", "127.0.0.1:7878");
     let policy = parse_policy(&args.get_str("policy", "greedy"))?;
+    let schedule_dir = args.str_opt("schedule-dir");
     let coordinator = if args.flag("local") {
         // Explicitly requested in-process oracle backend: no artifacts
         // needed, all schedules (uniform/log/adaptive/tuned) available.
@@ -123,7 +128,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             seq_len,
         ));
         println!("serving local markov oracle (vocab {vocab}, seq_len {seq_len})");
-        Coordinator::start_local(oracle, policy, args.get_usize("max-lanes", 8)?)
+        Coordinator::start_local_with_schedule_dir(
+            oracle,
+            policy,
+            args.get_usize("max-lanes", 8)?,
+            schedule_dir,
+        )
     } else {
         let runtime = RuntimeHandle::spawn(&dir)?;
         let registry = Registry::load(&dir)?;
@@ -134,7 +144,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .map(|a| a.name.clone())
             .collect();
         runtime.preload(&names.iter().map(|s| s.as_str()).collect::<Vec<_>>())?;
-        Coordinator::start(runtime, registry, policy)
+        Coordinator::start_with_schedule_dir(runtime, registry, policy, schedule_dir)
     };
     let server = fastdds::server::Server::start(&addr, coordinator)?;
     println!("fastdds serving on {} (policy {:?})", server.addr, policy);

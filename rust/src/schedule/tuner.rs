@@ -65,6 +65,17 @@ impl TunedSchedule {
         self.grid.len() - 1
     }
 
+    /// The cache key this schedule answers (steps is implied by the grid).
+    pub fn key(&self) -> TuneKey {
+        TuneKey {
+            family: self.family.clone(),
+            vocab: self.vocab,
+            seq_len: self.seq_len,
+            solver: self.solver.clone(),
+            steps: self.steps(),
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("family", Json::from(self.family.as_str())),
@@ -209,9 +220,17 @@ impl TuneKey {
 /// Bounded: past [`ScheduleCache::MAX_ENTRIES`] distinct keys (solver θ
 /// and step count are client-controlled), new fits are served without
 /// being memoised instead of growing without bound.
+///
+/// With [`ScheduleCache::persistent`] the cache is disk-backed: every
+/// insert flushes the fitted grid to `<dir>/<key>.json` and a fresh cache
+/// reloads the directory on construction, so tuned schedules survive
+/// server restarts (a fit is paid once per key per *deployment*, not per
+/// process).
 #[derive(Default)]
 pub struct ScheduleCache {
     map: BTreeMap<TuneKey, Arc<TunedSchedule>>,
+    /// Flush-on-insert directory; `None` = in-memory only.
+    dir: Option<String>,
 }
 
 impl ScheduleCache {
@@ -221,11 +240,104 @@ impl ScheduleCache {
         Self::default()
     }
 
+    /// Disk-backed cache rooted at `dir` (created if missing): loads every
+    /// `*.json` tuned schedule already there, flushes each new fit on
+    /// insert.  Unreadable files are skipped with a warning — a corrupt
+    /// entry must never take the coordinator down.
+    pub fn persistent(dir: &str) -> Self {
+        let mut cache = ScheduleCache { map: BTreeMap::new(), dir: Some(dir.to_string()) };
+        if let Err(e) = std::fs::create_dir_all(dir) {
+            eprintln!("schedule cache: cannot create {dir:?}: {e}");
+            return cache;
+        }
+        let entries = match std::fs::read_dir(dir) {
+            Ok(entries) => entries,
+            Err(e) => {
+                eprintln!("schedule cache: cannot read {dir:?}: {e}");
+                return cache;
+            }
+        };
+        for entry in entries.flatten() {
+            let path = entry.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("json") {
+                continue;
+            }
+            let Some(p) = path.to_str() else { continue };
+            match TunedSchedule::load(p) {
+                Ok(ts) => {
+                    if cache.map.len() < Self::MAX_ENTRIES {
+                        cache.map.insert(ts.key(), Arc::new(ts));
+                    }
+                }
+                Err(e) => eprintln!("schedule cache: skipping {p:?}: {e:#}"),
+            }
+        }
+        cache
+    }
+
+    /// `persistent(dir)` when a directory is configured, `new()` otherwise.
+    pub fn with_dir(dir: Option<&str>) -> Self {
+        match dir {
+            Some(d) => Self::persistent(d),
+            None => Self::new(),
+        }
+    }
+
     pub fn get(&self, key: &TuneKey) -> Option<Arc<TunedSchedule>> {
         self.map.get(key).cloned()
     }
 
+    /// Stable file stem for a key.  Both `family` and the solver spec are
+    /// client-controlled strings, so every character outside
+    /// `[A-Za-z0-9._-]` is replaced with '_' — in particular '/' (and
+    /// therefore any `../` traversal) can never reach the filesystem path —
+    /// and the stem is length-capped.  A hash of the RAW key is appended so
+    /// distinct keys whose sanitized/truncated forms coincide (e.g. "a:b"
+    /// vs "a_b") can never overwrite each other's file.
+    fn file_stem(key: &TuneKey) -> String {
+        let clean = |s: &str| -> String {
+            s.chars()
+                .take(64)
+                .map(|c| {
+                    if c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-') {
+                        c
+                    } else {
+                        '_'
+                    }
+                })
+                .collect()
+        };
+        let raw = format!(
+            "{}\u{1f}{}\u{1f}{}\u{1f}{}\u{1f}{}",
+            key.family, key.vocab, key.seq_len, key.solver, key.steps
+        );
+        format!(
+            "{}-v{}-l{}-{}-s{}-{:016x}",
+            clean(&key.family),
+            key.vocab,
+            key.seq_len,
+            clean(&key.solver),
+            key.steps,
+            crate::testkit::fnv1a(&raw)
+        )
+    }
+
     pub fn insert(&mut self, key: TuneKey, sched: TunedSchedule) -> Arc<TunedSchedule> {
+        // Flush to disk ONLY when the entry is also memoised: the
+        // MAX_ENTRIES cap exists because solver θ / step counts are
+        // client-controlled, and the on-disk footprint must obey the same
+        // bound (otherwise a client looping over distinct θ values could
+        // grow the directory without limit).
+        if self.map.len() < Self::MAX_ENTRIES {
+            if let Some(dir) = &self.dir {
+                // Best effort — serving must not fail because the cache
+                // directory is read-only or full.
+                let path = format!("{dir}/{}.json", Self::file_stem(&key));
+                if let Err(e) = sched.save(&path) {
+                    eprintln!("schedule cache: cannot write {path:?}: {e:#}");
+                }
+            }
+        }
         let arc = Arc::new(sched);
         if self.map.len() < Self::MAX_ENTRIES {
             self.map.insert(key, Arc::clone(&arc));
@@ -330,6 +442,73 @@ mod tests {
         assert_eq!(back.grid, ts.grid);
         assert_eq!(back.family, "markov");
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn persistent_file_stem_sanitizes_client_strings() {
+        // `family` and the solver spec arrive verbatim from request JSON:
+        // no separator may survive into the on-disk path.
+        let key = TuneKey {
+            family: "../../home/user/evil".into(),
+            vocab: 4,
+            seq_len: 8,
+            solver: "trapezoidal:0.5".into(),
+            steps: 4,
+        };
+        let stem = ScheduleCache::file_stem(&key);
+        assert!(!stem.contains('/'), "{stem}");
+        assert!(!stem.contains('\\'), "{stem}");
+        assert!(!stem.contains(':'), "{stem}");
+
+        // Distinct raw keys whose sanitized forms coincide must still get
+        // distinct files (the appended raw-key hash disambiguates).
+        let mut a = key.clone();
+        a.family = "a:b".into();
+        let mut b = key.clone();
+        b.family = "a_b".into();
+        assert_ne!(ScheduleCache::file_stem(&a), ScheduleCache::file_stem(&b));
+    }
+
+    #[test]
+    fn persistent_cache_survives_restart() {
+        let o = oracle();
+        let solver = Solver::Trapezoidal { theta: 0.5 };
+        let dir = std::env::temp_dir().join(format!(
+            "fastdds_sched_cache_{}_{}",
+            std::process::id(),
+            7u32
+        ));
+        let dir = dir.to_str().unwrap().to_string();
+        let _ = std::fs::remove_dir_all(&dir);
+
+        // First process: fit once, flushed to disk on insert.
+        let mut fits = 0usize;
+        let key = TuneKey::new("markov", 6, 12, solver, 8);
+        let first = {
+            let mut cache = ScheduleCache::persistent(&dir);
+            assert!(cache.is_empty(), "fresh dir must load empty");
+            let ts = cache.get_or_fit(key.clone(), || {
+                fits += 1;
+                ScheduleTuner { pilots: 1, ..Default::default() }
+                    .fit_masked(&o, solver, 8, 1e-3, "markov")
+            });
+            ts.grid.clone()
+        };
+        assert_eq!(fits, 1);
+
+        // "Restart": a fresh cache over the same dir serves the fit from
+        // disk without refitting.
+        let mut cache = ScheduleCache::persistent(&dir);
+        assert_eq!(cache.len(), 1, "tuned grid must reload from disk");
+        let ts = cache.get_or_fit(key, || panic!("restart must not refit"));
+        assert_eq!(ts.grid, first);
+        assert_eq!(ts.steps(), 8);
+
+        // Corrupt entries are skipped, never fatal.
+        std::fs::write(format!("{dir}/garbage.json"), "{not json").unwrap();
+        let cache = ScheduleCache::persistent(&dir);
+        assert_eq!(cache.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -327,12 +327,19 @@ impl JumpProcess for UniformTextJump<'_> {
         self.oracle.intensities(x, t, out);
     }
 
-    fn total_bound(&self, x: &Vec<Tok>, t_lo: f64, _t_hi: f64) -> f64 {
+    fn total_intensity(&self, x: &Vec<Tok>, t: f64, scratch: &mut [f64]) -> (f64, bool) {
+        // The HMM total is irreducibly the same O(L·V²) message pass that
+        // produces the vector, so fill it and report it as such — the
+        // thinning loop then never re-evaluates on acceptance.
+        (self.oracle.intensities(x, t, scratch), true)
+    }
+
+    fn total_bound(&self, x: &Vec<Tok>, t_lo: f64, _t_hi: f64, scratch: &mut [f64]) -> f64 {
         // Intensities increase as t decreases (score ratios sharpen toward
         // the data law), so the window's small end dominates; `slack`
-        // covers the residual state dependence between jumps.
-        let mut buf = vec![0.0; self.n_jumps()];
-        let tot = self.oracle.intensities(x, t_lo, &mut buf);
+        // covers the residual state dependence between jumps.  `scratch` is
+        // the simulator's reusable buffer — no per-window allocation.
+        let tot = self.oracle.intensities(x, t_lo, scratch);
         tot * self.slack
     }
 

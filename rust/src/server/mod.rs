@@ -10,6 +10,10 @@
 //! `schedule` (optional, default "uniform": uniform|log|adaptive[:tol=..]|
 //! tuned[:steps=..]) selects the time discretisation; `nfe_budget`
 //! (optional) is a hard per-sample NFE cap.  Both are echoed back.
+//! `solver` accepts every approximate scheme plus `"exact"` (first-hitting
+//! simulation; `nfe_used` then reports the realized jump count and
+//! `nfe_budget` is rejected).  θ-solvers are validated at parse time:
+//! trapezoidal needs θ in (0, 1), rk2 needs θ in (0, 1/2].
 //!   -> {"cmd": "metrics"}        <- {"ok": true, "report": "..."}
 //!   -> {"cmd": "ping"}           <- {"ok": true}
 //! Errors: {"ok": false, "error": "..."}.  One thread per connection.
@@ -197,6 +201,44 @@ mod tests {
             .raw(r#"{"cmd": "generate", "solver": "tau", "nfe": 8, "schedule": "warp"}"#)
             .unwrap();
         assert_eq!(r.get("ok").unwrap().as_bool().unwrap(), false);
+        assert!(c.ping().unwrap());
+        srv.stop();
+    }
+
+    #[test]
+    fn exact_solver_roundtrips_over_tcp() {
+        let srv = local_server();
+        let mut c = Client::connect(&srv.addr.to_string()).unwrap();
+        let r = c
+            .raw(r#"{"cmd": "generate", "solver": "exact", "nfe": 16, "n_samples": 2, "seed": 3}"#)
+            .unwrap();
+        assert_eq!(r.get("ok").unwrap().as_bool().unwrap(), true, "{r:?}");
+        let seqs = r.get("sequences").unwrap().as_arr().unwrap().to_vec();
+        assert_eq!(seqs.len(), 2);
+        for s in &seqs {
+            let toks = s.as_arr().unwrap();
+            assert_eq!(toks.len(), 16);
+            assert!(toks.iter().all(|t| (t.as_f64().unwrap() as usize) < 6));
+        }
+        // Realized-NFE echo: one eval per unmask event + at most one
+        // finalize on a 16-dim oracle.
+        let nfe_used = r.get("nfe_used").unwrap().as_usize().unwrap();
+        assert!(nfe_used >= 1 && nfe_used <= 17, "nfe_used={nfe_used}");
+
+        // exact + nfe_budget is a protocol error, not a dead connection.
+        let r = c
+            .raw(r#"{"cmd": "generate", "solver": "exact", "nfe": 16, "nfe_budget": 8}"#)
+            .unwrap();
+        assert_eq!(r.get("ok").unwrap().as_bool().unwrap(), false);
+        // θ outside the second-order range errors at parse time.
+        let r = c
+            .raw(r#"{"cmd": "generate", "solver": "rk2:0.8", "nfe": 16}"#)
+            .unwrap();
+        assert_eq!(r.get("ok").unwrap().as_bool().unwrap(), false);
+        assert!(
+            r.get("error").unwrap().as_str().unwrap().contains("theta"),
+            "{r:?}"
+        );
         assert!(c.ping().unwrap());
         srv.stop();
     }

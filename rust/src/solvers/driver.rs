@@ -1,0 +1,272 @@
+//! The one generic driver behind every sampler entry point.
+//!
+//! Everything the pre-refactor drivers copy-pasted lives here exactly once:
+//!
+//! - the **fixed-grid** window loop and the **adaptive** loop (a
+//!   [`StepController`] proposing each dt from the kernel's embedded error
+//!   estimate, optionally under a hard NFE budget);
+//! - **lock-step batch lanes** with one batched score call per stage and
+//!   shared-dt **voting** (the controller observes the worst per-lane
+//!   estimate, so the schedule is as fine as the most demanding lane
+//!   requires);
+//! - NFE / [`GenStats`] accounting and RNG stream discipline (lane b of a
+//!   batch draws from `Xoshiro256::seed_from_u64(seeds[b])` and is
+//!   bit-identical to an independent single-lane run).
+//!
+//! `solvers::masked::generate{,_batch,_adaptive,_batch_adaptive}` and
+//! `solvers::toy::{step, generate, generate_adaptive}` are thin shims over
+//! [`run_single`] / [`run_batch`]; exact simulation routes through
+//! [`StateFamily::exact`] instead (it owns its own jump times, so it is not
+//! a per-window kernel).
+//!
+//! Single-lane and batch runs share the same per-window kernel calls but
+//! keep separate eval plumbing on purpose: a single lane evaluates through
+//! `StateFamily::eval` (the old `probs_masked_into` path, caller-supplied
+//! RNG of any type), a batch through `StateFamily::eval_batch` (one
+//! `probs_masked_batch` call per stage, lane-owned seeded streams) — this
+//! preserves the exact evaluation pattern, and therefore bitwise outputs,
+//! of both pre-refactor paths.
+
+use crate::schedule::adaptive::{AdaptiveTrace, StepController};
+use crate::solvers::kernel::{LaneCore, SolverKernel, Stage, StateFamily, StepMeta};
+use crate::solvers::GenStats;
+use crate::util::rng::{Rng, Xoshiro256};
+use crate::util::threadpool::{par_zip_mut2, ThreadPool};
+
+/// How the driver discretises time: a caller-supplied fixed grid of
+/// strictly decreasing forward times, or online error control down to δ.
+pub enum Schedule<'a> {
+    Fixed(&'a [f64]),
+    Adaptive { ctl: StepController, delta: f64 },
+}
+
+/// Advance one lane through one window (all stages + accounting).  Public
+/// so `toy::step` can expose the single-window form and benches can drive
+/// kernels directly.
+pub fn step_once<F: StateFamily, K: SolverKernel<F>, R: Rng>(
+    ctx: &F::Ctx,
+    kernel: &K,
+    meta: &StepMeta,
+    lane: &mut F::Lane,
+    sc: &mut F::Scratch,
+    stats: &mut GenStats,
+    rng: &mut R,
+) {
+    step_single(ctx, kernel, meta, lane, sc, stats, rng, None);
+}
+
+/// One window for one lane; `err_out` (adaptive runs) receives the
+/// embedded error estimate, read between the stage-2 evaluation and the
+/// stage-2 apply.
+#[allow(clippy::too_many_arguments)]
+fn step_single<F: StateFamily, K: SolverKernel<F>, R: Rng>(
+    ctx: &F::Ctx,
+    kernel: &K,
+    meta: &StepMeta,
+    lane: &mut F::Lane,
+    sc: &mut F::Scratch,
+    stats: &mut GenStats,
+    rng: &mut R,
+    err_out: Option<&mut f64>,
+) {
+    if kernel.wants_stage1(lane, meta) {
+        F::eval(ctx, lane, sc, kernel.eval_time(meta.t, meta), Stage::One);
+        kernel.stage1(ctx, meta, lane, sc, stats, rng);
+        if kernel.stages() == 2 {
+            if kernel.wants_stage2(lane) {
+                F::eval(ctx, lane, sc, kernel.stage2_time(meta.t, meta.t_next), Stage::Two);
+            }
+            if let Some(err) = err_out {
+                *err = kernel.step_error(ctx, meta, lane, sc);
+            }
+            kernel.stage2(ctx, meta, lane, sc, stats, rng);
+        }
+    }
+    if !kernel.counts_own_steps() {
+        stats.steps += 1;
+    }
+}
+
+/// One window for a lock-step batch: one batched score call per stage, the
+/// per-lane applies fanned across the threadpool with deterministic lane
+/// chunking.  Returns the worst per-lane error estimate when `want_err`.
+fn step_batch<F: StateFamily, K: SolverKernel<F> + Sync>(
+    ctx: &F::Ctx,
+    kernel: &K,
+    meta: &StepMeta,
+    lanes: &mut [LaneCore<F>],
+    bufs: &mut [F::Scratch],
+    threads: usize,
+    want_err: bool,
+) -> f64 {
+    F::eval_batch(
+        ctx,
+        &*lanes,
+        &mut *bufs,
+        |lane| kernel.wants_stage1(lane, meta),
+        kernel.eval_time(meta.t, meta),
+        Stage::One,
+    );
+    par_zip_mut2(&mut *lanes, &mut *bufs, threads, |_, lc, sc| {
+        if kernel.wants_stage1(&lc.state, meta) {
+            kernel.stage1(ctx, meta, &mut lc.state, sc, &mut lc.stats, &mut lc.rng);
+        }
+    });
+    let mut err = 0.0f64;
+    if kernel.stages() == 2 {
+        let rho = kernel.stage2_time(meta.t, meta.t_next);
+        F::eval_batch(ctx, &*lanes, &mut *bufs, |lane| kernel.wants_stage2(lane), rho, Stage::Two);
+        if want_err {
+            // The dt vote: worst estimated error across lanes, read before
+            // stage 2 consumes the stage buffers.
+            for (lc, sc) in lanes.iter().zip(bufs.iter()) {
+                if F::lane_active(&lc.state) {
+                    err = err.max(kernel.step_error(ctx, meta, &lc.state, sc));
+                }
+            }
+        }
+        // Stage 2 runs wherever stage 1 ran this window.  Two-stage kernels
+        // never shrink the active set during stage 1, so a still-active lane
+        // is exactly that condition — and the RK-2 combine must run even
+        // with an empty stage-2 subset (μ* = 0 everywhere).
+        par_zip_mut2(&mut *lanes, &mut *bufs, threads, |_, lc, sc| {
+            if F::lane_active(&lc.state) {
+                kernel.stage2(ctx, meta, &mut lc.state, sc, &mut lc.stats, &mut lc.rng);
+            }
+        });
+    }
+    if !kernel.counts_own_steps() {
+        for lc in lanes.iter_mut() {
+            lc.stats.steps += 1;
+        }
+    }
+    err
+}
+
+/// Run one lane over the whole backward pass.  Fixed grids return an empty
+/// trace; adaptive runs return the realized [`AdaptiveTrace`] — replaying
+/// the same kernel over `trace.grid` with the same RNG stream reproduces
+/// the output bit for bit (the estimator draws no randomness).
+pub fn run_single<F: StateFamily, K: SolverKernel<F>, R: Rng>(
+    ctx: &F::Ctx,
+    kernel: &K,
+    schedule: Schedule<'_>,
+    rng: &mut R,
+) -> (F::Out, GenStats, AdaptiveTrace) {
+    let mut lane = F::init_lane(ctx, rng);
+    let mut sc = F::new_scratch(ctx);
+    let mut stats = GenStats::default();
+    match schedule {
+        Schedule::Fixed(grid) => {
+            assert!(crate::schedule::grid::is_valid_grid(grid), "invalid time grid");
+            let n_steps = grid.len() - 1;
+            for (i, w) in grid.windows(2).enumerate() {
+                let meta = StepMeta { t: w[0], t_next: w[1], step_idx: i, n_steps: Some(n_steps) };
+                step_single(ctx, kernel, &meta, &mut lane, &mut sc, &mut stats, rng, None);
+            }
+            F::finalize(ctx, *grid.last().unwrap(), &mut lane, &mut sc, &mut stats, rng);
+            (F::into_out(lane), stats, AdaptiveTrace::default())
+        }
+        Schedule::Adaptive { mut ctl, delta } => {
+            let mut t = F::start_time(ctx);
+            let mut trace = AdaptiveTrace { grid: vec![t], errors: Vec::new() };
+            let mut i = 0usize;
+            while let Some(dt) = ctl.propose_dt(t, delta, stats.nfe) {
+                let t_next = if dt >= t - delta { delta } else { t - dt };
+                let meta = StepMeta { t, t_next, step_idx: i, n_steps: None };
+                let mut err = 0.0f64;
+                step_single(
+                    ctx,
+                    kernel,
+                    &meta,
+                    &mut lane,
+                    &mut sc,
+                    &mut stats,
+                    rng,
+                    Some(&mut err),
+                );
+                trace.grid.push(t_next);
+                trace.errors.push(err);
+                ctl.observe(err);
+                t = t_next;
+                i += 1;
+                if !F::lane_active(&lane) {
+                    break;
+                }
+            }
+            F::finalize(ctx, t, &mut lane, &mut sc, &mut stats, rng);
+            (F::into_out(lane), stats, trace)
+        }
+    }
+}
+
+/// Run B lanes in lock-step.  Lane b is seeded with
+/// `Xoshiro256::seed_from_u64(seeds[b])` and its output is bit-identical to
+/// the single-lane run with that stream — co-batching never changes samples
+/// on fixed grids (property-tested).  Adaptive batches share ONE schedule:
+/// the lanes vote (worst error estimate; under an NFE budget, the maximum
+/// spend), which is the documented trade-off of shared online control.
+pub fn run_batch<F: StateFamily, K: SolverKernel<F> + Sync>(
+    ctx: &F::Ctx,
+    kernel: &K,
+    schedule: Schedule<'_>,
+    seeds: &[u64],
+) -> (Vec<(F::Out, GenStats)>, AdaptiveTrace) {
+    if seeds.is_empty() {
+        return (Vec::new(), AdaptiveTrace::default());
+    }
+    let threads = ThreadPool::default_size().min(seeds.len());
+    let mut lanes: Vec<LaneCore<F>> = seeds
+        .iter()
+        .map(|&s| {
+            let mut rng = Xoshiro256::seed_from_u64(s);
+            let state = F::init_lane(ctx, &mut rng);
+            LaneCore { state, rng, stats: GenStats::default() }
+        })
+        .collect();
+    let mut bufs: Vec<F::Scratch> = seeds.iter().map(|_| F::new_scratch(ctx)).collect();
+    let mut trace = AdaptiveTrace::default();
+
+    match schedule {
+        Schedule::Fixed(grid) => {
+            assert!(crate::schedule::grid::is_valid_grid(grid), "invalid time grid");
+            let n_steps = grid.len() - 1;
+            for (i, w) in grid.windows(2).enumerate() {
+                let meta = StepMeta { t: w[0], t_next: w[1], step_idx: i, n_steps: Some(n_steps) };
+                step_batch(ctx, kernel, &meta, &mut lanes, &mut bufs, threads, false);
+            }
+            F::finalize_batch(ctx, &mut lanes, &mut bufs, *grid.last().unwrap(), threads);
+        }
+        Schedule::Adaptive { mut ctl, delta } => {
+            let mut t = F::start_time(ctx);
+            trace.grid.push(t);
+            let mut i = 0usize;
+            loop {
+                // Under a budget, the vote uses the maximum spend across
+                // lanes, so no lane can overdraw.
+                let spent = lanes.iter().map(|l| l.stats.nfe).max().unwrap_or(0);
+                let Some(dt) = ctl.propose_dt(t, delta, spent) else { break };
+                let t_next = if dt >= t - delta { delta } else { t - dt };
+                let meta = StepMeta { t, t_next, step_idx: i, n_steps: None };
+                let err = step_batch(ctx, kernel, &meta, &mut lanes, &mut bufs, threads, true);
+                trace.grid.push(t_next);
+                trace.errors.push(err);
+                ctl.observe(err);
+                t = t_next;
+                i += 1;
+                if lanes.iter().all(|l| !F::lane_active(&l.state)) {
+                    break;
+                }
+            }
+            F::finalize_batch(ctx, &mut lanes, &mut bufs, t, threads);
+        }
+    }
+
+    (
+        lanes
+            .into_iter()
+            .map(|l| (F::into_out(l.state), l.stats))
+            .collect(),
+        trace,
+    )
+}

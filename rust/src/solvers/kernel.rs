@@ -1,0 +1,1319 @@
+//! Solver kernels and state families — the per-step math of every scheme,
+//! factored out of the drivers.
+//!
+//! The paper's schemes are all instances of one pattern: a predictor stage
+//! evaluated at the window start `t`, an optional corrector stage evaluated
+//! at the θ-section point ρ = t − θΔ, and a per-dimension jump-probability
+//! gate deciding which dimensions move.  A [`SolverKernel`] encapsulates
+//! exactly that math for one scheme — including the embedded error estimate
+//! the adaptive controller reads off the kernel's own stage buffers — and a
+//! [`StateFamily`] abstracts what a *lane* of state is:
+//!
+//! - [`MaskedFamily`]: a token sequence under absorbing-state diffusion,
+//!   with the sorted shrinking active-index list, masked-sparse score
+//!   evaluation through [`ScoreSource`], and the shared terminal denoise;
+//! - [`ToyFamily`]: the Sec. 6.1 single-variable uniform CTMC with the
+//!   analytic score.
+//!
+//! The same kernel struct implements the trait once per family (e.g.
+//! [`TrapezoidalKernel`] is Alg. 2 for both), so the per-scheme math exists
+//! in exactly one place per family and `driver::run_*` is the only loop.
+//! Exact simulation (first-hitting for masked, uniformization for toy) is
+//! not a per-window kernel: it owns its jump times, so it lives on the
+//! family as [`StateFamily::exact`].
+//!
+//! Every kernel body here is a verbatim transplant of the pre-refactor
+//! per-step code (`solvers/masked.rs` / `solvers/toy.rs`): RNG draw order
+//! and floating-point operation order are unchanged, which is what the
+//! golden parity suite (`tests/golden_parity.rs`) pins bit for bit.
+
+use std::marker::PhantomData;
+
+use crate::ctmc::ToyModel;
+use crate::schedule::adaptive::{rk2_gate_discrepancy, trap_gate_discrepancy};
+use crate::score::{ScoreSource, Tok};
+use crate::solvers::GenStats;
+use crate::util::dist::{categorical, categorical_f64};
+use crate::util::rng::{Rng, Xoshiro256};
+
+/// Which evaluation a stage consumes: the predictor rows at `t` or the
+/// corrector rows at the θ-section point ρ.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    One,
+    Two,
+}
+
+/// One window of the time discretisation, as the driver hands it to the
+/// kernel.  `n_steps` is known for fixed grids (parallel decoding's arccos
+/// schedule needs it) and `None` under adaptive control.
+#[derive(Clone, Copy, Debug)]
+pub struct StepMeta {
+    pub t: f64,
+    pub t_next: f64,
+    pub step_idx: usize,
+    pub n_steps: Option<usize>,
+}
+
+/// One lane of a lock-step batch: family state, its seeded RNG stream and
+/// its per-lane statistics.  Lane b of a batch is bit-identical to an
+/// independent single-lane run seeded with the same stream.
+pub struct LaneCore<F: StateFamily> {
+    pub state: F::Lane,
+    pub rng: Xoshiro256,
+    pub stats: GenStats,
+}
+
+/// A state family: what a lane is, how score evaluation works for it
+/// (single and batched), and how a run terminates.
+pub trait StateFamily: Sized {
+    /// Evaluation context: a [`ScoreSource`] for masked sequences, the
+    /// analytic [`ToyModel`] for the toy CTMC.
+    type Ctx: ?Sized + Sync;
+    /// Per-lane mutable sampler state.
+    type Lane: Send;
+    /// Reusable evaluation buffers (no allocation on the hot path).
+    type Scratch: Send;
+    /// Final output extracted from a lane.
+    type Out;
+
+    /// Forward time the backward pass starts from (1.0 masked, T toy).
+    fn start_time(ctx: &Self::Ctx) -> f64;
+
+    /// Fresh lane.  The toy family draws its stationary initial state here,
+    /// the masked family draws nothing — RNG stream discipline matches the
+    /// pre-refactor drivers exactly.
+    fn init_lane<R: Rng>(ctx: &Self::Ctx, rng: &mut R) -> Self::Lane;
+
+    fn new_scratch(ctx: &Self::Ctx) -> Self::Scratch;
+
+    /// Whether the lane still has work (masked: any dimension masked; the
+    /// toy lane never finishes early).
+    fn lane_active(lane: &Self::Lane) -> bool;
+
+    /// Single-lane stage evaluation into the scratch buffers.  Precondition:
+    /// the kernel said the lane wants this stage (non-empty eval set).
+    fn eval(ctx: &Self::Ctx, lane: &Self::Lane, sc: &mut Self::Scratch, t: f64, stage: Stage);
+
+    /// Batched stage evaluation: one score call covering every lane the
+    /// selector picks (empty selections perform no call).
+    fn eval_batch<P: Fn(&Self::Lane) -> bool>(
+        ctx: &Self::Ctx,
+        lanes: &[LaneCore<Self>],
+        bufs: &mut [Self::Scratch],
+        select: P,
+        t: f64,
+        stage: Stage,
+    );
+
+    /// Terminal denoise at the early-stop time (masked: sample still-masked
+    /// dims from their conditional, one NFE when it fires; toy: no-op).
+    fn finalize<R: Rng>(
+        ctx: &Self::Ctx,
+        t: f64,
+        lane: &mut Self::Lane,
+        sc: &mut Self::Scratch,
+        stats: &mut GenStats,
+        rng: &mut R,
+    );
+
+    /// Batched terminal denoise (one batched score call + per-lane applies).
+    fn finalize_batch(
+        ctx: &Self::Ctx,
+        lanes: &mut [LaneCore<Self>],
+        bufs: &mut [Self::Scratch],
+        t: f64,
+        threads: usize,
+    );
+
+    fn into_out(lane: Self::Lane) -> Self::Out;
+
+    /// Exact simulation for this family (Sec. 3.1): first-hitting for the
+    /// masked family, uniformization for the toy CTMC.  Returns the output,
+    /// the realized statistics (`nfe` = jump/candidate evaluations actually
+    /// performed) and the decreasing forward jump times.
+    fn exact<R: Rng>(ctx: &Self::Ctx, delta: f64, rng: &mut R) -> (Self::Out, GenStats, Vec<f64>);
+}
+
+/// The per-step math of one scheme over one state family.
+///
+/// The driver owns the loop; the kernel owns exactly what happens inside a
+/// window: stage selection, evaluation times, the sampling applies, NFE
+/// charging, and the embedded error estimate.  Implementations must not
+/// draw randomness outside `stage1`/`stage2` — `step_error` in particular
+/// is RNG-free so adaptive and fixed-grid runs share streams exactly.
+pub trait SolverKernel<F: StateFamily> {
+    /// Score-evaluation stages per step (1 or 2; the paper's NFE unit).
+    fn stages(&self) -> usize {
+        1
+    }
+
+    /// Parallel decoding counts its own steps (a skipped reveal is not a
+    /// step); every other scheme lets the driver count windows.
+    fn counts_own_steps(&self) -> bool {
+        false
+    }
+
+    /// Stage-1 evaluation time; parallel decoding overrides with its
+    /// remaining-time temperature.
+    fn eval_time(&self, t: f64, _meta: &StepMeta) -> f64 {
+        t
+    }
+
+    /// θ-section point ρ of the stage-2 evaluation.
+    fn stage2_time(&self, _t: f64, _t_next: f64) -> f64 {
+        unreachable!("stage2_time on a one-stage kernel")
+    }
+
+    /// Whether the lane takes part in this window's stage-1 evaluation.
+    fn wants_stage1(&self, lane: &F::Lane, _meta: &StepMeta) -> bool {
+        F::lane_active(lane)
+    }
+
+    /// Whether the lane takes part in the stage-2 evaluation.
+    fn wants_stage2(&self, _lane: &F::Lane) -> bool {
+        false
+    }
+
+    /// Apply the predictor stage.  Precondition: `wants_stage1` held and the
+    /// family evaluated stage 1 into the scratch (charged here).
+    fn stage1<R: Rng>(
+        &self,
+        ctx: &F::Ctx,
+        meta: &StepMeta,
+        lane: &mut F::Lane,
+        sc: &mut F::Scratch,
+        stats: &mut GenStats,
+        rng: &mut R,
+    );
+
+    /// Apply the corrector stage.  Precondition: stage 1 ran this window;
+    /// when `wants_stage2` held, the family evaluated stage 2 at ρ.
+    #[allow(unused_variables)]
+    fn stage2<R: Rng>(
+        &self,
+        ctx: &F::Ctx,
+        meta: &StepMeta,
+        lane: &mut F::Lane,
+        sc: &mut F::Scratch,
+        stats: &mut GenStats,
+        rng: &mut R,
+    ) {
+        unreachable!("stage2 on a one-stage kernel")
+    }
+
+    /// Embedded local error estimate: the composite two-stage gate against
+    /// its first-order predictor, read off the stage buffers AFTER the
+    /// stage-2 evaluation and BEFORE `stage2` consumes them.  Zero extra
+    /// NFE, draws no randomness.
+    #[allow(unused_variables)]
+    fn step_error(&self, ctx: &F::Ctx, meta: &StepMeta, lane: &F::Lane, sc: &F::Scratch) -> f64 {
+        0.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Masked (absorbing-state) family
+// ---------------------------------------------------------------------------
+
+/// Per-lane sampler state for the masked family: the token buffer, the
+/// sorted shrinking active list and the per-scheme staging buffers.
+#[derive(Clone, Debug)]
+pub struct MaskedLane {
+    pub tokens: Vec<Tok>,
+    /// Sorted positions still masked at the start of the current stage.
+    pub active: Vec<usize>,
+    /// Stage-2 evaluation subset (two-stage schemes), rebuilt every step.
+    pub sub: Vec<usize>,
+    /// Combined-intensity row scratch (two-stage schemes).
+    pub comb: Vec<f64>,
+    /// (confidence, position, token) scratch for parallel decoding.
+    pub scored: Vec<(f64, usize, Tok)>,
+}
+
+impl MaskedLane {
+    pub fn new(l: usize, v: usize, mask: Tok) -> Self {
+        Self {
+            tokens: vec![mask; l],
+            active: (0..l).collect(),
+            sub: Vec::with_capacity(l),
+            comb: vec![0.0; v],
+            scored: Vec::with_capacity(l),
+        }
+    }
+}
+
+/// Compact score-evaluation buffers reused across steps.  Row k of
+/// `probs`/`probs_star` corresponds to the k-th entry of the index list
+/// passed to the score source, not to position k.
+#[derive(Clone, Debug)]
+pub struct MaskedScratch {
+    pub probs: Vec<f64>,
+    pub probs_star: Vec<f64>,
+}
+
+impl MaskedScratch {
+    pub fn new(l: usize, v: usize) -> Self {
+        Self {
+            probs: vec![0.0; l * v],
+            probs_star: vec![0.0; l * v],
+        }
+    }
+}
+
+/// The masked-sequence state family over any [`ScoreSource`].
+pub struct MaskedFamily<S: ?Sized>(PhantomData<*const S>);
+
+impl<S: ScoreSource + ?Sized> StateFamily for MaskedFamily<S> {
+    type Ctx = S;
+    type Lane = MaskedLane;
+    type Scratch = MaskedScratch;
+    type Out = Vec<Tok>;
+
+    fn start_time(_ctx: &S) -> f64 {
+        1.0
+    }
+
+    fn init_lane<R: Rng>(ctx: &S, _rng: &mut R) -> MaskedLane {
+        MaskedLane::new(ctx.seq_len(), ctx.vocab(), ctx.mask_id())
+    }
+
+    fn new_scratch(ctx: &S) -> MaskedScratch {
+        MaskedScratch::new(ctx.seq_len(), ctx.vocab())
+    }
+
+    fn lane_active(lane: &MaskedLane) -> bool {
+        !lane.active.is_empty()
+    }
+
+    fn eval(ctx: &S, lane: &MaskedLane, sc: &mut MaskedScratch, t: f64, stage: Stage) {
+        let v = ctx.vocab();
+        match stage {
+            Stage::One => {
+                let m = lane.active.len();
+                ctx.probs_masked_into(&lane.tokens, &lane.active, t, &mut sc.probs[..m * v]);
+            }
+            Stage::Two => {
+                let m2 = lane.sub.len();
+                ctx.probs_masked_into(&lane.tokens, &lane.sub, t, &mut sc.probs_star[..m2 * v]);
+            }
+        }
+    }
+
+    fn eval_batch<P: Fn(&MaskedLane) -> bool>(
+        ctx: &S,
+        lanes: &[LaneCore<Self>],
+        bufs: &mut [MaskedScratch],
+        select: P,
+        t: f64,
+        stage: Stage,
+    ) {
+        let v = ctx.vocab();
+        let mut reqs: Vec<(&[Tok], &[usize])> = Vec::new();
+        let mut outs: Vec<&mut [f64]> = Vec::new();
+        for (lane, sc) in lanes.iter().zip(bufs.iter_mut()) {
+            if !select(&lane.state) {
+                continue;
+            }
+            let idx: &[usize] = match stage {
+                Stage::One => &lane.state.active,
+                Stage::Two => &lane.state.sub,
+            };
+            let buf = match stage {
+                Stage::One => &mut sc.probs,
+                Stage::Two => &mut sc.probs_star,
+            };
+            reqs.push((lane.state.tokens.as_slice(), idx));
+            outs.push(&mut buf[..idx.len() * v]);
+        }
+        if !reqs.is_empty() {
+            ctx.probs_masked_batch(&reqs, t, &mut outs);
+        }
+    }
+
+    fn finalize<R: Rng>(
+        ctx: &S,
+        t: f64,
+        lane: &mut MaskedLane,
+        sc: &mut MaskedScratch,
+        stats: &mut GenStats,
+        rng: &mut R,
+    ) {
+        masked_finalize(ctx, t, lane, &mut sc.probs, stats, rng);
+    }
+
+    fn finalize_batch(
+        ctx: &S,
+        lanes: &mut [LaneCore<Self>],
+        bufs: &mut [MaskedScratch],
+        t: f64,
+        threads: usize,
+    ) {
+        Self::eval_batch(ctx, &*lanes, &mut *bufs, |l| !l.active.is_empty(), t, Stage::One);
+        let v = ctx.vocab();
+        crate::util::threadpool::par_zip_mut2(&mut *lanes, &mut *bufs, threads, |_, lc, sc| {
+            if lc.state.active.is_empty() {
+                return;
+            }
+            lc.stats.nfe += 1;
+            finalize_apply(v, &sc.probs, &mut lc.state, &mut lc.rng);
+        });
+    }
+
+    fn into_out(lane: MaskedLane) -> Vec<Tok> {
+        lane.tokens
+    }
+
+    /// First-Hitting Sampler (Zheng et al. 2024) — exact simulation for the
+    /// absorbing case (Sec. 3.1).  With m masked dims at forward time t the
+    /// next unmask time satisfies P(no event until s) = (s/t)^m, so
+    /// s = t u^{1/m}; one uniformly chosen dim is then revealed from its
+    /// exact conditional.  NFE equals the number of unmask events (= seq_len
+    /// without early stop), and each evaluation asks the score source for a
+    /// single row — the sparse extreme (O(V) instead of O(L·V) per event).
+    fn exact<R: Rng>(ctx: &S, delta: f64, rng: &mut R) -> (Vec<Tok>, GenStats, Vec<f64>) {
+        let l = ctx.seq_len();
+        let v = ctx.vocab();
+        let mask = ctx.mask_id();
+        let mut lane = MaskedLane::new(l, v, mask);
+        let mut stats = GenStats::default();
+        let mut jump_times = Vec::with_capacity(l);
+        let mut row = vec![0.0; v];
+
+        let mut t = 1.0;
+        loop {
+            if lane.active.is_empty() {
+                break;
+            }
+            let m = lane.active.len() as f64;
+            t *= rng.gen_f64().powf(1.0 / m);
+            if t <= delta {
+                break;
+            }
+            let pos = rng.gen_usize(lane.active.len());
+            let i = lane.active[pos];
+            ctx.probs_masked_into(&lane.tokens, &lane.active[pos..pos + 1], t, &mut row);
+            stats.nfe += 1;
+            stats.steps += 1;
+            if let Some(tok) = categorical(rng, &row) {
+                lane.tokens[i] = tok as Tok;
+                lane.active.remove(pos);
+            }
+            jump_times.push(t);
+        }
+        masked_finalize(ctx, delta, &mut lane, &mut row, &mut stats, rng);
+        (lane.tokens, stats, jump_times)
+    }
+}
+
+/// Shared terminal denoise: sample any still-masked dim from its conditional
+/// at the early-stop time.  One NFE when it fires.  `probs` is grown on
+/// demand (the first-hitting path carries only a single-row buffer).
+pub(crate) fn masked_finalize<S: ScoreSource + ?Sized, R: Rng>(
+    ctx: &S,
+    t: f64,
+    lane: &mut MaskedLane,
+    probs: &mut Vec<f64>,
+    stats: &mut GenStats,
+    rng: &mut R,
+) {
+    if lane.active.is_empty() {
+        return;
+    }
+    let v = ctx.vocab();
+    let m = lane.active.len();
+    if probs.len() < m * v {
+        probs.resize(m * v, 0.0);
+    }
+    ctx.probs_masked_into(&lane.tokens, &lane.active, t, &mut probs[..m * v]);
+    stats.nfe += 1;
+    finalize_apply(v, probs, lane, rng);
+}
+
+pub(crate) fn finalize_apply<R: Rng>(v: usize, probs: &[f64], lane: &mut MaskedLane, rng: &mut R) {
+    for (k, &i) in lane.active.iter().enumerate() {
+        let row = &probs[k * v..(k + 1) * v];
+        if let Some(tok) = categorical(rng, row) {
+            lane.tokens[i] = tok as Tok;
+        } else {
+            lane.tokens[i] = rng.gen_usize(v) as Tok;
+        }
+    }
+    lane.active.clear();
+}
+
+/// One-stage gate-and-sample over the active list, shrinking it in place.
+fn one_stage_apply<R: Rng>(
+    v: usize,
+    p_gate: f64,
+    probs: &[f64],
+    tokens: &mut [Tok],
+    active: &mut Vec<usize>,
+    rng: &mut R,
+) {
+    let m = active.len();
+    let mut w = 0usize;
+    for k in 0..m {
+        let i = active[k];
+        let mut still_masked = true;
+        if rng.gen_f64() < p_gate {
+            if let Some(tok) = categorical(rng, &probs[k * v..(k + 1) * v]) {
+                tokens[i] = tok as Tok;
+                still_masked = false;
+            }
+        }
+        if still_masked {
+            active[w] = i;
+            w += 1;
+        }
+    }
+    active.truncate(w);
+}
+
+#[derive(Clone, Copy)]
+enum Gate {
+    Linear,
+    Poisson,
+    Exact,
+}
+
+impl Gate {
+    /// Unmask probability for a masked dim over [t', t] with mu_tot = 1/t.
+    #[inline]
+    fn prob(self, t: f64, t_next: f64) -> f64 {
+        let dt = t - t_next;
+        match self {
+            Gate::Linear => (dt / t).min(1.0),
+            Gate::Poisson => 1.0 - (-dt / t).exp(),
+            Gate::Exact => dt / t,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Kernels
+// ---------------------------------------------------------------------------
+
+/// First-order Euler scheme: linear gate clip(Δ/t, 1).
+pub struct EulerKernel;
+/// τ-leaping (Alg. 3): Poisson gate 1 − e^{−Δ/t}.
+pub struct TauLeapingKernel;
+/// Tweedie τ-leaping: exact posterior gate Δ/t (absorbing case).
+pub struct TweedieKernel;
+
+/// θ-trapezoidal (Alg. 2): stage 1 τ-leaps for θΔ, stage 2 applies the
+/// extrapolated combination (α₁μ*_ρ − α₂μ_t)₊ over the remaining (1−θ)Δ.
+pub struct TrapezoidalKernel {
+    pub theta: f64,
+}
+
+impl TrapezoidalKernel {
+    /// The scheme is defined for every θ in (0, 1) (second-order for all of
+    /// them, Thm. 5.4).
+    pub fn new(theta: f64) -> Self {
+        assert!(
+            theta > 0.0 && theta < 1.0,
+            "trapezoidal needs theta in (0,1)"
+        );
+        Self { theta }
+    }
+}
+
+/// Practical θ-RK-2 (Alg. 4): stage 1 builds y* by a θΔ τ-leap, stage 2
+/// restarts from y_{s_n} with the blended rates over the full step.
+pub struct Rk2Kernel {
+    pub theta: f64,
+}
+
+impl Rk2Kernel {
+    /// The scheme is well-defined for θ in (0, 1]; the second-order
+    /// guarantee (Thm. 5.5) holds only for θ in (0, 1/2], which is what the
+    /// request surfaces enforce ([`crate::solvers::Solver::parse`]).  The
+    /// library stays permissive so the Fig. 5 θ-sweep can show the
+    /// degradation past 1/2.
+    pub fn new(theta: f64) -> Self {
+        assert!(theta > 0.0 && theta <= 1.0, "rk2 needs theta in (0,1]");
+        Self { theta }
+    }
+}
+
+/// MaskGIT-style parallel decoding with the arccos schedule (App. D.4).
+pub struct PdKernel;
+
+macro_rules! one_stage_masked_kernel {
+    ($kernel:ty, $gate:expr) => {
+        impl<S: ScoreSource + ?Sized> SolverKernel<MaskedFamily<S>> for $kernel {
+            fn stage1<R: Rng>(
+                &self,
+                ctx: &S,
+                meta: &StepMeta,
+                lane: &mut MaskedLane,
+                sc: &mut MaskedScratch,
+                stats: &mut GenStats,
+                rng: &mut R,
+            ) {
+                debug_assert!(!lane.active.is_empty());
+                stats.nfe += 1;
+                lane.sub.clear();
+                one_stage_apply(
+                    ctx.vocab(),
+                    $gate.prob(meta.t, meta.t_next),
+                    &sc.probs,
+                    &mut lane.tokens,
+                    &mut lane.active,
+                    rng,
+                );
+            }
+        }
+    };
+}
+
+one_stage_masked_kernel!(EulerKernel, Gate::Linear);
+one_stage_masked_kernel!(TauLeapingKernel, Gate::Poisson);
+one_stage_masked_kernel!(TweedieKernel, Gate::Exact);
+
+impl<S: ScoreSource + ?Sized> SolverKernel<MaskedFamily<S>> for TrapezoidalKernel {
+    fn stages(&self) -> usize {
+        2
+    }
+
+    fn stage2_time(&self, t: f64, t_next: f64) -> f64 {
+        t - self.theta * (t - t_next)
+    }
+
+    fn wants_stage2(&self, lane: &MaskedLane) -> bool {
+        !lane.sub.is_empty()
+    }
+
+    /// Stage 1 of Alg. 2: τ-leap for θΔ with μ_t = probs / t; rows of
+    /// survivors are compacted in place so stage 2 indexes them by their
+    /// position in `sub`.
+    fn stage1<R: Rng>(
+        &self,
+        _ctx: &S,
+        meta: &StepMeta,
+        lane: &mut MaskedLane,
+        sc: &mut MaskedScratch,
+        stats: &mut GenStats,
+        rng: &mut R,
+    ) {
+        debug_assert!(!lane.active.is_empty());
+        stats.nfe += 1;
+        let (t, dt) = (meta.t, meta.t - meta.t_next);
+        let v = lane.comb.len();
+        let p1 = 1.0 - (-(self.theta * dt) / t).exp();
+        lane.sub.clear();
+        for k in 0..lane.active.len() {
+            let i = lane.active[k];
+            let mut still_masked = true;
+            if rng.gen_f64() < p1 {
+                if let Some(tok) = categorical(rng, &sc.probs[k * v..(k + 1) * v]) {
+                    lane.tokens[i] = tok as Tok;
+                    still_masked = false;
+                }
+            }
+            if still_masked {
+                let w = lane.sub.len();
+                if w != k {
+                    sc.probs.copy_within(k * v..(k + 1) * v, w * v);
+                }
+                lane.sub.push(i);
+            }
+        }
+    }
+
+    fn stage2<R: Rng>(
+        &self,
+        _ctx: &S,
+        meta: &StepMeta,
+        lane: &mut MaskedLane,
+        sc: &mut MaskedScratch,
+        stats: &mut GenStats,
+        rng: &mut R,
+    ) {
+        if lane.sub.is_empty() {
+            // Everything unmasked in stage 1: no survivor has positive
+            // intensity, the step is done.
+            lane.active.clear();
+            return;
+        }
+        stats.nfe += 1; // the ρ evaluation over `sub`
+        let theta = self.theta;
+        let (t, dt) = (meta.t, meta.t - meta.t_next);
+        let rho = t - theta * dt;
+        let v = lane.comb.len();
+        let a1 = 1.0 / (2.0 * theta * (1.0 - theta));
+        let a2 = a1 - 1.0;
+        let tail = (1.0 - theta) * dt;
+        lane.active.clear();
+        // Split borrows: iterate `sub` by index so `tokens`/`active`/`comb`
+        // stay independently borrowable.
+        for j in 0..lane.sub.len() {
+            let i = lane.sub[j];
+            // Combined per-token intensity (α₁ μ*_ρ − α₂ μ_t)₊; the μ_t row
+            // was compacted to slot j in stage 1.
+            let mut tot = 0.0;
+            for c in 0..v {
+                let mu_star = sc.probs_star[j * v + c] / rho;
+                let mu_t = sc.probs[j * v + c] / t;
+                let m = (a1 * mu_star - a2 * mu_t).max(0.0);
+                lane.comb[c] = m;
+                tot += m;
+            }
+            let p2 = 1.0 - (-tot * tail).exp();
+            let mut still_masked = true;
+            if rng.gen_f64() < p2 {
+                if let Some(tok) = categorical(rng, &lane.comb) {
+                    lane.tokens[i] = tok as Tok;
+                    still_masked = false;
+                }
+            }
+            if still_masked {
+                lane.active.push(i);
+            }
+        }
+        // `sub` is consumed: clear it so a finished lane can never be
+        // re-selected for a stage-2 eval by the batch driver.
+        lane.sub.clear();
+    }
+
+    fn step_error(&self, ctx: &S, meta: &StepMeta, lane: &MaskedLane, sc: &MaskedScratch) -> f64 {
+        let theta = self.theta;
+        let (t, dt) = (meta.t, meta.t - meta.t_next);
+        let rho = t - theta * dt;
+        let v = ctx.vocab();
+        let mu_tot = 1.0 / t; // per masked dim under the log-linear schedule
+        let a1 = 1.0 / (2.0 * theta * (1.0 - theta));
+        let a2 = a1 - 1.0;
+        let mut err = 0.0f64;
+        for j in 0..lane.sub.len() {
+            let mut tot = 0.0;
+            for c in 0..v {
+                let mu_star = sc.probs_star[j * v + c] / rho;
+                let mu_t = sc.probs[j * v + c] / t;
+                tot += (a1 * mu_star - a2 * mu_t).max(0.0);
+            }
+            err = err.max(trap_gate_discrepancy(theta, dt, mu_tot, tot));
+        }
+        err
+    }
+}
+
+impl<S: ScoreSource + ?Sized> SolverKernel<MaskedFamily<S>> for Rk2Kernel {
+    fn stages(&self) -> usize {
+        2
+    }
+
+    fn stage2_time(&self, t: f64, t_next: f64) -> f64 {
+        t - self.theta * (t - t_next)
+    }
+
+    fn wants_stage2(&self, lane: &MaskedLane) -> bool {
+        !lane.sub.is_empty()
+    }
+
+    /// Stage 1 of Alg. 4: τ-leap for θΔ building y* in place.  All stage-1
+    /// rows stay aligned with `active` (stage 2 needs every μ_t row); `sub`
+    /// collects the dims still masked in y*.
+    fn stage1<R: Rng>(
+        &self,
+        _ctx: &S,
+        meta: &StepMeta,
+        lane: &mut MaskedLane,
+        sc: &mut MaskedScratch,
+        stats: &mut GenStats,
+        rng: &mut R,
+    ) {
+        debug_assert!(!lane.active.is_empty());
+        stats.nfe += 1;
+        let (t, dt) = (meta.t, meta.t - meta.t_next);
+        let v = lane.comb.len();
+        let p1 = 1.0 - (-(self.theta * dt) / t).exp();
+        lane.sub.clear();
+        for k in 0..lane.active.len() {
+            let i = lane.active[k];
+            let mut still_masked = true;
+            if rng.gen_f64() < p1 {
+                if let Some(tok) = categorical(rng, &sc.probs[k * v..(k + 1) * v]) {
+                    lane.tokens[i] = tok as Tok;
+                    still_masked = false;
+                }
+            }
+            if still_masked {
+                lane.sub.push(i);
+            }
+        }
+    }
+
+    fn stage2<R: Rng>(
+        &self,
+        ctx: &S,
+        meta: &StepMeta,
+        lane: &mut MaskedLane,
+        sc: &mut MaskedScratch,
+        stats: &mut GenStats,
+        rng: &mut R,
+    ) {
+        if !lane.sub.is_empty() {
+            stats.nfe += 1;
+        }
+        let theta = self.theta;
+        let (t, dt) = (meta.t, meta.t - meta.t_next);
+        let rho = t - theta * dt;
+        let v = lane.comb.len();
+        let mask = ctx.mask_id();
+        let w_coef = 1.0 / (2.0 * theta);
+        // Alg. 4 restarts from y_{s_n}: re-mask every originally masked dim
+        // (stage-1 reveals only enter through μ*).
+        for &i in lane.active.iter() {
+            lane.tokens[i] = mask;
+        }
+        let m = lane.active.len();
+        let mut j = 0usize; // pointer into sub (dims masked in y*)
+        let mut w = 0usize; // in-place retain cursor
+        for k in 0..m {
+            let i = lane.active[k];
+            let star = j < lane.sub.len() && lane.sub[j] == i;
+            let mut tot = 0.0;
+            for c in 0..v {
+                let mu_t = sc.probs[k * v + c] / t;
+                let mu_star = if star {
+                    sc.probs_star[j * v + c] / rho
+                } else {
+                    0.0
+                };
+                let mc = ((1.0 - w_coef) * mu_t + w_coef * mu_star).max(0.0);
+                lane.comb[c] = mc;
+                tot += mc;
+            }
+            if star {
+                j += 1;
+            }
+            let p2 = 1.0 - (-tot * dt).exp();
+            let mut still_masked = true;
+            if rng.gen_f64() < p2 {
+                if let Some(tok) = categorical(rng, &lane.comb) {
+                    lane.tokens[i] = tok as Tok;
+                    still_masked = false;
+                }
+            }
+            if still_masked {
+                lane.active[w] = i;
+                w += 1;
+            }
+        }
+        lane.active.truncate(w);
+        lane.sub.clear();
+    }
+
+    fn step_error(&self, ctx: &S, meta: &StepMeta, lane: &MaskedLane, sc: &MaskedScratch) -> f64 {
+        let theta = self.theta;
+        let (t, dt) = (meta.t, meta.t - meta.t_next);
+        let rho = t - theta * dt;
+        let v = ctx.vocab();
+        let mu_tot = 1.0 / t;
+        let w_coef = 1.0 / (2.0 * theta);
+        let mut err = 0.0f64;
+        let mut j = 0usize;
+        for (k, &i) in lane.active.iter().enumerate() {
+            let star = j < lane.sub.len() && lane.sub[j] == i;
+            let mut tot = 0.0;
+            for c in 0..v {
+                let mu_t = sc.probs[k * v + c] / t;
+                let mu_star = if star {
+                    sc.probs_star[j * v + c] / rho
+                } else {
+                    0.0
+                };
+                tot += ((1.0 - w_coef) * mu_t + w_coef * mu_star).max(0.0);
+            }
+            if star {
+                j += 1;
+            }
+            err = err.max(rk2_gate_discrepancy(dt, mu_tot, tot));
+        }
+        err
+    }
+}
+
+/// MaskGIT parallel-decoding schedule (App. D.4): how many dims to reveal
+/// at step n of n_steps given m currently masked, plus the remaining-time
+/// temperature used for both the eval and the Gumbel noise.
+pub fn pd_schedule(l: usize, m: usize, n: usize, n_steps: usize) -> (usize, f64) {
+    let frac = (n + 1) as f64 / n_steps as f64;
+    let target = if n + 1 == n_steps {
+        0
+    } else {
+        ((std::f64::consts::FRAC_PI_2 * frac).cos() * l as f64).ceil() as usize
+    };
+    (m.saturating_sub(target), pd_time(n, n_steps))
+}
+
+/// Remaining-time temperature of parallel-decoding step n — the single
+/// definition shared by the per-lane schedule and the batch eval driver.
+pub fn pd_time(n: usize, n_steps: usize) -> f64 {
+    1.0 - n as f64 / n_steps as f64
+}
+
+impl<S: ScoreSource + ?Sized> SolverKernel<MaskedFamily<S>> for PdKernel {
+    fn counts_own_steps(&self) -> bool {
+        true
+    }
+
+    fn eval_time(&self, _t: f64, meta: &StepMeta) -> f64 {
+        pd_time(
+            meta.step_idx,
+            meta.n_steps.expect("parallel decoding needs a fixed grid"),
+        )
+    }
+
+    fn wants_stage1(&self, lane: &MaskedLane, meta: &StepMeta) -> bool {
+        if lane.active.is_empty() {
+            return false;
+        }
+        let n_steps = meta.n_steps.expect("parallel decoding needs a fixed grid");
+        let (k, _) = pd_schedule(lane.tokens.len(), lane.active.len(), meta.step_idx, n_steps);
+        k > 0
+    }
+
+    /// Sample every active position, score by randomised confidence, commit
+    /// the top `k_reveal`, and shrink the active list (order preserved).
+    fn stage1<R: Rng>(
+        &self,
+        ctx: &S,
+        meta: &StepMeta,
+        lane: &mut MaskedLane,
+        sc: &mut MaskedScratch,
+        stats: &mut GenStats,
+        rng: &mut R,
+    ) {
+        let n_steps = meta.n_steps.expect("parallel decoding needs a fixed grid");
+        let (k_reveal, t) =
+            pd_schedule(lane.tokens.len(), lane.active.len(), meta.step_idx, n_steps);
+        debug_assert!(k_reveal > 0 && !lane.active.is_empty());
+        stats.nfe += 1;
+        stats.steps += 1;
+        let v = ctx.vocab();
+        let mask = ctx.mask_id();
+        lane.scored.clear();
+        for (k, &i) in lane.active.iter().enumerate() {
+            let row = &sc.probs[k * v..(k + 1) * v];
+            let tok = categorical(rng, row).unwrap_or(0);
+            let conf = row[tok].max(1e-30).ln() + t * crate::util::dist::gumbel(rng, 1e-9);
+            lane.scored.push((conf, i, tok as Tok));
+        }
+        lane.scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        for &(_, i, tok) in lane.scored.iter().take(k_reveal) {
+            lane.tokens[i] = tok;
+        }
+        let tokens = &lane.tokens;
+        lane.active.retain(|&i| tokens[i] == mask);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Toy (uniform-state CTMC) family
+// ---------------------------------------------------------------------------
+
+/// Toy lane: the current state plus the intermediate state y* of the
+/// two-stage schemes.
+#[derive(Clone, Copy, Debug)]
+pub struct ToyLane {
+    pub x: usize,
+    pub y_star: usize,
+}
+
+/// Toy eval buffers: ν-indexed intensities at t, at ρ (on y*), and the
+/// combined stage-2 row.
+#[derive(Clone, Debug)]
+pub struct ToyScratch {
+    pub mu: Vec<f64>,
+    pub mu_star: Vec<f64>,
+    pub comb: Vec<f64>,
+}
+
+/// The Sec. 6.1 toy-CTMC state family.
+pub struct ToyFamily;
+
+impl StateFamily for ToyFamily {
+    type Ctx = ToyModel;
+    type Lane = ToyLane;
+    type Scratch = ToyScratch;
+    type Out = usize;
+
+    fn start_time(ctx: &ToyModel) -> f64 {
+        ctx.horizon
+    }
+
+    fn init_lane<R: Rng>(ctx: &ToyModel, rng: &mut R) -> ToyLane {
+        let x = ctx.sample_stationary(rng);
+        ToyLane { x, y_star: x }
+    }
+
+    fn new_scratch(ctx: &ToyModel) -> ToyScratch {
+        let s = ctx.n_states();
+        ToyScratch {
+            mu: vec![0.0; s],
+            mu_star: vec![0.0; s],
+            comb: vec![0.0; s],
+        }
+    }
+
+    fn lane_active(_lane: &ToyLane) -> bool {
+        true // the toy chain never finishes early
+    }
+
+    fn eval(ctx: &ToyModel, lane: &ToyLane, sc: &mut ToyScratch, t: f64, stage: Stage) {
+        match stage {
+            Stage::One => ctx.reverse_intensities(lane.x, t, &mut sc.mu),
+            Stage::Two => ctx.reverse_intensities(lane.y_star, t, &mut sc.mu_star),
+        }
+    }
+
+    fn eval_batch<P: Fn(&ToyLane) -> bool>(
+        ctx: &ToyModel,
+        lanes: &[LaneCore<Self>],
+        bufs: &mut [ToyScratch],
+        select: P,
+        t: f64,
+        stage: Stage,
+    ) {
+        // The analytic toy score has no batched entry point; evaluate
+        // per lane (results identical to the single-lane path).
+        for (lane, sc) in lanes.iter().zip(bufs.iter_mut()) {
+            if select(&lane.state) {
+                Self::eval(ctx, &lane.state, sc, t, stage);
+            }
+        }
+    }
+
+    fn finalize<R: Rng>(
+        _ctx: &ToyModel,
+        _t: f64,
+        _lane: &mut ToyLane,
+        _sc: &mut ToyScratch,
+        _stats: &mut GenStats,
+        _rng: &mut R,
+    ) {
+        // No terminal denoise: the toy chain is never partially masked.
+    }
+
+    fn finalize_batch(
+        _ctx: &ToyModel,
+        _lanes: &mut [LaneCore<Self>],
+        _bufs: &mut [ToyScratch],
+        _t: f64,
+        _threads: usize,
+    ) {
+    }
+
+    fn into_out(lane: ToyLane) -> usize {
+        lane.x
+    }
+
+    /// Exact simulation by windowed uniformization/thinning (Sec. 3.1).
+    /// NFE reports the candidate-evaluation count (the Fig. 1 quantity);
+    /// `steps` the accepted jumps.
+    fn exact<R: Rng>(ctx: &ToyModel, delta: f64, rng: &mut R) -> (usize, GenStats, Vec<f64>) {
+        use crate::ctmc::uniformization::{simulate_backward, ToyJump};
+        let x0 = ctx.sample_stationary(rng);
+        let (x, s) = simulate_backward(&ToyJump(ctx), x0, ctx.horizon, delta, 0.5, rng);
+        let stats = GenStats { nfe: s.nfe, steps: s.jumps.len() };
+        let times = s.jumps.iter().map(|j| j.0).collect();
+        (x, stats, times)
+    }
+}
+
+/// One leaping sub-step of the toy chain: ν-indexed intensities, single
+/// event gate (the shared primitive of every toy kernel).
+pub(crate) fn toy_sub_step<R: Rng>(
+    s: usize,
+    x: usize,
+    mu: &[f64],
+    dt: f64,
+    poisson_gate: bool,
+    rng: &mut R,
+) -> usize {
+    let tot: f64 = mu.iter().sum();
+    if tot <= 0.0 {
+        return x;
+    }
+    let p = if poisson_gate {
+        1.0 - (-tot * dt).exp()
+    } else {
+        (tot * dt).min(1.0)
+    };
+    if rng.gen_f64() < p {
+        let nu = categorical_f64(rng, mu);
+        (x + nu) % s
+    } else {
+        x
+    }
+}
+
+impl SolverKernel<ToyFamily> for EulerKernel {
+    fn stage1<R: Rng>(
+        &self,
+        ctx: &ToyModel,
+        meta: &StepMeta,
+        lane: &mut ToyLane,
+        sc: &mut ToyScratch,
+        stats: &mut GenStats,
+        rng: &mut R,
+    ) {
+        stats.nfe += 1;
+        lane.x = toy_sub_step(ctx.n_states(), lane.x, &sc.mu, meta.t - meta.t_next, false, rng);
+    }
+}
+
+macro_rules! poisson_toy_kernel {
+    ($kernel:ty) => {
+        impl SolverKernel<ToyFamily> for $kernel {
+            fn stage1<R: Rng>(
+                &self,
+                ctx: &ToyModel,
+                meta: &StepMeta,
+                lane: &mut ToyLane,
+                sc: &mut ToyScratch,
+                stats: &mut GenStats,
+                rng: &mut R,
+            ) {
+                stats.nfe += 1;
+                lane.x =
+                    toy_sub_step(ctx.n_states(), lane.x, &sc.mu, meta.t - meta.t_next, true, rng);
+            }
+        }
+    };
+}
+
+// Tweedie has no separate meaning in the uniform-state toy (no closed-form
+// posterior gate); the paper benchmarks only tau / trapezoidal / rk2 here.
+poisson_toy_kernel!(TauLeapingKernel);
+poisson_toy_kernel!(TweedieKernel);
+
+impl SolverKernel<ToyFamily> for TrapezoidalKernel {
+    fn stages(&self) -> usize {
+        2
+    }
+
+    fn stage2_time(&self, t: f64, t_next: f64) -> f64 {
+        t - self.theta * (t - t_next)
+    }
+
+    fn wants_stage2(&self, _lane: &ToyLane) -> bool {
+        true
+    }
+
+    fn stage1<R: Rng>(
+        &self,
+        ctx: &ToyModel,
+        meta: &StepMeta,
+        lane: &mut ToyLane,
+        sc: &mut ToyScratch,
+        stats: &mut GenStats,
+        rng: &mut R,
+    ) {
+        stats.nfe += 1;
+        let dt = meta.t - meta.t_next;
+        lane.y_star = toy_sub_step(ctx.n_states(), lane.x, &sc.mu, self.theta * dt, true, rng);
+    }
+
+    /// Eq. 16: μ* on the intermediate state, μ_t on the ORIGINAL state,
+    /// both ν-indexed; the jump applies from y*.
+    fn stage2<R: Rng>(
+        &self,
+        ctx: &ToyModel,
+        meta: &StepMeta,
+        lane: &mut ToyLane,
+        sc: &mut ToyScratch,
+        stats: &mut GenStats,
+        rng: &mut R,
+    ) {
+        stats.nfe += 1;
+        let theta = self.theta;
+        let dt = meta.t - meta.t_next;
+        let s = ctx.n_states();
+        let a1 = 1.0 / (2.0 * theta * (1.0 - theta));
+        let a2 = a1 - 1.0;
+        for nu in 0..s {
+            sc.comb[nu] = (a1 * sc.mu_star[nu] - a2 * sc.mu[nu]).max(0.0);
+        }
+        lane.x = toy_sub_step(s, lane.y_star, &sc.comb, (1.0 - theta) * dt, true, rng);
+    }
+
+    fn step_error(&self, ctx: &ToyModel, meta: &StepMeta, _lane: &ToyLane, sc: &ToyScratch) -> f64 {
+        let theta = self.theta;
+        let dt = meta.t - meta.t_next;
+        let a1 = 1.0 / (2.0 * theta * (1.0 - theta));
+        let a2 = a1 - 1.0;
+        let tot_mu: f64 = sc.mu.iter().sum();
+        let mut tot_comb = 0.0;
+        for nu in 0..ctx.n_states() {
+            tot_comb += (a1 * sc.mu_star[nu] - a2 * sc.mu[nu]).max(0.0);
+        }
+        trap_gate_discrepancy(theta, dt, tot_mu, tot_comb)
+    }
+}
+
+impl SolverKernel<ToyFamily> for Rk2Kernel {
+    fn stages(&self) -> usize {
+        2
+    }
+
+    fn stage2_time(&self, t: f64, t_next: f64) -> f64 {
+        t - self.theta * (t - t_next)
+    }
+
+    fn wants_stage2(&self, _lane: &ToyLane) -> bool {
+        true
+    }
+
+    fn stage1<R: Rng>(
+        &self,
+        ctx: &ToyModel,
+        meta: &StepMeta,
+        lane: &mut ToyLane,
+        sc: &mut ToyScratch,
+        stats: &mut GenStats,
+        rng: &mut R,
+    ) {
+        stats.nfe += 1;
+        let dt = meta.t - meta.t_next;
+        lane.y_star = toy_sub_step(ctx.n_states(), lane.x, &sc.mu, self.theta * dt, true, rng);
+    }
+
+    /// Alg. 4 restarts from the original state with the full step.
+    fn stage2<R: Rng>(
+        &self,
+        ctx: &ToyModel,
+        meta: &StepMeta,
+        lane: &mut ToyLane,
+        sc: &mut ToyScratch,
+        stats: &mut GenStats,
+        rng: &mut R,
+    ) {
+        stats.nfe += 1;
+        let dt = meta.t - meta.t_next;
+        let s = ctx.n_states();
+        let w = 1.0 / (2.0 * self.theta);
+        for nu in 0..s {
+            sc.comb[nu] = ((1.0 - w) * sc.mu[nu] + w * sc.mu_star[nu]).max(0.0);
+        }
+        lane.x = toy_sub_step(s, lane.x, &sc.comb, dt, true, rng);
+    }
+
+    fn step_error(&self, ctx: &ToyModel, meta: &StepMeta, _lane: &ToyLane, sc: &ToyScratch) -> f64 {
+        let dt = meta.t - meta.t_next;
+        let w = 1.0 / (2.0 * self.theta);
+        let tot_mu: f64 = sc.mu.iter().sum();
+        let mut tot_comb = 0.0;
+        for nu in 0..ctx.n_states() {
+            tot_comb += ((1.0 - w) * sc.mu[nu] + w * sc.mu_star[nu]).max(0.0);
+        }
+        rk2_gate_discrepancy(dt, tot_mu, tot_comb)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch
+// ---------------------------------------------------------------------------
+
+/// Instantiate the masked-family kernel for a [`crate::solvers::Solver`]
+/// value and run `$body` with it bound to `$k` (monomorphised per arm:
+/// the trait indirection costs nothing on the hot path — pinned by the
+/// `driver_direct` rows in `benches/solver_steps.rs`).
+macro_rules! dispatch_masked_kernel {
+    ($solver:expr, $k:ident => $body:expr) => {
+        match $solver {
+            $crate::solvers::Solver::Euler => {
+                let $k = $crate::solvers::kernel::EulerKernel;
+                $body
+            }
+            $crate::solvers::Solver::TauLeaping => {
+                let $k = $crate::solvers::kernel::TauLeapingKernel;
+                $body
+            }
+            $crate::solvers::Solver::Tweedie => {
+                let $k = $crate::solvers::kernel::TweedieKernel;
+                $body
+            }
+            $crate::solvers::Solver::Trapezoidal { theta } => {
+                let $k = $crate::solvers::kernel::TrapezoidalKernel::new(theta);
+                $body
+            }
+            $crate::solvers::Solver::Rk2 { theta } => {
+                let $k = $crate::solvers::kernel::Rk2Kernel::new(theta);
+                $body
+            }
+            $crate::solvers::Solver::ParallelDecoding => {
+                let $k = $crate::solvers::kernel::PdKernel;
+                $body
+            }
+            $crate::solvers::Solver::Exact => {
+                unreachable!("exact simulation dispatches through StateFamily::exact")
+            }
+        }
+    };
+}
+pub(crate) use dispatch_masked_kernel;
+
+/// Toy-family counterpart of [`dispatch_masked_kernel`].  Parallel decoding
+/// is undefined for the toy model (no sequence to reveal).
+macro_rules! dispatch_toy_kernel {
+    ($solver:expr, $k:ident => $body:expr) => {
+        match $solver {
+            $crate::solvers::Solver::Euler => {
+                let $k = $crate::solvers::kernel::EulerKernel;
+                $body
+            }
+            $crate::solvers::Solver::TauLeaping => {
+                let $k = $crate::solvers::kernel::TauLeapingKernel;
+                $body
+            }
+            $crate::solvers::Solver::Tweedie => {
+                let $k = $crate::solvers::kernel::TweedieKernel;
+                $body
+            }
+            $crate::solvers::Solver::Trapezoidal { theta } => {
+                let $k = $crate::solvers::kernel::TrapezoidalKernel::new(theta);
+                $body
+            }
+            $crate::solvers::Solver::Rk2 { theta } => {
+                let $k = $crate::solvers::kernel::Rk2Kernel::new(theta);
+                $body
+            }
+            $crate::solvers::Solver::ParallelDecoding => {
+                panic!("parallel decoding is undefined for the toy model")
+            }
+            $crate::solvers::Solver::Exact => {
+                unreachable!("exact simulation dispatches through StateFamily::exact")
+            }
+        }
+    };
+}
+pub(crate) use dispatch_toy_kernel;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn theta_constructors_validate() {
+        assert!(std::panic::catch_unwind(|| TrapezoidalKernel::new(1.0)).is_err());
+        assert!(std::panic::catch_unwind(|| TrapezoidalKernel::new(0.0)).is_err());
+        assert!(std::panic::catch_unwind(|| Rk2Kernel::new(0.0)).is_err());
+        assert!(std::panic::catch_unwind(|| Rk2Kernel::new(1.5)).is_err());
+        // Library-level bounds are permissive past 1/2 (Fig. 5 sweeps it).
+        let _ = Rk2Kernel::new(0.9);
+        let _ = TrapezoidalKernel::new(0.5);
+    }
+
+    #[test]
+    fn pd_schedule_reveals_everything_at_last_step() {
+        let (k, t) = pd_schedule(16, 7, 7, 8);
+        assert_eq!(k, 7, "last step must reveal all masked dims");
+        assert!((t - pd_time(7, 8)).abs() < 1e-15);
+        let (k0, _) = pd_schedule(16, 16, 0, 8);
+        assert!(k0 <= 16);
+    }
+}

@@ -1,4 +1,5 @@
-//! Samplers for masked (absorbing-state) discrete diffusion sequences.
+//! Samplers for masked (absorbing-state) discrete diffusion sequences —
+//! thin shims over the unified [`crate::solvers::driver`].
 //!
 //! Under the log-linear schedule (App. D.3) the per-dimension total unmask
 //! intensity is exactly mu_tot(t) = 1/t, and over a backward step t -> t'
@@ -13,6 +14,14 @@
 //! | θ-trapezoidal     | two-stage, Alg. 2 (extrapolated rates) | ≤ 2      | active, then stage-2 survivors |
 //! | θ-RK-2 (Alg. 4)   | two-stage, restart from y_{s_n}        | ≤ 2      | active, then y*-masked survivors |
 //! | parallel decoding | arccos schedule, top-k by confidence   | ≤ 1      | active dims            |
+//! | exact (FHS)       | first-hitting, one dim per event       | 1/event  | a single row per event |
+//!
+//! The per-step math of each scheme lives in one [`crate::solvers::kernel`]
+//! implementation; the fixed-grid and adaptive loops, batched evaluation,
+//! lane voting and stats accounting live once in
+//! [`crate::solvers::driver`].  These shims only pick the kernel and
+//! preserve the historical signatures — outputs are bit-identical to the
+//! pre-refactor drivers (pinned by `tests/golden_parity.rs`).
 //!
 //! ## Masked-sparse evaluation
 //!
@@ -22,9 +31,7 @@
 //! to the number of masked dimensions instead of `seq_len`.  Steps whose
 //! eval set is empty are skipped entirely (hence "≤" in the NFE column:
 //! `GenStats::nfe` counts evaluations actually performed, which can fall
-//! below the scheme's nominal budget once a lane fully unmasks).  The
-//! first-hitting sampler reveals one dimension per event and accordingly
-//! evaluates a single row per NFE.
+//! below the scheme's nominal budget once a lane fully unmasks).
 //!
 //! ## Batched lane-parallel generation
 //!
@@ -36,11 +43,11 @@
 //! [`generate`] calls with `Xoshiro256::seed_from_u64(seed)` — co-batching
 //! never changes samples (the property tests pin this).
 //!
-//! All solvers end with a shared `finalize` denoise of any still-masked
-//! dimensions (sampling each from its conditional at the early-stop time),
-//! charged as one extra NFE when it fires — without it, perplexity of a
-//! partially masked sequence is undefined.  The same convention is applied
-//! to every scheme so comparisons at equal NFE stay fair.
+//! All approximate solvers end with a shared `finalize` denoise of any
+//! still-masked dimensions (sampling each from its conditional at the
+//! early-stop time), charged as one extra NFE when it fires.  The same
+//! convention is applied to every scheme so comparisons at equal NFE stay
+//! fair.
 //!
 //! ## Adaptive schedules
 //!
@@ -52,365 +59,76 @@
 //! lanes vote on one shared dt so the lock-step batching above is
 //! preserved.  Replaying the realized grid through the fixed drivers
 //! reproduces every sample bit for bit.
+//!
+//! ## Exact simulation
+//!
+//! [`Solver::Exact`] routes to the first-hitting sampler ([`fhs_generate`])
+//! through every entry point here, including [`generate_batch`] (per-lane
+//! seeded streams, fanned across the threadpool) — which is what makes
+//! `--solver exact` servable end to end.  Its `GenStats::nfe` is the
+//! realized unmask-event count.
 
-use crate::schedule::adaptive::{
-    rk2_gate_discrepancy, trap_gate_discrepancy, AdaptiveTrace, StepController,
-};
+use crate::schedule::adaptive::{AdaptiveTrace, StepController};
 use crate::score::{ScoreSource, Tok};
+use crate::solvers::driver::{self, Schedule};
+use crate::solvers::kernel::{dispatch_masked_kernel, MaskedFamily, StateFamily};
 use crate::solvers::{GenStats, Solver};
-use crate::util::dist::categorical;
 use crate::util::rng::{Rng, Xoshiro256};
-use crate::util::threadpool::{par_zip_mut2, ThreadPool};
-
-/// Compact score-evaluation buffers reused across steps (no allocation on
-/// the hot path).  Row k of `probs`/`probs_star` corresponds to the k-th
-/// entry of the index list passed to the score source, not to position k.
-struct Scratch {
-    probs: Vec<f64>,
-    probs_star: Vec<f64>,
-}
-
-impl Scratch {
-    fn new(l: usize, v: usize) -> Self {
-        Self {
-            probs: vec![0.0; l * v],
-            probs_star: vec![0.0; l * v],
-        }
-    }
-}
-
-/// Per-lane sampler state: the token buffer, the shrinking active list and
-/// the per-scheme staging buffers — everything the apply phases mutate.
-struct LaneState {
-    tokens: Vec<Tok>,
-    /// Sorted positions still masked at the start of the current stage.
-    active: Vec<usize>,
-    /// Stage-2 evaluation subset (two-stage schemes), rebuilt every step.
-    sub: Vec<usize>,
-    /// Combined-intensity row scratch (two-stage schemes).
-    comb: Vec<f64>,
-    /// (confidence, position, token) scratch for parallel decoding.
-    scored: Vec<(f64, usize, Tok)>,
-    stats: GenStats,
-}
-
-impl LaneState {
-    fn new(l: usize, v: usize, mask: Tok) -> Self {
-        Self {
-            tokens: vec![mask; l],
-            active: (0..l).collect(),
-            sub: Vec::with_capacity(l),
-            comb: vec![0.0; v],
-            scored: Vec::with_capacity(l),
-            stats: GenStats::default(),
-        }
-    }
-}
-
-fn validate_solver(solver: Solver) {
-    match solver {
-        Solver::Trapezoidal { theta } => {
-            assert!(
-                theta > 0.0 && theta < 1.0,
-                "trapezoidal needs theta in (0,1)"
-            );
-        }
-        Solver::Rk2 { theta } => {
-            assert!(theta > 0.0 && theta <= 1.0, "rk2 needs theta in (0,1]");
-        }
-        _ => {}
-    }
-}
+use crate::util::threadpool::{par_map_indexed, ThreadPool};
 
 /// Generate one sequence with the given solver over the forward-time grid
 /// (strictly decreasing, ending at the early-stop time δ).
+/// [`Solver::Exact`] ignores the interior grid points (only δ matters).
 pub fn generate<S: ScoreSource + ?Sized, R: Rng>(
     score: &S,
     solver: Solver,
     grid: &[f64],
     rng: &mut R,
 ) -> (Vec<Tok>, GenStats) {
-    assert!(crate::solvers::grid::is_valid_grid(grid), "invalid time grid");
-    validate_solver(solver);
-    let l = score.seq_len();
-    let v = score.vocab();
-    let mask = score.mask_id();
-    let mut st = LaneState::new(l, v, mask);
-    let mut sc = Scratch::new(l, v);
-
-    match solver {
-        Solver::ParallelDecoding => {
-            let n_steps = grid.len() - 1;
-            for n in 0..n_steps {
-                if st.active.is_empty() {
-                    break;
-                }
-                let (k_reveal, t) = pd_schedule(l, st.active.len(), n, n_steps);
-                if k_reveal == 0 {
-                    continue;
-                }
-                let m = st.active.len();
-                score.probs_masked_into(&st.tokens, &st.active, t, &mut sc.probs[..m * v]);
-                st.stats.nfe += 1;
-                st.stats.steps += 1;
-                pd_apply(v, mask, t, k_reveal, &sc.probs, &mut st, rng);
-            }
-        }
-        _ => {
-            for w in grid.windows(2) {
-                let (t, t_next) = (w[0], w[1]);
-                let m = st.active.len();
-                if m > 0 {
-                    score.probs_masked_into(&st.tokens, &st.active, t, &mut sc.probs[..m * v]);
-                    apply_stage1(solver, v, t, t_next, &mut st, &mut sc, rng);
-                    if solver.nfe_per_step() == 2 {
-                        if !st.sub.is_empty() {
-                            let rho = stage2_time(solver, t, t_next);
-                            let m2 = st.sub.len();
-                            score.probs_masked_into(
-                                &st.tokens,
-                                &st.sub,
-                                rho,
-                                &mut sc.probs_star[..m2 * v],
-                            );
-                        }
-                        apply_stage2(solver, v, mask, t, t_next, &mut st, &mut sc, rng);
-                    }
-                }
-                st.stats.steps += 1;
-            }
-        }
+    if matches!(solver, Solver::Exact) {
+        assert!(crate::schedule::grid::is_valid_grid(grid), "invalid time grid");
+        let (toks, stats, _) = fhs_generate(score, *grid.last().unwrap(), rng);
+        return (toks, stats);
     }
-
-    finalize(score, *grid.last().unwrap(), &mut st, &mut sc.probs, rng);
-    (st.tokens, st.stats)
-}
-
-/// One lane of a lock-step batch: sampler state plus its seeded stream.
-struct BatchLane {
-    state: LaneState,
-    rng: Xoshiro256,
-}
-
-/// Which index list a stage evaluates.
-enum Sel {
-    Active,
-    Sub,
-    Pd { n: usize, n_steps: usize },
-}
-
-fn selected<'a>(sel: &Sel, st: &'a LaneState) -> Option<&'a [usize]> {
-    match sel {
-        Sel::Active => (!st.active.is_empty()).then(|| st.active.as_slice()),
-        Sel::Sub => (!st.sub.is_empty()).then(|| st.sub.as_slice()),
-        Sel::Pd { n, n_steps } => {
-            if st.active.is_empty() {
-                return None;
-            }
-            let (k, _) = pd_schedule(st.tokens.len(), st.active.len(), *n, *n_steps);
-            (k > 0).then(|| st.active.as_slice())
-        }
-    }
-}
-
-/// One batched score call covering every lane the selector picks.
-fn eval_stage<S: ScoreSource + ?Sized>(
-    score: &S,
-    lanes: &[BatchLane],
-    bufs: &mut [Scratch],
-    t: f64,
-    sel: &Sel,
-    star: bool,
-) {
-    let v = score.vocab();
-    let mut reqs: Vec<(&[Tok], &[usize])> = Vec::new();
-    let mut outs: Vec<&mut [f64]> = Vec::new();
-    for (lane, sc) in lanes.iter().zip(bufs.iter_mut()) {
-        let Some(idx) = selected(sel, &lane.state) else {
-            continue;
-        };
-        let buf = if star { &mut sc.probs_star } else { &mut sc.probs };
-        reqs.push((lane.state.tokens.as_slice(), idx));
-        outs.push(&mut buf[..idx.len() * v]);
-    }
-    if !reqs.is_empty() {
-        score.probs_masked_batch(&reqs, t, &mut outs);
-    }
+    dispatch_masked_kernel!(solver, k => {
+        let (toks, stats, _) =
+            driver::run_single::<MaskedFamily<S>, _, _>(score, &k, Schedule::Fixed(grid), rng);
+        (toks, stats)
+    })
 }
 
 /// Generate B sequences in lock-step, one batched score call per stage.
 ///
 /// Lane b is seeded with `Xoshiro256::seed_from_u64(seeds[b])` and its
 /// output is bit-identical to `generate(score, solver, grid, &mut that_rng)`
-/// — batching is a pure throughput optimisation.  Score evaluation is
-/// amortised through [`ScoreSource::probs_masked_batch`] (one PJRT dispatch
-/// per stage for artifact scores, threaded fan-out for oracles) and the
-/// sampling applies run across the threadpool's scoped workers with
-/// deterministic lane chunking.
+/// — batching is a pure throughput optimisation.  [`Solver::Exact`] runs
+/// the per-lane first-hitting sampler across the threadpool (its jump times
+/// differ per lane, so there is nothing to co-batch).
 pub fn generate_batch<S: ScoreSource + ?Sized>(
     score: &S,
     solver: Solver,
     grid: &[f64],
     seeds: &[u64],
 ) -> Vec<(Vec<Tok>, GenStats)> {
-    assert!(crate::solvers::grid::is_valid_grid(grid), "invalid time grid");
-    validate_solver(solver);
-    if seeds.is_empty() {
-        return Vec::new();
+    if matches!(solver, Solver::Exact) {
+        assert!(crate::schedule::grid::is_valid_grid(grid), "invalid time grid");
+        if seeds.is_empty() {
+            return Vec::new();
+        }
+        let delta = *grid.last().unwrap();
+        let threads = ThreadPool::default_size().min(seeds.len());
+        return par_map_indexed(seeds.len(), threads, |i| {
+            let mut rng = Xoshiro256::seed_from_u64(seeds[i]);
+            let (toks, stats, _) = fhs_generate(score, delta, &mut rng);
+            (toks, stats)
+        });
     }
-    let l = score.seq_len();
-    let v = score.vocab();
-    let mask = score.mask_id();
-    let threads = ThreadPool::default_size().min(seeds.len());
-
-    let mut lanes: Vec<BatchLane> = seeds
-        .iter()
-        .map(|&s| BatchLane {
-            state: LaneState::new(l, v, mask),
-            rng: Xoshiro256::seed_from_u64(s),
-        })
-        .collect();
-    let mut bufs: Vec<Scratch> = seeds.iter().map(|_| Scratch::new(l, v)).collect();
-
-    match solver {
-        Solver::ParallelDecoding => {
-            let n_steps = grid.len() - 1;
-            for n in 0..n_steps {
-                let t = pd_time(n, n_steps);
-                eval_stage(score, &lanes, &mut bufs, t, &Sel::Pd { n, n_steps }, false);
-                par_zip_mut2(&mut lanes, &mut bufs, threads, |_, lane, sc| {
-                    let st = &mut lane.state;
-                    if st.active.is_empty() {
-                        return;
-                    }
-                    let (k_reveal, t) = pd_schedule(l, st.active.len(), n, n_steps);
-                    if k_reveal == 0 {
-                        return;
-                    }
-                    st.stats.nfe += 1;
-                    st.stats.steps += 1;
-                    pd_apply(v, mask, t, k_reveal, &sc.probs, st, &mut lane.rng);
-                });
-            }
-        }
-        _ => {
-            for w in grid.windows(2) {
-                let (t, t_next) = (w[0], w[1]);
-                eval_stage(score, &lanes, &mut bufs, t, &Sel::Active, false);
-                par_zip_mut2(&mut lanes, &mut bufs, threads, |_, lane, sc| {
-                    if !lane.state.active.is_empty() {
-                        apply_stage1(solver, v, t, t_next, &mut lane.state, sc, &mut lane.rng);
-                    }
-                });
-                if solver.nfe_per_step() == 2 {
-                    let rho = stage2_time(solver, t, t_next);
-                    eval_stage(score, &lanes, &mut bufs, rho, &Sel::Sub, true);
-                    par_zip_mut2(&mut lanes, &mut bufs, threads, |_, lane, sc| {
-                        // Stage 2 runs wherever stage 1 ran this window.
-                        // Two-stage schemes never shrink `active` during
-                        // stage 1, so non-empty `active` is exactly that
-                        // condition — and the RK-2 combine must run even
-                        // with an empty stage-2 subset (mu* = 0 everywhere).
-                        if !lane.state.active.is_empty() {
-                            apply_stage2(
-                                solver,
-                                v,
-                                mask,
-                                t,
-                                t_next,
-                                &mut lane.state,
-                                sc,
-                                &mut lane.rng,
-                            );
-                        }
-                    });
-                }
-                for lane in &mut lanes {
-                    lane.state.stats.steps += 1;
-                }
-            }
-        }
-    }
-
-    let delta = *grid.last().unwrap();
-    eval_stage(score, &lanes, &mut bufs, delta, &Sel::Active, false);
-    par_zip_mut2(&mut lanes, &mut bufs, threads, |_, lane, sc| {
-        let st = &mut lane.state;
-        if st.active.is_empty() {
-            return;
-        }
-        st.stats.nfe += 1;
-        finalize_apply(v, &sc.probs, st, &mut lane.rng);
-    });
-
-    lanes
-        .into_iter()
-        .map(|lane| (lane.state.tokens, lane.state.stats))
-        .collect()
-}
-
-/// Per-step local error estimate for one lane of a θ-scheme: the maximum
-/// per-dimension jump-probability discrepancy between the scheme's
-/// composite two-stage gate and its first-order Euler predictor (see
-/// `schedule::adaptive`).  Read off the stage buffers after the stage-2
-/// evaluation and BEFORE `apply_stage2` (which consumes `sub`); draws no
-/// randomness, so adaptive and fixed-grid runs share RNG streams exactly.
-fn lane_step_error(
-    solver: Solver,
-    v: usize,
-    t: f64,
-    t_next: f64,
-    st: &LaneState,
-    sc: &Scratch,
-) -> f64 {
-    let dt = t - t_next;
-    let rho = stage2_time(solver, t, t_next);
-    let mu_tot = 1.0 / t; // per masked dim under the log-linear schedule
-    match solver {
-        Solver::Trapezoidal { theta } => {
-            let a1 = 1.0 / (2.0 * theta * (1.0 - theta));
-            let a2 = a1 - 1.0;
-            let mut err = 0.0f64;
-            for j in 0..st.sub.len() {
-                let mut tot = 0.0;
-                for c in 0..v {
-                    let mu_star = sc.probs_star[j * v + c] / rho;
-                    let mu_t = sc.probs[j * v + c] / t;
-                    tot += (a1 * mu_star - a2 * mu_t).max(0.0);
-                }
-                err = err.max(trap_gate_discrepancy(theta, dt, mu_tot, tot));
-            }
-            err
-        }
-        Solver::Rk2 { theta } => {
-            let w_coef = 1.0 / (2.0 * theta);
-            let mut err = 0.0f64;
-            let mut j = 0usize;
-            for (k, &i) in st.active.iter().enumerate() {
-                let star = j < st.sub.len() && st.sub[j] == i;
-                let mut tot = 0.0;
-                for c in 0..v {
-                    let mu_t = sc.probs[k * v + c] / t;
-                    let mu_star = if star {
-                        sc.probs_star[j * v + c] / rho
-                    } else {
-                        0.0
-                    };
-                    tot += ((1.0 - w_coef) * mu_t + w_coef * mu_star).max(0.0);
-                }
-                if star {
-                    j += 1;
-                }
-                err = err.max(rk2_gate_discrepancy(dt, mu_tot, tot));
-            }
-            err
-        }
-        _ => unreachable!("error estimator needs a two-stage solver"),
-    }
+    dispatch_masked_kernel!(solver, k => {
+        driver::run_batch::<MaskedFamily<S>, _>(score, &k, Schedule::Fixed(grid), seeds).0
+    })
 }
 
 fn validate_adaptive(solver: Solver, delta: f64) {
-    validate_solver(solver);
     assert!(
         solver.nfe_per_step() == 2,
         "adaptive schedules need the embedded two-stage estimator \
@@ -428,50 +146,19 @@ fn validate_adaptive(solver: Solver, delta: f64) {
 pub fn generate_adaptive<S: ScoreSource + ?Sized, R: Rng>(
     score: &S,
     solver: Solver,
-    mut ctl: StepController,
+    ctl: StepController,
     delta: f64,
     rng: &mut R,
 ) -> (Vec<Tok>, GenStats, AdaptiveTrace) {
     validate_adaptive(solver, delta);
-    let v = score.vocab();
-    let mask = score.mask_id();
-    let mut st = LaneState::new(score.seq_len(), v, mask);
-    let mut sc = Scratch::new(score.seq_len(), v);
-    let mut trace = AdaptiveTrace { grid: vec![1.0], errors: Vec::new() };
-    let mut t = 1.0f64;
-
-    while let Some(dt) = ctl.propose_dt(t, delta, st.stats.nfe) {
-        let t_next = if dt >= t - delta { delta } else { t - dt };
-        let m = st.active.len();
-        let mut err = 0.0;
-        if m > 0 {
-            score.probs_masked_into(&st.tokens, &st.active, t, &mut sc.probs[..m * v]);
-            apply_stage1(solver, v, t, t_next, &mut st, &mut sc, rng);
-            if !st.sub.is_empty() {
-                let rho = stage2_time(solver, t, t_next);
-                let m2 = st.sub.len();
-                score.probs_masked_into(
-                    &st.tokens,
-                    &st.sub,
-                    rho,
-                    &mut sc.probs_star[..m2 * v],
-                );
-            }
-            err = lane_step_error(solver, v, t, t_next, &st, &sc);
-            apply_stage2(solver, v, mask, t, t_next, &mut st, &mut sc, rng);
-        }
-        st.stats.steps += 1;
-        trace.grid.push(t_next);
-        trace.errors.push(err);
-        ctl.observe(err);
-        t = t_next;
-        if st.active.is_empty() {
-            break;
-        }
-    }
-
-    finalize(score, t, &mut st, &mut sc.probs, rng);
-    (st.tokens, st.stats, trace)
+    dispatch_masked_kernel!(solver, k => {
+        driver::run_single::<MaskedFamily<S>, _, _>(
+            score,
+            &k,
+            Schedule::Adaptive { ctl, delta },
+            rng,
+        )
+    })
 }
 
 /// Batched adaptive generation: B lanes step in lock-step over ONE shared
@@ -486,447 +173,31 @@ pub fn generate_adaptive<S: ScoreSource + ?Sized, R: Rng>(
 pub fn generate_batch_adaptive<S: ScoreSource + ?Sized>(
     score: &S,
     solver: Solver,
-    mut ctl: StepController,
+    ctl: StepController,
     delta: f64,
     seeds: &[u64],
 ) -> (Vec<(Vec<Tok>, GenStats)>, AdaptiveTrace) {
     validate_adaptive(solver, delta);
-    if seeds.is_empty() {
-        return (Vec::new(), AdaptiveTrace::default());
-    }
-    let l = score.seq_len();
-    let v = score.vocab();
-    let mask = score.mask_id();
-    let threads = ThreadPool::default_size().min(seeds.len());
-    let mut lanes: Vec<BatchLane> = seeds
-        .iter()
-        .map(|&s| BatchLane {
-            state: LaneState::new(l, v, mask),
-            rng: Xoshiro256::seed_from_u64(s),
-        })
-        .collect();
-    let mut bufs: Vec<Scratch> = seeds.iter().map(|_| Scratch::new(l, v)).collect();
-    let mut trace = AdaptiveTrace { grid: vec![1.0], errors: Vec::new() };
-    let mut t = 1.0f64;
-
-    loop {
-        let spent = lanes.iter().map(|l| l.state.stats.nfe).max().unwrap_or(0);
-        let Some(dt) = ctl.propose_dt(t, delta, spent) else { break };
-        let t_next = if dt >= t - delta { delta } else { t - dt };
-        eval_stage(score, &lanes, &mut bufs, t, &Sel::Active, false);
-        par_zip_mut2(&mut lanes, &mut bufs, threads, |_, lane, sc| {
-            if !lane.state.active.is_empty() {
-                apply_stage1(solver, v, t, t_next, &mut lane.state, sc, &mut lane.rng);
-            }
-        });
-        let rho = stage2_time(solver, t, t_next);
-        eval_stage(score, &lanes, &mut bufs, rho, &Sel::Sub, true);
-        // The dt vote: worst estimated error across lanes, read before
-        // apply_stage2 consumes the stage buffers.
-        let mut err = 0.0f64;
-        for (lane, sc) in lanes.iter().zip(&bufs) {
-            if !lane.state.active.is_empty() {
-                err = err.max(lane_step_error(solver, v, t, t_next, &lane.state, sc));
-            }
-        }
-        par_zip_mut2(&mut lanes, &mut bufs, threads, |_, lane, sc| {
-            if !lane.state.active.is_empty() {
-                apply_stage2(solver, v, mask, t, t_next, &mut lane.state, sc, &mut lane.rng);
-            }
-        });
-        for lane in &mut lanes {
-            lane.state.stats.steps += 1;
-        }
-        trace.grid.push(t_next);
-        trace.errors.push(err);
-        ctl.observe(err);
-        t = t_next;
-        if lanes.iter().all(|l| l.state.active.is_empty()) {
-            break;
-        }
-    }
-
-    eval_stage(score, &lanes, &mut bufs, t, &Sel::Active, false);
-    par_zip_mut2(&mut lanes, &mut bufs, threads, |_, lane, sc| {
-        let st = &mut lane.state;
-        if st.active.is_empty() {
-            return;
-        }
-        st.stats.nfe += 1;
-        finalize_apply(v, &sc.probs, st, &mut lane.rng);
-    });
-
-    (
-        lanes
-            .into_iter()
-            .map(|lane| (lane.state.tokens, lane.state.stats))
-            .collect(),
-        trace,
-    )
-}
-
-#[derive(Clone, Copy)]
-enum Gate {
-    Linear,
-    Poisson,
-    Exact,
-}
-
-impl Gate {
-    /// Unmask probability for a masked dim over [t', t] with mu_tot = 1/t.
-    #[inline]
-    fn prob(self, t: f64, t_next: f64) -> f64 {
-        let dt = t - t_next;
-        match self {
-            Gate::Linear => (dt / t).min(1.0),
-            Gate::Poisson => 1.0 - (-dt / t).exp(),
-            Gate::Exact => dt / t,
-        }
-    }
-}
-
-/// θ-section point of the two-stage schemes: ρ = t - θΔ.
-fn stage2_time(solver: Solver, t: f64, t_next: f64) -> f64 {
-    match solver {
-        Solver::Trapezoidal { theta } | Solver::Rk2 { theta } => t - theta * (t - t_next),
-        _ => unreachable!("stage2_time on a one-stage solver"),
-    }
-}
-
-/// Apply the stage-1 sampling update for one lane.  Precondition: the lane's
-/// active set is non-empty and `sc.probs[..active.len() * v]` holds its
-/// compact rows at time t (that evaluation is charged here).  Two-stage
-/// schemes leave their stage-2 eval subset in `st.sub`; `st.sub` is cleared
-/// for one-stage schemes.
-#[allow(clippy::too_many_arguments)]
-fn apply_stage1<R: Rng>(
-    solver: Solver,
-    v: usize,
-    t: f64,
-    t_next: f64,
-    st: &mut LaneState,
-    sc: &mut Scratch,
-    rng: &mut R,
-) {
-    debug_assert!(!st.active.is_empty());
-    st.stats.nfe += 1;
-    let dt = t - t_next;
-    match solver {
-        Solver::Euler | Solver::TauLeaping | Solver::Tweedie => {
-            st.sub.clear();
-            let gate = match solver {
-                Solver::Euler => Gate::Linear,
-                Solver::TauLeaping => Gate::Poisson,
-                _ => Gate::Exact,
-            };
-            one_stage_apply(v, gate.prob(t, t_next), &sc.probs, &mut st.tokens, &mut st.active, rng);
-        }
-        Solver::Trapezoidal { theta } => {
-            // Stage 1 of Alg. 2: τ-leap for θΔ with mu_t = probs / t; rows
-            // of survivors are compacted in place so stage 2 indexes them
-            // by their position in `sub`.
-            let p1 = 1.0 - (-(theta * dt) / t).exp();
-            st.sub.clear();
-            for k in 0..st.active.len() {
-                let i = st.active[k];
-                let mut still_masked = true;
-                if rng.gen_f64() < p1 {
-                    if let Some(tok) = categorical(rng, &sc.probs[k * v..(k + 1) * v]) {
-                        st.tokens[i] = tok as Tok;
-                        still_masked = false;
-                    }
-                }
-                if still_masked {
-                    let w = st.sub.len();
-                    if w != k {
-                        sc.probs.copy_within(k * v..(k + 1) * v, w * v);
-                    }
-                    st.sub.push(i);
-                }
-            }
-        }
-        Solver::Rk2 { theta } => {
-            // Stage 1 of Alg. 4: τ-leap for θΔ building y* in place.  All
-            // stage-1 rows stay aligned with `active` (stage 2 needs every
-            // mu_t row); `sub` collects the dims still masked in y*.
-            let p1 = 1.0 - (-(theta * dt) / t).exp();
-            st.sub.clear();
-            for (k, &i) in st.active.iter().enumerate() {
-                let mut still_masked = true;
-                if rng.gen_f64() < p1 {
-                    if let Some(tok) = categorical(rng, &sc.probs[k * v..(k + 1) * v]) {
-                        st.tokens[i] = tok as Tok;
-                        still_masked = false;
-                    }
-                }
-                if still_masked {
-                    st.sub.push(i);
-                }
-            }
-        }
-        Solver::ParallelDecoding => unreachable!("parallel decoding has its own loop"),
-    }
-}
-
-/// Apply the stage-2 update for a two-stage lane.  Precondition: stage 1
-/// ran this step; when `st.sub` is non-empty, `sc.probs_star[..sub.len()*v]`
-/// holds its compact rows at ρ (that evaluation is charged here).
-#[allow(clippy::too_many_arguments)]
-fn apply_stage2<R: Rng>(
-    solver: Solver,
-    v: usize,
-    mask: Tok,
-    t: f64,
-    t_next: f64,
-    st: &mut LaneState,
-    sc: &mut Scratch,
-    rng: &mut R,
-) {
-    let dt = t - t_next;
-    let rho = stage2_time(solver, t, t_next);
-    match solver {
-        Solver::Trapezoidal { theta } => {
-            if st.sub.is_empty() {
-                // Everything unmasked in stage 1: no survivor has positive
-                // intensity, the step is done.
-                st.active.clear();
-                return;
-            }
-            st.stats.nfe += 1; // the ρ evaluation over `sub`
-            let a1 = 1.0 / (2.0 * theta * (1.0 - theta));
-            let a2 = a1 - 1.0;
-            let tail = (1.0 - theta) * dt;
-            st.active.clear();
-            for (j, &i) in st.sub.iter().enumerate() {
-                // Combined per-token intensity (α1 μ*_ρ - α2 μ_t)+; the μ_t
-                // row was compacted to slot j in stage 1.
-                let mut tot = 0.0;
-                for c in 0..v {
-                    let mu_star = sc.probs_star[j * v + c] / rho;
-                    let mu_t = sc.probs[j * v + c] / t;
-                    let m = (a1 * mu_star - a2 * mu_t).max(0.0);
-                    st.comb[c] = m;
-                    tot += m;
-                }
-                let p2 = 1.0 - (-tot * tail).exp();
-                let mut still_masked = true;
-                if rng.gen_f64() < p2 {
-                    if let Some(tok) = categorical(rng, &st.comb) {
-                        st.tokens[i] = tok as Tok;
-                        still_masked = false;
-                    }
-                }
-                if still_masked {
-                    st.active.push(i);
-                }
-            }
-            // `sub` is consumed: clear it so a finished lane can never be
-            // re-selected for a stage-2 eval by the batch driver.
-            st.sub.clear();
-        }
-        Solver::Rk2 { theta } => {
-            if !st.sub.is_empty() {
-                st.stats.nfe += 1;
-            }
-            let w_coef = 1.0 / (2.0 * theta);
-            // Alg. 4 restarts from y_{s_n}: re-mask every originally
-            // masked dim (stage-1 reveals only enter through μ*).
-            for &i in st.active.iter() {
-                st.tokens[i] = mask;
-            }
-            let m = st.active.len();
-            let mut j = 0usize; // pointer into sub (dims masked in y*)
-            let mut w = 0usize; // in-place retain cursor
-            for k in 0..m {
-                let i = st.active[k];
-                let star = j < st.sub.len() && st.sub[j] == i;
-                let mut tot = 0.0;
-                for c in 0..v {
-                    let mu_t = sc.probs[k * v + c] / t;
-                    let mu_star = if star {
-                        sc.probs_star[j * v + c] / rho
-                    } else {
-                        0.0
-                    };
-                    let mc = ((1.0 - w_coef) * mu_t + w_coef * mu_star).max(0.0);
-                    st.comb[c] = mc;
-                    tot += mc;
-                }
-                if star {
-                    j += 1;
-                }
-                let p2 = 1.0 - (-tot * dt).exp();
-                let mut still_masked = true;
-                if rng.gen_f64() < p2 {
-                    if let Some(tok) = categorical(rng, &st.comb) {
-                        st.tokens[i] = tok as Tok;
-                        still_masked = false;
-                    }
-                }
-                if still_masked {
-                    st.active[w] = i;
-                    w += 1;
-                }
-            }
-            st.active.truncate(w);
-            st.sub.clear();
-        }
-        _ => unreachable!("apply_stage2 on a one-stage solver"),
-    }
-}
-
-/// One-stage gate-and-sample over the active list, shrinking it in place.
-fn one_stage_apply<R: Rng>(
-    v: usize,
-    p_gate: f64,
-    probs: &[f64],
-    tokens: &mut [Tok],
-    active: &mut Vec<usize>,
-    rng: &mut R,
-) {
-    let m = active.len();
-    let mut w = 0usize;
-    for k in 0..m {
-        let i = active[k];
-        let mut still_masked = true;
-        if rng.gen_f64() < p_gate {
-            if let Some(tok) = categorical(rng, &probs[k * v..(k + 1) * v]) {
-                tokens[i] = tok as Tok;
-                still_masked = false;
-            }
-        }
-        if still_masked {
-            active[w] = i;
-            w += 1;
-        }
-    }
-    active.truncate(w);
-}
-
-/// MaskGIT parallel-decoding schedule (App. D.4): how many dims to reveal
-/// at step n of n_steps given m currently masked, plus the
-/// remaining-time temperature used for both the eval and the Gumbel noise.
-fn pd_schedule(l: usize, m: usize, n: usize, n_steps: usize) -> (usize, f64) {
-    let frac = (n + 1) as f64 / n_steps as f64;
-    let target = if n + 1 == n_steps {
-        0
-    } else {
-        ((std::f64::consts::FRAC_PI_2 * frac).cos() * l as f64).ceil() as usize
-    };
-    (m.saturating_sub(target), pd_time(n, n_steps))
-}
-
-/// Remaining-time temperature of parallel-decoding step n — the single
-/// definition shared by the per-lane schedule and the batch eval driver.
-fn pd_time(n: usize, n_steps: usize) -> f64 {
-    1.0 - n as f64 / n_steps as f64
-}
-
-/// Sample every active position, score by randomised confidence, commit the
-/// top `k_reveal`, and shrink the active list (order preserved).
-#[allow(clippy::too_many_arguments)]
-fn pd_apply<R: Rng>(
-    v: usize,
-    mask: Tok,
-    t: f64,
-    k_reveal: usize,
-    probs: &[f64],
-    st: &mut LaneState,
-    rng: &mut R,
-) {
-    st.scored.clear();
-    for (k, &i) in st.active.iter().enumerate() {
-        let row = &probs[k * v..(k + 1) * v];
-        let tok = categorical(rng, row).unwrap_or(0);
-        let conf = row[tok].max(1e-30).ln() + t * crate::util::dist::gumbel(rng, 1e-9);
-        st.scored.push((conf, i, tok as Tok));
-    }
-    st.scored
-        .sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-    for &(_, i, tok) in st.scored.iter().take(k_reveal) {
-        st.tokens[i] = tok;
-    }
-    let tokens = &st.tokens;
-    st.active.retain(|&i| tokens[i] == mask);
-}
-
-/// Shared terminal denoise: sample any still-masked dim from its conditional
-/// at the early-stop time.  One NFE when it fires.
-fn finalize<S: ScoreSource + ?Sized, R: Rng>(
-    score: &S,
-    delta: f64,
-    st: &mut LaneState,
-    probs: &mut Vec<f64>,
-    rng: &mut R,
-) {
-    if st.active.is_empty() {
-        return;
-    }
-    let v = score.vocab();
-    let m = st.active.len();
-    if probs.len() < m * v {
-        probs.resize(m * v, 0.0);
-    }
-    score.probs_masked_into(&st.tokens, &st.active, delta, &mut probs[..m * v]);
-    st.stats.nfe += 1;
-    finalize_apply(v, probs, st, rng);
-}
-
-fn finalize_apply<R: Rng>(v: usize, probs: &[f64], st: &mut LaneState, rng: &mut R) {
-    for (k, &i) in st.active.iter().enumerate() {
-        let row = &probs[k * v..(k + 1) * v];
-        if let Some(tok) = categorical(rng, row) {
-            st.tokens[i] = tok as Tok;
-        } else {
-            st.tokens[i] = rng.gen_usize(v) as Tok;
-        }
-    }
-    st.active.clear();
+    dispatch_masked_kernel!(solver, k => {
+        driver::run_batch::<MaskedFamily<S>, _>(score, &k, Schedule::Adaptive { ctl, delta }, seeds)
+    })
 }
 
 /// First-Hitting Sampler (Zheng et al. 2024) — exact simulation for the
-/// absorbing case (Sec. 3.1).  With m masked dims at forward time t the next
-/// unmask time satisfies P(no event until s) = (s/t)^m, so s = t u^{1/m};
-/// one uniformly chosen dim is then revealed from its exact conditional.
-/// NFE equals the number of unmask events (= seq_len without early stop),
-/// and each evaluation asks the score source for a single row — the
-/// largest single win of the sparse path (O(V) instead of O(L·V) row work
-/// per event).
+/// absorbing case (Sec. 3.1), i.e. [`Solver::Exact`]'s masked-family
+/// implementation ([`StateFamily::exact`]).  With m masked dims at forward
+/// time t the next unmask time satisfies P(no event until s) = (s/t)^m, so
+/// s = t u^{1/m}; one uniformly chosen dim is then revealed from its exact
+/// conditional.  NFE equals the number of unmask events (= seq_len without
+/// early stop), and each evaluation asks the score source for a single row
+/// — the largest single win of the sparse path (O(V) instead of O(L·V) row
+/// work per event).
 pub fn fhs_generate<S: ScoreSource + ?Sized, R: Rng>(
     score: &S,
     delta: f64,
     rng: &mut R,
 ) -> (Vec<Tok>, GenStats, Vec<f64>) {
-    let l = score.seq_len();
-    let v = score.vocab();
-    let mask = score.mask_id();
-    let mut st = LaneState::new(l, v, mask);
-    let mut jump_times = Vec::with_capacity(l);
-    let mut row = vec![0.0; v];
-
-    let mut t = 1.0;
-    loop {
-        if st.active.is_empty() {
-            break;
-        }
-        let m = st.active.len() as f64;
-        t *= rng.gen_f64().powf(1.0 / m);
-        if t <= delta {
-            break;
-        }
-        let pos = rng.gen_usize(st.active.len());
-        let i = st.active[pos];
-        score.probs_masked_into(&st.tokens, &st.active[pos..pos + 1], t, &mut row);
-        st.stats.nfe += 1;
-        st.stats.steps += 1;
-        if let Some(tok) = categorical(rng, &row) {
-            st.tokens[i] = tok as Tok;
-            st.active.remove(pos);
-        }
-        jump_times.push(t);
-    }
-    finalize(score, delta, &mut st, &mut row, rng);
-    (st.tokens, st.stats, jump_times)
+    <MaskedFamily<S> as StateFamily>::exact(score, delta, rng)
 }
 
 #[cfg(test)]
@@ -950,6 +221,7 @@ mod tests {
             Solver::Trapezoidal { theta: 0.5 },
             Solver::Rk2 { theta: 0.3 },
             Solver::ParallelDecoding,
+            Solver::Exact,
         ]
     }
 
@@ -1035,10 +307,26 @@ mod tests {
         let o = oracle();
         let grid = masked_uniform(6, 1e-3);
         assert!(generate_batch(&o, Solver::Euler, &grid, &[]).is_empty());
+        assert!(generate_batch(&o, Solver::Exact, &grid, &[]).is_empty());
         let one = generate_batch(&o, Solver::Tweedie, &grid, &[7]);
         let mut rng = Xoshiro256::seed_from_u64(7);
         let (toks, _) = generate(&o, Solver::Tweedie, &grid, &mut rng);
         assert_eq!(one[0].0, toks);
+    }
+
+    #[test]
+    fn exact_via_generate_matches_fhs() {
+        let o = oracle();
+        let grid = masked_uniform(8, 1e-3);
+        let mut r1 = Xoshiro256::seed_from_u64(41);
+        let (toks, stats) = generate(&o, Solver::Exact, &grid, &mut r1);
+        let mut r2 = Xoshiro256::seed_from_u64(41);
+        let (want, wstats, times) = fhs_generate(&o, 1e-3, &mut r2);
+        assert_eq!(toks, want);
+        assert_eq!(stats.nfe, wstats.nfe);
+        // Realized NFE = unmask events (+ at most one finalize eval).
+        assert!(stats.nfe >= 1 && stats.nfe <= 17, "nfe={}", stats.nfe);
+        assert!(times.len() <= 16);
     }
 
     #[test]
@@ -1160,6 +448,13 @@ mod tests {
         let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             let mut rng = Xoshiro256::seed_from_u64(1);
             generate_adaptive(&o, Solver::Euler, StepController::new(cfg, 0.1), 1e-3, &mut rng)
+        }));
+        assert!(res.is_err());
+        // Exact has no embedded estimator either.
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let cfg = AdaptiveController::for_span(1e-3, 1.0, 1e-3);
+            let mut rng = Xoshiro256::seed_from_u64(1);
+            generate_adaptive(&o, Solver::Exact, StepController::new(cfg, 0.1), 1e-3, &mut rng)
         }));
         assert!(res.is_err());
     }

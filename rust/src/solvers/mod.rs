@@ -3,15 +3,53 @@
 //! Approximate schemes (Sec. 3.2/4): Euler, τ-leaping (Alg. 3), Tweedie
 //! τ-leaping, **θ-trapezoidal (Alg. 2)** and **θ-RK-2 (practical Alg. 4)** —
 //! the paper's contributions — plus parallel decoding (Chang et al. 2022).
-//! Exact schemes (Sec. 3.1): the first-hitting sampler for the absorbing
-//! case ([`masked::fhs_generate`]) and uniformization
-//! ([`crate::ctmc::uniformization`]).
+//! Exact schemes (Sec. 3.1) are a first-class [`Solver::Exact`] variant:
+//! the first-hitting sampler for the absorbing case and uniformization for
+//! the toy CTMC, servable through the batcher/scheduler/server like any
+//! approximate scheme, with the realized jump count reported as NFE.
+//!
+//! ## Architecture: kernel × family × driver
+//!
+//! Every sampler is the same loop — per-step transition kernels driven over
+//! a time grid (the stochastic-integral view of Ren et al. 2024) — so the
+//! implementation is factored exactly that way:
+//!
+//! ```text
+//!   Solver (enum, request surface)
+//!      │  dispatch (monomorphised per scheme)
+//!      ▼
+//!   SolverKernel  ───────────────  per-step math of ONE scheme:
+//!   │ EulerKernel … Rk2Kernel │    predictor stage, optional corrector
+//!   │ PdKernel                │    stage, jump-probability gates, embedded
+//!   └──────────┬──────────────┘    error estimate (zero extra NFE)
+//!              │ implemented once per state family
+//!              ▼
+//!   StateFamily ────────────────  what a lane IS:
+//!   │ MaskedFamily<S>  │  active-index bookkeeping, masked-sparse
+//!   │                  │  ScoreSource eval (single + batched), terminal
+//!   │                  │  denoise, first-hitting exact path
+//!   │ ToyFamily        │  single uniform-CTMC variable, analytic score,
+//!   │                  │  uniformization exact path
+//!   └──────────┬───────┘
+//!              ▼
+//!   driver::run_single / run_batch ─  THE loop (exactly once):
+//!       fixed-grid + adaptive schedules (schedule::StepController),
+//!       lock-step batch lanes + shared-dt voting, NFE/GenStats
+//!       accounting, RNG stream discipline, terminal finalize.
+//! ```
+//!
+//! [`masked`] and [`toy`] keep the historical entry points as thin shims
+//! over the driver; `tests/golden_parity.rs` pins their outputs bit for bit
+//! against the pre-refactor implementations, and the `driver_direct` rows
+//! in `benches/solver_steps.rs` pin the dispatch overhead at zero.
 //!
 //! Two state families:
 //! - [`masked`]: token sequences under absorbing-state diffusion with the
 //!   log-linear schedule (the text/image experiments, Secs. 6.2-6.4);
 //! - [`toy`]: the Sec. 6.1 single-variable uniform CTMC with analytic score.
 
+pub mod driver;
+pub mod kernel;
 pub mod masked;
 pub mod toy;
 
@@ -31,10 +69,17 @@ pub enum Solver {
     Rk2 { theta: f64 },
     /// MaskGIT-style parallel decoding with the arccos schedule (App. D.4).
     ParallelDecoding,
+    /// Exact simulation (Sec. 3.1): first-hitting for the masked family,
+    /// uniformization for the toy CTMC.  Ignores the time grid except for
+    /// the terminal δ; `GenStats::nfe` reports the realized jump/candidate
+    /// count, which cannot be budgeted a priori.
+    Exact,
 }
 
 impl Solver {
-    /// Score evaluations per grid step (the paper's NFE accounting).
+    /// Score evaluations per grid step (the paper's NFE accounting).  For
+    /// [`Solver::Exact`] the cost per *event* is one evaluation; the total
+    /// is realized, not planned.
     pub fn nfe_per_step(&self) -> usize {
         match self {
             Solver::Trapezoidal { .. } | Solver::Rk2 { .. } => 2,
@@ -55,6 +100,7 @@ impl Solver {
             Solver::Trapezoidal { .. } => "theta-trapezoidal",
             Solver::Rk2 { .. } => "theta-rk2",
             Solver::ParallelDecoding => "parallel-decoding",
+            Solver::Exact => "exact",
         }
     }
 
@@ -68,10 +114,17 @@ impl Solver {
             Solver::Trapezoidal { theta } => format!("trapezoidal:{theta}"),
             Solver::Rk2 { theta } => format!("rk2:{theta}"),
             Solver::ParallelDecoding => "parallel".into(),
+            Solver::Exact => "exact".into(),
         }
     }
 
-    /// Parse e.g. "trapezoidal:0.5", "rk2:0.3", "tau", "euler".
+    /// Parse e.g. "trapezoidal:0.5", "rk2:0.3", "tau", "euler", "exact".
+    ///
+    /// This is the request surface (CLI / server JSON), so θ is validated
+    /// against the paper's second-order ranges: θ ∈ (0, 1) for trapezoidal
+    /// (Thm. 5.4) and θ ∈ (0, 1/2] for RK-2 (Thm. 5.5).  (Experiment
+    /// harnesses sweeping θ outside these ranges construct the enum
+    /// directly — the Fig. 5 sweep shows the degradation past 1/2.)
     pub fn parse(s: &str) -> anyhow::Result<Solver> {
         let (name, theta) = match s.split_once(':') {
             Some((n, t)) => (n, Some(t.parse::<f64>()?)),
@@ -82,9 +135,24 @@ impl Solver {
             "euler" => Solver::Euler,
             "tau" | "tau-leaping" => Solver::TauLeaping,
             "tweedie" => Solver::Tweedie,
-            "trapezoidal" | "trap" => Solver::Trapezoidal { theta: th },
-            "rk2" => Solver::Rk2 { theta: th },
+            "trapezoidal" | "trap" => {
+                if !(th > 0.0 && th < 1.0) {
+                    anyhow::bail!(
+                        "trapezoidal theta {th} outside (0, 1) — second-order range of Thm. 5.4"
+                    );
+                }
+                Solver::Trapezoidal { theta: th }
+            }
+            "rk2" => {
+                if !(th > 0.0 && th <= 0.5) {
+                    anyhow::bail!(
+                        "rk2 theta {th} outside (0, 1/2] — second-order range of Thm. 5.5"
+                    );
+                }
+                Solver::Rk2 { theta: th }
+            }
             "parallel" | "parallel-decoding" => Solver::ParallelDecoding,
+            "exact" | "fhs" | "first-hitting" => Solver::Exact,
             _ => anyhow::bail!("unknown solver {s:?}"),
         })
     }
@@ -95,7 +163,7 @@ impl Solver {
 pub struct GenStats {
     /// Score-function evaluations actually performed.
     pub nfe: usize,
-    /// Grid steps taken.
+    /// Grid steps taken (exact schemes: accepted jump events).
     pub steps: usize,
 }
 
@@ -108,6 +176,7 @@ mod tests {
         assert_eq!(Solver::Euler.nfe_per_step(), 1);
         assert_eq!(Solver::Trapezoidal { theta: 0.5 }.nfe_per_step(), 2);
         assert_eq!(Solver::Rk2 { theta: 0.3 }.nfe_per_step(), 2);
+        assert_eq!(Solver::Exact.nfe_per_step(), 1);
         assert_eq!(Solver::Trapezoidal { theta: 0.5 }.steps_for_nfe(128), 64);
         assert_eq!(Solver::TauLeaping.steps_for_nfe(128), 128);
         assert_eq!(Solver::Tweedie.steps_for_nfe(1), 1);
@@ -122,6 +191,27 @@ mod tests {
         );
         assert_eq!(Solver::parse("rk2:0.25").unwrap(), Solver::Rk2 { theta: 0.25 });
         assert_eq!(Solver::parse("tau").unwrap(), Solver::TauLeaping);
+        assert_eq!(Solver::parse("exact").unwrap(), Solver::Exact);
+        assert_eq!(Solver::parse("fhs").unwrap(), Solver::Exact);
+        assert_eq!(Solver::parse(&Solver::Exact.spec_string()).unwrap(), Solver::Exact);
         assert!(Solver::parse("nope").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_theta_outside_second_order_range() {
+        // Thm. 5.4: trapezoidal needs θ in (0, 1).
+        for bad in ["trapezoidal:0", "trapezoidal:1", "trapezoidal:1.5", "trap:-0.1"] {
+            let err = Solver::parse(bad).unwrap_err();
+            assert!(format!("{err}").contains("theta"), "{bad}: {err}");
+        }
+        // Thm. 5.5: rk2 needs θ in (0, 1/2].
+        for bad in ["rk2:0", "rk2:0.51", "rk2:0.7", "rk2:1.0"] {
+            let err = Solver::parse(bad).unwrap_err();
+            assert!(format!("{err}").contains("theta"), "{bad}: {err}");
+        }
+        assert_eq!(Solver::parse("rk2:0.5").unwrap(), Solver::Rk2 { theta: 0.5 });
+        // NaN never passes a range check.
+        assert!(Solver::parse("trapezoidal:nan").is_err());
+        assert!(Solver::parse("rk2:nan").is_err());
     }
 }

@@ -1,42 +1,24 @@
 //! Solvers for the Sec. 6.1 toy model (single variable, uniform CTMC,
-//! analytic score) — mirrors `python/compile/steps.py` toy_step_* exactly.
+//! analytic score) — thin shims over the unified
+//! [`crate::solvers::driver`], mirroring `python/compile/steps.py`
+//! toy_step_* exactly.
 //!
-//! These drive Fig. 2 (empirical KL vs step count with bootstrap CIs) and
-//! the runtime cross-validation tests (rust vs AOT-artifact numerics).
+//! The per-step math lives in the [`crate::solvers::kernel`] impls of the
+//! [`crate::solvers::kernel::ToyFamily`]; these shims preserve the
+//! historical signatures and are bit-identical to the pre-refactor drivers
+//! (pinned by `tests/golden_parity.rs`).  They drive Fig. 2 (empirical KL
+//! vs step count with bootstrap CIs) and the runtime cross-validation tests
+//! (rust vs AOT-artifact numerics).  [`Solver::Exact`] routes to the
+//! windowed-uniformization baseline ([`exact_sample`]).
 
 use crate::ctmc::ToyModel;
-use crate::schedule::adaptive::{
-    rk2_gate_discrepancy, trap_gate_discrepancy, AdaptiveTrace, StepController,
+use crate::schedule::adaptive::{AdaptiveTrace, StepController};
+use crate::solvers::driver::{self, Schedule};
+use crate::solvers::kernel::{
+    dispatch_toy_kernel, StateFamily, StepMeta, ToyFamily, ToyLane,
 };
 use crate::solvers::{GenStats, Solver};
-use crate::util::dist::categorical_f64;
 use crate::util::rng::Rng;
-
-/// One leaping sub-step: nu-indexed intensities, single event gate.
-fn sub_step<R: Rng>(
-    model: &ToyModel,
-    x: usize,
-    mu: &[f64],
-    dt: f64,
-    poisson_gate: bool,
-    rng: &mut R,
-) -> usize {
-    let tot: f64 = mu.iter().sum();
-    if tot <= 0.0 {
-        return x;
-    }
-    let p = if poisson_gate {
-        1.0 - (-tot * dt).exp()
-    } else {
-        (tot * dt).min(1.0)
-    };
-    if rng.gen_f64() < p {
-        let nu = categorical_f64(rng, mu);
-        (x + nu) % model.n_states()
-    } else {
-        x
-    }
-}
 
 /// Advance one interval [t_next, t] (forward times, t > t_next).
 pub fn step<R: Rng>(
@@ -47,96 +29,39 @@ pub fn step<R: Rng>(
     t_next: f64,
     rng: &mut R,
 ) -> usize {
-    let s = model.n_states();
-    let mut mu = vec![0.0; s];
-    let dt = t - t_next;
-    match solver {
-        Solver::Euler => {
-            model.reverse_intensities(x, t, &mut mu);
-            sub_step(model, x, &mu, dt, false, rng)
-        }
-        Solver::TauLeaping | Solver::Tweedie => {
-            // Tweedie has no separate meaning in the uniform-state toy (no
-            // closed-form posterior gate); the paper benchmarks only tau /
-            // trapezoidal / rk2 here.
-            model.reverse_intensities(x, t, &mut mu);
-            sub_step(model, x, &mu, dt, true, rng)
-        }
-        Solver::Trapezoidal { .. } | Solver::Rk2 { .. } => {
-            two_stage_step(model, solver, x, t, t_next, rng).0
-        }
-        Solver::ParallelDecoding => {
-            panic!("parallel decoding is undefined for the toy model")
-        }
+    if matches!(solver, Solver::Exact) {
+        panic!("exact simulation has no per-step form; use toy::exact_sample");
     }
-}
-
-/// One θ-scheme step with the intermediate rate totals exposed: returns
-/// (new state, total time-t intensity at x, total combined stage-2
-/// intensity) — the last two feed the adaptive error estimator for free.
-fn two_stage_step<R: Rng>(
-    model: &ToyModel,
-    solver: Solver,
-    x: usize,
-    t: f64,
-    t_next: f64,
-    rng: &mut R,
-) -> (usize, f64, f64) {
-    let s = model.n_states();
-    let mut mu = vec![0.0; s];
-    let dt = t - t_next;
-    match solver {
-        Solver::Trapezoidal { theta } => {
-            assert!(theta > 0.0 && theta < 1.0);
-            let rho = t - theta * dt;
-            let a1 = 1.0 / (2.0 * theta * (1.0 - theta));
-            let a2 = a1 - 1.0;
-            model.reverse_intensities(x, t, &mut mu);
-            let y_star = sub_step(model, x, &mu, theta * dt, true, rng);
-            let mut mu_star = vec![0.0; s];
-            model.reverse_intensities(y_star, rho, &mut mu_star);
-            // Eq. 16: mu* on the intermediate state, mu_t on the ORIGINAL
-            // state, both nu-indexed; jump applies from y*.
-            let mut comb = vec![0.0; s];
-            for nu in 0..s {
-                comb[nu] = (a1 * mu_star[nu] - a2 * mu[nu]).max(0.0);
-            }
-            let y = sub_step(model, y_star, &comb, (1.0 - theta) * dt, true, rng);
-            (y, mu.iter().sum(), comb.iter().sum())
-        }
-        Solver::Rk2 { theta } => {
-            assert!(theta > 0.0 && theta <= 1.0);
-            let rho = t - theta * dt;
-            let w = 1.0 / (2.0 * theta);
-            model.reverse_intensities(x, t, &mut mu);
-            let y_star = sub_step(model, x, &mu, theta * dt, true, rng);
-            let mut mu_star = vec![0.0; s];
-            model.reverse_intensities(y_star, rho, &mut mu_star);
-            let mut comb = vec![0.0; s];
-            for nu in 0..s {
-                comb[nu] = ((1.0 - w) * mu[nu] + w * mu_star[nu]).max(0.0);
-            }
-            // Alg. 4 restarts from the original state with the full step.
-            let y = sub_step(model, x, &comb, dt, true, rng);
-            (y, mu.iter().sum(), comb.iter().sum())
-        }
-        _ => unreachable!("two_stage_step needs a θ-scheme"),
-    }
+    dispatch_toy_kernel!(solver, k => {
+        let mut lane = ToyLane { x, y_star: x };
+        // Per-call scratch (3 small vectors; the pre-refactor one-stage
+        // path allocated 1, two-stage 3).  `step` is not a hot path —
+        // `generate` holds ONE scratch per pass, which the old per-step
+        // allocations did not.
+        let mut sc = ToyFamily::new_scratch(model);
+        let mut stats = GenStats::default();
+        let meta = StepMeta { t, t_next, step_idx: 0, n_steps: Some(1) };
+        driver::step_once::<ToyFamily, _, _>(model, &k, &meta, &mut lane, &mut sc, &mut stats, rng);
+        lane.x
+    })
 }
 
 /// Run the full backward pass over a grid of forward times (descending).
+/// [`Solver::Exact`] ignores the interior grid points (only the terminal δ
+/// matters) and runs the uniformization baseline.
 pub fn generate<R: Rng>(
     model: &ToyModel,
     solver: Solver,
     grid: &[f64],
     rng: &mut R,
 ) -> usize {
-    assert!(crate::solvers::grid::is_valid_grid(grid));
-    let mut x = model.sample_stationary(rng);
-    for w in grid.windows(2) {
-        x = step(model, solver, x, w[0], w[1], rng);
+    if matches!(solver, Solver::Exact) {
+        assert!(crate::solvers::grid::is_valid_grid(grid));
+        return exact_sample(model, *grid.last().unwrap(), rng);
     }
-    x
+    dispatch_toy_kernel!(solver, k => {
+        driver::run_single::<ToyFamily, _, _>(model, &k, Schedule::Fixed(grid), rng).0
+    })
 }
 
 /// Error-controlled backward pass for the θ-schemes: the PI controller
@@ -148,7 +73,7 @@ pub fn generate<R: Rng>(
 pub fn generate_adaptive<R: Rng>(
     model: &ToyModel,
     solver: Solver,
-    mut ctl: StepController,
+    ctl: StepController,
     delta: f64,
     rng: &mut R,
 ) -> (usize, GenStats, AdaptiveTrace) {
@@ -158,29 +83,9 @@ pub fn generate_adaptive<R: Rng>(
         solver.name()
     );
     assert!(delta > 0.0 && delta < model.horizon);
-    let mut x = model.sample_stationary(rng);
-    let mut t = model.horizon;
-    let mut stats = GenStats::default();
-    let mut trace = AdaptiveTrace { grid: vec![t], errors: Vec::new() };
-    while let Some(dt) = ctl.propose_dt(t, delta, stats.nfe) {
-        let t_next = if dt >= t - delta { delta } else { t - dt };
-        let (nx, tot_mu, tot_comb) = two_stage_step(model, solver, x, t, t_next, rng);
-        x = nx;
-        stats.nfe += 2;
-        stats.steps += 1;
-        let err = match solver {
-            Solver::Trapezoidal { theta } => {
-                trap_gate_discrepancy(theta, t - t_next, tot_mu, tot_comb)
-            }
-            Solver::Rk2 { .. } => rk2_gate_discrepancy(t - t_next, tot_mu, tot_comb),
-            _ => unreachable!(),
-        };
-        trace.grid.push(t_next);
-        trace.errors.push(err);
-        ctl.observe(err);
-        t = t_next;
-    }
-    (x, stats, trace)
+    dispatch_toy_kernel!(solver, k => {
+        driver::run_single::<ToyFamily, _, _>(model, &k, Schedule::Adaptive { ctl, delta }, rng)
+    })
 }
 
 /// Adaptive counterpart of [`empirical_distribution`]: every sample runs
@@ -272,12 +177,10 @@ pub fn empirical_distribution(
     tot.into_iter().map(|c| c as f64 / n_tot.max(1) as f64).collect()
 }
 
-/// Exact sampler baseline for the toy model (uniformization, Sec. 3.1).
+/// Exact sampler baseline for the toy model (uniformization, Sec. 3.1) —
+/// [`Solver::Exact`]'s toy-family implementation ([`StateFamily::exact`]).
 pub fn exact_sample<R: Rng>(model: &ToyModel, delta: f64, rng: &mut R) -> usize {
-    use crate::ctmc::uniformization::{simulate_backward, ToyJump};
-    let x0 = model.sample_stationary(rng);
-    let (x, _) = simulate_backward(&ToyJump(model), x0, model.horizon, delta, 0.5, rng);
-    x
+    <ToyFamily as StateFamily>::exact(model, delta, rng).0
 }
 
 #[cfg(test)]
@@ -301,6 +204,7 @@ mod tests {
             Solver::TauLeaping,
             Solver::Trapezoidal { theta: 0.5 },
             Solver::Rk2 { theta: 0.5 },
+            Solver::Exact,
         ] {
             for _ in 0..200 {
                 let x = generate(&m, s, &grid, &mut rng);
@@ -347,6 +251,19 @@ mod tests {
         }
         let q: Vec<f64> = counts.iter().map(|&c| c as f64 / n as f64).collect();
         assert!(m.kl_from_p0(&q) < 0.01, "kl={}", m.kl_from_p0(&q));
+    }
+
+    #[test]
+    fn exact_reports_realized_jump_stats() {
+        let m = model();
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let (x, stats, times) = <ToyFamily as StateFamily>::exact(&m, 1e-3, &mut rng);
+        assert!(x < m.n_states());
+        assert!(stats.nfe >= stats.steps, "candidates >= accepted jumps");
+        assert_eq!(stats.steps, times.len());
+        for w in times.windows(2) {
+            assert!(w[0] >= w[1], "jump times must decrease");
+        }
     }
 
     #[test]

@@ -1,0 +1,1335 @@
+//! Golden parity suite for the kernel/driver refactor.
+//!
+//! The `legacy_*` modules below are verbatim copies of the PRE-refactor
+//! drivers (`solvers/masked.rs`, `solvers/toy.rs`, `ctmc/uniformization.rs`
+//! as of the schedule-subsystem PR), kept private to this test.  Every
+//! public entry point must produce **bit-identical** token/state streams,
+//! NFE/step statistics and adaptive traces against its legacy twin for
+//! fixed seeds, across every (solver × family × fixed/adaptive ×
+//! single/batch) combination — the refactor moves code, it must not move
+//! a single RNG draw or floating-point operation.
+//!
+//! (Exception, by design: toy uniformization now answers the thinning
+//! accept test with the closed-form total instead of the summed vector —
+//! equal to the sum only up to the last ulp — so its parity here is via
+//! the text-jump process, whose total IS the summed pass, plus the
+//! `split_total_matches_full_fill` invariant in `ctmc::uniformization`.)
+
+use fastdds::schedule::adaptive::{
+    AdaptiveController, NfeBudget, StepController,
+};
+use fastdds::score::hmm::HmmUniformOracle;
+use fastdds::score::markov::{MarkovChain, MarkovOracle};
+use fastdds::solvers::{grid, masked, toy, Solver};
+use fastdds::util::rng::Xoshiro256;
+
+// ===========================================================================
+// Legacy masked drivers (pre-refactor solvers/masked.rs, verbatim)
+// ===========================================================================
+mod legacy_masked {
+    use fastdds::schedule::adaptive::{
+        rk2_gate_discrepancy, trap_gate_discrepancy, AdaptiveTrace, StepController,
+    };
+    use fastdds::score::{ScoreSource, Tok};
+    use fastdds::solvers::{GenStats, Solver};
+    use fastdds::util::dist::categorical;
+    use fastdds::util::rng::{Rng, Xoshiro256};
+    use fastdds::util::threadpool::{par_zip_mut2, ThreadPool};
+
+    struct Scratch {
+        probs: Vec<f64>,
+        probs_star: Vec<f64>,
+    }
+
+    impl Scratch {
+        fn new(l: usize, v: usize) -> Self {
+            Self {
+                probs: vec![0.0; l * v],
+                probs_star: vec![0.0; l * v],
+            }
+        }
+    }
+
+    struct LaneState {
+        tokens: Vec<Tok>,
+        active: Vec<usize>,
+        sub: Vec<usize>,
+        comb: Vec<f64>,
+        scored: Vec<(f64, usize, Tok)>,
+        stats: GenStats,
+    }
+
+    impl LaneState {
+        fn new(l: usize, v: usize, mask: Tok) -> Self {
+            Self {
+                tokens: vec![mask; l],
+                active: (0..l).collect(),
+                sub: Vec::with_capacity(l),
+                comb: vec![0.0; v],
+                scored: Vec::with_capacity(l),
+                stats: GenStats::default(),
+            }
+        }
+    }
+
+    fn validate_solver(solver: Solver) {
+        match solver {
+            Solver::Trapezoidal { theta } => {
+                assert!(theta > 0.0 && theta < 1.0, "trapezoidal needs theta in (0,1)");
+            }
+            Solver::Rk2 { theta } => {
+                assert!(theta > 0.0 && theta <= 1.0, "rk2 needs theta in (0,1]");
+            }
+            _ => {}
+        }
+    }
+
+    pub fn generate<S: ScoreSource + ?Sized, R: Rng>(
+        score: &S,
+        solver: Solver,
+        grid: &[f64],
+        rng: &mut R,
+    ) -> (Vec<Tok>, GenStats) {
+        assert!(fastdds::solvers::grid::is_valid_grid(grid), "invalid time grid");
+        validate_solver(solver);
+        let l = score.seq_len();
+        let v = score.vocab();
+        let mask = score.mask_id();
+        let mut st = LaneState::new(l, v, mask);
+        let mut sc = Scratch::new(l, v);
+
+        match solver {
+            Solver::ParallelDecoding => {
+                let n_steps = grid.len() - 1;
+                for n in 0..n_steps {
+                    if st.active.is_empty() {
+                        break;
+                    }
+                    let (k_reveal, t) = pd_schedule(l, st.active.len(), n, n_steps);
+                    if k_reveal == 0 {
+                        continue;
+                    }
+                    let m = st.active.len();
+                    score.probs_masked_into(&st.tokens, &st.active, t, &mut sc.probs[..m * v]);
+                    st.stats.nfe += 1;
+                    st.stats.steps += 1;
+                    pd_apply(v, mask, t, k_reveal, &sc.probs, &mut st, rng);
+                }
+            }
+            _ => {
+                for w in grid.windows(2) {
+                    let (t, t_next) = (w[0], w[1]);
+                    let m = st.active.len();
+                    if m > 0 {
+                        score.probs_masked_into(&st.tokens, &st.active, t, &mut sc.probs[..m * v]);
+                        apply_stage1(solver, v, t, t_next, &mut st, &mut sc, rng);
+                        if solver.nfe_per_step() == 2 {
+                            if !st.sub.is_empty() {
+                                let rho = stage2_time(solver, t, t_next);
+                                let m2 = st.sub.len();
+                                score.probs_masked_into(
+                                    &st.tokens,
+                                    &st.sub,
+                                    rho,
+                                    &mut sc.probs_star[..m2 * v],
+                                );
+                            }
+                            apply_stage2(solver, v, mask, t, t_next, &mut st, &mut sc, rng);
+                        }
+                    }
+                    st.stats.steps += 1;
+                }
+            }
+        }
+
+        finalize(score, *grid.last().unwrap(), &mut st, &mut sc.probs, rng);
+        (st.tokens, st.stats)
+    }
+
+    struct BatchLane {
+        state: LaneState,
+        rng: Xoshiro256,
+    }
+
+    enum Sel {
+        Active,
+        Sub,
+        Pd { n: usize, n_steps: usize },
+    }
+
+    fn selected<'a>(sel: &Sel, st: &'a LaneState) -> Option<&'a [usize]> {
+        match sel {
+            Sel::Active => (!st.active.is_empty()).then(|| st.active.as_slice()),
+            Sel::Sub => (!st.sub.is_empty()).then(|| st.sub.as_slice()),
+            Sel::Pd { n, n_steps } => {
+                if st.active.is_empty() {
+                    return None;
+                }
+                let (k, _) = pd_schedule(st.tokens.len(), st.active.len(), *n, *n_steps);
+                (k > 0).then(|| st.active.as_slice())
+            }
+        }
+    }
+
+    fn eval_stage<S: ScoreSource + ?Sized>(
+        score: &S,
+        lanes: &[BatchLane],
+        bufs: &mut [Scratch],
+        t: f64,
+        sel: &Sel,
+        star: bool,
+    ) {
+        let v = score.vocab();
+        let mut reqs: Vec<(&[Tok], &[usize])> = Vec::new();
+        let mut outs: Vec<&mut [f64]> = Vec::new();
+        for (lane, sc) in lanes.iter().zip(bufs.iter_mut()) {
+            let Some(idx) = selected(sel, &lane.state) else {
+                continue;
+            };
+            let buf = if star { &mut sc.probs_star } else { &mut sc.probs };
+            reqs.push((lane.state.tokens.as_slice(), idx));
+            outs.push(&mut buf[..idx.len() * v]);
+        }
+        if !reqs.is_empty() {
+            score.probs_masked_batch(&reqs, t, &mut outs);
+        }
+    }
+
+    pub fn generate_batch<S: ScoreSource + ?Sized>(
+        score: &S,
+        solver: Solver,
+        grid: &[f64],
+        seeds: &[u64],
+    ) -> Vec<(Vec<Tok>, GenStats)> {
+        assert!(fastdds::solvers::grid::is_valid_grid(grid), "invalid time grid");
+        validate_solver(solver);
+        if seeds.is_empty() {
+            return Vec::new();
+        }
+        let l = score.seq_len();
+        let v = score.vocab();
+        let mask = score.mask_id();
+        let threads = ThreadPool::default_size().min(seeds.len());
+
+        let mut lanes: Vec<BatchLane> = seeds
+            .iter()
+            .map(|&s| BatchLane {
+                state: LaneState::new(l, v, mask),
+                rng: Xoshiro256::seed_from_u64(s),
+            })
+            .collect();
+        let mut bufs: Vec<Scratch> = seeds.iter().map(|_| Scratch::new(l, v)).collect();
+
+        match solver {
+            Solver::ParallelDecoding => {
+                let n_steps = grid.len() - 1;
+                for n in 0..n_steps {
+                    let t = pd_time(n, n_steps);
+                    eval_stage(score, &lanes, &mut bufs, t, &Sel::Pd { n, n_steps }, false);
+                    par_zip_mut2(&mut lanes, &mut bufs, threads, |_, lane, sc| {
+                        let st = &mut lane.state;
+                        if st.active.is_empty() {
+                            return;
+                        }
+                        let (k_reveal, t) = pd_schedule(l, st.active.len(), n, n_steps);
+                        if k_reveal == 0 {
+                            return;
+                        }
+                        st.stats.nfe += 1;
+                        st.stats.steps += 1;
+                        pd_apply(v, mask, t, k_reveal, &sc.probs, st, &mut lane.rng);
+                    });
+                }
+            }
+            _ => {
+                for w in grid.windows(2) {
+                    let (t, t_next) = (w[0], w[1]);
+                    eval_stage(score, &lanes, &mut bufs, t, &Sel::Active, false);
+                    par_zip_mut2(&mut lanes, &mut bufs, threads, |_, lane, sc| {
+                        if !lane.state.active.is_empty() {
+                            apply_stage1(solver, v, t, t_next, &mut lane.state, sc, &mut lane.rng);
+                        }
+                    });
+                    if solver.nfe_per_step() == 2 {
+                        let rho = stage2_time(solver, t, t_next);
+                        eval_stage(score, &lanes, &mut bufs, rho, &Sel::Sub, true);
+                        par_zip_mut2(&mut lanes, &mut bufs, threads, |_, lane, sc| {
+                            if !lane.state.active.is_empty() {
+                                apply_stage2(
+                                    solver,
+                                    v,
+                                    mask,
+                                    t,
+                                    t_next,
+                                    &mut lane.state,
+                                    sc,
+                                    &mut lane.rng,
+                                );
+                            }
+                        });
+                    }
+                    for lane in &mut lanes {
+                        lane.state.stats.steps += 1;
+                    }
+                }
+            }
+        }
+
+        let delta = *grid.last().unwrap();
+        eval_stage(score, &lanes, &mut bufs, delta, &Sel::Active, false);
+        par_zip_mut2(&mut lanes, &mut bufs, threads, |_, lane, sc| {
+            let st = &mut lane.state;
+            if st.active.is_empty() {
+                return;
+            }
+            st.stats.nfe += 1;
+            finalize_apply(v, &sc.probs, st, &mut lane.rng);
+        });
+
+        lanes
+            .into_iter()
+            .map(|lane| (lane.state.tokens, lane.state.stats))
+            .collect()
+    }
+
+    fn lane_step_error(
+        solver: Solver,
+        v: usize,
+        t: f64,
+        t_next: f64,
+        st: &LaneState,
+        sc: &Scratch,
+    ) -> f64 {
+        let dt = t - t_next;
+        let rho = stage2_time(solver, t, t_next);
+        let mu_tot = 1.0 / t;
+        match solver {
+            Solver::Trapezoidal { theta } => {
+                let a1 = 1.0 / (2.0 * theta * (1.0 - theta));
+                let a2 = a1 - 1.0;
+                let mut err = 0.0f64;
+                for j in 0..st.sub.len() {
+                    let mut tot = 0.0;
+                    for c in 0..v {
+                        let mu_star = sc.probs_star[j * v + c] / rho;
+                        let mu_t = sc.probs[j * v + c] / t;
+                        tot += (a1 * mu_star - a2 * mu_t).max(0.0);
+                    }
+                    err = err.max(trap_gate_discrepancy(theta, dt, mu_tot, tot));
+                }
+                err
+            }
+            Solver::Rk2 { theta } => {
+                let w_coef = 1.0 / (2.0 * theta);
+                let mut err = 0.0f64;
+                let mut j = 0usize;
+                for (k, &i) in st.active.iter().enumerate() {
+                    let star = j < st.sub.len() && st.sub[j] == i;
+                    let mut tot = 0.0;
+                    for c in 0..v {
+                        let mu_t = sc.probs[k * v + c] / t;
+                        let mu_star = if star {
+                            sc.probs_star[j * v + c] / rho
+                        } else {
+                            0.0
+                        };
+                        tot += ((1.0 - w_coef) * mu_t + w_coef * mu_star).max(0.0);
+                    }
+                    if star {
+                        j += 1;
+                    }
+                    err = err.max(rk2_gate_discrepancy(dt, mu_tot, tot));
+                }
+                err
+            }
+            _ => unreachable!("error estimator needs a two-stage solver"),
+        }
+    }
+
+    fn validate_adaptive(solver: Solver, delta: f64) {
+        validate_solver(solver);
+        assert!(solver.nfe_per_step() == 2);
+        assert!((0.0..1.0).contains(&delta) && delta > 0.0);
+    }
+
+    pub fn generate_adaptive<S: ScoreSource + ?Sized, R: Rng>(
+        score: &S,
+        solver: Solver,
+        mut ctl: StepController,
+        delta: f64,
+        rng: &mut R,
+    ) -> (Vec<Tok>, GenStats, AdaptiveTrace) {
+        validate_adaptive(solver, delta);
+        let v = score.vocab();
+        let mask = score.mask_id();
+        let mut st = LaneState::new(score.seq_len(), v, mask);
+        let mut sc = Scratch::new(score.seq_len(), v);
+        let mut trace = AdaptiveTrace { grid: vec![1.0], errors: Vec::new() };
+        let mut t = 1.0f64;
+
+        while let Some(dt) = ctl.propose_dt(t, delta, st.stats.nfe) {
+            let t_next = if dt >= t - delta { delta } else { t - dt };
+            let m = st.active.len();
+            let mut err = 0.0;
+            if m > 0 {
+                score.probs_masked_into(&st.tokens, &st.active, t, &mut sc.probs[..m * v]);
+                apply_stage1(solver, v, t, t_next, &mut st, &mut sc, rng);
+                if !st.sub.is_empty() {
+                    let rho = stage2_time(solver, t, t_next);
+                    let m2 = st.sub.len();
+                    score.probs_masked_into(
+                        &st.tokens,
+                        &st.sub,
+                        rho,
+                        &mut sc.probs_star[..m2 * v],
+                    );
+                }
+                err = lane_step_error(solver, v, t, t_next, &st, &sc);
+                apply_stage2(solver, v, mask, t, t_next, &mut st, &mut sc, rng);
+            }
+            st.stats.steps += 1;
+            trace.grid.push(t_next);
+            trace.errors.push(err);
+            ctl.observe(err);
+            t = t_next;
+            if st.active.is_empty() {
+                break;
+            }
+        }
+
+        finalize(score, t, &mut st, &mut sc.probs, rng);
+        (st.tokens, st.stats, trace)
+    }
+
+    pub fn generate_batch_adaptive<S: ScoreSource + ?Sized>(
+        score: &S,
+        solver: Solver,
+        mut ctl: StepController,
+        delta: f64,
+        seeds: &[u64],
+    ) -> (Vec<(Vec<Tok>, GenStats)>, AdaptiveTrace) {
+        validate_adaptive(solver, delta);
+        if seeds.is_empty() {
+            return (Vec::new(), AdaptiveTrace::default());
+        }
+        let l = score.seq_len();
+        let v = score.vocab();
+        let mask = score.mask_id();
+        let threads = ThreadPool::default_size().min(seeds.len());
+        let mut lanes: Vec<BatchLane> = seeds
+            .iter()
+            .map(|&s| BatchLane {
+                state: LaneState::new(l, v, mask),
+                rng: Xoshiro256::seed_from_u64(s),
+            })
+            .collect();
+        let mut bufs: Vec<Scratch> = seeds.iter().map(|_| Scratch::new(l, v)).collect();
+        let mut trace = AdaptiveTrace { grid: vec![1.0], errors: Vec::new() };
+        let mut t = 1.0f64;
+
+        loop {
+            let spent = lanes.iter().map(|l| l.state.stats.nfe).max().unwrap_or(0);
+            let Some(dt) = ctl.propose_dt(t, delta, spent) else { break };
+            let t_next = if dt >= t - delta { delta } else { t - dt };
+            eval_stage(score, &lanes, &mut bufs, t, &Sel::Active, false);
+            par_zip_mut2(&mut lanes, &mut bufs, threads, |_, lane, sc| {
+                if !lane.state.active.is_empty() {
+                    apply_stage1(solver, v, t, t_next, &mut lane.state, sc, &mut lane.rng);
+                }
+            });
+            let rho = stage2_time(solver, t, t_next);
+            eval_stage(score, &lanes, &mut bufs, rho, &Sel::Sub, true);
+            let mut err = 0.0f64;
+            for (lane, sc) in lanes.iter().zip(&bufs) {
+                if !lane.state.active.is_empty() {
+                    err = err.max(lane_step_error(solver, v, t, t_next, &lane.state, sc));
+                }
+            }
+            par_zip_mut2(&mut lanes, &mut bufs, threads, |_, lane, sc| {
+                if !lane.state.active.is_empty() {
+                    apply_stage2(solver, v, mask, t, t_next, &mut lane.state, sc, &mut lane.rng);
+                }
+            });
+            for lane in &mut lanes {
+                lane.state.stats.steps += 1;
+            }
+            trace.grid.push(t_next);
+            trace.errors.push(err);
+            ctl.observe(err);
+            t = t_next;
+            if lanes.iter().all(|l| l.state.active.is_empty()) {
+                break;
+            }
+        }
+
+        eval_stage(score, &lanes, &mut bufs, t, &Sel::Active, false);
+        par_zip_mut2(&mut lanes, &mut bufs, threads, |_, lane, sc| {
+            let st = &mut lane.state;
+            if st.active.is_empty() {
+                return;
+            }
+            st.stats.nfe += 1;
+            finalize_apply(v, &sc.probs, st, &mut lane.rng);
+        });
+
+        (
+            lanes
+                .into_iter()
+                .map(|lane| (lane.state.tokens, lane.state.stats))
+                .collect(),
+            trace,
+        )
+    }
+
+    #[derive(Clone, Copy)]
+    enum Gate {
+        Linear,
+        Poisson,
+        Exact,
+    }
+
+    impl Gate {
+        #[inline]
+        fn prob(self, t: f64, t_next: f64) -> f64 {
+            let dt = t - t_next;
+            match self {
+                Gate::Linear => (dt / t).min(1.0),
+                Gate::Poisson => 1.0 - (-dt / t).exp(),
+                Gate::Exact => dt / t,
+            }
+        }
+    }
+
+    fn stage2_time(solver: Solver, t: f64, t_next: f64) -> f64 {
+        match solver {
+            Solver::Trapezoidal { theta } | Solver::Rk2 { theta } => t - theta * (t - t_next),
+            _ => unreachable!("stage2_time on a one-stage solver"),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn apply_stage1<R: Rng>(
+        solver: Solver,
+        v: usize,
+        t: f64,
+        t_next: f64,
+        st: &mut LaneState,
+        sc: &mut Scratch,
+        rng: &mut R,
+    ) {
+        debug_assert!(!st.active.is_empty());
+        st.stats.nfe += 1;
+        let dt = t - t_next;
+        match solver {
+            Solver::Euler | Solver::TauLeaping | Solver::Tweedie => {
+                st.sub.clear();
+                let gate = match solver {
+                    Solver::Euler => Gate::Linear,
+                    Solver::TauLeaping => Gate::Poisson,
+                    _ => Gate::Exact,
+                };
+                one_stage_apply(
+                    v,
+                    gate.prob(t, t_next),
+                    &sc.probs,
+                    &mut st.tokens,
+                    &mut st.active,
+                    rng,
+                );
+            }
+            Solver::Trapezoidal { theta } => {
+                let p1 = 1.0 - (-(theta * dt) / t).exp();
+                st.sub.clear();
+                for k in 0..st.active.len() {
+                    let i = st.active[k];
+                    let mut still_masked = true;
+                    if rng.gen_f64() < p1 {
+                        if let Some(tok) = categorical(rng, &sc.probs[k * v..(k + 1) * v]) {
+                            st.tokens[i] = tok as Tok;
+                            still_masked = false;
+                        }
+                    }
+                    if still_masked {
+                        let w = st.sub.len();
+                        if w != k {
+                            sc.probs.copy_within(k * v..(k + 1) * v, w * v);
+                        }
+                        st.sub.push(i);
+                    }
+                }
+            }
+            Solver::Rk2 { theta } => {
+                let p1 = 1.0 - (-(theta * dt) / t).exp();
+                st.sub.clear();
+                for (k, &i) in st.active.iter().enumerate() {
+                    let mut still_masked = true;
+                    if rng.gen_f64() < p1 {
+                        if let Some(tok) = categorical(rng, &sc.probs[k * v..(k + 1) * v]) {
+                            st.tokens[i] = tok as Tok;
+                            still_masked = false;
+                        }
+                    }
+                    if still_masked {
+                        st.sub.push(i);
+                    }
+                }
+            }
+            _ => unreachable!("apply_stage1 covers the approximate kernels"),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn apply_stage2<R: Rng>(
+        solver: Solver,
+        v: usize,
+        mask: Tok,
+        t: f64,
+        t_next: f64,
+        st: &mut LaneState,
+        sc: &mut Scratch,
+        rng: &mut R,
+    ) {
+        let dt = t - t_next;
+        let rho = stage2_time(solver, t, t_next);
+        match solver {
+            Solver::Trapezoidal { theta } => {
+                if st.sub.is_empty() {
+                    st.active.clear();
+                    return;
+                }
+                st.stats.nfe += 1;
+                let a1 = 1.0 / (2.0 * theta * (1.0 - theta));
+                let a2 = a1 - 1.0;
+                let tail = (1.0 - theta) * dt;
+                st.active.clear();
+                for j in 0..st.sub.len() {
+                    let i = st.sub[j];
+                    let mut tot = 0.0;
+                    for c in 0..v {
+                        let mu_star = sc.probs_star[j * v + c] / rho;
+                        let mu_t = sc.probs[j * v + c] / t;
+                        let m = (a1 * mu_star - a2 * mu_t).max(0.0);
+                        st.comb[c] = m;
+                        tot += m;
+                    }
+                    let p2 = 1.0 - (-tot * tail).exp();
+                    let mut still_masked = true;
+                    if rng.gen_f64() < p2 {
+                        if let Some(tok) = categorical(rng, &st.comb) {
+                            st.tokens[i] = tok as Tok;
+                            still_masked = false;
+                        }
+                    }
+                    if still_masked {
+                        st.active.push(i);
+                    }
+                }
+                st.sub.clear();
+            }
+            Solver::Rk2 { theta } => {
+                if !st.sub.is_empty() {
+                    st.stats.nfe += 1;
+                }
+                let w_coef = 1.0 / (2.0 * theta);
+                for &i in st.active.iter() {
+                    st.tokens[i] = mask;
+                }
+                let m = st.active.len();
+                let mut j = 0usize;
+                let mut w = 0usize;
+                for k in 0..m {
+                    let i = st.active[k];
+                    let star = j < st.sub.len() && st.sub[j] == i;
+                    let mut tot = 0.0;
+                    for c in 0..v {
+                        let mu_t = sc.probs[k * v + c] / t;
+                        let mu_star = if star {
+                            sc.probs_star[j * v + c] / rho
+                        } else {
+                            0.0
+                        };
+                        let mc = ((1.0 - w_coef) * mu_t + w_coef * mu_star).max(0.0);
+                        st.comb[c] = mc;
+                        tot += mc;
+                    }
+                    if star {
+                        j += 1;
+                    }
+                    let p2 = 1.0 - (-tot * dt).exp();
+                    let mut still_masked = true;
+                    if rng.gen_f64() < p2 {
+                        if let Some(tok) = categorical(rng, &st.comb) {
+                            st.tokens[i] = tok as Tok;
+                            still_masked = false;
+                        }
+                    }
+                    if still_masked {
+                        st.active[w] = i;
+                        w += 1;
+                    }
+                }
+                st.active.truncate(w);
+                st.sub.clear();
+            }
+            _ => unreachable!("apply_stage2 on a one-stage solver"),
+        }
+    }
+
+    fn one_stage_apply<R: Rng>(
+        v: usize,
+        p_gate: f64,
+        probs: &[f64],
+        tokens: &mut [Tok],
+        active: &mut Vec<usize>,
+        rng: &mut R,
+    ) {
+        let m = active.len();
+        let mut w = 0usize;
+        for k in 0..m {
+            let i = active[k];
+            let mut still_masked = true;
+            if rng.gen_f64() < p_gate {
+                if let Some(tok) = categorical(rng, &probs[k * v..(k + 1) * v]) {
+                    tokens[i] = tok as Tok;
+                    still_masked = false;
+                }
+            }
+            if still_masked {
+                active[w] = i;
+                w += 1;
+            }
+        }
+        active.truncate(w);
+    }
+
+    fn pd_schedule(l: usize, m: usize, n: usize, n_steps: usize) -> (usize, f64) {
+        let frac = (n + 1) as f64 / n_steps as f64;
+        let target = if n + 1 == n_steps {
+            0
+        } else {
+            ((std::f64::consts::FRAC_PI_2 * frac).cos() * l as f64).ceil() as usize
+        };
+        (m.saturating_sub(target), pd_time(n, n_steps))
+    }
+
+    fn pd_time(n: usize, n_steps: usize) -> f64 {
+        1.0 - n as f64 / n_steps as f64
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn pd_apply<R: Rng>(
+        v: usize,
+        mask: Tok,
+        t: f64,
+        k_reveal: usize,
+        probs: &[f64],
+        st: &mut LaneState,
+        rng: &mut R,
+    ) {
+        st.scored.clear();
+        for (k, &i) in st.active.iter().enumerate() {
+            let row = &probs[k * v..(k + 1) * v];
+            let tok = categorical(rng, row).unwrap_or(0);
+            let conf = row[tok].max(1e-30).ln() + t * fastdds::util::dist::gumbel(rng, 1e-9);
+            st.scored.push((conf, i, tok as Tok));
+        }
+        st.scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        for &(_, i, tok) in st.scored.iter().take(k_reveal) {
+            st.tokens[i] = tok;
+        }
+        let tokens = &st.tokens;
+        st.active.retain(|&i| tokens[i] == mask);
+    }
+
+    fn finalize<S: ScoreSource + ?Sized, R: Rng>(
+        score: &S,
+        delta: f64,
+        st: &mut LaneState,
+        probs: &mut Vec<f64>,
+        rng: &mut R,
+    ) {
+        if st.active.is_empty() {
+            return;
+        }
+        let v = score.vocab();
+        let m = st.active.len();
+        if probs.len() < m * v {
+            probs.resize(m * v, 0.0);
+        }
+        score.probs_masked_into(&st.tokens, &st.active, delta, &mut probs[..m * v]);
+        st.stats.nfe += 1;
+        finalize_apply(v, probs, st, rng);
+    }
+
+    fn finalize_apply<R: Rng>(v: usize, probs: &[f64], st: &mut LaneState, rng: &mut R) {
+        for (k, &i) in st.active.iter().enumerate() {
+            let row = &probs[k * v..(k + 1) * v];
+            if let Some(tok) = categorical(rng, row) {
+                st.tokens[i] = tok as Tok;
+            } else {
+                st.tokens[i] = rng.gen_usize(v) as Tok;
+            }
+        }
+        st.active.clear();
+    }
+
+    pub fn fhs_generate<S: ScoreSource + ?Sized, R: Rng>(
+        score: &S,
+        delta: f64,
+        rng: &mut R,
+    ) -> (Vec<Tok>, GenStats, Vec<f64>) {
+        let l = score.seq_len();
+        let v = score.vocab();
+        let mask = score.mask_id();
+        let mut st = LaneState::new(l, v, mask);
+        let mut jump_times = Vec::with_capacity(l);
+        let mut row = vec![0.0; v];
+
+        let mut t = 1.0;
+        loop {
+            if st.active.is_empty() {
+                break;
+            }
+            let m = st.active.len() as f64;
+            t *= rng.gen_f64().powf(1.0 / m);
+            if t <= delta {
+                break;
+            }
+            let pos = rng.gen_usize(st.active.len());
+            let i = st.active[pos];
+            score.probs_masked_into(&st.tokens, &st.active[pos..pos + 1], t, &mut row);
+            st.stats.nfe += 1;
+            st.stats.steps += 1;
+            if let Some(tok) = categorical(rng, &row) {
+                st.tokens[i] = tok as Tok;
+                st.active.remove(pos);
+            }
+            jump_times.push(t);
+        }
+        finalize(score, delta, &mut st, &mut row, rng);
+        (st.tokens, st.stats, jump_times)
+    }
+}
+
+// ===========================================================================
+// Legacy toy drivers (pre-refactor solvers/toy.rs, verbatim)
+// ===========================================================================
+mod legacy_toy {
+    use fastdds::ctmc::ToyModel;
+    use fastdds::schedule::adaptive::{
+        rk2_gate_discrepancy, trap_gate_discrepancy, AdaptiveTrace, StepController,
+    };
+    use fastdds::solvers::{GenStats, Solver};
+    use fastdds::util::dist::categorical_f64;
+    use fastdds::util::rng::Rng;
+
+    fn sub_step<R: Rng>(
+        model: &ToyModel,
+        x: usize,
+        mu: &[f64],
+        dt: f64,
+        poisson_gate: bool,
+        rng: &mut R,
+    ) -> usize {
+        let tot: f64 = mu.iter().sum();
+        if tot <= 0.0 {
+            return x;
+        }
+        let p = if poisson_gate {
+            1.0 - (-tot * dt).exp()
+        } else {
+            (tot * dt).min(1.0)
+        };
+        if rng.gen_f64() < p {
+            let nu = categorical_f64(rng, mu);
+            (x + nu) % model.n_states()
+        } else {
+            x
+        }
+    }
+
+    pub fn step<R: Rng>(
+        model: &ToyModel,
+        solver: Solver,
+        x: usize,
+        t: f64,
+        t_next: f64,
+        rng: &mut R,
+    ) -> usize {
+        let s = model.n_states();
+        let mut mu = vec![0.0; s];
+        let dt = t - t_next;
+        match solver {
+            Solver::Euler => {
+                model.reverse_intensities(x, t, &mut mu);
+                sub_step(model, x, &mu, dt, false, rng)
+            }
+            Solver::TauLeaping | Solver::Tweedie => {
+                model.reverse_intensities(x, t, &mut mu);
+                sub_step(model, x, &mu, dt, true, rng)
+            }
+            Solver::Trapezoidal { .. } | Solver::Rk2 { .. } => {
+                two_stage_step(model, solver, x, t, t_next, rng).0
+            }
+            _ => panic!("legacy toy step: unsupported solver"),
+        }
+    }
+
+    fn two_stage_step<R: Rng>(
+        model: &ToyModel,
+        solver: Solver,
+        x: usize,
+        t: f64,
+        t_next: f64,
+        rng: &mut R,
+    ) -> (usize, f64, f64) {
+        let s = model.n_states();
+        let mut mu = vec![0.0; s];
+        let dt = t - t_next;
+        match solver {
+            Solver::Trapezoidal { theta } => {
+                assert!(theta > 0.0 && theta < 1.0);
+                let rho = t - theta * dt;
+                let a1 = 1.0 / (2.0 * theta * (1.0 - theta));
+                let a2 = a1 - 1.0;
+                model.reverse_intensities(x, t, &mut mu);
+                let y_star = sub_step(model, x, &mu, theta * dt, true, rng);
+                let mut mu_star = vec![0.0; s];
+                model.reverse_intensities(y_star, rho, &mut mu_star);
+                let mut comb = vec![0.0; s];
+                for nu in 0..s {
+                    comb[nu] = (a1 * mu_star[nu] - a2 * mu[nu]).max(0.0);
+                }
+                let y = sub_step(model, y_star, &comb, (1.0 - theta) * dt, true, rng);
+                (y, mu.iter().sum(), comb.iter().sum())
+            }
+            Solver::Rk2 { theta } => {
+                assert!(theta > 0.0 && theta <= 1.0);
+                let rho = t - theta * dt;
+                let w = 1.0 / (2.0 * theta);
+                model.reverse_intensities(x, t, &mut mu);
+                let y_star = sub_step(model, x, &mu, theta * dt, true, rng);
+                let mut mu_star = vec![0.0; s];
+                model.reverse_intensities(y_star, rho, &mut mu_star);
+                let mut comb = vec![0.0; s];
+                for nu in 0..s {
+                    comb[nu] = ((1.0 - w) * mu[nu] + w * mu_star[nu]).max(0.0);
+                }
+                let y = sub_step(model, x, &comb, dt, true, rng);
+                (y, mu.iter().sum(), comb.iter().sum())
+            }
+            _ => unreachable!("two_stage_step needs a θ-scheme"),
+        }
+    }
+
+    pub fn generate<R: Rng>(
+        model: &ToyModel,
+        solver: Solver,
+        grid: &[f64],
+        rng: &mut R,
+    ) -> usize {
+        assert!(fastdds::solvers::grid::is_valid_grid(grid));
+        let mut x = model.sample_stationary(rng);
+        for w in grid.windows(2) {
+            x = step(model, solver, x, w[0], w[1], rng);
+        }
+        x
+    }
+
+    pub fn generate_adaptive<R: Rng>(
+        model: &ToyModel,
+        solver: Solver,
+        mut ctl: StepController,
+        delta: f64,
+        rng: &mut R,
+    ) -> (usize, GenStats, AdaptiveTrace) {
+        assert!(matches!(solver, Solver::Trapezoidal { .. } | Solver::Rk2 { .. }));
+        assert!(delta > 0.0 && delta < model.horizon);
+        let mut x = model.sample_stationary(rng);
+        let mut t = model.horizon;
+        let mut stats = GenStats::default();
+        let mut trace = AdaptiveTrace { grid: vec![t], errors: Vec::new() };
+        while let Some(dt) = ctl.propose_dt(t, delta, stats.nfe) {
+            let t_next = if dt >= t - delta { delta } else { t - dt };
+            let (nx, tot_mu, tot_comb) = two_stage_step(model, solver, x, t, t_next, rng);
+            x = nx;
+            stats.nfe += 2;
+            stats.steps += 1;
+            let err = match solver {
+                Solver::Trapezoidal { theta } => {
+                    trap_gate_discrepancy(theta, t - t_next, tot_mu, tot_comb)
+                }
+                Solver::Rk2 { .. } => rk2_gate_discrepancy(t - t_next, tot_mu, tot_comb),
+                _ => unreachable!(),
+            };
+            trace.grid.push(t_next);
+            trace.errors.push(err);
+            ctl.observe(err);
+            t = t_next;
+        }
+        (x, stats, trace)
+    }
+}
+
+// ===========================================================================
+// Legacy uniformization (pre-refactor ctmc/uniformization.rs, verbatim)
+// ===========================================================================
+mod legacy_uniformization {
+    use fastdds::util::dist::{categorical_f64, exponential};
+    use fastdds::util::rng::Rng;
+
+    pub trait JumpProcess {
+        type State: Clone;
+        fn n_jumps(&self) -> usize;
+        fn intensities(&self, x: &Self::State, t: f64, out: &mut [f64]);
+        fn total_bound(&self, x: &Self::State, t_lo: f64, t_hi: f64) -> f64;
+        fn apply(&self, x: &mut Self::State, nu: usize);
+    }
+
+    #[derive(Clone, Debug, Default)]
+    pub struct ExactStats {
+        pub nfe: usize,
+        pub jumps: Vec<(f64, usize)>,
+        pub candidates: Vec<f64>,
+    }
+
+    pub fn simulate_backward<P: JumpProcess, R: Rng>(
+        proc: &P,
+        x0: P::State,
+        t_start: f64,
+        t_end: f64,
+        window_ratio: f64,
+        rng: &mut R,
+    ) -> (P::State, ExactStats) {
+        assert!(t_end > 0.0 && t_end < t_start);
+        assert!(window_ratio > 0.0 && window_ratio < 1.0);
+        let mut x = x0;
+        let mut stats = ExactStats::default();
+        let mut mu = vec![0.0; proc.n_jumps()];
+
+        let mut t_hi = t_start;
+        while t_hi > t_end {
+            let t_lo = (t_hi * window_ratio).max(t_end);
+            let bound = proc.total_bound(&x, t_lo, t_hi).max(1e-12);
+            let mut t = t_hi;
+            loop {
+                t -= exponential(rng, bound);
+                if t <= t_lo {
+                    break;
+                }
+                proc.intensities(&x, t, &mut mu);
+                stats.nfe += 1;
+                stats.candidates.push(t);
+                let tot: f64 = mu.iter().sum();
+                if rng.gen_f64() * bound < tot {
+                    let nu = categorical_f64(rng, &mu);
+                    proc.apply(&mut x, nu);
+                    stats.jumps.push((t, nu));
+                    t_hi = t;
+                    break;
+                }
+            }
+            if t <= t_lo {
+                t_hi = t_lo;
+            }
+        }
+        (x, stats)
+    }
+
+    /// Legacy text jump: allocates per window, sums the vector per candidate.
+    pub struct LegacyTextJump<'a> {
+        pub oracle: &'a fastdds::score::hmm::HmmUniformOracle,
+        pub slack: f64,
+    }
+
+    impl JumpProcess for LegacyTextJump<'_> {
+        type State = Vec<fastdds::score::Tok>;
+
+        fn n_jumps(&self) -> usize {
+            self.oracle.seq_len * self.oracle.chain.vocab
+        }
+
+        fn intensities(&self, x: &Self::State, t: f64, out: &mut [f64]) {
+            self.oracle.intensities(x, t, out);
+        }
+
+        fn total_bound(&self, x: &Self::State, t_lo: f64, _t_hi: f64) -> f64 {
+            let mut buf = vec![0.0; self.n_jumps()];
+            let tot = self.oracle.intensities(x, t_lo, &mut buf);
+            tot * self.slack
+        }
+
+        fn apply(&self, x: &mut Self::State, nu: usize) {
+            let v = self.oracle.chain.vocab;
+            x[nu / v] = (nu % v) as fastdds::score::Tok;
+        }
+    }
+}
+
+// ===========================================================================
+// Parity assertions
+// ===========================================================================
+
+fn oracle(vocab: usize, seq_len: usize, seed: u64) -> MarkovOracle {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    MarkovOracle::new(MarkovChain::generate(&mut rng, vocab, 0.5), seq_len)
+}
+
+fn approx_solvers() -> Vec<Solver> {
+    vec![
+        Solver::Euler,
+        Solver::TauLeaping,
+        Solver::Tweedie,
+        Solver::Trapezoidal { theta: 0.5 },
+        Solver::Trapezoidal { theta: 0.3 },
+        Solver::Rk2 { theta: 0.5 },
+        Solver::Rk2 { theta: 0.3 },
+        Solver::ParallelDecoding,
+    ]
+}
+
+#[test]
+fn masked_fixed_single_parity() {
+    let o = oracle(6, 16, 11);
+    for steps in [4usize, 12] {
+        let g = grid::masked_uniform(steps, 1e-3);
+        for solver in approx_solvers() {
+            for seed in [0u64, 7, 99, 12345] {
+                let mut r_new = Xoshiro256::seed_from_u64(seed);
+                let mut r_old = Xoshiro256::seed_from_u64(seed);
+                let (toks, stats) = masked::generate(&o, solver, &g, &mut r_new);
+                let (want, wstats) = legacy_masked::generate(&o, solver, &g, &mut r_old);
+                assert_eq!(toks, want, "{} steps={steps} seed={seed}", solver.name());
+                assert_eq!(stats.nfe, wstats.nfe, "{} nfe", solver.name());
+                assert_eq!(stats.steps, wstats.steps, "{} steps", solver.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn masked_fixed_batch_parity() {
+    let o = oracle(6, 16, 11);
+    let g = grid::masked_uniform(10, 1e-3);
+    let seeds = [3u64, 141, 59, 2653, 0];
+    for solver in approx_solvers() {
+        let new = masked::generate_batch(&o, solver, &g, &seeds);
+        let old = legacy_masked::generate_batch(&o, solver, &g, &seeds);
+        assert_eq!(new.len(), old.len());
+        for (k, (n, w)) in new.iter().zip(&old).enumerate() {
+            assert_eq!(n.0, w.0, "{} lane {k} tokens", solver.name());
+            assert_eq!(n.1.nfe, w.1.nfe, "{} lane {k} nfe", solver.name());
+            assert_eq!(n.1.steps, w.1.steps, "{} lane {k} steps", solver.name());
+        }
+    }
+}
+
+#[test]
+fn masked_adaptive_single_parity() {
+    let o = oracle(6, 16, 11);
+    for solver in [
+        Solver::Trapezoidal { theta: 0.5 },
+        Solver::Trapezoidal { theta: 0.3 },
+        Solver::Rk2 { theta: 0.4 },
+    ] {
+        for tol in [1e-2, 1e-3] {
+            let cfg = AdaptiveController::for_span(tol, 1.0, 1e-3);
+            let mut r_new = Xoshiro256::seed_from_u64(21);
+            let mut r_old = Xoshiro256::seed_from_u64(21);
+            let (toks, stats, trace) =
+                masked::generate_adaptive(&o, solver, StepController::new(cfg, 0.1), 1e-3, &mut r_new);
+            let (want, wstats, wtrace) = legacy_masked::generate_adaptive(
+                &o,
+                solver,
+                StepController::new(cfg, 0.1),
+                1e-3,
+                &mut r_old,
+            );
+            assert_eq!(toks, want, "{} tol={tol}", solver.name());
+            assert_eq!(stats.nfe, wstats.nfe);
+            assert_eq!(stats.steps, wstats.steps);
+            assert_eq!(trace.grid, wtrace.grid, "realized grids must match");
+            assert_eq!(trace.errors, wtrace.errors, "error traces must match");
+        }
+    }
+}
+
+#[test]
+fn masked_adaptive_batch_parity() {
+    let o = oracle(6, 16, 11);
+    let seeds = [5u64, 77, 901];
+    let solver = Solver::Trapezoidal { theta: 0.5 };
+    for budget in [None, Some(24usize)] {
+        let mk_ctl = || {
+            let cfg = AdaptiveController::for_span(1e-3, 1.0, 1e-3);
+            let ctl = StepController::new(cfg, 0.1);
+            match budget {
+                Some(total) => ctl.with_budget(NfeBudget {
+                    total,
+                    nfe_per_step: 2,
+                    reserve: 1,
+                }),
+                None => ctl,
+            }
+        };
+        let (new, trace) =
+            masked::generate_batch_adaptive(&o, solver, mk_ctl(), 1e-3, &seeds);
+        let (old, wtrace) =
+            legacy_masked::generate_batch_adaptive(&o, solver, mk_ctl(), 1e-3, &seeds);
+        assert_eq!(trace.grid, wtrace.grid, "budget={budget:?}");
+        assert_eq!(trace.errors, wtrace.errors);
+        for (k, (n, w)) in new.iter().zip(&old).enumerate() {
+            assert_eq!(n.0, w.0, "lane {k} budget={budget:?}");
+            assert_eq!(n.1.nfe, w.1.nfe, "lane {k}");
+            assert_eq!(n.1.steps, w.1.steps, "lane {k}");
+        }
+    }
+}
+
+#[test]
+fn masked_hmm_source_parity() {
+    // The time-dependent HMM score source exercises different eval times
+    // per stage; parity must hold there too.
+    let mut rng = Xoshiro256::seed_from_u64(17);
+    let chain = MarkovChain::generate(&mut rng, 5, 0.6);
+    let o = HmmUniformOracle::new(chain, 10);
+    let g = grid::masked_uniform(8, 1e-3);
+    for solver in [
+        Solver::Tweedie,
+        Solver::Trapezoidal { theta: 0.5 },
+        Solver::Rk2 { theta: 0.3 },
+    ] {
+        let mut r_new = Xoshiro256::seed_from_u64(4);
+        let mut r_old = Xoshiro256::seed_from_u64(4);
+        let (toks, stats) = masked::generate(&o, solver, &g, &mut r_new);
+        let (want, wstats) = legacy_masked::generate(&o, solver, &g, &mut r_old);
+        assert_eq!(toks, want, "{}", solver.name());
+        assert_eq!(stats.nfe, wstats.nfe);
+    }
+}
+
+#[test]
+fn fhs_parity() {
+    let o = oracle(6, 16, 11);
+    for seed in [0u64, 3, 888] {
+        let mut r_new = Xoshiro256::seed_from_u64(seed);
+        let mut r_old = Xoshiro256::seed_from_u64(seed);
+        let (toks, stats, times) = masked::fhs_generate(&o, 1e-3, &mut r_new);
+        let (want, wstats, wtimes) = legacy_masked::fhs_generate(&o, 1e-3, &mut r_old);
+        assert_eq!(toks, want, "seed={seed}");
+        assert_eq!(stats.nfe, wstats.nfe);
+        assert_eq!(stats.steps, wstats.steps);
+        assert_eq!(times, wtimes, "jump times must match bitwise");
+    }
+}
+
+#[test]
+fn toy_fixed_parity() {
+    let mut mrng = Xoshiro256::seed_from_u64(7);
+    let model = fastdds::ctmc::ToyModel::paper_default(&mut mrng);
+    for steps in [8usize, 32] {
+        let g = grid::toy_uniform(steps, model.horizon, 1e-3);
+        for solver in [
+            Solver::Euler,
+            Solver::TauLeaping,
+            Solver::Tweedie,
+            Solver::Trapezoidal { theta: 0.5 },
+            Solver::Rk2 { theta: 0.5 },
+            Solver::Rk2 { theta: 0.9 }, // library-permissive θ past 1/2
+        ] {
+            // Share one stream across many reps so diverse states are hit;
+            // a single divergence desynchronises everything after it.
+            let mut r_new = Xoshiro256::seed_from_u64(13);
+            let mut r_old = Xoshiro256::seed_from_u64(13);
+            for rep in 0..200 {
+                let x_new = toy::generate(&model, solver, &g, &mut r_new);
+                let x_old = legacy_toy::generate(&model, solver, &g, &mut r_old);
+                assert_eq!(x_new, x_old, "{} steps={steps} rep={rep}", solver.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn toy_step_parity() {
+    let mut mrng = Xoshiro256::seed_from_u64(7);
+    let model = fastdds::ctmc::ToyModel::paper_default(&mut mrng);
+    let mut r_new = Xoshiro256::seed_from_u64(2);
+    let mut r_old = Xoshiro256::seed_from_u64(2);
+    for solver in [
+        Solver::Euler,
+        Solver::TauLeaping,
+        Solver::Trapezoidal { theta: 0.4 },
+        Solver::Rk2 { theta: 0.5 },
+    ] {
+        for x in 0..model.n_states() {
+            for &(t, t_next) in &[(6.0, 4.0), (1.0, 0.4), (0.2, 0.05)] {
+                let a = toy::step(&model, solver, x, t, t_next, &mut r_new);
+                let b = legacy_toy::step(&model, solver, x, t, t_next, &mut r_old);
+                assert_eq!(a, b, "{} x={x} t={t}", solver.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn toy_adaptive_parity() {
+    let mut mrng = Xoshiro256::seed_from_u64(7);
+    let model = fastdds::ctmc::ToyModel::paper_default(&mut mrng);
+    for solver in [Solver::Trapezoidal { theta: 0.5 }, Solver::Rk2 { theta: 0.4 }] {
+        for tol in [1e-2, 1e-4] {
+            let cfg = AdaptiveController::for_span(tol, model.horizon, 1e-3);
+            let mut r_new = Xoshiro256::seed_from_u64(31);
+            let mut r_old = Xoshiro256::seed_from_u64(31);
+            let (x, stats, trace) = toy::generate_adaptive(
+                &model,
+                solver,
+                StepController::new(cfg, model.horizon / 32.0),
+                1e-3,
+                &mut r_new,
+            );
+            let (wx, wstats, wtrace) = legacy_toy::generate_adaptive(
+                &model,
+                solver,
+                StepController::new(cfg, model.horizon / 32.0),
+                1e-3,
+                &mut r_old,
+            );
+            assert_eq!(x, wx, "{} tol={tol}", solver.name());
+            assert_eq!(stats.nfe, wstats.nfe);
+            assert_eq!(stats.steps, wstats.steps);
+            assert_eq!(trace.grid, wtrace.grid);
+            assert_eq!(trace.errors, wtrace.errors);
+        }
+    }
+}
+
+#[test]
+fn text_uniformization_parity() {
+    // The HMM text process answers the split total with the filled vector,
+    // so the new thinning loop must be bit-identical to the legacy one.
+    use fastdds::ctmc::uniformization as new_uni;
+    use fastdds::score::hmm::UniformTextJump;
+    use legacy_uniformization as old_uni;
+
+    let mut rng = Xoshiro256::seed_from_u64(19);
+    let chain = MarkovChain::generate(&mut rng, 4, 0.7);
+    let o = HmmUniformOracle::new(chain, 6);
+    let new_jump = UniformTextJump { oracle: &o, slack: 4.0 };
+    let old_jump = old_uni::LegacyTextJump { oracle: &o, slack: 4.0 };
+
+    for seed in [1u64, 23, 456] {
+        let mut r_new = Xoshiro256::seed_from_u64(seed);
+        let mut r_old = Xoshiro256::seed_from_u64(seed);
+        // Identical (arbitrary mask-free) start states.
+        let x0: Vec<fastdds::score::Tok> = (0..6).map(|i| (i % 4) as u32).collect();
+        let (x_new, s_new) =
+            new_uni::simulate_backward(&new_jump, x0.clone(), 0.9, 0.05, 0.7, &mut r_new);
+        let (x_old, s_old) =
+            old_uni::simulate_backward(&old_jump, x0, 0.9, 0.05, 0.7, &mut r_old);
+        assert_eq!(x_new, x_old, "seed={seed}");
+        assert_eq!(s_new.nfe, s_old.nfe, "candidate counts must match");
+        assert_eq!(s_new.jumps, s_old.jumps, "jump streams must match bitwise");
+        assert_eq!(s_new.candidates, s_old.candidates);
+    }
+}

@@ -1,11 +1,14 @@
 #!/usr/bin/env bash
 # Tier-1 verification in one command (see ROADMAP.md):
-#   build + full test suite + bench smoke runs that refresh
-#   BENCH_solvers.json (per-step perf) and BENCH_schedules.json
-#   (KL/NFE for fixed vs adaptive vs tuned grids) so both trajectories
-#   are tracked across PRs.
+#   build + full test suite (incl. the golden parity suite pinning the
+#   kernel/driver refactor bit-for-bit) + bench smoke runs that refresh
+#   BENCH_solvers.json (per-step perf + driver dispatch-overhead rows) and
+#   BENCH_schedules.json (KL/NFE for fixed vs adaptive vs tuned grids) so
+#   both trajectories are tracked across PRs.
 #
-# Usage: scripts/tier1.sh [--no-bench]
+# Usage: scripts/tier1.sh [--quick|--no-bench]
+#   --quick     explicit alias of the default (quick bench smoke)
+#   --no-bench  build + tests only
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -15,6 +18,13 @@ cargo test -q
 if [[ "${1:-}" != "--no-bench" ]]; then
     cargo bench --bench solver_steps -- --quick
     cargo bench --bench schedules -- --quick
+    # The dispatch-overhead rows must exist: they are the recorded evidence
+    # that the SolverKernel/Driver indirection is free on the hot path
+    # (compare each `driver_direct` row against its `generate` twin, <=2%).
+    grep -q 'driver_direct' BENCH_solvers.json || {
+        echo "tier-1 FAIL: driver dispatch-overhead rows missing from BENCH_solvers.json"
+        exit 1
+    }
 fi
 
 echo "tier-1 OK"

@@ -1,0 +1,229 @@
+//! Exact-simulation benchmarks (`cargo bench --bench exact`): the
+//! bracketed-thinning hot path of `ctmc::uniformization`, measured as
+//! evaluations-per-sample, wall-clock-per-sample, and bracket hit rates
+//! for both exact families — the HMM uniform-state text process (brackets
+//! armed) and the toy CTMC (closed-form totals, bracket-free) — plus the
+//! naive always-evaluate baseline (`NoBracket`) on the same seeds, so the
+//! eval-reduction headline is an apples-to-apples ratio over bit-identical
+//! jump streams.
+//!
+//! Results land in `BENCH_exact.json` (tier1.sh runs `--quick` and asserts
+//! the evals-per-sample and bracket-hit-rate rows exist for both
+//! families).  A warm-scratch FID row rides along as the `eval/linalg`
+//! in-place evidence.
+
+use fastdds::bench::{bench, black_box, BenchResult};
+use fastdds::ctmc::uniformization::{
+    simulate_backward_into, ExactStats, JumpProcess, NoBracket, ToyJump,
+};
+use fastdds::ctmc::ToyModel;
+use fastdds::score::hmm::{HmmUniformOracle, UniformTextJump};
+use fastdds::score::markov::MarkovChain;
+use fastdds::score::Tok;
+use fastdds::util::json::Json;
+use fastdds::util::rng::{Rng, Xoshiro256};
+
+struct Report {
+    rows: Vec<Json>,
+}
+
+impl Report {
+    fn value(&mut self, name: &str, value: f64) {
+        println!("{name:44} {value:>12.2}");
+        self.rows.push(Json::obj(vec![
+            ("name", Json::from(name)),
+            ("value", Json::Num(value)),
+        ]));
+    }
+
+    fn timing(&mut self, r: &BenchResult) {
+        println!("{}", r.report());
+        self.rows.push(Json::obj(vec![
+            ("name", Json::from(r.name.trim())),
+            ("ns_per_iter", Json::Num(r.mean_ns)),
+            ("p50_ns", Json::Num(r.p50_ns)),
+        ]));
+    }
+
+    fn write(&self, quick: bool) {
+        let doc = Json::obj(vec![
+            ("bench", Json::from("exact")),
+            ("quick", Json::from(quick)),
+            ("rows", Json::Arr(self.rows.clone())),
+        ]);
+        let path = if std::path::Path::new("ROADMAP.md").exists() {
+            "BENCH_exact.json"
+        } else if std::path::Path::new("../ROADMAP.md").exists() {
+            "../BENCH_exact.json"
+        } else {
+            "BENCH_exact.json"
+        };
+        match std::fs::write(path, doc.to_string()) {
+            Ok(()) => println!("wrote {path} ({} rows)", self.rows.len()),
+            Err(e) => println!("could not write {path}: {e}"),
+        }
+    }
+}
+
+/// One full HMM uniform-state exact sample (bracketed or naive).
+fn hmm_sample<P: JumpProcess<State = Vec<Tok>>>(
+    proc: &P,
+    seq_len: usize,
+    vocab: usize,
+    horizon: f64,
+    t_end: f64,
+    window_ratio: f64,
+    seed: u64,
+) -> ExactStats {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let x0: Vec<Tok> = (0..seq_len).map(|_| rng.gen_usize(vocab) as Tok).collect();
+    let mut stats = ExactStats::counts_only();
+    let x = simulate_backward_into(proc, x0, horizon, t_end, window_ratio, &mut rng, &mut stats);
+    black_box(x);
+    stats
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    println!(
+        "== fastdds benches: exact simulation{} ==",
+        if quick { " (--quick)" } else { "" }
+    );
+    let mut report = Report { rows: Vec::new() };
+
+    // --- HMM uniform-state family (brackets armed) -----------------------
+    // Near-deterministic rows push the score toward the Fig. 1 singularity
+    // so the candidate count dominates the window count — the regime the
+    // brackets are for.
+    let (vocab, seq_len) = (6usize, 12usize);
+    let (horizon, t_end, window_ratio) = (6.0, 0.01, 0.9);
+    let slack = fastdds::ctmc::uniformization::DEFAULT_SLACK;
+    let n_samples = if quick { 4u64 } else { 16 };
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let chain = MarkovChain::generate(&mut rng, vocab, 0.15);
+    let oracle = HmmUniformOracle::new(chain, seq_len);
+    let bracketed = UniformTextJump { oracle: &oracle, slack };
+    let naive = NoBracket(UniformTextJump { oracle: &oracle, slack });
+
+    let (mut ev_b, mut ev_n, mut cands, mut hits) = (0usize, 0usize, 0usize, 0usize);
+    for seed in 0..n_samples {
+        let sb = hmm_sample(&bracketed, seq_len, vocab, horizon, t_end, window_ratio, seed);
+        let sn = hmm_sample(&naive, seq_len, vocab, horizon, t_end, window_ratio, seed);
+        assert_eq!(
+            sb.n_accepted, sn.n_accepted,
+            "bracketed and naive loops must realize identical jump streams"
+        );
+        assert_eq!(sb.n_candidates, sn.n_candidates);
+        ev_b += sb.nfe;
+        ev_n += sn.nfe;
+        cands += sb.n_candidates;
+        hits += sb.free_rejects;
+    }
+    let per = |x: usize| x as f64 / n_samples as f64;
+    report.value("exact hmm evals-per-sample", per(ev_b));
+    report.value("exact hmm evals-per-sample naive", per(ev_n));
+    report.value("exact hmm candidates-per-sample", per(cands));
+    report.value(
+        "exact hmm eval-reduction (naive/bracketed)",
+        ev_n as f64 / ev_b.max(1) as f64,
+    );
+    report.value(
+        "exact hmm bracket-hit-rate",
+        if cands == 0 { 0.0 } else { hits as f64 / cands as f64 },
+    );
+
+    let (warm, iters) = if quick { (1, 3) } else { (2, 10) };
+    let mut seed = 1000u64;
+    let r = bench("exact hmm wall-clock/sample (bracketed)", warm, iters, || {
+        seed += 1;
+        black_box(hmm_sample(
+            &bracketed,
+            seq_len,
+            vocab,
+            horizon,
+            t_end,
+            window_ratio,
+            seed,
+        ));
+    });
+    report.timing(&r);
+    let mut seed = 1000u64;
+    let r = bench("exact hmm wall-clock/sample (naive)", warm, iters, || {
+        seed += 1;
+        black_box(hmm_sample(
+            &naive,
+            seq_len,
+            vocab,
+            horizon,
+            t_end,
+            window_ratio,
+            seed,
+        ));
+    });
+    report.timing(&r);
+
+    // --- toy family (closed-form totals, bracket-free) -------------------
+    let mut rng = Xoshiro256::seed_from_u64(3);
+    let model = ToyModel::paper_default(&mut rng);
+    let proc = ToyJump(&model);
+    let toy_samples = if quick { 200u64 } else { 2000 };
+    let (mut ev_t, mut cands_t, mut hits_t) = (0usize, 0usize, 0usize);
+    for seed in 0..toy_samples {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let x0 = model.sample_stationary(&mut rng);
+        let mut stats = ExactStats::counts_only();
+        let x =
+            simulate_backward_into(&proc, x0, model.horizon, 1e-3, 0.5, &mut rng, &mut stats);
+        black_box(x);
+        ev_t += stats.nfe;
+        cands_t += stats.n_candidates;
+        hits_t += stats.free_rejects;
+    }
+    report.value("exact toy evals-per-sample", ev_t as f64 / toy_samples as f64);
+    report.value(
+        "exact toy bracket-hit-rate",
+        if cands_t == 0 { 0.0 } else { hits_t as f64 / cands_t as f64 },
+    );
+    let mut seed = 0u64;
+    let r = bench("exact toy wall-clock/sample", warm, iters.max(20), || {
+        seed += 1;
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let x0 = model.sample_stationary(&mut rng);
+        let mut stats = ExactStats::counts_only();
+        black_box(simulate_backward_into(
+            &proc,
+            x0,
+            model.horizon,
+            1e-3,
+            0.5,
+            &mut rng,
+            &mut stats,
+        ));
+    });
+    report.timing(&r);
+
+    // --- FID with warm scratch (eval/linalg in-place evidence) -----------
+    {
+        use fastdds::eval::fid::{frechet_distance_with, moments_with, FidScratch, MomentsScratch};
+        let d = 32usize;
+        let n = if quick { 200 } else { 1000 };
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let cloud = |rng: &mut Xoshiro256, shift: f64| -> Vec<Vec<f64>> {
+            (0..n)
+                .map(|_| (0..d).map(|_| shift + rng.gen_f64()).collect())
+                .collect()
+        };
+        let a = cloud(&mut rng, 0.0);
+        let b = cloud(&mut rng, 0.1);
+        let mut ms = MomentsScratch::default();
+        let mut fs = FidScratch::new();
+        let ma = moments_with(&a, &mut ms);
+        let mb = moments_with(&b, &mut ms);
+        let r = bench("fid d=32 warm-scratch", warm, iters.max(10), || {
+            black_box(frechet_distance_with(&ma, &mb, &mut fs));
+        });
+        report.timing(&r);
+    }
+
+    report.write(quick);
+}

@@ -37,6 +37,11 @@ pub struct BatchKey {
     pub schedule_bits: u64,
     /// Hard NFE budget + 1 (0 = unbudgeted).
     pub budget_plus1: u64,
+    /// Exact-path knob identity (effective-value bits for exact lanes,
+    /// 0 otherwise): lanes of one exact batch must share the knobs the
+    /// scheduler threads through to the simulator.
+    pub exact_wr_bits: u64,
+    pub exact_slack_bits: u64,
 }
 
 impl BatchKey {
@@ -51,6 +56,15 @@ impl BatchKey {
             Solver::Exact => (6, 0.0),
         };
         let (schedule_kind, schedule_bits) = req.schedule.key_bits();
+        // Key on the EFFECTIVE knob values (request or default) so an
+        // explicit request for the defaults co-batches with a knob-free one.
+        let (exact_wr_bits, exact_slack_bits) = match req.solver {
+            Solver::Exact => {
+                let cfg = req.exact_cfg();
+                (cfg.window_ratio.to_bits(), cfg.slack.to_bits())
+            }
+            _ => (0, 0),
+        };
         BatchKey {
             family_hash: crate::testkit::fnv1a(&req.family),
             solver_kind: kind,
@@ -59,6 +73,8 @@ impl BatchKey {
             schedule_kind,
             schedule_bits,
             budget_plus1: req.nfe_budget.map(|b| b as u64 + 1).unwrap_or(0),
+            exact_wr_bits,
+            exact_slack_bits,
         }
     }
 }
@@ -220,6 +236,28 @@ mod tests {
         assert!(ids.contains(&1) && ids.contains(&2) && !ids.contains(&3));
         let euler = batches.iter().find(|(s, _)| *s == Solver::Euler).unwrap();
         assert_eq!(euler.1.len(), 2);
+    }
+
+    #[test]
+    fn exact_knobs_split_keys_only_for_exact() {
+        use crate::ctmc::uniformization::{DEFAULT_SLACK, DEFAULT_WINDOW_RATIO};
+        let base = req(1, Solver::Exact, 16, 1);
+        let mut tuned = base.clone();
+        tuned.slack = Some(2.0);
+        assert_ne!(BatchKey::of(&base), BatchKey::of(&tuned));
+        let mut ratio = base.clone();
+        ratio.window_ratio = Some(0.9);
+        assert_ne!(BatchKey::of(&base), BatchKey::of(&ratio));
+        // Explicit defaults co-batch with knob-free exact requests.
+        let mut explicit = base.clone();
+        explicit.window_ratio = Some(DEFAULT_WINDOW_RATIO);
+        explicit.slack = Some(DEFAULT_SLACK);
+        assert_eq!(BatchKey::of(&base), BatchKey::of(&explicit));
+        // Knobs are inert (zeroed) in non-exact keys.
+        let mut tau = req(2, Solver::TauLeaping, 16, 1);
+        let k1 = BatchKey::of(&tau);
+        tau.slack = Some(9.0);
+        assert_eq!(k1, BatchKey::of(&tau));
     }
 
     #[test]

@@ -252,6 +252,16 @@ fn coordinator_loop(
                 deadline
             }) {
                 Ok(Msg::Submit(req, reply)) => {
+                    // Validate at intake, before batching: a batch must
+                    // never mix valid and invalid requests — the batch key
+                    // does not encode every validated field, so per-batch
+                    // validation of the proto request could reject a valid
+                    // co-batched neighbour or let an invalid request ride
+                    // a valid proto.
+                    if let Err(err) = scheduler::validate_request(&req) {
+                        let _ = reply.send(Err(err));
+                        continue;
+                    }
                     metrics.requests += 1;
                     metrics.lanes += req.n_samples as u64;
                     assembler.register(req.id, req.n_samples, now_ms(started));
@@ -533,6 +543,26 @@ mod tests {
         // co-batching partners in flight.
         let again = c.generate(req(2, solver, nfe, n, seed)).unwrap();
         assert_eq!(again.sequences, resp.sequences);
+        c.shutdown();
+    }
+
+    #[test]
+    fn invalid_request_rejected_at_intake_without_poisoning_batch() {
+        // Knobs on a non-exact solver are invalid, but their bits are
+        // zeroed out of non-exact batch keys — so an invalid request and a
+        // valid one land in the SAME queue.  Intake validation must reject
+        // the invalid one and leave its co-batched neighbour unharmed.
+        let oracle = local_oracle(5, 12);
+        let c = Coordinator::start_local(oracle, BatchPolicy::Greedy, 8);
+        let mut bad = req(1, Solver::TauLeaping, 16, 2, 3);
+        bad.slack = Some(2.0);
+        let rx_bad = c.submit(bad);
+        let rx_good = c.submit(req(2, Solver::TauLeaping, 16, 2, 3));
+        let err = rx_bad.recv().unwrap().unwrap_err();
+        assert!(format!("{err:#}").contains("exact"), "{err:#}");
+        let good = rx_good.recv().unwrap().unwrap();
+        assert_eq!(good.sequences.len(), 2);
+        assert!(good.sequences.iter().all(|s| s.iter().all(|&t| t < 5)));
         c.shutdown();
     }
 

@@ -1,5 +1,6 @@
 //! Request/response types of the serving layer.
 
+use crate::ctmc::uniformization::ExactCfg;
 use crate::schedule::ScheduleSpec;
 use crate::score::Tok;
 use crate::solvers::Solver;
@@ -24,6 +25,12 @@ pub struct GenerateRequest {
     /// including the terminal denoise — never spends more.  Requires
     /// `nfe_budget >= nfe_per_step + 1`.
     pub nfe_budget: Option<usize>,
+    /// Exact-path knob (`"window_ratio"` field, [`Solver::Exact`] only):
+    /// geometric window ratio of the windowed uniformization, in (0, 1).
+    pub window_ratio: Option<f64>,
+    /// Exact-path knob (`"slack"` field, [`Solver::Exact`] only): thinning
+    /// safety factor >= 1 applied to evaluated window bounds.
+    pub slack: Option<f64>,
 }
 
 impl Default for GenerateRequest {
@@ -37,6 +44,8 @@ impl Default for GenerateRequest {
             seed: 0,
             schedule: ScheduleSpec::Uniform,
             nfe_budget: None,
+            window_ratio: None,
+            slack: None,
         }
     }
 }
@@ -62,7 +71,19 @@ impl GenerateRequest {
             seed: j.opt("seed").map(|v| v.as_f64()).transpose()?.unwrap_or(0.0) as u64,
             schedule,
             nfe_budget: j.opt("nfe_budget").map(|v| v.as_usize()).transpose()?,
+            window_ratio: j.opt("window_ratio").map(|v| v.as_f64()).transpose()?,
+            slack: j.opt("slack").map(|v| v.as_f64()).transpose()?,
         })
+    }
+
+    /// Effective exact-path knobs: request values where given, the library
+    /// defaults otherwise.  Also the batch-key identity for exact lanes.
+    pub fn exact_cfg(&self) -> ExactCfg {
+        let d = ExactCfg::default();
+        ExactCfg {
+            window_ratio: self.window_ratio.unwrap_or(d.window_ratio),
+            slack: self.slack.unwrap_or(d.slack),
+        }
     }
 
     pub fn to_json(&self) -> Json {
@@ -76,6 +97,12 @@ impl GenerateRequest {
         ];
         if let Some(b) = self.nfe_budget {
             fields.push(("nfe_budget", Json::from(b)));
+        }
+        if let Some(w) = self.window_ratio {
+            fields.push(("window_ratio", Json::Num(w)));
+        }
+        if let Some(s) = self.slack {
+            fields.push(("slack", Json::Num(s)));
         }
         Json::obj(fields)
     }
@@ -145,6 +172,8 @@ mod tests {
             seed: 42,
             schedule: ScheduleSpec::Adaptive { tol: 1e-3 },
             nfe_budget: Some(48),
+            window_ratio: None,
+            slack: None,
         };
         let j = r.to_json();
         let back = GenerateRequest::from_json(&j, 7).unwrap();
@@ -154,6 +183,29 @@ mod tests {
         assert_eq!(back.seed, 42);
         assert_eq!(back.schedule, ScheduleSpec::Adaptive { tol: 1e-3 });
         assert_eq!(back.nfe_budget, Some(48));
+        assert_eq!(back.window_ratio, None);
+        assert_eq!(back.slack, None);
+    }
+
+    #[test]
+    fn exact_knobs_roundtrip_and_default() {
+        let j = Json::parse(
+            r#"{"solver": "exact", "nfe": 16, "window_ratio": 0.8, "slack": 2.5}"#,
+        )
+        .unwrap();
+        let r = GenerateRequest::from_json(&j, 1).unwrap();
+        assert_eq!(r.window_ratio, Some(0.8));
+        assert_eq!(r.slack, Some(2.5));
+        let back = GenerateRequest::from_json(&r.to_json(), 1).unwrap();
+        assert_eq!(back.window_ratio, Some(0.8));
+        assert_eq!(back.slack, Some(2.5));
+        assert_eq!(r.exact_cfg(), ExactCfg { window_ratio: 0.8, slack: 2.5 });
+
+        // Absent knobs resolve to the library defaults.
+        let j = Json::parse(r#"{"solver": "exact", "nfe": 16}"#).unwrap();
+        let r = GenerateRequest::from_json(&j, 2).unwrap();
+        assert_eq!(r.window_ratio, None);
+        assert_eq!(r.exact_cfg(), ExactCfg::default());
     }
 
     #[test]

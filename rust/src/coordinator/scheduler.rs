@@ -40,8 +40,13 @@ pub struct BatchResult {
 
 /// Validate the client-controlled solver/budget parameters.  These must be
 /// rejected with an error, never allowed to reach the solver asserts (a
-/// panic here would kill the long-lived coordinator thread).
-fn validate_request(req: &GenerateRequest) -> Result<()> {
+/// panic here would kill the long-lived coordinator thread).  The
+/// coordinator ALSO runs this at request intake, before batching: the
+/// batch key does not encode every validated field (non-exact keys zero
+/// the knob bits, for instance), so per-batch validation on the proto
+/// request alone could reject a valid co-batched request or silently
+/// accept an invalid one.
+pub(crate) fn validate_request(req: &GenerateRequest) -> Result<()> {
     match req.solver {
         Solver::Trapezoidal { theta } if !(theta > 0.0 && theta < 1.0) => {
             bail!("trapezoidal theta {theta} outside (0, 1) — second-order range of Thm. 5.4");
@@ -59,6 +64,46 @@ fn validate_request(req: &GenerateRequest) -> Result<()> {
             );
         }
         _ => {}
+    }
+    // Exact-path knobs: only meaningful for Solver::Exact, and bounded so
+    // a client cannot request degenerate windows or an invalid bound.
+    if (req.window_ratio.is_some() || req.slack.is_some())
+        && !matches!(req.solver, Solver::Exact)
+    {
+        bail!(
+            "window_ratio/slack are exact-simulation knobs; solver {} ignores them",
+            req.solver.name()
+        );
+    }
+    if let Some(w) = req.window_ratio {
+        if !(w > 0.0 && w < 1.0) {
+            bail!("window_ratio {w} outside (0, 1)");
+        }
+    }
+    if let Some(s) = req.slack {
+        if !(s.is_finite() && s >= 1.0) {
+            bail!("slack {s} must be finite and >= 1 (a thinning bound inflation)");
+        }
+    }
+    if matches!(req.solver, Solver::Exact) {
+        // The thinning bound evaluates at the window's small end, but
+        // data-consistent positions RISE with t (by up to ~1/window_ratio
+        // at small t; see score::hmm::rise_envelope) — slack must cover
+        // that rise or the dominating rate is silently invalid.  The
+        // margin is the bracket's own drift margin, so the floor and the
+        // envelope stay in lock-step.
+        let cfg = req.exact_cfg();
+        let floor = crate::score::hmm::SUP_DRIFT_MARGIN / cfg.window_ratio;
+        if cfg.slack < floor {
+            bail!(
+                "slack {} too small for window_ratio {}: the thinning bound \
+                 needs slack >= {}/window_ratio (= {floor:.2}) to dominate \
+                 the in-window intensity rise",
+                cfg.slack,
+                cfg.window_ratio,
+                crate::score::hmm::SUP_DRIFT_MARGIN
+            );
+        }
     }
     if req.nfe < req.solver.nfe_per_step() {
         bail!("nfe budget {} below one step ({})", req.nfe, req.solver.nfe_per_step());
@@ -139,6 +184,21 @@ pub fn run_batch_scored(
     validate_request(req)?;
     let solver = req.solver;
     let seeds: Vec<u64> = lanes.iter().map(|l| l.seed).collect();
+
+    if matches!(solver, Solver::Exact) {
+        // Exact lanes dispatch through the knob-aware path: sources with a
+        // native uniform-state process run bracketed uniformization under
+        // the request's (window_ratio, slack); others run the window-free
+        // first-hitting sampler.  Fixed schedules only reach here (the
+        // adaptive/tuned specs were rejected above), and their interior
+        // grid points are irrelevant to exact simulation — only the
+        // terminal DELTA matters.
+        let results = masked::exact_batch(score, DELTA, &req.exact_cfg(), &seeds);
+        return Ok(BatchResult {
+            nfe: results.iter().map(|(_, s)| s.nfe).collect(),
+            tokens: results.into_iter().map(|(t, _)| t).collect(),
+        });
+    }
 
     let results = match req.schedule {
         ScheduleSpec::Uniform => {
@@ -486,6 +546,61 @@ mod tests {
         let mut req = scored_req(Solver::Exact, 16);
         req.schedule = ScheduleSpec::Adaptive { tol: 1e-3 };
         assert!(run_batch_scored(&oracle, &req, &[], &mut cache).is_err());
+    }
+
+    #[test]
+    fn run_batch_scored_validates_and_threads_exact_knobs() {
+        use crate::score::hmm::HmmUniformOracle;
+        use crate::score::markov::{MarkovChain, MarkovOracle};
+        let mut rng = Xoshiro256::seed_from_u64(41);
+        let chain = MarkovChain::generate(&mut rng, 5, 0.6);
+        let mut cache = ScheduleCache::new();
+
+        // Knobs on a non-exact solver: clean error.
+        let oracle = MarkovOracle::new(chain.clone(), 8);
+        let mut req = scored_req(Solver::TauLeaping, 16);
+        req.slack = Some(2.0);
+        let err = run_batch_scored(&oracle, &req, &[], &mut cache).unwrap_err();
+        assert!(format!("{err:#}").contains("exact"), "{err:#}");
+        // Out-of-range knobs on exact: clean errors.
+        for (wr, sl) in [(Some(0.0), None), (Some(1.0), None), (None, Some(0.5)), (None, Some(f64::NAN))] {
+            let mut req = scored_req(Solver::Exact, 16);
+            req.window_ratio = wr;
+            req.slack = sl;
+            assert!(
+                run_batch_scored(&oracle, &req, &[], &mut cache).is_err(),
+                "wr={wr:?} slack={sl:?} must be rejected"
+            );
+        }
+        // Markov (no uniform-state process): knobs accepted, FHS fallback
+        // still bit-identical to the per-lane sampler.
+        let lanes = test_lanes(2);
+        let mut req = scored_req(Solver::Exact, 16);
+        req.window_ratio = Some(0.9);
+        req.slack = Some(2.0);
+        let result = run_batch_scored(&oracle, &req, &lanes, &mut cache).unwrap();
+        for (k, lane) in lanes.iter().enumerate() {
+            let mut r = Xoshiro256::seed_from_u64(lane.seed);
+            let (toks, stats, _) = crate::solvers::masked::fhs_generate(&oracle, DELTA, &mut r);
+            assert_eq!(result.tokens[k], toks, "lane {k}");
+            assert_eq!(result.nfe[k], stats.nfe, "lane {k}");
+        }
+        // HMM family: exact runs bracketed uniformization under the knobs;
+        // samples are mask-free, deterministic per lane seed, and nfe_used
+        // reports evaluations actually performed (>= 1).
+        let hmm = HmmUniformOracle::new(chain, 8);
+        let mut req = scored_req(Solver::Exact, 16);
+        req.window_ratio = Some(0.6);
+        req.slack = Some(3.0);
+        let a = run_batch_scored(&hmm, &req, &lanes, &mut cache).unwrap();
+        let b = run_batch_scored(&hmm, &req, &lanes, &mut cache).unwrap();
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.nfe, b.nfe);
+        for (toks, &nfe) in a.tokens.iter().zip(&a.nfe) {
+            assert_eq!(toks.len(), 8);
+            assert!(toks.iter().all(|&t| (t as usize) < 5), "{toks:?}");
+            assert!(nfe >= 1);
+        }
     }
 
     #[test]

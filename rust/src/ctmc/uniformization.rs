@@ -1,5 +1,7 @@
 //! Exact simulation by uniformization/thinning (Sec. 3.1 baseline) —
-//! [`crate::solvers::Solver::Exact`]'s engine for the toy family.
+//! [`crate::solvers::Solver::Exact`]'s engine for the toy family and for
+//! score sources with a native uniform-state reverse process
+//! ([`crate::score::ScoreSource::exact_uniform`]).
 //!
 //! The backward process has time- and state-dependent intensities, so plain
 //! uniformization (constant dominating rate) is hopeless near the data end
@@ -7,9 +9,45 @@
 //! backward time axis into windows, dominate the total intensity inside each
 //! window by a local bound B_w, generate candidate events at rate B_w, and
 //! accept a candidate at backward position with forward time t with
-//! probability mu_tot(x, t) / B_w (thinning).  Every candidate costs one
-//! intensity evaluation — the NFE blow-up of Fig. 1 is exactly the candidate
-//! count growing as the bound diverges for t -> 0.
+//! probability mu_tot(x, t) / B_w (thinning).  The NFE blow-up of Fig. 1 is
+//! the candidate count growing as the bound diverges for t -> 0.
+//!
+//! ## Bracketed thinning
+//!
+//! Within a window the state is fixed (a jump restarts the window), so a
+//! process that can certify an UPPER ENVELOPE `mu_sup >=
+//! sup_{t in window} mu_tot(x, t)` as a byproduct of its bound evaluation
+//! (via [`JumpProcess::window_bound`]) lets the accept draw
+//! `u = rng.gen_f64()` be resolved WITHOUT evaluating the score whenever
+//! `u·B_w >= mu_sup·(1+ε)` — a **free reject** (ε is `BRACKET_MARGIN`,
+//! guarding against ulp noise in the evaluated totals).  With
+//! `B_w = slack · mu_tot(x, t_lo)`, a (slack−env)/slack fraction of all
+//! candidates resolves this way, immediately — these are the saved
+//! evaluations; everything else pays exactly the evaluation the naive
+//! loop pays.
+//!
+//! Every resolved comparison agrees with the full evaluation (candidates
+//! inside the envelope just fall through to it), and the RNG consumption
+//! per candidate (one exponential, one uniform, one categorical on
+//! accept) is unchanged, so the jump streams are **bit-identical** to the
+//! naive always-evaluate loop (pinned by `tests/golden_parity.rs` against
+//! [`NoBracket`] and the embedded legacy loop) while the true
+//! score-evaluation NFE strictly drops.  Debug builds verify every free
+//! reject by a full evaluation.
+//!
+//! **Finding — no free-accept bracket.**  The symmetric idea (accept
+//! without the test evaluation when `u·B_w` is below the last in-window
+//! evaluation) relies on mu_tot(x, ·) being monotone non-increasing in t
+//! for the fixed state.  That premise is FALSE in general: per position,
+//! the reverse intensity is `1/(a_t + b_t·q_i) − 1` with q_i the
+//! leave-one-out posterior of the current token, which *rises* with t
+//! whenever q_i > 1/V — i.e. exactly at data-consistent positions, the
+//! regime a converged reverse chain lives in.  Since an accepted
+//! candidate needs the intensity vector anyway (to pick the jump), a
+//! free accept would save nothing — so the accept test is always the
+//! evaluated comparison, and only the reject side is bracketed (with the
+//! rise of consistent positions covered by the envelope, see
+//! `UniformTextJump::window_bound`).
 //!
 //! ## Split total/vector evaluation
 //!
@@ -21,16 +59,82 @@
 //! and the simulator back-fills the vector only for the (much rarer)
 //! accepted candidates.  For the HMM text process the total is irreducibly
 //! the same message pass that produces the vector, so its override returns
-//! the filled vector and nothing is recomputed — for that process the jump
-//! streams are bit-identical to the naive always-fill loop (pinned by
-//! `tests/golden_parity.rs`).  For the toy process the closed-form total
-//! equals the vector sum only up to floating-point rounding (asserted to
-//! 1e-12 below), so a borderline accept decision could in principle differ
-//! from the pre-refactor loop for a fixed seed; the toy sampler's
-//! correctness is pinned distributionally, not bitwise.
+//! the filled vector and nothing is recomputed.  For the toy process the
+//! closed-form total equals the vector sum only up to floating-point
+//! rounding (asserted to 1e-12 below), so a borderline accept decision
+//! could in principle differ from the pre-refactor loop for a fixed seed;
+//! the toy sampler's correctness is pinned distributionally, not bitwise.
+//!
+//! ## Cost accounting
+//!
+//! [`ExactStats::nfe`] counts score evaluations ACTUALLY performed
+//! (window-bound evaluations plus unbracketed candidate evaluations) —
+//! the real cost Fig. 1 and the served `nfe_used` report.  The candidate
+//! count (the naive loop's evaluation count) is kept separately as
+//! [`ExactStats::n_candidates`].  The per-event recordings used by the
+//! Fig. 1 histogram are optional ([`ExactStats::recording`]); the serving
+//! path runs counts-only so per-request memory stays bounded.
 
 use crate::util::dist::{categorical_f64, exponential};
 use crate::util::rng::Rng;
+
+/// Default geometric window ratio of the windowed uniformization
+/// (the value the toy exact path has always used).
+pub const DEFAULT_WINDOW_RATIO: f64 = 0.5;
+
+/// Default thinning safety factor for processes whose window bound is the
+/// evaluated t_lo total times a slack (the Fig. 1 setting).  The serving
+/// layer additionally enforces `slack >= 1.5 / window_ratio` so the bound
+/// dominates the in-window rise of data-consistent positions.
+pub const DEFAULT_SLACK: f64 = 4.0;
+
+/// Relative headroom on the free-reject comparison (the same headroom the
+/// thinning-bound assertion has always granted): the envelope argument is
+/// mathematical, but the totals it is compared against are floating-point
+/// evaluations that can sit a few ulps off, so a zero-tolerance bracket
+/// could flip a borderline decision relative to the full test.
+/// Candidates whose draw lands inside the margin band simply fall through
+/// to full evaluation — correctness never depends on the margin, only the
+/// (negligible) hit-rate loss does.
+const BRACKET_MARGIN: f64 = 1e-9;
+
+/// Tunable knobs of the exact-simulation path, threaded from the request
+/// surface (`"window_ratio"` / `"slack"` fields, `client --window-ratio
+/// --slack`) down to [`simulate_backward_into`].  The masked-family
+/// first-hitting sampler is window-free and ignores both (documented at
+/// [`crate::solvers::masked::exact_batch`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ExactCfg {
+    /// Geometric window ratio in (0, 1): window [t_hi * ratio, t_hi].
+    pub window_ratio: f64,
+    /// Thinning safety factor (>= 1) applied to evaluated window bounds.
+    pub slack: f64,
+}
+
+impl Default for ExactCfg {
+    fn default() -> Self {
+        ExactCfg { window_ratio: DEFAULT_WINDOW_RATIO, slack: DEFAULT_SLACK }
+    }
+}
+
+/// A window bound plus the bracket data enabling evaluation-free reject
+/// decisions inside the window.
+#[derive(Clone, Copy, Debug)]
+pub struct WindowBound {
+    /// Dominating rate B_w for the candidate Poisson process.
+    pub bound: f64,
+    /// Upper envelope of mu_tot(x, .) over the window for the FIXED
+    /// in-window state x, when known as a (cheap) byproduct of the bound
+    /// evaluation.  Contract: `Some(env)` asserts
+    /// `mu_tot(x, t) <= env` for every t in [t_lo, t_hi] — candidates
+    /// whose accept draw clears the envelope are rejected without
+    /// evaluation.  `None` disables bracketing: every candidate evaluates
+    /// (the default, today's behavior).
+    pub mu_sup: Option<f64>,
+    /// Score evaluations spent computing the bound (charged to
+    /// [`ExactStats::nfe`]; 0 for closed-form bounds).
+    pub evals: usize,
+}
 
 /// A jump process with nu-indexed, time/state-dependent intensities.
 pub trait JumpProcess {
@@ -57,27 +161,142 @@ pub trait JumpProcess {
     /// per-window bounds never allocate.
     fn total_bound(&self, x: &Self::State, t_lo: f64, t_hi: f64, scratch: &mut [f64]) -> f64;
 
+    /// Window bound plus bracket data ([`WindowBound`]).  The default wraps
+    /// [`JumpProcess::total_bound`] with bracketing disabled — processes
+    /// that can certify an upper envelope of the total over the window as
+    /// a byproduct of the bound evaluation override this to arm the
+    /// free-reject bracket.
+    fn window_bound(
+        &self,
+        x: &Self::State,
+        t_lo: f64,
+        t_hi: f64,
+        scratch: &mut [f64],
+    ) -> WindowBound {
+        WindowBound {
+            bound: self.total_bound(x, t_lo, t_hi, scratch),
+            mu_sup: None,
+            evals: 0,
+        }
+    }
+
     /// Apply jump nu to the state.
     fn apply(&self, x: &mut Self::State, nu: usize);
+}
+
+/// Wrapper disabling the bracket hooks of an inner process while keeping
+/// its bound (and the bound's evaluation cost) — the naive always-evaluate
+/// loop, used as the baseline by `bench exact` and the parity tests.
+pub struct NoBracket<P>(pub P);
+
+impl<P: JumpProcess> JumpProcess for NoBracket<P> {
+    type State = P::State;
+
+    fn n_jumps(&self) -> usize {
+        self.0.n_jumps()
+    }
+
+    fn intensities(&self, x: &Self::State, t: f64, out: &mut [f64]) {
+        self.0.intensities(x, t, out)
+    }
+
+    fn total_intensity(&self, x: &Self::State, t: f64, scratch: &mut [f64]) -> (f64, bool) {
+        self.0.total_intensity(x, t, scratch)
+    }
+
+    fn total_bound(&self, x: &Self::State, t_lo: f64, t_hi: f64, scratch: &mut [f64]) -> f64 {
+        self.0.total_bound(x, t_lo, t_hi, scratch)
+    }
+
+    fn window_bound(
+        &self,
+        x: &Self::State,
+        t_lo: f64,
+        t_hi: f64,
+        scratch: &mut [f64],
+    ) -> WindowBound {
+        let mut wb = self.0.window_bound(x, t_lo, t_hi, scratch);
+        wb.mu_sup = None; // same bound, same eval cost, no brackets
+        wb
+    }
+
+    fn apply(&self, x: &mut Self::State, nu: usize) {
+        self.0.apply(x, nu)
+    }
 }
 
 /// One recorded jump: (forward time, jump index).
 pub type Jump = (f64, usize);
 
+/// Per-run statistics of one exact-simulation pass.  Counts are always
+/// maintained; the per-event vectors are recorded only when enabled
+/// (builder-style), so the serving path carries O(1) state per request.
 #[derive(Clone, Debug, Default)]
 pub struct ExactStats {
-    /// Total candidate events = intensity evaluations (the NFE of Fig. 1).
+    /// Score evaluations ACTUALLY performed: window-bound evaluations plus
+    /// candidate evaluations the bracket could not resolve.  This is the
+    /// real cost — the quantity Fig. 1 plots and `nfe_used` reports.
     pub nfe: usize,
-    /// Accepted jumps with their forward times.
+    /// Total candidate events proposed by the dominating Poisson process
+    /// (the naive always-evaluate loop performs exactly this many
+    /// candidate evaluations).
+    pub n_candidates: usize,
+    /// Accepted jumps.
+    pub n_accepted: usize,
+    /// Candidates rejected through the window-envelope bracket without any
+    /// evaluation (each one is an evaluation the naive loop would have
+    /// paid; there is no accept-side analogue — see the module docs).
+    pub free_rejects: usize,
+    /// Evaluations spent on window bounds (included in `nfe`).
+    pub bound_evals: usize,
+    /// Accepted jumps with their forward times (jump recording only).
     pub jumps: Vec<Jump>,
-    /// Forward times of ALL candidate events (accepted + thinned); the
-    /// Fig. 1 histogram bins these.
-    pub candidates: Vec<f64>,
+    /// Forward times of ALL candidate events (candidate recording only);
+    /// the Fig. 1 histogram bins these.
+    pub candidate_times: Vec<f64>,
+    record_jumps: bool,
+    record_candidates: bool,
 }
 
-/// Simulate the backward process exactly from forward time `t_start` down to
-/// `t_end` (0 < t_end < t_start), using geometric windows with ratio
-/// `window_ratio` in (0, 1).
+impl ExactStats {
+    /// Counts-only statistics (no per-event vectors) — the serving mode.
+    pub fn counts_only() -> Self {
+        ExactStats::default()
+    }
+
+    /// Record both jumps and candidate times (the Fig. 1 / parity mode).
+    pub fn recording() -> Self {
+        ExactStats::default()
+            .with_jump_recording()
+            .with_candidate_recording()
+    }
+
+    pub fn with_jump_recording(mut self) -> Self {
+        self.record_jumps = true;
+        self
+    }
+
+    pub fn with_candidate_recording(mut self) -> Self {
+        self.record_candidates = true;
+        self
+    }
+
+    /// Fraction of candidates resolved without any evaluation (free
+    /// rejects) — the fraction of naive-loop evaluations the bracket
+    /// saved.
+    pub fn bracket_hit_rate(&self) -> f64 {
+        if self.n_candidates == 0 {
+            0.0
+        } else {
+            self.free_rejects as f64 / self.n_candidates as f64
+        }
+    }
+}
+
+/// Simulate the backward process exactly from forward time `t_start` down
+/// to `t_end` (0 < t_end < t_start), using geometric windows with ratio
+/// `window_ratio` in (0, 1).  Records jumps and candidate times
+/// (back-compatible wrapper over [`simulate_backward_into`]).
 pub fn simulate_backward<P: JumpProcess, R: Rng>(
     proc: &P,
     x0: P::State,
@@ -86,16 +305,35 @@ pub fn simulate_backward<P: JumpProcess, R: Rng>(
     window_ratio: f64,
     rng: &mut R,
 ) -> (P::State, ExactStats) {
+    let mut stats = ExactStats::recording();
+    let x = simulate_backward_into(proc, x0, t_start, t_end, window_ratio, rng, &mut stats);
+    (x, stats)
+}
+
+/// As [`simulate_backward`], with caller-owned statistics: construct
+/// `stats` via [`ExactStats::counts_only`] / [`ExactStats::recording`] to
+/// choose what is recorded.  The bracketed thinning loop lives here.
+pub fn simulate_backward_into<P: JumpProcess, R: Rng>(
+    proc: &P,
+    x0: P::State,
+    t_start: f64,
+    t_end: f64,
+    window_ratio: f64,
+    rng: &mut R,
+    stats: &mut ExactStats,
+) -> P::State {
     assert!(t_end > 0.0 && t_end < t_start);
     assert!(window_ratio > 0.0 && window_ratio < 1.0);
     let mut x = x0;
-    let mut stats = ExactStats::default();
     let mut mu = vec![0.0; proc.n_jumps()];
 
     let mut t_hi = t_start;
     while t_hi > t_end {
         let t_lo = (t_hi * window_ratio).max(t_end);
-        let bound = proc.total_bound(&x, t_lo, t_hi, &mut mu).max(1e-12);
+        let wb = proc.window_bound(&x, t_lo, t_hi, &mut mu);
+        let bound = wb.bound.max(1e-12);
+        stats.nfe += wb.evals;
+        stats.bound_evals += wb.evals;
         // Candidate events: Poisson process at rate `bound` on [t_lo, t_hi],
         // walked downward in forward time (forward time decreases along the
         // backward process).
@@ -105,22 +343,56 @@ pub fn simulate_backward<P: JumpProcess, R: Rng>(
             if t <= t_lo {
                 break;
             }
-            // Accept test needs only the total; the vector is back-filled
-            // on acceptance when the cheap path skipped it.
+            // The accept draw is taken BEFORE any evaluation so the bracket
+            // can resolve it; per-candidate RNG consumption (exponential,
+            // uniform, categorical-on-accept) is identical to the naive
+            // loop, which keeps jump streams bit-identical.
+            let u = rng.gen_f64();
+            stats.n_candidates += 1;
+            if stats.record_candidates {
+                stats.candidate_times.push(t);
+            }
+            if let Some(env) = wb.mu_sup {
+                if u * bound >= env * (1.0 + BRACKET_MARGIN) {
+                    // Free reject: the envelope dominates mu_tot(x, t) on
+                    // the whole window (with BRACKET_MARGIN headroom so
+                    // ulp noise in the evaluated totals cannot flip the
+                    // decision), so the full test would reject too.
+                    stats.free_rejects += 1;
+                    #[cfg(debug_assertions)]
+                    {
+                        let (tot, _) = proc.total_intensity(&x, t, &mut mu);
+                        debug_assert!(
+                            u * bound >= tot,
+                            "bracket free-reject disagrees with evaluation: \
+                             u*bound={} tot={tot} env={env}",
+                            u * bound
+                        );
+                    }
+                    continue;
+                }
+            }
+            // Everything not free-rejected pays exactly one evaluation,
+            // and the accept decision is the evaluated comparison — the
+            // naive loop's, verbatim.  The accept test needs only the
+            // total; the vector is back-filled on acceptance when the
+            // cheap path skipped it.
             let (tot, filled) = proc.total_intensity(&x, t, &mut mu);
             stats.nfe += 1;
-            stats.candidates.push(t);
             debug_assert!(
                 tot <= bound * (1.0 + 1e-9),
                 "thinning bound violated: tot={tot} bound={bound}"
             );
-            if rng.gen_f64() * bound < tot {
+            if u * bound < tot {
                 if !filled {
                     proc.intensities(&x, t, &mut mu);
                 }
                 let nu = categorical_f64(rng, &mu);
                 proc.apply(&mut x, nu);
-                stats.jumps.push((t, nu));
+                stats.n_accepted += 1;
+                if stats.record_jumps {
+                    stats.jumps.push((t, nu));
+                }
                 // State changed: restart the window with a fresh bound.
                 t_hi = t;
                 break;
@@ -131,10 +403,13 @@ pub fn simulate_backward<P: JumpProcess, R: Rng>(
             t_hi = t_lo;
         }
     }
-    (x, stats)
+    x
 }
 
 /// The toy model as a JumpProcess (states 0..S, jumps by +nu mod S).
+///
+/// No bracket hooks: the per-candidate total is already a closed form
+/// (O(1)), so a free reject would save nothing.
 pub struct ToyJump<'a>(pub &'a crate::ctmc::ToyModel);
 
 impl JumpProcess for ToyJump<'_> {
@@ -251,5 +526,31 @@ mod tests {
             assert!(t > 0.0 && t < model.horizon);
             assert!(nu >= 1 && nu < model.n_states());
         }
+        // Count fields mirror the recordings.
+        assert_eq!(s.n_accepted, s.jumps.len());
+        assert_eq!(s.n_candidates, s.candidate_times.len());
+        // The toy process has no brackets: every candidate evaluates.
+        assert_eq!(s.nfe, s.n_candidates);
+        assert_eq!(s.free_rejects, 0);
+        assert_eq!(s.bracket_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn counts_only_mode_records_nothing_but_counts_everything() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let model = ToyModel::paper_default(&mut rng);
+        let proc = ToyJump(&model);
+        let x0 = model.sample_stationary(&mut rng);
+        let mut r1 = rng.clone();
+        let mut r2 = rng.clone();
+        let (x_rec, s_rec) =
+            simulate_backward(&proc, x0, model.horizon, 1e-3, 0.5, &mut r1);
+        let mut s = ExactStats::counts_only();
+        let x = simulate_backward_into(&proc, x0, model.horizon, 1e-3, 0.5, &mut r2, &mut s);
+        assert_eq!(x, x_rec, "recording must not change the sample");
+        assert!(s.jumps.is_empty() && s.candidate_times.is_empty());
+        assert_eq!(s.nfe, s_rec.nfe);
+        assert_eq!(s.n_candidates, s_rec.n_candidates);
+        assert_eq!(s.n_accepted, s_rec.n_accepted);
     }
 }

@@ -14,7 +14,11 @@
 //! activations, since sampler-induced distribution error shows up directly
 //! in those sufficient statistics for the synthetic data law.
 
-use crate::eval::linalg::{sqrt_psd, Mat};
+use crate::eval::linalg::{sqrt_psd_into, EigenWorkspace, Mat};
+
+/// Covariance block: rows centered and transposed per pass (so the
+/// O(n d²) accumulation runs over contiguous columns).
+const COV_BLOCK: usize = 64;
 
 /// Mean vector and covariance matrix of a feature sample set.
 #[derive(Clone, Debug)]
@@ -24,8 +28,25 @@ pub struct Moments {
     pub n: usize,
 }
 
-/// Accumulate moments from rows of features (each row one sample).
+/// Reusable buffer of the blocked covariance accumulation.
+#[derive(Default)]
+pub struct MomentsScratch {
+    /// Centered block, transposed: blockt[i * COV_BLOCK + r] = f_r[i] - mean[i].
+    blockt: Vec<f64>,
+}
+
+/// Accumulate moments from rows of features (each row one sample), with a
+/// fresh scratch ([`moments_with`] reuses one across calls).
 pub fn moments(features: &[Vec<f64>]) -> Moments {
+    moments_with(features, &mut MomentsScratch::default())
+}
+
+/// As [`moments`], reusing the caller's scratch.  The covariance runs in
+/// centered-block-transposed form: each block of rows is centered into a
+/// (d × block) scratch once, then every upper-triangle entry accumulates
+/// as one contiguous dot product — no per-element branch, no per-sample
+/// strided access.
+pub fn moments_with(features: &[Vec<f64>], ws: &mut MomentsScratch) -> Moments {
     assert!(features.len() >= 2, "need >= 2 samples for a covariance");
     let d = features[0].len();
     let n = features.len();
@@ -40,14 +61,24 @@ pub fn moments(features: &[Vec<f64>]) -> Moments {
         *m /= n as f64;
     }
     let mut cov = Mat::zeros(d);
-    for f in features {
-        for i in 0..d {
-            let di = f[i] - mean[i];
-            if di == 0.0 {
-                continue;
+    ws.blockt.clear();
+    ws.blockt.resize(d * COV_BLOCK, 0.0);
+    for block in features.chunks(COV_BLOCK) {
+        let b = block.len();
+        for (r, f) in block.iter().enumerate() {
+            for i in 0..d {
+                ws.blockt[i * COV_BLOCK + r] = f[i] - mean[i];
             }
+        }
+        for i in 0..d {
+            let ci = &ws.blockt[i * COV_BLOCK..i * COV_BLOCK + b];
             for j in i..d {
-                cov[(i, j)] += di * (f[j] - mean[j]);
+                let cj = &ws.blockt[j * COV_BLOCK..j * COV_BLOCK + b];
+                let mut acc = 0.0;
+                for (&x, &y) in ci.iter().zip(cj) {
+                    acc += x * y;
+                }
+                cov[(i, j)] += acc;
             }
         }
     }
@@ -61,8 +92,32 @@ pub fn moments(features: &[Vec<f64>]) -> Moments {
     Moments { mean, cov, n }
 }
 
+/// Temporaries of one Fréchet-distance evaluation, reusable across calls —
+/// [`frechet_distance_with`] performs zero allocations once this is warm,
+/// which is what makes per-PR FID tracking cheap.
+#[derive(Default)]
+pub struct FidScratch {
+    s1: Mat,
+    prod: Mat,
+    inner: Mat,
+    sq: Mat,
+    eig: EigenWorkspace,
+}
+
+impl FidScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 /// Fréchet distance squared between two moment sets.
 pub fn frechet_distance(a: &Moments, b: &Moments) -> f64 {
+    frechet_distance_with(a, b, &mut FidScratch::default())
+}
+
+/// As [`frechet_distance`], with every matrix temporary (two PSD square
+/// roots, two products, the Jacobi sweeps) in the caller's scratch.
+pub fn frechet_distance_with(a: &Moments, b: &Moments, ws: &mut FidScratch) -> f64 {
     assert_eq!(a.mean.len(), b.mean.len());
     let mean_term: f64 = a
         .mean
@@ -71,17 +126,25 @@ pub fn frechet_distance(a: &Moments, b: &Moments) -> f64 {
         .map(|(&x, &y)| (x - y) * (x - y))
         .sum();
     // tr((C1^{1/2} C2 C1^{1/2})^{1/2}) — symmetric form of tr((C1 C2)^{1/2}).
-    let s1 = sqrt_psd(&a.cov);
-    let mut inner = s1.matmul(&b.cov).matmul(&s1);
-    inner.symmetrize();
-    let cross = sqrt_psd(&inner).trace();
+    sqrt_psd_into(&a.cov, &mut ws.s1, &mut ws.eig);
+    ws.s1.matmul_into(&b.cov, &mut ws.prod);
+    ws.prod.matmul_into(&ws.s1, &mut ws.inner);
+    ws.inner.symmetrize();
+    sqrt_psd_into(&ws.inner, &mut ws.sq, &mut ws.eig);
+    let cross = ws.sq.trace();
     let d2 = mean_term + a.cov.trace() + b.cov.trace() - 2.0 * cross;
     d2.max(0.0)
 }
 
 /// Convenience: FID between two raw feature sets.
 pub fn fid(features_a: &[Vec<f64>], features_b: &[Vec<f64>]) -> f64 {
-    frechet_distance(&moments(features_a), &moments(features_b))
+    let mut ms = MomentsScratch::default();
+    let mut fs = FidScratch::default();
+    frechet_distance_with(
+        &moments_with(features_a, &mut ms),
+        &moments_with(features_b, &mut ms),
+        &mut fs,
+    )
 }
 
 #[cfg(test)]
@@ -139,6 +202,33 @@ mod tests {
         let d = fid(&a, &b);
         let want = 3.0 * (2.0 - 1.0) * (2.0 - 1.0);
         assert!((d - want).abs() < 0.2, "fid={d} want={want}");
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_computation() {
+        let a = gaussian_cloud(500, 6, 0.0, 1.0, 11);
+        let b = gaussian_cloud(500, 6, 0.3, 1.2, 12);
+        let ma = moments(&a);
+        let mb = moments(&b);
+        let want = frechet_distance(&ma, &mb);
+        // Same scratch across repeated and differently-sized evaluations.
+        let mut ms = MomentsScratch::default();
+        let mut fs = FidScratch::new();
+        let ma2 = moments_with(&a, &mut ms);
+        let mb2 = moments_with(&b, &mut ms);
+        assert_eq!(ma2.cov, ma.cov);
+        assert_eq!(ma2.mean, ma.mean);
+        for _ in 0..3 {
+            assert_eq!(frechet_distance_with(&ma2, &mb2, &mut fs), want);
+        }
+        let small_a = gaussian_cloud(300, 3, 0.0, 1.0, 13);
+        let small_b = gaussian_cloud(300, 3, 0.5, 1.0, 14);
+        let d_small = frechet_distance_with(
+            &moments_with(&small_a, &mut ms),
+            &moments_with(&small_b, &mut ms),
+            &mut fs,
+        );
+        assert_eq!(d_small, fid(&small_a, &small_b));
     }
 
     #[test]

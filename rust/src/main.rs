@@ -3,18 +3,21 @@
 //! ```text
 //! fastdds exp <fig1|fig2|fig3|fig4|fig5|fig7|tab1|tab2|ablations|all> [--full]
 //! fastdds serve   [--addr 127.0.0.1:7878] [--policy greedy|timeout:<ms>]
-//!                 [--local] [--vocab 16] [--seq-len 32]
+//!                 [--local [--oracle markov|hmm]] [--vocab 16] [--seq-len 32]
 //!                 [--schedule-dir tuned_schedules]
 //! fastdds client  [--addr ...] --solver trapezoidal:0.5 --nfe 64 [--n 4] [--seed 1]
 //!                 [--schedule adaptive:tol=1e-3] [--nfe-budget 48]
+//!                 [--window-ratio 0.5] [--slack 4]
 //! fastdds info    [--artifacts artifacts]
 //! ```
 //!
-//! `serve --local` serves the exact Markov oracle in-process — every
-//! schedule variant works without PJRT or artifacts.  `--schedule-dir`
-//! persists tuned schedules to disk so restarts never re-pay the pilot
-//! fits.  `client --solver exact` runs first-hitting exact simulation; the
-//! response's `nfe_used` is the realized jump count.
+//! `serve --local` serves an exact oracle in-process — every schedule
+//! variant works without PJRT or artifacts; `--oracle hmm` picks the
+//! uniform-state HMM oracle, whose `--solver exact` path is bracketed
+//! windowed uniformization (tunable with `client --window-ratio --slack`).
+//! `--schedule-dir` persists tuned schedules to disk so restarts never
+//! re-pay the pilot fits.  `client --solver exact` runs exact simulation;
+//! the response's `nfe_used` counts score evaluations actually performed.
 
 use anyhow::{bail, Result};
 use fastdds::coordinator::{BatchPolicy, Coordinator};
@@ -122,12 +125,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // a hard startup error, not silently serve a synthetic oracle.)
         let vocab = args.get_usize("vocab", 16)?;
         let seq_len = args.get_usize("seq-len", 32)?;
+        let which = args.get_str("oracle", "markov");
         let mut rng = Xoshiro256::seed_from_u64(args.get_u64("oracle-seed", 23)?);
-        let oracle = std::sync::Arc::new(fastdds::score::markov::MarkovOracle::new(
-            fastdds::score::markov::MarkovChain::generate(&mut rng, vocab, 0.5),
-            seq_len,
-        ));
-        println!("serving local markov oracle (vocab {vocab}, seq_len {seq_len})");
+        let chain = fastdds::score::markov::MarkovChain::generate(&mut rng, vocab, 0.5);
+        let oracle: std::sync::Arc<dyn fastdds::score::ScoreSource> = match which.as_str() {
+            // Uniform-state HMM oracle: `--solver exact` then runs
+            // bracketed windowed uniformization, tunable with the
+            // client's --window-ratio / --slack knobs.
+            "hmm" => std::sync::Arc::new(fastdds::score::hmm::HmmUniformOracle::new(
+                chain, seq_len,
+            )),
+            "markov" => std::sync::Arc::new(fastdds::score::markov::MarkovOracle::new(
+                chain, seq_len,
+            )),
+            other => bail!("unknown --oracle {other:?} (markov|hmm)"),
+        };
+        println!("serving local {which} oracle (vocab {vocab}, seq_len {seq_len})");
         Coordinator::start_local_with_schedule_dir(
             oracle,
             policy,
@@ -162,19 +175,13 @@ fn cmd_client(args: &Args) -> Result<()> {
     let n = args.get_usize("n", 1)?;
     let seed = args.get_u64("seed", 0)?;
     let family = args.get_str("family", "markov");
-    let nfe_budget = match args.str_opt("nfe-budget") {
-        Some(_) => Some(args.get_usize("nfe-budget", 0)?),
-        None => None,
+    let opts = fastdds::server::client::GenOpts {
+        schedule: args.str_opt("schedule"),
+        nfe_budget: args.usize_opt("nfe-budget")?,
+        window_ratio: args.f64_opt("window-ratio")?,
+        slack: args.f64_opt("slack")?,
     };
-    let resp = client.generate_with(
-        &solver,
-        nfe,
-        n,
-        seed,
-        &family,
-        args.str_opt("schedule"),
-        nfe_budget,
-    )?;
+    let resp = client.generate_opts(&solver, nfe, n, seed, &family, &opts)?;
     println!(
         "id={} nfe_used={} latency_ms={:.2}",
         resp.id, resp.nfe_used, resp.latency_ms

@@ -16,12 +16,41 @@
 //! ratios come from scaled forward/backward messages in O(1) each after an
 //! O(L V^2) pass.  This powers the Fig. 1 uniformization run, where the
 //! score singularity at t -> 0 drives the NFE blow-up the paper plots.
+//!
+//! ## Branch-free message kernels
+//!
+//! The emission matrix is rank-one off a constant: D_i = a_t I + b_t
+//! e_{x_i} e_{x_i}^T.  Both passes exploit that instead of branching per
+//! element on `z == x_i`:
+//!
+//! - forward transfer: `A^T (D_i α) = a_t (A^T α) + b_t α[x_i] A[x_i, :]` —
+//!   the O(V²) part is a clean axpy accumulation plus one fused row
+//!   correction;
+//! - backward transfer: the emission is folded into the message first
+//!   (one vector scale plus a single-element bump), leaving the O(V²) part
+//!   as tight contiguous dot products.
+//!
+//! `ratios` and `posterior_row` get the same treatment (elementwise α⊙β
+//! products, rank-one emission correction) — no per-element branches on
+//! any hot loop.  Masked tokens (id = V) simply drop the rank-one term.
 
 use std::sync::Mutex;
 
-use crate::ctmc::uniformization::JumpProcess;
+use crate::ctmc::uniformization::{
+    simulate_backward_into, ExactCfg, ExactStats, JumpProcess, WindowBound,
+};
 use crate::score::markov::MarkovChain;
 use crate::score::{ScoreSource, Tok};
+use crate::util::rng::{Rng, Xoshiro256};
+
+/// Forward horizon of the uniform-state process when served end to end
+/// ([`ScoreSource::exact_uniform`]): per-dimension mixing error e^{-T} is
+/// ~2.5e-3, matching the Fig. 1 setup.
+pub const DEFAULT_UNIFORM_HORIZON: f64 = 6.0;
+
+/// Warm workspaces kept beyond this count are dropped instead of pooled
+/// (bounds pool memory if a burst of threads ever races the pops).
+const MAX_POOL: usize = 64;
 
 /// Scratch buffers for the O(L·V²) message pass, carried through a `&mut`
 /// workspace (same pattern as `solvers/masked.rs`'s `Scratch`) so the
@@ -33,10 +62,8 @@ pub struct HmmWorkspace {
     alpha_bar: Vec<f64>,
     /// beta[i*V + z] ∝ P(x_{i+1..} | z_i = z).
     beta: Vec<f64>,
-    /// Per-position emission-scaled row.
+    /// Per-position transfer/product row.
     tmp: Vec<f64>,
-    /// Per-position transfer accumulator.
-    tmp2: Vec<f64>,
 }
 
 impl HmmWorkspace {
@@ -53,7 +80,6 @@ impl HmmWorkspace {
         }
         if self.tmp.len() != v {
             self.tmp.resize(v, 0.0);
-            self.tmp2.resize(v, 0.0);
         }
     }
 }
@@ -61,6 +87,9 @@ impl HmmWorkspace {
 pub struct HmmUniformOracle {
     pub chain: MarkovChain,
     pub seq_len: usize,
+    /// Forward horizon the served uniform-state exact path simulates from
+    /// ([`DEFAULT_UNIFORM_HORIZON`]; tune via [`HmmUniformOracle::with_horizon`]).
+    pub horizon: f64,
     /// Warm workspaces, one per concurrently evaluating thread; the lock is
     /// held only for the pop/push, never across a message pass.
     pool: Mutex<Vec<HmmWorkspace>>,
@@ -68,21 +97,36 @@ pub struct HmmUniformOracle {
 
 impl HmmUniformOracle {
     pub fn new(chain: MarkovChain, seq_len: usize) -> Self {
-        Self { chain, seq_len, pool: Mutex::new(Vec::new()) }
+        Self {
+            chain,
+            seq_len,
+            horizon: DEFAULT_UNIFORM_HORIZON,
+            pool: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn with_horizon(mut self, horizon: f64) -> Self {
+        assert!(horizon > 0.0);
+        self.horizon = horizon;
+        self
     }
 
     /// Run `f` with a pooled workspace (allocating one only when every warm
-    /// workspace is in use by another thread).
+    /// workspace is in use by another thread).  A poisoned lock only means
+    /// another thread panicked between pop and push; the pool itself is
+    /// still valid, so recover it — treating poison as "no pool" would
+    /// silently allocate a fresh workspace on every subsequent call.
     fn with_workspace<R>(&self, f: impl FnOnce(&mut HmmWorkspace) -> R) -> R {
         let mut ws = self
             .pool
             .lock()
-            .map(|mut p| p.pop())
-            .unwrap_or(None)
+            .unwrap_or_else(|e| e.into_inner())
+            .pop()
             .unwrap_or_default();
         let out = f(&mut ws);
-        if let Ok(mut p) = self.pool.lock() {
-            p.push(ws);
+        let mut pool = self.pool.lock().unwrap_or_else(|e| e.into_inner());
+        if pool.len() < MAX_POOL {
+            pool.push(ws);
         }
         out
     }
@@ -104,66 +148,83 @@ impl HmmUniformOracle {
     /// posterior), so this is stable for any L.  Positions holding the mask
     /// token (id = V) contribute a constant emission — i.e. no evidence —
     /// which makes the same pass serve both the uniform-state ratios and the
-    /// masked [`ScoreSource`] view below.
+    /// masked [`ScoreSource`] view below.  Transfers run in the rank-one
+    /// branch-free form (module docs).
     fn messages_into(&self, tokens: &[Tok], t: f64, ws: &mut HmmWorkspace) {
         let v = self.chain.vocab;
         let l = self.seq_len;
         debug_assert_eq!(tokens.len(), l);
         let (a_t, b_t) = self.emission(t);
         ws.ensure(l, v);
+        let a = &self.chain.a;
 
-        // Forward.
+        // Forward: alpha_bar[i] = A^T (D_{i-1} alpha_bar[i-1]) / norm with
+        // A^T (D α) = a_t (A^T α) + b_t α[x] A[x, :].
         for z in 0..v {
             ws.alpha_bar[z] = self.chain.pi[z];
         }
         for i in 1..l {
-            // Multiply in emission i-1, then transfer.
             let xi = tokens[i - 1] as usize;
-            let mut norm = 0.0;
-            for z in 0..v {
-                let e = a_t + if z == xi { b_t } else { 0.0 };
-                let s = ws.alpha_bar[(i - 1) * v + z] * e;
-                ws.tmp[z] = s;
-                norm += s;
-            }
-            for s in ws.tmp.iter_mut() {
-                *s /= norm;
-            }
-            ws.alpha_bar[i * v..(i + 1) * v].fill(0.0);
-            for z in 0..v {
-                let s = ws.tmp[z];
-                if s == 0.0 {
-                    continue;
+            let (head, tail) = ws.alpha_bar.split_at_mut(i * v);
+            let prev = &head[(i - 1) * v..];
+            let out = &mut tail[..v];
+            // tmp = A^T prev, accumulated row-wise (axpy of prev[z]*A[z,:]).
+            ws.tmp.fill(0.0);
+            let mut s = 0.0;
+            for (z, &az) in prev.iter().enumerate() {
+                s += az;
+                let row = &a[z * v..(z + 1) * v];
+                for (acc, &r) in ws.tmp.iter_mut().zip(row) {
+                    *acc += az * r;
                 }
-                let row = &self.chain.a[z * v..(z + 1) * v];
-                for (zz, &az) in row.iter().enumerate() {
-                    ws.alpha_bar[i * v + zz] += s * az;
+            }
+            // Rank-one emission correction; a masked token (id = V) has the
+            // constant emission a_t only.
+            let g = if xi < v { b_t * prev[xi] } else { 0.0 };
+            let inv = 1.0 / (a_t * s + g);
+            if g != 0.0 {
+                let row = &a[xi * v..(xi + 1) * v];
+                for ((o, &acc), &r) in out.iter_mut().zip(ws.tmp.iter()).zip(row) {
+                    *o = (a_t * acc + g * r) * inv;
+                }
+            } else {
+                for (o, &acc) in out.iter_mut().zip(ws.tmp.iter()) {
+                    *o = a_t * acc * inv;
                 }
             }
         }
 
-        // Backward.
+        // Backward: beta[i] = A (D_{i+1} beta[i+1]) / norm.  The emission is
+        // folded into the message first (tmp = D β: one scale plus one
+        // element bump), leaving the O(V²) transfer as contiguous dots.
         for z in 0..v {
             ws.beta[(l - 1) * v + z] = 1.0;
         }
         for i in (0..l - 1).rev() {
             let xi = tokens[i + 1] as usize;
-            let mut norm = 0.0;
-            for z in 0..v {
-                let e = a_t + if z == xi { b_t } else { 0.0 };
-                let val = ws.beta[(i + 1) * v + z] * e;
-                ws.tmp[z] = val;
-                norm += val;
+            let (head, tail) = ws.beta.split_at_mut((i + 1) * v);
+            let next = &tail[..v];
+            let out = &mut head[i * v..];
+            let mut s = 0.0;
+            for (d, &bz) in ws.tmp.iter_mut().zip(next) {
+                *d = a_t * bz;
+                s += bz;
             }
-            for z in 0..v {
-                let arow = &self.chain.a[z * v..(z + 1) * v];
+            let mut norm = a_t * s;
+            if xi < v {
+                let bump = b_t * next[xi];
+                ws.tmp[xi] += bump;
+                norm += bump;
+            }
+            let inv = 1.0 / norm;
+            for (z, o) in out.iter_mut().enumerate() {
+                let row = &a[z * v..(z + 1) * v];
                 let mut acc = 0.0;
-                for zz in 0..v {
-                    acc += arow[zz] * ws.tmp[zz];
+                for (&az, &d) in row.iter().zip(ws.tmp.iter()) {
+                    acc += az * d;
                 }
-                ws.tmp2[z] = acc / norm;
+                *o = acc * inv;
             }
-            ws.beta[i * v..(i + 1) * v].copy_from_slice(&ws.tmp2[..v]);
         }
     }
 
@@ -185,35 +246,48 @@ impl HmmUniformOracle {
             self.messages_into(tokens, t, ws);
 
             // Ratios: numerator(v) = a_t * S_i + b_t * g_i(v) where
-            // g_i(z) = alpha_bar[i][z] * beta[i][z], S_i = sum_z g_i(z).
+            // g_i(z) = alpha_bar[i][z] * beta[i][z], S_i = sum_z g_i(z) —
+            // g formed once per position, branch-free.
             for i in 0..l {
                 let xi = tokens[i] as usize;
-                let g = |z: usize| ws.alpha_bar[i * v + z] * ws.beta[i * v + z];
-                let s_i: f64 = (0..v).map(g).sum();
-                let denom = a_t * s_i + b_t * g(xi);
-                for tok in 0..v {
-                    out[i * v + tok] = (a_t * s_i + b_t * g(tok)) / denom.max(1e-300);
+                let ab = &ws.alpha_bar[i * v..(i + 1) * v];
+                let be = &ws.beta[i * v..(i + 1) * v];
+                let mut s_i = 0.0;
+                for ((g, &az), &bz) in ws.tmp.iter_mut().zip(ab).zip(be) {
+                    *g = az * bz;
+                    s_i += *g;
+                }
+                let base = a_t * s_i;
+                let gx = if xi < v { ws.tmp[xi] } else { 0.0 };
+                let inv = 1.0 / (base + b_t * gx).max(1e-300);
+                for (o, &g) in out[i * v..(i + 1) * v].iter_mut().zip(ws.tmp.iter()) {
+                    *o = (base + b_t * g) * inv;
                 }
             }
         })
     }
 
     /// Reverse intensities mu[(i, v)] = ratio / V (zero at v = x_i), plus
-    /// the total.
+    /// the total.  The total is accumulated in flat index order over the
+    /// final vector (diagonal zeroed first), so it is bitwise equal to
+    /// `out.iter().sum()` — the invariant the thinning-loop parity tests
+    /// rely on when comparing against a naive vector-summing loop.
     pub fn intensities(&self, tokens: &[Tok], t: f64, out: &mut [f64]) -> f64 {
         let v = self.chain.vocab;
+        let inv_v = 1.0 / v as f64;
         self.ratios(tokens, t, out);
         let mut tot = 0.0;
         for i in 0..self.seq_len {
+            let row = &mut out[i * v..(i + 1) * v];
+            for r in row.iter_mut() {
+                *r *= inv_v;
+            }
             let xi = tokens[i] as usize;
-            for tok in 0..v {
-                let idx = i * v + tok;
-                if tok == xi {
-                    out[idx] = 0.0;
-                } else {
-                    out[idx] /= v as f64;
-                    tot += out[idx];
-                }
+            if xi < v {
+                row[xi] = 0.0;
+            }
+            for &r in row.iter() {
+                tot += r;
             }
         }
         tot
@@ -277,12 +351,43 @@ impl ScoreSource for HmmUniformOracle {
             }
         })
     }
+
+    /// The HMM oracle's native process IS the uniform-state diffusion, so
+    /// its served [`crate::solvers::Solver::Exact`] runs bracketed windowed
+    /// uniformization from the horizon (initial state ~ the forward law
+    /// there: uniform per dimension to within e^{-horizon}), tunable via
+    /// the request's exact-path knobs.  Counts-only statistics — the
+    /// serving path must not accumulate per-candidate vectors.
+    fn exact_uniform(
+        &self,
+        delta: f64,
+        cfg: &ExactCfg,
+        rng: &mut Xoshiro256,
+    ) -> Option<(Vec<Tok>, ExactStats)> {
+        let jump = UniformTextJump { oracle: self, slack: cfg.slack };
+        let x0: Vec<Tok> = (0..self.seq_len)
+            .map(|_| rng.gen_usize(self.chain.vocab) as Tok)
+            .collect();
+        let mut stats = ExactStats::counts_only();
+        let x = simulate_backward_into(
+            &jump,
+            x0,
+            self.horizon,
+            delta,
+            cfg.window_ratio,
+            rng,
+            &mut stats,
+        );
+        Some((x, stats))
+    }
 }
 
 /// Normalised posterior over the clean token at one position:
 /// row(z) ∝ alpha_bar(z) * e(z) * beta(z) with e(z) = a_t + b_t 1{z = x_i}.
 /// For a masked x_i (id = V) the emission is the constant a_t, which
 /// cancels under normalisation — exactly "no evidence at this site".
+/// Branch-free: the α⊙β products are formed unconditionally and the
+/// emission enters as a rank-one correction at the observed token.
 fn posterior_row(
     alpha_bar: &[f64],
     beta: &[f64],
@@ -292,20 +397,68 @@ fn posterior_row(
     out: &mut [f64],
 ) {
     let v = out.len();
-    let mut tot = 0.0;
-    for z in 0..v {
-        let e = a_t + if z == token as usize { b_t } else { 0.0 };
-        let w = alpha_bar[z] * e * beta[z];
-        out[z] = w;
-        tot += w;
+    let mut s = 0.0;
+    for ((o, &az), &bz) in out.iter_mut().zip(alpha_bar).zip(beta) {
+        let g = az * bz;
+        *o = g;
+        s += g;
     }
+    let xi = token as usize;
+    let bump = if xi < v { b_t * out[xi] } else { 0.0 };
+    let tot = a_t * s + bump;
     if tot > 0.0 {
-        for w in out.iter_mut() {
-            *w /= tot;
+        let inv = 1.0 / tot;
+        let scale = a_t * inv;
+        for o in out.iter_mut() {
+            *o *= scale;
+        }
+        if xi < v {
+            out[xi] += bump * inv;
         }
     } else {
         out.fill(1.0 / v as f64);
     }
+}
+
+/// Safety factor on the fixed-posterior rise bound covering the drift of
+/// the leave-one-out posteriors across a window (the part the closed-form
+/// argument in [`rise_envelope`] cannot certify).  Same
+/// empirical-but-debug-verified standing as the thinning slack itself.
+/// Also the numerator of the serving-side slack floor
+/// (`slack >= SUP_DRIFT_MARGIN / window_ratio`,
+/// `coordinator::scheduler::validate_request`) — the two must move
+/// together or admitted requests end up with the bracket silently
+/// disabled (env >= slack).
+pub const SUP_DRIFT_MARGIN: f64 = 1.5;
+
+/// Widest window (t_hi / t_lo) the free-reject bracket arms on.  The
+/// drift margin is calibrated for geometric windows; on wider spans the
+/// posteriors can drift more than it covers, so the bracket is simply
+/// disarmed — the loop then evaluates every candidate, which is always
+/// correct, just not accelerated.  Covers every served ratio >= 0.4.
+const MAX_BRACKET_SPAN: f64 = 2.5;
+
+/// Upper bound on the in-window rise of any position's reverse intensity
+/// for the fixed state, i.e. on `f(t_hi)/f(t_lo)` with
+/// `f(t) = 1/(a_t + b_t q) − 1` over q in [0, 1] (q = the leave-one-out
+/// posterior of the position's current token; see the module docs — the
+/// per-position total is exactly this form).  Writing
+/// `d_q(t) = 1/V + e^{−t}(q − 1/V)`, both factors of
+/// `f(t_hi)/f(t_lo) = [(1−d(t_hi))/(1−d(t_lo))]·[d(t_lo)/d(t_hi)]` are
+/// increasing in q, so q = 1 maximises the rise:
+///
+/// ```text
+///   rise = [(1−e^{−t_hi})/(1−e^{−t_lo})] · [d_1(t_lo)/d_1(t_hi)]
+/// ```
+///
+/// (≈ t_hi/t_lo for small t, → 1 for large t.)  Positions with q < 1/V
+/// fall as t grows, so 1 also bounds them.  Multiplied by
+/// [`SUP_DRIFT_MARGIN`] to cover in-window posterior drift.
+fn rise_envelope(t_lo: f64, t_hi: f64, vocab: usize) -> f64 {
+    let v = vocab as f64;
+    let d1 = |t: f64| 1.0 / v + (-t).exp() * (1.0 - 1.0 / v);
+    let rise = (1.0 - (-t_hi).exp()) / (1.0 - (-t_lo).exp()) * (d1(t_lo) / d1(t_hi));
+    rise.max(1.0) * SUP_DRIFT_MARGIN
 }
 
 /// JumpProcess adapter: state = token sequence, jump index = i * V + v.
@@ -335,12 +488,39 @@ impl JumpProcess for UniformTextJump<'_> {
     }
 
     fn total_bound(&self, x: &Vec<Tok>, t_lo: f64, _t_hi: f64, scratch: &mut [f64]) -> f64 {
-        // Intensities increase as t decreases (score ratios sharpen toward
-        // the data law), so the window's small end dominates; `slack`
-        // covers the residual state dependence between jumps.  `scratch` is
-        // the simulator's reusable buffer — no per-window allocation.
+        // Data-INCONSISTENT positions (current token unlikely given its
+        // context) dominate the total and their intensities grow as t
+        // falls, so the window's small end carries the bulk; consistent
+        // positions rise mildly with t (bounded by `rise_envelope`, well
+        // inside practical slacks).  `slack` covers both that rise and
+        // numerical headroom.  `scratch` is the simulator's reusable
+        // buffer — no per-window allocation.
         let tot = self.oracle.intensities(x, t_lo, scratch);
         tot * self.slack
+    }
+
+    fn window_bound(
+        &self,
+        x: &Vec<Tok>,
+        t_lo: f64,
+        t_hi: f64,
+        scratch: &mut [f64],
+    ) -> WindowBound {
+        // One message pass at the window's small end yields the dominating
+        // rate (× slack) AND arms the free-reject bracket.  The envelope
+        // multiplies tot(t_lo) by the worst per-position in-window rise
+        // (consistent positions DO rise with t — see `rise_envelope`), so
+        // at slack s a (s − env)/s fraction of candidates free-rejects
+        // with zero evaluations; env ≥ s simply disables the bracket, and
+        // windows wider than MAX_BRACKET_SPAN disarm it outright (the
+        // drift margin is not calibrated for them).
+        let tot = self.oracle.intensities(x, t_lo, scratch);
+        let mu_sup = if t_hi <= t_lo * MAX_BRACKET_SPAN {
+            Some(tot * rise_envelope(t_lo, t_hi, self.oracle.chain.vocab))
+        } else {
+            None
+        };
+        WindowBound { bound: tot * self.slack, mu_sup, evals: 1 }
     }
 
     fn apply(&self, x: &mut Vec<Tok>, nu: usize) {
@@ -516,5 +696,85 @@ mod tests {
         let mut x = vec![0u32, 0, 0, 0];
         j.apply(&mut x, 2 * 3 + 1); // position 2 -> token 1
         assert_eq!(x, vec![0, 0, 1, 0]);
+    }
+
+    #[test]
+    fn window_bound_arms_bracket_with_window_envelope() {
+        let o = oracle(4, 6);
+        let j = UniformTextJump { oracle: &o, slack: 5.0 };
+        let mut buf = vec![0.0; j.n_jumps()];
+        let mut scratch = vec![0.0; j.n_jumps()];
+        // Sweep windows and states (including fully data-consistent ones,
+        // where the per-position intensities RISE with t): the envelope
+        // must dominate the total everywhere in the window.
+        let states: Vec<Vec<Tok>> = vec![
+            vec![1, 3, 0, 2, 2, 1],
+            vec![0, 0, 0, 0, 0, 0],
+            vec![3, 2, 1, 0, 3, 2],
+        ];
+        for &(t_lo, t_hi) in &[(0.2, 0.5), (0.05, 0.1), (1.0, 2.0), (3.0, 6.0)] {
+            for x in &states {
+                let wb = j.window_bound(x, t_lo, t_hi, &mut buf);
+                assert_eq!(wb.evals, 1);
+                let (tot_lo, _) = j.total_intensity(x, t_lo, &mut scratch);
+                assert!((wb.bound - tot_lo * 5.0).abs() < 1e-12 * tot_lo.abs().max(1.0));
+                let env = wb.mu_sup.expect("HMM bound must arm the bracket");
+                assert!(env >= tot_lo, "envelope below its own t_lo evaluation");
+                for k in 1..=8 {
+                    let t = t_lo + (t_hi - t_lo) * k as f64 / 8.0;
+                    let (tot, _) = j.total_intensity(x, t, &mut scratch);
+                    assert!(
+                        tot <= env * (1.0 + 1e-9),
+                        "window [{t_lo},{t_hi}] t={t}: tot={tot} env={env} x={x:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exact_uniform_serves_counts_only_samples() {
+        let o = oracle(4, 8);
+        let mut rng = Xoshiro256::seed_from_u64(33);
+        let cfg = ExactCfg::default();
+        let (x, stats) = o.exact_uniform(0.05, &cfg, &mut rng).expect("hmm is uniform-exact");
+        assert_eq!(x.len(), 8);
+        assert!(x.iter().all(|&t| (t as usize) < 4));
+        assert!(stats.jumps.is_empty() && stats.candidate_times.is_empty());
+        assert!(stats.nfe >= stats.bound_evals);
+        // At the default slack most candidates must free-reject.
+        assert!(
+            stats.n_candidates == 0 || stats.free_rejects > 0,
+            "candidates={} free_rejects={}",
+            stats.n_candidates,
+            stats.free_rejects
+        );
+        // Determinism by seed.
+        let mut rng2 = Xoshiro256::seed_from_u64(33);
+        let (x2, _) = o.exact_uniform(0.05, &cfg, &mut rng2).unwrap();
+        assert_eq!(x, x2);
+    }
+
+    #[test]
+    fn workspace_pool_survives_poisoned_lock() {
+        use std::sync::Arc;
+        let o = Arc::new(oracle(3, 4));
+        let x = vec![0u32, 2, 1, 1];
+        let mut r = vec![0.0; 4 * 3];
+        o.ratios(&x, 0.6, &mut r);
+        let want = r.clone();
+        // Poison the pool lock from another thread.
+        let o2 = Arc::clone(&o);
+        let _ = std::thread::spawn(move || {
+            let _guard = o2.pool.lock().unwrap();
+            panic!("poison the pool");
+        })
+        .join();
+        assert!(o.pool.lock().is_err(), "lock must be poisoned for this test");
+        // Evaluations still work and still reuse the recovered pool.
+        o.ratios(&x, 0.6, &mut r);
+        assert_eq!(r, want);
+        let pooled = o.pool.lock().unwrap_or_else(|e| e.into_inner()).len();
+        assert!(pooled >= 1, "workspace must be returned to the recovered pool");
     }
 }

@@ -29,6 +29,9 @@
 pub mod markov;
 pub mod hmm;
 
+use crate::ctmc::uniformization::{ExactCfg, ExactStats};
+use crate::util::rng::Xoshiro256;
+
 /// Token type used on the request path. Mask is represented as `vocab`.
 pub type Tok = u32;
 
@@ -91,6 +94,25 @@ pub trait ScoreSource: Send + Sync {
         let mut out = vec![0.0; self.seq_len() * self.vocab()];
         self.probs_into(tokens, t, &mut out);
         out
+    }
+
+    /// Exact simulation of this source's native *uniform-state* reverse
+    /// process by bracketed windowed uniformization, when the source has
+    /// one ([`hmm::HmmUniformOracle`]): simulate from the source's horizon
+    /// down to `delta` under the exact-path knobs `cfg` and return the
+    /// sample plus counts-only statistics (`nfe` = score evaluations
+    /// actually performed).  The default returns `None` — and must consume
+    /// no randomness — in which case [`crate::solvers::Solver::Exact`]
+    /// falls back to the absorbing-state first-hitting sampler
+    /// ([`crate::solvers::masked::fhs_generate`]).  The RNG is the serving
+    /// path's concrete lane stream so the trait stays object-safe.
+    fn exact_uniform(
+        &self,
+        _delta: f64,
+        _cfg: &ExactCfg,
+        _rng: &mut Xoshiro256,
+    ) -> Option<(Vec<Tok>, ExactStats)> {
+        None
     }
 }
 

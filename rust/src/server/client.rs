@@ -53,11 +53,11 @@ impl Client {
         seed: u64,
         family: &str,
     ) -> Result<GenerateResponse> {
-        self.generate_with(solver, nfe, n_samples, seed, family, None, None)
+        self.generate_opts(solver, nfe, n_samples, seed, family, &GenOpts::default())
     }
 
-    /// Full request surface: optional schedule spec ("uniform", "log",
-    /// "adaptive:tol=1e-3", "tuned[:steps=..]") and hard NFE budget.
+    /// Back-compatible schedule/budget surface; the full option set
+    /// (including the exact-path knobs) is [`Client::generate_opts`].
     #[allow(clippy::too_many_arguments)]
     pub fn generate_with(
         &mut self,
@@ -69,6 +69,23 @@ impl Client {
         schedule: Option<&str>,
         nfe_budget: Option<usize>,
     ) -> Result<GenerateResponse> {
+        let opts = GenOpts { schedule, nfe_budget, ..Default::default() };
+        self.generate_opts(solver, nfe, n_samples, seed, family, &opts)
+    }
+
+    /// Full request surface: optional schedule spec ("uniform", "log",
+    /// "adaptive:tol=1e-3", "tuned[:steps=..]"), hard NFE budget, and the
+    /// exact-simulation knobs (window_ratio, slack — `solver: "exact"`
+    /// only).
+    pub fn generate_opts(
+        &mut self,
+        solver: &str,
+        nfe: usize,
+        n_samples: usize,
+        seed: u64,
+        family: &str,
+        opts: &GenOpts,
+    ) -> Result<GenerateResponse> {
         let mut fields = vec![
             ("cmd", Json::from("generate")),
             ("solver", Json::from(solver)),
@@ -77,11 +94,17 @@ impl Client {
             ("seed", Json::from(seed as f64)),
             ("family", Json::from(family)),
         ];
-        if let Some(s) = schedule {
+        if let Some(s) = opts.schedule {
             fields.push(("schedule", Json::from(s)));
         }
-        if let Some(b) = nfe_budget {
+        if let Some(b) = opts.nfe_budget {
             fields.push(("nfe_budget", Json::from(b)));
+        }
+        if let Some(w) = opts.window_ratio {
+            fields.push(("window_ratio", Json::Num(w)));
+        }
+        if let Some(s) = opts.slack {
+            fields.push(("slack", Json::Num(s)));
         }
         let req = Json::obj(fields);
         let r = self.raw(&req.to_string())?;
@@ -95,4 +118,18 @@ impl Client {
         }
         GenerateResponse::from_json(&r)
     }
+}
+
+/// Optional request fields of [`Client::generate_opts`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GenOpts<'a> {
+    /// Time-discretisation spec ("uniform" | "log" | "adaptive:tol=.." |
+    /// "tuned[:steps=..]").
+    pub schedule: Option<&'a str>,
+    /// Hard per-sample NFE cap.
+    pub nfe_budget: Option<usize>,
+    /// Exact-path knob: geometric uniformization window ratio in (0, 1).
+    pub window_ratio: Option<f64>,
+    /// Exact-path knob: thinning bound inflation >= 1.
+    pub slack: Option<f64>,
 }

@@ -10,10 +10,15 @@
 //! `schedule` (optional, default "uniform": uniform|log|adaptive[:tol=..]|
 //! tuned[:steps=..]) selects the time discretisation; `nfe_budget`
 //! (optional) is a hard per-sample NFE cap.  Both are echoed back.
-//! `solver` accepts every approximate scheme plus `"exact"` (first-hitting
-//! simulation; `nfe_used` then reports the realized jump count and
-//! `nfe_budget` is rejected).  θ-solvers are validated at parse time:
-//! trapezoidal needs θ in (0, 1), rk2 needs θ in (0, 1/2].
+//! `solver` accepts every approximate scheme plus `"exact"` (exact
+//! simulation; `nfe_used` then reports the score evaluations actually
+//! performed and `nfe_budget` is rejected).  Exact requests additionally
+//! take the optional knobs `window_ratio` (geometric window of the
+//! uniformization, in (0, 1)) and `slack` (thinning bound inflation >= 1),
+//! echoed back like the schedule fields; families without a native
+//! uniform-state process fall back to the knob-free first-hitting sampler.
+//! θ-solvers are validated at parse time: trapezoidal needs θ in (0, 1),
+//! rk2 needs θ in (0, 1/2].
 //!   -> {"cmd": "metrics"}        <- {"ok": true, "report": "..."}
 //!   -> {"cmd": "ping"}           <- {"ok": true}
 //! Errors: {"ok": false, "error": "..."}.  One thread per connection.
@@ -125,6 +130,7 @@ fn handle_line(
             let id = next_id.fetch_add(1, Ordering::Relaxed);
             let req = GenerateRequest::from_json(&j, id)?;
             let (schedule, budget) = (req.schedule, req.nfe_budget);
+            let (window_ratio, slack) = (req.window_ratio, req.slack);
             let resp = coordinator.generate(req)?;
             let mut out = resp.to_json();
             if let Json::Obj(m) = &mut out {
@@ -133,6 +139,13 @@ fn handle_line(
                 m.insert("schedule".into(), Json::from(schedule.to_string_spec().as_str()));
                 if let Some(b) = budget {
                     m.insert("nfe_budget".into(), Json::from(b));
+                }
+                // Echo the exact-path knobs the same way.
+                if let Some(w) = window_ratio {
+                    m.insert("window_ratio".into(), Json::Num(w));
+                }
+                if let Some(s) = slack {
+                    m.insert("slack".into(), Json::Num(s));
                 }
             }
             Ok(out)
@@ -201,6 +214,64 @@ mod tests {
             .raw(r#"{"cmd": "generate", "solver": "tau", "nfe": 8, "schedule": "warp"}"#)
             .unwrap();
         assert_eq!(r.get("ok").unwrap().as_bool().unwrap(), false);
+        assert!(c.ping().unwrap());
+        srv.stop();
+    }
+
+    /// Server over the HMM uniform-state oracle: `solver: exact` then runs
+    /// bracketed windowed uniformization end to end.
+    fn local_hmm_server() -> Server {
+        use crate::score::hmm::HmmUniformOracle;
+        use crate::score::markov::MarkovChain;
+        use crate::util::rng::Xoshiro256;
+        use std::sync::Arc;
+        let mut rng = Xoshiro256::seed_from_u64(29);
+        let oracle = Arc::new(HmmUniformOracle::new(MarkovChain::generate(&mut rng, 5, 0.6), 12));
+        let coord = Coordinator::start_local(oracle, BatchPolicy::Greedy, 8);
+        Server::start("127.0.0.1:0", coord).unwrap()
+    }
+
+    #[test]
+    fn exact_knobs_roundtrip_over_tcp() {
+        let srv = local_hmm_server();
+        let mut c = Client::connect(&srv.addr.to_string()).unwrap();
+        let r = c
+            .raw(
+                r#"{"cmd": "generate", "solver": "exact", "nfe": 16,
+                    "window_ratio": 0.6, "slack": 3.0, "n_samples": 2, "seed": 9}"#,
+            )
+            .unwrap();
+        assert_eq!(r.get("ok").unwrap().as_bool().unwrap(), true, "{r:?}");
+        assert_eq!(r.get("window_ratio").unwrap().as_f64().unwrap(), 0.6);
+        assert_eq!(r.get("slack").unwrap().as_f64().unwrap(), 3.0);
+        let seqs = r.get("sequences").unwrap().as_arr().unwrap().to_vec();
+        assert_eq!(seqs.len(), 2);
+        for s in &seqs {
+            let toks = s.as_arr().unwrap();
+            assert_eq!(toks.len(), 12);
+            assert!(toks.iter().all(|t| (t.as_f64().unwrap() as usize) < 5));
+        }
+        assert!(r.get("nfe_used").unwrap().as_usize().unwrap() >= 1);
+
+        // Knobs with a non-exact solver: protocol error, connection alive.
+        let r = c
+            .raw(r#"{"cmd": "generate", "solver": "tau", "nfe": 8, "slack": 2.0}"#)
+            .unwrap();
+        assert_eq!(r.get("ok").unwrap().as_bool().unwrap(), false);
+        // Out-of-range knob: protocol error too.
+        let r = c
+            .raw(r#"{"cmd": "generate", "solver": "exact", "nfe": 8, "window_ratio": 1.5}"#)
+            .unwrap();
+        assert_eq!(r.get("ok").unwrap().as_bool().unwrap(), false);
+        // Slack below the 1.5/window_ratio floor: rejected with guidance.
+        let r = c
+            .raw(r#"{"cmd": "generate", "solver": "exact", "nfe": 8, "slack": 1.2}"#)
+            .unwrap();
+        assert_eq!(r.get("ok").unwrap().as_bool().unwrap(), false);
+        assert!(
+            r.get("error").unwrap().as_str().unwrap().contains("window_ratio"),
+            "{r:?}"
+        );
         assert!(c.ping().unwrap());
         srv.stop();
     }

@@ -29,6 +29,7 @@
 
 use std::marker::PhantomData;
 
+use crate::ctmc::uniformization::ExactCfg;
 use crate::ctmc::ToyModel;
 use crate::schedule::adaptive::{rk2_gate_discrepancy, trap_gate_discrepancy};
 use crate::score::{ScoreSource, Tok};
@@ -129,10 +130,19 @@ pub trait StateFamily: Sized {
     fn into_out(lane: Self::Lane) -> Self::Out;
 
     /// Exact simulation for this family (Sec. 3.1): first-hitting for the
-    /// masked family, uniformization for the toy CTMC.  Returns the output,
-    /// the realized statistics (`nfe` = jump/candidate evaluations actually
-    /// performed) and the decreasing forward jump times.
-    fn exact<R: Rng>(ctx: &Self::Ctx, delta: f64, rng: &mut R) -> (Self::Out, GenStats, Vec<f64>);
+    /// masked family, windowed uniformization for the toy CTMC (whose
+    /// closed-form totals make the free-reject bracket moot — only the
+    /// HMM path via [`crate::score::ScoreSource::exact_uniform`] brackets).
+    /// `cfg` carries the exact-path knobs (window ratio, thinning slack);
+    /// the first-hitting sampler is window-free and ignores it.  Returns
+    /// the output, the realized statistics (`nfe` = score evaluations
+    /// actually performed) and the decreasing forward jump times.
+    fn exact<R: Rng>(
+        ctx: &Self::Ctx,
+        delta: f64,
+        cfg: &ExactCfg,
+        rng: &mut R,
+    ) -> (Self::Out, GenStats, Vec<f64>);
 }
 
 /// The per-step math of one scheme over one state family.
@@ -371,7 +381,15 @@ impl<S: ScoreSource + ?Sized> StateFamily for MaskedFamily<S> {
     /// exact conditional.  NFE equals the number of unmask events (= seq_len
     /// without early stop), and each evaluation asks the score source for a
     /// single row — the sparse extreme (O(V) instead of O(L·V) per event).
-    fn exact<R: Rng>(ctx: &S, delta: f64, rng: &mut R) -> (Vec<Tok>, GenStats, Vec<f64>) {
+    /// Window-free: the uniformization knobs in `cfg` do not apply here
+    /// (score sources with a native uniform-state process consume them via
+    /// [`crate::solvers::masked::exact_batch`]).
+    fn exact<R: Rng>(
+        ctx: &S,
+        delta: f64,
+        _cfg: &ExactCfg,
+        rng: &mut R,
+    ) -> (Vec<Tok>, GenStats, Vec<f64>) {
         let l = ctx.seq_len();
         let v = ctx.vocab();
         let mask = ctx.mask_id();
@@ -1011,14 +1029,31 @@ impl StateFamily for ToyFamily {
         lane.x
     }
 
-    /// Exact simulation by windowed uniformization/thinning (Sec. 3.1).
-    /// NFE reports the candidate-evaluation count (the Fig. 1 quantity);
-    /// `steps` the accepted jumps.
-    fn exact<R: Rng>(ctx: &ToyModel, delta: f64, rng: &mut R) -> (usize, GenStats, Vec<f64>) {
-        use crate::ctmc::uniformization::{simulate_backward, ToyJump};
+    /// Exact simulation by windowed uniformization/thinning (Sec. 3.1)
+    /// under the exact-path knobs in `cfg`.  NFE reports score evaluations
+    /// actually performed (for the toy's bracket-free closed-form process
+    /// that equals the candidate count, the Fig. 1 quantity); `steps` the
+    /// accepted jumps.  Jump times are recorded, candidate times are not —
+    /// the serving path must stay O(1) in memory per request.
+    fn exact<R: Rng>(
+        ctx: &ToyModel,
+        delta: f64,
+        cfg: &ExactCfg,
+        rng: &mut R,
+    ) -> (usize, GenStats, Vec<f64>) {
+        use crate::ctmc::uniformization::{simulate_backward_into, ExactStats, ToyJump};
         let x0 = ctx.sample_stationary(rng);
-        let (x, s) = simulate_backward(&ToyJump(ctx), x0, ctx.horizon, delta, 0.5, rng);
-        let stats = GenStats { nfe: s.nfe, steps: s.jumps.len() };
+        let mut s = ExactStats::counts_only().with_jump_recording();
+        let x = simulate_backward_into(
+            &ToyJump(ctx),
+            x0,
+            ctx.horizon,
+            delta,
+            cfg.window_ratio,
+            rng,
+            &mut s,
+        );
+        let stats = GenStats { nfe: s.nfe, steps: s.n_accepted };
         let times = s.jumps.iter().map(|j| j.0).collect();
         (x, stats, times)
     }

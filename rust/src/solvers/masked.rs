@@ -64,10 +64,16 @@
 //!
 //! [`Solver::Exact`] routes to the first-hitting sampler ([`fhs_generate`])
 //! through every entry point here, including [`generate_batch`] (per-lane
-//! seeded streams, fanned across the threadpool) — which is what makes
-//! `--solver exact` servable end to end.  Its `GenStats::nfe` is the
-//! realized unmask-event count.
+//! seeded streams, fanned across the threadpool).  The serving stack
+//! instead dispatches exact batches through [`exact_batch`], which
+//! additionally honors the request's exact-path knobs: sources with a
+//! native uniform-state reverse process ([`ScoreSource::exact_uniform`],
+//! the HMM oracle) run bracketed windowed uniformization under
+//! (window_ratio, slack); all others fall back to the knob-free
+//! first-hitting sampler.  `GenStats::nfe` is the count of score
+//! evaluations actually performed.
 
+use crate::ctmc::uniformization::ExactCfg;
 use crate::schedule::adaptive::{AdaptiveTrace, StepController};
 use crate::score::{ScoreSource, Tok};
 use crate::solvers::driver::{self, Schedule};
@@ -112,14 +118,12 @@ pub fn generate_batch<S: ScoreSource + ?Sized>(
 ) -> Vec<(Vec<Tok>, GenStats)> {
     if matches!(solver, Solver::Exact) {
         assert!(crate::schedule::grid::is_valid_grid(grid), "invalid time grid");
-        if seeds.is_empty() {
-            return Vec::new();
-        }
         let delta = *grid.last().unwrap();
-        let threads = ThreadPool::default_size().min(seeds.len());
-        return par_map_indexed(seeds.len(), threads, |i| {
-            let mut rng = Xoshiro256::seed_from_u64(seeds[i]);
-            let (toks, stats, _) = fhs_generate(score, delta, &mut rng);
+        // Always the first-hitting sampler here (bit-identical to per-lane
+        // `generate`); uniform-state sources get their native exact path
+        // only through the knob-aware [`exact_batch`].
+        return exact_fanout(seeds, |rng| {
+            let (toks, stats, _) = fhs_generate(score, delta, rng);
             (toks, stats)
         });
     }
@@ -197,7 +201,49 @@ pub fn fhs_generate<S: ScoreSource + ?Sized, R: Rng>(
     delta: f64,
     rng: &mut R,
 ) -> (Vec<Tok>, GenStats, Vec<f64>) {
-    <MaskedFamily<S> as StateFamily>::exact(score, delta, rng)
+    <MaskedFamily<S> as StateFamily>::exact(score, delta, &ExactCfg::default(), rng)
+}
+
+/// Serve one packed batch of [`Solver::Exact`] lanes under explicit
+/// exact-path knobs (the coordinator's dispatch target for exact
+/// requests).  Per lane: if the score source exposes a native
+/// uniform-state reverse process ([`ScoreSource::exact_uniform`]), run
+/// bracketed windowed uniformization under `cfg`; otherwise fall back to
+/// the first-hitting sampler, which is window-free (`cfg` is then inert).
+/// Lane b draws from `Xoshiro256::seed_from_u64(seeds[b])`, so outputs are
+/// independent of co-batching exactly as in [`generate_batch`].
+/// `GenStats::nfe` reports score evaluations actually performed — with the
+/// brackets armed this is strictly below the candidate count.
+pub fn exact_batch<S: ScoreSource + ?Sized>(
+    score: &S,
+    delta: f64,
+    cfg: &ExactCfg,
+    seeds: &[u64],
+) -> Vec<(Vec<Tok>, GenStats)> {
+    exact_fanout(seeds, |rng| match score.exact_uniform(delta, cfg, rng) {
+        Some((toks, s)) => (toks, GenStats { nfe: s.nfe, steps: s.n_accepted }),
+        None => {
+            let (toks, stats, _) = fhs_generate(score, delta, rng);
+            (toks, stats)
+        }
+    })
+}
+
+/// The one per-lane exact fan-out both exact entry points share: lane i
+/// draws from `Xoshiro256::seed_from_u64(seeds[i])`, fanned across the
+/// threadpool — so outputs never depend on co-batching or thread count.
+fn exact_fanout<F>(seeds: &[u64], per_lane: F) -> Vec<(Vec<Tok>, GenStats)>
+where
+    F: Fn(&mut Xoshiro256) -> (Vec<Tok>, GenStats) + Sync,
+{
+    if seeds.is_empty() {
+        return Vec::new();
+    }
+    let threads = ThreadPool::default_size().min(seeds.len());
+    par_map_indexed(seeds.len(), threads, |i| {
+        let mut rng = Xoshiro256::seed_from_u64(seeds[i]);
+        per_lane(&mut rng)
+    })
 }
 
 #[cfg(test)]
@@ -327,6 +373,52 @@ mod tests {
         // Realized NFE = unmask events (+ at most one finalize eval).
         assert!(stats.nfe >= 1 && stats.nfe <= 17, "nfe={}", stats.nfe);
         assert!(times.len() <= 16);
+    }
+
+    #[test]
+    fn exact_batch_falls_back_to_fhs_without_uniform_process() {
+        // Markov oracle: no native uniform-state process, so exact_batch
+        // must be bit-identical to the generate_batch exact path whatever
+        // the knobs say.
+        let o = oracle();
+        let seeds = [3u64, 141, 59];
+        let grid = masked_uniform(8, 1e-3);
+        let want = generate_batch(&o, Solver::Exact, &grid, &seeds);
+        for cfg in [
+            ExactCfg::default(),
+            ExactCfg { window_ratio: 0.9, slack: 2.0 },
+        ] {
+            let got = exact_batch(&o, 1e-3, &cfg, &seeds);
+            assert_eq!(got.len(), want.len());
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.0, w.0);
+                assert_eq!(g.1.nfe, w.1.nfe);
+            }
+        }
+        assert!(exact_batch(&o, 1e-3, &ExactCfg::default(), &[]).is_empty());
+    }
+
+    #[test]
+    fn exact_batch_routes_hmm_through_uniformization() {
+        let mut rng = Xoshiro256::seed_from_u64(27);
+        let chain = MarkovChain::generate(&mut rng, 5, 0.6);
+        let o = HmmUniformOracle::new(chain, 10);
+        let seeds = [7u64, 19];
+        let cfg = ExactCfg::default();
+        let out = exact_batch(&o, 0.05, &cfg, &seeds);
+        assert_eq!(out.len(), 2);
+        for (toks, stats) in &out {
+            assert_eq!(toks.len(), 10);
+            assert!(toks.iter().all(|&t| (t as usize) < 5), "masks in {toks:?}");
+            assert!(stats.nfe >= 1, "uniformization pays at least the bounds");
+        }
+        // Same seeds -> same samples; a different slack changes the
+        // candidate stream (different dominating rate), not validity.
+        let again = exact_batch(&o, 0.05, &cfg, &seeds);
+        assert_eq!(again[0].0, out[0].0);
+        assert_eq!(again[1].0, out[1].0);
+        let loose = exact_batch(&o, 0.05, &ExactCfg { window_ratio: 0.9, slack: 2.0 }, &seeds);
+        assert!(loose.iter().all(|(t, _)| t.iter().all(|&c| (c as usize) < 5)));
     }
 
     #[test]

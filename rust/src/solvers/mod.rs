@@ -43,6 +43,29 @@
 //! against the pre-refactor implementations, and the `driver_direct` rows
 //! in `benches/solver_steps.rs` pin the dispatch overhead at zero.
 //!
+//! ## Exact paths and bracketed thinning
+//!
+//! [`Solver::Exact`] is not a per-window kernel (it owns its jump times),
+//! so it lives on the family as `StateFamily::exact`, parameterised by the
+//! exact-path knobs ([`crate::ctmc::uniformization::ExactCfg`]: window
+//! ratio + thinning slack, threaded from the request surface through
+//! batcher key, scheduler, server and CLI):
+//!
+//! - masked family: the first-hitting sampler (window-free, knobs inert);
+//! - toy family: windowed uniformization
+//!   ([`crate::ctmc::uniformization::simulate_backward_into`]);
+//! - score sources with a native uniform-state reverse process (the HMM
+//!   oracle): **bracketed** windowed uniformization via
+//!   [`masked::exact_batch`] → `ScoreSource::exact_uniform`.  The bracket
+//!   free-rejects most thinning candidates against a certified window
+//!   envelope of the total intensity without evaluating the score,
+//!   keeping jump streams bit-identical to the naive loop while the true
+//!   evaluation NFE drops ~(slack/envelope)-fold (`bench exact` tracks
+//!   the ratio in `BENCH_exact.json`).
+//!
+//! `GenStats::nfe` for exact runs counts score evaluations actually
+//! performed — the quantity `nfe_used` reports to clients.
+//!
 //! Two state families:
 //! - [`masked`]: token sequences under absorbing-state diffusion with the
 //!   log-linear schedule (the text/image experiments, Secs. 6.2-6.4);

@@ -11,6 +11,7 @@
 //! (rust vs AOT-artifact numerics).  [`Solver::Exact`] routes to the
 //! windowed-uniformization baseline ([`exact_sample`]).
 
+use crate::ctmc::uniformization::ExactCfg;
 use crate::ctmc::ToyModel;
 use crate::schedule::adaptive::{AdaptiveTrace, StepController};
 use crate::solvers::driver::{self, Schedule};
@@ -178,9 +179,21 @@ pub fn empirical_distribution(
 }
 
 /// Exact sampler baseline for the toy model (uniformization, Sec. 3.1) —
-/// [`Solver::Exact`]'s toy-family implementation ([`StateFamily::exact`]).
+/// [`Solver::Exact`]'s toy-family implementation ([`StateFamily::exact`])
+/// at the default exact-path knobs.
 pub fn exact_sample<R: Rng>(model: &ToyModel, delta: f64, rng: &mut R) -> usize {
-    <ToyFamily as StateFamily>::exact(model, delta, rng).0
+    exact_sample_with(model, delta, &ExactCfg::default(), rng)
+}
+
+/// As [`exact_sample`], with explicit exact-path knobs (the served
+/// `window_ratio`; the toy process's closed-form bound takes no slack).
+pub fn exact_sample_with<R: Rng>(
+    model: &ToyModel,
+    delta: f64,
+    cfg: &ExactCfg,
+    rng: &mut R,
+) -> usize {
+    <ToyFamily as StateFamily>::exact(model, delta, cfg, rng).0
 }
 
 #[cfg(test)]
@@ -257,7 +270,8 @@ mod tests {
     fn exact_reports_realized_jump_stats() {
         let m = model();
         let mut rng = Xoshiro256::seed_from_u64(9);
-        let (x, stats, times) = <ToyFamily as StateFamily>::exact(&m, 1e-3, &mut rng);
+        let (x, stats, times) =
+            <ToyFamily as StateFamily>::exact(&m, 1e-3, &ExactCfg::default(), &mut rng);
         assert!(x < m.n_states());
         assert!(stats.nfe >= stats.steps, "candidates >= accepted jumps");
         assert_eq!(stats.steps, times.len());

@@ -71,6 +71,26 @@ impl Args {
         }
     }
 
+    /// Optional numeric flag: None when absent, parse error when malformed.
+    pub fn f64_opt(&self, name: &str) -> Result<Option<f64>> {
+        self.str_opt(name)
+            .map(|s| {
+                s.parse()
+                    .map_err(|_| anyhow!("--{name} expects a number, got {s:?}"))
+            })
+            .transpose()
+    }
+
+    /// Optional integer flag: None when absent, parse error when malformed.
+    pub fn usize_opt(&self, name: &str) -> Result<Option<usize>> {
+        self.str_opt(name)
+            .map(|s| {
+                s.parse()
+                    .map_err(|_| anyhow!("--{name} expects an integer, got {s:?}"))
+            })
+            .transpose()
+    }
+
     pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
         match self.str_opt(name) {
             None => Ok(default),

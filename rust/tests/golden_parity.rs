@@ -14,6 +14,14 @@
 //! equal to the sum only up to the last ulp — so its parity here is via
 //! the text-jump process, whose total IS the summed pass, plus the
 //! `split_total_matches_full_fill` invariant in `ctmc::uniformization`.)
+//!
+//! The bracketed-thinning tests at the bottom additionally pin the new
+//! free-reject bracket: jump streams bit-identical to the naive
+//! always-evaluate loop (both the embedded legacy copy and the
+//! `NoBracket` wrapper) across seeds × window ratios × slacks, with the
+//! true evaluation NFE strictly dropping whenever the bracket fires.
+//! Those sweeps run under debug_assertions (asserted below), so every
+//! free reject is re-verified by a full evaluation as it happens.
 
 use fastdds::schedule::adaptive::{
     AdaptiveController, NfeBudget, StepController,
@@ -1328,8 +1336,134 @@ fn text_uniformization_parity() {
         let (x_old, s_old) =
             old_uni::simulate_backward(&old_jump, x0, 0.9, 0.05, 0.7, &mut r_old);
         assert_eq!(x_new, x_old, "seed={seed}");
-        assert_eq!(s_new.nfe, s_old.nfe, "candidate counts must match");
+        // The legacy loop evaluated every candidate: its nfe is the
+        // candidate count.  The bracketed loop proposes the same
+        // candidates but EVALUATES only the unbracketed ones (plus one
+        // bound evaluation per window).
+        assert_eq!(s_new.n_candidates, s_old.nfe, "candidate counts must match");
         assert_eq!(s_new.jumps, s_old.jumps, "jump streams must match bitwise");
-        assert_eq!(s_new.candidates, s_old.candidates);
+        assert_eq!(s_new.candidate_times, s_old.candidates);
+        assert!(
+            s_new.nfe <= s_old.nfe + s_new.bound_evals,
+            "bracketed evals {} cannot exceed naive evals {} + bounds {}",
+            s_new.nfe,
+            s_old.nfe,
+            s_new.bound_evals
+        );
     }
+}
+
+#[test]
+fn bracket_verification_requires_debug_assertions() {
+    // The bracketed-thinning property sweeps below rely on the simulator's
+    // debug-mode re-verification of every free reject.  If a profile
+    // override ever disables debug_assertions for tests, fail loud
+    // instead of silently skipping that verification (tier1.sh greps for
+    // the same condition in the manifests).
+    assert!(
+        cfg!(debug_assertions),
+        "test profile must keep debug-assertions enabled: the bracket \
+         verification inside ctmc::uniformization depends on them"
+    );
+}
+
+#[test]
+fn bracketed_thinning_matches_nobracket_bitwise_and_cuts_nfe() {
+    // Property sweep across seeds × window ratios × slacks: the bracketed
+    // loop and the NoBracket (always-evaluate) loop must realize identical
+    // jump streams, candidate streams and final states, while the
+    // bracketed loop's ACTUAL evaluation count is strictly lower (free
+    // rejects cost zero evaluations; both loops pay the same per-window
+    // bound evaluations).  Running this under debug_assertions re-verifies
+    // every single free reject by full evaluation inside the simulator.
+    // (Slacks stay >= 2.5: the window bound itself — bracketed or not —
+    // needs the slack to cover the in-window rise of data-consistent
+    // positions, ~1/window_ratio at small t.)
+    use fastdds::ctmc::uniformization::{simulate_backward, NoBracket};
+    use fastdds::score::hmm::UniformTextJump;
+    use fastdds::util::rng::Rng;
+
+    let mut rng = Xoshiro256::seed_from_u64(101);
+    let chain = MarkovChain::generate(&mut rng, 5, 0.4);
+    let o = HmmUniformOracle::new(chain, 8);
+
+    let mut total_free = 0usize;
+    for seed in [2u64, 77, 901, 4242] {
+        for &ratio in &[0.7, 0.9] {
+            for &slack in &[2.5, 4.0] {
+                let bracketed = UniformTextJump { oracle: &o, slack };
+                let naive = NoBracket(UniformTextJump { oracle: &o, slack });
+                let mut seeder = Xoshiro256::seed_from_u64(seed);
+                let x0: Vec<fastdds::score::Tok> =
+                    (0..8).map(|_| seeder.gen_usize(5) as u32).collect();
+                let mut r_b = Xoshiro256::seed_from_u64(seed ^ 0xB00);
+                let mut r_n = Xoshiro256::seed_from_u64(seed ^ 0xB00);
+                let (x_b, s_b) =
+                    simulate_backward(&bracketed, x0.clone(), 1.2, 0.02, ratio, &mut r_b);
+                let (x_n, s_n) =
+                    simulate_backward(&naive, x0, 1.2, 0.02, ratio, &mut r_n);
+                let tag = format!("seed={seed} ratio={ratio} slack={slack}");
+                assert_eq!(x_b, x_n, "{tag}: final states");
+                assert_eq!(s_b.jumps, s_n.jumps, "{tag}: jump streams");
+                assert_eq!(s_b.candidate_times, s_n.candidate_times, "{tag}");
+                assert_eq!(s_b.n_candidates, s_n.n_candidates, "{tag}");
+                assert_eq!(s_b.bound_evals, s_n.bound_evals, "{tag}: same bound cost");
+                // NoBracket never resolves a candidate for free.
+                assert_eq!(s_n.free_rejects, 0, "{tag}");
+                assert_eq!(s_n.nfe, s_n.n_candidates + s_n.bound_evals, "{tag}");
+                // Each free reject saves exactly one evaluation.
+                assert_eq!(
+                    s_b.nfe + s_b.free_rejects,
+                    s_n.nfe,
+                    "{tag}: eval accounting"
+                );
+                if s_b.free_rejects > 0 {
+                    assert!(s_b.nfe < s_n.nfe, "{tag}: NFE must strictly drop");
+                }
+                total_free += s_b.free_rejects;
+            }
+        }
+    }
+    // The sweep as a whole must actually exercise the bracket.
+    assert!(total_free > 0, "no bracket decision fired across the sweep");
+}
+
+#[test]
+fn hmm_evaluation_nfe_strictly_drops_at_default_slack() {
+    // The acceptance headline on a Fig. 1-like configuration: at the
+    // default slack the bracketed loop performs ~env/slack of the naive
+    // candidate evaluations (env = the certified window rise envelope,
+    // ~1.9 at these window ratios), so total evals (incl. the shared
+    // window-bound passes) drop by over the required 1.5x.
+    use fastdds::ctmc::uniformization::{simulate_backward, NoBracket, DEFAULT_SLACK};
+    use fastdds::score::hmm::UniformTextJump;
+    use fastdds::util::rng::Rng;
+
+    let mut rng = Xoshiro256::seed_from_u64(55);
+    let chain = MarkovChain::generate(&mut rng, 5, 0.15);
+    let o = HmmUniformOracle::new(chain, 10);
+    let bracketed = UniformTextJump { oracle: &o, slack: DEFAULT_SLACK };
+    let naive = NoBracket(UniformTextJump { oracle: &o, slack: DEFAULT_SLACK });
+
+    let (mut ev_b, mut ev_n) = (0usize, 0usize);
+    for seed in 0..6u64 {
+        let mut seeder = Xoshiro256::seed_from_u64(seed);
+        let x0: Vec<fastdds::score::Tok> =
+            (0..10).map(|_| seeder.gen_usize(5) as u32).collect();
+        let mut r_b = Xoshiro256::seed_from_u64(seed ^ 0xFACE);
+        let mut r_n = Xoshiro256::seed_from_u64(seed ^ 0xFACE);
+        let (x_b, s_b) = simulate_backward(&bracketed, x0.clone(), 3.0, 0.02, 0.8, &mut r_b);
+        let (x_n, s_n) = simulate_backward(&naive, x0, 3.0, 0.02, 0.8, &mut r_n);
+        assert_eq!(x_b, x_n, "seed={seed}");
+        assert_eq!(s_b.jumps, s_n.jumps, "seed={seed}");
+        ev_b += s_b.nfe;
+        ev_n += s_n.nfe;
+    }
+    assert!(ev_b < ev_n, "bracketed {ev_b} must beat naive {ev_n}");
+    let reduction = ev_n as f64 / ev_b as f64;
+    assert!(
+        reduction >= 1.5,
+        "eval reduction {reduction:.2}x below the 1.5x acceptance floor \
+         (bracketed {ev_b}, naive {ev_n})"
+    );
 }

@@ -1,10 +1,12 @@
 #!/usr/bin/env bash
 # Tier-1 verification in one command (see ROADMAP.md):
 #   build + full test suite (incl. the golden parity suite pinning the
-#   kernel/driver refactor bit-for-bit) + bench smoke runs that refresh
-#   BENCH_solvers.json (per-step perf + driver dispatch-overhead rows) and
-#   BENCH_schedules.json (KL/NFE for fixed vs adaptive vs tuned grids) so
-#   both trajectories are tracked across PRs.
+#   kernel/driver refactor AND the bracketed thinning loop bit-for-bit)
+#   + bench smoke runs that refresh BENCH_solvers.json (per-step perf +
+#   driver dispatch-overhead rows), BENCH_schedules.json (KL/NFE for fixed
+#   vs adaptive vs tuned grids) and BENCH_exact.json (exact-path
+#   evaluations-per-sample, wall-clock, bracket hit rates) so all three
+#   trajectories are tracked across PRs.
 #
 # Usage: scripts/tier1.sh [--quick|--no-bench]
 #   --quick     explicit alias of the default (quick bench smoke)
@@ -13,11 +15,24 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 cargo build --release
+
+# The bracket-verification property tests re-check every free accept /
+# free reject by full evaluation, which only happens under
+# debug_assertions — the default for `cargo test`'s dev profile.  Refuse a
+# configuration that switched them off: the suite would silently stop
+# verifying the bracket decisions.  (tests/golden_parity.rs additionally
+# asserts cfg!(debug_assertions) from inside the test profile.)
+if grep -Eq '^\s*debug-assertions\s*=\s*false' Cargo.toml rust/Cargo.toml 2>/dev/null; then
+    echo "tier-1 FAIL: debug-assertions disabled in a profile; bracket-verification tests depend on them"
+    exit 1
+fi
+
 cargo test -q
 
 if [[ "${1:-}" != "--no-bench" ]]; then
     cargo bench --bench solver_steps -- --quick
     cargo bench --bench schedules -- --quick
+    cargo bench --bench exact -- --quick
     # The dispatch-overhead rows must exist: they are the recorded evidence
     # that the SolverKernel/Driver indirection is free on the hot path
     # (compare each `driver_direct` row against its `generate` twin, <=2%).
@@ -25,6 +40,15 @@ if [[ "${1:-}" != "--no-bench" ]]; then
         echo "tier-1 FAIL: driver dispatch-overhead rows missing from BENCH_solvers.json"
         exit 1
     }
+    # The exact-path record must carry the bracket headline for BOTH
+    # families: evaluations per sample and the bracket hit rate.
+    for row in 'exact hmm evals-per-sample' 'exact hmm bracket-hit-rate' \
+               'exact toy evals-per-sample' 'exact toy bracket-hit-rate'; do
+        grep -q "$row" BENCH_exact.json || {
+            echo "tier-1 FAIL: row '$row' missing from BENCH_exact.json"
+            exit 1
+        }
+    done
 fi
 
 echo "tier-1 OK"

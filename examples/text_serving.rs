@@ -75,21 +75,24 @@ fn main() -> anyhow::Result<()> {
 
     // ---- direct-coordinator batch (no TCP) for peak throughput ---------
     let started = Instant::now();
-    let rxs: Vec<_> = (0..16)
+    let handles: Vec<_> = (0..16)
         .map(|i| {
-            coordinator.submit(GenerateRequest {
-                id: 1000 + i,
-                family: "markov".into(),
-                solver: Solver::Trapezoidal { theta: 0.5 },
-                nfe: 32,
-                n_samples: 4,
-                seed: i,
-            })
+            coordinator.submit(GenerateRequest::new(
+                1000 + i,
+                fastdds::api::SamplingSpec::builder()
+                    .family("markov")
+                    .solver(Solver::Trapezoidal { theta: 0.5 })
+                    .nfe(32)
+                    .n_samples(4)
+                    .seed(i)
+                    .build()
+                    .expect("valid spec"),
+            ))
         })
         .collect();
     let mut n = 0;
-    for rx in rxs {
-        n += rx.recv()??.sequences.len();
+    for h in handles {
+        n += h.wait()?.sequences.len();
     }
     let wall = started.elapsed().as_secs_f64();
     println!(

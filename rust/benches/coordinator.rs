@@ -4,6 +4,7 @@
 
 use std::time::Instant;
 
+use fastdds::api::SamplingSpec;
 use fastdds::bench::{bench, black_box};
 use fastdds::coordinator::{BatchPolicy, Coordinator, GenerateRequest};
 use fastdds::runtime::{Registry, RuntimeHandle, Value};
@@ -60,15 +61,17 @@ fn main() {
                 id += 1;
                 black_box(
                     coord
-                        .generate(GenerateRequest {
+                        .generate(GenerateRequest::new(
                             id,
-                            family: "markov".into(),
-                            solver: Solver::Trapezoidal { theta: 0.5 },
-                            nfe: 32,
-                            n_samples: 8,
-                            seed: id,
-                            ..Default::default()
-                        })
+                            SamplingSpec::builder()
+                                .family("markov")
+                                .solver(Solver::Trapezoidal { theta: 0.5 })
+                                .nfe(32)
+                                .n_samples(8)
+                                .seed(id)
+                                .build()
+                                .unwrap(),
+                        ))
                         .unwrap(),
                 );
             },
@@ -92,22 +95,24 @@ fn main() {
         BatchPolicy::Timeout(std::time::Duration::from_millis(2)),
     );
     let started = Instant::now();
-    let rxs: Vec<_> = (0..32)
+    let handles: Vec<_> = (0..32)
         .map(|i| {
-            coord.submit(GenerateRequest {
-                id: 10_000 + i,
-                family: "markov".into(),
-                solver: Solver::TauLeaping,
-                nfe: 32,
-                n_samples: 4,
-                seed: i,
-                ..Default::default()
-            })
+            coord.submit(GenerateRequest::new(
+                10_000 + i,
+                SamplingSpec::builder()
+                    .family("markov")
+                    .solver(Solver::TauLeaping)
+                    .nfe(32)
+                    .n_samples(4)
+                    .seed(i)
+                    .build()
+                    .unwrap(),
+            ))
         })
         .collect();
     let mut n = 0usize;
-    for rx in rxs {
-        n += rx.recv().unwrap().unwrap().sequences.len();
+    for h in handles {
+        n += h.wait().unwrap().sequences.len();
     }
     let wall = started.elapsed().as_secs_f64();
     let m = coord.metrics();

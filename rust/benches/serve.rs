@@ -1,0 +1,164 @@
+//! `bench serve` — end-to-end serving-path smoke over real TCP: N
+//! concurrent clients hammer a local-oracle server with v2 requests,
+//! blocking vs streaming, and the cancellation latency of a long exact
+//! run is measured.  Results land in `BENCH_serve.json` (tier1.sh runs
+//! `--quick` and asserts the rows), tracking requests/sec and p50/p99
+//! request latency across PRs.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use fastdds::api::SamplingSpec;
+use fastdds::coordinator::{BatchPolicy, Coordinator};
+use fastdds::score::hmm::HmmUniformOracle;
+use fastdds::score::markov::{MarkovChain, MarkovOracle};
+use fastdds::server::client::Client;
+use fastdds::server::Server;
+use fastdds::solvers::Solver;
+use fastdds::util::json::Json;
+use fastdds::util::rng::Xoshiro256;
+
+struct Report {
+    rows: Vec<Json>,
+}
+
+impl Report {
+    fn value(&mut self, name: &str, value: f64) {
+        println!("{name:44} {value:>12.2}");
+        self.rows.push(Json::obj(vec![
+            ("name", Json::from(name)),
+            ("value", Json::Num(value)),
+        ]));
+    }
+
+    fn write(&self, quick: bool) {
+        let doc = Json::obj(vec![
+            ("bench", Json::from("serve")),
+            ("quick", Json::from(quick)),
+            ("rows", Json::Arr(self.rows.clone())),
+        ]);
+        let path = if std::path::Path::new("ROADMAP.md").exists() {
+            "BENCH_serve.json"
+        } else if std::path::Path::new("../ROADMAP.md").exists() {
+            "../BENCH_serve.json"
+        } else {
+            "BENCH_serve.json"
+        };
+        match std::fs::write(path, doc.to_string()) {
+            Ok(()) => println!("wrote {path} ({} rows)", self.rows.len()),
+            Err(e) => println!("could not write {path}: {e}"),
+        }
+    }
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    println!(
+        "== fastdds benches: serving path{} ==",
+        if quick { " (--quick)" } else { "" }
+    );
+    let mut report = Report { rows: Vec::new() };
+    let (n_clients, reqs_per_client) = if quick { (4usize, 6usize) } else { (8, 25) };
+
+    // --- blocking vs streaming throughput/latency over TCP ---------------
+    let mut rng = Xoshiro256::seed_from_u64(23);
+    let oracle = Arc::new(MarkovOracle::new(MarkovChain::generate(&mut rng, 6, 0.5), 16));
+    let coord = Coordinator::start_local(oracle, BatchPolicy::Greedy, 8);
+    let srv = Server::start("127.0.0.1:0", coord).unwrap();
+    let addr = srv.addr.to_string();
+
+    for mode in ["blocking", "streaming"] {
+        let started = Instant::now();
+        let handles: Vec<_> = (0..n_clients)
+            .map(|ci| {
+                let addr = addr.clone();
+                let streaming = mode == "streaming";
+                std::thread::spawn(move || -> Vec<f64> {
+                    let mut c = Client::connect(&addr).unwrap();
+                    let mut lat = Vec::with_capacity(reqs_per_client);
+                    for k in 0..reqs_per_client {
+                        let spec = SamplingSpec::builder()
+                            .solver(Solver::Trapezoidal { theta: 0.5 })
+                            .nfe(32)
+                            .n_samples(2)
+                            .seed((ci * 1_000 + k) as u64)
+                            .build()
+                            .unwrap();
+                        let t0 = Instant::now();
+                        if streaming {
+                            let out = c.generate_stream(&spec).unwrap();
+                            assert_eq!(out.response.sequences.len(), 2);
+                        } else {
+                            let resp = c.generate_spec(&spec).unwrap();
+                            assert_eq!(resp.sequences.len(), 2);
+                        }
+                        lat.push(t0.elapsed().as_secs_f64() * 1e3);
+                    }
+                    lat
+                })
+            })
+            .collect();
+        let mut lats: Vec<f64> = handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        let wall = started.elapsed().as_secs_f64().max(1e-9);
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        report.value(
+            &format!("serve {mode} req-per-sec ({n_clients} clients)"),
+            lats.len() as f64 / wall,
+        );
+        report.value(&format!("serve {mode} p50-ms"), percentile(&lats, 0.50));
+        report.value(&format!("serve {mode} p99-ms"), percentile(&lats, 0.99));
+    }
+    srv.stop();
+
+    // --- cancellation latency on a long exact run ------------------------
+    // How long after the cancel verb does the partial response land?  The
+    // contract is "within one uniformization window".  The cancel is
+    // issued IMMEDIATELY after the accepted frame (64-dim exact jobs take
+    // far longer than the accept round trip), so the measurement cannot
+    // race job completion; if it ever does, the latency row records the
+    // -1 sentinel instead of a silently meaningless value.
+    let mut rng = Xoshiro256::seed_from_u64(29);
+    let oracle = Arc::new(HmmUniformOracle::new(
+        MarkovChain::generate(&mut rng, 6, 0.6),
+        64,
+    ));
+    let coord = Coordinator::start_local(oracle, BatchPolicy::Greedy, 4);
+    let srv = Server::start("127.0.0.1:0", coord).unwrap();
+    let addr = srv.addr.to_string();
+    let mut streaming = Client::connect(&addr).unwrap();
+    let mut control = Client::connect(&addr).unwrap();
+    let spec = SamplingSpec::builder()
+        .solver(Solver::Exact)
+        .n_samples(2)
+        .seed(7)
+        .build()
+        .unwrap();
+    let id = streaming.start_stream(&spec).unwrap();
+    let t0 = Instant::now();
+    let found = control.cancel(id).unwrap();
+    let out = streaming.finish_stream(2).unwrap();
+    let cancel_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let valid = found && out.response.partial;
+    report.value(
+        "serve cancel-to-partial-ms",
+        if valid { cancel_ms } else { -1.0 },
+    );
+    report.value(
+        "serve cancel found+partial (1=yes)",
+        if valid { 1.0 } else { 0.0 },
+    );
+    srv.stop();
+
+    report.write(quick);
+}

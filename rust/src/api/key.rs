@@ -1,0 +1,186 @@
+//! Batch-compatibility keys, derived mechanically from the typed spec.
+//!
+//! Two requests may share a batch **iff** their lanes would execute
+//! identically — same family, same per-step kernel, same resolved
+//! discretisation (or exact-path configuration).  [`BatchKey::of`] hashes
+//! exactly [`SamplingSpec::plan`] plus the kernel identity, so the key can
+//! never under-encode a knob the scheduler consumes (the pre-redesign
+//! failure mode that forced duplicate validation at coordinator intake):
+//! the scheduler executes *from the same plan the key hashes*.
+//!
+//! Because the plan is resolved, grouping improves for free relative to the
+//! raw-knob key:
+//!
+//! - requests whose raw NFE differs but resolves to the same grid
+//!   (`nfe=64` vs `nfe=65`, two-stage) now co-batch;
+//! - exact requests explicitly passing the default knobs co-batch with
+//!   knob-free ones (resolution happens in the builder);
+//! - adaptive requests group by (family, solver, tol, dt0, budget) — the
+//!   "error-aware batching" grouping of same-tolerance lanes that PR 3
+//!   left as a follow-up falls out of the derivation.
+
+use crate::api::spec::{ExecPlan, SamplingSpec};
+use crate::solvers::Solver;
+use crate::testkit::fnv1a;
+
+/// Compatibility key: lanes co-batch iff their keys are equal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct BatchKey {
+    pub family_hash: u64,
+    /// Kernel identity: solver discriminant + θ bits (exact f64) for the
+    /// two-stage schemes.
+    pub solver_kind: u8,
+    pub theta_bits: u64,
+    /// Resolved execution identity ([`ExecPlan`] discriminant + payload).
+    pub plan_kind: u8,
+    pub plan_a: u64,
+    pub plan_b: u64,
+    pub plan_c: u64,
+}
+
+impl BatchKey {
+    pub fn of(spec: &SamplingSpec) -> BatchKey {
+        let (solver_kind, theta) = match spec.solver() {
+            Solver::Euler => (0u8, 0.0),
+            Solver::TauLeaping => (1, 0.0),
+            Solver::Tweedie => (2, 0.0),
+            Solver::Trapezoidal { theta } => (3, theta),
+            Solver::Rk2 { theta } => (4, theta),
+            Solver::ParallelDecoding => (5, 0.0),
+            Solver::Exact => (6, 0.0),
+        };
+        let (plan_kind, plan_a, plan_b, plan_c) = match spec.plan() {
+            ExecPlan::Uniform { steps } => (0u8, steps as u64, 0, 0),
+            ExecPlan::Log { steps } => (1, steps as u64, 0, 0),
+            ExecPlan::Tuned { steps } => (2, steps as u64, 0, 0),
+            ExecPlan::Adaptive { tol, dt0, budget } => (
+                3,
+                tol.to_bits(),
+                dt0.to_bits(),
+                budget.map(|b| b as u64 + 1).unwrap_or(0),
+            ),
+            ExecPlan::Exact { cfg, max_events } => (
+                4,
+                cfg.window_ratio.to_bits(),
+                cfg.slack.to_bits(),
+                max_events.map(|m| m as u64 + 1).unwrap_or(0),
+            ),
+        };
+        BatchKey {
+            family_hash: fnv1a(spec.family()),
+            solver_kind,
+            theta_bits: theta.to_bits(),
+            plan_kind,
+            plan_a,
+            plan_b,
+            plan_c,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ctmc::uniformization::{DEFAULT_SLACK, DEFAULT_WINDOW_RATIO};
+    use crate::schedule::ScheduleSpec;
+
+    fn spec(solver: Solver, nfe: usize) -> crate::api::spec::SpecBuilder {
+        SamplingSpec::builder().solver(solver).nfe(nfe)
+    }
+
+    #[test]
+    fn key_splits_on_every_execution_coordinate() {
+        let trap = Solver::Trapezoidal { theta: 0.5 };
+        let base = BatchKey::of(&spec(trap, 32).build().unwrap());
+        assert_eq!(base, BatchKey::of(&spec(trap, 32).build().unwrap()));
+        // Different θ, different solver, different family, different
+        // schedule, different budget → different keys.
+        assert_ne!(
+            base,
+            BatchKey::of(&spec(Solver::Trapezoidal { theta: 0.3 }, 32).build().unwrap())
+        );
+        assert_ne!(base, BatchKey::of(&spec(Solver::TauLeaping, 32).build().unwrap()));
+        assert_ne!(
+            base,
+            BatchKey::of(&spec(trap, 32).family("toy").build().unwrap())
+        );
+        assert_ne!(
+            base,
+            BatchKey::of(
+                &spec(trap, 32).schedule(ScheduleSpec::Adaptive { tol: 1e-3 }).build().unwrap()
+            )
+        );
+        assert_ne!(
+            base,
+            BatchKey::of(&spec(trap, 32).nfe_budget(Some(17)).build().unwrap())
+        );
+    }
+
+    #[test]
+    fn key_groups_equal_resolved_grids() {
+        // nfe=64 and nfe=65 resolve to the same 32-step uniform grid for a
+        // two-stage scheme: same key (the pre-redesign raw-knob key split
+        // them for no execution reason).
+        let trap = Solver::Trapezoidal { theta: 0.5 };
+        assert_eq!(
+            BatchKey::of(&spec(trap, 64).build().unwrap()),
+            BatchKey::of(&spec(trap, 65).build().unwrap())
+        );
+        // A budget that caps to the same step count also groups.
+        assert_eq!(
+            BatchKey::of(&spec(trap, 32).build().unwrap()),
+            BatchKey::of(&spec(trap, 64).nfe_budget(Some(33)).build().unwrap())
+        );
+    }
+
+    #[test]
+    fn exact_keys_use_resolved_knobs() {
+        let bare = BatchKey::of(&spec(Solver::Exact, 16).build().unwrap());
+        let explicit = BatchKey::of(
+            &spec(Solver::Exact, 16)
+                .window_ratio(Some(DEFAULT_WINDOW_RATIO))
+                .slack(Some(DEFAULT_SLACK))
+                .build()
+                .unwrap(),
+        );
+        assert_eq!(bare, explicit, "explicit defaults must co-batch with knob-free");
+        let tuned = BatchKey::of(
+            &spec(Solver::Exact, 16).slack(Some(8.0)).build().unwrap(),
+        );
+        assert_ne!(bare, tuned);
+        let ratio = BatchKey::of(
+            &spec(Solver::Exact, 16).window_ratio(Some(0.9)).build().unwrap(),
+        );
+        assert_ne!(bare, ratio);
+        let capped = BatchKey::of(
+            &spec(Solver::Exact, 16).max_events(Some(50)).build().unwrap(),
+        );
+        assert_ne!(bare, capped);
+        // Exact ignores its (historically required) nfe field entirely.
+        assert_eq!(
+            bare,
+            BatchKey::of(&spec(Solver::Exact, 999).build().unwrap())
+        );
+    }
+
+    #[test]
+    fn adaptive_keys_group_same_tolerance_lanes() {
+        let trap = Solver::Trapezoidal { theta: 0.5 };
+        let mk = |nfe: usize, tol: f64, budget: Option<usize>| {
+            BatchKey::of(
+                &spec(trap, nfe)
+                    .schedule(ScheduleSpec::Adaptive { tol })
+                    .nfe_budget(budget)
+                    .build()
+                    .unwrap(),
+            )
+        };
+        // Same tol + same dt0 + same budget → same key (error-aware
+        // batching); any coordinate differing → split.
+        assert_eq!(mk(64, 1e-3, None), mk(64, 1e-3, None));
+        assert_eq!(mk(64, 1e-3, None), mk(65, 1e-3, None), "same dt0 must group");
+        assert_ne!(mk(64, 1e-3, None), mk(64, 2e-3, None));
+        assert_ne!(mk(64, 1e-3, None), mk(32, 1e-3, None));
+        assert_ne!(mk(64, 1e-3, None), mk(64, 1e-3, Some(24)));
+    }
+}

@@ -1,0 +1,30 @@
+//! The public request API: one typed spec, one validating builder, one
+//! mechanically derived batch key, one versioned wire format.
+//!
+//! Before this module existed, every new sampler knob was a flat optional
+//! field threaded by hand through ~7 surfaces (request parse → serialize →
+//! batch key → scheduler → server echo → client opts → CLI), with
+//! validation split between parse time and coordinator intake.  Now:
+//!
+//! - [`SamplingSpec`] ([`spec`]) is the single validated value object; its
+//!   [`SolverCfg`] enum makes illegal knob combinations unrepresentable
+//!   (no `nfe_budget` on exact, no `window_ratio` on grid schemes), and
+//!   [`SpecBuilder`] is the only constructor — a spec in hand is proof of
+//!   validity, so the scheduler re-validates nothing.
+//! - [`BatchKey::of`] ([`key`]) hashes the spec's resolved execution plan,
+//!   so co-batching is correct by construction.
+//! - [`wire`] owns the versioned envelope: the structured v2 form plus the
+//!   v1 auto-upgrade shim that keeps every legacy flat request serving
+//!   bit-identical responses.
+//! - [`CancelToken`]/[`StopCtl`] (re-exported from [`crate::util::cancel`])
+//!   are the cooperative cancellation handles the driver and the exact
+//!   simulators poll, powering the server's `cancel` verb and the
+//!   `max_events` guard.
+
+pub mod key;
+pub mod spec;
+pub mod wire;
+
+pub use crate::util::cancel::{CancelToken, StopCtl};
+pub use key::BatchKey;
+pub use spec::{ExecPlan, SamplingSpec, SolverCfg, SpecBuilder, SpecError};

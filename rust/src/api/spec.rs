@@ -1,0 +1,747 @@
+//! The typed request surface: [`SamplingSpec`] + its validating builder.
+//!
+//! Every knob a client can set lives in exactly one place.  The spec's
+//! fields are private and the only constructor is [`SpecBuilder::build`],
+//! so a `SamplingSpec` value *is* the proof that its knob combination is
+//! valid — downstream layers (batcher, scheduler, driver) consume it
+//! without re-validating, and invalid combinations are caught at the wire
+//! boundary with a typed [`SpecError`].
+//!
+//! Illegal combinations are unrepresentable by shape where the type system
+//! can carry it: [`SolverCfg::Exact`] has no `nfe_budget` or `schedule`
+//! field (exact simulation cannot honor either), and
+//! [`SolverCfg::Scheme`] has no `window_ratio`/`slack`/`max_events` (the
+//! uniformization knobs mean nothing to a grid scheme).  What the shape
+//! cannot carry — θ ranges, the slack floor, budget minima — the builder
+//! checks once.
+//!
+//! [`SamplingSpec::plan`] derives the *execution identity* mechanically:
+//! the resolved discretisation (or exact-path configuration) that fully
+//! determines how a lane runs.  `api::key::BatchKey` hashes exactly that
+//! plan, so two requests co-batch **iff** they would execute identically —
+//! co-batch laundering (smuggling a knob through a key that does not
+//! encode it) is impossible by construction, and requests whose raw knobs
+//! differ but resolve to the same discretisation (e.g. `nfe=64` vs
+//! `nfe=65` for a two-stage scheme) now share a batch for free.
+
+use crate::ctmc::uniformization::{ExactCfg, DEFAULT_SLACK, DEFAULT_WINDOW_RATIO};
+use crate::schedule::ScheduleSpec;
+use crate::solvers::Solver;
+use std::fmt;
+
+/// Serving-wide early-stop time δ of the backward pass (the value the
+/// pre-redesign scheduler hardcoded; re-exported there for compatibility).
+pub const DELTA: f64 = 1e-3;
+
+/// Upper bound on a client-requested tuned-grid step count (each distinct
+/// count triggers one offline tuner fit, so it must stay sane).
+pub const MAX_TUNED_STEPS: usize = 512;
+
+/// Per-lane RNG stream spread: lane i of a request draws from
+/// `seed.wrapping_add(i * LANE_SEED_STRIDE)` (the golden-ratio increment
+/// the batcher has always used — part of the wire contract, since clients
+/// replay samples from it).
+pub const LANE_SEED_STRIDE: u64 = 0x9E3779B97F4A7C15;
+
+/// Solver configuration: the typed half of the request surface where the
+/// *shape* makes invalid knob combinations unrepresentable.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SolverCfg {
+    /// A grid scheme (everything except exact simulation).
+    Scheme {
+        /// Never [`Solver::Exact`] (the builder routes that to
+        /// [`SolverCfg::Exact`]).
+        solver: Solver,
+        schedule: ScheduleSpec,
+        /// Score-evaluation budget per sample (the paper's NFE axis); sets
+        /// the step count for fixed schedules, seeds dt for adaptive ones.
+        nfe: usize,
+        /// Optional HARD per-sample cap (terminal denoise included).
+        nfe_budget: Option<usize>,
+    },
+    /// Exact simulation (first-hitting / windowed uniformization).  The
+    /// knobs are stored RESOLVED (defaults filled), so an explicit request
+    /// for the default values is indistinguishable from a knob-free one —
+    /// including in the batch key.
+    Exact {
+        /// Geometric uniformization window ratio, in (0, 1).
+        window_ratio: f64,
+        /// Thinning safety factor, >= 1 and >= the drift floor.
+        slack: f64,
+        /// Optional cap on accepted events: a run that exhausts it stops
+        /// and returns a partial result (exact NFE is realized, not
+        /// planned — this is the only way to bound it).
+        max_events: Option<usize>,
+    },
+}
+
+/// A fully validated, fully resolved generation request (minus the serving
+/// id, which the coordinator assigns).  Construct via [`SamplingSpec::builder`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct SamplingSpec {
+    family: String,
+    n_samples: usize,
+    seed: u64,
+    cfg: SolverCfg,
+}
+
+/// The resolved execution identity of a spec: everything that decides how
+/// a lane runs, with raw knobs folded into their effect.  Pure function of
+/// the spec; `BatchKey` hashes it verbatim.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ExecPlan {
+    /// Uniform grid with this many steps (budget already folded in).
+    Uniform { steps: usize },
+    /// Log-spaced grid with this many steps.
+    Log { steps: usize },
+    /// Offline-tuned grid with this many steps (0-steps requests and
+    /// budget caps already resolved).
+    Tuned { steps: usize },
+    /// Online error control: tolerance, initial dt, optional hard budget.
+    Adaptive { tol: f64, dt0: f64, budget: Option<usize> },
+    /// Exact simulation under these knobs.
+    Exact { cfg: ExactCfg, max_events: Option<usize> },
+}
+
+impl SamplingSpec {
+    pub fn builder() -> SpecBuilder {
+        SpecBuilder::default()
+    }
+
+    pub fn family(&self) -> &str {
+        &self.family
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.n_samples
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn cfg(&self) -> &SolverCfg {
+        &self.cfg
+    }
+
+    /// The solver enum ([`Solver::Exact`] for the exact variant).
+    pub fn solver(&self) -> Solver {
+        match &self.cfg {
+            SolverCfg::Scheme { solver, .. } => *solver,
+            SolverCfg::Exact { .. } => Solver::Exact,
+        }
+    }
+
+    /// Requested NFE (0 for exact specs, whose NFE is realized, not
+    /// planned).
+    pub fn nfe(&self) -> usize {
+        match &self.cfg {
+            SolverCfg::Scheme { nfe, .. } => *nfe,
+            SolverCfg::Exact { .. } => 0,
+        }
+    }
+
+    pub fn schedule(&self) -> ScheduleSpec {
+        match &self.cfg {
+            SolverCfg::Scheme { schedule, .. } => *schedule,
+            SolverCfg::Exact { .. } => ScheduleSpec::Uniform,
+        }
+    }
+
+    pub fn nfe_budget(&self) -> Option<usize> {
+        match &self.cfg {
+            SolverCfg::Scheme { nfe_budget, .. } => *nfe_budget,
+            SolverCfg::Exact { .. } => None,
+        }
+    }
+
+    /// Resolved exact-path knobs (library defaults for scheme specs, which
+    /// never reach the exact path).
+    pub fn exact_cfg(&self) -> ExactCfg {
+        match &self.cfg {
+            SolverCfg::Exact { window_ratio, slack, .. } => {
+                ExactCfg { window_ratio: *window_ratio, slack: *slack }
+            }
+            SolverCfg::Scheme { .. } => ExactCfg::default(),
+        }
+    }
+
+    pub fn max_events(&self) -> Option<usize> {
+        match &self.cfg {
+            SolverCfg::Exact { max_events, .. } => *max_events,
+            SolverCfg::Scheme { .. } => None,
+        }
+    }
+
+    /// RNG stream seed of lane `sample_idx` (see [`LANE_SEED_STRIDE`]).
+    pub fn lane_seed(&self, sample_idx: usize) -> u64 {
+        self.seed
+            .wrapping_add((sample_idx as u64).wrapping_mul(LANE_SEED_STRIDE))
+    }
+
+    /// Derive the execution identity (see [`ExecPlan`]).
+    pub fn plan(&self) -> ExecPlan {
+        match &self.cfg {
+            SolverCfg::Exact { window_ratio, slack, max_events } => ExecPlan::Exact {
+                cfg: ExactCfg { window_ratio: *window_ratio, slack: *slack },
+                max_events: *max_events,
+            },
+            SolverCfg::Scheme { solver, schedule, nfe, nfe_budget } => {
+                // Step count of the fixed schedules: the request NFE capped
+                // by the hard budget (one evaluation reserved for the
+                // terminal denoise so the cap can never be exceeded).
+                let fixed_steps = {
+                    let eff = match nfe_budget {
+                        Some(b) => (*nfe).min(b - 1),
+                        None => *nfe,
+                    };
+                    solver.steps_for_nfe(eff)
+                };
+                match schedule {
+                    ScheduleSpec::Uniform => ExecPlan::Uniform { steps: fixed_steps },
+                    ScheduleSpec::Log => ExecPlan::Log { steps: fixed_steps },
+                    ScheduleSpec::Tuned { steps } => {
+                        let mut s = if *steps == 0 { fixed_steps } else { *steps };
+                        if let Some(b) = nfe_budget {
+                            s = s.min(solver.steps_for_nfe(b - 1));
+                        }
+                        ExecPlan::Tuned { steps: s }
+                    }
+                    ScheduleSpec::Adaptive { tol } => ExecPlan::Adaptive {
+                        tol: *tol,
+                        dt0: (1.0 - DELTA) / solver.steps_for_nfe(*nfe) as f64,
+                        budget: *nfe_budget,
+                    },
+                }
+            }
+        }
+    }
+}
+
+/// Typed validation errors of the request surface.  [`SpecError::code`] is
+/// the stable machine-readable identifier the v2 wire protocol reports.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SpecError {
+    /// θ outside the scheme's second-order range.
+    ThetaOutOfRange { scheme: &'static str, theta: f64 },
+    /// An exact-only knob on a grid scheme.
+    KnobNeedsExact { knob: &'static str, solver: &'static str },
+    /// `nfe_budget` on exact simulation (its NFE is realized, not planned).
+    BudgetOnExact,
+    /// window_ratio outside (0, 1).
+    WindowRatioOutOfRange { value: f64 },
+    /// slack not finite or below 1.
+    SlackOutOfRange { value: f64 },
+    /// slack below the drift floor for the requested window ratio.
+    SlackBelowFloor { slack: f64, window_ratio: f64, floor: f64 },
+    /// max_events must be >= 1 when given.
+    MaxEventsZero,
+    /// nfe below one solver step.
+    NfeBelowOneStep { nfe: usize, per_step: usize },
+    /// nfe_budget below one step + the reserved terminal denoise.
+    BudgetBelowMinimum { budget: usize, minimum: usize },
+    /// Tuned step count above [`MAX_TUNED_STEPS`].
+    TunedStepsTooLarge { steps: usize },
+    /// Adaptive/tuned schedules need a two-stage scheme.
+    NeedsTwoStage { what: &'static str, solver: &'static str },
+    /// Adaptive tolerance not finite or negative.
+    AdaptiveTolInvalid { tol: f64 },
+    /// n_samples must be >= 1.
+    NoSamples,
+    /// A wire-level field failed to parse (message from the field parser).
+    Parse { field: &'static str, message: String },
+    /// A required wire-level field is missing or ill-typed.
+    MissingField { field: &'static str, message: String },
+}
+
+impl SpecError {
+    /// Stable machine-readable error identifier (the v2 `"code"` field).
+    pub fn code(&self) -> &'static str {
+        match self {
+            SpecError::ThetaOutOfRange { .. } => "theta_out_of_range",
+            SpecError::KnobNeedsExact { .. } => "knob_needs_exact",
+            SpecError::BudgetOnExact => "budget_on_exact",
+            SpecError::WindowRatioOutOfRange { .. } => "window_ratio_out_of_range",
+            SpecError::SlackOutOfRange { .. } => "slack_out_of_range",
+            SpecError::SlackBelowFloor { .. } => "slack_below_floor",
+            SpecError::MaxEventsZero => "max_events_zero",
+            SpecError::NfeBelowOneStep { .. } => "nfe_below_one_step",
+            SpecError::BudgetBelowMinimum { .. } => "budget_below_minimum",
+            SpecError::TunedStepsTooLarge { .. } => "tuned_steps_too_large",
+            SpecError::NeedsTwoStage { .. } => "needs_two_stage",
+            SpecError::AdaptiveTolInvalid { .. } => "adaptive_tol_invalid",
+            SpecError::NoSamples => "no_samples",
+            SpecError::Parse { .. } => "parse_error",
+            SpecError::MissingField { .. } => "missing_field",
+        }
+    }
+}
+
+impl fmt::Display for SpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SpecError::ThetaOutOfRange { scheme, theta } => match *scheme {
+                "rk2" => write!(
+                    f,
+                    "rk2 theta {theta} outside (0, 1/2] — second-order range of Thm. 5.5"
+                ),
+                _ => write!(
+                    f,
+                    "trapezoidal theta {theta} outside (0, 1) — second-order range of Thm. 5.4"
+                ),
+            },
+            SpecError::KnobNeedsExact { knob, solver } => write!(
+                f,
+                "{knob} is an exact-simulation knob; solver {solver} ignores it"
+            ),
+            SpecError::BudgetOnExact => write!(
+                f,
+                "exact simulation cannot honor a hard nfe_budget: its NFE is the \
+                 realized jump count (use max_events to bound the run, or an \
+                 approximate scheme to cap spend)"
+            ),
+            SpecError::WindowRatioOutOfRange { value } => {
+                write!(f, "window_ratio {value} outside (0, 1)")
+            }
+            SpecError::SlackOutOfRange { value } => write!(
+                f,
+                "slack {value} must be finite and >= 1 (a thinning bound inflation)"
+            ),
+            SpecError::SlackBelowFloor { slack, window_ratio, floor } => write!(
+                f,
+                "slack {slack} too small for window_ratio {window_ratio}: the \
+                 thinning bound needs slack >= {floor:.2} to dominate the \
+                 in-window intensity rise"
+            ),
+            SpecError::MaxEventsZero => write!(f, "max_events must be >= 1 when given"),
+            SpecError::NfeBelowOneStep { nfe, per_step } => {
+                write!(f, "nfe budget {nfe} below one step ({per_step})")
+            }
+            SpecError::BudgetBelowMinimum { budget, minimum } => write!(
+                f,
+                "nfe_budget {budget} below one step + terminal denoise ({minimum})"
+            ),
+            SpecError::TunedStepsTooLarge { steps } => write!(
+                f,
+                "tuned steps {steps} above the supported maximum {MAX_TUNED_STEPS}"
+            ),
+            SpecError::NeedsTwoStage { what, solver } => write!(
+                f,
+                "{what} need the embedded two-stage estimator (θ-trapezoidal or \
+                 θ-RK-2), got {solver}"
+            ),
+            SpecError::AdaptiveTolInvalid { tol } => {
+                write!(f, "adaptive tol {tol} must be finite and >= 0")
+            }
+            SpecError::NoSamples => write!(f, "n_samples must be >= 1"),
+            SpecError::Parse { field, message } => write!(f, "bad {field}: {message}"),
+            SpecError::MissingField { field, message } => {
+                write!(f, "field {field:?}: {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+/// The one validating constructor of [`SamplingSpec`].  Mirrors the flat
+/// knob surface (each CLI flag / wire field is one setter); `build`
+/// assembles the typed [`SolverCfg`] and rejects invalid combinations.
+#[derive(Clone, Debug)]
+pub struct SpecBuilder {
+    family: String,
+    n_samples: usize,
+    seed: u64,
+    solver: Solver,
+    nfe: usize,
+    schedule: ScheduleSpec,
+    nfe_budget: Option<usize>,
+    window_ratio: Option<f64>,
+    slack: Option<f64>,
+    max_events: Option<usize>,
+}
+
+impl Default for SpecBuilder {
+    fn default() -> Self {
+        SpecBuilder {
+            family: "markov".into(),
+            n_samples: 1,
+            seed: 0,
+            solver: Solver::Tweedie,
+            nfe: 16,
+            schedule: ScheduleSpec::Uniform,
+            nfe_budget: None,
+            window_ratio: None,
+            slack: None,
+            max_events: None,
+        }
+    }
+}
+
+impl SpecBuilder {
+    pub fn family(mut self, family: &str) -> Self {
+        self.family = family.to_string();
+        self
+    }
+
+    pub fn n_samples(mut self, n: usize) -> Self {
+        self.n_samples = n;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn solver(mut self, solver: Solver) -> Self {
+        self.solver = solver;
+        self
+    }
+
+    pub fn nfe(mut self, nfe: usize) -> Self {
+        self.nfe = nfe;
+        self
+    }
+
+    pub fn schedule(mut self, schedule: ScheduleSpec) -> Self {
+        self.schedule = schedule;
+        self
+    }
+
+    pub fn nfe_budget(mut self, budget: Option<usize>) -> Self {
+        self.nfe_budget = budget;
+        self
+    }
+
+    pub fn window_ratio(mut self, ratio: Option<f64>) -> Self {
+        self.window_ratio = ratio;
+        self
+    }
+
+    pub fn slack(mut self, slack: Option<f64>) -> Self {
+        self.slack = slack;
+        self
+    }
+
+    pub fn max_events(mut self, cap: Option<usize>) -> Self {
+        self.max_events = cap;
+        self
+    }
+
+    /// Validate and assemble.  Every serving-surface invariant lives here
+    /// (and only here): the scheduler trusts any spec it receives.
+    pub fn build(self) -> Result<SamplingSpec, SpecError> {
+        if self.n_samples == 0 {
+            return Err(SpecError::NoSamples);
+        }
+        // θ ranges of the second-order schemes (Thms. 5.4/5.5).  NaN never
+        // passes a range check.
+        match self.solver {
+            Solver::Trapezoidal { theta } if !(theta > 0.0 && theta < 1.0) => {
+                return Err(SpecError::ThetaOutOfRange { scheme: "trapezoidal", theta });
+            }
+            Solver::Rk2 { theta } if !(theta > 0.0 && theta <= 0.5) => {
+                return Err(SpecError::ThetaOutOfRange { scheme: "rk2", theta });
+            }
+            _ => {}
+        }
+        if self.nfe < self.solver.nfe_per_step() {
+            return Err(SpecError::NfeBelowOneStep {
+                nfe: self.nfe,
+                per_step: self.solver.nfe_per_step(),
+            });
+        }
+
+        if matches!(self.solver, Solver::Exact) {
+            if self.nfe_budget.is_some() {
+                return Err(SpecError::BudgetOnExact);
+            }
+            match self.schedule {
+                // Fixed grids are inert for exact simulation (only the
+                // terminal δ matters) and were historically accepted.
+                ScheduleSpec::Uniform | ScheduleSpec::Log => {}
+                ScheduleSpec::Adaptive { .. } => {
+                    return Err(SpecError::NeedsTwoStage {
+                        what: "adaptive schedules",
+                        solver: "exact",
+                    });
+                }
+                ScheduleSpec::Tuned { .. } => {
+                    return Err(SpecError::NeedsTwoStage {
+                        what: "tuned schedules",
+                        solver: "exact",
+                    });
+                }
+            }
+            if let Some(w) = self.window_ratio {
+                if !(w > 0.0 && w < 1.0) {
+                    return Err(SpecError::WindowRatioOutOfRange { value: w });
+                }
+            }
+            if let Some(s) = self.slack {
+                if !(s.is_finite() && s >= 1.0) {
+                    return Err(SpecError::SlackOutOfRange { value: s });
+                }
+            }
+            if self.max_events == Some(0) {
+                return Err(SpecError::MaxEventsZero);
+            }
+            // Resolve the knobs, then enforce the drift floor on the
+            // RESOLVED values: the thinning bound evaluates at the
+            // window's small end, but data-consistent positions rise with
+            // t (see score::hmm::rise_envelope) — slack must cover that
+            // rise or the dominating rate is silently invalid.
+            let window_ratio = self.window_ratio.unwrap_or(DEFAULT_WINDOW_RATIO);
+            let slack = self.slack.unwrap_or(DEFAULT_SLACK);
+            let floor = crate::score::hmm::SUP_DRIFT_MARGIN / window_ratio;
+            if slack < floor {
+                return Err(SpecError::SlackBelowFloor { slack, window_ratio, floor });
+            }
+            return Ok(SamplingSpec {
+                family: self.family,
+                n_samples: self.n_samples,
+                seed: self.seed,
+                cfg: SolverCfg::Exact { window_ratio, slack, max_events: self.max_events },
+            });
+        }
+
+        // Grid schemes: the exact-only knobs are unrepresentable, so reject
+        // them with a typed error instead of silently dropping them.
+        let solver_name = self.solver.name();
+        if self.window_ratio.is_some() {
+            return Err(SpecError::KnobNeedsExact { knob: "window_ratio", solver: solver_name });
+        }
+        if self.slack.is_some() {
+            return Err(SpecError::KnobNeedsExact { knob: "slack", solver: solver_name });
+        }
+        if self.max_events.is_some() {
+            return Err(SpecError::KnobNeedsExact { knob: "max_events", solver: solver_name });
+        }
+        if let Some(b) = self.nfe_budget {
+            // One full step plus the reserved terminal denoise must fit.
+            let minimum = self.solver.nfe_per_step() + 1;
+            if b < minimum {
+                return Err(SpecError::BudgetBelowMinimum { budget: b, minimum });
+            }
+        }
+        match self.schedule {
+            ScheduleSpec::Tuned { steps } => {
+                if steps > MAX_TUNED_STEPS {
+                    return Err(SpecError::TunedStepsTooLarge { steps });
+                }
+                // The tuner's pilot runs are adaptive passes, which need
+                // the two-stage estimator.
+                if self.solver.nfe_per_step() != 2 {
+                    return Err(SpecError::NeedsTwoStage {
+                        what: "tuned schedules",
+                        solver: solver_name,
+                    });
+                }
+            }
+            ScheduleSpec::Adaptive { tol } => {
+                if self.solver.nfe_per_step() != 2 {
+                    return Err(SpecError::NeedsTwoStage {
+                        what: "adaptive schedules",
+                        solver: solver_name,
+                    });
+                }
+                if !(tol.is_finite() && tol >= 0.0) {
+                    return Err(SpecError::AdaptiveTolInvalid { tol });
+                }
+            }
+            ScheduleSpec::Uniform | ScheduleSpec::Log => {}
+        }
+        Ok(SamplingSpec {
+            family: self.family,
+            n_samples: self.n_samples,
+            seed: self.seed,
+            cfg: SolverCfg::Scheme {
+                solver: self.solver,
+                schedule: self.schedule,
+                nfe: self.nfe,
+                nfe_budget: self.nfe_budget,
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scheme(solver: Solver, nfe: usize) -> SpecBuilder {
+        SamplingSpec::builder().solver(solver).nfe(nfe)
+    }
+
+    #[test]
+    fn builder_defaults_and_getters() {
+        let s = SamplingSpec::builder().build().unwrap();
+        assert_eq!(s.family(), "markov");
+        assert_eq!(s.n_samples(), 1);
+        assert_eq!(s.seed(), 0);
+        assert_eq!(s.solver(), Solver::Tweedie);
+        assert_eq!(s.nfe(), 16);
+        assert_eq!(s.schedule(), ScheduleSpec::Uniform);
+        assert_eq!(s.nfe_budget(), None);
+    }
+
+    #[test]
+    fn exact_knobs_resolve_to_defaults() {
+        let bare = scheme(Solver::Exact, 16).build().unwrap();
+        let explicit = scheme(Solver::Exact, 16)
+            .window_ratio(Some(DEFAULT_WINDOW_RATIO))
+            .slack(Some(DEFAULT_SLACK))
+            .build()
+            .unwrap();
+        // Resolution makes the explicit-defaults spec IDENTICAL to the
+        // knob-free one — this is what kills co-batch laundering.
+        assert_eq!(bare, explicit);
+        assert_eq!(bare.exact_cfg(), ExactCfg::default());
+        assert_eq!(bare.plan(), explicit.plan());
+    }
+
+    #[test]
+    fn invalid_combinations_are_rejected_typed() {
+        // nfe_budget + exact.
+        let e = scheme(Solver::Exact, 16).nfe_budget(Some(32)).build().unwrap_err();
+        assert_eq!(e.code(), "budget_on_exact");
+        assert!(format!("{e}").contains("exact"));
+        // Knobs + non-exact solver.
+        let e = scheme(Solver::TauLeaping, 16).slack(Some(2.0)).build().unwrap_err();
+        assert_eq!(e.code(), "knob_needs_exact");
+        assert!(format!("{e}").contains("exact"));
+        let e = scheme(Solver::Trapezoidal { theta: 0.5 }, 16)
+            .window_ratio(Some(0.5))
+            .build()
+            .unwrap_err();
+        assert_eq!(e.code(), "knob_needs_exact");
+        let e = scheme(Solver::Euler, 16).max_events(Some(5)).build().unwrap_err();
+        assert_eq!(e.code(), "knob_needs_exact");
+        // θ out of range (NaN included).
+        for theta in [0.0, 1.0, 1.5, f64::NAN] {
+            let e = scheme(Solver::Trapezoidal { theta }, 16).build().unwrap_err();
+            assert_eq!(e.code(), "theta_out_of_range", "theta={theta}");
+            assert!(format!("{e}").contains("theta"));
+        }
+        for theta in [0.0, 0.51, 1.0, f64::NAN] {
+            let e = scheme(Solver::Rk2 { theta }, 16).build().unwrap_err();
+            assert_eq!(e.code(), "theta_out_of_range", "theta={theta}");
+            assert!(format!("{e}").contains("1/2"));
+        }
+        // Out-of-range exact knobs.
+        for wr in [0.0, 1.0, -0.5, f64::NAN] {
+            let e = scheme(Solver::Exact, 16).window_ratio(Some(wr)).build().unwrap_err();
+            assert_eq!(e.code(), "window_ratio_out_of_range", "wr={wr}");
+        }
+        for sl in [0.5, 0.0, f64::NAN, f64::INFINITY] {
+            let e = scheme(Solver::Exact, 16).slack(Some(sl)).build().unwrap_err();
+            assert_eq!(e.code(), "slack_out_of_range", "slack={sl}");
+        }
+        // Slack floor: valid slack, but below the drift floor for the ratio.
+        let e = scheme(Solver::Exact, 16).slack(Some(1.2)).build().unwrap_err();
+        assert_eq!(e.code(), "slack_below_floor");
+        assert!(format!("{e}").contains("window_ratio"));
+        // Budget minima and nfe minima.
+        let e = scheme(Solver::Trapezoidal { theta: 0.5 }, 1).build().unwrap_err();
+        assert_eq!(e.code(), "nfe_below_one_step");
+        assert!(format!("{e}").contains("below one step"));
+        let e = scheme(Solver::Trapezoidal { theta: 0.5 }, 16)
+            .nfe_budget(Some(2))
+            .build()
+            .unwrap_err();
+        assert_eq!(e.code(), "budget_below_minimum");
+        assert!(format!("{e}").contains("below one step"));
+        // Adaptive/tuned need two-stage schemes.
+        let e = scheme(Solver::TauLeaping, 16)
+            .schedule(ScheduleSpec::Adaptive { tol: 1e-3 })
+            .build()
+            .unwrap_err();
+        assert_eq!(e.code(), "needs_two_stage");
+        assert!(format!("{e}").contains("two-stage"));
+        let e = scheme(Solver::Tweedie, 16)
+            .schedule(ScheduleSpec::Tuned { steps: 0 })
+            .build()
+            .unwrap_err();
+        assert_eq!(e.code(), "needs_two_stage");
+        let e = scheme(Solver::Exact, 16)
+            .schedule(ScheduleSpec::Adaptive { tol: 1e-3 })
+            .build()
+            .unwrap_err();
+        assert_eq!(e.code(), "needs_two_stage");
+        // Tuned step cap.
+        let e = scheme(Solver::Trapezoidal { theta: 0.5 }, 16)
+            .schedule(ScheduleSpec::Tuned { steps: MAX_TUNED_STEPS + 1 })
+            .build()
+            .unwrap_err();
+        assert_eq!(e.code(), "tuned_steps_too_large");
+        assert!(format!("{e}").contains("tuned steps"));
+        // Degenerate max_events / n_samples.
+        let e = scheme(Solver::Exact, 16).max_events(Some(0)).build().unwrap_err();
+        assert_eq!(e.code(), "max_events_zero");
+        let e = SamplingSpec::builder().n_samples(0).build().unwrap_err();
+        assert_eq!(e.code(), "no_samples");
+        // Exact + fixed schedules stay accepted (historically inert).
+        assert!(scheme(Solver::Exact, 16).schedule(ScheduleSpec::Log).build().is_ok());
+    }
+
+    #[test]
+    fn plan_resolves_discretisation() {
+        let trap = Solver::Trapezoidal { theta: 0.5 };
+        // Fixed uniform: nfe 64 and 65 resolve to the same 32-step grid.
+        let a = scheme(trap, 64).build().unwrap();
+        let b = scheme(trap, 65).build().unwrap();
+        assert_eq!(a.plan(), ExecPlan::Uniform { steps: 32 });
+        assert_eq!(a.plan(), b.plan());
+        // Budget folds into the step count.
+        let c = scheme(trap, 64).nfe_budget(Some(33)).build().unwrap();
+        assert_eq!(c.plan(), ExecPlan::Uniform { steps: 16 });
+        // Tuned 0-steps resolves from nfe; explicit steps capped by budget.
+        let t = scheme(trap, 64)
+            .schedule(ScheduleSpec::Tuned { steps: 0 })
+            .build()
+            .unwrap();
+        assert_eq!(t.plan(), ExecPlan::Tuned { steps: 32 });
+        let t = scheme(trap, 16)
+            .schedule(ScheduleSpec::Tuned { steps: 64 })
+            .nfe_budget(Some(9))
+            .build()
+            .unwrap();
+        assert_eq!(t.plan(), ExecPlan::Tuned { steps: 4 });
+        // Adaptive: dt0 from nfe, tol + budget carried.
+        let ad = scheme(trap, 64)
+            .schedule(ScheduleSpec::Adaptive { tol: 1e-3 })
+            .nfe_budget(Some(24))
+            .build()
+            .unwrap();
+        match ad.plan() {
+            ExecPlan::Adaptive { tol, dt0, budget } => {
+                assert_eq!(tol, 1e-3);
+                assert!((dt0 - (1.0 - DELTA) / 32.0).abs() < 1e-15);
+                assert_eq!(budget, Some(24));
+            }
+            p => panic!("wrong plan {p:?}"),
+        }
+        // Exact plan carries resolved knobs + max_events.
+        let ex = scheme(Solver::Exact, 16)
+            .window_ratio(Some(0.8))
+            .slack(Some(2.5))
+            .max_events(Some(100))
+            .build()
+            .unwrap();
+        assert_eq!(
+            ex.plan(),
+            ExecPlan::Exact {
+                cfg: ExactCfg { window_ratio: 0.8, slack: 2.5 },
+                max_events: Some(100),
+            }
+        );
+    }
+
+    #[test]
+    fn lane_seeds_match_historic_stride() {
+        let s = SamplingSpec::builder().seed(99).build().unwrap();
+        assert_eq!(s.lane_seed(0), 99);
+        assert_eq!(s.lane_seed(3), 99u64.wrapping_add(3u64.wrapping_mul(LANE_SEED_STRIDE)));
+    }
+}

@@ -1,0 +1,372 @@
+//! Wire-protocol (de)serialization of [`SamplingSpec`]: the versioned v2
+//! envelope plus the v1 compatibility shim.
+//!
+//! ## v2 (structured)
+//!
+//! ```json
+//! {"v": 2, "cmd": "generate", "spec": {
+//!    "family": "markov", "n_samples": 2, "seed": 7,
+//!    "solver": {"type": "scheme", "solver": "trapezoidal:0.5",
+//!               "schedule": {"kind": "adaptive", "tol": 0.001},
+//!               "nfe": 64, "nfe_budget": 48}}}
+//! {"v": 2, "cmd": "generate", "spec": {
+//!    "family": "markov", "seed": 9,
+//!    "solver": {"type": "exact", "window_ratio": 0.6, "slack": 3.0,
+//!               "max_events": 500}}}
+//! ```
+//!
+//! `spec_to_json` always writes the *resolved* spec (defaults filled), so a
+//! response echo shows exactly what ran; `spec_from_json` routes every
+//! field through [`SpecBuilder`], so malformed or invalid requests die at
+//! the wire boundary with a typed [`SpecError`] (stable `code` string).
+//!
+//! ## v1 (legacy flat) — auto-upgrade shim
+//!
+//! Any request without `"v": 2` is interpreted as the historical flat form
+//! (`solver`/`nfe`/`n_samples`/`seed`/`family`/`schedule`/`nfe_budget`/
+//! `window_ratio`/`slack` at top level) and upgraded through the same
+//! builder.  [`V1Echo`] preserves which optional fields the request
+//! actually carried so the server can reproduce the legacy response echo
+//! byte for byte.
+
+use crate::api::spec::{SamplingSpec, SolverCfg, SpecError};
+use crate::schedule::ScheduleSpec;
+use crate::solvers::Solver;
+use crate::util::json::Json;
+
+/// Current protocol version.
+pub const PROTOCOL_VERSION: u64 = 2;
+
+/// The optional fields a legacy v1 request actually carried, exactly as
+/// parsed — the server's v1 response echo is derived from this (NOT from
+/// the resolved spec, which fills defaults v1 never echoed).
+#[derive(Clone, Debug, Default)]
+pub struct V1Echo {
+    pub schedule: ScheduleSpec,
+    pub nfe_budget: Option<usize>,
+    pub window_ratio: Option<f64>,
+    pub slack: Option<f64>,
+}
+
+/// A parsed request: the validated spec plus, for legacy requests, the v1
+/// echo view.  `v1.is_some()` ⇔ the request arrived in the flat v1 form.
+#[derive(Clone, Debug)]
+pub struct ParsedRequest {
+    pub spec: SamplingSpec,
+    pub v1: Option<V1Echo>,
+}
+
+fn missing(field: &'static str) -> impl FnOnce(anyhow::Error) -> SpecError {
+    move |e| SpecError::MissingField { field, message: format!("{e:#}") }
+}
+
+fn parse_err(field: &'static str) -> impl FnOnce(anyhow::Error) -> SpecError {
+    move |e| SpecError::Parse { field, message: format!("{e:#}") }
+}
+
+/// Parse a request object of either protocol version (see module docs).
+pub fn request_from_json(j: &Json) -> Result<ParsedRequest, SpecError> {
+    let version = match j.opt("v") {
+        Some(v) => v.as_u64().map_err(parse_err("v"))?,
+        None => 1,
+    };
+    match version {
+        1 => {
+            let (spec, echo) = v1_from_json(j)?;
+            Ok(ParsedRequest { spec, v1: Some(echo) })
+        }
+        2 => {
+            let spec_obj = j.get("spec").map_err(missing("spec"))?;
+            Ok(ParsedRequest { spec: spec_from_json(spec_obj)?, v1: None })
+        }
+        other => Err(SpecError::Parse {
+            field: "v",
+            message: format!("unsupported protocol version {other} (this server speaks 1 and 2)"),
+        }),
+    }
+}
+
+/// Upgrade a legacy flat request (the pre-v2 protocol) into a validated
+/// spec, preserving the raw optional fields for the legacy echo.
+fn v1_from_json(j: &Json) -> Result<(SamplingSpec, V1Echo), SpecError> {
+    let solver_str = j
+        .get("solver")
+        .and_then(|s| s.as_str())
+        .map_err(missing("solver"))?;
+    let solver = Solver::parse(solver_str).map_err(parse_err("solver"))?;
+    let nfe = j
+        .get("nfe")
+        .and_then(|v| v.as_usize())
+        .map_err(missing("nfe"))?;
+    let schedule = match j.opt("schedule") {
+        Some(s) => {
+            let text = s.as_str().map_err(parse_err("schedule"))?;
+            ScheduleSpec::parse(text).map_err(parse_err("schedule"))?
+        }
+        None => ScheduleSpec::default(),
+    };
+    let mut b = SamplingSpec::builder().solver(solver).nfe(nfe).schedule(schedule);
+    if let Some(f) = j.opt("family") {
+        b = b.family(f.as_str().map_err(parse_err("family"))?);
+    }
+    if let Some(n) = j.opt("n_samples") {
+        b = b.n_samples(n.as_usize().map_err(parse_err("n_samples"))?);
+    }
+    if let Some(s) = j.opt("seed") {
+        // Lossless: 64-bit seeds above 2^53 survive (util::json::Json::Int).
+        b = b.seed(s.as_u64().map_err(parse_err("seed"))?);
+    }
+    let nfe_budget = j
+        .opt("nfe_budget")
+        .map(|v| v.as_usize().map_err(parse_err("nfe_budget")))
+        .transpose()?;
+    let window_ratio = j
+        .opt("window_ratio")
+        .map(|v| v.as_f64().map_err(parse_err("window_ratio")))
+        .transpose()?;
+    let slack = j
+        .opt("slack")
+        .map(|v| v.as_f64().map_err(parse_err("slack")))
+        .transpose()?;
+    let spec = b
+        .nfe_budget(nfe_budget)
+        .window_ratio(window_ratio)
+        .slack(slack)
+        .build()?;
+    Ok((spec, V1Echo { schedule, nfe_budget, window_ratio, slack }))
+}
+
+/// Parse the v2 `"spec"` object through the validating builder.
+pub fn spec_from_json(j: &Json) -> Result<SamplingSpec, SpecError> {
+    let mut b = SamplingSpec::builder();
+    if let Some(f) = j.opt("family") {
+        b = b.family(f.as_str().map_err(parse_err("family"))?);
+    }
+    if let Some(n) = j.opt("n_samples") {
+        b = b.n_samples(n.as_usize().map_err(parse_err("n_samples"))?);
+    }
+    if let Some(s) = j.opt("seed") {
+        b = b.seed(s.as_u64().map_err(parse_err("seed"))?);
+    }
+    let sol = j.get("solver").map_err(missing("solver"))?;
+    let ty = sol
+        .get("type")
+        .and_then(|t| t.as_str())
+        .map_err(missing("solver.type"))?;
+    match ty {
+        "scheme" => {
+            let name = sol
+                .get("solver")
+                .and_then(|s| s.as_str())
+                .map_err(missing("solver.solver"))?;
+            let solver = Solver::parse(name).map_err(parse_err("solver.solver"))?;
+            b = b.solver(solver);
+            b = b.nfe(
+                sol.get("nfe")
+                    .and_then(|v| v.as_usize())
+                    .map_err(missing("solver.nfe"))?,
+            );
+            if let Some(s) = sol.opt("schedule") {
+                b = b.schedule(ScheduleSpec::from_json(s).map_err(parse_err("solver.schedule"))?);
+            }
+            if let Some(v) = sol.opt("nfe_budget") {
+                b = b.nfe_budget(Some(v.as_usize().map_err(parse_err("solver.nfe_budget"))?));
+            }
+        }
+        "exact" => {
+            b = b.solver(Solver::Exact);
+            if let Some(v) = sol.opt("window_ratio") {
+                b = b.window_ratio(Some(v.as_f64().map_err(parse_err("solver.window_ratio"))?));
+            }
+            if let Some(v) = sol.opt("slack") {
+                b = b.slack(Some(v.as_f64().map_err(parse_err("solver.slack"))?));
+            }
+            if let Some(v) = sol.opt("max_events") {
+                b = b.max_events(Some(v.as_usize().map_err(parse_err("solver.max_events"))?));
+            }
+        }
+        other => {
+            return Err(SpecError::Parse {
+                field: "solver.type",
+                message: format!("unknown solver type {other:?} (scheme|exact)"),
+            });
+        }
+    }
+    b.build()
+}
+
+/// Serialize the (resolved) spec as the structured v2 `"spec"` object.
+/// Round-trips bit-exactly: `spec_from_json(spec_to_json(s)) == s`.
+pub fn spec_to_json(spec: &SamplingSpec) -> Json {
+    let solver = match spec.cfg() {
+        SolverCfg::Scheme { solver, schedule, nfe, nfe_budget } => {
+            let mut fields = vec![
+                ("type", Json::from("scheme")),
+                ("solver", Json::from(solver.spec_string())),
+                ("schedule", schedule.to_json()),
+                ("nfe", Json::from(*nfe)),
+            ];
+            if let Some(b) = nfe_budget {
+                fields.push(("nfe_budget", Json::from(*b)));
+            }
+            Json::obj(fields)
+        }
+        SolverCfg::Exact { window_ratio, slack, max_events } => {
+            let mut fields = vec![
+                ("type", Json::from("exact")),
+                ("window_ratio", Json::Num(*window_ratio)),
+                ("slack", Json::Num(*slack)),
+            ];
+            if let Some(m) = max_events {
+                fields.push(("max_events", Json::from(*m)));
+            }
+            Json::obj(fields)
+        }
+    };
+    Json::obj(vec![
+        ("family", Json::from(spec.family())),
+        ("n_samples", Json::from(spec.n_samples())),
+        ("seed", Json::from(spec.seed())),
+        ("solver", solver),
+    ])
+}
+
+/// Full v2 request envelope for a verb (`generate` / `generate_stream`).
+pub fn request_to_json(cmd: &str, spec: &SamplingSpec) -> Json {
+    Json::obj(vec![
+        ("v", Json::from(PROTOCOL_VERSION)),
+        ("cmd", Json::from(cmd)),
+        ("spec", spec_to_json(spec)),
+    ])
+}
+
+/// Error response body for a typed spec error (v1 clients ignore the extra
+/// `code` field; v2 clients can dispatch on it).
+pub fn spec_error_json(e: &SpecError) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::from(format!("{e}"))),
+        ("code", Json::from(e.code())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v2_round_trip_bit_exact() {
+        let specs = vec![
+            SamplingSpec::builder().build().unwrap(),
+            SamplingSpec::builder()
+                .family("toy")
+                .n_samples(3)
+                .seed(u64::MAX - 7)
+                .solver(Solver::Trapezoidal { theta: 0.37 })
+                .nfe(64)
+                .schedule(ScheduleSpec::Adaptive { tol: 1.7e-3 })
+                .nfe_budget(Some(48))
+                .build()
+                .unwrap(),
+            SamplingSpec::builder()
+                .solver(Solver::Exact)
+                .window_ratio(Some(0.61))
+                .slack(Some(3.3))
+                .max_events(Some(1000))
+                .build()
+                .unwrap(),
+        ];
+        for spec in specs {
+            let j = spec_to_json(&spec);
+            let back = spec_from_json(&j).unwrap();
+            assert_eq!(back, spec, "{}", j.to_string());
+            // Through text (the actual wire) too.
+            let re = Json::parse(&j.to_string()).unwrap();
+            assert_eq!(spec_from_json(&re).unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn v1_upgrade_shim_matches_flat_fields() {
+        let j = Json::parse(
+            r#"{"cmd": "generate", "solver": "trapezoidal:0.5", "nfe": 64,
+                "schedule": "adaptive:tol=1e-3", "nfe_budget": 48,
+                "n_samples": 2, "seed": 7, "family": "markov"}"#,
+        )
+        .unwrap();
+        let p = request_from_json(&j).unwrap();
+        let echo = p.v1.expect("flat requests are v1");
+        assert_eq!(p.spec.solver(), Solver::Trapezoidal { theta: 0.5 });
+        assert_eq!(p.spec.nfe(), 64);
+        assert_eq!(p.spec.n_samples(), 2);
+        assert_eq!(p.spec.seed(), 7);
+        assert_eq!(p.spec.schedule(), ScheduleSpec::Adaptive { tol: 1e-3 });
+        assert_eq!(p.spec.nfe_budget(), Some(48));
+        assert_eq!(echo.schedule, ScheduleSpec::Adaptive { tol: 1e-3 });
+        assert_eq!(echo.nfe_budget, Some(48));
+        assert_eq!(echo.window_ratio, None);
+
+        // v2 envelope of the upgraded spec parses to the same spec.
+        let v2 = request_to_json("generate", &p.spec);
+        let p2 = request_from_json(&Json::parse(&v2.to_string()).unwrap()).unwrap();
+        assert!(p2.v1.is_none());
+        assert_eq!(p2.spec, p.spec);
+    }
+
+    #[test]
+    fn invalid_requests_die_typed_at_the_boundary() {
+        // Knob mismatch via v1.
+        let j = Json::parse(r#"{"solver": "tau", "nfe": 8, "slack": 2.0}"#).unwrap();
+        let e = request_from_json(&j).unwrap_err();
+        assert_eq!(e.code(), "knob_needs_exact");
+        // "exact" routed through the scheme arm still builds an Exact spec
+        // (the builder owns the routing) ...
+        let j = Json::parse(
+            r#"{"v": 2, "spec": {"solver": {"type": "scheme", "solver": "exact", "nfe": 8}}}"#,
+        )
+        .unwrap();
+        let p = request_from_json(&j).unwrap();
+        assert_eq!(p.spec.solver(), Solver::Exact);
+        // ... but a budget on it is not representable.
+        let j = Json::parse(
+            r#"{"v": 2, "spec": {"solver": {"type": "scheme", "solver": "exact",
+                "nfe": 8, "nfe_budget": 4}}}"#,
+        )
+        .unwrap();
+        let e = request_from_json(&j).unwrap_err();
+        assert_eq!(e.code(), "budget_on_exact");
+        // θ range via v1 string.
+        let j = Json::parse(r#"{"solver": "rk2:0.8", "nfe": 16}"#).unwrap();
+        let e = request_from_json(&j).unwrap_err();
+        assert_eq!(e.code(), "parse_error");
+        assert!(format!("{e}").contains("theta"));
+        // Unknown version.
+        let j = Json::parse(r#"{"v": 3, "spec": {}}"#).unwrap();
+        assert!(request_from_json(&j).is_err());
+        // Missing required fields.
+        let j = Json::parse(r#"{"v": 2, "spec": {"solver": {"type": "scheme"}}}"#).unwrap();
+        assert!(request_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn seed_and_id_survive_above_2_53() {
+        let big = (1u64 << 53) + 12345;
+        let j = Json::parse(&format!(r#"{{"solver": "tau", "nfe": 8, "seed": {big}}}"#)).unwrap();
+        let p = request_from_json(&j).unwrap();
+        assert_eq!(p.spec.seed(), big);
+        // And back out through the v2 writer.
+        let re = Json::parse(&spec_to_json(&p.spec).to_string()).unwrap();
+        assert_eq!(re.get("seed").unwrap().as_u64().unwrap(), big);
+
+        // Malformed seeds are rejected instead of silently coerced to a
+        // DIFFERENT stream (the old f64 path sampled "seed": -1 as 0 and
+        // 1.5 as 1); integral floats still pass for legacy clients.
+        for bad in [r#"{"solver": "tau", "nfe": 8, "seed": -1}"#,
+                    r#"{"solver": "tau", "nfe": 8, "seed": 1.5}"#] {
+            let e = request_from_json(&Json::parse(bad).unwrap()).unwrap_err();
+            assert_eq!(e.code(), "parse_error", "{bad}");
+        }
+        let j = Json::parse(r#"{"solver": "tau", "nfe": 8, "seed": 7.0}"#).unwrap();
+        assert_eq!(request_from_json(&j).unwrap().spec.seed(), 7);
+    }
+}

@@ -1,11 +1,11 @@
 //! Dynamic batcher: packs sample lanes from compatible requests into
 //! fixed-shape artifact batches.
 //!
-//! Compatibility key = (family, solver, NFE, schedule, NFE budget): every
-//! lane of a batch must run the same step graph over the same time grid —
-//! for adaptive schedules, lanes of one batch vote on a single shared dt,
-//! so the controller parameters must also match.  Two policies (ablated in
-//! `exp::ablations`):
+//! Compatibility is decided by [`BatchKey::of`] over the request's typed
+//! spec — the key hashes the *resolved execution plan*
+//! ([`crate::api::ExecPlan`]), so lanes co-batch exactly when they would
+//! execute identically (same family, kernel, discretisation / exact-path
+//! configuration).  Two policies (ablated in `exp::ablations`):
 //!   - `Greedy`: dispatch as soon as any lane is available (min latency);
 //!   - `Timeout(ms)`: hold partially full batches up to a deadline to
 //!     improve occupancy (min cost per sample).
@@ -13,8 +13,11 @@
 use std::collections::{BTreeMap, VecDeque};
 use std::time::{Duration, Instant};
 
+use crate::api::SamplingSpec;
 use crate::coordinator::request::GenerateRequest;
-use crate::solvers::Solver;
+use crate::util::cancel::CancelToken;
+
+pub use crate::api::BatchKey;
 
 /// One sample lane of a request.
 #[derive(Clone, Debug)]
@@ -23,60 +26,10 @@ pub struct Lane {
     pub sample_idx: usize,
     pub seed: u64,
     pub enqueued: Instant,
-}
-
-#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
-pub struct BatchKey {
-    pub family_hash: u64,
-    pub solver_kind: u8,
-    /// theta bits (exact f64) for the two-stage solvers, 0 otherwise.
-    pub theta_bits: u64,
-    pub nfe: usize,
-    /// Schedule identity ([`crate::schedule::ScheduleSpec::key_bits`]).
-    pub schedule_kind: u8,
-    pub schedule_bits: u64,
-    /// Hard NFE budget + 1 (0 = unbudgeted).
-    pub budget_plus1: u64,
-    /// Exact-path knob identity (effective-value bits for exact lanes,
-    /// 0 otherwise): lanes of one exact batch must share the knobs the
-    /// scheduler threads through to the simulator.
-    pub exact_wr_bits: u64,
-    pub exact_slack_bits: u64,
-}
-
-impl BatchKey {
-    pub fn of(req: &GenerateRequest) -> BatchKey {
-        let (kind, theta) = match req.solver {
-            Solver::Euler => (0u8, 0.0),
-            Solver::TauLeaping => (1, 0.0),
-            Solver::Tweedie => (2, 0.0),
-            Solver::Trapezoidal { theta } => (3, theta),
-            Solver::Rk2 { theta } => (4, theta),
-            Solver::ParallelDecoding => (5, 0.0),
-            Solver::Exact => (6, 0.0),
-        };
-        let (schedule_kind, schedule_bits) = req.schedule.key_bits();
-        // Key on the EFFECTIVE knob values (request or default) so an
-        // explicit request for the defaults co-batches with a knob-free one.
-        let (exact_wr_bits, exact_slack_bits) = match req.solver {
-            Solver::Exact => {
-                let cfg = req.exact_cfg();
-                (cfg.window_ratio.to_bits(), cfg.slack.to_bits())
-            }
-            _ => (0, 0),
-        };
-        BatchKey {
-            family_hash: crate::testkit::fnv1a(&req.family),
-            solver_kind: kind,
-            theta_bits: theta.to_bits(),
-            nfe: req.nfe,
-            schedule_kind,
-            schedule_bits,
-            budget_plus1: req.nfe_budget.map(|b| b as u64 + 1).unwrap_or(0),
-            exact_wr_bits,
-            exact_slack_bits,
-        }
-    }
+    /// The request's cancel token (a never-token for non-cancellable
+    /// submissions): exact lanes poll it individually; lock-step scheme
+    /// batches poll it when the whole batch shares one token.
+    pub cancel: CancelToken,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -89,7 +42,7 @@ pub struct DynamicBatcher {
     pub policy: BatchPolicy,
     /// Artifact batch size (lanes per dispatch).
     pub max_lanes: usize,
-    queues: BTreeMap<BatchKey, VecDeque<(Lane, GenerateRequest)>>,
+    queues: BTreeMap<BatchKey, VecDeque<(Lane, SamplingSpec)>>,
     pub enqueued_lanes: usize,
 }
 
@@ -99,27 +52,32 @@ impl DynamicBatcher {
         Self { policy, max_lanes, queues: BTreeMap::new(), enqueued_lanes: 0 }
     }
 
-    /// Split a request into lanes and enqueue them.
-    pub fn enqueue(&mut self, req: GenerateRequest) {
-        let key = BatchKey::of(&req);
+    /// Split a request into lanes and enqueue them.  `cancel` is the
+    /// request's token (pass [`CancelToken::never`] for non-cancellable
+    /// submissions).
+    pub fn enqueue(&mut self, req: GenerateRequest, cancel: CancelToken) {
+        let key = BatchKey::of(&req.spec);
         let q = self.queues.entry(key).or_default();
-        for sample_idx in 0..req.n_samples {
+        for sample_idx in 0..req.spec.n_samples() {
             let lane = Lane {
                 request_id: req.id,
                 sample_idx,
-                // Per-lane stream: request seed + lane index spread.
-                seed: req
-                    .seed
-                    .wrapping_add((sample_idx as u64).wrapping_mul(0x9E3779B97F4A7C15)),
+                // Per-lane stream: request seed + lane index spread
+                // (the spec owns the stride — part of the wire contract).
+                seed: req.spec.lane_seed(sample_idx),
                 enqueued: Instant::now(),
+                cancel: cancel.clone(),
             };
-            q.push_back((lane, req.clone()));
+            q.push_back((lane, req.spec.clone()));
             self.enqueued_lanes += 1;
         }
     }
 
-    /// Pop the next dispatchable batch under the policy, if any.
-    pub fn next_batch(&mut self, now: Instant) -> Option<(BatchKey, GenerateRequest, Vec<Lane>)> {
+    /// Pop the next dispatchable batch under the policy, if any.  The
+    /// returned spec is the prototype every lane of the batch shares — by
+    /// key construction, all co-batched specs have identical execution
+    /// plans, so any of them serves.
+    pub fn next_batch(&mut self, now: Instant) -> Option<(BatchKey, SamplingSpec, Vec<Lane>)> {
         let key = {
             let mut chosen: Option<BatchKey> = None;
             for (key, q) in self.queues.iter() {
@@ -145,8 +103,8 @@ impl DynamicBatcher {
         let mut lanes = Vec::with_capacity(take);
         let mut proto = None;
         for _ in 0..take {
-            let (lane, req) = q.pop_front().unwrap();
-            proto.get_or_insert(req);
+            let (lane, spec) = q.pop_front().unwrap();
+            proto.get_or_insert(spec);
             lanes.push(lane);
             self.enqueued_lanes -= 1;
         }
@@ -155,6 +113,21 @@ impl DynamicBatcher {
 
     pub fn pending(&self) -> usize {
         self.enqueued_lanes
+    }
+
+    /// Drop every still-queued lane of a request (the request failed or
+    /// was aborted — executing its remaining lanes would be wasted work
+    /// landing in an assembler entry that no longer exists).  Returns the
+    /// number of lanes removed.
+    pub fn purge_request(&mut self, request_id: u64) -> usize {
+        let mut removed = 0usize;
+        for q in self.queues.values_mut() {
+            let before = q.len();
+            q.retain(|(lane, _)| lane.request_id != request_id);
+            removed += before - q.len();
+        }
+        self.enqueued_lanes -= removed;
+        removed
     }
 
     /// Mean occupancy a dispatch would get right now (metrics).
@@ -175,56 +148,73 @@ impl DynamicBatcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::schedule::ScheduleSpec;
+    use crate::solvers::Solver;
 
     fn req(id: u64, solver: Solver, nfe: usize, n: usize) -> GenerateRequest {
-        GenerateRequest {
+        GenerateRequest::new(
             id,
-            family: "markov".into(),
-            solver,
-            nfe,
-            n_samples: n,
-            seed: id * 100,
-            ..Default::default()
-        }
+            SamplingSpec::builder()
+                .solver(solver)
+                .nfe(nfe)
+                .n_samples(n)
+                .seed(id * 100)
+                .build()
+                .unwrap(),
+        )
+    }
+
+    fn enq(b: &mut DynamicBatcher, r: GenerateRequest) {
+        b.enqueue(r, CancelToken::never());
     }
 
     #[test]
     fn schedule_and_budget_split_keys() {
-        use crate::schedule::ScheduleSpec;
         let base = req(1, Solver::Trapezoidal { theta: 0.5 }, 32, 1);
-        let mut adaptive = base.clone();
-        adaptive.schedule = ScheduleSpec::Adaptive { tol: 1e-3 };
-        let mut budgeted = base.clone();
-        budgeted.nfe_budget = Some(32);
-        assert_ne!(BatchKey::of(&base), BatchKey::of(&adaptive));
-        assert_ne!(BatchKey::of(&base), BatchKey::of(&budgeted));
-        assert_eq!(BatchKey::of(&base), BatchKey::of(&base.clone()));
-        let mut adaptive2 = adaptive.clone();
-        adaptive2.schedule = ScheduleSpec::Adaptive { tol: 2e-3 };
-        assert_ne!(BatchKey::of(&adaptive), BatchKey::of(&adaptive2));
+        let adaptive = GenerateRequest::new(
+            2,
+            SamplingSpec::builder()
+                .solver(Solver::Trapezoidal { theta: 0.5 })
+                .nfe(32)
+                .schedule(ScheduleSpec::Adaptive { tol: 1e-3 })
+                .build()
+                .unwrap(),
+        );
+        let budgeted = GenerateRequest::new(
+            3,
+            SamplingSpec::builder()
+                .solver(Solver::Trapezoidal { theta: 0.5 })
+                .nfe(32)
+                .nfe_budget(Some(17))
+                .build()
+                .unwrap(),
+        );
+        assert_ne!(BatchKey::of(&base.spec), BatchKey::of(&adaptive.spec));
+        assert_ne!(BatchKey::of(&base.spec), BatchKey::of(&budgeted.spec));
+        assert_eq!(BatchKey::of(&base.spec), BatchKey::of(&base.spec.clone()));
     }
 
     #[test]
     fn greedy_dispatches_immediately() {
         let mut b = DynamicBatcher::new(BatchPolicy::Greedy, 8);
-        b.enqueue(req(1, Solver::TauLeaping, 32, 3));
+        enq(&mut b, req(1, Solver::TauLeaping, 32, 3));
         let (_, proto, lanes) = b.next_batch(Instant::now()).unwrap();
         assert_eq!(lanes.len(), 3);
-        assert_eq!(proto.id, 1);
+        assert_eq!(proto.n_samples(), 3);
         assert!(b.next_batch(Instant::now()).is_none());
     }
 
     #[test]
     fn batches_group_by_key_only() {
         let mut b = DynamicBatcher::new(BatchPolicy::Greedy, 8);
-        b.enqueue(req(1, Solver::TauLeaping, 32, 2));
-        b.enqueue(req(2, Solver::TauLeaping, 32, 2));
-        b.enqueue(req(3, Solver::Euler, 32, 2));
+        enq(&mut b, req(1, Solver::TauLeaping, 32, 2));
+        enq(&mut b, req(2, Solver::TauLeaping, 32, 2));
+        enq(&mut b, req(3, Solver::Euler, 32, 2));
         // Two batches total (key order is unspecified): tau lanes from
         // requests 1 and 2 co-batch; euler stays separate.
         let mut batches = Vec::new();
         while let Some((_, proto, lanes)) = b.next_batch(Instant::now()) {
-            batches.push((proto.solver, lanes));
+            batches.push((proto.solver(), lanes));
         }
         assert_eq!(batches.len(), 2);
         let tau = batches
@@ -239,32 +229,49 @@ mod tests {
     }
 
     #[test]
-    fn exact_knobs_split_keys_only_for_exact() {
+    fn resolved_grids_co_batch_across_raw_nfe() {
+        // nfe=64 and nfe=65 resolve to the same 32-step uniform grid for a
+        // two-stage scheme: their lanes must share one batch (the
+        // pre-redesign raw-NFE key split them for no execution reason).
+        let mut b = DynamicBatcher::new(BatchPolicy::Greedy, 8);
+        enq(&mut b, req(1, Solver::Trapezoidal { theta: 0.5 }, 64, 2));
+        enq(&mut b, req(2, Solver::Trapezoidal { theta: 0.5 }, 65, 2));
+        let (_, _, lanes) = b.next_batch(Instant::now()).unwrap();
+        assert_eq!(lanes.len(), 4, "equal resolved plans must co-batch");
+        assert!(b.next_batch(Instant::now()).is_none());
+    }
+
+    #[test]
+    fn exact_knobs_split_keys_with_resolution() {
         use crate::ctmc::uniformization::{DEFAULT_SLACK, DEFAULT_WINDOW_RATIO};
         let base = req(1, Solver::Exact, 16, 1);
-        let mut tuned = base.clone();
-        tuned.slack = Some(2.0);
-        assert_ne!(BatchKey::of(&base), BatchKey::of(&tuned));
-        let mut ratio = base.clone();
-        ratio.window_ratio = Some(0.9);
-        assert_ne!(BatchKey::of(&base), BatchKey::of(&ratio));
-        // Explicit defaults co-batch with knob-free exact requests.
-        let mut explicit = base.clone();
-        explicit.window_ratio = Some(DEFAULT_WINDOW_RATIO);
-        explicit.slack = Some(DEFAULT_SLACK);
-        assert_eq!(BatchKey::of(&base), BatchKey::of(&explicit));
-        // Knobs are inert (zeroed) in non-exact keys.
-        let mut tau = req(2, Solver::TauLeaping, 16, 1);
-        let k1 = BatchKey::of(&tau);
-        tau.slack = Some(9.0);
-        assert_eq!(k1, BatchKey::of(&tau));
+        let tuned = GenerateRequest::new(
+            2,
+            SamplingSpec::builder()
+                .solver(Solver::Exact)
+                .slack(Some(8.0))
+                .build()
+                .unwrap(),
+        );
+        assert_ne!(BatchKey::of(&base.spec), BatchKey::of(&tuned.spec));
+        // Explicit defaults co-batch with knob-free exact requests: the
+        // builder resolves them to the identical spec.
+        let explicit = SamplingSpec::builder()
+            .solver(Solver::Exact)
+            .nfe(16)
+            .seed(100)
+            .window_ratio(Some(DEFAULT_WINDOW_RATIO))
+            .slack(Some(DEFAULT_SLACK))
+            .build()
+            .unwrap();
+        assert_eq!(BatchKey::of(&base.spec), BatchKey::of(&explicit));
     }
 
     #[test]
     fn theta_distinguishes_keys() {
-        let a = BatchKey::of(&req(1, Solver::Trapezoidal { theta: 0.5 }, 32, 1));
-        let b = BatchKey::of(&req(2, Solver::Trapezoidal { theta: 0.3 }, 32, 1));
-        let c = BatchKey::of(&req(3, Solver::Trapezoidal { theta: 0.5 }, 32, 1));
+        let a = BatchKey::of(&req(1, Solver::Trapezoidal { theta: 0.5 }, 32, 1).spec);
+        let b = BatchKey::of(&req(2, Solver::Trapezoidal { theta: 0.3 }, 32, 1).spec);
+        let c = BatchKey::of(&req(3, Solver::Trapezoidal { theta: 0.5 }, 32, 1).spec);
         assert_ne!(a, b);
         assert_eq!(a, c);
     }
@@ -272,7 +279,7 @@ mod tests {
     #[test]
     fn max_lanes_splits_large_requests() {
         let mut b = DynamicBatcher::new(BatchPolicy::Greedy, 4);
-        b.enqueue(req(1, Solver::TauLeaping, 16, 10));
+        enq(&mut b, req(1, Solver::TauLeaping, 16, 10));
         let (_, _, l1) = b.next_batch(Instant::now()).unwrap();
         let (_, _, l2) = b.next_batch(Instant::now()).unwrap();
         let (_, _, l3) = b.next_batch(Instant::now()).unwrap();
@@ -286,7 +293,7 @@ mod tests {
             BatchPolicy::Timeout(Duration::from_millis(50)),
             8,
         );
-        b.enqueue(req(1, Solver::TauLeaping, 16, 2));
+        enq(&mut b, req(1, Solver::TauLeaping, 16, 2));
         let now = Instant::now();
         assert!(b.next_batch(now).is_none(), "should hold under-full batch");
         let later = now + Duration::from_millis(60);
@@ -300,18 +307,33 @@ mod tests {
             BatchPolicy::Timeout(Duration::from_secs(100)),
             4,
         );
-        b.enqueue(req(1, Solver::TauLeaping, 16, 4));
+        enq(&mut b, req(1, Solver::TauLeaping, 16, 4));
         assert!(b.next_batch(Instant::now()).is_some());
     }
 
     #[test]
-    fn lane_seeds_distinct() {
+    fn purge_request_drops_only_that_requests_lanes() {
         let mut b = DynamicBatcher::new(BatchPolicy::Greedy, 8);
-        b.enqueue(req(1, Solver::TauLeaping, 16, 5));
+        enq(&mut b, req(1, Solver::TauLeaping, 16, 3));
+        enq(&mut b, req(2, Solver::TauLeaping, 16, 2));
+        assert_eq!(b.purge_request(1), 3);
+        assert_eq!(b.pending(), 2);
+        let (_, _, lanes) = b.next_batch(Instant::now()).unwrap();
+        assert!(lanes.iter().all(|l| l.request_id == 2));
+        assert_eq!(b.purge_request(99), 0);
+    }
+
+    #[test]
+    fn lane_seeds_distinct_and_tokens_shared() {
+        let mut b = DynamicBatcher::new(BatchPolicy::Greedy, 8);
+        let token = CancelToken::new();
+        b.enqueue(req(1, Solver::TauLeaping, 16, 5), token.clone());
         let (_, _, lanes) = b.next_batch(Instant::now()).unwrap();
         let mut seeds: Vec<u64> = lanes.iter().map(|l| l.seed).collect();
         seeds.sort_unstable();
         seeds.dedup();
         assert_eq!(seeds.len(), 5);
+        // Every lane of the request shares the request's token.
+        assert!(lanes.iter().all(|l| CancelToken::same(&l.cancel, &token)));
     }
 }

@@ -1,17 +1,36 @@
-//! The serving coordinator — L3's contribution: request router, dynamic
-//! batcher, step scheduler and metrics over the PJRT runtime.
+//! The serving coordinator — request router, dynamic batcher, step
+//! scheduler and metrics over the PJRT runtime.
 //!
 //! Architecture (all std threads + channels; tokio is not vendored):
 //!
 //! ```text
-//!   submit() ──channel──▶ coordinator thread
-//!                           │  DynamicBatcher (group lanes by key)
-//!                           │  run_batch_scored ──▶ generate_batch ──▶ ScoreSource
-//!                           │    (score artifact over PJRT, or local oracle;
-//!                           │     legacy fused step graphs as fallback)
-//!                           │  ResponseAssembler (reunite lanes)
-//!                           └──▶ per-request reply channels
+//!   submit_spec()/submit() ──channel──▶ coordinator thread
+//!        │ (JobHandle: id,                │  DynamicBatcher (group lanes
+//!        │  event stream,                 │    by BatchKey::of(spec))
+//!        │  cancel token)                 │  run_batch_scored ──▶ generate_batch
+//!        │                               │    (score artifact over PJRT, or
+//!   cancel(id) ──shared registry──▶      │     local oracle; legacy fused
+//!     fires the job's CancelToken        │     step graphs as fallback)
+//!     (polled inside the solver loops)   │  ResponseAssembler (reunite lanes)
+//!                                        └──▶ per-job event channels
+//!                                             (Lane chunks → Done/Failed)
 //! ```
+//!
+//! Every submission is a **job**: [`Coordinator::submit_spec`] returns a
+//! [`JobHandle`] carrying the id, an event receiver and a cancel token.
+//! Blocking `generate` is just `submit + wait`; the streaming server verb
+//! subscribes to the per-lane [`JobEvent::Lane`] chunks (emitted as each
+//! lane completes a dispatch, so a large request split across batches
+//! streams progressively); `cancel(id)` fires the token from any thread —
+//! the solver loops poll it per window, so even a long exact-simulation
+//! run winds down within one window and completes its job with a
+//! partial-result response.
+//!
+//! Validation happens **before** submission, at spec construction
+//! ([`crate::api::SpecBuilder`]): a coordinator never sees an invalid
+//! request, and the batch key is derived from the same resolved plan the
+//! scheduler executes, so intake re-validation (the pre-redesign
+//! workaround for under-encoding keys) is gone.
 //!
 //! Batching pays off *below* the request layer: every batch the
 //! `DynamicBatcher` emits is executed by `solvers::masked::generate_batch`,
@@ -28,25 +47,94 @@ pub mod state;
 pub mod metrics;
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
-pub use batcher::{BatchPolicy, DynamicBatcher};
+pub use batcher::{BatchKey, BatchPolicy, DynamicBatcher};
 pub use metrics::Metrics;
 pub use request::{GenerateRequest, GenerateResponse};
 
+pub use crate::api::{CancelToken, SamplingSpec};
+
 use crate::runtime::{ArtifactScore, Registry, RuntimeHandle};
 use crate::schedule::{ScheduleCache, ScheduleSpec};
-use crate::score::ScoreSource;
+use crate::score::{ScoreSource, Tok};
 use state::ResponseAssembler;
 
+/// One progress/completion event of a job.
+#[derive(Debug)]
+pub enum JobEvent {
+    /// A lane finished a dispatch (streamed jobs only): its sample index,
+    /// its tokens, the NFE it spent, and whether it was interrupted.
+    Lane { sample_idx: usize, tokens: Vec<Tok>, nfe: usize, partial: bool },
+    /// All lanes done — the assembled response (also carries `partial`).
+    Done(GenerateResponse),
+    /// The batch executing this job failed.
+    Failed(String),
+}
+
+/// Handle to a submitted job: the serving id (the `cancel` verb's key), a
+/// receiver of [`JobEvent`]s, and the job's cancel token.
+pub struct JobHandle {
+    pub id: u64,
+    events: Receiver<JobEvent>,
+    cancel: CancelToken,
+}
+
+impl JobHandle {
+    /// Fire the job's cancel token (cooperative: the run winds down at the
+    /// next solver window and completes with a partial response).
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+    }
+
+    /// Next event (blocking).
+    pub fn recv(&self) -> Result<JobEvent> {
+        self.events
+            .recv()
+            .map_err(|_| anyhow!("coordinator dropped the job channel"))
+    }
+
+    /// Drain events until completion and return the response.
+    pub fn wait(self) -> Result<GenerateResponse> {
+        loop {
+            match self.recv()? {
+                JobEvent::Lane { .. } => continue,
+                JobEvent::Done(resp) => return Ok(resp),
+                JobEvent::Failed(err) => bail!("{err}"),
+            }
+        }
+    }
+}
+
+struct Job {
+    id: u64,
+    spec: SamplingSpec,
+    events: Sender<JobEvent>,
+    stream: bool,
+    cancel: CancelToken,
+}
+
 enum Msg {
-    Submit(GenerateRequest, Sender<Result<GenerateResponse>>),
+    Submit(Job),
     Metrics(Sender<Metrics>),
     Shutdown,
+}
+
+/// State shared between coordinator handles and the loop thread: the id
+/// allocator and the cancel-token registry (`cancel` must work while the
+/// loop thread is busy executing a batch, so it bypasses the channel).
+struct Shared {
+    next_id: AtomicU64,
+    cancels: Mutex<BTreeMap<u64, CancelToken>>,
+}
+
+fn lock_cancels(shared: &Shared) -> std::sync::MutexGuard<'_, BTreeMap<u64, CancelToken>> {
+    shared.cancels.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 /// Where batches execute.
@@ -73,6 +161,7 @@ enum Backend {
 #[derive(Clone)]
 pub struct Coordinator {
     tx: Sender<Msg>,
+    shared: Arc<Shared>,
 }
 
 impl Coordinator {
@@ -137,27 +226,76 @@ impl Coordinator {
 
     fn spawn(backend: Backend, policy: BatchPolicy, max_lanes: usize) -> Coordinator {
         let (tx, rx) = channel::<Msg>();
+        let shared = Arc::new(Shared {
+            next_id: AtomicU64::new(1),
+            cancels: Mutex::new(BTreeMap::new()),
+        });
+        let loop_shared = Arc::clone(&shared);
         std::thread::Builder::new()
             .name("coordinator".into())
-            .spawn(move || coordinator_loop(backend, policy, max_lanes, rx))
+            .spawn(move || coordinator_loop(backend, policy, max_lanes, rx, loop_shared))
             .expect("spawning coordinator");
-        Coordinator { tx }
+        Coordinator { tx, shared }
     }
 
-    /// Submit a request; returns a receiver for the (single) response.
-    pub fn submit(&self, req: GenerateRequest) -> Receiver<Result<GenerateResponse>> {
-        let (reply, rx) = channel();
+    fn submit_internal(&self, id: u64, spec: SamplingSpec, stream: bool) -> JobHandle {
+        let cancel = CancelToken::new();
+        lock_cancels(&self.shared).insert(id, cancel.clone());
+        let (events_tx, events_rx) = channel();
         self.tx
-            .send(Msg::Submit(req, reply))
+            .send(Msg::Submit(Job {
+                id,
+                spec,
+                events: events_tx,
+                stream,
+                cancel: cancel.clone(),
+            }))
             .expect("coordinator thread is gone");
-        rx
+        JobHandle { id, events: events_rx, cancel }
+    }
+
+    /// Submit a spec as a blocking-style job (no per-lane events) with a
+    /// coordinator-assigned id.
+    pub fn submit_spec(&self, spec: SamplingSpec) -> JobHandle {
+        let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
+        self.submit_internal(id, spec, false)
+    }
+
+    /// Submit a spec as a streaming job: the handle receives a
+    /// [`JobEvent::Lane`] chunk for every completed lane, then `Done`.
+    pub fn submit_stream(&self, spec: SamplingSpec) -> JobHandle {
+        let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
+        self.submit_internal(id, spec, true)
+    }
+
+    /// Submit with a caller-chosen id (embedding users and tests; ids also
+    /// key the cancel registry, so keep them unique).
+    pub fn submit(&self, req: GenerateRequest) -> JobHandle {
+        self.submit_internal(req.id, req.spec, false)
     }
 
     /// Submit and wait.
     pub fn generate(&self, req: GenerateRequest) -> Result<GenerateResponse> {
-        self.submit(req)
-            .recv()
-            .map_err(|_| anyhow::anyhow!("coordinator dropped reply"))?
+        self.submit(req).wait()
+    }
+
+    /// Submit a spec and wait.
+    pub fn generate_spec(&self, spec: SamplingSpec) -> Result<GenerateResponse> {
+        self.submit_spec(spec).wait()
+    }
+
+    /// Fire the cancel token of an in-flight job.  Returns whether the id
+    /// was found (false = unknown id or already completed).  Cooperative:
+    /// the job still completes through its event channel, with `partial`
+    /// set on whatever the solver had produced.
+    pub fn cancel(&self, id: u64) -> bool {
+        match lock_cancels(&self.shared).get(&id) {
+            Some(token) => {
+                token.cancel();
+                true
+            }
+            None => false,
+        }
     }
 
     pub fn metrics(&self) -> Metrics {
@@ -176,7 +314,7 @@ impl Coordinator {
 /// Execute one packed batch on the backend.
 fn execute_batch(
     backend: &mut Backend,
-    proto: &GenerateRequest,
+    proto: &SamplingSpec,
     lanes: &[batcher::Lane],
 ) -> Result<scheduler::BatchResult> {
     match backend {
@@ -184,17 +322,17 @@ fn execute_batch(
             scheduler::run_batch_scored(score.as_ref(), proto, lanes, schedules)
         }
         Backend::Pjrt { runtime, registry, scores, schedules } => {
-            let score_name = format!("{}_score", proto.family);
+            let score_name = format!("{}_score", proto.family());
             if registry.get(&score_name).is_ok() {
-                let score = match scores.get(&proto.family) {
+                let score = match scores.get(proto.family()) {
                     Some(s) => Arc::clone(s),
                     None => {
                         let s = Arc::new(ArtifactScore::new(
                             runtime.clone(),
                             registry,
-                            &proto.family,
+                            proto.family(),
                         )?);
-                        scores.insert(proto.family.clone(), Arc::clone(&s));
+                        scores.insert(proto.family().to_string(), Arc::clone(&s));
                         s
                     }
                 };
@@ -210,18 +348,36 @@ fn execute_batch(
                 // Legacy path: fused per-step graphs over the uniform grid
                 // only (non-uniform schedules need the score-artifact or
                 // local backend).
-                if proto.schedule != ScheduleSpec::Uniform || proto.nfe_budget.is_some() {
+                if proto.schedule() != ScheduleSpec::Uniform || proto.nfe_budget().is_some() {
                     return Err(anyhow!(
                         "schedule {:?} requires a score artifact or local backend \
                          (family {:?} ships only fused step graphs)",
-                        proto.schedule.to_string_spec(),
-                        proto.family
+                        proto.schedule().to_string_spec(),
+                        proto.family()
                     ));
                 }
                 let plan = scheduler::StepPlan::build(registry, proto)?;
-                scheduler::run_batch(runtime, &plan, proto.solver, lanes)
+                scheduler::run_batch(runtime, &plan, proto.solver(), lanes)
             }
         }
+    }
+}
+
+/// Per-job sink state the loop thread keeps.
+struct Sink {
+    events: Sender<JobEvent>,
+    stream: bool,
+}
+
+fn finish_job(
+    jobs: &mut BTreeMap<u64, Sink>,
+    shared: &Shared,
+    id: u64,
+    event: JobEvent,
+) {
+    lock_cancels(shared).remove(&id);
+    if let Some(sink) = jobs.remove(&id) {
+        let _ = sink.events.send(event);
     }
 }
 
@@ -230,10 +386,11 @@ fn coordinator_loop(
     policy: BatchPolicy,
     max_lanes: usize,
     rx: Receiver<Msg>,
+    shared: Arc<Shared>,
 ) {
     let mut batcher = DynamicBatcher::new(policy, max_lanes);
     let mut assembler = ResponseAssembler::new();
-    let mut replies: BTreeMap<u64, Sender<Result<GenerateResponse>>> = BTreeMap::new();
+    let mut jobs: BTreeMap<u64, Sink> = BTreeMap::new();
     let mut metrics = Metrics::new();
     let started = Instant::now();
     let now_ms = |s: Instant| s.elapsed().as_secs_f64() * 1e3;
@@ -251,22 +408,14 @@ fn coordinator_loop(
             } else {
                 deadline
             }) {
-                Ok(Msg::Submit(req, reply)) => {
-                    // Validate at intake, before batching: a batch must
-                    // never mix valid and invalid requests — the batch key
-                    // does not encode every validated field, so per-batch
-                    // validation of the proto request could reject a valid
-                    // co-batched neighbour or let an invalid request ride
-                    // a valid proto.
-                    if let Err(err) = scheduler::validate_request(&req) {
-                        let _ = reply.send(Err(err));
-                        continue;
-                    }
+                Ok(Msg::Submit(job)) => {
+                    // The spec is valid by construction (builder-only), so
+                    // intake is pure bookkeeping.
                     metrics.requests += 1;
-                    metrics.lanes += req.n_samples as u64;
-                    assembler.register(req.id, req.n_samples, now_ms(started));
-                    replies.insert(req.id, reply);
-                    batcher.enqueue(req);
+                    metrics.lanes += job.spec.n_samples() as u64;
+                    assembler.register(job.id, job.spec.n_samples(), now_ms(started));
+                    jobs.insert(job.id, Sink { events: job.events, stream: job.stream });
+                    batcher.enqueue(GenerateRequest::new(job.id, job.spec), job.cancel);
                 }
                 Ok(Msg::Metrics(reply)) => {
                     let _ = reply.send(metrics.clone());
@@ -294,39 +443,65 @@ fn coordinator_loop(
                     .queue_wait_ms
                     .push(lane.enqueued.elapsed().as_secs_f64() * 1e3);
             }
+            // Jobs cancelled while still queued are NOT special-cased:
+            // the solver loops poll the token before the first window, so
+            // a pre-cancelled lane costs only its (all-masked) init and
+            // comes back with the correct sequence shape — still-masked
+            // positions carrying the mask id, exactly the partial-result
+            // contract.  Fabricating empty sequences here would break it.
             let outcome = execute_batch(&mut backend, &proto, &lanes);
             match outcome {
                 Ok(result) => {
                     metrics.nfe_total += result.nfe.iter().sum::<usize>() as u64;
-                    for ((lane, toks), &nfe) in
-                        lanes.iter().zip(result.tokens).zip(&result.nfe)
+                    let scheduler::BatchResult { tokens, nfe, partial } = result;
+                    for (idx, (lane, toks)) in
+                        lanes.iter().zip(tokens.into_iter()).enumerate()
                     {
+                        let lane_nfe = nfe[idx];
+                        let lane_partial = partial[idx];
+                        if let Some(sink) = jobs.get(&lane.request_id) {
+                            if sink.stream {
+                                let _ = sink.events.send(JobEvent::Lane {
+                                    sample_idx: lane.sample_idx,
+                                    tokens: toks.clone(),
+                                    nfe: lane_nfe,
+                                    partial: lane_partial,
+                                });
+                            }
+                        }
                         if let Some(resp) = assembler.complete_lane(
                             lane.request_id,
                             lane.sample_idx,
                             toks,
-                            nfe,
+                            lane_nfe,
+                            lane_partial,
                             now_ms(started),
                         ) {
                             metrics.latency_ms.push(resp.latency_ms);
-                            if let Some(tx) = replies.remove(&resp.id) {
-                                let _ = tx.send(Ok(resp));
-                            }
+                            finish_job(&mut jobs, &shared, resp.id, JobEvent::Done(resp));
                         }
                     }
                 }
                 Err(err) => {
-                    // Fail every request touched by this batch.
+                    // Fail every request touched by this batch — and clean
+                    // it up fully: discard its assembler state (a leaked
+                    // Pending entry would grow the long-lived coordinator
+                    // on every failing request) and purge its still-queued
+                    // lanes (they would execute into a request that no
+                    // longer exists).
                     let mut failed: Vec<u64> =
                         lanes.iter().map(|l| l.request_id).collect();
                     failed.sort_unstable();
                     failed.dedup();
                     for id in failed {
-                        if let Some(tx) = replies.remove(&id) {
-                            let _ = tx.send(Err(anyhow::anyhow!(
-                                "batch execution failed: {err:#}"
-                            )));
-                        }
+                        assembler.abort(id);
+                        batcher.purge_request(id);
+                        finish_job(
+                            &mut jobs,
+                            &shared,
+                            id,
+                            JobEvent::Failed(format!("batch execution failed: {err:#}")),
+                        );
                     }
                 }
             }
@@ -337,6 +512,7 @@ fn coordinator_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::score::hmm::HmmUniformOracle;
     use crate::score::markov::{MarkovChain, MarkovOracle};
     use crate::solvers::{grid, masked, Solver};
     use crate::util::rng::Xoshiro256;
@@ -359,15 +535,16 @@ mod tests {
     }
 
     fn req(id: u64, solver: Solver, nfe: usize, n: usize, seed: u64) -> GenerateRequest {
-        GenerateRequest {
+        GenerateRequest::new(
             id,
-            family: "markov".into(),
-            solver,
-            nfe,
-            n_samples: n,
-            seed,
-            ..Default::default()
-        }
+            SamplingSpec::builder()
+                .solver(solver)
+                .nfe(nfe)
+                .n_samples(n)
+                .seed(seed)
+                .build()
+                .unwrap(),
+        )
     }
 
     #[test]
@@ -377,32 +554,45 @@ mod tests {
         let solver = Solver::Trapezoidal { theta: 0.5 };
 
         // Adaptive with a hard budget: all lanes finish, nobody overdraws.
-        let mut r = req(1, solver, 64, 3, 7);
-        r.schedule = ScheduleSpec::Adaptive { tol: 1e-3 };
-        r.nfe_budget = Some(24);
-        let resp = c.generate(r).unwrap();
+        let spec = SamplingSpec::builder()
+            .solver(solver)
+            .nfe(64)
+            .n_samples(3)
+            .seed(7)
+            .schedule(ScheduleSpec::Adaptive { tol: 1e-3 })
+            .nfe_budget(Some(24))
+            .build()
+            .unwrap();
+        let resp = c.generate_spec(spec).unwrap();
         assert_eq!(resp.sequences.len(), 3);
         for s in &resp.sequences {
             assert!(s.iter().all(|&t| t < 6), "masks left: {s:?}");
         }
         assert!(resp.nfe_used <= 24, "budget exceeded: {}", resp.nfe_used);
+        assert!(!resp.partial);
 
         // Tuned: fit-on-first-use, then cache hit; deterministic replay.
-        let mut r = req(2, solver, 16, 2, 9);
-        r.schedule = ScheduleSpec::Tuned { steps: 8 };
-        let a = c.generate(r.clone()).unwrap();
-        r.id = 3;
-        let b = c.generate(r).unwrap();
+        let spec = SamplingSpec::builder()
+            .solver(solver)
+            .nfe(16)
+            .n_samples(2)
+            .seed(9)
+            .schedule(ScheduleSpec::Tuned { steps: 8 })
+            .build()
+            .unwrap();
+        let a = c.generate_spec(spec.clone()).unwrap();
+        let b = c.generate_spec(spec).unwrap();
         assert_eq!(a.sequences, b.sequences, "tuned grid must be cached + reused");
 
-        // Adaptive with a one-stage solver is a clean error, not a panic.
-        let mut r = req(4, Solver::TauLeaping, 16, 1, 0);
-        r.schedule = ScheduleSpec::Adaptive { tol: 1e-3 };
-        assert!(c.generate(r).is_err());
-        // ... and the coordinator thread survived it.
-        let mut r = req(5, solver, 16, 1, 1);
-        r.schedule = ScheduleSpec::Log;
-        let resp = c.generate(r).unwrap();
+        // Log schedule still serves.
+        let spec = SamplingSpec::builder()
+            .solver(solver)
+            .nfe(16)
+            .seed(1)
+            .schedule(ScheduleSpec::Log)
+            .build()
+            .unwrap();
+        let resp = c.generate_spec(spec).unwrap();
         assert!(resp.sequences[0].iter().all(|&t| t < 6));
         c.shutdown();
     }
@@ -426,13 +616,6 @@ mod tests {
         // Same seed -> identical samples (per-lane seeded fhs streams).
         let again = c.generate(req(2, Solver::Exact, 16, 3, 11)).unwrap();
         assert_eq!(again.sequences, resp.sequences);
-
-        // Exact + hard budget is a clean error and the thread survives.
-        let mut r = req(3, Solver::Exact, 16, 1, 0);
-        r.nfe_budget = Some(8);
-        assert!(c.generate(r).is_err());
-        let ok = c.generate(req(4, Solver::Exact, 16, 1, 5)).unwrap();
-        assert_eq!(ok.sequences.len(), 1);
         c.shutdown();
     }
 
@@ -446,8 +629,14 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
         let solver = Solver::Trapezoidal { theta: 0.5 };
 
-        let mut r = req(1, solver, 16, 2, 9);
-        r.schedule = ScheduleSpec::Tuned { steps: 8 };
+        let spec = SamplingSpec::builder()
+            .solver(solver)
+            .nfe(16)
+            .n_samples(2)
+            .seed(9)
+            .schedule(ScheduleSpec::Tuned { steps: 8 })
+            .build()
+            .unwrap();
         let first = {
             let oracle = local_oracle(6, 20);
             let c = Coordinator::start_local_with_schedule_dir(
@@ -456,7 +645,7 @@ mod tests {
                 8,
                 Some(&dir),
             );
-            let resp = c.generate(r.clone()).unwrap();
+            let resp = c.generate_spec(spec.clone()).unwrap();
             c.shutdown();
             resp.sequences
         };
@@ -473,8 +662,7 @@ mod tests {
             8,
             Some(&dir),
         );
-        r.id = 2;
-        let resp = c.generate(r).unwrap();
+        let resp = c.generate_spec(spec).unwrap();
         assert_eq!(resp.sequences, first, "reloaded tuned grid must replay");
         c.shutdown();
         let _ = std::fs::remove_dir_all(&dir);
@@ -547,33 +735,87 @@ mod tests {
     }
 
     #[test]
-    fn invalid_request_rejected_at_intake_without_poisoning_batch() {
-        // Knobs on a non-exact solver are invalid, but their bits are
-        // zeroed out of non-exact batch keys — so an invalid request and a
-        // valid one land in the SAME queue.  Intake validation must reject
-        // the invalid one and leave its co-batched neighbour unharmed.
+    fn streaming_job_chunks_concatenate_to_blocking_response() {
+        // n_samples > max_lanes forces multiple dispatches: the streamed
+        // per-lane chunks, placed by sample index, must equal the blocking
+        // response for the same spec + seed bit for bit.
         let oracle = local_oracle(5, 12);
-        let c = Coordinator::start_local(oracle, BatchPolicy::Greedy, 8);
-        let mut bad = req(1, Solver::TauLeaping, 16, 2, 3);
-        bad.slack = Some(2.0);
-        let rx_bad = c.submit(bad);
-        let rx_good = c.submit(req(2, Solver::TauLeaping, 16, 2, 3));
-        let err = rx_bad.recv().unwrap().unwrap_err();
-        assert!(format!("{err:#}").contains("exact"), "{err:#}");
-        let good = rx_good.recv().unwrap().unwrap();
-        assert_eq!(good.sequences.len(), 2);
-        assert!(good.sequences.iter().all(|s| s.iter().all(|&t| t < 5)));
+        let c = Coordinator::start_local(oracle, BatchPolicy::Greedy, 2);
+        let spec = SamplingSpec::builder()
+            .solver(Solver::TauLeaping)
+            .nfe(16)
+            .n_samples(5)
+            .seed(42)
+            .build()
+            .unwrap();
+        let blocking = c.generate_spec(spec.clone()).unwrap();
+
+        let job = c.submit_stream(spec);
+        let mut chunks: Vec<Option<Vec<Tok>>> = vec![None; 5];
+        let mut n_chunks = 0usize;
+        let done = loop {
+            match job.recv().unwrap() {
+                JobEvent::Lane { sample_idx, tokens, partial, .. } => {
+                    assert!(!partial);
+                    assert!(chunks[sample_idx].replace(tokens).is_none(), "dup lane");
+                    n_chunks += 1;
+                }
+                JobEvent::Done(resp) => break resp,
+                JobEvent::Failed(e) => panic!("{e}"),
+            }
+        };
+        assert_eq!(n_chunks, 5, "every lane must stream exactly once");
+        let assembled: Vec<Vec<Tok>> = chunks.into_iter().map(Option::unwrap).collect();
+        assert_eq!(assembled, blocking.sequences, "chunks must concatenate bitwise");
+        assert_eq!(done.sequences, blocking.sequences);
+        assert_eq!(done.nfe_used, blocking.nfe_used);
         c.shutdown();
     }
 
     #[test]
-    fn local_backend_rejects_absurd_budget() {
-        let oracle = local_oracle(4, 8);
+    fn cancel_interrupts_long_exact_job_with_partial_result() {
+        // A large HMM exact job is the unbounded workload cancellation is
+        // for: fire the token mid-run and require a prompt partial Done.
+        let mut rng = Xoshiro256::seed_from_u64(29);
+        let chain = MarkovChain::generate(&mut rng, 6, 0.6);
+        let oracle = Arc::new(HmmUniformOracle::new(chain, 48));
         let c = Coordinator::start_local(oracle, BatchPolicy::Greedy, 4);
-        let err = c
-            .generate(req(1, Solver::Trapezoidal { theta: 0.5 }, 1, 1, 0))
-            .unwrap_err();
-        assert!(format!("{err:#}").contains("below one step"), "{err:#}");
+        let spec = SamplingSpec::builder()
+            .solver(Solver::Exact)
+            .n_samples(2)
+            .seed(3)
+            .build()
+            .unwrap();
+        let job = c.submit_stream(spec);
+        let id = job.id;
+        // Cancel from "another thread" (the handle's token IS the registry
+        // entry, but go through the coordinator API like the server does).
+        assert!(c.cancel(id), "in-flight job must be found");
+        let resp = job.wait().unwrap();
+        assert!(resp.partial, "cancelled run must be partial");
+        assert_eq!(resp.sequences.len(), 2);
+        // Completed job: the registry entry is gone.
+        assert!(!c.cancel(id), "completed job must be unknown to cancel");
+        c.shutdown();
+    }
+
+    #[test]
+    fn max_events_caps_exact_runs() {
+        let oracle = local_oracle(6, 20);
+        let c = Coordinator::start_local(oracle.clone(), BatchPolicy::Greedy, 8);
+        let spec = SamplingSpec::builder()
+            .solver(Solver::Exact)
+            .n_samples(2)
+            .seed(5)
+            .max_events(Some(4))
+            .build()
+            .unwrap();
+        let resp = c.generate_spec(spec).unwrap();
+        assert!(resp.partial, "20 dims cannot finish in 4 events");
+        for s in &resp.sequences {
+            let masked = s.iter().filter(|&&t| t == oracle.mask_id()).count();
+            assert!(masked >= 16, "at most 4 positions may reveal, {masked} masks");
+        }
         c.shutdown();
     }
 
@@ -582,12 +824,12 @@ mod tests {
         let Some(c) = coordinator(BatchPolicy::Greedy) else { return };
         // Same seed/solver twice -> identical sequences even when batched
         // with different partners.
-        let rx1 = c.submit(req(1, Solver::TauLeaping, 16, 2, 99));
-        let rx2 = c.submit(req(2, Solver::TauLeaping, 16, 4, 55));
-        let rx3 = c.submit(req(3, Solver::Euler, 16, 1, 1));
-        let r1 = rx1.recv().unwrap().unwrap();
-        let r2 = rx2.recv().unwrap().unwrap();
-        let r3 = rx3.recv().unwrap().unwrap();
+        let h1 = c.submit(req(1, Solver::TauLeaping, 16, 2, 99));
+        let h2 = c.submit(req(2, Solver::TauLeaping, 16, 4, 55));
+        let h3 = c.submit(req(3, Solver::Euler, 16, 1, 1));
+        let r1 = h1.wait().unwrap();
+        let r2 = h2.wait().unwrap();
+        let r3 = h3.wait().unwrap();
         assert_eq!(r1.sequences.len(), 2);
         assert_eq!(r2.sequences.len(), 4);
         assert_eq!(r3.sequences.len(), 1);
@@ -598,26 +840,16 @@ mod tests {
     }
 
     #[test]
-    fn rejects_absurd_budget() {
-        let Some(c) = coordinator(BatchPolicy::Greedy) else { return };
-        let err = c
-            .generate(req(1, Solver::Trapezoidal { theta: 0.5 }, 1, 1, 0))
-            .unwrap_err();
-        assert!(format!("{err:#}").contains("below one step"), "{err:#}");
-        c.shutdown();
-    }
-
-    #[test]
     fn timeout_policy_improves_occupancy() {
         let Some(c) = coordinator(BatchPolicy::Timeout(Duration::from_millis(30)))
         else {
             return;
         };
-        let rxs: Vec<_> = (0..4)
+        let handles: Vec<_> = (0..4)
             .map(|i| c.submit(req(i, Solver::TauLeaping, 16, 2, i)))
             .collect();
-        for rx in rxs {
-            rx.recv().unwrap().unwrap();
+        for h in handles {
+            h.wait().unwrap();
         }
         let m = c.metrics();
         // 8 lanes with batch size 8: with the hold-for-timeout policy these

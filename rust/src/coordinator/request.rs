@@ -1,110 +1,44 @@
 //! Request/response types of the serving layer.
+//!
+//! A request is just a serving id plus a typed [`SamplingSpec`] — the spec
+//! is valid by construction (see [`crate::api`]), so nothing downstream of
+//! this type re-validates anything.  The flat v1 JSON form and the
+//! structured v2 form both parse through [`crate::api::wire`].
 
-use crate::ctmc::uniformization::ExactCfg;
-use crate::schedule::ScheduleSpec;
+use crate::api::wire;
+use crate::api::SamplingSpec;
 use crate::score::Tok;
 use crate::solvers::Solver;
 use crate::util::json::Json;
 use anyhow::Result;
 
+/// One generation request in flight: the coordinator-assigned id plus the
+/// validated spec.
 #[derive(Clone, Debug)]
 pub struct GenerateRequest {
     pub id: u64,
-    /// Artifact family: "markov" (oracle score) or "transformer".
-    pub family: String,
-    pub solver: Solver,
-    /// Total score-evaluation budget per sample (the paper's NFE axis).
-    /// For fixed schedules it sets the step count; for adaptive schedules
-    /// it only seeds the initial step size.
-    pub nfe: usize,
-    pub n_samples: usize,
-    pub seed: u64,
-    /// Time-discretisation policy (`"schedule"` field; default uniform).
-    pub schedule: ScheduleSpec,
-    /// Optional HARD per-sample NFE cap (`"nfe_budget"` field): the run —
-    /// including the terminal denoise — never spends more.  Requires
-    /// `nfe_budget >= nfe_per_step + 1`.
-    pub nfe_budget: Option<usize>,
-    /// Exact-path knob (`"window_ratio"` field, [`Solver::Exact`] only):
-    /// geometric window ratio of the windowed uniformization, in (0, 1).
-    pub window_ratio: Option<f64>,
-    /// Exact-path knob (`"slack"` field, [`Solver::Exact`] only): thinning
-    /// safety factor >= 1 applied to evaluated window bounds.
-    pub slack: Option<f64>,
-}
-
-impl Default for GenerateRequest {
-    fn default() -> Self {
-        GenerateRequest {
-            id: 0,
-            family: "markov".into(),
-            solver: Solver::Tweedie,
-            nfe: 16,
-            n_samples: 1,
-            seed: 0,
-            schedule: ScheduleSpec::Uniform,
-            nfe_budget: None,
-            window_ratio: None,
-            slack: None,
-        }
-    }
+    pub spec: SamplingSpec,
 }
 
 impl GenerateRequest {
+    pub fn new(id: u64, spec: SamplingSpec) -> GenerateRequest {
+        GenerateRequest { id, spec }
+    }
+
+    /// Parse either wire form (flat v1 or `{"v":2,"spec":...}`) and attach
+    /// the id.  Kept for tests and embedding users; the server parses via
+    /// [`wire::request_from_json`] directly so it can keep the v1 echo.
     pub fn from_json(j: &Json, id: u64) -> Result<GenerateRequest> {
-        let solver = Solver::parse(j.get("solver")?.as_str()?)?;
-        let schedule = j
-            .opt("schedule")
-            .map(|s| -> Result<ScheduleSpec> { ScheduleSpec::parse(s.as_str()?) })
-            .transpose()?
-            .unwrap_or_default();
-        Ok(GenerateRequest {
-            id,
-            family: j
-                .opt("family")
-                .map(|f| f.as_str().map(str::to_string))
-                .transpose()?
-                .unwrap_or_else(|| "markov".to_string()),
-            solver,
-            nfe: j.get("nfe")?.as_usize()?,
-            n_samples: j.opt("n_samples").map(|v| v.as_usize()).transpose()?.unwrap_or(1),
-            seed: j.opt("seed").map(|v| v.as_f64()).transpose()?.unwrap_or(0.0) as u64,
-            schedule,
-            nfe_budget: j.opt("nfe_budget").map(|v| v.as_usize()).transpose()?,
-            window_ratio: j.opt("window_ratio").map(|v| v.as_f64()).transpose()?,
-            slack: j.opt("slack").map(|v| v.as_f64()).transpose()?,
-        })
+        let parsed = wire::request_from_json(j)?;
+        Ok(GenerateRequest { id, spec: parsed.spec })
     }
 
-    /// Effective exact-path knobs: request values where given, the library
-    /// defaults otherwise.  Also the batch-key identity for exact lanes.
-    pub fn exact_cfg(&self) -> ExactCfg {
-        let d = ExactCfg::default();
-        ExactCfg {
-            window_ratio: self.window_ratio.unwrap_or(d.window_ratio),
-            slack: self.slack.unwrap_or(d.slack),
-        }
-    }
-
+    /// Serialize as a v2 envelope (the canonical wire form going forward).
     pub fn to_json(&self) -> Json {
-        let mut fields = vec![
-            ("family", Json::from(self.family.as_str())),
-            ("solver", Json::from(solver_string(self.solver).as_str())),
-            ("nfe", Json::from(self.nfe)),
-            ("n_samples", Json::from(self.n_samples)),
-            ("seed", Json::from(self.seed as f64)),
-            ("schedule", Json::from(self.schedule.to_string_spec().as_str())),
-        ];
-        if let Some(b) = self.nfe_budget {
-            fields.push(("nfe_budget", Json::from(b)));
-        }
-        if let Some(w) = self.window_ratio {
-            fields.push(("window_ratio", Json::Num(w)));
-        }
-        if let Some(s) = self.slack {
-            fields.push(("slack", Json::Num(s)));
-        }
-        Json::obj(fields)
+        Json::obj(vec![
+            ("v", Json::from(wire::PROTOCOL_VERSION)),
+            ("spec", wire::spec_to_json(&self.spec)),
+        ])
     }
 }
 
@@ -119,6 +53,10 @@ pub struct GenerateResponse {
     /// Score evaluations actually spent per sample.
     pub nfe_used: usize,
     pub latency_ms: f64,
+    /// Set when the run was interrupted (cancel verb or `max_events`): the
+    /// sequences are whatever the solver had produced at the stop point —
+    /// still-masked positions keep the mask id (= vocab).
+    pub partial: bool,
 }
 
 impl GenerateResponse {
@@ -128,12 +66,18 @@ impl GenerateResponse {
             .iter()
             .map(|s| Json::Arr(s.iter().map(|&t| Json::Num(t as f64)).collect()))
             .collect();
-        Json::obj(vec![
-            ("id", Json::from(self.id as f64)),
+        let mut fields = vec![
+            ("id", Json::from(self.id)),
             ("sequences", Json::Arr(seqs)),
             ("nfe_used", Json::from(self.nfe_used)),
             ("latency_ms", Json::from(self.latency_ms)),
-        ])
+        ];
+        // Only present when set: complete responses keep the exact legacy
+        // shape (bit-compatibility of the v1 protocol).
+        if self.partial {
+            fields.push(("partial", Json::Bool(true)));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<GenerateResponse> {
@@ -149,10 +93,15 @@ impl GenerateResponse {
             })
             .collect::<Result<_>>()?;
         Ok(GenerateResponse {
-            id: j.get("id")?.as_f64()? as u64,
+            id: j.get("id")?.as_u64()?,
             sequences,
             nfe_used: j.get("nfe_used")?.as_usize()?,
             latency_ms: j.get("latency_ms")?.as_f64()?,
+            partial: j
+                .opt("partial")
+                .map(|p| p.as_bool())
+                .transpose()?
+                .unwrap_or(false),
         })
     }
 }
@@ -160,71 +109,37 @@ impl GenerateResponse {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::schedule::ScheduleSpec;
 
     #[test]
-    fn request_json_roundtrip() {
-        let r = GenerateRequest {
-            id: 7,
-            family: "markov".into(),
-            solver: Solver::Trapezoidal { theta: 0.5 },
-            nfe: 64,
-            n_samples: 3,
-            seed: 42,
-            schedule: ScheduleSpec::Adaptive { tol: 1e-3 },
-            nfe_budget: Some(48),
-            window_ratio: None,
-            slack: None,
-        };
-        let j = r.to_json();
-        let back = GenerateRequest::from_json(&j, 7).unwrap();
-        assert_eq!(back.solver, r.solver);
-        assert_eq!(back.nfe, 64);
-        assert_eq!(back.n_samples, 3);
-        assert_eq!(back.seed, 42);
-        assert_eq!(back.schedule, ScheduleSpec::Adaptive { tol: 1e-3 });
-        assert_eq!(back.nfe_budget, Some(48));
-        assert_eq!(back.window_ratio, None);
-        assert_eq!(back.slack, None);
+    fn request_round_trips_through_v2_envelope() {
+        let spec = SamplingSpec::builder()
+            .solver(Solver::Trapezoidal { theta: 0.5 })
+            .nfe(64)
+            .n_samples(3)
+            .seed(42)
+            .schedule(ScheduleSpec::Adaptive { tol: 1e-3 })
+            .nfe_budget(Some(48))
+            .build()
+            .unwrap();
+        let r = GenerateRequest::new(7, spec);
+        let back = GenerateRequest::from_json(&r.to_json(), 7).unwrap();
+        assert_eq!(back.spec, r.spec);
+        assert_eq!(back.id, 7);
     }
 
     #[test]
-    fn exact_knobs_roundtrip_and_default() {
+    fn v1_flat_requests_still_parse() {
         let j = Json::parse(
-            r#"{"solver": "exact", "nfe": 16, "window_ratio": 0.8, "slack": 2.5}"#,
-        )
-        .unwrap();
-        let r = GenerateRequest::from_json(&j, 1).unwrap();
-        assert_eq!(r.window_ratio, Some(0.8));
-        assert_eq!(r.slack, Some(2.5));
-        let back = GenerateRequest::from_json(&r.to_json(), 1).unwrap();
-        assert_eq!(back.window_ratio, Some(0.8));
-        assert_eq!(back.slack, Some(2.5));
-        assert_eq!(r.exact_cfg(), ExactCfg { window_ratio: 0.8, slack: 2.5 });
-
-        // Absent knobs resolve to the library defaults.
-        let j = Json::parse(r#"{"solver": "exact", "nfe": 16}"#).unwrap();
-        let r = GenerateRequest::from_json(&j, 2).unwrap();
-        assert_eq!(r.window_ratio, None);
-        assert_eq!(r.exact_cfg(), ExactCfg::default());
-    }
-
-    #[test]
-    fn request_schedule_defaults_and_tuned_roundtrip() {
-        let j = Json::parse(r#"{"solver": "trapezoidal:0.5", "nfe": 32}"#).unwrap();
-        let r = GenerateRequest::from_json(&j, 1).unwrap();
-        assert_eq!(r.schedule, ScheduleSpec::Uniform);
-        assert_eq!(r.nfe_budget, None);
-        let j = Json::parse(
-            r#"{"solver": "trapezoidal:0.5", "nfe": 32,
-                "schedule": "tuned:steps=12", "nfe_budget": 24}"#,
+            r#"{"cmd": "generate", "solver": "trapezoidal:0.5", "nfe": 32,
+                "schedule": "tuned:steps=12", "nfe_budget": 24, "seed": 9}"#,
         )
         .unwrap();
         let r = GenerateRequest::from_json(&j, 2).unwrap();
-        assert_eq!(r.schedule, ScheduleSpec::Tuned { steps: 12 });
-        assert_eq!(r.nfe_budget, Some(24));
-        let back = GenerateRequest::from_json(&r.to_json(), 2).unwrap();
-        assert_eq!(back.schedule, r.schedule);
-        assert_eq!(back.nfe_budget, r.nfe_budget);
+        assert_eq!(r.spec.solver(), Solver::Trapezoidal { theta: 0.5 });
+        assert_eq!(r.spec.schedule(), ScheduleSpec::Tuned { steps: 12 });
+        assert_eq!(r.spec.nfe_budget(), Some(24));
+        assert_eq!(r.spec.seed(), 9);
         assert!(GenerateRequest::from_json(
             &Json::parse(r#"{"solver": "tau", "nfe": 8, "schedule": "bogus"}"#).unwrap(),
             3
@@ -235,23 +150,27 @@ mod tests {
     #[test]
     fn response_json_roundtrip() {
         let r = GenerateResponse {
-            id: 3,
+            id: u64::MAX - 3,
             sequences: vec![vec![1, 2, 3], vec![4, 5, 6]],
             nfe_used: 32,
             latency_ms: 12.5,
+            partial: false,
         };
-        let back = GenerateResponse::from_json(&r.to_json()).unwrap();
+        let back = GenerateResponse::from_json(&Json::parse(&r.to_json().to_string()).unwrap())
+            .unwrap();
         assert_eq!(back.sequences, r.sequences);
         assert_eq!(back.nfe_used, 32);
-    }
-
-    #[test]
-    fn request_defaults() {
-        let j = Json::parse(r#"{"solver": "tau", "nfe": 16}"#).unwrap();
-        let r = GenerateRequest::from_json(&j, 1).unwrap();
-        assert_eq!(r.family, "markov");
-        assert_eq!(r.n_samples, 1);
-        assert_eq!(r.solver, Solver::TauLeaping);
+        // u64 ids survive the wire losslessly (the old f64 path corrupted
+        // anything above 2^53).
+        assert_eq!(back.id, u64::MAX - 3);
+        assert!(!back.partial);
+        // Partial responses carry the marker; complete ones omit it so the
+        // legacy v1 shape is byte-identical.
+        assert!(!r.to_json().to_string().contains("partial"));
+        let p = GenerateResponse { partial: true, ..r };
+        let t = p.to_json().to_string();
+        assert!(t.contains("\"partial\":true"), "{t}");
+        assert!(GenerateResponse::from_json(&Json::parse(&t).unwrap()).unwrap().partial);
     }
 
     #[test]

@@ -11,238 +11,139 @@
 //!   L2, so a trapezoidal step is still one dispatch but counts 2 NFE).
 //!   Lanes shorter than the artifact batch are padded with dummy lanes.
 //!
+//! **No validation happens here.**  The scheduler consumes a
+//! [`SamplingSpec`], which is valid by construction (the builder at the
+//! wire boundary is the only constructor), and executes its *resolved plan*
+//! ([`SamplingSpec::plan`]) — the same plan the batch key hashes, so every
+//! co-batched lane runs under identical parameters by construction.  The
+//! pre-redesign scheduler validated flat knobs both here and at
+//! coordinator intake precisely because its key did not encode every
+//! validated field; that entire class of bug is now unrepresentable.
+//!
 //! In both paths each real lane draws from its own seeded stream, so a
-//! sample depends only on (request seed, sample index) — not on co-batching.
+//! sample depends only on (request seed, sample index) — not on
+//! co-batching.  Cancellation: exact lanes poll their own request's token
+//! per window/event; lock-step scheme batches poll the shared token when
+//! every lane belongs to one request (the common case for long runs).
 
 use anyhow::{bail, Result};
 
+use crate::api::{ExecPlan, SamplingSpec};
 use crate::coordinator::batcher::Lane;
-use crate::coordinator::request::GenerateRequest;
 use crate::runtime::{ArtifactSpec, Registry, RuntimeHandle, Value};
 use crate::schedule::adaptive::{AdaptiveController, NfeBudget, StepController};
-use crate::schedule::{ScheduleCache, ScheduleSpec, ScheduleTuner, TuneKey};
+use crate::schedule::{ScheduleCache, ScheduleTuner, TuneKey};
 use crate::score::{ScoreSource, Tok};
 use crate::solvers::{grid, masked, Solver};
+use crate::util::cancel::CancelToken;
 use crate::util::rng::{Rng, Xoshiro256};
 
-pub const DELTA: f64 = 1e-3;
-
-/// Upper bound on a client-requested tuned-grid step count (each distinct
-/// count triggers one offline tuner fit, so it must stay sane).
-pub const MAX_TUNED_STEPS: usize = 512;
+pub use crate::api::spec::{DELTA, MAX_TUNED_STEPS};
 
 /// Result of one batch pass: per-lane token sequences + NFE actually spent
-/// per lane (lanes can differ once the sparse path skips empty steps).
+/// per lane (lanes can differ once the sparse path skips empty steps) +
+/// per-lane partial markers (set when a lane was interrupted by a cancel
+/// token or the exact-path `max_events` cap).
 pub struct BatchResult {
     pub tokens: Vec<Vec<Tok>>,
     pub nfe: Vec<usize>,
+    pub partial: Vec<bool>,
 }
 
-/// Validate the client-controlled solver/budget parameters.  These must be
-/// rejected with an error, never allowed to reach the solver asserts (a
-/// panic here would kill the long-lived coordinator thread).  The
-/// coordinator ALSO runs this at request intake, before batching: the
-/// batch key does not encode every validated field (non-exact keys zero
-/// the knob bits, for instance), so per-batch validation on the proto
-/// request alone could reject a valid co-batched request or silently
-/// accept an invalid one.
-pub(crate) fn validate_request(req: &GenerateRequest) -> Result<()> {
-    match req.solver {
-        Solver::Trapezoidal { theta } if !(theta > 0.0 && theta < 1.0) => {
-            bail!("trapezoidal theta {theta} outside (0, 1) — second-order range of Thm. 5.4");
+/// The one cancel token a lock-step scheme batch polls: the request's
+/// token when every lane shares it, a never-token otherwise (scheme
+/// batches are NFE-bounded, so best-effort cancellation at batch
+/// granularity is acceptable for mixed batches; exact lanes are always
+/// individually cancellable).
+fn shared_token(lanes: &[Lane]) -> CancelToken {
+    match lanes.first() {
+        Some(first)
+            if lanes
+                .iter()
+                .all(|l| CancelToken::same(&l.cancel, &first.cancel)) =>
+        {
+            first.cancel.clone()
         }
-        // Request surfaces enforce the second-order range of Thm. 5.5
-        // (experiment harnesses sweeping θ past 1/2 construct the enum
-        // directly and bypass the serving stack).
-        Solver::Rk2 { theta } if !(theta > 0.0 && theta <= 0.5) => {
-            bail!("rk2 theta {theta} outside (0, 1/2] — second-order range of Thm. 5.5");
-        }
-        Solver::Exact if req.nfe_budget.is_some() => {
-            bail!(
-                "exact simulation cannot honor a hard nfe_budget: its NFE is the \
-                 realized jump count (use an approximate scheme to cap spend)"
-            );
-        }
-        _ => {}
+        _ => CancelToken::never(),
     }
-    // Exact-path knobs: only meaningful for Solver::Exact, and bounded so
-    // a client cannot request degenerate windows or an invalid bound.
-    if (req.window_ratio.is_some() || req.slack.is_some())
-        && !matches!(req.solver, Solver::Exact)
-    {
-        bail!(
-            "window_ratio/slack are exact-simulation knobs; solver {} ignores them",
-            req.solver.name()
-        );
-    }
-    if let Some(w) = req.window_ratio {
-        if !(w > 0.0 && w < 1.0) {
-            bail!("window_ratio {w} outside (0, 1)");
-        }
-    }
-    if let Some(s) = req.slack {
-        if !(s.is_finite() && s >= 1.0) {
-            bail!("slack {s} must be finite and >= 1 (a thinning bound inflation)");
-        }
-    }
-    if matches!(req.solver, Solver::Exact) {
-        // The thinning bound evaluates at the window's small end, but
-        // data-consistent positions RISE with t (by up to ~1/window_ratio
-        // at small t; see score::hmm::rise_envelope) — slack must cover
-        // that rise or the dominating rate is silently invalid.  The
-        // margin is the bracket's own drift margin, so the floor and the
-        // envelope stay in lock-step.
-        let cfg = req.exact_cfg();
-        let floor = crate::score::hmm::SUP_DRIFT_MARGIN / cfg.window_ratio;
-        if cfg.slack < floor {
-            bail!(
-                "slack {} too small for window_ratio {}: the thinning bound \
-                 needs slack >= {}/window_ratio (= {floor:.2}) to dominate \
-                 the in-window intensity rise",
-                cfg.slack,
-                cfg.window_ratio,
-                crate::score::hmm::SUP_DRIFT_MARGIN
-            );
-        }
-    }
-    if req.nfe < req.solver.nfe_per_step() {
-        bail!("nfe budget {} below one step ({})", req.nfe, req.solver.nfe_per_step());
-    }
-    if let Some(b) = req.nfe_budget {
-        // One full step plus the reserved terminal denoise must fit.
-        if b < req.solver.nfe_per_step() + 1 {
-            bail!(
-                "nfe_budget {b} below one step + terminal denoise ({})",
-                req.solver.nfe_per_step() + 1
-            );
-        }
-    }
-    if let ScheduleSpec::Tuned { steps } = req.schedule {
-        // Client-controlled fit size: each distinct step count is an
-        // offline tuner run; keep it bounded.
-        if steps > MAX_TUNED_STEPS {
-            bail!("tuned steps {steps} above the supported maximum {MAX_TUNED_STEPS}");
-        }
-        // The tuner's pilot runs are adaptive passes, which need the
-        // two-stage estimator — reaching the solver assert from a
-        // well-formed request would panic the coordinator thread.
-        if req.solver.nfe_per_step() != 2 {
-            bail!(
-                "tuned schedules are fitted with the two-stage estimator \
-                 (θ-trapezoidal or θ-RK-2), got {}",
-                req.solver.name()
-            );
-        }
-    }
-    if let ScheduleSpec::Adaptive { tol } = req.schedule {
-        if req.solver.nfe_per_step() != 2 {
-            bail!(
-                "adaptive schedules need the embedded two-stage estimator \
-                 (θ-trapezoidal or θ-RK-2), got {}",
-                req.solver.name()
-            );
-        }
-        if !(tol.is_finite() && tol >= 0.0) {
-            bail!("adaptive tol {tol} must be finite and >= 0");
-        }
-    }
-    Ok(())
-}
-
-/// Step count for the fixed schedules: the request NFE, additionally capped
-/// by the hard budget (one evaluation reserved for the terminal denoise so
-/// the cap can never be exceeded).
-fn fixed_steps(req: &GenerateRequest) -> usize {
-    let nfe = match req.nfe_budget {
-        Some(b) => req.nfe.min(b - 1),
-        None => req.nfe,
-    };
-    req.solver.steps_for_nfe(nfe)
 }
 
 /// Run one packed batch through the solvers on a score source: one batched
 /// masked-sparse score call per stage, per-lane seeded RNG streams.
-/// [`Solver::Exact`] runs the per-lane first-hitting sampler (nothing to
-/// co-batch — jump times are data-dependent) and reports the realized
-/// event count as the lane's NFE.  The
-/// request's schedule decides the discretisation: fixed grids (uniform /
-/// log / tuned) run [`masked::generate_batch`] and stay bit-identical to
-/// serving each lane alone; adaptive runs
-/// [`masked::generate_batch_adaptive`], where lanes vote on a shared dt —
-/// the realized grid (and therefore the samples) can depend on which
-/// same-key lanes were co-batched, the documented trade-off of shared
-/// online control (pin the grid with "tuned" when exact replayability
-/// across batch compositions is required).  Tuned grids are fitted on
-/// first use (a few pilot runs, synchronous on the coordinator thread)
-/// and memoised in `cache`.
+/// Execution parameters come from [`SamplingSpec::plan`] — the resolved
+/// discretisation the batch key hashes.  [`Solver::Exact`] runs the
+/// per-lane exact sampler ([`masked::exact_batch_ctl`]: bracketed
+/// uniformization for sources with a native uniform-state process,
+/// first-hitting otherwise) and reports realized evaluations as NFE.
+/// Fixed grids are bit-identical to serving each lane alone; adaptive
+/// batches share one voted dt (the documented trade-off of shared online
+/// control — pin the grid with "tuned" when exact replayability across
+/// batch compositions is required).  Tuned grids are fitted on first use
+/// (a few pilot runs, synchronous on the coordinator thread) and memoised
+/// in `cache`.
 pub fn run_batch_scored(
     score: &dyn ScoreSource,
-    req: &GenerateRequest,
+    spec: &SamplingSpec,
     lanes: &[Lane],
     cache: &mut ScheduleCache,
 ) -> Result<BatchResult> {
-    validate_request(req)?;
-    let solver = req.solver;
+    let solver = spec.solver();
     let seeds: Vec<u64> = lanes.iter().map(|l| l.seed).collect();
 
-    if matches!(solver, Solver::Exact) {
-        // Exact lanes dispatch through the knob-aware path: sources with a
-        // native uniform-state process run bracketed uniformization under
-        // the request's (window_ratio, slack); others run the window-free
-        // first-hitting sampler.  Fixed schedules only reach here (the
-        // adaptive/tuned specs were rejected above), and their interior
-        // grid points are irrelevant to exact simulation — only the
-        // terminal DELTA matters.
-        let results = masked::exact_batch(score, DELTA, &req.exact_cfg(), &seeds);
-        return Ok(BatchResult {
-            nfe: results.iter().map(|(_, s)| s.nfe).collect(),
-            tokens: results.into_iter().map(|(t, _)| t).collect(),
-        });
-    }
-
-    let results = match req.schedule {
-        ScheduleSpec::Uniform => {
-            let grid_ts = grid::masked_uniform(fixed_steps(req), DELTA);
-            masked::generate_batch(score, solver, &grid_ts, &seeds)
+    let cancel = shared_token(lanes);
+    let (results, completed) = match spec.plan() {
+        ExecPlan::Exact { cfg, max_events } => {
+            // Exact lanes are individually interruptible: each polls its
+            // own request's token per window/event.
+            let cancels: Vec<CancelToken> = lanes.iter().map(|l| l.cancel.clone()).collect();
+            let results =
+                masked::exact_batch_ctl(score, DELTA, &cfg, max_events, &seeds, &cancels);
+            return Ok(BatchResult {
+                nfe: results.iter().map(|r| r.stats.nfe).collect(),
+                partial: results.iter().map(|r| r.partial).collect(),
+                tokens: results.into_iter().map(|r| r.tokens).collect(),
+            });
         }
-        ScheduleSpec::Log => {
-            let grid_ts = grid::masked_log(fixed_steps(req), DELTA);
-            masked::generate_batch(score, solver, &grid_ts, &seeds)
+        ExecPlan::Uniform { steps } => {
+            let grid_ts = grid::masked_uniform(steps, DELTA);
+            masked::generate_batch_ctl(score, solver, &grid_ts, &seeds, &cancel)
         }
-        ScheduleSpec::Tuned { steps } => {
-            let mut steps = if steps == 0 { fixed_steps(req) } else { steps };
-            if let Some(b) = req.nfe_budget {
-                // Hard cap also binds an explicit step count (one
-                // evaluation stays reserved for the terminal denoise).
-                steps = steps.min(solver.steps_for_nfe(b - 1));
-            }
-            let key = TuneKey::new(&req.family, score.vocab(), score.seq_len(), solver, steps);
+        ExecPlan::Log { steps } => {
+            let grid_ts = grid::masked_log(steps, DELTA);
+            masked::generate_batch_ctl(score, solver, &grid_ts, &seeds, &cancel)
+        }
+        ExecPlan::Tuned { steps } => {
+            let key = TuneKey::new(spec.family(), score.vocab(), score.seq_len(), solver, steps);
             let tuned = cache.get_or_fit(key, || {
                 // Serving-time fit: cheaper pilots than the offline-bench
                 // tuner — this runs inline on the coordinator thread.
                 ScheduleTuner { pilots: 2, tol: 1e-3, ..Default::default() }
-                    .fit_masked(score, solver, steps, DELTA, &req.family)
+                    .fit_masked(score, solver, steps, DELTA, spec.family())
             });
-            masked::generate_batch(score, solver, &tuned.grid, &seeds)
+            masked::generate_batch_ctl(score, solver, &tuned.grid, &seeds, &cancel)
         }
-        ScheduleSpec::Adaptive { tol } => {
-            let dt0 = (1.0 - DELTA) / solver.steps_for_nfe(req.nfe) as f64;
-            let mut ctl = StepController::new(
-                AdaptiveController::for_span(tol, 1.0, DELTA),
-                dt0,
-            );
-            if let Some(b) = req.nfe_budget {
+        ExecPlan::Adaptive { tol, dt0, budget } => {
+            let mut ctl =
+                StepController::new(AdaptiveController::for_span(tol, 1.0, DELTA), dt0);
+            if let Some(b) = budget {
                 ctl = ctl.with_budget(NfeBudget {
                     total: b,
                     nfe_per_step: solver.nfe_per_step(),
                     reserve: 1,
                 });
             }
-            masked::generate_batch_adaptive(score, solver, ctl, DELTA, &seeds).0
+            let (results, _, completed) =
+                masked::generate_batch_adaptive_ctl(score, solver, ctl, DELTA, &seeds, &cancel);
+            (results, completed)
         }
     };
+    // `completed` is the driver's own report of whether it broke early —
+    // authoritative, unlike re-polling the token here, which would race
+    // with a cancel landing just after the final window and mislabel a
+    // fully-complete response as partial.
     Ok(BatchResult {
         nfe: results.iter().map(|(_, s)| s.nfe).collect(),
+        partial: vec![!completed; results.len()],
         tokens: results.into_iter().map(|(t, _)| t).collect(),
     })
 }
@@ -275,8 +176,8 @@ pub struct StepPlan {
 }
 
 impl StepPlan {
-    pub fn build(registry: &Registry, req: &GenerateRequest) -> Result<StepPlan> {
-        let artifact = artifact_name(&req.family, req.solver);
+    pub fn build(registry: &Registry, req: &SamplingSpec) -> Result<StepPlan> {
+        let artifact = artifact_name(req.family(), req.solver());
         let spec = registry.get(&artifact)?.clone();
         let batch = spec.batch()?;
         let seq_len = spec
@@ -286,8 +187,8 @@ impl StepPlan {
             .vocab()
             .ok_or_else(|| anyhow::anyhow!("{artifact} has no vocab"))?;
         let stages = if spec.nfe_per_step == 2 { 2 } else { 1 };
-        if req.nfe < spec.nfe_per_step {
-            bail!("nfe budget {} below one step ({})", req.nfe, spec.nfe_per_step);
+        if req.nfe() < spec.nfe_per_step {
+            bail!("nfe budget {} below one step ({})", req.nfe(), spec.nfe_per_step);
         }
         Ok(StepPlan {
             artifact,
@@ -296,12 +197,16 @@ impl StepPlan {
             seq_len,
             vocab,
             stages,
-            steps: req.solver.steps_for_nfe(req.nfe),
+            steps: req.solver().steps_for_nfe(req.nfe()),
         })
     }
 }
 
-/// Run the whole backward pass for one packed batch.
+/// Run the whole backward pass for one packed batch.  The legacy fused
+/// path honors cancellation at the same granularity as the scored path:
+/// the shared batch token is polled once per PJRT step dispatch, and a
+/// fired token skips the remaining steps and the terminal denoise
+/// (partial lanes keep the mask id).
 pub fn run_batch(
     runtime: &RuntimeHandle,
     plan: &StepPlan,
@@ -309,6 +214,8 @@ pub fn run_batch(
     lanes: &[Lane],
 ) -> Result<BatchResult> {
     assert!(lanes.len() <= plan.batch);
+    let cancel = shared_token(lanes);
+    let mut cancelled = false;
     let (b, l, v) = (plan.batch, plan.seq_len, plan.vocab);
     let mask = v as i32;
     let mut tokens = vec![mask; b * l];
@@ -328,6 +235,10 @@ pub fn run_batch(
     };
 
     for (step_idx, w) in grid_ts.windows(2).enumerate() {
+        if cancel.is_cancelled() {
+            cancelled = true;
+            break;
+        }
         let uniforms = fill_uniforms(plan.stages, b, l, &mut rngs, &mut pad_rng);
         let mut inputs = vec![
             Value::i32(tokens.clone(), vec![b, l]),
@@ -362,7 +273,8 @@ pub fn run_batch(
 
     // Terminal denoise of any still-masked dims: one exact (Tweedie) step
     // from DELTA to ~0 — gate probability ~1, destinations from the score.
-    if tokens.iter().any(|&x| x == mask) {
+    // Skipped on cancellation: partial lanes keep the mask id.
+    if !cancelled && tokens.iter().any(|&x| x == mask) {
         let tw = format!(
             "{}_step_tweedie",
             plan.artifact.split("_step_").next().unwrap()
@@ -391,7 +303,11 @@ pub fn run_batch(
                 .collect()
         })
         .collect();
-    Ok(BatchResult { tokens: out_tokens, nfe: vec![nfe; lanes.len()] })
+    Ok(BatchResult {
+        tokens: out_tokens,
+        nfe: vec![nfe; lanes.len()],
+        partial: vec![cancelled; lanes.len()],
+    })
 }
 
 /// Uniforms layout (stages, 2, B, L): lane b owns [.., .., b, ..] across all
@@ -423,6 +339,8 @@ fn fill_uniforms(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::SamplingSpec;
+    use crate::schedule::ScheduleSpec;
 
     #[test]
     fn artifact_names() {
@@ -437,8 +355,8 @@ mod tests {
         );
     }
 
-    fn scored_req(solver: Solver, nfe: usize) -> GenerateRequest {
-        GenerateRequest { solver, nfe, ..Default::default() }
+    fn scored_spec(solver: Solver, nfe: usize) -> SamplingSpec {
+        SamplingSpec::builder().solver(solver).nfe(nfe).build().unwrap()
     }
 
     fn test_lanes(n: usize) -> Vec<Lane> {
@@ -449,6 +367,7 @@ mod tests {
                 sample_idx: i,
                 seed: 1000 + i as u64 * 17,
                 enqueued: Instant::now(),
+                cancel: CancelToken::never(),
             })
             .collect()
     }
@@ -462,9 +381,10 @@ mod tests {
         let solver = Solver::Trapezoidal { theta: 0.5 };
         let mut cache = ScheduleCache::new();
         let result =
-            run_batch_scored(&oracle, &scored_req(solver, 16), &lanes, &mut cache).unwrap();
+            run_batch_scored(&oracle, &scored_spec(solver, 16), &lanes, &mut cache).unwrap();
         assert_eq!(result.tokens.len(), 3);
         assert_eq!(result.nfe.len(), 3);
+        assert!(result.partial.iter().all(|&p| !p));
         let grid_ts = grid::masked_uniform(solver.steps_for_nfe(16), DELTA);
         for (k, lane) in lanes.iter().enumerate() {
             let mut r = Xoshiro256::seed_from_u64(lane.seed);
@@ -484,37 +404,46 @@ mod tests {
         let mut cache = ScheduleCache::new();
         let lanes = test_lanes(2);
 
-        let mut req = scored_req(solver, 32);
-        req.schedule = ScheduleSpec::Adaptive { tol: 1e-2 };
-        req.nfe_budget = Some(20);
-        let result = run_batch_scored(&oracle, &req, &lanes, &mut cache).unwrap();
+        let spec = SamplingSpec::builder()
+            .solver(solver)
+            .nfe(32)
+            .schedule(ScheduleSpec::Adaptive { tol: 1e-2 })
+            .nfe_budget(Some(20))
+            .build()
+            .unwrap();
+        let result = run_batch_scored(&oracle, &spec, &lanes, &mut cache).unwrap();
         for (k, &nfe) in result.nfe.iter().enumerate() {
             assert!(nfe <= 20, "lane {k} overdrew: {nfe}");
             assert!(result.tokens[k].iter().all(|&t| t < 5), "masks left");
         }
 
-        let mut req = scored_req(solver, 16);
-        req.schedule = ScheduleSpec::Tuned { steps: 6 };
-        let result = run_batch_scored(&oracle, &req, &lanes, &mut cache).unwrap();
+        let spec = SamplingSpec::builder()
+            .solver(solver)
+            .nfe(16)
+            .schedule(ScheduleSpec::Tuned { steps: 6 })
+            .build()
+            .unwrap();
+        let result = run_batch_scored(&oracle, &spec, &lanes, &mut cache).unwrap();
         assert_eq!(cache.len(), 1, "tuned grid must be memoised");
         assert!(result.tokens.iter().all(|t| t.iter().all(|&c| c < 5)));
         // Second call hits the cache (still one entry).
-        let _ = run_batch_scored(&oracle, &req, &lanes, &mut cache).unwrap();
+        let _ = run_batch_scored(&oracle, &spec, &lanes, &mut cache).unwrap();
         assert_eq!(cache.len(), 1);
 
-        // An explicit tuned step count is still bound by the hard budget.
-        let mut req = scored_req(solver, 16);
-        req.schedule = ScheduleSpec::Tuned { steps: 64 };
-        req.nfe_budget = Some(9);
-        let result = run_batch_scored(&oracle, &req, &lanes, &mut cache).unwrap();
+        // An explicit tuned step count is still bound by the hard budget —
+        // resolved in the PLAN, so the batch key reflects it too.
+        let spec = SamplingSpec::builder()
+            .solver(solver)
+            .nfe(16)
+            .schedule(ScheduleSpec::Tuned { steps: 64 })
+            .nfe_budget(Some(9))
+            .build()
+            .unwrap();
+        assert_eq!(spec.plan(), crate::api::ExecPlan::Tuned { steps: 4 });
+        let result = run_batch_scored(&oracle, &spec, &lanes, &mut cache).unwrap();
         for &nfe in &result.nfe {
             assert!(nfe <= 9, "tuned+budget overdrew: {nfe}");
         }
-        // ... and an absurd explicit step count is rejected outright.
-        let mut req = scored_req(solver, 16);
-        req.schedule = ScheduleSpec::Tuned { steps: MAX_TUNED_STEPS + 1 };
-        let err = run_batch_scored(&oracle, &req, &[], &mut cache).unwrap_err();
-        assert!(format!("{err:#}").contains("tuned steps"), "{err:#}");
     }
 
     #[test]
@@ -525,7 +454,7 @@ mod tests {
         let lanes = test_lanes(3);
         let mut cache = ScheduleCache::new();
         let result =
-            run_batch_scored(&oracle, &scored_req(Solver::Exact, 16), &lanes, &mut cache)
+            run_batch_scored(&oracle, &scored_spec(Solver::Exact, 16), &lanes, &mut cache)
                 .unwrap();
         assert_eq!(result.tokens.len(), 3);
         for (k, lane) in lanes.iter().enumerate() {
@@ -535,50 +464,29 @@ mod tests {
             assert_eq!(result.nfe[k], stats.nfe, "lane {k} realized NFE");
             // Realized NFE: one eval per unmask event + at most one finalize.
             assert!(result.nfe[k] >= 1 && result.nfe[k] <= 13, "lane {k}");
+            assert!(!result.partial[k]);
         }
-
-        // Exact cannot promise a hard budget: clean error, no panic.
-        let mut req = scored_req(Solver::Exact, 16);
-        req.nfe_budget = Some(10);
-        let err = run_batch_scored(&oracle, &req, &[], &mut cache).unwrap_err();
-        assert!(format!("{err:#}").contains("exact"), "{err:#}");
-        // ... and neither adaptive nor tuned schedules apply to it.
-        let mut req = scored_req(Solver::Exact, 16);
-        req.schedule = ScheduleSpec::Adaptive { tol: 1e-3 };
-        assert!(run_batch_scored(&oracle, &req, &[], &mut cache).is_err());
     }
 
     #[test]
-    fn run_batch_scored_validates_and_threads_exact_knobs() {
+    fn run_batch_scored_threads_exact_knobs_and_cancel() {
         use crate::score::hmm::HmmUniformOracle;
         use crate::score::markov::{MarkovChain, MarkovOracle};
         let mut rng = Xoshiro256::seed_from_u64(41);
         let chain = MarkovChain::generate(&mut rng, 5, 0.6);
         let mut cache = ScheduleCache::new();
 
-        // Knobs on a non-exact solver: clean error.
-        let oracle = MarkovOracle::new(chain.clone(), 8);
-        let mut req = scored_req(Solver::TauLeaping, 16);
-        req.slack = Some(2.0);
-        let err = run_batch_scored(&oracle, &req, &[], &mut cache).unwrap_err();
-        assert!(format!("{err:#}").contains("exact"), "{err:#}");
-        // Out-of-range knobs on exact: clean errors.
-        for (wr, sl) in [(Some(0.0), None), (Some(1.0), None), (None, Some(0.5)), (None, Some(f64::NAN))] {
-            let mut req = scored_req(Solver::Exact, 16);
-            req.window_ratio = wr;
-            req.slack = sl;
-            assert!(
-                run_batch_scored(&oracle, &req, &[], &mut cache).is_err(),
-                "wr={wr:?} slack={sl:?} must be rejected"
-            );
-        }
         // Markov (no uniform-state process): knobs accepted, FHS fallback
         // still bit-identical to the per-lane sampler.
+        let oracle = MarkovOracle::new(chain.clone(), 8);
         let lanes = test_lanes(2);
-        let mut req = scored_req(Solver::Exact, 16);
-        req.window_ratio = Some(0.9);
-        req.slack = Some(2.0);
-        let result = run_batch_scored(&oracle, &req, &lanes, &mut cache).unwrap();
+        let spec = SamplingSpec::builder()
+            .solver(Solver::Exact)
+            .window_ratio(Some(0.9))
+            .slack(Some(2.0))
+            .build()
+            .unwrap();
+        let result = run_batch_scored(&oracle, &spec, &lanes, &mut cache).unwrap();
         for (k, lane) in lanes.iter().enumerate() {
             let mut r = Xoshiro256::seed_from_u64(lane.seed);
             let (toks, stats, _) = crate::solvers::masked::fhs_generate(&oracle, DELTA, &mut r);
@@ -589,11 +497,14 @@ mod tests {
         // samples are mask-free, deterministic per lane seed, and nfe_used
         // reports evaluations actually performed (>= 1).
         let hmm = HmmUniformOracle::new(chain, 8);
-        let mut req = scored_req(Solver::Exact, 16);
-        req.window_ratio = Some(0.6);
-        req.slack = Some(3.0);
-        let a = run_batch_scored(&hmm, &req, &lanes, &mut cache).unwrap();
-        let b = run_batch_scored(&hmm, &req, &lanes, &mut cache).unwrap();
+        let spec = SamplingSpec::builder()
+            .solver(Solver::Exact)
+            .window_ratio(Some(0.6))
+            .slack(Some(3.0))
+            .build()
+            .unwrap();
+        let a = run_batch_scored(&hmm, &spec, &lanes, &mut cache).unwrap();
+        let b = run_batch_scored(&hmm, &spec, &lanes, &mut cache).unwrap();
         assert_eq!(a.tokens, b.tokens);
         assert_eq!(a.nfe, b.nfe);
         for (toks, &nfe) in a.tokens.iter().zip(&a.nfe) {
@@ -601,69 +512,40 @@ mod tests {
             assert!(toks.iter().all(|&t| (t as usize) < 5), "{toks:?}");
             assert!(nfe >= 1);
         }
+        // A pre-fired per-lane token marks exactly that lane partial.
+        let mut lanes = test_lanes(2);
+        lanes[0].cancel = CancelToken::new();
+        lanes[0].cancel.cancel();
+        let r = run_batch_scored(&hmm, &spec, &lanes, &mut cache).unwrap();
+        assert!(r.partial[0], "cancelled lane must be partial");
+        assert!(!r.partial[1], "co-batched lane must complete");
+        assert_eq!(r.tokens[1], a.tokens[1], "surviving lane is bit-identical");
     }
 
     #[test]
-    fn run_batch_scored_rejects_rk2_theta_past_half() {
+    fn run_batch_scored_scheme_cancel_skips_finalize() {
         use crate::score::markov::{MarkovChain, MarkovOracle};
         let mut rng = Xoshiro256::seed_from_u64(31);
         let oracle = MarkovOracle::new(MarkovChain::generate(&mut rng, 4, 0.5), 8);
         let mut cache = ScheduleCache::new();
-        let err = run_batch_scored(&oracle, &scored_req(Solver::Rk2 { theta: 0.7 }, 16), &[], &mut cache)
-            .unwrap_err();
-        assert!(format!("{err:#}").contains("1/2"), "{err:#}");
-        // The boundary value is fine.
-        assert!(run_batch_scored(
-            &oracle,
-            &scored_req(Solver::Rk2 { theta: 0.5 }, 8),
-            &test_lanes(1),
-            &mut cache
-        )
-        .is_ok());
-    }
-
-    #[test]
-    fn run_batch_scored_rejects_absurd_budget() {
-        use crate::score::markov::{MarkovChain, MarkovOracle};
-        let mut rng = Xoshiro256::seed_from_u64(13);
-        let oracle = MarkovOracle::new(MarkovChain::generate(&mut rng, 4, 0.5), 8);
-        let mut cache = ScheduleCache::new();
-        let err = run_batch_scored(
-            &oracle,
-            &scored_req(Solver::Trapezoidal { theta: 0.5 }, 1),
-            &[],
-            &mut cache,
-        )
-        .unwrap_err();
-        assert!(format!("{err:#}").contains("below one step"), "{err:#}");
-        // Malformed client-supplied theta must error, never panic (a panic
-        // would kill the coordinator thread).
-        for bad in [
-            Solver::Trapezoidal { theta: 0.0 },
-            Solver::Trapezoidal { theta: 1.0 },
-            Solver::Trapezoidal { theta: f64::NAN },
-            Solver::Rk2 { theta: 1.5 },
-            Solver::Rk2 { theta: 0.0 },
-        ] {
-            let err =
-                run_batch_scored(&oracle, &scored_req(bad, 16), &[], &mut cache).unwrap_err();
-            assert!(format!("{err:#}").contains("theta"), "{err:#}");
+        // All lanes share one fired token → the whole batch stops at the
+        // first window and reports partial with fully masked sequences.
+        let token = CancelToken::new();
+        token.cancel();
+        let mut lanes = test_lanes(2);
+        for l in &mut lanes {
+            l.cancel = token.clone();
         }
-        // Adaptive with a one-stage solver and under-budgeted requests
-        // must error cleanly too.
-        let mut req = scored_req(Solver::TauLeaping, 16);
-        req.schedule = ScheduleSpec::Adaptive { tol: 1e-3 };
-        let err = run_batch_scored(&oracle, &req, &[], &mut cache).unwrap_err();
-        assert!(format!("{err:#}").contains("two-stage"), "{err:#}");
-        // Same for tuned (the pilot fits are adaptive passes).
-        let mut req = scored_req(Solver::Tweedie, 16);
-        req.schedule = ScheduleSpec::Tuned { steps: 0 };
-        let err = run_batch_scored(&oracle, &req, &[], &mut cache).unwrap_err();
-        assert!(format!("{err:#}").contains("two-stage"), "{err:#}");
-        let mut req = scored_req(Solver::Trapezoidal { theta: 0.5 }, 16);
-        req.nfe_budget = Some(2);
-        let err = run_batch_scored(&oracle, &req, &[], &mut cache).unwrap_err();
-        assert!(format!("{err:#}").contains("nfe_budget"), "{err:#}");
+        let spec = scored_spec(Solver::Trapezoidal { theta: 0.5 }, 16);
+        let r = run_batch_scored(&oracle, &spec, &lanes, &mut cache).unwrap();
+        assert!(r.partial.iter().all(|&p| p));
+        for toks in &r.tokens {
+            assert!(
+                toks.iter().all(|&t| t == oracle.mask_id()),
+                "no window may run after cancellation: {toks:?}"
+            );
+        }
+        assert!(r.nfe.iter().all(|&n| n == 0));
     }
 
     #[test]

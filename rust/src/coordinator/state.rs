@@ -11,6 +11,7 @@ struct Pending {
     remaining: usize,
     nfe_used: usize,
     started_ms: f64,
+    any_partial: bool,
 }
 
 /// Collects per-lane results; yields a response when a request completes.
@@ -32,18 +33,21 @@ impl ResponseAssembler {
                 remaining: n_samples,
                 nfe_used: 0,
                 started_ms,
+                any_partial: false,
             },
         );
     }
 
     /// Record one completed lane; returns the response if that finished the
-    /// request.  `now_ms` stamps latency.
+    /// request.  `now_ms` stamps latency; `partial` marks an interrupted
+    /// lane (the response is partial if ANY lane was).
     pub fn complete_lane(
         &mut self,
         request_id: u64,
         sample_idx: usize,
         tokens: Vec<Tok>,
         nfe: usize,
+        partial: bool,
         now_ms: f64,
     ) -> Option<GenerateResponse> {
         let p = self
@@ -57,6 +61,7 @@ impl ResponseAssembler {
         p.sequences[sample_idx] = Some(tokens);
         p.remaining -= 1;
         p.nfe_used = p.nfe_used.max(nfe);
+        p.any_partial |= partial;
         if p.remaining > 0 {
             return None;
         }
@@ -66,7 +71,17 @@ impl ResponseAssembler {
             sequences: p.sequences.into_iter().map(Option::unwrap).collect(),
             nfe_used: p.nfe_used,
             latency_ms: now_ms - p.started_ms,
+            partial: p.any_partial,
         })
+    }
+
+    /// Discard a request's pending state (batch failure / abort): later
+    /// lanes must no longer exist for it — the caller purges them from the
+    /// batcher — so the unknown-request panic in [`Self::complete_lane`]
+    /// keeps guarding against genuine routing bugs.  Returns whether the
+    /// request was pending.
+    pub fn abort(&mut self, request_id: u64) -> bool {
+        self.pending.remove(&request_id).is_some()
     }
 
     pub fn in_flight(&self) -> usize {
@@ -82,13 +97,33 @@ mod tests {
     fn assembles_out_of_order() {
         let mut a = ResponseAssembler::new();
         a.register(1, 3, 0.0);
-        assert!(a.complete_lane(1, 2, vec![2], 16, 5.0).is_none());
-        assert!(a.complete_lane(1, 0, vec![0], 16, 6.0).is_none());
-        let r = a.complete_lane(1, 1, vec![1], 17, 7.5).unwrap();
+        assert!(a.complete_lane(1, 2, vec![2], 16, false, 5.0).is_none());
+        assert!(a.complete_lane(1, 0, vec![0], 16, false, 6.0).is_none());
+        let r = a.complete_lane(1, 1, vec![1], 17, false, 7.5).unwrap();
         assert_eq!(r.sequences, vec![vec![0], vec![1], vec![2]]);
         assert_eq!(r.nfe_used, 17);
+        assert!(!r.partial);
         assert!((r.latency_ms - 7.5).abs() < 1e-12);
         assert_eq!(a.in_flight(), 0);
+    }
+
+    #[test]
+    fn one_partial_lane_marks_the_response() {
+        let mut a = ResponseAssembler::new();
+        a.register(1, 2, 0.0);
+        assert!(a.complete_lane(1, 0, vec![1], 4, true, 1.0).is_none());
+        let r = a.complete_lane(1, 1, vec![2], 4, false, 2.0).unwrap();
+        assert!(r.partial, "any partial lane must mark the response partial");
+    }
+
+    #[test]
+    fn abort_discards_pending_state() {
+        let mut a = ResponseAssembler::new();
+        a.register(1, 3, 0.0);
+        a.complete_lane(1, 0, vec![1], 4, false, 1.0);
+        assert!(a.abort(1), "request 1 was pending");
+        assert_eq!(a.in_flight(), 0, "aborted state must not leak");
+        assert!(!a.abort(1), "already gone");
     }
 
     #[test]
@@ -96,9 +131,9 @@ mod tests {
         let mut a = ResponseAssembler::new();
         a.register(1, 1, 0.0);
         a.register(2, 2, 0.0);
-        assert!(a.complete_lane(2, 0, vec![9], 8, 1.0).is_none());
-        assert!(a.complete_lane(1, 0, vec![7], 8, 1.0).is_some());
-        assert!(a.complete_lane(2, 1, vec![9], 8, 2.0).is_some());
+        assert!(a.complete_lane(2, 0, vec![9], 8, false, 1.0).is_none());
+        assert!(a.complete_lane(1, 0, vec![7], 8, false, 1.0).is_some());
+        assert!(a.complete_lane(2, 1, vec![9], 8, false, 2.0).is_some());
     }
 
     #[test]
@@ -106,7 +141,7 @@ mod tests {
     fn duplicate_lane_panics() {
         let mut a = ResponseAssembler::new();
         a.register(1, 2, 0.0);
-        a.complete_lane(1, 0, vec![1], 4, 1.0);
-        a.complete_lane(1, 0, vec![1], 4, 1.0);
+        a.complete_lane(1, 0, vec![1], 4, false, 1.0);
+        a.complete_lane(1, 0, vec![1], 4, false, 1.0);
     }
 }

@@ -75,6 +75,7 @@
 //! Fig. 1 histogram are optional ([`ExactStats::recording`]); the serving
 //! path runs counts-only so per-request memory stays bounded.
 
+use crate::util::cancel::StopCtl;
 use crate::util::dist::{categorical_f64, exponential};
 use crate::util::rng::Rng;
 
@@ -322,6 +323,27 @@ pub fn simulate_backward_into<P: JumpProcess, R: Rng>(
     rng: &mut R,
     stats: &mut ExactStats,
 ) -> P::State {
+    simulate_backward_ctl(proc, x0, t_start, t_end, window_ratio, rng, stats, &StopCtl::none()).0
+}
+
+/// As [`simulate_backward_into`], with cooperative early stop: the
+/// [`StopCtl`] is polled once per window — a fired cancel token or an
+/// exhausted `max_events` cap ends the run at the next window boundary
+/// (i.e. within one window) and the second return value reports `false`
+/// (partial: the state is the exact chain frozen at the stop time, not a
+/// sample at `t_end`).  Polling draws no randomness, so a run that is not
+/// stopped is bit-identical to [`simulate_backward_into`].
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_backward_ctl<P: JumpProcess, R: Rng>(
+    proc: &P,
+    x0: P::State,
+    t_start: f64,
+    t_end: f64,
+    window_ratio: f64,
+    rng: &mut R,
+    stats: &mut ExactStats,
+    stop: &StopCtl,
+) -> (P::State, bool) {
     assert!(t_end > 0.0 && t_end < t_start);
     assert!(window_ratio > 0.0 && window_ratio < 1.0);
     let mut x = x0;
@@ -329,6 +351,9 @@ pub fn simulate_backward_into<P: JumpProcess, R: Rng>(
 
     let mut t_hi = t_start;
     while t_hi > t_end {
+        if stop.cancelled() || stop.events_exhausted(stats.n_accepted) {
+            return (x, false);
+        }
         let t_lo = (t_hi * window_ratio).max(t_end);
         let wb = proc.window_bound(&x, t_lo, t_hi, &mut mu);
         let bound = wb.bound.max(1e-12);
@@ -403,7 +428,7 @@ pub fn simulate_backward_into<P: JumpProcess, R: Rng>(
             t_hi = t_lo;
         }
     }
-    x
+    (x, true)
 }
 
 /// The toy model as a JumpProcess (states 0..S, jumps by +nu mod S).
@@ -533,6 +558,61 @@ mod tests {
         assert_eq!(s.nfe, s.n_candidates);
         assert_eq!(s.free_rejects, 0);
         assert_eq!(s.bracket_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn stop_ctl_bounds_and_cancels_runs() {
+        use crate::util::cancel::{CancelToken, StopCtl};
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let model = ToyModel::paper_default(&mut rng);
+        let proc = ToyJump(&model);
+        let x0 = model.sample_stationary(&mut rng);
+
+        // No-stop ctl run is bit-identical to the plain entry point.
+        let mut r1 = rng.clone();
+        let mut r2 = rng.clone();
+        let mut s1 = ExactStats::counts_only();
+        let mut s2 = ExactStats::counts_only();
+        let plain = simulate_backward_into(&proc, x0, model.horizon, 1e-3, 0.5, &mut r1, &mut s1);
+        let (ctl, complete) = simulate_backward_ctl(
+            &proc,
+            x0,
+            model.horizon,
+            1e-3,
+            0.5,
+            &mut r2,
+            &mut s2,
+            &StopCtl::none(),
+        );
+        assert!(complete);
+        assert_eq!(plain, ctl);
+        assert_eq!(s1.nfe, s2.nfe);
+        assert_eq!(s1.n_accepted, s2.n_accepted);
+
+        // max_events caps accepted jumps and reports partial.
+        if s1.n_accepted >= 2 {
+            let cap = s1.n_accepted - 1;
+            let mut r = rng.clone();
+            let mut s = ExactStats::counts_only();
+            let stop = StopCtl { cancel: CancelToken::never(), max_events: Some(cap) };
+            let (_, complete) = simulate_backward_ctl(
+                &proc, x0, model.horizon, 1e-3, 0.5, &mut r, &mut s, &stop,
+            );
+            assert!(!complete, "cap {cap} of {} must stop early", s1.n_accepted);
+            assert!(s.n_accepted <= cap);
+        }
+
+        // A pre-fired cancel token stops before the first window.
+        let token = CancelToken::new();
+        token.cancel();
+        let mut r = rng.clone();
+        let mut s = ExactStats::counts_only();
+        let stop = StopCtl { cancel: token, max_events: None };
+        let (state, complete) =
+            simulate_backward_ctl(&proc, x0, model.horizon, 1e-3, 0.5, &mut r, &mut s, &stop);
+        assert!(!complete);
+        assert_eq!(state, x0, "no window may run after cancellation");
+        assert_eq!(s.n_candidates, 0);
     }
 
     #[test]

@@ -205,24 +205,26 @@ pub fn batch_policy(scale: Scale) -> Option<Json> {
         let registry = crate::runtime::Registry::load("artifacts").unwrap();
         let coord = Coordinator::start(runtime, registry, policy);
         let started = Instant::now();
-        let rxs: Vec<_> = trace
+        let handles: Vec<_> = trace
             .requests
             .iter()
             .enumerate()
             .map(|(i, r)| {
-                coord.submit(GenerateRequest {
-                    id: i as u64,
-                    family: "markov".into(),
-                    solver: r.solver,
-                    nfe: r.nfe,
-                    n_samples: r.n_samples,
-                    seed: r.seed,
-                    ..Default::default()
-                })
+                coord.submit(GenerateRequest::new(
+                    i as u64,
+                    crate::api::SamplingSpec::builder()
+                        .family("markov")
+                        .solver(r.solver)
+                        .nfe(r.nfe)
+                        .n_samples(r.n_samples)
+                        .seed(r.seed)
+                        .build()
+                        .expect("trace requests are valid"),
+                ))
             })
             .collect();
-        for rx in rxs {
-            rx.recv().unwrap().unwrap();
+        for h in handles {
+            h.wait().unwrap();
         }
         let wall = started.elapsed().as_secs_f64();
         let m = coord.metrics();

@@ -18,6 +18,7 @@
 
 pub mod util;
 pub mod testkit;
+pub mod api;
 pub mod ctmc;
 pub mod score;
 pub mod schedule;

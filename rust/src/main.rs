@@ -7,7 +7,8 @@
 //!                 [--schedule-dir tuned_schedules]
 //! fastdds client  [--addr ...] --solver trapezoidal:0.5 --nfe 64 [--n 4] [--seed 1]
 //!                 [--schedule adaptive:tol=1e-3] [--nfe-budget 48]
-//!                 [--window-ratio 0.5] [--slack 4]
+//!                 [--window-ratio 0.5] [--slack 4] [--max-events 1000]
+//!                 [--spec spec.json] [--stream] [--timeout-ms 5000]
 //! fastdds info    [--artifacts artifacts]
 //! ```
 //!
@@ -16,15 +17,26 @@
 //! uniform-state HMM oracle, whose `--solver exact` path is bracketed
 //! windowed uniformization (tunable with `client --window-ratio --slack`).
 //! `--schedule-dir` persists tuned schedules to disk so restarts never
-//! re-pay the pilot fits.  `client --solver exact` runs exact simulation;
-//! the response's `nfe_used` counts score evaluations actually performed.
+//! re-pay the pilot fits.
+//!
+//! The client maps its flags through the typed `api::SpecBuilder`, so an
+//! invalid knob combination fails locally with the same typed error the
+//! server would return, then sends the v2 wire envelope.  `--spec f.json`
+//! sends a spec read from a file (either a bare spec object or a full
+//! `{"v":2,"spec":...}` envelope); `--stream` uses `generate_stream` and
+//! prints chunks as lanes complete; `--timeout-ms` bounds connect/read so
+//! a hung server fails the call instead of blocking forever.
 
 use anyhow::{bail, Result};
+use fastdds::api::{wire, SamplingSpec};
 use fastdds::coordinator::{BatchPolicy, Coordinator};
 use fastdds::ctmc::ToyModel;
 use fastdds::exp::{self, Scale};
 use fastdds::runtime::{Registry, RuntimeHandle};
+use fastdds::schedule::ScheduleSpec;
+use fastdds::solvers::Solver;
 use fastdds::util::cli::Args;
+use fastdds::util::json::Json;
 use fastdds::util::rng::Xoshiro256;
 
 fn main() {
@@ -40,11 +52,12 @@ fn run() -> Result<()> {
         Some("exp") => cmd_exp(&args),
         Some("serve") => cmd_serve(&args),
         Some("client") => cmd_client(&args),
+        Some("cancel") => cmd_cancel(&args),
         Some("info") => cmd_info(&args),
         _ => {
             println!(
                 "fastdds — fast high-order solvers for discrete diffusion models\n\
-                 usage: fastdds <exp|serve|client|info> [options]\n\
+                 usage: fastdds <exp|serve|client|cancel|info> [options]\n\
                  see README.md"
             );
             Ok(())
@@ -167,29 +180,77 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
 }
 
+/// Build the request spec from the CLI flags (or `--spec file.json`),
+/// through the validating builder — invalid combinations fail here with
+/// the same typed error the server would produce.
+fn client_spec(args: &Args) -> Result<SamplingSpec> {
+    if let Some(path) = args.str_opt("spec") {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text)?;
+        // Accept a bare spec object or a full {"v":2,"spec":...} envelope.
+        let spec_obj = match j.opt("spec") {
+            Some(inner) => inner,
+            None => &j,
+        };
+        return Ok(wire::spec_from_json(spec_obj)?);
+    }
+    let solver = Solver::parse(&args.get_str("solver", "trapezoidal:0.5"))?;
+    let mut b = SamplingSpec::builder()
+        .family(&args.get_str("family", "markov"))
+        .solver(solver)
+        .nfe(args.get_usize("nfe", 64)?)
+        .n_samples(args.get_usize("n", 1)?)
+        .seed(args.get_u64("seed", 0)?)
+        .nfe_budget(args.usize_opt("nfe-budget")?)
+        .window_ratio(args.f64_opt("window-ratio")?)
+        .slack(args.f64_opt("slack")?)
+        .max_events(args.usize_opt("max-events")?);
+    if let Some(s) = args.str_opt("schedule") {
+        b = b.schedule(ScheduleSpec::parse(s)?);
+    }
+    Ok(b.build()?)
+}
+
 fn cmd_client(args: &Args) -> Result<()> {
     let addr = args.get_str("addr", "127.0.0.1:7878");
-    let mut client = fastdds::server::client::Client::connect(&addr)?;
-    let solver = args.get_str("solver", "trapezoidal:0.5");
-    let nfe = args.get_usize("nfe", 64)?;
-    let n = args.get_usize("n", 1)?;
-    let seed = args.get_u64("seed", 0)?;
-    let family = args.get_str("family", "markov");
-    let opts = fastdds::server::client::GenOpts {
-        schedule: args.str_opt("schedule"),
-        nfe_budget: args.usize_opt("nfe-budget")?,
-        window_ratio: args.f64_opt("window-ratio")?,
-        slack: args.f64_opt("slack")?,
+    let timeout = args
+        .usize_opt("timeout-ms")?
+        .map(|ms| std::time::Duration::from_millis(ms as u64));
+    let mut client = fastdds::server::client::Client::connect_with(&addr, timeout)?;
+    let spec = client_spec(args)?;
+    let resp = if args.flag("stream") {
+        let id = client.start_stream(&spec)?;
+        println!("accepted id={id} (interrupt with: fastdds cancel --id {id})");
+        let out = client.finish_stream(spec.n_samples())?;
+        println!("streamed {} chunk(s)", out.chunks);
+        out.response
+    } else {
+        client.generate_spec(&spec)?
     };
-    let resp = client.generate_opts(&solver, nfe, n, seed, &family, &opts)?;
     println!(
-        "id={} nfe_used={} latency_ms={:.2}",
-        resp.id, resp.nfe_used, resp.latency_ms
+        "id={} nfe_used={} latency_ms={:.2}{}",
+        resp.id,
+        resp.nfe_used,
+        resp.latency_ms,
+        if resp.partial { " (PARTIAL)" } else { "" }
     );
     for s in &resp.sequences {
         println!("{}", fastdds::data::corpus::decode_pretty(s, 64));
     }
     println!("{}", client.metrics()?);
+    Ok(())
+}
+
+/// `fastdds cancel --id N [--addr ...]`: fire the cancel verb.
+fn cmd_cancel(args: &Args) -> Result<()> {
+    let addr = args.get_str("addr", "127.0.0.1:7878");
+    let timeout = args
+        .usize_opt("timeout-ms")?
+        .map(|ms| std::time::Duration::from_millis(ms as u64));
+    let mut client = fastdds::server::client::Client::connect_with(&addr, timeout)?;
+    let id = args.get_u64("id", 0)?;
+    let found = client.cancel(id)?;
+    println!("id={id} cancelled={found}");
     Ok(())
 }
 

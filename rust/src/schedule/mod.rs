@@ -124,6 +124,55 @@ impl ScheduleSpec {
         }
     }
 
+    /// Structured JSON form used by the v2 wire protocol: a `{"kind": ...}`
+    /// object with the variant's parameters as typed fields (the string
+    /// form remains for v1 and the CLI).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        match self {
+            ScheduleSpec::Uniform => Json::obj(vec![("kind", Json::from("uniform"))]),
+            ScheduleSpec::Log => Json::obj(vec![("kind", Json::from("log"))]),
+            ScheduleSpec::Adaptive { tol } => Json::obj(vec![
+                ("kind", Json::from("adaptive")),
+                ("tol", Json::Num(*tol)),
+            ]),
+            ScheduleSpec::Tuned { steps } => Json::obj(vec![
+                ("kind", Json::from("tuned")),
+                ("steps", Json::from(*steps)),
+            ]),
+        }
+    }
+
+    /// Parse the structured JSON form ([`ScheduleSpec::to_json`]); a bare
+    /// JSON string falls back to [`ScheduleSpec::parse`] so clients can use
+    /// either.
+    pub fn from_json(j: &crate::util::json::Json) -> Result<ScheduleSpec> {
+        use crate::util::json::Json;
+        if let Json::Str(s) = j {
+            return ScheduleSpec::parse(s);
+        }
+        let kind = j.get("kind")?.as_str()?;
+        Ok(match kind {
+            "uniform" => ScheduleSpec::Uniform,
+            "log" => ScheduleSpec::Log,
+            "adaptive" => {
+                let tol = match j.opt("tol") {
+                    Some(v) => v.as_f64()?,
+                    None => adaptive::DEFAULT_TOL,
+                };
+                ScheduleSpec::Adaptive { tol }
+            }
+            "tuned" => {
+                let steps = match j.opt("steps") {
+                    Some(v) => v.as_usize()?,
+                    None => 0,
+                };
+                ScheduleSpec::Tuned { steps }
+            }
+            _ => bail!("unknown schedule kind {kind:?}"),
+        })
+    }
+
     /// Stable 64-bit identity for batch-compatibility keys: two requests may
     /// co-batch only when they run the same schedule.
     pub fn key_bits(&self) -> (u8, u64) {
@@ -168,6 +217,33 @@ mod tests {
         assert!(ScheduleSpec::parse("adaptive:tol=nan").is_err());
         assert!(ScheduleSpec::parse("tuned:steps=0").is_err());
         assert!(ScheduleSpec::parse("uniform:x").is_err());
+    }
+
+    #[test]
+    fn spec_json_roundtrip() {
+        for s in [
+            ScheduleSpec::Uniform,
+            ScheduleSpec::Log,
+            ScheduleSpec::Adaptive { tol: 1e-3 },
+            ScheduleSpec::Tuned { steps: 0 },
+            ScheduleSpec::Tuned { steps: 24 },
+        ] {
+            let j = s.to_json();
+            assert_eq!(ScheduleSpec::from_json(&j).unwrap(), s, "{j:?}");
+            // Text round-trip too (the wire path).
+            let re = crate::util::json::Json::parse(&j.to_string()).unwrap();
+            assert_eq!(ScheduleSpec::from_json(&re).unwrap(), s);
+        }
+        // String fallback.
+        let j = crate::util::json::Json::from("adaptive:tol=0.001");
+        assert_eq!(
+            ScheduleSpec::from_json(&j).unwrap(),
+            ScheduleSpec::Adaptive { tol: 1e-3 }
+        );
+        assert!(ScheduleSpec::from_json(
+            &crate::util::json::Json::parse(r#"{"kind": "warp"}"#).unwrap()
+        )
+        .is_err());
     }
 
     #[test]

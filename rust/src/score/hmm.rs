@@ -37,10 +37,11 @@
 use std::sync::Mutex;
 
 use crate::ctmc::uniformization::{
-    simulate_backward_into, ExactCfg, ExactStats, JumpProcess, WindowBound,
+    simulate_backward_ctl, ExactCfg, ExactStats, JumpProcess, WindowBound,
 };
 use crate::score::markov::MarkovChain;
 use crate::score::{ScoreSource, Tok};
+use crate::util::cancel::StopCtl;
 use crate::util::rng::{Rng, Xoshiro256};
 
 /// Forward horizon of the uniform-state process when served end to end
@@ -364,12 +365,27 @@ impl ScoreSource for HmmUniformOracle {
         cfg: &ExactCfg,
         rng: &mut Xoshiro256,
     ) -> Option<(Vec<Tok>, ExactStats)> {
+        self.exact_uniform_ctl(delta, cfg, &StopCtl::none(), rng)
+            .map(|(toks, stats, _)| (toks, stats))
+    }
+
+    /// The stop-aware variant the serving path dispatches: the window loop
+    /// polls `stop` once per uniformization window, so a `cancel` verb or
+    /// an exhausted `max_events` cap interrupts a long run within one
+    /// window and the caller receives the partial chain state.
+    fn exact_uniform_ctl(
+        &self,
+        delta: f64,
+        cfg: &ExactCfg,
+        stop: &StopCtl,
+        rng: &mut Xoshiro256,
+    ) -> Option<(Vec<Tok>, ExactStats, bool)> {
         let jump = UniformTextJump { oracle: self, slack: cfg.slack };
         let x0: Vec<Tok> = (0..self.seq_len)
             .map(|_| rng.gen_usize(self.chain.vocab) as Tok)
             .collect();
         let mut stats = ExactStats::counts_only();
-        let x = simulate_backward_into(
+        let (x, complete) = simulate_backward_ctl(
             &jump,
             x0,
             self.horizon,
@@ -377,8 +393,9 @@ impl ScoreSource for HmmUniformOracle {
             cfg.window_ratio,
             rng,
             &mut stats,
+            stop,
         );
-        Some((x, stats))
+        Some((x, stats, complete))
     }
 }
 
@@ -425,10 +442,10 @@ fn posterior_row(
 /// argument in [`rise_envelope`] cannot certify).  Same
 /// empirical-but-debug-verified standing as the thinning slack itself.
 /// Also the numerator of the serving-side slack floor
-/// (`slack >= SUP_DRIFT_MARGIN / window_ratio`,
-/// `coordinator::scheduler::validate_request`) — the two must move
-/// together or admitted requests end up with the bracket silently
-/// disabled (env >= slack).
+/// (`slack >= SUP_DRIFT_MARGIN / window_ratio`, enforced by the request
+/// builder `api::SpecBuilder::build`) — the two must move together or
+/// admitted requests end up with the bracket silently disabled
+/// (env >= slack).
 pub const SUP_DRIFT_MARGIN: f64 = 1.5;
 
 /// Widest window (t_hi / t_lo) the free-reject bracket arms on.  The

@@ -114,6 +114,24 @@ pub trait ScoreSource: Send + Sync {
     ) -> Option<(Vec<Tok>, ExactStats)> {
         None
     }
+
+    /// As [`ScoreSource::exact_uniform`], with cooperative early stop: the
+    /// [`StopCtl`] is polled once per uniformization window, so a fired
+    /// cancel token (the server's `cancel` verb) or an exhausted
+    /// `max_events` cap ends the run within one window.  The third return
+    /// value reports completion — `false` means the sample is partial (the
+    /// chain frozen at the stop time).  The default delegates to
+    /// [`ScoreSource::exact_uniform`] (no early stop).
+    fn exact_uniform_ctl(
+        &self,
+        delta: f64,
+        cfg: &ExactCfg,
+        stop: &crate::util::cancel::StopCtl,
+        rng: &mut Xoshiro256,
+    ) -> Option<(Vec<Tok>, ExactStats, bool)> {
+        let _ = stop;
+        self.exact_uniform(delta, cfg, rng).map(|(toks, stats)| (toks, stats, true))
+    }
 }
 
 /// Count of masked positions.

@@ -1,11 +1,19 @@
-//! Minimal client for the JSON-lines protocol (used by examples and tests).
+//! Minimal client for the JSON-lines protocol (used by the CLI, examples
+//! and tests).  Speaks both wire versions: the string-flag helpers
+//! ([`Client::generate`], [`Client::generate_opts`]) send legacy v1 flat
+//! requests; [`Client::generate_spec`] / [`Client::generate_stream`] send
+//! the typed v2 envelope ([`crate::api::wire`]).
 
 use std::io::{BufRead, BufReader, Write};
-use std::net::TcpStream;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
+use crate::api::wire;
+use crate::api::SamplingSpec;
 use crate::coordinator::GenerateResponse;
+use crate::score::Tok;
 use crate::util::json::Json;
 
 pub struct Client {
@@ -15,19 +23,55 @@ pub struct Client {
 
 impl Client {
     pub fn connect(addr: &str) -> Result<Client> {
-        let stream = TcpStream::connect(addr)?;
+        Client::connect_with(addr, None)
+    }
+
+    /// Connect with an optional connect/read/write timeout: a hung or
+    /// unreachable server then fails the call with an error instead of
+    /// blocking the caller forever (`client --timeout-ms`).
+    pub fn connect_with(addr: &str, timeout: Option<Duration>) -> Result<Client> {
+        let stream = match timeout {
+            None => TcpStream::connect(addr)?,
+            Some(t) => {
+                let sock = addr
+                    .to_socket_addrs()?
+                    .next()
+                    .ok_or_else(|| anyhow!("address {addr:?} did not resolve"))?;
+                TcpStream::connect_timeout(&sock, t)?
+            }
+        };
+        // A zero/None timeout means block forever (std semantics).
+        stream.set_read_timeout(timeout)?;
+        stream.set_write_timeout(timeout)?;
         let reader = BufReader::new(stream.try_clone()?);
         Ok(Client { reader, writer: stream })
     }
 
     /// Send one raw line, get one parsed reply.
     pub fn raw(&mut self, line: &str) -> Result<Json> {
+        self.send_line(line)?;
+        self.read_reply()
+    }
+
+    fn send_line(&mut self, line: &str) -> Result<()> {
         self.writer.write_all(line.as_bytes())?;
         self.writer.write_all(b"\n")?;
         self.writer.flush()?;
+        Ok(())
+    }
+
+    fn read_reply(&mut self) -> Result<Json> {
         let mut reply = String::new();
-        if self.reader.read_line(&mut reply)? == 0 {
-            bail!("server closed the connection");
+        match self.reader.read_line(&mut reply) {
+            Ok(0) => bail!("server closed the connection"),
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                bail!("timed out waiting for the server (--timeout-ms)");
+            }
+            Err(e) => return Err(e.into()),
         }
         Json::parse(reply.trim())
     }
@@ -43,6 +87,20 @@ impl Client {
             bail!("metrics failed: {:?}", r.opt("error"));
         }
         Ok(r.get("report")?.as_str()?.to_string())
+    }
+
+    /// Fire the cooperative cancel token of job `id` (from a stream's
+    /// `accepted` frame).  Returns whether the server found the job.
+    pub fn cancel(&mut self, id: u64) -> Result<bool> {
+        let req = Json::obj(vec![
+            ("cmd", Json::from("cancel")),
+            ("id", Json::from(id)),
+        ]);
+        let r = self.raw(&req.to_string())?;
+        if !r.get("ok")?.as_bool()? {
+            bail!("cancel failed: {:?}", r.opt("error"));
+        }
+        r.get("cancelled")?.as_bool()
     }
 
     pub fn generate(
@@ -73,10 +131,11 @@ impl Client {
         self.generate_opts(solver, nfe, n_samples, seed, family, &opts)
     }
 
-    /// Full request surface: optional schedule spec ("uniform", "log",
-    /// "adaptive:tol=1e-3", "tuned[:steps=..]"), hard NFE budget, and the
-    /// exact-simulation knobs (window_ratio, slack — `solver: "exact"`
-    /// only).
+    /// Legacy v1 flat request surface: optional schedule spec ("uniform",
+    /// "log", "adaptive:tol=1e-3", "tuned[:steps=..]"), hard NFE budget,
+    /// and the exact-simulation knobs (window_ratio, slack — `solver:
+    /// "exact"` only).  New code should build a [`SamplingSpec`] and use
+    /// [`Client::generate_spec`].
     pub fn generate_opts(
         &mut self,
         solver: &str,
@@ -91,7 +150,7 @@ impl Client {
             ("solver", Json::from(solver)),
             ("nfe", Json::from(nfe)),
             ("n_samples", Json::from(n_samples)),
-            ("seed", Json::from(seed as f64)),
+            ("seed", Json::from(seed)),
             ("family", Json::from(family)),
         ];
         if let Some(s) = opts.schedule {
@@ -108,6 +167,96 @@ impl Client {
         }
         let req = Json::obj(fields);
         let r = self.raw(&req.to_string())?;
+        Self::ok_response(&r)
+    }
+
+    /// Send a typed spec as a v2 `generate` and return the response.
+    pub fn generate_spec(&mut self, spec: &SamplingSpec) -> Result<GenerateResponse> {
+        let req = wire::request_to_json("generate", spec);
+        let r = self.raw(&req.to_string())?;
+        Self::ok_response(&r)
+    }
+
+    /// Start a v2 `generate_stream`: sends the request and consumes the
+    /// `accepted` frame, returning the server-assigned job id (the
+    /// `cancel` key).  Follow with [`Client::finish_stream`].
+    pub fn start_stream(&mut self, spec: &SamplingSpec) -> Result<u64> {
+        let req = wire::request_to_json("generate_stream", spec);
+        self.send_line(&req.to_string())?;
+        let r = self.read_reply()?;
+        if !r.get("ok")?.as_bool()? {
+            bail!(
+                "generate_stream rejected: {}",
+                r.opt("error")
+                    .and_then(|e| e.as_str().ok())
+                    .unwrap_or("unknown")
+            );
+        }
+        if r.get("stream")?.as_str()? != "accepted" {
+            bail!("expected the accepted frame, got {r:?}");
+        }
+        r.get("id")?.as_u64()
+    }
+
+    /// Consume chunk frames until the terminal `done`/`error` frame and
+    /// reassemble the response (chunks placed by `sample_idx`; bitwise
+    /// identical to the blocking response for the same spec + seed).
+    pub fn finish_stream(&mut self, n_samples: usize) -> Result<StreamOutcome> {
+        let mut sequences: Vec<Option<Vec<Tok>>> = vec![None; n_samples];
+        let mut chunks = 0usize;
+        loop {
+            let r = self.read_reply()?;
+            match r.get("stream")?.as_str()? {
+                "chunk" => {
+                    let idx = r.get("sample_idx")?.as_usize()?;
+                    if idx >= n_samples {
+                        bail!("chunk sample_idx {idx} out of range");
+                    }
+                    let toks = r
+                        .get("tokens")?
+                        .as_arr()?
+                        .iter()
+                        .map(|t| Ok(t.as_f64()? as Tok))
+                        .collect::<Result<Vec<Tok>>>()?;
+                    if sequences[idx].replace(toks).is_some() {
+                        bail!("duplicate chunk for lane {idx}");
+                    }
+                    chunks += 1;
+                }
+                "done" => {
+                    let sequences = sequences
+                        .into_iter()
+                        .enumerate()
+                        .map(|(i, s)| s.ok_or_else(|| anyhow!("lane {i} never streamed")))
+                        .collect::<Result<Vec<_>>>()?;
+                    let response = GenerateResponse {
+                        id: r.get("id")?.as_u64()?,
+                        sequences,
+                        nfe_used: r.get("nfe_used")?.as_usize()?,
+                        latency_ms: r.get("latency_ms")?.as_f64()?,
+                        partial: r.get("partial")?.as_bool()?,
+                    };
+                    return Ok(StreamOutcome { chunks, response });
+                }
+                "error" => bail!(
+                    "stream failed: {}",
+                    r.opt("error")
+                        .and_then(|e| e.as_str().ok())
+                        .unwrap_or("unknown")
+                ),
+                other => bail!("unknown stream frame {other:?}"),
+            }
+        }
+    }
+
+    /// Full streaming round trip: [`Client::start_stream`] +
+    /// [`Client::finish_stream`].
+    pub fn generate_stream(&mut self, spec: &SamplingSpec) -> Result<StreamOutcome> {
+        let _id = self.start_stream(spec)?;
+        self.finish_stream(spec.n_samples())
+    }
+
+    fn ok_response(r: &Json) -> Result<GenerateResponse> {
         if !r.get("ok")?.as_bool()? {
             bail!(
                 "generate failed: {}",
@@ -116,11 +265,20 @@ impl Client {
                     .unwrap_or("unknown")
             );
         }
-        GenerateResponse::from_json(&r)
+        GenerateResponse::from_json(r)
     }
 }
 
-/// Optional request fields of [`Client::generate_opts`].
+/// Reassembled result of a streaming generation.
+#[derive(Clone, Debug)]
+pub struct StreamOutcome {
+    /// Chunk frames received (= lanes streamed).
+    pub chunks: usize,
+    pub response: GenerateResponse,
+}
+
+/// Optional request fields of [`Client::generate_opts`] (the legacy v1
+/// flat surface).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct GenOpts<'a> {
     /// Time-discretisation spec ("uniform" | "log" | "adaptive:tol=.." |

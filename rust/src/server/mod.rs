@@ -1,38 +1,127 @@
 //! JSON-lines-over-TCP serving front end.
 //!
-//! Protocol: one JSON object per line.
-//!   -> {"cmd": "generate", "solver": "trapezoidal:0.5", "nfe": 64,
-//!       "n_samples": 2, "seed": 7, "family": "markov",
-//!       "schedule": "adaptive:tol=1e-3", "nfe_budget": 48}
-//!   <- {"ok": true, "id": 1, "sequences": [[...], [...]],
-//!       "nfe_used": 42, "latency_ms": 12.3,
-//!       "schedule": "adaptive:tol=0.001", "nfe_budget": 48}
-//! `schedule` (optional, default "uniform": uniform|log|adaptive[:tol=..]|
-//! tuned[:steps=..]) selects the time discretisation; `nfe_budget`
-//! (optional) is a hard per-sample NFE cap.  Both are echoed back.
-//! `solver` accepts every approximate scheme plus `"exact"` (exact
-//! simulation; `nfe_used` then reports the score evaluations actually
-//! performed and `nfe_budget` is rejected).  Exact requests additionally
-//! take the optional knobs `window_ratio` (geometric window of the
-//! uniformization, in (0, 1)) and `slack` (thinning bound inflation >= 1),
-//! echoed back like the schedule fields; families without a native
-//! uniform-state process fall back to the knob-free first-hitting sampler.
-//! θ-solvers are validated at parse time: trapezoidal needs θ in (0, 1),
-//! rk2 needs θ in (0, 1/2].
-//!   -> {"cmd": "metrics"}        <- {"ok": true, "report": "..."}
-//!   -> {"cmd": "ping"}           <- {"ok": true}
-//! Errors: {"ok": false, "error": "..."}.  One thread per connection.
+//! # Wire protocol
+//!
+//! One JSON object per line, request → reply (streaming verbs reply with
+//! multiple lines).  Two request encodings are spoken side by side:
+//!
+//! ## v2 (structured, versioned) — the current protocol
+//!
+//! ```text
+//! -> {"v": 2, "cmd": "generate", "spec": {
+//!      "family": "markov", "n_samples": 2, "seed": 7,
+//!      "solver": {"type": "scheme", "solver": "trapezoidal:0.5",
+//!                 "schedule": {"kind": "adaptive", "tol": 0.001},
+//!                 "nfe": 64, "nfe_budget": 48}}}
+//! <- {"ok": true, "v": 2, "id": 1, "sequences": [[...], [...]],
+//!     "nfe_used": 42, "latency_ms": 12.3, "partial": false,
+//!     "spec": {...fully resolved spec, defaults filled...}}
+//! ```
+//!
+//! The spec is validated at this boundary by the typed builder
+//! (`api::SpecBuilder`): illegal knob combinations (`nfe_budget` on
+//! `"type": "exact"`, `window_ratio` on a grid scheme, θ out of range,
+//! `slack` below the drift floor) are *unrepresentable* in a built spec
+//! and die here as `{"ok": false, "error": ..., "code": ...}` with a
+//! stable machine-readable `code` (see `api::SpecError::code`).  Nothing
+//! downstream re-validates.  Responses echo the **resolved** spec —
+//! defaults filled — so clients see exactly what ran.
+//!
+//! Exact solver specs (`"type": "exact"`) take `window_ratio` (geometric
+//! uniformization window, in (0,1)), `slack` (thinning bound inflation,
+//! >= 1 and >= 1.5/window_ratio) and `max_events` (optional cap on
+//! accepted events: a run that exhausts it returns `"partial": true` with
+//! whatever was produced — the only way to bound exact simulation, whose
+//! NFE is realized rather than planned).
+//!
+//! ## Streaming + cancellation
+//!
+//! ```text
+//! -> {"v": 2, "cmd": "generate_stream", "spec": {...}}        (v1 flat body works too)
+//! <- {"ok": true, "v": 2, "stream": "accepted", "id": 7}
+//! <- {"ok": true, "stream": "chunk", "id": 7, "sample_idx": 0,
+//!     "tokens": [...], "nfe_used": 18, "partial": false}       (one per completed lane)
+//! <- {"ok": true, "stream": "done", "id": 7, "nfe_used": 21,
+//!     "latency_ms": 88.1, "partial": false, "spec": {...}}
+//! ```
+//!
+//! Chunks carry each lane's tokens as the lane completes a dispatch (a
+//! request larger than the batch width streams progressively); placing
+//! chunks by `sample_idx` reassembles exactly the blocking response for
+//! the same spec + seed, bit for bit.  The terminal line is `"stream":
+//! "done"` (or `"stream": "error"` with `"ok": false`).
+//!
+//! ```text
+//! -> {"cmd": "cancel", "id": 7}
+//! <- {"ok": true, "id": 7, "cancelled": true}
+//! ```
+//!
+//! `cancel` fires the job's cooperative cancel token (ids come from the
+//! `accepted` frame; issue it from a second connection while the first
+//! reads frames).  The solver loops poll the token once per window/event,
+//! so even a long exact-simulation run winds down within one window; the
+//! job then completes normally with `"partial": true` and the sequences
+//! as they stand (still-masked positions keep the mask id = vocab).
+//! `cancelled: false` means the id was unknown or already complete.
+//! Cancellation granularity: exact lanes are individually cancellable;
+//! lock-step scheme batches honor the token when all their lanes belong
+//! to the cancelled job (always true for a single in-flight request) and
+//! otherwise at batch boundaries — scheme runs are NFE-bounded, so the
+//! wait is bounded too.
+//!
+//! ## v1 (legacy flat) — auto-upgraded
+//!
+//! ```text
+//! -> {"cmd": "generate", "solver": "trapezoidal:0.5", "nfe": 64,
+//!     "n_samples": 2, "seed": 7, "family": "markov",
+//!     "schedule": "adaptive:tol=1e-3", "nfe_budget": 48,
+//!     "window_ratio": 0.5, "slack": 4.0}
+//! <- {"ok": true, "id": 1, "sequences": [[...], [...]],
+//!     "nfe_used": 42, "latency_ms": 12.3,
+//!     "schedule": "adaptive:tol=0.001", "nfe_budget": 48}
+//! ```
+//!
+//! Any request without `"v": 2` takes this path: the flat fields are
+//! upgraded through the same builder (same validation, same execution)
+//! and the response reproduces the legacy shape exactly — `schedule`
+//! always echoed in canonical string form, `nfe_budget`/`window_ratio`/
+//! `slack` echoed iff present in the request, no `v`/`spec`/`partial`
+//! keys (a `partial` key does appear in the corner case of a v1-submitted
+//! job cancelled via the v2 verb).  The compat corpus in
+//! `tests/wire_compat.rs` pins v1 responses field-for-field against the
+//! pre-redesign serving semantics.
+//!
+//! One intentional v1 deviation: `seed` (and the `cancel` verb's `id`)
+//! must now be an actual non-negative integer.  The old parser routed
+//! them through `f64` — which silently corrupted values above 2^53 and
+//! coerced malformed inputs (`"seed": -1` sampled as seed 0, `1.5` as
+//! seed 1) to a *different* stream than requested.  Both are rejected
+//! with a typed error instead of silently serving the wrong samples;
+//! well-formed v1 requests are unaffected.
+//!
+//! ## Control verbs
+//!
+//! ```text
+//! -> {"cmd": "metrics"}   <- {"ok": true, "report": "...", ...counters}
+//! -> {"cmd": "ping"}      <- {"ok": true}
+//! ```
+//!
+//! Errors: `{"ok": false, "error": "..."}` (+ `"code"` for typed spec
+//! errors).  One thread per connection; malformed lines never kill the
+//! connection.
 
 pub mod client;
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::coordinator::{Coordinator, GenerateRequest};
+use crate::api::wire::{self, ParsedRequest, V1Echo};
+use crate::api::SamplingSpec;
+use crate::coordinator::{Coordinator, GenerateResponse, JobEvent};
 use crate::util::json::Json;
 
 pub struct Server {
@@ -49,7 +138,6 @@ impl Server {
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
-        let next_id = Arc::new(AtomicU64::new(1));
         let handle = std::thread::Builder::new()
             .name("fastdds-server".into())
             .spawn(move || {
@@ -57,9 +145,8 @@ impl Server {
                     match listener.accept() {
                         Ok((stream, _)) => {
                             let coord = coordinator.clone();
-                            let ids = Arc::clone(&next_id);
                             std::thread::spawn(move || {
-                                let _ = handle_conn(stream, coord, ids);
+                                let _ = handle_conn(stream, coord);
                             });
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -80,11 +167,20 @@ impl Server {
     }
 }
 
-fn handle_conn(
-    stream: TcpStream,
-    coordinator: Coordinator,
-    next_id: Arc<AtomicU64>,
-) -> Result<()> {
+fn write_json(writer: &mut TcpStream, j: &Json) -> std::io::Result<()> {
+    writer.write_all(j.to_string().as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()
+}
+
+fn generic_error(msg: &str) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::from(msg)),
+    ])
+}
+
+fn handle_conn(stream: TcpStream, coordinator: Coordinator) -> Result<()> {
     let peer = stream.try_clone()?;
     let mut reader = BufReader::new(peer);
     let mut writer = stream;
@@ -94,63 +190,195 @@ fn handle_conn(
         if reader.read_line(&mut line)? == 0 {
             return Ok(()); // client hung up
         }
-        let reply = match handle_line(&line, &coordinator, &next_id) {
-            Ok(j) => j,
-            Err(e) => Json::obj(vec![
-                ("ok", Json::Bool(false)),
-                ("error", Json::from(format!("{e:#}"))),
-            ]),
-        };
-        writer.write_all(reply.to_string().as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
+        dispatch_line(&line, &coordinator, &mut writer)?;
     }
 }
 
-fn handle_line(
+/// Handle one request line, writing one or more reply lines.  Returns Err
+/// only for I/O failures (dead connection); protocol errors are written as
+/// `{"ok": false, ...}` replies and keep the connection alive.
+fn dispatch_line(
     line: &str,
     coordinator: &Coordinator,
-    next_id: &AtomicU64,
-) -> Result<Json> {
-    let j = Json::parse(line.trim())?;
-    match j.get("cmd")?.as_str()? {
-        "ping" => Ok(Json::obj(vec![("ok", Json::Bool(true))])),
+    writer: &mut TcpStream,
+) -> std::io::Result<()> {
+    let j = match Json::parse(line.trim()) {
+        Ok(j) => j,
+        Err(e) => return write_json(writer, &generic_error(&format!("{e:#}"))),
+    };
+    let cmd = match j.get("cmd").and_then(|c| c.as_str()) {
+        Ok(c) => c.to_string(),
+        Err(e) => return write_json(writer, &generic_error(&format!("{e:#}"))),
+    };
+    match cmd.as_str() {
+        "ping" => write_json(writer, &Json::obj(vec![("ok", Json::Bool(true))])),
         "metrics" => {
             let m = coordinator.metrics();
-            Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("report", Json::from(m.report())),
-                ("requests", Json::from(m.requests as f64)),
-                ("lanes", Json::from(m.lanes as f64)),
-                ("dispatches", Json::from(m.dispatches as f64)),
-                ("nfe_total", Json::from(m.nfe_total as f64)),
-            ]))
+            write_json(
+                writer,
+                &Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("report", Json::from(m.report())),
+                    ("requests", Json::from(m.requests as f64)),
+                    ("lanes", Json::from(m.lanes as f64)),
+                    ("dispatches", Json::from(m.dispatches as f64)),
+                    ("nfe_total", Json::from(m.nfe_total as f64)),
+                ]),
+            )
         }
-        "generate" => {
-            let id = next_id.fetch_add(1, Ordering::Relaxed);
-            let req = GenerateRequest::from_json(&j, id)?;
-            let (schedule, budget) = (req.schedule, req.nfe_budget);
-            let (window_ratio, slack) = (req.window_ratio, req.slack);
-            let resp = coordinator.generate(req)?;
-            let mut out = resp.to_json();
-            if let Json::Obj(m) = &mut out {
-                m.insert("ok".into(), Json::Bool(true));
-                // Echo the schedule fields so clients can confirm what ran.
-                m.insert("schedule".into(), Json::from(schedule.to_string_spec().as_str()));
-                if let Some(b) = budget {
-                    m.insert("nfe_budget".into(), Json::from(b));
-                }
-                // Echo the exact-path knobs the same way.
-                if let Some(w) = window_ratio {
-                    m.insert("window_ratio".into(), Json::Num(w));
-                }
-                if let Some(s) = slack {
-                    m.insert("slack".into(), Json::Num(s));
-                }
+        "cancel" => {
+            let id = match j.get("id").and_then(|v| v.as_u64()) {
+                Ok(id) => id,
+                Err(e) => return write_json(writer, &generic_error(&format!("{e:#}"))),
+            };
+            let cancelled = coordinator.cancel(id);
+            write_json(
+                writer,
+                &Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("id", Json::from(id)),
+                    ("cancelled", Json::Bool(cancelled)),
+                ]),
+            )
+        }
+        "generate" => match wire::request_from_json(&j) {
+            Err(e) => write_json(writer, &wire::spec_error_json(&e)),
+            Ok(parsed) => handle_generate(coordinator, parsed, writer),
+        },
+        "generate_stream" => match wire::request_from_json(&j) {
+            Err(e) => write_json(writer, &wire::spec_error_json(&e)),
+            Ok(parsed) => handle_stream(coordinator, parsed, writer),
+        },
+        other => write_json(writer, &generic_error(&format!("unknown cmd {other:?}"))),
+    }
+}
+
+/// Legacy v1 response shape, reproduced byte for byte: the base response
+/// plus `ok`, the canonical schedule echo, and the optional fields the
+/// REQUEST carried (not the resolved defaults — v1 never echoed those).
+fn v1_response(resp: &GenerateResponse, echo: &V1Echo) -> Json {
+    let mut out = resp.to_json();
+    if let Json::Obj(m) = &mut out {
+        m.insert("ok".into(), Json::Bool(true));
+        // Echo the schedule fields so clients can confirm what ran.
+        m.insert(
+            "schedule".into(),
+            Json::from(echo.schedule.to_string_spec().as_str()),
+        );
+        if let Some(b) = echo.nfe_budget {
+            m.insert("nfe_budget".into(), Json::from(b));
+        }
+        // Echo the exact-path knobs the same way.
+        if let Some(w) = echo.window_ratio {
+            m.insert("window_ratio".into(), Json::Num(w));
+        }
+        if let Some(s) = echo.slack {
+            m.insert("slack".into(), Json::Num(s));
+        }
+    }
+    out
+}
+
+/// v2 response: versioned, explicit `partial`, resolved-spec echo.
+fn v2_response(resp: &GenerateResponse, spec: &SamplingSpec) -> Json {
+    let mut out = resp.to_json();
+    if let Json::Obj(m) = &mut out {
+        m.insert("ok".into(), Json::Bool(true));
+        m.insert("v".into(), Json::from(wire::PROTOCOL_VERSION));
+        m.insert("partial".into(), Json::Bool(resp.partial));
+        m.insert("spec".into(), wire::spec_to_json(spec));
+    }
+    out
+}
+
+fn handle_generate(
+    coordinator: &Coordinator,
+    parsed: ParsedRequest,
+    writer: &mut TcpStream,
+) -> std::io::Result<()> {
+    let job = coordinator.submit_spec(parsed.spec.clone());
+    match job.wait() {
+        Ok(resp) => {
+            let out = match &parsed.v1 {
+                Some(echo) => v1_response(&resp, echo),
+                None => v2_response(&resp, &parsed.spec),
+            };
+            write_json(writer, &out)
+        }
+        Err(e) => write_json(writer, &generic_error(&format!("{e:#}"))),
+    }
+}
+
+fn handle_stream(
+    coordinator: &Coordinator,
+    parsed: ParsedRequest,
+    writer: &mut TcpStream,
+) -> std::io::Result<()> {
+    let job = coordinator.submit_stream(parsed.spec.clone());
+    write_json(
+        writer,
+        &Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("v", Json::from(wire::PROTOCOL_VERSION)),
+            ("stream", Json::from("accepted")),
+            ("id", Json::from(job.id)),
+        ]),
+    )?;
+    loop {
+        match job.recv() {
+            Ok(JobEvent::Lane { sample_idx, tokens, nfe, partial }) => {
+                let toks: Vec<Json> =
+                    tokens.iter().map(|&t| Json::Num(t as f64)).collect();
+                write_json(
+                    writer,
+                    &Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("stream", Json::from("chunk")),
+                        ("id", Json::from(job.id)),
+                        ("sample_idx", Json::from(sample_idx)),
+                        ("tokens", Json::Arr(toks)),
+                        ("nfe_used", Json::from(nfe)),
+                        ("partial", Json::Bool(partial)),
+                    ]),
+                )?;
             }
-            Ok(out)
+            Ok(JobEvent::Done(resp)) => {
+                return write_json(
+                    writer,
+                    &Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("stream", Json::from("done")),
+                        ("id", Json::from(job.id)),
+                        ("nfe_used", Json::from(resp.nfe_used)),
+                        ("latency_ms", Json::from(resp.latency_ms)),
+                        ("partial", Json::Bool(resp.partial)),
+                        ("spec", wire::spec_to_json(&parsed.spec)),
+                    ]),
+                );
+            }
+            Ok(JobEvent::Failed(e)) => {
+                return write_json(
+                    writer,
+                    &Json::obj(vec![
+                        ("ok", Json::Bool(false)),
+                        ("stream", Json::from("error")),
+                        ("id", Json::from(job.id)),
+                        ("error", Json::from(e)),
+                    ]),
+                );
+            }
+            Err(e) => {
+                return write_json(
+                    writer,
+                    &Json::obj(vec![
+                        ("ok", Json::Bool(false)),
+                        ("stream", Json::from("error")),
+                        ("id", Json::from(job.id)),
+                        ("error", Json::from(format!("{e:#}"))),
+                    ]),
+                );
+            }
         }
-        cmd => anyhow::bail!("unknown cmd {cmd:?}"),
     }
 }
 
@@ -160,6 +388,7 @@ mod tests {
     use crate::coordinator::BatchPolicy;
     use crate::runtime::{Registry, RuntimeHandle};
     use crate::server::client::Client;
+    use crate::solvers::Solver;
 
     fn server() -> Option<Server> {
         if !crate::runtime::artifacts_available("artifacts") {
@@ -197,6 +426,8 @@ mod tests {
         assert_eq!(r.get("ok").unwrap().as_bool().unwrap(), true, "{r:?}");
         assert_eq!(r.get("schedule").unwrap().as_str().unwrap(), "adaptive:tol=0.001");
         assert_eq!(r.get("nfe_budget").unwrap().as_usize().unwrap(), 24);
+        // v1 responses carry no v2 keys.
+        assert!(r.opt("v").is_none() && r.opt("spec").is_none() && r.opt("partial").is_none());
         let nfe_used = r.get("nfe_used").unwrap().as_usize().unwrap();
         assert!(nfe_used <= 24, "budget exceeded over the wire: {nfe_used}");
         let seqs = r.get("sequences").unwrap().as_arr().unwrap().to_vec();
@@ -221,12 +452,19 @@ mod tests {
     /// Server over the HMM uniform-state oracle: `solver: exact` then runs
     /// bracketed windowed uniformization end to end.
     fn local_hmm_server() -> Server {
+        local_hmm_server_len(12)
+    }
+
+    fn local_hmm_server_len(seq_len: usize) -> Server {
         use crate::score::hmm::HmmUniformOracle;
         use crate::score::markov::MarkovChain;
         use crate::util::rng::Xoshiro256;
         use std::sync::Arc;
         let mut rng = Xoshiro256::seed_from_u64(29);
-        let oracle = Arc::new(HmmUniformOracle::new(MarkovChain::generate(&mut rng, 5, 0.6), 12));
+        let oracle = Arc::new(HmmUniformOracle::new(
+            MarkovChain::generate(&mut rng, 5, 0.6),
+            seq_len,
+        ));
         let coord = Coordinator::start_local(oracle, BatchPolicy::Greedy, 8);
         Server::start("127.0.0.1:0", coord).unwrap()
     }
@@ -253,16 +491,21 @@ mod tests {
         }
         assert!(r.get("nfe_used").unwrap().as_usize().unwrap() >= 1);
 
-        // Knobs with a non-exact solver: protocol error, connection alive.
+        // Knobs with a non-exact solver: typed protocol error, alive conn.
         let r = c
             .raw(r#"{"cmd": "generate", "solver": "tau", "nfe": 8, "slack": 2.0}"#)
             .unwrap();
         assert_eq!(r.get("ok").unwrap().as_bool().unwrap(), false);
-        // Out-of-range knob: protocol error too.
+        assert_eq!(r.get("code").unwrap().as_str().unwrap(), "knob_needs_exact");
+        // Out-of-range knob: typed protocol error too.
         let r = c
             .raw(r#"{"cmd": "generate", "solver": "exact", "nfe": 8, "window_ratio": 1.5}"#)
             .unwrap();
         assert_eq!(r.get("ok").unwrap().as_bool().unwrap(), false);
+        assert_eq!(
+            r.get("code").unwrap().as_str().unwrap(),
+            "window_ratio_out_of_range"
+        );
         // Slack below the 1.5/window_ratio floor: rejected with guidance.
         let r = c
             .raw(r#"{"cmd": "generate", "solver": "exact", "nfe": 8, "slack": 1.2}"#)
@@ -296,11 +539,12 @@ mod tests {
         let nfe_used = r.get("nfe_used").unwrap().as_usize().unwrap();
         assert!(nfe_used >= 1 && nfe_used <= 17, "nfe_used={nfe_used}");
 
-        // exact + nfe_budget is a protocol error, not a dead connection.
+        // exact + nfe_budget is a typed protocol error, not a dead conn.
         let r = c
             .raw(r#"{"cmd": "generate", "solver": "exact", "nfe": 16, "nfe_budget": 8}"#)
             .unwrap();
         assert_eq!(r.get("ok").unwrap().as_bool().unwrap(), false);
+        assert_eq!(r.get("code").unwrap().as_str().unwrap(), "budget_on_exact");
         // θ outside the second-order range errors at parse time.
         let r = c
             .raw(r#"{"cmd": "generate", "solver": "rk2:0.8", "nfe": 16}"#)
@@ -311,6 +555,125 @@ mod tests {
             "{r:?}"
         );
         assert!(c.ping().unwrap());
+        srv.stop();
+    }
+
+    #[test]
+    fn v2_spec_roundtrip_with_resolved_echo() {
+        let srv = local_server();
+        let mut c = Client::connect(&srv.addr.to_string()).unwrap();
+        // Structured v2 request; response must carry the resolved spec.
+        let r = c
+            .raw(
+                r#"{"v": 2, "cmd": "generate", "spec": {
+                    "family": "markov", "n_samples": 2, "seed": 5,
+                    "solver": {"type": "scheme", "solver": "trapezoidal:0.5",
+                               "nfe": 32,
+                               "schedule": {"kind": "adaptive", "tol": 0.001},
+                               "nfe_budget": 24}}}"#,
+            )
+            .unwrap();
+        assert_eq!(r.get("ok").unwrap().as_bool().unwrap(), true, "{r:?}");
+        assert_eq!(r.get("v").unwrap().as_u64().unwrap(), 2);
+        assert_eq!(r.get("partial").unwrap().as_bool().unwrap(), false);
+        let spec = r.get("spec").unwrap();
+        assert_eq!(spec.get("family").unwrap().as_str().unwrap(), "markov");
+        let sol = spec.get("solver").unwrap();
+        assert_eq!(sol.get("type").unwrap().as_str().unwrap(), "scheme");
+        assert_eq!(sol.get("solver").unwrap().as_str().unwrap(), "trapezoidal:0.5");
+        assert_eq!(sol.get("nfe_budget").unwrap().as_usize().unwrap(), 24);
+        // Defaults are filled in the echo (schedule object present).
+        assert_eq!(
+            sol.get("schedule").unwrap().get("kind").unwrap().as_str().unwrap(),
+            "adaptive"
+        );
+        // The helper API sends v2 and reads the same shape.
+        let spec = SamplingSpec::builder()
+            .solver(Solver::Exact)
+            .n_samples(1)
+            .seed(8)
+            .build()
+            .unwrap();
+        let resp = c.generate_spec(&spec).unwrap();
+        assert_eq!(resp.sequences.len(), 1);
+        // The exact echo shows the RESOLVED knobs even though none were sent.
+        let r = c
+            .raw(r#"{"v": 2, "cmd": "generate", "spec": {"seed": 8, "solver": {"type": "exact"}}}"#)
+            .unwrap();
+        let sol = r.get("spec").unwrap().get("solver").unwrap();
+        assert!(sol.get("window_ratio").unwrap().as_f64().unwrap() > 0.0);
+        assert!(sol.get("slack").unwrap().as_f64().unwrap() >= 1.0);
+        srv.stop();
+    }
+
+    #[test]
+    fn generate_stream_chunks_match_blocking() {
+        let srv = local_server();
+        let addr = srv.addr.to_string();
+        let mut c = Client::connect(&addr).unwrap();
+        let spec = SamplingSpec::builder()
+            .solver(Solver::TauLeaping)
+            .nfe(16)
+            .n_samples(3)
+            .seed(77)
+            .build()
+            .unwrap();
+        let blocking = c.generate_spec(&spec).unwrap();
+        let mut c2 = Client::connect(&addr).unwrap();
+        let streamed = c2.generate_stream(&spec).unwrap();
+        assert_eq!(streamed.response.sequences, blocking.sequences,
+            "streamed chunks must concatenate bitwise to the blocking response");
+        assert_eq!(streamed.response.nfe_used, blocking.nfe_used);
+        assert_eq!(streamed.chunks, 3);
+        assert!(!streamed.response.partial);
+        srv.stop();
+    }
+
+    #[test]
+    fn cancel_mid_stream_returns_partial() {
+        // Long exact request (48-dim HMM): start a stream on one
+        // connection, cancel by id from a second, expect a partial done.
+        let srv = local_hmm_server_len(48);
+        let addr = srv.addr.to_string();
+        let mut streaming = Client::connect(&addr).unwrap();
+        let spec = SamplingSpec::builder()
+            .solver(Solver::Exact)
+            .n_samples(2)
+            .seed(3)
+            .build()
+            .unwrap();
+        let id = streaming.start_stream(&spec).unwrap();
+        let mut control = Client::connect(&addr).unwrap();
+        assert!(control.cancel(id).unwrap(), "in-flight id must cancel");
+        let out = streaming.finish_stream(spec.n_samples()).unwrap();
+        assert!(out.response.partial, "cancelled exact run must be partial");
+        // Cancelling again after completion reports false.
+        assert!(!control.cancel(id).unwrap());
+        assert!(control.ping().unwrap());
+        srv.stop();
+    }
+
+    #[test]
+    fn max_events_partial_over_tcp() {
+        let srv = local_server();
+        let mut c = Client::connect(&srv.addr.to_string()).unwrap();
+        let r = c
+            .raw(
+                r#"{"v": 2, "cmd": "generate", "spec": {"seed": 4,
+                    "solver": {"type": "exact", "max_events": 3}}}"#,
+            )
+            .unwrap();
+        assert_eq!(r.get("ok").unwrap().as_bool().unwrap(), true, "{r:?}");
+        assert_eq!(r.get("partial").unwrap().as_bool().unwrap(), true);
+        // At most 3 of 16 positions revealed; the rest carry the mask id.
+        let seq = &r.get("sequences").unwrap().as_arr().unwrap()[0];
+        let masked = seq
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|t| t.as_f64().unwrap() as usize == 6)
+            .count();
+        assert!(masked >= 13, "only {masked} masks left");
         srv.stop();
     }
 

@@ -30,6 +30,7 @@
 use crate::schedule::adaptive::{AdaptiveTrace, StepController};
 use crate::solvers::kernel::{LaneCore, SolverKernel, Stage, StateFamily, StepMeta};
 use crate::solvers::GenStats;
+use crate::util::cancel::CancelToken;
 use crate::util::rng::{Rng, Xoshiro256};
 use crate::util::threadpool::{par_zip_mut2, ThreadPool};
 
@@ -153,6 +154,27 @@ pub fn run_single<F: StateFamily, K: SolverKernel<F>, R: Rng>(
     schedule: Schedule<'_>,
     rng: &mut R,
 ) -> (F::Out, GenStats, AdaptiveTrace) {
+    let (out, stats, trace, _) =
+        run_single_ctl::<F, K, R>(ctx, kernel, schedule, rng, &CancelToken::never());
+    (out, stats, trace)
+}
+
+/// As [`run_single`], polling `cancel` once per window: a fired token ends
+/// the run at the next window boundary WITHOUT the terminal finalize — the
+/// returned output is the lane as it stands (for the masked family,
+/// still-masked positions keep the mask id).  The final `bool` reports
+/// whether the run COMPLETED (`false` = the driver actually broke early;
+/// this is authoritative, unlike re-polling the token after the fact,
+/// which races with a cancel landing just after the last window).
+/// Polling draws no randomness, so an uncancelled run is bit-identical to
+/// [`run_single`].
+pub fn run_single_ctl<F: StateFamily, K: SolverKernel<F>, R: Rng>(
+    ctx: &F::Ctx,
+    kernel: &K,
+    schedule: Schedule<'_>,
+    rng: &mut R,
+    cancel: &CancelToken,
+) -> (F::Out, GenStats, AdaptiveTrace, bool) {
     let mut lane = F::init_lane(ctx, rng);
     let mut sc = F::new_scratch(ctx);
     let mut stats = GenStats::default();
@@ -160,18 +182,30 @@ pub fn run_single<F: StateFamily, K: SolverKernel<F>, R: Rng>(
         Schedule::Fixed(grid) => {
             assert!(crate::schedule::grid::is_valid_grid(grid), "invalid time grid");
             let n_steps = grid.len() - 1;
+            let mut cancelled = false;
             for (i, w) in grid.windows(2).enumerate() {
+                if cancel.is_cancelled() {
+                    cancelled = true;
+                    break;
+                }
                 let meta = StepMeta { t: w[0], t_next: w[1], step_idx: i, n_steps: Some(n_steps) };
                 step_single(ctx, kernel, &meta, &mut lane, &mut sc, &mut stats, rng, None);
             }
-            F::finalize(ctx, *grid.last().unwrap(), &mut lane, &mut sc, &mut stats, rng);
-            (F::into_out(lane), stats, AdaptiveTrace::default())
+            if !cancelled {
+                F::finalize(ctx, *grid.last().unwrap(), &mut lane, &mut sc, &mut stats, rng);
+            }
+            (F::into_out(lane), stats, AdaptiveTrace::default(), !cancelled)
         }
         Schedule::Adaptive { mut ctl, delta } => {
             let mut t = F::start_time(ctx);
             let mut trace = AdaptiveTrace { grid: vec![t], errors: Vec::new() };
             let mut i = 0usize;
+            let mut cancelled = false;
             while let Some(dt) = ctl.propose_dt(t, delta, stats.nfe) {
+                if cancel.is_cancelled() {
+                    cancelled = true;
+                    break;
+                }
                 let t_next = if dt >= t - delta { delta } else { t - dt };
                 let meta = StepMeta { t, t_next, step_idx: i, n_steps: None };
                 let mut err = 0.0f64;
@@ -194,8 +228,10 @@ pub fn run_single<F: StateFamily, K: SolverKernel<F>, R: Rng>(
                     break;
                 }
             }
-            F::finalize(ctx, t, &mut lane, &mut sc, &mut stats, rng);
-            (F::into_out(lane), stats, trace)
+            if !cancelled {
+                F::finalize(ctx, t, &mut lane, &mut sc, &mut stats, rng);
+            }
+            (F::into_out(lane), stats, trace, !cancelled)
         }
     }
 }
@@ -212,8 +248,27 @@ pub fn run_batch<F: StateFamily, K: SolverKernel<F> + Sync>(
     schedule: Schedule<'_>,
     seeds: &[u64],
 ) -> (Vec<(F::Out, GenStats)>, AdaptiveTrace) {
+    let (results, trace, _) =
+        run_batch_ctl::<F, K>(ctx, kernel, schedule, seeds, &CancelToken::never());
+    (results, trace)
+}
+
+/// As [`run_batch`], polling `cancel` once per window (the whole lock-step
+/// batch shares one token — the serving layer only arms it when every lane
+/// belongs to the same cancellable job).  A fired token ends the run at
+/// the next window boundary without the terminal finalize; the final
+/// `bool` reports whether the run COMPLETED (`false` = it actually broke
+/// early — authoritative, no post-run token race).  Uncancelled runs are
+/// bit-identical to [`run_batch`].
+pub fn run_batch_ctl<F: StateFamily, K: SolverKernel<F> + Sync>(
+    ctx: &F::Ctx,
+    kernel: &K,
+    schedule: Schedule<'_>,
+    seeds: &[u64],
+    cancel: &CancelToken,
+) -> (Vec<(F::Out, GenStats)>, AdaptiveTrace, bool) {
     if seeds.is_empty() {
-        return (Vec::new(), AdaptiveTrace::default());
+        return (Vec::new(), AdaptiveTrace::default(), true);
     }
     let threads = ThreadPool::default_size().min(seeds.len());
     let mut lanes: Vec<LaneCore<F>> = seeds
@@ -226,16 +281,23 @@ pub fn run_batch<F: StateFamily, K: SolverKernel<F> + Sync>(
         .collect();
     let mut bufs: Vec<F::Scratch> = seeds.iter().map(|_| F::new_scratch(ctx)).collect();
     let mut trace = AdaptiveTrace::default();
+    let mut cancelled = false;
 
     match schedule {
         Schedule::Fixed(grid) => {
             assert!(crate::schedule::grid::is_valid_grid(grid), "invalid time grid");
             let n_steps = grid.len() - 1;
             for (i, w) in grid.windows(2).enumerate() {
+                if cancel.is_cancelled() {
+                    cancelled = true;
+                    break;
+                }
                 let meta = StepMeta { t: w[0], t_next: w[1], step_idx: i, n_steps: Some(n_steps) };
                 step_batch(ctx, kernel, &meta, &mut lanes, &mut bufs, threads, false);
             }
-            F::finalize_batch(ctx, &mut lanes, &mut bufs, *grid.last().unwrap(), threads);
+            if !cancelled {
+                F::finalize_batch(ctx, &mut lanes, &mut bufs, *grid.last().unwrap(), threads);
+            }
         }
         Schedule::Adaptive { mut ctl, delta } => {
             let mut t = F::start_time(ctx);
@@ -246,6 +308,10 @@ pub fn run_batch<F: StateFamily, K: SolverKernel<F> + Sync>(
                 // lanes, so no lane can overdraw.
                 let spent = lanes.iter().map(|l| l.stats.nfe).max().unwrap_or(0);
                 let Some(dt) = ctl.propose_dt(t, delta, spent) else { break };
+                if cancel.is_cancelled() {
+                    cancelled = true;
+                    break;
+                }
                 let t_next = if dt >= t - delta { delta } else { t - dt };
                 let meta = StepMeta { t, t_next, step_idx: i, n_steps: None };
                 let err = step_batch(ctx, kernel, &meta, &mut lanes, &mut bufs, threads, true);
@@ -258,7 +324,9 @@ pub fn run_batch<F: StateFamily, K: SolverKernel<F> + Sync>(
                     break;
                 }
             }
-            F::finalize_batch(ctx, &mut lanes, &mut bufs, t, threads);
+            if !cancelled {
+                F::finalize_batch(ctx, &mut lanes, &mut bufs, t, threads);
+            }
         }
     }
 
@@ -268,5 +336,6 @@ pub fn run_batch<F: StateFamily, K: SolverKernel<F> + Sync>(
             .map(|l| (F::into_out(l.state), l.stats))
             .collect(),
         trace,
+        !cancelled,
     )
 }

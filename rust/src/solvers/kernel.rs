@@ -34,6 +34,7 @@ use crate::ctmc::ToyModel;
 use crate::schedule::adaptive::{rk2_gate_discrepancy, trap_gate_discrepancy};
 use crate::score::{ScoreSource, Tok};
 use crate::solvers::GenStats;
+use crate::util::cancel::StopCtl;
 use crate::util::dist::{categorical, categorical_f64};
 use crate::util::rng::{Rng, Xoshiro256};
 
@@ -143,6 +144,26 @@ pub trait StateFamily: Sized {
         cfg: &ExactCfg,
         rng: &mut R,
     ) -> (Self::Out, GenStats, Vec<f64>);
+
+    /// As [`StateFamily::exact`], with cooperative early stop: the
+    /// [`StopCtl`] is polled once per event/window, so a fired cancel
+    /// token or an exhausted `max_events` cap ends the run promptly; the
+    /// final `bool` reports completion (`false` = the output is partial —
+    /// for the masked family, still-masked positions keep the mask id).
+    /// Polling draws no randomness: a run that is not stopped is
+    /// bit-identical to [`StateFamily::exact`].  The default ignores the
+    /// control (families override it).
+    fn exact_ctl<R: Rng>(
+        ctx: &Self::Ctx,
+        delta: f64,
+        cfg: &ExactCfg,
+        stop: &StopCtl,
+        rng: &mut R,
+    ) -> (Self::Out, GenStats, Vec<f64>, bool) {
+        let _ = stop;
+        let (out, stats, times) = Self::exact(ctx, delta, cfg, rng);
+        (out, stats, times, true)
+    }
 }
 
 /// The per-step math of one scheme over one state family.
@@ -387,9 +408,26 @@ impl<S: ScoreSource + ?Sized> StateFamily for MaskedFamily<S> {
     fn exact<R: Rng>(
         ctx: &S,
         delta: f64,
-        _cfg: &ExactCfg,
+        cfg: &ExactCfg,
         rng: &mut R,
     ) -> (Vec<Tok>, GenStats, Vec<f64>) {
+        let (toks, stats, times, _) =
+            <Self as StateFamily>::exact_ctl(ctx, delta, cfg, &StopCtl::none(), rng);
+        (toks, stats, times)
+    }
+
+    /// Stop-aware first-hitting loop: the [`StopCtl`] is polled once per
+    /// unmask event.  An interrupted run skips the terminal denoise and
+    /// returns the tokens as they stand (still-masked positions keep the
+    /// mask id) — the partial result the serving layer hands back for a
+    /// cancelled request.
+    fn exact_ctl<R: Rng>(
+        ctx: &S,
+        delta: f64,
+        _cfg: &ExactCfg,
+        stop: &StopCtl,
+        rng: &mut R,
+    ) -> (Vec<Tok>, GenStats, Vec<f64>, bool) {
         let l = ctx.seq_len();
         let v = ctx.vocab();
         let mask = ctx.mask_id();
@@ -402,6 +440,9 @@ impl<S: ScoreSource + ?Sized> StateFamily for MaskedFamily<S> {
         loop {
             if lane.active.is_empty() {
                 break;
+            }
+            if stop.cancelled() || stop.events_exhausted(stats.steps) {
+                return (lane.tokens, stats, jump_times, false);
             }
             let m = lane.active.len() as f64;
             t *= rng.gen_f64().powf(1.0 / m);
@@ -420,7 +461,7 @@ impl<S: ScoreSource + ?Sized> StateFamily for MaskedFamily<S> {
             jump_times.push(t);
         }
         masked_finalize(ctx, delta, &mut lane, &mut row, &mut stats, rng);
-        (lane.tokens, stats, jump_times)
+        (lane.tokens, stats, jump_times, true)
     }
 }
 
@@ -1041,10 +1082,24 @@ impl StateFamily for ToyFamily {
         cfg: &ExactCfg,
         rng: &mut R,
     ) -> (usize, GenStats, Vec<f64>) {
-        use crate::ctmc::uniformization::{simulate_backward_into, ExactStats, ToyJump};
+        let (x, stats, times, _) =
+            <Self as StateFamily>::exact_ctl(ctx, delta, cfg, &StopCtl::none(), rng);
+        (x, stats, times)
+    }
+
+    /// Stop-aware uniformization: the window loop polls the [`StopCtl`]
+    /// once per window (see `uniformization::simulate_backward_ctl`).
+    fn exact_ctl<R: Rng>(
+        ctx: &ToyModel,
+        delta: f64,
+        cfg: &ExactCfg,
+        stop: &StopCtl,
+        rng: &mut R,
+    ) -> (usize, GenStats, Vec<f64>, bool) {
+        use crate::ctmc::uniformization::{simulate_backward_ctl, ExactStats, ToyJump};
         let x0 = ctx.sample_stationary(rng);
         let mut s = ExactStats::counts_only().with_jump_recording();
-        let x = simulate_backward_into(
+        let (x, complete) = simulate_backward_ctl(
             &ToyJump(ctx),
             x0,
             ctx.horizon,
@@ -1052,10 +1107,11 @@ impl StateFamily for ToyFamily {
             cfg.window_ratio,
             rng,
             &mut s,
+            stop,
         );
         let stats = GenStats { nfe: s.nfe, steps: s.n_accepted };
         let times = s.jumps.iter().map(|j| j.0).collect();
-        (x, stats, times)
+        (x, stats, times, complete)
     }
 }
 

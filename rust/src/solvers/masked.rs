@@ -79,6 +79,7 @@ use crate::score::{ScoreSource, Tok};
 use crate::solvers::driver::{self, Schedule};
 use crate::solvers::kernel::{dispatch_masked_kernel, MaskedFamily, StateFamily};
 use crate::solvers::{GenStats, Solver};
+use crate::util::cancel::{CancelToken, StopCtl};
 use crate::util::rng::{Rng, Xoshiro256};
 use crate::util::threadpool::{par_map_indexed, ThreadPool};
 
@@ -127,8 +128,35 @@ pub fn generate_batch<S: ScoreSource + ?Sized>(
             (toks, stats)
         });
     }
+    generate_batch_ctl(score, solver, grid, seeds, &CancelToken::never()).0
+}
+
+/// [`generate_batch`] with cooperative cancellation for the grid schemes
+/// (the serving path; [`Solver::Exact`] dispatches through
+/// [`exact_batch_ctl`] instead).  The whole lock-step batch shares one
+/// token, polled once per window; a fired token returns the lanes as they
+/// stand, without the terminal denoise.  The `bool` reports whether the
+/// run completed (`false` = it broke early on the token).
+pub fn generate_batch_ctl<S: ScoreSource + ?Sized>(
+    score: &S,
+    solver: Solver,
+    grid: &[f64],
+    seeds: &[u64],
+    cancel: &CancelToken,
+) -> (Vec<(Vec<Tok>, GenStats)>, bool) {
+    assert!(
+        !matches!(solver, Solver::Exact),
+        "exact batches dispatch through exact_batch_ctl"
+    );
     dispatch_masked_kernel!(solver, k => {
-        driver::run_batch::<MaskedFamily<S>, _>(score, &k, Schedule::Fixed(grid), seeds).0
+        let (results, _, completed) = driver::run_batch_ctl::<MaskedFamily<S>, _>(
+            score,
+            &k,
+            Schedule::Fixed(grid),
+            seeds,
+            cancel,
+        );
+        (results, completed)
     })
 }
 
@@ -181,9 +209,31 @@ pub fn generate_batch_adaptive<S: ScoreSource + ?Sized>(
     delta: f64,
     seeds: &[u64],
 ) -> (Vec<(Vec<Tok>, GenStats)>, AdaptiveTrace) {
+    let (results, trace, _) =
+        generate_batch_adaptive_ctl(score, solver, ctl, delta, seeds, &CancelToken::never());
+    (results, trace)
+}
+
+/// [`generate_batch_adaptive`] with cooperative cancellation (one shared
+/// token per lock-step batch, polled once per adaptive window).  The
+/// `bool` reports whether the run completed.
+pub fn generate_batch_adaptive_ctl<S: ScoreSource + ?Sized>(
+    score: &S,
+    solver: Solver,
+    ctl: StepController,
+    delta: f64,
+    seeds: &[u64],
+    cancel: &CancelToken,
+) -> (Vec<(Vec<Tok>, GenStats)>, AdaptiveTrace, bool) {
     validate_adaptive(solver, delta);
     dispatch_masked_kernel!(solver, k => {
-        driver::run_batch::<MaskedFamily<S>, _>(score, &k, Schedule::Adaptive { ctl, delta }, seeds)
+        driver::run_batch_ctl::<MaskedFamily<S>, _>(
+            score,
+            &k,
+            Schedule::Adaptive { ctl, delta },
+            seeds,
+            cancel,
+        )
     })
 }
 
@@ -220,11 +270,57 @@ pub fn exact_batch<S: ScoreSource + ?Sized>(
     cfg: &ExactCfg,
     seeds: &[u64],
 ) -> Vec<(Vec<Tok>, GenStats)> {
-    exact_fanout(seeds, |rng| match score.exact_uniform(delta, cfg, rng) {
-        Some((toks, s)) => (toks, GenStats { nfe: s.nfe, steps: s.n_accepted }),
-        None => {
-            let (toks, stats, _) = fhs_generate(score, delta, rng);
-            (toks, stats)
+    exact_batch_ctl(score, delta, cfg, None, seeds, &[])
+        .into_iter()
+        .map(|lane| (lane.tokens, lane.stats))
+        .collect()
+}
+
+/// One lane's outcome from [`exact_batch_ctl`]: `partial` is set when the
+/// lane was interrupted (cancel token fired, or `max_events` exhausted) —
+/// the tokens are then the run frozen at the stop point (still-masked
+/// positions keep the mask id on the first-hitting path).
+#[derive(Clone, Debug)]
+pub struct LaneResult {
+    pub tokens: Vec<Tok>,
+    pub stats: GenStats,
+    pub partial: bool,
+}
+
+/// [`exact_batch`] with per-lane cooperative early stop: lane i polls
+/// `cancels[i]` (a missing entry means "never") once per window/event, and
+/// `max_events` caps the accepted events of every lane.  This is the
+/// coordinator's dispatch target for [`Solver::Exact`] — exact runs are
+/// the unbounded ones, so each lane is individually interruptible.
+pub fn exact_batch_ctl<S: ScoreSource + ?Sized>(
+    score: &S,
+    delta: f64,
+    cfg: &ExactCfg,
+    max_events: Option<usize>,
+    seeds: &[u64],
+    cancels: &[CancelToken],
+) -> Vec<LaneResult> {
+    if seeds.is_empty() {
+        return Vec::new();
+    }
+    let threads = ThreadPool::default_size().min(seeds.len());
+    par_map_indexed(seeds.len(), threads, |i| {
+        let stop = StopCtl {
+            cancel: cancels.get(i).cloned().unwrap_or_default(),
+            max_events,
+        };
+        let mut rng = Xoshiro256::seed_from_u64(seeds[i]);
+        match score.exact_uniform_ctl(delta, cfg, &stop, &mut rng) {
+            Some((tokens, s, complete)) => LaneResult {
+                tokens,
+                stats: GenStats { nfe: s.nfe, steps: s.n_accepted },
+                partial: !complete,
+            },
+            None => {
+                let (tokens, stats, _times, complete) =
+                    <MaskedFamily<S> as StateFamily>::exact_ctl(score, delta, cfg, &stop, &mut rng);
+                LaneResult { tokens, stats, partial: !complete }
+            }
         }
     })
 }
@@ -419,6 +515,60 @@ mod tests {
         assert_eq!(again[1].0, out[1].0);
         let loose = exact_batch(&o, 0.05, &ExactCfg { window_ratio: 0.9, slack: 2.0 }, &seeds);
         assert!(loose.iter().all(|(t, _)| t.iter().all(|&c| (c as usize) < 5)));
+    }
+
+    #[test]
+    fn exact_batch_ctl_interrupts_and_caps() {
+        // A pre-fired cancel token stops a lane before any event: partial,
+        // all-masked tokens, zero NFE for the FHS fallback.
+        let o = oracle();
+        let seeds = [3u64, 141];
+        let fired = CancelToken::new();
+        fired.cancel();
+        let out = exact_batch_ctl(
+            &o,
+            1e-3,
+            &ExactCfg::default(),
+            None,
+            &seeds,
+            &[fired, CancelToken::never()],
+        );
+        assert!(out[0].partial, "cancelled lane must be partial");
+        assert!(out[0].tokens.iter().all(|&t| t == o.mask_id()));
+        assert_eq!(out[0].stats.nfe, 0);
+        // The co-batched lane with a never-token is untouched (bit-equal
+        // to the plain path).
+        assert!(!out[1].partial);
+        let want = exact_batch(&o, 1e-3, &ExactCfg::default(), &seeds[1..2]);
+        assert_eq!(out[1].tokens, want[0].0);
+        assert_eq!(out[1].stats.nfe, want[0].1.nfe);
+
+        // max_events caps the FHS unmask events: at most that many
+        // positions reveal, the rest stay masked, partial reported.
+        let out = exact_batch_ctl(&o, 1e-3, &ExactCfg::default(), Some(3), &seeds, &[]);
+        for lane in &out {
+            assert!(lane.partial, "16-dim oracle cannot finish in 3 events");
+            assert!(lane.stats.steps <= 3, "events {}", lane.stats.steps);
+            let masked = lane.tokens.iter().filter(|&&t| t == o.mask_id()).count();
+            assert!(masked >= 16 - 3, "only {masked} masks left");
+        }
+
+        // HMM uniform path: cancellation interrupts the window loop too.
+        let mut rng = Xoshiro256::seed_from_u64(27);
+        let chain = MarkovChain::generate(&mut rng, 5, 0.6);
+        let hmm = HmmUniformOracle::new(chain, 10);
+        let fired = CancelToken::new();
+        fired.cancel();
+        let out = exact_batch_ctl(
+            &hmm,
+            0.05,
+            &ExactCfg::default(),
+            None,
+            &[7u64],
+            std::slice::from_ref(&fired),
+        );
+        assert!(out[0].partial);
+        assert_eq!(out[0].stats.steps, 0, "no window may run after cancellation");
     }
 
     #[test]

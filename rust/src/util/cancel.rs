@@ -1,0 +1,125 @@
+//! Cooperative cancellation for long-running sampler jobs.
+//!
+//! A [`CancelToken`] is a cheaply clonable flag shared between the party
+//! that may cancel (the server's `cancel` verb, a [`super::cli`] user
+//! hitting ctrl-c, a test) and the party doing the work (the solver driver
+//! loop, the exact-simulation window loop).  The worker polls
+//! [`CancelToken::is_cancelled`] at its natural checkpoints — once per grid
+//! window for the approximate schemes, once per uniformization window /
+//! first-hitting event for exact simulation — and winds down returning
+//! whatever partial state it has.  Polling never consumes randomness, so a
+//! run that is *not* cancelled is bit-identical to one executed without any
+//! token.
+//!
+//! The default token ([`CancelToken::never`]) carries no flag at all: hot
+//! loops on the non-serving entry points pay a single `Option` branch.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Shared cancellation flag (see module docs).
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Option<Arc<AtomicBool>>);
+
+impl CancelToken {
+    /// An armed token: [`CancelToken::cancel`] flips it for every clone.
+    pub fn new() -> CancelToken {
+        CancelToken(Some(Arc::new(AtomicBool::new(false))))
+    }
+
+    /// A token that can never fire (the default).
+    pub fn never() -> CancelToken {
+        CancelToken(None)
+    }
+
+    /// Request cancellation.  No-op on a never-token.
+    pub fn cancel(&self) {
+        if let Some(flag) = &self.0 {
+            flag.store(true, Ordering::Relaxed);
+        }
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        match &self.0 {
+            Some(flag) => flag.load(Ordering::Relaxed),
+            None => false,
+        }
+    }
+
+    /// Whether the token can ever fire (i.e. is not a never-token).
+    pub fn can_fire(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Whether two tokens observe the same underlying flag.
+    pub fn same(a: &CancelToken, b: &CancelToken) -> bool {
+        match (&a.0, &b.0) {
+            (Some(x), Some(y)) => Arc::ptr_eq(x, y),
+            (None, None) => true,
+            _ => false,
+        }
+    }
+}
+
+/// Early-stop control for exact simulation: the cancel token plus an
+/// optional hard cap on *accepted* events (the `max_events` knob of
+/// [`crate::api::SolverCfg::Exact`]).  Exact simulation cannot budget its
+/// NFE a priori; `max_events` is the serving-side guard that bounds a
+/// pathological run, marking the result partial instead of overrunning.
+#[derive(Clone, Debug, Default)]
+pub struct StopCtl {
+    pub cancel: CancelToken,
+    pub max_events: Option<usize>,
+}
+
+impl StopCtl {
+    /// No cancellation, no event cap — the non-serving default.
+    pub fn none() -> StopCtl {
+        StopCtl::default()
+    }
+
+    pub fn cancelled(&self) -> bool {
+        self.cancel.is_cancelled()
+    }
+
+    /// Whether `accepted` events exhaust the cap.
+    pub fn events_exhausted(&self, accepted: usize) -> bool {
+        match self.max_events {
+            Some(m) => accepted >= m,
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_fires_across_clones() {
+        let t = CancelToken::new();
+        let c = t.clone();
+        assert!(!t.is_cancelled() && !c.is_cancelled());
+        c.cancel();
+        assert!(t.is_cancelled() && c.is_cancelled());
+        assert!(CancelToken::same(&t, &c));
+        assert!(!CancelToken::same(&t, &CancelToken::new()));
+    }
+
+    #[test]
+    fn never_token_never_fires() {
+        let t = CancelToken::never();
+        t.cancel();
+        assert!(!t.is_cancelled());
+        assert!(!t.can_fire());
+        assert!(CancelToken::same(&t, &CancelToken::default()));
+    }
+
+    #[test]
+    fn stop_ctl_event_cap() {
+        let s = StopCtl { cancel: CancelToken::never(), max_events: Some(3) };
+        assert!(!s.events_exhausted(2));
+        assert!(s.events_exhausted(3));
+        assert!(!StopCtl::none().events_exhausted(usize::MAX - 1));
+    }
+}

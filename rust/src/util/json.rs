@@ -8,14 +8,44 @@ use std::fmt::Write as _;
 use anyhow::{anyhow, bail, Context, Result};
 
 /// A parsed JSON value. Objects preserve key lookup via a BTreeMap.
-#[derive(Clone, Debug, PartialEq)]
+///
+/// Integers are a first-class variant: JSON has one number type, but the
+/// request protocol carries 64-bit ids and seeds whose values exceed 2^53 —
+/// routing them through `f64` silently corrupts them.  The parser yields
+/// [`Json::Int`] for any numeric token without a fraction or exponent, the
+/// writer emits the digits verbatim, and [`Json::as_u64`] recovers the
+/// exact value.  [`PartialEq`] compares `Int` and `Num` numerically so
+/// hand-built documents (`Json::Num(42.0)`) still equal their re-parse.
+#[derive(Clone, Debug)]
 pub enum Json {
     Null,
     Bool(bool),
     Num(f64),
+    /// Lossless integer (covers the full `u64` and `i64` ranges).
+    Int(i128),
     Str(String),
     Arr(Vec<Json>),
     Obj(BTreeMap<String, Json>),
+}
+
+impl PartialEq for Json {
+    fn eq(&self, other: &Json) -> bool {
+        match (self, other) {
+            (Json::Null, Json::Null) => true,
+            (Json::Bool(a), Json::Bool(b)) => a == b,
+            (Json::Str(a), Json::Str(b)) => a == b,
+            (Json::Arr(a), Json::Arr(b)) => a == b,
+            (Json::Obj(a), Json::Obj(b)) => a == b,
+            (Json::Num(a), Json::Num(b)) => a == b,
+            (Json::Int(a), Json::Int(b)) => a == b,
+            (Json::Num(a), Json::Int(b)) | (Json::Int(b), Json::Num(a)) => {
+                // Equal only when the float is exactly the integer (no
+                // rounding): the cast round-trip must land back on b.
+                *a == *b as f64 && !a.is_infinite() && *a as i128 == *b
+            }
+            _ => false,
+        }
+    }
 }
 
 impl Json {
@@ -53,16 +83,38 @@ impl Json {
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(x) => Ok(*x),
+            Json::Int(i) => Ok(*i as f64),
             _ => bail!("not a number: {self:?}"),
         }
     }
 
     pub fn as_usize(&self) -> Result<usize> {
-        let x = self.as_f64()?;
-        if x < 0.0 || x.fract() != 0.0 {
-            bail!("not a non-negative integer: {x}");
+        match self {
+            Json::Int(i) if *i >= 0 && *i <= usize::MAX as i128 => Ok(*i as usize),
+            Json::Int(i) => bail!("not a non-negative integer: {i}"),
+            _ => {
+                let x = self.as_f64()?;
+                if x < 0.0 || x.fract() != 0.0 {
+                    bail!("not a non-negative integer: {x}");
+                }
+                Ok(x as usize)
+            }
         }
-        Ok(x as usize)
+    }
+
+    /// Exact u64 accessor: integers round-trip losslessly through
+    /// [`Json::Int`]; floats are accepted only below 2^53, where every
+    /// integer is still exactly representable.
+    pub fn as_u64(&self) -> Result<u64> {
+        match self {
+            Json::Int(i) if *i >= 0 && *i <= u64::MAX as i128 => Ok(*i as u64),
+            Json::Num(x)
+                if *x >= 0.0 && x.fract() == 0.0 && *x <= 9_007_199_254_740_992.0 =>
+            {
+                Ok(*x as u64)
+            }
+            _ => bail!("not a u64: {self:?}"),
+        }
     }
 
     pub fn as_str(&self) -> Result<&str> {
@@ -114,6 +166,9 @@ impl Json {
                     let _ = write!(out, "{x}");
                 }
             }
+            Json::Int(i) => {
+                let _ = write!(out, "{i}");
+            }
             Json::Str(s) => write_escaped(out, s),
             Json::Arr(v) => {
                 out.push('[');
@@ -148,7 +203,17 @@ impl From<f64> for Json {
 }
 impl From<usize> for Json {
     fn from(x: usize) -> Json {
-        Json::Num(x as f64)
+        Json::Int(x as i128)
+    }
+}
+impl From<u64> for Json {
+    fn from(x: u64) -> Json {
+        Json::Int(x as i128)
+    }
+}
+impl From<i64> for Json {
+    fn from(x: i64) -> Json {
+        Json::Int(x as i128)
     }
 }
 impl From<&str> for Json {
@@ -246,6 +311,13 @@ impl<'a> Parser<'a> {
             self.i += 1;
         }
         let s = std::str::from_utf8(&self.b[start..self.i])?;
+        // Integer tokens (no fraction, no exponent) parse losslessly:
+        // 64-bit ids and seeds must not be laundered through f64.
+        if !s.contains(['.', 'e', 'E']) {
+            if let Ok(i) = s.parse::<i128>() {
+                return Ok(Json::Int(i));
+            }
+        }
         let x: f64 = s.parse().with_context(|| format!("bad number {s:?}"))?;
         Ok(Json::Num(x))
     }
@@ -404,6 +476,45 @@ mod tests {
         let s = v.to_string();
         assert!(s.contains("\"n\":42"), "{s}");
         assert!(s.contains("\"x\":0.5"), "{s}");
+    }
+
+    #[test]
+    fn u64_round_trip_is_lossless() {
+        // Values above 2^53 corrupt through f64; they must survive the
+        // parser + writer bit for bit.
+        for v in [
+            0u64,
+            1,
+            (1u64 << 53) - 1,
+            (1u64 << 53) + 1,
+            u64::MAX - 1,
+            u64::MAX,
+        ] {
+            let doc = Json::obj(vec![("seed", Json::from(v))]);
+            let text = doc.to_string();
+            assert!(text.contains(&format!("{v}")), "{text}");
+            let back = Json::parse(&text).unwrap();
+            assert_eq!(back.get("seed").unwrap().as_u64().unwrap(), v, "{text}");
+        }
+        // i64 negatives survive too.
+        let doc = Json::obj(vec![("x", Json::from(-1234567890123456789i64))]);
+        let back = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(back, doc);
+        // A float token is not a lossless u64 once it leaves the safe range.
+        assert!(Json::Num(9.3e18).as_u64().is_err());
+        assert_eq!(Json::Num(42.0).as_u64().unwrap(), 42);
+    }
+
+    #[test]
+    fn int_and_num_compare_numerically() {
+        assert_eq!(Json::Int(42), Json::Num(42.0));
+        assert_eq!(Json::Num(42.0), Json::Int(42));
+        assert_ne!(Json::Int(42), Json::Num(42.5));
+        // A u64 beyond 2^53 is NOT equal to its rounded f64 image.
+        let big = (1i128 << 53) + 1;
+        assert_ne!(Json::Int(big), Json::Num(big as f64));
+        // Usize/f64 From impls agree under eq.
+        assert_eq!(Json::from(7usize), Json::from(7.0f64));
     }
 
     #[test]

@@ -10,5 +10,6 @@ pub mod rng;
 pub mod dist;
 pub mod json;
 pub mod cli;
+pub mod cancel;
 pub mod threadpool;
 pub mod stats;

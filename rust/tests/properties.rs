@@ -3,6 +3,7 @@
 //! coverage required by DESIGN.md.  Failures print a replay seed
 //! (FASTDDS_PT_SEED).
 
+use fastdds::api::{CancelToken, SamplingSpec};
 use fastdds::coordinator::batcher::{BatchKey, BatchPolicy, DynamicBatcher};
 use fastdds::coordinator::request::GenerateRequest;
 use fastdds::prop_assert;
@@ -38,15 +39,15 @@ fn prop_batcher_conserves_lanes() {
         for id in 0..n_reqs {
             let n_samples = g.usize_in(1, 12);
             expect += n_samples;
-            b.enqueue(GenerateRequest {
-                id: id as u64,
-                family: if g.bool(0.5) { "markov".into() } else { "toy".into() },
-                solver: random_solver(g),
-                nfe: *g.choose(&[16usize, 32, 64]),
-                n_samples,
-                seed: g.usize_in(0, 1000) as u64,
-                ..Default::default()
-            });
+            let spec = SamplingSpec::builder()
+                .family(if g.bool(0.5) { "markov" } else { "toy" })
+                .solver(random_solver(g))
+                .nfe(*g.choose(&[16usize, 32, 64]))
+                .n_samples(n_samples)
+                .seed(g.usize_in(0, 1000) as u64)
+                .build()
+                .expect("generated specs are valid");
+            b.enqueue(GenerateRequest::new(id as u64, spec), CancelToken::never());
         }
         let mut got = 0usize;
         let mut batches = 0usize;
@@ -77,15 +78,14 @@ fn prop_batcher_conserves_lanes() {
 fn prop_batch_key_groups_iff_compatible() {
     check("batch_key_compatible", 100, |g| {
         let mk = |solver: Solver, nfe: usize, family: &str| {
-            BatchKey::of(&GenerateRequest {
-                id: 0,
-                family: family.into(),
-                solver,
-                nfe,
-                n_samples: 1,
-                seed: 0,
-                ..Default::default()
-            })
+            BatchKey::of(
+                &SamplingSpec::builder()
+                    .family(family)
+                    .solver(solver)
+                    .nfe(nfe)
+                    .build()
+                    .expect("valid spec"),
+            )
         };
         let theta = g.f64_in(0.05, 0.95);
         let nfe = *g.choose(&[16usize, 32, 64]);

@@ -1,0 +1,414 @@
+//! Wire-protocol compatibility + round-trip suite.
+//!
+//! 1. **v1 golden corpus** — one legacy flat request per historical knob
+//!    combination, replayed over TCP through the v2 upgrade shim.  Every
+//!    response must be *bit-identical in every deterministic field*
+//!    (sequences, nfe_used, echo fields, key set) to what the
+//!    pre-redesign server produced — pinned here by re-deriving the
+//!    expected sequences from the documented serving semantics (lane
+//!    seeding stride, fixed/tuned/adaptive grid construction, per-lane
+//!    solver streams), which the pre-redesign tests proved equal to the
+//!    server's output.  Only `latency_ms` (timing) and `id` (allocation
+//!    order) are non-deterministic, and they are checked for presence and
+//!    type instead.
+//!
+//! 2. **v2 equivalence** — each corpus entry re-sent as a structured v2
+//!    spec must produce the same sequences, proving the shim and the
+//!    native path share one execution.
+//!
+//! 3. **Spec fuzz round-trip** — randomized valid specs survive
+//!    spec → JSON text → spec bit-exactly.
+//!
+//! 4. **u64 identity fields** — seeds above 2^53 serve losslessly (the
+//!    old `f64` path silently corrupted them).
+
+use std::sync::Arc;
+
+use fastdds::api::{wire, SamplingSpec};
+use fastdds::coordinator::{BatchPolicy, Coordinator};
+use fastdds::schedule::adaptive::{AdaptiveController, NfeBudget, StepController};
+use fastdds::schedule::{ScheduleSpec, ScheduleTuner};
+use fastdds::score::hmm::HmmUniformOracle;
+use fastdds::score::markov::{MarkovChain, MarkovOracle};
+use fastdds::score::{ScoreSource, Tok};
+use fastdds::server::client::Client;
+use fastdds::server::Server;
+use fastdds::solvers::{grid, masked, Solver};
+use fastdds::testkit::{check, Gen};
+use fastdds::util::json::Json;
+use fastdds::util::rng::Xoshiro256;
+
+const DELTA: f64 = 1e-3;
+const LANE_STRIDE: u64 = 0x9E3779B97F4A7C15;
+
+fn markov_oracle() -> MarkovOracle {
+    let mut rng = Xoshiro256::seed_from_u64(23);
+    MarkovOracle::new(MarkovChain::generate(&mut rng, 6, 0.5), 16)
+}
+
+fn hmm_oracle() -> HmmUniformOracle {
+    let mut rng = Xoshiro256::seed_from_u64(29);
+    HmmUniformOracle::new(MarkovChain::generate(&mut rng, 5, 0.6), 12)
+}
+
+fn lane_seeds(seed: u64, n: usize) -> Vec<u64> {
+    (0..n)
+        .map(|i| seed.wrapping_add((i as u64).wrapping_mul(LANE_STRIDE)))
+        .collect()
+}
+
+/// One corpus entry: the raw v1 line (minus cmd), its expected per-lane
+/// sequences + nfe, and the echo fields the response must carry.
+struct Entry {
+    name: &'static str,
+    v1_body: String,
+    expected: Vec<(Vec<Tok>, usize)>,
+    /// (key, exact expected value) pairs beyond the base response shape.
+    echo: Vec<(&'static str, Json)>,
+}
+
+/// Pre-redesign serving semantics, re-derived: fixed grids run
+/// `masked::generate` per lane over `steps_for_nfe(min(nfe, budget-1))`
+/// steps; nfe_used is the max across lanes (the assembler's rule).
+fn expect_fixed(
+    oracle: &MarkovOracle,
+    solver: Solver,
+    grid_ts: &[f64],
+    seed: u64,
+    n: usize,
+) -> Vec<(Vec<Tok>, usize)> {
+    lane_seeds(seed, n)
+        .into_iter()
+        .map(|s| {
+            let mut rng = Xoshiro256::seed_from_u64(s);
+            let (toks, stats) = masked::generate(oracle, solver, grid_ts, &mut rng);
+            (toks, stats.nfe)
+        })
+        .collect()
+}
+
+fn corpus(oracle: &MarkovOracle) -> Vec<Entry> {
+    let mut entries = Vec::new();
+    let uniform16 = grid::masked_uniform(16, DELTA);
+
+    // --- one-stage schemes, uniform grid, the original PR-1 surface -----
+    for (name, solver) in [
+        ("euler", Solver::Euler),
+        ("tau", Solver::TauLeaping),
+        ("tweedie", Solver::Tweedie),
+        ("parallel", Solver::ParallelDecoding),
+    ] {
+        entries.push(Entry {
+            name,
+            v1_body: format!(r#""solver": "{name}", "nfe": 16, "n_samples": 2, "seed": 11"#),
+            expected: expect_fixed(oracle, solver, &uniform16, 11, 2),
+            echo: vec![("schedule", Json::from("uniform"))],
+        });
+    }
+
+    // --- two-stage θ-schemes --------------------------------------------
+    let trap = Solver::Trapezoidal { theta: 0.5 };
+    entries.push(Entry {
+        name: "trapezoidal-uniform",
+        v1_body: r#""solver": "trapezoidal:0.5", "nfe": 32, "n_samples": 3, "seed": 7"#.into(),
+        expected: expect_fixed(oracle, trap, &grid::masked_uniform(16, DELTA), 7, 3),
+        echo: vec![("schedule", Json::from("uniform"))],
+    });
+
+    // --- PR-2 surface: log schedule, budget, adaptive, tuned ------------
+    let rk2 = Solver::Rk2 { theta: 0.3 };
+    entries.push(Entry {
+        name: "rk2-log",
+        v1_body: r#""solver": "rk2:0.3", "nfe": 32, "n_samples": 2, "seed": 5, "schedule": "log""#
+            .into(),
+        expected: expect_fixed(oracle, rk2, &grid::masked_log(16, DELTA), 5, 2),
+        echo: vec![("schedule", Json::from("log"))],
+    });
+
+    entries.push(Entry {
+        name: "trapezoidal-budgeted",
+        v1_body: r#""solver": "trapezoidal:0.5", "nfe": 64, "n_samples": 2, "seed": 3,
+                     "nfe_budget": 33"#
+            .into(),
+        // Budget folds into the step count: min(64, 32) NFE = 16 steps.
+        expected: expect_fixed(oracle, trap, &grid::masked_uniform(16, DELTA), 3, 2),
+        echo: vec![
+            ("schedule", Json::from("uniform")),
+            ("nfe_budget", Json::from(33usize)),
+        ],
+    });
+
+    // Adaptive: lanes of the (single) request vote on one shared dt; the
+    // pre-redesign scheduler seeded dt0 from (1-δ)/steps_for_nfe(nfe).
+    {
+        let (nfe, tol, budget, seed, n) = (64usize, 1e-3f64, 24usize, 9u64, 2usize);
+        let dt0 = (1.0 - DELTA) / trap.steps_for_nfe(nfe) as f64;
+        let ctl = StepController::new(AdaptiveController::for_span(tol, 1.0, DELTA), dt0)
+            .with_budget(NfeBudget { total: budget, nfe_per_step: 2, reserve: 1 });
+        let results =
+            masked::generate_batch_adaptive(oracle, trap, ctl, DELTA, &lane_seeds(seed, n)).0;
+        entries.push(Entry {
+            name: "trapezoidal-adaptive-budgeted",
+            v1_body: format!(
+                r#""solver": "trapezoidal:0.5", "nfe": {nfe}, "n_samples": {n},
+                   "seed": {seed}, "schedule": "adaptive:tol=0.001", "nfe_budget": {budget}"#
+            ),
+            expected: results.into_iter().map(|(t, s)| (t, s.nfe)).collect(),
+            echo: vec![
+                ("schedule", Json::from("adaptive:tol=0.001")),
+                ("nfe_budget", Json::from(budget)),
+            ],
+        });
+    }
+
+    // Tuned: the serving-time fit (2 pilots, tol 1e-3) on a fresh cache,
+    // then the fixed-grid run over the fitted grid.
+    {
+        let steps = 8usize;
+        let tuned = ScheduleTuner { pilots: 2, tol: 1e-3, ..Default::default() }
+            .fit_masked(oracle, trap, steps, DELTA, "markov");
+        let results = masked::generate_batch(oracle, trap, &tuned.grid, &lane_seeds(13, 2));
+        entries.push(Entry {
+            name: "trapezoidal-tuned",
+            v1_body: r#""solver": "trapezoidal:0.5", "nfe": 16, "n_samples": 2, "seed": 13,
+                         "schedule": "tuned:steps=8""#
+                .into(),
+            expected: results.into_iter().map(|(t, s)| (t, s.nfe)).collect(),
+            echo: vec![("schedule", Json::from("tuned:steps=8"))],
+        });
+    }
+
+    // --- PR-3 surface: exact simulation (FHS on the markov family) ------
+    {
+        let results: Vec<(Vec<Tok>, usize)> = lane_seeds(21, 2)
+            .into_iter()
+            .map(|s| {
+                let mut rng = Xoshiro256::seed_from_u64(s);
+                let (toks, stats, _) = masked::fhs_generate(oracle, DELTA, &mut rng);
+                (toks, stats.nfe)
+            })
+            .collect();
+        entries.push(Entry {
+            name: "exact-fhs",
+            v1_body: r#""solver": "exact", "nfe": 16, "n_samples": 2, "seed": 21"#.into(),
+            expected: results,
+            echo: vec![("schedule", Json::from("uniform"))],
+        });
+    }
+
+    entries
+}
+
+/// Field-for-field check of a v1 response against the expected lanes and
+/// the exact legacy key set.
+fn assert_v1_response(name: &str, r: &Json, expected: &[(Vec<Tok>, usize)], echo: &[(&str, Json)]) {
+    assert_eq!(r.get("ok").unwrap().as_bool().unwrap(), true, "{name}: {r:?}");
+    let seqs = r.get("sequences").unwrap().as_arr().unwrap();
+    assert_eq!(seqs.len(), expected.len(), "{name}: lane count");
+    for (k, (want, _)) in expected.iter().enumerate() {
+        let got: Vec<Tok> = seqs[k]
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|t| t.as_f64().unwrap() as Tok)
+            .collect();
+        assert_eq!(&got, want, "{name}: lane {k} sequence must be bit-identical");
+    }
+    let want_nfe = expected.iter().map(|(_, n)| *n).max().unwrap();
+    assert_eq!(
+        r.get("nfe_used").unwrap().as_usize().unwrap(),
+        want_nfe,
+        "{name}: nfe_used"
+    );
+    for (key, want) in echo {
+        assert_eq!(r.get(key).unwrap(), want, "{name}: echo field {key}");
+    }
+    // Non-deterministic fields: present + typed.
+    assert!(r.get("latency_ms").unwrap().as_f64().is_ok(), "{name}");
+    assert!(r.get("id").unwrap().as_u64().is_ok(), "{name}");
+    // EXACT legacy key set: base response + ok + schedule echo + the
+    // optional echoes this entry carries — nothing else (no v2 leakage).
+    if let Json::Obj(m) = r {
+        let mut want_keys: Vec<String> = vec![
+            "id".into(),
+            "latency_ms".into(),
+            "nfe_used".into(),
+            "ok".into(),
+            "sequences".into(),
+        ];
+        for (k, _) in echo {
+            want_keys.push((*k).to_string());
+        }
+        want_keys.sort();
+        let got_keys: Vec<String> = m.keys().cloned().collect();
+        assert_eq!(got_keys, want_keys, "{name}: v1 response key set drifted");
+    } else {
+        panic!("{name}: response not an object");
+    }
+}
+
+#[test]
+fn v1_compat_corpus_replays_bit_identical() {
+    let oracle = markov_oracle();
+    let entries = corpus(&oracle);
+    let coord = Coordinator::start_local(Arc::new(markov_oracle()), BatchPolicy::Greedy, 8);
+    let srv = Server::start("127.0.0.1:0", coord).unwrap();
+    let mut c = Client::connect(&srv.addr.to_string()).unwrap();
+    for e in &entries {
+        let line = format!(r#"{{"cmd": "generate", {}}}"#, e.v1_body);
+        let r = c.raw(&line).unwrap();
+        assert_v1_response(e.name, &r, &e.expected, &e.echo);
+    }
+
+    // The same requests through the v2 envelope produce the same samples:
+    // the upgrade shim and the native path share one execution.
+    for e in &entries {
+        let flat = Json::parse(&format!("{{{}}}", e.v1_body)).unwrap();
+        let spec = wire::request_from_json(&flat).unwrap().spec;
+        let resp = c.generate_spec(&spec).unwrap();
+        for (k, (want, _)) in e.expected.iter().enumerate() {
+            assert_eq!(&resp.sequences[k], want, "{}: v2 lane {k} diverged", e.name);
+        }
+        let want_nfe = e.expected.iter().map(|(_, n)| *n).max().unwrap();
+        assert_eq!(resp.nfe_used, want_nfe, "{}: v2 nfe_used", e.name);
+    }
+    srv.stop();
+}
+
+#[test]
+fn v1_exact_knobs_replay_on_hmm_family() {
+    // The PR-4 surface: exact + window_ratio/slack on the uniform-state
+    // oracle — expected lanes re-derived from the per-lane simulator.
+    let oracle = hmm_oracle();
+    let cfg = fastdds::ctmc::uniformization::ExactCfg { window_ratio: 0.6, slack: 3.0 };
+    let expected: Vec<(Vec<Tok>, usize)> = lane_seeds(9, 2)
+        .into_iter()
+        .map(|s| {
+            let mut rng = Xoshiro256::seed_from_u64(s);
+            let (toks, stats) = oracle.exact_uniform(DELTA, &cfg, &mut rng).unwrap();
+            (toks, stats.nfe)
+        })
+        .collect();
+    let coord = Coordinator::start_local(Arc::new(hmm_oracle()), BatchPolicy::Greedy, 8);
+    let srv = Server::start("127.0.0.1:0", coord).unwrap();
+    let mut c = Client::connect(&srv.addr.to_string()).unwrap();
+    let r = c
+        .raw(
+            r#"{"cmd": "generate", "solver": "exact", "nfe": 16,
+                "window_ratio": 0.6, "slack": 3.0, "n_samples": 2, "seed": 9}"#,
+        )
+        .unwrap();
+    assert_v1_response(
+        "exact-hmm-knobs",
+        &r,
+        &expected,
+        &[
+            ("schedule", Json::from("uniform")),
+            ("slack", Json::Num(3.0)),
+            ("window_ratio", Json::Num(0.6)),
+        ],
+    );
+    srv.stop();
+}
+
+#[test]
+fn spec_fuzz_round_trips_bit_exact() {
+    check("spec_wire_roundtrip", 200, |g| {
+        let families = ["markov", "toy", "transformer"];
+        let spec = if g.bool(0.3) {
+            // Exact spec: random knobs respecting the builder's floors.
+            let wr = g.f64_in(0.3, 0.95);
+            let slack = g.f64_in(1.5 / wr + 0.1, 12.0);
+            let mut b = SamplingSpec::builder()
+                .family(*g.choose(&families))
+                .n_samples(g.usize_in(1, 8))
+                .seed(g.usize_in(0, 1 << 30) as u64)
+                .solver(Solver::Exact)
+                .window_ratio(Some(wr))
+                .slack(Some(slack));
+            if g.bool(0.5) {
+                b = b.max_events(Some(g.usize_in(1, 10_000)));
+            }
+            b.build().expect("valid exact spec")
+        } else {
+            let solver = match g.usize_in(0, 5) {
+                0 => Solver::Euler,
+                1 => Solver::TauLeaping,
+                2 => Solver::Tweedie,
+                3 => Solver::Trapezoidal { theta: g.f64_in(0.05, 0.95) },
+                4 => Solver::Rk2 { theta: g.f64_in(0.05, 0.5) },
+                _ => Solver::ParallelDecoding,
+            };
+            let two_stage = solver.nfe_per_step() == 2;
+            let schedule = match g.usize_in(0, if two_stage { 3 } else { 1 }) {
+                0 => ScheduleSpec::Uniform,
+                1 => ScheduleSpec::Log,
+                2 => ScheduleSpec::Adaptive { tol: g.f64_in(1e-6, 1e-1) },
+                _ => ScheduleSpec::Tuned { steps: g.usize_in(0, 64) },
+            };
+            let nfe = g.usize_in(2, 256);
+            let mut b = SamplingSpec::builder()
+                .family(*g.choose(&families))
+                .n_samples(g.usize_in(1, 8))
+                .seed(g.usize_in(0, 1 << 30) as u64)
+                .solver(solver)
+                .nfe(nfe)
+                .schedule(schedule);
+            if g.bool(0.4) {
+                b = b.nfe_budget(Some(g.usize_in(3, 512)));
+            }
+            b.build().expect("valid scheme spec")
+        };
+        // Through the structured object AND through wire text.
+        let j = wire::spec_to_json(&spec);
+        let back = wire::spec_from_json(&j).map_err(|e| format!("{e}"))?;
+        fastdds::prop_assert!(back == spec, "object round-trip diverged: {j:?}");
+        let text = j.to_string();
+        let re = Json::parse(&text).map_err(|e| format!("{e:#}"))?;
+        let back = wire::spec_from_json(&re).map_err(|e| format!("{e}"))?;
+        fastdds::prop_assert!(back == spec, "text round-trip diverged: {text}");
+        Ok(())
+    });
+}
+
+#[test]
+fn u64_seed_serves_losslessly_above_2_53() {
+    // Two seeds that collide under f64 rounding must produce DIFFERENT
+    // samples (the pre-redesign parse collapsed them).
+    let big = (1u64 << 53) + 1;
+    let coord = Coordinator::start_local(Arc::new(markov_oracle()), BatchPolicy::Greedy, 8);
+    let srv = Server::start("127.0.0.1:0", coord).unwrap();
+    let mut c = Client::connect(&srv.addr.to_string()).unwrap();
+    let r1 = c
+        .raw(&format!(
+            r#"{{"cmd": "generate", "solver": "tau", "nfe": 16, "seed": {}}}"#,
+            big
+        ))
+        .unwrap();
+    let r2 = c
+        .raw(&format!(
+            r#"{{"cmd": "generate", "solver": "tau", "nfe": 16, "seed": {}}}"#,
+            big - 1 // rounds to the same f64
+        ))
+        .unwrap();
+    assert_eq!((big as f64) as u64, ((big - 1) as f64) as u64, "premise");
+    let s1 = r1.get("sequences").unwrap().to_string();
+    let s2 = r2.get("sequences").unwrap().to_string();
+    assert_ne!(s1, s2, "adjacent >2^53 seeds must not collide anymore");
+    // And the exact seed drives the documented lane stream.
+    let mut rng = Xoshiro256::seed_from_u64(big);
+    let (want, _) = masked::generate(
+        &markov_oracle(),
+        Solver::TauLeaping,
+        &grid::masked_uniform(16, DELTA),
+        &mut rng,
+    );
+    let got: Vec<Tok> = r1.get("sequences").unwrap().as_arr().unwrap()[0]
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|t| t.as_f64().unwrap() as Tok)
+        .collect();
+    assert_eq!(got, want, "big seed must drive the exact u64 lane stream");
+    srv.stop();
+}

@@ -1,12 +1,15 @@
 #!/usr/bin/env bash
 # Tier-1 verification in one command (see ROADMAP.md):
 #   build + full test suite (incl. the golden parity suite pinning the
-#   kernel/driver refactor AND the bracketed thinning loop bit-for-bit)
-#   + bench smoke runs that refresh BENCH_solvers.json (per-step perf +
-#   driver dispatch-overhead rows), BENCH_schedules.json (KL/NFE for fixed
-#   vs adaptive vs tuned grids) and BENCH_exact.json (exact-path
-#   evaluations-per-sample, wall-clock, bracket hit rates) so all three
-#   trajectories are tracked across PRs.
+#   kernel/driver refactor AND the bracketed thinning loop bit-for-bit,
+#   plus the v1 wire-compat corpus replaying every historical knob
+#   combination through the v2 upgrade shim) + bench smoke runs that
+#   refresh BENCH_solvers.json (per-step perf + driver dispatch-overhead
+#   rows), BENCH_schedules.json (KL/NFE for fixed vs adaptive vs tuned
+#   grids), BENCH_exact.json (exact-path evaluations-per-sample,
+#   wall-clock, bracket hit rates) and BENCH_serve.json (TCP serving
+#   req/s + p50/p99 latency, blocking vs streaming, cancel-to-partial)
+#   so all four trajectories are tracked across PRs.
 #
 # Usage: scripts/tier1.sh [--quick|--no-bench]
 #   --quick     explicit alias of the default (quick bench smoke)
@@ -29,10 +32,16 @@ fi
 
 cargo test -q
 
+# The v1 compat corpus must exist and replay bit-identical through the v2
+# intake (it also ran as part of the full suite above; run it by name so a
+# filtered-out or deleted suite fails loudly here).
+cargo test -q --test wire_compat
+
 if [[ "${1:-}" != "--no-bench" ]]; then
     cargo bench --bench solver_steps -- --quick
     cargo bench --bench schedules -- --quick
     cargo bench --bench exact -- --quick
+    cargo bench --bench serve -- --quick
     # The dispatch-overhead rows must exist: they are the recorded evidence
     # that the SolverKernel/Driver indirection is free on the hot path
     # (compare each `driver_direct` row against its `generate` twin, <=2%).
@@ -46,6 +55,17 @@ if [[ "${1:-}" != "--no-bench" ]]; then
                'exact toy evals-per-sample' 'exact toy bracket-hit-rate'; do
         grep -q "$row" BENCH_exact.json || {
             echo "tier-1 FAIL: row '$row' missing from BENCH_exact.json"
+            exit 1
+        }
+    done
+    # The serving record must carry both transport modes and the
+    # cancellation headline.
+    for row in 'serve blocking req-per-sec' 'serve blocking p50-ms' \
+               'serve blocking p99-ms' 'serve streaming req-per-sec' \
+               'serve streaming p50-ms' 'serve streaming p99-ms' \
+               'serve cancel-to-partial-ms'; do
+        grep -q "$row" BENCH_serve.json || {
+            echo "tier-1 FAIL: row '$row' missing from BENCH_serve.json"
             exit 1
         }
     done

@@ -15,6 +15,7 @@ use fastdds::score::markov::{MarkovChain, MarkovOracle};
 use fastdds::server::client::Client;
 use fastdds::server::Server;
 use fastdds::solvers::Solver;
+use fastdds::testkit::fault::{silence_injected_panics, FaultPlan, FaultyScore};
 use fastdds::util::json::Json;
 use fastdds::util::rng::Xoshiro256;
 
@@ -119,6 +120,74 @@ fn main() {
         report.value(&format!("serve {mode} p50-ms"), percentile(&lats, 0.50));
         report.value(&format!("serve {mode} p99-ms"), percentile(&lats, 0.99));
     }
+    srv.stop();
+
+    // --- serving under injected lane panics ------------------------------
+    // The robustness headline: the same workload with hash-deterministic
+    // panics injected into ~1% of requests.  A 2-lane trapezoidal nfe=32
+    // dispatch makes ~33 score calls, so a per-tick panic probability of
+    // 3e-4 gives 1 - (1 - 3e-4)^33 ~ 1% per request.  Failed requests come
+    // back typed (`lane_failed`); survivors and innocent co-batched
+    // siblings complete, and throughput/p99 should stay within ~20% of the
+    // clean rows above (the driver's regression gate).
+    silence_injected_panics();
+    let mut rng = Xoshiro256::seed_from_u64(23);
+    let oracle = MarkovOracle::new(MarkovChain::generate(&mut rng, 6, 0.5), 16);
+    let faulty = Arc::new(FaultyScore::new(
+        oracle,
+        FaultPlan::new().random_panics(424_242, 3e-4),
+    ));
+    let coord = Coordinator::start_local(faulty, BatchPolicy::Greedy, 8);
+    let srv = Server::start("127.0.0.1:0", coord).unwrap();
+    let addr = srv.addr.to_string();
+    let started = Instant::now();
+    let handles: Vec<_> = (0..n_clients)
+        .map(|ci| {
+            let addr = addr.clone();
+            std::thread::spawn(move || -> (Vec<f64>, usize) {
+                let mut c = Client::connect(&addr).unwrap();
+                let mut lat = Vec::with_capacity(reqs_per_client);
+                let mut failed = 0usize;
+                for k in 0..reqs_per_client {
+                    let spec = SamplingSpec::builder()
+                        .solver(Solver::Trapezoidal { theta: 0.5 })
+                        .nfe(32)
+                        .n_samples(2)
+                        .seed((ci * 1_000 + k) as u64)
+                        .build()
+                        .unwrap();
+                    let t0 = Instant::now();
+                    match c.generate_spec(&spec) {
+                        Ok(resp) => {
+                            assert_eq!(resp.sequences.len(), 2);
+                            lat.push(t0.elapsed().as_secs_f64() * 1e3);
+                        }
+                        Err(e) if e.to_string().contains("lane_failed") => {
+                            failed += 1;
+                        }
+                        Err(e) => panic!("unexpected serve error: {e:#}"),
+                    }
+                }
+                (lat, failed)
+            })
+        })
+        .collect();
+    let mut lats: Vec<f64> = Vec::new();
+    let mut failed = 0usize;
+    for h in handles {
+        let (l, f) = h.join().unwrap();
+        lats.extend(l);
+        failed += f;
+    }
+    let wall = started.elapsed().as_secs_f64().max(1e-9);
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    report.value(
+        &format!("serve faulty req-per-sec ({n_clients} clients)"),
+        lats.len() as f64 / wall,
+    );
+    report.value("serve faulty p50-ms", percentile(&lats, 0.50));
+    report.value("serve faulty p99-ms", percentile(&lats, 0.99));
+    report.value("serve faulty failed-requests", failed as f64);
     srv.stop();
 
     // --- cancellation latency on a long exact run ------------------------

@@ -164,6 +164,29 @@ mod tests {
     }
 
     #[test]
+    fn qos_knobs_never_split_a_batch() {
+        // deadline_ms/priority are serving QoS, not execution identity:
+        // requests differing only in them MUST co-batch (the key hashes the
+        // plan, which never sees them — pinned here so it stays true).
+        let trap = Solver::Trapezoidal { theta: 0.5 };
+        let base = BatchKey::of(&spec(trap, 32).build().unwrap());
+        assert_eq!(
+            base,
+            BatchKey::of(&spec(trap, 32).deadline_ms(Some(100)).build().unwrap())
+        );
+        assert_eq!(
+            base,
+            BatchKey::of(&spec(trap, 32).priority(3).build().unwrap())
+        );
+        assert_eq!(
+            base,
+            BatchKey::of(
+                &spec(trap, 32).deadline_ms(Some(5)).priority(0).build().unwrap()
+            )
+        );
+    }
+
+    #[test]
     fn adaptive_keys_group_same_tolerance_lanes() {
         let trap = Solver::Trapezoidal { theta: 0.5 };
         let mk = |nfe: usize, tol: f64, budget: Option<usize>| {

@@ -43,6 +43,15 @@ pub const MAX_TUNED_STEPS: usize = 512;
 /// replay samples from it).
 pub const LANE_SEED_STRIDE: u64 = 0x9E3779B97F4A7C15;
 
+/// Priority assumed when a request does not set one.  Deliberately in the
+/// middle of the range so callers can mark traffic as *either* more or
+/// less important than the default.
+pub const DEFAULT_PRIORITY: u8 = 1;
+
+/// Highest accepted priority (inclusive).  Small on purpose: priorities
+/// are shedding classes, not a fine-grained fairness dial.
+pub const MAX_PRIORITY: u8 = 3;
+
 /// Solver configuration: the typed half of the request surface where the
 /// *shape* makes invalid knob combinations unrepresentable.
 #[derive(Clone, Debug, PartialEq)]
@@ -83,6 +92,12 @@ pub struct SamplingSpec {
     n_samples: usize,
     seed: u64,
     cfg: SolverCfg,
+    /// Serving QoS knobs.  Deliberately OUTSIDE [`SolverCfg`] and never
+    /// consulted by [`SamplingSpec::plan`]: two requests that differ only
+    /// in deadline or priority execute identically and must co-batch
+    /// (`BatchKey` hashes the plan, so this holds by construction).
+    deadline_ms: Option<u64>,
+    priority: u8,
 }
 
 /// The resolved execution identity of a spec: everything that decides how
@@ -173,6 +188,41 @@ impl SamplingSpec {
         }
     }
 
+    /// Wall-clock budget for the whole request, measured from coordinator
+    /// intake.  `None` = no deadline.  Enforced at the driver's per-window
+    /// cancel poll; an expired run returns a partial response.
+    pub fn deadline_ms(&self) -> Option<u64> {
+        self.deadline_ms
+    }
+
+    /// Shedding class in `0..=MAX_PRIORITY` (higher = kept longer under
+    /// overload).  Defaults to [`DEFAULT_PRIORITY`].
+    pub fn priority(&self) -> u8 {
+        self.priority
+    }
+
+    /// Score evaluations this spec is *planned* to spend per lane,
+    /// terminal denoise included — the admission-control cost model.
+    /// `None` means the plan cannot bound its own NFE up front (exact
+    /// simulation with no `max_events` cap): such requests are never
+    /// rejected as infeasible, only bounded by their deadline at runtime.
+    pub fn planned_nfe(&self) -> Option<usize> {
+        match self.plan() {
+            ExecPlan::Uniform { steps } | ExecPlan::Log { steps } | ExecPlan::Tuned { steps } => {
+                Some(steps * self.solver().nfe_per_step() + 1)
+            }
+            ExecPlan::Adaptive { dt0, budget, .. } => Some(match budget {
+                Some(b) => b,
+                // No hard budget: assume the controller keeps the seed dt.
+                None => {
+                    let steps = ((1.0 - DELTA) / dt0).ceil() as usize;
+                    steps * self.solver().nfe_per_step() + 1
+                }
+            }),
+            ExecPlan::Exact { max_events, .. } => max_events.map(|m| m + 1),
+        }
+    }
+
     /// RNG stream seed of lane `sample_idx` (see [`LANE_SEED_STRIDE`]).
     pub fn lane_seed(&self, sample_idx: usize) -> u64 {
         self.seed
@@ -248,6 +298,10 @@ pub enum SpecError {
     AdaptiveTolInvalid { tol: f64 },
     /// n_samples must be >= 1.
     NoSamples,
+    /// deadline_ms must be >= 1 when given.
+    DeadlineZero,
+    /// priority above [`MAX_PRIORITY`].
+    PriorityOutOfRange { priority: u8 },
     /// A wire-level field failed to parse (message from the field parser).
     Parse { field: &'static str, message: String },
     /// A required wire-level field is missing or ill-typed.
@@ -271,6 +325,8 @@ impl SpecError {
             SpecError::NeedsTwoStage { .. } => "needs_two_stage",
             SpecError::AdaptiveTolInvalid { .. } => "adaptive_tol_invalid",
             SpecError::NoSamples => "no_samples",
+            SpecError::DeadlineZero => "deadline_zero",
+            SpecError::PriorityOutOfRange { .. } => "priority_out_of_range",
             SpecError::Parse { .. } => "parse_error",
             SpecError::MissingField { .. } => "missing_field",
         }
@@ -334,6 +390,11 @@ impl fmt::Display for SpecError {
                 write!(f, "adaptive tol {tol} must be finite and >= 0")
             }
             SpecError::NoSamples => write!(f, "n_samples must be >= 1"),
+            SpecError::DeadlineZero => write!(f, "deadline_ms must be >= 1 when given"),
+            SpecError::PriorityOutOfRange { priority } => write!(
+                f,
+                "priority {priority} above the maximum {MAX_PRIORITY}"
+            ),
             SpecError::Parse { field, message } => write!(f, "bad {field}: {message}"),
             SpecError::MissingField { field, message } => {
                 write!(f, "field {field:?}: {message}")
@@ -359,6 +420,8 @@ pub struct SpecBuilder {
     window_ratio: Option<f64>,
     slack: Option<f64>,
     max_events: Option<usize>,
+    deadline_ms: Option<u64>,
+    priority: u8,
 }
 
 impl Default for SpecBuilder {
@@ -374,6 +437,8 @@ impl Default for SpecBuilder {
             window_ratio: None,
             slack: None,
             max_events: None,
+            deadline_ms: None,
+            priority: DEFAULT_PRIORITY,
         }
     }
 }
@@ -429,11 +494,27 @@ impl SpecBuilder {
         self
     }
 
+    pub fn deadline_ms(mut self, deadline: Option<u64>) -> Self {
+        self.deadline_ms = deadline;
+        self
+    }
+
+    pub fn priority(mut self, priority: u8) -> Self {
+        self.priority = priority;
+        self
+    }
+
     /// Validate and assemble.  Every serving-surface invariant lives here
     /// (and only here): the scheduler trusts any spec it receives.
     pub fn build(self) -> Result<SamplingSpec, SpecError> {
         if self.n_samples == 0 {
             return Err(SpecError::NoSamples);
+        }
+        if self.deadline_ms == Some(0) {
+            return Err(SpecError::DeadlineZero);
+        }
+        if self.priority > MAX_PRIORITY {
+            return Err(SpecError::PriorityOutOfRange { priority: self.priority });
         }
         // θ ranges of the second-order schemes (Thms. 5.4/5.5).  NaN never
         // passes a range check.
@@ -503,6 +584,8 @@ impl SpecBuilder {
                 n_samples: self.n_samples,
                 seed: self.seed,
                 cfg: SolverCfg::Exact { window_ratio, slack, max_events: self.max_events },
+                deadline_ms: self.deadline_ms,
+                priority: self.priority,
             });
         }
 
@@ -562,6 +645,8 @@ impl SpecBuilder {
                 nfe: self.nfe,
                 nfe_budget: self.nfe_budget,
             },
+            deadline_ms: self.deadline_ms,
+            priority: self.priority,
         })
     }
 }
@@ -736,6 +821,53 @@ mod tests {
                 max_events: Some(100),
             }
         );
+    }
+
+    #[test]
+    fn deadline_and_priority_are_qos_only() {
+        let s = SamplingSpec::builder().build().unwrap();
+        assert_eq!(s.deadline_ms(), None);
+        assert_eq!(s.priority(), DEFAULT_PRIORITY);
+        let q = SamplingSpec::builder()
+            .deadline_ms(Some(250))
+            .priority(MAX_PRIORITY)
+            .build()
+            .unwrap();
+        assert_eq!(q.deadline_ms(), Some(250));
+        assert_eq!(q.priority(), MAX_PRIORITY);
+        // QoS knobs do not change the execution identity.
+        assert_eq!(s.plan(), q.plan());
+        // Validation.
+        let e = SamplingSpec::builder().deadline_ms(Some(0)).build().unwrap_err();
+        assert_eq!(e.code(), "deadline_zero");
+        let e = SamplingSpec::builder().priority(MAX_PRIORITY + 1).build().unwrap_err();
+        assert_eq!(e.code(), "priority_out_of_range");
+        assert!(format!("{e}").contains("priority"));
+    }
+
+    #[test]
+    fn planned_nfe_matches_plan() {
+        let trap = Solver::Trapezoidal { theta: 0.5 };
+        // Fixed grids: steps * per_step + terminal denoise.
+        assert_eq!(scheme(trap, 64).build().unwrap().planned_nfe(), Some(65));
+        assert_eq!(scheme(Solver::Tweedie, 16).build().unwrap().planned_nfe(), Some(17));
+        // Adaptive with a hard budget: the budget IS the bound.
+        let ad = scheme(trap, 64)
+            .schedule(ScheduleSpec::Adaptive { tol: 1e-3 })
+            .nfe_budget(Some(24))
+            .build()
+            .unwrap();
+        assert_eq!(ad.planned_nfe(), Some(24));
+        // Adaptive without a budget: derived from the seed dt.
+        let ad = scheme(trap, 64)
+            .schedule(ScheduleSpec::Adaptive { tol: 1e-3 })
+            .build()
+            .unwrap();
+        assert_eq!(ad.planned_nfe(), Some(65));
+        // Exact: bounded only when max_events caps the run.
+        assert_eq!(scheme(Solver::Exact, 16).build().unwrap().planned_nfe(), None);
+        let ex = scheme(Solver::Exact, 16).max_events(Some(100)).build().unwrap();
+        assert_eq!(ex.planned_nfe(), Some(101));
     }
 
     #[test]

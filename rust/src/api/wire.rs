@@ -24,12 +24,56 @@
 //!
 //! Any request without `"v": 2` is interpreted as the historical flat form
 //! (`solver`/`nfe`/`n_samples`/`seed`/`family`/`schedule`/`nfe_budget`/
-//! `window_ratio`/`slack` at top level) and upgraded through the same
-//! builder.  [`V1Echo`] preserves which optional fields the request
-//! actually carried so the server can reproduce the legacy response echo
-//! byte for byte.
+//! `window_ratio`/`slack`/`deadline_ms`/`priority` at top level) and
+//! upgraded through the same builder.  [`V1Echo`] preserves which optional
+//! fields the request actually carried so the server can reproduce the
+//! legacy response echo byte for byte.
+//!
+//! ## QoS fields
+//!
+//! `deadline_ms` and `priority` ride at the top level of the v2 `"spec"`
+//! object (and flat in v1).  The writer emits `deadline_ms` only when set
+//! and `priority` only when it differs from the default, so pre-QoS specs
+//! serialize byte-identically to before and the v1 compat corpus is
+//! untouched.
+//!
+//! ## Error codes
+//!
+//! Every error frame carries a stable machine-readable `"code"`.  Spec
+//! validation codes come from [`SpecError::code`]:
+//!
+//! | code | meaning |
+//! |------|---------|
+//! | `theta_out_of_range` | θ outside the scheme's second-order range |
+//! | `knob_needs_exact` | exact-only knob on a grid scheme |
+//! | `budget_on_exact` | `nfe_budget` on exact simulation |
+//! | `window_ratio_out_of_range` | window_ratio outside (0, 1) |
+//! | `slack_out_of_range` | slack not finite or below 1 |
+//! | `slack_below_floor` | slack below the drift floor for the ratio |
+//! | `max_events_zero` | `max_events` given as 0 |
+//! | `nfe_below_one_step` | nfe below one solver step |
+//! | `budget_below_minimum` | budget below one step + terminal denoise |
+//! | `tuned_steps_too_large` | tuned step count above the cap |
+//! | `needs_two_stage` | adaptive/tuned on a one-stage scheme |
+//! | `adaptive_tol_invalid` | adaptive tol not finite or negative |
+//! | `no_samples` | n_samples given as 0 |
+//! | `deadline_zero` | `deadline_ms` given as 0 |
+//! | `priority_out_of_range` | priority above the maximum |
+//! | `parse_error` | a field failed to parse |
+//! | `missing_field` | a required field is missing |
+//!
+//! Runtime (post-admission) codes come from `coordinator::codes`:
+//!
+//! | code | meaning |
+//! |------|---------|
+//! | `lane_failed` | a panic inside this request's own lane(s); siblings unaffected |
+//! | `batch_failed` | the backend reported a batch-level execution error |
+//! | `overloaded` | shed at intake (queue/in-flight caps, or the server's connection cap) |
+//! | `deadline_infeasible` | rejected at intake: planned NFE cannot fit the deadline |
+//! | `coordinator_restarted` | in-flight when the supervisor restarted the scheduler loop |
+//! | `shutdown` | in-flight at coordinator shutdown |
 
-use crate::api::spec::{SamplingSpec, SolverCfg, SpecError};
+use crate::api::spec::{SamplingSpec, SolverCfg, SpecError, DEFAULT_PRIORITY};
 use crate::schedule::ScheduleSpec;
 use crate::solvers::Solver;
 use crate::util::json::Json;
@@ -46,6 +90,8 @@ pub struct V1Echo {
     pub nfe_budget: Option<usize>,
     pub window_ratio: Option<f64>,
     pub slack: Option<f64>,
+    pub deadline_ms: Option<u64>,
+    pub priority: Option<u8>,
 }
 
 /// A parsed request: the validated spec plus, for legacy requests, the v1
@@ -128,12 +174,28 @@ fn v1_from_json(j: &Json) -> Result<(SamplingSpec, V1Echo), SpecError> {
         .opt("slack")
         .map(|v| v.as_f64().map_err(parse_err("slack")))
         .transpose()?;
+    let deadline_ms = j
+        .opt("deadline_ms")
+        .map(|v| v.as_u64().map_err(parse_err("deadline_ms")))
+        .transpose()?;
+    let priority = j
+        .opt("priority")
+        .map(|v| {
+            let p = v.as_u64().map_err(parse_err("priority"))?;
+            u8::try_from(p).map_err(|_| SpecError::Parse {
+                field: "priority",
+                message: format!("priority {p} does not fit in a byte"),
+            })
+        })
+        .transpose()?;
     let spec = b
         .nfe_budget(nfe_budget)
         .window_ratio(window_ratio)
         .slack(slack)
+        .deadline_ms(deadline_ms)
+        .priority(priority.unwrap_or(DEFAULT_PRIORITY))
         .build()?;
-    Ok((spec, V1Echo { schedule, nfe_budget, window_ratio, slack }))
+    Ok((spec, V1Echo { schedule, nfe_budget, window_ratio, slack, deadline_ms, priority }))
 }
 
 /// Parse the v2 `"spec"` object through the validating builder.
@@ -147,6 +209,16 @@ pub fn spec_from_json(j: &Json) -> Result<SamplingSpec, SpecError> {
     }
     if let Some(s) = j.opt("seed") {
         b = b.seed(s.as_u64().map_err(parse_err("seed"))?);
+    }
+    if let Some(d) = j.opt("deadline_ms") {
+        b = b.deadline_ms(Some(d.as_u64().map_err(parse_err("deadline_ms"))?));
+    }
+    if let Some(p) = j.opt("priority") {
+        let p = p.as_u64().map_err(parse_err("priority"))?;
+        b = b.priority(u8::try_from(p).map_err(|_| SpecError::Parse {
+            field: "priority",
+            message: format!("priority {p} does not fit in a byte"),
+        })?);
     }
     let sol = j.get("solver").map_err(missing("solver"))?;
     let ty = sol
@@ -223,12 +295,21 @@ pub fn spec_to_json(spec: &SamplingSpec) -> Json {
             Json::obj(fields)
         }
     };
-    Json::obj(vec![
+    let mut fields = vec![
         ("family", Json::from(spec.family())),
         ("n_samples", Json::from(spec.n_samples())),
         ("seed", Json::from(spec.seed())),
-        ("solver", solver),
-    ])
+    ];
+    // QoS knobs only when set, so pre-QoS specs serialize byte-identically
+    // to before (keeps the round-trip bit-exact and v1 echoes untouched).
+    if let Some(d) = spec.deadline_ms() {
+        fields.push(("deadline_ms", Json::from(d)));
+    }
+    if spec.priority() != DEFAULT_PRIORITY {
+        fields.push(("priority", Json::from(spec.priority() as u64)));
+    }
+    fields.push(("solver", solver));
+    Json::obj(fields)
 }
 
 /// Full v2 request envelope for a verb (`generate` / `generate_stream`).
@@ -346,6 +427,59 @@ mod tests {
         // Missing required fields.
         let j = Json::parse(r#"{"v": 2, "spec": {"solver": {"type": "scheme"}}}"#).unwrap();
         assert!(request_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn qos_fields_round_trip_and_stay_silent_by_default() {
+        // Defaults: the writer emits NEITHER QoS field.
+        let plain = SamplingSpec::builder().build().unwrap();
+        let j = spec_to_json(&plain);
+        let text = j.to_string();
+        assert!(!text.contains("deadline_ms") && !text.contains("priority"), "{text}");
+        assert_eq!(spec_from_json(&j).unwrap(), plain);
+
+        // Set: both round-trip bit-exactly through v2.
+        let qos = SamplingSpec::builder()
+            .deadline_ms(Some(750))
+            .priority(3)
+            .build()
+            .unwrap();
+        let j = Json::parse(&spec_to_json(&qos).to_string()).unwrap();
+        let back = spec_from_json(&j).unwrap();
+        assert_eq!(back, qos);
+        assert_eq!(back.deadline_ms(), Some(750));
+        assert_eq!(back.priority(), 3);
+
+        // v1 flat form carries them too, and the echo records presence.
+        let j = Json::parse(
+            r#"{"solver": "tau", "nfe": 8, "deadline_ms": 100, "priority": 2}"#,
+        )
+        .unwrap();
+        let p = request_from_json(&j).unwrap();
+        assert_eq!(p.spec.deadline_ms(), Some(100));
+        assert_eq!(p.spec.priority(), 2);
+        let echo = p.v1.unwrap();
+        assert_eq!(echo.deadline_ms, Some(100));
+        assert_eq!(echo.priority, Some(2));
+        // A v1 request without them leaves the echo empty.
+        let j = Json::parse(r#"{"solver": "tau", "nfe": 8}"#).unwrap();
+        let echo = request_from_json(&j).unwrap().v1.unwrap();
+        assert_eq!(echo.deadline_ms, None);
+        assert_eq!(echo.priority, None);
+
+        // Typed rejections at the boundary.
+        let j = Json::parse(r#"{"solver": "tau", "nfe": 8, "deadline_ms": 0}"#).unwrap();
+        assert_eq!(request_from_json(&j).unwrap_err().code(), "deadline_zero");
+        let j = Json::parse(r#"{"solver": "tau", "nfe": 8, "priority": 9}"#).unwrap();
+        assert_eq!(request_from_json(&j).unwrap_err().code(), "priority_out_of_range");
+        let j = Json::parse(r#"{"solver": "tau", "nfe": 8, "priority": 300}"#).unwrap();
+        assert_eq!(request_from_json(&j).unwrap_err().code(), "parse_error");
+        let j = Json::parse(
+            r#"{"v": 2, "spec": {"deadline_ms": -5,
+                "solver": {"type": "scheme", "solver": "tau", "nfe": 8}}}"#,
+        )
+        .unwrap();
+        assert_eq!(request_from_json(&j).unwrap_err().code(), "parse_error");
     }
 
     #[test]

@@ -78,37 +78,31 @@ impl DynamicBatcher {
     /// key construction, all co-batched specs have identical execution
     /// plans, so any of them serves.
     pub fn next_batch(&mut self, now: Instant) -> Option<(BatchKey, SamplingSpec, Vec<Lane>)> {
-        let key = {
-            let mut chosen: Option<BatchKey> = None;
-            for (key, q) in self.queues.iter() {
-                if q.is_empty() {
-                    continue;
-                }
-                let full = q.len() >= self.max_lanes;
-                let due = match self.policy {
-                    BatchPolicy::Greedy => true,
-                    BatchPolicy::Timeout(d) => {
-                        full || now.duration_since(q.front().unwrap().0.enqueued) >= d
-                    }
-                };
-                if due {
-                    chosen = Some(*key);
-                    break;
-                }
+        let key = self.queues.iter().find_map(|(key, q)| {
+            // Empty queues (front() is None) are skipped, not dispatchable.
+            let front = q.front()?;
+            let full = q.len() >= self.max_lanes;
+            let due = match self.policy {
+                BatchPolicy::Greedy => true,
+                BatchPolicy::Timeout(d) => full || now.duration_since(front.0.enqueued) >= d,
+            };
+            if due {
+                Some(*key)
+            } else {
+                None
             }
-            chosen?
-        };
-        let q = self.queues.get_mut(&key).unwrap();
+        })?;
+        let q = self.queues.get_mut(&key)?;
         let take = q.len().min(self.max_lanes);
         let mut lanes = Vec::with_capacity(take);
         let mut proto = None;
-        for _ in 0..take {
-            let (lane, spec) = q.pop_front().unwrap();
+        while lanes.len() < take {
+            let Some((lane, spec)) = q.pop_front() else { break };
             proto.get_or_insert(spec);
             lanes.push(lane);
             self.enqueued_lanes -= 1;
         }
-        Some((key, proto.unwrap(), lanes))
+        proto.map(|p| (key, p, lanes))
     }
 
     pub fn pending(&self) -> usize {

@@ -1,6 +1,9 @@
 //! Serving metrics: request/lane/dispatch counters, latency distribution,
-//! NFE accounting and batch occupancy.
+//! NFE accounting, batch occupancy — and the failure ledger (lane panics,
+//! sheds, deadline rejections/expiries, supervisor restarts) so operators
+//! can see faults without log-scraping (`stats` server verb).
 
+use crate::util::json::Json;
 use crate::util::stats::Online;
 
 #[derive(Clone, Debug, Default)]
@@ -12,6 +15,27 @@ pub struct Metrics {
     pub latency_ms: Online,
     pub occupancy: Online,
     pub queue_wait_ms: Online,
+    // Failure ledger — each counter is one typed error path.
+    /// Lanes that panicked during dispatch (typed `lane_failed`).
+    pub lane_failures: u64,
+    /// Requests shed at intake by the queue/in-flight caps (`overloaded`).
+    pub sheds: u64,
+    /// Requests rejected at intake as deadline-infeasible
+    /// (`deadline_infeasible`).
+    pub deadline_rejects: u64,
+    /// Admitted requests whose deadline expired mid-run (completed with a
+    /// partial response, not an error).
+    pub deadline_expiries: u64,
+    /// Scheduler-loop crashes the supervisor recovered from.
+    pub supervisor_restarts: u64,
+    // Point-in-time gauges, filled when the snapshot is taken.
+    /// Requests registered but not yet completed.
+    pub in_flight: u64,
+    /// Lanes sitting in the batcher queues.
+    pub queued_lanes: u64,
+    /// Entries in the shared cancel registry (leak canary: must drain to
+    /// the in-flight count).
+    pub registry_entries: u64,
 }
 
 impl Metrics {
@@ -28,7 +52,9 @@ impl Metrics {
         format!(
             "requests={} lanes={} dispatches={} nfe={} \
              latency_ms[p_mean={:.2} max={:.2}] occupancy_mean={:.2} \
-             queue_wait_ms_mean={:.2}",
+             queue_wait_ms_mean={:.2} lane_failures={} sheds={} \
+             deadline_rejects={} deadline_expiries={} supervisor_restarts={} \
+             in_flight={} queued_lanes={} registry_entries={}",
             self.requests,
             self.lanes,
             self.dispatches,
@@ -37,6 +63,14 @@ impl Metrics {
             if self.latency_ms.n > 0 { self.latency_ms.max } else { 0.0 },
             self.occupancy.mean(),
             self.queue_wait_ms.mean(),
+            self.lane_failures,
+            self.sheds,
+            self.deadline_rejects,
+            self.deadline_expiries,
+            self.supervisor_restarts,
+            self.in_flight,
+            self.queued_lanes,
+            self.registry_entries,
         )
     }
 
@@ -46,6 +80,27 @@ impl Metrics {
             return 0.0;
         }
         self.lanes as f64 / window_secs
+    }
+
+    /// The `stats` server verb's payload: every counter and gauge, flat.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::from(self.requests)),
+            ("lanes", Json::from(self.lanes)),
+            ("dispatches", Json::from(self.dispatches)),
+            ("nfe_total", Json::from(self.nfe_total)),
+            ("latency_ms_mean", Json::Num(self.latency_ms.mean())),
+            ("occupancy_mean", Json::Num(self.occupancy.mean())),
+            ("queue_wait_ms_mean", Json::Num(self.queue_wait_ms.mean())),
+            ("lane_failures", Json::from(self.lane_failures)),
+            ("sheds", Json::from(self.sheds)),
+            ("deadline_rejects", Json::from(self.deadline_rejects)),
+            ("deadline_expiries", Json::from(self.deadline_expiries)),
+            ("supervisor_restarts", Json::from(self.supervisor_restarts)),
+            ("in_flight", Json::from(self.in_flight)),
+            ("queued_lanes", Json::from(self.queued_lanes)),
+            ("registry_entries", Json::from(self.registry_entries)),
+        ])
     }
 }
 
@@ -72,5 +127,31 @@ mod tests {
         let m = Metrics::new();
         assert!(m.report().contains("requests=0"));
         assert_eq!(m.throughput(0.0), 0.0);
+    }
+
+    #[test]
+    fn failure_ledger_in_report_and_json() {
+        let mut m = Metrics::new();
+        m.lane_failures = 2;
+        m.sheds = 3;
+        m.deadline_rejects = 4;
+        m.deadline_expiries = 5;
+        m.supervisor_restarts = 1;
+        m.in_flight = 7;
+        let r = m.report();
+        for needle in [
+            "lane_failures=2",
+            "sheds=3",
+            "deadline_rejects=4",
+            "deadline_expiries=5",
+            "supervisor_restarts=1",
+            "in_flight=7",
+        ] {
+            assert!(r.contains(needle), "{needle} missing from {r}");
+        }
+        let j = m.to_json();
+        assert_eq!(j.get("lane_failures").unwrap().as_u64().unwrap(), 2);
+        assert_eq!(j.get("supervisor_restarts").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(j.get("registry_entries").unwrap().as_u64().unwrap(), 0);
     }
 }

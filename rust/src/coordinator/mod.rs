@@ -39,24 +39,62 @@
 //! the `{family}_score` graph; with a local oracle it fans across the
 //! threadpool.  The legacy per-step fused graphs remain as a fallback for
 //! families that ship step artifacts but no score artifact.
+//!
+//! # Failure taxonomy
+//!
+//! Every failure path ends in a typed [`JobEvent::Failed`] with a stable
+//! code from [`codes`] (surfaced on the wire — see the table in
+//! [`crate::api::wire`]); nothing hangs a client, and nothing leaks a
+//! registry entry:
+//!
+//! - **A lane panics during dispatch** (`lane_failed`): the batch runs
+//!   under `catch_unwind`.  On a panic, each lane is re-executed alone
+//!   (also caught); the panicking lane's request fails typed, sibling
+//!   lanes complete — bit-identical to an uninjected run for fixed-grid
+//!   and exact plans (per-lane seeded streams; PR 1's batch-invariance).
+//!   Adaptive siblings re-run under a solo dt vote, the documented
+//!   trade-off of shared online control.
+//! - **The backend reports an execution error** (`batch_failed`): every
+//!   request with a lane in the batch fails typed; its assembler state is
+//!   discarded and its queued lanes purged.
+//! - **Admission rejects a request** (`deadline_infeasible` /
+//!   `overloaded`): intake compares the resolved plan's NFE (the
+//!   [`SamplingSpec::planned_nfe`] cost model) against a learned ms/NFE
+//!   rate for deadline feasibility, and enforces queue-depth + in-flight
+//!   caps with priority-aware shedding — an arriving higher-priority
+//!   request may displace a strictly lower-priority request that has no
+//!   completed lanes yet (the displaced job fails `overloaded`).
+//! - **A deadline expires mid-run**: not an error — the driver polls the
+//!   deadline on the same per-window hook as the cancel token, and the job
+//!   completes with a partial response (counted as `deadline_expiries`).
+//! - **The scheduler loop itself crashes** (`coordinator_restarted`): the
+//!   supervisor catches the panic, fails all in-flight jobs typed, clears
+//!   the registry, rebuilds batching state (metrics survive), and
+//!   re-enters the loop under capped exponential backoff
+//!   ([`supervise::Backoff`], reset after a healthy dispatch).
+//! - **Shutdown with work still registered** (`shutdown`): drained jobs
+//!   complete normally; anything left at exit fails typed.
 
 pub mod request;
 pub mod batcher;
 pub mod scheduler;
 pub mod state;
 pub mod metrics;
+pub mod supervise;
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, Result};
 
 pub use batcher::{BatchKey, BatchPolicy, DynamicBatcher};
 pub use metrics::Metrics;
 pub use request::{GenerateRequest, GenerateResponse};
+pub use supervise::Backoff;
 
 pub use crate::api::{CancelToken, SamplingSpec};
 
@@ -64,6 +102,41 @@ use crate::runtime::{ArtifactScore, Registry, RuntimeHandle};
 use crate::schedule::{ScheduleCache, ScheduleSpec};
 use crate::score::{ScoreSource, Tok};
 use state::ResponseAssembler;
+
+/// Stable machine-readable codes of the runtime failure paths (the
+/// spec-validation codes live on [`crate::api::SpecError::code`]).  The
+/// full wire-level table is documented in [`crate::api::wire`].
+pub mod codes {
+    /// A panic inside this request's own lane(s) during dispatch.
+    pub const LANE_FAILED: &str = "lane_failed";
+    /// The backend reported a batch-level execution error.
+    pub const BATCH_FAILED: &str = "batch_failed";
+    /// Shed at intake: queue/in-flight caps (or displaced by priority).
+    pub const OVERLOADED: &str = "overloaded";
+    /// Rejected at intake: the plan's NFE cannot fit the deadline.
+    pub const DEADLINE_INFEASIBLE: &str = "deadline_infeasible";
+    /// In flight when the supervisor restarted the scheduler loop.
+    pub const COORDINATOR_RESTARTED: &str = "coordinator_restarted";
+    /// In flight at coordinator shutdown.
+    pub const SHUTDOWN: &str = "shutdown";
+}
+
+/// Typed job failure: a stable [`codes`] code plus a human-readable
+/// message.  [`JobHandle::wait`] returns it inside the `anyhow` chain, so
+/// callers (the server) recover the code with `downcast_ref::<JobError>()`.
+#[derive(Clone, Debug)]
+pub struct JobError {
+    pub code: &'static str,
+    pub message: String,
+}
+
+impl std::fmt::Display for JobError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.message)
+    }
+}
+
+impl std::error::Error for JobError {}
 
 /// One progress/completion event of a job.
 #[derive(Debug)]
@@ -73,8 +146,8 @@ pub enum JobEvent {
     Lane { sample_idx: usize, tokens: Vec<Tok>, nfe: usize, partial: bool },
     /// All lanes done — the assembled response (also carries `partial`).
     Done(GenerateResponse),
-    /// The batch executing this job failed.
-    Failed(String),
+    /// The job failed: a stable [`codes`] code plus the failure message.
+    Failed { code: &'static str, message: String },
 }
 
 /// Handle to a submitted job: the serving id (the `cancel` verb's key), a
@@ -92,20 +165,29 @@ impl JobHandle {
         self.cancel.cancel();
     }
 
-    /// Next event (blocking).
+    /// Next event (blocking).  A dropped channel means the coordinator
+    /// went away without completing the job — surfaced as a typed
+    /// `shutdown` [`JobError`], never a hang.
     pub fn recv(&self) -> Result<JobEvent> {
-        self.events
-            .recv()
-            .map_err(|_| anyhow!("coordinator dropped the job channel"))
+        self.events.recv().map_err(|_| {
+            JobError {
+                code: codes::SHUTDOWN,
+                message: "coordinator dropped the job channel".to_string(),
+            }
+            .into()
+        })
     }
 
-    /// Drain events until completion and return the response.
+    /// Drain events until completion and return the response.  Failures
+    /// carry a typed [`JobError`] in the chain (downcast for the code).
     pub fn wait(self) -> Result<GenerateResponse> {
         loop {
             match self.recv()? {
                 JobEvent::Lane { .. } => continue,
                 JobEvent::Done(resp) => return Ok(resp),
-                JobEvent::Failed(err) => bail!("{err}"),
+                JobEvent::Failed { code, message } => {
+                    return Err(JobError { code, message }.into());
+                }
             }
         }
     }
@@ -122,7 +204,20 @@ struct Job {
 enum Msg {
     Submit(Job),
     Metrics(Sender<Metrics>),
+    /// Test hook: panic the scheduler loop deterministically so the
+    /// supervisor's restart path is exercisable without a real bug.
+    Crash(String),
     Shutdown,
+}
+
+/// Admission-control limits.  `None` = unbounded (the historical
+/// behavior); the serve CLI maps `--max-inflight` / `--queue-cap` here.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CoordinatorCfg {
+    /// Max requests registered (accepted, not yet completed) at once.
+    pub max_inflight: Option<usize>,
+    /// Max lanes sitting in the batcher queues.
+    pub queue_cap: Option<usize>,
 }
 
 /// State shared between coordinator handles and the loop thread: the id
@@ -182,6 +277,24 @@ impl Coordinator {
         policy: BatchPolicy,
         schedule_dir: Option<&str>,
     ) -> Coordinator {
+        Coordinator::start_with_cfg(
+            runtime,
+            registry,
+            policy,
+            schedule_dir,
+            CoordinatorCfg::default(),
+        )
+    }
+
+    /// As [`Coordinator::start_with_schedule_dir`], with admission-control
+    /// limits ([`CoordinatorCfg`]).
+    pub fn start_with_cfg(
+        runtime: RuntimeHandle,
+        registry: Registry,
+        policy: BatchPolicy,
+        schedule_dir: Option<&str>,
+        cfg: CoordinatorCfg,
+    ) -> Coordinator {
         // Batch capacity = the max artifact batch across families.
         let max_lanes = registry
             .by_family("markov")
@@ -195,7 +308,7 @@ impl Coordinator {
             scores: BTreeMap::new(),
             schedules: ScheduleCache::with_dir(schedule_dir),
         };
-        Coordinator::spawn(backend, policy, max_lanes)
+        Coordinator::spawn(backend, policy, max_lanes, cfg)
     }
 
     /// Serve straight from an in-process score source (no artifacts, no
@@ -217,14 +330,38 @@ impl Coordinator {
         max_lanes: usize,
         schedule_dir: Option<&str>,
     ) -> Coordinator {
+        Coordinator::start_local_with_cfg(
+            score,
+            policy,
+            max_lanes,
+            schedule_dir,
+            CoordinatorCfg::default(),
+        )
+    }
+
+    /// As [`Coordinator::start_local_with_schedule_dir`], with
+    /// admission-control limits ([`CoordinatorCfg`]).
+    pub fn start_local_with_cfg(
+        score: Arc<dyn ScoreSource>,
+        policy: BatchPolicy,
+        max_lanes: usize,
+        schedule_dir: Option<&str>,
+        cfg: CoordinatorCfg,
+    ) -> Coordinator {
         Coordinator::spawn(
             Backend::Local { score, schedules: ScheduleCache::with_dir(schedule_dir) },
             policy,
             max_lanes.max(1),
+            cfg,
         )
     }
 
-    fn spawn(backend: Backend, policy: BatchPolicy, max_lanes: usize) -> Coordinator {
+    fn spawn(
+        backend: Backend,
+        policy: BatchPolicy,
+        max_lanes: usize,
+        cfg: CoordinatorCfg,
+    ) -> Coordinator {
         let (tx, rx) = channel::<Msg>();
         let shared = Arc::new(Shared {
             next_id: AtomicU64::new(1),
@@ -233,24 +370,37 @@ impl Coordinator {
         let loop_shared = Arc::clone(&shared);
         std::thread::Builder::new()
             .name("coordinator".into())
-            .spawn(move || coordinator_loop(backend, policy, max_lanes, rx, loop_shared))
+            .spawn(move || supervised_loop(backend, policy, max_lanes, cfg, rx, loop_shared))
             .expect("spawning coordinator");
         Coordinator { tx, shared }
     }
 
     fn submit_internal(&self, id: u64, spec: SamplingSpec, stream: bool) -> JobHandle {
-        let cancel = CancelToken::new();
+        // A deadline arms the job's cancel token: the solver loops already
+        // poll it per window, so expiry winds the run down into a partial
+        // response with no extra plumbing (and no RNG consumed — parity
+        // with un-deadlined runs is pinned by the golden tests).
+        let cancel = CancelToken::with_deadline(
+            spec.deadline_ms().map(|ms| Instant::now() + Duration::from_millis(ms)),
+        );
         lock_cancels(&self.shared).insert(id, cancel.clone());
         let (events_tx, events_rx) = channel();
-        self.tx
-            .send(Msg::Submit(Job {
-                id,
-                spec,
-                events: events_tx,
-                stream,
-                cancel: cancel.clone(),
-            }))
-            .expect("coordinator thread is gone");
+        let sent = self.tx.send(Msg::Submit(Job {
+            id,
+            spec,
+            events: events_tx.clone(),
+            stream,
+            cancel: cancel.clone(),
+        }));
+        if sent.is_err() {
+            // Shut-down coordinator: fail typed instead of panicking the
+            // submitting thread.
+            lock_cancels(&self.shared).remove(&id);
+            let _ = events_tx.send(JobEvent::Failed {
+                code: codes::SHUTDOWN,
+                message: "coordinator is shut down".to_string(),
+            });
+        }
         JobHandle { id, events: events_rx, cancel }
     }
 
@@ -308,6 +458,13 @@ impl Coordinator {
 
     pub fn shutdown(&self) {
         let _ = self.tx.send(Msg::Shutdown);
+    }
+
+    /// Test hook: crash the scheduler loop deterministically so the
+    /// supervisor's restart path is exercisable without a real bug.
+    #[doc(hidden)]
+    pub fn inject_loop_panic(&self, reason: &str) {
+        let _ = self.tx.send(Msg::Crash(reason.to_string()));
     }
 }
 
@@ -367,6 +524,7 @@ fn execute_batch(
 struct Sink {
     events: Sender<JobEvent>,
     stream: bool,
+    priority: u8,
 }
 
 fn finish_job(
@@ -381,129 +539,455 @@ fn finish_job(
     }
 }
 
-fn coordinator_loop(
-    mut backend: Backend,
+/// Learned cost model for deadline feasibility: an EWMA of milliseconds
+/// per score evaluation, observed from batch wall times.  Starts with no
+/// evidence, so nothing is rejected until dispatches calibrate it.
+struct CostModel {
+    ms_per_nfe: f64,
+}
+
+impl CostModel {
+    fn new() -> Self {
+        Self { ms_per_nfe: 0.0 }
+    }
+
+    fn observe(&mut self, wall_ms: f64, nfe: usize) {
+        if nfe == 0 {
+            return;
+        }
+        let rate = wall_ms / nfe as f64;
+        self.ms_per_nfe = if self.ms_per_nfe == 0.0 {
+            rate
+        } else {
+            0.8 * self.ms_per_nfe + 0.2 * rate
+        };
+    }
+
+    fn estimate_ms(&self, nfe: usize) -> f64 {
+        self.ms_per_nfe * nfe as f64
+    }
+}
+
+/// All loop-owned serving state, gathered so [`supervised_loop`] can catch
+/// a panic anywhere in the scheduler and still hold the pieces: it fails
+/// in-flight jobs typed ([`LoopState::recover`]) and re-enters
+/// [`LoopState::run`].
+struct LoopState {
+    backend: Backend,
     policy: BatchPolicy,
     max_lanes: usize,
-    rx: Receiver<Msg>,
-    shared: Arc<Shared>,
-) {
-    let mut batcher = DynamicBatcher::new(policy, max_lanes);
-    let mut assembler = ResponseAssembler::new();
-    let mut jobs: BTreeMap<u64, Sink> = BTreeMap::new();
-    let mut metrics = Metrics::new();
-    let started = Instant::now();
-    let now_ms = |s: Instant| s.elapsed().as_secs_f64() * 1e3;
+    cfg: CoordinatorCfg,
+    batcher: DynamicBatcher,
+    assembler: ResponseAssembler,
+    jobs: BTreeMap<u64, Sink>,
+    metrics: Metrics,
+    cost: CostModel,
+    started: Instant,
+    open: bool,
+}
 
-    let mut open = true;
-    while open || batcher.pending() > 0 {
-        // Drain inbound messages (block briefly when idle).
-        let deadline = match policy {
-            BatchPolicy::Greedy => Duration::from_millis(1),
-            BatchPolicy::Timeout(d) => d.min(Duration::from_millis(5)),
-        };
-        loop {
-            match rx.recv_timeout(if batcher.pending() > 0 {
-                Duration::from_micros(100)
-            } else {
-                deadline
-            }) {
-                Ok(Msg::Submit(job)) => {
-                    // The spec is valid by construction (builder-only), so
-                    // intake is pure bookkeeping.
-                    metrics.requests += 1;
-                    metrics.lanes += job.spec.n_samples() as u64;
-                    assembler.register(job.id, job.spec.n_samples(), now_ms(started));
-                    jobs.insert(job.id, Sink { events: job.events, stream: job.stream });
-                    batcher.enqueue(GenerateRequest::new(job.id, job.spec), job.cancel);
+impl LoopState {
+    fn now_ms(&self) -> f64 {
+        self.started.elapsed().as_secs_f64() * 1e3
+    }
+
+    fn run(&mut self, rx: &Receiver<Msg>, shared: &Shared) {
+        while self.open || self.batcher.pending() > 0 {
+            // Drain inbound messages (block briefly when idle).
+            let deadline = match self.policy {
+                BatchPolicy::Greedy => Duration::from_millis(1),
+                BatchPolicy::Timeout(d) => d.min(Duration::from_millis(5)),
+            };
+            loop {
+                match rx.recv_timeout(if self.batcher.pending() > 0 {
+                    Duration::from_micros(100)
+                } else {
+                    deadline
+                }) {
+                    Ok(Msg::Submit(job)) => self.admit(shared, job),
+                    Ok(Msg::Metrics(reply)) => {
+                        let mut m = self.metrics.clone();
+                        m.in_flight = self.assembler.in_flight() as u64;
+                        m.queued_lanes = self.batcher.pending() as u64;
+                        m.registry_entries = lock_cancels(shared).len() as u64;
+                        let _ = reply.send(m);
+                    }
+                    Ok(Msg::Crash(reason)) => {
+                        panic!("injected coordinator crash: {reason}")
+                    }
+                    Ok(Msg::Shutdown) => {
+                        self.open = false;
+                        break;
+                    }
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                        self.open = false;
+                        break;
+                    }
                 }
-                Ok(Msg::Metrics(reply)) => {
-                    let _ = reply.send(metrics.clone());
+            }
+
+            // Dispatch due batches, each under its own fault boundary.
+            while let Some((_key, proto, lanes)) =
+                self.batcher.next_batch(Instant::now())
+            {
+                self.metrics.dispatches += 1;
+                self.metrics
+                    .occupancy
+                    .push(lanes.len() as f64 / self.batcher.max_lanes as f64);
+                for lane in &lanes {
+                    self.metrics
+                        .queue_wait_ms
+                        .push(lane.enqueued.elapsed().as_secs_f64() * 1e3);
                 }
-                Ok(Msg::Shutdown) => {
-                    open = false;
-                    break;
-                }
-                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => break,
-                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                    open = false;
-                    break;
+                // Jobs cancelled while still queued are NOT special-cased:
+                // the solver loops poll the token before the first window,
+                // so a pre-cancelled lane costs only its (all-masked) init
+                // and comes back with the correct sequence shape —
+                // still-masked positions carrying the mask id, exactly the
+                // partial-result contract.  Fabricating empty sequences
+                // here would break it.
+                let t0 = Instant::now();
+                let outcome = catch_unwind(AssertUnwindSafe(|| {
+                    execute_batch(&mut self.backend, &proto, &lanes)
+                }));
+                match outcome {
+                    Ok(Ok(result)) => {
+                        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+                        // The batch's critical path is its longest lane.
+                        self.cost
+                            .observe(wall_ms, result.nfe.iter().copied().max().unwrap_or(0));
+                        self.complete_lanes(shared, &lanes, result);
+                    }
+                    Ok(Err(err)) => {
+                        self.fail_requests(
+                            shared,
+                            &lanes,
+                            codes::BATCH_FAILED,
+                            format!("batch execution failed: {err:#}"),
+                        );
+                    }
+                    Err(payload) => {
+                        let msg = supervise::panic_message(payload.as_ref());
+                        self.isolate_lanes(shared, &proto, lanes, &msg);
+                    }
                 }
             }
         }
 
-        // Dispatch due batches.
-        while let Some((_key, proto, lanes)) = batcher.next_batch(Instant::now()) {
-            metrics.dispatches += 1;
-            metrics
-                .occupancy
-                .push(lanes.len() as f64 / batcher.max_lanes as f64);
-            for lane in &lanes {
-                metrics
-                    .queue_wait_ms
-                    .push(lane.enqueued.elapsed().as_secs_f64() * 1e3);
+        // Shutdown with jobs still registered (e.g. admitted after the
+        // Shutdown message): fail typed, leak nothing.
+        let leftover: Vec<u64> = self.jobs.keys().copied().collect();
+        for id in leftover {
+            self.assembler.abort(id);
+            self.batcher.purge_request(id);
+            finish_job(
+                &mut self.jobs,
+                shared,
+                id,
+                JobEvent::Failed {
+                    code: codes::SHUTDOWN,
+                    message: "coordinator shut down before the job completed".to_string(),
+                },
+            );
+        }
+        // Submissions that raced the shutdown are already in the channel
+        // but will never be admitted: fail them typed too.
+        while let Ok(msg) = rx.try_recv() {
+            match msg {
+                Msg::Submit(job) => {
+                    lock_cancels(shared).remove(&job.id);
+                    let _ = job.events.send(JobEvent::Failed {
+                        code: codes::SHUTDOWN,
+                        message: "coordinator is shut down".to_string(),
+                    });
+                }
+                Msg::Metrics(reply) => {
+                    let _ = reply.send(self.metrics.clone());
+                }
+                Msg::Crash(_) | Msg::Shutdown => {}
             }
-            // Jobs cancelled while still queued are NOT special-cased:
-            // the solver loops poll the token before the first window, so
-            // a pre-cancelled lane costs only its (all-masked) init and
-            // comes back with the correct sequence shape — still-masked
-            // positions carrying the mask id, exactly the partial-result
-            // contract.  Fabricating empty sequences here would break it.
-            let outcome = execute_batch(&mut backend, &proto, &lanes);
-            match outcome {
-                Ok(result) => {
-                    metrics.nfe_total += result.nfe.iter().sum::<usize>() as u64;
-                    let scheduler::BatchResult { tokens, nfe, partial } = result;
-                    for (idx, (lane, toks)) in
-                        lanes.iter().zip(tokens.into_iter()).enumerate()
-                    {
-                        let lane_nfe = nfe[idx];
-                        let lane_partial = partial[idx];
-                        if let Some(sink) = jobs.get(&lane.request_id) {
-                            if sink.stream {
-                                let _ = sink.events.send(JobEvent::Lane {
-                                    sample_idx: lane.sample_idx,
-                                    tokens: toks.clone(),
-                                    nfe: lane_nfe,
-                                    partial: lane_partial,
-                                });
-                            }
-                        }
-                        if let Some(resp) = assembler.complete_lane(
-                            lane.request_id,
-                            lane.sample_idx,
-                            toks,
-                            lane_nfe,
-                            lane_partial,
-                            now_ms(started),
-                        ) {
-                            metrics.latency_ms.push(resp.latency_ms);
-                            finish_job(&mut jobs, &shared, resp.id, JobEvent::Done(resp));
-                        }
-                    }
+        }
+    }
+
+    /// Intake: deadline feasibility, then capacity (with priority-aware
+    /// shedding), then bookkeeping.  Rejections are typed and remove the
+    /// registry entry the submitter just created.
+    fn admit(&mut self, shared: &Shared, job: Job) {
+        self.metrics.requests += 1;
+        // Deadline feasibility: the resolved plan's NFE (the spec's own
+        // cost model) times the learned ms/NFE rate.  Plans with unbounded
+        // NFE (uncapped exact) and cold cost models are never rejected.
+        if let (Some(deadline), Some(nfe)) =
+            (job.spec.deadline_ms(), job.spec.planned_nfe())
+        {
+            let est = self.cost.estimate_ms(nfe);
+            if est > deadline as f64 {
+                self.metrics.deadline_rejects += 1;
+                lock_cancels(shared).remove(&job.id);
+                let _ = job.events.send(JobEvent::Failed {
+                    code: codes::DEADLINE_INFEASIBLE,
+                    message: format!(
+                        "deadline {deadline}ms infeasible: the plan needs {nfe} \
+                         evaluations (~{est:.1}ms at the current rate)"
+                    ),
+                });
+                return;
+            }
+        }
+        // Capacity: shed strictly-lower-priority untouched work to make
+        // room; if none exists, the arriving request is the one shed.
+        let n = job.spec.n_samples();
+        loop {
+            let over_inflight = self
+                .cfg
+                .max_inflight
+                .is_some_and(|m| self.assembler.in_flight() >= m);
+            let over_queue =
+                self.cfg.queue_cap.is_some_and(|q| self.batcher.pending() + n > q);
+            if !over_inflight && !over_queue {
+                break;
+            }
+            if !self.shed_one_below(shared, job.spec.priority()) {
+                self.metrics.sheds += 1;
+                lock_cancels(shared).remove(&job.id);
+                let _ = job.events.send(JobEvent::Failed {
+                    code: codes::OVERLOADED,
+                    message: "coordinator overloaded: queue and in-flight caps reached"
+                        .to_string(),
+                });
+                return;
+            }
+        }
+        self.metrics.lanes += n as u64;
+        let now = self.now_ms();
+        self.assembler.register(job.id, n, now);
+        let priority = job.spec.priority();
+        self.jobs
+            .insert(job.id, Sink { events: job.events, stream: job.stream, priority });
+        self.batcher.enqueue(GenerateRequest::new(job.id, job.spec), job.cancel);
+    }
+
+    /// Evict one untouched (no completed lanes), strictly-lower-priority
+    /// in-flight request — lowest priority first, newest among ties.
+    /// Returns whether a victim was found.
+    fn shed_one_below(&mut self, shared: &Shared, incoming: u8) -> bool {
+        let victim = self
+            .jobs
+            .iter()
+            .filter(|(id, s)| s.priority < incoming && self.assembler.untouched(**id))
+            .min_by_key(|(id, s)| (s.priority, u64::MAX - **id))
+            .map(|(id, _)| *id);
+        let Some(id) = victim else { return false };
+        self.metrics.sheds += 1;
+        self.assembler.abort(id);
+        self.batcher.purge_request(id);
+        finish_job(
+            &mut self.jobs,
+            shared,
+            id,
+            JobEvent::Failed {
+                code: codes::OVERLOADED,
+                message: "shed at admission: displaced by higher-priority work"
+                    .to_string(),
+            },
+        );
+        true
+    }
+
+    /// Route one successful batch result: stream lane chunks, assemble
+    /// responses, account deadline expiries.
+    fn complete_lanes(
+        &mut self,
+        shared: &Shared,
+        lanes: &[batcher::Lane],
+        result: scheduler::BatchResult,
+    ) {
+        self.metrics.nfe_total += result.nfe.iter().sum::<usize>() as u64;
+        let scheduler::BatchResult { tokens, nfe, partial } = result;
+        let now = self.now_ms();
+        for (idx, (lane, toks)) in lanes.iter().zip(tokens.into_iter()).enumerate() {
+            let lane_nfe = nfe[idx];
+            let lane_partial = partial[idx];
+            if let Some(sink) = self.jobs.get(&lane.request_id) {
+                if sink.stream {
+                    let _ = sink.events.send(JobEvent::Lane {
+                        sample_idx: lane.sample_idx,
+                        tokens: toks.clone(),
+                        nfe: lane_nfe,
+                        partial: lane_partial,
+                    });
                 }
-                Err(err) => {
-                    // Fail every request touched by this batch — and clean
-                    // it up fully: discard its assembler state (a leaked
-                    // Pending entry would grow the long-lived coordinator
-                    // on every failing request) and purge its still-queued
-                    // lanes (they would execute into a request that no
-                    // longer exists).
-                    let mut failed: Vec<u64> =
-                        lanes.iter().map(|l| l.request_id).collect();
-                    failed.sort_unstable();
-                    failed.dedup();
-                    for id in failed {
-                        assembler.abort(id);
-                        batcher.purge_request(id);
-                        finish_job(
-                            &mut jobs,
-                            &shared,
-                            id,
-                            JobEvent::Failed(format!("batch execution failed: {err:#}")),
-                        );
-                    }
+            }
+            if let Some(resp) = self.assembler.complete_lane(
+                lane.request_id,
+                lane.sample_idx,
+                toks,
+                lane_nfe,
+                lane_partial,
+                now,
+            ) {
+                // Partial because the deadline passed (and nobody fired an
+                // explicit cancel) = a deadline expiry, not an error.
+                if resp.partial && lane.cancel.deadline_expired() && !lane.cancel.fired()
+                {
+                    self.metrics.deadline_expiries += 1;
                 }
+                self.metrics.latency_ms.push(resp.latency_ms);
+                finish_job(&mut self.jobs, shared, resp.id, JobEvent::Done(resp));
+            }
+        }
+    }
+
+    /// Fail every request with a lane in `lanes` — and clean each up
+    /// fully: discard its assembler state (a leaked Pending entry would
+    /// grow the long-lived coordinator on every failing request), purge
+    /// its still-queued lanes (they would execute into a request that no
+    /// longer exists), and drop its registry entry.
+    fn fail_requests(
+        &mut self,
+        shared: &Shared,
+        lanes: &[batcher::Lane],
+        code: &'static str,
+        message: String,
+    ) {
+        let mut failed: Vec<u64> = lanes.iter().map(|l| l.request_id).collect();
+        failed.sort_unstable();
+        failed.dedup();
+        for id in failed {
+            self.assembler.abort(id);
+            self.batcher.purge_request(id);
+            finish_job(
+                &mut self.jobs,
+                shared,
+                id,
+                JobEvent::Failed { code, message: message.clone() },
+            );
+        }
+    }
+
+    /// Blast-radius containment after a panic inside `execute_batch`:
+    /// rerun each lane alone (also caught).  The panicking lane's request
+    /// fails `lane_failed`; sibling lanes complete — bit-identical to the
+    /// uninjected batch for fixed-grid and exact plans (per-lane seeded
+    /// streams; PR 1's batch-invariance).  Adaptive siblings re-run under
+    /// a solo dt vote, the documented trade-off of shared online control.
+    fn isolate_lanes(
+        &mut self,
+        shared: &Shared,
+        proto: &SamplingSpec,
+        lanes: Vec<batcher::Lane>,
+        batch_panic: &str,
+    ) {
+        if lanes.len() == 1 {
+            self.metrics.lane_failures += 1;
+            let message = format!(
+                "lane {} panicked during dispatch: {batch_panic}",
+                lanes[0].sample_idx
+            );
+            self.fail_requests(shared, &lanes, codes::LANE_FAILED, message);
+            return;
+        }
+        let mut failed_requests: BTreeSet<u64> = BTreeSet::new();
+        for lane in lanes {
+            if failed_requests.contains(&lane.request_id) {
+                continue;
+            }
+            let solo = catch_unwind(AssertUnwindSafe(|| {
+                execute_batch(&mut self.backend, proto, std::slice::from_ref(&lane))
+            }));
+            match solo {
+                Ok(Ok(result)) => {
+                    self.complete_lanes(shared, std::slice::from_ref(&lane), result);
+                }
+                Ok(Err(err)) => {
+                    failed_requests.insert(lane.request_id);
+                    self.fail_requests(
+                        shared,
+                        std::slice::from_ref(&lane),
+                        codes::BATCH_FAILED,
+                        format!("batch execution failed: {err:#}"),
+                    );
+                }
+                Err(payload) => {
+                    failed_requests.insert(lane.request_id);
+                    self.metrics.lane_failures += 1;
+                    let msg = supervise::panic_message(payload.as_ref());
+                    self.fail_requests(
+                        shared,
+                        std::slice::from_ref(&lane),
+                        codes::LANE_FAILED,
+                        format!(
+                            "lane {} panicked during dispatch: {msg}",
+                            lane.sample_idx
+                        ),
+                    );
+                }
+            }
+        }
+    }
+
+    /// Post-crash cleanup (the supervisor calls this between restarts):
+    /// every in-flight job fails `coordinator_restarted`, its registry
+    /// entry is cleared, and batching state is rebuilt fresh.  Metrics
+    /// (including the restart counter) and the backend survive.
+    fn recover(&mut self, shared: &Shared, panic_msg: &str) {
+        let jobs = std::mem::take(&mut self.jobs);
+        let mut cancels = lock_cancels(shared);
+        for (id, sink) in jobs {
+            cancels.remove(&id);
+            let _ = sink.events.send(JobEvent::Failed {
+                code: codes::COORDINATOR_RESTARTED,
+                message: format!(
+                    "coordinator restarted after a scheduler-loop crash: {panic_msg}"
+                ),
+            });
+        }
+        drop(cancels);
+        self.batcher = DynamicBatcher::new(self.policy, self.max_lanes);
+        self.assembler = ResponseAssembler::new();
+    }
+}
+
+/// Run the scheduler loop under a supervisor: a panic anywhere inside is
+/// caught, in-flight jobs fail typed ([`LoopState::recover`]), and the
+/// loop re-enters under capped exponential backoff ([`Backoff`]) — reset
+/// once a restart proves healthy (a dispatch completed since the previous
+/// crash).
+fn supervised_loop(
+    backend: Backend,
+    policy: BatchPolicy,
+    max_lanes: usize,
+    cfg: CoordinatorCfg,
+    rx: Receiver<Msg>,
+    shared: Arc<Shared>,
+) {
+    let mut state = LoopState {
+        backend,
+        policy,
+        max_lanes,
+        cfg,
+        batcher: DynamicBatcher::new(policy, max_lanes),
+        assembler: ResponseAssembler::new(),
+        jobs: BTreeMap::new(),
+        metrics: Metrics::new(),
+        cost: CostModel::new(),
+        started: Instant::now(),
+        open: true,
+    };
+    let mut backoff = Backoff::default();
+    let mut last_dispatches = 0u64;
+    loop {
+        match catch_unwind(AssertUnwindSafe(|| state.run(&rx, &shared))) {
+            Ok(()) => return,
+            Err(payload) => {
+                if state.metrics.dispatches > last_dispatches {
+                    backoff.reset();
+                }
+                last_dispatches = state.metrics.dispatches;
+                state.metrics.supervisor_restarts += 1;
+                state.recover(&shared, &supervise::panic_message(payload.as_ref()));
+                std::thread::sleep(backoff.next_delay());
             }
         }
     }
@@ -761,7 +1245,7 @@ mod tests {
                     n_chunks += 1;
                 }
                 JobEvent::Done(resp) => break resp,
-                JobEvent::Failed(e) => panic!("{e}"),
+                JobEvent::Failed { message, .. } => panic!("{message}"),
             }
         };
         assert_eq!(n_chunks, 5, "every lane must stream exactly once");
@@ -837,6 +1321,92 @@ mod tests {
         let r1b = c.generate(req(9, Solver::TauLeaping, 16, 2, 99)).unwrap();
         assert_eq!(r1.sequences, r1b.sequences, "seeded lanes must be batch-invariant");
         c.shutdown();
+    }
+
+    #[test]
+    fn far_future_deadline_does_not_perturb_sampling() {
+        // Arming the deadline token must not consume RNG or change the
+        // step sequence: a run with a far-future deadline is bit-identical
+        // to the same spec without one (also pinned by the golden suite).
+        let oracle = local_oracle(6, 16);
+        let c = Coordinator::start_local(oracle, BatchPolicy::Greedy, 8);
+        let base = SamplingSpec::builder()
+            .solver(Solver::Trapezoidal { theta: 0.5 })
+            .nfe(32)
+            .n_samples(3)
+            .seed(17)
+            .build()
+            .unwrap();
+        let qos = SamplingSpec::builder()
+            .solver(Solver::Trapezoidal { theta: 0.5 })
+            .nfe(32)
+            .n_samples(3)
+            .seed(17)
+            .deadline_ms(Some(600_000))
+            .priority(crate::api::spec::MAX_PRIORITY)
+            .build()
+            .unwrap();
+        let a = c.generate_spec(base).unwrap();
+        let b = c.generate_spec(qos).unwrap();
+        assert_eq!(a.sequences, b.sequences, "deadline token must be free");
+        assert!(!b.partial, "a 10-minute deadline cannot expire here");
+        c.shutdown();
+    }
+
+    #[test]
+    fn supervisor_restarts_loop_after_injected_crash() {
+        let oracle = local_oracle(5, 12);
+        let c = Coordinator::start_local(oracle, BatchPolicy::Greedy, 4);
+        let spec = SamplingSpec::builder()
+            .solver(Solver::TauLeaping)
+            .nfe(16)
+            .n_samples(2)
+            .seed(31)
+            .build()
+            .unwrap();
+        let before = c.generate_spec(spec.clone()).unwrap();
+        // Crash the loop; the same channel then carries the next submit,
+        // so FIFO ordering guarantees the crash is processed first.
+        c.inject_loop_panic("unit test");
+        let after = c.generate_spec(spec).unwrap();
+        assert_eq!(
+            after.sequences, before.sequences,
+            "the restarted loop must serve identically"
+        );
+        let m = c.metrics();
+        assert_eq!(m.supervisor_restarts, 1);
+        assert_eq!(m.in_flight, 0, "no request may survive the crash");
+        assert_eq!(m.registry_entries, 0, "crash must not leak cancel entries");
+        c.shutdown();
+    }
+
+    #[test]
+    fn submit_after_shutdown_fails_typed() {
+        let oracle = local_oracle(5, 8);
+        let c = Coordinator::start_local(oracle, BatchPolicy::Greedy, 4);
+        c.shutdown();
+        let spec = SamplingSpec::builder()
+            .solver(Solver::Euler)
+            .nfe(8)
+            .seed(1)
+            .build()
+            .unwrap();
+        // Submissions racing the drain may still be served; once the loop
+        // thread exits, every later submit must fail typed — never panic
+        // or hang the submitter.
+        for attempt in 0..200 {
+            match c.generate_spec(spec.clone()) {
+                Ok(_) => std::thread::sleep(Duration::from_millis(1)),
+                Err(err) => {
+                    let job_err = err
+                        .downcast_ref::<JobError>()
+                        .expect("failure must carry a typed JobError");
+                    assert_eq!(job_err.code, codes::SHUTDOWN);
+                    return;
+                }
+            }
+            assert!(attempt < 199, "coordinator never shut down");
+        }
     }
 
     #[test]

@@ -275,10 +275,8 @@ pub fn run_batch(
     // from DELTA to ~0 — gate probability ~1, destinations from the score.
     // Skipped on cancellation: partial lanes keep the mask id.
     if !cancelled && tokens.iter().any(|&x| x == mask) {
-        let tw = format!(
-            "{}_step_tweedie",
-            plan.artifact.split("_step_").next().unwrap()
-        );
+        let family = plan.artifact.split("_step_").next().unwrap_or(&plan.artifact);
+        let tw = format!("{family}_step_tweedie");
         let uniforms = fill_uniforms(1, b, l, &mut rngs, &mut pad_rng);
         let out = runtime.execute(
             &tw,

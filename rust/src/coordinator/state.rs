@@ -87,6 +87,17 @@ impl ResponseAssembler {
     pub fn in_flight(&self) -> usize {
         self.pending.len()
     }
+
+    /// Whether the request is pending with NO lane completed yet.  Dispatch
+    /// runs synchronously on the loop thread, so an untouched request's
+    /// lanes all still sit in the batcher — it can be shed without wasting
+    /// completed work or leaving orphaned lanes (priority load shedding).
+    pub fn untouched(&self, request_id: u64) -> bool {
+        self.pending
+            .get(&request_id)
+            .map(|p| p.remaining == p.sequences.len())
+            .unwrap_or(false)
+    }
 }
 
 #[cfg(test)]
@@ -114,6 +125,16 @@ mod tests {
         assert!(a.complete_lane(1, 0, vec![1], 4, true, 1.0).is_none());
         let r = a.complete_lane(1, 1, vec![2], 4, false, 2.0).unwrap();
         assert!(r.partial, "any partial lane must mark the response partial");
+    }
+
+    #[test]
+    fn untouched_tracks_first_lane() {
+        let mut a = ResponseAssembler::new();
+        a.register(1, 2, 0.0);
+        assert!(a.untouched(1));
+        a.complete_lane(1, 0, vec![1], 4, false, 1.0);
+        assert!(!a.untouched(1), "a completed lane disqualifies shedding");
+        assert!(!a.untouched(99), "unknown requests are not shed candidates");
     }
 
     #[test]

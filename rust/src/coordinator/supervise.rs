@@ -1,0 +1,94 @@
+//! Supervision primitives for the coordinator loop: capped exponential
+//! restart backoff and panic-payload extraction.
+//!
+//! The coordinator thread runs its scheduler loop under `catch_unwind`; if
+//! the loop itself panics (a bug — per-dispatch panics are already
+//! contained one level down), the supervisor fails all in-flight jobs with
+//! a typed `coordinator_restarted` error, waits out the backoff, and
+//! re-enters the loop with fresh batching state.  The backoff is reset
+//! after a healthy stretch so an isolated crash costs one restart, while a
+//! hot crash loop decays to the cap instead of spinning.
+
+use std::any::Any;
+use std::time::Duration;
+
+/// Capped exponential backoff between supervisor restarts.
+#[derive(Clone, Debug)]
+pub struct Backoff {
+    initial: Duration,
+    cap: Duration,
+    current: Duration,
+}
+
+impl Backoff {
+    pub fn new(initial: Duration, cap: Duration) -> Backoff {
+        assert!(initial > Duration::ZERO && cap >= initial);
+        Backoff { initial, cap, current: initial }
+    }
+
+    /// The delay to wait before the next restart; doubles (up to the cap)
+    /// for each consecutive crash.
+    pub fn next_delay(&mut self) -> Duration {
+        let d = self.current;
+        self.current = (self.current * 2).min(self.cap);
+        d
+    }
+
+    /// Call after a healthy stretch (e.g. a dispatch completed without the
+    /// loop crashing): the next crash starts from the initial delay again.
+    pub fn reset(&mut self) {
+        self.current = self.initial;
+    }
+
+    pub fn current(&self) -> Duration {
+        self.current
+    }
+}
+
+impl Default for Backoff {
+    /// 10ms → 1s: fast enough that a single crash is invisible to clients,
+    /// capped so a crash loop cannot busy-spin the thread.
+    fn default() -> Backoff {
+        Backoff::new(Duration::from_millis(10), Duration::from_secs(1))
+    }
+}
+
+/// Best-effort human-readable message from a `catch_unwind` payload.
+pub fn panic_message(payload: &(dyn Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic payload of unknown type".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_doubles_to_cap_and_resets() {
+        let mut b = Backoff::new(Duration::from_millis(10), Duration::from_millis(100));
+        assert_eq!(b.next_delay(), Duration::from_millis(10));
+        assert_eq!(b.next_delay(), Duration::from_millis(20));
+        assert_eq!(b.next_delay(), Duration::from_millis(40));
+        assert_eq!(b.next_delay(), Duration::from_millis(80));
+        // Capped, then stays capped.
+        assert_eq!(b.next_delay(), Duration::from_millis(100));
+        assert_eq!(b.next_delay(), Duration::from_millis(100));
+        b.reset();
+        assert_eq!(b.next_delay(), Duration::from_millis(10));
+    }
+
+    #[test]
+    fn panic_messages_extracted() {
+        let p = std::panic::catch_unwind(|| panic!("static message")).unwrap_err();
+        assert_eq!(panic_message(p.as_ref()), "static message");
+        let p = std::panic::catch_unwind(|| panic!("formatted {}", 7)).unwrap_err();
+        assert_eq!(panic_message(p.as_ref()), "formatted 7");
+        let p = std::panic::catch_unwind(|| std::panic::panic_any(42i32)).unwrap_err();
+        assert_eq!(panic_message(p.as_ref()), "panic payload of unknown type");
+    }
+}

@@ -5,9 +5,11 @@
 //! fastdds serve   [--addr 127.0.0.1:7878] [--policy greedy|timeout:<ms>]
 //!                 [--local [--oracle markov|hmm]] [--vocab 16] [--seq-len 32]
 //!                 [--schedule-dir tuned_schedules]
+//!                 [--max-inflight N] [--queue-cap N] [--max-conns 256]
 //! fastdds client  [--addr ...] --solver trapezoidal:0.5 --nfe 64 [--n 4] [--seed 1]
 //!                 [--schedule adaptive:tol=1e-3] [--nfe-budget 48]
 //!                 [--window-ratio 0.5] [--slack 4] [--max-events 1000]
+//!                 [--deadline-ms 500] [--priority 0..3]
 //!                 [--spec spec.json] [--stream] [--timeout-ms 5000]
 //! fastdds info    [--artifacts artifacts]
 //! ```
@@ -26,6 +28,15 @@
 //! `{"v":2,"spec":...}` envelope); `--stream` uses `generate_stream` and
 //! prints chunks as lanes complete; `--timeout-ms` bounds connect/read so
 //! a hung server fails the call instead of blocking forever.
+//!
+//! QoS: `client --deadline-ms` attaches a wall-clock deadline (infeasible
+//! deadlines are rejected at intake with code `deadline_infeasible`;
+//! feasible ones that expire mid-run return a PARTIAL response), and
+//! `--priority` (0..=3, default 1) lets urgent requests displace queued
+//! lower-priority ones when the server runs with admission caps.  `serve
+//! --max-inflight/--queue-cap` enable those caps (unbounded if omitted);
+//! `--max-conns` bounds concurrent connections (over-cap connections get
+//! one typed `overloaded` frame and are closed).
 
 use anyhow::{bail, Result};
 use fastdds::api::{wire, SamplingSpec};
@@ -131,6 +142,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_str("addr", "127.0.0.1:7878");
     let policy = parse_policy(&args.get_str("policy", "greedy"))?;
     let schedule_dir = args.str_opt("schedule-dir");
+    let cfg = fastdds::coordinator::CoordinatorCfg {
+        max_inflight: args.usize_opt("max-inflight")?,
+        queue_cap: args.usize_opt("queue-cap")?,
+    };
     let coordinator = if args.flag("local") {
         // Explicitly requested in-process oracle backend: no artifacts
         // needed, all schedules (uniform/log/adaptive/tuned) available.
@@ -154,11 +169,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             other => bail!("unknown --oracle {other:?} (markov|hmm)"),
         };
         println!("serving local {which} oracle (vocab {vocab}, seq_len {seq_len})");
-        Coordinator::start_local_with_schedule_dir(
+        Coordinator::start_local_with_cfg(
             oracle,
             policy,
             args.get_usize("max-lanes", 8)?,
             schedule_dir,
+            cfg,
         )
     } else {
         let runtime = RuntimeHandle::spawn(&dir)?;
@@ -170,9 +186,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .map(|a| a.name.clone())
             .collect();
         runtime.preload(&names.iter().map(|s| s.as_str()).collect::<Vec<_>>())?;
-        Coordinator::start_with_schedule_dir(runtime, registry, policy, schedule_dir)
+        Coordinator::start_with_cfg(runtime, registry, policy, schedule_dir, cfg)
     };
-    let server = fastdds::server::Server::start(&addr, coordinator)?;
+    let max_conns =
+        args.get_usize("max-conns", fastdds::server::DEFAULT_MAX_CONNS)?;
+    let server = fastdds::server::Server::start_with_limit(&addr, coordinator, max_conns)?;
     println!("fastdds serving on {} (policy {:?})", server.addr, policy);
     println!("press ctrl-c to stop");
     loop {
@@ -204,7 +222,14 @@ fn client_spec(args: &Args) -> Result<SamplingSpec> {
         .nfe_budget(args.usize_opt("nfe-budget")?)
         .window_ratio(args.f64_opt("window-ratio")?)
         .slack(args.f64_opt("slack")?)
-        .max_events(args.usize_opt("max-events")?);
+        .max_events(args.usize_opt("max-events")?)
+        .deadline_ms(args.usize_opt("deadline-ms")?.map(|ms| ms as u64));
+    if let Some(p) = args.usize_opt("priority")? {
+        let p = u8::try_from(p).map_err(|_| {
+            anyhow::anyhow!("--priority {p} does not fit in a byte")
+        })?;
+        b = b.priority(p);
+    }
     if let Some(s) = args.str_opt("schedule") {
         b = b.schedule(ScheduleSpec::parse(s)?);
     }

@@ -64,12 +64,18 @@ impl ArtifactScore {
     }
 
     /// Take (and clear) the first dispatch error since the last check.
+    /// A poisoned mutex is recovered, not propagated: the slot only holds a
+    /// `String` (no invariant to break), and the serving layer intentionally
+    /// contains panics with `catch_unwind`.
     pub fn take_error(&self) -> Option<String> {
-        self.error.lock().unwrap().take()
+        self.error
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .take()
     }
 
     fn record_error(&self, err: &anyhow::Error) {
-        let mut slot = self.error.lock().unwrap();
+        let mut slot = self.error.lock().unwrap_or_else(|e| e.into_inner());
         if slot.is_none() {
             *slot = Some(format!("{err:#}"));
         }
@@ -88,10 +94,13 @@ impl ArtifactScore {
                 tokens[lane * l + j] = x as i32;
             }
         }
+        // Recover rather than re-panic if an earlier caller panicked while
+        // holding the handle: the handle is a plain mpsc sender to the
+        // runtime thread, so a poisoned guard carries no broken invariant.
         let out = self
             .handle
             .lock()
-            .unwrap()
+            .unwrap_or_else(|e| e.into_inner())
             .execute(
                 &self.artifact,
                 vec![Value::i32(tokens, vec![b, l]), Value::scalar_f32(t as f32)],

@@ -89,6 +89,16 @@ impl Client {
         Ok(r.get("report")?.as_str()?.to_string())
     }
 
+    /// The `stats` verb: every coordinator counter and gauge (including
+    /// the failure ledger) as one flat JSON object.
+    pub fn stats(&mut self) -> Result<Json> {
+        let r = self.raw(r#"{"cmd": "stats"}"#)?;
+        if !r.get("ok")?.as_bool()? {
+            bail!("stats failed: {:?}", r.opt("error"));
+        }
+        Ok(r)
+    }
+
     /// Fire the cooperative cancel token of job `id` (from a stream's
     /// `accepted` frame).  Returns whether the server found the job.
     pub fn cancel(&mut self, id: u64) -> Result<bool> {
@@ -164,6 +174,12 @@ impl Client {
         }
         if let Some(s) = opts.slack {
             fields.push(("slack", Json::Num(s)));
+        }
+        if let Some(d) = opts.deadline_ms {
+            fields.push(("deadline_ms", Json::from(d)));
+        }
+        if let Some(p) = opts.priority {
+            fields.push(("priority", Json::from(p as u64)));
         }
         let req = Json::obj(fields);
         let r = self.raw(&req.to_string())?;
@@ -258,12 +274,16 @@ impl Client {
 
     fn ok_response(r: &Json) -> Result<GenerateResponse> {
         if !r.get("ok")?.as_bool()? {
-            bail!(
-                "generate failed: {}",
-                r.opt("error")
-                    .and_then(|e| e.as_str().ok())
-                    .unwrap_or("unknown")
-            );
+            let msg = r
+                .opt("error")
+                .and_then(|e| e.as_str().ok())
+                .unwrap_or("unknown");
+            // Typed failures carry a stable machine-readable code
+            // (spec-validation or runtime — see `api::wire`'s table).
+            match r.opt("code").and_then(|c| c.as_str().ok()) {
+                Some(code) => bail!("generate failed [{code}]: {msg}"),
+                None => bail!("generate failed: {msg}"),
+            }
         }
         GenerateResponse::from_json(r)
     }
@@ -290,4 +310,11 @@ pub struct GenOpts<'a> {
     pub window_ratio: Option<f64>,
     /// Exact-path knob: thinning bound inflation >= 1.
     pub slack: Option<f64>,
+    /// QoS: wall-clock deadline in milliseconds (>= 1).  Infeasible
+    /// deadlines are rejected at intake; feasible ones that expire mid-run
+    /// return a partial response.
+    pub deadline_ms: Option<u64>,
+    /// QoS: admission priority 0..=3 (default 1).  Under load, arriving
+    /// higher-priority work may displace queued lower-priority requests.
+    pub priority: Option<u8>,
 }

@@ -103,26 +103,41 @@
 //!
 //! ```text
 //! -> {"cmd": "metrics"}   <- {"ok": true, "report": "...", ...counters}
+//! -> {"cmd": "stats"}     <- {"ok": true, ...all counters + gauges, flat}
 //! -> {"cmd": "ping"}      <- {"ok": true}
 //! ```
 //!
+//! `stats` is the machine-readable superset of `metrics`: every
+//! coordinator counter and gauge (including the failure ledger —
+//! `lane_failures`, `sheds`, `deadline_rejects`, `deadline_expiries`,
+//! `supervisor_restarts` — and the `registry_entries` leak canary) as one
+//! flat object.
+//!
 //! Errors: `{"ok": false, "error": "..."}` (+ `"code"` for typed spec
-//! errors).  One thread per connection; malformed lines never kill the
-//! connection.
+//! errors and the runtime failure codes — `lane_failed`, `overloaded`,
+//! `deadline_infeasible`, … — see the table in [`crate::api::wire`]).
+//! One thread per connection; malformed lines never kill the connection.
+//! Connection threads are capped ([`DEFAULT_MAX_CONNS`], or
+//! [`Server::start_with_limit`]): a connection over the cap receives one
+//! immediate `{"ok": false, "code": "overloaded"}` frame and is closed,
+//! instead of queueing an unbounded number of handler threads.
 
 pub mod client;
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::api::wire::{self, ParsedRequest, V1Echo};
 use crate::api::SamplingSpec;
-use crate::coordinator::{Coordinator, GenerateResponse, JobEvent};
+use crate::coordinator::{codes, Coordinator, GenerateResponse, JobError, JobEvent};
 use crate::util::json::Json;
+
+/// Default cap on concurrent connection-handler threads.
+pub const DEFAULT_MAX_CONNS: usize = 256;
 
 pub struct Server {
     pub addr: std::net::SocketAddr,
@@ -130,22 +145,80 @@ pub struct Server {
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
+/// Live-connection counter: acquired before spawning a handler thread,
+/// released on Drop however the handler exits (clean EOF, I/O error,
+/// panic unwind).
+struct ConnGuard {
+    conns: Arc<AtomicUsize>,
+}
+
+impl ConnGuard {
+    fn acquire(conns: &Arc<AtomicUsize>, cap: usize) -> Option<ConnGuard> {
+        let mut cur = conns.load(Ordering::Relaxed);
+        loop {
+            if cur >= cap {
+                return None;
+            }
+            match conns.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Some(ConnGuard { conns: Arc::clone(conns) }),
+                Err(now) => cur = now,
+            }
+        }
+    }
+}
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.conns.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
 impl Server {
     /// Bind and serve on a background thread. `addr` like "127.0.0.1:0".
     pub fn start(addr: &str, coordinator: Coordinator) -> Result<Server> {
+        Server::start_with_limit(addr, coordinator, DEFAULT_MAX_CONNS)
+    }
+
+    /// As [`Server::start`], with an explicit cap on concurrent connection
+    /// threads.  An over-cap connection is not left hanging: it receives
+    /// one immediate typed `overloaded` frame and is closed.
+    pub fn start_with_limit(
+        addr: &str,
+        coordinator: Coordinator,
+        max_conns: usize,
+    ) -> Result<Server> {
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
+        let max_conns = max_conns.max(1);
+        let conns = Arc::new(AtomicUsize::new(0));
         let handle = std::thread::Builder::new()
             .name("fastdds-server".into())
             .spawn(move || {
                 while !stop2.load(Ordering::Relaxed) {
                     match listener.accept() {
-                        Ok((stream, _)) => {
+                        Ok((mut stream, _)) => {
+                            let Some(guard) = ConnGuard::acquire(&conns, max_conns)
+                            else {
+                                let _ = write_json(
+                                    &mut stream,
+                                    &coded_error(
+                                        "server is at its connection cap",
+                                        codes::OVERLOADED,
+                                    ),
+                                );
+                                continue;
+                            };
                             let coord = coordinator.clone();
                             std::thread::spawn(move || {
+                                let _guard = guard;
                                 let _ = handle_conn(stream, coord);
                             });
                         }
@@ -178,6 +251,24 @@ fn generic_error(msg: &str) -> Json {
         ("ok", Json::Bool(false)),
         ("error", Json::from(msg)),
     ])
+}
+
+fn coded_error(msg: &str, code: &str) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::from(msg)),
+        ("code", Json::from(code)),
+    ])
+}
+
+/// Job failures carry a typed [`JobError`] in the chain: surface its
+/// stable code next to the message so clients can branch without string
+/// matching.
+fn job_error_json(err: &anyhow::Error) -> Json {
+    match err.downcast_ref::<JobError>() {
+        Some(je) => coded_error(&je.message, je.code),
+        None => generic_error(&format!("{err:#}")),
+    }
 }
 
 fn handle_conn(stream: TcpStream, coordinator: Coordinator) -> Result<()> {
@@ -225,6 +316,13 @@ fn dispatch_line(
                     ("nfe_total", Json::from(m.nfe_total as f64)),
                 ]),
             )
+        }
+        "stats" => {
+            let mut out = coordinator.metrics().to_json();
+            if let Json::Obj(m) = &mut out {
+                m.insert("ok".into(), Json::Bool(true));
+            }
+            write_json(writer, &out)
         }
         "cancel" => {
             let id = match j.get("id").and_then(|v| v.as_u64()) {
@@ -305,7 +403,7 @@ fn handle_generate(
             };
             write_json(writer, &out)
         }
-        Err(e) => write_json(writer, &generic_error(&format!("{e:#}"))),
+        Err(e) => write_json(writer, &job_error_json(&e)),
     }
 }
 
@@ -315,7 +413,7 @@ fn handle_stream(
     writer: &mut TcpStream,
 ) -> std::io::Result<()> {
     let job = coordinator.submit_stream(parsed.spec.clone());
-    write_json(
+    let accepted = write_json(
         writer,
         &Json::obj(vec![
             ("ok", Json::Bool(true)),
@@ -323,13 +421,19 @@ fn handle_stream(
             ("stream", Json::from("accepted")),
             ("id", Json::from(job.id)),
         ]),
-    )?;
+    );
+    if let Err(e) = accepted {
+        // Client gone before the stream even started: wind the job down
+        // instead of computing into a dead socket.
+        job.cancel();
+        return Err(e);
+    }
     loop {
         match job.recv() {
             Ok(JobEvent::Lane { sample_idx, tokens, nfe, partial }) => {
                 let toks: Vec<Json> =
                     tokens.iter().map(|&t| Json::Num(t as f64)).collect();
-                write_json(
+                let wrote = write_json(
                     writer,
                     &Json::obj(vec![
                         ("ok", Json::Bool(true)),
@@ -340,7 +444,14 @@ fn handle_stream(
                         ("nfe_used", Json::from(nfe)),
                         ("partial", Json::Bool(partial)),
                     ]),
-                )?;
+                );
+                if let Err(e) = wrote {
+                    // Disconnect mid-stream: cancel so the remaining lanes
+                    // stop at the next solver window; the coordinator still
+                    // completes the job and clears its registry entry.
+                    job.cancel();
+                    return Err(e);
+                }
             }
             Ok(JobEvent::Done(resp)) => {
                 return write_json(
@@ -356,27 +467,25 @@ fn handle_stream(
                     ]),
                 );
             }
-            Ok(JobEvent::Failed(e)) => {
+            Ok(JobEvent::Failed { code, message }) => {
                 return write_json(
                     writer,
                     &Json::obj(vec![
                         ("ok", Json::Bool(false)),
                         ("stream", Json::from("error")),
                         ("id", Json::from(job.id)),
-                        ("error", Json::from(e)),
+                        ("error", Json::from(message)),
+                        ("code", Json::from(code)),
                     ]),
                 );
             }
             Err(e) => {
-                return write_json(
-                    writer,
-                    &Json::obj(vec![
-                        ("ok", Json::Bool(false)),
-                        ("stream", Json::from("error")),
-                        ("id", Json::from(job.id)),
-                        ("error", Json::from(format!("{e:#}"))),
-                    ]),
-                );
+                let mut out = job_error_json(&e);
+                if let Json::Obj(m) = &mut out {
+                    m.insert("stream".into(), Json::from("error"));
+                    m.insert("id".into(), Json::from(job.id));
+                }
+                return write_json(writer, &out);
             }
         }
     }
@@ -674,6 +783,53 @@ mod tests {
             .filter(|t| t.as_f64().unwrap() as usize == 6)
             .count();
         assert!(masked >= 13, "only {masked} masks left");
+        srv.stop();
+    }
+
+    #[test]
+    fn stats_verb_and_connection_cap() {
+        use crate::score::markov::{MarkovChain, MarkovOracle};
+        use crate::util::rng::Xoshiro256;
+        use std::sync::Arc;
+        let mut rng = Xoshiro256::seed_from_u64(23);
+        let oracle =
+            Arc::new(MarkovOracle::new(MarkovChain::generate(&mut rng, 6, 0.5), 16));
+        let coord = Coordinator::start_local(oracle, BatchPolicy::Greedy, 8);
+        // Cap = 1: the first client holds the only slot.
+        let srv = Server::start_with_limit("127.0.0.1:0", coord, 1).unwrap();
+        let addr = srv.addr.to_string();
+        let mut c = Client::connect(&addr).unwrap();
+        assert!(c.ping().unwrap());
+        let stats = c.stats().unwrap();
+        assert_eq!(stats.get("requests").unwrap().as_u64().unwrap(), 0);
+        assert_eq!(stats.get("lane_failures").unwrap().as_u64().unwrap(), 0);
+        assert_eq!(stats.get("registry_entries").unwrap().as_u64().unwrap(), 0);
+
+        // An over-cap connection gets one typed overloaded frame, unasked,
+        // then the socket closes (read it raw — the server speaks first).
+        let over = TcpStream::connect(&addr).unwrap();
+        over.set_read_timeout(Some(std::time::Duration::from_secs(10))).unwrap();
+        let mut reader = BufReader::new(over);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let r = Json::parse(line.trim()).unwrap();
+        assert!(!r.get("ok").unwrap().as_bool().unwrap());
+        assert_eq!(r.get("code").unwrap().as_str().unwrap(), "overloaded");
+
+        // Dropping the occupant frees the slot (guard released on EOF).
+        drop(c);
+        let mut freed = false;
+        for _ in 0..200 {
+            let mut c2 = Client::connect(&addr).unwrap();
+            if let Ok(r) = c2.raw(r#"{"cmd": "ping"}"#) {
+                if r.get("ok").unwrap().as_bool().unwrap() {
+                    freed = true;
+                    break;
+                }
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(freed, "connection slot never freed after client EOF");
         srv.stop();
     }
 

@@ -168,6 +168,14 @@ pub fn run_single<F: StateFamily, K: SolverKernel<F>, R: Rng>(
 /// which races with a cancel landing just after the last window).
 /// Polling draws no randomness, so an uncancelled run is bit-identical to
 /// [`run_single`].
+///
+/// The same poll is the deadline-enforcement point: a token armed with a
+/// deadline ([`CancelToken::with_deadline`], set from a spec's
+/// `deadline_ms`) reports cancelled once the deadline passes, so an
+/// expired request winds down into the identical partial-result shape
+/// with no extra plumbing in the solver loops — and a deadline that never
+/// fires leaves the run bit-identical to an un-deadlined one (pinned by
+/// the golden parity suite).
 pub fn run_single_ctl<F: StateFamily, K: SolverKernel<F>, R: Rng>(
     ctx: &F::Ctx,
     kernel: &K,
@@ -259,7 +267,9 @@ pub fn run_batch<F: StateFamily, K: SolverKernel<F> + Sync>(
 /// the next window boundary without the terminal finalize; the final
 /// `bool` reports whether the run COMPLETED (`false` = it actually broke
 /// early — authoritative, no post-run token race).  Uncancelled runs are
-/// bit-identical to [`run_batch`].
+/// bit-identical to [`run_batch`].  As in [`run_single_ctl`], the poll
+/// doubles as the deadline-enforcement point for tokens armed via
+/// [`CancelToken::with_deadline`].
 pub fn run_batch_ctl<F: StateFamily, K: SolverKernel<F> + Sync>(
     ctx: &F::Ctx,
     kernel: &K,

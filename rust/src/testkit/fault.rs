@@ -1,0 +1,284 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] schedules faults by **score-evaluation tick**: the
+//! wrapped [`FaultyScore`] counts every score call it forwards (one tick
+//! per batched call, not per lane) and fires the planned fault — a panic
+//! or a stall — when its tick comes up.  Because the coordinator's
+//! dispatch order is deterministic for a fixed request sequence, a plan
+//! keyed on ticks reproduces the same failure in the same place on every
+//! run: the chaos suite (`tests/chaos.rs`) pins recovery behavior against
+//! it, bit for bit where the contract promises it.
+//!
+//! Injected panics carry the [`INJECTED`] marker so
+//! [`silence_injected_panics`] can keep expected unwinds out of the test
+//! output while real panics still print.  Probabilistic injection
+//! ([`FaultPlan::random_panics`], used by the fault-injection bench row)
+//! hashes `(seed, tick)` — deterministic for a fixed seed, no shared RNG.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::ctmc::uniformization::{ExactCfg, ExactStats};
+use crate::score::{ScoreSource, Tok};
+use crate::util::cancel::StopCtl;
+use crate::util::rng::Xoshiro256;
+
+/// Marker embedded in every injected panic payload.
+pub const INJECTED: &str = "[injected fault]";
+
+/// One scheduled fault.
+#[derive(Clone, Copy, Debug)]
+pub enum FaultKind {
+    /// Panic inside the score call (exercises `catch_unwind` isolation).
+    Panic,
+    /// Sleep before evaluating (a stalled/slow lane: deadlines keep
+    /// ticking, the solver polls its stop token at the next window).
+    Stall(Duration),
+}
+
+/// Deterministic fault schedule keyed on score-evaluation ticks.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    at: BTreeMap<u64, FaultKind>,
+    /// Optional (seed, per-tick probability) for hash-based injection.
+    random_panic: Option<(u64, f64)>,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Panic on tick `tick` (0 = the first score call after wrapping).
+    pub fn panic_at(mut self, tick: u64) -> Self {
+        self.at.insert(tick, FaultKind::Panic);
+        self
+    }
+
+    /// Stall for `dur` on tick `tick`, then evaluate normally.
+    pub fn stall_at(mut self, tick: u64, dur: Duration) -> Self {
+        self.at.insert(tick, FaultKind::Stall(dur));
+        self
+    }
+
+    /// Panic on each tick independently with probability `p`, decided by
+    /// hashing `(seed, tick)`: deterministic for a fixed seed, and ticks
+    /// pinned by `panic_at`/`stall_at` take precedence.
+    pub fn random_panics(mut self, seed: u64, p: f64) -> Self {
+        assert!((0.0..=1.0).contains(&p), "probability {p} outside [0, 1]");
+        self.random_panic = Some((seed, p));
+        self
+    }
+
+    pub fn fault_for(&self, tick: u64) -> Option<FaultKind> {
+        if let Some(&f) = self.at.get(&tick) {
+            return Some(f);
+        }
+        let (seed, p) = self.random_panic?;
+        (hash_unit(seed, tick) < p).then_some(FaultKind::Panic)
+    }
+}
+
+/// splitmix64-style mix of (seed, tick) into [0, 1).
+fn hash_unit(seed: u64, tick: u64) -> f64 {
+    let mut z = seed ^ tick.wrapping_mul(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^= z >> 31;
+    (z >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// A [`ScoreSource`] wrapper that applies a [`FaultPlan`], forwarding
+/// every call to the inner source.  Each forwarded score evaluation —
+/// dense, sparse, batched (one tick for the whole batch) or exact — first
+/// advances the tick counter and fires any fault scheduled for it.
+pub struct FaultyScore<S: ScoreSource> {
+    inner: S,
+    plan: FaultPlan,
+    calls: AtomicU64,
+}
+
+impl<S: ScoreSource> FaultyScore<S> {
+    pub fn new(inner: S, plan: FaultPlan) -> Self {
+        Self { inner, plan, calls: AtomicU64::new(0) }
+    }
+
+    /// Score calls forwarded so far (= the next tick to fire).
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    fn tick(&self) {
+        let t = self.calls.fetch_add(1, Ordering::Relaxed);
+        match self.plan.fault_for(t) {
+            None => {}
+            Some(FaultKind::Panic) => {
+                std::panic::panic_any(format!("{INJECTED} score call {t}"))
+            }
+            Some(FaultKind::Stall(d)) => std::thread::sleep(d),
+        }
+    }
+}
+
+impl<S: ScoreSource> ScoreSource for FaultyScore<S> {
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+
+    fn seq_len(&self) -> usize {
+        self.inner.seq_len()
+    }
+
+    fn mask_id(&self) -> Tok {
+        self.inner.mask_id()
+    }
+
+    fn probs_into(&self, tokens: &[Tok], t: f64, out: &mut [f64]) {
+        self.tick();
+        self.inner.probs_into(tokens, t, out);
+    }
+
+    fn probs_masked_into(
+        &self,
+        tokens: &[Tok],
+        masked_idx: &[usize],
+        t: f64,
+        out: &mut [f64],
+    ) {
+        self.tick();
+        self.inner.probs_masked_into(tokens, masked_idx, t, out);
+    }
+
+    // One tick per batched call, NOT per lane: the default implementation
+    // would fan out through `probs_masked_into` and double-count (and
+    // panic per lane instead of per dispatch).
+    fn probs_masked_batch(
+        &self,
+        reqs: &[(&[Tok], &[usize])],
+        t: f64,
+        outs: &mut [&mut [f64]],
+    ) {
+        self.tick();
+        self.inner.probs_masked_batch(reqs, t, outs);
+    }
+
+    fn exact_uniform(
+        &self,
+        delta: f64,
+        cfg: &ExactCfg,
+        rng: &mut Xoshiro256,
+    ) -> Option<(Vec<Tok>, ExactStats)> {
+        self.tick();
+        self.inner.exact_uniform(delta, cfg, rng)
+    }
+
+    fn exact_uniform_ctl(
+        &self,
+        delta: f64,
+        cfg: &ExactCfg,
+        stop: &StopCtl,
+        rng: &mut Xoshiro256,
+    ) -> Option<(Vec<Tok>, ExactStats, bool)> {
+        self.tick();
+        self.inner.exact_uniform_ctl(delta, cfg, stop, rng)
+    }
+}
+
+/// Install a process-wide panic hook that suppresses backtrace noise for
+/// panics carrying the [`INJECTED`] marker (including supervisor drills
+/// whose reason embeds it) while real panics still print.  Idempotent.
+pub fn silence_injected_panics() {
+    static SILENCE: std::sync::Once = std::sync::Once::new();
+    SILENCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let payload = info.payload();
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&'static str>().copied());
+            if msg.is_some_and(|m| m.contains(INJECTED)) {
+                return;
+            }
+            prev(info);
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::score::markov::{MarkovChain, MarkovOracle};
+
+    fn oracle() -> MarkovOracle {
+        let mut rng = Xoshiro256::seed_from_u64(23);
+        MarkovOracle::new(MarkovChain::generate(&mut rng, 5, 0.5), 8)
+    }
+
+    #[test]
+    fn plan_fires_on_its_tick_only() {
+        let plan = FaultPlan::new().panic_at(2);
+        let fs = FaultyScore::new(oracle(), plan);
+        let toks = crate::score::all_masked(8, fs.mask_id());
+        let mut out = vec![0.0; 8 * 5];
+        fs.probs_into(&toks, 0.5, &mut out); // tick 0
+        fs.probs_into(&toks, 0.5, &mut out); // tick 1
+        assert_eq!(fs.calls(), 2);
+        let fs = std::sync::Arc::new(fs);
+        let fs2 = std::sync::Arc::clone(&fs);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+            let mut out = vec![0.0; 8 * 5];
+            let toks = crate::score::all_masked(8, fs2.mask_id());
+            fs2.probs_into(&toks, 0.5, &mut out); // tick 2: boom
+        }));
+        let payload = caught.expect_err("tick 2 must panic");
+        let msg = payload.downcast_ref::<String>().unwrap();
+        assert!(msg.contains(INJECTED), "{msg}");
+    }
+
+    #[test]
+    fn wrapped_scores_are_bit_identical_when_no_fault_fires() {
+        let base = oracle();
+        let fs = FaultyScore::new(oracle(), FaultPlan::new());
+        let toks = crate::score::all_masked(8, base.mask_id());
+        let mut a = vec![0.0; 8 * 5];
+        let mut b = vec![0.0; 8 * 5];
+        base.probs_into(&toks, 0.3, &mut a);
+        fs.probs_into(&toks, 0.3, &mut b);
+        assert_eq!(a, b, "a quiet wrapper must be invisible");
+    }
+
+    #[test]
+    fn batched_call_costs_one_tick() {
+        let fs = FaultyScore::new(oracle(), FaultPlan::new());
+        let toks = crate::score::all_masked(8, fs.mask_id());
+        let idx: Vec<usize> = (0..8).collect();
+        let reqs: Vec<(&[Tok], &[usize])> =
+            vec![(&toks, &idx), (&toks, &idx), (&toks, &idx)];
+        let mut bufs: Vec<Vec<f64>> = vec![vec![0.0; 8 * 5]; 3];
+        let mut outs: Vec<&mut [f64]> =
+            bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+        fs.probs_masked_batch(&reqs, 0.5, &mut outs);
+        assert_eq!(fs.calls(), 1, "3 lanes, one dispatch, one tick");
+    }
+
+    #[test]
+    fn random_panics_are_deterministic_and_roughly_calibrated() {
+        let plan = FaultPlan::new().random_panics(7, 0.1);
+        let fired: Vec<u64> =
+            (0..1000).filter(|&t| plan.fault_for(t).is_some()).collect();
+        let again: Vec<u64> =
+            (0..1000).filter(|&t| plan.fault_for(t).is_some()).collect();
+        assert_eq!(fired, again, "same seed, same schedule");
+        assert!(
+            fired.len() > 50 && fired.len() < 200,
+            "p=0.1 over 1000 ticks fired {} times",
+            fired.len()
+        );
+        let other = FaultPlan::new().random_panics(8, 0.1);
+        let other_fired: Vec<u64> =
+            (0..1000).filter(|&t| other.fault_for(t).is_some()).collect();
+        assert_ne!(fired, other_fired, "different seeds, different schedule");
+    }
+}

@@ -6,6 +6,8 @@
 //! framework guarantees the failing *seed* is printed so any failure is
 //! exactly reproducible with `FASTDDS_PT_SEED`).
 
+pub mod fault;
+
 use crate::util::rng::{Rng, Xoshiro256};
 
 /// Generator handle passed to properties: seeded, with convenience draws.

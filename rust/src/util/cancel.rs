@@ -1,4 +1,4 @@
-//! Cooperative cancellation for long-running sampler jobs.
+//! Cooperative cancellation + deadlines for long-running sampler jobs.
 //!
 //! A [`CancelToken`] is a cheaply clonable flag shared between the party
 //! that may cancel (the server's `cancel` verb, a [`super::cli`] user
@@ -9,22 +9,47 @@
 //! first-hitting event for exact simulation — and winds down returning
 //! whatever partial state it has.  Polling never consumes randomness, so a
 //! run that is *not* cancelled is bit-identical to one executed without any
-//! token.
+//! token (pinned by `tests/golden_parity.rs`, deadlines included).
+//!
+//! An armed token can additionally carry a **deadline** (an absolute
+//! [`Instant`]): once it passes, the token reads as cancelled at the very
+//! same per-window checkpoints — deadline enforcement costs the worker
+//! nothing beyond the poll it already does, and an expired run completes
+//! with a partial response exactly like a cancelled one.
+//! [`CancelToken::deadline_expired`] distinguishes the two after the fact
+//! (the coordinator's `deadline_expiries` vs cancel accounting).
 //!
 //! The default token ([`CancelToken::never`]) carries no flag at all: hot
 //! loops on the non-serving entry points pay a single `Option` branch.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
-/// Shared cancellation flag (see module docs).
+#[derive(Debug)]
+struct Flag {
+    fired: AtomicBool,
+    /// Absolute wall deadline; `None` = no deadline.
+    deadline: Option<Instant>,
+}
+
+/// Shared cancellation flag, optionally deadline-armed (see module docs).
 #[derive(Clone, Debug, Default)]
-pub struct CancelToken(Option<Arc<AtomicBool>>);
+pub struct CancelToken(Option<Arc<Flag>>);
 
 impl CancelToken {
     /// An armed token: [`CancelToken::cancel`] flips it for every clone.
     pub fn new() -> CancelToken {
-        CancelToken(Some(Arc::new(AtomicBool::new(false))))
+        CancelToken::with_deadline(None)
+    }
+
+    /// An armed token that additionally reads as cancelled once `deadline`
+    /// passes.  `None` is equivalent to [`CancelToken::new`].
+    pub fn with_deadline(deadline: Option<Instant>) -> CancelToken {
+        CancelToken(Some(Arc::new(Flag {
+            fired: AtomicBool::new(false),
+            deadline,
+        })))
     }
 
     /// A token that can never fire (the default).
@@ -35,13 +60,32 @@ impl CancelToken {
     /// Request cancellation.  No-op on a never-token.
     pub fn cancel(&self) {
         if let Some(flag) = &self.0 {
-            flag.store(true, Ordering::Relaxed);
+            flag.fired.store(true, Ordering::Relaxed);
         }
     }
 
     pub fn is_cancelled(&self) -> bool {
         match &self.0 {
-            Some(flag) => flag.load(Ordering::Relaxed),
+            Some(flag) => {
+                flag.fired.load(Ordering::Relaxed)
+                    || matches!(flag.deadline, Some(d) if Instant::now() >= d)
+            }
+            None => false,
+        }
+    }
+
+    /// Whether the manual flag was fired (a deadline alone never sets it).
+    pub fn fired(&self) -> bool {
+        match &self.0 {
+            Some(flag) => flag.fired.load(Ordering::Relaxed),
+            None => false,
+        }
+    }
+
+    /// Whether the token carries a deadline that has passed.
+    pub fn deadline_expired(&self) -> bool {
+        match &self.0 {
+            Some(flag) => matches!(flag.deadline, Some(d) if Instant::now() >= d),
             None => false,
         }
     }
@@ -94,6 +138,7 @@ impl StopCtl {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Duration;
 
     #[test]
     fn token_fires_across_clones() {
@@ -112,7 +157,32 @@ mod tests {
         t.cancel();
         assert!(!t.is_cancelled());
         assert!(!t.can_fire());
+        assert!(!t.deadline_expired());
         assert!(CancelToken::same(&t, &CancelToken::default()));
+    }
+
+    #[test]
+    fn deadline_reads_as_cancelled_once_passed() {
+        let far = Instant::now() + Duration::from_secs(3600);
+        let t = CancelToken::with_deadline(Some(far));
+        assert!(!t.is_cancelled() && !t.deadline_expired());
+
+        let past = Instant::now() - Duration::from_millis(1);
+        let t = CancelToken::with_deadline(Some(past));
+        assert!(t.is_cancelled(), "passed deadline must read as cancelled");
+        assert!(t.deadline_expired());
+        assert!(!t.fired(), "a deadline alone must not set the manual flag");
+        // Clones observe the same deadline.
+        assert!(t.clone().is_cancelled());
+    }
+
+    #[test]
+    fn manual_cancel_distinguishable_from_expiry() {
+        let far = Instant::now() + Duration::from_secs(3600);
+        let t = CancelToken::with_deadline(Some(far));
+        t.cancel();
+        assert!(t.is_cancelled() && t.fired());
+        assert!(!t.deadline_expired());
     }
 
     #[test]

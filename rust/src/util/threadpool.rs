@@ -25,7 +25,11 @@ impl ThreadPool {
                 let rx = Arc::clone(&rx);
                 std::thread::spawn(move || loop {
                     let job = {
-                        let guard = rx.lock().unwrap();
+                        // A job that panics while a sibling waits on the
+                        // receiver poisons this mutex; the receiver itself
+                        // stays valid, so recover and keep the pool alive
+                        // instead of cascading the panic to every worker.
+                        let guard = rx.lock().unwrap_or_else(|e| e.into_inner());
                         guard.recv()
                     };
                     match job {

@@ -1,0 +1,403 @@
+//! Chaos suite: deterministic fault injection against the serving stack.
+//!
+//! Every scenario drives a real coordinator (and, for the disconnect
+//! test, a real TCP server) through one injected fault — a kernel panic
+//! mid-batch, a stalled lane running past its deadline, a client gone
+//! mid-stream, an admission-cap burst, a scheduler-loop crash, an
+//! infeasible deadline — and then asserts the **same** three things:
+//!
+//!   1. the failing request gets a typed error (or a partial response),
+//!      never a hang;
+//!   2. innocent bystanders are untouched — co-batched sibling lanes
+//!      complete bit-identical to an uninjected run;
+//!   3. the coordinator keeps serving: ~50 follow-up requests after the
+//!      fault return bit-identical results to a never-faulted
+//!      coordinator, and the failure-ledger gauges (`in_flight`,
+//!      `queued_lanes`, `registry_entries`) all drain to zero.
+//!
+//! Faults come from `testkit::fault`: plans keyed on score-evaluation
+//! ticks, so each failure lands in exactly the same place on every run
+//! (no sleeps-as-synchronisation, no flaky timing).  Where a test does
+//! depend on wall time (stalls, deadlines) the margins are hundreds of
+//! milliseconds against single-digit scheduling jitter.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fastdds::api::SamplingSpec;
+use fastdds::coordinator::{
+    codes, BatchPolicy, Coordinator, CoordinatorCfg, GenerateResponse, JobError,
+};
+use fastdds::score::markov::{MarkovChain, MarkovOracle};
+use fastdds::solvers::Solver;
+use fastdds::testkit::fault::{silence_injected_panics, FaultPlan, FaultyScore, INJECTED};
+use fastdds::util::rng::Xoshiro256;
+
+const VOCAB: usize = 6;
+const SEQ_LEN: usize = 14;
+const FOLLOW_UPS: usize = 50;
+
+fn oracle() -> MarkovOracle {
+    let mut rng = Xoshiro256::seed_from_u64(23);
+    MarkovOracle::new(MarkovChain::generate(&mut rng, VOCAB, 0.5), SEQ_LEN)
+}
+
+fn spec(solver: Solver, nfe: usize, n: usize, seed: u64) -> SamplingSpec {
+    SamplingSpec::builder()
+        .solver(solver)
+        .nfe(nfe)
+        .n_samples(n)
+        .seed(seed)
+        .build()
+        .unwrap()
+}
+
+/// The uninjected ground truth: a fresh, fault-free coordinator serving
+/// the same oracle.  Fixed-grid plans are batch-invariant (PR 1), so its
+/// responses are the bit-exact expectation for any batching/policy the
+/// faulted coordinator used.
+fn clean_expect(spec: &SamplingSpec) -> GenerateResponse {
+    let c = Coordinator::start_local(Arc::new(oracle()), BatchPolicy::Greedy, 8);
+    let resp = c.generate_spec(spec.clone()).unwrap();
+    c.shutdown();
+    resp
+}
+
+fn typed_code(err: &anyhow::Error) -> &'static str {
+    err.downcast_ref::<JobError>()
+        .unwrap_or_else(|| panic!("error must carry a typed JobError: {err:#}"))
+        .code
+}
+
+/// Post-fault health check: `n` sequential requests all bit-identical to
+/// the never-faulted expectation, then every gauge drained to zero.
+fn assert_serves_clean(c: &Coordinator, spec: &SamplingSpec, n: usize) {
+    let want = clean_expect(spec);
+    assert!(!want.partial);
+    for i in 0..n {
+        let got = c.generate_spec(spec.clone()).unwrap_or_else(|e| {
+            panic!("follow-up request {i} failed after the fault: {e:#}")
+        });
+        assert_eq!(got.sequences, want.sequences, "follow-up {i} diverged");
+        assert!(!got.partial, "follow-up {i} partial");
+    }
+    let m = c.metrics();
+    assert_eq!(m.in_flight, 0, "in-flight requests leaked");
+    assert_eq!(m.queued_lanes, 0, "queued lanes leaked");
+    assert_eq!(m.registry_entries, 0, "cancel-registry entries leaked");
+}
+
+// ===========================================================================
+// 1. Kernel panic during a batched dispatch
+// ===========================================================================
+
+#[test]
+fn panic_in_batched_dispatch_isolates_the_lane() {
+    silence_injected_panics();
+    // Tick 0 = the co-batched dispatch; tick 1 = the first lane's solo
+    // rerun.  So the batch panics, isolation reruns lane-by-lane, the
+    // FIRST request fails typed, and its two siblings complete.
+    let plan = FaultPlan::new().panic_at(0).panic_at(1);
+    let faulty = Arc::new(FaultyScore::new(oracle(), plan));
+    // Timeout policy with capacity 3: the batcher holds lanes until all
+    // three single-lane requests are queued (full => dispatch), which
+    // pins the tick alignment with zero timing assumptions.
+    let c = Coordinator::start_local(
+        faulty,
+        BatchPolicy::Timeout(Duration::from_secs(10)),
+        3,
+    );
+    let solver = Solver::TauLeaping;
+    let specs: Vec<SamplingSpec> =
+        (0..3).map(|i| spec(solver, 16, 1, 100 + i)).collect();
+    let handles: Vec<_> =
+        specs.iter().map(|s| c.submit_spec(s.clone())).collect();
+    let mut results: Vec<Result<GenerateResponse, anyhow::Error>> =
+        handles.into_iter().map(|h| h.wait()).collect();
+
+    // The panicking lane's request: typed lane_failed, message naming the
+    // injected fault.
+    let err = results.remove(0).unwrap_err();
+    assert_eq!(typed_code(&err), codes::LANE_FAILED);
+    assert!(
+        err.to_string().contains("panicked during dispatch"),
+        "unexpected message: {err:#}"
+    );
+    assert!(err.to_string().contains(INJECTED), "message lost the payload");
+
+    // Sibling lanes: bit-identical to a coordinator that never saw a
+    // fault (per-lane seeded streams + fixed-grid batch invariance).
+    for (s, got) in specs[1..].iter().zip(results) {
+        let got = got.expect("sibling lane must complete");
+        let want = clean_expect(s);
+        assert_eq!(got.sequences, want.sequences, "sibling diverged");
+        assert_eq!(got.nfe_used, want.nfe_used);
+        assert!(!got.partial);
+    }
+
+    let m = c.metrics();
+    assert_eq!(m.lane_failures, 1, "exactly one lane failure");
+    assert_eq!(m.requests, 3);
+
+    // The coordinator keeps serving (full batches dispatch immediately
+    // under the timeout policy).
+    assert_serves_clean(&c, &spec(solver, 16, 3, 900), FOLLOW_UPS);
+    c.shutdown();
+}
+
+// ===========================================================================
+// 2. Stalled lane runs past its deadline
+// ===========================================================================
+
+#[test]
+fn stalled_lane_hits_deadline_and_returns_partial() {
+    silence_injected_panics();
+    // Tick 2 stalls for 400ms against a 100ms deadline: the solver's next
+    // per-window poll sees the expired deadline and winds the run down
+    // into a partial response — an expiry in the ledger, not an error.
+    let plan = FaultPlan::new().stall_at(2, Duration::from_millis(400));
+    let faulty = Arc::new(FaultyScore::new(oracle(), plan));
+    let c = Coordinator::start_local(faulty, BatchPolicy::Greedy, 8);
+
+    let stalled = SamplingSpec::builder()
+        .solver(Solver::TauLeaping)
+        .nfe(32)
+        .n_samples(1)
+        .seed(7)
+        .deadline_ms(Some(100))
+        .build()
+        .unwrap();
+    let t0 = Instant::now();
+    let resp = c.generate_spec(stalled).expect("expiry is not an error");
+    assert!(resp.partial, "deadline expiry must surface as partial");
+    assert!(
+        t0.elapsed() >= Duration::from_millis(300),
+        "the stall itself must have happened"
+    );
+    // Far fewer evaluations than the 33 the plan would spend.
+    assert!(resp.nfe_used < 33, "nfe_used={}", resp.nfe_used);
+
+    let m = c.metrics();
+    assert_eq!(m.deadline_expiries, 1);
+    assert_eq!(m.deadline_rejects, 0, "a cold cost model must not reject");
+
+    // Un-deadlined follow-ups (ticks past the stall) serve clean.
+    assert_serves_clean(&c, &spec(Solver::TauLeaping, 16, 2, 40), FOLLOW_UPS);
+    c.shutdown();
+}
+
+// ===========================================================================
+// 3. Client disconnects mid-stream (server level)
+// ===========================================================================
+
+#[test]
+fn client_disconnect_mid_stream_leaks_nothing() {
+    use fastdds::server::client::Client;
+    use fastdds::server::Server;
+
+    silence_injected_panics();
+    // The first dispatch stalls 300ms, guaranteeing the job is still
+    // running when the client vanishes right after the accepted frame.
+    let plan = FaultPlan::new().stall_at(0, Duration::from_millis(300));
+    let faulty = Arc::new(FaultyScore::new(oracle(), plan));
+    let coord = Coordinator::start_local(faulty, BatchPolicy::Greedy, 8);
+    let srv = Server::start("127.0.0.1:0", coord).unwrap();
+    let addr = srv.addr.to_string();
+    let timeout = Some(Duration::from_secs(10));
+
+    let streamed = spec(Solver::TauLeaping, 16, 2, 55);
+    {
+        let mut doomed = Client::connect_with(&addr, timeout).unwrap();
+        let id = doomed.start_stream(&streamed).unwrap();
+        assert!(id > 0);
+        // Drop without reading a single chunk: the handler's next write
+        // fails, it cancels the job and exits; the coordinator completes
+        // the job into the void and clears every registry entry.
+    }
+
+    let mut c = Client::connect_with(&addr, timeout).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let stats = c.stats().unwrap();
+        let in_flight = stats.get("in_flight").unwrap().as_u64().unwrap();
+        let queued = stats.get("queued_lanes").unwrap().as_u64().unwrap();
+        let registry = stats.get("registry_entries").unwrap().as_u64().unwrap();
+        if in_flight == 0 && queued == 0 && registry == 0 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "gauges never drained: in_flight={in_flight} queued={queued} \
+             registry={registry}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // The abandoned job must not have poisoned the serving path: the same
+    // spec (and others) now serve bit-identical to a clean coordinator,
+    // over fresh connections and streams alike.
+    let want = clean_expect(&streamed);
+    for i in 0..FOLLOW_UPS {
+        let got = if i % 10 == 0 {
+            c.generate_stream(&streamed).unwrap().response
+        } else {
+            c.generate_spec(&streamed).unwrap()
+        };
+        assert_eq!(got.sequences, want.sequences, "follow-up {i} diverged");
+        assert!(!got.partial);
+    }
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.get("registry_entries").unwrap().as_u64().unwrap(), 0);
+    srv.stop();
+}
+
+// ===========================================================================
+// 4. Over-cap burst: load shedding + priority displacement
+// ===========================================================================
+
+#[test]
+fn overload_burst_sheds_typed_and_respects_priority() {
+    silence_injected_panics();
+    // queue_cap 2 with a hold-forever policy and batch capacity 2.  The
+    // burst: A (tau, prio 1) and B (euler, prio 1) fill the queue in two
+    // DIFFERENT batch-key queues, so neither can dispatch early (1 < 2
+    // lanes each) — admission order is the only ordering that matters.
+    let c = Coordinator::start_local_with_cfg(
+        Arc::new(oracle()),
+        BatchPolicy::Timeout(Duration::from_secs(10)),
+        2,
+        None,
+        CoordinatorCfg { max_inflight: None, queue_cap: Some(2) },
+    );
+    let a = spec(Solver::TauLeaping, 16, 1, 5);
+    let b = spec(Solver::Euler, 16, 1, 6);
+    let c_req = spec(Solver::TauLeaping, 16, 1, 7);
+    let d = SamplingSpec::builder()
+        .solver(Solver::TauLeaping)
+        .nfe(16)
+        .n_samples(1)
+        .seed(8)
+        .priority(2)
+        .build()
+        .unwrap();
+
+    let ha = c.submit_spec(a.clone());
+    let hb = c.submit_spec(b);
+    // C (same priority as everything queued): nothing strictly lower to
+    // displace — C itself is shed, typed.
+    let hc = c.submit_spec(c_req);
+    // D (priority 2): displaces the NEWEST queued lower-priority request
+    // (B), joins A's batch-key queue, fills it (2 = capacity) and both
+    // dispatch immediately.
+    let hd = c.submit_spec(d.clone());
+
+    let err_b = hb.wait().unwrap_err();
+    assert_eq!(typed_code(&err_b), codes::OVERLOADED);
+    assert!(
+        err_b.to_string().contains("displaced"),
+        "B must be the priority victim: {err_b:#}"
+    );
+    let err_c = hc.wait().unwrap_err();
+    assert_eq!(typed_code(&err_c), codes::OVERLOADED);
+    assert!(
+        err_c.to_string().contains("caps"),
+        "C must be shed at the cap: {err_c:#}"
+    );
+
+    let got_a = ha.wait().expect("A was admitted first and must complete");
+    let got_d = hd.wait().expect("D displaced its way in and must complete");
+    assert_eq!(got_a.sequences, clean_expect(&a).sequences, "A diverged");
+    assert_eq!(got_d.sequences, clean_expect(&d).sequences, "D diverged");
+
+    let m = c.metrics();
+    assert_eq!(m.sheds, 2, "exactly B and C shed");
+    assert_eq!(m.requests, 4);
+
+    // Full (2-lane) follow-ups dispatch immediately and fit the cap.
+    assert_serves_clean(&c, &spec(Solver::TauLeaping, 16, 2, 41), FOLLOW_UPS);
+    c.shutdown();
+}
+
+// ===========================================================================
+// 5. Scheduler-loop crash: supervisor restart with a job in flight
+// ===========================================================================
+
+#[test]
+fn supervisor_restart_fails_inflight_typed_and_keeps_serving() {
+    silence_injected_panics();
+    // Hold-forever policy: the submitted job is guaranteed still queued
+    // (capacity 2 > its 1 lane) when the crash lands right behind it in
+    // the same FIFO channel.
+    let c = Coordinator::start_local(
+        Arc::new(oracle()),
+        BatchPolicy::Timeout(Duration::from_secs(10)),
+        2,
+    );
+    let doomed = c.submit_spec(spec(Solver::TauLeaping, 16, 1, 70));
+    c.inject_loop_panic(&format!("{INJECTED} supervisor drill"));
+
+    let err = doomed.wait().unwrap_err();
+    assert_eq!(typed_code(&err), codes::COORDINATOR_RESTARTED);
+    assert!(err.to_string().contains("restarted"), "{err:#}");
+
+    // The restarted loop serves from a fresh batcher/assembler: full
+    // batches dispatch immediately, results bit-identical to clean.
+    assert_serves_clean(&c, &spec(Solver::TauLeaping, 16, 2, 42), FOLLOW_UPS);
+    let m = c.metrics();
+    assert_eq!(m.supervisor_restarts, 1);
+    assert_eq!(m.requests, 1 + FOLLOW_UPS as u64);
+    c.shutdown();
+}
+
+// ===========================================================================
+// 6. Deadline admission control: infeasible plans rejected at intake
+// ===========================================================================
+
+#[test]
+fn infeasible_deadline_rejected_after_cost_model_warms() {
+    silence_injected_panics();
+    let c = Coordinator::start_local(Arc::new(oracle()), BatchPolicy::Greedy, 8);
+    let warm = spec(Solver::TauLeaping, 16, 1, 90);
+
+    // Warm the ms/NFE cost model: a cold model never rejects.
+    for _ in 0..3 {
+        c.generate_spec(warm.clone()).unwrap();
+    }
+
+    // 20M planned evaluations against a 1ms deadline: infeasible at any
+    // physically possible rate the EWMA can have learned.
+    let hopeless = SamplingSpec::builder()
+        .solver(Solver::TauLeaping)
+        .nfe(20_000_000)
+        .n_samples(1)
+        .seed(91)
+        .deadline_ms(Some(1))
+        .build()
+        .unwrap();
+    let err = c.generate_spec(hopeless).unwrap_err();
+    assert_eq!(typed_code(&err), codes::DEADLINE_INFEASIBLE);
+    assert!(err.to_string().contains("infeasible"), "{err:#}");
+
+    let m = c.metrics();
+    assert_eq!(m.deadline_rejects, 1);
+    assert_eq!(m.deadline_expiries, 0, "rejection, not expiry");
+
+    // A generous deadline on the same warm model admits and completes
+    // bit-identical to the deadline-free run (the token is armed but
+    // never fires, and arming draws no RNG).
+    let deadlined = SamplingSpec::builder()
+        .solver(Solver::TauLeaping)
+        .nfe(16)
+        .n_samples(1)
+        .seed(90)
+        .deadline_ms(Some(600_000))
+        .build()
+        .unwrap();
+    let got = c.generate_spec(deadlined).unwrap();
+    let want = clean_expect(&warm);
+    assert_eq!(got.sequences, want.sequences, "deadline perturbed sampling");
+    assert!(!got.partial);
+
+    assert_serves_clean(&c, &warm, FOLLOW_UPS);
+    c.shutdown();
+}

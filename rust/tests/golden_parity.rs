@@ -1429,6 +1429,60 @@ fn bracketed_thinning_matches_nobracket_bitwise_and_cuts_nfe() {
 }
 
 #[test]
+fn armed_deadline_token_preserves_bit_parity() {
+    // The per-window cancel poll is also the deadline-enforcement point
+    // (serving specs with `deadline_ms` arm the token).  An armed deadline
+    // that never fires must leave every stream bit-identical to the
+    // legacy pre-refactor driver: polling draws no randomness, arming
+    // draws no randomness, so parity holds through the _ctl entry points
+    // exactly as through the plain ones.
+    use fastdds::util::cancel::CancelToken;
+    use std::time::{Duration, Instant};
+
+    let o = oracle(6, 16, 11);
+    let g = grid::masked_uniform(10, 1e-3);
+    let seeds = [3u64, 141, 59, 2653, 0];
+    let far_future =
+        CancelToken::with_deadline(Some(Instant::now() + Duration::from_secs(3600)));
+    for solver in approx_solvers() {
+        let (new, completed) =
+            masked::generate_batch_ctl(&o, solver, &g, &seeds, &far_future);
+        assert!(completed, "{}: a future deadline must not interrupt", solver.name());
+        let old = legacy_masked::generate_batch(&o, solver, &g, &seeds);
+        assert_eq!(new.len(), old.len());
+        for (k, (n, w)) in new.iter().zip(&old).enumerate() {
+            assert_eq!(n.0, w.0, "{} lane {k} tokens (deadline armed)", solver.name());
+            assert_eq!(n.1.nfe, w.1.nfe, "{} lane {k} nfe", solver.name());
+        }
+    }
+
+    // Adaptive path: same controller, same armed token, same streams.
+    let solver = Solver::Trapezoidal { theta: 0.5 };
+    let seeds = [5u64, 77, 901];
+    let mk_ctl = || {
+        let cfg = AdaptiveController::for_span(1e-3, 1.0, 1e-3);
+        StepController::new(cfg, 0.1)
+    };
+    let (new, trace, completed) = masked::generate_batch_adaptive_ctl(
+        &o,
+        solver,
+        mk_ctl(),
+        1e-3,
+        &seeds,
+        &far_future,
+    );
+    assert!(completed);
+    let (old, wtrace) =
+        legacy_masked::generate_batch_adaptive(&o, solver, mk_ctl(), 1e-3, &seeds);
+    assert_eq!(trace.grid, wtrace.grid, "armed deadline moved the realized grid");
+    assert_eq!(trace.errors, wtrace.errors);
+    for (k, (n, w)) in new.iter().zip(&old).enumerate() {
+        assert_eq!(n.0, w.0, "adaptive lane {k} tokens (deadline armed)");
+        assert_eq!(n.1.nfe, w.1.nfe, "adaptive lane {k} nfe");
+    }
+}
+
+#[test]
 fn hmm_evaluation_nfe_strictly_drops_at_default_slack() {
     // The acceptance headline on a Fig. 1-like configuration: at the
     // default slack the bracketed loop performs ~env/slack of the naive

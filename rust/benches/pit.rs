@@ -1,0 +1,298 @@
+//! Parallel-in-time frontier bench (`cargo bench --bench pit`): the
+//! latency-vs-NFE trade the PIT driver buys, written to `BENCH_pit.json`
+//! for cross-PR tracking (`--quick` = smoke sizes, used by tier1.sh).
+//!
+//! "Rounds" is the sequential-round count — the latency unit when score
+//! evaluations within one call batch for free: a sequential pass with a
+//! two-stage scheme pays one round per score call (NFE rounds total),
+//! while a PIT pass pays one round per *sweep* regardless of how many
+//! slices that sweep evaluates.  At `tol = 0` PIT is bit-identical to the
+//! sequential driver (asserted per lane below), so quality (toy-CTMC KL,
+//! text perplexity) matches exactly and the frontier win is just
+//! `mean sweeps < sequential NFE`.
+//!
+//! Headline row: the matched-KL comparison the ISSUE acceptance pins —
+//! PIT must reach the sequential driver's toy-CTMC KL with strictly fewer
+//! sequential rounds than the sequential NFE at >= 1 configuration.
+
+use fastdds::ctmc::ToyModel;
+use fastdds::schedule::grid;
+use fastdds::score::markov::{MarkovChain, MarkovOracle};
+use fastdds::solvers::pit::PitCfg;
+use fastdds::solvers::{masked, toy, Solver};
+use fastdds::util::json::Json;
+use fastdds::util::rng::Xoshiro256;
+use fastdds::util::threadpool::ThreadPool;
+
+struct Row {
+    driver: String,
+    steps: usize,
+    /// Sequential rounds paid: NFE for the sequential driver, mean sweeps
+    /// for PIT.
+    rounds: f64,
+    /// Score-evaluation work actually performed (mean per lane).
+    nfe: f64,
+    metric: &'static str,
+    quality: f64,
+}
+
+fn write_report(rows: &[Row], headline: Json, quick: bool) {
+    let json_rows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("driver", Json::from(r.driver.as_str())),
+                ("steps", Json::from(r.steps as u64)),
+                ("rounds", Json::Num(r.rounds)),
+                ("nfe", Json::Num(r.nfe)),
+                ("metric", Json::from(r.metric)),
+                ("quality", Json::Num(r.quality)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::from("pit")),
+        ("quick", Json::from(quick)),
+        ("rows", Json::Arr(json_rows)),
+        ("headline", headline),
+    ]);
+    let path = if std::path::Path::new("ROADMAP.md").exists() {
+        "BENCH_pit.json"
+    } else if std::path::Path::new("../ROADMAP.md").exists() {
+        "../BENCH_pit.json"
+    } else {
+        "BENCH_pit.json"
+    };
+    match std::fs::write(path, doc.to_string()) {
+        Ok(()) => println!("wrote {path} ({} rows)", rows.len()),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}
+
+/// Exact-convergence PIT probe on the toy model: every lane must land bit
+/// on the sequential sample, and the sweep count is what the bench plots.
+/// Returns (mean_sweeps, max_sweeps, mean_nfe).
+fn toy_pit_probe(
+    model: &ToyModel,
+    solver: Solver,
+    g: &[f64],
+    lanes: usize,
+    seed0: u64,
+) -> (f64, usize, f64) {
+    let steps = g.len() - 1;
+    let cfg = PitCfg::new(steps.max(1), 0.0);
+    let (mut sweeps_sum, mut sweeps_max, mut nfe_sum) = (0usize, 0usize, 0usize);
+    for b in 0..lanes {
+        let seed = seed0 ^ (b as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut seq_rng = Xoshiro256::seed_from_u64(seed);
+        let want = toy::generate(model, solver, g, &mut seq_rng);
+        let mut pit_rng = Xoshiro256::seed_from_u64(seed);
+        let lane = toy::pit_generate(model, solver, g, &cfg, &mut pit_rng);
+        assert!(lane.outcome.converged(), "tol=0 probe must converge");
+        assert_eq!(lane.out, want, "PIT broke bit-parity (seed {seed})");
+        sweeps_sum += lane.sweeps;
+        sweeps_max = sweeps_max.max(lane.sweeps);
+        nfe_sum += lane.stats.nfe;
+    }
+    (
+        sweeps_sum as f64 / lanes as f64,
+        sweeps_max,
+        nfe_sum as f64 / lanes as f64,
+    )
+}
+
+/// Within-tolerance PIT law on the toy model (no sequential twin to
+/// compare bits against — quality is measured by its own KL).
+/// Returns (empirical law, mean_sweeps, mean_nfe).
+fn toy_pit_distribution(
+    model: &ToyModel,
+    solver: Solver,
+    g: &[f64],
+    cfg: &PitCfg,
+    n: usize,
+    seed0: u64,
+) -> (Vec<f64>, f64, f64) {
+    let mut counts = vec![0u64; model.n_states()];
+    let (mut sweeps_sum, mut nfe_sum) = (0usize, 0usize);
+    for b in 0..n {
+        let seed = seed0 ^ (b as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let lane = toy::pit_generate(model, solver, g, cfg, &mut rng);
+        counts[lane.out] += 1;
+        sweeps_sum += lane.sweeps;
+        nfe_sum += lane.stats.nfe;
+    }
+    let q: Vec<f64> = counts.iter().map(|&c| c as f64 / n as f64).collect();
+    (q, sweeps_sum as f64 / n as f64, nfe_sum as f64 / n as f64)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n = if quick { 20_000 } else { 200_000 };
+    let probe_lanes = if quick { 64 } else { 256 };
+    println!(
+        "== fastdds benches: pit (latency-vs-NFE frontier, n={n}{}) ==",
+        if quick { ", --quick" } else { "" }
+    );
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    let model = ToyModel::paper_default(&mut rng);
+    let delta = 1e-3;
+    let solver = Solver::Trapezoidal { theta: 0.5 };
+    let threads = ThreadPool::default_size();
+    let mut rows: Vec<Row> = Vec::new();
+
+    // --- toy CTMC: sequential baseline vs exact PIT ----------------------
+    // (seq_nfe, seq_kl, pit_rounds) per steps config for the headline.
+    let mut frontier: Vec<(usize, f64, f64, f64)> = Vec::new();
+    let step_grid: &[usize] = if quick { &[4, 8] } else { &[4, 8, 16, 32] };
+    for &steps in step_grid {
+        let g = grid::toy_uniform(steps, model.horizon, delta);
+        let q = toy::empirical_distribution(&model, solver, &g, n, 100 + steps as u64, threads);
+        let kl = model.kl_from_p0(&q);
+        let nfe = (2 * steps) as f64;
+        println!("toy sequential steps={steps:3}  rounds={nfe:6.1}  nfe={nfe:6.1}  kl={kl:.3e}");
+        rows.push(Row {
+            driver: "sequential".into(),
+            steps,
+            rounds: nfe,
+            nfe,
+            metric: "kl",
+            quality: kl,
+        });
+
+        let (mean_sweeps, max_sweeps, mean_nfe) =
+            toy_pit_probe(&model, solver, &g, probe_lanes, 100 + steps as u64);
+        // Bit-identical at tol=0 (asserted above), so the KL is the
+        // sequential KL by construction.
+        println!(
+            "toy pit:tol=0  steps={steps:3}  rounds={mean_sweeps:6.1}  nfe={mean_nfe:6.1}  \
+             kl={kl:.3e}  (max sweeps {max_sweeps})"
+        );
+        rows.push(Row {
+            driver: "pit:tol=0".into(),
+            steps,
+            rounds: mean_sweeps,
+            nfe: mean_nfe,
+            metric: "kl",
+            quality: kl,
+        });
+        frontier.push((steps, nfe, kl, mean_sweeps));
+    }
+
+    // --- toy CTMC: within-tolerance PIT (fewer sweeps, approximate) ------
+    let tol_n = if quick { 4_000 } else { 40_000 };
+    for &steps in step_grid {
+        let g = grid::toy_uniform(steps, model.horizon, delta);
+        for &tol in &[1e-2, 1e-1] {
+            let cfg = PitCfg::new(steps.max(1), tol);
+            let (q, mean_sweeps, mean_nfe) =
+                toy_pit_distribution(&model, solver, &g, &cfg, tol_n, 300 + steps as u64);
+            let kl = model.kl_from_p0(&q);
+            println!(
+                "toy pit:tol={tol:<5.0e} steps={steps:3}  rounds={mean_sweeps:6.1}  \
+                 nfe={mean_nfe:6.1}  kl={kl:.3e}"
+            );
+            rows.push(Row {
+                driver: format!("pit:tol={tol}"),
+                steps,
+                rounds: mean_sweeps,
+                nfe: mean_nfe,
+                metric: "kl",
+                quality: kl,
+            });
+        }
+    }
+
+    // --- text (Markov oracle): perplexity at matched bits ----------------
+    let mut crng = Xoshiro256::seed_from_u64(11);
+    let chain = MarkovChain::generate(&mut crng, 8, 0.5);
+    let seq_len = if quick { 16 } else { 32 };
+    let oracle = MarkovOracle::new(chain.clone(), seq_len);
+    let text_lanes = if quick { 32 } else { 128 };
+    let text_steps: &[usize] = if quick { &[8] } else { &[8, 16] };
+    for &steps in text_steps {
+        let g = grid::masked_uniform(steps, delta);
+        let cfg = PitCfg::new(steps.max(1), 0.0);
+        let mut seqs: Vec<Vec<fastdds::score::Tok>> = Vec::with_capacity(text_lanes);
+        let (mut nfe_sum, mut sweeps_sum) = (0usize, 0usize);
+        for b in 0..text_lanes {
+            let seed = 700 + b as u64;
+            let mut seq_rng = Xoshiro256::seed_from_u64(seed);
+            let (want, stats) = masked::generate(&oracle, solver, &g, &mut seq_rng);
+            nfe_sum += stats.nfe;
+            let mut pit_rng = Xoshiro256::seed_from_u64(seed);
+            let lane = masked::pit_generate(&oracle, solver, &g, &cfg, &mut pit_rng);
+            assert!(lane.outcome.converged(), "text tol=0 probe must converge");
+            assert_eq!(lane.out, want, "text PIT broke bit-parity (seed {seed})");
+            sweeps_sum += lane.sweeps;
+            seqs.push(want);
+        }
+        let ppl = fastdds::eval::perplexity::batch_perplexity(&chain, &seqs);
+        let seq_nfe = nfe_sum as f64 / text_lanes as f64;
+        let pit_rounds = sweeps_sum as f64 / text_lanes as f64;
+        println!(
+            "text sequential steps={steps:3}  rounds={seq_nfe:6.1}  nfe={seq_nfe:6.1}  ppl={ppl:.3}"
+        );
+        println!(
+            "text pit:tol=0  steps={steps:3}  rounds={pit_rounds:6.1}  nfe={seq_nfe:6.1}  \
+             ppl={ppl:.3}  (bit-identical)"
+        );
+        rows.push(Row {
+            driver: "sequential".into(),
+            steps,
+            rounds: seq_nfe,
+            nfe: seq_nfe,
+            metric: "perplexity",
+            quality: ppl,
+        });
+        rows.push(Row {
+            driver: "pit:tol=0".into(),
+            steps,
+            rounds: pit_rounds,
+            nfe: seq_nfe,
+            metric: "perplexity",
+            quality: ppl,
+        });
+    }
+
+    // --- headline: PIT rounds vs sequential NFE at matched KL ------------
+    // tol=0 PIT is bit-identical to the sequential pass, so the KL is
+    // matched exactly; the win condition is just rounds < NFE, and the
+    // two-stage replay guarantees sweeps <= steps = NFE/2.
+    let mut best: Option<(usize, f64, f64, f64)> = None; // (steps, ratio, rounds, nfe)
+    for &(steps, nfe, _kl, pit_rounds) in &frontier {
+        let ratio = pit_rounds / nfe;
+        if best.map(|(_, r, ..)| ratio < r).unwrap_or(true) {
+            best = Some((steps, ratio, pit_rounds, nfe));
+        }
+    }
+    let headline = match best {
+        Some((steps, ratio, pit_rounds, nfe)) => {
+            let kl = frontier
+                .iter()
+                .find(|f| f.0 == steps)
+                .map(|f| f.2)
+                .unwrap_or(f64::NAN);
+            let pass = pit_rounds < nfe;
+            println!(
+                "headline: pit rounds {pit_rounds:.1} vs sequential nfe {nfe:.1} at KL={kl:.3e} \
+                 (steps={steps}) -> ratio {ratio:.3} ({})",
+                if pass { "PASS rounds < nfe" } else { "FAIL" }
+            );
+            Json::obj(vec![
+                ("metric", Json::from("pit_rounds_vs_sequential_nfe_at_matched_kl")),
+                ("steps", Json::from(steps as u64)),
+                ("pit_rounds", Json::Num(pit_rounds)),
+                ("sequential_nfe", Json::Num(nfe)),
+                ("kl", Json::Num(kl)),
+                ("ratio", Json::Num(ratio)),
+                ("pass", Json::from(pass)),
+            ])
+        }
+        None => {
+            println!("headline: no frontier rows recorded");
+            Json::obj(vec![("metric", Json::from("unmatched"))])
+        }
+    };
+    write_report(&rows, headline, quick);
+}

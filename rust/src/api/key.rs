@@ -48,6 +48,7 @@ impl BatchKey {
             Solver::Rk2 { theta } => (4, theta),
             Solver::ParallelDecoding => (5, 0.0),
             Solver::Exact => (6, 0.0),
+            Solver::Midpoint { theta } => (7, theta),
         };
         let (plan_kind, plan_a, plan_b, plan_c) = match spec.plan() {
             ExecPlan::Uniform { steps } => (0u8, steps as u64, 0, 0),
@@ -65,6 +66,9 @@ impl BatchKey {
                 cfg.slack.to_bits(),
                 max_events.map(|m| m as u64 + 1).unwrap_or(0),
             ),
+            ExecPlan::Pit { steps, sweeps_max, tol } => {
+                (5, steps as u64, sweeps_max as u64, tol.to_bits())
+            }
         };
         BatchKey {
             family_hash: fnv1a(spec.family()),
@@ -184,6 +188,43 @@ mod tests {
                 &spec(trap, 32).deadline_ms(Some(5)).priority(0).build().unwrap()
             )
         );
+    }
+
+    #[test]
+    fn pit_keys_split_from_sequential_and_group_resolved() {
+        let trap = Solver::Trapezoidal { theta: 0.5 };
+        let seq = BatchKey::of(&spec(trap, 64).build().unwrap());
+        let pit = BatchKey::of(&spec(trap, 64).pit(true).build().unwrap());
+        // Same grid, different driver → different keys (PIT lanes share
+        // sweep structure; mixing them with sequential lanes is invalid).
+        assert_ne!(seq, pit);
+        // Explicit resolved defaults co-batch with knob-free PIT.
+        assert_eq!(
+            pit,
+            BatchKey::of(
+                &spec(trap, 64).pit(true).sweeps_max(Some(32)).tol(Some(0.0)).build().unwrap()
+            )
+        );
+        // Raw NFE resolving to the same grid groups, as for sequential.
+        assert_eq!(pit, BatchKey::of(&spec(trap, 65).pit(true).build().unwrap()));
+        // Every PIT coordinate splits.
+        assert_ne!(
+            pit,
+            BatchKey::of(&spec(trap, 64).pit(true).sweeps_max(Some(8)).build().unwrap())
+        );
+        assert_ne!(
+            pit,
+            BatchKey::of(&spec(trap, 64).pit(true).tol(Some(0.1)).build().unwrap())
+        );
+        // Midpoint gets its own kernel identity (θ bits included).
+        let mid = BatchKey::of(&spec(Solver::Midpoint { theta: 0.5 }, 64).build().unwrap());
+        assert_ne!(mid, BatchKey::of(&spec(Solver::Rk2 { theta: 0.5 }, 64).build().unwrap()));
+        assert_ne!(
+            mid,
+            BatchKey::of(&spec(Solver::Midpoint { theta: 0.75 }, 64).build().unwrap())
+        );
+        // Progress is QoS: never splits.
+        assert_eq!(pit, BatchKey::of(&spec(trap, 64).pit(true).progress(true).build().unwrap()));
     }
 
     #[test]

@@ -68,6 +68,29 @@ pub enum SolverCfg {
         /// Optional HARD per-sample cap (terminal denoise included).
         nfe_budget: Option<usize>,
     },
+    /// Parallel-in-time (Picard) execution of a grid scheme
+    /// ([`crate::solvers::pit`]): the same per-step update as
+    /// [`SolverCfg::Scheme`], but iterated in whole-trajectory sweeps so
+    /// latency scales with the sweep count, not the NFE.  Knobs are stored
+    /// RESOLVED (`sweeps_max`/`tol` defaults filled), so explicit-default
+    /// requests co-batch with knob-free ones.  v1 is uniform-grid only and
+    /// carries no `nfe_budget`: the sweep cap, not an NFE cap, bounds the
+    /// run (see [`SamplingSpec::planned_nfe`] for the admission bound).
+    Pit {
+        /// Never [`Solver::Exact`] (exact simulation has no grid to
+        /// iterate) — the builder rejects that combination typed.
+        solver: Solver,
+        /// Sequential-equivalent NFE: resolves to the step count exactly
+        /// as the uniform [`SolverCfg::Scheme`] path would.
+        nfe: usize,
+        /// Hard sweep cap, >= 1.  A lane that exhausts it returns a typed
+        /// partial (the converged prefix) — the divergence guard.
+        sweeps_max: usize,
+        /// Convergence tolerance fed by the embedded two-stage error
+        /// estimator; `0.0` demands the exact fixed point (bit-parity
+        /// with the sequential driver on the same seed).
+        tol: f64,
+    },
     /// Exact simulation (first-hitting / windowed uniformization).  The
     /// knobs are stored RESOLVED (defaults filled), so an explicit request
     /// for the default values is indistinguishable from a knob-free one —
@@ -98,6 +121,10 @@ pub struct SamplingSpec {
     /// (`BatchKey` hashes the plan, so this holds by construction).
     deadline_ms: Option<u64>,
     priority: u8,
+    /// Opt-in per-window/per-sweep progress frames on streaming
+    /// responses.  QoS-only like the fields above: never consulted by
+    /// [`SamplingSpec::plan`], so it cannot split batches.
+    progress: bool,
 }
 
 /// The resolved execution identity of a spec: everything that decides how
@@ -114,6 +141,9 @@ pub enum ExecPlan {
     Tuned { steps: usize },
     /// Online error control: tolerance, initial dt, optional hard budget.
     Adaptive { tol: f64, dt0: f64, budget: Option<usize> },
+    /// Parallel-in-time Picard sweeps over a uniform grid of this many
+    /// steps, capped at `sweeps_max` sweeps, converging at `tol`.
+    Pit { steps: usize, sweeps_max: usize, tol: f64 },
     /// Exact simulation under these knobs.
     Exact { cfg: ExactCfg, max_events: Option<usize> },
 }
@@ -142,7 +172,7 @@ impl SamplingSpec {
     /// The solver enum ([`Solver::Exact`] for the exact variant).
     pub fn solver(&self) -> Solver {
         match &self.cfg {
-            SolverCfg::Scheme { solver, .. } => *solver,
+            SolverCfg::Scheme { solver, .. } | SolverCfg::Pit { solver, .. } => *solver,
             SolverCfg::Exact { .. } => Solver::Exact,
         }
     }
@@ -151,7 +181,7 @@ impl SamplingSpec {
     /// planned).
     pub fn nfe(&self) -> usize {
         match &self.cfg {
-            SolverCfg::Scheme { nfe, .. } => *nfe,
+            SolverCfg::Scheme { nfe, .. } | SolverCfg::Pit { nfe, .. } => *nfe,
             SolverCfg::Exact { .. } => 0,
         }
     }
@@ -159,14 +189,36 @@ impl SamplingSpec {
     pub fn schedule(&self) -> ScheduleSpec {
         match &self.cfg {
             SolverCfg::Scheme { schedule, .. } => *schedule,
-            SolverCfg::Exact { .. } => ScheduleSpec::Uniform,
+            // PIT v1 is uniform-only by construction.
+            SolverCfg::Pit { .. } | SolverCfg::Exact { .. } => ScheduleSpec::Uniform,
         }
     }
 
     pub fn nfe_budget(&self) -> Option<usize> {
         match &self.cfg {
             SolverCfg::Scheme { nfe_budget, .. } => *nfe_budget,
-            SolverCfg::Exact { .. } => None,
+            SolverCfg::Pit { .. } | SolverCfg::Exact { .. } => None,
+        }
+    }
+
+    /// Whether this spec runs the parallel-in-time driver.
+    pub fn pit(&self) -> bool {
+        matches!(self.cfg, SolverCfg::Pit { .. })
+    }
+
+    /// Resolved PIT sweep cap (`None` for non-PIT specs).
+    pub fn sweeps_max(&self) -> Option<usize> {
+        match &self.cfg {
+            SolverCfg::Pit { sweeps_max, .. } => Some(*sweeps_max),
+            _ => None,
+        }
+    }
+
+    /// Resolved PIT convergence tolerance (`None` for non-PIT specs).
+    pub fn pit_tol(&self) -> Option<f64> {
+        match &self.cfg {
+            SolverCfg::Pit { tol, .. } => Some(*tol),
+            _ => None,
         }
     }
 
@@ -177,14 +229,14 @@ impl SamplingSpec {
             SolverCfg::Exact { window_ratio, slack, .. } => {
                 ExactCfg { window_ratio: *window_ratio, slack: *slack }
             }
-            SolverCfg::Scheme { .. } => ExactCfg::default(),
+            SolverCfg::Scheme { .. } | SolverCfg::Pit { .. } => ExactCfg::default(),
         }
     }
 
     pub fn max_events(&self) -> Option<usize> {
         match &self.cfg {
             SolverCfg::Exact { max_events, .. } => *max_events,
-            SolverCfg::Scheme { .. } => None,
+            SolverCfg::Scheme { .. } | SolverCfg::Pit { .. } => None,
         }
     }
 
@@ -199,6 +251,12 @@ impl SamplingSpec {
     /// overload).  Defaults to [`DEFAULT_PRIORITY`].
     pub fn priority(&self) -> u8 {
         self.priority
+    }
+
+    /// Whether the client opted into per-window/per-sweep progress frames
+    /// on streaming responses.  QoS-only; never splits a batch.
+    pub fn progress(&self) -> bool {
+        self.progress
     }
 
     /// Score evaluations this spec is *planned* to spend per lane,
@@ -220,6 +278,12 @@ impl SamplingSpec {
                 }
             }),
             ExecPlan::Exact { max_events, .. } => max_events.map(|m| m + 1),
+            // Worst case: every sweep re-evaluates every slice (plus the
+            // terminal denoise).  Converged runs spend far less; the bound
+            // is what admission control needs.
+            ExecPlan::Pit { steps, sweeps_max, .. } => {
+                Some(steps * self.solver().nfe_per_step() * sweeps_max + 1)
+            }
         }
     }
 
@@ -235,6 +299,11 @@ impl SamplingSpec {
             SolverCfg::Exact { window_ratio, slack, max_events } => ExecPlan::Exact {
                 cfg: ExactCfg { window_ratio: *window_ratio, slack: *slack },
                 max_events: *max_events,
+            },
+            SolverCfg::Pit { solver, nfe, sweeps_max, tol } => ExecPlan::Pit {
+                steps: solver.steps_for_nfe(*nfe),
+                sweeps_max: *sweeps_max,
+                tol: *tol,
             },
             SolverCfg::Scheme { solver, schedule, nfe, nfe_budget } => {
                 // Step count of the fixed schedules: the request NFE capped
@@ -296,6 +365,18 @@ pub enum SpecError {
     NeedsTwoStage { what: &'static str, solver: &'static str },
     /// Adaptive tolerance not finite or negative.
     AdaptiveTolInvalid { tol: f64 },
+    /// A PIT-only knob (`sweeps_max`/`tol`) without `pit`.
+    KnobNeedsPit { knob: &'static str },
+    /// PIT on exact simulation (no grid to iterate).
+    PitNeedsScheme,
+    /// PIT v1 runs uniform grids only.
+    PitNeedsUniform { schedule: &'static str },
+    /// `nfe_budget` on a PIT spec (sweeps are capped, not NFE).
+    PitBudgetUnsupported,
+    /// sweeps_max must be >= 1 when given.
+    SweepsMaxZero,
+    /// PIT tolerance not finite or negative.
+    PitTolInvalid { tol: f64 },
     /// n_samples must be >= 1.
     NoSamples,
     /// deadline_ms must be >= 1 when given.
@@ -324,6 +405,12 @@ impl SpecError {
             SpecError::TunedStepsTooLarge { .. } => "tuned_steps_too_large",
             SpecError::NeedsTwoStage { .. } => "needs_two_stage",
             SpecError::AdaptiveTolInvalid { .. } => "adaptive_tol_invalid",
+            SpecError::KnobNeedsPit { .. } => "knob_needs_pit",
+            SpecError::PitNeedsScheme => "pit_needs_scheme",
+            SpecError::PitNeedsUniform { .. } => "pit_needs_uniform",
+            SpecError::PitBudgetUnsupported => "pit_budget_unsupported",
+            SpecError::SweepsMaxZero => "sweeps_max_zero",
+            SpecError::PitTolInvalid { .. } => "pit_tol_invalid",
             SpecError::NoSamples => "no_samples",
             SpecError::DeadlineZero => "deadline_zero",
             SpecError::PriorityOutOfRange { .. } => "priority_out_of_range",
@@ -340,6 +427,11 @@ impl fmt::Display for SpecError {
                 "rk2" => write!(
                     f,
                     "rk2 theta {theta} outside (0, 1/2] — second-order range of Thm. 5.5"
+                ),
+                "midpoint" => write!(
+                    f,
+                    "midpoint theta {theta} outside (0, 1] — the predictor leap \
+                     must stay inside the window"
                 ),
                 _ => write!(
                     f,
@@ -389,6 +481,28 @@ impl fmt::Display for SpecError {
             SpecError::AdaptiveTolInvalid { tol } => {
                 write!(f, "adaptive tol {tol} must be finite and >= 0")
             }
+            SpecError::KnobNeedsPit { knob } => write!(
+                f,
+                "{knob} is a parallel-in-time knob; set pit to use it"
+            ),
+            SpecError::PitNeedsScheme => write!(
+                f,
+                "exact simulation has no grid to iterate parallel-in-time; \
+                 pit needs a grid scheme"
+            ),
+            SpecError::PitNeedsUniform { schedule } => write!(
+                f,
+                "pit runs uniform grids only (got {schedule} schedule)"
+            ),
+            SpecError::PitBudgetUnsupported => write!(
+                f,
+                "pit bounds work by sweeps_max, not an NFE cap; nfe_budget \
+                 is unsupported on pit specs"
+            ),
+            SpecError::SweepsMaxZero => write!(f, "sweeps_max must be >= 1 when given"),
+            SpecError::PitTolInvalid { tol } => {
+                write!(f, "pit tol {tol} must be finite and >= 0")
+            }
             SpecError::NoSamples => write!(f, "n_samples must be >= 1"),
             SpecError::DeadlineZero => write!(f, "deadline_ms must be >= 1 when given"),
             SpecError::PriorityOutOfRange { priority } => write!(
@@ -420,8 +534,12 @@ pub struct SpecBuilder {
     window_ratio: Option<f64>,
     slack: Option<f64>,
     max_events: Option<usize>,
+    pit: bool,
+    sweeps_max: Option<usize>,
+    tol: Option<f64>,
     deadline_ms: Option<u64>,
     priority: u8,
+    progress: bool,
 }
 
 impl Default for SpecBuilder {
@@ -437,8 +555,12 @@ impl Default for SpecBuilder {
             window_ratio: None,
             slack: None,
             max_events: None,
+            pit: false,
+            sweeps_max: None,
+            tol: None,
             deadline_ms: None,
             priority: DEFAULT_PRIORITY,
+            progress: false,
         }
     }
 }
@@ -494,6 +616,32 @@ impl SpecBuilder {
         self
     }
 
+    /// Run the solver parallel-in-time (Picard sweeps over the whole
+    /// grid) instead of step by step.
+    pub fn pit(mut self, pit: bool) -> Self {
+        self.pit = pit;
+        self
+    }
+
+    /// PIT sweep cap (defaults to the resolved step count, the bound at
+    /// which the exact fixed point is guaranteed).
+    pub fn sweeps_max(mut self, cap: Option<usize>) -> Self {
+        self.sweeps_max = cap;
+        self
+    }
+
+    /// PIT convergence tolerance (defaults to 0.0 = exact fixed point).
+    pub fn tol(mut self, tol: Option<f64>) -> Self {
+        self.tol = tol;
+        self
+    }
+
+    /// Opt into per-window/per-sweep progress frames on streams.
+    pub fn progress(mut self, progress: bool) -> Self {
+        self.progress = progress;
+        self
+    }
+
     pub fn deadline_ms(mut self, deadline: Option<u64>) -> Self {
         self.deadline_ms = deadline;
         self
@@ -525,12 +673,80 @@ impl SpecBuilder {
             Solver::Rk2 { theta } if !(theta > 0.0 && theta <= 0.5) => {
                 return Err(SpecError::ThetaOutOfRange { scheme: "rk2", theta });
             }
+            Solver::Midpoint { theta } if !(theta > 0.0 && theta <= 1.0) => {
+                return Err(SpecError::ThetaOutOfRange { scheme: "midpoint", theta });
+            }
             _ => {}
         }
         if self.nfe < self.solver.nfe_per_step() {
             return Err(SpecError::NfeBelowOneStep {
                 nfe: self.nfe,
                 per_step: self.solver.nfe_per_step(),
+            });
+        }
+
+        // PIT-only knobs without pit are rejected typed (the mirror of the
+        // exact-only knob checks below).
+        if !self.pit {
+            if self.sweeps_max.is_some() {
+                return Err(SpecError::KnobNeedsPit { knob: "sweeps_max" });
+            }
+            if self.tol.is_some() {
+                return Err(SpecError::KnobNeedsPit { knob: "tol" });
+            }
+        }
+
+        if self.pit {
+            if matches!(self.solver, Solver::Exact) {
+                return Err(SpecError::PitNeedsScheme);
+            }
+            match self.schedule {
+                ScheduleSpec::Uniform => {}
+                ScheduleSpec::Log => {
+                    return Err(SpecError::PitNeedsUniform { schedule: "log" });
+                }
+                ScheduleSpec::Tuned { .. } => {
+                    return Err(SpecError::PitNeedsUniform { schedule: "tuned" });
+                }
+                ScheduleSpec::Adaptive { .. } => {
+                    return Err(SpecError::PitNeedsUniform { schedule: "adaptive" });
+                }
+            }
+            if self.nfe_budget.is_some() {
+                return Err(SpecError::PitBudgetUnsupported);
+            }
+            let solver_name = self.solver.name();
+            if self.window_ratio.is_some() {
+                return Err(SpecError::KnobNeedsExact { knob: "window_ratio", solver: solver_name });
+            }
+            if self.slack.is_some() {
+                return Err(SpecError::KnobNeedsExact { knob: "slack", solver: solver_name });
+            }
+            if self.max_events.is_some() {
+                return Err(SpecError::KnobNeedsExact { knob: "max_events", solver: solver_name });
+            }
+            if self.sweeps_max == Some(0) {
+                return Err(SpecError::SweepsMaxZero);
+            }
+            if let Some(t) = self.tol {
+                if !(t.is_finite() && t >= 0.0) {
+                    return Err(SpecError::PitTolInvalid { tol: t });
+                }
+            }
+            // Resolve the knobs (sweep cap defaults to the step count: the
+            // bound at which convergence to the exact fixed point is
+            // guaranteed — the driver advances >= 1 step per sweep).
+            let steps = self.solver.steps_for_nfe(self.nfe);
+            let sweeps_max = self.sweeps_max.unwrap_or(steps.max(1));
+            let tol = self.tol.unwrap_or(0.0);
+            return Ok(SamplingSpec {
+                family: self.family,
+                n_samples: self.n_samples,
+                seed: self.seed,
+                cfg: SolverCfg::Pit { solver: self.solver, nfe: self.nfe, sweeps_max, tol },
+                deadline_ms: self.deadline_ms,
+                priority: self.priority,
+                progress: self.progress,
             });
         }
 
@@ -586,6 +802,7 @@ impl SpecBuilder {
                 cfg: SolverCfg::Exact { window_ratio, slack, max_events: self.max_events },
                 deadline_ms: self.deadline_ms,
                 priority: self.priority,
+                progress: self.progress,
             });
         }
 
@@ -647,6 +864,7 @@ impl SpecBuilder {
             },
             deadline_ms: self.deadline_ms,
             priority: self.priority,
+            progress: self.progress,
         })
     }
 }
@@ -868,6 +1086,109 @@ mod tests {
         assert_eq!(scheme(Solver::Exact, 16).build().unwrap().planned_nfe(), None);
         let ex = scheme(Solver::Exact, 16).max_events(Some(100)).build().unwrap();
         assert_eq!(ex.planned_nfe(), Some(101));
+    }
+
+    #[test]
+    fn pit_spec_resolves_and_plans() {
+        let trap = Solver::Trapezoidal { theta: 0.5 };
+        // Defaults resolve: sweeps_max = step count, tol = 0.
+        let bare = scheme(trap, 64).pit(true).build().unwrap();
+        assert!(bare.pit());
+        assert_eq!(bare.solver(), trap);
+        assert_eq!(bare.nfe(), 64);
+        assert_eq!(bare.sweeps_max(), Some(32));
+        assert_eq!(bare.pit_tol(), Some(0.0));
+        assert_eq!(bare.plan(), ExecPlan::Pit { steps: 32, sweeps_max: 32, tol: 0.0 });
+        // Explicit defaults are indistinguishable from knob-free (the
+        // co-batch-laundering kill, same as the exact path).
+        let explicit = scheme(trap, 64)
+            .pit(true)
+            .sweeps_max(Some(32))
+            .tol(Some(0.0))
+            .build()
+            .unwrap();
+        assert_eq!(bare, explicit);
+        // Worst-case admission bound: per_step * steps * sweeps + denoise.
+        assert_eq!(bare.planned_nfe(), Some(2 * 32 * 32 + 1));
+        // One-stage solvers work too.
+        let tau = scheme(Solver::TauLeaping, 16)
+            .pit(true)
+            .sweeps_max(Some(4))
+            .tol(Some(0.25))
+            .build()
+            .unwrap();
+        assert_eq!(tau.plan(), ExecPlan::Pit { steps: 16, sweeps_max: 4, tol: 0.25 });
+        assert_eq!(tau.planned_nfe(), Some(16 * 4 + 1));
+        // Non-PIT specs report no PIT knobs.
+        let seq = scheme(trap, 64).build().unwrap();
+        assert!(!seq.pit());
+        assert_eq!(seq.sweeps_max(), None);
+        assert_eq!(seq.pit_tol(), None);
+    }
+
+    #[test]
+    fn pit_combinations_are_rejected_typed() {
+        let trap = Solver::Trapezoidal { theta: 0.5 };
+        // PIT knobs without pit.
+        let e = scheme(trap, 64).sweeps_max(Some(8)).build().unwrap_err();
+        assert_eq!(e.code(), "knob_needs_pit");
+        assert!(format!("{e}").contains("pit"));
+        let e = scheme(trap, 64).tol(Some(0.1)).build().unwrap_err();
+        assert_eq!(e.code(), "knob_needs_pit");
+        // PIT + exact.
+        let e = scheme(Solver::Exact, 16).pit(true).build().unwrap_err();
+        assert_eq!(e.code(), "pit_needs_scheme");
+        assert!(format!("{e}").contains("grid"));
+        // PIT + non-uniform schedules.
+        for (sched, name) in [
+            (ScheduleSpec::Log, "log"),
+            (ScheduleSpec::Tuned { steps: 8 }, "tuned"),
+            (ScheduleSpec::Adaptive { tol: 1e-3 }, "adaptive"),
+        ] {
+            let e = scheme(trap, 64).pit(true).schedule(sched).build().unwrap_err();
+            assert_eq!(e.code(), "pit_needs_uniform", "{name}");
+            assert!(format!("{e}").contains(name));
+        }
+        // PIT + nfe_budget.
+        let e = scheme(trap, 64).pit(true).nfe_budget(Some(32)).build().unwrap_err();
+        assert_eq!(e.code(), "pit_budget_unsupported");
+        assert!(format!("{e}").contains("sweeps_max"));
+        // Exact-only knobs on a PIT spec.
+        let e = scheme(trap, 64).pit(true).slack(Some(2.0)).build().unwrap_err();
+        assert_eq!(e.code(), "knob_needs_exact");
+        // Degenerate sweep cap / tolerance.
+        let e = scheme(trap, 64).pit(true).sweeps_max(Some(0)).build().unwrap_err();
+        assert_eq!(e.code(), "sweeps_max_zero");
+        for tol in [-1.0, f64::NAN, f64::INFINITY] {
+            let e = scheme(trap, 64).pit(true).tol(Some(tol)).build().unwrap_err();
+            assert_eq!(e.code(), "pit_tol_invalid", "tol={tol}");
+        }
+    }
+
+    #[test]
+    fn midpoint_theta_validated() {
+        for theta in [0.0, -0.25, 1.5, f64::NAN] {
+            let e = scheme(Solver::Midpoint { theta }, 16).build().unwrap_err();
+            assert_eq!(e.code(), "theta_out_of_range", "theta={theta}");
+            assert!(format!("{e}").contains("midpoint"));
+        }
+        // θ = 1 (full-window leap) is the inclusive edge.
+        assert!(scheme(Solver::Midpoint { theta: 1.0 }, 16).build().is_ok());
+        // Midpoint is two-stage, so adaptive schedules accept it.
+        assert!(scheme(Solver::Midpoint { theta: 0.5 }, 16)
+            .schedule(ScheduleSpec::Adaptive { tol: 1e-3 })
+            .build()
+            .is_ok());
+    }
+
+    #[test]
+    fn progress_is_qos_only() {
+        let off = SamplingSpec::builder().build().unwrap();
+        assert!(!off.progress());
+        let on = SamplingSpec::builder().progress(true).build().unwrap();
+        assert!(on.progress());
+        // Progress never changes the execution identity.
+        assert_eq!(off.plan(), on.plan());
     }
 
     #[test]

@@ -13,6 +13,11 @@
 //!    "family": "markov", "seed": 9,
 //!    "solver": {"type": "exact", "window_ratio": 0.6, "slack": 3.0,
 //!               "max_events": 500}}}
+//! {"v": 2, "cmd": "generate", "request_key": "job-7f3a",
+//!  "spec": {
+//!    "family": "markov", "seed": 4, "progress": true,
+//!    "solver": {"type": "pit", "solver": "trapezoidal:0.5",
+//!               "nfe": 64, "sweeps_max": 8, "tol": 0.0}}}
 //! ```
 //!
 //! `spec_to_json` always writes the *resolved* spec (defaults filled), so a
@@ -35,7 +40,18 @@
 //! object (and flat in v1).  The writer emits `deadline_ms` only when set
 //! and `priority` only when it differs from the default, so pre-QoS specs
 //! serialize byte-identically to before and the v1 compat corpus is
-//! untouched.
+//! untouched.  `progress` (v2 only) opts a `generate_stream` into
+//! `{"stream": "progress", ...}` heartbeat frames; like the other QoS
+//! fields it never affects execution identity, and the writer emits it
+//! only when true.
+//!
+//! ## Idempotency (`request_key`, v2 only)
+//!
+//! A v2 envelope may carry a top-level `"request_key"` string (1–128
+//! chars).  The server echoes it on the response, and a second request
+//! with the same key while the first is still in flight is rejected typed
+//! (`duplicate_request`) with the original job id — clients can retry
+//! submissions over a flaky link without double-spending compute.
 //!
 //! ## Error codes
 //!
@@ -56,6 +72,12 @@
 //! | `tuned_steps_too_large` | tuned step count above the cap |
 //! | `needs_two_stage` | adaptive/tuned on a one-stage scheme |
 //! | `adaptive_tol_invalid` | adaptive tol not finite or negative |
+//! | `knob_needs_pit` | `sweeps_max`/`tol` without a pit solver |
+//! | `pit_needs_scheme` | pit on exact simulation (no grid to iterate) |
+//! | `pit_needs_uniform` | pit with a non-uniform schedule (v1 limitation) |
+//! | `pit_budget_unsupported` | `nfe_budget` on a pit spec |
+//! | `sweeps_max_zero` | `sweeps_max` given as 0 |
+//! | `pit_tol_invalid` | pit tol not finite or negative |
 //! | `no_samples` | n_samples given as 0 |
 //! | `deadline_zero` | `deadline_ms` given as 0 |
 //! | `priority_out_of_range` | priority above the maximum |
@@ -70,6 +92,7 @@
 //! | `batch_failed` | the backend reported a batch-level execution error |
 //! | `overloaded` | shed at intake (queue/in-flight caps, or the server's connection cap) |
 //! | `deadline_infeasible` | rejected at intake: planned NFE cannot fit the deadline |
+//! | `duplicate_request` | a request with this `request_key` is already in flight |
 //! | `coordinator_restarted` | in-flight when the supervisor restarted the scheduler loop |
 //! | `shutdown` | in-flight at coordinator shutdown |
 
@@ -94,12 +117,19 @@ pub struct V1Echo {
     pub priority: Option<u8>,
 }
 
+/// Maximum accepted `request_key` length (keys live in a coordinator-side
+/// registry until their job finishes, so they must stay small).
+pub const MAX_REQUEST_KEY_LEN: usize = 128;
+
 /// A parsed request: the validated spec plus, for legacy requests, the v1
 /// echo view.  `v1.is_some()` ⇔ the request arrived in the flat v1 form.
 #[derive(Clone, Debug)]
 pub struct ParsedRequest {
     pub spec: SamplingSpec,
     pub v1: Option<V1Echo>,
+    /// Client-supplied idempotency key (v2 envelopes only; see module
+    /// docs).  Echoed on responses and deduplicated while in flight.
+    pub request_key: Option<String>,
 }
 
 fn missing(field: &'static str) -> impl FnOnce(anyhow::Error) -> SpecError {
@@ -119,11 +149,27 @@ pub fn request_from_json(j: &Json) -> Result<ParsedRequest, SpecError> {
     match version {
         1 => {
             let (spec, echo) = v1_from_json(j)?;
-            Ok(ParsedRequest { spec, v1: Some(echo) })
+            Ok(ParsedRequest { spec, v1: Some(echo), request_key: None })
         }
         2 => {
+            let request_key = match j.opt("request_key") {
+                Some(k) => {
+                    let k = k.as_str().map_err(parse_err("request_key"))?;
+                    if k.is_empty() || k.len() > MAX_REQUEST_KEY_LEN {
+                        return Err(SpecError::Parse {
+                            field: "request_key",
+                            message: format!(
+                                "request_key length {} outside 1..={MAX_REQUEST_KEY_LEN}",
+                                k.len()
+                            ),
+                        });
+                    }
+                    Some(k.to_string())
+                }
+                None => None,
+            };
             let spec_obj = j.get("spec").map_err(missing("spec"))?;
-            Ok(ParsedRequest { spec: spec_from_json(spec_obj)?, v1: None })
+            Ok(ParsedRequest { spec: spec_from_json(spec_obj)?, v1: None, request_key })
         }
         other => Err(SpecError::Parse {
             field: "v",
@@ -220,6 +266,9 @@ pub fn spec_from_json(j: &Json) -> Result<SamplingSpec, SpecError> {
             message: format!("priority {p} does not fit in a byte"),
         })?);
     }
+    if let Some(p) = j.opt("progress") {
+        b = b.progress(p.as_bool().map_err(parse_err("progress"))?);
+    }
     let sol = j.get("solver").map_err(missing("solver"))?;
     let ty = sol
         .get("type")
@@ -245,6 +294,25 @@ pub fn spec_from_json(j: &Json) -> Result<SamplingSpec, SpecError> {
                 b = b.nfe_budget(Some(v.as_usize().map_err(parse_err("solver.nfe_budget"))?));
             }
         }
+        "pit" => {
+            let name = sol
+                .get("solver")
+                .and_then(|s| s.as_str())
+                .map_err(missing("solver.solver"))?;
+            let solver = Solver::parse(name).map_err(parse_err("solver.solver"))?;
+            b = b.solver(solver).pit(true);
+            b = b.nfe(
+                sol.get("nfe")
+                    .and_then(|v| v.as_usize())
+                    .map_err(missing("solver.nfe"))?,
+            );
+            if let Some(v) = sol.opt("sweeps_max") {
+                b = b.sweeps_max(Some(v.as_usize().map_err(parse_err("solver.sweeps_max"))?));
+            }
+            if let Some(v) = sol.opt("tol") {
+                b = b.tol(Some(v.as_f64().map_err(parse_err("solver.tol"))?));
+            }
+        }
         "exact" => {
             b = b.solver(Solver::Exact);
             if let Some(v) = sol.opt("window_ratio") {
@@ -260,7 +328,7 @@ pub fn spec_from_json(j: &Json) -> Result<SamplingSpec, SpecError> {
         other => {
             return Err(SpecError::Parse {
                 field: "solver.type",
-                message: format!("unknown solver type {other:?} (scheme|exact)"),
+                message: format!("unknown solver type {other:?} (scheme|pit|exact)"),
             });
         }
     }
@@ -283,6 +351,14 @@ pub fn spec_to_json(spec: &SamplingSpec) -> Json {
             }
             Json::obj(fields)
         }
+        SolverCfg::Pit { solver, nfe, sweeps_max, tol } => Json::obj(vec![
+            ("type", Json::from("pit")),
+            ("solver", Json::from(solver.spec_string())),
+            ("nfe", Json::from(*nfe)),
+            // Resolved knobs are always written (same policy as exact).
+            ("sweeps_max", Json::from(*sweeps_max)),
+            ("tol", Json::Num(*tol)),
+        ]),
         SolverCfg::Exact { window_ratio, slack, max_events } => {
             let mut fields = vec![
                 ("type", Json::from("exact")),
@@ -308,17 +384,33 @@ pub fn spec_to_json(spec: &SamplingSpec) -> Json {
     if spec.priority() != DEFAULT_PRIORITY {
         fields.push(("priority", Json::from(spec.priority() as u64)));
     }
+    if spec.progress() {
+        fields.push(("progress", Json::Bool(true)));
+    }
     fields.push(("solver", solver));
     Json::obj(fields)
 }
 
 /// Full v2 request envelope for a verb (`generate` / `generate_stream`).
 pub fn request_to_json(cmd: &str, spec: &SamplingSpec) -> Json {
-    Json::obj(vec![
+    request_to_json_with_key(cmd, spec, None)
+}
+
+/// As [`request_to_json`], with an optional idempotency `request_key`.
+pub fn request_to_json_with_key(
+    cmd: &str,
+    spec: &SamplingSpec,
+    request_key: Option<&str>,
+) -> Json {
+    let mut fields = vec![
         ("v", Json::from(PROTOCOL_VERSION)),
         ("cmd", Json::from(cmd)),
-        ("spec", spec_to_json(spec)),
-    ])
+    ];
+    if let Some(k) = request_key {
+        fields.push(("request_key", Json::from(k)));
+    }
+    fields.push(("spec", spec_to_json(spec)));
+    Json::obj(fields)
 }
 
 /// Error response body for a typed spec error (v1 clients ignore the extra
@@ -354,6 +446,21 @@ mod tests {
                 .window_ratio(Some(0.61))
                 .slack(Some(3.3))
                 .max_events(Some(1000))
+                .build()
+                .unwrap(),
+            SamplingSpec::builder()
+                .solver(Solver::Trapezoidal { theta: 0.5 })
+                .nfe(64)
+                .pit(true)
+                .sweeps_max(Some(6))
+                .tol(Some(0.125))
+                .progress(true)
+                .build()
+                .unwrap(),
+            SamplingSpec::builder()
+                .solver(Solver::Midpoint { theta: 0.75 })
+                .nfe(32)
+                .pit(true)
                 .build()
                 .unwrap(),
         ];
@@ -480,6 +587,96 @@ mod tests {
         )
         .unwrap();
         assert_eq!(request_from_json(&j).unwrap_err().code(), "parse_error");
+    }
+
+    #[test]
+    fn pit_specs_cross_the_boundary_typed() {
+        // A fully explicit pit spec parses with resolved getters.
+        let j = Json::parse(
+            r#"{"v": 2, "spec": {"seed": 4, "progress": true,
+                "solver": {"type": "pit", "solver": "trapezoidal:0.5",
+                           "nfe": 64, "sweeps_max": 8, "tol": 0.5}}}"#,
+        )
+        .unwrap();
+        let p = request_from_json(&j).unwrap();
+        assert!(p.spec.pit());
+        assert!(p.spec.progress());
+        assert_eq!(p.spec.sweeps_max(), Some(8));
+        assert_eq!(p.spec.pit_tol(), Some(0.5));
+        // Knob-free pit resolves defaults (sweep cap = step count, tol 0)
+        // and the writer echoes the RESOLVED values.
+        let j = Json::parse(
+            r#"{"v": 2, "spec": {"solver": {"type": "pit", "solver": "tau", "nfe": 16}}}"#,
+        )
+        .unwrap();
+        let p = request_from_json(&j).unwrap();
+        assert_eq!(p.spec.sweeps_max(), Some(16));
+        assert_eq!(p.spec.pit_tol(), Some(0.0));
+        let echo = spec_to_json(&p.spec).to_string();
+        assert!(echo.contains("\"sweeps_max\""), "{echo}");
+        assert!(!echo.contains("\"progress\""), "progress stays silent off: {echo}");
+        // Invalid combinations die typed at the boundary.
+        let j = Json::parse(
+            r#"{"v": 2, "spec": {"solver": {"type": "pit", "solver": "exact", "nfe": 16}}}"#,
+        )
+        .unwrap();
+        assert_eq!(request_from_json(&j).unwrap_err().code(), "pit_needs_scheme");
+        let j = Json::parse(
+            r#"{"v": 2, "spec": {"solver": {"type": "pit", "solver": "tau",
+                "nfe": 16, "sweeps_max": 0}}}"#,
+        )
+        .unwrap();
+        assert_eq!(request_from_json(&j).unwrap_err().code(), "sweeps_max_zero");
+        let j = Json::parse(
+            r#"{"v": 2, "spec": {"solver": {"type": "pit", "solver": "tau",
+                "nfe": 16, "tol": -0.5}}}"#,
+        )
+        .unwrap();
+        assert_eq!(request_from_json(&j).unwrap_err().code(), "pit_tol_invalid");
+        // The scheme arm ignores unknown fields, so pit-only knobs cannot
+        // sneak through the wire without pit — but the builder-level guard
+        // still exists for direct (CLI) callers; pin its code here.
+        let e = SamplingSpec::builder()
+            .solver(Solver::TauLeaping)
+            .nfe(16)
+            .sweeps_max(Some(4))
+            .build()
+            .unwrap_err();
+        assert_eq!(e.code(), "knob_needs_pit");
+    }
+
+    #[test]
+    fn request_keys_parse_and_validate() {
+        let spec = SamplingSpec::builder().build().unwrap();
+        // Writer emits the key; parser returns it.
+        let j = request_to_json_with_key("generate", &spec, Some("job-7f3a"));
+        let p = request_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(p.request_key.as_deref(), Some("job-7f3a"));
+        assert_eq!(p.spec, spec);
+        // Keyless envelopes parse with no key (and serialize without one).
+        let j = request_to_json("generate", &spec);
+        assert!(!j.to_string().contains("request_key"));
+        let p = request_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(p.request_key, None);
+        // Degenerate keys are rejected typed.
+        let j = Json::parse(
+            r#"{"v": 2, "request_key": "", "spec": {
+                "solver": {"type": "scheme", "solver": "tau", "nfe": 8}}}"#,
+        )
+        .unwrap();
+        let e = request_from_json(&j).unwrap_err();
+        assert_eq!(e.code(), "parse_error");
+        assert!(format!("{e}").contains("request_key"));
+        let long = "k".repeat(MAX_REQUEST_KEY_LEN + 1);
+        let j = Json::parse(&format!(
+            r#"{{"v": 2, "request_key": "{long}", "spec": {{
+                "solver": {{"type": "scheme", "solver": "tau", "nfe": 8}}}}}}"#
+        ))
+        .unwrap();
+        assert_eq!(request_from_json(&j).unwrap_err().code(), "parse_error");
+        // v1 flat requests never carry keys.
+        let j = Json::parse(r#"{"solver": "tau", "nfe": 8, "request_key": "x"}"#).unwrap();
+        assert_eq!(request_from_json(&j).unwrap().request_key, None);
     }
 
     #[test]

@@ -12,6 +12,13 @@ pub struct Metrics {
     pub lanes: u64,
     pub dispatches: u64,
     pub nfe_total: u64,
+    // Parallel-in-time (Picard) driver accounting.
+    /// Total PIT sweeps executed, summed over every lane served.
+    pub pit_sweeps: u64,
+    /// PIT lanes that converged (bit-exactly or within tolerance).
+    pub pit_converged_lanes: u64,
+    /// PIT lanes that hit `sweeps_max` and returned a typed partial.
+    pub pit_sweep_limit_hits: u64,
     pub latency_ms: Online,
     pub occupancy: Online,
     pub queue_wait_ms: Online,
@@ -51,6 +58,7 @@ impl Metrics {
     pub fn report(&self) -> String {
         format!(
             "requests={} lanes={} dispatches={} nfe={} \
+             pit_sweeps={} pit_converged_lanes={} pit_sweep_limit_hits={} \
              latency_ms[p_mean={:.2} max={:.2}] occupancy_mean={:.2} \
              queue_wait_ms_mean={:.2} lane_failures={} sheds={} \
              deadline_rejects={} deadline_expiries={} supervisor_restarts={} \
@@ -59,6 +67,9 @@ impl Metrics {
             self.lanes,
             self.dispatches,
             self.nfe_total,
+            self.pit_sweeps,
+            self.pit_converged_lanes,
+            self.pit_sweep_limit_hits,
             self.latency_ms.mean(),
             if self.latency_ms.n > 0 { self.latency_ms.max } else { 0.0 },
             self.occupancy.mean(),
@@ -89,6 +100,9 @@ impl Metrics {
             ("lanes", Json::from(self.lanes)),
             ("dispatches", Json::from(self.dispatches)),
             ("nfe_total", Json::from(self.nfe_total)),
+            ("pit_sweeps", Json::from(self.pit_sweeps)),
+            ("pit_converged_lanes", Json::from(self.pit_converged_lanes)),
+            ("pit_sweep_limit_hits", Json::from(self.pit_sweep_limit_hits)),
             ("latency_ms_mean", Json::Num(self.latency_ms.mean())),
             ("occupancy_mean", Json::Num(self.occupancy.mean())),
             ("queue_wait_ms_mean", Json::Num(self.queue_wait_ms.mean())),
@@ -138,8 +152,14 @@ mod tests {
         m.deadline_expiries = 5;
         m.supervisor_restarts = 1;
         m.in_flight = 7;
+        m.pit_sweeps = 11;
+        m.pit_converged_lanes = 6;
+        m.pit_sweep_limit_hits = 1;
         let r = m.report();
         for needle in [
+            "pit_sweeps=11",
+            "pit_converged_lanes=6",
+            "pit_sweep_limit_hits=1",
             "lane_failures=2",
             "sheds=3",
             "deadline_rejects=4",
@@ -151,6 +171,9 @@ mod tests {
         }
         let j = m.to_json();
         assert_eq!(j.get("lane_failures").unwrap().as_u64().unwrap(), 2);
+        assert_eq!(j.get("pit_sweeps").unwrap().as_u64().unwrap(), 11);
+        assert_eq!(j.get("pit_converged_lanes").unwrap().as_u64().unwrap(), 6);
+        assert_eq!(j.get("pit_sweep_limit_hits").unwrap().as_u64().unwrap(), 1);
         assert_eq!(j.get("supervisor_restarts").unwrap().as_u64().unwrap(), 1);
         assert_eq!(j.get("registry_entries").unwrap().as_u64().unwrap(), 0);
     }

@@ -57,6 +57,11 @@
 //! - **The backend reports an execution error** (`batch_failed`): every
 //!   request with a lane in the batch fails typed; its assembler state is
 //!   discarded and its queued lanes purged.
+//! - **A duplicate idempotency key** (`duplicate_request`): a submission
+//!   carrying a `request_key` already claimed by an in-flight job fails
+//!   typed at submission (before the registry or queue see it), echoing
+//!   the original job id; the key is released — and instantly reusable —
+//!   the moment its job completes, fails, or is rejected.
 //! - **Admission rejects a request** (`deadline_infeasible` /
 //!   `overloaded`): intake compares the resolved plan's NFE (the
 //!   [`SamplingSpec::planned_nfe`] cost model) against a learned ms/NFE
@@ -119,6 +124,9 @@ pub mod codes {
     pub const COORDINATOR_RESTARTED: &str = "coordinator_restarted";
     /// In flight at coordinator shutdown.
     pub const SHUTDOWN: &str = "shutdown";
+    /// A request carried a `request_key` already claimed by an in-flight
+    /// job (idempotency dedupe); the message echoes the original job id.
+    pub const DUPLICATE_REQUEST: &str = "duplicate_request";
 }
 
 /// Typed job failure: a stable [`codes`] code plus a human-readable
@@ -144,6 +152,12 @@ pub enum JobEvent {
     /// A lane finished a dispatch (streamed jobs only): its sample index,
     /// its tokens, the NFE it spent, and whether it was interrupted.
     Lane { sample_idx: usize, tokens: Vec<Tok>, nfe: usize, partial: bool },
+    /// Driver heartbeat (streamed jobs that set [`SamplingSpec::progress`]
+    /// only): `done`/`total` in `phase` units — solver windows for the
+    /// sequential drivers (`"window"`), Picard sweeps for PIT (`"sweep"`).
+    /// Emitted from the same per-window hook that polls cancellation, so a
+    /// stalled stream and a stalled cancel poll are the same symptom.
+    Progress { done: usize, total: usize, phase: &'static str },
     /// All lanes done — the assembled response (also carries `partial`).
     Done(GenerateResponse),
     /// The job failed: a stable [`codes`] code plus the failure message.
@@ -183,7 +197,7 @@ impl JobHandle {
     pub fn wait(self) -> Result<GenerateResponse> {
         loop {
             match self.recv()? {
-                JobEvent::Lane { .. } => continue,
+                JobEvent::Lane { .. } | JobEvent::Progress { .. } => continue,
                 JobEvent::Done(resp) => return Ok(resp),
                 JobEvent::Failed { code, message } => {
                     return Err(JobError { code, message }.into());
@@ -199,6 +213,9 @@ struct Job {
     events: Sender<JobEvent>,
     stream: bool,
     cancel: CancelToken,
+    /// Claimed idempotency key (already inserted in [`Shared::keys`];
+    /// every exit path of the job must release it).
+    key: Option<String>,
 }
 
 enum Msg {
@@ -226,10 +243,26 @@ pub struct CoordinatorCfg {
 struct Shared {
     next_id: AtomicU64,
     cancels: Mutex<BTreeMap<u64, CancelToken>>,
+    /// In-flight idempotency keys → the job id that claimed each.  Claimed
+    /// at submission (before the loop thread sees the job, so two racing
+    /// duplicates cannot both pass) and released when the job completes,
+    /// fails, or is rejected — a finished key is immediately reusable.
+    keys: Mutex<BTreeMap<String, u64>>,
 }
 
 fn lock_cancels(shared: &Shared) -> std::sync::MutexGuard<'_, BTreeMap<u64, CancelToken>> {
     shared.cancels.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn lock_keys(shared: &Shared) -> std::sync::MutexGuard<'_, BTreeMap<String, u64>> {
+    shared.keys.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Release a claimed idempotency key (no-op for keyless jobs).
+fn release_key(shared: &Shared, key: &Option<String>) {
+    if let Some(k) = key {
+        lock_keys(shared).remove(k);
+    }
 }
 
 /// Where batches execute.
@@ -366,6 +399,7 @@ impl Coordinator {
         let shared = Arc::new(Shared {
             next_id: AtomicU64::new(1),
             cancels: Mutex::new(BTreeMap::new()),
+            keys: Mutex::new(BTreeMap::new()),
         });
         let loop_shared = Arc::clone(&shared);
         std::thread::Builder::new()
@@ -375,7 +409,32 @@ impl Coordinator {
         Coordinator { tx, shared }
     }
 
-    fn submit_internal(&self, id: u64, spec: SamplingSpec, stream: bool) -> JobHandle {
+    fn submit_internal(
+        &self,
+        id: u64,
+        spec: SamplingSpec,
+        stream: bool,
+        key: Option<String>,
+    ) -> JobHandle {
+        // Idempotency: claim the key before the loop thread can see the
+        // job, so two racing duplicates cannot both pass.  A claimed key
+        // fails the *newer* submission typed, echoing the original id so
+        // the client can attach to (or cancel) the in-flight job.
+        if let Some(k) = &key {
+            let mut keys = lock_keys(&self.shared);
+            if let Some(&original) = keys.get(k) {
+                drop(keys);
+                let (events_tx, events_rx) = channel();
+                let _ = events_tx.send(JobEvent::Failed {
+                    code: codes::DUPLICATE_REQUEST,
+                    message: format!(
+                        "request_key {k:?} is already claimed by in-flight job {original}"
+                    ),
+                });
+                return JobHandle { id, events: events_rx, cancel: CancelToken::never() };
+            }
+            keys.insert(k.clone(), id);
+        }
         // A deadline arms the job's cancel token: the solver loops already
         // poll it per window, so expiry winds the run down into a partial
         // response with no extra plumbing (and no RNG consumed — parity
@@ -391,11 +450,13 @@ impl Coordinator {
             events: events_tx.clone(),
             stream,
             cancel: cancel.clone(),
+            key: key.clone(),
         }));
         if sent.is_err() {
             // Shut-down coordinator: fail typed instead of panicking the
             // submitting thread.
             lock_cancels(&self.shared).remove(&id);
+            release_key(&self.shared, &key);
             let _ = events_tx.send(JobEvent::Failed {
                 code: codes::SHUTDOWN,
                 message: "coordinator is shut down".to_string(),
@@ -407,21 +468,43 @@ impl Coordinator {
     /// Submit a spec as a blocking-style job (no per-lane events) with a
     /// coordinator-assigned id.
     pub fn submit_spec(&self, spec: SamplingSpec) -> JobHandle {
+        self.submit_spec_keyed(spec, None)
+    }
+
+    /// As [`Coordinator::submit_spec`], with an optional idempotency key:
+    /// if `request_key` is already claimed by an in-flight job, the new
+    /// submission fails typed [`codes::DUPLICATE_REQUEST`] (the message
+    /// echoes the original job id) and nothing is enqueued.
+    pub fn submit_spec_keyed(
+        &self,
+        spec: SamplingSpec,
+        request_key: Option<String>,
+    ) -> JobHandle {
         let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
-        self.submit_internal(id, spec, false)
+        self.submit_internal(id, spec, false, request_key)
     }
 
     /// Submit a spec as a streaming job: the handle receives a
     /// [`JobEvent::Lane`] chunk for every completed lane, then `Done`.
     pub fn submit_stream(&self, spec: SamplingSpec) -> JobHandle {
+        self.submit_stream_keyed(spec, None)
+    }
+
+    /// As [`Coordinator::submit_stream`], with an optional idempotency key
+    /// (same dedupe contract as [`Coordinator::submit_spec_keyed`]).
+    pub fn submit_stream_keyed(
+        &self,
+        spec: SamplingSpec,
+        request_key: Option<String>,
+    ) -> JobHandle {
         let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
-        self.submit_internal(id, spec, true)
+        self.submit_internal(id, spec, true, request_key)
     }
 
     /// Submit with a caller-chosen id (embedding users and tests; ids also
     /// key the cancel registry, so keep them unique).
     pub fn submit(&self, req: GenerateRequest) -> JobHandle {
-        self.submit_internal(req.id, req.spec, false)
+        self.submit_internal(req.id, req.spec, false, None)
     }
 
     /// Submit and wait.
@@ -468,15 +551,19 @@ impl Coordinator {
     }
 }
 
-/// Execute one packed batch on the backend.
+/// Execute one packed batch on the backend.  `obs` (when jobs in the
+/// batch asked for progress) receives the driver's per-window/per-sweep
+/// heartbeat; the legacy fused-graph fallback has no such hook and stays
+/// silent.
 fn execute_batch(
     backend: &mut Backend,
     proto: &SamplingSpec,
     lanes: &[batcher::Lane],
+    obs: Option<&mut dyn FnMut(crate::solvers::driver::Progress)>,
 ) -> Result<scheduler::BatchResult> {
     match backend {
         Backend::Local { score, schedules } => {
-            scheduler::run_batch_scored(score.as_ref(), proto, lanes, schedules)
+            scheduler::run_batch_scored_obs(score.as_ref(), proto, lanes, schedules, obs)
         }
         Backend::Pjrt { runtime, registry, scores, schedules } => {
             let score_name = format!("{}_score", proto.family());
@@ -493,8 +580,13 @@ fn execute_batch(
                         s
                     }
                 };
-                let result =
-                    scheduler::run_batch_scored(score.as_ref(), proto, lanes, schedules)?;
+                let result = scheduler::run_batch_scored_obs(
+                    score.as_ref(),
+                    proto,
+                    lanes,
+                    schedules,
+                    obs,
+                )?;
                 // Score dispatch failures poison the source instead of
                 // surfacing through the trait; convert them to a batch error.
                 if let Some(err) = score.take_error() {
@@ -525,6 +617,10 @@ struct Sink {
     events: Sender<JobEvent>,
     stream: bool,
     priority: u8,
+    /// The job asked for driver progress heartbeats (QoS; streamed only).
+    progress: bool,
+    /// Claimed idempotency key, released when the job leaves the table.
+    key: Option<String>,
 }
 
 fn finish_job(
@@ -535,6 +631,7 @@ fn finish_job(
 ) {
     lock_cancels(shared).remove(&id);
     if let Some(sink) = jobs.remove(&id) {
+        release_key(shared, &sink.key);
         let _ = sink.events.send(event);
     }
 }
@@ -647,9 +744,40 @@ impl LoopState {
                 // still-masked positions carrying the mask id, exactly the
                 // partial-result contract.  Fabricating empty sequences
                 // here would break it.
+                // Progress fan-out: clone the event sender of every
+                // streaming job in this batch that opted in.  The driver's
+                // heartbeat is batch-level (one sweep/window covers all
+                // lanes), so each opted-in job sees the same frames.
+                let mut progress_txs: Vec<Sender<JobEvent>> = Vec::new();
+                let mut seen: BTreeSet<u64> = BTreeSet::new();
+                for lane in &lanes {
+                    if seen.insert(lane.request_id) {
+                        if let Some(sink) = self.jobs.get(&lane.request_id) {
+                            if sink.stream && sink.progress {
+                                progress_txs.push(sink.events.clone());
+                            }
+                        }
+                    }
+                }
+                let mut obs_fn;
+                let obs: Option<&mut dyn FnMut(crate::solvers::driver::Progress)> =
+                    if progress_txs.is_empty() {
+                        None
+                    } else {
+                        obs_fn = |p: crate::solvers::driver::Progress| {
+                            for tx in &progress_txs {
+                                let _ = tx.send(JobEvent::Progress {
+                                    done: p.done,
+                                    total: p.total,
+                                    phase: p.phase,
+                                });
+                            }
+                        };
+                        Some(&mut obs_fn)
+                    };
                 let t0 = Instant::now();
                 let outcome = catch_unwind(AssertUnwindSafe(|| {
-                    execute_batch(&mut self.backend, &proto, &lanes)
+                    execute_batch(&mut self.backend, &proto, &lanes, obs)
                 }));
                 match outcome {
                     Ok(Ok(result)) => {
@@ -697,6 +825,7 @@ impl LoopState {
             match msg {
                 Msg::Submit(job) => {
                     lock_cancels(shared).remove(&job.id);
+                    release_key(shared, &job.key);
                     let _ = job.events.send(JobEvent::Failed {
                         code: codes::SHUTDOWN,
                         message: "coordinator is shut down".to_string(),
@@ -725,6 +854,7 @@ impl LoopState {
             if est > deadline as f64 {
                 self.metrics.deadline_rejects += 1;
                 lock_cancels(shared).remove(&job.id);
+                release_key(shared, &job.key);
                 let _ = job.events.send(JobEvent::Failed {
                     code: codes::DEADLINE_INFEASIBLE,
                     message: format!(
@@ -751,6 +881,7 @@ impl LoopState {
             if !self.shed_one_below(shared, job.spec.priority()) {
                 self.metrics.sheds += 1;
                 lock_cancels(shared).remove(&job.id);
+                release_key(shared, &job.key);
                 let _ = job.events.send(JobEvent::Failed {
                     code: codes::OVERLOADED,
                     message: "coordinator overloaded: queue and in-flight caps reached"
@@ -763,8 +894,17 @@ impl LoopState {
         let now = self.now_ms();
         self.assembler.register(job.id, n, now);
         let priority = job.spec.priority();
-        self.jobs
-            .insert(job.id, Sink { events: job.events, stream: job.stream, priority });
+        let progress = job.spec.progress();
+        self.jobs.insert(
+            job.id,
+            Sink {
+                events: job.events,
+                stream: job.stream,
+                priority,
+                progress,
+                key: job.key,
+            },
+        );
         self.batcher.enqueue(GenerateRequest::new(job.id, job.spec), job.cancel);
     }
 
@@ -804,7 +944,10 @@ impl LoopState {
         result: scheduler::BatchResult,
     ) {
         self.metrics.nfe_total += result.nfe.iter().sum::<usize>() as u64;
-        let scheduler::BatchResult { tokens, nfe, partial } = result;
+        self.metrics.pit_sweeps += result.pit_sweeps;
+        self.metrics.pit_converged_lanes += result.pit_converged;
+        self.metrics.pit_sweep_limit_hits += result.pit_sweep_limit;
+        let scheduler::BatchResult { tokens, nfe, partial, .. } = result;
         let now = self.now_ms();
         for (idx, (lane, toks)) in lanes.iter().zip(tokens.into_iter()).enumerate() {
             let lane_nfe = nfe[idx];
@@ -893,8 +1036,10 @@ impl LoopState {
             if failed_requests.contains(&lane.request_id) {
                 continue;
             }
+            // Solo re-runs skip the progress sink: a fault-isolation pass
+            // replays work the stream already heartbeat through once.
             let solo = catch_unwind(AssertUnwindSafe(|| {
-                execute_batch(&mut self.backend, proto, std::slice::from_ref(&lane))
+                execute_batch(&mut self.backend, proto, std::slice::from_ref(&lane), None)
             }));
             match solo {
                 Ok(Ok(result)) => {
@@ -936,6 +1081,7 @@ impl LoopState {
         let mut cancels = lock_cancels(shared);
         for (id, sink) in jobs {
             cancels.remove(&id);
+            release_key(shared, &sink.key);
             let _ = sink.events.send(JobEvent::Failed {
                 code: codes::COORDINATOR_RESTARTED,
                 message: format!(
@@ -1244,6 +1390,9 @@ mod tests {
                     assert!(chunks[sample_idx].replace(tokens).is_none(), "dup lane");
                     n_chunks += 1;
                 }
+                JobEvent::Progress { .. } => {
+                    panic!("progress frames require opt-in")
+                }
                 JobEvent::Done(resp) => break resp,
                 JobEvent::Failed { message, .. } => panic!("{message}"),
             }
@@ -1280,6 +1429,101 @@ mod tests {
         assert_eq!(resp.sequences.len(), 2);
         // Completed job: the registry entry is gone.
         assert!(!c.cancel(id), "completed job must be unknown to cancel");
+        c.shutdown();
+    }
+
+    #[test]
+    fn pit_jobs_stream_progress_and_count_metrics() {
+        let oracle = local_oracle(6, 16);
+        let c = Coordinator::start_local(oracle, BatchPolicy::Greedy, 8);
+        let solver = Solver::Trapezoidal { theta: 0.5 };
+        let spec = SamplingSpec::builder()
+            .solver(solver)
+            .nfe(16)
+            .n_samples(2)
+            .seed(7)
+            .pit(true)
+            .progress(true)
+            .build()
+            .unwrap();
+        let job = c.submit_stream(spec);
+        let mut beats = 0usize;
+        let mut lanes_seen = 0usize;
+        let resp = loop {
+            match job.recv().unwrap() {
+                JobEvent::Progress { done, total, phase } => {
+                    assert_eq!(phase, "sweep");
+                    assert!(done >= 1 && done <= total, "done={done} total={total}");
+                    beats += 1;
+                }
+                JobEvent::Lane { .. } => lanes_seen += 1,
+                JobEvent::Done(resp) => break resp,
+                JobEvent::Failed { message, .. } => panic!("{message}"),
+            }
+        };
+        assert!(beats >= 1, "a PIT job must heartbeat at least one sweep");
+        assert_eq!(lanes_seen, 2);
+        assert!(!resp.partial, "tol=0 PIT must converge exactly");
+
+        // tol=0 convergence ⇒ bit-identical to the sequential driver.
+        let seq = c
+            .generate(req(91, solver, 16, 2, 7))
+            .unwrap();
+        assert_eq!(resp.sequences, seq.sequences, "PIT fixed point must match");
+
+        // Blocking jobs never opt in: wait() sees no Progress frames
+        // (progress is streamed-only QoS), and metrics count the sweeps.
+        let m = c.metrics();
+        assert!(m.pit_sweeps >= 2, "pit_sweeps={}", m.pit_sweeps);
+        assert_eq!(m.pit_converged_lanes, 2);
+        assert_eq!(m.pit_sweep_limit_hits, 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn request_keys_dedupe_in_flight_jobs() {
+        // A long unbounded exact HMM job (the cancellation workload) keeps
+        // the key claimed while we probe the duplicate path.
+        let mut rng = Xoshiro256::seed_from_u64(29);
+        let chain = MarkovChain::generate(&mut rng, 6, 0.6);
+        let oracle = Arc::new(HmmUniformOracle::new(chain, 48));
+        let c = Coordinator::start_local(oracle, BatchPolicy::Greedy, 4);
+        let spec = SamplingSpec::builder()
+            .solver(Solver::Exact)
+            .n_samples(2)
+            .seed(3)
+            .build()
+            .unwrap();
+        let job = c.submit_stream_keyed(spec.clone(), Some("job-a".to_string()));
+        let original_id = job.id;
+
+        // Same key while in flight: typed duplicate echoing the claimant.
+        let dup = c.submit_spec_keyed(spec.clone(), Some("job-a".to_string()));
+        let err = dup.wait().expect_err("duplicate key must fail");
+        let job_err = err
+            .downcast_ref::<JobError>()
+            .expect("failure must carry a typed JobError");
+        assert_eq!(job_err.code, codes::DUPLICATE_REQUEST);
+        assert!(
+            job_err.message.contains(&format!("job {original_id}")),
+            "message must echo the original id: {}",
+            job_err.message
+        );
+
+        // A different key is admitted (and cancelled right away to keep
+        // the test fast); the duplicate rejection burned no registry slot.
+        let other = c.submit_stream_keyed(spec.clone(), Some("job-b".to_string()));
+        c.cancel(other.id);
+        assert!(other.wait().unwrap().partial);
+
+        // Finish the claimant; its key must be immediately reusable.
+        c.cancel(original_id);
+        assert!(job.wait().unwrap().partial);
+        let reuse = c.submit_stream_keyed(spec, Some("job-a".to_string()));
+        c.cancel(reuse.id);
+        assert!(reuse.wait().is_ok(), "a finished key must be reusable");
+        let m = c.metrics();
+        assert_eq!(m.registry_entries, 0, "keys/cancels must drain");
         c.shutdown();
     }
 

@@ -48,6 +48,19 @@ pub struct BatchResult {
     pub tokens: Vec<Vec<Tok>>,
     pub nfe: Vec<usize>,
     pub partial: Vec<bool>,
+    /// PIT-only counters, zero for sequential/exact batches: sweeps summed
+    /// over lanes, lanes whose convergence criterion fired, and lanes that
+    /// hit the `sweeps_max` divergence guard.
+    pub pit_sweeps: u64,
+    pub pit_converged: u64,
+    pub pit_sweep_limit: u64,
+}
+
+impl BatchResult {
+    /// A result from a non-PIT path (PIT counters zero).
+    fn sequential(tokens: Vec<Vec<Tok>>, nfe: Vec<usize>, partial: Vec<bool>) -> BatchResult {
+        BatchResult { tokens, nfe, partial, pit_sweeps: 0, pit_converged: 0, pit_sweep_limit: 0 }
+    }
 }
 
 /// The one cancel token a lock-step scheme batch polls: the request's
@@ -87,6 +100,20 @@ pub fn run_batch_scored(
     lanes: &[Lane],
     cache: &mut ScheduleCache,
 ) -> Result<BatchResult> {
+    run_batch_scored_obs(score, spec, lanes, cache, None)
+}
+
+/// [`run_batch_scored`] with an optional progress sink: the driver's
+/// per-window (or per-sweep, for PIT) heartbeat, forwarded to streaming
+/// responses that opted in.  Exact batches have no grid, hence no
+/// heartbeat.
+pub fn run_batch_scored_obs(
+    score: &dyn ScoreSource,
+    spec: &SamplingSpec,
+    lanes: &[Lane],
+    cache: &mut ScheduleCache,
+    obs: Option<&mut dyn FnMut(crate::solvers::driver::Progress)>,
+) -> Result<BatchResult> {
     let solver = spec.solver();
     let seeds: Vec<u64> = lanes.iter().map(|l| l.seed).collect();
 
@@ -98,19 +125,36 @@ pub fn run_batch_scored(
             let cancels: Vec<CancelToken> = lanes.iter().map(|l| l.cancel.clone()).collect();
             let results =
                 masked::exact_batch_ctl(score, DELTA, &cfg, max_events, &seeds, &cancels);
+            let nfe = results.iter().map(|r| r.stats.nfe).collect();
+            let partial = results.iter().map(|r| r.partial).collect();
+            let tokens = results.into_iter().map(|r| r.tokens).collect();
+            return Ok(BatchResult::sequential(tokens, nfe, partial));
+        }
+        ExecPlan::Pit { steps, sweeps_max, tol } => {
+            let grid_ts = grid::masked_uniform(steps, DELTA);
+            let cfg = crate::solvers::pit::PitCfg::new(sweeps_max, tol);
+            let outs = masked::pit_generate_batch_ctl(
+                score, solver, &grid_ts, &seeds, &cfg, &cancel, obs,
+            );
             return Ok(BatchResult {
-                nfe: results.iter().map(|r| r.stats.nfe).collect(),
-                partial: results.iter().map(|r| r.partial).collect(),
-                tokens: results.into_iter().map(|r| r.tokens).collect(),
+                nfe: outs.iter().map(|o| o.stats.nfe).collect(),
+                partial: outs.iter().map(|o| !o.outcome.complete()).collect(),
+                pit_sweeps: outs.iter().map(|o| o.sweeps as u64).sum(),
+                pit_converged: outs.iter().filter(|o| o.outcome.converged()).count() as u64,
+                pit_sweep_limit: outs
+                    .iter()
+                    .filter(|o| o.outcome == crate::solvers::pit::PitOutcome::SweepLimit)
+                    .count() as u64,
+                tokens: outs.into_iter().map(|o| o.out).collect(),
             });
         }
         ExecPlan::Uniform { steps } => {
             let grid_ts = grid::masked_uniform(steps, DELTA);
-            masked::generate_batch_ctl(score, solver, &grid_ts, &seeds, &cancel)
+            masked::generate_batch_ctl_obs(score, solver, &grid_ts, &seeds, &cancel, obs)
         }
         ExecPlan::Log { steps } => {
             let grid_ts = grid::masked_log(steps, DELTA);
-            masked::generate_batch_ctl(score, solver, &grid_ts, &seeds, &cancel)
+            masked::generate_batch_ctl_obs(score, solver, &grid_ts, &seeds, &cancel, obs)
         }
         ExecPlan::Tuned { steps } => {
             let key = TuneKey::new(spec.family(), score.vocab(), score.seq_len(), solver, steps);
@@ -120,7 +164,7 @@ pub fn run_batch_scored(
                 ScheduleTuner { pilots: 2, tol: 1e-3, ..Default::default() }
                     .fit_masked(score, solver, steps, DELTA, spec.family())
             });
-            masked::generate_batch_ctl(score, solver, &tuned.grid, &seeds, &cancel)
+            masked::generate_batch_ctl_obs(score, solver, &tuned.grid, &seeds, &cancel, obs)
         }
         ExecPlan::Adaptive { tol, dt0, budget } => {
             let mut ctl =
@@ -132,8 +176,9 @@ pub fn run_batch_scored(
                     reserve: 1,
                 });
             }
-            let (results, _, completed) =
-                masked::generate_batch_adaptive_ctl(score, solver, ctl, DELTA, &seeds, &cancel);
+            let (results, _, completed) = masked::generate_batch_adaptive_ctl_obs(
+                score, solver, ctl, DELTA, &seeds, &cancel, obs,
+            );
             (results, completed)
         }
     };
@@ -141,11 +186,10 @@ pub fn run_batch_scored(
     // authoritative, unlike re-polling the token here, which would race
     // with a cancel landing just after the final window and mislabel a
     // fully-complete response as partial.
-    Ok(BatchResult {
-        nfe: results.iter().map(|(_, s)| s.nfe).collect(),
-        partial: vec![!completed; results.len()],
-        tokens: results.into_iter().map(|(t, _)| t).collect(),
-    })
+    let nfe = results.iter().map(|(_, s)| s.nfe).collect();
+    let partial = vec![!completed; results.len()];
+    let tokens = results.into_iter().map(|(t, _)| t).collect();
+    Ok(BatchResult::sequential(tokens, nfe, partial))
 }
 
 /// Which artifact implements a solver step for a family.
@@ -156,6 +200,7 @@ pub fn artifact_name(family: &str, solver: Solver) -> String {
         Solver::Tweedie => "tweedie",
         Solver::Trapezoidal { .. } => "trapezoidal",
         Solver::Rk2 { .. } => "rk2",
+        Solver::Midpoint { .. } => "midpoint",
         Solver::ParallelDecoding => "parallel",
         // Exact simulation has no fused step graph (its jump times are
         // data-dependent); it is servable only through the score-source
@@ -230,7 +275,9 @@ pub fn run_batch(
     let mut nfe = 0usize;
 
     let theta = match solver {
-        Solver::Trapezoidal { theta } | Solver::Rk2 { theta } => theta as f32,
+        Solver::Trapezoidal { theta } | Solver::Rk2 { theta } | Solver::Midpoint { theta } => {
+            theta as f32
+        }
         _ => 0.0,
     };
 
@@ -259,7 +306,7 @@ pub fn run_batch(
                 let k = masked_now.saturating_sub(target) as i32;
                 inputs.push(Value::scalar_i32(k.max(0)));
             }
-            Solver::Trapezoidal { .. } | Solver::Rk2 { .. } => {
+            Solver::Trapezoidal { .. } | Solver::Rk2 { .. } | Solver::Midpoint { .. } => {
                 inputs.push(Value::scalar_f32(w[1] as f32));
                 inputs.push(Value::scalar_f32(theta));
             }
@@ -301,11 +348,11 @@ pub fn run_batch(
                 .collect()
         })
         .collect();
-    Ok(BatchResult {
-        tokens: out_tokens,
-        nfe: vec![nfe; lanes.len()],
-        partial: vec![cancelled; lanes.len()],
-    })
+    Ok(BatchResult::sequential(
+        out_tokens,
+        vec![nfe; lanes.len()],
+        vec![cancelled; lanes.len()],
+    ))
 }
 
 /// Uniforms layout (stages, 2, B, L): lane b owns [.., .., b, ..] across all
@@ -442,6 +489,54 @@ mod tests {
         for &nfe in &result.nfe {
             assert!(nfe <= 9, "tuned+budget overdrew: {nfe}");
         }
+    }
+
+    #[test]
+    fn run_batch_scored_pit_matches_sequential_and_counts() {
+        use crate::score::markov::{MarkovChain, MarkovOracle};
+        let mut rng = Xoshiro256::seed_from_u64(23);
+        let oracle = MarkovOracle::new(MarkovChain::generate(&mut rng, 5, 0.5), 12);
+        let lanes = test_lanes(3);
+        let solver = Solver::Trapezoidal { theta: 0.5 };
+        let mut cache = ScheduleCache::new();
+        let pit_spec = SamplingSpec::builder().solver(solver).nfe(16).pit(true).build().unwrap();
+        let seq_spec = scored_spec(solver, 16);
+        let pit = run_batch_scored(&oracle, &pit_spec, &lanes, &mut cache).unwrap();
+        let seq = run_batch_scored(&oracle, &seq_spec, &lanes, &mut cache).unwrap();
+        // tol = 0 → bit-identical samples, per lane.
+        assert_eq!(pit.tokens, seq.tokens);
+        assert!(pit.partial.iter().all(|&p| !p));
+        // Counters: every lane converged, nobody hit the sweep cap, and
+        // the sweep total is positive and bounded by lanes × steps.
+        assert_eq!(pit.pit_converged, 3);
+        assert_eq!(pit.pit_sweep_limit, 0);
+        assert!(pit.pit_sweeps >= 3 && pit.pit_sweeps <= 3 * 8, "{}", pit.pit_sweeps);
+        // Sequential paths report zeroed PIT counters.
+        assert_eq!(
+            (seq.pit_sweeps, seq.pit_converged, seq.pit_sweep_limit),
+            (0, 0, 0)
+        );
+        // A 1-sweep cap yields typed partials, not a spin.
+        let capped = SamplingSpec::builder()
+            .solver(solver)
+            .nfe(16)
+            .pit(true)
+            .sweeps_max(Some(1))
+            .build()
+            .unwrap();
+        let r = run_batch_scored(&oracle, &capped, &lanes, &mut cache).unwrap();
+        assert!(r.partial.iter().all(|&p| p));
+        assert_eq!(r.pit_sweep_limit, 3);
+        assert_eq!(r.pit_converged, 0);
+        // Progress sink sees per-sweep heartbeats.
+        let mut beats = 0usize;
+        let mut sink = |p: crate::solvers::driver::Progress| {
+            assert_eq!(p.phase, "sweep");
+            beats += 1;
+        };
+        let _ = run_batch_scored_obs(&oracle, &pit_spec, &lanes, &mut cache, Some(&mut sink))
+            .unwrap();
+        assert!(beats >= 1);
     }
 
     #[test]

@@ -9,8 +9,10 @@
 //! fastdds client  [--addr ...] --solver trapezoidal:0.5 --nfe 64 [--n 4] [--seed 1]
 //!                 [--schedule adaptive:tol=1e-3] [--nfe-budget 48]
 //!                 [--window-ratio 0.5] [--slack 4] [--max-events 1000]
+//!                 [--pit] [--sweeps-max 8] [--tol 0.01]
 //!                 [--deadline-ms 500] [--priority 0..3]
-//!                 [--spec spec.json] [--stream] [--timeout-ms 5000]
+//!                 [--spec spec.json] [--stream] [--progress]
+//!                 [--request-key my-key] [--timeout-ms 5000]
 //! fastdds info    [--artifacts artifacts]
 //! ```
 //!
@@ -28,6 +30,15 @@
 //! `{"v":2,"spec":...}` envelope); `--stream` uses `generate_stream` and
 //! prints chunks as lanes complete; `--timeout-ms` bounds connect/read so
 //! a hung server fails the call instead of blocking forever.
+//!
+//! `--pit` runs the request through the parallel-in-time Picard driver
+//! (uniform grids only): `--sweeps-max` caps the fixed-point sweeps
+//! (default = the step count, the worst-case exact bound) and `--tol`
+//! accepts early once the embedded per-step error estimate falls below it
+//! (0 = bit-exact convergence).  `--progress` (with `--stream`) asks for
+//! per-window/per-sweep heartbeat frames; `--request-key` attaches an
+//! idempotency key — a duplicate submission while the original is in
+//! flight fails typed `duplicate_request` instead of re-running.
 //!
 //! QoS: `client --deadline-ms` attaches a wall-clock deadline (infeasible
 //! deadlines are rejected at intake with code `deadline_infeasible`;
@@ -223,6 +234,10 @@ fn client_spec(args: &Args) -> Result<SamplingSpec> {
         .window_ratio(args.f64_opt("window-ratio")?)
         .slack(args.f64_opt("slack")?)
         .max_events(args.usize_opt("max-events")?)
+        .pit(args.flag("pit"))
+        .sweeps_max(args.usize_opt("sweeps-max")?)
+        .tol(args.f64_opt("tol")?)
+        .progress(args.flag("progress"))
         .deadline_ms(args.usize_opt("deadline-ms")?.map(|ms| ms as u64));
     if let Some(p) = args.usize_opt("priority")? {
         let p = u8::try_from(p).map_err(|_| {
@@ -243,14 +258,22 @@ fn cmd_client(args: &Args) -> Result<()> {
         .map(|ms| std::time::Duration::from_millis(ms as u64));
     let mut client = fastdds::server::client::Client::connect_with(&addr, timeout)?;
     let spec = client_spec(args)?;
+    let request_key = args.str_opt("request-key");
     let resp = if args.flag("stream") {
-        let id = client.start_stream(&spec)?;
+        let id = client.start_stream_keyed(&spec, request_key)?;
         println!("accepted id={id} (interrupt with: fastdds cancel --id {id})");
         let out = client.finish_stream(spec.n_samples())?;
-        println!("streamed {} chunk(s)", out.chunks);
+        if out.progress_frames > 0 {
+            println!(
+                "streamed {} chunk(s), {} progress frame(s)",
+                out.chunks, out.progress_frames
+            );
+        } else {
+            println!("streamed {} chunk(s)", out.chunks);
+        }
         out.response
     } else {
-        client.generate_spec(&spec)?
+        client.generate_spec_keyed(&spec, request_key)?
     };
     println!(
         "id={} nfe_used={} latency_ms={:.2}{}",

@@ -89,6 +89,29 @@ pub trait ScoreSource: Send + Sync {
         });
     }
 
+    /// Time-sliced batched sparse evaluation: one call evaluates
+    /// `reqs.len()` sequences, each at its OWN forward time — request k is
+    /// a `(tokens, masked_idx, t)` triple whose compact rows are written
+    /// into `outs[k]` (same layout and contract as [`probs_masked_into`]).
+    /// This is the parallel-in-time seam ([`crate::solvers::pit`]): a PIT
+    /// sweep lays its time-slices out as lanes and funnels every slice's
+    /// evaluation through one call here.
+    ///
+    /// The default fans the independent rows across scoped threads exactly
+    /// like [`probs_masked_batch`] (deterministic chunking — rows bitwise
+    /// identical to the sequential loop, which the PIT bit-parity
+    /// guarantee relies on).  Accelerator-graph implementations should
+    /// override to pack the slices into as few dispatches as the
+    /// fixed-shape graphs allow; time enters those graphs as an input, so
+    /// mixed-`t` rows can share a dispatch.
+    fn probs_masked_slices(&self, reqs: &[(&[Tok], &[usize], f64)], outs: &mut [&mut [f64]]) {
+        assert_eq!(reqs.len(), outs.len(), "probs_masked_slices arity mismatch");
+        let threads = crate::util::threadpool::ThreadPool::default_size();
+        crate::util::threadpool::par_zip_mut(outs, reqs, threads, |_, out, &(tokens, idx, t)| {
+            self.probs_masked_into(tokens, idx, t, *out);
+        });
+    }
+
     /// Convenience allocating wrapper.
     fn probs(&self, tokens: &[Tok], t: f64) -> Vec<f64> {
         let mut out = vec![0.0; self.seq_len() * self.vocab()];
@@ -218,6 +241,33 @@ mod tests {
             ];
             let mut outs: Vec<&mut [f64]> = vec![&mut b1, &mut b2];
             s.probs_masked_batch(&reqs, 0.7, &mut outs);
+        }
+        assert_eq!(b1, single1);
+        assert_eq!(b2, single2);
+    }
+
+    #[test]
+    fn default_slices_matches_per_slice() {
+        let (s, tokens, idx) = fixture();
+        let v = s.vocab();
+        let mask = s.mask_id();
+        let tokens2: Vec<Tok> = vec![mask; 12];
+        let idx2 = masked_indices(&tokens2, mask);
+        // Same two sequences, DIFFERENT forward times per request.
+        let mut single1 = vec![0.0; idx.len() * v];
+        let mut single2 = vec![0.0; idx2.len() * v];
+        s.probs_masked_into(&tokens, &idx, 0.3, &mut single1);
+        s.probs_masked_into(&tokens2, &idx2, 0.9, &mut single2);
+
+        let mut b1 = vec![1.0; idx.len() * v];
+        let mut b2 = vec![1.0; idx2.len() * v];
+        {
+            let reqs: Vec<(&[Tok], &[usize], f64)> = vec![
+                (tokens.as_slice(), idx.as_slice(), 0.3),
+                (tokens2.as_slice(), idx2.as_slice(), 0.9),
+            ];
+            let mut outs: Vec<&mut [f64]> = vec![&mut b1, &mut b2];
+            s.probs_masked_slices(&reqs, &mut outs);
         }
         assert_eq!(b1, single1);
         assert_eq!(b2, single2);

@@ -188,7 +188,19 @@ impl Client {
 
     /// Send a typed spec as a v2 `generate` and return the response.
     pub fn generate_spec(&mut self, spec: &SamplingSpec) -> Result<GenerateResponse> {
-        let req = wire::request_to_json("generate", spec);
+        self.generate_spec_keyed(spec, None)
+    }
+
+    /// As [`Client::generate_spec`], with an optional idempotency
+    /// `request_key` (1–128 chars): while a job with the same key is in
+    /// flight the server rejects the duplicate typed
+    /// (`duplicate_request`), echoing the original job id.
+    pub fn generate_spec_keyed(
+        &mut self,
+        spec: &SamplingSpec,
+        request_key: Option<&str>,
+    ) -> Result<GenerateResponse> {
+        let req = wire::request_to_json_with_key("generate", spec, request_key);
         let r = self.raw(&req.to_string())?;
         Self::ok_response(&r)
     }
@@ -197,7 +209,18 @@ impl Client {
     /// `accepted` frame, returning the server-assigned job id (the
     /// `cancel` key).  Follow with [`Client::finish_stream`].
     pub fn start_stream(&mut self, spec: &SamplingSpec) -> Result<u64> {
-        let req = wire::request_to_json("generate_stream", spec);
+        self.start_stream_keyed(spec, None)
+    }
+
+    /// As [`Client::start_stream`], with an optional idempotency
+    /// `request_key` (same dedupe contract as
+    /// [`Client::generate_spec_keyed`]).
+    pub fn start_stream_keyed(
+        &mut self,
+        spec: &SamplingSpec,
+        request_key: Option<&str>,
+    ) -> Result<u64> {
+        let req = wire::request_to_json_with_key("generate_stream", spec, request_key);
         self.send_line(&req.to_string())?;
         let r = self.read_reply()?;
         if !r.get("ok")?.as_bool()? {
@@ -220,9 +243,15 @@ impl Client {
     pub fn finish_stream(&mut self, n_samples: usize) -> Result<StreamOutcome> {
         let mut sequences: Vec<Option<Vec<Tok>>> = vec![None; n_samples];
         let mut chunks = 0usize;
+        let mut progress_frames = 0usize;
         loop {
             let r = self.read_reply()?;
             match r.get("stream")?.as_str()? {
+                "progress" => {
+                    // Heartbeat (specs that set `progress: true` only):
+                    // count it and keep reading.
+                    progress_frames += 1;
+                }
                 "chunk" => {
                     let idx = r.get("sample_idx")?.as_usize()?;
                     if idx >= n_samples {
@@ -252,7 +281,7 @@ impl Client {
                         latency_ms: r.get("latency_ms")?.as_f64()?,
                         partial: r.get("partial")?.as_bool()?,
                     };
-                    return Ok(StreamOutcome { chunks, response });
+                    return Ok(StreamOutcome { chunks, progress_frames, response });
                 }
                 "error" => bail!(
                     "stream failed: {}",
@@ -294,6 +323,8 @@ impl Client {
 pub struct StreamOutcome {
     /// Chunk frames received (= lanes streamed).
     pub chunks: usize,
+    /// Progress heartbeat frames received (0 unless the spec opted in).
+    pub progress_frames: usize,
     pub response: GenerateResponse,
 }
 

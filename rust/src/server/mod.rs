@@ -51,6 +51,27 @@
 //! the same spec + seed, bit for bit.  The terminal line is `"stream":
 //! "done"` (or `"stream": "error"` with `"ok": false`).
 //!
+//! Specs that set `"progress": true` additionally receive driver
+//! heartbeat frames between chunks (strictly opt-in — older clients bail
+//! on unknown frames, so nothing is emitted unless asked):
+//!
+//! ```text
+//! <- {"ok": true, "stream": "progress", "id": 7, "done": 3, "total": 8,
+//!     "phase": "sweep"}
+//! ```
+//!
+//! `done`/`total` count `phase` units: solver windows (`"window"`) for
+//! the sequential drivers, Picard sweeps (`"sweep"`) for PIT specs.
+//!
+//! ## Idempotency
+//!
+//! A v2 request may carry a top-level `"request_key"` (1–128 chars).
+//! While the job it names is in flight, a second submission with the same
+//! key fails typed `{"ok": false, "code": "duplicate_request"}`, echoing
+//! the original job id in the error message; the key frees the moment the
+//! job completes, fails, or is rejected.  Responses (and the stream's
+//! `accepted` frame) echo the key back.
+//!
 //! ```text
 //! -> {"cmd": "cancel", "id": 7}
 //! <- {"ok": true, "id": 7, "cancelled": true}
@@ -389,21 +410,34 @@ fn v2_response(resp: &GenerateResponse, spec: &SamplingSpec) -> Json {
     out
 }
 
+/// Echo the request's idempotency key on a reply frame (no-op when the
+/// request carried none — v1 requests never do).
+fn echo_key(out: &mut Json, request_key: &Option<String>) {
+    if let (Json::Obj(m), Some(k)) = (out, request_key) {
+        m.insert("request_key".into(), Json::from(k.as_str()));
+    }
+}
+
 fn handle_generate(
     coordinator: &Coordinator,
     parsed: ParsedRequest,
     writer: &mut TcpStream,
 ) -> std::io::Result<()> {
-    let job = coordinator.submit_spec(parsed.spec.clone());
+    let job = coordinator.submit_spec_keyed(parsed.spec.clone(), parsed.request_key.clone());
     match job.wait() {
         Ok(resp) => {
-            let out = match &parsed.v1 {
+            let mut out = match &parsed.v1 {
                 Some(echo) => v1_response(&resp, echo),
                 None => v2_response(&resp, &parsed.spec),
             };
+            echo_key(&mut out, &parsed.request_key);
             write_json(writer, &out)
         }
-        Err(e) => write_json(writer, &job_error_json(&e)),
+        Err(e) => {
+            let mut out = job_error_json(&e);
+            echo_key(&mut out, &parsed.request_key);
+            write_json(writer, &out)
+        }
     }
 }
 
@@ -412,16 +446,16 @@ fn handle_stream(
     parsed: ParsedRequest,
     writer: &mut TcpStream,
 ) -> std::io::Result<()> {
-    let job = coordinator.submit_stream(parsed.spec.clone());
-    let accepted = write_json(
-        writer,
-        &Json::obj(vec![
-            ("ok", Json::Bool(true)),
-            ("v", Json::from(wire::PROTOCOL_VERSION)),
-            ("stream", Json::from("accepted")),
-            ("id", Json::from(job.id)),
-        ]),
-    );
+    let job =
+        coordinator.submit_stream_keyed(parsed.spec.clone(), parsed.request_key.clone());
+    let mut accepted_frame = Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("v", Json::from(wire::PROTOCOL_VERSION)),
+        ("stream", Json::from("accepted")),
+        ("id", Json::from(job.id)),
+    ]);
+    echo_key(&mut accepted_frame, &parsed.request_key);
+    let accepted = write_json(writer, &accepted_frame);
     if let Err(e) = accepted {
         // Client gone before the stream even started: wind the job down
         // instead of computing into a dead socket.
@@ -449,6 +483,25 @@ fn handle_stream(
                     // Disconnect mid-stream: cancel so the remaining lanes
                     // stop at the next solver window; the coordinator still
                     // completes the job and clears its registry entry.
+                    job.cancel();
+                    return Err(e);
+                }
+            }
+            Ok(JobEvent::Progress { done, total, phase }) => {
+                // Only opted-in jobs ever receive this event, so the frame
+                // is opt-in by construction.
+                let wrote = write_json(
+                    writer,
+                    &Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("stream", Json::from("progress")),
+                        ("id", Json::from(job.id)),
+                        ("done", Json::from(done)),
+                        ("total", Json::from(total)),
+                        ("phase", Json::from(phase)),
+                    ]),
+                );
+                if let Err(e) = wrote {
                     job.cancel();
                     return Err(e);
                 }
@@ -735,6 +788,106 @@ mod tests {
         assert_eq!(streamed.response.nfe_used, blocking.nfe_used);
         assert_eq!(streamed.chunks, 3);
         assert!(!streamed.response.partial);
+        srv.stop();
+    }
+
+    #[test]
+    fn pit_stream_progress_and_stats_over_tcp() {
+        let srv = local_server();
+        let addr = srv.addr.to_string();
+        let mut c = Client::connect(&addr).unwrap();
+        let solver = Solver::Trapezoidal { theta: 0.5 };
+        let pit_spec = SamplingSpec::builder()
+            .solver(solver)
+            .nfe(16)
+            .n_samples(2)
+            .seed(11)
+            .pit(true)
+            .progress(true)
+            .build()
+            .unwrap();
+        // Streamed PIT run: heartbeat frames arrive between chunks, and
+        // the tol=0 fixed point matches the sequential driver bitwise.
+        let streamed = c.generate_stream(&pit_spec).unwrap();
+        assert!(streamed.progress_frames >= 1, "no heartbeat frames");
+        assert_eq!(streamed.chunks, 2);
+        assert!(!streamed.response.partial);
+        let seq_spec = SamplingSpec::builder()
+            .solver(solver)
+            .nfe(16)
+            .n_samples(2)
+            .seed(11)
+            .build()
+            .unwrap();
+        let seq = c.generate_spec(&seq_spec).unwrap();
+        assert_eq!(streamed.response.sequences, seq.sequences);
+
+        // Without the opt-in, a PIT stream emits zero progress frames
+        // (existing clients bail on unknown frames — pinned here).
+        let quiet = SamplingSpec::builder()
+            .solver(solver)
+            .nfe(16)
+            .n_samples(2)
+            .seed(12)
+            .pit(true)
+            .build()
+            .unwrap();
+        let out = c.generate_stream(&quiet).unwrap();
+        assert_eq!(out.progress_frames, 0, "progress must be opt-in");
+
+        // The stats verb surfaces the PIT ledger.
+        let stats = c.stats().unwrap();
+        assert!(stats.get("pit_sweeps").unwrap().as_u64().unwrap() >= 2);
+        assert!(stats.get("pit_converged_lanes").unwrap().as_u64().unwrap() >= 4);
+        assert_eq!(stats.get("pit_sweep_limit_hits").unwrap().as_u64().unwrap(), 0);
+
+        // A completed job's request_key is echoed and immediately free.
+        let req = wire::request_to_json_with_key("generate", &seq_spec, Some("alpha"));
+        let r = c.raw(&req.to_string()).unwrap();
+        assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r:?}");
+        assert_eq!(r.get("request_key").unwrap().as_str().unwrap(), "alpha");
+        let r = c.raw(&req.to_string()).unwrap();
+        assert!(r.get("ok").unwrap().as_bool().unwrap(), "finished key must be reusable");
+        srv.stop();
+    }
+
+    #[test]
+    fn duplicate_request_keys_fail_typed_over_tcp() {
+        // Claim a key with a long streaming exact job, then collide with
+        // it from a second connection.
+        let srv = local_hmm_server_len(48);
+        let addr = srv.addr.to_string();
+        let mut streaming = Client::connect(&addr).unwrap();
+        let spec = SamplingSpec::builder()
+            .solver(Solver::Exact)
+            .n_samples(2)
+            .seed(3)
+            .build()
+            .unwrap();
+        let id = streaming.start_stream_keyed(&spec, Some("expensive-job")).unwrap();
+        let mut control = Client::connect(&addr).unwrap();
+        let dup = wire::request_to_json_with_key("generate", &spec, Some("expensive-job"));
+        let r = control.raw(&dup.to_string()).unwrap();
+        assert!(!r.get("ok").unwrap().as_bool().unwrap(), "{r:?}");
+        assert_eq!(r.get("code").unwrap().as_str().unwrap(), "duplicate_request");
+        assert_eq!(r.get("request_key").unwrap().as_str().unwrap(), "expensive-job");
+        assert!(
+            r.get("error").unwrap().as_str().unwrap().contains(&format!("job {id}")),
+            "{r:?}"
+        );
+        // Cancel the claimant; once it completes, the key frees.
+        assert!(control.cancel(id).unwrap());
+        let out = streaming.finish_stream(2).unwrap();
+        assert!(out.response.partial);
+        let cheap = SamplingSpec::builder()
+            .solver(Solver::TauLeaping)
+            .nfe(8)
+            .seed(1)
+            .build()
+            .unwrap();
+        let reuse = wire::request_to_json_with_key("generate", &cheap, Some("expensive-job"));
+        let r = control.raw(&reuse.to_string()).unwrap();
+        assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r:?}");
         srv.stop();
     }
 

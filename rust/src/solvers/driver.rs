@@ -41,6 +41,31 @@ pub enum Schedule<'a> {
     Adaptive { ctl: StepController, delta: f64 },
 }
 
+/// One heartbeat from a running driver, emitted right after the unit of
+/// work named by `phase` completes: `"window"` for the sequential drivers
+/// (one grid window for the whole lock-step batch), `"sweep"` for the
+/// parallel-in-time driver ([`crate::solvers::pit`]).  `total` is the
+/// upper bound on `done` when one is known up front (fixed grids:
+/// `n_steps`; PIT: `sweeps_max`) and `0` when there is none (adaptive
+/// schedules choose their own step count online).
+///
+/// Observers ride next to the cancel poll on purpose: both are
+/// driver-boundary side channels that draw no randomness and cannot
+/// perturb outputs — a run with an observer is bit-identical to one
+/// without.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Progress {
+    pub done: usize,
+    pub total: usize,
+    pub phase: &'static str,
+}
+
+fn observe(obs: &mut Option<&mut dyn FnMut(Progress)>, done: usize, total: usize, phase: &'static str) {
+    if let Some(f) = obs.as_mut() {
+        f(Progress { done, total, phase });
+    }
+}
+
 /// Advance one lane through one window (all stages + accounting).  Public
 /// so `toy::step` can expose the single-window form and benches can drive
 /// kernels directly.
@@ -277,6 +302,21 @@ pub fn run_batch_ctl<F: StateFamily, K: SolverKernel<F> + Sync>(
     seeds: &[u64],
     cancel: &CancelToken,
 ) -> (Vec<(F::Out, GenStats)>, AdaptiveTrace, bool) {
+    run_batch_ctl_obs::<F, K>(ctx, kernel, schedule, seeds, cancel, None)
+}
+
+/// As [`run_batch_ctl`], with an optional [`Progress`] observer invoked
+/// once per completed window (the serving layer turns these into
+/// `progress` stream frames).  `None` is exactly [`run_batch_ctl`]; the
+/// observer draws no randomness, so outputs are bit-identical either way.
+pub fn run_batch_ctl_obs<F: StateFamily, K: SolverKernel<F> + Sync>(
+    ctx: &F::Ctx,
+    kernel: &K,
+    schedule: Schedule<'_>,
+    seeds: &[u64],
+    cancel: &CancelToken,
+    mut obs: Option<&mut dyn FnMut(Progress)>,
+) -> (Vec<(F::Out, GenStats)>, AdaptiveTrace, bool) {
     if seeds.is_empty() {
         return (Vec::new(), AdaptiveTrace::default(), true);
     }
@@ -304,6 +344,7 @@ pub fn run_batch_ctl<F: StateFamily, K: SolverKernel<F> + Sync>(
                 }
                 let meta = StepMeta { t: w[0], t_next: w[1], step_idx: i, n_steps: Some(n_steps) };
                 step_batch(ctx, kernel, &meta, &mut lanes, &mut bufs, threads, false);
+                observe(&mut obs, i + 1, n_steps, "window");
             }
             if !cancelled {
                 F::finalize_batch(ctx, &mut lanes, &mut bufs, *grid.last().unwrap(), threads);
@@ -330,6 +371,7 @@ pub fn run_batch_ctl<F: StateFamily, K: SolverKernel<F> + Sync>(
                 ctl.observe(err);
                 t = t_next;
                 i += 1;
+                observe(&mut obs, i, 0, "window");
                 if lanes.iter().all(|l| !F::lane_active(&l.state)) {
                     break;
                 }

@@ -66,14 +66,28 @@ pub struct LaneCore<F: StateFamily> {
     pub stats: GenStats,
 }
 
+/// One time-slice's evaluation requests inside a parallel-in-time sweep
+/// ([`crate::solvers::pit`]): at most one predictor eval (the pre-step lane
+/// at the kernel's stage-1 time) and one corrector eval (the post-stage-1
+/// lane at ρ), both writing into this slice's scratch.  The two lanes may
+/// differ (states vs mids) and every slice carries its own time — which is
+/// what distinguishes this from the per-stage lock-step
+/// [`StateFamily::eval_batch`].
+pub struct SliceEval<'a, F: StateFamily> {
+    pub sc: &'a mut F::Scratch,
+    pub stage1: Option<(&'a F::Lane, f64)>,
+    pub stage2: Option<(&'a F::Lane, f64)>,
+}
+
 /// A state family: what a lane is, how score evaluation works for it
 /// (single and batched), and how a run terminates.
 pub trait StateFamily: Sized {
     /// Evaluation context: a [`ScoreSource`] for masked sequences, the
     /// analytic [`ToyModel`] for the toy CTMC.
     type Ctx: ?Sized + Sync;
-    /// Per-lane mutable sampler state.
-    type Lane: Send;
+    /// Per-lane mutable sampler state.  `Clone` because the parallel-in-
+    /// time driver holds a candidate lane per time-slice.
+    type Lane: Send + Clone;
     /// Reusable evaluation buffers (no allocation on the hot path).
     type Scratch: Send;
     /// Final output extracted from a lane.
@@ -107,6 +121,36 @@ pub trait StateFamily: Sized {
         t: f64,
         stage: Stage,
     );
+
+    /// Structural lane equality — the parallel-in-time fixed-point test.
+    /// Compares exactly the fields that determine future evolution;
+    /// per-step scratch-like buffers (`comb`, `scored`) are excluded.
+    fn lane_eq(a: &Self::Lane, b: &Self::Lane) -> bool;
+
+    /// Evaluate one sweep's worth of time-slices, each at its own time
+    /// (time-slices as lanes — the parallel-in-time analogue of
+    /// [`StateFamily::eval_batch`]).  Every row written must be
+    /// bit-identical to the corresponding per-slice [`StateFamily::eval`]
+    /// call: the PIT driver's exactness guarantee rests on it.  The
+    /// default loops `eval`; the masked family overrides with one
+    /// [`ScoreSource::probs_masked_slices`] call.
+    fn eval_slices(ctx: &Self::Ctx, reqs: &mut [SliceEval<'_, Self>]) {
+        for r in reqs.iter_mut() {
+            if let Some((lane, t)) = r.stage1 {
+                Self::eval(ctx, lane, r.sc, t, Stage::One);
+            }
+            if let Some((lane, t)) = r.stage2 {
+                Self::eval(ctx, lane, r.sc, t, Stage::Two);
+            }
+        }
+    }
+
+    /// First-order stand-in for a missing corrector eval during a
+    /// speculative PIT replay: copy the stage-1 rates over the stage-2
+    /// buffer (μ* := μ).  Only ever used beyond the exactness frontier —
+    /// speculated steps are re-verified against real evals before they
+    /// can enter the converged prefix.
+    fn stage2_proxy(sc: &mut Self::Scratch);
 
     /// Terminal denoise at the early-stop time (masked: sample still-masked
     /// dims from their conditional, one NFE when it fires; toy: no-op).
@@ -182,6 +226,14 @@ pub trait SolverKernel<F: StateFamily> {
     /// Parallel decoding counts its own steps (a skipped reveal is not a
     /// step); every other scheme lets the driver count windows.
     fn counts_own_steps(&self) -> bool {
+        false
+    }
+
+    /// Whether `stage1` destroys the stage-1 eval rows in the scratch
+    /// (the masked trapezoidal stage compacts survivor rows in place).
+    /// The PIT driver re-evaluates such slices before replaying them
+    /// again; everything else reuses the cached rows across sweeps.
+    fn stage1_consumes_eval(&self) -> bool {
         false
     }
 
@@ -360,6 +412,39 @@ impl<S: ScoreSource + ?Sized> StateFamily for MaskedFamily<S> {
         if !reqs.is_empty() {
             ctx.probs_masked_batch(&reqs, t, &mut outs);
         }
+    }
+
+    fn lane_eq(a: &MaskedLane, b: &MaskedLane) -> bool {
+        // `comb`/`scored` are per-step scratch; the evolution-determining
+        // state is the token buffer plus the two index lists.
+        a.tokens == b.tokens && a.active == b.active && a.sub == b.sub
+    }
+
+    fn eval_slices(ctx: &S, reqs: &mut [SliceEval<'_, Self>]) {
+        let v = ctx.vocab();
+        let mut rows: Vec<(&[Tok], &[usize], f64)> = Vec::new();
+        let mut outs: Vec<&mut [f64]> = Vec::new();
+        for r in reqs.iter_mut() {
+            let sc = &mut *r.sc;
+            if let Some((lane, t)) = r.stage1 {
+                let m = lane.active.len();
+                rows.push((lane.tokens.as_slice(), lane.active.as_slice(), t));
+                outs.push(&mut sc.probs[..m * v]);
+            }
+            if let Some((lane, t)) = r.stage2 {
+                let m2 = lane.sub.len();
+                rows.push((lane.tokens.as_slice(), lane.sub.as_slice(), t));
+                outs.push(&mut sc.probs_star[..m2 * v]);
+            }
+        }
+        if !rows.is_empty() {
+            ctx.probs_masked_slices(&rows, &mut outs);
+        }
+    }
+
+    fn stage2_proxy(sc: &mut MaskedScratch) {
+        let n = sc.probs.len();
+        sc.probs_star[..n].copy_from_slice(&sc.probs[..n]);
     }
 
     fn finalize<R: Rng>(
@@ -596,6 +681,24 @@ impl Rk2Kernel {
     }
 }
 
+/// θ-midpoint: stage 1 builds y* by a θΔ τ-leap (the RK-2 predictor),
+/// stage 2 restarts from y_{s_n} driven by the midpoint rates μ*_ρ alone
+/// (combine weight ≡ 1) over the full step.  At θ = 1/2 the RK-2 combine
+/// weight 1/(2θ) is exactly 1, so this scheme coincides with
+/// [`Rk2Kernel`] bit for bit — the golden-parity anchor — and that is
+/// also its only second-order point.
+pub struct MidpointKernel {
+    pub theta: f64,
+}
+
+impl MidpointKernel {
+    /// The predictor leap θΔ must stay inside the window: θ in (0, 1].
+    pub fn new(theta: f64) -> Self {
+        assert!(theta > 0.0 && theta <= 1.0, "midpoint needs theta in (0,1]");
+        Self { theta }
+    }
+}
+
 /// MaskGIT-style parallel decoding with the arccos schedule (App. D.4).
 pub struct PdKernel;
 
@@ -634,6 +737,10 @@ one_stage_masked_kernel!(TweedieKernel, Gate::Exact);
 impl<S: ScoreSource + ?Sized> SolverKernel<MaskedFamily<S>> for TrapezoidalKernel {
     fn stages(&self) -> usize {
         2
+    }
+
+    fn stage1_consumes_eval(&self) -> bool {
+        true // stage 1 compacts survivor rows of `probs` in place
     }
 
     fn stage2_time(&self, t: f64, t_next: f64) -> f64 {
@@ -895,6 +1002,146 @@ impl<S: ScoreSource + ?Sized> SolverKernel<MaskedFamily<S>> for Rk2Kernel {
     }
 }
 
+impl<S: ScoreSource + ?Sized> SolverKernel<MaskedFamily<S>> for MidpointKernel {
+    fn stages(&self) -> usize {
+        2
+    }
+
+    fn stage2_time(&self, t: f64, t_next: f64) -> f64 {
+        t - self.theta * (t - t_next)
+    }
+
+    fn wants_stage2(&self, lane: &MaskedLane) -> bool {
+        !lane.sub.is_empty()
+    }
+
+    /// Identical to the RK-2 predictor: τ-leap for θΔ building y* in place,
+    /// stage-1 rows staying aligned with `active`, `sub` collecting the
+    /// dims still masked in y*.
+    fn stage1<R: Rng>(
+        &self,
+        _ctx: &S,
+        meta: &StepMeta,
+        lane: &mut MaskedLane,
+        sc: &mut MaskedScratch,
+        stats: &mut GenStats,
+        rng: &mut R,
+    ) {
+        debug_assert!(!lane.active.is_empty());
+        stats.nfe += 1;
+        let (t, dt) = (meta.t, meta.t - meta.t_next);
+        let v = lane.comb.len();
+        let p1 = 1.0 - (-(self.theta * dt) / t).exp();
+        lane.sub.clear();
+        for k in 0..lane.active.len() {
+            let i = lane.active[k];
+            let mut still_masked = true;
+            if rng.gen_f64() < p1 {
+                if let Some(tok) = categorical(rng, &sc.probs[k * v..(k + 1) * v]) {
+                    lane.tokens[i] = tok as Tok;
+                    still_masked = false;
+                }
+            }
+            if still_masked {
+                lane.sub.push(i);
+            }
+        }
+    }
+
+    /// The RK-2 restart with combine weight pinned to 1: every originally
+    /// masked dim is re-masked and gated by the midpoint rates μ*_ρ alone
+    /// over the full step (dims revealed in stage 1 contribute μ* = 0 — the
+    /// same convention as RK-2's non-star rows).  The float expressions
+    /// keep the RK-2 shape so θ = 1/2 coincides with [`Rk2Kernel`] bitwise.
+    fn stage2<R: Rng>(
+        &self,
+        ctx: &S,
+        meta: &StepMeta,
+        lane: &mut MaskedLane,
+        sc: &mut MaskedScratch,
+        stats: &mut GenStats,
+        rng: &mut R,
+    ) {
+        if !lane.sub.is_empty() {
+            stats.nfe += 1;
+        }
+        let theta = self.theta;
+        let (t, dt) = (meta.t, meta.t - meta.t_next);
+        let rho = t - theta * dt;
+        let v = lane.comb.len();
+        let mask = ctx.mask_id();
+        let w_coef = 1.0;
+        for &i in lane.active.iter() {
+            lane.tokens[i] = mask;
+        }
+        let m = lane.active.len();
+        let mut j = 0usize; // pointer into sub (dims masked in y*)
+        let mut w = 0usize; // in-place retain cursor
+        for k in 0..m {
+            let i = lane.active[k];
+            let star = j < lane.sub.len() && lane.sub[j] == i;
+            let mut tot = 0.0;
+            for c in 0..v {
+                let mu_t = sc.probs[k * v + c] / t;
+                let mu_star = if star {
+                    sc.probs_star[j * v + c] / rho
+                } else {
+                    0.0
+                };
+                let mc = ((1.0 - w_coef) * mu_t + w_coef * mu_star).max(0.0);
+                lane.comb[c] = mc;
+                tot += mc;
+            }
+            if star {
+                j += 1;
+            }
+            let p2 = 1.0 - (-tot * dt).exp();
+            let mut still_masked = true;
+            if rng.gen_f64() < p2 {
+                if let Some(tok) = categorical(rng, &lane.comb) {
+                    lane.tokens[i] = tok as Tok;
+                    still_masked = false;
+                }
+            }
+            if still_masked {
+                lane.active[w] = i;
+                w += 1;
+            }
+        }
+        lane.active.truncate(w);
+        lane.sub.clear();
+    }
+
+    fn step_error(&self, ctx: &S, meta: &StepMeta, lane: &MaskedLane, sc: &MaskedScratch) -> f64 {
+        let theta = self.theta;
+        let (t, dt) = (meta.t, meta.t - meta.t_next);
+        let rho = t - theta * dt;
+        let v = ctx.vocab();
+        let mu_tot = 1.0 / t;
+        let w_coef = 1.0;
+        let mut err = 0.0f64;
+        let mut j = 0usize;
+        for (k, &i) in lane.active.iter().enumerate() {
+            let star = j < lane.sub.len() && lane.sub[j] == i;
+            let mut tot = 0.0;
+            for c in 0..v {
+                let mu_t = sc.probs[k * v + c] / t;
+                let mu_star = if star {
+                    sc.probs_star[j * v + c] / rho
+                } else {
+                    0.0
+                };
+                tot += ((1.0 - w_coef) * mu_t + w_coef * mu_star).max(0.0);
+            }
+            if star {
+                j += 1;
+            }
+            err = err.max(rk2_gate_discrepancy(dt, mu_tot, tot));
+        }
+        err
+    }
+}
+
 /// MaskGIT parallel-decoding schedule (App. D.4): how many dims to reveal
 /// at step n of n_steps given m currently masked, plus the remaining-time
 /// temperature used for both the eval and the Gumbel noise.
@@ -1044,6 +1291,14 @@ impl StateFamily for ToyFamily {
                 Self::eval(ctx, &lane.state, sc, t, stage);
             }
         }
+    }
+
+    fn lane_eq(a: &ToyLane, b: &ToyLane) -> bool {
+        a.x == b.x && a.y_star == b.y_star
+    }
+
+    fn stage2_proxy(sc: &mut ToyScratch) {
+        sc.mu_star.copy_from_slice(&sc.mu);
     }
 
     fn finalize<R: Rng>(
@@ -1305,6 +1560,67 @@ impl SolverKernel<ToyFamily> for Rk2Kernel {
     }
 }
 
+impl SolverKernel<ToyFamily> for MidpointKernel {
+    fn stages(&self) -> usize {
+        2
+    }
+
+    fn stage2_time(&self, t: f64, t_next: f64) -> f64 {
+        t - self.theta * (t - t_next)
+    }
+
+    fn wants_stage2(&self, _lane: &ToyLane) -> bool {
+        true
+    }
+
+    fn stage1<R: Rng>(
+        &self,
+        ctx: &ToyModel,
+        meta: &StepMeta,
+        lane: &mut ToyLane,
+        sc: &mut ToyScratch,
+        stats: &mut GenStats,
+        rng: &mut R,
+    ) {
+        stats.nfe += 1;
+        let dt = meta.t - meta.t_next;
+        lane.y_star = toy_sub_step(ctx.n_states(), lane.x, &sc.mu, self.theta * dt, true, rng);
+    }
+
+    /// RK-2's full-step restart from the original state, with the combine
+    /// weight pinned to 1 (μ*_ρ alone drives the jump; the expressions keep
+    /// the RK-2 shape so θ = 1/2 coincides with [`Rk2Kernel`] bitwise).
+    fn stage2<R: Rng>(
+        &self,
+        ctx: &ToyModel,
+        meta: &StepMeta,
+        lane: &mut ToyLane,
+        sc: &mut ToyScratch,
+        stats: &mut GenStats,
+        rng: &mut R,
+    ) {
+        stats.nfe += 1;
+        let dt = meta.t - meta.t_next;
+        let s = ctx.n_states();
+        let w = 1.0;
+        for nu in 0..s {
+            sc.comb[nu] = ((1.0 - w) * sc.mu[nu] + w * sc.mu_star[nu]).max(0.0);
+        }
+        lane.x = toy_sub_step(s, lane.x, &sc.comb, dt, true, rng);
+    }
+
+    fn step_error(&self, ctx: &ToyModel, meta: &StepMeta, _lane: &ToyLane, sc: &ToyScratch) -> f64 {
+        let dt = meta.t - meta.t_next;
+        let w = 1.0;
+        let tot_mu: f64 = sc.mu.iter().sum();
+        let mut tot_comb = 0.0;
+        for nu in 0..ctx.n_states() {
+            tot_comb += ((1.0 - w) * sc.mu[nu] + w * sc.mu_star[nu]).max(0.0);
+        }
+        rk2_gate_discrepancy(dt, tot_mu, tot_comb)
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Dispatch
 // ---------------------------------------------------------------------------
@@ -1334,6 +1650,10 @@ macro_rules! dispatch_masked_kernel {
             }
             $crate::solvers::Solver::Rk2 { theta } => {
                 let $k = $crate::solvers::kernel::Rk2Kernel::new(theta);
+                $body
+            }
+            $crate::solvers::Solver::Midpoint { theta } => {
+                let $k = $crate::solvers::kernel::MidpointKernel::new(theta);
                 $body
             }
             $crate::solvers::Solver::ParallelDecoding => {
@@ -1373,6 +1693,10 @@ macro_rules! dispatch_toy_kernel {
                 let $k = $crate::solvers::kernel::Rk2Kernel::new(theta);
                 $body
             }
+            $crate::solvers::Solver::Midpoint { theta } => {
+                let $k = $crate::solvers::kernel::MidpointKernel::new(theta);
+                $body
+            }
             $crate::solvers::Solver::ParallelDecoding => {
                 panic!("parallel decoding is undefined for the toy model")
             }
@@ -1394,9 +1718,12 @@ mod tests {
         assert!(std::panic::catch_unwind(|| TrapezoidalKernel::new(0.0)).is_err());
         assert!(std::panic::catch_unwind(|| Rk2Kernel::new(0.0)).is_err());
         assert!(std::panic::catch_unwind(|| Rk2Kernel::new(1.5)).is_err());
+        assert!(std::panic::catch_unwind(|| MidpointKernel::new(0.0)).is_err());
+        assert!(std::panic::catch_unwind(|| MidpointKernel::new(1.1)).is_err());
         // Library-level bounds are permissive past 1/2 (Fig. 5 sweeps it).
         let _ = Rk2Kernel::new(0.9);
         let _ = TrapezoidalKernel::new(0.5);
+        let _ = MidpointKernel::new(1.0);
     }
 
     #[test]

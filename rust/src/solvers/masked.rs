@@ -160,6 +160,90 @@ pub fn generate_batch_ctl<S: ScoreSource + ?Sized>(
     })
 }
 
+/// [`generate_batch_ctl`] with an optional per-window progress sink (the
+/// driver heartbeat streamed as `progress` frames on `generate_stream`).
+pub fn generate_batch_ctl_obs<S: ScoreSource + ?Sized>(
+    score: &S,
+    solver: Solver,
+    grid: &[f64],
+    seeds: &[u64],
+    cancel: &CancelToken,
+    obs: Option<&mut dyn FnMut(driver::Progress)>,
+) -> (Vec<(Vec<Tok>, GenStats)>, bool) {
+    assert!(
+        !matches!(solver, Solver::Exact),
+        "exact batches dispatch through exact_batch_ctl"
+    );
+    dispatch_masked_kernel!(solver, k => {
+        let (results, _, completed) = driver::run_batch_ctl_obs::<MaskedFamily<S>, _>(
+            score,
+            &k,
+            Schedule::Fixed(grid),
+            seeds,
+            cancel,
+            obs,
+        );
+        (results, completed)
+    })
+}
+
+/// Parallel-in-time generation of one sequence (see
+/// [`crate::solvers::pit`]): iterate the whole grid to the sequential
+/// fixed point, evaluating every stale time-slice in one batched score
+/// call per sweep.  With `tol = 0` and `sweeps_max ≥ steps` the output is
+/// bit-identical to [`generate`] with the same stream.
+/// [`Solver::Exact`] owns its jump times, so it has no grid to iterate.
+pub fn pit_generate<S: ScoreSource + ?Sized>(
+    score: &S,
+    solver: Solver,
+    grid: &[f64],
+    cfg: &crate::solvers::pit::PitCfg,
+    rng: &mut Xoshiro256,
+) -> crate::solvers::pit::PitLaneOut<Vec<Tok>> {
+    assert!(
+        !matches!(solver, Solver::Exact),
+        "exact simulation has no grid to iterate parallel-in-time"
+    );
+    dispatch_masked_kernel!(solver, k => {
+        crate::solvers::pit::run_pit_single::<MaskedFamily<S>, _>(
+            score,
+            &k,
+            grid,
+            cfg,
+            &CancelToken::never(),
+            None,
+            rng,
+        )
+    })
+}
+
+/// Parallel-in-time lock-step batch — the coordinator's dispatch target
+/// for `SolverCfg::Pit` plans.  One batched slice evaluation per sweep
+/// covers every running lane; lane b draws from
+/// `Xoshiro256::seed_from_u64(seeds[b])` and is bit-identical to
+/// [`pit_generate`] with that stream.  The shared token is polled once
+/// per sweep (a fired token yields `Cancelled` partials: the last exact
+/// prefix of each lane); `obs` receives one heartbeat per sweep.
+pub fn pit_generate_batch_ctl<S: ScoreSource + ?Sized>(
+    score: &S,
+    solver: Solver,
+    grid: &[f64],
+    seeds: &[u64],
+    cfg: &crate::solvers::pit::PitCfg,
+    cancel: &CancelToken,
+    obs: Option<&mut dyn FnMut(driver::Progress)>,
+) -> Vec<crate::solvers::pit::PitLaneOut<Vec<Tok>>> {
+    assert!(
+        !matches!(solver, Solver::Exact),
+        "exact simulation has no grid to iterate parallel-in-time"
+    );
+    dispatch_masked_kernel!(solver, k => {
+        crate::solvers::pit::run_pit_batch::<MaskedFamily<S>, _>(
+            score, &k, grid, cfg, cancel, obs, seeds,
+        )
+    })
+}
+
 fn validate_adaptive(solver: Solver, delta: f64) {
     assert!(
         solver.nfe_per_step() == 2,
@@ -233,6 +317,31 @@ pub fn generate_batch_adaptive_ctl<S: ScoreSource + ?Sized>(
             Schedule::Adaptive { ctl, delta },
             seeds,
             cancel,
+        )
+    })
+}
+
+/// [`generate_batch_adaptive_ctl`] with an optional per-window progress
+/// sink (total is unknown for adaptive runs, so the heartbeat reports
+/// `total = 0`).
+pub fn generate_batch_adaptive_ctl_obs<S: ScoreSource + ?Sized>(
+    score: &S,
+    solver: Solver,
+    ctl: StepController,
+    delta: f64,
+    seeds: &[u64],
+    cancel: &CancelToken,
+    obs: Option<&mut dyn FnMut(driver::Progress)>,
+) -> (Vec<(Vec<Tok>, GenStats)>, AdaptiveTrace, bool) {
+    validate_adaptive(solver, delta);
+    dispatch_masked_kernel!(solver, k => {
+        driver::run_batch_ctl_obs::<MaskedFamily<S>, _>(
+            score,
+            &k,
+            Schedule::Adaptive { ctl, delta },
+            seeds,
+            cancel,
+            obs,
         )
     })
 }
@@ -362,6 +471,7 @@ mod tests {
             Solver::Tweedie,
             Solver::Trapezoidal { theta: 0.5 },
             Solver::Rk2 { theta: 0.3 },
+            Solver::Midpoint { theta: 0.5 },
             Solver::ParallelDecoding,
             Solver::Exact,
         ]
@@ -399,6 +509,7 @@ mod tests {
             Solver::Tweedie,
             Solver::Trapezoidal { theta: 0.5 },
             Solver::Rk2 { theta: 0.3 },
+            Solver::Midpoint { theta: 0.5 },
         ] {
             let (toks, stats) = generate(&o, s, &grid, &mut rng);
             let bound = 20 * s.nfe_per_step() + 1;
@@ -699,6 +810,27 @@ mod tests {
             generate_adaptive(&o, Solver::Exact, StepController::new(cfg, 0.1), 1e-3, &mut rng)
         }));
         assert!(res.is_err());
+    }
+
+    #[test]
+    fn pit_matches_sequential_generate() {
+        use crate::solvers::pit::{PitCfg, PitOutcome};
+        let o = oracle();
+        let grid = masked_uniform(12, 1e-3);
+        let cfg = PitCfg::new(12, 0.0);
+        for s in [
+            Solver::TauLeaping,
+            Solver::Rk2 { theta: 0.5 },
+            Solver::Midpoint { theta: 0.5 },
+        ] {
+            let mut sr = Xoshiro256::seed_from_u64(21);
+            let (want, _) = generate(&o, s, &grid, &mut sr);
+            let mut pr = Xoshiro256::seed_from_u64(21);
+            let out = pit_generate(&o, s, &grid, &cfg, &mut pr);
+            assert_eq!(out.outcome, PitOutcome::Exact, "{}", s.name());
+            assert_eq!(out.out, want, "{}", s.name());
+            assert!(out.sweeps <= 12, "{}", s.name());
+        }
     }
 
     #[test]

@@ -36,6 +36,16 @@
 //!       fixed-grid + adaptive schedules (schedule::StepController),
 //!       lock-step batch lanes + shared-dt voting, NFE/GenStats
 //!       accounting, RNG stream discipline, terminal finalize.
+//!
+//!   pit::run_pit_single / run_pit_batch ─  the OTHER driver (parallel
+//!       in time): holds a candidate trajectory over the whole resolved
+//!       grid, evaluates every time-slice in one batched score call per
+//!       sweep (time-slices as lanes), applies the SAME SolverKernel
+//!       per-step updates against the previous iterate with frozen
+//!       per-step RNG streams, and Picard-iterates to the fixed point —
+//!       which IS the sequential trajectory, bit for bit, on the same
+//!       seed.  Latency becomes sweeps × one-slice latency instead of
+//!       steps × one-step latency.
 //! ```
 //!
 //! [`masked`] and [`toy`] keep the historical entry points as thin shims
@@ -74,6 +84,7 @@
 pub mod driver;
 pub mod kernel;
 pub mod masked;
+pub mod pit;
 pub mod toy;
 
 /// Time discretisations now live in the [`crate::schedule`] subsystem;
@@ -90,6 +101,12 @@ pub enum Solver {
     Trapezoidal { theta: f64 },
     /// Practical θ-RK-2 (Alg. 4); second-order for θ in (0, 1/2] (Thm. 5.5).
     Rk2 { theta: f64 },
+    /// θ-midpoint: a θΔ predictor leap followed by a pure midpoint-rate
+    /// gate (the full window driven by μ* alone, weight ≡ 1).  Coincides
+    /// with θ-RK-2 at θ = 1/2 (where the RK-2 combine weight 1/(2θ) is 1),
+    /// which is also its only second-order point; other θ trade accuracy
+    /// for a cheaper-to-tune single-rate corrector.
+    Midpoint { theta: f64 },
     /// MaskGIT-style parallel decoding with the arccos schedule (App. D.4).
     ParallelDecoding,
     /// Exact simulation (Sec. 3.1): first-hitting for the masked family,
@@ -105,7 +122,7 @@ impl Solver {
     /// is realized, not planned.
     pub fn nfe_per_step(&self) -> usize {
         match self {
-            Solver::Trapezoidal { .. } | Solver::Rk2 { .. } => 2,
+            Solver::Trapezoidal { .. } | Solver::Rk2 { .. } | Solver::Midpoint { .. } => 2,
             _ => 1,
         }
     }
@@ -122,6 +139,7 @@ impl Solver {
             Solver::Tweedie => "tweedie",
             Solver::Trapezoidal { .. } => "theta-trapezoidal",
             Solver::Rk2 { .. } => "theta-rk2",
+            Solver::Midpoint { .. } => "theta-midpoint",
             Solver::ParallelDecoding => "parallel-decoding",
             Solver::Exact => "exact",
         }
@@ -136,6 +154,7 @@ impl Solver {
             Solver::Tweedie => "tweedie".into(),
             Solver::Trapezoidal { theta } => format!("trapezoidal:{theta}"),
             Solver::Rk2 { theta } => format!("rk2:{theta}"),
+            Solver::Midpoint { theta } => format!("midpoint:{theta}"),
             Solver::ParallelDecoding => "parallel".into(),
             Solver::Exact => "exact".into(),
         }
@@ -174,6 +193,15 @@ impl Solver {
                 }
                 Solver::Rk2 { theta: th }
             }
+            "midpoint" => {
+                if !(th > 0.0 && th <= 1.0) {
+                    anyhow::bail!(
+                        "midpoint theta {th} outside (0, 1] — predictor leap must stay inside \
+                         the window (second-order at theta = 1/2 only)"
+                    );
+                }
+                Solver::Midpoint { theta: th }
+            }
             "parallel" | "parallel-decoding" => Solver::ParallelDecoding,
             "exact" | "fhs" | "first-hitting" => Solver::Exact,
             _ => anyhow::bail!("unknown solver {s:?}"),
@@ -199,6 +227,7 @@ mod tests {
         assert_eq!(Solver::Euler.nfe_per_step(), 1);
         assert_eq!(Solver::Trapezoidal { theta: 0.5 }.nfe_per_step(), 2);
         assert_eq!(Solver::Rk2 { theta: 0.3 }.nfe_per_step(), 2);
+        assert_eq!(Solver::Midpoint { theta: 0.5 }.nfe_per_step(), 2);
         assert_eq!(Solver::Exact.nfe_per_step(), 1);
         assert_eq!(Solver::Trapezoidal { theta: 0.5 }.steps_for_nfe(128), 64);
         assert_eq!(Solver::TauLeaping.steps_for_nfe(128), 128);
@@ -213,6 +242,18 @@ mod tests {
             Solver::Trapezoidal { theta: 0.4 }
         );
         assert_eq!(Solver::parse("rk2:0.25").unwrap(), Solver::Rk2 { theta: 0.25 });
+        assert_eq!(
+            Solver::parse("midpoint").unwrap(),
+            Solver::Midpoint { theta: 0.5 }
+        );
+        assert_eq!(
+            Solver::parse("midpoint:0.75").unwrap(),
+            Solver::Midpoint { theta: 0.75 }
+        );
+        assert_eq!(
+            Solver::parse(&Solver::Midpoint { theta: 0.25 }.spec_string()).unwrap(),
+            Solver::Midpoint { theta: 0.25 }
+        );
         assert_eq!(Solver::parse("tau").unwrap(), Solver::TauLeaping);
         assert_eq!(Solver::parse("exact").unwrap(), Solver::Exact);
         assert_eq!(Solver::parse("fhs").unwrap(), Solver::Exact);
@@ -233,8 +274,15 @@ mod tests {
             assert!(format!("{err}").contains("theta"), "{bad}: {err}");
         }
         assert_eq!(Solver::parse("rk2:0.5").unwrap(), Solver::Rk2 { theta: 0.5 });
+        // Midpoint: the predictor leap θΔ must stay inside the window.
+        for bad in ["midpoint:0", "midpoint:1.1", "midpoint:-0.5"] {
+            let err = Solver::parse(bad).unwrap_err();
+            assert!(format!("{err}").contains("theta"), "{bad}: {err}");
+        }
+        assert_eq!(Solver::parse("midpoint:1").unwrap(), Solver::Midpoint { theta: 1.0 });
         // NaN never passes a range check.
         assert!(Solver::parse("trapezoidal:nan").is_err());
         assert!(Solver::parse("rk2:nan").is_err());
+        assert!(Solver::parse("midpoint:nan").is_err());
     }
 }

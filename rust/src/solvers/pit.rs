@@ -1,0 +1,723 @@
+//! Parallel-in-time (PIT) sampling: a Picard/fixed-point driver that
+//! decouples serving latency from NFE.
+//!
+//! The sequential drivers ([`crate::solvers::driver`]) pay
+//! `steps × one-eval latency` of wall clock no matter how well requests
+//! co-batch, because window i+1 cannot be evaluated before window i
+//! commits.  This driver instead holds a **candidate trajectory** over the
+//! whole resolved grid and iterates it to the sequential fixed point:
+//!
+//! 1. **Sweep phase 1 (batched eval).**  Every time-slice whose cached
+//!    evaluation is stale is evaluated in ONE
+//!    [`StateFamily::eval_slices`] call — time-slices as lanes, each at
+//!    its own forward time (the masked family funnels this into a single
+//!    [`crate::score::ScoreSource::probs_masked_slices`] call, across all
+//!    request lanes of a batch at once).  Wall clock per sweep is one
+//!    batched-eval latency, not `steps` of them.
+//! 2. **Sweep phase 2 (replay).**  A cheap, eval-free replay threads the
+//!    kernel's per-step updates through the candidate trajectory with the
+//!    *sequential* RNG stream: step i applies against the cached
+//!    evaluation when the replayed lane still **binds** to the slice
+//!    snapshot that was evaluated (structural [`StateFamily::lane_eq`]),
+//!    heals the snapshot when it does not (so next sweep's batch
+//!    evaluates the right state), and past the first missing corrector
+//!    evaluation continues **speculatively** with the first-order proxy
+//!    μ* := μ ([`StateFamily::stage2_proxy`]).  Speculation is what makes
+//!    the fixed point cascade: it pushes plausible downstream states into
+//!    the snapshots so the NEXT sweep's batched evaluations bind many
+//!    steps deep.
+//!
+//! The **exact prefix** — the first `prefix` steps — is the invariant
+//! backbone: a step enters it only when it was applied against real,
+//! bound evaluations with the threaded RNG stream, starting from a state
+//! already in the prefix.  By induction the prefix trajectory satisfies
+//! exactly the sequential update equations, so at `prefix == n` the
+//! output (and the RNG stream handed to the terminal
+//! [`StateFamily::finalize`]) is **bit-identical to
+//! [`crate::solvers::driver::run_single`] on the same seed and grid** —
+//! the repo's golden-parity discipline, extended to a whole execution
+//! mode.  A small per-sweep inline-eval budget lets the replay extend the
+//! prefix across a step whose corrector evaluation is missing; because
+//! the boundary step's predictor is always evaluated by phase 1, the
+//! prefix advances by at least one step every sweep — **sweeps ≤ steps,
+//! unconditionally**, so the driver can never spin, and two-stage
+//! kernels converge in at most NFE/2 sequential rounds.
+//!
+//! With `tol > 0` the driver also accepts an *approximate* fixed point:
+//! a replay that reaches the end with zero state heals (the trajectory is
+//! `lane_eq`-stationary) and every embedded per-step error estimate
+//! ([`SolverKernel::step_error`], the PR 2 estimator) at or below `tol`
+//! along the speculated tail.  Such a sample is NOT bit-identical to the
+//! sequential driver — it traded corrector evaluations for sweeps — which
+//! is exactly the latency/quality dial the `tol` knob exposes.
+//!
+//! Accounting: the driver charges NFE itself — one per slice-stage
+//! evaluated in phase 1, one per inline replay evaluation, plus the
+//! terminal finalize — and hands the kernels a discard-only stats sink so
+//! their internal charging cannot double-count.  Total NFE therefore
+//! *exceeds* the sequential run's (heals re-evaluate, speculation wastes
+//! some work): PIT buys latency with compute, never the reverse.
+//! `stats.steps` reports completed windows (`n` on convergence, the exact
+//! prefix length on a partial return) for every kernel, including
+//! parallel decoding, whose sequential runs count reveal rounds instead.
+
+use crate::schedule::grid::is_valid_grid;
+use crate::solvers::driver::Progress;
+use crate::solvers::kernel::{SliceEval, SolverKernel, Stage, StateFamily, StepMeta};
+use crate::solvers::GenStats;
+use crate::util::cancel::CancelToken;
+use crate::util::rng::Xoshiro256;
+
+/// Fixed-point iteration knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct PitCfg {
+    /// Hard sweep cap; hitting it returns a typed partial result (the
+    /// last exact prefix).  `sweeps_max ≥ steps` guarantees exact
+    /// convergence, so that is the spec layer's default.
+    pub sweeps_max: usize,
+    /// Approximate-acceptance threshold for the embedded error estimate;
+    /// `0.0` demands the exact fixed point (bit-parity with the
+    /// sequential driver).
+    pub tol: f64,
+}
+
+impl PitCfg {
+    pub fn new(sweeps_max: usize, tol: f64) -> Self {
+        assert!(sweeps_max >= 1, "pit needs sweeps_max >= 1");
+        assert!(tol.is_finite() && tol >= 0.0, "pit needs finite tol >= 0");
+        Self { sweeps_max, tol }
+    }
+}
+
+/// How a PIT lane ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PitOutcome {
+    /// Exact fixed point: bit-identical to the sequential driver.
+    Exact,
+    /// Approximate fixed point accepted under `tol` (`tol > 0` only).
+    Tol,
+    /// `sweeps_max` hit; output is the last exact prefix (partial).
+    SweepLimit,
+    /// Cancel token fired between sweeps; output is the last exact
+    /// prefix (partial).
+    Cancelled,
+}
+
+impl PitOutcome {
+    /// Whether the convergence criterion fired (exact or within-tol).
+    pub fn converged(self) -> bool {
+        matches!(self, PitOutcome::Exact | PitOutcome::Tol)
+    }
+
+    /// Whether the output is a complete sample (finalize ran); `false`
+    /// means partial, matching the sequential drivers' completion flag.
+    pub fn complete(self) -> bool {
+        self.converged()
+    }
+}
+
+/// One lane's result: output, PIT-charged statistics, sweeps consumed
+/// (the *sequential-round* count — the latency unit PIT minimises), and
+/// how the lane ended.
+#[derive(Debug)]
+pub struct PitLaneOut<O> {
+    pub out: O,
+    pub stats: GenStats,
+    pub sweeps: usize,
+    pub outcome: PitOutcome,
+}
+
+/// Per-sweep inline evaluations the replay may spend while still exact.
+/// One is reserved for the boundary step's corrector (which is what
+/// guarantees the prefix advances every sweep); the second lets the
+/// frontier jump an extra step when the cascade is warm.
+const INLINE_BUDGET: usize = 2;
+
+/// One request lane's full PIT state.
+struct PitLane<F: StateFamily> {
+    /// Candidate lane ENTERING step i (the slice snapshot phase 1
+    /// evaluates).  `states[..prefix]` is the exact sequential prefix.
+    states: Vec<F::Lane>,
+    /// Candidate post-predictor lane of step i (the corrector eval
+    /// point), once one has been proposed.
+    mids: Vec<Option<F::Lane>>,
+    scratch: Vec<F::Scratch>,
+    /// `scratch[i].probs` holds the Stage::One eval of the CURRENT
+    /// `states[i]` (cleared on heal and by eval-consuming stage-1s).
+    ev1: Vec<bool>,
+    /// `scratch[i].probs_star` holds the Stage::Two eval of the CURRENT
+    /// `mids[i]`.
+    mid_ok: Vec<bool>,
+    /// Steps known exact; `rng` is the sequential stream positioned
+    /// right after step `prefix - 1`.
+    prefix: usize,
+    rng: Xoshiro256,
+    stats: GenStats,
+    sweeps: usize,
+    status: Option<PitOutcome>,
+    /// Converged final lane + stream (post-finalize once the core's
+    /// epilogue has run).
+    fin: Option<(F::Lane, Xoshiro256)>,
+}
+
+fn pit_lane<F: StateFamily>(ctx: &F::Ctx, n: usize, mut rng: Xoshiro256) -> PitLane<F> {
+    // Same stream discipline as the sequential drivers: init_lane draws
+    // first (the toy family samples its stationary start here).
+    let init = F::init_lane(ctx, &mut rng);
+    let scratch = (0..n.max(1)).map(|_| F::new_scratch(ctx)).collect();
+    if n == 0 {
+        // Degenerate grid: nothing to iterate, the init lane is the
+        // exact fixed point.
+        return PitLane {
+            states: Vec::new(),
+            mids: Vec::new(),
+            scratch,
+            ev1: Vec::new(),
+            mid_ok: Vec::new(),
+            prefix: 0,
+            rng: rng.clone(),
+            stats: GenStats::default(),
+            sweeps: 0,
+            status: Some(PitOutcome::Exact),
+            fin: Some((init, rng)),
+        };
+    }
+    PitLane {
+        states: vec![init; n],
+        mids: vec![None; n],
+        scratch,
+        ev1: vec![false; n],
+        mid_ok: vec![false; n],
+        prefix: 0,
+        rng,
+        stats: GenStats::default(),
+        sweeps: 0,
+        status: None,
+        fin: None,
+    }
+}
+
+/// Phase-2 replay for one lane: thread the kernel through the candidate
+/// trajectory from the exact prefix, binding to cached evaluations,
+/// healing stale snapshots, and speculating past missing correctors.
+fn replay<F: StateFamily, K: SolverKernel<F>>(
+    ctx: &F::Ctx,
+    kernel: &K,
+    metas: &[StepMeta],
+    cfg: &PitCfg,
+    l: &mut PitLane<F>,
+) {
+    let n = metas.len();
+    let mut lane = l.states[l.prefix].clone();
+    let mut rng = l.rng.clone();
+    let mut exact = true;
+    let mut budget = INLINE_BUDGET;
+    let mut state_heals = 0usize;
+    let mut max_err = 0.0f64;
+    let mut reached_end = true;
+    // Kernels charge NFE internally; the driver charges its own (one per
+    // evaluation actually performed), so applies get a discard sink.
+    let mut discard = GenStats::default();
+
+    for i in l.prefix..n {
+        let meta = &metas[i];
+        // Binding is judged against the snapshot BEFORE healing: a heal
+        // means phase 1 evaluated a state this replay no longer visits.
+        let matches = F::lane_eq(&lane, &l.states[i]);
+        let bound1 = matches && l.ev1[i];
+        if !matches {
+            l.states[i] = lane.clone();
+            l.ev1[i] = false;
+            state_heals += 1;
+        }
+        if !kernel.wants_stage1(&lane, meta) {
+            // No-op window (finished lane / empty reveal): draws nothing,
+            // exactly like the sequential step.
+            if exact {
+                l.prefix = i + 1;
+                l.rng = rng.clone();
+            }
+            continue;
+        }
+        if !bound1 {
+            if exact && budget > 0 {
+                F::eval(ctx, &lane, &mut l.scratch[i], kernel.eval_time(meta.t, meta), Stage::One);
+                l.stats.nfe += 1;
+                budget -= 1;
+                l.ev1[i] = true; // states[i] == lane after the heal above
+            } else {
+                // The heal above repoints the snapshot; next sweep's
+                // batch evaluates it and the replay binds here.
+                reached_end = false;
+                break;
+            }
+        }
+        kernel.stage1(ctx, meta, &mut lane, &mut l.scratch[i], &mut discard, &mut rng);
+        if kernel.stage1_consumes_eval() {
+            l.ev1[i] = false;
+        }
+        if kernel.stages() == 2 {
+            if kernel.wants_stage2(&lane) {
+                let mid_matches = l.mids[i].as_ref().map_or(false, |m| F::lane_eq(&lane, m));
+                let bound2 = mid_matches && l.mid_ok[i];
+                if !mid_matches {
+                    l.mids[i] = Some(lane.clone());
+                    l.mid_ok[i] = false;
+                }
+                if !bound2 {
+                    if exact && budget > 0 {
+                        F::eval(
+                            ctx,
+                            &lane,
+                            &mut l.scratch[i],
+                            kernel.stage2_time(meta.t, meta.t_next),
+                            Stage::Two,
+                        );
+                        l.stats.nfe += 1;
+                        budget -= 1;
+                        l.mid_ok[i] = true;
+                    } else {
+                        // Speculate: μ* := μ keeps the replay moving and
+                        // seeds next sweep's evaluations; the proxy rows
+                        // are never counted as a real eval.
+                        exact = false;
+                        F::stage2_proxy(&mut l.scratch[i]);
+                    }
+                }
+            } else {
+                l.mids[i] = None;
+                l.mid_ok[i] = false;
+            }
+            if !exact {
+                max_err = max_err.max(kernel.step_error(ctx, meta, &lane, &l.scratch[i]));
+            }
+            kernel.stage2(ctx, meta, &mut lane, &mut l.scratch[i], &mut discard, &mut rng);
+        }
+        if exact {
+            l.prefix = i + 1;
+            l.rng = rng.clone();
+        }
+    }
+
+    if exact && reached_end {
+        debug_assert_eq!(l.prefix, n, "exact full replay must extend the prefix to n");
+        l.status = Some(PitOutcome::Exact);
+        l.fin = Some((lane, rng));
+    } else if reached_end && cfg.tol > 0.0 && state_heals == 0 && max_err <= cfg.tol {
+        // lane_eq-stationary trajectory with every speculated step's
+        // embedded error under tol: accept approximately.
+        l.status = Some(PitOutcome::Tol);
+        l.fin = Some((lane, rng));
+    }
+}
+
+/// The shared sweep loop: phase-1 batched evaluation across every running
+/// lane's dirty slices, phase-2 replays, convergence bookkeeping, cancel
+/// polling and the progress heartbeat — then the terminal finalize for
+/// converged lanes.
+fn run_pit_core<F: StateFamily, K: SolverKernel<F>>(
+    ctx: &F::Ctx,
+    kernel: &K,
+    grid: &[f64],
+    cfg: &PitCfg,
+    cancel: &CancelToken,
+    mut obs: Option<&mut dyn FnMut(Progress)>,
+    lanes: &mut [PitLane<F>],
+) {
+    assert!(is_valid_grid(grid), "invalid time grid");
+    assert!(cfg.sweeps_max >= 1, "pit needs sweeps_max >= 1");
+    assert!(cfg.tol.is_finite() && cfg.tol >= 0.0, "pit needs finite tol >= 0");
+    let n = grid.len() - 1;
+    let metas: Vec<StepMeta> = grid
+        .windows(2)
+        .enumerate()
+        .map(|(i, w)| StepMeta { t: w[0], t_next: w[1], step_idx: i, n_steps: Some(n) })
+        .collect();
+
+    let mut sweep = 0usize;
+    while lanes.iter().any(|l| l.status.is_none()) {
+        if cancel.is_cancelled() {
+            for l in lanes.iter_mut().filter(|l| l.status.is_none()) {
+                l.status = Some(PitOutcome::Cancelled);
+            }
+            break;
+        }
+        if sweep >= cfg.sweeps_max {
+            for l in lanes.iter_mut().filter(|l| l.status.is_none()) {
+                l.status = Some(PitOutcome::SweepLimit);
+            }
+            break;
+        }
+        sweep += 1;
+
+        // Phase 1: gather every stale slice-stage across all running
+        // lanes into ONE batched evaluation.  Validity flags are set at
+        // gather time; the eval call right below honours them.
+        let mut reqs: Vec<SliceEval<'_, F>> = Vec::new();
+        for l in lanes.iter_mut() {
+            if l.status.is_some() {
+                continue;
+            }
+            let prefix = l.prefix;
+            for (k, scr) in l.scratch[prefix..n].iter_mut().enumerate() {
+                let i = prefix + k;
+                let meta = &metas[i];
+                let want1 = !l.ev1[i] && kernel.wants_stage1(&l.states[i], meta);
+                let want2 = kernel.stages() == 2
+                    && !l.mid_ok[i]
+                    && l.mids[i].as_ref().map_or(false, |m| kernel.wants_stage2(m));
+                if !(want1 || want2) {
+                    continue;
+                }
+                if want1 {
+                    l.ev1[i] = true;
+                    l.stats.nfe += 1;
+                }
+                if want2 {
+                    l.mid_ok[i] = true;
+                    l.stats.nfe += 1;
+                }
+                reqs.push(SliceEval {
+                    sc: scr,
+                    stage1: if want1 {
+                        Some((&l.states[i], kernel.eval_time(meta.t, meta)))
+                    } else {
+                        None
+                    },
+                    stage2: if want2 {
+                        Some((
+                            l.mids[i].as_ref().expect("want2 checked is_some"),
+                            kernel.stage2_time(meta.t, meta.t_next),
+                        ))
+                    } else {
+                        None
+                    },
+                });
+            }
+        }
+        if !reqs.is_empty() {
+            F::eval_slices(ctx, &mut reqs);
+        }
+        drop(reqs);
+
+        // Phase 2: replay each running lane (independent, deterministic).
+        for l in lanes.iter_mut() {
+            if l.status.is_some() {
+                continue;
+            }
+            l.sweeps = sweep;
+            replay(ctx, kernel, &metas, cfg, l);
+        }
+
+        if let Some(f) = obs.as_mut() {
+            f(Progress { done: sweep, total: cfg.sweeps_max, phase: "sweep" });
+        }
+    }
+
+    // Epilogue: converged lanes run the terminal finalize on the
+    // sequential stream (charged into the real stats — identical to the
+    // sequential drivers); partial lanes freeze at the exact prefix.
+    for l in lanes.iter_mut() {
+        match l.status {
+            Some(PitOutcome::Exact) | Some(PitOutcome::Tol) => {
+                let (mut fl, mut fr) = l.fin.take().expect("converged lane carries fin");
+                F::finalize(ctx, *grid.last().expect("non-empty grid"), &mut fl, &mut l.scratch[0], &mut l.stats, &mut fr);
+                l.stats.steps = n;
+                l.fin = Some((fl, fr));
+            }
+            _ => {
+                l.stats.steps = l.prefix;
+            }
+        }
+    }
+}
+
+/// Extract one finished lane (and the stream to continue the caller's
+/// RNG from, for the single-lane wrapper).
+fn finish_lane<F: StateFamily>(mut l: PitLane<F>) -> (PitLaneOut<F::Out>, Xoshiro256) {
+    let outcome = l.status.expect("core never leaves a lane running");
+    match outcome {
+        PitOutcome::Exact | PitOutcome::Tol => {
+            let (fl, fr) = l.fin.take().expect("converged lane carries fin");
+            (
+                PitLaneOut { out: F::into_out(fl), stats: l.stats, sweeps: l.sweeps, outcome },
+                fr,
+            )
+        }
+        PitOutcome::SweepLimit | PitOutcome::Cancelled => {
+            // Partial: the lane as it stands at the exact prefix, no
+            // finalize — the same shape the cancelled sequential drivers
+            // return.
+            let lane = l.states.swap_remove(l.prefix);
+            (
+                PitLaneOut { out: F::into_out(lane), stats: l.stats, sweeps: l.sweeps, outcome },
+                l.rng,
+            )
+        }
+    }
+}
+
+/// Run one lane parallel-in-time over a fixed grid.  On exact convergence
+/// the output is bit-identical to
+/// [`crate::solvers::driver::run_single`] with the same RNG stream, and
+/// `rng` is left positioned exactly where the sequential run would leave
+/// it (caller-stream continuation).  On a partial return `rng` holds the
+/// stream after the last exact step.
+#[allow(clippy::too_many_arguments)]
+pub fn run_pit_single<F: StateFamily, K: SolverKernel<F>>(
+    ctx: &F::Ctx,
+    kernel: &K,
+    grid: &[f64],
+    cfg: &PitCfg,
+    cancel: &CancelToken,
+    obs: Option<&mut dyn FnMut(Progress)>,
+    rng: &mut Xoshiro256,
+) -> PitLaneOut<F::Out> {
+    assert!(is_valid_grid(grid), "invalid time grid");
+    let n = grid.len() - 1;
+    let mut lanes = vec![pit_lane::<F>(ctx, n, rng.clone())];
+    run_pit_core(ctx, kernel, grid, cfg, cancel, obs, &mut lanes);
+    let (out, cont) = finish_lane::<F>(lanes.pop().expect("one lane in, one lane out"));
+    *rng = cont;
+    out
+}
+
+/// Run B lanes parallel-in-time in lock-step sweeps: ONE batched slice
+/// evaluation per sweep covers every running lane's dirty time-slices,
+/// converged lanes drop out of subsequent sweeps, and lane b — seeded
+/// with `Xoshiro256::seed_from_u64(seeds[b])`, the sequential batch
+/// discipline — is bit-identical to an independent [`run_pit_single`]
+/// run with that stream (the slice-eval contract makes rows
+/// batch-invariant).  The cancel token is polled once per sweep and a
+/// fired token turns every still-running lane into a `Cancelled`
+/// partial.
+pub fn run_pit_batch<F: StateFamily, K: SolverKernel<F>>(
+    ctx: &F::Ctx,
+    kernel: &K,
+    grid: &[f64],
+    cfg: &PitCfg,
+    cancel: &CancelToken,
+    obs: Option<&mut dyn FnMut(Progress)>,
+    seeds: &[u64],
+) -> Vec<PitLaneOut<F::Out>> {
+    if seeds.is_empty() {
+        return Vec::new();
+    }
+    assert!(is_valid_grid(grid), "invalid time grid");
+    let n = grid.len() - 1;
+    let mut lanes: Vec<PitLane<F>> = seeds
+        .iter()
+        .map(|&s| pit_lane::<F>(ctx, n, Xoshiro256::seed_from_u64(s)))
+        .collect();
+    run_pit_core(ctx, kernel, grid, cfg, cancel, obs, &mut lanes);
+    lanes.into_iter().map(|l| finish_lane::<F>(l).0).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ctmc::ToyModel;
+    use crate::schedule::grid::toy_uniform;
+    use crate::solvers::driver::{run_single, Schedule};
+    use crate::solvers::kernel::{
+        Rk2Kernel, TauLeapingKernel, ToyFamily, TrapezoidalKernel,
+    };
+    use crate::util::rng::Rng;
+
+    fn model() -> ToyModel {
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        ToyModel::paper_default(&mut rng)
+    }
+
+    fn grid(m: &ToyModel, steps: usize) -> Vec<f64> {
+        toy_uniform(steps, m.horizon, 1e-3)
+    }
+
+    #[test]
+    fn toy_exact_parity_one_stage() {
+        let m = model();
+        let g = grid(&m, 24);
+        for seed in [1u64, 9, 42] {
+            let mut sr = Xoshiro256::seed_from_u64(seed);
+            let (seq, seq_stats, _) =
+                run_single::<ToyFamily, _, _>(&m, &TauLeapingKernel, Schedule::Fixed(&g), &mut sr);
+            let mut pr = Xoshiro256::seed_from_u64(seed);
+            let cfg = PitCfg::new(g.len() - 1, 0.0);
+            let out = run_pit_single::<ToyFamily, _>(
+                &m,
+                &TauLeapingKernel,
+                &g,
+                &cfg,
+                &CancelToken::never(),
+                None,
+                &mut pr,
+            );
+            assert_eq!(out.outcome, PitOutcome::Exact);
+            assert_eq!(out.out, seq, "seed {seed}");
+            assert!(out.sweeps <= g.len() - 1);
+            assert_eq!(out.stats.steps, seq_stats.steps);
+            // Caller-stream continuation: both streams line up afterwards.
+            assert_eq!(sr.gen_u64(), pr.gen_u64(), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn toy_exact_parity_two_stage() {
+        let m = model();
+        let g = grid(&m, 16);
+        let trap = TrapezoidalKernel::new(0.5);
+        let rk2 = Rk2Kernel::new(0.5);
+        for seed in [3u64, 11] {
+            for two_stage in [true, false] {
+                let mut sr = Xoshiro256::seed_from_u64(seed);
+                let seq = if two_stage {
+                    run_single::<ToyFamily, _, _>(&m, &trap, Schedule::Fixed(&g), &mut sr).0
+                } else {
+                    run_single::<ToyFamily, _, _>(&m, &rk2, Schedule::Fixed(&g), &mut sr).0
+                };
+                let mut pr = Xoshiro256::seed_from_u64(seed);
+                let cfg = PitCfg::new(g.len() - 1, 0.0);
+                let out = if two_stage {
+                    run_pit_single::<ToyFamily, _>(
+                        &m, &trap, &g, &cfg, &CancelToken::never(), None, &mut pr,
+                    )
+                } else {
+                    run_pit_single::<ToyFamily, _>(
+                        &m, &rk2, &g, &cfg, &CancelToken::never(), None, &mut pr,
+                    )
+                };
+                assert_eq!(out.outcome, PitOutcome::Exact);
+                assert_eq!(out.out, seq, "seed {seed} trap={two_stage}");
+                assert!(out.sweeps <= g.len() - 1);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let m = model();
+        let g = grid(&m, 12);
+        let cfg = PitCfg::new(g.len() - 1, 0.0);
+        let seeds = [5u64, 6, 7, 8];
+        let batch = run_pit_batch::<ToyFamily, _>(
+            &m,
+            &Rk2Kernel::new(0.4),
+            &g,
+            &cfg,
+            &CancelToken::never(),
+            None,
+            &seeds,
+        );
+        for (b, &s) in seeds.iter().enumerate() {
+            let mut r = Xoshiro256::seed_from_u64(s);
+            let single = run_pit_single::<ToyFamily, _>(
+                &m,
+                &Rk2Kernel::new(0.4),
+                &g,
+                &cfg,
+                &CancelToken::never(),
+                None,
+                &mut r,
+            );
+            assert_eq!(batch[b].out, single.out, "lane {b}");
+            assert_eq!(batch[b].outcome, single.outcome);
+            assert_eq!(batch[b].sweeps, single.sweeps);
+            assert_eq!(batch[b].stats.nfe, single.stats.nfe);
+        }
+    }
+
+    #[test]
+    fn sweep_limit_returns_typed_partial() {
+        let m = model();
+        let g = grid(&m, 32);
+        // One sweep cannot converge a 32-step grid from a cold candidate
+        // trajectory: at most 1 + INLINE_BUDGET prefix steps per sweep.
+        let cfg = PitCfg::new(1, 0.0);
+        let mut r = Xoshiro256::seed_from_u64(2);
+        let out = run_pit_single::<ToyFamily, _>(
+            &m,
+            &TrapezoidalKernel::new(0.5),
+            &g,
+            &cfg,
+            &CancelToken::never(),
+            None,
+            &mut r,
+        );
+        assert_eq!(out.outcome, PitOutcome::SweepLimit);
+        assert!(!out.outcome.complete());
+        assert_eq!(out.sweeps, 1);
+        assert!(out.stats.steps >= 1, "prefix must advance every sweep");
+        assert!(out.stats.steps < g.len() - 1);
+    }
+
+    #[test]
+    fn fired_cancel_returns_partial_immediately() {
+        let m = model();
+        let g = grid(&m, 8);
+        let tok = CancelToken::new();
+        tok.cancel();
+        let mut r = Xoshiro256::seed_from_u64(4);
+        let out = run_pit_single::<ToyFamily, _>(
+            &m,
+            &TauLeapingKernel,
+            &g,
+            &PitCfg::new(8, 0.0),
+            &tok,
+            None,
+            &mut r,
+        );
+        assert_eq!(out.outcome, PitOutcome::Cancelled);
+        assert_eq!(out.sweeps, 0);
+        assert_eq!(out.stats.steps, 0);
+    }
+
+    #[test]
+    fn progress_heartbeat_counts_sweeps() {
+        let m = model();
+        let g = grid(&m, 10);
+        let mut beats: Vec<Progress> = Vec::new();
+        let mut sink = |p: Progress| beats.push(p);
+        let mut r = Xoshiro256::seed_from_u64(6);
+        let out = run_pit_single::<ToyFamily, _>(
+            &m,
+            &TauLeapingKernel,
+            &g,
+            &PitCfg::new(9, 0.0),
+            &CancelToken::never(),
+            Some(&mut sink),
+            &mut r,
+        );
+        assert_eq!(beats.len(), out.sweeps);
+        assert!(beats.iter().all(|p| p.phase == "sweep" && p.total == 9));
+        assert_eq!(beats.last().map(|p| p.done), Some(out.sweeps));
+    }
+
+    #[test]
+    fn tol_accepts_approximate_fixed_point() {
+        let m = model();
+        let g = grid(&m, 24);
+        // A generous tol lets the very first lane_eq-stationary sweep
+        // (after the cascade warms) accept without full exactness; the
+        // run must still converge and never exceed the sweep bound.
+        let mut r = Xoshiro256::seed_from_u64(12);
+        let out = run_pit_single::<ToyFamily, _>(
+            &m,
+            &TrapezoidalKernel::new(0.5),
+            &g,
+            &PitCfg::new(g.len() - 1, 1e9),
+            &CancelToken::never(),
+            None,
+            &mut r,
+        );
+        assert!(out.outcome.converged());
+        assert!(out.sweeps <= g.len() - 1);
+    }
+
+    #[test]
+    fn cfg_validates() {
+        assert!(std::panic::catch_unwind(|| PitCfg::new(0, 0.0)).is_err());
+        assert!(std::panic::catch_unwind(|| PitCfg::new(4, -1.0)).is_err());
+        assert!(std::panic::catch_unwind(|| PitCfg::new(4, f64::NAN)).is_err());
+        let _ = PitCfg::new(1, 0.0);
+    }
+}

@@ -65,6 +65,57 @@ pub fn generate<R: Rng>(
     })
 }
 
+/// Parallel-in-time backward pass ([`crate::solvers::pit`]): Picard sweeps
+/// over the whole grid, each evaluating every stale slice in one batched
+/// score call, until the trajectory is the sequential fixed point.  At
+/// `tol = 0` the returned sample (and the caller RNG continuation) is
+/// bit-identical to [`generate`] on the same seed.
+pub fn pit_generate(
+    model: &ToyModel,
+    solver: Solver,
+    grid: &[f64],
+    cfg: &crate::solvers::pit::PitCfg,
+    rng: &mut crate::util::rng::Xoshiro256,
+) -> crate::solvers::pit::PitLaneOut<usize> {
+    assert!(
+        !matches!(solver, Solver::Exact),
+        "exact simulation has no grid to iterate parallel-in-time"
+    );
+    dispatch_toy_kernel!(solver, k => {
+        crate::solvers::pit::run_pit_single::<ToyFamily, _>(
+            model,
+            &k,
+            grid,
+            cfg,
+            &crate::util::cancel::CancelToken::never(),
+            None,
+            rng,
+        )
+    })
+}
+
+/// Batched counterpart of [`pit_generate`]: one lane per seed, all lanes'
+/// stale slices pooled into each sweep's batched score call.
+pub fn pit_generate_batch_ctl(
+    model: &ToyModel,
+    solver: Solver,
+    grid: &[f64],
+    seeds: &[u64],
+    cfg: &crate::solvers::pit::PitCfg,
+    cancel: &crate::util::cancel::CancelToken,
+    obs: Option<&mut dyn FnMut(driver::Progress)>,
+) -> Vec<crate::solvers::pit::PitLaneOut<usize>> {
+    assert!(
+        !matches!(solver, Solver::Exact),
+        "exact simulation has no grid to iterate parallel-in-time"
+    );
+    dispatch_toy_kernel!(solver, k => {
+        crate::solvers::pit::run_pit_batch::<ToyFamily, _>(
+            model, &k, grid, cfg, cancel, obs, seeds,
+        )
+    })
+}
+
 /// Error-controlled backward pass for the θ-schemes: the PI controller
 /// picks each step from the free two-stage estimator (|composite gate −
 /// Euler gate|), optionally pinned to an NFE budget (2 NFE per step, no
@@ -79,7 +130,10 @@ pub fn generate_adaptive<R: Rng>(
     rng: &mut R,
 ) -> (usize, GenStats, AdaptiveTrace) {
     assert!(
-        matches!(solver, Solver::Trapezoidal { .. } | Solver::Rk2 { .. }),
+        matches!(
+            solver,
+            Solver::Trapezoidal { .. } | Solver::Rk2 { .. } | Solver::Midpoint { .. }
+        ),
         "adaptive toy schedules need a θ-scheme, got {}",
         solver.name()
     );
@@ -217,6 +271,7 @@ mod tests {
             Solver::TauLeaping,
             Solver::Trapezoidal { theta: 0.5 },
             Solver::Rk2 { theta: 0.5 },
+            Solver::Midpoint { theta: 0.5 },
             Solver::Exact,
         ] {
             for _ in 0..200 {
@@ -287,6 +342,44 @@ mod tests {
         let a = empirical_distribution(&m, Solver::TauLeaping, &grid, 10_000, 9, 4);
         let b = empirical_distribution(&m, Solver::TauLeaping, &grid, 10_000, 9, 2);
         assert_eq!(a, b, "thread count must not change results");
+    }
+
+    #[test]
+    fn midpoint_at_half_matches_rk2_at_half() {
+        // θ = 1/2 is the anchor point where the midpoint scheme's float
+        // expressions coincide with RK2's (w = 1/(2θ) = 1) — bit parity.
+        let m = model();
+        let grid = toy_uniform(24, m.horizon, 1e-3);
+        for seed in [1u64, 13, 77] {
+            let mut ra = Xoshiro256::seed_from_u64(seed);
+            let mut rb = Xoshiro256::seed_from_u64(seed);
+            let a = generate(&m, Solver::Midpoint { theta: 0.5 }, &grid, &mut ra);
+            let b = generate(&m, Solver::Rk2 { theta: 0.5 }, &grid, &mut rb);
+            assert_eq!(a, b, "seed {seed}");
+            assert_eq!(ra.gen_u64(), rb.gen_u64(), "rng streams must agree");
+        }
+    }
+
+    #[test]
+    fn pit_generate_matches_sequential() {
+        let m = model();
+        let grid = toy_uniform(16, m.horizon, 1e-3);
+        for solver in [
+            Solver::TauLeaping,
+            Solver::Trapezoidal { theta: 0.5 },
+            Solver::Midpoint { theta: 0.6 },
+        ] {
+            for seed in [2u64, 29] {
+                let mut sr = Xoshiro256::seed_from_u64(seed);
+                let mut pr = Xoshiro256::seed_from_u64(seed);
+                let seq = generate(&m, solver, &grid, &mut sr);
+                let cfg = crate::solvers::pit::PitCfg::new(16, 0.0);
+                let out = pit_generate(&m, solver, &grid, &cfg, &mut pr);
+                assert!(out.outcome.converged(), "{} seed {seed}", solver.name());
+                assert_eq!(out.out, seq, "{} seed {seed}", solver.name());
+                assert_eq!(sr.gen_u64(), pr.gen_u64(), "rng continuation");
+            }
+        }
     }
 
     #[test]

@@ -163,6 +163,14 @@ impl<S: ScoreSource> ScoreSource for FaultyScore<S> {
         self.inner.probs_masked_batch(reqs, t, outs);
     }
 
+    // Same rule for the PIT sweep evaluation: one tick per batched
+    // slice dispatch (the default would fan out through
+    // `probs_masked_into` and tick per slice).
+    fn probs_masked_slices(&self, reqs: &[(&[Tok], &[usize], f64)], outs: &mut [&mut [f64]]) {
+        self.tick();
+        self.inner.probs_masked_slices(reqs, outs);
+    }
+
     fn exact_uniform(
         &self,
         delta: f64,

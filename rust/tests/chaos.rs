@@ -52,6 +52,17 @@ fn spec(solver: Solver, nfe: usize, n: usize, seed: u64) -> SamplingSpec {
         .unwrap()
 }
 
+fn pit_spec(solver: Solver, nfe: usize, n: usize, seed: u64) -> SamplingSpec {
+    SamplingSpec::builder()
+        .solver(solver)
+        .nfe(nfe)
+        .n_samples(n)
+        .seed(seed)
+        .pit(true)
+        .build()
+        .unwrap()
+}
+
 /// The uninjected ground truth: a fresh, fault-free coordinator serving
 /// the same oracle.  Fixed-grid plans are batch-invariant (PR 1), so its
 /// responses are the bit-exact expectation for any batching/policy the
@@ -350,7 +361,68 @@ fn supervisor_restart_fails_inflight_typed_and_keeps_serving() {
 }
 
 // ===========================================================================
-// 6. Deadline admission control: infeasible plans rejected at intake
+// 6. Panic mid-sweep in a parallel-in-time dispatch
+// ===========================================================================
+
+#[test]
+fn pit_sweep_panic_isolates_the_lane_and_keeps_parity() {
+    silence_injected_panics();
+    // A PIT dispatch's first score call is sweep 1's pooled slice
+    // evaluation (`probs_masked_slices`, one tick for the whole batch) —
+    // tick 0 panics there, mid-sweep with zero lanes converged.  Tick 1
+    // is the first lane's solo rerun (its own sweep-1 pooled eval), so
+    // the FIRST request fails typed and its two siblings complete.
+    let plan = FaultPlan::new().panic_at(0).panic_at(1);
+    let faulty = Arc::new(FaultyScore::new(oracle(), plan));
+    let c = Coordinator::start_local(
+        faulty,
+        BatchPolicy::Timeout(Duration::from_secs(10)),
+        3,
+    );
+    let solver = Solver::TauLeaping;
+    let specs: Vec<SamplingSpec> =
+        (0..3).map(|i| pit_spec(solver, 16, 1, 300 + i)).collect();
+    let handles: Vec<_> =
+        specs.iter().map(|s| c.submit_spec(s.clone())).collect();
+    let mut results: Vec<Result<GenerateResponse, anyhow::Error>> =
+        handles.into_iter().map(|h| h.wait()).collect();
+
+    let err = results.remove(0).unwrap_err();
+    assert_eq!(typed_code(&err), codes::LANE_FAILED);
+    assert!(err.to_string().contains(INJECTED), "message lost the payload");
+
+    // Bystander lanes: bit-identical to a never-faulted PIT run AND to
+    // the sequential twin of the same seed — the tol = 0 parity guarantee
+    // must survive fault isolation's solo re-dispatch.
+    for (i, (s, got)) in specs[1..].iter().zip(results).enumerate() {
+        let got = got.expect("sibling lane must complete");
+        let want = clean_expect(s);
+        assert_eq!(got.sequences, want.sequences, "sibling {i} diverged");
+        assert!(!got.partial);
+        let twin = spec(solver, 16, 1, 301 + i as u64);
+        assert_eq!(
+            got.sequences,
+            clean_expect(&twin).sequences,
+            "sibling {i} broke PIT/sequential parity"
+        );
+    }
+
+    let m = c.metrics();
+    assert_eq!(m.lane_failures, 1, "exactly one lane failure");
+    assert_eq!(m.pit_sweep_limit_hits, 0, "no sweep-limit partials here");
+    assert!(
+        m.pit_converged_lanes >= 2,
+        "both siblings must count as converged, got {}",
+        m.pit_converged_lanes
+    );
+
+    // Post-fault health, through the PIT path itself.
+    assert_serves_clean(&c, &pit_spec(solver, 16, 3, 910), FOLLOW_UPS);
+    c.shutdown();
+}
+
+// ===========================================================================
+// 7. Deadline admission control: infeasible plans rejected at intake
 // ===========================================================================
 
 #[test]

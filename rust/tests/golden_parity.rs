@@ -1483,6 +1483,95 @@ fn armed_deadline_token_preserves_bit_parity() {
 }
 
 #[test]
+fn midpoint_half_anchors_to_rk2_half_masked() {
+    // θ-midpoint has no legacy twin (it is new), so its golden anchor is
+    // the θ = 1/2 coincidence: the RK-2 combine weight 1/(2θ) is exactly
+    // 1.0 there, and the midpoint kernel keeps the RK-2 float expressions,
+    // so token streams, NFE and step counts must match bit for bit —
+    // single and batch, Markov and (time-inhomogeneous) HMM sources.
+    let mid = Solver::Midpoint { theta: 0.5 };
+    let rk2 = Solver::Rk2 { theta: 0.5 };
+    let o = oracle(6, 16, 11);
+    for steps in [4usize, 12] {
+        let g = grid::masked_uniform(steps, 1e-3);
+        for seed in [0u64, 7, 99, 12345] {
+            let mut r_m = Xoshiro256::seed_from_u64(seed);
+            let mut r_r = Xoshiro256::seed_from_u64(seed);
+            let (toks, stats) = masked::generate(&o, mid, &g, &mut r_m);
+            let (want, wstats) = masked::generate(&o, rk2, &g, &mut r_r);
+            assert_eq!(toks, want, "steps={steps} seed={seed}");
+            assert_eq!(stats.nfe, wstats.nfe, "steps={steps} seed={seed} nfe");
+            assert_eq!(stats.steps, wstats.steps);
+        }
+    }
+
+    let g = grid::masked_uniform(10, 1e-3);
+    let seeds = [3u64, 141, 59, 2653, 0];
+    let new = masked::generate_batch(&o, mid, &g, &seeds);
+    let old = masked::generate_batch(&o, rk2, &g, &seeds);
+    for (k, (n, w)) in new.iter().zip(&old).enumerate() {
+        assert_eq!(n.0, w.0, "batch lane {k} tokens");
+        assert_eq!(n.1.nfe, w.1.nfe, "batch lane {k} nfe");
+    }
+
+    let mut rng = Xoshiro256::seed_from_u64(17);
+    let chain = MarkovChain::generate(&mut rng, 5, 0.6);
+    let h = HmmUniformOracle::new(chain, 10);
+    let g = grid::masked_uniform(8, 1e-3);
+    let mut r_m = Xoshiro256::seed_from_u64(4);
+    let mut r_r = Xoshiro256::seed_from_u64(4);
+    let (toks, stats) = masked::generate(&h, mid, &g, &mut r_m);
+    let (want, wstats) = masked::generate(&h, rk2, &g, &mut r_r);
+    assert_eq!(toks, want, "hmm source");
+    assert_eq!(stats.nfe, wstats.nfe);
+}
+
+#[test]
+fn midpoint_half_anchors_to_rk2_half_toy() {
+    // Toy-family anchor, fixed grids and the adaptive controller: the
+    // midpoint step_error keeps the RK-2 gate-discrepancy shape, so at
+    // θ = 1/2 even the realized adaptive grids and error traces coincide.
+    let mid = Solver::Midpoint { theta: 0.5 };
+    let rk2 = Solver::Rk2 { theta: 0.5 };
+    let mut mrng = Xoshiro256::seed_from_u64(7);
+    let model = fastdds::ctmc::ToyModel::paper_default(&mut mrng);
+    for steps in [8usize, 32] {
+        let g = grid::toy_uniform(steps, model.horizon, 1e-3);
+        let mut r_m = Xoshiro256::seed_from_u64(13);
+        let mut r_r = Xoshiro256::seed_from_u64(13);
+        for rep in 0..200 {
+            let x_m = toy::generate(&model, mid, &g, &mut r_m);
+            let x_r = toy::generate(&model, rk2, &g, &mut r_r);
+            assert_eq!(x_m, x_r, "steps={steps} rep={rep}");
+        }
+    }
+
+    for tol in [1e-2, 1e-4] {
+        let cfg = AdaptiveController::for_span(tol, model.horizon, 1e-3);
+        let mut r_m = Xoshiro256::seed_from_u64(31);
+        let mut r_r = Xoshiro256::seed_from_u64(31);
+        let (x, stats, trace) = toy::generate_adaptive(
+            &model,
+            mid,
+            StepController::new(cfg, model.horizon / 32.0),
+            1e-3,
+            &mut r_m,
+        );
+        let (wx, wstats, wtrace) = toy::generate_adaptive(
+            &model,
+            rk2,
+            StepController::new(cfg, model.horizon / 32.0),
+            1e-3,
+            &mut r_r,
+        );
+        assert_eq!(x, wx, "tol={tol}");
+        assert_eq!(stats.nfe, wstats.nfe);
+        assert_eq!(trace.grid, wtrace.grid, "realized grids must match");
+        assert_eq!(trace.errors, wtrace.errors, "error traces must match");
+    }
+}
+
+#[test]
 fn hmm_evaluation_nfe_strictly_drops_at_default_slack() {
     // The acceptance headline on a Fig. 1-like configuration: at the
     // default slack the bracketed loop performs ~env/slack of the naive

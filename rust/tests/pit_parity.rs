@@ -1,0 +1,234 @@
+//! Parallel-in-time parity suite: the PIT driver's load-bearing invariant
+//! is that at `tol = 0` with `sweeps_max >= steps` its output is
+//! **bit-identical** to the sequential driver on the same seed and grid —
+//! for every solver kernel, every state family, and through every public
+//! entry point (single, lock-step batch).  This file sweeps that product
+//! space through the public shims (`masked::pit_generate`,
+//! `toy::pit_generate`, the `_batch_ctl` twins) the serving stack
+//! dispatches to, plus the divergence guard: a starved `sweeps_max`
+//! returns a typed partial (`PitOutcome::SweepLimit`), never a wrong
+//! sample and never a spin.
+
+use fastdds::score::hmm::HmmUniformOracle;
+use fastdds::score::markov::{MarkovChain, MarkovOracle};
+use fastdds::solvers::pit::{PitCfg, PitOutcome};
+use fastdds::solvers::{grid, masked, toy, Solver};
+use fastdds::util::cancel::CancelToken;
+use fastdds::util::rng::{Rng, Xoshiro256};
+
+/// Every solver the PIT driver serves (all grid schemes; exact simulation
+/// has no grid to iterate).  Midpoint rides at θ = 1/2 (the RK-2 anchor
+/// point) AND θ = 0.7, where it is a genuinely distinct scheme.
+fn pit_solvers() -> Vec<Solver> {
+    vec![
+        Solver::Euler,
+        Solver::TauLeaping,
+        Solver::Tweedie,
+        Solver::Trapezoidal { theta: 0.5 },
+        Solver::Trapezoidal { theta: 0.3 },
+        Solver::Rk2 { theta: 0.5 },
+        Solver::Rk2 { theta: 0.3 },
+        Solver::Midpoint { theta: 0.5 },
+        Solver::Midpoint { theta: 0.7 },
+        Solver::ParallelDecoding,
+    ]
+}
+
+fn oracle(vocab: usize, seq_len: usize, seed: u64) -> MarkovOracle {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    MarkovOracle::new(MarkovChain::generate(&mut rng, vocab, 0.5), seq_len)
+}
+
+#[test]
+fn masked_pit_bit_parity_across_solvers_and_seeds() {
+    let o = oracle(6, 16, 11);
+    for steps in [4usize, 10] {
+        let g = grid::masked_uniform(steps, 1e-3);
+        let cfg = PitCfg::new(steps, 0.0);
+        for solver in pit_solvers() {
+            for seed in [0u64, 7, 99] {
+                let mut sr = Xoshiro256::seed_from_u64(seed);
+                let (want, _) = masked::generate(&o, solver, &g, &mut sr);
+                let mut pr = Xoshiro256::seed_from_u64(seed);
+                let lane = masked::pit_generate(&o, solver, &g, &cfg, &mut pr);
+                let tag = format!("{} steps={steps} seed={seed}", solver.name());
+                assert_eq!(lane.outcome, PitOutcome::Exact, "{tag}");
+                assert_eq!(lane.out, want, "{tag}");
+                assert!(lane.sweeps >= 1 && lane.sweeps <= steps, "{tag}: sweeps {}", lane.sweeps);
+                // Caller-stream continuation: the PIT run consumed exactly
+                // the sequential draws, so both streams stay in lock-step.
+                assert_eq!(sr.gen_u64(), pr.gen_u64(), "{tag}: rng continuation");
+            }
+        }
+    }
+}
+
+#[test]
+fn masked_pit_hmm_source_parity() {
+    // The time-inhomogeneous HMM source evaluates at per-stage times; the
+    // cached-slice bookkeeping must keep parity there too.
+    let mut rng = Xoshiro256::seed_from_u64(17);
+    let chain = MarkovChain::generate(&mut rng, 5, 0.6);
+    let o = HmmUniformOracle::new(chain, 10);
+    let steps = 8usize;
+    let g = grid::masked_uniform(steps, 1e-3);
+    let cfg = PitCfg::new(steps, 0.0);
+    for solver in [
+        Solver::Tweedie,
+        Solver::Trapezoidal { theta: 0.5 },
+        Solver::Rk2 { theta: 0.3 },
+        Solver::Midpoint { theta: 0.7 },
+    ] {
+        for seed in [4u64, 31] {
+            let mut sr = Xoshiro256::seed_from_u64(seed);
+            let (want, _) = masked::generate(&o, solver, &g, &mut sr);
+            let mut pr = Xoshiro256::seed_from_u64(seed);
+            let lane = masked::pit_generate(&o, solver, &g, &cfg, &mut pr);
+            assert_eq!(lane.outcome, PitOutcome::Exact, "{} seed={seed}", solver.name());
+            assert_eq!(lane.out, want, "{} seed={seed}", solver.name());
+        }
+    }
+}
+
+#[test]
+fn toy_pit_bit_parity_across_solvers_and_seeds() {
+    let mut mrng = Xoshiro256::seed_from_u64(7);
+    let model = fastdds::ctmc::ToyModel::paper_default(&mut mrng);
+    for steps in [8usize, 24] {
+        let g = grid::toy_uniform(steps, model.horizon, 1e-3);
+        let cfg = PitCfg::new(steps, 0.0);
+        for solver in pit_solvers() {
+            if matches!(solver, Solver::ParallelDecoding) {
+                continue; // undefined for the toy model
+            }
+            // Share one sequential stream across reps so diverse states
+            // are hit; any divergence desynchronises everything after it.
+            for seed in [13u64, 77, 900] {
+                let mut sr = Xoshiro256::seed_from_u64(seed);
+                let want = toy::generate(&model, solver, &g, &mut sr);
+                let mut pr = Xoshiro256::seed_from_u64(seed);
+                let lane = toy::pit_generate(&model, solver, &g, &cfg, &mut pr);
+                let tag = format!("{} steps={steps} seed={seed}", solver.name());
+                assert_eq!(lane.outcome, PitOutcome::Exact, "{tag}");
+                assert_eq!(lane.out, want, "{tag}");
+                assert!(lane.sweeps <= steps, "{tag}");
+                assert_eq!(sr.gen_u64(), pr.gen_u64(), "{tag}: rng continuation");
+            }
+        }
+    }
+}
+
+#[test]
+fn masked_pit_batch_matches_single() {
+    let o = oracle(6, 16, 11);
+    let steps = 8usize;
+    let g = grid::masked_uniform(steps, 1e-3);
+    let cfg = PitCfg::new(steps, 0.0);
+    let seeds = [3u64, 141, 59, 2653, 0];
+    for solver in [
+        Solver::TauLeaping,
+        Solver::Trapezoidal { theta: 0.5 },
+        Solver::Midpoint { theta: 0.7 },
+    ] {
+        let batch = masked::pit_generate_batch_ctl(
+            &o,
+            solver,
+            &g,
+            &seeds,
+            &cfg,
+            &CancelToken::never(),
+            None,
+        );
+        assert_eq!(batch.len(), seeds.len());
+        for (b, &s) in seeds.iter().enumerate() {
+            let mut r = Xoshiro256::seed_from_u64(s);
+            let single = masked::pit_generate(&o, solver, &g, &cfg, &mut r);
+            let tag = format!("{} lane {b}", solver.name());
+            assert_eq!(batch[b].out, single.out, "{tag}");
+            assert_eq!(batch[b].outcome, single.outcome, "{tag}");
+            assert_eq!(batch[b].sweeps, single.sweeps, "{tag}");
+            assert_eq!(batch[b].stats.nfe, single.stats.nfe, "{tag}");
+        }
+    }
+}
+
+#[test]
+fn toy_pit_batch_matches_single() {
+    let mut mrng = Xoshiro256::seed_from_u64(7);
+    let model = fastdds::ctmc::ToyModel::paper_default(&mut mrng);
+    let steps = 12usize;
+    let g = grid::toy_uniform(steps, model.horizon, 1e-3);
+    let cfg = PitCfg::new(steps, 0.0);
+    let seeds = [5u64, 6, 7, 8, 9];
+    let solver = Solver::Midpoint { theta: 0.5 };
+    let batch = toy::pit_generate_batch_ctl(
+        &model,
+        solver,
+        &g,
+        &seeds,
+        &cfg,
+        &CancelToken::never(),
+        None,
+    );
+    for (b, &s) in seeds.iter().enumerate() {
+        let mut r = Xoshiro256::seed_from_u64(s);
+        let single = toy::pit_generate(&model, solver, &g, &cfg, &mut r);
+        assert_eq!(batch[b].out, single.out, "lane {b}");
+        assert_eq!(batch[b].sweeps, single.sweeps, "lane {b}");
+    }
+}
+
+#[test]
+fn starved_sweep_budget_is_a_typed_partial_not_a_wrong_sample() {
+    // Divergence guard: one sweep cannot converge a cold 16-step grid
+    // (the prefix advances at most 1 + inline-budget steps per sweep), so
+    // the driver must return `SweepLimit` — a typed, incomplete result —
+    // rather than spinning or passing a non-fixed-point off as converged.
+    let o = oracle(6, 16, 11);
+    let steps = 16usize;
+    let g = grid::masked_uniform(steps, 1e-3);
+    let starved = PitCfg::new(1, 0.0);
+    let mut r = Xoshiro256::seed_from_u64(5);
+    let lane = masked::pit_generate(&o, Solver::Trapezoidal { theta: 0.5 }, &g, &starved, &mut r);
+    assert_eq!(lane.outcome, PitOutcome::SweepLimit);
+    assert!(!lane.outcome.converged());
+    assert!(!lane.outcome.complete());
+    assert_eq!(lane.sweeps, 1);
+
+    // The same request with the spec-layer default budget (steps) must
+    // converge to the exact fixed point — starvation is a budget property,
+    // not a trajectory property.
+    let healthy = PitCfg::new(steps, 0.0);
+    let mut r = Xoshiro256::seed_from_u64(5);
+    let lane = masked::pit_generate(&o, Solver::Trapezoidal { theta: 0.5 }, &g, &healthy, &mut r);
+    assert_eq!(lane.outcome, PitOutcome::Exact);
+}
+
+#[test]
+fn tol_acceptance_never_needs_more_sweeps_than_exact() {
+    // tol > 0 accepts a superset of the stopping states (exact
+    // convergence still short-circuits), so for identical streams the
+    // within-tol run stops at or before the exact run's sweep count.
+    let o = oracle(6, 16, 11);
+    let steps = 12usize;
+    let g = grid::masked_uniform(steps, 1e-3);
+    let solver = Solver::Rk2 { theta: 0.5 };
+    for seed in [2u64, 44, 777] {
+        let exact_cfg = PitCfg::new(steps, 0.0);
+        let mut r = Xoshiro256::seed_from_u64(seed);
+        let exact = masked::pit_generate(&o, solver, &g, &exact_cfg, &mut r);
+        assert_eq!(exact.outcome, PitOutcome::Exact);
+        for tol in [1e-3, 1e-1] {
+            let cfg = PitCfg::new(steps, tol);
+            let mut r = Xoshiro256::seed_from_u64(seed);
+            let lane = masked::pit_generate(&o, solver, &g, &cfg, &mut r);
+            assert!(lane.outcome.converged(), "tol={tol} seed={seed}");
+            assert!(
+                lane.sweeps <= exact.sweeps,
+                "tol={tol} seed={seed}: {} > exact {}",
+                lane.sweeps,
+                exact.sweeps
+            );
+        }
+    }
+}

@@ -7,10 +7,12 @@
 #   refresh BENCH_solvers.json (per-step perf + driver dispatch-overhead
 #   rows), BENCH_schedules.json (KL/NFE for fixed vs adaptive vs tuned
 #   grids), BENCH_exact.json (exact-path evaluations-per-sample,
-#   wall-clock, bracket hit rates) and BENCH_serve.json (TCP serving
+#   wall-clock, bracket hit rates), BENCH_serve.json (TCP serving
 #   req/s + p50/p99 latency, blocking vs streaming, cancel-to-partial,
-#   and the same workload under injected lane panics)
-#   so all four trajectories are tracked across PRs.  The chaos suite
+#   and the same workload under injected lane panics) and BENCH_pit.json
+#   (the parallel-in-time latency-vs-NFE frontier: sequential rounds vs
+#   NFE at matched toy-CTMC KL / text perplexity)
+#   so all five trajectories are tracked across PRs.  The chaos suite
 #   (tests/chaos.rs) runs by name so a filtered-out fault-injection suite
 #   fails loudly, and a grep gate keeps new bare unwrap()/expect() out of
 #   the coordinator/server non-test code.
@@ -42,10 +44,18 @@ cargo test -q
 cargo test -q --test wire_compat
 
 # The chaos suite is the fault-isolation acceptance: kernel panics
-# mid-batch, stalled lanes vs deadlines, client disconnects, admission
-# bursts and supervisor restarts — each followed by ~50 clean requests.
-# Run it by name for the same reason as wire_compat.
+# mid-batch (sequential AND mid-sweep in a PIT dispatch), stalled lanes vs
+# deadlines, client disconnects, admission bursts and supervisor restarts
+# — each followed by ~50 clean requests.  Run it by name for the same
+# reason as wire_compat.
 cargo test -q --test chaos
+
+# PIT acceptance: at tol=0 the parallel-in-time driver must be
+# bit-identical to the sequential driver for every solver x family x
+# entry-point combination, starved sweep budgets must return typed
+# partials, and batch must equal single.  Run by name so a filtered-out
+# parity suite fails loudly.
+cargo test -q --test pit_parity
 
 # Error-hygiene gate: the serving layer contains panics with catch_unwind,
 # so a bare .unwrap()/.expect( in coordinator/server NON-TEST code turns a
@@ -76,6 +86,7 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     cargo bench --bench schedules -- --quick
     cargo bench --bench exact -- --quick
     cargo bench --bench serve -- --quick
+    cargo bench --bench pit -- --quick
     # The dispatch-overhead rows must exist: they are the recorded evidence
     # that the SolverKernel/Driver indirection is free on the hot path
     # (compare each `driver_direct` row against its `generate` twin, <=2%).
@@ -104,6 +115,22 @@ if [[ "${1:-}" != "--no-bench" ]]; then
             exit 1
         }
     done
+    # The PIT frontier record must carry both drivers on both quality
+    # metrics (toy-CTMC KL + text perplexity) and the matched-KL headline
+    # the ISSUE acceptance pins: PIT reaching the sequential KL with
+    # strictly fewer sequential rounds than the sequential NFE.
+    for row in '"driver":"sequential"' '"driver":"pit:tol=0"' \
+               '"metric":"kl"' '"metric":"perplexity"' \
+               'pit_rounds_vs_sequential_nfe_at_matched_kl'; do
+        grep -q "$row" BENCH_pit.json || {
+            echo "tier-1 FAIL: row '$row' missing from BENCH_pit.json"
+            exit 1
+        }
+    done
+    grep -q '"pass":true' BENCH_pit.json || {
+        echo "tier-1 FAIL: BENCH_pit.json headline did not pass (PIT must beat sequential rounds at matched KL)"
+        exit 1
+    }
 fi
 
 echo "tier-1 OK"

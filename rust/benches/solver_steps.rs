@@ -11,7 +11,11 @@
 //! - `markov_oracle_probs*`: dense vs masked-sparse score evaluation;
 //! - `generate NFE=64 ...`: single-lane end-to-end (row names stable since
 //!   the seed bench — compare across PRs);
-//! - `generate_batch B=8 ...`: batched lane-parallel path vs single lanes.
+//! - `generate_batch B=8 ...`: batched lane-parallel path vs single lanes;
+//! - `hmm_eval {scalar,blocked,soa-batch} V=...` + `pit_slice_eval` +
+//!   `hmm_soa_headline`: the kernel roofline (ns/eval, GF/s) — scalar
+//!   reference vs blocked vs SoA-batched message passes; tier1.sh gates
+//!   the headline speedup.
 
 use fastdds::bench::{bench, black_box, BenchResult};
 use fastdds::ctmc::ToyModel;
@@ -27,17 +31,25 @@ struct Report {
 
 impl Report {
     fn push(&mut self, r: &BenchResult, items_per_iter: f64) {
+        self.push_with(r, items_per_iter, Vec::new());
+    }
+
+    /// As [`Report::push`] with extra JSON fields appended to the row (the
+    /// roofline rows carry ns-per-eval and GF/s alongside the raw timings).
+    fn push_with(&mut self, r: &BenchResult, items_per_iter: f64, extra: Vec<(&str, Json)>) {
         println!(
             "{}  ({:.1} samples/s)",
             r.report(),
             r.items_per_sec(items_per_iter)
         );
-        self.rows.push(Json::obj(vec![
+        let mut fields = vec![
             ("name", Json::from(r.name.trim())),
             ("ns_per_iter", Json::Num(r.mean_ns)),
             ("p50_ns", Json::Num(r.p50_ns)),
             ("samples_per_s", Json::Num(r.items_per_sec(items_per_iter))),
-        ]));
+        ];
+        fields.extend(extra);
+        self.rows.push(Json::obj(fields));
     }
 
     fn write(&self, quick: bool) {
@@ -280,6 +292,118 @@ fn main() {
             },
         );
         report.push(&r, 1.0);
+    }
+
+    // --- roofline: blocked/SoA HMM kernels vs frozen scalar reference ----
+    // The per-NFE cost unit at three vocab scales, three ways: the frozen
+    // scalar reference (`hmm::reference`), the blocked single-lane kernels,
+    // and the SoA batched path amortising one matrix walk over 8 lanes.
+    // ns_per_eval and GF/s ride on every row; the `hmm_soa_headline` row
+    // carries the tier-1-gated speedup (SoA per-lane vs scalar at V=64).
+    {
+        use fastdds::score::hmm::{reference, HmmUniformOracle};
+        use fastdds::score::{masked_indices, Tok};
+        use fastdds::util::rng::Rng;
+
+        let l = 64usize;
+        let b = 8usize;
+        let mut headline = (f64::NAN, f64::NAN); // (scalar, soa) ns/eval at V=64
+        for &v in &[8usize, 64, 256] {
+            let mut rng = Xoshiro256::seed_from_u64(100 + v as u64);
+            let o = HmmUniformOracle::new(MarkovChain::generate(&mut rng, v, 0.5), l);
+            let mask = o.mask_id();
+            let lanes: Vec<(Vec<Tok>, Vec<usize>)> = (0..b)
+                .map(|_| {
+                    let tokens: Vec<Tok> = (0..l)
+                        .map(|_| {
+                            if rng.gen_bool(0.5) {
+                                mask
+                            } else {
+                                rng.gen_usize(v) as Tok
+                            }
+                        })
+                        .collect();
+                    let idx = masked_indices(&tokens, mask);
+                    (tokens, idx)
+                })
+                .collect();
+            // Flops model: forward + backward transfers are each ~2·L·V²
+            // mul/adds, so 4·L·V² flops per evaluation; flop/ns == GF/s.
+            let flops = 4.0 * l as f64 * (v * v) as f64;
+
+            let (tk0, ix0) = (&lanes[0].0, &lanes[0].1);
+            let mut buf0 = vec![0.0; ix0.len() * v];
+            let mut ws = reference::RefScratch::new();
+            let r = bench(&format!("hmm_eval scalar V={v}"), warm_p, it_p, || {
+                reference::probs_masked_scalar(
+                    &o.chain,
+                    black_box(tk0),
+                    ix0,
+                    0.35,
+                    &mut ws,
+                    &mut buf0,
+                );
+            });
+            let scalar_ns = r.mean_ns;
+            report.push_with(&r, 1.0, vec![
+                ("ns_per_eval", Json::Num(scalar_ns)),
+                ("gf_per_s", Json::Num(flops / scalar_ns)),
+            ]);
+
+            let r = bench(&format!("hmm_eval blocked V={v}"), warm_p, it_p, || {
+                o.probs_masked_into(black_box(tk0), ix0, 0.35, &mut buf0);
+            });
+            report.push_with(&r, 1.0, vec![
+                ("ns_per_eval", Json::Num(r.mean_ns)),
+                ("gf_per_s", Json::Num(flops / r.mean_ns)),
+            ]);
+
+            let mut bufs: Vec<Vec<f64>> =
+                lanes.iter().map(|(_, ix)| vec![0.0; ix.len() * v]).collect();
+            let reqs: Vec<(&[Tok], &[usize])> =
+                lanes.iter().map(|(tk, ix)| (tk.as_slice(), ix.as_slice())).collect();
+            let r = bench(&format!("hmm_eval soa-batch B=8 V={v}"), warm_p, it_p, || {
+                let mut outs: Vec<&mut [f64]> =
+                    bufs.iter_mut().map(|x| x.as_mut_slice()).collect();
+                o.probs_masked_batch(black_box(&reqs), 0.35, &mut outs);
+            });
+            let soa_ns = r.mean_ns / b as f64;
+            report.push_with(&r, b as f64, vec![
+                ("ns_per_eval", Json::Num(soa_ns)),
+                ("gf_per_s", Json::Num(flops / soa_ns)),
+            ]);
+
+            if v == 64 {
+                headline = (scalar_ns, soa_ns);
+                // PIT slice-eval wall-clock: mixed per-slice t through the
+                // same SoA path (the parallel-in-time sweep seam).
+                let sreqs: Vec<(&[Tok], &[usize], f64)> = lanes
+                    .iter()
+                    .enumerate()
+                    .map(|(k, (tk, ix))| (tk.as_slice(), ix.as_slice(), 0.1 + 0.1 * k as f64))
+                    .collect();
+                let r = bench("pit_slice_eval B=8 V=64", warm_p, it_p, || {
+                    let mut outs: Vec<&mut [f64]> =
+                        bufs.iter_mut().map(|x| x.as_mut_slice()).collect();
+                    o.probs_masked_slices(black_box(&sreqs), &mut outs);
+                });
+                report.push_with(&r, b as f64, vec![
+                    ("ns_per_eval", Json::Num(r.mean_ns / b as f64)),
+                    ("gf_per_s", Json::Num(flops / (r.mean_ns / b as f64))),
+                ]);
+            }
+        }
+        let (scalar_ns, soa_ns) = headline;
+        let speedup = scalar_ns / soa_ns;
+        let pass = speedup >= 1.5;
+        println!("hmm_soa_headline V=64 B=8: {speedup:.2}x scalar-per-lane (pass={pass})");
+        report.rows.push(Json::obj(vec![
+            ("name", Json::from("hmm_soa_headline V=64 B=8")),
+            ("scalar_ns_per_eval", Json::Num(scalar_ns)),
+            ("soa_ns_per_eval", Json::Num(soa_ns)),
+            ("speedup", Json::Num(speedup)),
+            ("pass", Json::from(pass)),
+        ]));
     }
 
     // --- PJRT artifact dispatch (runtime hot path) -----------------------

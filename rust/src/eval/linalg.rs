@@ -7,7 +7,9 @@
 //! Jacobi sweeps run entirely inside an [`EigenWorkspace`] — the FID hot
 //! loop (`eval::fid::frechet_distance_with`) performs zero allocations
 //! once warm.  Matrix products are k-blocked so the B-operand rows stay in
-//! cache across output rows.
+//! cache across output rows, and the row updates run through the shared
+//! blocked primitives in [`crate::score::kernels`] (same per-element op
+//! order — results are unchanged bit for bit).
 
 /// Row-major square matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -91,9 +93,7 @@ impl Mat {
                         continue;
                     }
                     let brow = &other.data[k * n..(k + 1) * n];
-                    for (o, &b) in orow.iter_mut().zip(brow) {
-                        *o += a * b;
-                    }
+                    crate::score::kernels::axpy(orow, a, brow);
                 }
             }
         }
@@ -259,9 +259,7 @@ pub fn sqrt_psd_into(a: &Mat, out: &mut Mat, ws: &mut EigenWorkspace) {
                 continue;
             }
             let orow = &mut out.data[i * n..(i + 1) * n];
-            for (o, &c) in orow.iter_mut().zip(ws.col.iter()) {
-                *o += vik * c;
-            }
+            crate::score::kernels::axpy(orow, vik, &ws.col);
         }
     }
 }

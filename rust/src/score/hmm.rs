@@ -33,30 +33,87 @@
 //! `ratios` and `posterior_row` get the same treatment (elementwise α⊙β
 //! products, rank-one emission correction) — no per-element branches on
 //! any hot loop.  Masked tokens (id = V) simply drop the rank-one term.
+//!
+//! ## Blocked kernels and the SoA batched path
+//!
+//! The O(V²) transfer loops run through the shared 4-wide blocked
+//! primitives in [`crate::score::kernels`] (axpy for the forward
+//! accumulation, 4-row scaled dots for the backward transfer), which
+//! vectorize across the *output* dimension only — every output element
+//! keeps its sequential accumulation order, so the blocked passes are
+//! bitwise identical to the scalar kernels they replaced (frozen verbatim
+//! in [`reference`]; `tests/kernel_parity.rs` pins the equality).
+//!
+//! For co-batched lanes ([`ScoreSource::probs_masked_batch`] /
+//! [`ScoreSource::probs_masked_slices`]) the oracle overrides the per-lane
+//! default with a structure-of-arrays path: lanes are grouped into blocks
+//! of [`kernels::LANES`], each block's α/β messages interleaved lane-major
+//! (`buf[pos·V·4 + state·4 + lane]`), so ONE walk of the V×V transition
+//! matrix per transfer step serves all four lanes of a block with
+//! contiguous 4-wide loads — instead of every lane's thread re-walking
+//! `chain.a`.  The thread pool still fans out across lane *blocks*, and a
+//! `debug_assertions` cross-check re-evaluates every block lane against
+//! the single-lane path and asserts bitwise equality (same standing as the
+//! PR 4 bracket verification).  See `score/mod.rs` for the layout notes.
 
+use std::cell::Cell;
+use std::hash::{Hash, Hasher};
 use std::sync::Mutex;
 
 use crate::ctmc::uniformization::{
     simulate_backward_ctl, ExactCfg, ExactStats, JumpProcess, WindowBound,
 };
+use crate::score::kernels::{self, LANES};
 use crate::score::markov::MarkovChain;
 use crate::score::{ScoreSource, Tok};
 use crate::util::cancel::StopCtl;
 use crate::util::rng::{Rng, Xoshiro256};
+use crate::util::threadpool::{par_zip_mut, ThreadPool};
 
 /// Forward horizon of the uniform-state process when served end to end
 /// ([`ScoreSource::exact_uniform`]): per-dimension mixing error e^{-T} is
 /// ~2.5e-3, matching the Fig. 1 setup.
 pub const DEFAULT_UNIFORM_HORIZON: f64 = 6.0;
 
-/// Warm workspaces kept beyond this count are dropped instead of pooled
-/// (bounds pool memory if a burst of threads ever races the pops).
-const MAX_POOL: usize = 64;
+/// Number of independent workspace stripes.  Each evaluating thread hashes
+/// its `ThreadId` to a stripe once (cached in a thread-local), so under the
+/// batched SoA kernels concurrent lane-block threads almost never contend
+/// on the same lock — the failure mode the old single `Mutex<Vec<_>>` pool
+/// had, where every thread hit one lock twice per evaluation.
+const STRIPES: usize = 8;
+
+/// Warm workspaces kept per stripe beyond this count are dropped instead
+/// of pooled (bounds pool memory if a burst of threads races the pops).
+const MAX_PER_STRIPE: usize = 8;
+
+/// Stripe this thread's workspaces live in: `hash(ThreadId) % STRIPES`,
+/// computed once per thread and cached.  Scoped threads spawned by
+/// `par_zip_mut` are short-lived, so owning the workspace in a
+/// thread-local would discard it when the scope ends; striping keeps the
+/// warm buffers in the oracle (shared across calls) while giving each
+/// concurrent thread its own lock with high probability.
+fn stripe_index() -> usize {
+    thread_local! {
+        static STRIPE: Cell<usize> = Cell::new(usize::MAX);
+    }
+    STRIPE.with(|s| {
+        let mut idx = s.get();
+        if idx == usize::MAX {
+            let mut h = std::collections::hash_map::DefaultHasher::new();
+            std::thread::current().id().hash(&mut h);
+            idx = (h.finish() as usize) % STRIPES;
+            s.set(idx);
+        }
+        idx
+    })
+}
 
 /// Scratch buffers for the O(L·V²) message pass, carried through a `&mut`
 /// workspace (same pattern as `solvers/masked.rs`'s `Scratch`) so the
 /// uniform-path hot loop — one message pass per NFE, one per
 /// uniformization candidate — performs no per-call allocations once warm.
+/// The `soa_*` buffers are the lane-major blocks of the batched path
+/// (sized only when a batched evaluation runs).
 #[derive(Default)]
 pub struct HmmWorkspace {
     /// alpha_bar[i*V + z] ∝ P(x_{0..i-1}, z_i = z), emission at i excluded.
@@ -65,6 +122,12 @@ pub struct HmmWorkspace {
     beta: Vec<f64>,
     /// Per-position transfer/product row.
     tmp: Vec<f64>,
+    /// SoA forward messages: soa_alpha[i*V*LANES + z*LANES + lane].
+    soa_alpha: Vec<f64>,
+    /// SoA backward messages, same layout.
+    soa_beta: Vec<f64>,
+    /// SoA per-position transfer row: soa_tmp[z*LANES + lane].
+    soa_tmp: Vec<f64>,
 }
 
 impl HmmWorkspace {
@@ -72,8 +135,8 @@ impl HmmWorkspace {
         Self::default()
     }
 
-    /// Size the buffers; contents need no reset — every pass fully
-    /// overwrites the rows it reads.
+    /// Size the single-lane buffers; contents need no reset — every pass
+    /// fully overwrites the rows it reads.
     fn ensure(&mut self, l: usize, v: usize) {
         if self.alpha_bar.len() != l * v {
             self.alpha_bar.resize(l * v, 0.0);
@@ -81,6 +144,17 @@ impl HmmWorkspace {
         }
         if self.tmp.len() != v {
             self.tmp.resize(v, 0.0);
+        }
+    }
+
+    /// Size the SoA lane-block buffers (batched path only).
+    fn ensure_soa(&mut self, l: usize, v: usize) {
+        if self.soa_alpha.len() != l * v * LANES {
+            self.soa_alpha.resize(l * v * LANES, 0.0);
+            self.soa_beta.resize(l * v * LANES, 0.0);
+        }
+        if self.soa_tmp.len() != v * LANES {
+            self.soa_tmp.resize(v * LANES, 0.0);
         }
     }
 }
@@ -91,18 +165,21 @@ pub struct HmmUniformOracle {
     /// Forward horizon the served uniform-state exact path simulates from
     /// ([`DEFAULT_UNIFORM_HORIZON`]; tune via [`HmmUniformOracle::with_horizon`]).
     pub horizon: f64,
-    /// Warm workspaces, one per concurrently evaluating thread; the lock is
-    /// held only for the pop/push, never across a message pass.
-    pool: Mutex<Vec<HmmWorkspace>>,
+    /// Warm workspaces, striped by thread ([`stripe_index`]) so concurrent
+    /// lane-block threads take different locks; each lock is held only for
+    /// the pop/push, never across a message pass.
+    pool: Box<[Mutex<Vec<HmmWorkspace>>]>,
 }
 
 impl HmmUniformOracle {
     pub fn new(chain: MarkovChain, seq_len: usize) -> Self {
+        let pool: Box<[Mutex<Vec<HmmWorkspace>>]> =
+            (0..STRIPES).map(|_| Mutex::new(Vec::new())).collect();
         Self {
             chain,
             seq_len,
             horizon: DEFAULT_UNIFORM_HORIZON,
-            pool: Mutex::new(Vec::new()),
+            pool,
         }
     }
 
@@ -112,21 +189,22 @@ impl HmmUniformOracle {
         self
     }
 
-    /// Run `f` with a pooled workspace (allocating one only when every warm
-    /// workspace is in use by another thread).  A poisoned lock only means
-    /// another thread panicked between pop and push; the pool itself is
-    /// still valid, so recover it — treating poison as "no pool" would
-    /// silently allocate a fresh workspace on every subsequent call.
+    /// Run `f` with a pooled workspace from this thread's stripe
+    /// (allocating one only when the stripe is empty).  A poisoned stripe
+    /// lock only means another thread panicked between pop and push; the
+    /// stripe itself is still valid, so recover it — treating poison as
+    /// "no pool" would silently allocate a fresh workspace on every
+    /// subsequent call from threads mapping to that stripe.
     fn with_workspace<R>(&self, f: impl FnOnce(&mut HmmWorkspace) -> R) -> R {
-        let mut ws = self
-            .pool
+        let stripe = &self.pool[stripe_index()];
+        let mut ws = stripe
             .lock()
             .unwrap_or_else(|e| e.into_inner())
             .pop()
             .unwrap_or_default();
         let out = f(&mut ws);
-        let mut pool = self.pool.lock().unwrap_or_else(|e| e.into_inner());
-        if pool.len() < MAX_POOL {
+        let mut pool = stripe.lock().unwrap_or_else(|e| e.into_inner());
+        if pool.len() < MAX_PER_STRIPE {
             pool.push(ws);
         }
         out
@@ -150,7 +228,9 @@ impl HmmUniformOracle {
     /// token (id = V) contribute a constant emission — i.e. no evidence —
     /// which makes the same pass serve both the uniform-state ratios and the
     /// masked [`ScoreSource`] view below.  Transfers run in the rank-one
-    /// branch-free form (module docs).
+    /// branch-free form (module docs) through the blocked
+    /// [`crate::score::kernels`] primitives — bitwise identical to the
+    /// scalar loops frozen in [`reference`].
     fn messages_into(&self, tokens: &[Tok], t: f64, ws: &mut HmmWorkspace) {
         let v = self.chain.vocab;
         let l = self.seq_len;
@@ -169,15 +249,14 @@ impl HmmUniformOracle {
             let (head, tail) = ws.alpha_bar.split_at_mut(i * v);
             let prev = &head[(i - 1) * v..];
             let out = &mut tail[..v];
-            // tmp = A^T prev, accumulated row-wise (axpy of prev[z]*A[z,:]).
+            // tmp = A^T prev, accumulated row-wise (blocked axpy of
+            // prev[z]*A[z,:] — one mul/add per output element per z, so the
+            // per-element accumulation order is unchanged).
             ws.tmp.fill(0.0);
             let mut s = 0.0;
             for (z, &az) in prev.iter().enumerate() {
                 s += az;
-                let row = &a[z * v..(z + 1) * v];
-                for (acc, &r) in ws.tmp.iter_mut().zip(row) {
-                    *acc += az * r;
-                }
+                kernels::axpy(&mut ws.tmp, az, &a[z * v..(z + 1) * v]);
             }
             // Rank-one emission correction; a masked token (id = V) has the
             // constant emission a_t only.
@@ -197,7 +276,9 @@ impl HmmUniformOracle {
 
         // Backward: beta[i] = A (D_{i+1} beta[i+1]) / norm.  The emission is
         // folded into the message first (tmp = D β: one scale plus one
-        // element bump), leaving the O(V²) transfer as contiguous dots.
+        // element bump), leaving the O(V²) transfer as contiguous dots —
+        // blocked 4 output rows at a time, each row's dot in ascending
+        // reduction order.
         for z in 0..v {
             ws.beta[(l - 1) * v + z] = 1.0;
         }
@@ -218,14 +299,7 @@ impl HmmUniformOracle {
                 norm += bump;
             }
             let inv = 1.0 / norm;
-            for (z, o) in out.iter_mut().enumerate() {
-                let row = &a[z * v..(z + 1) * v];
-                let mut acc = 0.0;
-                for (&az, &d) in row.iter().zip(ws.tmp.iter()) {
-                    acc += az * d;
-                }
-                *o = acc * inv;
-            }
+            kernels::matvec_rows_scaled(a, v, &ws.tmp, inv, out);
         }
     }
 
@@ -248,15 +322,18 @@ impl HmmUniformOracle {
 
             // Ratios: numerator(v) = a_t * S_i + b_t * g_i(v) where
             // g_i(z) = alpha_bar[i][z] * beta[i][z], S_i = sum_z g_i(z) —
-            // g formed once per position, branch-free.
+            // g formed once per position (blocked elementwise product),
+            // then summed in ascending order: the same additions reach S_i
+            // in the same sequence as the old fused loop.
             for i in 0..l {
                 let xi = tokens[i] as usize;
                 let ab = &ws.alpha_bar[i * v..(i + 1) * v];
                 let be = &ws.beta[i * v..(i + 1) * v];
+                ws.tmp.copy_from_slice(ab);
+                kernels::mul_assign(&mut ws.tmp, be);
                 let mut s_i = 0.0;
-                for ((g, &az), &bz) in ws.tmp.iter_mut().zip(ab).zip(be) {
-                    *g = az * bz;
-                    s_i += *g;
+                for &g in ws.tmp.iter() {
+                    s_i += g;
                 }
                 let base = a_t * s_i;
                 let gx = if xi < v { ws.tmp[xi] } else { 0.0 };
@@ -280,9 +357,7 @@ impl HmmUniformOracle {
         let mut tot = 0.0;
         for i in 0..self.seq_len {
             let row = &mut out[i * v..(i + 1) * v];
-            for r in row.iter_mut() {
-                *r *= inv_v;
-            }
+            kernels::scale(row, inv_v);
             let xi = tokens[i] as usize;
             if xi < v {
                 row[xi] = 0.0;
@@ -292,6 +367,197 @@ impl HmmUniformOracle {
             }
         }
         tot
+    }
+
+    /// One SoA lane block: evaluate exactly [`LANES`] co-batched masked
+    /// requests — `(tokens, masked_idx, t)` each — with a single walk of
+    /// the transition matrix per transfer step.  The α/β messages are held
+    /// lane-major (`buf[i·V·4 + z·4 + lane]`); per (position, state, lane)
+    /// output element the accumulation order over the reduction dimension
+    /// is identical to the single-lane pass, so every lane's rows are
+    /// bitwise equal to [`ScoreSource::probs_masked_into`] on that lane —
+    /// asserted here under `debug_assertions` (the PR 4
+    /// bracket-verification pattern) and pinned by `tests/kernel_parity.rs`.
+    fn eval_block_soa4(&self, items: &[(&[Tok], &[usize], f64)], outs: &mut [&mut [f64]]) {
+        debug_assert_eq!(items.len(), LANES);
+        debug_assert_eq!(outs.len(), LANES);
+        let v = self.chain.vocab;
+        let l = self.seq_len;
+        let a = &self.chain.a;
+        let mut at = [0.0f64; LANES];
+        let mut bt = [0.0f64; LANES];
+        for k in 0..LANES {
+            debug_assert_eq!(items[k].0.len(), l);
+            let (a_t, b_t) = self.emission(items[k].2);
+            at[k] = a_t;
+            bt[k] = b_t;
+        }
+
+        self.with_workspace(|ws| {
+            ws.ensure_soa(l, v);
+
+            // Forward, all lanes per step: one pass over A's rows builds
+            // A^T · prev for every lane (soa4_rank1_acc), then the rank-one
+            // emission correction is applied per lane (O(V) each).
+            for z in 0..v {
+                let p = self.chain.pi[z];
+                for k in 0..LANES {
+                    ws.soa_alpha[z * LANES + k] = p;
+                }
+            }
+            for i in 1..l {
+                let (head, tail) = ws.soa_alpha.split_at_mut(i * v * LANES);
+                let prev = &head[(i - 1) * v * LANES..];
+                let out = &mut tail[..v * LANES];
+                ws.soa_tmp.fill(0.0);
+                let mut s = [0.0f64; LANES];
+                for z in 0..v {
+                    let p = &prev[z * LANES..(z + 1) * LANES];
+                    let az = [p[0], p[1], p[2], p[3]];
+                    s[0] += az[0];
+                    s[1] += az[1];
+                    s[2] += az[2];
+                    s[3] += az[3];
+                    kernels::soa4_rank1_acc(&mut ws.soa_tmp, &a[z * v..(z + 1) * v], &az);
+                }
+                for k in 0..LANES {
+                    let xi = items[k].0[i - 1] as usize;
+                    let g = if xi < v { bt[k] * prev[xi * LANES + k] } else { 0.0 };
+                    let inv = 1.0 / (at[k] * s[k] + g);
+                    if g != 0.0 {
+                        let row = &a[xi * v..(xi + 1) * v];
+                        for j in 0..v {
+                            out[j * LANES + k] =
+                                (at[k] * ws.soa_tmp[j * LANES + k] + g * row[j]) * inv;
+                        }
+                    } else {
+                        for j in 0..v {
+                            out[j * LANES + k] = at[k] * ws.soa_tmp[j * LANES + k] * inv;
+                        }
+                    }
+                }
+            }
+
+            // Backward, all lanes per step: fold each lane's emission into
+            // the message (per-lane O(V)), then one pass over A's rows
+            // serves every lane's contiguous dots (soa4_dot).
+            let base_last = (l - 1) * v * LANES;
+            for z in 0..v {
+                for k in 0..LANES {
+                    ws.soa_beta[base_last + z * LANES + k] = 1.0;
+                }
+            }
+            for i in (0..l - 1).rev() {
+                let (head, tail) = ws.soa_beta.split_at_mut((i + 1) * v * LANES);
+                let next = &tail[..v * LANES];
+                let out = &mut head[i * v * LANES..];
+                let mut s = [0.0f64; LANES];
+                for z in 0..v {
+                    for k in 0..LANES {
+                        let bz = next[z * LANES + k];
+                        ws.soa_tmp[z * LANES + k] = at[k] * bz;
+                        s[k] += bz;
+                    }
+                }
+                let mut inv = [0.0f64; LANES];
+                for k in 0..LANES {
+                    let mut norm = at[k] * s[k];
+                    let xi = items[k].0[i + 1] as usize;
+                    if xi < v {
+                        let bump = bt[k] * next[xi * LANES + k];
+                        ws.soa_tmp[xi * LANES + k] += bump;
+                        norm += bump;
+                    }
+                    inv[k] = 1.0 / norm;
+                }
+                for z in 0..v {
+                    let acc = kernels::soa4_dot(&a[z * v..(z + 1) * v], &ws.soa_tmp);
+                    out[z * LANES] = acc[0] * inv[0];
+                    out[z * LANES + 1] = acc[1] * inv[1];
+                    out[z * LANES + 2] = acc[2] * inv[2];
+                    out[z * LANES + 3] = acc[3] * inv[3];
+                }
+            }
+
+            // Posterior rows per lane, reading the strided messages with
+            // the exact op sequence of the single-lane `posterior_row`.
+            for k in 0..LANES {
+                let (tokens, idx, _) = items[k];
+                let out = &mut *outs[k];
+                debug_assert_eq!(out.len(), idx.len() * v);
+                for (r, &i) in idx.iter().enumerate() {
+                    posterior_row_strided(
+                        &ws.soa_alpha[i * v * LANES..(i + 1) * v * LANES],
+                        &ws.soa_beta[i * v * LANES..(i + 1) * v * LANES],
+                        k,
+                        tokens[i],
+                        at[k],
+                        bt[k],
+                        &mut out[r * v..(r + 1) * v],
+                    );
+                }
+            }
+        });
+
+        // Bracket-verification-style cross-check: under debug_assertions,
+        // every SoA lane is re-evaluated through the single-lane path and
+        // must match bit for bit.
+        #[cfg(debug_assertions)]
+        for k in 0..LANES {
+            let (tokens, idx, t) = items[k];
+            let mut want = vec![0.0; idx.len() * v];
+            self.probs_masked_into(tokens, idx, t, &mut want);
+            assert_eq!(
+                &*outs[k],
+                want.as_slice(),
+                "SoA lane {k} diverged from the single-lane path"
+            );
+        }
+    }
+
+    /// Batched masked evaluation over any number of lanes: full blocks of
+    /// [`LANES`] run the SoA kernel ([`Self::eval_block_soa4`]), the
+    /// remainder block (1..LANES lanes) falls back to the single-lane path
+    /// — bitwise identical either way, so block boundaries never show in
+    /// the output.  Lane *blocks* (not lanes) fan out across the thread
+    /// pool, keeping the one-matrix-walk-per-block win intact under
+    /// threading; single-request batches skip fan-out entirely.
+    fn eval_lanes_soa(&self, items: &[(&[Tok], &[usize], f64)], outs: &mut [&mut [f64]]) {
+        assert_eq!(items.len(), outs.len(), "SoA batch arity mismatch");
+        let n = items.len();
+        if n == 0 {
+            return;
+        }
+        if n == 1 {
+            let (tokens, idx, t) = items[0];
+            self.probs_masked_into(tokens, idx, t, &mut *outs[0]);
+            return;
+        }
+        let mut item_blocks: Vec<&[(&[Tok], &[usize], f64)]> = Vec::new();
+        let mut out_blocks: Vec<&mut [&mut [f64]]> = Vec::new();
+        {
+            let mut rest_items = items;
+            let mut rest_outs = outs;
+            while !rest_items.is_empty() {
+                let take = rest_items.len().min(LANES);
+                let (ib, ri) = rest_items.split_at(take);
+                let (ob, ro) = std::mem::take(&mut rest_outs).split_at_mut(take);
+                item_blocks.push(ib);
+                out_blocks.push(ob);
+                rest_items = ri;
+                rest_outs = ro;
+            }
+        }
+        let threads = ThreadPool::default_size().min(out_blocks.len());
+        par_zip_mut(&mut out_blocks, &item_blocks, threads, |_, oc, ic| {
+            if ic.len() == LANES {
+                self.eval_block_soa4(ic, oc);
+            } else {
+                for (j, &(tokens, idx, t)) in ic.iter().enumerate() {
+                    self.probs_masked_into(tokens, idx, t, &mut *oc[j]);
+                }
+            }
+        });
     }
 }
 
@@ -351,6 +617,27 @@ impl ScoreSource for HmmUniformOracle {
                 );
             }
         })
+    }
+
+    /// Native SoA batch: lanes share one transition-matrix walk per
+    /// transfer step in blocks of [`LANES`] ([`Self::eval_block_soa4`]),
+    /// instead of the default's thread-per-lane re-walk.  Rows are bitwise
+    /// identical to the per-lane path.
+    fn probs_masked_batch(&self, reqs: &[(&[Tok], &[usize])], t: f64, outs: &mut [&mut [f64]]) {
+        assert_eq!(reqs.len(), outs.len(), "probs_masked_batch arity mismatch");
+        let items: Vec<(&[Tok], &[usize], f64)> =
+            reqs.iter().map(|&(tokens, idx)| (tokens, idx, t)).collect();
+        self.eval_lanes_soa(&items, outs);
+    }
+
+    /// Native SoA slice batch (the parallel-in-time seam): time enters the
+    /// SoA kernel as a per-lane emission parameter, so mixed-`t` slices
+    /// co-batch in one matrix walk exactly like same-`t` lanes — this is
+    /// the thread-parallel sweep evaluation the PIT follow-up called for,
+    /// with SoA sharing inside each block on top.
+    fn probs_masked_slices(&self, reqs: &[(&[Tok], &[usize], f64)], outs: &mut [&mut [f64]]) {
+        assert_eq!(reqs.len(), outs.len(), "probs_masked_slices arity mismatch");
+        self.eval_lanes_soa(reqs, outs);
     }
 
     /// The HMM oracle's native process IS the uniform-state diffusion, so
@@ -426,9 +713,42 @@ fn posterior_row(
     if tot > 0.0 {
         let inv = 1.0 / tot;
         let scale = a_t * inv;
-        for o in out.iter_mut() {
-            *o *= scale;
+        kernels::scale(out, scale);
+        if xi < v {
+            out[xi] += bump * inv;
         }
+    } else {
+        out.fill(1.0 / v as f64);
+    }
+}
+
+/// [`posterior_row`] reading lane `lane` of SoA lane-major message blocks
+/// (`buf[z·LANES + lane]`).  Same operations in the same order — the
+/// strided read is the only difference, so the output is bitwise equal to
+/// the contiguous version on the same message values.
+fn posterior_row_strided(
+    alpha4: &[f64],
+    beta4: &[f64],
+    lane: usize,
+    token: Tok,
+    a_t: f64,
+    b_t: f64,
+    out: &mut [f64],
+) {
+    let v = out.len();
+    let mut s = 0.0;
+    for (z, o) in out.iter_mut().enumerate() {
+        let g = alpha4[z * LANES + lane] * beta4[z * LANES + lane];
+        *o = g;
+        s += g;
+    }
+    let xi = token as usize;
+    let bump = if xi < v { b_t * out[xi] } else { 0.0 };
+    let tot = a_t * s + bump;
+    if tot > 0.0 {
+        let inv = 1.0 / tot;
+        let scale = a_t * inv;
+        kernels::scale(out, scale);
         if xi < v {
             out[xi] += bump * inv;
         }
@@ -543,6 +863,209 @@ impl JumpProcess for UniformTextJump<'_> {
     fn apply(&self, x: &mut Vec<Tok>, nu: usize) {
         let v = self.oracle.chain.vocab;
         x[nu / v] = (nu % v) as Tok;
+    }
+}
+
+/// Frozen scalar reference copies of the HMM kernels, verbatim from before
+/// the blocked/SoA rewrite.  They are the bitwise ground truth the blocked
+/// paths are pinned against (`tests/kernel_parity.rs`) and the scalar
+/// baseline the roofline bench rows measure (`benches/solver_steps.rs`) —
+/// deliberately self-contained and never called from the serving path.
+pub mod reference {
+    use crate::score::markov::MarkovChain;
+    use crate::score::Tok;
+
+    /// Scratch for the reference pass, mirroring the production
+    /// `HmmWorkspace` (alpha_bar / beta / tmp).
+    #[derive(Default)]
+    pub struct RefScratch {
+        alpha_bar: Vec<f64>,
+        beta: Vec<f64>,
+        tmp: Vec<f64>,
+    }
+
+    impl RefScratch {
+        pub fn new() -> Self {
+            Self::default()
+        }
+
+        fn ensure(&mut self, l: usize, v: usize) {
+            if self.alpha_bar.len() != l * v {
+                self.alpha_bar.resize(l * v, 0.0);
+                self.beta.resize(l * v, 0.0);
+            }
+            if self.tmp.len() != v {
+                self.tmp.resize(v, 0.0);
+            }
+        }
+    }
+
+    #[inline]
+    fn emission(vocab: usize, t: f64) -> (f64, f64) {
+        let decay = (-t).exp();
+        ((1.0 - decay) / vocab as f64, decay)
+    }
+
+    /// Scalar forward/backward message pass (the pre-rewrite
+    /// `messages_into`, loop for loop).
+    pub fn messages_scalar(chain: &MarkovChain, tokens: &[Tok], t: f64, ws: &mut RefScratch) {
+        let v = chain.vocab;
+        let l = tokens.len();
+        let (a_t, b_t) = emission(v, t);
+        ws.ensure(l, v);
+        let a = &chain.a;
+
+        for z in 0..v {
+            ws.alpha_bar[z] = chain.pi[z];
+        }
+        for i in 1..l {
+            let xi = tokens[i - 1] as usize;
+            let (head, tail) = ws.alpha_bar.split_at_mut(i * v);
+            let prev = &head[(i - 1) * v..];
+            let out = &mut tail[..v];
+            ws.tmp.fill(0.0);
+            let mut s = 0.0;
+            for (z, &az) in prev.iter().enumerate() {
+                s += az;
+                let row = &a[z * v..(z + 1) * v];
+                for (acc, &r) in ws.tmp.iter_mut().zip(row) {
+                    *acc += az * r;
+                }
+            }
+            let g = if xi < v { b_t * prev[xi] } else { 0.0 };
+            let inv = 1.0 / (a_t * s + g);
+            if g != 0.0 {
+                let row = &a[xi * v..(xi + 1) * v];
+                for ((o, &acc), &r) in out.iter_mut().zip(ws.tmp.iter()).zip(row) {
+                    *o = (a_t * acc + g * r) * inv;
+                }
+            } else {
+                for (o, &acc) in out.iter_mut().zip(ws.tmp.iter()) {
+                    *o = a_t * acc * inv;
+                }
+            }
+        }
+
+        for z in 0..v {
+            ws.beta[(l - 1) * v + z] = 1.0;
+        }
+        for i in (0..l - 1).rev() {
+            let xi = tokens[i + 1] as usize;
+            let (head, tail) = ws.beta.split_at_mut((i + 1) * v);
+            let next = &tail[..v];
+            let out = &mut head[i * v..];
+            let mut s = 0.0;
+            for (d, &bz) in ws.tmp.iter_mut().zip(next) {
+                *d = a_t * bz;
+                s += bz;
+            }
+            let mut norm = a_t * s;
+            if xi < v {
+                let bump = b_t * next[xi];
+                ws.tmp[xi] += bump;
+                norm += bump;
+            }
+            let inv = 1.0 / norm;
+            for (z, o) in out.iter_mut().enumerate() {
+                let row = &a[z * v..(z + 1) * v];
+                let mut acc = 0.0;
+                for (&az, &d) in row.iter().zip(ws.tmp.iter()) {
+                    acc += az * d;
+                }
+                *o = acc * inv;
+            }
+        }
+    }
+
+    /// Scalar posterior row (the pre-rewrite `posterior_row`).
+    fn posterior_row_scalar(
+        alpha_bar: &[f64],
+        beta: &[f64],
+        token: Tok,
+        a_t: f64,
+        b_t: f64,
+        out: &mut [f64],
+    ) {
+        let v = out.len();
+        let mut s = 0.0;
+        for ((o, &az), &bz) in out.iter_mut().zip(alpha_bar).zip(beta) {
+            let g = az * bz;
+            *o = g;
+            s += g;
+        }
+        let xi = token as usize;
+        let bump = if xi < v { b_t * out[xi] } else { 0.0 };
+        let tot = a_t * s + bump;
+        if tot > 0.0 {
+            let inv = 1.0 / tot;
+            let scale = a_t * inv;
+            for o in out.iter_mut() {
+                *o *= scale;
+            }
+            if xi < v {
+                out[xi] += bump * inv;
+            }
+        } else {
+            out.fill(1.0 / v as f64);
+        }
+    }
+
+    /// Scalar sparse masked evaluation (the pre-rewrite
+    /// `probs_masked_into`): one message pass, then one posterior row per
+    /// requested position.
+    pub fn probs_masked_scalar(
+        chain: &MarkovChain,
+        tokens: &[Tok],
+        masked_idx: &[usize],
+        t: f64,
+        ws: &mut RefScratch,
+        out: &mut [f64],
+    ) {
+        let v = chain.vocab;
+        debug_assert_eq!(out.len(), masked_idx.len() * v);
+        let (a_t, b_t) = emission(v, t);
+        messages_scalar(chain, tokens, t, ws);
+        for (k, &i) in masked_idx.iter().enumerate() {
+            posterior_row_scalar(
+                &ws.alpha_bar[i * v..(i + 1) * v],
+                &ws.beta[i * v..(i + 1) * v],
+                tokens[i],
+                a_t,
+                b_t,
+                &mut out[k * v..(k + 1) * v],
+            );
+        }
+    }
+
+    /// Scalar single-site likelihood ratios (the pre-rewrite `ratios`).
+    pub fn ratios_scalar(
+        chain: &MarkovChain,
+        tokens: &[Tok],
+        t: f64,
+        ws: &mut RefScratch,
+        out: &mut [f64],
+    ) {
+        let v = chain.vocab;
+        let l = tokens.len();
+        debug_assert_eq!(out.len(), l * v);
+        let (a_t, b_t) = emission(v, t);
+        messages_scalar(chain, tokens, t, ws);
+        for i in 0..l {
+            let xi = tokens[i] as usize;
+            let ab = &ws.alpha_bar[i * v..(i + 1) * v];
+            let be = &ws.beta[i * v..(i + 1) * v];
+            let mut s_i = 0.0;
+            for ((g, &az), &bz) in ws.tmp.iter_mut().zip(ab).zip(be) {
+                *g = az * bz;
+                s_i += *g;
+            }
+            let base = a_t * s_i;
+            let gx = if xi < v { ws.tmp[xi] } else { 0.0 };
+            let inv = 1.0 / (base + b_t * gx).max(1e-300);
+            for (o, &g) in out[i * v..(i + 1) * v].iter_mut().zip(ws.tmp.iter()) {
+                *o = (base + b_t * g) * inv;
+            }
+        }
     }
 }
 
@@ -707,6 +1230,68 @@ mod tests {
     }
 
     #[test]
+    fn soa_batch_and_slices_match_per_lane_bitwise() {
+        let o = oracle(5, 8);
+        let mask = o.mask_id();
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        // 9 lanes: two full SoA blocks plus a 1-lane remainder block.
+        let lanes: Vec<(Vec<Tok>, Vec<usize>, f64)> = (0..9)
+            .map(|k| {
+                let tokens: Vec<Tok> = (0..8)
+                    .map(|_| if rng.gen_bool(0.5) { mask } else { rng.gen_usize(5) as Tok })
+                    .collect();
+                let idx = crate::score::masked_indices(&tokens, mask);
+                (tokens, idx, 0.2 + 0.1 * k as f64)
+            })
+            .collect();
+
+        // Same-t batch vs per-lane.
+        let t = 0.45;
+        let singles: Vec<Vec<f64>> = lanes
+            .iter()
+            .map(|(tk, ix, _)| {
+                let mut buf = vec![0.0; ix.len() * 5];
+                o.probs_masked_into(tk, ix, t, &mut buf);
+                buf
+            })
+            .collect();
+        let mut bufs: Vec<Vec<f64>> =
+            lanes.iter().map(|(_, ix, _)| vec![1.0; ix.len() * 5]).collect();
+        {
+            let reqs: Vec<(&[Tok], &[usize])> =
+                lanes.iter().map(|(tk, ix, _)| (tk.as_slice(), ix.as_slice())).collect();
+            let mut outs: Vec<&mut [f64]> = bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+            o.probs_masked_batch(&reqs, t, &mut outs);
+        }
+        for (k, (got, want)) in bufs.iter().zip(&singles).enumerate() {
+            assert_eq!(got, want, "batch lane {k}");
+        }
+
+        // Mixed-t slices vs per-lane (the PIT seam).
+        let slice_singles: Vec<Vec<f64>> = lanes
+            .iter()
+            .map(|(tk, ix, tl)| {
+                let mut buf = vec![0.0; ix.len() * 5];
+                o.probs_masked_into(tk, ix, *tl, &mut buf);
+                buf
+            })
+            .collect();
+        let mut bufs: Vec<Vec<f64>> =
+            lanes.iter().map(|(_, ix, _)| vec![1.0; ix.len() * 5]).collect();
+        {
+            let reqs: Vec<(&[Tok], &[usize], f64)> = lanes
+                .iter()
+                .map(|(tk, ix, tl)| (tk.as_slice(), ix.as_slice(), *tl))
+                .collect();
+            let mut outs: Vec<&mut [f64]> = bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+            o.probs_masked_slices(&reqs, &mut outs);
+        }
+        for (k, (got, want)) in bufs.iter().zip(&slice_singles).enumerate() {
+            assert_eq!(got, want, "slice lane {k}");
+        }
+    }
+
+    #[test]
     fn jump_apply_sets_token() {
         let o = oracle(3, 4);
         let j = UniformTextJump { oracle: &o, slack: 2.0 };
@@ -773,25 +1358,57 @@ mod tests {
     }
 
     #[test]
-    fn workspace_pool_survives_poisoned_lock() {
+    fn workspace_pool_survives_poisoned_stripes() {
         use std::sync::Arc;
         let o = Arc::new(oracle(3, 4));
         let x = vec![0u32, 2, 1, 1];
         let mut r = vec![0.0; 4 * 3];
         o.ratios(&x, 0.6, &mut r);
         let want = r.clone();
-        // Poison the pool lock from another thread.
+        // Poison EVERY stripe from another thread (the evaluating thread's
+        // stripe is hash-dependent, so poisoning all of them is the only
+        // deterministic way to hit it).
         let o2 = Arc::clone(&o);
         let _ = std::thread::spawn(move || {
-            let _guard = o2.pool.lock().unwrap();
-            panic!("poison the pool");
+            let guards: Vec<_> = o2.pool.iter().map(|m| m.lock().unwrap()).collect();
+            panic!("poison all {} stripes", guards.len());
         })
         .join();
-        assert!(o.pool.lock().is_err(), "lock must be poisoned for this test");
-        // Evaluations still work and still reuse the recovered pool.
+        assert!(
+            o.pool.iter().all(|m| m.lock().is_err()),
+            "every stripe must be poisoned for this test"
+        );
+        // Evaluations still work and still reuse the recovered stripes.
         o.ratios(&x, 0.6, &mut r);
         assert_eq!(r, want);
-        let pooled = o.pool.lock().unwrap_or_else(|e| e.into_inner()).len();
-        assert!(pooled >= 1, "workspace must be returned to the recovered pool");
+        let pooled: usize = o
+            .pool
+            .iter()
+            .map(|m| m.lock().unwrap_or_else(|e| e.into_inner()).len())
+            .sum();
+        assert!(pooled >= 1, "workspace must be returned to a recovered stripe");
+    }
+
+    #[test]
+    fn blocked_kernels_match_frozen_scalar_reference() {
+        // In-module smoke of the tests/kernel_parity.rs pins: blocked
+        // single-lane evaluation is bitwise equal to the frozen scalar copy.
+        let o = oracle(5, 7);
+        let mask = o.mask_id();
+        let tokens = vec![mask, 3u32, mask, 0, mask, mask, 4];
+        let idx = crate::score::masked_indices(&tokens, mask);
+        let mut got = vec![0.0; idx.len() * 5];
+        o.probs_masked_into(&tokens, &idx, 0.37, &mut got);
+        let mut want = vec![0.0; idx.len() * 5];
+        let mut ws = reference::RefScratch::new();
+        reference::probs_masked_scalar(&o.chain, &tokens, &idx, 0.37, &mut ws, &mut want);
+        assert_eq!(got, want);
+
+        let clean = vec![0u32, 2, 1, 1, 4, 3, 0];
+        let mut got = vec![0.0; 7 * 5];
+        o.ratios(&clean, 0.8, &mut got);
+        let mut want = vec![0.0; 7 * 5];
+        reference::ratios_scalar(&o.chain, &clean, 0.8, &mut ws, &mut want);
+        assert_eq!(got, want);
     }
 }

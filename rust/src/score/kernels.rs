@@ -1,0 +1,286 @@
+//! Blocked, explicitly vectorized f64 kernel primitives shared by the score
+//! hot paths ([`crate::score::hmm`], [`crate::score::markov`]), the dense
+//! linear algebra ([`crate::eval::linalg::Mat::matmul_into`] and the PSD
+//! square root), and — through the HMM intensities — the exact-path
+//! uniformization bound passes.
+//!
+//! ## Bitwise contract
+//!
+//! Every kernel here vectorizes **across the output dimension** only: each
+//! output element receives exactly the same sequence of mul/add operations,
+//! in the same order over the reduction dimension, as the scalar loop it
+//! replaces.  Reductions are never reordered — a 4-wide horizontal-sum
+//! would change the bits, and the golden-parity / pit-parity / exact
+//! jump-stream suites pin the oracles bit-for-bit.  `tests/kernel_parity.rs`
+//! asserts every kernel against embedded scalar reference copies across
+//! vocab sizes (odd sizes exercise the block tails).
+//!
+//! ## Why 4-wide unrolled blocks instead of `std::simd`
+//!
+//! `portable_simd` is nightly-only and no SIMD crate is vendored in this
+//! image, so the kernels are written in the fixed-width unrolled shape
+//! (`chunks_exact(4)` bodies with four independent accumulators) that LLVM
+//! reliably auto-vectorizes to 4-wide f64 SIMD at `opt-level = 3` without
+//! needing float reassociation: elementwise mul/add lanes are exact-IEEE
+//! whether executed scalar or packed, which is what keeps the bitwise
+//! contract free.
+//!
+//! ## Structure-of-arrays (SoA) lane blocks
+//!
+//! The `soa4_*` kernels serve the multi-lane batched score evaluation: a
+//! lane block holds [`LANES`] co-batched sequences interleaved lane-major
+//! (`buf[pos * V * LANES + state * LANES + lane]`), so one walk of the
+//! V x V transition matrix updates all lanes of a block with contiguous
+//! 4-wide loads/stores — instead of each lane's thread re-walking the
+//! matrix.  The reduction order per (state, lane) output stays ascending,
+//! so SoA rows are bitwise identical to the per-lane scalar pass.
+
+/// Width of an SoA lane block (and of the unrolled vector blocks): 4 f64
+/// lanes = one AVX2 register.
+pub const LANES: usize = 4;
+
+/// `acc[j] += x * row[j]` for all j — the rank-one axpy transfer, blocked
+/// 4-wide across the output dimension.  One mul/add per output element per
+/// call, so accumulation order is the caller's loop order (bitwise equal to
+/// the scalar loop for any blocking).
+#[inline]
+pub fn axpy(acc: &mut [f64], x: f64, row: &[f64]) {
+    debug_assert_eq!(acc.len(), row.len());
+    let mut ai = acc.chunks_exact_mut(LANES);
+    let mut ri = row.chunks_exact(LANES);
+    for (a, r) in (&mut ai).zip(&mut ri) {
+        a[0] += x * r[0];
+        a[1] += x * r[1];
+        a[2] += x * r[2];
+        a[3] += x * r[3];
+    }
+    for (a, &r) in ai.into_remainder().iter_mut().zip(ri.remainder()) {
+        *a += x * r;
+    }
+}
+
+/// `xs[j] *= c` for all j, blocked 4-wide.
+#[inline]
+pub fn scale(xs: &mut [f64], c: f64) {
+    let mut it = xs.chunks_exact_mut(LANES);
+    for x in &mut it {
+        x[0] *= c;
+        x[1] *= c;
+        x[2] *= c;
+        x[3] *= c;
+    }
+    for x in it.into_remainder() {
+        *x *= c;
+    }
+}
+
+/// `xs[j] /= c` for all j, blocked 4-wide.  Kept as a division (NOT a
+/// multiply by `1/c`) so rows normalised through this kernel stay bitwise
+/// identical to the historical `*rv /= tot` loops.
+#[inline]
+pub fn div_assign(xs: &mut [f64], c: f64) {
+    let mut it = xs.chunks_exact_mut(LANES);
+    for x in &mut it {
+        x[0] /= c;
+        x[1] /= c;
+        x[2] /= c;
+        x[3] /= c;
+    }
+    for x in it.into_remainder() {
+        *x /= c;
+    }
+}
+
+/// `xs[j] *= ys[j]` elementwise, blocked 4-wide.
+#[inline]
+pub fn mul_assign(xs: &mut [f64], ys: &[f64]) {
+    debug_assert_eq!(xs.len(), ys.len());
+    let mut xi = xs.chunks_exact_mut(LANES);
+    let mut yi = ys.chunks_exact(LANES);
+    for (x, y) in (&mut xi).zip(&mut yi) {
+        x[0] *= y[0];
+        x[1] *= y[1];
+        x[2] *= y[2];
+        x[3] *= y[3];
+    }
+    for (x, &y) in xi.into_remainder().iter_mut().zip(yi.remainder()) {
+        *x *= y;
+    }
+}
+
+/// `out[z] = scale * dot(a[z*n .. z*n+n], x)` for z in `0..out.len()` —
+/// the row-dot transfer, blocked 4 output rows at a time.  The four
+/// accumulators are independent and each runs over the reduction dimension
+/// in ascending order, sharing the `x[j]` load: bitwise identical to
+/// `out.len()` scalar dots, ~4x the ILP.
+#[inline]
+pub fn matvec_rows_scaled(a: &[f64], n: usize, x: &[f64], scale: f64, out: &mut [f64]) {
+    let rows = out.len();
+    debug_assert!(a.len() >= rows * n);
+    debug_assert_eq!(x.len(), n);
+    let mut z = 0usize;
+    while z + LANES <= rows {
+        let r0 = &a[z * n..(z + 1) * n];
+        let r1 = &a[(z + 1) * n..(z + 2) * n];
+        let r2 = &a[(z + 2) * n..(z + 3) * n];
+        let r3 = &a[(z + 3) * n..(z + 4) * n];
+        let mut acc = [0.0f64; LANES];
+        for (j, &xj) in x.iter().enumerate() {
+            acc[0] += r0[j] * xj;
+            acc[1] += r1[j] * xj;
+            acc[2] += r2[j] * xj;
+            acc[3] += r3[j] * xj;
+        }
+        out[z] = acc[0] * scale;
+        out[z + 1] = acc[1] * scale;
+        out[z + 2] = acc[2] * scale;
+        out[z + 3] = acc[3] * scale;
+        z += LANES;
+    }
+    while z < rows {
+        let row = &a[z * n..(z + 1) * n];
+        let mut acc = 0.0;
+        for (&r, &xj) in row.iter().zip(x.iter()) {
+            acc += r * xj;
+        }
+        out[z] = acc * scale;
+        z += 1;
+    }
+}
+
+/// SoA rank-one accumulation: `tmp[j*4+l] += az[l] * row[j]` for every
+/// output j and lane l — one transition-matrix row update serving all four
+/// lanes of a block with contiguous 4-wide stores.  Per (j, l) output this
+/// is one mul/add per call, same as the per-lane scalar axpy.
+#[inline]
+pub fn soa4_rank1_acc(tmp: &mut [f64], row: &[f64], az: &[f64; LANES]) {
+    debug_assert_eq!(tmp.len(), row.len() * LANES);
+    for (block, &r) in tmp.chunks_exact_mut(LANES).zip(row) {
+        block[0] += az[0] * r;
+        block[1] += az[1] * r;
+        block[2] += az[2] * r;
+        block[3] += az[3] * r;
+    }
+}
+
+/// SoA row-dot: `acc[l] = sum_j row[j] * x4[j*4+l]` — one transition-matrix
+/// row read serving all four lanes, each lane's accumulation ascending in j
+/// (bitwise equal to four scalar dots).
+#[inline]
+pub fn soa4_dot(row: &[f64], x4: &[f64]) -> [f64; LANES] {
+    debug_assert_eq!(x4.len(), row.len() * LANES);
+    let mut acc = [0.0f64; LANES];
+    for (block, &r) in x4.chunks_exact(LANES).zip(row) {
+        acc[0] += r * block[0];
+        acc[1] += r * block[1];
+        acc[2] += r * block[2];
+        acc[3] += r * block[3];
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Rng, Xoshiro256};
+
+    fn randv(rng: &mut Xoshiro256, n: usize) -> Vec<f64> {
+        (0..n).map(|_| rng.gen_f64() - 0.3).collect()
+    }
+
+    /// Odd lengths exercise the 4-wide block tails.
+    const SIZES: &[usize] = &[1, 2, 3, 4, 5, 7, 8, 15, 16, 33, 64];
+
+    #[test]
+    fn axpy_bitwise_matches_scalar() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for &n in SIZES {
+            let row = randv(&mut rng, n);
+            let base = randv(&mut rng, n);
+            let x = rng.gen_f64();
+            let mut got = base.clone();
+            axpy(&mut got, x, &row);
+            let mut want = base.clone();
+            for (w, &r) in want.iter_mut().zip(&row) {
+                *w += x * r;
+            }
+            assert_eq!(got, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn scale_and_div_bitwise_match_scalar() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        for &n in SIZES {
+            let base = randv(&mut rng, n);
+            let c = rng.gen_f64() + 0.5;
+            let mut got = base.clone();
+            scale(&mut got, c);
+            let want: Vec<f64> = base.iter().map(|&b| b * c).collect();
+            assert_eq!(got, want, "scale n={n}");
+            let mut got = base.clone();
+            div_assign(&mut got, c);
+            let want: Vec<f64> = base.iter().map(|&b| b / c).collect();
+            assert_eq!(got, want, "div n={n}");
+        }
+    }
+
+    #[test]
+    fn mul_assign_bitwise_matches_scalar() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        for &n in SIZES {
+            let base = randv(&mut rng, n);
+            let ys = randv(&mut rng, n);
+            let mut got = base.clone();
+            mul_assign(&mut got, &ys);
+            let want: Vec<f64> = base.iter().zip(&ys).map(|(&b, &y)| b * y).collect();
+            assert_eq!(got, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn matvec_rows_bitwise_matches_scalar_dots() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        for &n in SIZES {
+            let a = randv(&mut rng, n * n);
+            let x = randv(&mut rng, n);
+            let s = rng.gen_f64();
+            let mut got = vec![0.0; n];
+            matvec_rows_scaled(&a, n, &x, s, &mut got);
+            for z in 0..n {
+                let mut acc = 0.0;
+                for j in 0..n {
+                    acc += a[z * n + j] * x[j];
+                }
+                assert_eq!(got[z], acc * s, "n={n} z={z}");
+            }
+        }
+    }
+
+    #[test]
+    fn soa4_kernels_bitwise_match_per_lane_scalar() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        for &n in SIZES {
+            let row = randv(&mut rng, n);
+            let az = [rng.gen_f64(), rng.gen_f64(), rng.gen_f64(), rng.gen_f64()];
+            let base = randv(&mut rng, n * LANES);
+            let mut got = base.clone();
+            soa4_rank1_acc(&mut got, &row, &az);
+            for j in 0..n {
+                for l in 0..LANES {
+                    let want = base[j * LANES + l] + az[l] * row[j];
+                    assert_eq!(got[j * LANES + l], want, "rank1 n={n} j={j} l={l}");
+                }
+            }
+            let x4 = randv(&mut rng, n * LANES);
+            let acc = soa4_dot(&row, &x4);
+            for l in 0..LANES {
+                let mut want = 0.0;
+                for j in 0..n {
+                    want += row[j] * x4[j * LANES + l];
+                }
+                assert_eq!(acc[l], want, "dot n={n} l={l}");
+            }
+        }
+    }
+}

@@ -16,6 +16,7 @@
 
 use std::sync::OnceLock;
 
+use crate::score::kernels;
 use crate::score::{ScoreSource, Tok};
 use crate::util::dist::AliasTable;
 use crate::util::json::Json;
@@ -262,6 +263,41 @@ impl MarkovOracle {
     fn pow_t(&self, d: usize) -> &[f64] {
         &self.pow_pair(d).1
     }
+
+    /// Pre-fill the lazy power prefix up to the maximum neighbour distance
+    /// any of the given lanes will touch.  The batched entry points call
+    /// this once before fanning lanes across threads: `pow_pair` is safe
+    /// under races, but racing threads each compute the missing O(V³)
+    /// prefix and all but one discard it — warming serialises that work
+    /// into a single fill.
+    fn warm_powers<'a>(&self, lanes: impl Iterator<Item = &'a [Tok]>) {
+        let mask = self.mask_id();
+        let mut dmax = 0usize;
+        for tokens in lanes {
+            let l = tokens.len();
+            let mut last: Option<usize> = None;
+            for (i, &tok) in tokens.iter().enumerate() {
+                if tok != mask {
+                    dmax = dmax.max(match last {
+                        // Masked prefix 0..i reads right-neighbour
+                        // distances up to i.
+                        None => i,
+                        // Interior gap: the largest left/right distance a
+                        // masked position between two observations needs.
+                        Some(p) => i - p - 1,
+                    });
+                    last = Some(i);
+                }
+            }
+            if let Some(p) = last {
+                // Masked suffix reads left-neighbour distances up to l-1-p.
+                dmax = dmax.max(l - 1 - p);
+            }
+        }
+        if dmax > 0 {
+            let _ = self.pow_pair(dmax);
+        }
+    }
 }
 
 impl ScoreSource for MarkovOracle {
@@ -318,15 +354,11 @@ impl ScoreSource for MarkovOracle {
             if let Some((dr, b)) = right[i] {
                 // Contiguous read: column b of A^dr == row b of (A^dr)^T.
                 let m = &self.pow_t(dr)[b as usize * v..(b as usize + 1) * v];
-                for (rv, &f) in row.iter_mut().zip(m) {
-                    *rv *= f;
-                }
+                kernels::mul_assign(row, m);
             }
             let tot: f64 = row.iter().sum();
             if tot > 0.0 {
-                for rv in row.iter_mut() {
-                    *rv /= tot;
-                }
+                kernels::div_assign(row, tot);
             } else {
                 row.fill(1.0 / v as f64);
             }
@@ -382,15 +414,11 @@ impl ScoreSource for MarkovOracle {
                 if let Some((j, b)) = nxt {
                     // Contiguous read: column b of A^dr == row b of (A^dr)^T.
                     let m = &self.pow_t(j - i)[b as usize * v..(b as usize + 1) * v];
-                    for (rv, &f) in row.iter_mut().zip(m) {
-                        *rv *= f;
-                    }
+                    kernels::mul_assign(row, m);
                 }
                 let tot: f64 = row.iter().sum();
                 if tot > 0.0 {
-                    for rv in row.iter_mut() {
-                        *rv /= tot;
-                    }
+                    kernels::div_assign(row, tot);
                 } else {
                     row.fill(1.0 / v as f64);
                 }
@@ -399,6 +427,40 @@ impl ScoreSource for MarkovOracle {
                 nxt = Some((i, tokens[i]));
             }
         }
+    }
+
+    /// Native batch: a single power-prefix warm ([`Self::warm_powers`])
+    /// before the thread fan-out, so concurrent lanes never race duplicate
+    /// O(V³) matrix-power fills; single-request batches skip fan-out.  Row
+    /// arithmetic is unchanged, so rows stay bitwise equal to per-lane
+    /// [`Self::probs_masked_into`].
+    fn probs_masked_batch(&self, reqs: &[(&[Tok], &[usize])], t: f64, outs: &mut [&mut [f64]]) {
+        assert_eq!(reqs.len(), outs.len(), "probs_masked_batch arity mismatch");
+        if reqs.len() == 1 {
+            let (tokens, idx) = reqs[0];
+            return self.probs_masked_into(tokens, idx, t, &mut *outs[0]);
+        }
+        self.warm_powers(reqs.iter().map(|r| r.0));
+        let threads = crate::util::threadpool::ThreadPool::default_size().min(reqs.len());
+        crate::util::threadpool::par_zip_mut(outs, reqs, threads, |_, out, &(tokens, idx)| {
+            self.probs_masked_into(tokens, idx, t, *out);
+        });
+    }
+
+    /// Native slice batch (the oracle is time-agnostic, so slices differ
+    /// from [`Self::probs_masked_batch`] only in carrying a per-request
+    /// `t`): same single power warm + fan-out, same bitwise guarantee.
+    fn probs_masked_slices(&self, reqs: &[(&[Tok], &[usize], f64)], outs: &mut [&mut [f64]]) {
+        assert_eq!(reqs.len(), outs.len(), "probs_masked_slices arity mismatch");
+        if reqs.len() == 1 {
+            let (tokens, idx, t) = reqs[0];
+            return self.probs_masked_into(tokens, idx, t, &mut *outs[0]);
+        }
+        self.warm_powers(reqs.iter().map(|r| r.0));
+        let threads = crate::util::threadpool::ThreadPool::default_size().min(reqs.len());
+        crate::util::threadpool::par_zip_mut(outs, reqs, threads, |_, out, &(tokens, idx, t)| {
+            self.probs_masked_into(tokens, idx, t, *out);
+        });
     }
 }
 
@@ -604,6 +666,66 @@ mod tests {
         }
         // Out-of-range distances clamp to seq_len.
         assert_eq!(o.pow(500), o.pow(9));
+    }
+
+    #[test]
+    fn batch_and_slices_overrides_match_per_lane_bitwise() {
+        use crate::util::rng::Rng;
+        let o = oracle(6, 15);
+        let mask = o.mask_id();
+        let mut rng = Xoshiro256::seed_from_u64(53);
+        let lanes: Vec<(Vec<Tok>, Vec<usize>, f64)> = (0..5)
+            .map(|k| {
+                let tokens: Vec<Tok> = (0..15)
+                    .map(|_| if rng.gen_bool(0.6) { mask } else { rng.gen_usize(6) as Tok })
+                    .collect();
+                let idx = crate::score::masked_indices(&tokens, mask);
+                (tokens, idx, 0.1 + 0.2 * k as f64)
+            })
+            .collect();
+
+        let t = 0.5;
+        let singles: Vec<Vec<f64>> = lanes
+            .iter()
+            .map(|(tk, ix, _)| {
+                let mut buf = vec![0.0; ix.len() * 6];
+                o.probs_masked_into(tk, ix, t, &mut buf);
+                buf
+            })
+            .collect();
+        let mut bufs: Vec<Vec<f64>> =
+            lanes.iter().map(|(_, ix, _)| vec![1.0; ix.len() * 6]).collect();
+        {
+            let reqs: Vec<(&[Tok], &[usize])> =
+                lanes.iter().map(|(tk, ix, _)| (tk.as_slice(), ix.as_slice())).collect();
+            let mut outs: Vec<&mut [f64]> = bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+            o.probs_masked_batch(&reqs, t, &mut outs);
+        }
+        for (k, (got, want)) in bufs.iter().zip(&singles).enumerate() {
+            assert_eq!(got, want, "batch lane {k}");
+        }
+
+        let slice_singles: Vec<Vec<f64>> = lanes
+            .iter()
+            .map(|(tk, ix, tl)| {
+                let mut buf = vec![0.0; ix.len() * 6];
+                o.probs_masked_into(tk, ix, *tl, &mut buf);
+                buf
+            })
+            .collect();
+        let mut bufs: Vec<Vec<f64>> =
+            lanes.iter().map(|(_, ix, _)| vec![1.0; ix.len() * 6]).collect();
+        {
+            let reqs: Vec<(&[Tok], &[usize], f64)> = lanes
+                .iter()
+                .map(|(tk, ix, tl)| (tk.as_slice(), ix.as_slice(), *tl))
+                .collect();
+            let mut outs: Vec<&mut [f64]> = bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+            o.probs_masked_slices(&reqs, &mut outs);
+        }
+        for (k, (got, want)) in bufs.iter().zip(&slice_singles).enumerate() {
+            assert_eq!(got, want, "slice lane {k}");
+        }
     }
 
     #[test]

@@ -26,6 +26,42 @@
 //! across request lanes (oracles fan out across threads, the artifact
 //! score packs lanes into one PJRT dispatch).
 
+//!
+//! ## Kernel layout (blocked SIMD + SoA lane blocks)
+//!
+//! The O(V²) inner loops of the native oracles run through the shared
+//! blocked primitives in [`kernels`] (4-wide f64 — one AVX2 register —
+//! written as fixed-width unrolled blocks that LLVM auto-vectorizes at
+//! `opt-level = 3`).  Two layout rules govern everything:
+//!
+//! 1. **Vectorization runs across the OUTPUT dimension only.**  Each
+//!    output element keeps its sequential accumulation order over the
+//!    reduction dimension — a 4-wide horizontal sum would reorder the
+//!    additions and change the bits, and the golden-parity, pit-parity,
+//!    and exact jump-stream suites pin every sampler bit-for-bit.
+//!    Blocking therefore means "4 independent outputs at a time", never
+//!    "4 reduction terms at a time".
+//!
+//! 2. **Co-batched lanes are SoA lane blocks.**  The batched entry points
+//!    ([`ScoreSource::probs_masked_batch`] /
+//!    [`ScoreSource::probs_masked_slices`]) group lanes into blocks of
+//!    [`kernels::LANES`], holding each block's state interleaved
+//!    lane-major (`buf[pos·V·4 + state·4 + lane]`) so ONE walk of the
+//!    V×V transition matrix per transfer step serves every lane of the
+//!    block with contiguous 4-wide loads — instead of each lane's thread
+//!    re-walking the matrix.  SoA-across-lanes composes with
+//!    SIMD-within-lane; the thread pool still fans out across lane
+//!    *blocks* ([`hmm::HmmUniformOracle`] implements this natively; the
+//!    time-agnostic [`markov::MarkovOracle`] batches via a one-shot
+//!    matrix-power warm + per-lane fan-out).
+//!
+//! The parity pins live in `tests/kernel_parity.rs` (blocked and SoA
+//! paths bitwise-equal to frozen scalar reference copies —
+//! [`hmm::reference`] — across vocab sizes including odd block tails),
+//! with a `debug_assertions` cross-check inside the SoA block evaluator
+//! re-verifying every lane against the single-lane path at runtime.
+
+pub mod kernels;
 pub mod markov;
 pub mod hmm;
 
@@ -83,7 +119,13 @@ pub trait ScoreSource: Send + Sync {
     /// few dispatches as possible.
     fn probs_masked_batch(&self, reqs: &[(&[Tok], &[usize])], t: f64, outs: &mut [&mut [f64]]) {
         assert_eq!(reqs.len(), outs.len(), "probs_masked_batch arity mismatch");
-        let threads = crate::util::threadpool::ThreadPool::default_size();
+        // Single-request batches take the direct path: no scoped-thread
+        // spawn, no pool-size probe.
+        if reqs.len() == 1 {
+            let (tokens, idx) = reqs[0];
+            return self.probs_masked_into(tokens, idx, t, &mut *outs[0]);
+        }
+        let threads = crate::util::threadpool::ThreadPool::default_size().min(reqs.len());
         crate::util::threadpool::par_zip_mut(outs, reqs, threads, |_, out, &(tokens, idx)| {
             self.probs_masked_into(tokens, idx, t, *out);
         });
@@ -106,7 +148,13 @@ pub trait ScoreSource: Send + Sync {
     /// mixed-`t` rows can share a dispatch.
     fn probs_masked_slices(&self, reqs: &[(&[Tok], &[usize], f64)], outs: &mut [&mut [f64]]) {
         assert_eq!(reqs.len(), outs.len(), "probs_masked_slices arity mismatch");
-        let threads = crate::util::threadpool::ThreadPool::default_size();
+        // Single-slice batches take the direct path (mirrors
+        // `probs_masked_batch`).
+        if reqs.len() == 1 {
+            let (tokens, idx, t) = reqs[0];
+            return self.probs_masked_into(tokens, idx, t, &mut *outs[0]);
+        }
+        let threads = crate::util::threadpool::ThreadPool::default_size().min(reqs.len());
         crate::util::threadpool::par_zip_mut(outs, reqs, threads, |_, out, &(tokens, idx, t)| {
             self.probs_masked_into(tokens, idx, t, *out);
         });

@@ -320,6 +320,7 @@ pub fn run_batch_ctl_obs<F: StateFamily, K: SolverKernel<F> + Sync>(
     if seeds.is_empty() {
         return (Vec::new(), AdaptiveTrace::default(), true);
     }
+    // default_size is a memoised probe (OnceLock in util::threadpool).
     let threads = ThreadPool::default_size().min(seeds.len());
     let mut lanes: Vec<LaneCore<F>> = seeds
         .iter()

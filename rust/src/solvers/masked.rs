@@ -412,6 +412,7 @@ pub fn exact_batch_ctl<S: ScoreSource + ?Sized>(
     if seeds.is_empty() {
         return Vec::new();
     }
+    // default_size is a memoised probe (OnceLock in util::threadpool).
     let threads = ThreadPool::default_size().min(seeds.len());
     par_map_indexed(seeds.len(), threads, |i| {
         let stop = StopCtl {
@@ -444,6 +445,7 @@ where
     if seeds.is_empty() {
         return Vec::new();
     }
+    // default_size is a memoised probe (OnceLock in util::threadpool).
     let threads = ThreadPool::default_size().min(seeds.len());
     par_map_indexed(seeds.len(), threads, |i| {
         let mut rng = Xoshiro256::seed_from_u64(seeds[i]);

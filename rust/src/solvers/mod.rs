@@ -53,6 +53,13 @@
 //! against the pre-refactor implementations, and the `driver_direct` rows
 //! in `benches/solver_steps.rs` pin the dispatch overhead at zero.
 //!
+//! Below every driver sits the score-kernel layer: the batched/sliced
+//! evaluations both drivers funnel into are served by blocked SIMD kernels
+//! with a structure-of-arrays lane layout (one transition-matrix walk per
+//! block of co-batched lanes, bitwise-identical to the per-lane path) —
+//! see the kernel-layout section in [`crate::score`]'s module docs and the
+//! `hmm_eval */hmm_soa_headline` roofline rows in `BENCH_solvers.json`.
+//!
 //! ## Exact paths and bracketed thinning
 //!
 //! [`Solver::Exact`] is not a per-window kernel (it owns its jump times),

@@ -13,7 +13,12 @@
 //!    its own forward time (the masked family funnels this into a single
 //!    [`crate::score::ScoreSource::probs_masked_slices`] call, across all
 //!    request lanes of a batch at once).  Wall clock per sweep is one
-//!    batched-eval latency, not `steps` of them.
+//!    batched-eval latency, not `steps` of them.  Native oracles evaluate
+//!    that call thread-parallel over structure-of-arrays lane blocks —
+//!    one transition-matrix walk serves each block of slices (kernel
+//!    layout in [`crate::score`]'s module docs) — which is the
+//!    thread-parallel sweep evaluation that converts the sweeps-vs-NFE
+//!    win into wall clock (`pit_slice_eval` row in `BENCH_solvers.json`).
 //! 2. **Sweep phase 2 (replay).**  A cheap, eval-free replay threads the
 //!    kernel's per-step updates through the candidate trajectory with the
 //!    *sequential* RNG stream: step i applies against the cached

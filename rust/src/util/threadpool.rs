@@ -3,7 +3,7 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -43,10 +43,16 @@ impl ThreadPool {
     }
 
     /// Pool sized to the machine (capped — PJRT also spawns threads).
+    /// Memoised: `available_parallelism` is a syscall on most platforms and
+    /// this is queried on every batched score evaluation, so the probe runs
+    /// once per process.
     pub fn default_size() -> usize {
-        std::thread::available_parallelism()
-            .map(|n| n.get().min(16))
-            .unwrap_or(4)
+        static SIZE: OnceLock<usize> = OnceLock::new();
+        *SIZE.get_or_init(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get().min(16))
+                .unwrap_or(4)
+        })
     }
 
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {

@@ -1,0 +1,231 @@
+//! Kernel parity suite: the blocked/SIMD score kernels and the SoA batched
+//! paths must be **bit-identical** to the frozen scalar reference copies
+//! (`fastdds::score::hmm::reference` — verbatim pre-rewrite loops) and to
+//! the single-lane entry points.  This is the same contract the golden
+//! parity / pit-parity / exact jump-stream suites pin end to end, asserted
+//! here at the kernel boundary so a reordered reduction fails loudly and
+//! locally.  Vocab sizes include non-multiples of the 4-wide block so the
+//! block tails are exercised; lane counts 1..=9 exercise full SoA blocks,
+//! remainder blocks of every size, and the single-request fast path.
+
+use fastdds::score::hmm::{reference, HmmUniformOracle};
+use fastdds::score::markov::{MarkovChain, MarkovOracle};
+use fastdds::score::{masked_indices, ScoreSource, Tok};
+use fastdds::util::rng::{Rng, Xoshiro256};
+
+/// Odd sizes exercise the 4-wide block tails; 64 is the roofline headline.
+const VOCABS: &[usize] = &[3, 4, 5, 8, 16, 33, 64];
+const SEQ_LEN: usize = 10;
+
+fn chain(vocab: usize) -> MarkovChain {
+    let mut rng = Xoshiro256::seed_from_u64(1000 + vocab as u64);
+    MarkovChain::generate(&mut rng, vocab, 0.7)
+}
+
+/// Random sequence over `vocab` real tokens plus the mask id, ~half masked.
+fn masked_tokens(rng: &mut Xoshiro256, vocab: usize, mask: Tok) -> Vec<Tok> {
+    (0..SEQ_LEN)
+        .map(|_| if rng.gen_bool(0.5) { mask } else { rng.gen_usize(vocab) as Tok })
+        .collect()
+}
+
+#[test]
+fn hmm_blocked_masked_eval_bitwise_matches_scalar_reference() {
+    for &v in VOCABS {
+        let o = HmmUniformOracle::new(chain(v), SEQ_LEN);
+        let mask = o.mask_id();
+        let mut rng = Xoshiro256::seed_from_u64(7 + v as u64);
+        let mut ws = reference::RefScratch::new();
+        for case in 0..4 {
+            let tokens = masked_tokens(&mut rng, v, mask);
+            let idx = masked_indices(&tokens, mask);
+            let t = 0.1 + 0.3 * case as f64;
+            let mut got = vec![0.0; idx.len() * v];
+            o.probs_masked_into(&tokens, &idx, t, &mut got);
+            let mut want = vec![0.0; idx.len() * v];
+            reference::probs_masked_scalar(&o.chain, &tokens, &idx, t, &mut ws, &mut want);
+            assert_eq!(got, want, "V={v} case={case}");
+        }
+    }
+}
+
+#[test]
+fn hmm_blocked_ratios_bitwise_match_scalar_reference() {
+    for &v in VOCABS {
+        let o = HmmUniformOracle::new(chain(v), SEQ_LEN);
+        let mut rng = Xoshiro256::seed_from_u64(13 + v as u64);
+        let mut ws = reference::RefScratch::new();
+        for case in 0..4 {
+            // Mask-free: ratios is the uniform-state (in-place corruption)
+            // surface, there is no absorbing token.
+            let tokens: Vec<Tok> = (0..SEQ_LEN).map(|_| rng.gen_usize(v) as Tok).collect();
+            let t = 0.05 + 0.4 * case as f64;
+            let mut got = vec![0.0; SEQ_LEN * v];
+            o.ratios(&tokens, t, &mut got);
+            let mut want = vec![0.0; SEQ_LEN * v];
+            reference::ratios_scalar(&o.chain, &tokens, t, &mut ws, &mut want);
+            assert_eq!(got, want, "V={v} case={case}");
+        }
+    }
+}
+
+#[test]
+fn hmm_soa_batch_bitwise_matches_single_lane() {
+    for &v in VOCABS {
+        let o = HmmUniformOracle::new(chain(v), SEQ_LEN);
+        let mask = o.mask_id();
+        let mut rng = Xoshiro256::seed_from_u64(29 + v as u64);
+        for n_lanes in 1..=9usize {
+            let lanes: Vec<(Vec<Tok>, Vec<usize>)> = (0..n_lanes)
+                .map(|_| {
+                    let tokens = masked_tokens(&mut rng, v, mask);
+                    let idx = masked_indices(&tokens, mask);
+                    (tokens, idx)
+                })
+                .collect();
+            let t = 0.35;
+            let singles: Vec<Vec<f64>> = lanes
+                .iter()
+                .map(|(tk, ix)| {
+                    let mut buf = vec![0.0; ix.len() * v];
+                    o.probs_masked_into(tk, ix, t, &mut buf);
+                    buf
+                })
+                .collect();
+            let mut bufs: Vec<Vec<f64>> =
+                lanes.iter().map(|(_, ix)| vec![1.0; ix.len() * v]).collect();
+            {
+                let reqs: Vec<(&[Tok], &[usize])> =
+                    lanes.iter().map(|(tk, ix)| (tk.as_slice(), ix.as_slice())).collect();
+                let mut outs: Vec<&mut [f64]> =
+                    bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+                o.probs_masked_batch(&reqs, t, &mut outs);
+            }
+            for (k, (got, want)) in bufs.iter().zip(&singles).enumerate() {
+                assert_eq!(got, want, "V={v} lanes={n_lanes} lane {k}");
+            }
+        }
+    }
+}
+
+#[test]
+fn hmm_soa_slices_bitwise_match_single_lane() {
+    for &v in VOCABS {
+        let o = HmmUniformOracle::new(chain(v), SEQ_LEN);
+        let mask = o.mask_id();
+        let mut rng = Xoshiro256::seed_from_u64(41 + v as u64);
+        for n_lanes in [1usize, 3, 4, 5, 8, 9] {
+            // Mixed per-lane t: the SoA block must carry time as a lane
+            // coordinate, not hoist it.
+            let lanes: Vec<(Vec<Tok>, Vec<usize>, f64)> = (0..n_lanes)
+                .map(|k| {
+                    let tokens = masked_tokens(&mut rng, v, mask);
+                    let idx = masked_indices(&tokens, mask);
+                    (tokens, idx, 0.08 + 0.17 * k as f64)
+                })
+                .collect();
+            let singles: Vec<Vec<f64>> = lanes
+                .iter()
+                .map(|(tk, ix, t)| {
+                    let mut buf = vec![0.0; ix.len() * v];
+                    o.probs_masked_into(tk, ix, *t, &mut buf);
+                    buf
+                })
+                .collect();
+            let mut bufs: Vec<Vec<f64>> =
+                lanes.iter().map(|(_, ix, _)| vec![1.0; ix.len() * v]).collect();
+            {
+                let reqs: Vec<(&[Tok], &[usize], f64)> = lanes
+                    .iter()
+                    .map(|(tk, ix, t)| (tk.as_slice(), ix.as_slice(), *t))
+                    .collect();
+                let mut outs: Vec<&mut [f64]> =
+                    bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+                o.probs_masked_slices(&reqs, &mut outs);
+            }
+            for (k, (got, want)) in bufs.iter().zip(&singles).enumerate() {
+                assert_eq!(got, want, "V={v} lanes={n_lanes} lane {k}");
+            }
+        }
+    }
+}
+
+#[test]
+fn markov_batch_overrides_bitwise_match_single_lane() {
+    for &v in VOCABS {
+        let o = MarkovOracle::new(chain(v), SEQ_LEN);
+        let mask = o.mask_id();
+        let mut rng = Xoshiro256::seed_from_u64(57 + v as u64);
+        for n_lanes in [1usize, 2, 5] {
+            let lanes: Vec<(Vec<Tok>, Vec<usize>, f64)> = (0..n_lanes)
+                .map(|k| {
+                    let tokens = masked_tokens(&mut rng, v, mask);
+                    let idx = masked_indices(&tokens, mask);
+                    (tokens, idx, 0.1 + 0.25 * k as f64)
+                })
+                .collect();
+            let t = 0.6;
+            let singles: Vec<Vec<f64>> = lanes
+                .iter()
+                .map(|(tk, ix, _)| {
+                    let mut buf = vec![0.0; ix.len() * v];
+                    o.probs_masked_into(tk, ix, t, &mut buf);
+                    buf
+                })
+                .collect();
+            let mut bufs: Vec<Vec<f64>> =
+                lanes.iter().map(|(_, ix, _)| vec![1.0; ix.len() * v]).collect();
+            {
+                let reqs: Vec<(&[Tok], &[usize])> =
+                    lanes.iter().map(|(tk, ix, _)| (tk.as_slice(), ix.as_slice())).collect();
+                let mut outs: Vec<&mut [f64]> =
+                    bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+                o.probs_masked_batch(&reqs, t, &mut outs);
+            }
+            for (k, (got, want)) in bufs.iter().zip(&singles).enumerate() {
+                assert_eq!(got, want, "V={v} batch lanes={n_lanes} lane {k}");
+            }
+
+            let slice_singles: Vec<Vec<f64>> = lanes
+                .iter()
+                .map(|(tk, ix, tl)| {
+                    let mut buf = vec![0.0; ix.len() * v];
+                    o.probs_masked_into(tk, ix, *tl, &mut buf);
+                    buf
+                })
+                .collect();
+            let mut bufs: Vec<Vec<f64>> =
+                lanes.iter().map(|(_, ix, _)| vec![1.0; ix.len() * v]).collect();
+            {
+                let reqs: Vec<(&[Tok], &[usize], f64)> = lanes
+                    .iter()
+                    .map(|(tk, ix, tl)| (tk.as_slice(), ix.as_slice(), *tl))
+                    .collect();
+                let mut outs: Vec<&mut [f64]> =
+                    bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+                o.probs_masked_slices(&reqs, &mut outs);
+            }
+            for (k, (got, want)) in bufs.iter().zip(&slice_singles).enumerate() {
+                assert_eq!(got, want, "V={v} slices lanes={n_lanes} lane {k}");
+            }
+        }
+    }
+}
+
+#[test]
+fn hmm_dense_probs_bitwise_match_scalar_reference_rows() {
+    // probs_into shares messages_into + posterior_row with the masked
+    // path; pin the dense surface too (all positions, masked or not).
+    for &v in [3usize, 8, 33].iter() {
+        let o = HmmUniformOracle::new(chain(v), SEQ_LEN);
+        let mask = o.mask_id();
+        let mut rng = Xoshiro256::seed_from_u64(71 + v as u64);
+        let tokens = masked_tokens(&mut rng, v, mask);
+        let all: Vec<usize> = (0..SEQ_LEN).collect();
+        let dense = o.probs(&tokens, 0.5);
+        let mut want = vec![0.0; SEQ_LEN * v];
+        let mut ws = reference::RefScratch::new();
+        reference::probs_masked_scalar(&o.chain, &tokens, &all, 0.5, &mut ws, &mut want);
+        assert_eq!(dense, want, "V={v}");
+    }
+}

@@ -4,8 +4,8 @@
 #   kernel/driver refactor AND the bracketed thinning loop bit-for-bit,
 #   plus the v1 wire-compat corpus replaying every historical knob
 #   combination through the v2 upgrade shim) + bench smoke runs that
-#   refresh BENCH_solvers.json (per-step perf + driver dispatch-overhead
-#   rows), BENCH_schedules.json (KL/NFE for fixed vs adaptive vs tuned
+#   refresh BENCH_solvers.json (per-step perf, driver dispatch-overhead,
+#   and SIMD/SoA kernel roofline rows), BENCH_schedules.json (KL/NFE for fixed vs adaptive vs tuned
 #   grids), BENCH_exact.json (exact-path evaluations-per-sample,
 #   wall-clock, bracket hit rates), BENCH_serve.json (TCP serving
 #   req/s + p50/p99 latency, blocking vs streaming, cancel-to-partial,
@@ -92,6 +92,24 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     # (compare each `driver_direct` row against its `generate` twin, <=2%).
     grep -q 'driver_direct' BENCH_solvers.json || {
         echo "tier-1 FAIL: driver dispatch-overhead rows missing from BENCH_solvers.json"
+        exit 1
+    }
+    # The kernel roofline rows must exist (scalar reference vs blocked vs
+    # SoA-batched HMM evaluation, GF/s + ns/eval, plus the PIT slice-eval
+    # wall-clock row) and the headline must pass: the SoA-batched path must
+    # deliver >= 1.5x the scalar-per-lane eval throughput at V=64, 8 lanes.
+    for row in 'hmm_eval scalar V=8' 'hmm_eval scalar V=64' 'hmm_eval scalar V=256' \
+               'hmm_eval blocked V=8' 'hmm_eval blocked V=64' 'hmm_eval blocked V=256' \
+               'hmm_eval soa-batch B=8 V=8' 'hmm_eval soa-batch B=8 V=64' \
+               'hmm_eval soa-batch B=8 V=256' 'pit_slice_eval B=8 V=64' \
+               'hmm_soa_headline V=64 B=8' 'gf_per_s'; do
+        grep -q "$row" BENCH_solvers.json || {
+            echo "tier-1 FAIL: roofline row '$row' missing from BENCH_solvers.json"
+            exit 1
+        }
+    done
+    grep -q '"pass":true' BENCH_solvers.json || {
+        echo "tier-1 FAIL: BENCH_solvers.json roofline headline did not pass (SoA batch must be >= 1.5x scalar-per-lane at V=64, B=8)"
         exit 1
     }
     # The exact-path record must carry the bracket headline for BOTH

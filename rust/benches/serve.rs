@@ -6,10 +6,10 @@
 //! request latency across PRs.
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use fastdds::api::SamplingSpec;
-use fastdds::coordinator::{BatchPolicy, Coordinator};
+use fastdds::coordinator::{BatchPolicy, Coordinator, CoordinatorCfg};
 use fastdds::score::hmm::HmmUniformOracle;
 use fastdds::score::markov::{MarkovChain, MarkovOracle};
 use fastdds::server::client::Client;
@@ -228,6 +228,157 @@ fn main() {
         if valid { 1.0 } else { 0.0 },
     );
     srv.stop();
+
+    // --- brownout ladder under sustained overload ------------------------
+    // A 2-lane coordinator with a 4-lane queue cap is hammered by enough
+    // concurrent clients to run well past 2x capacity.  With the ladder ON
+    // the intake degrades expensive specs (uniform euler nfe=256 clamps to
+    // the nfe floor at rung 3) instead of shedding them, so goodput-rps
+    // (completed requests per second) should beat the ladder-OFF arm,
+    // which can only shed typed `overloaded` once the queue fills.
+    for ladder_on in [true, false] {
+        let arm = if ladder_on { "ladder-on" } else { "ladder-off" };
+        let mut rng = Xoshiro256::seed_from_u64(31);
+        let oracle = Arc::new(MarkovOracle::new(MarkovChain::generate(&mut rng, 6, 0.5), 16));
+        let mut cfg = CoordinatorCfg::default();
+        cfg.queue_cap = Some(4);
+        cfg.health.brownout = ladder_on;
+        let coord = Coordinator::start_local_with_cfg(oracle, BatchPolicy::Greedy, 2, None, cfg);
+        let srv = Server::start("127.0.0.1:0", coord).unwrap();
+        let addr = srv.addr.to_string();
+        let started = Instant::now();
+        let handles: Vec<_> = (0..n_clients)
+            .map(|ci| {
+                let addr = addr.clone();
+                std::thread::spawn(move || -> (Vec<f64>, usize) {
+                    let mut c = Client::connect(&addr).unwrap();
+                    let mut lat = Vec::with_capacity(reqs_per_client);
+                    let mut shed = 0usize;
+                    for k in 0..reqs_per_client {
+                        let spec = SamplingSpec::builder()
+                            .solver(Solver::Euler)
+                            .nfe(256)
+                            .n_samples(1)
+                            .seed((ci * 1_000 + k) as u64)
+                            .build()
+                            .unwrap();
+                        let t0 = Instant::now();
+                        match c.generate_spec(&spec) {
+                            Ok(resp) => {
+                                assert_eq!(resp.sequences.len(), 1);
+                                lat.push(t0.elapsed().as_secs_f64() * 1e3);
+                            }
+                            Err(e) if e.to_string().contains("overloaded") => shed += 1,
+                            Err(e) => panic!("unexpected serve error: {e:#}"),
+                        }
+                    }
+                    (lat, shed)
+                })
+            })
+            .collect();
+        let mut lats: Vec<f64> = Vec::new();
+        let mut shed = 0usize;
+        for h in handles {
+            let (l, s) = h.join().unwrap();
+            lats.extend(l);
+            shed += s;
+        }
+        let wall = started.elapsed().as_secs_f64().max(1e-9);
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        report.value(
+            &format!("serve brownout {arm} goodput-rps"),
+            lats.len() as f64 / wall,
+        );
+        report.value(
+            &format!("serve brownout {arm} p99-ms"),
+            percentile(&lats, 0.99),
+        );
+        report.value(&format!("serve brownout {arm} shed-requests"), shed as f64);
+        srv.stop();
+    }
+
+    // --- stalled backend: watchdog on vs off -----------------------------
+    // Hash-deterministic latency jitter freezes ~1% of score calls for
+    // 300ms — long enough that one stalled eval parks the whole dispatch
+    // loop.  With the watchdog ON the stalled eval is abandoned at the
+    // cost-model-derived deadline and retried, so tail latency stays near
+    // the watchdog floor; OFF, every stall is eaten in full and queued
+    // requests inherit it, so p99 lands at 300ms+.
+    for watchdog_on in [true, false] {
+        let arm = if watchdog_on { "watchdog-on" } else { "watchdog-off" };
+        let mut rng = Xoshiro256::seed_from_u64(37);
+        let oracle = MarkovOracle::new(MarkovChain::generate(&mut rng, 6, 0.5), 16);
+        let faulty = Arc::new(FaultyScore::new(oracle, FaultPlan::new()));
+        let mut cfg = CoordinatorCfg::default();
+        cfg.health.watchdog = watchdog_on;
+        let coord = Coordinator::start_local_with_cfg(
+            Arc::clone(&faulty),
+            BatchPolicy::Greedy,
+            4,
+            None,
+            cfg,
+        );
+        let srv = Server::start("127.0.0.1:0", coord).unwrap();
+        let addr = srv.addr.to_string();
+        // Warm the cost model on clean traffic first: a cold model has no
+        // latency estimate, so the watchdog arm would run unbounded.
+        {
+            let mut c = Client::connect(&addr).unwrap();
+            for k in 0..3u64 {
+                let spec = SamplingSpec::builder()
+                    .solver(Solver::Trapezoidal { theta: 0.5 })
+                    .nfe(32)
+                    .n_samples(1)
+                    .seed(9_000 + k)
+                    .build()
+                    .unwrap();
+                c.generate_spec(&spec).unwrap();
+            }
+        }
+        faulty.set_plan(FaultPlan::new().flaky(515_151, 0.01, Duration::from_millis(300)));
+        let handles: Vec<_> = (0..n_clients)
+            .map(|ci| {
+                let addr = addr.clone();
+                std::thread::spawn(move || -> (Vec<f64>, usize) {
+                    let mut c = Client::connect(&addr).unwrap();
+                    let mut lat = Vec::with_capacity(reqs_per_client);
+                    let mut failed = 0usize;
+                    for k in 0..reqs_per_client {
+                        let spec = SamplingSpec::builder()
+                            .solver(Solver::Trapezoidal { theta: 0.5 })
+                            .nfe(32)
+                            .n_samples(1)
+                            .seed((ci * 1_000 + k) as u64)
+                            .build()
+                            .unwrap();
+                        let t0 = Instant::now();
+                        match c.generate_spec(&spec) {
+                            Ok(resp) => {
+                                assert_eq!(resp.sequences.len(), 1);
+                                lat.push(t0.elapsed().as_secs_f64() * 1e3);
+                            }
+                            // Exhausted retries / open breaker are typed and
+                            // expected under heavy jitter; count, don't die.
+                            Err(_) => failed += 1,
+                        }
+                    }
+                    (lat, failed)
+                })
+            })
+            .collect();
+        let mut lats: Vec<f64> = Vec::new();
+        let mut failed = 0usize;
+        for h in handles {
+            let (l, f) = h.join().unwrap();
+            lats.extend(l);
+            failed += f;
+        }
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        report.value(&format!("serve stalled {arm} p99-ms"), percentile(&lats, 0.99));
+        report.value(&format!("serve stalled {arm} failed-requests"), failed as f64);
+        faulty.set_plan(FaultPlan::new());
+        srv.stop();
+    }
 
     report.write(quick);
 }

@@ -52,6 +52,15 @@ pub const DEFAULT_PRIORITY: u8 = 1;
 /// are shedding classes, not a fine-grained fairness dial.
 pub const MAX_PRIORITY: u8 = 3;
 
+/// NFE floor of the brownout ladder's final rung ([`SamplingSpec::degrade`]
+/// rung 3): overload never clamps a request below this budget (or below
+/// one solver step, whichever is higher), so even maximally degraded
+/// responses stay useful samples rather than noise.
+pub const DEGRADE_NFE_FLOOR: usize = 8;
+
+/// Number of rungs on the brownout ladder (see [`SamplingSpec::degrade`]).
+pub const MAX_DEGRADE_RUNG: u8 = 3;
+
 /// Solver configuration: the typed half of the request surface where the
 /// *shape* makes invalid knob combinations unrepresentable.
 #[derive(Clone, Debug, PartialEq)]
@@ -125,6 +134,12 @@ pub struct SamplingSpec {
     /// responses.  QoS-only like the fields above: never consulted by
     /// [`SamplingSpec::plan`], so it cannot split batches.
     progress: bool,
+    /// Opt out of the brownout degradation ladder: an overloaded
+    /// coordinator may not trade this request's quality for survival
+    /// ([`SamplingSpec::degrade`] is never applied; such requests shed
+    /// typed `overloaded` as before the ladder existed).  QoS-only like
+    /// the fields above: never consulted by [`SamplingSpec::plan`].
+    no_degrade: bool,
 }
 
 /// The resolved execution identity of a spec: everything that decides how
@@ -257,6 +272,68 @@ impl SamplingSpec {
     /// on streaming responses.  QoS-only; never splits a batch.
     pub fn progress(&self) -> bool {
         self.progress
+    }
+
+    /// Whether the client opted out of the brownout degradation ladder.
+    /// QoS-only; never splits a batch.
+    pub fn no_degrade(&self) -> bool {
+        self.no_degrade
+    }
+
+    /// Walk this spec down the brownout ladder to (at most) `rung`,
+    /// returning the degraded spec and the highest rung that **actually
+    /// changed** it — `None` when no rung applies (the spec is already at
+    /// or below the ladder floor, or exact: exact simulation has no
+    /// quality knob the ladder could trade, so it never degrades).
+    ///
+    /// The ladder is cumulative and pre-declared:
+    ///
+    /// 1. parallel-in-time off — PIT specs fall back to the sequential
+    ///    uniform-grid scheme at the same NFE (sweeps no longer amplify
+    ///    the worst-case admission bound);
+    /// 2. schedule to uniform — tuned/log/adaptive schedules drop to the
+    ///    uniform grid (no pilot fits, no online control);
+    /// 3. NFE clamped to [`DEGRADE_NFE_FLOOR`] (or one solver step,
+    ///    whichever is higher).
+    ///
+    /// Every output is produced by rewriting the typed [`SolverCfg`], so a
+    /// degraded spec is still a valid spec by construction and resolves to
+    /// a valid typed [`ExecPlan`].  QoS fields (deadline, priority,
+    /// progress, `no_degrade` itself) are untouched; callers are expected
+    /// to consult [`SamplingSpec::no_degrade`] *before* degrading.
+    pub fn degrade(&self, rung: u8) -> Option<(SamplingSpec, u8)> {
+        let mut cfg = self.cfg.clone();
+        let mut applied = 0u8;
+        if rung >= 1 {
+            if let SolverCfg::Pit { solver, nfe, .. } = &cfg {
+                let (solver, nfe) = (*solver, *nfe);
+                cfg = SolverCfg::Scheme {
+                    solver,
+                    schedule: ScheduleSpec::Uniform,
+                    nfe,
+                    nfe_budget: None,
+                };
+                applied = 1;
+            }
+        }
+        if rung >= 2 {
+            if let SolverCfg::Scheme { schedule, .. } = &mut cfg {
+                if *schedule != ScheduleSpec::Uniform {
+                    *schedule = ScheduleSpec::Uniform;
+                    applied = 2;
+                }
+            }
+        }
+        if rung >= 3 {
+            if let SolverCfg::Scheme { solver, nfe, .. } = &mut cfg {
+                let floor = DEGRADE_NFE_FLOOR.max(solver.nfe_per_step());
+                if *nfe > floor {
+                    *nfe = floor;
+                    applied = 3;
+                }
+            }
+        }
+        (applied > 0).then(|| (SamplingSpec { cfg, ..self.clone() }, applied))
     }
 
     /// Score evaluations this spec is *planned* to spend per lane,
@@ -540,6 +617,7 @@ pub struct SpecBuilder {
     deadline_ms: Option<u64>,
     priority: u8,
     progress: bool,
+    no_degrade: bool,
 }
 
 impl Default for SpecBuilder {
@@ -561,6 +639,7 @@ impl Default for SpecBuilder {
             deadline_ms: None,
             priority: DEFAULT_PRIORITY,
             progress: false,
+            no_degrade: false,
         }
     }
 }
@@ -639,6 +718,14 @@ impl SpecBuilder {
     /// Opt into per-window/per-sweep progress frames on streams.
     pub fn progress(mut self, progress: bool) -> Self {
         self.progress = progress;
+        self
+    }
+
+    /// Opt out of the brownout degradation ladder (see
+    /// [`SamplingSpec::degrade`]): under overload this request sheds typed
+    /// `overloaded` instead of being degraded.
+    pub fn no_degrade(mut self, no_degrade: bool) -> Self {
+        self.no_degrade = no_degrade;
         self
     }
 
@@ -747,6 +834,7 @@ impl SpecBuilder {
                 deadline_ms: self.deadline_ms,
                 priority: self.priority,
                 progress: self.progress,
+                no_degrade: self.no_degrade,
             });
         }
 
@@ -803,6 +891,7 @@ impl SpecBuilder {
                 deadline_ms: self.deadline_ms,
                 priority: self.priority,
                 progress: self.progress,
+                no_degrade: self.no_degrade,
             });
         }
 
@@ -865,6 +954,7 @@ impl SpecBuilder {
             deadline_ms: self.deadline_ms,
             priority: self.priority,
             progress: self.progress,
+            no_degrade: self.no_degrade,
         })
     }
 }
@@ -1189,6 +1279,58 @@ mod tests {
         assert!(on.progress());
         // Progress never changes the execution identity.
         assert_eq!(off.plan(), on.plan());
+    }
+
+    #[test]
+    fn no_degrade_is_qos_only() {
+        let off = SamplingSpec::builder().build().unwrap();
+        assert!(!off.no_degrade());
+        let on = SamplingSpec::builder().no_degrade(true).build().unwrap();
+        assert!(on.no_degrade());
+        // Opting out never changes the execution identity.
+        assert_eq!(off.plan(), on.plan());
+    }
+
+    #[test]
+    fn degrade_walks_the_ladder_and_preserves_validity() {
+        let trap = Solver::Trapezoidal { theta: 0.5 };
+        // Rung 1: PIT falls back to the sequential uniform scheme.
+        let pit = scheme(trap, 64).pit(true).build().unwrap();
+        let (d, r) = pit.degrade(1).unwrap();
+        assert_eq!(r, 1);
+        assert!(!d.pit());
+        assert_eq!(d.plan(), ExecPlan::Uniform { steps: 32 });
+        // Rung 2: non-uniform schedules drop to uniform.
+        let tuned = scheme(trap, 64).schedule(ScheduleSpec::Tuned { steps: 16 }).build().unwrap();
+        let (d, r) = tuned.degrade(2).unwrap();
+        assert_eq!(r, 2);
+        assert_eq!(d.plan(), ExecPlan::Uniform { steps: 32 });
+        // Rung 2 on a PIT spec applies rung 1 only (already uniform after).
+        let (d, r) = pit.degrade(2).unwrap();
+        assert_eq!(r, 1);
+        assert_eq!(d.plan(), ExecPlan::Uniform { steps: 32 });
+        // Rung 3: NFE clamps to the floor; the result is what a direct
+        // build at the floor produces, so degraded specs co-batch with
+        // native floor-NFE requests.
+        let big = scheme(trap, 256).build().unwrap();
+        let (d, r) = big.degrade(3).unwrap();
+        assert_eq!(r, 3);
+        assert_eq!(d.nfe(), DEGRADE_NFE_FLOOR);
+        assert_eq!(d, scheme(trap, DEGRADE_NFE_FLOOR).build().unwrap());
+        // Already at/below the floor: rung 3 is a no-op, rung 2 fires.
+        let small = scheme(trap, 8).schedule(ScheduleSpec::Log).build().unwrap();
+        let (d, r) = small.degrade(3).unwrap();
+        assert_eq!(r, 2);
+        assert_eq!(d.schedule(), ScheduleSpec::Uniform);
+        // Nothing left to trade: no rung applies.
+        assert!(scheme(trap, 8).build().unwrap().degrade(3).is_none());
+        // Exact never degrades (no quality knob on the ladder).
+        assert!(scheme(Solver::Exact, 16).build().unwrap().degrade(3).is_none());
+        // QoS fields survive degradation untouched.
+        let q = scheme(trap, 256).deadline_ms(Some(500)).priority(2).build().unwrap();
+        let (d, _) = q.degrade(3).unwrap();
+        assert_eq!(d.deadline_ms(), Some(500));
+        assert_eq!(d.priority(), 2);
     }
 
     #[test]

@@ -43,7 +43,12 @@
 //! untouched.  `progress` (v2 only) opts a `generate_stream` into
 //! `{"stream": "progress", ...}` heartbeat frames; like the other QoS
 //! fields it never affects execution identity, and the writer emits it
-//! only when true.
+//! only when true.  `no_degrade` (v2 only, emitted only when true) opts
+//! the request out of the brownout degradation ladder: an overloaded
+//! server sheds it typed `overloaded` instead of degrading its plan.
+//! Degraded v2 responses carry a `degraded` field (the ladder rung
+//! applied, 1..=3) next to `partial`; undegraded responses omit it, so
+//! pre-brownout traffic serializes byte-identically to before.
 //!
 //! ## Idempotency (`request_key`, v2 only)
 //!
@@ -95,6 +100,7 @@
 //! | `duplicate_request` | a request with this `request_key` is already in flight |
 //! | `coordinator_restarted` | in-flight when the supervisor restarted the scheduler loop |
 //! | `shutdown` | in-flight at coordinator shutdown |
+//! | `backend_unavailable` | the score backend's circuit breaker is open, or a stalled/transiently-failing eval exhausted its retry budget |
 
 use crate::api::spec::{SamplingSpec, SolverCfg, SpecError, DEFAULT_PRIORITY};
 use crate::schedule::ScheduleSpec;
@@ -269,6 +275,9 @@ pub fn spec_from_json(j: &Json) -> Result<SamplingSpec, SpecError> {
     if let Some(p) = j.opt("progress") {
         b = b.progress(p.as_bool().map_err(parse_err("progress"))?);
     }
+    if let Some(n) = j.opt("no_degrade") {
+        b = b.no_degrade(n.as_bool().map_err(parse_err("no_degrade"))?);
+    }
     let sol = j.get("solver").map_err(missing("solver"))?;
     let ty = sol
         .get("type")
@@ -386,6 +395,9 @@ pub fn spec_to_json(spec: &SamplingSpec) -> Json {
     }
     if spec.progress() {
         fields.push(("progress", Json::Bool(true)));
+    }
+    if spec.no_degrade() {
+        fields.push(("no_degrade", Json::Bool(true)));
     }
     fields.push(("solver", solver));
     Json::obj(fields)
@@ -538,12 +550,20 @@ mod tests {
 
     #[test]
     fn qos_fields_round_trip_and_stay_silent_by_default() {
-        // Defaults: the writer emits NEITHER QoS field.
+        // Defaults: the writer emits NO QoS field.
         let plain = SamplingSpec::builder().build().unwrap();
         let j = spec_to_json(&plain);
         let text = j.to_string();
         assert!(!text.contains("deadline_ms") && !text.contains("priority"), "{text}");
+        assert!(!text.contains("no_degrade"), "{text}");
         assert_eq!(spec_from_json(&j).unwrap(), plain);
+
+        // no_degrade round-trips bit-exactly and is emitted only when true.
+        let nd = SamplingSpec::builder().no_degrade(true).build().unwrap();
+        let j = Json::parse(&spec_to_json(&nd).to_string()).unwrap();
+        let back = spec_from_json(&j).unwrap();
+        assert_eq!(back, nd);
+        assert!(back.no_degrade());
 
         // Set: both round-trip bit-exactly through v2.
         let qos = SamplingSpec::builder()

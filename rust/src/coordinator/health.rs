@@ -1,0 +1,439 @@
+//! Backend health: a circuit breaker over score-backend dispatches, the
+//! stall-watchdog dispatch worker, and the transient-failure contract.
+//!
+//! Three pieces, consumed by the coordinator loop (`coordinator::run`):
+//!
+//! - [`HealthTracker`] — per-backend EWMA dispatch latency plus a
+//!   consecutive-failure count feeding a closed → open → half-open
+//!   **circuit breaker**.  While the breaker is open, new dispatches fail
+//!   fast with typed `backend_unavailable` instead of queueing work that
+//!   will stall behind a sick backend; after [`HealthCfg::cooldown`] the
+//!   breaker admits a single **probe** dispatch (half-open) and closes
+//!   again only if the probe succeeds.  The dispatch loop is sequential,
+//!   so one probe at a time is guaranteed by construction.
+//! - [`DispatchWorker`] — a long-lived worker thread the loop offloads
+//!   score evaluations to, so it can bound each one with
+//!   `recv_timeout(eval_timeout)`.  On expiry the loop *abandons* the
+//!   worker (dropping the job channel; the stalled thread exits on its
+//!   own once it wakes) and lazily respawns a fresh one — a stalled eval
+//!   can therefore no longer delay unrelated queued requests past the
+//!   watchdog bound.  The timeout derives from the admission cost model
+//!   (EWMA ms/NFE) via [`HealthCfg::eval_timeout`]; a cold model never
+//!   times anything out.
+//! - [`TRANSIENT`] / [`is_transient`] — the marker contract by which a
+//!   backend signals a *retryable* fault: a panic whose payload contains
+//!   [`TRANSIENT`] (see `testkit::fault::FaultKind::Err`) is retried
+//!   under capped exponential backoff ([`super::supervise::Backoff`])
+//!   within [`HealthCfg::retry_budget`]; any other panic is a lane bug
+//!   and goes through fault isolation as before.  Because score
+//!   evaluations are pure (each lane re-seeds from `lane_seed(i)` per
+//!   attempt, no RNG is drawn between attempts), a retried-then-succeeded
+//!   request is bit-identical to a never-faulted run — pinned by the
+//!   chaos suite.
+
+use std::any::Any;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+use super::scheduler::BatchResult;
+
+/// Marker a backend embeds in a panic payload to flag the failure as
+/// *transient* (retryable): timeouts and `[transient]`-marked panics are
+/// retried within the budget, anything else is treated as a lane bug.
+pub const TRANSIENT: &str = "[transient]";
+
+/// Whether a `catch_unwind` payload carries the [`TRANSIENT`] marker.
+pub fn is_transient(payload: &(dyn Any + Send)) -> bool {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        s.contains(TRANSIENT)
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.contains(TRANSIENT)
+    } else {
+        false
+    }
+}
+
+/// Health/robustness knobs, carried on `CoordinatorCfg`.  Defaults keep
+/// every mechanism on with production-shaped constants; tests and benches
+/// shrink the time constants or switch single mechanisms off.
+#[derive(Clone, Copy, Debug)]
+pub struct HealthCfg {
+    /// Consecutive dispatch failures that trip the breaker open.
+    pub failure_threshold: u32,
+    /// How long an open breaker fails fast before admitting a probe.
+    pub cooldown: Duration,
+    /// Retries per dispatch after the first attempt (so `retry_budget = 2`
+    /// allows three attempts total) before failing `backend_unavailable`.
+    pub retry_budget: u32,
+    /// First retry delay; doubles per attempt up to [`Self::backoff_cap`].
+    pub backoff_initial: Duration,
+    pub backoff_cap: Duration,
+    /// Eval timeout = `watchdog_mult` × the cost model's estimate for the
+    /// batch's planned NFE, floored at [`Self::watchdog_floor`].  The
+    /// generous multiple keeps honest slow batches (cache-cold fits,
+    /// co-batched stragglers) from tripping the watchdog.
+    pub watchdog_mult: f64,
+    /// Smallest eval timeout the watchdog will arm (keeps the multiple
+    /// from producing hair-trigger timeouts on microsecond batches).
+    pub watchdog_floor: Duration,
+    /// Master switch for the stall watchdog (off = dispatch inline on the
+    /// loop thread, exactly the historical behavior).
+    pub watchdog: bool,
+    /// Master switch for the brownout degradation ladder at admission.
+    pub brownout: bool,
+}
+
+impl Default for HealthCfg {
+    fn default() -> HealthCfg {
+        HealthCfg {
+            failure_threshold: 3,
+            cooldown: Duration::from_millis(250),
+            retry_budget: 2,
+            backoff_initial: Duration::from_millis(10),
+            backoff_cap: Duration::from_millis(100),
+            watchdog_mult: 24.0,
+            watchdog_floor: Duration::from_millis(50),
+            watchdog: true,
+            brownout: true,
+        }
+    }
+}
+
+impl HealthCfg {
+    /// The watchdog bound for one eval, given the cost model's estimate
+    /// for the batch (`ms/NFE × planned NFE`).  `None` = run unwatched:
+    /// the watchdog is off, or the cost model is still cold (estimate 0)
+    /// and no sane bound exists yet.
+    pub fn eval_timeout(&self, estimate_ms: f64) -> Option<Duration> {
+        if !self.watchdog || estimate_ms <= 0.0 {
+            return None;
+        }
+        let bounded = Duration::from_secs_f64(self.watchdog_mult * estimate_ms / 1e3);
+        Some(bounded.max(self.watchdog_floor))
+    }
+}
+
+/// The breaker's verdict for one incoming dispatch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Gate {
+    /// Breaker closed: dispatch normally.
+    Allow,
+    /// Breaker was open, cooldown elapsed: this dispatch is the half-open
+    /// probe — success closes the breaker, failure reopens it.
+    Probe,
+    /// Breaker open: fail the batch fast, typed `backend_unavailable`.
+    FastFail,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Breaker {
+    Closed,
+    Open { since: Instant },
+    HalfOpen,
+}
+
+/// Per-backend health: consecutive-failure count + EWMA dispatch latency
+/// feeding the circuit breaker.  Single-owner (the loop thread); the
+/// sequential dispatch loop is what guarantees at most one in-flight
+/// probe.
+pub struct HealthTracker {
+    cfg: HealthCfg,
+    breaker: Breaker,
+    consecutive_failures: u32,
+    /// EWMA of per-dispatch wall time (ms); 0 until the first success.
+    ewma_latency_ms: f64,
+}
+
+impl HealthTracker {
+    pub fn new(cfg: HealthCfg) -> HealthTracker {
+        HealthTracker {
+            cfg,
+            breaker: Breaker::Closed,
+            consecutive_failures: 0,
+            ewma_latency_ms: 0.0,
+        }
+    }
+
+    /// Consult the breaker for one dispatch.  An open breaker whose
+    /// cooldown has elapsed transitions to half-open and admits the
+    /// caller as the probe.
+    pub fn admit_dispatch(&mut self) -> Gate {
+        match self.breaker {
+            Breaker::Closed => Gate::Allow,
+            Breaker::Open { since } => {
+                if since.elapsed() >= self.cfg.cooldown {
+                    self.breaker = Breaker::HalfOpen;
+                    Gate::Probe
+                } else {
+                    Gate::FastFail
+                }
+            }
+            // Unreachable under the sequential loop (the probe resolves
+            // before the next admit); admit as another probe if reached.
+            Breaker::HalfOpen => Gate::Probe,
+        }
+    }
+
+    /// A dispatch (all retries included) succeeded: close the breaker,
+    /// clear the failure streak, fold the wall time into the EWMA.
+    pub fn on_success(&mut self, wall_ms: f64) {
+        self.breaker = Breaker::Closed;
+        self.consecutive_failures = 0;
+        self.ewma_latency_ms = if self.ewma_latency_ms == 0.0 {
+            wall_ms
+        } else {
+            0.8 * self.ewma_latency_ms + 0.2 * wall_ms
+        };
+    }
+
+    /// A dispatch exhausted its retries (timeouts / transient faults /
+    /// backend errors): bump the streak; trip the breaker at the
+    /// threshold, and immediately on a failed half-open probe.
+    pub fn on_failure(&mut self) {
+        self.consecutive_failures += 1;
+        let probe_failed = matches!(self.breaker, Breaker::HalfOpen);
+        if probe_failed || self.consecutive_failures >= self.cfg.failure_threshold {
+            self.breaker = Breaker::Open { since: Instant::now() };
+        }
+    }
+
+    /// Whether admission should treat the backend as sick (brownout hard
+    /// rung): any non-closed breaker state.
+    pub fn is_degraded(&self) -> bool {
+        !matches!(self.breaker, Breaker::Closed)
+    }
+
+    /// Stable name for the `stats` verb: `closed` / `open` / `half-open`.
+    pub fn state_name(&self) -> &'static str {
+        match self.breaker {
+            Breaker::Closed => "closed",
+            Breaker::Open { .. } => "open",
+            Breaker::HalfOpen => "half-open",
+        }
+    }
+
+    pub fn ewma_latency_ms(&self) -> f64 {
+        self.ewma_latency_ms
+    }
+}
+
+/// A dispatch job shipped to the worker: the boxed evaluation plus the
+/// one-shot channel its (caught) outcome comes back on.
+type Work = Box<dyn FnOnce() -> anyhow::Result<BatchResult> + Send>;
+type Caught = std::thread::Result<anyhow::Result<BatchResult>>;
+
+/// What came back from one watched dispatch.
+pub enum WorkerReply {
+    /// The eval finished (successfully, with an error, or panicking —
+    /// panics are caught on the worker and carried as the payload).
+    Done(Caught),
+    /// The watchdog expired first.  The caller must drop this worker
+    /// (abandoning the stalled eval) and respawn before the next dispatch.
+    TimedOut,
+    /// The worker thread is gone (its reply channel closed without a
+    /// reply) — treated like a transient failure.
+    Dead,
+}
+
+/// Long-lived dispatch thread: the loop sends boxed evals over a channel
+/// and bounds the reply wait, so a stalled backend blocks the *worker*,
+/// never the loop.  Dropping the handle closes the job channel; a stalled
+/// worker then exits on its own the moment its eval returns, and any late
+/// reply lands on a receiver nobody holds.
+pub struct DispatchWorker {
+    jobs: Sender<(Work, Sender<Caught>)>,
+}
+
+impl DispatchWorker {
+    /// Spawn a fresh worker.  `None` if the OS refuses the thread — the
+    /// caller falls back to inline (unwatched) dispatch rather than
+    /// failing the batch.
+    pub fn spawn() -> Option<DispatchWorker> {
+        let (jobs, inbox) = channel::<(Work, Sender<Caught>)>();
+        let spawned = std::thread::Builder::new()
+            .name("dispatch-worker".into())
+            .spawn(move || {
+                while let Ok((work, reply)) = inbox.recv() {
+                    // A dropped reply receiver (abandoned eval) is fine.
+                    let _ = reply.send(catch_unwind(AssertUnwindSafe(work)));
+                }
+            });
+        match spawned {
+            Ok(_) => Some(DispatchWorker { jobs }),
+            Err(_) => None,
+        }
+    }
+
+    /// Run one eval on the worker, waiting at most `timeout` (forever if
+    /// `None` — used when the cost model is cold but the worker exists).
+    pub fn dispatch(&self, work: Work, timeout: Option<Duration>) -> WorkerReply {
+        let (reply_tx, reply_rx) = channel();
+        if self.jobs.send((work, reply_tx)).is_err() {
+            return WorkerReply::Dead;
+        }
+        match timeout {
+            Some(bound) => match reply_rx.recv_timeout(bound) {
+                Ok(caught) => WorkerReply::Done(caught),
+                Err(RecvTimeoutError::Timeout) => WorkerReply::TimedOut,
+                Err(RecvTimeoutError::Disconnected) => WorkerReply::Dead,
+            },
+            None => match reply_rx.recv() {
+                Ok(caught) => WorkerReply::Done(caught),
+                Err(_) => WorkerReply::Dead,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A minimal non-PIT batch result (the ctor is scheduler-private).
+    fn result(tokens: Vec<Vec<crate::score::Tok>>) -> BatchResult {
+        let lanes = tokens.len();
+        BatchResult {
+            tokens,
+            nfe: vec![1; lanes],
+            partial: vec![false; lanes],
+            pit_sweeps: 0,
+            pit_converged: 0,
+            pit_sweep_limit: 0,
+        }
+    }
+
+    fn fast_cfg() -> HealthCfg {
+        HealthCfg {
+            failure_threshold: 3,
+            cooldown: Duration::from_millis(20),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn breaker_trips_cools_probes_and_closes() {
+        let mut h = HealthTracker::new(fast_cfg());
+        assert_eq!(h.admit_dispatch(), Gate::Allow);
+        assert_eq!(h.state_name(), "closed");
+        assert!(!h.is_degraded());
+        // Two failures: still under the threshold.
+        h.on_failure();
+        h.on_failure();
+        assert_eq!(h.admit_dispatch(), Gate::Allow);
+        // Third consecutive failure trips it open.
+        h.on_failure();
+        assert_eq!(h.state_name(), "open");
+        assert!(h.is_degraded());
+        assert_eq!(h.admit_dispatch(), Gate::FastFail);
+        // Cooldown elapses: the next dispatch is the half-open probe.
+        std::thread::sleep(Duration::from_millis(25));
+        assert_eq!(h.admit_dispatch(), Gate::Probe);
+        assert_eq!(h.state_name(), "half-open");
+        // Probe succeeds: closed, streak cleared.
+        h.on_success(5.0);
+        assert_eq!(h.state_name(), "closed");
+        assert_eq!(h.admit_dispatch(), Gate::Allow);
+        // One fresh failure must NOT re-trip (streak was reset).
+        h.on_failure();
+        assert_eq!(h.admit_dispatch(), Gate::Allow);
+    }
+
+    #[test]
+    fn failed_probe_reopens_immediately() {
+        let mut h = HealthTracker::new(fast_cfg());
+        for _ in 0..3 {
+            h.on_failure();
+        }
+        std::thread::sleep(Duration::from_millis(25));
+        assert_eq!(h.admit_dispatch(), Gate::Probe);
+        // The probe fails: straight back to open, no threshold wait.
+        h.on_failure();
+        assert_eq!(h.state_name(), "open");
+        assert_eq!(h.admit_dispatch(), Gate::FastFail);
+    }
+
+    #[test]
+    fn success_tracks_latency_ewma() {
+        let mut h = HealthTracker::new(HealthCfg::default());
+        assert_eq!(h.ewma_latency_ms(), 0.0);
+        h.on_success(10.0);
+        assert!((h.ewma_latency_ms() - 10.0).abs() < 1e-12, "first obs seeds");
+        h.on_success(20.0);
+        assert!((h.ewma_latency_ms() - 12.0).abs() < 1e-12, "0.8*10 + 0.2*20");
+    }
+
+    #[test]
+    fn eval_timeout_scales_and_floors() {
+        let cfg = HealthCfg { watchdog_mult: 10.0, ..Default::default() };
+        // Cold cost model: never timed out.
+        assert!(cfg.eval_timeout(0.0).is_none());
+        // Tiny estimate: floored.
+        assert_eq!(cfg.eval_timeout(0.01), Some(cfg.watchdog_floor));
+        // Real estimate: mult × estimate.
+        assert_eq!(cfg.eval_timeout(100.0), Some(Duration::from_secs(1)));
+        // Watchdog off: unwatched regardless.
+        let off = HealthCfg { watchdog: false, ..Default::default() };
+        assert!(off.eval_timeout(100.0).is_none());
+    }
+
+    #[test]
+    fn transient_marker_detected_in_panic_payloads() {
+        let p = catch_unwind(|| panic!("fault {TRANSIENT} score call 3")).unwrap_err();
+        assert!(is_transient(p.as_ref()));
+        let p = catch_unwind(|| panic!("ordinary lane bug")).unwrap_err();
+        assert!(!is_transient(p.as_ref()));
+        let p = catch_unwind(|| std::panic::panic_any(42i32)).unwrap_err();
+        assert!(!is_transient(p.as_ref()), "non-string payloads are not transient");
+    }
+
+    #[test]
+    fn worker_runs_work_and_catches_panics() {
+        let w = DispatchWorker::spawn().expect("spawn worker");
+        let ok = w.dispatch(
+            Box::new(|| Ok(result(vec![vec![1]]))),
+            Some(Duration::from_secs(5)),
+        );
+        match ok {
+            WorkerReply::Done(Ok(Ok(r))) => assert_eq!(r.tokens, vec![vec![1]]),
+            _ => panic!("expected a successful reply"),
+        }
+        // A panicking eval comes back caught, and the worker survives it.
+        let caught = w.dispatch(
+            Box::new(|| panic!("boom {TRANSIENT}")),
+            Some(Duration::from_secs(5)),
+        );
+        match caught {
+            WorkerReply::Done(Err(payload)) => assert!(is_transient(payload.as_ref())),
+            _ => panic!("expected a caught panic"),
+        }
+        let again = w.dispatch(
+            Box::new(|| Ok(result(vec![vec![2]]))),
+            Some(Duration::from_secs(5)),
+        );
+        assert!(matches!(again, WorkerReply::Done(Ok(Ok(_)))), "worker must survive");
+    }
+
+    #[test]
+    fn watchdog_abandons_stalled_worker() {
+        let w = DispatchWorker::spawn().expect("spawn worker");
+        let reply = w.dispatch(
+            Box::new(|| {
+                std::thread::sleep(Duration::from_millis(400));
+                Ok(result(vec![vec![9]]))
+            }),
+            Some(Duration::from_millis(30)),
+        );
+        assert!(matches!(reply, WorkerReply::TimedOut));
+        // Abandon: drop the handle; the stalled thread exits once it wakes
+        // (nothing to assert beyond not hanging — the job channel closed).
+        drop(w);
+        // A fresh worker serves the retry.
+        let w = DispatchWorker::spawn().expect("respawn worker");
+        let reply = w.dispatch(
+            Box::new(|| Ok(result(vec![vec![7]]))),
+            Some(Duration::from_secs(5)),
+        );
+        assert!(matches!(reply, WorkerReply::Done(Ok(Ok(_)))));
+    }
+}

@@ -35,6 +35,23 @@ pub struct Metrics {
     pub deadline_expiries: u64,
     /// Scheduler-loop crashes the supervisor recovered from.
     pub supervisor_restarts: u64,
+    // Backend health — the breaker/watchdog/retry ledger.
+    /// Dispatch retries after a timed-out or transient attempt.
+    pub retries: u64,
+    /// Evals the stall watchdog timed out (each abandons the worker).
+    pub eval_timeouts: u64,
+    /// Batches failed typed `backend_unavailable` (breaker open, or eval
+    /// retries exhausted).
+    pub backend_unavailable: u64,
+    /// Half-open probe dispatches admitted by the breaker.
+    pub breaker_probes: u64,
+    // Brownout ladder — degraded admissions by the highest rung applied.
+    /// Rung 1: PIT decoupling turned off.
+    pub degraded_rung1: u64,
+    /// Rung 2: tuned/log schedule replaced by uniform.
+    pub degraded_rung2: u64,
+    /// Rung 3: NFE clamped toward the floor.
+    pub degraded_rung3: u64,
     // Point-in-time gauges, filled when the snapshot is taken.
     /// Requests registered but not yet completed.
     pub in_flight: u64,
@@ -43,6 +60,9 @@ pub struct Metrics {
     /// Entries in the shared cancel registry (leak canary: must drain to
     /// the in-flight count).
     pub registry_entries: u64,
+    /// Circuit-breaker state at snapshot time: `closed` / `open` /
+    /// `half-open` (empty until the first snapshot patches it in).
+    pub breaker_state: String,
 }
 
 impl Metrics {
@@ -62,6 +82,9 @@ impl Metrics {
              latency_ms[p_mean={:.2} max={:.2}] occupancy_mean={:.2} \
              queue_wait_ms_mean={:.2} lane_failures={} sheds={} \
              deadline_rejects={} deadline_expiries={} supervisor_restarts={} \
+             retries={} eval_timeouts={} backend_unavailable={} \
+             breaker_state={} breaker_probes={} \
+             degraded_rung1={} degraded_rung2={} degraded_rung3={} \
              in_flight={} queued_lanes={} registry_entries={}",
             self.requests,
             self.lanes,
@@ -79,6 +102,14 @@ impl Metrics {
             self.deadline_rejects,
             self.deadline_expiries,
             self.supervisor_restarts,
+            self.retries,
+            self.eval_timeouts,
+            self.backend_unavailable,
+            if self.breaker_state.is_empty() { "closed" } else { &self.breaker_state },
+            self.breaker_probes,
+            self.degraded_rung1,
+            self.degraded_rung2,
+            self.degraded_rung3,
             self.in_flight,
             self.queued_lanes,
             self.registry_entries,
@@ -111,6 +142,21 @@ impl Metrics {
             ("deadline_rejects", Json::from(self.deadline_rejects)),
             ("deadline_expiries", Json::from(self.deadline_expiries)),
             ("supervisor_restarts", Json::from(self.supervisor_restarts)),
+            ("retries", Json::from(self.retries)),
+            ("eval_timeouts", Json::from(self.eval_timeouts)),
+            ("backend_unavailable", Json::from(self.backend_unavailable)),
+            (
+                "breaker_state",
+                Json::Str(if self.breaker_state.is_empty() {
+                    "closed".to_string()
+                } else {
+                    self.breaker_state.clone()
+                }),
+            ),
+            ("breaker_probes", Json::from(self.breaker_probes)),
+            ("degraded_rung1", Json::from(self.degraded_rung1)),
+            ("degraded_rung2", Json::from(self.degraded_rung2)),
+            ("degraded_rung3", Json::from(self.degraded_rung3)),
             ("in_flight", Json::from(self.in_flight)),
             ("queued_lanes", Json::from(self.queued_lanes)),
             ("registry_entries", Json::from(self.registry_entries)),
@@ -155,6 +201,13 @@ mod tests {
         m.pit_sweeps = 11;
         m.pit_converged_lanes = 6;
         m.pit_sweep_limit_hits = 1;
+        m.retries = 8;
+        m.eval_timeouts = 2;
+        m.backend_unavailable = 9;
+        m.breaker_probes = 1;
+        m.breaker_state = "half-open".to_string();
+        m.degraded_rung1 = 10;
+        m.degraded_rung3 = 12;
         let r = m.report();
         for needle in [
             "pit_sweeps=11",
@@ -165,6 +218,14 @@ mod tests {
             "deadline_rejects=4",
             "deadline_expiries=5",
             "supervisor_restarts=1",
+            "retries=8",
+            "eval_timeouts=2",
+            "backend_unavailable=9",
+            "breaker_state=half-open",
+            "breaker_probes=1",
+            "degraded_rung1=10",
+            "degraded_rung2=0",
+            "degraded_rung3=12",
             "in_flight=7",
         ] {
             assert!(r.contains(needle), "{needle} missing from {r}");
@@ -176,5 +237,19 @@ mod tests {
         assert_eq!(j.get("pit_sweep_limit_hits").unwrap().as_u64().unwrap(), 1);
         assert_eq!(j.get("supervisor_restarts").unwrap().as_u64().unwrap(), 1);
         assert_eq!(j.get("registry_entries").unwrap().as_u64().unwrap(), 0);
+        assert_eq!(j.get("retries").unwrap().as_u64().unwrap(), 8);
+        assert_eq!(j.get("eval_timeouts").unwrap().as_u64().unwrap(), 2);
+        assert_eq!(j.get("backend_unavailable").unwrap().as_u64().unwrap(), 9);
+        assert_eq!(j.get("breaker_probes").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(j.get("breaker_state").unwrap().as_str().unwrap(), "half-open");
+        assert_eq!(j.get("degraded_rung1").unwrap().as_u64().unwrap(), 10);
+        assert_eq!(j.get("degraded_rung3").unwrap().as_u64().unwrap(), 12);
+        // A snapshot nobody patched reads as closed, not as "".
+        let fresh = Metrics::new();
+        assert!(fresh.report().contains("breaker_state=closed"));
+        assert_eq!(
+            fresh.to_json().get("breaker_state").unwrap().as_str().unwrap(),
+            "closed"
+        );
     }
 }

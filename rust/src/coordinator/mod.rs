@@ -72,6 +72,28 @@
 //! - **A deadline expires mid-run**: not an error — the driver polls the
 //!   deadline on the same per-window hook as the cancel token, and the job
 //!   completes with a partial response (counted as `deadline_expiries`).
+//! - **The score backend is sick** (`backend_unavailable`): score
+//!   dispatches run on a watchdogged worker thread with an eval timeout
+//!   derived from the learned ms/NFE cost model; a timed-out or
+//!   `[transient]`-marked eval is retried under capped backoff within a
+//!   per-dispatch budget ([`health::HealthCfg`]).  Evals are pure (each
+//!   lane re-seeds per attempt), so a retried-then-succeeded request is
+//!   bit-identical to a never-faulted run.  Exhausted retries fail typed
+//!   and feed the circuit breaker ([`health::HealthTracker`]); while it
+//!   is open, new batches fail fast with the same code instead of
+//!   queueing behind the sick backend, until a half-open probe succeeds.
+//!   A stalled eval blocks only the abandoned worker — never the loop —
+//!   so it cannot delay unrelated queued requests past the watchdog
+//!   bound.
+//! - **Sustained overload (brownout)**: before the capacity loop sheds,
+//!   intake walks degradable specs down a pre-declared ladder
+//!   ([`SamplingSpec::degrade`]: PIT off → uniform schedule → NFE floor)
+//!   keyed to queue/in-flight utilization — and straight to the last rung
+//!   while the breaker is non-closed.  Every degraded plan is still a
+//!   valid typed spec (built through the same constructors), the response
+//!   echoes `degraded` + rung, and specs that set `no_degrade` are never
+//!   touched (they shed typed `overloaded` instead).  Undegraded requests
+//!   are bit-identical to a coordinator without brownout.
 //! - **The scheduler loop itself crashes** (`coordinator_restarted`): the
 //!   supervisor catches the panic, fails all in-flight jobs typed, clears
 //!   the registry, rebuilds batching state (metrics survive), and
@@ -86,6 +108,7 @@ pub mod scheduler;
 pub mod state;
 pub mod metrics;
 pub mod supervise;
+pub mod health;
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -97,9 +120,12 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 pub use batcher::{BatchKey, BatchPolicy, DynamicBatcher};
+pub use health::HealthCfg;
 pub use metrics::Metrics;
 pub use request::{GenerateRequest, GenerateResponse};
 pub use supervise::Backoff;
+
+use health::{DispatchWorker, Gate, HealthTracker, WorkerReply};
 
 pub use crate::api::{CancelToken, SamplingSpec};
 
@@ -127,6 +153,9 @@ pub mod codes {
     /// A request carried a `request_key` already claimed by an in-flight
     /// job (idempotency dedupe); the message echoes the original job id.
     pub const DUPLICATE_REQUEST: &str = "duplicate_request";
+    /// The score backend's circuit breaker is open, or a stalled /
+    /// transiently-failing eval exhausted its retry budget.
+    pub const BACKEND_UNAVAILABLE: &str = "backend_unavailable";
 }
 
 /// Typed job failure: a stable [`codes`] code plus a human-readable
@@ -235,6 +264,10 @@ pub struct CoordinatorCfg {
     pub max_inflight: Option<usize>,
     /// Max lanes sitting in the batcher queues.
     pub queue_cap: Option<usize>,
+    /// Robustness knobs: circuit breaker, stall watchdog + retry budget,
+    /// brownout ladder ([`health::HealthCfg`]).  Defaults keep everything
+    /// on with production-shaped constants.
+    pub health: HealthCfg,
 }
 
 /// State shared between coordinator handles and the loop thread: the id
@@ -274,14 +307,17 @@ enum Backend {
         registry: Registry,
         /// Lazily built, cached per family.
         scores: BTreeMap<String, Arc<ArtifactScore>>,
-        /// Tuned grids, memoised per (family, vocab, seq_len, solver, steps).
-        schedules: ScheduleCache,
+        /// Tuned grids, memoised per (family, vocab, seq_len, solver,
+        /// steps).  Shared with the watchdog's dispatch worker, hence the
+        /// mutex (locked only for the tuned-arm lookup, never across an
+        /// evaluation).
+        schedules: Arc<Mutex<ScheduleCache>>,
     },
     /// A local in-process score source (analytic oracle): no artifacts
     /// needed, everything runs through `generate_batch`.
     Local {
         score: Arc<dyn ScoreSource>,
-        schedules: ScheduleCache,
+        schedules: Arc<Mutex<ScheduleCache>>,
     },
 }
 
@@ -339,7 +375,7 @@ impl Coordinator {
             runtime,
             registry,
             scores: BTreeMap::new(),
-            schedules: ScheduleCache::with_dir(schedule_dir),
+            schedules: Arc::new(Mutex::new(ScheduleCache::with_dir(schedule_dir))),
         };
         Coordinator::spawn(backend, policy, max_lanes, cfg)
     }
@@ -382,7 +418,10 @@ impl Coordinator {
         cfg: CoordinatorCfg,
     ) -> Coordinator {
         Coordinator::spawn(
-            Backend::Local { score, schedules: ScheduleCache::with_dir(schedule_dir) },
+            Backend::Local {
+                score,
+                schedules: Arc::new(Mutex::new(ScheduleCache::with_dir(schedule_dir))),
+            },
             policy,
             max_lanes.max(1),
             cfg,
@@ -612,6 +651,110 @@ fn execute_batch(
     }
 }
 
+/// The pieces of one *watchable* dispatch — cheap clones the watchdog's
+/// worker thread can own.  `None` from [`scored_job`] means the batch can
+/// only run on the legacy fused-step-graph path, which needs `&mut
+/// Backend` and therefore stays inline on the loop thread (unwatched, the
+/// historical behavior — documented trade-off of the fallback).
+struct ScoredJob {
+    score: Arc<dyn ScoreSource>,
+    schedules: Arc<Mutex<ScheduleCache>>,
+    /// Present for artifact-backed scores: polled for poisoned dispatch
+    /// errors after the run (the trait cannot surface them).
+    artifact: Option<Arc<ArtifactScore>>,
+}
+
+/// Extract the watchable pieces of one dispatch from the backend (lazily
+/// building the family's score artifact, exactly as [`execute_batch`]
+/// would).
+fn scored_job(backend: &mut Backend, proto: &SamplingSpec) -> Result<Option<ScoredJob>> {
+    match backend {
+        Backend::Local { score, schedules } => Ok(Some(ScoredJob {
+            score: Arc::clone(score),
+            schedules: Arc::clone(schedules),
+            artifact: None,
+        })),
+        Backend::Pjrt { runtime, registry, scores, schedules } => {
+            let score_name = format!("{}_score", proto.family());
+            if registry.get(&score_name).is_err() {
+                return Ok(None);
+            }
+            let score = match scores.get(proto.family()) {
+                Some(s) => Arc::clone(s),
+                None => {
+                    let s = Arc::new(ArtifactScore::new(
+                        runtime.clone(),
+                        registry,
+                        proto.family(),
+                    )?);
+                    scores.insert(proto.family().to_string(), Arc::clone(&s));
+                    s
+                }
+            };
+            Ok(Some(ScoredJob {
+                score: Arc::clone(&score) as Arc<dyn ScoreSource>,
+                schedules: Arc::clone(schedules),
+                artifact: Some(score),
+            }))
+        }
+    }
+}
+
+/// Box one scored evaluation for the dispatch worker.  Everything moved
+/// in is a cheap handle (Arcs, lane clones, event senders); the
+/// evaluation itself is pure, so re-boxing a fresh closure per retry
+/// attempt replays the identical computation.
+fn make_work(
+    job: ScoredJob,
+    proto: SamplingSpec,
+    lanes: Vec<batcher::Lane>,
+    progress_txs: Vec<Sender<JobEvent>>,
+) -> Box<dyn FnOnce() -> Result<scheduler::BatchResult> + Send> {
+    Box::new(move || {
+        let mut obs_fn;
+        let obs: Option<&mut dyn FnMut(crate::solvers::driver::Progress)> =
+            if progress_txs.is_empty() {
+                None
+            } else {
+                obs_fn = |p: crate::solvers::driver::Progress| {
+                    for tx in &progress_txs {
+                        let _ = tx.send(JobEvent::Progress {
+                            done: p.done,
+                            total: p.total,
+                            phase: p.phase,
+                        });
+                    }
+                };
+                Some(&mut obs_fn)
+            };
+        let result = scheduler::run_batch_scored_obs(
+            job.score.as_ref(),
+            &proto,
+            &lanes,
+            &job.schedules,
+            obs,
+        )?;
+        if let Some(artifact) = &job.artifact {
+            // Score dispatch failures poison the source instead of
+            // surfacing through the trait; convert them to a batch error.
+            if let Some(err) = artifact.take_error() {
+                return Err(anyhow!("score artifact dispatch failed: {err}"));
+            }
+        }
+        Ok(result)
+    })
+}
+
+/// Classified outcome of one dispatch attempt (see
+/// [`LoopState::attempt_batch`]): timeouts and `[transient]`-marked
+/// panics are the retryable arms.
+enum Attempt {
+    Done(scheduler::BatchResult),
+    Failed(anyhow::Error),
+    Panicked(Box<dyn std::any::Any + Send>),
+    TimedOut,
+}
+
 /// Per-job sink state the loop thread keeps.
 struct Sink {
     events: Sender<JobEvent>,
@@ -621,6 +764,9 @@ struct Sink {
     progress: bool,
     /// Claimed idempotency key, released when the job leaves the table.
     key: Option<String>,
+    /// Brownout ladder rung applied at admission (echoed on the response
+    /// as `degraded`); `None` for undegraded requests.
+    degraded: Option<u8>,
 }
 
 fn finish_job(
@@ -679,6 +825,12 @@ struct LoopState {
     jobs: BTreeMap<u64, Sink>,
     metrics: Metrics,
     cost: CostModel,
+    /// Backend health: EWMA latency + the circuit breaker.
+    health: HealthTracker,
+    /// The watchdog's long-lived dispatch thread; `None` until the first
+    /// watched dispatch, and again after a timeout abandons it (the next
+    /// dispatch respawns lazily).
+    worker: Option<DispatchWorker>,
     started: Instant,
     open: bool,
 }
@@ -707,6 +859,7 @@ impl LoopState {
                         m.in_flight = self.assembler.in_flight() as u64;
                         m.queued_lanes = self.batcher.pending() as u64;
                         m.registry_entries = lock_cancels(shared).len() as u64;
+                        m.breaker_state = self.health.state_name().to_string();
                         let _ = reply.send(m);
                     }
                     Ok(Msg::Crash(reason)) => {
@@ -759,47 +912,24 @@ impl LoopState {
                         }
                     }
                 }
-                let mut obs_fn;
-                let obs: Option<&mut dyn FnMut(crate::solvers::driver::Progress)> =
-                    if progress_txs.is_empty() {
-                        None
-                    } else {
-                        obs_fn = |p: crate::solvers::driver::Progress| {
-                            for tx in &progress_txs {
-                                let _ = tx.send(JobEvent::Progress {
-                                    done: p.done,
-                                    total: p.total,
-                                    phase: p.phase,
-                                });
-                            }
-                        };
-                        Some(&mut obs_fn)
-                    };
-                let t0 = Instant::now();
-                let outcome = catch_unwind(AssertUnwindSafe(|| {
-                    execute_batch(&mut self.backend, &proto, &lanes, obs)
-                }));
-                match outcome {
-                    Ok(Ok(result)) => {
-                        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
-                        // The batch's critical path is its longest lane.
-                        self.cost
-                            .observe(wall_ms, result.nfe.iter().copied().max().unwrap_or(0));
-                        self.complete_lanes(shared, &lanes, result);
-                    }
-                    Ok(Err(err)) => {
+                // Breaker gate: an open breaker fails the batch fast,
+                // typed, instead of queueing work behind a sick backend.
+                match self.health.admit_dispatch() {
+                    Gate::Allow => {}
+                    Gate::Probe => self.metrics.breaker_probes += 1,
+                    Gate::FastFail => {
+                        self.metrics.backend_unavailable += 1;
                         self.fail_requests(
                             shared,
                             &lanes,
-                            codes::BATCH_FAILED,
-                            format!("batch execution failed: {err:#}"),
+                            codes::BACKEND_UNAVAILABLE,
+                            "score backend unavailable: circuit breaker open"
+                                .to_string(),
                         );
-                    }
-                    Err(payload) => {
-                        let msg = supervise::panic_message(payload.as_ref());
-                        self.isolate_lanes(shared, &proto, lanes, &msg);
+                        continue;
                     }
                 }
+                self.dispatch_batch(shared, &proto, lanes, progress_txs);
             }
         }
 
@@ -839,11 +969,213 @@ impl LoopState {
         }
     }
 
+    /// Execute one admitted batch under the robustness stack: the stall
+    /// watchdog (when the cost model can price a bound), bounded retry of
+    /// timeouts and `[transient]`-marked faults under capped backoff, and
+    /// breaker accounting — then the usual complete/fail/isolate routing.
+    ///
+    /// Retry parity: each attempt re-runs the identical pure evaluation
+    /// (per-lane seeds are re-derived inside the solver, no RNG state
+    /// crosses attempts), so a retried-then-succeeded batch is
+    /// bit-identical to a never-faulted one — pinned by the chaos suite.
+    fn dispatch_batch(
+        &mut self,
+        shared: &Shared,
+        proto: &SamplingSpec,
+        lanes: Vec<batcher::Lane>,
+        progress_txs: Vec<Sender<JobEvent>>,
+    ) {
+        // Clamped so pathological test configs cannot trip the Backoff
+        // constructor's invariants.
+        let initial = self.cfg.health.backoff_initial.max(Duration::from_micros(1));
+        let mut backoff = Backoff::new(initial, self.cfg.health.backoff_cap.max(initial));
+        let mut attempt = 0u32;
+        loop {
+            let t0 = Instant::now();
+            match self.attempt_batch(proto, &lanes, &progress_txs) {
+                Attempt::Done(result) => {
+                    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    self.health.on_success(wall_ms);
+                    // The batch's critical path is its longest lane.
+                    self.cost
+                        .observe(wall_ms, result.nfe.iter().copied().max().unwrap_or(0));
+                    self.complete_lanes(shared, &lanes, result);
+                    return;
+                }
+                Attempt::Failed(err) => {
+                    // Backend execution errors are request-shaped (bad
+                    // schedule for the fused path, poisoned artifact):
+                    // fail typed without feeding the breaker, so a stream
+                    // of unservable requests cannot open it against
+                    // healthy ones.
+                    self.fail_requests(
+                        shared,
+                        &lanes,
+                        codes::BATCH_FAILED,
+                        format!("batch execution failed: {err:#}"),
+                    );
+                    return;
+                }
+                Attempt::Panicked(payload) => {
+                    if !health::is_transient(payload.as_ref()) {
+                        // A lane bug, not backend sickness: isolate as
+                        // before (solo re-runs; the culprit fails
+                        // `lane_failed`, siblings complete).
+                        let msg = supervise::panic_message(payload.as_ref());
+                        self.isolate_lanes(shared, proto, lanes, &msg);
+                        return;
+                    }
+                    // Transient: retry below.
+                }
+                Attempt::TimedOut => {
+                    self.metrics.eval_timeouts += 1;
+                }
+            }
+            // A timed-out or transient attempt: retry within the budget.
+            if attempt >= self.cfg.health.retry_budget {
+                self.health.on_failure();
+                self.metrics.backend_unavailable += 1;
+                self.fail_requests(
+                    shared,
+                    &lanes,
+                    codes::BACKEND_UNAVAILABLE,
+                    format!(
+                        "score backend unavailable: eval retries exhausted \
+                         ({} attempts)",
+                        attempt + 1
+                    ),
+                );
+                return;
+            }
+            attempt += 1;
+            self.metrics.retries += 1;
+            std::thread::sleep(backoff.next_delay());
+        }
+    }
+
+    /// One dispatch attempt.  Scored batches ship to the watchdog worker
+    /// (bounded by `recv_timeout` when the cost model is warm); on expiry
+    /// the worker is *abandoned* — dropping its job channel lets the
+    /// stalled thread exit once it wakes — and the next attempt respawns
+    /// a fresh one, so a stalled eval never blocks the loop thread.  The
+    /// legacy fused path (and the fallback when the OS refuses a worker
+    /// thread) runs inline, exactly the historical behavior, but is still
+    /// classified so transient faults retry even there.
+    fn attempt_batch(
+        &mut self,
+        proto: &SamplingSpec,
+        lanes: &[batcher::Lane],
+        progress_txs: &[Sender<JobEvent>],
+    ) -> Attempt {
+        if self.cfg.health.watchdog {
+            let job = match scored_job(&mut self.backend, proto) {
+                Ok(Some(job)) => Some(job),
+                Ok(None) => None,
+                Err(err) => return Attempt::Failed(err),
+            };
+            if let Some(job) = job {
+                if self.worker.is_none() {
+                    self.worker = DispatchWorker::spawn();
+                }
+                if let Some(worker) = &self.worker {
+                    let timeout = proto
+                        .planned_nfe()
+                        .and_then(|nfe| {
+                            self.cfg.health.eval_timeout(self.cost.estimate_ms(nfe))
+                        });
+                    let work =
+                        make_work(job, proto.clone(), lanes.to_vec(), progress_txs.to_vec());
+                    return match worker.dispatch(work, timeout) {
+                        WorkerReply::Done(Ok(Ok(result))) => Attempt::Done(result),
+                        WorkerReply::Done(Ok(Err(err))) => Attempt::Failed(err),
+                        WorkerReply::Done(Err(payload)) => Attempt::Panicked(payload),
+                        WorkerReply::TimedOut => {
+                            self.worker = None;
+                            Attempt::TimedOut
+                        }
+                        WorkerReply::Dead => {
+                            self.worker = None;
+                            Attempt::Failed(anyhow!("dispatch worker died"))
+                        }
+                    };
+                }
+                // The OS refused the worker thread: dispatch inline
+                // (unwatched) rather than failing the batch.
+            }
+        }
+        let mut obs_fn;
+        let obs: Option<&mut dyn FnMut(crate::solvers::driver::Progress)> =
+            if progress_txs.is_empty() {
+                None
+            } else {
+                obs_fn = |p: crate::solvers::driver::Progress| {
+                    for tx in progress_txs {
+                        let _ = tx.send(JobEvent::Progress {
+                            done: p.done,
+                            total: p.total,
+                            phase: p.phase,
+                        });
+                    }
+                };
+                Some(&mut obs_fn)
+            };
+        match catch_unwind(AssertUnwindSafe(|| {
+            execute_batch(&mut self.backend, proto, lanes, obs)
+        })) {
+            Ok(Ok(result)) => Attempt::Done(result),
+            Ok(Err(err)) => Attempt::Failed(err),
+            Err(payload) => Attempt::Panicked(payload),
+        }
+    }
+
     /// Intake: deadline feasibility, then capacity (with priority-aware
     /// shedding), then bookkeeping.  Rejections are typed and remove the
     /// registry entry the submitter just created.
-    fn admit(&mut self, shared: &Shared, job: Job) {
+    fn admit(&mut self, shared: &Shared, mut job: Job) {
         self.metrics.requests += 1;
+        // Brownout: under sustained pressure — or any non-closed breaker —
+        // walk the spec down the pre-declared degradation ladder
+        // ([`SamplingSpec::degrade`]) instead of (eventually) shedding it.
+        // Runs before feasibility so a degraded (cheaper) plan is the one
+        // priced against the deadline.  `no_degrade` specs are never
+        // touched: they take their chances with the capacity loop below
+        // and shed typed.  The rungs engage strictly below the shed
+        // threshold (utilization 1.0), so brownout degrades what shedding
+        // would otherwise kill.
+        let mut degraded_rung = None;
+        if self.cfg.health.brownout && !job.spec.no_degrade() {
+            let rung = if self.health.is_degraded() {
+                crate::api::spec::MAX_DEGRADE_RUNG
+            } else {
+                let n = job.spec.n_samples();
+                let queue_u = self
+                    .cfg
+                    .queue_cap
+                    .map(|q| (self.batcher.pending() + n) as f64 / q.max(1) as f64)
+                    .unwrap_or(0.0);
+                let inflight_u = self
+                    .cfg
+                    .max_inflight
+                    .map(|m| self.assembler.in_flight() as f64 / m.max(1) as f64)
+                    .unwrap_or(0.0);
+                let u = queue_u.max(inflight_u);
+                if u >= 0.875 {
+                    3
+                } else if u >= 0.625 {
+                    2
+                } else if u >= 0.375 {
+                    1
+                } else {
+                    0
+                }
+            };
+            if rung > 0 {
+                if let Some((degraded, applied)) = job.spec.degrade(rung) {
+                    job.spec = degraded;
+                    degraded_rung = Some(applied);
+                }
+            }
+        }
         // Deadline feasibility: the resolved plan's NFE (the spec's own
         // cost model) times the learned ms/NFE rate.  Plans with unbounded
         // NFE (uncapped exact) and cold cost models are never rejected.
@@ -891,6 +1223,14 @@ impl LoopState {
             }
         }
         self.metrics.lanes += n as u64;
+        // Ledger the rung only now: a degraded-then-shed request is a
+        // shed, not a degraded admission.
+        match degraded_rung {
+            None => {}
+            Some(1) => self.metrics.degraded_rung1 += 1,
+            Some(2) => self.metrics.degraded_rung2 += 1,
+            Some(_) => self.metrics.degraded_rung3 += 1,
+        }
         let now = self.now_ms();
         self.assembler.register(job.id, n, now);
         let priority = job.spec.priority();
@@ -903,6 +1243,7 @@ impl LoopState {
                 priority,
                 progress,
                 key: job.key,
+                degraded: degraded_rung,
             },
         );
         self.batcher.enqueue(GenerateRequest::new(job.id, job.spec), job.cancel);
@@ -962,7 +1303,7 @@ impl LoopState {
                     });
                 }
             }
-            if let Some(resp) = self.assembler.complete_lane(
+            if let Some(mut resp) = self.assembler.complete_lane(
                 lane.request_id,
                 lane.sample_idx,
                 toks,
@@ -970,6 +1311,10 @@ impl LoopState {
                 lane_partial,
                 now,
             ) {
+                // Patch in the brownout echo before the response leaves
+                // the loop (the rung lives on the sink, not lane state).
+                resp.degraded =
+                    self.jobs.get(&resp.id).and_then(|sink| sink.degraded);
                 // Partial because the deadline passed (and nobody fired an
                 // explicit cancel) = a deadline expiry, not an error.
                 if resp.partial && lane.cancel.deadline_expired() && !lane.cancel.fired()
@@ -1092,6 +1437,10 @@ impl LoopState {
         drop(cancels);
         self.batcher = DynamicBatcher::new(self.policy, self.max_lanes);
         self.assembler = ResponseAssembler::new();
+        // Drop any worker too: a loop crash mid-dispatch may have left it
+        // holding an eval nobody is waiting on; the next watched dispatch
+        // respawns a fresh one.
+        self.worker = None;
     }
 }
 
@@ -1118,6 +1467,8 @@ fn supervised_loop(
         jobs: BTreeMap::new(),
         metrics: Metrics::new(),
         cost: CostModel::new(),
+        health: HealthTracker::new(cfg.health),
+        worker: None,
         started: Instant::now(),
         open: true,
     };

@@ -57,6 +57,11 @@ pub struct GenerateResponse {
     /// sequences are whatever the solver had produced at the stop point —
     /// still-masked positions keep the mask id (= vocab).
     pub partial: bool,
+    /// Brownout echo: the degradation-ladder rung applied at admission
+    /// (1..=3, see `SamplingSpec::degrade`), `None` for undegraded
+    /// requests.  Wire-emitted only when set, so undegraded responses
+    /// keep the exact pre-brownout shape.
+    pub degraded: Option<u8>,
 }
 
 impl GenerateResponse {
@@ -76,6 +81,9 @@ impl GenerateResponse {
         // shape (bit-compatibility of the v1 protocol).
         if self.partial {
             fields.push(("partial", Json::Bool(true)));
+        }
+        if let Some(rung) = self.degraded {
+            fields.push(("degraded", Json::from(rung as u64)));
         }
         Json::obj(fields)
     }
@@ -102,6 +110,11 @@ impl GenerateResponse {
                 .map(|p| p.as_bool())
                 .transpose()?
                 .unwrap_or(false),
+            degraded: j
+                .opt("degraded")
+                .map(|d| d.as_u64())
+                .transpose()?
+                .map(|r| r as u8),
         })
     }
 }
@@ -155,6 +168,7 @@ mod tests {
             nfe_used: 32,
             latency_ms: 12.5,
             partial: false,
+            degraded: None,
         };
         let back = GenerateResponse::from_json(&Json::parse(&r.to_json().to_string()).unwrap())
             .unwrap();
@@ -167,10 +181,17 @@ mod tests {
         // Partial responses carry the marker; complete ones omit it so the
         // legacy v1 shape is byte-identical.
         assert!(!r.to_json().to_string().contains("partial"));
-        let p = GenerateResponse { partial: true, ..r };
+        let p = GenerateResponse { partial: true, ..r.clone() };
         let t = p.to_json().to_string();
         assert!(t.contains("\"partial\":true"), "{t}");
         assert!(GenerateResponse::from_json(&Json::parse(&t).unwrap()).unwrap().partial);
+        // Same only-when-set rule for the brownout echo.
+        assert!(!r.to_json().to_string().contains("degraded"));
+        let d = GenerateResponse { degraded: Some(3), ..r };
+        let t = d.to_json().to_string();
+        assert!(t.contains("\"degraded\":3"), "{t}");
+        let back = GenerateResponse::from_json(&Json::parse(&t).unwrap()).unwrap();
+        assert_eq!(back.degraded, Some(3));
     }
 
     #[test]

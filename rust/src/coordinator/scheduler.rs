@@ -26,6 +26,8 @@
 //! per window/event; lock-step scheme batches poll the shared token when
 //! every lane belongs to one request (the common case for long runs).
 
+use std::sync::Mutex;
+
 use anyhow::{bail, Result};
 
 use crate::api::{ExecPlan, SamplingSpec};
@@ -93,12 +95,14 @@ fn shared_token(lanes: &[Lane]) -> CancelToken {
 /// control — pin the grid with "tuned" when exact replayability across
 /// batch compositions is required).  Tuned grids are fitted on first use
 /// (a few pilot runs, synchronous on the coordinator thread) and memoised
-/// in `cache`.
+/// in `cache` (behind a mutex so the watchdog's dispatch worker and the
+/// coordinator thread can share one cache; it is locked only for the
+/// tuned-arm lookup, never across an evaluation).
 pub fn run_batch_scored(
     score: &dyn ScoreSource,
     spec: &SamplingSpec,
     lanes: &[Lane],
-    cache: &mut ScheduleCache,
+    cache: &Mutex<ScheduleCache>,
 ) -> Result<BatchResult> {
     run_batch_scored_obs(score, spec, lanes, cache, None)
 }
@@ -111,7 +115,7 @@ pub fn run_batch_scored_obs(
     score: &dyn ScoreSource,
     spec: &SamplingSpec,
     lanes: &[Lane],
-    cache: &mut ScheduleCache,
+    cache: &Mutex<ScheduleCache>,
     obs: Option<&mut dyn FnMut(crate::solvers::driver::Progress)>,
 ) -> Result<BatchResult> {
     let solver = spec.solver();
@@ -158,9 +162,12 @@ pub fn run_batch_scored_obs(
         }
         ExecPlan::Tuned { steps } => {
             let key = TuneKey::new(spec.family(), score.vocab(), score.seq_len(), solver, steps);
-            let tuned = cache.get_or_fit(key, || {
+            // The guard drops at the end of the statement (`get_or_fit`
+            // hands back an `Arc`), so the lock is held for the lookup —
+            // or the synchronous first-use fit — but never the generation.
+            let tuned = cache.lock().unwrap_or_else(|e| e.into_inner()).get_or_fit(key, || {
                 // Serving-time fit: cheaper pilots than the offline-bench
-                // tuner — this runs inline on the coordinator thread.
+                // tuner — this runs inline on the dispatching thread.
                 ScheduleTuner { pilots: 2, tol: 1e-3, ..Default::default() }
                     .fit_masked(score, solver, steps, DELTA, spec.family())
             });
@@ -424,9 +431,9 @@ mod tests {
         let oracle = MarkovOracle::new(MarkovChain::generate(&mut rng, 5, 0.5), 12);
         let lanes = test_lanes(3);
         let solver = Solver::Trapezoidal { theta: 0.5 };
-        let mut cache = ScheduleCache::new();
+        let cache = Mutex::new(ScheduleCache::new());
         let result =
-            run_batch_scored(&oracle, &scored_spec(solver, 16), &lanes, &mut cache).unwrap();
+            run_batch_scored(&oracle, &scored_spec(solver, 16), &lanes, &cache).unwrap();
         assert_eq!(result.tokens.len(), 3);
         assert_eq!(result.nfe.len(), 3);
         assert!(result.partial.iter().all(|&p| !p));
@@ -446,7 +453,7 @@ mod tests {
         let mut rng = Xoshiro256::seed_from_u64(17);
         let oracle = MarkovOracle::new(MarkovChain::generate(&mut rng, 5, 0.5), 10);
         let solver = Solver::Trapezoidal { theta: 0.5 };
-        let mut cache = ScheduleCache::new();
+        let cache = Mutex::new(ScheduleCache::new());
         let lanes = test_lanes(2);
 
         let spec = SamplingSpec::builder()
@@ -456,7 +463,7 @@ mod tests {
             .nfe_budget(Some(20))
             .build()
             .unwrap();
-        let result = run_batch_scored(&oracle, &spec, &lanes, &mut cache).unwrap();
+        let result = run_batch_scored(&oracle, &spec, &lanes, &cache).unwrap();
         for (k, &nfe) in result.nfe.iter().enumerate() {
             assert!(nfe <= 20, "lane {k} overdrew: {nfe}");
             assert!(result.tokens[k].iter().all(|&t| t < 5), "masks left");
@@ -468,12 +475,12 @@ mod tests {
             .schedule(ScheduleSpec::Tuned { steps: 6 })
             .build()
             .unwrap();
-        let result = run_batch_scored(&oracle, &spec, &lanes, &mut cache).unwrap();
-        assert_eq!(cache.len(), 1, "tuned grid must be memoised");
+        let result = run_batch_scored(&oracle, &spec, &lanes, &cache).unwrap();
+        assert_eq!(cache.lock().unwrap().len(), 1, "tuned grid must be memoised");
         assert!(result.tokens.iter().all(|t| t.iter().all(|&c| c < 5)));
         // Second call hits the cache (still one entry).
-        let _ = run_batch_scored(&oracle, &spec, &lanes, &mut cache).unwrap();
-        assert_eq!(cache.len(), 1);
+        let _ = run_batch_scored(&oracle, &spec, &lanes, &cache).unwrap();
+        assert_eq!(cache.lock().unwrap().len(), 1);
 
         // An explicit tuned step count is still bound by the hard budget —
         // resolved in the PLAN, so the batch key reflects it too.
@@ -485,7 +492,7 @@ mod tests {
             .build()
             .unwrap();
         assert_eq!(spec.plan(), crate::api::ExecPlan::Tuned { steps: 4 });
-        let result = run_batch_scored(&oracle, &spec, &lanes, &mut cache).unwrap();
+        let result = run_batch_scored(&oracle, &spec, &lanes, &cache).unwrap();
         for &nfe in &result.nfe {
             assert!(nfe <= 9, "tuned+budget overdrew: {nfe}");
         }
@@ -498,11 +505,11 @@ mod tests {
         let oracle = MarkovOracle::new(MarkovChain::generate(&mut rng, 5, 0.5), 12);
         let lanes = test_lanes(3);
         let solver = Solver::Trapezoidal { theta: 0.5 };
-        let mut cache = ScheduleCache::new();
+        let cache = Mutex::new(ScheduleCache::new());
         let pit_spec = SamplingSpec::builder().solver(solver).nfe(16).pit(true).build().unwrap();
         let seq_spec = scored_spec(solver, 16);
-        let pit = run_batch_scored(&oracle, &pit_spec, &lanes, &mut cache).unwrap();
-        let seq = run_batch_scored(&oracle, &seq_spec, &lanes, &mut cache).unwrap();
+        let pit = run_batch_scored(&oracle, &pit_spec, &lanes, &cache).unwrap();
+        let seq = run_batch_scored(&oracle, &seq_spec, &lanes, &cache).unwrap();
         // tol = 0 → bit-identical samples, per lane.
         assert_eq!(pit.tokens, seq.tokens);
         assert!(pit.partial.iter().all(|&p| !p));
@@ -524,7 +531,7 @@ mod tests {
             .sweeps_max(Some(1))
             .build()
             .unwrap();
-        let r = run_batch_scored(&oracle, &capped, &lanes, &mut cache).unwrap();
+        let r = run_batch_scored(&oracle, &capped, &lanes, &cache).unwrap();
         assert!(r.partial.iter().all(|&p| p));
         assert_eq!(r.pit_sweep_limit, 3);
         assert_eq!(r.pit_converged, 0);
@@ -534,7 +541,7 @@ mod tests {
             assert_eq!(p.phase, "sweep");
             beats += 1;
         };
-        let _ = run_batch_scored_obs(&oracle, &pit_spec, &lanes, &mut cache, Some(&mut sink))
+        let _ = run_batch_scored_obs(&oracle, &pit_spec, &lanes, &cache, Some(&mut sink))
             .unwrap();
         assert!(beats >= 1);
     }
@@ -545,9 +552,9 @@ mod tests {
         let mut rng = Xoshiro256::seed_from_u64(29);
         let oracle = MarkovOracle::new(MarkovChain::generate(&mut rng, 5, 0.5), 12);
         let lanes = test_lanes(3);
-        let mut cache = ScheduleCache::new();
+        let cache = Mutex::new(ScheduleCache::new());
         let result =
-            run_batch_scored(&oracle, &scored_spec(Solver::Exact, 16), &lanes, &mut cache)
+            run_batch_scored(&oracle, &scored_spec(Solver::Exact, 16), &lanes, &cache)
                 .unwrap();
         assert_eq!(result.tokens.len(), 3);
         for (k, lane) in lanes.iter().enumerate() {
@@ -567,7 +574,7 @@ mod tests {
         use crate::score::markov::{MarkovChain, MarkovOracle};
         let mut rng = Xoshiro256::seed_from_u64(41);
         let chain = MarkovChain::generate(&mut rng, 5, 0.6);
-        let mut cache = ScheduleCache::new();
+        let cache = Mutex::new(ScheduleCache::new());
 
         // Markov (no uniform-state process): knobs accepted, FHS fallback
         // still bit-identical to the per-lane sampler.
@@ -579,7 +586,7 @@ mod tests {
             .slack(Some(2.0))
             .build()
             .unwrap();
-        let result = run_batch_scored(&oracle, &spec, &lanes, &mut cache).unwrap();
+        let result = run_batch_scored(&oracle, &spec, &lanes, &cache).unwrap();
         for (k, lane) in lanes.iter().enumerate() {
             let mut r = Xoshiro256::seed_from_u64(lane.seed);
             let (toks, stats, _) = crate::solvers::masked::fhs_generate(&oracle, DELTA, &mut r);
@@ -596,8 +603,8 @@ mod tests {
             .slack(Some(3.0))
             .build()
             .unwrap();
-        let a = run_batch_scored(&hmm, &spec, &lanes, &mut cache).unwrap();
-        let b = run_batch_scored(&hmm, &spec, &lanes, &mut cache).unwrap();
+        let a = run_batch_scored(&hmm, &spec, &lanes, &cache).unwrap();
+        let b = run_batch_scored(&hmm, &spec, &lanes, &cache).unwrap();
         assert_eq!(a.tokens, b.tokens);
         assert_eq!(a.nfe, b.nfe);
         for (toks, &nfe) in a.tokens.iter().zip(&a.nfe) {
@@ -609,7 +616,7 @@ mod tests {
         let mut lanes = test_lanes(2);
         lanes[0].cancel = CancelToken::new();
         lanes[0].cancel.cancel();
-        let r = run_batch_scored(&hmm, &spec, &lanes, &mut cache).unwrap();
+        let r = run_batch_scored(&hmm, &spec, &lanes, &cache).unwrap();
         assert!(r.partial[0], "cancelled lane must be partial");
         assert!(!r.partial[1], "co-batched lane must complete");
         assert_eq!(r.tokens[1], a.tokens[1], "surviving lane is bit-identical");
@@ -620,7 +627,7 @@ mod tests {
         use crate::score::markov::{MarkovChain, MarkovOracle};
         let mut rng = Xoshiro256::seed_from_u64(31);
         let oracle = MarkovOracle::new(MarkovChain::generate(&mut rng, 4, 0.5), 8);
-        let mut cache = ScheduleCache::new();
+        let cache = Mutex::new(ScheduleCache::new());
         // All lanes share one fired token → the whole batch stops at the
         // first window and reports partial with fully masked sequences.
         let token = CancelToken::new();
@@ -630,7 +637,7 @@ mod tests {
             l.cancel = token.clone();
         }
         let spec = scored_spec(Solver::Trapezoidal { theta: 0.5 }, 16);
-        let r = run_batch_scored(&oracle, &spec, &lanes, &mut cache).unwrap();
+        let r = run_batch_scored(&oracle, &spec, &lanes, &cache).unwrap();
         assert!(r.partial.iter().all(|&p| p));
         for toks in &r.tokens {
             assert!(

@@ -72,6 +72,10 @@ impl ResponseAssembler {
             nfe_used: p.nfe_used,
             latency_ms: now_ms - p.started_ms,
             partial: p.any_partial,
+            // The brownout echo lives on the request's sink, not the
+            // per-lane state; the coordinator patches it in before the
+            // response leaves the loop.
+            degraded: None,
         })
     }
 

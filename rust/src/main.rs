@@ -10,7 +10,7 @@
 //!                 [--schedule adaptive:tol=1e-3] [--nfe-budget 48]
 //!                 [--window-ratio 0.5] [--slack 4] [--max-events 1000]
 //!                 [--pit] [--sweeps-max 8] [--tol 0.01]
-//!                 [--deadline-ms 500] [--priority 0..3]
+//!                 [--deadline-ms 500] [--priority 0..3] [--no-degrade]
 //!                 [--spec spec.json] [--stream] [--progress]
 //!                 [--request-key my-key] [--timeout-ms 5000]
 //! fastdds info    [--artifacts artifacts]
@@ -47,7 +47,10 @@
 //! lower-priority ones when the server runs with admission caps.  `serve
 //! --max-inflight/--queue-cap` enable those caps (unbounded if omitted);
 //! `--max-conns` bounds concurrent connections (over-cap connections get
-//! one typed `overloaded` frame and are closed).
+//! one typed `overloaded` frame and are closed).  Under sustained
+//! overload the server may serve a request in a *degraded* form (echoed
+//! as `DEGRADED rung N`); `client --no-degrade` opts out — such requests
+//! are shed typed `overloaded` rather than silently degraded.
 
 use anyhow::{bail, Result};
 use fastdds::api::{wire, SamplingSpec};
@@ -156,6 +159,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = fastdds::coordinator::CoordinatorCfg {
         max_inflight: args.usize_opt("max-inflight")?,
         queue_cap: args.usize_opt("queue-cap")?,
+        ..Default::default()
     };
     let coordinator = if args.flag("local") {
         // Explicitly requested in-process oracle backend: no artifacts
@@ -238,6 +242,7 @@ fn client_spec(args: &Args) -> Result<SamplingSpec> {
         .sweeps_max(args.usize_opt("sweeps-max")?)
         .tol(args.f64_opt("tol")?)
         .progress(args.flag("progress"))
+        .no_degrade(args.flag("no-degrade"))
         .deadline_ms(args.usize_opt("deadline-ms")?.map(|ms| ms as u64));
     if let Some(p) = args.usize_opt("priority")? {
         let p = u8::try_from(p).map_err(|_| {
@@ -276,11 +281,15 @@ fn cmd_client(args: &Args) -> Result<()> {
         client.generate_spec_keyed(&spec, request_key)?
     };
     println!(
-        "id={} nfe_used={} latency_ms={:.2}{}",
+        "id={} nfe_used={} latency_ms={:.2}{}{}",
         resp.id,
         resp.nfe_used,
         resp.latency_ms,
-        if resp.partial { " (PARTIAL)" } else { "" }
+        if resp.partial { " (PARTIAL)" } else { "" },
+        match resp.degraded {
+            Some(rung) => format!(" (DEGRADED rung {rung})"),
+            None => String::new(),
+        }
     );
     for s in &resp.sequences {
         println!("{}", fastdds::data::corpus::decode_pretty(s, 64));

@@ -280,6 +280,11 @@ impl Client {
                         nfe_used: r.get("nfe_used")?.as_usize()?,
                         latency_ms: r.get("latency_ms")?.as_f64()?,
                         partial: r.get("partial")?.as_bool()?,
+                        degraded: r
+                            .opt("degraded")
+                            .map(|d| d.as_u64())
+                            .transpose()?
+                            .map(|v| v as u8),
                     };
                     return Ok(StreamOutcome { chunks, progress_frames, response });
                 }

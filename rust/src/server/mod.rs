@@ -131,12 +131,26 @@
 //! `stats` is the machine-readable superset of `metrics`: every
 //! coordinator counter and gauge (including the failure ledger —
 //! `lane_failures`, `sheds`, `deadline_rejects`, `deadline_expiries`,
-//! `supervisor_restarts` — and the `registry_entries` leak canary) as one
-//! flat object.
+//! `supervisor_restarts` — the backend-health ledger — `retries`,
+//! `eval_timeouts`, `backend_unavailable`, `breaker_state`,
+//! `breaker_probes`, `degraded_rung1..3` — and the `registry_entries`
+//! leak canary) as one flat object.
+//!
+//! ## Degradation (brownout)
+//!
+//! Under sustained overload or an unhealthy backend, the coordinator may
+//! admit a request in a *degraded* form (PIT off → uniform schedule → NFE
+//! floor) instead of shedding it.  Degraded v2 responses — blocking and
+//! the stream's `done` frame alike — carry `"degraded": <rung>`; requests
+//! served exactly as specified omit the key.  A spec with
+//! `"no_degrade": true` opts out and is shed typed `overloaded` instead.
+//! A backend held unavailable by the circuit breaker (or an eval that
+//! exhausts its retry budget) fails typed `backend_unavailable`.
 //!
 //! Errors: `{"ok": false, "error": "..."}` (+ `"code"` for typed spec
 //! errors and the runtime failure codes — `lane_failed`, `overloaded`,
-//! `deadline_infeasible`, … — see the table in [`crate::api::wire`]).
+//! `deadline_infeasible`, `backend_unavailable`, … — see the table in
+//! [`crate::api::wire`]).
 //! One thread per connection; malformed lines never kill the connection.
 //! Connection threads are capped ([`DEFAULT_MAX_CONNS`], or
 //! [`Server::start_with_limit`]): a connection over the cap receives one
@@ -507,18 +521,20 @@ fn handle_stream(
                 }
             }
             Ok(JobEvent::Done(resp)) => {
-                return write_json(
-                    writer,
-                    &Json::obj(vec![
-                        ("ok", Json::Bool(true)),
-                        ("stream", Json::from("done")),
-                        ("id", Json::from(job.id)),
-                        ("nfe_used", Json::from(resp.nfe_used)),
-                        ("latency_ms", Json::from(resp.latency_ms)),
-                        ("partial", Json::Bool(resp.partial)),
-                        ("spec", wire::spec_to_json(&parsed.spec)),
-                    ]),
-                );
+                let mut done = Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("stream", Json::from("done")),
+                    ("id", Json::from(job.id)),
+                    ("nfe_used", Json::from(resp.nfe_used)),
+                    ("latency_ms", Json::from(resp.latency_ms)),
+                    ("partial", Json::Bool(resp.partial)),
+                    ("spec", wire::spec_to_json(&parsed.spec)),
+                ]);
+                // Brownout echo: only-when-set, like the blocking response.
+                if let (Json::Obj(m), Some(rung)) = (&mut done, resp.degraded) {
+                    m.insert("degraded".into(), Json::from(rung as u64));
+                }
+                return write_json(writer, &done);
             }
             Ok(JobEvent::Failed { code, message }) => {
                 return write_json(

@@ -2,23 +2,36 @@
 //!
 //! A [`FaultPlan`] schedules faults by **score-evaluation tick**: the
 //! wrapped [`FaultyScore`] counts every score call it forwards (one tick
-//! per batched call, not per lane) and fires the planned fault — a panic
-//! or a stall — when its tick comes up.  Because the coordinator's
-//! dispatch order is deterministic for a fixed request sequence, a plan
-//! keyed on ticks reproduces the same failure in the same place on every
-//! run: the chaos suite (`tests/chaos.rs`) pins recovery behavior against
-//! it, bit for bit where the contract promises it.
+//! per batched call, not per lane) and fires the planned fault — a panic,
+//! a *transient* (retryable) error, or a stall — when its tick comes up.
+//! Because the coordinator's dispatch order is deterministic for a fixed
+//! request sequence, a plan keyed on ticks reproduces the same failure in
+//! the same place on every run: the chaos suite (`tests/chaos.rs`) pins
+//! recovery behavior against it, bit for bit where the contract promises
+//! it.
+//!
+//! [`FaultKind::Err`] ([`FaultPlan::err_at`]) models a *recoverable*
+//! backend fault — unlike [`FaultKind::Panic`], its payload carries the
+//! `[transient]` marker ([`crate::coordinator::health::TRANSIENT`]), so
+//! the coordinator retries it under the health layer's backoff budget
+//! instead of isolating the lane as a bug.
 //!
 //! Injected panics carry the [`INJECTED`] marker so
 //! [`silence_injected_panics`] can keep expected unwinds out of the test
 //! output while real panics still print.  Probabilistic injection
-//! ([`FaultPlan::random_panics`], used by the fault-injection bench row)
-//! hashes `(seed, tick)` — deterministic for a fixed seed, no shared RNG.
+//! ([`FaultPlan::random_panics`] for panics, [`FaultPlan::flaky`] for
+//! latency jitter — used by the fault-injection and stalled-backend bench
+//! rows) hashes `(seed, tick)` — deterministic for a fixed seed, no
+//! shared RNG.  [`FaultyScore::set_plan`] swaps the plan mid-flight so a
+//! test can warm up clean, then arm faults at a known tick
+//! ([`FaultyScore::calls`]).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Duration;
 
+use crate::coordinator::health::TRANSIENT;
 use crate::ctmc::uniformization::{ExactCfg, ExactStats};
 use crate::score::{ScoreSource, Tok};
 use crate::util::cancel::StopCtl;
@@ -32,6 +45,10 @@ pub const INJECTED: &str = "[injected fault]";
 pub enum FaultKind {
     /// Panic inside the score call (exercises `catch_unwind` isolation).
     Panic,
+    /// A *transient* (recoverable) backend fault: panics with the
+    /// `[transient]` marker, so the coordinator's health layer retries it
+    /// within the budget instead of failing the lane as a bug.
+    Err,
     /// Sleep before evaluating (a stalled/slow lane: deadlines keep
     /// ticking, the solver polls its stop token at the next window).
     Stall(Duration),
@@ -43,6 +60,9 @@ pub struct FaultPlan {
     at: BTreeMap<u64, FaultKind>,
     /// Optional (seed, per-tick probability) for hash-based injection.
     random_panic: Option<(u64, f64)>,
+    /// Optional (seed, per-tick probability, stall duration) latency
+    /// jitter — a hash-deterministic "flaky backend".
+    flaky: Option<(u64, f64, Duration)>,
 }
 
 impl FaultPlan {
@@ -62,6 +82,14 @@ impl FaultPlan {
         self
     }
 
+    /// Fail tick `tick` with a *transient* (retryable) fault: the panic
+    /// payload carries the `[transient]` marker, so the health layer
+    /// retries instead of isolating the lane.
+    pub fn err_at(mut self, tick: u64) -> Self {
+        self.at.insert(tick, FaultKind::Err);
+        self
+    }
+
     /// Panic on each tick independently with probability `p`, decided by
     /// hashing `(seed, tick)`: deterministic for a fixed seed, and ticks
     /// pinned by `panic_at`/`stall_at` take precedence.
@@ -71,12 +99,29 @@ impl FaultPlan {
         self
     }
 
+    /// Stall each tick independently for `dur` with probability `p`
+    /// (hash-deterministic latency jitter: a flaky, occasionally-slow
+    /// backend).  Ticks pinned by `panic_at`/`stall_at`/`err_at` and
+    /// `random_panics` hits take precedence.
+    pub fn flaky(mut self, seed: u64, p: f64, dur: Duration) -> Self {
+        assert!((0.0..=1.0).contains(&p), "probability {p} outside [0, 1]");
+        self.flaky = Some((seed, p, dur));
+        self
+    }
+
     pub fn fault_for(&self, tick: u64) -> Option<FaultKind> {
         if let Some(&f) = self.at.get(&tick) {
             return Some(f);
         }
-        let (seed, p) = self.random_panic?;
-        (hash_unit(seed, tick) < p).then_some(FaultKind::Panic)
+        if let Some((seed, p)) = self.random_panic {
+            if hash_unit(seed, tick) < p {
+                return Some(FaultKind::Panic);
+            }
+        }
+        let (seed, p, dur) = self.flaky?;
+        // Decorrelated from `random_panics` under a shared seed.
+        (hash_unit(seed ^ 0xA5A5_A5A5_A5A5_A5A5, tick) < p)
+            .then_some(FaultKind::Stall(dur))
     }
 }
 
@@ -95,13 +140,15 @@ fn hash_unit(seed: u64, tick: u64) -> f64 {
 /// advances the tick counter and fires any fault scheduled for it.
 pub struct FaultyScore<S: ScoreSource> {
     inner: S,
-    plan: FaultPlan,
+    /// Swappable mid-flight ([`Self::set_plan`]): tests warm up clean,
+    /// then arm faults at a known tick.
+    plan: Mutex<FaultPlan>,
     calls: AtomicU64,
 }
 
 impl<S: ScoreSource> FaultyScore<S> {
     pub fn new(inner: S, plan: FaultPlan) -> Self {
-        Self { inner, plan, calls: AtomicU64::new(0) }
+        Self { inner, plan: Mutex::new(plan), calls: AtomicU64::new(0) }
     }
 
     /// Score calls forwarded so far (= the next tick to fire).
@@ -109,12 +156,22 @@ impl<S: ScoreSource> FaultyScore<S> {
         self.calls.load(Ordering::Relaxed)
     }
 
+    /// Replace the fault schedule (the tick counter keeps running): combine
+    /// with [`Self::calls`] to plan faults relative to "now".
+    pub fn set_plan(&self, plan: FaultPlan) {
+        *self.plan.lock().unwrap_or_else(|e| e.into_inner()) = plan;
+    }
+
     fn tick(&self) {
         let t = self.calls.fetch_add(1, Ordering::Relaxed);
-        match self.plan.fault_for(t) {
+        let fault = self.plan.lock().unwrap_or_else(|e| e.into_inner()).fault_for(t);
+        match fault {
             None => {}
             Some(FaultKind::Panic) => {
                 std::panic::panic_any(format!("{INJECTED} score call {t}"))
+            }
+            Some(FaultKind::Err) => {
+                std::panic::panic_any(format!("{INJECTED}{TRANSIENT} score call {t}"))
             }
             Some(FaultKind::Stall(d)) => std::thread::sleep(d),
         }
@@ -269,6 +326,86 @@ mod tests {
             bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
         fs.probs_masked_batch(&reqs, 0.5, &mut outs);
         assert_eq!(fs.calls(), 1, "3 lanes, one dispatch, one tick");
+    }
+
+    #[test]
+    fn err_fault_is_marked_transient_but_panic_is_not() {
+        let fs = FaultyScore::new(oracle(), FaultPlan::new().err_at(0).panic_at(1));
+        let fs = std::sync::Arc::new(fs);
+        let toks = crate::score::all_masked(8, fs.mask_id());
+        let f = std::sync::Arc::clone(&fs);
+        let t = toks.clone();
+        let payload = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+            let mut out = vec![0.0; 8 * 5];
+            f.probs_into(&t, 0.5, &mut out); // tick 0: transient err
+        }))
+        .expect_err("tick 0 must fail");
+        assert!(crate::coordinator::health::is_transient(payload.as_ref()));
+        let msg = payload.downcast_ref::<String>().unwrap();
+        assert!(msg.contains(INJECTED), "still silenceable: {msg}");
+        let f = std::sync::Arc::clone(&fs);
+        let payload = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+            let mut out = vec![0.0; 8 * 5];
+            f.probs_into(&toks, 0.5, &mut out); // tick 1: plain panic
+        }))
+        .expect_err("tick 1 must panic");
+        assert!(
+            !crate::coordinator::health::is_transient(payload.as_ref()),
+            "a plain panic must NOT read as transient"
+        );
+    }
+
+    #[test]
+    fn set_plan_swaps_faults_mid_flight() {
+        let fs = FaultyScore::new(oracle(), FaultPlan::new());
+        let toks = crate::score::all_masked(8, fs.mask_id());
+        let mut out = vec![0.0; 8 * 5];
+        fs.probs_into(&toks, 0.5, &mut out); // tick 0, clean
+        assert_eq!(fs.calls(), 1);
+        fs.set_plan(FaultPlan::new().err_at(fs.calls()));
+        let fs = std::sync::Arc::new(fs);
+        let f = std::sync::Arc::clone(&fs);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+            let toks = crate::score::all_masked(8, f.mask_id());
+            let mut out = vec![0.0; 8 * 5];
+            f.probs_into(&toks, 0.5, &mut out); // tick 1: armed by set_plan
+        }));
+        assert!(caught.is_err(), "the swapped-in plan must fire");
+        // Disarm again: later ticks are clean.
+        fs.set_plan(FaultPlan::new());
+        let toks = crate::score::all_masked(8, fs.mask_id());
+        fs.probs_into(&toks, 0.5, &mut out);
+        assert_eq!(fs.calls(), 3);
+    }
+
+    #[test]
+    fn flaky_jitter_is_deterministic_and_pinned_ticks_win() {
+        let dur = Duration::from_millis(1);
+        let plan = FaultPlan::new().panic_at(4).flaky(7, 0.2, dur);
+        let fired: Vec<(u64, bool)> = (0..500)
+            .filter_map(|t| {
+                plan.fault_for(t).map(|f| (t, matches!(f, FaultKind::Stall(_))))
+            })
+            .collect();
+        let again: Vec<(u64, bool)> = (0..500)
+            .filter_map(|t| {
+                plan.fault_for(t).map(|f| (t, matches!(f, FaultKind::Stall(_))))
+            })
+            .collect();
+        assert_eq!(fired, again, "same seed, same jitter schedule");
+        let stalls = fired.iter().filter(|(_, s)| *s).count();
+        assert!(
+            stalls > 50 && stalls < 180,
+            "p=0.2 over 500 ticks stalled {stalls} times"
+        );
+        assert!(
+            matches!(plan.fault_for(4), Some(FaultKind::Panic)),
+            "pinned ticks take precedence over jitter"
+        );
+        // All stalls carry the configured duration.
+        for (t, _) in fired.iter().filter(|(_, s)| *s) {
+            assert!(matches!(plan.fault_for(*t), Some(FaultKind::Stall(d)) if d == dur));
+        }
     }
 
     #[test]

@@ -26,9 +26,10 @@ use std::time::{Duration, Instant};
 
 use fastdds::api::SamplingSpec;
 use fastdds::coordinator::{
-    codes, BatchPolicy, Coordinator, CoordinatorCfg, GenerateResponse, JobError,
+    codes, BatchPolicy, Coordinator, CoordinatorCfg, GenerateResponse, HealthCfg, JobError,
 };
 use fastdds::score::markov::{MarkovChain, MarkovOracle};
+use fastdds::score::ScoreSource;
 use fastdds::solvers::Solver;
 use fastdds::testkit::fault::{silence_injected_panics, FaultPlan, FaultyScore, INJECTED};
 use fastdds::util::rng::Xoshiro256;
@@ -278,7 +279,7 @@ fn overload_burst_sheds_typed_and_respects_priority() {
         BatchPolicy::Timeout(Duration::from_secs(10)),
         2,
         None,
-        CoordinatorCfg { max_inflight: None, queue_cap: Some(2) },
+        CoordinatorCfg { max_inflight: None, queue_cap: Some(2), ..Default::default() },
     );
     let a = spec(Solver::TauLeaping, 16, 1, 5);
     let b = spec(Solver::Euler, 16, 1, 6);
@@ -418,6 +419,352 @@ fn pit_sweep_panic_isolates_the_lane_and_keeps_parity() {
 
     // Post-fault health, through the PIT path itself.
     assert_serves_clean(&c, &pit_spec(solver, 16, 3, 910), FOLLOW_UPS);
+    c.shutdown();
+}
+
+// ===========================================================================
+// 8. Transient backend fault: retried under the budget, bit-identical
+// ===========================================================================
+
+#[test]
+fn transient_fault_retries_to_a_bit_identical_response() {
+    silence_injected_panics();
+    // Tick 0 — the first attempt's first score call — fails with the
+    // `[transient]` marker.  The health layer retries under backoff; the
+    // second attempt (tick 1 onward) runs clean.  Evals are pure and each
+    // lane re-seeds per attempt, so the retried request must come back
+    // bit-identical to a never-faulted coordinator.
+    let plan = FaultPlan::new().err_at(0);
+    let faulty = Arc::new(FaultyScore::new(oracle(), plan));
+    let c = Coordinator::start_local(faulty, BatchPolicy::Greedy, 8);
+
+    let s = spec(Solver::TauLeaping, 16, 2, 500);
+    let got = c.generate_spec(s.clone()).expect("transient fault must be retried");
+    let want = clean_expect(&s);
+    assert_eq!(got.sequences, want.sequences, "retry parity broken");
+    assert_eq!(got.nfe_used, want.nfe_used);
+    assert!(!got.partial);
+    assert_eq!(got.degraded, None, "retry is not a degradation");
+
+    let m = c.metrics();
+    assert_eq!(m.retries, 1, "exactly one retry");
+    assert_eq!(m.lane_failures, 0, "transient faults never isolate lanes");
+    assert_eq!(m.backend_unavailable, 0);
+    assert_eq!(m.breaker_state, "closed", "one recovered fault must not trip");
+
+    assert_serves_clean(&c, &spec(Solver::TauLeaping, 16, 2, 501), FOLLOW_UPS);
+    c.shutdown();
+}
+
+// ===========================================================================
+// 9. Circuit breaker: exhausted retries trip it; cooldown, probe, close
+// ===========================================================================
+
+#[test]
+fn breaker_opens_fast_fails_then_probe_recovers() {
+    silence_injected_panics();
+    // Ticks 0..=2 all fail transient: with retry_budget = 2 the first
+    // request burns exactly attempts 0, 1, 2 and exhausts.  threshold = 1
+    // trips the breaker on that single exhausted dispatch.  Brownout is
+    // off so the breaker's effect is observed in isolation.
+    let plan = FaultPlan::new().err_at(0).err_at(1).err_at(2);
+    let faulty = Arc::new(FaultyScore::new(oracle(), plan));
+    let cooldown = Duration::from_millis(400);
+    let c = Coordinator::start_local_with_cfg(
+        faulty,
+        BatchPolicy::Greedy,
+        8,
+        None,
+        CoordinatorCfg {
+            max_inflight: None,
+            queue_cap: None,
+            health: HealthCfg {
+                failure_threshold: 1,
+                cooldown,
+                retry_budget: 2,
+                backoff_initial: Duration::from_millis(1),
+                backoff_cap: Duration::from_millis(5),
+                brownout: false,
+                ..Default::default()
+            },
+        },
+    );
+
+    // Request 1: every attempt fails -> typed backend_unavailable, and
+    // the exhausted dispatch trips the breaker open.
+    let err = c.generate_spec(spec(Solver::TauLeaping, 16, 1, 600)).unwrap_err();
+    assert_eq!(typed_code(&err), codes::BACKEND_UNAVAILABLE);
+    assert!(err.to_string().contains("retries exhausted"), "{err:#}");
+
+    // Request 2 (well inside the cooldown): fails fast at the gate — no
+    // score call is ever made against the sick backend.
+    let err = c.generate_spec(spec(Solver::TauLeaping, 16, 1, 601)).unwrap_err();
+    assert_eq!(typed_code(&err), codes::BACKEND_UNAVAILABLE);
+    assert!(err.to_string().contains("circuit breaker open"), "{err:#}");
+    let m = c.metrics();
+    assert_eq!(m.breaker_state, "open");
+    assert_eq!(m.retries, 2, "budget spent once, fast-fail spends none");
+    assert_eq!(m.backend_unavailable, 2);
+
+    // Cooldown elapses: the next dispatch is the half-open probe.  Ticks
+    // 3+ are clean, so the probe succeeds, closes the breaker, and its
+    // response is bit-identical to a never-faulted run.
+    std::thread::sleep(cooldown + Duration::from_millis(100));
+    let s = spec(Solver::TauLeaping, 16, 1, 602);
+    let got = c.generate_spec(s.clone()).expect("probe must succeed");
+    assert_eq!(got.sequences, clean_expect(&s).sequences, "probe diverged");
+    let m = c.metrics();
+    assert_eq!(m.breaker_state, "closed");
+    assert!(m.breaker_probes >= 1, "the recovery dispatch must be a probe");
+
+    assert_serves_clean(&c, &spec(Solver::TauLeaping, 16, 2, 603), FOLLOW_UPS);
+    c.shutdown();
+}
+
+// ===========================================================================
+// 10. Stalled backend eval: watchdog abandons it, nothing else is delayed
+// ===========================================================================
+
+#[test]
+fn stalled_eval_does_not_block_unrelated_requests() {
+    silence_injected_panics();
+    let faulty = Arc::new(FaultyScore::new(oracle(), FaultPlan::new()));
+    let c = Coordinator::start_local_with_cfg(
+        Arc::clone(&faulty) as Arc<dyn ScoreSource>,
+        BatchPolicy::Greedy,
+        8,
+        None,
+        CoordinatorCfg {
+            max_inflight: None,
+            queue_cap: None,
+            health: HealthCfg {
+                watchdog_floor: Duration::from_millis(100),
+                ..Default::default()
+            },
+        },
+    );
+
+    // Warm the cost model so the watchdog can price a bound (a cold model
+    // never times anything out) — then arm a 1500ms stall on the next
+    // score evaluation, whichever dispatch lands on it.
+    let warm = spec(Solver::TauLeaping, 16, 1, 700);
+    for _ in 0..3 {
+        c.generate_spec(warm.clone()).unwrap();
+    }
+    faulty.set_plan(
+        FaultPlan::new().stall_at(faulty.calls(), Duration::from_millis(1500)),
+    );
+
+    // Two unrelated single-lane requests (different batch keys).  One of
+    // them eats the stall on its first attempt; the watchdog abandons the
+    // worker at ~100ms and the retry serves it clean.  NEITHER may be
+    // delayed anywhere near the 1500ms stall.
+    let a = spec(Solver::TauLeaping, 16, 1, 701);
+    let b = spec(Solver::Euler, 16, 1, 702);
+    let t0 = Instant::now();
+    let ha = c.submit_spec(a.clone());
+    let hb = c.submit_spec(b.clone());
+    let got_a = ha.wait().expect("stalled-then-retried request must complete");
+    let got_b = hb.wait().expect("unrelated request must complete");
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed < Duration::from_millis(1200),
+        "watchdog bound violated: both requests took {elapsed:?} against a \
+         1500ms stall"
+    );
+    assert_eq!(got_a.sequences, clean_expect(&a).sequences, "A diverged");
+    assert_eq!(got_b.sequences, clean_expect(&b).sequences, "B diverged");
+    assert!(!got_a.partial && !got_b.partial);
+
+    let m = c.metrics();
+    assert_eq!(m.eval_timeouts, 1, "exactly one watchdog expiry");
+    assert_eq!(m.retries, 1, "the abandoned attempt retried once");
+    assert_eq!(m.backend_unavailable, 0, "the retry succeeded");
+    assert_eq!(m.breaker_state, "closed");
+
+    // The abandoned worker is still asleep inside its 1500ms stall and
+    // keeps ticking the shared counter once it wakes — clear the plan so
+    // no pinned tick can ever collide with the follow-ups.
+    faulty.set_plan(FaultPlan::new());
+    assert_serves_clean(&c, &spec(Solver::TauLeaping, 16, 2, 703), FOLLOW_UPS);
+    c.shutdown();
+}
+
+// ===========================================================================
+// 11. Brownout: an overload burst degrades instead of shedding everything
+// ===========================================================================
+
+/// Pin the coordinator loop inside a known stall so a burst of
+/// submissions provably queues up behind it and is admitted in one drain —
+/// the only way to make queue-pressure rungs deterministic without
+/// sleeps-as-synchronisation.  Returns the stall job's handle.
+fn stall_the_loop(
+    c: &Coordinator,
+    faulty: &Arc<FaultyScore<MarkovOracle>>,
+    stall: Duration,
+) -> fastdds::coordinator::JobHandle {
+    faulty.set_plan(FaultPlan::new().stall_at(faulty.calls(), stall));
+    // n_samples = 2 fills the capacity-2 batch: due immediately.
+    let hs = c.submit_spec(spec(Solver::TauLeaping, 16, 2, 800));
+    // The tick counter increments the moment the stall begins — the loop
+    // (via its dispatch worker) is now provably blocked inside it.
+    let t0 = Instant::now();
+    while faulty.calls() == 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "stall dispatch never started"
+        );
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    hs
+}
+
+#[test]
+fn brownout_burst_degrades_echoes_and_sheds_typed() {
+    silence_injected_panics();
+    let faulty = Arc::new(FaultyScore::new(oracle(), FaultPlan::new()));
+    let c = Coordinator::start_local_with_cfg(
+        Arc::clone(&faulty) as Arc<dyn ScoreSource>,
+        BatchPolicy::Greedy,
+        2,
+        None,
+        CoordinatorCfg {
+            max_inflight: None,
+            queue_cap: Some(8),
+            health: HealthCfg::default(),
+        },
+    );
+    let hs = stall_the_loop(&c, &faulty, Duration::from_millis(500));
+
+    // 12 uniform-schedule nfe-256 requests, all queued while the loop is
+    // blocked, admitted back to back in one drain.  queue utilization
+    // (pending + 1) / 8 walks the ladder deterministically: requests 1-2
+    // admit clean, 3-6 hit rungs 1-2 (no-ops on a uniform non-PIT spec,
+    // so they stay undegraded), 7-8 hit rung 3 (NFE clamped to the
+    // floor), 9-12 overflow the queue cap and shed typed.
+    let burst: Vec<SamplingSpec> =
+        (0..12).map(|i| spec(Solver::Euler, 256, 1, 810 + i)).collect();
+    let handles: Vec<_> = burst.iter().map(|s| c.submit_spec(s.clone())).collect();
+    let results: Vec<Result<GenerateResponse, anyhow::Error>> =
+        handles.into_iter().map(|h| h.wait()).collect();
+
+    for (i, (s, r)) in burst.iter().zip(&results).enumerate() {
+        match i {
+            0..=5 => {
+                // Undegraded: bit-identical to a coordinator that never
+                // browned out, and no echo.
+                let got = r.as_ref().expect("undegraded request must complete");
+                assert_eq!(got.degraded, None, "request {i} falsely degraded");
+                assert_eq!(
+                    got.sequences,
+                    clean_expect(s).sequences,
+                    "undegraded request {i} diverged"
+                );
+            }
+            6 | 7 => {
+                // Degraded to the NFE floor: the echo names rung 3 and
+                // the sequences are exactly a clean run of the degraded
+                // twin spec.
+                let got = r.as_ref().expect("degraded request must complete");
+                assert_eq!(got.degraded, Some(3), "request {i} missing the echo");
+                let (twin, applied) = s.degrade(3).expect("nfe 256 must degrade");
+                assert_eq!(applied, 3);
+                assert_eq!(
+                    got.sequences,
+                    clean_expect(&twin).sequences,
+                    "degraded request {i} is not the twin spec's clean run"
+                );
+            }
+            _ => {
+                let err = r.as_ref().expect_err("over-cap request must shed");
+                assert_eq!(typed_code(err), codes::OVERLOADED, "request {i}");
+            }
+        }
+    }
+
+    // The stall request itself: merely slow, never degraded.
+    let got_s = hs.wait().expect("the stalled batch must complete");
+    assert_eq!(got_s.degraded, None);
+
+    let m = c.metrics();
+    assert_eq!(m.degraded_rung3, 2, "exactly requests 7 and 8 degraded");
+    assert_eq!(m.degraded_rung1 + m.degraded_rung2, 0, "rungs 1-2 were no-ops");
+    assert_eq!(m.sheds, 4, "exactly requests 9-12 shed");
+
+    // Pressure gone: follow-ups are admitted undegraded and bit-identical.
+    faulty.set_plan(FaultPlan::new());
+    assert_serves_clean(&c, &spec(Solver::Euler, 16, 2, 830), FOLLOW_UPS);
+    assert_eq!(c.metrics().degraded_rung3, 2, "follow-ups must not degrade");
+    c.shutdown();
+}
+
+// ===========================================================================
+// 12. no_degrade: the ladder is never applied, overload sheds typed
+// ===========================================================================
+
+#[test]
+fn no_degrade_requests_shed_typed_instead_of_degrading() {
+    silence_injected_panics();
+    let faulty = Arc::new(FaultyScore::new(oracle(), FaultPlan::new()));
+    let c = Coordinator::start_local_with_cfg(
+        Arc::clone(&faulty) as Arc<dyn ScoreSource>,
+        BatchPolicy::Greedy,
+        2,
+        None,
+        CoordinatorCfg {
+            max_inflight: None,
+            queue_cap: Some(8),
+            health: HealthCfg::default(),
+        },
+    );
+    let hs = stall_the_loop(&c, &faulty, Duration::from_millis(500));
+
+    // The same burst shape as the brownout scenario, but every spec opts
+    // out: rung 3 must never fire — requests 7-8 are admitted at their
+    // full 256 NFE, and the overflow sheds typed exactly as it did before
+    // the ladder existed.
+    let burst: Vec<SamplingSpec> = (0..12)
+        .map(|i| {
+            SamplingSpec::builder()
+                .solver(Solver::Euler)
+                .nfe(256)
+                .n_samples(1)
+                .seed(850 + i)
+                .no_degrade(true)
+                .build()
+                .unwrap()
+        })
+        .collect();
+    let handles: Vec<_> = burst.iter().map(|s| c.submit_spec(s.clone())).collect();
+    let results: Vec<Result<GenerateResponse, anyhow::Error>> =
+        handles.into_iter().map(|h| h.wait()).collect();
+
+    for (i, (s, r)) in burst.iter().zip(&results).enumerate() {
+        if i <= 7 {
+            let got = r.as_ref().expect("admitted request must complete");
+            assert_eq!(got.degraded, None, "no_degrade request {i} was degraded");
+            assert_eq!(
+                got.sequences,
+                clean_expect(s).sequences,
+                "no_degrade request {i} diverged"
+            );
+        } else {
+            let err = r.as_ref().expect_err("over-cap request must shed");
+            assert_eq!(typed_code(err), codes::OVERLOADED, "request {i}");
+        }
+    }
+    hs.wait().expect("the stalled batch must complete");
+
+    let m = c.metrics();
+    assert_eq!(
+        m.degraded_rung1 + m.degraded_rung2 + m.degraded_rung3,
+        0,
+        "the ladder must never touch an opted-out spec"
+    );
+    assert_eq!(m.sheds, 4, "exactly requests 9-12 shed");
+
+    faulty.set_plan(FaultPlan::new());
+    assert_serves_clean(&c, &spec(Solver::Euler, 16, 2, 870), FOLLOW_UPS);
     c.shutdown();
 }
 

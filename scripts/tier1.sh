@@ -9,7 +9,9 @@
 #   grids), BENCH_exact.json (exact-path evaluations-per-sample,
 #   wall-clock, bracket hit rates), BENCH_serve.json (TCP serving
 #   req/s + p50/p99 latency, blocking vs streaming, cancel-to-partial,
-#   and the same workload under injected lane panics) and BENCH_pit.json
+#   the same workload under injected lane panics, the brownout ladder
+#   on-vs-off under overload, and stalled-backend watchdog on-vs-off
+#   tails) and BENCH_pit.json
 #   (the parallel-in-time latency-vs-NFE frontier: sequential rounds vs
 #   NFE at matched toy-CTMC KL / text perplexity)
 #   so all five trajectories are tracked across PRs.  The chaos suite
@@ -49,6 +51,29 @@ cargo test -q --test wire_compat
 # — each followed by ~50 clean requests.  Run it by name for the same
 # reason as wire_compat.
 cargo test -q --test chaos
+
+# Backend-health acceptance (PR 9): the robustness headliners run by
+# individual name so a renamed or filtered-out scenario fails loudly —
+# transparent retry parity, breaker open -> half-open probe -> closed
+# recovery, watchdog isolation of a stalled eval, the brownout ladder
+# under a burst (degrade + echo + typed shed), and the no_degrade opt-out.
+# A zero-match filter exits 0, so assert the test actually ran.
+for t in transient_fault_retries_to_a_bit_identical_response \
+         breaker_opens_fast_fails_then_probe_recovers \
+         stalled_eval_does_not_block_unrelated_requests \
+         brownout_burst_degrades_echoes_and_sheds_typed \
+         no_degrade_requests_shed_typed_instead_of_degrading; do
+    out=$(cargo test -q --test chaos -- --exact "$t" 2>&1) || {
+        printf '%s\n' "$out"
+        echo "tier-1 FAIL: chaos test '$t' failed"
+        exit 1
+    }
+    printf '%s\n' "$out" | grep -q '1 passed' || {
+        printf '%s\n' "$out"
+        echo "tier-1 FAIL: chaos test '$t' did not run (renamed or filtered out?)"
+        exit 1
+    }
+done
 
 # PIT acceptance: at tol=0 the parallel-in-time driver must be
 # bit-identical to the sequential driver for every solver x family x
@@ -127,7 +152,13 @@ if [[ "${1:-}" != "--no-bench" ]]; then
                'serve blocking p99-ms' 'serve streaming req-per-sec' \
                'serve streaming p50-ms' 'serve streaming p99-ms' \
                'serve cancel-to-partial-ms' 'serve faulty req-per-sec' \
-               'serve faulty p99-ms'; do
+               'serve faulty p99-ms' \
+               'serve brownout ladder-on goodput-rps' \
+               'serve brownout ladder-on p99-ms' \
+               'serve brownout ladder-off goodput-rps' \
+               'serve brownout ladder-off p99-ms' \
+               'serve stalled watchdog-on p99-ms' \
+               'serve stalled watchdog-off p99-ms'; do
         grep -q "$row" BENCH_serve.json || {
             echo "tier-1 FAIL: row '$row' missing from BENCH_serve.json"
             exit 1

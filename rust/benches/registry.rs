@@ -1,0 +1,159 @@
+//! Artifact-registry bench (`cargo bench --bench registry`): blob-store
+//! throughput plus the headline the ISSUE acceptance pins — pulling a
+//! published tuned schedule by digest vs re-fitting it locally.  Rows go
+//! to `BENCH_registry.json` for cross-PR tracking (`--quick` = smoke
+//! sizes, used by tier1.sh).
+//!
+//! Rows:
+//!   - `registry put MB-per-s` — hash + write-temp-rename + manifest
+//!     publish, per distinct artifact;
+//!   - `registry get MB-per-s` — manifest parse + verified (re-hashed)
+//!     blob reads;
+//!   - headline `cold_pull_vs_refit_ms` — a cold coordinator pulling the
+//!     fleet's tuned grid by digest must beat running the pilot fits.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use fastdds::registry::{ArtifactKind, ArtifactRegistry, ManifestV1};
+use fastdds::schedule::{ScheduleCache, ScheduleTuner, TuneKey};
+use fastdds::score::markov::{MarkovChain, MarkovOracle};
+use fastdds::solvers::Solver;
+use fastdds::util::json::Json;
+use fastdds::util::rng::Xoshiro256;
+
+fn write_report(rows: Vec<Json>, headline: Json, quick: bool) {
+    let n = rows.len();
+    let doc = Json::obj(vec![
+        ("bench", Json::from("registry")),
+        ("quick", Json::from(quick)),
+        ("rows", Json::Arr(rows)),
+        ("headline", headline),
+    ]);
+    let path = if std::path::Path::new("ROADMAP.md").exists() {
+        "BENCH_registry.json"
+    } else if std::path::Path::new("../ROADMAP.md").exists() {
+        "../BENCH_registry.json"
+    } else {
+        "BENCH_registry.json"
+    };
+    match std::fs::write(path, doc.to_string()) {
+        Ok(()) => println!("wrote {path} ({n} rows)"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (n_blobs, blob_len) =
+        if quick { (24usize, 128 * 1024usize) } else { (96, 1024 * 1024) };
+    let total_mb = (n_blobs * blob_len) as f64 / 1e6;
+    println!(
+        "== fastdds benches: registry ({n_blobs} x {} KiB blobs{}) ==",
+        blob_len / 1024,
+        if quick { ", --quick" } else { "" }
+    );
+
+    let root = std::env::temp_dir()
+        .join(format!("fastdds_bench_registry_{}", std::process::id()));
+    let root = root.to_str().unwrap().to_string();
+    let _ = std::fs::remove_dir_all(&root);
+    let reg = ArtifactRegistry::open(&root).unwrap();
+
+    // Deterministic pseudo-random content: incompressible-ish, distinct
+    // per artifact so content addressing cannot dedup the workload away.
+    let mut rng = Xoshiro256::seed_from_u64(41);
+    let blobs: Vec<Vec<u8>> = (0..n_blobs)
+        .map(|_| {
+            let mut b = Vec::with_capacity(blob_len + 8);
+            while b.len() < blob_len {
+                b.extend_from_slice(&rng.next_u64().to_le_bytes());
+            }
+            b.truncate(blob_len);
+            b
+        })
+        .collect();
+
+    // --- put throughput ---------------------------------------------------
+    let t0 = Instant::now();
+    let digests: Vec<String> = blobs
+        .iter()
+        .enumerate()
+        .map(|(i, b)| {
+            let mut m =
+                ManifestV1::new(ArtifactKind::CompatCorpus, &format!("bench-{i}"));
+            m.family = "bench".into();
+            m.created_by = "bench".into();
+            reg.put(m, &[b.as_slice()]).unwrap()
+        })
+        .collect();
+    let put_s = t0.elapsed().as_secs_f64();
+    let put_mbps = total_mb / put_s;
+    println!("registry put   {total_mb:8.1} MB in {put_s:6.3}s -> {put_mbps:8.1} MB/s");
+
+    // --- get throughput (every read re-hashed and verified) ---------------
+    let t0 = Instant::now();
+    let mut read_bytes = 0usize;
+    for d in &digests {
+        let (_, got) = reg.get(d).unwrap();
+        read_bytes += got.iter().map(Vec::len).sum::<usize>();
+    }
+    let get_s = t0.elapsed().as_secs_f64();
+    assert_eq!(read_bytes, n_blobs * blob_len);
+    let get_mbps = total_mb / get_s;
+    println!("registry get   {total_mb:8.1} MB in {get_s:6.3}s -> {get_mbps:8.1} MB/s");
+
+    let rows = vec![
+        Json::obj(vec![
+            ("row", Json::from("registry put MB-per-s")),
+            ("mb_per_s", Json::Num(put_mbps)),
+            ("bytes", Json::from(n_blobs * blob_len)),
+            ("artifacts", Json::from(n_blobs)),
+        ]),
+        Json::obj(vec![
+            ("row", Json::from("registry get MB-per-s")),
+            ("mb_per_s", Json::Num(get_mbps)),
+            ("bytes", Json::from(read_bytes)),
+            ("artifacts", Json::from(n_blobs)),
+        ]),
+    ];
+
+    // --- headline: cold digest pull vs local re-fit ------------------------
+    // The serving-path fit (ScheduleTuner, 2 pilots — exactly what the
+    // scheduler runs inline on a cache miss) vs a cold cache pulling the
+    // published grid from the shared registry.
+    let mut orng = Xoshiro256::seed_from_u64(23);
+    let oracle = MarkovOracle::new(MarkovChain::generate(&mut orng, 6, 0.5), 14);
+    let solver = Solver::Trapezoidal { theta: 0.5 };
+    let steps = 8;
+    let t0 = Instant::now();
+    let fitted = ScheduleTuner { pilots: 2, tol: 1e-3, ..Default::default() }
+        .fit_masked(&oracle, solver, steps, 1e-3, "markov");
+    let refit_ms = t0.elapsed().as_secs_f64() * 1e3;
+    reg.publish_tuned(&fitted, "bench").unwrap();
+
+    let key = TuneKey::new("markov", 6, 14, solver, steps);
+    let t0 = Instant::now();
+    let mut cold = ScheduleCache::with_store(None, Some(Arc::clone(&reg)));
+    let pulled = cold.get_or_fit(key, || panic!("cold pull must not run the tuner"));
+    let pull_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(pulled.grid, fitted.grid, "pulled grid must be the published one");
+
+    let speedup = refit_ms / pull_ms.max(1e-6);
+    let pass = pull_ms < refit_ms;
+    println!(
+        "headline: cold pull {pull_ms:.3} ms vs re-fit {refit_ms:.3} ms \
+         -> {speedup:.1}x ({})",
+        if pass { "PASS pull < refit" } else { "refit was faster" }
+    );
+    let headline = Json::obj(vec![
+        ("metric", Json::from("cold_pull_vs_refit_ms")),
+        ("pull_ms", Json::Num(pull_ms)),
+        ("refit_ms", Json::Num(refit_ms)),
+        ("speedup", Json::Num(speedup)),
+        ("pass", Json::from(pass)),
+    ]);
+
+    write_report(rows, headline, quick);
+    let _ = std::fs::remove_dir_all(&root);
+}

@@ -101,6 +101,29 @@
 //! | `coordinator_restarted` | in-flight when the supervisor restarted the scheduler loop |
 //! | `shutdown` | in-flight at coordinator shutdown |
 //! | `backend_unavailable` | the score backend's circuit breaker is open, or a stalled/transiently-failing eval exhausted its retry budget |
+//!
+//! ## Artifact-registry verbs
+//!
+//! Servers started with `--registry-dir` additionally answer the
+//! content-addressed registry verbs (see [`crate::registry`]); blobs
+//! travel hex-encoded on the wire:
+//!
+//! | verb | request | reply |
+//! |------|---------|-------|
+//! | `registry_put`  | `{"cmd","manifest":{kind,name,...},"blobs":[hex,...]}` | `{"ok":true,"digest"}` |
+//! | `registry_get`  | `{"cmd","digest"}` | `{"ok":true,"digest","manifest","blobs":[hex,...]}` |
+//! | `registry_stat` | `{"cmd","digest"}` | `{"ok":true,"digest","manifest","blobs":[{digest,size}]}` |
+//! | `registry_list` | `{"cmd"[,"kind"][,"family"]}` | `{"ok":true,"artifacts":[{digest,manifest}]}` |
+//!
+//! Their typed error codes come from `registry::RegistryError::code`:
+//!
+//! | code | meaning |
+//! |------|---------|
+//! | `not_found` | no artifact/blob with that digest |
+//! | `integrity_failure` | stored bytes no longer hash to their digest — never served |
+//! | `invalid_digest` | digest is not 64 lowercase hex chars |
+//! | `bad_manifest` | manifest malformed (unknown kind/schema, missing field) |
+//! | `registry_disabled` | server was started without `--registry-dir` |
 
 use crate::api::spec::{SamplingSpec, SolverCfg, SpecError, DEFAULT_PRIORITY};
 use crate::schedule::ScheduleSpec;

@@ -52,6 +52,22 @@ pub struct Metrics {
     pub degraded_rung2: u64,
     /// Rung 3: NFE clamped toward the floor.
     pub degraded_rung3: u64,
+    // Artifact registry ([`crate::registry`]) — patched into the snapshot
+    // by [`super::Coordinator::metrics`] from the shared store's own
+    // counters (the wire verbs bump them off the loop thread); all zero
+    // when no registry is configured.
+    /// Artifacts published (`registry_put` + schedule-cache publishes).
+    pub registry_puts: u64,
+    /// Artifacts served fully verified (`registry_get` + cache pulls).
+    pub registry_gets: u64,
+    /// Reads refused because on-disk bytes no longer hash to their
+    /// address (typed `integrity_failure`; corrupted content never
+    /// served).
+    pub registry_integrity_failures: u64,
+    /// Gauge: content blobs on disk at snapshot time.
+    pub registry_blobs: u64,
+    /// Gauge: total blob bytes on disk at snapshot time.
+    pub registry_blob_bytes: u64,
     // Point-in-time gauges, filled when the snapshot is taken.
     /// Requests registered but not yet completed.
     pub in_flight: u64,
@@ -85,6 +101,8 @@ impl Metrics {
              retries={} eval_timeouts={} backend_unavailable={} \
              breaker_state={} breaker_probes={} \
              degraded_rung1={} degraded_rung2={} degraded_rung3={} \
+             registry_puts={} registry_gets={} registry_integrity_failures={} \
+             registry_blobs={} registry_blob_bytes={} \
              in_flight={} queued_lanes={} registry_entries={}",
             self.requests,
             self.lanes,
@@ -110,6 +128,11 @@ impl Metrics {
             self.degraded_rung1,
             self.degraded_rung2,
             self.degraded_rung3,
+            self.registry_puts,
+            self.registry_gets,
+            self.registry_integrity_failures,
+            self.registry_blobs,
+            self.registry_blob_bytes,
             self.in_flight,
             self.queued_lanes,
             self.registry_entries,
@@ -157,6 +180,14 @@ impl Metrics {
             ("degraded_rung1", Json::from(self.degraded_rung1)),
             ("degraded_rung2", Json::from(self.degraded_rung2)),
             ("degraded_rung3", Json::from(self.degraded_rung3)),
+            ("registry_puts", Json::from(self.registry_puts)),
+            ("registry_gets", Json::from(self.registry_gets)),
+            (
+                "registry_integrity_failures",
+                Json::from(self.registry_integrity_failures),
+            ),
+            ("registry_blobs", Json::from(self.registry_blobs)),
+            ("registry_blob_bytes", Json::from(self.registry_blob_bytes)),
             ("in_flight", Json::from(self.in_flight)),
             ("queued_lanes", Json::from(self.queued_lanes)),
             ("registry_entries", Json::from(self.registry_entries)),
@@ -208,6 +239,11 @@ mod tests {
         m.breaker_state = "half-open".to_string();
         m.degraded_rung1 = 10;
         m.degraded_rung3 = 12;
+        m.registry_puts = 13;
+        m.registry_gets = 14;
+        m.registry_integrity_failures = 15;
+        m.registry_blobs = 16;
+        m.registry_blob_bytes = 1024;
         let r = m.report();
         for needle in [
             "pit_sweeps=11",
@@ -226,6 +262,11 @@ mod tests {
             "degraded_rung1=10",
             "degraded_rung2=0",
             "degraded_rung3=12",
+            "registry_puts=13",
+            "registry_gets=14",
+            "registry_integrity_failures=15",
+            "registry_blobs=16",
+            "registry_blob_bytes=1024",
             "in_flight=7",
         ] {
             assert!(r.contains(needle), "{needle} missing from {r}");
@@ -244,6 +285,14 @@ mod tests {
         assert_eq!(j.get("breaker_state").unwrap().as_str().unwrap(), "half-open");
         assert_eq!(j.get("degraded_rung1").unwrap().as_u64().unwrap(), 10);
         assert_eq!(j.get("degraded_rung3").unwrap().as_u64().unwrap(), 12);
+        assert_eq!(j.get("registry_puts").unwrap().as_u64().unwrap(), 13);
+        assert_eq!(j.get("registry_gets").unwrap().as_u64().unwrap(), 14);
+        assert_eq!(
+            j.get("registry_integrity_failures").unwrap().as_u64().unwrap(),
+            15
+        );
+        assert_eq!(j.get("registry_blobs").unwrap().as_u64().unwrap(), 16);
+        assert_eq!(j.get("registry_blob_bytes").unwrap().as_u64().unwrap(), 1024);
         // A snapshot nobody patched reads as closed, not as "".
         let fresh = Metrics::new();
         assert!(fresh.report().contains("breaker_state=closed"));

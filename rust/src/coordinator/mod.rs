@@ -129,6 +129,7 @@ use health::{DispatchWorker, Gate, HealthTracker, WorkerReply};
 
 pub use crate::api::{CancelToken, SamplingSpec};
 
+use crate::registry::ArtifactRegistry;
 use crate::runtime::{ArtifactScore, Registry, RuntimeHandle};
 use crate::schedule::{ScheduleCache, ScheduleSpec};
 use crate::score::{ScoreSource, Tok};
@@ -326,6 +327,12 @@ enum Backend {
 pub struct Coordinator {
     tx: Sender<Msg>,
     shared: Arc<Shared>,
+    /// Shared artifact registry ([`crate::registry`]): the schedule cache
+    /// pulls/publishes tuned grids through it, the server's `registry_*`
+    /// wire verbs read it via [`Coordinator::artifact_registry`], and
+    /// [`Coordinator::metrics`] patches its counters into every snapshot.
+    /// `None` = no `--registry-dir` configured.
+    artifacts: Option<Arc<ArtifactRegistry>>,
 }
 
 impl Coordinator {
@@ -364,6 +371,21 @@ impl Coordinator {
         schedule_dir: Option<&str>,
         cfg: CoordinatorCfg,
     ) -> Coordinator {
+        Coordinator::start_with_registry(runtime, registry, policy, schedule_dir, cfg, None)
+    }
+
+    /// As [`Coordinator::start_with_cfg`], sharing a content-addressed
+    /// artifact registry: tuned schedules are pulled by digest before
+    /// fitting and published after, and the `registry_*` wire verbs go
+    /// live on any server holding this coordinator.
+    pub fn start_with_registry(
+        runtime: RuntimeHandle,
+        registry: Registry,
+        policy: BatchPolicy,
+        schedule_dir: Option<&str>,
+        cfg: CoordinatorCfg,
+        artifacts: Option<Arc<ArtifactRegistry>>,
+    ) -> Coordinator {
         // Batch capacity = the max artifact batch across families.
         let max_lanes = registry
             .by_family("markov")
@@ -375,9 +397,12 @@ impl Coordinator {
             runtime,
             registry,
             scores: BTreeMap::new(),
-            schedules: Arc::new(Mutex::new(ScheduleCache::with_dir(schedule_dir))),
+            schedules: Arc::new(Mutex::new(ScheduleCache::with_store(
+                schedule_dir,
+                artifacts.clone(),
+            ))),
         };
-        Coordinator::spawn(backend, policy, max_lanes, cfg)
+        Coordinator::spawn(backend, policy, max_lanes, cfg, artifacts)
     }
 
     /// Serve straight from an in-process score source (no artifacts, no
@@ -417,14 +442,32 @@ impl Coordinator {
         schedule_dir: Option<&str>,
         cfg: CoordinatorCfg,
     ) -> Coordinator {
+        Coordinator::start_local_with_registry(score, policy, max_lanes, schedule_dir, cfg, None)
+    }
+
+    /// As [`Coordinator::start_local_with_cfg`], sharing a
+    /// content-addressed artifact registry (see
+    /// [`Coordinator::start_with_registry`]).
+    pub fn start_local_with_registry(
+        score: Arc<dyn ScoreSource>,
+        policy: BatchPolicy,
+        max_lanes: usize,
+        schedule_dir: Option<&str>,
+        cfg: CoordinatorCfg,
+        artifacts: Option<Arc<ArtifactRegistry>>,
+    ) -> Coordinator {
         Coordinator::spawn(
             Backend::Local {
                 score,
-                schedules: Arc::new(Mutex::new(ScheduleCache::with_dir(schedule_dir))),
+                schedules: Arc::new(Mutex::new(ScheduleCache::with_store(
+                    schedule_dir,
+                    artifacts.clone(),
+                ))),
             },
             policy,
             max_lanes.max(1),
             cfg,
+            artifacts,
         )
     }
 
@@ -433,6 +476,7 @@ impl Coordinator {
         policy: BatchPolicy,
         max_lanes: usize,
         cfg: CoordinatorCfg,
+        artifacts: Option<Arc<ArtifactRegistry>>,
     ) -> Coordinator {
         let (tx, rx) = channel::<Msg>();
         let shared = Arc::new(Shared {
@@ -445,7 +489,7 @@ impl Coordinator {
             .name("coordinator".into())
             .spawn(move || supervised_loop(backend, policy, max_lanes, cfg, rx, loop_shared))
             .expect("spawning coordinator");
-        Coordinator { tx, shared }
+        Coordinator { tx, shared, artifacts }
     }
 
     fn submit_internal(
@@ -570,12 +614,34 @@ impl Coordinator {
         }
     }
 
+    /// The shared artifact registry this coordinator was started with
+    /// (`None` when no `--registry-dir` is configured).  The server's
+    /// `registry_*` wire verbs resolve their store through this accessor,
+    /// so adding the registry never changed the server's surface.
+    pub fn artifact_registry(&self) -> Option<Arc<ArtifactRegistry>> {
+        self.artifacts.clone()
+    }
+
     pub fn metrics(&self) -> Metrics {
         let (reply, rx) = channel();
-        if self.tx.send(Msg::Metrics(reply)).is_err() {
-            return Metrics::new();
+        let mut m = if self.tx.send(Msg::Metrics(reply)).is_err() {
+            Metrics::new()
+        } else {
+            rx.recv().unwrap_or_else(|_| Metrics::new())
+        };
+        // Registry counters live on the shared `ArtifactRegistry` (the
+        // server's wire verbs bump them without going through the loop
+        // thread), so they are patched into the snapshot here rather than
+        // accumulated by the scheduler.
+        if let Some(reg) = &self.artifacts {
+            let s = reg.stats();
+            m.registry_puts = s.puts;
+            m.registry_gets = s.gets;
+            m.registry_integrity_failures = s.integrity_failures;
+            m.registry_blobs = s.blobs;
+            m.registry_blob_bytes = s.blob_bytes;
         }
-        rx.recv().unwrap_or_else(|_| Metrics::new())
+        m
     }
 
     pub fn shutdown(&self) {

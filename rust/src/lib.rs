@@ -9,9 +9,10 @@
 //! artifacts through PJRT.  Python never runs on the request path.
 //!
 //! Layer map (see DESIGN.md):
-//! - L3 (this crate): [`coordinator`], [`server`], [`runtime`], [`solvers`],
-//!   [`ctmc`], [`score`], [`eval`], [`data`], [`exp`] + the from-scratch
-//!   substrates in [`util`] and [`testkit`].
+//! - L3 (this crate): [`coordinator`], [`server`], [`runtime`], [`registry`]
+//!   (content-addressed artifact sharing), [`solvers`], [`ctmc`], [`score`],
+//!   [`eval`], [`data`], [`exp`] + the from-scratch substrates in [`util`]
+//!   and [`testkit`].
 //! - L2/L1 (build-time python): `python/compile/` lowers score models and
 //!   whole sampler step graphs (with Pallas kernels inside) to
 //!   `artifacts/*.hlo.txt`.
@@ -26,6 +27,7 @@ pub mod solvers;
 pub mod eval;
 pub mod data;
 pub mod runtime;
+pub mod registry;
 pub mod coordinator;
 pub mod server;
 pub mod bench;

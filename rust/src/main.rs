@@ -3,9 +3,17 @@
 //! ```text
 //! fastdds exp <fig1|fig2|fig3|fig4|fig5|fig7|tab1|tab2|ablations|all> [--full]
 //! fastdds serve   [--addr 127.0.0.1:7878] [--policy greedy|timeout:<ms>]
-//!                 [--local [--oracle markov|hmm]] [--vocab 16] [--seq-len 32]
-//!                 [--schedule-dir tuned_schedules]
+//!                 [--local [--oracle markov|hmm|digest:<hex>]]
+//!                 [--vocab 16] [--seq-len 32]
+//!                 [--schedule-dir tuned_schedules] [--registry-dir artifacts_reg]
 //!                 [--max-inflight N] [--queue-cap N] [--max-conns 256]
+//! fastdds registry <put|get|stat|list> [--addr ...]
+//!                 put:  --kind tuned_schedule|score_model|compat_corpus
+//!                       --name N [--family F] [--vocab V] [--seq-len L]
+//!                       [--blobs f1,f2,...] [--oracle markov|hmm]
+//!                 get:  --digest <64 hex> [--out dir]
+//!                 stat: --digest <64 hex>
+//!                 list: [--kind ...] [--family ...]
 //! fastdds client  [--addr ...] --solver trapezoidal:0.5 --nfe 64 [--n 4] [--seed 1]
 //!                 [--schedule adaptive:tol=1e-3] [--nfe-budget 48]
 //!                 [--window-ratio 0.5] [--slack 4] [--max-events 1000]
@@ -22,6 +30,16 @@
 //! windowed uniformization (tunable with `client --window-ratio --slack`).
 //! `--schedule-dir` persists tuned schedules to disk so restarts never
 //! re-pay the pilot fits.
+//!
+//! `--registry-dir` attaches a content-addressed artifact registry
+//! ([`fastdds::registry`]): the server then speaks the `registry_*` wire
+//! verbs, the schedule cache pulls/publishes tuned grids by digest (point
+//! several servers at one directory and only the first fits), and
+//! `--oracle digest:<hex>` rebuilds a served Markov/HMM oracle from a
+//! `score_model` artifact instead of regenerating one from a seed.  The
+//! `fastdds registry` subcommand drives the same verbs over the wire;
+//! `registry put --oracle markov|hmm` synthesizes and publishes the
+//! score-model blob that `serve --oracle digest:<hex>` consumes.
 //!
 //! The client maps its flags through the typed `api::SpecBuilder`, so an
 //! invalid knob combination fails locally with the same typed error the
@@ -78,11 +96,12 @@ fn run() -> Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("client") => cmd_client(&args),
         Some("cancel") => cmd_cancel(&args),
+        Some("registry") => cmd_registry(&args),
         Some("info") => cmd_info(&args),
         _ => {
             println!(
                 "fastdds — fast high-order solvers for discrete diffusion models\n\
-                 usage: fastdds <exp|serve|client|cancel|info> [options]\n\
+                 usage: fastdds <exp|serve|client|cancel|registry|info> [options]\n\
                  see README.md"
             );
             Ok(())
@@ -161,35 +180,68 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_cap: args.usize_opt("queue-cap")?,
         ..Default::default()
     };
+    let artifacts = match args.str_opt("registry-dir") {
+        None => None,
+        Some(root) => Some(fastdds::registry::ArtifactRegistry::open(root)?),
+    };
     let coordinator = if args.flag("local") {
         // Explicitly requested in-process oracle backend: no artifacts
         // needed, all schedules (uniform/log/adaptive/tuned) available.
         // (Never an implicit fallback — a missing artifacts dir must stay
         // a hard startup error, not silently serve a synthetic oracle.)
-        let vocab = args.get_usize("vocab", 16)?;
-        let seq_len = args.get_usize("seq-len", 32)?;
         let which = args.get_str("oracle", "markov");
-        let mut rng = Xoshiro256::seed_from_u64(args.get_u64("oracle-seed", 23)?);
-        let chain = fastdds::score::markov::MarkovChain::generate(&mut rng, vocab, 0.5);
-        let oracle: std::sync::Arc<dyn fastdds::score::ScoreSource> = match which.as_str() {
-            // Uniform-state HMM oracle: `--solver exact` then runs
-            // bracketed windowed uniformization, tunable with the
-            // client's --window-ratio / --slack knobs.
-            "hmm" => std::sync::Arc::new(fastdds::score::hmm::HmmUniformOracle::new(
-                chain, seq_len,
-            )),
-            "markov" => std::sync::Arc::new(fastdds::score::markov::MarkovOracle::new(
-                chain, seq_len,
-            )),
-            other => bail!("unknown --oracle {other:?} (markov|hmm)"),
+        let (oracle, vocab, seq_len): (
+            std::sync::Arc<dyn fastdds::score::ScoreSource>,
+            usize,
+            usize,
+        ) = if let Some(digest) = which.strip_prefix("digest:") {
+            // Rebuild the oracle from a registry score_model artifact:
+            // the artifact carries its own vocab/seq_len coordinates, so
+            // --vocab/--seq-len are ignored on this path.
+            let Some(reg) = artifacts.as_ref() else {
+                bail!("--oracle digest:<hex> requires --registry-dir");
+            };
+            let (manifest, blobs) = reg.get(digest)?;
+            let m = manifest.v1();
+            if m.kind != fastdds::registry::ArtifactKind::ScoreModel {
+                bail!(
+                    "artifact {digest} is a {:?}, not a score_model",
+                    m.kind.as_str()
+                );
+            }
+            let Some(blob) = blobs.first() else {
+                bail!("score_model artifact {digest} has no blobs");
+            };
+            fastdds::registry::oracle_from_score_model(blob)?
+        } else {
+            let vocab = args.get_usize("vocab", 16)?;
+            let seq_len = args.get_usize("seq-len", 32)?;
+            let mut rng = Xoshiro256::seed_from_u64(args.get_u64("oracle-seed", 23)?);
+            let chain =
+                fastdds::score::markov::MarkovChain::generate(&mut rng, vocab, 0.5);
+            let oracle: std::sync::Arc<dyn fastdds::score::ScoreSource> =
+                match which.as_str() {
+                    // Uniform-state HMM oracle: `--solver exact` then runs
+                    // bracketed windowed uniformization, tunable with the
+                    // client's --window-ratio / --slack knobs.
+                    "hmm" => std::sync::Arc::new(
+                        fastdds::score::hmm::HmmUniformOracle::new(chain, seq_len),
+                    ),
+                    "markov" => std::sync::Arc::new(
+                        fastdds::score::markov::MarkovOracle::new(chain, seq_len),
+                    ),
+                    other => bail!("unknown --oracle {other:?} (markov|hmm|digest:<hex>)"),
+                };
+            (oracle, vocab, seq_len)
         };
         println!("serving local {which} oracle (vocab {vocab}, seq_len {seq_len})");
-        Coordinator::start_local_with_cfg(
+        Coordinator::start_local_with_registry(
             oracle,
             policy,
             args.get_usize("max-lanes", 8)?,
             schedule_dir,
             cfg,
+            artifacts,
         )
     } else {
         let runtime = RuntimeHandle::spawn(&dir)?;
@@ -201,7 +253,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .map(|a| a.name.clone())
             .collect();
         runtime.preload(&names.iter().map(|s| s.as_str()).collect::<Vec<_>>())?;
-        Coordinator::start_with_cfg(runtime, registry, policy, schedule_dir, cfg)
+        Coordinator::start_with_registry(runtime, registry, policy, schedule_dir, cfg, artifacts)
     };
     let max_conns =
         args.get_usize("max-conns", fastdds::server::DEFAULT_MAX_CONNS)?;
@@ -309,6 +361,138 @@ fn cmd_cancel(args: &Args) -> Result<()> {
     let found = client.cancel(id)?;
     println!("id={id} cancelled={found}");
     Ok(())
+}
+
+/// `fastdds registry <put|get|stat|list>`: drive the content-addressed
+/// artifact registry over the wire (the server must be running with
+/// `--registry-dir`, else every verb fails typed `registry_disabled`).
+fn cmd_registry(args: &Args) -> Result<()> {
+    let addr = args.get_str("addr", "127.0.0.1:7878");
+    let timeout = args
+        .usize_opt("timeout-ms")?
+        .map(|ms| std::time::Duration::from_millis(ms as u64));
+    let mut client = fastdds::server::client::Client::connect_with(&addr, timeout)?;
+    let verb = args.positional.get(1).map(|s| s.as_str()).unwrap_or("");
+    match verb {
+        "put" => {
+            let mut m = fastdds::registry::ManifestV1::new(
+                fastdds::registry::ArtifactKind::parse(
+                    &args.get_str("kind", "compat_corpus"),
+                )?,
+                &args.get_str("name", "unnamed"),
+            );
+            m.family = args.get_str("family", "");
+            m.vocab = args.get_usize("vocab", 0)?;
+            m.seq_len = args.get_usize("seq-len", 0)?;
+            m.solver = args.get_str("solver", "");
+            m.steps = args.get_usize("steps", 0)?;
+            m.created_by = args.get_str("created-by", "fastdds-cli");
+            let mut blobs: Vec<Vec<u8>> = Vec::new();
+            if let Some(list) = args.str_opt("blobs") {
+                for path in list.split(',').filter(|s| !s.is_empty()) {
+                    blobs.push(std::fs::read(path)?);
+                }
+            }
+            if let Some(oracle) = args.str_opt("oracle") {
+                // Synthesize the score_model blob that `serve --oracle
+                // digest:<hex>` consumes; the blob's actual coordinates
+                // override whatever kind/family/shape flags were given.
+                if oracle != "markov" && oracle != "hmm" {
+                    bail!("--oracle {oracle:?} (markov|hmm)");
+                }
+                let vocab = args.get_usize("vocab", 16)?;
+                let seq_len = args.get_usize("seq-len", 32)?;
+                let mut rng =
+                    Xoshiro256::seed_from_u64(args.get_u64("oracle-seed", 23)?);
+                let chain = fastdds::score::markov::MarkovChain::generate(
+                    &mut rng, vocab, 0.5,
+                );
+                blobs.push(fastdds::registry::score_model_blob(
+                    oracle, &chain, seq_len,
+                ));
+                m.kind = fastdds::registry::ArtifactKind::ScoreModel;
+                m.family = oracle.to_string();
+                m.vocab = vocab;
+                m.seq_len = seq_len;
+            }
+            if blobs.is_empty() {
+                bail!("registry put needs --blobs f1,f2,... or --oracle markov|hmm");
+            }
+            let digest = client.registry_put(&m, &blobs)?;
+            println!("{digest}");
+        }
+        "get" => {
+            let digest = require_digest(args)?;
+            let (manifest, blobs) = client.registry_get(digest)?;
+            print_manifest(digest, &manifest);
+            let stem = digest.get(..16).unwrap_or(digest);
+            if let Some(out) = args.str_opt("out") {
+                std::fs::create_dir_all(out)?;
+                for (i, b) in blobs.iter().enumerate() {
+                    let path = format!("{out}/{stem}-{i}");
+                    std::fs::write(&path, b)?;
+                    println!("  blob {i}: {} bytes -> {path}", b.len());
+                }
+            } else {
+                for (i, b) in blobs.iter().enumerate() {
+                    println!("  blob {i}: {} bytes", b.len());
+                }
+            }
+        }
+        "stat" => {
+            let digest = require_digest(args)?;
+            let (manifest, blobs) = client.registry_stat(digest)?;
+            print_manifest(digest, &manifest);
+            for (i, (d, size)) in blobs.iter().enumerate() {
+                match size {
+                    Some(n) => println!("  blob {i}: {d} ({n} bytes)"),
+                    None => println!("  blob {i}: {d} (MISSING)"),
+                }
+            }
+        }
+        "list" => {
+            let kind = match args.str_opt("kind") {
+                None => None,
+                Some(k) => Some(fastdds::registry::ArtifactKind::parse(k)?),
+            };
+            let arts = client.registry_list(kind, args.str_opt("family"))?;
+            for (digest, m) in &arts {
+                let v1 = m.v1();
+                println!(
+                    "{digest} kind={} name={:?} family={:?} vocab={} seq_len={}",
+                    v1.kind.as_str(),
+                    v1.name,
+                    v1.family,
+                    v1.vocab,
+                    v1.seq_len
+                );
+            }
+            println!("{} artifact(s)", arts.len());
+        }
+        other => bail!("unknown registry verb {other:?} (put|get|stat|list)"),
+    }
+    Ok(())
+}
+
+fn require_digest(args: &Args) -> Result<&str> {
+    args.str_opt("digest")
+        .ok_or_else(|| anyhow::anyhow!("--digest <64 hex> is required"))
+}
+
+fn print_manifest(digest: &str, m: &fastdds::registry::Manifest) {
+    let v1 = m.v1();
+    println!(
+        "{digest}\n  kind={} name={:?} family={:?} vocab={} seq_len={} \
+         solver={:?} steps={} created_by={:?}",
+        v1.kind.as_str(),
+        v1.name,
+        v1.family,
+        v1.vocab,
+        v1.seq_len,
+        v1.solver,
+        v1.steps,
+        v1.created_by
+    );
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

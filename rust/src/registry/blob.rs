@@ -1,0 +1,206 @@
+//! Content-addressed blob store: `<root>/blobs/<sha256-hex>`.
+//!
+//! Two invariants, both load-bearing for multi-node sharing:
+//!
+//! 1. **Atomicity** — a blob is written to a temp file in the same
+//!    directory and `rename`d into place, so a reader (possibly another
+//!    process on a shared filesystem) never observes a half-written
+//!    blob: the digest-named file either does not exist or is complete.
+//! 2. **Verified reads** — every `get` re-hashes the bytes it read and
+//!    compares against the requested digest.  A truncated or bit-flipped
+//!    file yields a typed [`RegistryError::Integrity`] (`integrity_failure`
+//!    on the wire); corrupted content is *never* returned to a caller.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{Context, Result};
+
+use crate::util::sha256::sha256_hex;
+
+use super::{check_digest, RegistryError};
+
+/// Uniquifier for temp-file names: two threads (or two puts of the same
+/// content racing) must never share a temp path.  Combined with the pid
+/// so two *processes* on a shared registry dir cannot collide either.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+pub struct BlobStore {
+    dir: String,
+}
+
+impl BlobStore {
+    /// Open (creating if missing) the blob directory under `root`.
+    pub fn open(root: &str) -> Result<BlobStore> {
+        let dir = format!("{root}/blobs");
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating blob dir {dir:?}"))?;
+        Ok(BlobStore { dir })
+    }
+
+    fn path(&self, digest: &str) -> String {
+        format!("{}/{digest}", self.dir)
+    }
+
+    /// Store `data`, returning its digest.  Write-to-temp-then-rename:
+    /// concurrent putters of the same content race benignly (last rename
+    /// wins, contents identical by construction).
+    pub fn put(&self, data: &[u8]) -> Result<String> {
+        let digest = sha256_hex(data);
+        let final_path = self.path(&digest);
+        // Already present: content-addressing makes this a no-op (and
+        // skipping the write keeps a put racing a reader harmless).
+        if std::fs::metadata(&final_path).is_ok() {
+            return Ok(digest);
+        }
+        let tmp = format!(
+            "{}/.tmp-{}-{}-{}",
+            self.dir,
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed),
+            &digest[..16]
+        );
+        std::fs::write(&tmp, data).with_context(|| format!("writing {tmp:?}"))?;
+        if let Err(e) = std::fs::rename(&tmp, &final_path) {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e).with_context(|| format!("publishing blob {digest}"));
+        }
+        Ok(digest)
+    }
+
+    /// Fetch and verify a blob.  Typed failures: `invalid_digest` for a
+    /// malformed address, `not_found` for an absent blob,
+    /// `integrity_failure` when the bytes on disk no longer hash to the
+    /// digest that names them.
+    pub fn get(&self, digest: &str) -> Result<Vec<u8>> {
+        check_digest(digest)?;
+        let path = self.path(digest);
+        let data = match std::fs::read(&path) {
+            Ok(d) => d,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Err(RegistryError::NotFound(digest.to_string()).into());
+            }
+            Err(e) => return Err(e).with_context(|| format!("reading blob {digest}")),
+        };
+        let actual = sha256_hex(&data);
+        if actual != digest {
+            return Err(RegistryError::Integrity {
+                digest: digest.to_string(),
+                actual,
+            }
+            .into());
+        }
+        Ok(data)
+    }
+
+    /// Presence check (no content verification — use `get` to serve).
+    pub fn has(&self, digest: &str) -> bool {
+        check_digest(digest).is_ok() && std::fs::metadata(self.path(digest)).is_ok()
+    }
+
+    /// On-disk size of a blob, if present.
+    pub fn size(&self, digest: &str) -> Option<u64> {
+        std::fs::metadata(self.path(digest)).ok().map(|m| m.len())
+    }
+
+    /// (blob count, total bytes) across the store — the stats gauges.
+    /// Stray temp files (a crashed writer's leftovers) are not counted:
+    /// only digest-named entries are blobs.
+    pub fn usage(&self) -> (u64, u64) {
+        let mut count = 0u64;
+        let mut bytes = 0u64;
+        if let Ok(entries) = std::fs::read_dir(&self.dir) {
+            for entry in entries.flatten() {
+                let name = entry.file_name();
+                let Some(name) = name.to_str() else { continue };
+                if check_digest(name).is_err() {
+                    continue;
+                }
+                if let Ok(meta) = entry.metadata() {
+                    count += 1;
+                    bytes += meta.len();
+                }
+            }
+        }
+        (count, bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_store(tag: &str) -> (String, BlobStore) {
+        let root = std::env::temp_dir()
+            .join(format!("fastdds_blob_{}_{tag}", std::process::id()));
+        let root = root.to_str().unwrap().to_string();
+        let _ = std::fs::remove_dir_all(&root);
+        let store = BlobStore::open(&root).unwrap();
+        (root, store)
+    }
+
+    #[test]
+    fn put_get_roundtrip_and_dedup() {
+        let (root, store) = temp_store("roundtrip");
+        let d1 = store.put(b"hello registry").unwrap();
+        assert_eq!(d1, sha256_hex(b"hello registry"));
+        assert_eq!(store.get(&d1).unwrap(), b"hello registry");
+        // Idempotent put: same digest, still one blob on disk.
+        let d2 = store.put(b"hello registry").unwrap();
+        assert_eq!(d1, d2);
+        let (count, bytes) = store.usage();
+        assert_eq!(count, 1);
+        assert_eq!(bytes, b"hello registry".len() as u64);
+        assert!(store.has(&d1));
+        assert_eq!(store.size(&d1), Some(b"hello registry".len() as u64));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn corrupted_blob_is_never_served() {
+        let (root, store) = temp_store("corrupt");
+        let digest = store.put(b"precious artifact bytes").unwrap();
+        // Bit-flip on disk.
+        let path = format!("{root}/blobs/{digest}");
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[3] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = store.get(&digest).unwrap_err();
+        let re = err.downcast_ref::<RegistryError>().unwrap();
+        assert_eq!(re.code(), "integrity_failure");
+        // Truncation is caught the same way.
+        std::fs::write(&path, b"precious").unwrap();
+        let err = store.get(&digest).unwrap_err();
+        assert_eq!(err.downcast_ref::<RegistryError>().unwrap().code(), "integrity_failure");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn typed_not_found_and_invalid_digest() {
+        let (root, store) = temp_store("missing");
+        let absent = sha256_hex(b"never stored");
+        let err = store.get(&absent).unwrap_err();
+        assert_eq!(err.downcast_ref::<RegistryError>().unwrap().code(), "not_found");
+        // Malformed addresses die typed before touching the filesystem —
+        // in particular a path-traversal "digest" never reaches open().
+        for bad in ["", "abc", "../../etc/passwd", &"Z".repeat(64)] {
+            let err = store.get(bad).unwrap_err();
+            assert_eq!(
+                err.downcast_ref::<RegistryError>().unwrap().code(),
+                "invalid_digest",
+                "{bad:?}"
+            );
+        }
+        assert!(!store.has("not-a-digest"));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn usage_ignores_temp_files() {
+        let (root, store) = temp_store("usage");
+        store.put(b"counted").unwrap();
+        std::fs::write(format!("{root}/blobs/.tmp-999-0-deadbeef"), b"junk").unwrap();
+        let (count, _) = store.usage();
+        assert_eq!(count, 1, "stray temp files must not count as blobs");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

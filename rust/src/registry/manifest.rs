@@ -1,0 +1,318 @@
+//! Versioned artifact manifests.
+//!
+//! A manifest is the small JSON document that *names* an artifact: its
+//! kind, the model coordinates it is valid for, creation metadata, and
+//! the ordered digest list of its content blobs.  The enum is versioned
+//! the same way the wire protocol is ([`crate::api::wire`]'s v1→v2 shim)
+//! and the container registries this module is modeled on: readers match
+//! on the `schema` field and route historical layouts through an upgrade
+//! shim, so a registry directory written by an old binary stays readable
+//! forever.  Only `V1` exists today; the reserved arm documents where
+//! `V2` lands.
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+use crate::util::sha256::sha256_hex;
+
+use super::RegistryError;
+
+/// What an artifact *is* — the consumer-facing type tag.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// A fitted non-uniform grid ([`crate::schedule::TunedSchedule`]
+    /// JSON): one blob, pulled by serving nodes instead of re-fitting.
+    TunedSchedule,
+    /// An oracle/score-model description (Markov chain or uniform-state
+    /// HMM as JSON): one blob, `serve --oracle digest:<hex>` builds the
+    /// in-process oracle from it.
+    ScoreModel,
+    /// A compatibility corpus (e.g. the v1 wire-replay corpus): any
+    /// number of blobs, reproducible by digest across machines.
+    CompatCorpus,
+}
+
+impl ArtifactKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ArtifactKind::TunedSchedule => "tuned_schedule",
+            ArtifactKind::ScoreModel => "score_model",
+            ArtifactKind::CompatCorpus => "compat_corpus",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<ArtifactKind> {
+        match s {
+            "tuned_schedule" => Ok(ArtifactKind::TunedSchedule),
+            "score_model" => Ok(ArtifactKind::ScoreModel),
+            "compat_corpus" => Ok(ArtifactKind::CompatCorpus),
+            other => Err(RegistryError::BadManifest(format!(
+                "unknown artifact kind {other:?} \
+                 (tuned_schedule|score_model|compat_corpus)"
+            ))
+            .into()),
+        }
+    }
+}
+
+/// Schema-1 manifest body.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ManifestV1 {
+    pub kind: ArtifactKind,
+    /// Human-readable handle (not an address; the digest is the address).
+    pub name: String,
+    /// Model coordinates the artifact is valid for.  `family` is the
+    /// score family; `solver`/`steps` only mean something for
+    /// `tuned_schedule` artifacts and are empty/0 otherwise.
+    pub family: String,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub solver: String,
+    pub steps: usize,
+    /// Free-form provenance note ("node-a tuner", "make corpus", ...).
+    pub created_by: String,
+    /// Ordered content-blob digests (64-char lowercase hex each).
+    pub blobs: Vec<String>,
+}
+
+impl ManifestV1 {
+    /// A minimal manifest with empty schedule coordinates; callers fill
+    /// the fields that apply to their kind.
+    pub fn new(kind: ArtifactKind, name: &str) -> ManifestV1 {
+        ManifestV1 {
+            kind,
+            name: name.to_string(),
+            family: String::new(),
+            vocab: 0,
+            seq_len: 0,
+            solver: String::new(),
+            steps: 0,
+            created_by: String::new(),
+            blobs: Vec::new(),
+        }
+    }
+
+    /// Parse the `manifest` object of a `registry_put` wire request:
+    /// `kind` and `name` are required, coordinates and provenance
+    /// optional.  The blob digest list is deliberately NOT read — the
+    /// server computes it from the uploaded content, so a client can
+    /// never claim blobs it did not send.
+    pub fn from_wire(j: &Json) -> Result<ManifestV1> {
+        let bad = |e: anyhow::Error| RegistryError::BadManifest(format!("{e:#}"));
+        let kind_s =
+            j.get("kind").and_then(|v| v.as_str().map(str::to_string)).map_err(bad)?;
+        let name =
+            j.get("name").and_then(|v| v.as_str().map(str::to_string)).map_err(bad)?;
+        let mut m = ManifestV1::new(ArtifactKind::parse(&kind_s)?, &name);
+        if let Some(v) = j.opt("family") {
+            m.family = v.as_str().map_err(bad)?.to_string();
+        }
+        if let Some(v) = j.opt("vocab") {
+            m.vocab = v.as_usize().map_err(bad)?;
+        }
+        if let Some(v) = j.opt("seq_len") {
+            m.seq_len = v.as_usize().map_err(bad)?;
+        }
+        if let Some(v) = j.opt("solver") {
+            m.solver = v.as_str().map_err(bad)?.to_string();
+        }
+        if let Some(v) = j.opt("steps") {
+            m.steps = v.as_usize().map_err(bad)?;
+        }
+        if let Some(v) = j.opt("created_by") {
+            m.created_by = v.as_str().map_err(bad)?.to_string();
+        }
+        Ok(m)
+    }
+}
+
+/// A versioned manifest.  Readers pattern-match; writers always emit the
+/// newest schema.  When a schema 2 arrives, the upgrade shim lives in
+/// [`Manifest::from_json`] (parse the old layout, lift it to the new
+/// arm) exactly like the v1 wire shim — old registry dirs keep working.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Manifest {
+    V1(ManifestV1),
+    // V2(ManifestV2) — reserved; add the arm + from_json shim together.
+}
+
+impl Manifest {
+    /// The current-schema view (upgrades happen at parse time, so this
+    /// is total no matter which schema the manifest arrived in).
+    pub fn v1(&self) -> &ManifestV1 {
+        match self {
+            Manifest::V1(m) => m,
+        }
+    }
+
+    /// Canonical JSON encoding.  The manifest digest is the SHA-256 of
+    /// exactly this string, so the encoding must stay deterministic —
+    /// [`Json::Obj`] is a BTreeMap (sorted key order) and `to_string`
+    /// has no whitespace degrees of freedom.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Manifest::V1(m) => Json::obj(vec![
+                ("schema", Json::from(1u64)),
+                ("kind", Json::from(m.kind.as_str())),
+                ("name", Json::from(m.name.as_str())),
+                ("family", Json::from(m.family.as_str())),
+                ("vocab", Json::from(m.vocab)),
+                ("seq_len", Json::from(m.seq_len)),
+                ("solver", Json::from(m.solver.as_str())),
+                ("steps", Json::from(m.steps)),
+                ("created_by", Json::from(m.created_by.as_str())),
+                (
+                    "blobs",
+                    Json::Arr(m.blobs.iter().map(|d| Json::from(d.as_str())).collect()),
+                ),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let schema = j
+            .get("schema")
+            .and_then(|s| s.as_u64())
+            .map_err(|e| RegistryError::BadManifest(format!("{e:#}")))?;
+        match schema {
+            1 => {
+                let blobs = j
+                    .get("blobs")
+                    .and_then(|b| b.as_arr().map(|a| a.to_vec()))
+                    .map_err(|e| RegistryError::BadManifest(format!("{e:#}")))?
+                    .iter()
+                    .map(|d| {
+                        let hex = d
+                            .as_str()
+                            .map_err(|e| RegistryError::BadManifest(format!("{e:#}")))?;
+                        super::check_digest(hex)?;
+                        Ok(hex.to_string())
+                    })
+                    .collect::<Result<Vec<String>>>()?;
+                let field = |k: &str| -> Result<String> {
+                    Ok(j.get(k)
+                        .and_then(|v| v.as_str().map(str::to_string))
+                        .map_err(|e| RegistryError::BadManifest(format!("{e:#}")))?)
+                };
+                let num = |k: &str| -> Result<usize> {
+                    Ok(j.get(k)
+                        .and_then(|v| v.as_usize())
+                        .map_err(|e| RegistryError::BadManifest(format!("{e:#}")))?)
+                };
+                Ok(Manifest::V1(ManifestV1 {
+                    kind: ArtifactKind::parse(&field("kind")?)?,
+                    name: field("name")?,
+                    family: field("family")?,
+                    vocab: num("vocab")?,
+                    seq_len: num("seq_len")?,
+                    solver: field("solver")?,
+                    steps: num("steps")?,
+                    created_by: field("created_by")?,
+                    blobs,
+                }))
+            }
+            // Future schemas upgrade here (the trow-style shim): parse
+            // the old arm, lift to the current one, never error on age.
+            other => Err(RegistryError::BadManifest(format!(
+                "unsupported manifest schema {other} (this binary reads schema 1)"
+            ))
+            .into()),
+        }
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)
+            .map_err(|e| RegistryError::BadManifest(format!("{e:#}")))?;
+        Manifest::from_json(&j)
+    }
+
+    /// The artifact's address: SHA-256 of the canonical encoding.
+    pub fn digest(&self) -> String {
+        sha256_hex(self.to_json().to_string().as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        Manifest::V1(ManifestV1 {
+            kind: ArtifactKind::TunedSchedule,
+            name: "markov-trap-8".into(),
+            family: "markov".into(),
+            vocab: 6,
+            seq_len: 12,
+            solver: "trapezoidal:0.5".into(),
+            steps: 8,
+            created_by: "test".into(),
+            blobs: vec![crate::util::sha256::sha256_hex(b"grid")],
+        })
+    }
+
+    #[test]
+    fn roundtrip_preserves_digest() {
+        let m = sample();
+        let text = m.to_json().to_string();
+        let back = Manifest::parse(&text).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.digest(), m.digest());
+        assert_eq!(m.digest().len(), 64);
+    }
+
+    #[test]
+    fn digest_tracks_content() {
+        let m = sample();
+        let mut other = m.v1().clone();
+        other.steps = 9;
+        assert_ne!(m.digest(), Manifest::V1(other).digest());
+    }
+
+    #[test]
+    fn unknown_schema_and_kind_fail_typed() {
+        let err = Manifest::parse(r#"{"schema": 99}"#).unwrap_err();
+        let re = err.downcast_ref::<RegistryError>().unwrap();
+        assert_eq!(re.code(), "bad_manifest");
+        let mut j = sample().to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("kind".into(), Json::from("warp_field"));
+        }
+        let err = Manifest::from_json(&j).unwrap_err();
+        assert_eq!(err.downcast_ref::<RegistryError>().unwrap().code(), "bad_manifest");
+        // A malformed blob digest dies at parse, not at fetch time.
+        let mut j = sample().to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("blobs".into(), Json::Arr(vec![Json::from("nothex")]));
+        }
+        assert!(Manifest::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn from_wire_requires_kind_and_name_and_ignores_blobs() {
+        let j = Json::parse(
+            r#"{"kind":"score_model","name":"m","vocab":5,"created_by":"cli",
+                "blobs":["deadbeef"]}"#,
+        )
+        .unwrap();
+        let m = ManifestV1::from_wire(&j).unwrap();
+        assert_eq!(m.kind, ArtifactKind::ScoreModel);
+        assert_eq!(m.vocab, 5);
+        assert_eq!(m.created_by, "cli");
+        assert!(m.blobs.is_empty(), "wire blob digests must never be trusted");
+        let err =
+            ManifestV1::from_wire(&Json::parse(r#"{"name":"x"}"#).unwrap()).unwrap_err();
+        assert_eq!(err.downcast_ref::<RegistryError>().unwrap().code(), "bad_manifest");
+    }
+
+    #[test]
+    fn kind_strings_roundtrip() {
+        for k in [
+            ArtifactKind::TunedSchedule,
+            ArtifactKind::ScoreModel,
+            ArtifactKind::CompatCorpus,
+        ] {
+            assert_eq!(ArtifactKind::parse(k.as_str()).unwrap(), k);
+        }
+        assert!(ArtifactKind::parse("nope").is_err());
+    }
+}

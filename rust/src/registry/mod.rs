@@ -1,0 +1,602 @@
+//! Content-addressed artifact registry: digest-keyed schedules, oracles
+//! and corpora shared across serving nodes (ROADMAP item 5).
+//!
+//! # Why
+//!
+//! Deploying the high-order solvers across a fleet means every node
+//! re-fits tuned schedules and rebuilds oracles locally — there is no
+//! way to *name*, *verify* or *share* an artifact.  This module is the
+//! missing naming layer: a small versioned manifest over content-hashed
+//! blobs, the same shape container registries use, reachable both as a
+//! library (`ArtifactRegistry`) and over the serving wire
+//! (`registry_put` / `registry_get` / `registry_list` / `registry_stat`,
+//! see [`crate::server`]).
+//!
+//! # Digest format
+//!
+//! Every address is the lowercase-hex SHA-256 of the addressed bytes
+//! (64 chars, `[0-9a-f]`; [`crate::util::sha256`]).  Blobs are addressed
+//! by their content; a manifest is addressed by the SHA-256 of its
+//! canonical JSON encoding ([`Manifest::to_json`] → `to_string`, sorted
+//! keys, no whitespace).  Addresses are *verified on every read*: a
+//! lookup re-hashes what it read and answers a typed
+//! [`RegistryError::Integrity`] (`integrity_failure` on the wire) on any
+//! mismatch, so a truncated or bit-flipped file on disk can fail a
+//! request but can never be served as the artifact it claims to be.
+//!
+//! # On-disk layout & atomicity contract
+//!
+//! ```text
+//! <root>/blobs/<sha256-hex>          raw blob bytes
+//! <root>/manifests/<sha256-hex>.json canonical manifest JSON
+//! ```
+//!
+//! All writes go to a temp file in the destination directory followed by
+//! `rename`, so concurrent readers (including other processes sharing
+//! the directory — the multi-node story is "point N nodes at one
+//! registry root") observe either nothing or the complete file, never a
+//! prefix.  Publishing order is blobs-then-manifest: a manifest is only
+//! visible once every blob it references is durably in place.
+//!
+//! # Manifest schema
+//!
+//! See [`manifest`]: a versioned enum (`schema: 1` today) carrying the
+//! artifact kind (`tuned_schedule` | `score_model` | `compat_corpus`),
+//! the model coordinates (`family`/`vocab`/`seq_len` + `solver`/`steps`
+//! for schedules), free-form `name`/`created_by` metadata, and the
+//! ordered digest list of content blobs.  Future schemas upgrade at
+//! parse time (the wire-v1→v2 shim pattern), never invalidating old
+//! directories.
+//!
+//! # Consumers
+//!
+//! * [`crate::schedule::ScheduleCache`] in registry-backed mode pulls a
+//!   tuned grid by digest instead of re-fitting ([`ArtifactRegistry::
+//!   find_tuned`]) and publishes fresh fits ([`ArtifactRegistry::
+//!   publish_tuned`]) so the *first* node to fit pays the pilots for the
+//!   whole fleet.
+//! * `serve --oracle digest:<hex>` builds an in-process Markov/HMM
+//!   oracle from a `score_model` blob ([`oracle_from_score_model`]).
+
+pub mod blob;
+pub mod manifest;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::schedule::tuner::{TuneKey, TunedSchedule};
+use crate::score::markov::MarkovChain;
+use crate::score::ScoreSource;
+use crate::util::json::Json;
+use crate::util::sha256::sha256_hex;
+
+pub use blob::BlobStore;
+pub use manifest::{ArtifactKind, Manifest, ManifestV1};
+
+/// Typed registry failures.  `code()` is the stable machine-readable
+/// string a wire error frame carries (see the table in
+/// [`crate::api::wire`]).
+#[derive(Debug)]
+pub enum RegistryError {
+    /// No blob/manifest under this digest.
+    NotFound(String),
+    /// The bytes on disk no longer hash to the digest that names them:
+    /// the artifact is corrupt and was NOT returned.
+    Integrity { digest: String, actual: String },
+    /// The supplied address is not a 64-char lowercase-hex digest.
+    InvalidDigest(String),
+    /// The manifest failed to parse or carries an unknown schema/kind.
+    BadManifest(String),
+    /// The server has no `--registry-dir` configured.
+    Disabled,
+}
+
+impl RegistryError {
+    pub fn code(&self) -> &'static str {
+        match self {
+            RegistryError::NotFound(_) => "not_found",
+            RegistryError::Integrity { .. } => "integrity_failure",
+            RegistryError::InvalidDigest(_) => "invalid_digest",
+            RegistryError::BadManifest(_) => "bad_manifest",
+            RegistryError::Disabled => "registry_disabled",
+        }
+    }
+}
+
+impl std::fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RegistryError::NotFound(d) => write!(f, "no artifact under digest {d}"),
+            RegistryError::Integrity { digest, actual } => write!(
+                f,
+                "integrity failure: content under {digest} hashes to {actual}; \
+                 refusing to serve corrupted bytes"
+            ),
+            RegistryError::InvalidDigest(s) => {
+                write!(f, "not a sha256 digest (64 lowercase hex chars): {s:?}")
+            }
+            RegistryError::BadManifest(msg) => write!(f, "bad manifest: {msg}"),
+            RegistryError::Disabled => {
+                write!(f, "this server has no artifact registry configured (--registry-dir)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RegistryError {}
+
+/// Validate an address: exactly 64 lowercase hex chars.  Doubles as the
+/// path-safety gate — a digest that passes cannot contain `/`, `.` or
+/// anything else that would escape the store directory.
+pub fn check_digest(s: &str) -> Result<()> {
+    if s.len() == 64 && s.bytes().all(|b| b.is_ascii_digit() || (b'a'..=b'f').contains(&b)) {
+        Ok(())
+    } else {
+        Err(RegistryError::InvalidDigest(s.to_string()).into())
+    }
+}
+
+/// Live counters + gauges, surfaced through the coordinator ledger and
+/// the `stats` wire verb.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RegistryStats {
+    pub puts: u64,
+    pub gets: u64,
+    pub integrity_failures: u64,
+    /// Manifests on disk (distinct artifacts).
+    pub manifests: u64,
+    /// Content blobs on disk.
+    pub blobs: u64,
+    /// Total blob bytes on disk.
+    pub blob_bytes: u64,
+}
+
+/// The registry root: a blob store plus a manifest directory plus the
+/// operation counters.  Cheap to share (`Arc`) between the server's
+/// wire verbs and the coordinator's schedule cache — both sides then
+/// agree on one set of counters.
+pub struct ArtifactRegistry {
+    root: String,
+    blobs: BlobStore,
+    manifest_dir: String,
+    puts: AtomicU64,
+    gets: AtomicU64,
+    integrity_failures: AtomicU64,
+}
+
+impl ArtifactRegistry {
+    /// Open (creating if missing) a registry rooted at `root`.
+    pub fn open(root: &str) -> Result<Arc<ArtifactRegistry>> {
+        let blobs = BlobStore::open(root)?;
+        let manifest_dir = format!("{root}/manifests");
+        std::fs::create_dir_all(&manifest_dir)
+            .with_context(|| format!("creating manifest dir {manifest_dir:?}"))?;
+        Ok(Arc::new(ArtifactRegistry {
+            root: root.to_string(),
+            blobs,
+            manifest_dir,
+            puts: AtomicU64::new(0),
+            gets: AtomicU64::new(0),
+            integrity_failures: AtomicU64::new(0),
+        }))
+    }
+
+    pub fn root(&self) -> &str {
+        &self.root
+    }
+
+    fn manifest_path(&self, digest: &str) -> String {
+        format!("{}/{digest}.json", self.manifest_dir)
+    }
+
+    /// Count an error against the integrity ledger when it is one.
+    fn tally(&self, err: anyhow::Error) -> anyhow::Error {
+        if matches!(err.downcast_ref::<RegistryError>(), Some(RegistryError::Integrity { .. })) {
+            self.integrity_failures.fetch_add(1, Ordering::Relaxed);
+        }
+        err
+    }
+
+    /// Publish an artifact: store every blob, fill the manifest's digest
+    /// list in order, store the manifest, return its digest (the
+    /// artifact's address).  Blobs-then-manifest ordering means a
+    /// concurrent reader never sees a manifest whose blobs are missing.
+    pub fn put(&self, mut m: ManifestV1, blob_data: &[&[u8]]) -> Result<String> {
+        m.blobs = blob_data
+            .iter()
+            .map(|data| self.blobs.put(data))
+            .collect::<Result<Vec<String>>>()?;
+        let manifest = Manifest::V1(m);
+        let text = manifest.to_json().to_string();
+        let digest = sha256_hex(text.as_bytes());
+        let path = self.manifest_path(&digest);
+        if std::fs::metadata(&path).is_err() {
+            let tmp = format!("{}/.tmp-{}-{digest}", self.manifest_dir, std::process::id());
+            std::fs::write(&tmp, &text).with_context(|| format!("writing {tmp:?}"))?;
+            if let Err(e) = std::fs::rename(&tmp, &path) {
+                let _ = std::fs::remove_file(&tmp);
+                return Err(e).with_context(|| format!("publishing manifest {digest}"));
+            }
+        }
+        self.puts.fetch_add(1, Ordering::Relaxed);
+        Ok(digest)
+    }
+
+    /// Load and verify the manifest at `digest` (the file bytes must
+    /// hash back to the address, then parse as a known schema).
+    pub fn manifest(&self, digest: &str) -> Result<Manifest> {
+        self.manifest_inner(digest).map_err(|e| self.tally(e))
+    }
+
+    fn manifest_inner(&self, digest: &str) -> Result<Manifest> {
+        check_digest(digest)?;
+        let path = self.manifest_path(digest);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Err(RegistryError::NotFound(digest.to_string()).into());
+            }
+            Err(e) => return Err(e).with_context(|| format!("reading manifest {digest}")),
+        };
+        let actual = sha256_hex(text.as_bytes());
+        if actual != digest {
+            return Err(RegistryError::Integrity {
+                digest: digest.to_string(),
+                actual,
+            }
+            .into());
+        }
+        Manifest::parse(&text)
+    }
+
+    /// Fetch a full artifact: the manifest plus every blob, all
+    /// integrity-checked.  Nothing is returned unless *everything*
+    /// verified.
+    pub fn get(&self, digest: &str) -> Result<(Manifest, Vec<Vec<u8>>)> {
+        let out = (|| {
+            let manifest = self.manifest_inner(digest)?;
+            let blobs = manifest
+                .v1()
+                .blobs
+                .iter()
+                .map(|d| self.blobs.get(d))
+                .collect::<Result<Vec<Vec<u8>>>>()?;
+            Ok((manifest, blobs))
+        })()
+        .map_err(|e| self.tally(e));
+        if out.is_ok() {
+            self.gets.fetch_add(1, Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// Manifest + per-blob (digest, on-disk size if present) without
+    /// fetching content.
+    pub fn stat(&self, digest: &str) -> Result<(Manifest, Vec<(String, Option<u64>)>)> {
+        let manifest = self.manifest(digest)?;
+        let stats = manifest
+            .v1()
+            .blobs
+            .iter()
+            .map(|d| (d.clone(), self.blobs.size(d)))
+            .collect();
+        Ok((manifest, stats))
+    }
+
+    /// Every (digest, manifest) in the registry, optionally filtered by
+    /// kind and/or family, sorted by digest for a stable listing.
+    /// Unreadable or corrupt manifests are *skipped* here (a listing
+    /// must not die because one entry rotted — fetching that entry by
+    /// digest still fails typed).
+    pub fn list(
+        &self,
+        kind: Option<ArtifactKind>,
+        family: Option<&str>,
+    ) -> Vec<(String, Manifest)> {
+        let mut out: Vec<(String, Manifest)> = Vec::new();
+        let Ok(entries) = std::fs::read_dir(&self.manifest_dir) else {
+            return out;
+        };
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(stem) = name.strip_suffix(".json") else { continue };
+            let Ok(m) = self.manifest_inner(stem) else { continue };
+            let v1 = m.v1();
+            if kind.map(|k| v1.kind != k).unwrap_or(false) {
+                continue;
+            }
+            if family.map(|f| v1.family != f).unwrap_or(false) {
+                continue;
+            }
+            out.push((stem.to_string(), m));
+        }
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    /// Counter snapshot + on-disk gauges.
+    pub fn stats(&self) -> RegistryStats {
+        let (blobs, blob_bytes) = self.blobs.usage();
+        let manifests = std::fs::read_dir(&self.manifest_dir)
+            .map(|entries| {
+                entries
+                    .flatten()
+                    .filter(|e| {
+                        e.file_name().to_str().map(|n| n.ends_with(".json")).unwrap_or(false)
+                    })
+                    .count() as u64
+            })
+            .unwrap_or(0);
+        RegistryStats {
+            puts: self.puts.load(Ordering::Relaxed),
+            gets: self.gets.load(Ordering::Relaxed),
+            integrity_failures: self.integrity_failures.load(Ordering::Relaxed),
+            manifests,
+            blobs,
+            blob_bytes,
+        }
+    }
+
+    // ---- consumers -------------------------------------------------------
+
+    /// Publish a tuned schedule (one JSON blob + a `tuned_schedule`
+    /// manifest carrying its coordinates).  Returns the artifact digest.
+    pub fn publish_tuned(&self, ts: &TunedSchedule, created_by: &str) -> Result<String> {
+        let blob = ts.to_json().to_string();
+        let m = ManifestV1 {
+            kind: ArtifactKind::TunedSchedule,
+            name: format!("tuned-{}-s{}", ts.family, ts.steps()),
+            family: ts.family.clone(),
+            vocab: ts.vocab,
+            seq_len: ts.seq_len,
+            solver: ts.solver.clone(),
+            steps: ts.steps(),
+            created_by: created_by.to_string(),
+            blobs: Vec::new(),
+        };
+        self.put(m, &[blob.as_bytes()])
+    }
+
+    /// Look up a tuned schedule by its coordinates and pull it by
+    /// digest.  `None` when no artifact matches or the match fails
+    /// verification/parsing (a poisoned registry entry must degrade to
+    /// "fit locally", never to a serving error — though an *integrity*
+    /// failure still lands on the ledger via [`ArtifactRegistry::get`]).
+    pub fn find_tuned(&self, key: &TuneKey) -> Option<Arc<TunedSchedule>> {
+        for (digest, m) in self.list(Some(ArtifactKind::TunedSchedule), Some(&key.family)) {
+            let v1 = m.v1();
+            if v1.vocab != key.vocab
+                || v1.seq_len != key.seq_len
+                || v1.solver != key.solver
+                || v1.steps != key.steps
+            {
+                continue;
+            }
+            let (_, blobs) = match self.get(&digest) {
+                Ok(out) => out,
+                Err(e) => {
+                    eprintln!("registry: artifact {digest} unusable: {e:#}");
+                    continue;
+                }
+            };
+            let Some(first) = blobs.first() else { continue };
+            let parsed = String::from_utf8(first.clone())
+                .map_err(anyhow::Error::from)
+                .and_then(|text| TunedSchedule::from_json(&Json::parse(&text)?));
+            match parsed {
+                Ok(ts) if &ts.key() == key => return Some(Arc::new(ts)),
+                Ok(ts) => eprintln!(
+                    "registry: artifact {digest} manifest coordinates disagree \
+                     with its schedule payload ({:?} vs {:?}); skipping",
+                    ts.key(),
+                    key
+                ),
+                Err(e) => eprintln!("registry: artifact {digest} blob unparsable: {e:#}"),
+            }
+        }
+        None
+    }
+}
+
+// ---- score-model blobs ---------------------------------------------------
+
+/// Serialize an oracle description (`"markov"` or `"hmm"` over a
+/// [`MarkovChain`]) as a `score_model` blob.
+pub fn score_model_blob(oracle: &str, chain: &MarkovChain, seq_len: usize) -> Vec<u8> {
+    let rows: Vec<Json> = (0..chain.vocab)
+        .map(|r| {
+            Json::Arr((0..chain.vocab).map(|c| Json::Num(chain.at(r, c))).collect())
+        })
+        .collect();
+    Json::obj(vec![
+        ("oracle", Json::from(oracle)),
+        ("vocab", Json::from(chain.vocab)),
+        ("seq_len", Json::from(seq_len)),
+        ("transition", Json::Arr(rows)),
+        ("stationary", Json::Arr(chain.pi.iter().map(|&p| Json::Num(p)).collect())),
+    ])
+    .to_string()
+    .into_bytes()
+}
+
+/// Publish a score model, returning its artifact digest.
+pub fn publish_score_model(
+    reg: &ArtifactRegistry,
+    oracle: &str,
+    chain: &MarkovChain,
+    seq_len: usize,
+    name: &str,
+    created_by: &str,
+) -> Result<String> {
+    let blob = score_model_blob(oracle, chain, seq_len);
+    let m = ManifestV1 {
+        kind: ArtifactKind::ScoreModel,
+        name: name.to_string(),
+        family: oracle.to_string(),
+        vocab: chain.vocab,
+        seq_len,
+        solver: String::new(),
+        steps: 0,
+        created_by: created_by.to_string(),
+        blobs: Vec::new(),
+    };
+    reg.put(m, &[&blob])
+}
+
+/// Rebuild the in-process oracle a `score_model` blob describes.
+/// Returns (oracle, vocab, seq_len) — the serve CLI prints the shape.
+pub fn oracle_from_score_model(data: &[u8]) -> Result<(Arc<dyn ScoreSource>, usize, usize)> {
+    let text = std::str::from_utf8(data)
+        .map_err(|e| RegistryError::BadManifest(format!("score_model blob is not utf-8: {e}")))?;
+    let j = Json::parse(text)?;
+    let which = j.get("oracle")?.as_str()?.to_string();
+    let vocab = j.get("vocab")?.as_usize()?;
+    let seq_len = j.get("seq_len")?.as_usize()?;
+    let a_mat = j.get("transition")?.as_f64_mat()?;
+    let pi = j.get("stationary")?.as_f64_vec()?;
+    let mut a = Vec::with_capacity(vocab * vocab);
+    for row in &a_mat {
+        a.extend_from_slice(row);
+    }
+    let chain = MarkovChain::new(vocab, a, pi);
+    let oracle: Arc<dyn ScoreSource> = match which.as_str() {
+        "markov" => Arc::new(crate::score::markov::MarkovOracle::new(chain, seq_len)),
+        "hmm" => Arc::new(crate::score::hmm::HmmUniformOracle::new(chain, seq_len)),
+        other => {
+            return Err(RegistryError::BadManifest(format!(
+                "unknown score_model oracle {other:?} (markov|hmm)"
+            ))
+            .into())
+        }
+    };
+    Ok((oracle, vocab, seq_len))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::Solver;
+    use crate::util::rng::Xoshiro256;
+
+    fn temp_registry(tag: &str) -> (String, Arc<ArtifactRegistry>) {
+        let root = std::env::temp_dir()
+            .join(format!("fastdds_reg_{}_{tag}", std::process::id()));
+        let root = root.to_str().unwrap().to_string();
+        let _ = std::fs::remove_dir_all(&root);
+        let reg = ArtifactRegistry::open(&root).unwrap();
+        (root, reg)
+    }
+
+    #[test]
+    fn put_get_stat_list_roundtrip() {
+        let (root, reg) = temp_registry("roundtrip");
+        let m = ManifestV1::new(ArtifactKind::CompatCorpus, "corpus-a");
+        let digest = reg.put(m, &[b"line one", b"line two"]).unwrap();
+        check_digest(&digest).unwrap();
+
+        let (manifest, blobs) = reg.get(&digest).unwrap();
+        assert_eq!(manifest.v1().name, "corpus-a");
+        assert_eq!(blobs, vec![b"line one".to_vec(), b"line two".to_vec()]);
+        // The manifest digest is reproducible from the returned manifest.
+        assert_eq!(manifest.digest(), digest);
+
+        let (_, blob_stats) = reg.stat(&digest).unwrap();
+        assert_eq!(blob_stats.len(), 2);
+        assert!(blob_stats.iter().all(|(_, size)| size.is_some()));
+
+        let listed = reg.list(Some(ArtifactKind::CompatCorpus), None);
+        assert_eq!(listed.len(), 1);
+        assert_eq!(listed[0].0, digest);
+        assert!(reg.list(Some(ArtifactKind::ScoreModel), None).is_empty());
+
+        let s = reg.stats();
+        assert_eq!(s.puts, 1);
+        assert_eq!(s.gets, 1);
+        assert_eq!(s.integrity_failures, 0);
+        assert_eq!(s.manifests, 1);
+        assert_eq!(s.blobs, 2);
+        assert_eq!(s.blob_bytes, 16);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn corrupt_manifest_fails_typed_and_counts() {
+        let (root, reg) = temp_registry("poison");
+        let digest = reg
+            .put(ManifestV1::new(ArtifactKind::CompatCorpus, "x"), &[b"payload"])
+            .unwrap();
+        // Flip one byte of the manifest file: its digest no longer
+        // matches its address.
+        let path = format!("{root}/manifests/{digest}.json");
+        let mut text = std::fs::read(&path).unwrap();
+        let last = text.len() - 2;
+        text[last] ^= 0x01;
+        std::fs::write(&path, &text).unwrap();
+        let err = reg.get(&digest).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<RegistryError>().unwrap().code(),
+            "integrity_failure"
+        );
+        assert_eq!(reg.stats().integrity_failures, 1);
+        assert_eq!(reg.stats().gets, 0, "a failed get must not count as served");
+        // A rotten entry disappears from listings but other artifacts
+        // stay reachable.
+        let ok = reg
+            .put(ManifestV1::new(ArtifactKind::CompatCorpus, "y"), &[b"fine"])
+            .unwrap();
+        let listed = reg.list(None, None);
+        assert_eq!(listed.len(), 1);
+        assert_eq!(listed[0].0, ok);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn tuned_schedule_publish_and_find() {
+        use crate::score::markov::{MarkovChain, MarkovOracle};
+        let (root, reg) = temp_registry("tuned");
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let oracle = MarkovOracle::new(MarkovChain::generate(&mut rng, 6, 0.5), 12);
+        let solver = Solver::Trapezoidal { theta: 0.5 };
+        let ts = crate::schedule::ScheduleTuner { pilots: 1, ..Default::default() }
+            .fit_masked(&oracle, solver, 8, 1e-3, "markov");
+        let key = ts.key();
+        let digest = reg.publish_tuned(&ts, "test").unwrap();
+
+        let found = reg.find_tuned(&key).expect("published schedule must be findable");
+        assert_eq!(found.grid, ts.grid);
+
+        // Wrong coordinates find nothing.
+        let mut other = key.clone();
+        other.steps = 9;
+        assert!(reg.find_tuned(&other).is_none());
+
+        // The stat view carries the schedule coordinates.
+        let (m, _) = reg.stat(&digest).unwrap();
+        assert_eq!(m.v1().kind, ArtifactKind::TunedSchedule);
+        assert_eq!(m.v1().solver, "trapezoidal:0.5");
+        assert_eq!(m.v1().steps, 8);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn score_model_blob_roundtrips_to_oracle() {
+        let mut rng = Xoshiro256::seed_from_u64(23);
+        let chain = MarkovChain::generate(&mut rng, 5, 0.5);
+        for which in ["markov", "hmm"] {
+            let blob = score_model_blob(which, &chain, 10);
+            let (oracle, vocab, seq_len) = oracle_from_score_model(&blob).unwrap();
+            assert_eq!(vocab, 5);
+            assert_eq!(seq_len, 10);
+            assert_eq!(oracle.vocab(), 5);
+            assert_eq!(oracle.seq_len(), 10);
+        }
+        let err = oracle_from_score_model(
+            br#"{"oracle":"warp","vocab":2,"seq_len":2,"transition":[[0.5,0.5],[0.5,0.5]],"stationary":[0.5,0.5]}"#,
+        )
+        .unwrap_err();
+        assert_eq!(err.downcast_ref::<RegistryError>().unwrap().code(), "bad_manifest");
+    }
+}

@@ -222,15 +222,26 @@ impl TuneKey {
 /// being memoised instead of growing without bound.
 ///
 /// With [`ScheduleCache::persistent`] the cache is disk-backed: every
-/// insert flushes the fitted grid to `<dir>/<key>.json` and a fresh cache
+/// insert flushes the fitted grid to `<dir>/<stem>.json` and a fresh cache
 /// reloads the directory on construction, so tuned schedules survive
 /// server restarts (a fit is paid once per key per *deployment*, not per
-/// process).
+/// process).  Stems are digest-keyed (SHA-256 of the raw key), killing
+/// the historical sanitized-stem collision hazard; reloading keys
+/// entries by *content*, so files written under the old
+/// sanitized+fnv1a stems keep loading forever (read compat).
+///
+/// With [`ScheduleCache::with_store`] the cache is additionally
+/// registry-backed ([`crate::registry::ArtifactRegistry`]): a miss first
+/// tries to pull a matching tuned grid by digest from the shared
+/// registry, and a local fit is published back — across a fleet, the
+/// first node to fit a key pays the pilot runs for everyone.
 #[derive(Default)]
 pub struct ScheduleCache {
     map: BTreeMap<TuneKey, Arc<TunedSchedule>>,
     /// Flush-on-insert directory; `None` = in-memory only.
     dir: Option<String>,
+    /// Shared artifact registry; `None` = fit locally only.
+    registry: Option<Arc<crate::registry::ArtifactRegistry>>,
 }
 
 impl ScheduleCache {
@@ -245,7 +256,11 @@ impl ScheduleCache {
     /// insert.  Unreadable files are skipped with a warning — a corrupt
     /// entry must never take the coordinator down.
     pub fn persistent(dir: &str) -> Self {
-        let mut cache = ScheduleCache { map: BTreeMap::new(), dir: Some(dir.to_string()) };
+        let mut cache = ScheduleCache {
+            map: BTreeMap::new(),
+            dir: Some(dir.to_string()),
+            registry: None,
+        };
         if let Err(e) = std::fs::create_dir_all(dir) {
             eprintln!("schedule cache: cannot create {dir:?}: {e}");
             return cache;
@@ -283,6 +298,19 @@ impl ScheduleCache {
         }
     }
 
+    /// [`Self::with_dir`] plus an optional shared artifact registry: a
+    /// cache miss then pulls matching tuned grids by digest before
+    /// fitting, and local fits are published back (see
+    /// [`Self::get_or_fit`]).
+    pub fn with_store(
+        dir: Option<&str>,
+        registry: Option<Arc<crate::registry::ArtifactRegistry>>,
+    ) -> Self {
+        let mut cache = Self::with_dir(dir);
+        cache.registry = registry;
+        cache
+    }
+
     pub fn get(&self, key: &TuneKey) -> Option<Arc<TunedSchedule>> {
         self.map.get(key).cloned()
     }
@@ -291,9 +319,12 @@ impl ScheduleCache {
     /// client-controlled strings, so every character outside
     /// `[A-Za-z0-9._-]` is replaced with '_' — in particular '/' (and
     /// therefore any `../` traversal) can never reach the filesystem path —
-    /// and the stem is length-capped.  A hash of the RAW key is appended so
-    /// distinct keys whose sanitized/truncated forms coincide (e.g. "a:b"
-    /// vs "a_b") can never overwrite each other's file.
+    /// and the stem is length-capped.  A SHA-256 digest of the RAW key is
+    /// appended so distinct keys whose sanitized/truncated forms coincide
+    /// (e.g. "a:b" vs "a_b") can never overwrite each other's file: unlike
+    /// the 64-bit fnv1a suffix this replaced, a collision would need a
+    /// SHA-256 collision.  Old fnv1a-suffixed files still load — reloading
+    /// keys entries by parsed *content*, never by stem.
     fn file_stem(key: &TuneKey) -> String {
         let clean = |s: &str| -> String {
             s.chars()
@@ -311,14 +342,15 @@ impl ScheduleCache {
             "{}\u{1f}{}\u{1f}{}\u{1f}{}\u{1f}{}",
             key.family, key.vocab, key.seq_len, key.solver, key.steps
         );
+        let digest = crate::util::sha256::sha256_hex(raw.as_bytes());
         format!(
-            "{}-v{}-l{}-{}-s{}-{:016x}",
+            "{}-v{}-l{}-{}-s{}-{}",
             clean(&key.family),
             key.vocab,
             key.seq_len,
             clean(&key.solver),
             key.steps,
-            crate::testkit::fnv1a(&raw)
+            &digest[..32]
         )
     }
 
@@ -347,6 +379,14 @@ impl ScheduleCache {
 
     /// Cached lookup; `fit` runs on miss and its result is memoised while
     /// the cache has room.
+    ///
+    /// Lookup order: memory (disk entries are loaded at construction) →
+    /// shared registry by digest ([`ArtifactRegistry::find_tuned`]; the
+    /// pulled grid is memoised + flushed locally but not re-published) →
+    /// local fit, which is published back to the registry best-effort so
+    /// the next node pulls instead of fitting.
+    ///
+    /// [`ArtifactRegistry::find_tuned`]: crate::registry::ArtifactRegistry::find_tuned
     pub fn get_or_fit(
         &mut self,
         key: TuneKey,
@@ -354,6 +394,18 @@ impl ScheduleCache {
     ) -> Arc<TunedSchedule> {
         if let Some(hit) = self.get(&key) {
             return hit;
+        }
+        if let Some(reg) = self.registry.clone() {
+            if let Some(ts) = reg.find_tuned(&key) {
+                return self.insert(key, (*ts).clone());
+            }
+            let fitted = fit();
+            // Best effort: a read-only or full registry must not fail
+            // serving — the fit is still memoised locally.
+            if let Err(e) = reg.publish_tuned(&fitted, "schedule-cache") {
+                eprintln!("schedule cache: cannot publish tuned grid: {e:#}");
+            }
+            return self.insert(key, fitted);
         }
         self.insert(key, fit())
     }
@@ -461,12 +513,115 @@ mod tests {
         assert!(!stem.contains(':'), "{stem}");
 
         // Distinct raw keys whose sanitized forms coincide must still get
-        // distinct files (the appended raw-key hash disambiguates).
+        // distinct files (the appended raw-key digest disambiguates).
         let mut a = key.clone();
         a.family = "a:b".into();
         let mut b = key.clone();
         b.family = "a_b".into();
         assert_ne!(ScheduleCache::file_stem(&a), ScheduleCache::file_stem(&b));
+    }
+
+    #[test]
+    fn colliding_specs_write_distinct_files_and_both_reload() {
+        // Regression for the stem-collision hazard: two keys that sanitize
+        // to the same readable prefix ("a:b" vs "a_b") must persist as two
+        // files, and a restarted cache must serve both without refitting.
+        let o = oracle();
+        let solver = Solver::Trapezoidal { theta: 0.5 };
+        let dir = std::env::temp_dir().join(format!(
+            "fastdds_sched_collide_{}",
+            std::process::id()
+        ));
+        let dir = dir.to_str().unwrap().to_string();
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let tuner = ScheduleTuner { pilots: 1, ..Default::default() };
+        let key_a = TuneKey::new("a:b", 6, 12, solver, 6);
+        let key_b = TuneKey::new("a_b", 6, 12, solver, 8);
+        {
+            let mut cache = ScheduleCache::persistent(&dir);
+            cache.get_or_fit(key_a.clone(), || {
+                tuner.fit_masked(&o, solver, 6, 1e-3, "a:b")
+            });
+            cache.get_or_fit(key_b.clone(), || {
+                tuner.fit_masked(&o, solver, 8, 1e-3, "a_b")
+            });
+        }
+        let files: Vec<_> = std::fs::read_dir(&dir).unwrap().flatten().collect();
+        assert_eq!(files.len(), 2, "colliding specs must not share a file");
+
+        let mut cache = ScheduleCache::persistent(&dir);
+        assert_eq!(cache.get_or_fit(key_a, || panic!("must not refit a:b")).steps(), 6);
+        assert_eq!(cache.get_or_fit(key_b, || panic!("must not refit a_b")).steps(), 8);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn legacy_fnv1a_stem_files_still_load() {
+        // Files flushed by older builds used a sanitized+fnv1a stem.
+        // Reloading keys by parsed content, so any `*.json` stem — legacy
+        // or digest-keyed — must keep serving its schedule.
+        let o = oracle();
+        let solver = Solver::Trapezoidal { theta: 0.5 };
+        let dir = std::env::temp_dir().join(format!(
+            "fastdds_sched_legacy_{}",
+            std::process::id()
+        ));
+        let dir = dir.to_str().unwrap().to_string();
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+
+        let ts = ScheduleTuner { pilots: 1, ..Default::default() }
+            .fit_masked(&o, solver, 8, 1e-3, "markov");
+        let key = ts.key();
+        // The exact stem shape an old deployment left behind.
+        ts.save(&format!("{dir}/markov-v6-l12-trapezoidal_0.5-s8-deadbeefcafef00d.json"))
+            .unwrap();
+
+        let mut cache = ScheduleCache::persistent(&dir);
+        assert_eq!(cache.len(), 1, "legacy-stem file must load");
+        let served = cache.get_or_fit(key, || panic!("legacy file must prevent a refit"));
+        assert_eq!(served.grid, ts.grid);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn registry_backed_cache_pulls_instead_of_fitting() {
+        let o = oracle();
+        let solver = Solver::Trapezoidal { theta: 0.5 };
+        let root = std::env::temp_dir().join(format!(
+            "fastdds_sched_registry_{}",
+            std::process::id()
+        ));
+        let root = root.to_str().unwrap().to_string();
+        let _ = std::fs::remove_dir_all(&root);
+        let reg = crate::registry::ArtifactRegistry::open(&root).unwrap();
+
+        // Node A: misses everywhere, fits, publishes to the registry.
+        let key = TuneKey::new("markov", 6, 12, solver, 8);
+        let mut fits = 0usize;
+        let first = {
+            let mut cache = ScheduleCache::with_store(None, Some(Arc::clone(&reg)));
+            let ts = cache.get_or_fit(key.clone(), || {
+                fits += 1;
+                ScheduleTuner { pilots: 1, ..Default::default() }
+                    .fit_masked(&o, solver, 8, 1e-3, "markov")
+            });
+            ts.grid.clone()
+        };
+        assert_eq!(fits, 1);
+        assert_eq!(reg.stats().puts, 1, "local fit must be published");
+
+        // Node B: no schedule dir, fresh memory — the registry pull must
+        // satisfy the miss without running the tuner.
+        let mut cache = ScheduleCache::with_store(None, Some(Arc::clone(&reg)));
+        let pulled = cache.get_or_fit(key.clone(), || panic!("registry hit must not refit"));
+        assert_eq!(pulled.grid, first);
+        // And the pull is memoised: a second lookup stays in memory.
+        let again = cache.get_or_fit(key, || panic!("memoised"));
+        assert_eq!(again.grid, first);
+        assert_eq!(reg.stats().puts, 1, "a pulled grid must not be re-published");
+        let _ = std::fs::remove_dir_all(&root);
     }
 
     #[test]

@@ -13,8 +13,10 @@ use anyhow::{anyhow, bail, Result};
 use crate::api::wire;
 use crate::api::SamplingSpec;
 use crate::coordinator::GenerateResponse;
+use crate::registry::{ArtifactKind, Manifest, ManifestV1};
 use crate::score::Tok;
 use crate::util::json::Json;
+use crate::util::sha256::{hex_decode, hex_encode};
 
 pub struct Client {
     reader: BufReader<TcpStream>,
@@ -304,6 +306,129 @@ impl Client {
     pub fn generate_stream(&mut self, spec: &SamplingSpec) -> Result<StreamOutcome> {
         let _id = self.start_stream(spec)?;
         self.finish_stream(spec.n_samples())
+    }
+
+    // ---- artifact registry verbs ----------------------------------------
+
+    /// Publish an artifact: the manifest's coordinates plus the raw blob
+    /// contents (hex-encoded on the wire; the digest list is computed
+    /// server-side).  Returns the artifact's address.
+    pub fn registry_put(&mut self, m: &ManifestV1, blobs: &[Vec<u8>]) -> Result<String> {
+        let mut manifest = vec![
+            ("kind", Json::from(m.kind.as_str())),
+            ("name", Json::from(m.name.as_str())),
+            ("family", Json::from(m.family.as_str())),
+            ("vocab", Json::from(m.vocab)),
+            ("seq_len", Json::from(m.seq_len)),
+            ("solver", Json::from(m.solver.as_str())),
+            ("steps", Json::from(m.steps)),
+        ];
+        if !m.created_by.is_empty() {
+            manifest.push(("created_by", Json::from(m.created_by.as_str())));
+        }
+        let req = Json::obj(vec![
+            ("cmd", Json::from("registry_put")),
+            ("manifest", Json::obj(manifest)),
+            (
+                "blobs",
+                Json::Arr(blobs.iter().map(|b| Json::Str(hex_encode(b))).collect()),
+            ),
+        ]);
+        let r = self.raw(&req.to_string())?;
+        Self::registry_ok(&r, "registry_put")?;
+        Ok(r.get("digest")?.as_str()?.to_string())
+    }
+
+    /// Fetch a full artifact by digest: the manifest plus every content
+    /// blob, integrity-verified server-side before a byte is sent.
+    pub fn registry_get(&mut self, digest: &str) -> Result<(Manifest, Vec<Vec<u8>>)> {
+        let req = Json::obj(vec![
+            ("cmd", Json::from("registry_get")),
+            ("digest", Json::from(digest)),
+        ]);
+        let r = self.raw(&req.to_string())?;
+        Self::registry_ok(&r, "registry_get")?;
+        let manifest = Manifest::from_json(r.get("manifest")?)?;
+        let blobs = r
+            .get("blobs")?
+            .as_arr()?
+            .iter()
+            .map(|b| hex_decode(b.as_str()?))
+            .collect::<Result<Vec<Vec<u8>>>>()?;
+        Ok((manifest, blobs))
+    }
+
+    /// Manifest + per-blob `(digest, on-disk size)` without transferring
+    /// content.
+    pub fn registry_stat(
+        &mut self,
+        digest: &str,
+    ) -> Result<(Manifest, Vec<(String, Option<u64>)>)> {
+        let req = Json::obj(vec![
+            ("cmd", Json::from("registry_stat")),
+            ("digest", Json::from(digest)),
+        ]);
+        let r = self.raw(&req.to_string())?;
+        Self::registry_ok(&r, "registry_stat")?;
+        let manifest = Manifest::from_json(r.get("manifest")?)?;
+        let blobs = r
+            .get("blobs")?
+            .as_arr()?
+            .iter()
+            .map(|b| {
+                let d = b.get("digest")?.as_str()?.to_string();
+                let size = match b.opt("size") {
+                    None | Some(Json::Null) => None,
+                    Some(v) => Some(v.as_u64()?),
+                };
+                Ok((d, size))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok((manifest, blobs))
+    }
+
+    /// List `(digest, manifest)` pairs, optionally filtered by kind
+    /// and/or family.
+    pub fn registry_list(
+        &mut self,
+        kind: Option<ArtifactKind>,
+        family: Option<&str>,
+    ) -> Result<Vec<(String, Manifest)>> {
+        let mut fields = vec![("cmd", Json::from("registry_list"))];
+        if let Some(k) = kind {
+            fields.push(("kind", Json::from(k.as_str())));
+        }
+        if let Some(f) = family {
+            fields.push(("family", Json::from(f)));
+        }
+        let r = self.raw(&Json::obj(fields).to_string())?;
+        Self::registry_ok(&r, "registry_list")?;
+        r.get("artifacts")?
+            .as_arr()?
+            .iter()
+            .map(|a| {
+                let digest = a.get("digest")?.as_str()?.to_string();
+                let manifest = Manifest::from_json(a.get("manifest")?)?;
+                Ok((digest, manifest))
+            })
+            .collect()
+    }
+
+    /// Shared error surface of the registry verbs: failures keep the
+    /// server's stable code (`not_found`, `integrity_failure`, ...) in
+    /// the message so callers and tests can branch on it.
+    fn registry_ok(r: &Json, verb: &str) -> Result<()> {
+        if !r.get("ok")?.as_bool()? {
+            let msg = r
+                .opt("error")
+                .and_then(|e| e.as_str().ok())
+                .unwrap_or("unknown");
+            match r.opt("code").and_then(|c| c.as_str().ok()) {
+                Some(code) => bail!("{verb} failed [{code}]: {msg}"),
+                None => bail!("{verb} failed: {msg}"),
+            }
+        }
+        Ok(())
     }
 
     fn ok_response(r: &Json) -> Result<GenerateResponse> {

@@ -133,8 +133,39 @@
 //! `lane_failures`, `sheds`, `deadline_rejects`, `deadline_expiries`,
 //! `supervisor_restarts` — the backend-health ledger — `retries`,
 //! `eval_timeouts`, `backend_unavailable`, `breaker_state`,
-//! `breaker_probes`, `degraded_rung1..3` — and the `registry_entries`
+//! `breaker_probes`, `degraded_rung1..3` — the artifact-registry ledger —
+//! `registry_puts`, `registry_gets`, `registry_integrity_failures`,
+//! `registry_blobs`, `registry_blob_bytes` — and the `registry_entries`
 //! leak canary) as one flat object.
+//!
+//! ## Artifact registry verbs
+//!
+//! Servers started with a registry (`serve --registry-dir`) additionally
+//! speak the content-addressed artifact verbs ([`crate::registry`]; blob
+//! content travels hex-encoded):
+//!
+//! ```text
+//! -> {"cmd": "registry_put", "manifest": {"kind": "compat_corpus",
+//!     "name": "corpus-a", ...}, "blobs": ["<hex bytes>", ...]}
+//! <- {"ok": true, "digest": "<64 hex>"}          (the computed address)
+//!
+//! -> {"cmd": "registry_get", "digest": "<64 hex>"}
+//! <- {"ok": true, "digest": ..., "manifest": {...}, "blobs": ["<hex>", ...]}
+//!
+//! -> {"cmd": "registry_stat", "digest": "<64 hex>"}
+//! <- {"ok": true, "digest": ..., "manifest": {...},
+//!     "blobs": [{"digest": ..., "size": 123}, ...]}
+//!
+//! -> {"cmd": "registry_list", "kind": "tuned_schedule", "family": "markov"}
+//! <- {"ok": true, "artifacts": [{"digest": ..., "manifest": {...}}, ...]}
+//! ```
+//!
+//! Every read is integrity-verified: a stored blob or manifest whose
+//! bytes no longer hash to its digest answers a typed
+//! `{"ok": false, "code": "integrity_failure"}` — corrupted content is
+//! never served.  Other typed codes: `not_found`, `invalid_digest`,
+//! `bad_manifest`, and `registry_disabled` on a server with no registry
+//! configured (see the table in [`crate::api::wire`]).
 //!
 //! ## Degradation (brownout)
 //!
@@ -169,7 +200,9 @@ use anyhow::Result;
 use crate::api::wire::{self, ParsedRequest, V1Echo};
 use crate::api::SamplingSpec;
 use crate::coordinator::{codes, Coordinator, GenerateResponse, JobError, JobEvent};
+use crate::registry::{ArtifactKind, ArtifactRegistry, ManifestV1, RegistryError};
 use crate::util::json::Json;
+use crate::util::sha256::{hex_decode, hex_encode};
 
 /// Default cap on concurrent connection-handler threads.
 pub const DEFAULT_MAX_CONNS: usize = 256;
@@ -382,7 +415,122 @@ fn dispatch_line(
             Err(e) => write_json(writer, &wire::spec_error_json(&e)),
             Ok(parsed) => handle_stream(coordinator, parsed, writer),
         },
+        "registry_put" | "registry_get" | "registry_list" | "registry_stat" => {
+            write_json(writer, &registry_reply(&cmd, &j, coordinator))
+        }
         other => write_json(writer, &generic_error(&format!("unknown cmd {other:?}"))),
+    }
+}
+
+/// One registry wire verb → one reply object.  Typed [`RegistryError`]s
+/// in the chain surface their stable code (`not_found`,
+/// `integrity_failure`, `invalid_digest`, `bad_manifest`,
+/// `registry_disabled` — see [`crate::api::wire`]); a server started
+/// without `--registry-dir` answers every verb `registry_disabled`.
+fn registry_reply(cmd: &str, j: &Json, coordinator: &Coordinator) -> Json {
+    let Some(reg) = coordinator.artifact_registry() else {
+        let e = RegistryError::Disabled;
+        return coded_error(&e.to_string(), e.code());
+    };
+    match registry_verb(cmd, j, reg.as_ref()) {
+        Ok(mut out) => {
+            if let Json::Obj(m) = &mut out {
+                m.insert("ok".into(), Json::Bool(true));
+            }
+            out
+        }
+        Err(e) => match e.downcast_ref::<RegistryError>() {
+            Some(re) => coded_error(&format!("{e:#}"), re.code()),
+            None => generic_error(&format!("{e:#}")),
+        },
+    }
+}
+
+fn manifest_frame(digest: &str, manifest: &crate::registry::Manifest) -> Vec<(&'static str, Json)> {
+    vec![
+        ("digest", Json::from(digest)),
+        ("manifest", manifest.to_json()),
+    ]
+}
+
+fn registry_verb(cmd: &str, j: &Json, reg: &ArtifactRegistry) -> Result<Json> {
+    match cmd {
+        // {"cmd":"registry_put","manifest":{...},"blobs":["<hex content>",..]}
+        // -> {"ok":true,"digest":"<64 hex>"} — the computed address.
+        "registry_put" => {
+            let m = ManifestV1::from_wire(j.get("manifest")?)?;
+            let blobs = match j.opt("blobs") {
+                None => Vec::new(),
+                Some(b) => b
+                    .as_arr()?
+                    .iter()
+                    .map(|v| hex_decode(v.as_str()?))
+                    .collect::<Result<Vec<Vec<u8>>>>()?,
+            };
+            let refs: Vec<&[u8]> = blobs.iter().map(|b| b.as_slice()).collect();
+            let digest = reg.put(m, &refs)?;
+            Ok(Json::obj(vec![("digest", Json::from(digest.as_str()))]))
+        }
+        // {"cmd":"registry_get","digest":"<64 hex>"}
+        // -> {"ok":true,"digest":...,"manifest":{...},"blobs":["<hex>",..]}
+        // with every byte integrity-verified before anything is written.
+        "registry_get" => {
+            let digest = j.get("digest")?.as_str()?;
+            let (manifest, blobs) = reg.get(digest)?;
+            let mut frame = manifest_frame(digest, &manifest);
+            frame.push((
+                "blobs",
+                Json::Arr(blobs.iter().map(|b| Json::Str(hex_encode(b))).collect()),
+            ));
+            Ok(Json::obj(frame))
+        }
+        // {"cmd":"registry_stat","digest":"<64 hex>"} — manifest + per-blob
+        // sizes, no content transfer.
+        "registry_stat" => {
+            let digest = j.get("digest")?.as_str()?;
+            let (manifest, blob_stats) = reg.stat(digest)?;
+            let mut frame = manifest_frame(digest, &manifest);
+            frame.push((
+                "blobs",
+                Json::Arr(
+                    blob_stats
+                        .iter()
+                        .map(|(d, size)| {
+                            Json::obj(vec![
+                                ("digest", Json::from(d.as_str())),
+                                (
+                                    "size",
+                                    size.map(Json::from).unwrap_or(Json::Null),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+            Ok(Json::obj(frame))
+        }
+        // {"cmd":"registry_list","kind"?:"...","family"?:"..."}
+        // -> {"ok":true,"artifacts":[{"digest":...,"manifest":{...}},..]}
+        "registry_list" => {
+            let kind = match j.opt("kind") {
+                None => None,
+                Some(v) => Some(ArtifactKind::parse(v.as_str()?)?),
+            };
+            let family = match j.opt("family") {
+                None => None,
+                Some(v) => Some(v.as_str()?.to_string()),
+            };
+            let arts = reg.list(kind, family.as_deref());
+            Ok(Json::obj(vec![(
+                "artifacts",
+                Json::Arr(
+                    arts.iter()
+                        .map(|(d, m)| Json::obj(manifest_frame(d, m)))
+                        .collect(),
+                ),
+            )]))
+        }
+        other => Err(anyhow::anyhow!("unknown registry verb {other:?}")),
     }
 }
 
@@ -999,6 +1147,103 @@ mod tests {
             std::thread::sleep(std::time::Duration::from_millis(5));
         }
         assert!(freed, "connection slot never freed after client EOF");
+        srv.stop();
+    }
+
+    /// Server whose coordinator shares a content-addressed artifact
+    /// registry rooted at `root`.
+    fn local_registry_server(root: &str) -> Server {
+        use crate::coordinator::CoordinatorCfg;
+        use crate::score::markov::{MarkovChain, MarkovOracle};
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::seed_from_u64(23);
+        let oracle = Arc::new(MarkovOracle::new(MarkovChain::generate(&mut rng, 6, 0.5), 16));
+        let reg = ArtifactRegistry::open(root).unwrap();
+        let coord = Coordinator::start_local_with_registry(
+            oracle,
+            crate::coordinator::BatchPolicy::Greedy,
+            8,
+            None,
+            CoordinatorCfg::default(),
+            Some(reg),
+        );
+        Server::start("127.0.0.1:0", coord).unwrap()
+    }
+
+    #[test]
+    fn registry_verbs_roundtrip_over_tcp() {
+        let root = std::env::temp_dir()
+            .join(format!("fastdds_srv_reg_{}", std::process::id()));
+        let root = root.to_str().unwrap().to_string();
+        let _ = std::fs::remove_dir_all(&root);
+        let srv = local_registry_server(&root);
+        let mut c = Client::connect(&srv.addr.to_string()).unwrap();
+
+        // put → list → stat → get, bit-identical content back.
+        let mut m = ManifestV1::new(ArtifactKind::CompatCorpus, "corpus-a");
+        m.family = "markov".into();
+        m.created_by = "test".into();
+        let payload: Vec<Vec<u8>> = vec![b"line one".to_vec(), vec![0u8, 255, 7, 42]];
+        let digest = c.registry_put(&m, &payload).unwrap();
+        assert_eq!(digest.len(), 64);
+
+        let listed = c.registry_list(Some(ArtifactKind::CompatCorpus), Some("markov")).unwrap();
+        assert_eq!(listed.len(), 1);
+        assert_eq!(listed[0].0, digest);
+        assert!(c.registry_list(Some(ArtifactKind::ScoreModel), None).unwrap().is_empty());
+
+        let (stat_m, blob_stats) = c.registry_stat(&digest).unwrap();
+        assert_eq!(stat_m.v1().name, "corpus-a");
+        assert_eq!(blob_stats.len(), 2);
+        assert_eq!(blob_stats[0].1, Some(8));
+
+        let (got_m, blobs) = c.registry_get(&digest).unwrap();
+        assert_eq!(got_m.digest(), digest);
+        assert_eq!(blobs, payload, "wire roundtrip must be bit-identical");
+
+        // Typed wire errors: unknown digest and malformed digest.
+        let absent = crate::util::sha256::sha256_hex(b"absent");
+        let err = c.registry_get(&absent).unwrap_err();
+        assert!(format!("{err}").contains("[not_found]"), "{err}");
+        let err = c.registry_get("nope").unwrap_err();
+        assert!(format!("{err}").contains("[invalid_digest]"), "{err}");
+
+        // Corrupt the blob on disk: the server must answer typed
+        // integrity_failure, never the corrupted bytes.
+        let blob_digest = &got_m.v1().blobs[0];
+        let path = format!("{root}/blobs/{blob_digest}");
+        std::fs::write(&path, b"tampered").unwrap();
+        let err = c.registry_get(&digest).unwrap_err();
+        assert!(format!("{err}").contains("[integrity_failure]"), "{err}");
+
+        // The ledger saw all of it (put, get, integrity failure).
+        let stats = c.stats().unwrap();
+        assert_eq!(stats.get("registry_puts").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(stats.get("registry_gets").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(
+            stats.get("registry_integrity_failures").unwrap().as_u64().unwrap(),
+            1
+        );
+        assert_eq!(stats.get("registry_blobs").unwrap().as_u64().unwrap(), 2);
+        assert!(c.ping().unwrap(), "typed registry errors must not kill the conn");
+        srv.stop();
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn registry_verbs_fail_typed_without_registry() {
+        let srv = local_server();
+        let mut c = Client::connect(&srv.addr.to_string()).unwrap();
+        for cmd in ["registry_put", "registry_get", "registry_list", "registry_stat"] {
+            let r = c.raw(&format!(r#"{{"cmd": "{cmd}"}}"#)).unwrap();
+            assert!(!r.get("ok").unwrap().as_bool().unwrap());
+            assert_eq!(
+                r.get("code").unwrap().as_str().unwrap(),
+                "registry_disabled",
+                "{cmd}"
+            );
+        }
+        assert!(c.ping().unwrap());
         srv.stop();
     }
 

@@ -9,6 +9,7 @@
 pub mod rng;
 pub mod dist;
 pub mod json;
+pub mod sha256;
 pub mod cli;
 pub mod cancel;
 pub mod threadpool;

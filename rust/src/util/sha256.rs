@@ -1,0 +1,300 @@
+//! SHA-256 (FIPS 180-4) plus hex codecs — the content-address substrate
+//! for the artifact registry ([`crate::registry`]).
+//!
+//! Implemented from the spec because the image vendors no crypto crate:
+//! the standard Merkle–Damgård construction over 64-byte blocks with the
+//! usual eight-word state and 64-round compression.  Both a streaming
+//! hasher ([`Sha256`]) and a one-shot helper ([`sha256_hex`]) are
+//! provided; the unit tests pin the NIST FIPS 180-4 vectors (empty,
+//! "abc", the two-block message) and a streaming-vs-oneshot equality
+//! property over random chunkings, so an incorrect carry in the length
+//! counter or the block buffer cannot survive CI.
+//!
+//! This is an integrity hash for artifact addressing, not a password /
+//! key-derivation primitive — no constant-time claims are made.
+
+/// Round constants: first 32 bits of the fractional parts of the cube
+/// roots of the first 64 primes (FIPS 180-4 §4.2.2).
+const K: [u32; 64] = [
+    0x428a2f98, 0x71374491, 0xb5c0fbcf, 0xe9b5dba5, 0x3956c25b, 0x59f111f1,
+    0x923f82a4, 0xab1c5ed5, 0xd807aa98, 0x12835b01, 0x243185be, 0x550c7dc3,
+    0x72be5d74, 0x80deb1fe, 0x9bdc06a7, 0xc19bf174, 0xe49b69c1, 0xefbe4786,
+    0x0fc19dc6, 0x240ca1cc, 0x2de92c6f, 0x4a7484aa, 0x5cb0a9dc, 0x76f988da,
+    0x983e5152, 0xa831c66d, 0xb00327c8, 0xbf597fc7, 0xc6e00bf3, 0xd5a79147,
+    0x06ca6351, 0x14292967, 0x27b70a85, 0x2e1b2138, 0x4d2c6dfc, 0x53380d13,
+    0x650a7354, 0x766a0abb, 0x81c2c92e, 0x92722c85, 0xa2bfe8a1, 0xa81a664b,
+    0xc24b8b70, 0xc76c51a3, 0xd192e819, 0xd6990624, 0xf40e3585, 0x106aa070,
+    0x19a4c116, 0x1e376c08, 0x2748774c, 0x34b0bcb5, 0x391c0cb3, 0x4ed8aa4a,
+    0x5b9cca4f, 0x682e6ff3, 0x748f82ee, 0x78a5636f, 0x84c87814, 0x8cc70208,
+    0x90befffa, 0xa4506ceb, 0xbef9a3f7, 0xc67178f2,
+];
+
+/// Initial hash state: first 32 bits of the fractional parts of the
+/// square roots of the first 8 primes (FIPS 180-4 §5.3.3).
+const H0: [u32; 8] = [
+    0x6a09e667, 0xbb67ae85, 0x3c6ef372, 0xa54ff53a, 0x510e527f, 0x9b05688c,
+    0x1f83d9ab, 0x5be0cd19,
+];
+
+/// Streaming SHA-256 hasher: `update` any number of times, `finalize`
+/// once.  Equivalent to hashing the concatenation in one shot.
+#[derive(Clone)]
+pub struct Sha256 {
+    state: [u32; 8],
+    /// Partial block awaiting compression.
+    buf: [u8; 64],
+    buf_len: usize,
+    /// Total message length in bytes (the padding encodes it in bits).
+    total_len: u64,
+}
+
+impl Default for Sha256 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Sha256 {
+    pub fn new() -> Self {
+        Sha256 { state: H0, buf: [0u8; 64], buf_len: 0, total_len: 0 }
+    }
+
+    pub fn update(&mut self, mut data: &[u8]) {
+        self.total_len = self.total_len.wrapping_add(data.len() as u64);
+        // Top up a partial block first.
+        if self.buf_len > 0 {
+            let take = (64 - self.buf_len).min(data.len());
+            self.buf[self.buf_len..self.buf_len + take].copy_from_slice(&data[..take]);
+            self.buf_len += take;
+            data = &data[take..];
+            if self.buf_len == 64 {
+                let block = self.buf;
+                self.compress(&block);
+                self.buf_len = 0;
+            }
+        }
+        // Whole blocks straight from the input.
+        while data.len() >= 64 {
+            let mut block = [0u8; 64];
+            block.copy_from_slice(&data[..64]);
+            self.compress(&block);
+            data = &data[64..];
+        }
+        // Stash the tail.
+        if !data.is_empty() {
+            self.buf[..data.len()].copy_from_slice(data);
+            self.buf_len = data.len();
+        }
+    }
+
+    pub fn finalize(mut self) -> [u8; 32] {
+        let bit_len = self.total_len.wrapping_mul(8);
+        // Padding: 0x80, zeros to 56 mod 64, then the 64-bit bit length.
+        self.update(&[0x80]);
+        while self.buf_len != 56 {
+            self.update(&[0x00]);
+        }
+        // Write the length directly into the buffer (update would also
+        // advance total_len, which no longer matters, but keep it exact).
+        self.buf[56..64].copy_from_slice(&bit_len.to_be_bytes());
+        let block = self.buf;
+        self.compress(&block);
+        let mut out = [0u8; 32];
+        for (i, w) in self.state.iter().enumerate() {
+            out[4 * i..4 * i + 4].copy_from_slice(&w.to_be_bytes());
+        }
+        out
+    }
+
+    fn compress(&mut self, block: &[u8; 64]) {
+        let mut w = [0u32; 64];
+        for (i, word) in w.iter_mut().take(16).enumerate() {
+            *word = u32::from_be_bytes([
+                block[4 * i],
+                block[4 * i + 1],
+                block[4 * i + 2],
+                block[4 * i + 3],
+            ]);
+        }
+        for i in 16..64 {
+            let s0 = w[i - 15].rotate_right(7) ^ w[i - 15].rotate_right(18) ^ (w[i - 15] >> 3);
+            let s1 = w[i - 2].rotate_right(17) ^ w[i - 2].rotate_right(19) ^ (w[i - 2] >> 10);
+            w[i] = w[i - 16]
+                .wrapping_add(s0)
+                .wrapping_add(w[i - 7])
+                .wrapping_add(s1);
+        }
+        let [mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut h] = self.state;
+        for i in 0..64 {
+            let s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+            let ch = (e & f) ^ (!e & g);
+            let t1 = h
+                .wrapping_add(s1)
+                .wrapping_add(ch)
+                .wrapping_add(K[i])
+                .wrapping_add(w[i]);
+            let s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+            let maj = (a & b) ^ (a & c) ^ (b & c);
+            let t2 = s0.wrapping_add(maj);
+            h = g;
+            g = f;
+            f = e;
+            e = d.wrapping_add(t1);
+            d = c;
+            c = b;
+            b = a;
+            a = t1.wrapping_add(t2);
+        }
+        self.state[0] = self.state[0].wrapping_add(a);
+        self.state[1] = self.state[1].wrapping_add(b);
+        self.state[2] = self.state[2].wrapping_add(c);
+        self.state[3] = self.state[3].wrapping_add(d);
+        self.state[4] = self.state[4].wrapping_add(e);
+        self.state[5] = self.state[5].wrapping_add(f);
+        self.state[6] = self.state[6].wrapping_add(g);
+        self.state[7] = self.state[7].wrapping_add(h);
+    }
+}
+
+/// One-shot digest.
+pub fn sha256(data: &[u8]) -> [u8; 32] {
+    let mut h = Sha256::new();
+    h.update(data);
+    h.finalize()
+}
+
+/// One-shot digest as lowercase hex — the registry's canonical address
+/// form (64 chars, `[0-9a-f]`).
+pub fn sha256_hex(data: &[u8]) -> String {
+    hex_encode(&sha256(data))
+}
+
+/// Lowercase hex encoding.
+pub fn hex_encode(bytes: &[u8]) -> String {
+    const HEX: &[u8; 16] = b"0123456789abcdef";
+    let mut out = String::with_capacity(bytes.len() * 2);
+    for &b in bytes {
+        out.push(HEX[(b >> 4) as usize] as char);
+        out.push(HEX[(b & 0x0f) as usize] as char);
+    }
+    out
+}
+
+/// Hex decoding (either case accepted).  Fails on odd length or a
+/// non-hex character — wire blobs travel hex-encoded, so a malformed
+/// payload must die typed at the boundary, not corrupt a blob.
+pub fn hex_decode(s: &str) -> anyhow::Result<Vec<u8>> {
+    fn nibble(c: u8) -> Option<u8> {
+        match c {
+            b'0'..=b'9' => Some(c - b'0'),
+            b'a'..=b'f' => Some(c - b'a' + 10),
+            b'A'..=b'F' => Some(c - b'A' + 10),
+            _ => None,
+        }
+    }
+    let bytes = s.as_bytes();
+    if bytes.len() % 2 != 0 {
+        anyhow::bail!("hex string has odd length {}", bytes.len());
+    }
+    let mut out = Vec::with_capacity(bytes.len() / 2);
+    for pair in bytes.chunks_exact(2) {
+        let (hi, lo) = match (nibble(pair[0]), nibble(pair[1])) {
+            (Some(h), Some(l)) => (h, l),
+            _ => anyhow::bail!(
+                "invalid hex byte {:?}",
+                String::from_utf8_lossy(pair)
+            ),
+        };
+        out.push((hi << 4) | lo);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    // NIST FIPS 180-4 test vectors.
+    #[test]
+    fn fips_vector_empty() {
+        assert_eq!(
+            sha256_hex(b""),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+    }
+
+    #[test]
+    fn fips_vector_abc() {
+        assert_eq!(
+            sha256_hex(b"abc"),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+    }
+
+    #[test]
+    fn fips_vector_two_block() {
+        // 56 bytes: the padding spills into a second block.
+        assert_eq!(
+            sha256_hex(b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq"),
+            "248d6a61d20638b8e5c026930c3e6039a33ce45964ff2167f6ecedd419db06c1"
+        );
+    }
+
+    #[test]
+    fn million_a() {
+        // The classic long-message vector: 1,000,000 x 'a', streamed in
+        // deliberately awkward chunk sizes.
+        let mut h = Sha256::new();
+        let chunk = [b'a'; 997];
+        let mut left = 1_000_000usize;
+        while left > 0 {
+            let n = left.min(chunk.len());
+            h.update(&chunk[..n]);
+            left -= n;
+        }
+        assert_eq!(
+            hex_encode(&h.finalize()),
+            "cdc76e5c9914fb9281a1c7e284d73e67f1809a48a497200e046d39ccc7112cd0"
+        );
+    }
+
+    #[test]
+    fn streaming_equals_oneshot_over_random_chunkings() {
+        let mut rng = Xoshiro256::seed_from_u64(0xD16E57);
+        for case in 0..32 {
+            let len = (rng.next_u64() % 700) as usize + case;
+            let data: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            let oneshot = sha256_hex(&data);
+            let mut h = Sha256::new();
+            let mut off = 0usize;
+            while off < data.len() {
+                let take = ((rng.next_u64() % 130) as usize + 1).min(data.len() - off);
+                h.update(&data[off..off + take]);
+                off += take;
+            }
+            assert_eq!(hex_encode(&h.finalize()), oneshot, "len={len}");
+        }
+        // Empty-update streams are the oneshot of "".
+        let mut h = Sha256::new();
+        h.update(b"");
+        h.update(b"");
+        assert_eq!(hex_encode(&h.finalize()), sha256_hex(b""));
+    }
+
+    #[test]
+    fn hex_roundtrip_and_rejects() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        for len in [0usize, 1, 2, 31, 32, 65] {
+            let data: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            let enc = hex_encode(&data);
+            assert_eq!(enc.len(), 2 * len);
+            assert_eq!(hex_decode(&enc).unwrap(), data);
+            // Uppercase decodes to the same bytes.
+            assert_eq!(hex_decode(&enc.to_uppercase()).unwrap(), data);
+        }
+        assert!(hex_decode("abc").is_err(), "odd length must fail");
+        assert!(hex_decode("zz").is_err(), "non-hex must fail");
+        assert!(hex_decode("0g").is_err());
+    }
+}

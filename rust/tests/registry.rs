@@ -1,0 +1,243 @@
+//! Artifact-registry integration suite: the content-addressed store
+//! driven end-to-end over TCP.
+//!
+//! Three guarantees, each proven against a real server + client:
+//!
+//!   1. **Round trip** — `registry_put` → `registry_list` →
+//!      `registry_stat` → `registry_get` returns the manifest and every
+//!      blob bit-identical, with content addressing deduplicating a
+//!      repeated put to the same digest.
+//!   2. **Integrity** — a bit-flipped blob on disk answers a typed
+//!      `integrity_failure` and leaks nothing: no partial bytes, no
+//!      mutated manifests, healthy artifacts keep serving on the same
+//!      connection, and only the failure counter moves.
+//!   3. **Digest-pulled schedules** — a second coordinator sharing the
+//!      registry directory serves bit-identical samples from the first
+//!      coordinator's published tuned grid without ever running the
+//!      tuner (the pull satisfies the cache miss; the fit closure is a
+//!      panic).
+
+use std::sync::Arc;
+
+use fastdds::api::SamplingSpec;
+use fastdds::coordinator::{BatchPolicy, Coordinator, CoordinatorCfg};
+use fastdds::registry::{ArtifactKind, ArtifactRegistry, ManifestV1};
+use fastdds::schedule::{ScheduleCache, ScheduleSpec, TuneKey};
+use fastdds::score::markov::{MarkovChain, MarkovOracle};
+use fastdds::server::client::Client;
+use fastdds::server::Server;
+use fastdds::solvers::Solver;
+use fastdds::util::rng::Xoshiro256;
+
+const VOCAB: usize = 6;
+const SEQ_LEN: usize = 14;
+
+fn temp_root(tag: &str) -> String {
+    let root = std::env::temp_dir()
+        .join(format!("fastdds_it_registry_{}_{tag}", std::process::id()));
+    let root = root.to_str().unwrap().to_string();
+    let _ = std::fs::remove_dir_all(&root);
+    root
+}
+
+fn oracle() -> Arc<MarkovOracle> {
+    let mut rng = Xoshiro256::seed_from_u64(23);
+    Arc::new(MarkovOracle::new(MarkovChain::generate(&mut rng, VOCAB, 0.5), SEQ_LEN))
+}
+
+/// A local-oracle server with the registry attached (the `serve
+/// --registry-dir` wiring) plus a handle on the same registry.
+fn registry_server(
+    root: &str,
+    schedule_dir: Option<&str>,
+) -> (Server, Arc<ArtifactRegistry>) {
+    let reg = ArtifactRegistry::open(root).unwrap();
+    let coordinator = Coordinator::start_local_with_registry(
+        oracle(),
+        BatchPolicy::Greedy,
+        8,
+        schedule_dir,
+        CoordinatorCfg::default(),
+        Some(Arc::clone(&reg)),
+    );
+    let srv = Server::start("127.0.0.1:0", coordinator).unwrap();
+    (srv, reg)
+}
+
+fn corpus_manifest(name: &str) -> ManifestV1 {
+    let mut m = ManifestV1::new(ArtifactKind::CompatCorpus, name);
+    m.family = "markov".into();
+    m.vocab = VOCAB;
+    m.seq_len = SEQ_LEN;
+    m.created_by = "registry-it".into();
+    m
+}
+
+// ===========================================================================
+// 1. Full verb round trip, bit-identical content
+// ===========================================================================
+
+#[test]
+fn put_list_stat_get_roundtrip_bit_identical() {
+    let root = temp_root("roundtrip");
+    let (srv, _reg) = registry_server(&root, None);
+    let mut c = Client::connect(&srv.addr.to_string()).unwrap();
+
+    // One textual blob and one spanning every byte value — hex transport
+    // must be 8-bit clean.
+    let text = b"{\"corpus\": \"v1-replay\"}".to_vec();
+    let binary: Vec<u8> = (0..=255u8).cycle().take(1024).collect();
+    let blobs = vec![text.clone(), binary.clone()];
+
+    let digest = c.registry_put(&corpus_manifest("wire-replay"), &blobs).unwrap();
+    assert_eq!(digest.len(), 64, "digest must be 64 hex chars: {digest}");
+
+    // Content addressing: the identical put lands on the identical digest.
+    let again = c.registry_put(&corpus_manifest("wire-replay"), &blobs).unwrap();
+    assert_eq!(again, digest, "same content must address the same artifact");
+
+    // list: present unfiltered and under its own kind/family, absent
+    // under a foreign kind filter.
+    let all = c.registry_list(None, None).unwrap();
+    assert_eq!(all.len(), 1);
+    assert_eq!(all[0].0, digest);
+    let filtered = c
+        .registry_list(Some(ArtifactKind::CompatCorpus), Some("markov"))
+        .unwrap();
+    assert_eq!(filtered.len(), 1);
+    assert!(c
+        .registry_list(Some(ArtifactKind::ScoreModel), None)
+        .unwrap()
+        .is_empty());
+
+    // stat: manifest coordinates plus per-blob sizes, no content.
+    let (stat_m, stat_blobs) = c.registry_stat(&digest).unwrap();
+    let v1 = stat_m.v1();
+    assert_eq!(v1.kind, ArtifactKind::CompatCorpus);
+    assert_eq!(v1.name, "wire-replay");
+    assert_eq!((v1.vocab, v1.seq_len), (VOCAB, SEQ_LEN));
+    assert_eq!(stat_blobs.len(), 2);
+    assert_eq!(stat_blobs[0].1, Some(text.len() as u64));
+    assert_eq!(stat_blobs[1].1, Some(binary.len() as u64));
+
+    // get: bit-identical blobs in order, same manifest.
+    let (got_m, got_blobs) = c.registry_get(&digest).unwrap();
+    assert_eq!(got_m, stat_m);
+    assert_eq!(got_blobs, blobs, "round trip must be bit-identical");
+
+    srv.stop();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// ===========================================================================
+// 2. Corruption chaos: typed failure, zero leaked state
+// ===========================================================================
+
+#[test]
+fn corrupted_blob_fails_typed_with_zero_leaked_state() {
+    let root = temp_root("corrupt");
+    let (srv, reg) = registry_server(&root, None);
+    let mut c = Client::connect(&srv.addr.to_string()).unwrap();
+
+    let doomed_blob = b"soon to be bit-flipped".to_vec();
+    let healthy_blob = b"unharmed bystander bytes".to_vec();
+    let doomed = c
+        .registry_put(&corpus_manifest("doomed"), &[doomed_blob.clone()])
+        .unwrap();
+    let healthy = c
+        .registry_put(&corpus_manifest("healthy"), &[healthy_blob.clone()])
+        .unwrap();
+
+    // Flip one bit of the doomed artifact's content blob on disk.
+    let (_, stat_blobs) = c.registry_stat(&doomed).unwrap();
+    let blob_path = format!("{root}/blobs/{}", stat_blobs[0].0);
+    let mut bytes = std::fs::read(&blob_path).unwrap();
+    bytes[5] ^= 0x01;
+    std::fs::write(&blob_path, &bytes).unwrap();
+
+    // Every fetch fails typed — repeatedly, with no partial content ever
+    // cached or served.
+    for round in 0..3 {
+        let err = c.registry_get(&doomed).unwrap_err();
+        assert!(
+            err.to_string().contains("[integrity_failure]"),
+            "round {round}: {err:#}"
+        );
+    }
+
+    // Zero leaked state: both manifests still listed, the healthy
+    // artifact still serves bit-identical on the SAME connection, and the
+    // store gauges are untouched (corruption is detected, not deleted).
+    assert_eq!(c.registry_list(None, None).unwrap().len(), 2);
+    let (_, got) = c.registry_get(&healthy).unwrap();
+    assert_eq!(got, vec![healthy_blob], "bystander artifact corrupted");
+    let s = reg.stats();
+    assert_eq!(s.integrity_failures, 3, "one count per failed fetch");
+    assert_eq!(s.manifests, 2, "manifests must survive a blob corruption");
+    assert_eq!(s.blobs, 2, "detection must not delete blobs");
+
+    // The counters also surface in the serving ledger over the wire.
+    let stats = c.stats().unwrap();
+    assert_eq!(
+        stats.get("registry_integrity_failures").unwrap().as_u64().unwrap(),
+        3
+    );
+    assert_eq!(stats.get("registry_blobs").unwrap().as_u64().unwrap(), 2);
+
+    srv.stop();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// ===========================================================================
+// 3. Two coordinators, one registry: pull beats re-fit, bit-identically
+// ===========================================================================
+
+#[test]
+fn digest_pulled_schedule_is_bit_identical_across_coordinators() {
+    let root = temp_root("shared");
+    let dir_a = temp_root("sched_a");
+    let dir_b = temp_root("sched_b");
+
+    let solver = Solver::Trapezoidal { theta: 0.5 };
+    let spec = SamplingSpec::builder()
+        .solver(solver)
+        .nfe(16)
+        .n_samples(2)
+        .seed(77)
+        .schedule(ScheduleSpec::Tuned { steps: 8 })
+        .build()
+        .unwrap();
+
+    // Node A: cold everywhere — fits the tuned grid, publishes it.
+    let (srv_a, reg_a) = registry_server(&root, Some(dir_a.as_str()));
+    let mut ca = Client::connect(&srv_a.addr.to_string()).unwrap();
+    let resp_a = ca.generate_spec(&spec).unwrap();
+    assert_eq!(reg_a.stats().puts, 1, "node A must publish its fit");
+    srv_a.stop();
+    drop(reg_a);
+
+    // Node B: different schedule dir, fresh process-equivalent, same
+    // registry root.  Its cache miss is satisfied by the digest pull, and
+    // the samples must be bit-identical to node A's.
+    let (srv_b, reg_b) = registry_server(&root, Some(dir_b.as_str()));
+    let mut cb = Client::connect(&srv_b.addr.to_string()).unwrap();
+    let resp_b = cb.generate_spec(&spec).unwrap();
+    assert_eq!(
+        resp_b.sequences, resp_a.sequences,
+        "digest-pulled schedule must reproduce node A bit-identically"
+    );
+    assert_eq!(resp_b.nfe_used, resp_a.nfe_used);
+    assert_eq!(reg_b.stats().puts, 0, "node B must pull, never re-publish");
+
+    // Direct proof the tuner cannot have run on the pull path: the same
+    // miss against the shared registry with a panicking fit closure.
+    let key = TuneKey::new("markov", VOCAB, SEQ_LEN, solver, 8);
+    let mut probe = ScheduleCache::with_store(None, Some(Arc::clone(&reg_b)));
+    let pulled = probe.get_or_fit(key, || panic!("pull path must not run the tuner"));
+    assert_eq!(pulled.steps(), 8);
+
+    srv_b.stop();
+    for d in [&root, &dir_a, &dir_b] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+}

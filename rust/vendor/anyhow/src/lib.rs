@@ -40,6 +40,25 @@ impl Error {
         }
     }
 
+    /// Borrow the first error in the cause chain that is a `T` — the
+    /// real crate's typed-error recovery (`downcast_ref::<JobError>()`,
+    /// `downcast_ref::<RegistryError>()`, ...).  Context wraps are
+    /// transparent: they chain through [`Chained`], whose `source()`
+    /// exposes the wrapped error's own chain.
+    pub fn downcast_ref<T: StdError + 'static>(&self) -> Option<&T> {
+        let mut cur: Option<&(dyn StdError + 'static)> = self
+            .source
+            .as_ref()
+            .map(|b| b.as_ref() as &(dyn StdError + 'static));
+        while let Some(e) = cur {
+            if let Some(t) = e.downcast_ref::<T>() {
+                return Some(t);
+            }
+            cur = e.source();
+        }
+        None
+    }
+
     fn write_chain(&self, f: &mut fmt::Formatter<'_>, sep: &str) -> fmt::Result {
         write!(f, "{}", self.msg)?;
         let mut cur: Option<&(dyn StdError + 'static)> = self
@@ -218,6 +237,21 @@ mod tests {
         }
         assert_eq!(format!("{}", f(9).unwrap_err()), "too big: 9");
         assert_eq!(format!("{}", f(1).unwrap_err()), "always fails with 1");
+    }
+
+    #[test]
+    fn downcast_ref_finds_typed_errors_through_context() {
+        let e: Error = Error::new(io_err());
+        assert_eq!(
+            e.downcast_ref::<std::io::Error>().unwrap().kind(),
+            std::io::ErrorKind::NotFound
+        );
+        // Context wraps stay transparent to downcasting.
+        let wrapped = e.context("outer").context("outermost");
+        assert!(wrapped.downcast_ref::<std::io::Error>().is_some());
+        // Absent types answer None, as does a message-only error.
+        assert!(wrapped.downcast_ref::<std::fmt::Error>().is_none());
+        assert!(Error::msg("plain").downcast_ref::<std::io::Error>().is_none());
     }
 
     #[test]

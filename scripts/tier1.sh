@@ -13,8 +13,10 @@
 #   on-vs-off under overload, and stalled-backend watchdog on-vs-off
 #   tails) and BENCH_pit.json
 #   (the parallel-in-time latency-vs-NFE frontier: sequential rounds vs
-#   NFE at matched toy-CTMC KL / text perplexity)
-#   so all five trajectories are tracked across PRs.  The chaos suite
+#   NFE at matched toy-CTMC KL / text perplexity) and BENCH_registry.json
+#   (content-addressed blob-store put/get MB/s plus the cold
+#   digest-pull-vs-refit headline)
+#   so all six trajectories are tracked across PRs.  The chaos suite
 #   (tests/chaos.rs) runs by name so a filtered-out fault-injection suite
 #   fails loudly, and a grep gate keeps new bare unwrap()/expect() out of
 #   the coordinator/server non-test code.
@@ -71,6 +73,27 @@ for t in transient_fault_retries_to_a_bit_identical_response \
     printf '%s\n' "$out" | grep -q '1 passed' || {
         printf '%s\n' "$out"
         echo "tier-1 FAIL: chaos test '$t' did not run (renamed or filtered out?)"
+        exit 1
+    }
+done
+
+# Artifact-registry acceptance (PR 10): the content-addressed store's
+# headliners run by individual name so a renamed or filtered-out scenario
+# fails loudly — the full verb round trip over TCP, the corruption chaos
+# row (typed integrity_failure, zero leaked state), and the
+# two-coordinator digest-pull bit-identity proof.  Zero-match guarded
+# like the chaos suite.
+for t in put_list_stat_get_roundtrip_bit_identical \
+         corrupted_blob_fails_typed_with_zero_leaked_state \
+         digest_pulled_schedule_is_bit_identical_across_coordinators; do
+    out=$(cargo test -q --test registry -- --exact "$t" 2>&1) || {
+        printf '%s\n' "$out"
+        echo "tier-1 FAIL: registry test '$t' failed"
+        exit 1
+    }
+    printf '%s\n' "$out" | grep -q '1 passed' || {
+        printf '%s\n' "$out"
+        echo "tier-1 FAIL: registry test '$t' did not run (renamed or filtered out?)"
         exit 1
     }
 done
@@ -178,6 +201,21 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     done
     grep -q '"pass":true' BENCH_pit.json || {
         echo "tier-1 FAIL: BENCH_pit.json headline did not pass (PIT must beat sequential rounds at matched KL)"
+        exit 1
+    }
+    cargo bench --bench registry -- --quick
+    # The registry record must carry both throughput rows and the
+    # cold-pull-vs-refit headline must pass: pulling a published tuned
+    # grid by digest must be cheaper than re-running the pilot fits.
+    for row in 'registry put MB-per-s' 'registry get MB-per-s' \
+               'cold_pull_vs_refit_ms'; do
+        grep -q "$row" BENCH_registry.json || {
+            echo "tier-1 FAIL: row '$row' missing from BENCH_registry.json"
+            exit 1
+        }
+    done
+    grep -q '"pass":true' BENCH_registry.json || {
+        echo "tier-1 FAIL: BENCH_registry.json headline did not pass (digest pull must beat a local re-fit)"
         exit 1
     }
 fi
